@@ -1,0 +1,61 @@
+"""AOT lowering: JAX/Pallas (L2/L1) → HLO text artifacts for the Rust
+PJRT runtime.
+
+HLO *text* is the interchange format, NOT ``lowered.compile()`` or
+serialized HloModuleProto: jax ≥ 0.5 emits protos with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: (cd python && python -m compile.aot --out-dir ../artifacts)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    shapes = model.example_shapes()
+    names = []
+    for name, fn in model.FUNCTIONS.items():
+        lowered = jax.jit(fn).lower(*shapes[name])
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        names.append(name)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "n_tile": model.N_TILE,
+        "f_tile": model.F_TILE,
+        "bins": model.BINS,
+        "k_tile": model.K_TILE,
+        "artifacts": names,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

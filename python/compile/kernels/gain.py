@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: in-VMEM bin cumsum + split-gain scan (paper eq. 6).
+
+One grid step per feature block: the (block_f, B) cumulative g/h tiles
+stay in VMEM while the gain for every candidate bin is evaluated — no
+HBM round-trip between the cumsum (done in L2) and the scan here. The
+final bin's gain is masked to 0 (splitting there sends everything left).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gain_kernel(g_ref, h_ref, p_ref, out_ref):
+    gl = g_ref[...]  # (block_f, B)
+    hl = h_ref[...]
+    params = p_ref[...]  # (3,) = g_total, h_total, lambda
+    gt, ht, lam = params[0], params[1], params[2]
+    gr = gt - gl
+    hr = ht - hl
+    parent = gt * gt / (ht + lam)
+    gains = 0.5 * (gl * gl / (hl + lam) + gr * gr / (hr + lam) - parent)
+    b = gains.shape[-1]
+    mask = (jax.lax.iota(jnp.int32, b) < b - 1).astype(gains.dtype)[None, :]
+    out_ref[...] = gains * mask
+
+
+@functools.partial(jax.jit, static_argnames=("block_f",))
+def gain_scan(g_cum, h_cum, params, block_f=8):
+    """g_cum/h_cum: (F, B) cumulative sums; params: (3,) → gains (F, B)."""
+    f, b = g_cum.shape
+    assert f % block_f == 0
+    grid = (f // block_f,)
+    tile = pl.BlockSpec((block_f, b), lambda i: (i, 0))
+    return pl.pallas_call(
+        _gain_kernel,
+        grid=grid,
+        in_specs=[tile, tile, pl.BlockSpec((3,), lambda i: (0,))],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((f, b), g_cum.dtype),
+        interpret=True,
+    )(g_cum, h_cum, params)

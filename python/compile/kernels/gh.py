@@ -1,0 +1,77 @@
+"""L1 Pallas kernels: gradient/hessian computation.
+
+Elementwise transcendental work (sigmoid / softmax) — VPU-bound on TPU.
+The binary kernel streams N_TILE lanes per grid step; the softmax kernel
+keeps whole (block_n, K) rows in VMEM so the row reduction never leaves
+the core.  ``interpret=True`` everywhere: the CPU PJRT plugin cannot run
+Mosaic custom-calls (see /opt/xla-example/README.md), and numerics are
+identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+H_EPS = 1e-16
+
+
+def _gh_binary_kernel(y_ref, s_ref, g_ref, h_ref):
+    y = y_ref[...]
+    s = s_ref[...]
+    p = 1.0 / (1.0 + jnp.exp(-s))
+    g_ref[...] = p - y
+    h_ref[...] = jnp.maximum(p * (1.0 - p), H_EPS)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def gh_binary(y, logits, block_n=1024):
+    """g = σ(s) − y, h = σ(s)(1−σ(s)), tiled over instances."""
+    n = y.shape[0]
+    assert n % block_n == 0, f"n={n} must be a multiple of block_n={block_n}"
+    grid = (n // block_n,)
+    spec = pl.BlockSpec((block_n,), lambda i: (i,))
+    out = pl.pallas_call(
+        _gh_binary_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), logits.dtype),
+            jax.ShapeDtypeStruct((n,), logits.dtype),
+        ],
+        interpret=True,
+    )(y, logits)
+    return tuple(out)
+
+
+def _gh_softmax_kernel(y_ref, s_ref, g_ref, h_ref):
+    y = y_ref[...]
+    s = s_ref[...]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    g_ref[...] = p - y
+    h_ref[...] = jnp.maximum(p * (1.0 - p), H_EPS)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def gh_softmax(y_onehot, logits, block_n=512):
+    """Softmax-CE g/h over (N, K) rows, tiled over instances."""
+    n, k = logits.shape
+    assert n % block_n == 0
+    grid = (n // block_n,)
+    spec = pl.BlockSpec((block_n, k), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _gh_softmax_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), logits.dtype),
+            jax.ShapeDtypeStruct((n, k), logits.dtype),
+        ],
+        interpret=True,
+    )(y_onehot, logits)
+    return tuple(out)

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: histogram building as one-hot × MXU matmul.
+
+The paper's hot spot is scatter-adding per-instance (g, h) into
+per-(feature, bin) cells (Alg. 1). Scatter is hostile to the TPU MXU, so
+we re-express it as a dense contraction (DESIGN.md §Hardware-Adaptation):
+
+    onehot[b, n] = (bin_idx[n, f] == b)          # (B, N) per feature
+    hist[f]      = onehot @ ghc                  # (B, N) @ (N, C) on MXU
+
+The grid runs over features; each step holds one feature's bin column
+(N), the shared ghc block (N × C), and the (B × C) output in VMEM:
+≈ N·(B+C+1)·4 B ≈ 590 KiB at N=4096, B=32 — far under a core's ~16 MiB
+VMEM, leaving headroom for double buffering. C = 3 carries (g, h, 1) so
+counts ride along in the same contraction.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(n_bins, bins_ref, ghc_ref, out_ref):
+    bins = bins_ref[...]  # (N, 1) int32 — this feature's bin per instance
+    ghc = ghc_ref[...]  # (N, C)
+    onehot = (bins[:, 0][None, :] == jax.lax.iota(jnp.int32, n_bins)[:, None]).astype(
+        ghc.dtype
+    )  # (B, N)
+    out_ref[0, :, :] = onehot @ ghc  # MXU contraction → (B, C)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins",))
+def histogram(bin_idx, ghc, n_bins=32):
+    """bin_idx: (N, F) int32; ghc: (N, C) f32 → (F, n_bins, C) f32."""
+    n, f = bin_idx.shape
+    c = ghc.shape[1]
+    grid = (f,)
+    out = pl.pallas_call(
+        functools.partial(_hist_kernel, n_bins),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, i)),
+            pl.BlockSpec((n, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_bins, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((f, n_bins, c), ghc.dtype),
+        interpret=True,
+    )(bin_idx, ghc)
+    return out

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package is validated against these references by
+``python/tests/test_kernels.py`` (pytest + hypothesis). The Rust
+``CpuEngine`` implements the same math in f64; the artifact round-trip
+test on the Rust side (rust/tests/runtime_parity.rs) closes the loop.
+"""
+
+import jax.numpy as jnp
+
+
+def sigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def gh_binary_ref(y, logits):
+    """Binary logistic g/h (paper eq. 4 derivatives): g = p − y, h = p(1−p)."""
+    p = sigmoid(logits)
+    g = p - y
+    h = jnp.maximum(p * (1.0 - p), 1e-16)
+    return g, h
+
+
+def gh_softmax_ref(y_onehot, logits):
+    """Softmax CE g/h with diagonal hessian (paper §5.3.1)."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    g = p - y_onehot
+    h = jnp.maximum(p * (1.0 - p), 1e-16)
+    return g, h
+
+
+def histogram_ref(bin_idx, ghc, n_bins):
+    """Scatter-add histogram: for each feature f and bin b, the sum of the
+    ghc rows whose bin index matches.
+
+    bin_idx: (N, F) int32; ghc: (N, C); returns (F, n_bins, C).
+    """
+    n, f = bin_idx.shape
+    c = ghc.shape[1]
+    out = jnp.zeros((f, n_bins, c), dtype=ghc.dtype)
+    onehot = (bin_idx[:, :, None] == jnp.arange(n_bins)[None, None, :]).astype(ghc.dtype)
+    # out[f, b, c] = Σ_n onehot[n, f, b] * ghc[n, c]
+    out = jnp.einsum("nfb,nc->fbc", onehot, ghc)
+    return out
+
+
+def cumsum_ref(hist):
+    """Per-feature prefix sums over the bin axis (paper Alg. 1 cumsum)."""
+    return jnp.cumsum(hist, axis=1)
+
+
+def gain_ref(g_cum, h_cum, g_total, h_total, lam):
+    """Split gain for every (feature, bin) from cumulative stats (eq. 6).
+
+    The final bin is not a valid split; its gain is forced to 0.
+    """
+    gl = g_cum
+    hl = h_cum
+    gr = g_total - gl
+    hr = h_total - hl
+    parent = g_total * g_total / (h_total + lam)
+    gains = 0.5 * (gl * gl / (hl + lam) + gr * gr / (hr + lam) - parent)
+    # mask the last bin
+    mask = jnp.ones_like(gains).at[:, -1].set(0.0)
+    return gains * mask

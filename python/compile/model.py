@@ -1,0 +1,78 @@
+"""L2: the guest's plaintext per-round compute graph, composed from the
+L1 Pallas kernels. These are the functions `aot.py` lowers to the HLO
+artifacts the Rust runtime executes (DESIGN.md §6).
+
+Shapes are fixed at lowering time (PJRT compiles per shape); the Rust
+`XlaEngine` pads/tiles real workloads onto them.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import gain as gain_k
+from .kernels import gh as gh_k
+from .kernels import histogram as hist_k
+
+# Tile geometry — must match rust/src/runtime/pjrt.rs expectations and is
+# recorded in artifacts/manifest.json.
+N_TILE = 4096
+F_TILE = 32
+BINS = 32
+K_TILE = 8
+
+
+def gh_binary(y, logits):
+    """(N,) labels + logits → (g, h)."""
+    return gh_k.gh_binary(y, logits)
+
+
+def gh_softmax(y_onehot, logits):
+    """(N, K) one-hot + logits → (G, H)."""
+    return gh_k.gh_softmax(y_onehot, logits)
+
+
+def hist(bin_idx, ghc):
+    """(N, F) bins + (N, 3) [g, h, 1] → (F, B, 3) histogram."""
+    return (hist_k.histogram(bin_idx, ghc, n_bins=BINS),)
+
+
+def gain(g_cum, h_cum, params):
+    """Cumulative stats + [g_total, h_total, λ] → (F, B) gains."""
+    return (gain_k.gain_scan(g_cum, h_cum, params),)
+
+
+def node_pass(bin_idx, ghc, params):
+    """Fused per-node pipeline: histogram → cumsum → gain, one lowering.
+
+    Keeps the intermediate histogram inside the XLA program (no host
+    round-trip between kernels). Returns (hist, gains); the Rust side
+    uses `hist` for child statistics and `gains` for the arg-max.
+    """
+    h = hist_k.histogram(bin_idx, ghc, n_bins=BINS)  # (F, B, 3)
+    cum = jnp.cumsum(h, axis=1)
+    gains = gain_k.gain_scan(cum[:, :, 0], cum[:, :, 1], params)
+    return h, gains
+
+
+def example_shapes():
+    """ShapeDtypeStructs for each artifact's example arguments."""
+    import jax
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    s = jax.ShapeDtypeStruct
+    return {
+        "gh_binary": (s((N_TILE,), f32), s((N_TILE,), f32)),
+        "gh_softmax": (s((N_TILE, K_TILE), f32), s((N_TILE, K_TILE), f32)),
+        "hist": (s((N_TILE, F_TILE), i32), s((N_TILE, 3), f32)),
+        "gain": (s((F_TILE, BINS), f32), s((F_TILE, BINS), f32), s((3,), f32)),
+        "node_pass": (s((N_TILE, F_TILE), i32), s((N_TILE, 3), f32), s((3,), f32)),
+    }
+
+
+FUNCTIONS = {
+    "gh_binary": gh_binary,
+    "gh_softmax": gh_softmax,
+    "hist": hist,
+    "gain": gain,
+    "node_pass": node_pass,
+}

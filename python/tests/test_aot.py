@@ -1,0 +1,62 @@
+"""AOT lowering path: every model function must lower to parseable HLO
+text with the shapes the manifest promises (the format contract with
+rust/src/runtime/pjrt.rs)."""
+
+import json
+
+import jax
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def lowered_all():
+    shapes = model.example_shapes()
+    return {
+        name: jax.jit(fn).lower(*shapes[name]) for name, fn in model.FUNCTIONS.items()
+    }
+
+
+def test_all_functions_lower_to_hlo_text(lowered_all):
+    for name, lowered in lowered_all.items():
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text, f"{name}: missing ENTRY computation"
+        assert "ROOT" in text, f"{name}: missing ROOT instruction"
+        # return_tuple=True → the entry root must be a tuple
+        assert "tuple" in text, f"{name}: outputs not tupled"
+
+
+def test_hlo_mentions_expected_shapes(lowered_all):
+    text = aot.to_hlo_text(lowered_all["hist"])
+    n, f, b = model.N_TILE, model.F_TILE, model.BINS
+    assert f"s32[{n},{f}]" in text, "hist input bin_idx shape"
+    assert f"f32[{f},{b},3]" in text, "hist output shape"
+
+    text = aot.to_hlo_text(lowered_all["gh_binary"])
+    assert f"f32[{n}]" in text
+
+
+def test_manifest_roundtrip(tmp_path):
+    import subprocess
+    import sys
+
+    out = tmp_path / "arts"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out)],
+        check=True,
+        cwd=str(__import__("pathlib").Path(__file__).resolve().parents[1]),
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["n_tile"] == model.N_TILE
+    assert manifest["f_tile"] == model.F_TILE
+    assert manifest["bins"] == model.BINS
+    assert manifest["k_tile"] == model.K_TILE
+    for name in model.FUNCTIONS:
+        assert name in manifest["artifacts"]
+        assert (out / f"{name}.hlo.txt").exists()
+
+
+def test_shapes_dict_covers_functions():
+    shapes = model.example_shapes()
+    assert set(shapes) == set(model.FUNCTIONS)

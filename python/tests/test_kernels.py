@@ -1,0 +1,186 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against the pure-jnp
+reference, with hypothesis sweeping shapes and value ranges. This is the
+CORE correctness signal for L1 (the Rust runtime_parity test closes the
+loop against the CpuEngine on the Rust side)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gain as gain_k
+from compile.kernels import gh as gh_k
+from compile.kernels import histogram as hist_k
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(shape, lo, hi, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape), dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- gh_binary
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=4),
+    block_n=st.sampled_from([128, 256, 1024]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_gh_binary_matches_ref(blocks, block_n, seed):
+    n = blocks * block_n
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(rng.integers(0, 2, size=n), dtype=jnp.float32)
+    s = rand((n,), -8.0, 8.0, seed + 1)
+    g, h = gh_k.gh_binary(y, s, block_n=block_n)
+    gr, hr = ref.gh_binary_ref(y, s)
+    np.testing.assert_allclose(g, gr, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(h, hr, rtol=1e-6, atol=1e-6)
+
+
+def test_gh_binary_range():
+    # paper §4.2: g ∈ [−1, 1], h ∈ [0, 1]
+    y = jnp.asarray([0.0, 1.0] * 512, dtype=jnp.float32)
+    s = jnp.linspace(-30, 30, 1024, dtype=jnp.float32)
+    g, h = gh_k.gh_binary(y, s)
+    assert float(jnp.min(g)) >= -1.0 and float(jnp.max(g)) <= 1.0
+    assert float(jnp.min(h)) >= 0.0 and float(jnp.max(h)) <= 0.25 + 1e-6
+
+
+# --------------------------------------------------------------- gh_softmax
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=3),
+    k=st.sampled_from([2, 3, 7, 8, 11]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_gh_softmax_matches_ref(blocks, k, seed):
+    block_n = 128
+    n = blocks * block_n
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, k, size=n)
+    y = jnp.asarray(np.eye(k)[labels], dtype=jnp.float32)
+    s = rand((n, k), -6.0, 6.0, seed + 1)
+    g, h = gh_k.gh_softmax(y, s, block_n=block_n)
+    gr, hr = ref.gh_softmax_ref(y, s)
+    np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(h, hr, rtol=1e-5, atol=1e-6)
+
+
+def test_gh_softmax_rows_sum_zero():
+    n, k = 512, 5
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(np.eye(k)[rng.integers(0, k, size=n)], dtype=jnp.float32)
+    s = rand((n, k), -4, 4, 1)
+    g, _ = gh_k.gh_softmax(y, s, block_n=256)
+    np.testing.assert_allclose(jnp.sum(g, axis=-1), np.zeros(n), atol=1e-5)
+
+
+# ---------------------------------------------------------------- histogram
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([64, 256, 1024]),
+    f=st.integers(min_value=1, max_value=8),
+    n_bins=st.sampled_from([4, 16, 32]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_histogram_matches_ref(n, f, n_bins, seed):
+    rng = np.random.default_rng(seed)
+    bins = jnp.asarray(rng.integers(0, n_bins, size=(n, f)), dtype=jnp.int32)
+    ghc = rand((n, 3), -1.0, 1.0, seed + 1)
+    got = hist_k.histogram(bins, ghc, n_bins=n_bins)
+    want = ref.histogram_ref(bins, ghc, n_bins)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_histogram_totals_invariant():
+    # Σ over bins of any feature's histogram equals the column totals.
+    n, f, b = 512, 4, 32
+    rng = np.random.default_rng(3)
+    bins = jnp.asarray(rng.integers(0, b, size=(n, f)), dtype=jnp.int32)
+    ghc = jnp.concatenate(
+        [rand((n, 2), -1, 1, 4), jnp.ones((n, 1), dtype=jnp.float32)], axis=1
+    )
+    hist = hist_k.histogram(bins, ghc, n_bins=b)
+    totals = jnp.sum(ghc, axis=0)
+    for fi in range(f):
+        np.testing.assert_allclose(jnp.sum(hist[fi], axis=0), totals, rtol=1e-4, atol=1e-3)
+
+
+def test_histogram_counts_integral():
+    n, f, b = 256, 2, 8
+    rng = np.random.default_rng(5)
+    bins = jnp.asarray(rng.integers(0, b, size=(n, f)), dtype=jnp.int32)
+    ghc = jnp.concatenate(
+        [rand((n, 2), -1, 1, 6), jnp.ones((n, 1), dtype=jnp.float32)], axis=1
+    )
+    hist = hist_k.histogram(bins, ghc, n_bins=b)
+    counts = np.asarray(hist[:, :, 2])
+    np.testing.assert_allclose(counts, np.round(counts), atol=1e-5)
+    assert counts.sum() == pytest.approx(n * f)
+
+
+# --------------------------------------------------------------------- gain
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    f_blocks=st.integers(min_value=1, max_value=4),
+    b=st.sampled_from([8, 16, 32]),
+    lam=st.floats(min_value=0.01, max_value=10.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_gain_matches_ref(f_blocks, b, lam, seed):
+    f = f_blocks * 8
+    rng = np.random.default_rng(seed)
+    # build monotone cumulative stats from positive increments
+    inc_h = rng.uniform(0.01, 1.0, size=(f, b)).cumsum(axis=1)
+    inc_g = rng.uniform(-1.0, 1.0, size=(f, b)).cumsum(axis=1)
+    g_cum = jnp.asarray(inc_g, dtype=jnp.float32)
+    h_cum = jnp.asarray(inc_h, dtype=jnp.float32)
+    gt = float(inc_g[0, -1])
+    ht = float(inc_h[0, -1])
+    params = jnp.asarray([gt, ht, lam], dtype=jnp.float32)
+    got = gain_k.gain_scan(g_cum, h_cum, params, block_f=8)
+    want = ref.gain_ref(g_cum, h_cum, gt, ht, lam)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_gain_last_bin_masked():
+    f, b = 8, 16
+    g = jnp.ones((f, b), dtype=jnp.float32)
+    h = jnp.ones((f, b), dtype=jnp.float32)
+    params = jnp.asarray([1.0, 1.0, 0.5], dtype=jnp.float32)
+    out = gain_k.gain_scan(g, h, params, block_f=8)
+    np.testing.assert_allclose(out[:, -1], np.zeros(f))
+
+
+# ------------------------------------------------------------- model fusion
+
+
+def test_node_pass_fusion_matches_pieces():
+    from compile import model
+
+    n, f = model.N_TILE, model.F_TILE
+    rng = np.random.default_rng(9)
+    bins = jnp.asarray(rng.integers(0, model.BINS, size=(n, f)), dtype=jnp.int32)
+    ghc = jnp.concatenate(
+        [rand((n, 2), -1, 1, 10), jnp.ones((n, 1), dtype=jnp.float32)], axis=1
+    )
+    gt = float(jnp.sum(ghc[:, 0]))
+    ht = float(jnp.sum(ghc[:, 1]))
+    params = jnp.asarray([gt, ht, 0.1], dtype=jnp.float32)
+    hist, gains = model.node_pass(bins, ghc, params)
+    want_hist = ref.histogram_ref(bins, ghc, model.BINS)
+    cum = ref.cumsum_ref(want_hist)
+    want_gains = ref.gain_ref(cum[:, :, 0], cum[:, :, 1], gt, ht, 0.1)
+    np.testing.assert_allclose(hist, want_hist, rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(gains, want_gains, rtol=2e-3, atol=2e-3)

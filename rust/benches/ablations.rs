@@ -1,0 +1,139 @@
+//! Cost-model validation (§4.1 / §4.6) and per-optimization ablation.
+//!
+//! The paper estimates that GH packing + histogram subtraction cut
+//! homomorphic computation ~75% and that packing + compression cut
+//! encryption/decryption and communication ~78% (with n_i=1M, n_f=2000,
+//! h=5, n_b=32, η_s=6). We *measure* those quantities with the global HE
+//! operation counters and the transport's byte accounting, at bench
+//! scale, and compare against the model's predictions for the same
+//! parameters.
+
+mod common;
+
+use sbp::bench_harness::Table;
+use sbp::config::{CipherKind, TrainConfig};
+use sbp::coordinator::train_federated;
+use sbp::data::synthetic::SyntheticSpec;
+
+struct Variant {
+    name: &'static str,
+    packing: bool,
+    subtraction: bool,
+    compression: bool,
+    goss: bool,
+    sparse: bool,
+}
+
+fn main() {
+    let epochs = common::bench_epochs(2);
+    let spec = SyntheticSpec::susy(0.0006 * common::scale_mult()); // 3,000 × 18
+    let vs = spec.generate_vertical(42, 1);
+    println!(
+        "\n=== Ablation: each optimization's effect on HE ops / traffic / time ===\n\
+         dataset: {} ({} × {}), Paillier, {} epochs\n",
+        spec.name,
+        vs.n(),
+        vs.d_total(),
+        epochs
+    );
+
+    let variants = [
+        Variant { name: "SecureBoost (none)", packing: false, subtraction: false, compression: false, goss: false, sparse: false },
+        Variant { name: "+packing", packing: true, subtraction: false, compression: false, goss: false, sparse: false },
+        Variant { name: "+subtraction", packing: true, subtraction: true, compression: false, goss: false, sparse: false },
+        Variant { name: "+compression", packing: true, subtraction: true, compression: true, goss: false, sparse: false },
+        Variant { name: "+GOSS (SB+ full)", packing: true, subtraction: true, compression: true, goss: true, sparse: false },
+    ];
+
+    let mut table = Table::new(&[
+        "variant", "he_adds", "encrypts", "decrypts", "h→g MiB", "s/tree", "AUC",
+    ]);
+    let mut first_adds = 0u64;
+    let mut rows = Vec::new();
+    for v in &variants {
+        let mut cfg = TrainConfig::secureboost_baseline();
+        cfg.epochs = epochs;
+        cfg.cipher = CipherKind::Paillier;
+        common::fast_paillier(&mut cfg);
+        cfg.gh_packing = v.packing;
+        cfg.hist_subtraction = v.subtraction;
+        cfg.cipher_compression = v.compression;
+        cfg.goss = v.goss.then(Default::default);
+        cfg.sparse_optimization = v.sparse;
+
+        let rep = train_federated(&vs, &cfg).expect("run");
+        if first_adds == 0 {
+            first_adds = rep.ops.adds;
+        }
+        rows.push((v.name, rep));
+    }
+    for (name, rep) in &rows {
+        table.row(&[
+            name.to_string(),
+            format!("{} ({:.0}%)", rep.ops.adds, 100.0 * rep.ops.adds as f64 / first_adds as f64),
+            rep.ops.encrypts.to_string(),
+            rep.ops.decrypts.to_string(),
+            format!("{:.2}", rep.comm.bytes_to_guest as f64 / 1048576.0),
+            format!("{:.3}", rep.avg_tree_seconds),
+            format!("{:.4}", rep.train_metric),
+        ]);
+    }
+    table.print();
+
+    // ---- paper's closed-form cost model at its own parameters ----------
+    println!("\n=== Cost model (§4.1/§4.6), paper parameters ===");
+    let (n_i, n_f, h, n_b) = (1_000_000f64, 2_000f64, 5f64, 32f64);
+    let n_n = 2f64.powf(h);
+    let comp_before = 2.0 * n_i * h * n_f + 2.0 * n_n * n_f * n_b; // eq. 8
+    let comp_after = 0.5 * n_i * h * n_f + n_n * n_f * n_b; // eq. 14
+    let eta_s = 6.0;
+    let ende_before = 2.0 * n_i + 2.0 * n_b * n_f * n_n; // eq. 9
+    let ende_after = n_i + n_b * n_f * n_n / eta_s; // eq. 15
+    println!(
+        "homomorphic ops: {:.2e} → {:.2e}  ({:.0}% reduction; paper: 75%)",
+        comp_before,
+        comp_after,
+        100.0 * (1.0 - comp_after / comp_before)
+    );
+    println!(
+        "enc/dec + comm:  {:.2e} → {:.2e}  ({:.0}% reduction; paper: 78%)",
+        ende_before,
+        ende_after,
+        100.0 * (1.0 - ende_after / ende_before)
+    );
+
+    // measured equivalents from the ablation runs above
+    let base = &rows[0].1;
+    let full = &rows[3].1; // +compression (before GOSS changes instance counts)
+    println!(
+        "measured at bench scale (no GOSS): he_adds −{:.0}%, decrypts −{:.0}%, h→g bytes −{:.0}%",
+        100.0 * (1.0 - full.ops.adds as f64 / base.ops.adds as f64),
+        100.0 * (1.0 - full.ops.decrypts as f64 / base.ops.decrypts as f64),
+        100.0 * (1.0 - full.comm.bytes_to_guest as f64 / base.comm.bytes_to_guest as f64),
+    );
+
+    // ---- sparse optimization on the sparse preset ----------------------
+    println!("\n=== Sparse optimization (§6.2) on covtype-shaped data ===");
+    let sp = SyntheticSpec::covtype(0.001 * common::scale_mult());
+    let svs = sp.generate_vertical(42, 1);
+    let mut dense_cfg = TrainConfig::secureboost_plus();
+    dense_cfg.epochs = epochs;
+    dense_cfg.cipher = CipherKind::Paillier;
+    common::fast_paillier(&mut dense_cfg);
+    dense_cfg.goss = None;
+    dense_cfg.sparse_optimization = false;
+    let mut sparse_cfg = dense_cfg.clone();
+    sparse_cfg.sparse_optimization = true;
+    let rd = train_federated(&svs, &dense_cfg).expect("dense");
+    let rs = train_federated(&svs, &sparse_cfg).expect("sparse");
+    println!(
+        "he_adds: dense {} → sparse {} (−{:.0}%); tree time {:.3}s → {:.3}s; AUC {:.4} vs {:.4}",
+        rd.ops.adds,
+        rs.ops.adds,
+        100.0 * (1.0 - rs.ops.adds as f64 / rd.ops.adds as f64),
+        rd.avg_tree_seconds,
+        rs.avg_tree_seconds,
+        rd.train_metric,
+        rs.train_metric
+    );
+}

@@ -1,0 +1,59 @@
+//! Figures 9 & 10 reproduction: SecureBoost-MO vs default SecureBoost+
+//! on the three multi-class datasets.
+//!
+//! Fig. 9: trees needed — SB+ builds (epochs × #classes) single-output
+//! trees; SBT-MO builds one multi-output tree per epoch and reaches the
+//! same accuracy with far fewer trees.
+//! Fig. 10: total tree-building time under both encryption schemas —
+//! paper: MO reduces 57.5–81% (IterativeAffine) and 36.4–74% (Paillier).
+
+mod common;
+
+use sbp::bench_harness::Table;
+use sbp::config::{CipherKind, ModeKind, TrainConfig};
+use sbp::coordinator::train_federated;
+
+fn main() {
+    let epochs = common::bench_epochs(3);
+    println!("\n=== Figures 9/10: SecureBoost+ (one-vs-all) vs SecureBoost-MO ===\n");
+    let mut table = Table::new(&[
+        "dataset", "cipher", "SB+ trees", "MO trees", "SB+ acc", "MO acc", "SB+ total", "MO total",
+        "time red.",
+    ]);
+
+    for cipher in [CipherKind::IterativeAffine, CipherKind::Paillier] {
+        for spec in common::multiclass_suite() {
+            let vs = spec.generate_vertical(42, 1);
+
+            let mut ova = TrainConfig::secureboost_plus();
+            ova.epochs = epochs;
+            ova.cipher = cipher;
+            common::fast_paillier(&mut ova);
+
+            let mut mo = ova.clone().with_mode(ModeKind::MultiOutput);
+            mo.cipher_compression = false; // paper §7.3.2
+            // MO needs more boosting rounds than OvA epochs to reach the
+            // same accuracy, but far fewer trees overall (paper: 275 vs 38
+            // on sensorless — a 7× tree reduction at matched accuracy).
+            mo.epochs = epochs * 4;
+
+            let ro = train_federated(&vs, &ova).expect("ova");
+            let rm = train_federated(&vs, &mo).expect("mo");
+            let red = 100.0 * (1.0 - rm.total_tree_seconds / ro.total_tree_seconds);
+            table.row(&[
+                spec.name.clone(),
+                cipher.name().to_string(),
+                ro.trees_built.to_string(),
+                rm.trees_built.to_string(),
+                format!("{:.3}", ro.train_metric),
+                format!("{:.3}", rm.train_metric),
+                format!("{:.2}s", ro.total_tree_seconds),
+                format!("{:.2}s", rm.total_tree_seconds),
+                format!("{red:.1}%"),
+            ]);
+        }
+    }
+    table.print();
+    println!("\n(paper shape: MO uses ~5–7× fewer trees at matched accuracy and");
+    println!(" cuts total multi-class training time 36–81%.)");
+}

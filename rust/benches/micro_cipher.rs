@@ -1,0 +1,109 @@
+//! Microbenchmarks of the HE substrate — the primitives whose costs the
+//! paper's model (§4.1) counts: ciphertext addition (one Montgomery
+//! multiplication mod n²), encryption, decryption, scalar multiplication,
+//! negation (histogram subtraction), and the bignum kernels underneath.
+//!
+//! This is the profile the §Perf optimization loop works against.
+
+use sbp::bench_harness::{bench, fmt_secs, Table};
+use sbp::crypto::bigint::BigUint;
+use sbp::crypto::cipher::CipherSuite;
+use sbp::crypto::mont::MontCtx;
+use sbp::crypto::paillier;
+use sbp::util::rng::ChaCha20Rng;
+
+fn main() {
+    let mut rng = ChaCha20Rng::from_u64(7);
+
+    println!("\n=== bignum kernels ===\n");
+    let mut t = Table::new(&["op", "bits", "median", "mean"]);
+    for bits in [1024usize, 2048, 4096] {
+        let m = {
+            let mut v = BigUint::random_exact_bits(&mut rng, bits);
+            if v.is_even() {
+                v = v.add_u64(1);
+            }
+            v
+        };
+        let ctx = MontCtx::new(m.clone());
+        let a = ctx.to_mont(&BigUint::random_below(&mut rng, &m));
+        let b = ctx.to_mont(&BigUint::random_below(&mut rng, &m));
+        let s = bench(50, 500, || ctx.mont_mul(&a, &b));
+        t.row(&["mont_mul".into(), bits.to_string(), fmt_secs(s.median), fmt_secs(s.mean)]);
+
+        let x = BigUint::random_below(&mut rng, &m);
+        let y = BigUint::random_below(&mut rng, &m);
+        let s = bench(20, 100, || x.mul(&y));
+        t.row(&["mul".into(), bits.to_string(), fmt_secs(s.median), fmt_secs(s.mean)]);
+        let s = bench(20, 100, || x.mul(&y).rem(&m));
+        t.row(&["mul+rem".into(), bits.to_string(), fmt_secs(s.median), fmt_secs(s.mean)]);
+        let e = BigUint::random_bits(&mut rng, 256);
+        let s = bench(5, 30, || ctx.mod_pow(&x, &e));
+        t.row(&["modexp-256".into(), bits.to_string(), fmt_secs(s.median), fmt_secs(s.mean)]);
+        let s = bench(5, 30, || ctx.mont_inverse(&a));
+        t.row(&["mont_inverse".into(), bits.to_string(), fmt_secs(s.median), fmt_secs(s.mean)]);
+    }
+    t.print();
+
+    println!("\n=== Paillier (per ciphertext op) ===\n");
+    let mut t = Table::new(&["op", "key", "median", "mean", "note"]);
+    for key_bits in [1024usize, 2048] {
+        let (pk, sk) = paillier::keygen(key_bits, &mut rng);
+        let m1 = BigUint::random_bits(&mut rng, 140);
+        let m2 = BigUint::random_bits(&mut rng, 140);
+        let c1 = pk.encrypt(&m1, &mut rng);
+        let c2 = pk.encrypt(&m2, &mut rng);
+
+        let mut r2 = rng.clone();
+        let s = bench(3, 30, || pk.encrypt(&m1, &mut r2));
+        t.row(&["encrypt(fast obf)".into(), key_bits.to_string(), fmt_secs(s.median), fmt_secs(s.mean), "h^ρ, ρ=256b".into()]);
+        let mut r3 = rng.clone();
+        let s = bench(1, 8, || pk.obfuscator_full(&mut r3));
+        t.row(&["obfuscator_full".into(), key_bits.to_string(), fmt_secs(s.median), fmt_secs(s.mean), "rⁿ (exact)".into()]);
+        let s = bench(3, 30, || sk.decrypt(&pk, &c1));
+        t.row(&["decrypt (CRT)".into(), key_bits.to_string(), fmt_secs(s.median), fmt_secs(s.mean), String::new()]);
+        let s = bench(50, 1000, || pk.add(&c1, &c2));
+        t.row(&["add (hist hot op)".into(), key_bits.to_string(), fmt_secs(s.median), fmt_secs(s.mean), "1 mont_mul mod n²".into()]);
+        let k = BigUint::random_bits(&mut rng, 147);
+        let s = bench(3, 30, || pk.scalar_mul(&c1, &k));
+        t.row(&["scalar_mul (147b)".into(), key_bits.to_string(), fmt_secs(s.median), fmt_secs(s.mean), "compression shift".into()]);
+        let s = bench(3, 30, || pk.negate(&c1));
+        t.row(&["negate".into(), key_bits.to_string(), fmt_secs(s.median), fmt_secs(s.mean), "hist subtraction".into()]);
+    }
+    t.print();
+
+    println!("\n=== IterativeAffine (per ciphertext op, 1024-bit) ===\n");
+    let suite = CipherSuite::new_affine(1024, &mut rng);
+    let m = BigUint::random_bits(&mut rng, 140);
+    let mut r4 = rng.clone();
+    let c = suite.encrypt(&m, &mut r4);
+    let c2 = suite.encrypt(&m, &mut r4);
+    let mut t = Table::new(&["op", "median", "mean"]);
+    let mut r5 = rng.clone();
+    let s = bench(100, 2000, || suite.encrypt(&m, &mut r5));
+    t.row(&["encrypt".into(), fmt_secs(s.median), fmt_secs(s.mean)]);
+    let s = bench(100, 2000, || suite.decrypt(&c));
+    t.row(&["decrypt".into(), fmt_secs(s.median), fmt_secs(s.mean)]);
+    let s = bench(100, 5000, || suite.add(&c, &c2));
+    t.row(&["add".into(), fmt_secs(s.median), fmt_secs(s.mean)]);
+    t.print();
+
+    println!("\n=== batch throughput (pool-parallel) ===\n");
+    let mut rng2 = ChaCha20Rng::from_u64(8);
+    let suite = CipherSuite::new_paillier(1024, &mut rng2);
+    let plains: Vec<BigUint> = (0..2000).map(|_| BigUint::random_bits(&mut rng2, 140)).collect();
+    let s = bench(0, 3, || suite.encrypt_batch(&plains, &mut rng2));
+    println!(
+        "encrypt_batch(2000) @1024b: {} total → {} per ct ({} threads)",
+        fmt_secs(s.median),
+        fmt_secs(s.median / 2000.0),
+        sbp::util::pool::num_threads()
+    );
+    let cts = suite.encrypt_batch(&plains, &mut rng2);
+    let s = bench(0, 3, || suite.decrypt_batch(&cts));
+    println!(
+        "decrypt_batch(2000) @1024b: {} total → {} per ct",
+        fmt_secs(s.median),
+        fmt_secs(s.median / 2000.0)
+    );
+}

@@ -1,0 +1,488 @@
+//! Plaintext GBDT: layer-wise histogram tree growth and the centralized
+//! trainer used as the paper's "XGB (local)" baseline (Tables 3–5).
+//!
+//! The same growth engine serves the guest's *local* trees in mix mode and
+//! the guest layers in layered mode — those paths simply run it on the
+//! guest's feature slice instead of the full matrix.
+
+use crate::config::TrainConfig;
+use crate::data::binning::{bin_party, BinnedMatrix};
+use crate::data::dataset::{Dataset, PartySlice};
+use crate::data::goss::goss_sample;
+use crate::data::sparse::SparseBinned;
+use crate::metrics::{accuracy_multiclass, auc, celoss_multiclass, logloss_binary};
+use crate::tree::histogram::PlainHistogram;
+use crate::tree::node::{SplitRef, Tree};
+use crate::tree::split::{best_local_split, leaf_weight, GainParams};
+use crate::util::rng::Xoshiro256;
+use std::collections::HashMap;
+
+/// Parameters for growing one plaintext tree.
+#[derive(Clone, Debug)]
+pub struct GrowParams {
+    pub max_depth: u8,
+    pub gain: GainParams,
+    pub learning_rate: f64,
+    /// Plaintext histogram subtraction (compute smaller child, derive
+    /// the sibling). Always beneficial; toggle exists for ablations.
+    pub hist_subtraction: bool,
+    /// Sparse-aware histogram building when a sparse view is provided.
+    pub sparse: bool,
+}
+
+impl GrowParams {
+    pub fn from_config(cfg: &TrainConfig) -> Self {
+        GrowParams {
+            max_depth: cfg.max_depth,
+            gain: cfg.gain,
+            learning_rate: cfg.learning_rate,
+            hist_subtraction: cfg.hist_subtraction,
+            sparse: cfg.sparse_optimization,
+        }
+    }
+}
+
+/// Grow one tree on plaintext g/h (width `w`), layer by layer.
+/// Returns the tree; leaf weights already scaled by the learning rate.
+pub fn grow_tree_plain(
+    bm: &BinnedMatrix,
+    sb: Option<&SparseBinned>,
+    instances: &[u32],
+    g: &[f64],
+    h: &[f64],
+    w: usize,
+    p: &GrowParams,
+) -> Tree {
+    let n_bins = bm.max_bins().max(2);
+    let mut tree = Tree::new(w);
+    // node id → instance list
+    let mut members: HashMap<u32, Vec<u32>> = HashMap::new();
+    members.insert(0, instances.to_vec());
+    // node totals
+    let root_tot = node_totals(instances, g, h, w);
+    tree.nodes[0].sum_g = root_tot.0.clone();
+    tree.nodes[0].sum_h = root_tot.1.clone();
+    tree.nodes[0].n_samples = instances.len() as u32;
+
+    // raw (non-cumulative) histograms of the previous layer, for subtraction
+    let mut layer_nodes = vec![0u32];
+    let mut raw_hists: HashMap<u32, PlainHistogram> = HashMap::new();
+
+    for _depth in 0..p.max_depth {
+        let mut next_layer = Vec::new();
+        let mut next_raw: HashMap<u32, PlainHistogram> = HashMap::new();
+        // order: compute smaller sibling first so the larger one can subtract
+        let mut order = layer_nodes.clone();
+        order.sort_by_key(|id| members.get(id).map(|m| m.len()).unwrap_or(0));
+        for node_id in order {
+            let insts = members.get(&node_id).cloned().unwrap_or_default();
+            let node = &tree.nodes[node_id as usize];
+            let (gp, hp) = (node.sum_g.clone(), node.sum_h.clone());
+            let count = node.n_samples;
+            if insts.len() < 2 * p.gain.min_leaf_samples as usize {
+                continue; // stays a leaf
+            }
+            // histogram: by subtraction if the sibling's raw hist is ready
+            let sibling_done = sibling_raw(&tree, node_id, &next_raw);
+            let mut hist = match (p.hist_subtraction, sibling_done) {
+                (true, Some((parent_id, sib_hist))) => {
+                    let parent = raw_hists.get(&parent_id).expect("parent hist cached");
+                    parent.subtract(sib_hist)
+                }
+                _ => build_hist(bm, sb, n_bins, &insts, g, h, w, p, &gp, &hp, count),
+            };
+            next_raw.insert(node_id, hist.clone());
+            hist.cumsum();
+            if let Some(split) = best_local_split(&hist, &gp, &hp, count, &p.gain) {
+                let threshold = bm.specs[split.feature as usize].threshold(split.bin);
+                let (l, r) = tree.split_node(
+                    node_id,
+                    SplitRef::Guest { feature: split.feature, bin: split.bin, threshold },
+                );
+                tree.nodes[node_id as usize].gain = split.gain;
+                // partition members
+                let (li, ri): (Vec<u32>, Vec<u32>) = insts
+                    .iter()
+                    .partition(|&&i| bm.bin(i as usize, split.feature as usize) <= split.bin);
+                // children totals from the split statistics
+                let lg = split.left_g.clone();
+                let lh = split.left_h.clone();
+                let rg: Vec<f64> = gp.iter().zip(&lg).map(|(a, b)| a - b).collect();
+                let rh: Vec<f64> = hp.iter().zip(&lh).map(|(a, b)| a - b).collect();
+                set_node_stats(&mut tree, l, &lg, &lh, li.len() as u32);
+                set_node_stats(&mut tree, r, &rg, &rh, ri.len() as u32);
+                members.insert(l, li);
+                members.insert(r, ri);
+                next_layer.push(l);
+                next_layer.push(r);
+            }
+            members.remove(&node_id);
+        }
+        raw_hists = next_raw;
+        layer_nodes = next_layer;
+        if layer_nodes.is_empty() {
+            break;
+        }
+    }
+    finalize_leaves(&mut tree, p.gain.lambda, p.learning_rate);
+    tree
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_hist(
+    bm: &BinnedMatrix,
+    sb: Option<&SparseBinned>,
+    n_bins: usize,
+    insts: &[u32],
+    g: &[f64],
+    h: &[f64],
+    w: usize,
+    p: &GrowParams,
+    gp: &[f64],
+    hp: &[f64],
+    count: u32,
+) -> PlainHistogram {
+    match (p.sparse, sb) {
+        (true, Some(sb)) => {
+            PlainHistogram::build_sparse(sb, n_bins, insts, g, h, w, gp, hp, count)
+        }
+        _ => PlainHistogram::build(bm, n_bins, insts, g, h, w),
+    }
+}
+
+/// GOSS sample + amplified g/h copies for one tree (identity when off).
+fn goss_for(
+    g: &[f64],
+    h: &[f64],
+    w: usize,
+    goss: &Option<crate::config::GossConfig>,
+    rng: &mut Xoshiro256,
+) -> (Vec<u32>, Vec<f64>, Vec<f64>) {
+    let n = g.len() / w;
+    match goss {
+        Some(gc) => {
+            let mag: Vec<f64> = (0..n)
+                .map(|i| (0..w).map(|j| g[i * w + j].abs()).sum())
+                .collect();
+            let s = goss_sample(&mag, gc.top_rate, gc.other_rate, rng);
+            let mut ga = g.to_vec();
+            let mut ha = h.to_vec();
+            for (&i, &wt) in s.indices.iter().zip(&s.weights) {
+                if wt != 1.0 {
+                    for j in 0..w {
+                        ga[i as usize * w + j] *= wt;
+                        ha[i as usize * w + j] *= wt;
+                    }
+                }
+            }
+            (s.indices, ga, ha)
+        }
+        None => ((0..n as u32).collect(), g.to_vec(), h.to_vec()),
+    }
+}
+
+fn node_totals(instances: &[u32], g: &[f64], h: &[f64], w: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut sg = vec![0.0; w];
+    let mut sh = vec![0.0; w];
+    for &i in instances {
+        for j in 0..w {
+            sg[j] += g[i as usize * w + j];
+            sh[j] += h[i as usize * w + j];
+        }
+    }
+    (sg, sh)
+}
+
+fn set_node_stats(tree: &mut Tree, id: u32, g: &[f64], h: &[f64], n: u32) {
+    let node = &mut tree.nodes[id as usize];
+    node.sum_g = g.to_vec();
+    node.sum_h = h.to_vec();
+    node.n_samples = n;
+}
+
+/// If this node's sibling has a raw histogram in the current layer's cache,
+/// return (parent_id, sibling_hist).
+fn sibling_raw<'a>(
+    tree: &Tree,
+    node_id: u32,
+    cache: &'a HashMap<u32, PlainHistogram>,
+) -> Option<(u32, &'a PlainHistogram)> {
+    let parent = tree.nodes[node_id as usize].parent;
+    if parent < 0 {
+        return None;
+    }
+    let pnode = &tree.nodes[parent as usize];
+    let sib = if pnode.left == node_id as i32 { pnode.right } else { pnode.left };
+    cache.get(&(sib as u32)).map(|h| (parent as u32, h))
+}
+
+/// Fill leaf weights (−Σg/(Σh+λ)·lr).
+pub fn finalize_leaves(tree: &mut Tree, lambda: f64, lr: f64) {
+    for node in &mut tree.nodes {
+        if node.is_leaf() {
+            node.weight = leaf_weight(&node.sum_g, &node.sum_h, lambda, lr);
+        }
+    }
+}
+
+/// Route one instance through a guest-only (local) tree.
+pub fn predict_one<'t>(tree: &'t Tree, bm: &BinnedMatrix, row: usize) -> &'t [f64] {
+    let mut cur = 0usize;
+    loop {
+        let node = &tree.nodes[cur];
+        match &node.split {
+            None => return &node.weight,
+            Some(SplitRef::Guest { feature, bin, .. }) => {
+                let b = bm.bin(row, *feature as usize);
+                cur = if b <= *bin { node.left as usize } else { node.right as usize };
+            }
+            Some(SplitRef::Host { .. }) => {
+                panic!("predict_one on a tree with host splits — use the coordinator")
+            }
+        }
+    }
+}
+
+/// Accumulate a tree's outputs into a prediction matrix.
+/// `class` selects the column for width-1 trees in one-vs-all mode;
+/// width-k trees add to all k columns.
+pub fn accumulate_predictions(
+    tree: &Tree,
+    bm: &BinnedMatrix,
+    class: usize,
+    k: usize,
+    preds: &mut [f64],
+) {
+    for i in 0..bm.n {
+        let wvec = predict_one(tree, bm, i);
+        if tree.width == 1 {
+            preds[i * k + class] += wvec[0];
+        } else {
+            for (j, &v) in wvec.iter().enumerate() {
+                preds[i * k + j] += v;
+            }
+        }
+    }
+}
+
+/// A trained centralized model.
+pub struct GbdtModel {
+    /// (tree, class) — class is 0 for binary / MO trees.
+    pub trees: Vec<(Tree, usize)>,
+    pub k: usize,
+    /// Width of prediction rows (1 for binary, k for multi-class).
+    pub pred_width: usize,
+}
+
+/// Training artifacts the experiment harness consumes.
+pub struct CentralizedReport {
+    pub model: GbdtModel,
+    pub loss_curve: Vec<f64>,
+    /// AUC for binary tasks, accuracy for multi-class.
+    pub train_metric: f64,
+    pub train_seconds: f64,
+}
+
+/// Multi-class strategy for the centralized trainer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MultiStrategy {
+    /// One tree per class per epoch (the traditional GBDT setting).
+    OneVsAll,
+    /// One multi-output tree per epoch (GBDT-MO; fig. 9/10 baseline).
+    MultiOutput,
+}
+
+/// Train the centralized (non-federated, plaintext) baseline.
+pub fn train_centralized_gbdt(
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    strategy: MultiStrategy,
+) -> CentralizedReport {
+    let start = std::time::Instant::now();
+    let slice = PartySlice { cols: (0..ds.d).collect(), x: ds.x.clone(), n: ds.n };
+    let bm = bin_party(&slice, cfg.max_bin);
+    let sb = crate::data::sparse::maybe_sparse(&slice, &bm, cfg.sparse_optimization);
+    let k = ds.n_classes;
+    let binary = k == 2;
+    let pred_width = if binary { 1 } else { k };
+    let mut preds = vec![0.0f64; ds.n * pred_width];
+    let grow = GrowParams::from_config(cfg);
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    let mut trees: Vec<(Tree, usize)> = Vec::new();
+    let mut loss_curve = Vec::with_capacity(cfg.epochs);
+
+    for _epoch in 0..cfg.epochs {
+        let obj = if binary {
+            crate::boosting::loss::Objective::BinaryLogistic
+        } else {
+            crate::boosting::loss::Objective::SoftmaxCE { k }
+        };
+        let (g, h) = crate::boosting::loss::compute_gh(obj, &ds.y, &preds);
+
+        // GOSS is applied *per tree* on that tree's own gradient
+        // magnitudes — for one-vs-all multi-class that means per class
+        // (class-summed magnitudes are nearly uniform at early epochs,
+        // which degrades sampling badly; the federated trainer samples
+        // per tree for the same reason).
+        if binary {
+            let (instances, ga, ha) = goss_for(&g, &h, 1, &cfg.goss, &mut rng);
+            let tree = grow_tree_plain(&bm, sb.as_ref(), &instances, &ga, &ha, 1, &grow);
+            accumulate_predictions(&tree, &bm, 0, 1, &mut preds);
+            trees.push((tree, 0));
+            loss_curve.push(logloss_binary(&ds.y, &preds));
+        } else {
+            match strategy {
+                MultiStrategy::OneVsAll => {
+                    for cls in 0..k {
+                        let gc: Vec<f64> = (0..ds.n).map(|i| g[i * k + cls]).collect();
+                        let hc: Vec<f64> = (0..ds.n).map(|i| h[i * k + cls]).collect();
+                        let (instances, ga, ha) =
+                            goss_for(&gc, &hc, 1, &cfg.goss, &mut rng);
+                        let tree =
+                            grow_tree_plain(&bm, sb.as_ref(), &instances, &ga, &ha, 1, &grow);
+                        accumulate_predictions(&tree, &bm, cls, k, &mut preds);
+                        trees.push((tree, cls));
+                    }
+                }
+                MultiStrategy::MultiOutput => {
+                    // GOSS disabled for MO (see federation::guest rationale)
+                    let (instances, ga, ha) = goss_for(&g, &h, k, &None, &mut rng);
+                    let tree =
+                        grow_tree_plain(&bm, sb.as_ref(), &instances, &ga, &ha, k, &grow);
+                    accumulate_predictions(&tree, &bm, 0, k, &mut preds);
+                    trees.push((tree, 0));
+                }
+            }
+            loss_curve.push(celoss_multiclass(&ds.y, &preds, k));
+        }
+    }
+
+    let train_metric = if binary {
+        auc(&ds.y, &preds)
+    } else {
+        accuracy_multiclass(&ds.y, &preds, k)
+    };
+    CentralizedReport {
+        model: GbdtModel { trees, k, pred_width },
+        loss_curve,
+        train_metric,
+        train_seconds: start.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+
+    fn tiny_cfg() -> TrainConfig {
+        let mut cfg = TrainConfig::secureboost_plus();
+        cfg.epochs = 10;
+        cfg.max_depth = 3;
+        cfg.goss = None;
+        cfg.sparse_optimization = false;
+        cfg
+    }
+
+    #[test]
+    fn binary_learns_signal() {
+        let ds = SyntheticSpec::give_credit(0.01).generate(1);
+        let rep = train_centralized_gbdt(&ds, &tiny_cfg(), MultiStrategy::OneVsAll);
+        assert!(rep.train_metric > 0.80, "AUC {}", rep.train_metric);
+        // loss decreasing overall
+        assert!(rep.loss_curve.last().unwrap() < rep.loss_curve.first().unwrap());
+    }
+
+    #[test]
+    fn goss_close_to_full() {
+        let ds = SyntheticSpec::give_credit(0.01).generate(2);
+        let mut with = tiny_cfg();
+        with.goss = Some(crate::config::GossConfig::default());
+        let base = train_centralized_gbdt(&ds, &tiny_cfg(), MultiStrategy::OneVsAll);
+        let goss = train_centralized_gbdt(&ds, &with, MultiStrategy::OneVsAll);
+        // GOSS trains on fewer instances with amplification: train AUC can
+        // move either way but must stay in the same quality regime (§6.1).
+        assert!(
+            (base.train_metric - goss.train_metric).abs() < 0.08,
+            "full {} vs goss {}",
+            base.train_metric,
+            goss.train_metric
+        );
+    }
+
+    #[test]
+    fn multiclass_one_vs_all_learns() {
+        let ds = SyntheticSpec::sensorless(0.01).generate(3);
+        let mut cfg = tiny_cfg();
+        cfg.epochs = 6;
+        let rep = train_centralized_gbdt(&ds, &cfg, MultiStrategy::OneVsAll);
+        assert!(rep.train_metric > 1.5 / 11.0, "acc {}", rep.train_metric);
+        assert_eq!(rep.model.trees.len(), 6 * 11);
+    }
+
+    #[test]
+    fn multioutput_fewer_trees_comparable_quality() {
+        let ds = SyntheticSpec::sensorless(0.005).generate(4);
+        let mut cfg = tiny_cfg();
+        cfg.epochs = 8;
+        let ova = train_centralized_gbdt(&ds, &cfg, MultiStrategy::OneVsAll);
+        let mo = train_centralized_gbdt(&ds, &cfg, MultiStrategy::MultiOutput);
+        assert_eq!(mo.model.trees.len(), 8);
+        assert!(
+            mo.train_metric > ova.train_metric - 0.15,
+            "mo {} vs ova {}",
+            mo.train_metric,
+            ova.train_metric
+        );
+    }
+
+    #[test]
+    fn subtraction_equals_direct_growth() {
+        // trees grown with and without plaintext hist subtraction must be
+        // identical (subtraction is exact in f64 up to rounding noise).
+        let ds = SyntheticSpec::give_credit(0.005).generate(5);
+        let mut a = tiny_cfg();
+        a.hist_subtraction = true;
+        let mut b = tiny_cfg();
+        b.hist_subtraction = false;
+        let ra = train_centralized_gbdt(&ds, &a, MultiStrategy::OneVsAll);
+        let rb = train_centralized_gbdt(&ds, &b, MultiStrategy::OneVsAll);
+        assert!(
+            (ra.train_metric - rb.train_metric).abs() < 1e-6,
+            "{} vs {}",
+            ra.train_metric,
+            rb.train_metric
+        );
+    }
+
+    #[test]
+    fn sparse_optimization_equals_dense() {
+        let ds = SyntheticSpec::covtype(0.002).generate(6);
+        let mut dense = tiny_cfg();
+        dense.epochs = 4;
+        let mut sparse = dense.clone();
+        sparse.sparse_optimization = true;
+        let rd = train_centralized_gbdt(&ds, &dense, MultiStrategy::OneVsAll);
+        let rs = train_centralized_gbdt(&ds, &sparse, MultiStrategy::OneVsAll);
+        // The sparse path recovers zero-bin stats by subtraction; float
+        // summation order differs, so tie-broken splits can diverge — the
+        // model quality must not. (Exact cell-level equality is asserted in
+        // tree::histogram::tests::cipher_sparse_build_matches_dense.)
+        assert!(
+            (rd.train_metric - rs.train_metric).abs() < 0.05,
+            "dense {} vs sparse {}",
+            rd.train_metric,
+            rs.train_metric
+        );
+    }
+
+    #[test]
+    fn depth_respected() {
+        let ds = SyntheticSpec::give_credit(0.005).generate(7);
+        let mut cfg = tiny_cfg();
+        cfg.max_depth = 2;
+        cfg.epochs = 1;
+        let rep = train_centralized_gbdt(&ds, &cfg, MultiStrategy::OneVsAll);
+        assert!(rep.model.trees[0].0.max_depth() <= 2);
+    }
+}

@@ -1,0 +1,138 @@
+//! Second-order losses: binary logistic and softmax cross-entropy
+//! (paper eq. 4; §5.3 uses the diagonal softmax hessian).
+//!
+//! These plaintext g/h computations are exactly what the L1 Pallas kernels
+//! (`python/compile/kernels/gh.py`) implement for the PJRT path; the
+//! functions here are the pure-Rust `CpuEngine` implementations and the
+//! correctness oracle for the artifact round-trip tests.
+
+use crate::metrics::sigmoid;
+
+/// Minimum hessian to keep Newton steps bounded.
+pub const H_EPS: f64 = 1e-16;
+
+/// Objective of a boosting run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Binary logistic regression; labels in {0, 1}, predictions are logits.
+    BinaryLogistic,
+    /// Softmax cross-entropy over `k` classes; predictions are logit rows.
+    SoftmaxCE { k: usize },
+}
+
+impl Objective {
+    /// Output width per instance (1 for binary, k for softmax).
+    pub fn width(&self) -> usize {
+        match self {
+            Objective::BinaryLogistic => 1,
+            Objective::SoftmaxCE { k } => *k,
+        }
+    }
+}
+
+/// g/h for binary logistic loss: `g = σ(s) − y`, `h = σ(s)(1 − σ(s))`.
+pub fn gh_binary(y: &[f64], logits: &[f64], g: &mut [f64], h: &mut [f64]) {
+    debug_assert_eq!(y.len(), logits.len());
+    for i in 0..y.len() {
+        let p = sigmoid(logits[i]);
+        g[i] = p - y[i];
+        h[i] = (p * (1.0 - p)).max(H_EPS);
+    }
+}
+
+/// g/h for softmax CE: `g_ij = p_ij − 1{y_i = j}`, `h_ij = p_ij(1 − p_ij)`.
+/// `logits`, `g`, `h` are row-major n×k.
+pub fn gh_softmax(y: &[f64], logits: &[f64], k: usize, g: &mut [f64], h: &mut [f64]) {
+    let n = y.len();
+    debug_assert_eq!(logits.len(), n * k);
+    let mut p = vec![0.0f64; k];
+    for i in 0..n {
+        let row = &logits[i * k..(i + 1) * k];
+        let m = row.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let mut z = 0.0;
+        for j in 0..k {
+            p[j] = (row[j] - m).exp();
+            z += p[j];
+        }
+        let cls = y[i] as usize;
+        for j in 0..k {
+            let pj = p[j] / z;
+            g[i * k + j] = pj - f64::from(j == cls);
+            h[i * k + j] = (pj * (1.0 - pj)).max(H_EPS);
+        }
+    }
+}
+
+/// Compute g/h for an objective into freshly allocated buffers.
+pub fn compute_gh(obj: Objective, y: &[f64], preds: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let w = obj.width();
+    let mut g = vec![0.0; y.len() * w];
+    let mut h = vec![0.0; y.len() * w];
+    match obj {
+        Objective::BinaryLogistic => gh_binary(y, preds, &mut g, &mut h),
+        Objective::SoftmaxCE { k } => gh_softmax(y, preds, k, &mut g, &mut h),
+    }
+    (g, h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_gh_at_zero_logit() {
+        let y = [1.0, 0.0];
+        let s = [0.0, 0.0];
+        let (g, h) = compute_gh(Objective::BinaryLogistic, &y, &s);
+        assert!((g[0] + 0.5).abs() < 1e-12);
+        assert!((g[1] - 0.5).abs() < 1e-12);
+        assert!((h[0] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binary_gh_range() {
+        // paper §4.2: g ∈ [−1, 1], h ∈ [0, 1] for classification
+        let y: Vec<f64> = (0..100).map(|i| f64::from(i % 2 == 0)).collect();
+        let s: Vec<f64> = (0..100).map(|i| (i as f64 - 50.0) / 5.0).collect();
+        let (g, h) = compute_gh(Objective::BinaryLogistic, &y, &s);
+        for (&gi, &hi) in g.iter().zip(&h) {
+            assert!((-1.0..=1.0).contains(&gi));
+            assert!((0.0..=0.25 + 1e-12).contains(&hi));
+        }
+    }
+
+    #[test]
+    fn softmax_gh_sums_to_zero() {
+        // Σ_j g_ij = Σ_j p_ij − 1 = 0
+        let y = [2.0, 0.0];
+        let s = [0.1, 0.5, -0.3, 1.0, 0.0, 0.0];
+        let (g, _h) = compute_gh(Objective::SoftmaxCE { k: 3 }, &y, &s);
+        for i in 0..2 {
+            let row_sum: f64 = g[i * 3..(i + 1) * 3].iter().sum();
+            assert!(row_sum.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn softmax_matches_binary_for_two_classes() {
+        // softmax over (0, s) gives the same gradient for class-1 as the
+        // binary logistic gradient of logit s.
+        let y_bin = [1.0, 0.0, 1.0];
+        let s = [0.4, -1.2, 2.0];
+        let (gb, hb) = compute_gh(Objective::BinaryLogistic, &y_bin, &s);
+        let logits: Vec<f64> = s.iter().flat_map(|&v| [0.0, v]).collect();
+        let (gs, hs) = compute_gh(Objective::SoftmaxCE { k: 2 }, &y_bin, &logits);
+        for i in 0..3 {
+            assert!((gs[i * 2 + 1] - gb[i]).abs() < 1e-12);
+            assert!((hs[i * 2 + 1] - hb[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn hessian_floor() {
+        let y = [1.0];
+        let s = [100.0]; // saturated sigmoid
+        let (_, h) = compute_gh(Objective::BinaryLogistic, &y, &s);
+        assert!(h[0] >= H_EPS);
+    }
+}

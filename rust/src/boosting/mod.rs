@@ -1,0 +1,5 @@
+//! Gradient boosting: losses, the centralized trainer (the XGBoost-style
+//! local baseline of Tables 3–5), and multi-output boosting support.
+
+pub mod gbdt;
+pub mod loss;

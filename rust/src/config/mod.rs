@@ -1,0 +1,245 @@
+//! Training configuration: hyper-parameters, cipher selection, the
+//! paper's optimization toggles (packing / subtraction / compression /
+//! GOSS / sparse), and training-mechanism modes (§5).
+
+pub mod json;
+
+use crate::tree::split::GainParams;
+
+/// Which HE schema to use (paper §7.1 benchmarks both).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CipherKind {
+    Paillier,
+    IterativeAffine,
+    /// No encryption — tests & ablation lower bound only.
+    Plain,
+}
+
+impl CipherKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "paillier" => Some(CipherKind::Paillier),
+            "iterativeaffine" | "iterative-affine" | "affine" => Some(CipherKind::IterativeAffine),
+            "plain" | "none" => Some(CipherKind::Plain),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CipherKind::Paillier => "paillier",
+            CipherKind::IterativeAffine => "iterative-affine",
+            CipherKind::Plain => "plain",
+        }
+    }
+}
+
+/// Training-mechanism mode (paper §5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModeKind {
+    /// Full federated split finding on every node (SecureBoost+ default).
+    Default,
+    /// Mix mode: parties take turns building whole trees locally (§5.1).
+    Mix { trees_per_party: usize },
+    /// Layered mode: hosts build the top `host_depth` layers, the guest
+    /// the remaining `guest_depth` (§5.2).
+    Layered { guest_depth: u8, host_depth: u8 },
+    /// SecureBoost-MO: one multi-output tree per boosting round (§5.3).
+    MultiOutput,
+}
+
+/// GOSS configuration (§6.1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GossConfig {
+    pub top_rate: f64,
+    pub other_rate: f64,
+}
+
+impl Default for GossConfig {
+    fn default() -> Self {
+        GossConfig { top_rate: 0.2, other_rate: 0.1 }
+    }
+}
+
+/// Full training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Boosting rounds (per class for one-vs-all multi-class).
+    pub epochs: usize,
+    pub max_depth: u8,
+    pub max_bin: usize,
+    pub learning_rate: f64,
+    pub gain: GainParams,
+
+    pub cipher: CipherKind,
+    pub key_bits: usize,
+    /// Fixed-point precision r (paper eq. 11; default 53).
+    pub precision: u32,
+
+    // ---- the paper's cipher-optimization toggles (§4) ----
+    /// GH packing (Alg. 3). Off = SecureBoost baseline behaviour
+    /// (g and h encrypted separately).
+    pub gh_packing: bool,
+    /// Ciphertext histogram subtraction (§4.3).
+    pub hist_subtraction: bool,
+    /// Cipher compressing (Alg. 4/6).
+    pub cipher_compression: bool,
+
+    // ---- engineering optimizations (§6) ----
+    pub goss: Option<GossConfig>,
+    pub sparse_optimization: bool,
+
+    pub mode: ModeKind,
+    pub n_hosts: usize,
+    pub seed: u64,
+    /// Print per-tree progress.
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self::secureboost_plus()
+    }
+}
+
+impl TrainConfig {
+    /// SecureBoost+ defaults (paper §7.1: depth 5, 32 bins, lr 0.3,
+    /// 25 trees, GOSS(0.2, 0.1), all cipher optimizations on).
+    pub fn secureboost_plus() -> Self {
+        TrainConfig {
+            epochs: 25,
+            max_depth: 5,
+            max_bin: 32,
+            learning_rate: 0.3,
+            gain: GainParams::default(),
+            cipher: CipherKind::Paillier,
+            key_bits: 1024,
+            precision: 53,
+            gh_packing: true,
+            hist_subtraction: true,
+            cipher_compression: true,
+            goss: Some(GossConfig::default()),
+            sparse_optimization: true,
+            mode: ModeKind::Default,
+            n_hosts: 1,
+            seed: 42,
+            verbose: false,
+        }
+    }
+
+    /// The SecureBoost (FATE-1.5) baseline: none of the paper's
+    /// optimizations.
+    pub fn secureboost_baseline() -> Self {
+        TrainConfig {
+            gh_packing: false,
+            hist_subtraction: false,
+            cipher_compression: false,
+            goss: None,
+            sparse_optimization: false,
+            ..Self::secureboost_plus()
+        }
+    }
+
+    pub fn with_cipher(mut self, cipher: CipherKind, key_bits: usize) -> Self {
+        self.cipher = cipher;
+        self.key_bits = key_bits;
+        self
+    }
+
+    pub fn with_mode(mut self, mode: ModeKind) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn with_epochs(mut self, epochs: usize) -> Self {
+        self.epochs = epochs;
+        self
+    }
+
+    /// Validate invariants; returns a description of the first violation.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.epochs == 0 {
+            return Err("epochs must be ≥ 1".into());
+        }
+        if self.max_depth == 0 || self.max_depth > 16 {
+            return Err("max_depth must be in 1..=16".into());
+        }
+        if !(2..=256).contains(&self.max_bin) {
+            return Err("max_bin must be in 2..=256".into());
+        }
+        if self.cipher_compression && !self.gh_packing {
+            return Err("cipher_compression requires gh_packing".into());
+        }
+        if let Some(g) = &self.goss {
+            if g.top_rate <= 0.0 || g.top_rate + g.other_rate > 1.0 {
+                return Err("invalid GOSS rates".into());
+            }
+        }
+        if let ModeKind::Layered { guest_depth, host_depth } = self.mode {
+            if guest_depth + host_depth != self.max_depth {
+                return Err(format!(
+                    "layered mode: guest_depth + host_depth ({}) must equal max_depth ({})",
+                    guest_depth + host_depth,
+                    self.max_depth
+                ));
+            }
+        }
+        if self.key_bits < 128 {
+            return Err("key_bits too small".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = TrainConfig::secureboost_plus();
+        assert_eq!(c.epochs, 25);
+        assert_eq!(c.max_depth, 5);
+        assert_eq!(c.max_bin, 32);
+        assert!((c.learning_rate - 0.3).abs() < 1e-12);
+        assert_eq!(c.key_bits, 1024);
+        assert_eq!(c.precision, 53);
+        assert!(c.gh_packing && c.hist_subtraction && c.cipher_compression);
+        let g = c.goss.unwrap();
+        assert!((g.top_rate - 0.2).abs() < 1e-12 && (g.other_rate - 0.1).abs() < 1e-12);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn baseline_disables_everything() {
+        let c = TrainConfig::secureboost_baseline();
+        assert!(!c.gh_packing && !c.hist_subtraction && !c.cipher_compression);
+        assert!(c.goss.is_none() && !c.sparse_optimization);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = TrainConfig::secureboost_plus();
+        c.cipher_compression = true;
+        c.gh_packing = false;
+        assert!(c.validate().is_err());
+
+        let mut c = TrainConfig::secureboost_plus();
+        c.mode = ModeKind::Layered { guest_depth: 2, host_depth: 2 };
+        assert!(c.validate().is_err());
+        c.mode = ModeKind::Layered { guest_depth: 2, host_depth: 3 };
+        assert!(c.validate().is_ok());
+
+        let mut c = TrainConfig::secureboost_plus();
+        c.goss = Some(GossConfig { top_rate: 0.8, other_rate: 0.5 });
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn cipher_parse() {
+        assert_eq!(CipherKind::parse("paillier"), Some(CipherKind::Paillier));
+        assert_eq!(CipherKind::parse("Iterative-Affine"), Some(CipherKind::IterativeAffine));
+        assert_eq!(CipherKind::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,248 @@
+//! The coordinator/driver: spawns the host party threads, runs the guest
+//! training engine, and assembles the [`TrainReport`] the experiment
+//! harness consumes (timings, traffic, HE-op counts, model quality).
+
+use crate::config::{CipherKind, TrainConfig};
+use crate::crypto::cipher::{CipherSuite, OpSnapshot, OPS};
+use crate::data::binning::bin_party;
+use crate::data::dataset::{Dataset, VerticalSplit};
+use crate::federation::guest::GuestParty;
+use crate::federation::host::spawn_host;
+use crate::federation::message::{ToGuest, ToHost};
+use crate::tree::predict::{GuestModel, HostModel};
+use crate::federation::transport::{link_pair, NetSnapshot, NetworkModel};
+use crate::runtime::engine::{ComputeEngine, CpuEngine};
+use crate::tree::node::Tree;
+use crate::util::rng::ChaCha20Rng;
+use crate::util::timer::PhaseTimer;
+use anyhow::Result;
+use std::sync::{Arc, Mutex};
+
+/// Everything a training run produces.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub dataset: String,
+    pub cipher: &'static str,
+    pub mode: String,
+    pub n_instances: usize,
+    pub n_features: usize,
+    pub trees_built: usize,
+    /// Wall time per tree (tree building only, as in the paper's Fig. 7).
+    pub tree_seconds: Vec<f64>,
+    pub total_tree_seconds: f64,
+    pub avg_tree_seconds: f64,
+    /// Total wall time including keygen / binning / eval.
+    pub wall_seconds: f64,
+    pub comm: NetSnapshot,
+    /// Time the paper's 1 GbE link would need for `comm`.
+    pub simulated_network_seconds: f64,
+    pub ops: OpSnapshot,
+    /// AUC (binary) or accuracy (multi-class) on the training set —
+    /// the paper reports train scores (§7.1 Metrics).
+    pub train_metric: f64,
+    pub loss_curve: Vec<f64>,
+    pub phase_report: String,
+    pub trees: Vec<Tree>,
+    /// Per-class tags matching `trees` (0 for binary / MO).
+    pub tree_classes: Vec<usize>,
+    /// Each host's private split table (handle → feature, bin, threshold).
+    /// Collected by the experiment driver for inference; in deployment
+    /// each table stays on its host (see tree::predict docs).
+    pub host_tables: Vec<Vec<(u32, u8, f64)>>,
+}
+
+impl TrainReport {
+    /// Assemble the deployable model shares from this training run.
+    pub fn model(&self) -> (GuestModel, Vec<HostModel>) {
+        let guest = GuestModel {
+            trees: self
+                .trees
+                .iter()
+                .cloned()
+                .zip(self.tree_classes.iter().copied())
+                .collect(),
+            n_classes: if self.trees.first().map(|t| t.width).unwrap_or(1) > 1 {
+                self.trees[0].width
+            } else {
+                self.tree_classes.iter().max().map(|m| m + 1).unwrap_or(1).max(2)
+            },
+            pred_width: self.pred_width(),
+        };
+        let hosts = self
+            .host_tables
+            .iter()
+            .enumerate()
+            .map(|(p, t)| HostModel { party: p as u8, splits: t.clone() })
+            .collect();
+        (guest, hosts)
+    }
+
+    fn pred_width(&self) -> usize {
+        match self.trees.first() {
+            Some(t) if t.width > 1 => t.width,
+            _ => self.tree_classes.iter().max().map(|m| m + 1).unwrap_or(1),
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<12} cipher={:<17} mode={:<8} trees={:>3} avg_tree={:>8.3}s metric={:.4} comm={:.1}MiB net≈{:.2}s",
+            self.dataset,
+            self.cipher,
+            self.mode,
+            self.trees_built,
+            self.avg_tree_seconds,
+            self.train_metric,
+            self.comm.total_bytes() as f64 / (1024.0 * 1024.0),
+            self.simulated_network_seconds,
+        )
+    }
+}
+
+fn mode_name(cfg: &TrainConfig) -> String {
+    match cfg.mode {
+        crate::config::ModeKind::Default => "default".into(),
+        crate::config::ModeKind::Mix { .. } => "mix".into(),
+        crate::config::ModeKind::Layered { .. } => "layered".into(),
+        crate::config::ModeKind::MultiOutput => "mo".into(),
+    }
+}
+
+/// Build the cipher suite for a config.
+pub fn make_suite(cfg: &TrainConfig) -> CipherSuite {
+    let mut rng = ChaCha20Rng::from_u64(cfg.seed ^ 0x5EC2E7);
+    match cfg.cipher {
+        CipherKind::Paillier => CipherSuite::new_paillier(cfg.key_bits, &mut rng),
+        CipherKind::IterativeAffine => CipherSuite::new_affine(cfg.key_bits, &mut rng),
+        CipherKind::Plain => CipherSuite::new_plain(cfg.key_bits.saturating_sub(1).max(512)),
+    }
+}
+
+/// Train a federated model with the default (pure-Rust) compute engine.
+pub fn train_federated(vs: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainReport> {
+    train_federated_with_engine(vs, cfg, &CpuEngine)
+}
+
+/// Train a federated model with an explicit compute engine (e.g. the
+/// PJRT-backed [`crate::runtime::pjrt::XlaEngine`]).
+pub fn train_federated_with_engine(
+    vs: &VerticalSplit,
+    cfg: &TrainConfig,
+    engine: &dyn ComputeEngine,
+) -> Result<TrainReport> {
+    cfg.validate().map_err(|e| anyhow::anyhow!("invalid config: {e}"))?;
+    let wall0 = std::time::Instant::now();
+    let ops0 = OPS.snapshot();
+
+    let suite = make_suite(cfg);
+    let ct_len = suite.ct_byte_len();
+
+    // spawn hosts
+    let mut guest_links = Vec::with_capacity(vs.hosts.len());
+    let mut handles = Vec::new();
+    let mut host_timers = Vec::new();
+    for (hid, slice) in vs.hosts.iter().enumerate() {
+        let (gl, hl) = link_pair(ct_len);
+        let bm = bin_party(slice, cfg.max_bin);
+        let sb = crate::data::sparse::maybe_sparse(slice, &bm, cfg.sparse_optimization);
+        let timer = Arc::new(Mutex::new(PhaseTimer::new()));
+        host_timers.push(timer.clone());
+        handles.push(spawn_host(hid as u8, bm, sb, hl, timer));
+        guest_links.push(gl);
+    }
+
+    // run guest
+    let mut guest = GuestParty::new(vs, cfg, engine, &guest_links, suite);
+    guest.setup_hosts();
+    let outcome = guest.train();
+
+    // collect host split tables (for the experiment harness's inference;
+    // out-of-protocol, documented in tree::predict), then shut down
+    let mut host_tables = Vec::with_capacity(guest_links.len());
+    for link in &guest_links {
+        link.send(ToHost::DumpSplitTable);
+        match link.recv() {
+            ToGuest::SplitTable { entries } => host_tables.push(entries),
+            _ => host_tables.push(Vec::new()),
+        }
+    }
+    for link in &guest_links {
+        link.send(ToHost::Shutdown);
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("host thread panicked"))?;
+    }
+
+    // aggregate
+    let mut timer = outcome.timer.clone();
+    for ht in &host_timers {
+        timer.merge(&ht.lock().expect("host timer"));
+    }
+    let comm = guest_links
+        .iter()
+        .map(|l| l.counters.snapshot())
+        .fold(NetSnapshot::default(), |acc, s| NetSnapshot {
+            bytes_to_host: acc.bytes_to_host + s.bytes_to_host,
+            bytes_to_guest: acc.bytes_to_guest + s.bytes_to_guest,
+            msgs_to_host: acc.msgs_to_host + s.msgs_to_host,
+            msgs_to_guest: acc.msgs_to_guest + s.msgs_to_guest,
+        });
+    let net = NetworkModel::default();
+    let total_tree: f64 = outcome.tree_seconds.iter().sum();
+    Ok(TrainReport {
+        dataset: vs.name.clone(),
+        cipher: cfg.cipher.name(),
+        mode: mode_name(cfg),
+        n_instances: vs.n(),
+        n_features: vs.d_total(),
+        trees_built: outcome.trees.len(),
+        avg_tree_seconds: total_tree / outcome.tree_seconds.len().max(1) as f64,
+        total_tree_seconds: total_tree,
+        tree_seconds: outcome.tree_seconds,
+        wall_seconds: wall0.elapsed().as_secs_f64(),
+        comm,
+        simulated_network_seconds: net.simulated_seconds(&comm),
+        ops: OPS.snapshot().diff(&ops0),
+        train_metric: outcome.train_metric,
+        loss_curve: outcome.loss_curve,
+        phase_report: timer.report(),
+        tree_classes: outcome.tree_classes,
+        trees: outcome.trees,
+        host_tables,
+    })
+}
+
+/// Train the centralized (XGBoost-style) local baseline on the
+/// reassembled feature matrix.
+pub fn train_centralized(ds: &Dataset, cfg: &TrainConfig) -> Result<TrainReport> {
+    use crate::boosting::gbdt::{train_centralized_gbdt, MultiStrategy};
+    let wall0 = std::time::Instant::now();
+    let strategy = if matches!(cfg.mode, crate::config::ModeKind::MultiOutput) {
+        MultiStrategy::MultiOutput
+    } else {
+        MultiStrategy::OneVsAll
+    };
+    let rep = train_centralized_gbdt(ds, cfg, strategy);
+    let n_trees = rep.model.trees.len();
+    Ok(TrainReport {
+        dataset: ds.name.clone(),
+        cipher: "none-centralized",
+        mode: "local".into(),
+        n_instances: ds.n,
+        n_features: ds.d,
+        trees_built: n_trees,
+        tree_seconds: vec![rep.train_seconds / n_trees.max(1) as f64; n_trees],
+        total_tree_seconds: rep.train_seconds,
+        avg_tree_seconds: rep.train_seconds / n_trees.max(1) as f64,
+        wall_seconds: wall0.elapsed().as_secs_f64(),
+        comm: NetSnapshot::default(),
+        simulated_network_seconds: 0.0,
+        ops: OpSnapshot::default(),
+        train_metric: rep.train_metric,
+        loss_curve: rep.loss_curve,
+        phase_report: String::new(),
+        tree_classes: rep.model.trees.iter().map(|(_, c)| *c).collect(),
+        trees: rep.model.trees.into_iter().map(|(t, _)| t).collect(),
+        host_tables: Vec::new(),
+    })
+}

@@ -1,0 +1,853 @@
+//! Arbitrary-precision unsigned integers on u64 limbs (little-endian).
+//!
+//! Implements exactly what the HE layer needs: add/sub/mul/div-rem, bit
+//! shifts and masks, modular arithmetic (incl. inverse and gcd), random
+//! sampling, and (de)serialization. Multiplication is schoolbook with a
+//! Karatsuba split above [`KARATSUBA_THRESHOLD`] limbs; division is Knuth's
+//! Algorithm D. Hot modular exponentiation lives in [`super::mont`].
+
+use crate::util::rng::ChaCha20Rng;
+use std::cmp::Ordering;
+
+/// Limb count above which multiplication switches to Karatsuba.
+const KARATSUBA_THRESHOLD: usize = 24;
+
+/// Unsigned big integer; `limbs` is little-endian and normalized
+/// (no trailing zero limbs; `0` is the empty vector).
+#[derive(Clone, PartialEq, Eq, Hash, Default)]
+pub struct BigUint {
+    pub(crate) limbs: Vec<u64>,
+}
+
+impl std::fmt::Debug for BigUint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BigUint(0x{})", self.to_hex())
+    }
+}
+
+impl BigUint {
+    pub fn zero() -> Self {
+        Self { limbs: Vec::new() }
+    }
+
+    pub fn one() -> Self {
+        Self { limbs: vec![1] }
+    }
+
+    pub fn from_u64(v: u64) -> Self {
+        if v == 0 {
+            Self::zero()
+        } else {
+            Self { limbs: vec![v] }
+        }
+    }
+
+    pub fn from_u128(v: u128) -> Self {
+        let lo = v as u64;
+        let hi = (v >> 64) as u64;
+        let mut out = Self { limbs: vec![lo, hi] };
+        out.normalize();
+        out
+    }
+
+    pub fn from_limbs(limbs: Vec<u64>) -> Self {
+        let mut out = Self { limbs };
+        out.normalize();
+        out
+    }
+
+    #[inline]
+    fn normalize(&mut self) {
+        while let Some(&0) = self.limbs.last() {
+            self.limbs.pop();
+        }
+    }
+
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    #[inline]
+    pub fn is_one(&self) -> bool {
+        self.limbs.len() == 1 && self.limbs[0] == 1
+    }
+
+    #[inline]
+    pub fn is_even(&self) -> bool {
+        self.limbs.first().map(|l| l & 1 == 0).unwrap_or(true)
+    }
+
+    /// Number of significant bits (0 for zero).
+    pub fn bit_length(&self) -> usize {
+        match self.limbs.last() {
+            None => 0,
+            Some(&top) => (self.limbs.len() - 1) * 64 + (64 - top.leading_zeros() as usize),
+        }
+    }
+
+    /// Value of bit `i` (LSB = bit 0).
+    pub fn bit(&self, i: usize) -> bool {
+        let (limb, off) = (i / 64, i % 64);
+        self.limbs.get(limb).map(|l| (l >> off) & 1 == 1).unwrap_or(false)
+    }
+
+    pub fn low_u64(&self) -> u64 {
+        self.limbs.first().copied().unwrap_or(0)
+    }
+
+    pub fn low_u128(&self) -> u128 {
+        let lo = self.low_u64() as u128;
+        let hi = self.limbs.get(1).copied().unwrap_or(0) as u128;
+        (hi << 64) | lo
+    }
+
+    // ---------------------------------------------------------------- cmp
+
+    pub fn cmp_big(&self, other: &Self) -> Ordering {
+        if self.limbs.len() != other.limbs.len() {
+            return self.limbs.len().cmp(&other.limbs.len());
+        }
+        for i in (0..self.limbs.len()).rev() {
+            match self.limbs[i].cmp(&other.limbs[i]) {
+                Ordering::Equal => continue,
+                ord => return ord,
+            }
+        }
+        Ordering::Equal
+    }
+
+    // ------------------------------------------------------------ add/sub
+
+    pub fn add(&self, other: &Self) -> Self {
+        let (a, b) = if self.limbs.len() >= other.limbs.len() {
+            (&self.limbs, &other.limbs)
+        } else {
+            (&other.limbs, &self.limbs)
+        };
+        let mut out = Vec::with_capacity(a.len() + 1);
+        let mut carry = 0u64;
+        for i in 0..a.len() {
+            let bi = b.get(i).copied().unwrap_or(0);
+            let (s1, c1) = a[i].overflowing_add(bi);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out.push(s2);
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        if carry > 0 {
+            out.push(carry);
+        }
+        Self::from_limbs(out)
+    }
+
+    pub fn add_u64(&self, v: u64) -> Self {
+        self.add(&Self::from_u64(v))
+    }
+
+    /// `self - other`; panics if `other > self`.
+    pub fn sub(&self, other: &Self) -> Self {
+        debug_assert!(self.cmp_big(other) != Ordering::Less, "BigUint::sub underflow");
+        let mut out = Vec::with_capacity(self.limbs.len());
+        let mut borrow = 0u64;
+        for i in 0..self.limbs.len() {
+            let bi = other.limbs.get(i).copied().unwrap_or(0);
+            let (d1, b1) = self.limbs[i].overflowing_sub(bi);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            out.push(d2);
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        debug_assert_eq!(borrow, 0);
+        Self::from_limbs(out)
+    }
+
+    // ---------------------------------------------------------------- mul
+
+    pub fn mul(&self, other: &Self) -> Self {
+        if self.is_zero() || other.is_zero() {
+            return Self::zero();
+        }
+        let n = self.limbs.len().min(other.limbs.len());
+        if n >= KARATSUBA_THRESHOLD {
+            return self.mul_karatsuba(other);
+        }
+        self.mul_schoolbook(other)
+    }
+
+    fn mul_schoolbook(&self, other: &Self) -> Self {
+        let mut out = vec![0u64; self.limbs.len() + other.limbs.len()];
+        for (i, &a) in self.limbs.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            let mut carry = 0u128;
+            for (j, &b) in other.limbs.iter().enumerate() {
+                let cur = out[i + j] as u128 + a as u128 * b as u128 + carry;
+                out[i + j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let mut k = i + other.limbs.len();
+            while carry > 0 {
+                let cur = out[k] as u128 + carry;
+                out[k] = cur as u64;
+                carry = cur >> 64;
+                k += 1;
+            }
+        }
+        Self::from_limbs(out)
+    }
+
+    fn mul_karatsuba(&self, other: &Self) -> Self {
+        let half = self.limbs.len().min(other.limbs.len()) / 2;
+        let (a0, a1) = self.split_at(half);
+        let (b0, b1) = other.split_at(half);
+        let z0 = a0.mul(&b0);
+        let z2 = a1.mul(&b1);
+        let z1 = a0.add(&a1).mul(&b0.add(&b1)).sub(&z0).sub(&z2);
+        // result = z2 << (2*half*64) + z1 << (half*64) + z0
+        z2.shl_limbs(2 * half).add(&z1.shl_limbs(half)).add(&z0)
+    }
+
+    fn split_at(&self, k: usize) -> (Self, Self) {
+        if self.limbs.len() <= k {
+            (self.clone(), Self::zero())
+        } else {
+            (
+                Self::from_limbs(self.limbs[..k].to_vec()),
+                Self::from_limbs(self.limbs[k..].to_vec()),
+            )
+        }
+    }
+
+    fn shl_limbs(&self, k: usize) -> Self {
+        if self.is_zero() {
+            return Self::zero();
+        }
+        let mut limbs = vec![0u64; k];
+        limbs.extend_from_slice(&self.limbs);
+        Self { limbs }
+    }
+
+    pub fn mul_u64(&self, v: u64) -> Self {
+        if v == 0 || self.is_zero() {
+            return Self::zero();
+        }
+        let mut out = Vec::with_capacity(self.limbs.len() + 1);
+        let mut carry = 0u128;
+        for &a in &self.limbs {
+            let cur = a as u128 * v as u128 + carry;
+            out.push(cur as u64);
+            carry = cur >> 64;
+        }
+        if carry > 0 {
+            out.push(carry as u64);
+        }
+        Self::from_limbs(out)
+    }
+
+    /// `self * self` (dedicated squaring is ~2x schoolbook; good enough to
+    /// share the mul path — modexp hot loops use Montgomery instead).
+    pub fn square(&self) -> Self {
+        self.mul(self)
+    }
+
+    // --------------------------------------------------------------- shifts
+
+    pub fn shl(&self, bits: usize) -> Self {
+        if self.is_zero() {
+            return Self::zero();
+        }
+        let limb_shift = bits / 64;
+        let bit_shift = bits % 64;
+        let mut out = vec![0u64; limb_shift];
+        if bit_shift == 0 {
+            out.extend_from_slice(&self.limbs);
+        } else {
+            let mut carry = 0u64;
+            for &l in &self.limbs {
+                out.push((l << bit_shift) | carry);
+                carry = l >> (64 - bit_shift);
+            }
+            if carry > 0 {
+                out.push(carry);
+            }
+        }
+        Self::from_limbs(out)
+    }
+
+    pub fn shr(&self, bits: usize) -> Self {
+        let limb_shift = bits / 64;
+        if limb_shift >= self.limbs.len() {
+            return Self::zero();
+        }
+        let bit_shift = bits % 64;
+        let src = &self.limbs[limb_shift..];
+        let mut out = Vec::with_capacity(src.len());
+        if bit_shift == 0 {
+            out.extend_from_slice(src);
+        } else {
+            for i in 0..src.len() {
+                let lo = src[i] >> bit_shift;
+                let hi = if i + 1 < src.len() {
+                    src[i + 1] << (64 - bit_shift)
+                } else {
+                    0
+                };
+                out.push(lo | hi);
+            }
+        }
+        Self::from_limbs(out)
+    }
+
+    /// The low `bits` bits of `self` (mask).
+    pub fn low_bits(&self, bits: usize) -> Self {
+        let full = bits / 64;
+        let rem = bits % 64;
+        if full >= self.limbs.len() {
+            return self.clone();
+        }
+        let mut limbs = self.limbs[..full].to_vec();
+        if rem > 0 {
+            limbs.push(self.limbs[full] & ((1u64 << rem) - 1));
+        }
+        Self::from_limbs(limbs)
+    }
+
+    // ------------------------------------------------------------- div/rem
+
+    /// Quotient and remainder. Panics on division by zero.
+    pub fn div_rem(&self, divisor: &Self) -> (Self, Self) {
+        assert!(!divisor.is_zero(), "division by zero");
+        match self.cmp_big(divisor) {
+            Ordering::Less => return (Self::zero(), self.clone()),
+            Ordering::Equal => return (Self::one(), Self::zero()),
+            Ordering::Greater => {}
+        }
+        if divisor.limbs.len() == 1 {
+            let (q, r) = self.div_rem_u64(divisor.limbs[0]);
+            return (q, Self::from_u64(r));
+        }
+        self.div_rem_knuth(divisor)
+    }
+
+    pub fn div_rem_u64(&self, d: u64) -> (Self, u64) {
+        assert!(d != 0);
+        let mut out = vec![0u64; self.limbs.len()];
+        let mut rem = 0u128;
+        for i in (0..self.limbs.len()).rev() {
+            let cur = (rem << 64) | self.limbs[i] as u128;
+            out[i] = (cur / d as u128) as u64;
+            rem = cur % d as u128;
+        }
+        (Self::from_limbs(out), rem as u64)
+    }
+
+    /// Knuth TAOCP vol.2 Algorithm 4.3.1-D.
+    fn div_rem_knuth(&self, divisor: &Self) -> (Self, Self) {
+        let n = divisor.limbs.len();
+        let shift = divisor.limbs[n - 1].leading_zeros() as usize;
+        let v = divisor.shl(shift);
+        let mut u = self.shl(shift).limbs;
+        u.push(0); // u has m+n+1 limbs
+        let m = u.len() - 1 - n;
+        let vn1 = v.limbs[n - 1];
+        let vn2 = v.limbs[n - 2];
+        let mut q = vec![0u64; m + 1];
+
+        for j in (0..=m).rev() {
+            let numer = ((u[j + n] as u128) << 64) | u[j + n - 1] as u128;
+            let mut qhat = numer / vn1 as u128;
+            let mut rhat = numer % vn1 as u128;
+            loop {
+                if qhat >> 64 != 0
+                    || qhat * vn2 as u128 > ((rhat << 64) | u[j + n - 2] as u128)
+                {
+                    qhat -= 1;
+                    rhat += vn1 as u128;
+                    if rhat >> 64 == 0 {
+                        continue;
+                    }
+                }
+                break;
+            }
+            // multiply-subtract qhat * v from u[j .. j+n+1]
+            let mut borrow = 0i128;
+            let mut carry = 0u128;
+            for i in 0..n {
+                let p = qhat * v.limbs[i] as u128 + carry;
+                carry = p >> 64;
+                let sub = u[j + i] as i128 - (p as u64) as i128 + borrow;
+                u[j + i] = sub as u64;
+                borrow = sub >> 64; // arithmetic shift: 0 or -1
+            }
+            let sub = u[j + n] as i128 - carry as i128 + borrow;
+            u[j + n] = sub as u64;
+            borrow = sub >> 64;
+
+            if borrow < 0 {
+                // qhat was one too large: add v back.
+                qhat -= 1;
+                let mut carry = 0u128;
+                for i in 0..n {
+                    let s = u[j + i] as u128 + v.limbs[i] as u128 + carry;
+                    u[j + i] = s as u64;
+                    carry = s >> 64;
+                }
+                u[j + n] = u[j + n].wrapping_add(carry as u64);
+            }
+            q[j] = qhat as u64;
+        }
+
+        let rem = Self::from_limbs(u[..n].to_vec()).shr(shift);
+        (Self::from_limbs(q), rem)
+    }
+
+    pub fn rem(&self, m: &Self) -> Self {
+        self.div_rem(m).1
+    }
+
+    // --------------------------------------------------------- modular ops
+
+    pub fn add_mod(&self, other: &Self, m: &Self) -> Self {
+        let s = self.add(other);
+        if s.cmp_big(m) == Ordering::Less {
+            s
+        } else {
+            s.rem(m)
+        }
+    }
+
+    /// `(self - other) mod m`, both operands already reduced mod m.
+    pub fn sub_mod(&self, other: &Self, m: &Self) -> Self {
+        if self.cmp_big(other) != Ordering::Less {
+            self.sub(other)
+        } else {
+            m.add(self).sub(other)
+        }
+    }
+
+    pub fn mul_mod(&self, other: &Self, m: &Self) -> Self {
+        self.mul(other).rem(m)
+    }
+
+    /// Modular exponentiation. For odd moduli this delegates to Montgomery;
+    /// the general path is square-and-multiply with division-based reduction.
+    pub fn mod_pow(&self, exp: &Self, m: &Self) -> Self {
+        if m.is_one() {
+            return Self::zero();
+        }
+        if !m.is_even() {
+            let ctx = super::mont::MontCtx::new(m.clone());
+            return ctx.mod_pow(self, exp);
+        }
+        let mut base = self.rem(m);
+        let mut result = Self::one();
+        for i in 0..exp.bit_length() {
+            if exp.bit(i) {
+                result = result.mul_mod(&base, m);
+            }
+            if i + 1 < exp.bit_length() {
+                base = base.mul_mod(&base, m);
+            }
+        }
+        result
+    }
+
+    pub fn gcd(&self, other: &Self) -> Self {
+        let (mut a, mut b) = (self.clone(), other.clone());
+        while !b.is_zero() {
+            let r = a.rem(&b);
+            a = b;
+            b = r;
+        }
+        a
+    }
+
+    /// Modular inverse via extended Euclid; `None` if gcd(self, m) != 1.
+    pub fn mod_inverse(&self, m: &Self) -> Option<Self> {
+        if m.is_zero() || m.is_one() {
+            return None;
+        }
+        // Track Bezout coefficient for `self` with explicit sign.
+        let (mut old_r, mut r) = (self.rem(m), m.clone());
+        let (mut old_s, mut s) = ((Self::one(), false), (Self::zero(), false));
+        if old_r.is_zero() {
+            return None;
+        }
+        while !r.is_zero() {
+            let (q, rem) = old_r.div_rem(&r);
+            old_r = std::mem::replace(&mut r, rem);
+            // new_s = old_s - q * s  (signed arithmetic)
+            let qs = q.mul(&s.0);
+            let new_s = signed_sub(&old_s, &(qs, s.1));
+            old_s = std::mem::replace(&mut s, new_s);
+        }
+        if !old_r.is_one() {
+            return None;
+        }
+        let (mag, neg) = old_s;
+        let red = mag.rem(m);
+        Some(if neg && !red.is_zero() { m.sub(&red) } else { red })
+    }
+
+    // --------------------------------------------------------------- random
+
+    /// Uniform sample in `[0, bound)`.
+    pub fn random_below(rng: &mut ChaCha20Rng, bound: &Self) -> Self {
+        assert!(!bound.is_zero());
+        let bits = bound.bit_length();
+        loop {
+            let c = Self::random_bits(rng, bits);
+            if c.cmp_big(bound) == Ordering::Less {
+                return c;
+            }
+        }
+    }
+
+    /// Uniform sample with at most `bits` bits.
+    pub fn random_bits(rng: &mut ChaCha20Rng, bits: usize) -> Self {
+        let limbs_n = bits.div_ceil(64);
+        let mut limbs = Vec::with_capacity(limbs_n);
+        for _ in 0..limbs_n {
+            limbs.push(rng.next_u64());
+        }
+        let extra = limbs_n * 64 - bits;
+        if extra > 0 {
+            let last = limbs.last_mut().unwrap();
+            *last &= u64::MAX >> extra;
+        }
+        Self::from_limbs(limbs)
+    }
+
+    /// Uniform sample with *exactly* `bits` bits (top bit forced to 1).
+    pub fn random_exact_bits(rng: &mut ChaCha20Rng, bits: usize) -> Self {
+        assert!(bits > 0);
+        let mut v = Self::random_bits(rng, bits);
+        let top = bits - 1;
+        let (limb, off) = (top / 64, top % 64);
+        while v.limbs.len() <= limb {
+            v.limbs.push(0);
+        }
+        v.limbs[limb] |= 1u64 << off;
+        v.normalize();
+        v
+    }
+
+    // ----------------------------------------------------------- serialization
+
+    pub fn to_hex(&self) -> String {
+        if self.is_zero() {
+            return "0".to_string();
+        }
+        let mut s = format!("{:x}", self.limbs.last().unwrap());
+        for l in self.limbs.iter().rev().skip(1) {
+            s.push_str(&format!("{l:016x}"));
+        }
+        s
+    }
+
+    pub fn from_hex(s: &str) -> Option<Self> {
+        let s = s.trim_start_matches("0x");
+        if s.is_empty() || !s.chars().all(|c| c.is_ascii_hexdigit()) {
+            return None;
+        }
+        let mut limbs = Vec::with_capacity(s.len().div_ceil(16));
+        let bytes = s.as_bytes();
+        let mut end = bytes.len();
+        while end > 0 {
+            let start = end.saturating_sub(16);
+            let chunk = std::str::from_utf8(&bytes[start..end]).ok()?;
+            limbs.push(u64::from_str_radix(chunk, 16).ok()?);
+            end = start;
+        }
+        Some(Self::from_limbs(limbs))
+    }
+
+    pub fn to_bytes_be(&self) -> Vec<u8> {
+        if self.is_zero() {
+            return vec![0];
+        }
+        let mut out: Vec<u8> = Vec::with_capacity(self.limbs.len() * 8);
+        for l in self.limbs.iter().rev() {
+            out.extend_from_slice(&l.to_be_bytes());
+        }
+        let skip = out.iter().take_while(|&&b| b == 0).count();
+        out.drain(..skip.min(out.len() - 1));
+        out
+    }
+
+    pub fn from_bytes_be(bytes: &[u8]) -> Self {
+        let mut limbs = Vec::with_capacity(bytes.len().div_ceil(8));
+        let mut chunk_end = bytes.len();
+        while chunk_end > 0 {
+            let start = chunk_end.saturating_sub(8);
+            let mut v = 0u64;
+            for &b in &bytes[start..chunk_end] {
+                v = (v << 8) | b as u64;
+            }
+            limbs.push(v);
+            chunk_end = start;
+        }
+        Self::from_limbs(limbs)
+    }
+
+    /// Number of bytes this value occupies on the wire (for the transport's
+    /// byte accounting).
+    pub fn byte_len(&self) -> usize {
+        self.bit_length().div_ceil(8).max(1)
+    }
+
+    /// Lossy conversion to f64 (used when decoding fixed-point statistics).
+    pub fn to_f64(&self) -> f64 {
+        match self.limbs.len() {
+            0 => 0.0,
+            1 => self.limbs[0] as f64,
+            2 => self.low_u128() as f64,
+            k => {
+                // top 128 bits + exponent
+                let hi = ((self.limbs[k - 1] as u128) << 64) | self.limbs[k - 2] as u128;
+                hi as f64 * 2f64.powi(64 * (k as i32 - 2))
+            }
+        }
+    }
+}
+
+/// `a - b` with sign tracking, where operands are `(magnitude, is_negative)`.
+fn signed_sub(a: &(BigUint, bool), b: &(BigUint, bool)) -> (BigUint, bool) {
+    match (a.1, b.1) {
+        // a - b with both positive
+        (false, false) => {
+            if a.0.cmp_big(&b.0) != Ordering::Less {
+                (a.0.sub(&b.0), false)
+            } else {
+                (b.0.sub(&a.0), true)
+            }
+        }
+        // a - (-b) = a + b
+        (false, true) => (a.0.add(&b.0), false),
+        // -a - b = -(a + b)
+        (true, false) => (a.0.add(&b.0), true),
+        // -a - (-b) = b - a
+        (true, true) => {
+            if b.0.cmp_big(&a.0) != Ordering::Less {
+                (b.0.sub(&a.0), false)
+            } else {
+                (a.0.sub(&b.0), true)
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for BigUint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // decimal via repeated division by 10^19
+        if self.is_zero() {
+            return write!(f, "0");
+        }
+        let mut parts = Vec::new();
+        let mut cur = self.clone();
+        while !cur.is_zero() {
+            let (q, r) = cur.div_rem_u64(10_000_000_000_000_000_000);
+            parts.push(r);
+            cur = q;
+        }
+        write!(f, "{}", parts.pop().unwrap())?;
+        for p in parts.iter().rev() {
+            write!(f, "{p:019}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn big(v: u128) -> BigUint {
+        BigUint::from_u128(v)
+    }
+
+    /// Random BigUint with up to `limbs` limbs from a deterministic PRNG.
+    fn rand_big(r: &mut Xoshiro256, limbs: usize) -> BigUint {
+        let n = r.next_below(limbs) + 1;
+        BigUint::from_limbs((0..n).map(|_| r.next_u64()).collect())
+    }
+
+    #[test]
+    fn add_sub_roundtrip_small() {
+        for (a, b) in [(0u128, 0u128), (1, 2), (u64::MAX as u128, 1), (1 << 100, 1 << 90)] {
+            let s = big(a).add(&big(b));
+            assert_eq!(s, big(a + b));
+            assert_eq!(s.sub(&big(b)), big(a));
+        }
+    }
+
+    #[test]
+    fn mul_matches_u128() {
+        let mut r = Xoshiro256::seed_from_u64(11);
+        for _ in 0..500 {
+            let a = r.next_u64() as u128;
+            let b = r.next_u64() as u128;
+            assert_eq!(big(a).mul(&big(b)), big(a * b));
+        }
+    }
+
+    #[test]
+    fn karatsuba_matches_schoolbook() {
+        let mut r = Xoshiro256::seed_from_u64(13);
+        for _ in 0..20 {
+            let a = rand_big(&mut r, 80);
+            let b = rand_big(&mut r, 80);
+            assert_eq!(a.mul_schoolbook(&b), a.mul(&b));
+        }
+    }
+
+    #[test]
+    fn div_rem_reconstructs() {
+        let mut r = Xoshiro256::seed_from_u64(17);
+        for _ in 0..300 {
+            let a = rand_big(&mut r, 40);
+            let b = rand_big(&mut r, 20);
+            if b.is_zero() {
+                continue;
+            }
+            let (q, rem) = a.div_rem(&b);
+            assert!(rem.cmp_big(&b) == Ordering::Less);
+            assert_eq!(q.mul(&b).add(&rem), a);
+        }
+    }
+
+    #[test]
+    fn div_rem_edge_cases() {
+        let a = big(100);
+        assert_eq!(a.div_rem(&big(100)), (BigUint::one(), BigUint::zero()));
+        assert_eq!(a.div_rem(&big(101)), (BigUint::zero(), a.clone()));
+        assert_eq!(a.div_rem(&BigUint::one()), (a.clone(), BigUint::zero()));
+        // Knuth-D add-back path is rare; exercise dense bit patterns.
+        let x = BigUint::from_limbs(vec![0, 0, 1, u64::MAX, u64::MAX]);
+        let y = BigUint::from_limbs(vec![u64::MAX, u64::MAX, 1]);
+        let (q, rem) = x.div_rem(&y);
+        assert_eq!(q.mul(&y).add(&rem), x);
+    }
+
+    #[test]
+    fn shifts_roundtrip() {
+        let mut r = Xoshiro256::seed_from_u64(19);
+        for _ in 0..200 {
+            let a = rand_big(&mut r, 10);
+            let k = r.next_below(200);
+            assert_eq!(a.shl(k).shr(k), a);
+        }
+        assert_eq!(big(0b1011).shr(2), big(0b10));
+    }
+
+    #[test]
+    fn low_bits_mask() {
+        let v = big(0xDEAD_BEEF_CAFE_BABE_1234_5678u128);
+        assert_eq!(v.low_bits(16), big(0x5678));
+        assert_eq!(v.low_bits(64), big(0xCAFE_BABE_1234_5678u128));
+        assert_eq!(v.low_bits(200), v);
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let mut r = Xoshiro256::seed_from_u64(23);
+        for _ in 0..100 {
+            let a = rand_big(&mut r, 8);
+            assert_eq!(BigUint::from_hex(&a.to_hex()).unwrap(), a);
+        }
+        assert_eq!(BigUint::from_hex("0").unwrap(), BigUint::zero());
+        assert!(BigUint::from_hex("xyz").is_none());
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut r = Xoshiro256::seed_from_u64(29);
+        for _ in 0..100 {
+            let a = rand_big(&mut r, 8);
+            assert_eq!(BigUint::from_bytes_be(&a.to_bytes_be()), a);
+        }
+    }
+
+    #[test]
+    fn display_decimal() {
+        assert_eq!(big(0).to_string(), "0");
+        assert_eq!(big(1234567890123456789012345678u128).to_string(), "1234567890123456789012345678");
+    }
+
+    #[test]
+    fn mod_pow_small_vectors() {
+        // 4^13 mod 497 = 445
+        assert_eq!(big(4).mod_pow(&big(13), &big(497)), big(445));
+        // even modulus path
+        assert_eq!(big(3).mod_pow(&big(7), &big(100)), big(87));
+        // exponent zero
+        assert_eq!(big(7).mod_pow(&BigUint::zero(), &big(13)), BigUint::one());
+    }
+
+    #[test]
+    fn mod_pow_matches_naive_random() {
+        let mut r = Xoshiro256::seed_from_u64(31);
+        for _ in 0..50 {
+            let base = (r.next_u64() % 1000) as u128;
+            let exp = (r.next_u64() % 50) as u32;
+            let m = (r.next_u64() % 999 + 2) as u128;
+            let naive = {
+                let mut acc: u128 = 1;
+                for _ in 0..exp {
+                    acc = acc * base % m;
+                }
+                acc
+            };
+            assert_eq!(
+                big(base).mod_pow(&big(exp as u128), &big(m)),
+                big(naive),
+                "base={base} exp={exp} m={m}"
+            );
+        }
+    }
+
+    #[test]
+    fn gcd_and_inverse() {
+        assert_eq!(big(12).gcd(&big(18)), big(6));
+        assert_eq!(big(17).mod_inverse(&big(3120)).unwrap(), big(2753));
+        assert!(big(6).mod_inverse(&big(9)).is_none());
+        let mut r = Xoshiro256::seed_from_u64(37);
+        for _ in 0..100 {
+            let m = rand_big(&mut r, 6);
+            if m.cmp_big(&big(2)) == Ordering::Less {
+                continue;
+            }
+            let a = rand_big(&mut r, 6).rem(&m);
+            if let Some(inv) = a.mod_inverse(&m) {
+                assert_eq!(a.mul_mod(&inv, &m), BigUint::one());
+            }
+        }
+    }
+
+    #[test]
+    fn random_below_in_range() {
+        let mut rng = ChaCha20Rng::from_u64(7);
+        let bound = BigUint::from_hex("ffffffffffffffffffffffff").unwrap();
+        for _ in 0..100 {
+            let v = BigUint::random_below(&mut rng, &bound);
+            assert!(v.cmp_big(&bound) == Ordering::Less);
+        }
+    }
+
+    #[test]
+    fn random_exact_bits_has_top_bit() {
+        let mut rng = ChaCha20Rng::from_u64(8);
+        for bits in [1usize, 5, 64, 65, 512] {
+            let v = BigUint::random_exact_bits(&mut rng, bits);
+            assert_eq!(v.bit_length(), bits);
+        }
+    }
+
+    #[test]
+    fn sub_mod_wraps() {
+        let m = big(97);
+        assert_eq!(big(5).sub_mod(&big(10), &m), big(92));
+        assert_eq!(big(10).sub_mod(&big(5), &m), big(5));
+    }
+}

@@ -1,0 +1,438 @@
+//! `CipherSuite` — the single abstraction the trainer talks to for all
+//! homomorphic operations, dispatching to Paillier, IterativeAffine, or a
+//! `Plain` mock (tests/ablation only).
+//!
+//! Every operation is counted in the global [`OpCounters`] so the cost
+//! model of the paper (§4.1/§4.6: homomorphic-op, enc/dec and
+//! communication counts) can be *measured* rather than estimated — the
+//! `ablations` bench compares these counters against the paper's formulas.
+
+use super::bigint::BigUint;
+use super::iterative_affine::{AffineCt, AffineKey, AffinePub};
+use super::paillier::{keygen as paillier_keygen, PaillierCt, PaillierPub, PaillierSk};
+use crate::util::pool::parallel_for_chunks;
+use crate::util::rng::ChaCha20Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A ciphertext under whichever schema the suite was built with.
+#[derive(Clone, Debug)]
+pub enum Ct {
+    Paillier(PaillierCt),
+    Affine(AffineCt),
+    /// Plaintext passthrough (mock cipher for tests and the "no crypto
+    /// overhead" ablation lower bound). Value stored mod 2^bits.
+    Plain(BigUint),
+}
+
+/// Global homomorphic-operation counters (process-wide, reset per bench).
+#[derive(Debug, Default)]
+pub struct OpCounters {
+    pub encrypts: AtomicU64,
+    pub decrypts: AtomicU64,
+    pub adds: AtomicU64,
+    pub scalar_muls: AtomicU64,
+    pub negates: AtomicU64,
+}
+
+/// Snapshot of [`OpCounters`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct OpSnapshot {
+    pub encrypts: u64,
+    pub decrypts: u64,
+    pub adds: u64,
+    pub scalar_muls: u64,
+    pub negates: u64,
+}
+
+pub static OPS: OpCounters = OpCounters {
+    encrypts: AtomicU64::new(0),
+    decrypts: AtomicU64::new(0),
+    adds: AtomicU64::new(0),
+    scalar_muls: AtomicU64::new(0),
+    negates: AtomicU64::new(0),
+};
+
+impl OpCounters {
+    pub fn snapshot(&self) -> OpSnapshot {
+        OpSnapshot {
+            encrypts: self.encrypts.load(Ordering::Relaxed),
+            decrypts: self.decrypts.load(Ordering::Relaxed),
+            adds: self.adds.load(Ordering::Relaxed),
+            scalar_muls: self.scalar_muls.load(Ordering::Relaxed),
+            negates: self.negates.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.encrypts.store(0, Ordering::Relaxed);
+        self.decrypts.store(0, Ordering::Relaxed);
+        self.adds.store(0, Ordering::Relaxed);
+        self.scalar_muls.store(0, Ordering::Relaxed);
+        self.negates.store(0, Ordering::Relaxed);
+    }
+}
+
+impl OpSnapshot {
+    pub fn diff(&self, earlier: &OpSnapshot) -> OpSnapshot {
+        OpSnapshot {
+            encrypts: self.encrypts - earlier.encrypts,
+            decrypts: self.decrypts - earlier.decrypts,
+            adds: self.adds - earlier.adds,
+            scalar_muls: self.scalar_muls - earlier.scalar_muls,
+            negates: self.negates - earlier.negates,
+        }
+    }
+}
+
+/// The cipher abstraction. The guest holds the secret material; the
+/// "public side" clone handed to hosts can perform only homomorphic ops.
+#[derive(Clone, Debug)]
+pub enum CipherSuite {
+    Paillier {
+        pk: Arc<PaillierPub>,
+        sk: Option<Arc<PaillierSk>>,
+    },
+    Affine {
+        pubp: AffinePub,
+        key: Option<Arc<AffineKey>>,
+    },
+    Plain {
+        bits: usize,
+        modulus: BigUint,
+    },
+}
+
+impl CipherSuite {
+    pub fn new_paillier(key_bits: usize, rng: &mut ChaCha20Rng) -> Self {
+        let (pk, sk) = paillier_keygen(key_bits, rng);
+        CipherSuite::Paillier { pk: Arc::new(pk), sk: Some(Arc::new(sk)) }
+    }
+
+    pub fn new_affine(key_bits: usize, rng: &mut ChaCha20Rng) -> Self {
+        let key = AffineKey::generate(key_bits, rng);
+        CipherSuite::Affine { pubp: key.public(), key: Some(Arc::new(key)) }
+    }
+
+    /// Mock cipher: no crypto, plaintext space of `bits` bits. Tests only.
+    pub fn new_plain(bits: usize) -> Self {
+        CipherSuite::Plain { bits, modulus: BigUint::one().shl(bits) }
+    }
+
+    /// The view a host party receives: no secret key material.
+    pub fn public_side(&self) -> Self {
+        match self {
+            CipherSuite::Paillier { pk, .. } => {
+                CipherSuite::Paillier { pk: pk.clone(), sk: None }
+            }
+            CipherSuite::Affine { pubp, .. } => {
+                CipherSuite::Affine { pubp: pubp.clone(), key: None }
+            }
+            CipherSuite::Plain { bits, modulus } => {
+                CipherSuite::Plain { bits: *bits, modulus: modulus.clone() }
+            }
+        }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            CipherSuite::Paillier { .. } => "paillier",
+            CipherSuite::Affine { .. } => "iterative-affine",
+            CipherSuite::Plain { .. } => "plain",
+        }
+    }
+
+    /// Plaintext capacity ι in bits (paper notation).
+    pub fn plaintext_bits(&self) -> usize {
+        match self {
+            CipherSuite::Paillier { pk, .. } => pk.plaintext_bits(),
+            CipherSuite::Affine { pubp, .. } => pubp.plaintext_bits(),
+            CipherSuite::Plain { bits, .. } => *bits,
+        }
+    }
+
+    /// Serialized ciphertext size (for the transport's byte accounting).
+    pub fn ct_byte_len(&self) -> usize {
+        match self {
+            CipherSuite::Paillier { pk, .. } => pk.ct_byte_len(),
+            CipherSuite::Affine { pubp, .. } => pubp.ct_byte_len(),
+            CipherSuite::Plain { bits, .. } => bits.div_ceil(8),
+        }
+    }
+
+    pub fn encrypt(&self, m: &BigUint, rng: &mut ChaCha20Rng) -> Ct {
+        OPS.encrypts.fetch_add(1, Ordering::Relaxed);
+        match self {
+            CipherSuite::Paillier { pk, .. } => Ct::Paillier(pk.encrypt(m, rng)),
+            CipherSuite::Affine { key, .. } => {
+                Ct::Affine(key.as_ref().expect("guest-side suite required").encrypt(m))
+            }
+            CipherSuite::Plain { bits, .. } => Ct::Plain(m.low_bits(*bits)),
+        }
+    }
+
+    /// Parallel batch encryption (the paper's g/h synchronization step).
+    pub fn encrypt_batch(&self, ms: &[BigUint], rng: &mut ChaCha20Rng) -> Vec<Ct> {
+        // Derive independent per-chunk streams from the master rng so the
+        // batch is deterministic given the caller's rng state.
+        let master = rng.next_u64();
+        let n = ms.len();
+        let mut out: Vec<Ct> = Vec::with_capacity(n);
+        let slots_ptr = SendSlice(out.spare_capacity_mut().as_mut_ptr());
+        parallel_for_chunks(n, move |start, end| {
+            let slots_ptr = slots_ptr; // capture the Send/Sync wrapper whole
+            let mut local = ChaCha20Rng::from_u64(master ^ (start as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            for i in start..end {
+                let c = self.encrypt(&ms[i], &mut local);
+                // SAFETY: disjoint indices; each written exactly once.
+                unsafe {
+                    (*slots_ptr.0.add(i)).write(c);
+                }
+            }
+        });
+        // SAFETY: all n slots initialized above.
+        unsafe { out.set_len(n) };
+        out
+    }
+
+    pub fn decrypt(&self, c: &Ct) -> BigUint {
+        OPS.decrypts.fetch_add(1, Ordering::Relaxed);
+        match (self, c) {
+            (CipherSuite::Paillier { pk, sk }, Ct::Paillier(ct)) => {
+                sk.as_ref().expect("secret key required").decrypt(pk, ct)
+            }
+            (CipherSuite::Affine { key, .. }, Ct::Affine(ct)) => {
+                key.as_ref().expect("secret key required").decrypt(ct)
+            }
+            (CipherSuite::Plain { .. }, Ct::Plain(v)) => v.clone(),
+            _ => panic!("ciphertext kind does not match cipher suite"),
+        }
+    }
+
+    /// Parallel batch decryption (split-info recovery step).
+    pub fn decrypt_batch(&self, cs: &[Ct]) -> Vec<BigUint> {
+        let n = cs.len();
+        let mut out: Vec<BigUint> = Vec::with_capacity(n);
+        let slots_ptr = SendSlice(out.spare_capacity_mut().as_mut_ptr());
+        parallel_for_chunks(n, move |start, end| {
+            let slots_ptr = slots_ptr; // capture the Send/Sync wrapper whole
+            for i in start..end {
+                let v = self.decrypt(&cs[i]);
+                unsafe {
+                    (*slots_ptr.0.add(i)).write(v);
+                }
+            }
+        });
+        unsafe { out.set_len(n) };
+        out
+    }
+
+    #[inline]
+    pub fn add(&self, a: &Ct, b: &Ct) -> Ct {
+        OPS.adds.fetch_add(1, Ordering::Relaxed);
+        match (self, a, b) {
+            (CipherSuite::Paillier { pk, .. }, Ct::Paillier(x), Ct::Paillier(y)) => {
+                Ct::Paillier(pk.add(x, y))
+            }
+            (CipherSuite::Affine { pubp, .. }, Ct::Affine(x), Ct::Affine(y)) => {
+                Ct::Affine(pubp.add(x, y))
+            }
+            (CipherSuite::Plain { modulus, .. }, Ct::Plain(x), Ct::Plain(y)) => {
+                Ct::Plain(x.add_mod(y, modulus))
+            }
+            _ => panic!("ciphertext kind mismatch"),
+        }
+    }
+
+    #[inline]
+    pub fn add_assign(&self, a: &mut Ct, b: &Ct) {
+        OPS.adds.fetch_add(1, Ordering::Relaxed);
+        match (self, a, b) {
+            (CipherSuite::Paillier { pk, .. }, Ct::Paillier(x), Ct::Paillier(y)) => {
+                pk.add_assign(x, y)
+            }
+            (CipherSuite::Affine { pubp, .. }, Ct::Affine(x), Ct::Affine(y)) => {
+                pubp.add_assign(x, y)
+            }
+            (CipherSuite::Plain { modulus, .. }, Ct::Plain(x), Ct::Plain(y)) => {
+                *x = x.add_mod(y, modulus)
+            }
+            _ => panic!("ciphertext kind mismatch"),
+        }
+    }
+
+    pub fn scalar_mul(&self, c: &Ct, k: &BigUint) -> Ct {
+        OPS.scalar_muls.fetch_add(1, Ordering::Relaxed);
+        match (self, c) {
+            (CipherSuite::Paillier { pk, .. }, Ct::Paillier(x)) => {
+                Ct::Paillier(pk.scalar_mul(x, k))
+            }
+            (CipherSuite::Affine { pubp, .. }, Ct::Affine(x)) => {
+                Ct::Affine(pubp.scalar_mul(x, k))
+            }
+            (CipherSuite::Plain { modulus, .. }, Ct::Plain(x)) => {
+                Ct::Plain(x.mul(k).rem(modulus))
+            }
+            _ => panic!("ciphertext kind mismatch"),
+        }
+    }
+
+    /// `2^bits · m` — the compression shift (paper Alg. 4's `e × 2^b_gh`).
+    pub fn scalar_pow2(&self, c: &Ct, bits: usize) -> Ct {
+        OPS.scalar_muls.fetch_add(1, Ordering::Relaxed);
+        match (self, c) {
+            (CipherSuite::Paillier { pk, .. }, Ct::Paillier(x)) => {
+                Ct::Paillier(pk.scalar_pow2(x, bits))
+            }
+            (CipherSuite::Affine { pubp, .. }, Ct::Affine(x)) => {
+                Ct::Affine(pubp.scalar_mul(x, &BigUint::one().shl(bits)))
+            }
+            (CipherSuite::Plain { modulus, .. }, Ct::Plain(x)) => {
+                Ct::Plain(x.shl(bits).rem(modulus))
+            }
+            _ => panic!("ciphertext kind mismatch"),
+        }
+    }
+
+    /// Estimated cost ratio negate/add — used by the cost-aware histogram
+    /// subtraction planner (DESIGN.md §Perf iteration 1): ciphertext
+    /// subtraction beats a direct rebuild only when the sibling has more
+    /// than `n_bins × ratio` instances.
+    pub fn negate_cost_ratio(&self) -> usize {
+        match self {
+            // measured: mont_inverse ≈ 474µs vs add ≈ 2.2µs at 1024-bit
+            CipherSuite::Paillier { .. } => 220,
+            CipherSuite::Affine { .. } => 2,
+            CipherSuite::Plain { .. } => 2,
+        }
+    }
+
+    /// Plaintext negation (mod the plaintext space). Histogram subtraction.
+    pub fn negate(&self, c: &Ct) -> Ct {
+        OPS.negates.fetch_add(1, Ordering::Relaxed);
+        match (self, c) {
+            (CipherSuite::Paillier { pk, .. }, Ct::Paillier(x)) => Ct::Paillier(pk.negate(x)),
+            (CipherSuite::Affine { pubp, .. }, Ct::Affine(x)) => Ct::Affine(pubp.negate(x)),
+            (CipherSuite::Plain { modulus, .. }, Ct::Plain(x)) => Ct::Plain(if x.is_zero() {
+                BigUint::zero()
+            } else {
+                modulus.sub(x)
+            }),
+            _ => panic!("ciphertext kind mismatch"),
+        }
+    }
+
+    /// `a − b` on plaintexts; correct when the true difference is ≥ 0.
+    pub fn sub(&self, a: &Ct, b: &Ct) -> Ct {
+        let nb = self.negate(b);
+        self.add(a, &nb)
+    }
+
+    /// The additive identity (`Enc(0)` without obfuscation).
+    pub fn zero_ct(&self) -> Ct {
+        match self {
+            CipherSuite::Paillier { pk, .. } => Ct::Paillier(pk.zero_ct()),
+            CipherSuite::Affine { pubp, .. } => Ct::Affine(pubp.zero_ct()),
+            CipherSuite::Plain { .. } => Ct::Plain(BigUint::zero()),
+        }
+    }
+
+    pub fn has_secret(&self) -> bool {
+        match self {
+            CipherSuite::Paillier { sk, .. } => sk.is_some(),
+            CipherSuite::Affine { key, .. } => key.is_some(),
+            CipherSuite::Plain { .. } => true,
+        }
+    }
+}
+
+struct SendSlice<T>(*mut T);
+unsafe impl<T> Send for SendSlice<T> {}
+unsafe impl<T> Sync for SendSlice<T> {}
+impl<T> Clone for SendSlice<T> {
+    fn clone(&self) -> Self {
+        SendSlice(self.0)
+    }
+}
+impl<T> Copy for SendSlice<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn suites() -> Vec<CipherSuite> {
+        let mut rng = ChaCha20Rng::from_u64(99);
+        vec![
+            CipherSuite::new_paillier(512, &mut rng),
+            CipherSuite::new_affine(512, &mut rng),
+            CipherSuite::new_plain(511),
+        ]
+    }
+
+    #[test]
+    fn roundtrip_all_suites() {
+        let mut rng = ChaCha20Rng::from_u64(1);
+        for s in suites() {
+            for v in [0u64, 1, 12345, u64::MAX] {
+                let m = BigUint::from_u64(v);
+                let c = s.encrypt(&m, &mut rng);
+                assert_eq!(s.decrypt(&c), m, "suite={}", s.kind_name());
+            }
+        }
+    }
+
+    #[test]
+    fn homomorphic_ops_all_suites() {
+        let mut rng = ChaCha20Rng::from_u64(2);
+        for s in suites() {
+            let a = BigUint::from_u64(500);
+            let b = BigUint::from_u64(300);
+            let (ca, cb) = (s.encrypt(&a, &mut rng), s.encrypt(&b, &mut rng));
+            assert_eq!(s.decrypt(&s.add(&ca, &cb)), BigUint::from_u64(800));
+            assert_eq!(s.decrypt(&s.sub(&ca, &cb)), BigUint::from_u64(200));
+            assert_eq!(
+                s.decrypt(&s.scalar_mul(&ca, &BigUint::from_u64(4))),
+                BigUint::from_u64(2000)
+            );
+            let mut acc = s.zero_ct();
+            s.add_assign(&mut acc, &ca);
+            s.add_assign(&mut acc, &cb);
+            assert_eq!(s.decrypt(&acc), BigUint::from_u64(800));
+        }
+    }
+
+    #[test]
+    fn public_side_cannot_decrypt_paillier() {
+        let mut rng = ChaCha20Rng::from_u64(3);
+        let s = CipherSuite::new_paillier(512, &mut rng);
+        let host = s.public_side();
+        assert!(!host.has_secret());
+        // host can still add
+        let c = s.encrypt(&BigUint::from_u64(7), &mut rng);
+        let sum = host.add(&c, &c);
+        assert_eq!(s.decrypt(&sum), BigUint::from_u64(14));
+    }
+
+    #[test]
+    fn batch_encrypt_decrypt() {
+        let mut rng = ChaCha20Rng::from_u64(4);
+        for s in suites() {
+            let ms: Vec<BigUint> = (0..100u64).map(BigUint::from_u64).collect();
+            let cts = s.encrypt_batch(&ms, &mut rng);
+            let back = s.decrypt_batch(&cts);
+            assert_eq!(back, ms, "suite={}", s.kind_name());
+        }
+    }
+
+    #[test]
+    fn op_counters_advance() {
+        let mut rng = ChaCha20Rng::from_u64(5);
+        let s = CipherSuite::new_plain(64);
+        let before = OPS.snapshot();
+        let c = s.encrypt(&BigUint::from_u64(1), &mut rng);
+        let _ = s.add(&c, &c);
+        let _ = s.decrypt(&c);
+        let after = OPS.snapshot().diff(&before);
+        assert!(after.encrypts >= 1 && after.adds >= 1 && after.decrypts >= 1);
+    }
+}

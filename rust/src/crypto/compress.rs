@@ -1,0 +1,213 @@
+//! Cipher compressing (paper §4.4, Algorithms 4 and 6).
+//!
+//! GH packing leaves most of the plaintext space unused (b_gh ≈ 147 bits
+//! inside a 1023-bit Paillier plaintext). Hosts therefore shift-and-add
+//! `η_s = ⌊ι / b_gh⌋` split-statistics into a single ciphertext before
+//! returning them: one decryption then recovers up to η_s split-infos,
+//! cutting both decryption count and transfer volume by η_s×.
+
+use super::cipher::{CipherSuite, Ct};
+use super::packing::GhPacker;
+
+/// Compression parameters the guest derives and broadcasts (§4.5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CompressPlan {
+    /// Split-stats per ciphertext (η_s); 1 disables compression.
+    pub capacity: usize,
+    /// Bits per packed statistic (b_gh).
+    pub b_gh: usize,
+}
+
+impl CompressPlan {
+    pub fn derive(plaintext_bits: usize, b_gh: usize) -> Self {
+        Self { capacity: (plaintext_bits / b_gh).max(1), b_gh }
+    }
+
+    /// A disabled plan (used by the SecureBoost baseline and MO mode).
+    pub fn disabled(b_gh: usize) -> Self {
+        Self { capacity: 1, b_gh }
+    }
+}
+
+/// One host-side split statistic prior to compression: the ciphertext of
+/// the left-side packed Σgh, the (shuffled) split id, and the left-side
+/// sample count the guest needs for the offset correction.
+#[derive(Clone, Debug)]
+pub struct SplitStatCt {
+    pub ct: Ct,
+    pub id: u32,
+    pub sample_count: u32,
+}
+
+/// A compressed package: one ciphertext carrying ≤ η_s statistics
+/// (most-significant = first pushed), plus their ids and counts.
+#[derive(Clone, Debug)]
+pub struct CtPackage {
+    pub ct: Ct,
+    pub ids: Vec<u32>,
+    pub counts: Vec<u32>,
+}
+
+/// Host side (Algorithm 4): fold split statistics into packages.
+pub fn compress(suite: &CipherSuite, plan: &CompressPlan, stats: &[SplitStatCt]) -> Vec<CtPackage> {
+    let mut out = Vec::with_capacity(stats.len().div_ceil(plan.capacity));
+    let mut iter = stats.iter().peekable();
+    while iter.peek().is_some() {
+        let mut ids = Vec::with_capacity(plan.capacity);
+        let mut counts = Vec::with_capacity(plan.capacity);
+        let mut acc: Option<Ct> = None;
+        for _ in 0..plan.capacity {
+            let Some(s) = iter.next() else { break };
+            acc = Some(match acc {
+                None => s.ct.clone(),
+                Some(e) => {
+                    // e <<= b_gh ; e += ct  (pure-squaring shift)
+                    let shifted = suite.scalar_pow2(&e, plan.b_gh);
+                    suite.add(&shifted, &s.ct)
+                }
+            });
+            ids.push(s.id);
+            counts.push(s.sample_count);
+        }
+        out.push(CtPackage { ct: acc.expect("non-empty package"), ids, counts });
+    }
+    out
+}
+
+/// One recovered split statistic on the guest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SplitStatPlain {
+    pub id: u32,
+    pub sample_count: u32,
+    pub g_sum: f64,
+    pub h_sum: f64,
+}
+
+/// Guest side (Algorithm 6): decrypt each package and peel off the packed
+/// statistics, correcting each gradient sum by `g_off · sample_count`.
+pub fn decompress(
+    suite: &CipherSuite,
+    plan: &CompressPlan,
+    packer: &GhPacker,
+    packages: &[CtPackage],
+) -> Vec<SplitStatPlain> {
+    let cts: Vec<Ct> = packages.iter().map(|p| p.ct.clone()).collect();
+    let plains = suite.decrypt_batch(&cts);
+    let mut out = Vec::new();
+    for (pkg, d) in packages.iter().zip(plains) {
+        let eta = pkg.ids.len();
+        debug_assert!(eta <= plan.capacity);
+        for (s, (&id, &count)) in pkg.ids.iter().zip(&pkg.counts).enumerate() {
+            // first-pushed statistic sits in the top bits
+            let shift = plan.b_gh * (eta - 1 - s);
+            let gh = d.shr(shift).low_bits(plan.b_gh);
+            let (g_sum, h_sum) = packer.unpack_sum(&gh, count as u64);
+            out.push(SplitStatPlain { id, sample_count: count, g_sum, h_sum });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{ChaCha20Rng, Xoshiro256};
+
+    fn make_stats(
+        suite: &CipherSuite,
+        packer: &GhPacker,
+        pairs: &[(f64, f64, u32)],
+        rng: &mut ChaCha20Rng,
+    ) -> Vec<SplitStatCt> {
+        pairs
+            .iter()
+            .enumerate()
+            .map(|(i, &(g, h, count))| {
+                // a "sum" over `count` instances: pack already-summed values,
+                // offset appears `count` times as it would from real addition
+                let encoded = packer
+                    .enc
+                    .encode(g + packer.g_off * count as f64)
+                    .shl(packer.b_h)
+                    .add(&packer.enc.encode(h));
+                SplitStatCt { ct: suite.encrypt(&encoded, rng), id: i as u32, sample_count: count }
+            })
+            .collect()
+    }
+
+    fn roundtrip_for(suite: CipherSuite) {
+        let mut rng = ChaCha20Rng::from_u64(7);
+        let mut xr = Xoshiro256::seed_from_u64(3);
+        let n_bound = 1000u64;
+        let g: Vec<f64> = (0..16).map(|_| xr.next_f64() * 2.0 - 1.0).collect();
+        let h: Vec<f64> = (0..16).map(|_| xr.next_f64()).collect();
+        let packer = GhPacker::plan_logistic(n_bound, 53);
+        let plan = CompressPlan::derive(suite.plaintext_bits(), packer.b_gh);
+        assert!(plan.capacity >= 1);
+
+        let pairs: Vec<(f64, f64, u32)> = g
+            .iter()
+            .zip(&h)
+            .enumerate()
+            .map(|(i, (&gi, &hi))| (gi * (i + 1) as f64, hi * (i + 1) as f64, (i + 1) as u32))
+            .collect();
+        let stats = make_stats(&suite, &packer, &pairs, &mut rng);
+        let packages = compress(&suite, &plan, &stats);
+        let expected_pkgs = stats.len().div_ceil(plan.capacity);
+        assert_eq!(packages.len(), expected_pkgs);
+
+        let recovered = decompress(&suite, &plan, &packer, &packages);
+        assert_eq!(recovered.len(), stats.len());
+        for (r, (gt, ht, ct)) in recovered.iter().zip(&pairs) {
+            assert_eq!(r.sample_count, *ct);
+            assert!((r.g_sum - gt).abs() < 1e-6, "g {} vs {gt}", r.g_sum);
+            assert!((r.h_sum - ht).abs() < 1e-6, "h {} vs {ht}", r.h_sum);
+        }
+    }
+
+    #[test]
+    fn roundtrip_paillier() {
+        let mut rng = ChaCha20Rng::from_u64(1);
+        roundtrip_for(CipherSuite::new_paillier(512, &mut rng));
+    }
+
+    #[test]
+    fn roundtrip_affine() {
+        let mut rng = ChaCha20Rng::from_u64(2);
+        roundtrip_for(CipherSuite::new_affine(512, &mut rng));
+    }
+
+    #[test]
+    fn roundtrip_plain() {
+        roundtrip_for(CipherSuite::new_plain(1023));
+    }
+
+    #[test]
+    fn capacity_matches_paper() {
+        // 1023-bit plaintext, b_gh=147 → η_s = 6 (paper §4.4).
+        let plan = CompressPlan::derive(1023, 147);
+        assert_eq!(plan.capacity, 6);
+    }
+
+    #[test]
+    fn disabled_plan_packs_one_each() {
+        let suite = CipherSuite::new_plain(512);
+        let packer = GhPacker::plan_logistic(100, 30);
+        let plan = CompressPlan::disabled(packer.b_gh);
+        let mut rng = ChaCha20Rng::from_u64(3);
+        let stats = make_stats(&suite, &packer, &[(0.5, 0.5, 1), (-0.25, 0.1, 1)], &mut rng);
+        let pkgs = compress(&suite, &plan, &stats);
+        assert_eq!(pkgs.len(), 2);
+        let rec = decompress(&suite, &plan, &packer, &pkgs);
+        assert!((rec[0].g_sum - 0.5).abs() < 1e-6);
+        assert!((rec[1].g_sum + 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_stats() {
+        let suite = CipherSuite::new_plain(512);
+        let plan = CompressPlan::derive(512, 100);
+        let pkgs = compress(&suite, &plan, &[]);
+        assert!(pkgs.is_empty());
+    }
+}

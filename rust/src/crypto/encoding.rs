@@ -1,0 +1,93 @@
+//! Fixed-point encoding of gradients/hessians (paper eq. 11):
+//! `n_int = ⌊n_float · 2^r⌋` with precision `r` (default 53).
+//!
+//! Values must be non-negative at encoding time — the packer applies the
+//! gradient offset `g_off` first (paper §4.2).
+
+use super::bigint::BigUint;
+
+/// Default fixed-point precision (the paper's `r = 53`).
+pub const DEFAULT_PRECISION: u32 = 53;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FixedPointEncoder {
+    pub precision: u32,
+}
+
+impl Default for FixedPointEncoder {
+    fn default() -> Self {
+        Self { precision: DEFAULT_PRECISION }
+    }
+}
+
+impl FixedPointEncoder {
+    pub fn new(precision: u32) -> Self {
+        assert!(precision <= 63, "precision too large");
+        Self { precision }
+    }
+
+    /// Encode a non-negative float. Panics on negatives (offset first).
+    pub fn encode(&self, x: f64) -> BigUint {
+        assert!(x >= 0.0 && x.is_finite(), "encode requires finite x ≥ 0, got {x}");
+        let scaled = x * 2f64.powi(self.precision as i32);
+        // Values this system encodes are ≤ ~2·2^53 < 2^63; keep u128 headroom.
+        BigUint::from_u128(scaled.round() as u128)
+    }
+
+    /// Decode an (aggregated) fixed-point integer back to f64.
+    pub fn decode(&self, v: &BigUint) -> f64 {
+        v.to_f64() / 2f64.powi(self.precision as i32)
+    }
+
+    /// Bit length needed for a sum of `n` encoded values each ≤ `max_val`
+    /// (paper eq. 12–13).
+    pub fn sum_bits(&self, max_val: f64, n: u64) -> usize {
+        let imax = self.encode(max_val.max(0.0)).mul_u64(n.max(1));
+        imax.bit_length().max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_precision() {
+        let e = FixedPointEncoder::default();
+        for x in [0.0, 1.0, 0.5, 0.123456789, 1.999999, 123.456] {
+            let v = e.encode(x);
+            assert!((e.decode(&v) - x).abs() < 1e-12, "x={x}");
+        }
+    }
+
+    #[test]
+    fn lower_precision_coarser() {
+        let e = FixedPointEncoder::new(10);
+        let v = e.encode(0.123456789);
+        assert!((e.decode(&v) - 0.123456789).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sum_bits_matches_paper_example() {
+        // Paper §4.4: n=1,000,000, r=53, g∈[-1,1] offset to [0,2] → b_g=74,
+        // h∈[0,1] → b_h=73.
+        let e = FixedPointEncoder::new(53);
+        assert_eq!(e.sum_bits(2.0, 1_000_000), 74);
+        assert_eq!(e.sum_bits(1.0, 1_000_000), 73);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_rejected() {
+        FixedPointEncoder::default().encode(-0.1);
+    }
+
+    #[test]
+    fn zero_and_tiny() {
+        let e = FixedPointEncoder::default();
+        assert_eq!(e.decode(&e.encode(0.0)), 0.0);
+        // below one ulp of the fixed-point grid decodes to 0
+        let v = e.encode(1e-20);
+        assert_eq!(v, BigUint::zero());
+    }
+}

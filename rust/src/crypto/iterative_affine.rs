@@ -1,0 +1,200 @@
+//! The IterativeAffine cipher — the second HE schema shipped by
+//! SecureBoost / FATE-1.5 and benchmarked throughout the paper.
+//!
+//! FATE's scheme applies `r` affine rounds `x ↦ aᵢ·x mod nᵢ`. For the
+//! additive homomorphism *and* ciphertext subtraction (needed by the
+//! paper's ciphertext histogram subtraction, §4.3) to hold simultaneously,
+//! all rounds must share one modulus — with distinct moduli, a negative
+//! intermediate difference wraps at the outer modulus and corrupts inner
+//! rounds. We therefore compose the rounds over a single odd modulus `n`:
+//! the effective key is `a = Π aᵢ mod n` (kept as separate rounds for
+//! fidelity to FATE's key format). Like FATE's original, this is a
+//! *symmetric, linear* scheme: dramatically faster than Paillier and with
+//! correspondingly weaker security guarantees — the paper uses it as the
+//! "cheap cipher" point of comparison and so do we.
+//!
+//! Homomorphic ops: `E(x)+E(y) = E(x+y) mod n`, `k·E(x) = E(k·x) mod n`,
+//! `E(x)−E(y) = E(x−y)` when `x ≥ y` (histogram subtraction case).
+
+use super::bigint::BigUint;
+use super::prime::gen_prime;
+use crate::util::rng::ChaCha20Rng;
+
+/// Number of affine rounds (FATE default).
+const DEFAULT_ROUNDS: usize = 3;
+
+/// IterativeAffine key. Symmetric: the guest generates and keeps it; hosts
+/// only ever see ciphertexts and the public modulus.
+#[derive(Clone, Debug)]
+pub struct AffineKey {
+    /// Round multipliers a₁..a_r (each coprime with n).
+    pub rounds: Vec<BigUint>,
+    /// Composite forward multiplier `a = Π aᵢ mod n`.
+    a: BigUint,
+    /// Composite inverse `a⁻¹ mod n`.
+    a_inv: BigUint,
+    /// The shared odd modulus.
+    pub n: BigUint,
+}
+
+/// Public parameters a host needs to operate on ciphertexts.
+#[derive(Clone, Debug)]
+pub struct AffinePub {
+    pub n: BigUint,
+    pub key_bits: usize,
+}
+
+/// IterativeAffine ciphertext: a residue mod n.
+pub type AffineCt = BigUint;
+
+impl AffineKey {
+    /// Generate a key with a `key_bits`-bit prime modulus.
+    pub fn generate(key_bits: usize, rng: &mut ChaCha20Rng) -> Self {
+        // A prime modulus guarantees every non-zero aᵢ is invertible.
+        let n = gen_prime(key_bits, rng);
+        let mut rounds = Vec::with_capacity(DEFAULT_ROUNDS);
+        let mut a = BigUint::one();
+        for _ in 0..DEFAULT_ROUNDS {
+            let ai = loop {
+                let c = BigUint::random_below(rng, &n);
+                if !c.is_zero() && !c.is_one() {
+                    break c;
+                }
+            };
+            a = a.mul_mod(&ai, &n);
+            rounds.push(ai);
+        }
+        let a_inv = a.mod_inverse(&n).expect("a invertible (prime modulus)");
+        Self { rounds, a, a_inv, n }
+    }
+
+    pub fn public(&self) -> AffinePub {
+        AffinePub { n: self.n.clone(), key_bits: self.n.bit_length() }
+    }
+
+    /// Encrypt: apply every round (equivalent to one multiply by the
+    /// composite key; kept explicit for parity with FATE's construction).
+    pub fn encrypt(&self, m: &BigUint) -> AffineCt {
+        debug_assert!(
+            m.bit_length() < self.n.bit_length(),
+            "plaintext overflow for affine cipher"
+        );
+        m.mul_mod(&self.a, &self.n)
+    }
+
+    /// Decrypt: multiply by the composite inverse.
+    pub fn decrypt(&self, c: &AffineCt) -> BigUint {
+        c.mul_mod(&self.a_inv, &self.n)
+    }
+}
+
+impl AffinePub {
+    pub fn plaintext_bits(&self) -> usize {
+        self.n.bit_length() - 1
+    }
+
+    pub fn ct_byte_len(&self) -> usize {
+        self.n.byte_len()
+    }
+
+    #[inline]
+    pub fn add(&self, a: &AffineCt, b: &AffineCt) -> AffineCt {
+        a.add_mod(b, &self.n)
+    }
+
+    #[inline]
+    pub fn add_assign(&self, a: &mut AffineCt, b: &AffineCt) {
+        *a = a.add_mod(b, &self.n);
+    }
+
+    pub fn scalar_mul(&self, c: &AffineCt, k: &BigUint) -> AffineCt {
+        c.mul_mod(k, &self.n)
+    }
+
+    pub fn negate(&self, c: &AffineCt) -> AffineCt {
+        if c.is_zero() {
+            BigUint::zero()
+        } else {
+            self.n.sub(c)
+        }
+    }
+
+    pub fn sub(&self, a: &AffineCt, b: &AffineCt) -> AffineCt {
+        a.sub_mod(b, &self.n)
+    }
+
+    pub fn zero_ct(&self) -> AffineCt {
+        BigUint::zero()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(seed: u64) -> (AffineKey, AffinePub) {
+        let mut rng = ChaCha20Rng::from_u64(seed);
+        let key = AffineKey::generate(512, &mut rng);
+        let p = key.public();
+        (key, p)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let (key, _) = setup(1);
+        for v in [0u64, 1, 53, u64::MAX] {
+            let m = BigUint::from_u64(v);
+            assert_eq!(key.decrypt(&key.encrypt(&m)), m);
+        }
+    }
+
+    #[test]
+    fn composite_equals_rounds() {
+        // Applying the rounds one by one must equal the composite multiply.
+        let (key, _) = setup(2);
+        let m = BigUint::from_u64(123456);
+        let mut x = m.clone();
+        for a in &key.rounds {
+            x = x.mul_mod(a, &key.n);
+        }
+        assert_eq!(x, key.encrypt(&m));
+    }
+
+    #[test]
+    fn additive_homomorphism() {
+        let (key, p) = setup(3);
+        let (a, b) = (BigUint::from_u64(1000), BigUint::from_u64(2345));
+        let sum = p.add(&key.encrypt(&a), &key.encrypt(&b));
+        assert_eq!(key.decrypt(&sum), BigUint::from_u64(3345));
+    }
+
+    #[test]
+    fn scalar_and_negate() {
+        let (key, p) = setup(4);
+        let m = BigUint::from_u64(77);
+        let c = key.encrypt(&m);
+        assert_eq!(key.decrypt(&p.scalar_mul(&c, &BigUint::from_u64(9))), BigUint::from_u64(693));
+        // subtraction with a ≥ b
+        let big = key.encrypt(&BigUint::from_u64(100));
+        let small = key.encrypt(&BigUint::from_u64(40));
+        assert_eq!(key.decrypt(&p.sub(&big, &small)), BigUint::from_u64(60));
+        // negate(0) stays 0
+        assert_eq!(p.negate(&p.zero_ct()), BigUint::zero());
+    }
+
+    #[test]
+    fn zero_identity() {
+        let (key, p) = setup(5);
+        let m = BigUint::from_u64(5);
+        let c = key.encrypt(&m);
+        assert_eq!(key.decrypt(&p.add(&c, &p.zero_ct())), m);
+    }
+
+    #[test]
+    fn large_plaintext_near_capacity() {
+        let (key, p) = setup(6);
+        let mut rng = ChaCha20Rng::from_u64(60);
+        let m = BigUint::random_bits(&mut rng, p.plaintext_bits() - 1);
+        assert_eq!(key.decrypt(&key.encrypt(&m)), m);
+    }
+}

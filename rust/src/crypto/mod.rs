@@ -1,0 +1,22 @@
+//! Cryptographic substrate built from scratch (the offline crate universe
+//! has no bignum / HE crates).
+//!
+//! - [`bigint`] — arbitrary-precision unsigned integers (u64 limbs).
+//! - [`mont`] — Montgomery modular arithmetic (REDC, windowed modexp).
+//! - [`prime`] — Miller–Rabin and random prime generation.
+//! - [`paillier`] — the Paillier additively homomorphic cryptosystem.
+//! - [`iterative_affine`] — FATE-style iterative affine cipher.
+//! - [`cipher`] — the `CipherSuite` abstraction the trainer talks to.
+//! - [`encoding`] — fixed-point encoding of gradients/hessians (paper eq. 11).
+//! - [`packing`] — GH packing (Alg. 3) and multi-class packing (Alg. 7–8).
+//! - [`compress`] — cipher compressing of split statistics (Alg. 4/6).
+
+pub mod bigint;
+pub mod cipher;
+pub mod compress;
+pub mod encoding;
+pub mod iterative_affine;
+pub mod mont;
+pub mod packing;
+pub mod paillier;
+pub mod prime;

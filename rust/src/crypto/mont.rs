@@ -1,0 +1,450 @@
+//! Montgomery modular arithmetic for odd moduli.
+//!
+//! This is the hot core of the whole system: every homomorphic "addition"
+//! of packed gradient/hessian ciphertexts is one Montgomery multiplication
+//! mod n² (2048-bit for a 1024-bit Paillier key), and every encryption /
+//! decryption / scalar-multiplication is a windowed Montgomery
+//! exponentiation. The CIOS (coarsely integrated operand scanning) inner
+//! loop below is what `cargo bench --bench micro_cipher` measures.
+//!
+//! Ciphertexts that live inside histograms are kept in the Montgomery
+//! domain for their whole lifetime (the domain is closed under
+//! `mont_mul`), so the per-histogram-add cost is exactly one `mont_mul` —
+//! see [`crate::tree::histogram`].
+
+use super::bigint::BigUint;
+use std::cmp::Ordering;
+
+/// Precomputed context for arithmetic mod an odd modulus `m`.
+#[derive(Clone, Debug)]
+pub struct MontCtx {
+    /// The modulus (odd).
+    pub m: BigUint,
+    /// Limb count of `m`; all Montgomery residues are padded to this width.
+    n: usize,
+    /// `-m⁻¹ mod 2⁶⁴`.
+    minv: u64,
+    /// `R² mod m` where `R = 2^(64·n)`; used by [`Self::to_mont`].
+    r2: Vec<u64>,
+    /// `1` in Montgomery form (`R mod m`).
+    one: Vec<u64>,
+}
+
+/// A value in the Montgomery domain, padded to the modulus width.
+/// Only meaningful together with the `MontCtx` that produced it.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct MontInt(pub(crate) Vec<u64>);
+
+impl MontCtx {
+    /// Build a context; `m` must be odd and ≥ 3.
+    pub fn new(m: BigUint) -> Self {
+        assert!(!m.is_even() && !m.is_one() && !m.is_zero(), "modulus must be odd ≥ 3");
+        let n = m.limbs.len();
+        // Newton–Hensel: invert m mod 2^64, then negate.
+        let m0 = m.limbs[0];
+        let mut inv = m0; // correct to 3 bits
+        for _ in 0..5 {
+            inv = inv.wrapping_mul(2u64.wrapping_sub(m0.wrapping_mul(inv)));
+        }
+        let minv = inv.wrapping_neg();
+        let r2_big = BigUint::one().shl(128 * n).rem(&m);
+        let one_big = BigUint::one().shl(64 * n).rem(&m);
+        let pad = |b: &BigUint| {
+            let mut v = b.limbs.clone();
+            v.resize(n, 0);
+            v
+        };
+        Self { n, minv, r2: pad(&r2_big), one: pad(&one_big), m }
+    }
+
+    #[inline]
+    pub fn limbs(&self) -> usize {
+        self.n
+    }
+
+    /// Montgomery multiplication (CIOS): returns `a·b·R⁻¹ mod m`.
+    /// `a`, `b` must be padded to `n` limbs.
+    fn mul_raw(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
+        let mut t = vec![0u64; self.n + 2];
+        self.mul_raw_into(a, b, &mut t);
+        t.truncate(self.n);
+        t
+    }
+
+    /// Allocation-free CIOS into caller scratch (`t.len() == n + 2` after
+    /// the call; the result occupies `t[..n]`). This is the §Perf hot
+    /// path: `mont_mul_assign` and `mont_pow` reuse one scratch buffer so
+    /// the histogram add loop does zero heap traffic.
+    fn mul_raw_into(&self, a: &[u64], b: &[u64], t: &mut Vec<u64>) {
+        let n = self.n;
+        let m = &self.m.limbs;
+        t.clear();
+        t.resize(n + 2, 0);
+        for &ai in a.iter().take(n) {
+            // t += ai * b
+            let mut carry: u128 = 0;
+            for j in 0..n {
+                let cur = t[j] as u128 + ai as u128 * b[j] as u128 + carry;
+                t[j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let cur = t[n] as u128 + carry;
+            t[n] = cur as u64;
+            t[n + 1] = (cur >> 64) as u64;
+
+            // reduce one limb: t = (t + ((t[0]·m') mod 2⁶⁴)·m) / 2⁶⁴
+            let mval = t[0].wrapping_mul(self.minv);
+            let cur = t[0] as u128 + mval as u128 * m[0] as u128;
+            let mut carry = cur >> 64;
+            for j in 1..n {
+                let cur = t[j] as u128 + mval as u128 * m[j] as u128 + carry;
+                t[j - 1] = cur as u64;
+                carry = cur >> 64;
+            }
+            let cur = t[n] as u128 + carry;
+            t[n - 1] = cur as u64;
+            t[n] = t[n + 1].wrapping_add((cur >> 64) as u64);
+            t[n + 1] = 0;
+        }
+        // conditional subtract
+        if t[n] != 0 || ge_slices(&t[..n], m) {
+            sub_in_place(&mut t[..n + 1], m);
+        }
+    }
+
+    /// Convert into the Montgomery domain.
+    pub fn to_mont(&self, a: &BigUint) -> MontInt {
+        let a = if a.cmp_big(&self.m) == Ordering::Less {
+            a.clone()
+        } else {
+            a.rem(&self.m)
+        };
+        let mut pad = a.limbs;
+        pad.resize(self.n, 0);
+        MontInt(self.mul_raw(&pad, &self.r2))
+    }
+
+    /// Convert out of the Montgomery domain.
+    pub fn from_mont(&self, a: &MontInt) -> BigUint {
+        let one = {
+            let mut v = vec![0u64; self.n];
+            v[0] = 1;
+            v
+        };
+        BigUint::from_limbs(self.mul_raw(&a.0, &one))
+    }
+
+    /// `a·b` in the Montgomery domain.
+    #[inline]
+    pub fn mont_mul(&self, a: &MontInt, b: &MontInt) -> MontInt {
+        MontInt(self.mul_raw(&a.0, &b.0))
+    }
+
+    /// In-place variant used in the histogram accumulation loop: zero
+    /// heap allocation (thread-local scratch + buffer reuse).
+    #[inline]
+    pub fn mont_mul_assign(&self, acc: &mut MontInt, b: &MontInt) {
+        SCRATCH.with(|s| {
+            let mut t = s.borrow_mut();
+            self.mul_raw_into(&acc.0, &b.0, &mut t);
+            acc.0.clear();
+            acc.0.extend_from_slice(&t[..self.n]);
+        });
+    }
+
+    /// `c^(2^k)` — k in-place squarings. The cipher-compression "shift"
+    /// (×2^b_gh) is a power-of-two exponent, so the generic windowed
+    /// `mont_pow` table is wasted on it; this saves ~10% per shift and
+    /// allocates nothing.
+    pub fn mont_pow2k(&self, c: &MontInt, k: usize) -> MontInt {
+        let mut acc = c.clone();
+        SCRATCH.with(|s| {
+            let mut t = s.borrow_mut();
+            for _ in 0..k {
+                let (a, b) = (&acc.0, &acc.0);
+                self.mul_raw_into(a, b, &mut t);
+                acc.0.clear();
+                acc.0.extend_from_slice(&t[..self.n]);
+            }
+        });
+        acc
+    }
+
+    /// `1` in the Montgomery domain (the identity for `mont_mul`).
+    pub fn mont_one(&self) -> MontInt {
+        MontInt(self.one.clone())
+    }
+
+    /// `base^exp mod m` with a fixed 4-bit window; `base` in standard form.
+    pub fn mod_pow(&self, base: &BigUint, exp: &BigUint) -> BigUint {
+        let b = self.to_mont(base);
+        let r = self.mont_pow(&b, exp);
+        self.from_mont(&r)
+    }
+
+    /// Exponentiation entirely inside the Montgomery domain.
+    pub fn mont_pow(&self, base: &MontInt, exp: &BigUint) -> MontInt {
+        let bits = exp.bit_length();
+        if bits == 0 {
+            return self.mont_one();
+        }
+        // Precompute base^0..base^15.
+        let mut table = Vec::with_capacity(16);
+        table.push(self.mont_one());
+        for i in 1..16 {
+            table.push(self.mont_mul(&table[i - 1], base));
+        }
+        let nibbles = bits.div_ceil(4);
+        let mut acc = self.mont_one();
+        let mut started = false;
+        SCRATCH.with(|s| {
+            let mut t = s.borrow_mut();
+            for w in (0..nibbles).rev() {
+                if started {
+                    for _ in 0..4 {
+                        self.mul_raw_into(&acc.0, &acc.0, &mut t);
+                        acc.0.clear();
+                        acc.0.extend_from_slice(&t[..self.n]);
+                    }
+                }
+                let mut nib = 0usize;
+                for b in 0..4 {
+                    let bit_idx = w * 4 + (3 - b);
+                    nib = (nib << 1) | (bit_idx < bits && exp.bit(bit_idx)) as usize;
+                }
+                if nib != 0 {
+                    self.mul_raw_into(&acc.0, &table[nib].0, &mut t);
+                    acc.0.clear();
+                    acc.0.extend_from_slice(&t[..self.n]);
+                    started = true;
+                }
+            }
+        });
+        if !started {
+            return self.mont_one();
+        }
+        acc
+    }
+
+    /// Modular inverse of a Montgomery-domain value, staying in the domain.
+    /// Used for ciphertext negation (histogram subtraction).
+    ///
+    /// The raw limbs of a Montgomery residue equal `a·R mod m`, so a binary
+    /// inverse gives `a⁻¹·R⁻¹`; two REDC-multiplications by `R²` append an
+    /// `R` each: `a⁻¹·R⁻¹ → a⁻¹ → a⁻¹·R`.
+    pub fn mont_inverse(&self, a: &MontInt) -> Option<MontInt> {
+        let raw = BigUint::from_limbs(a.0.clone()); // = a·R mod m
+        let inv = inv_mod_odd(&raw, &self.m)?; // = a⁻¹·R⁻¹ mod m
+        let mut pad = inv.limbs;
+        pad.resize(self.n, 0);
+        let step = self.mul_raw(&pad, &self.r2); // = a⁻¹
+        Some(MontInt(self.mul_raw(&step, &self.r2))) // = a⁻¹·R
+    }
+}
+
+/// Binary extended GCD inverse for odd modulus (HAC 14.61 specialization).
+/// Returns `a⁻¹ mod m` or `None` if `gcd(a, m) ≠ 1`.
+pub fn inv_mod_odd(a: &BigUint, m: &BigUint) -> Option<BigUint> {
+    debug_assert!(!m.is_even());
+    let mut u = a.rem(m);
+    if u.is_zero() {
+        return None;
+    }
+    let mut v = m.clone();
+    let mut x1 = BigUint::one();
+    let mut x2 = BigUint::zero();
+    while !u.is_one() && !v.is_one() {
+        while u.is_even() {
+            u = u.shr(1);
+            x1 = if x1.is_even() { x1.shr(1) } else { x1.add(m).shr(1) };
+        }
+        while v.is_even() {
+            v = v.shr(1);
+            x2 = if x2.is_even() { x2.shr(1) } else { x2.add(m).shr(1) };
+        }
+        if u.cmp_big(&v) != Ordering::Less {
+            u = u.sub(&v);
+            x1 = x1.sub_mod(&x2, m);
+        } else {
+            v = v.sub(&u);
+            x2 = x2.sub_mod(&x1, m);
+        }
+        if u.is_zero() || v.is_zero() {
+            return None;
+        }
+    }
+    Some(if u.is_one() { x1.rem(m) } else { x2.rem(m) })
+}
+
+thread_local! {
+    /// Shared CIOS scratch for the allocation-free paths.
+    static SCRATCH: std::cell::RefCell<Vec<u64>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+#[inline]
+fn ge_slices(a: &[u64], b: &[u64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    for i in (0..a.len()).rev() {
+        match a[i].cmp(&b[i]) {
+            Ordering::Greater => return true,
+            Ordering::Less => return false,
+            Ordering::Equal => {}
+        }
+    }
+    true
+}
+
+#[inline]
+fn sub_in_place(a: &mut [u64], b: &[u64]) {
+    let mut borrow = 0u64;
+    for i in 0..b.len() {
+        let (d1, b1) = a[i].overflowing_sub(b[i]);
+        let (d2, b2) = d1.overflowing_sub(borrow);
+        a[i] = d2;
+        borrow = (b1 as u64) + (b2 as u64);
+    }
+    if a.len() > b.len() {
+        a[b.len()] = a[b.len()].wrapping_sub(borrow);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{ChaCha20Rng, Xoshiro256};
+
+    fn big(v: u128) -> BigUint {
+        BigUint::from_u128(v)
+    }
+
+    fn random_odd(rng: &mut ChaCha20Rng, bits: usize) -> BigUint {
+        let mut m = BigUint::random_exact_bits(rng, bits);
+        if m.is_even() {
+            m = m.add_u64(1);
+        }
+        m
+    }
+
+    #[test]
+    fn roundtrip_to_from_mont() {
+        let mut rng = ChaCha20Rng::from_u64(1);
+        for bits in [64usize, 128, 512, 2048] {
+            let m = random_odd(&mut rng, bits);
+            let ctx = MontCtx::new(m.clone());
+            for _ in 0..20 {
+                let a = BigUint::random_below(&mut rng, &m);
+                assert_eq!(ctx.from_mont(&ctx.to_mont(&a)), a);
+            }
+        }
+    }
+
+    #[test]
+    fn mont_mul_matches_mul_mod() {
+        let mut rng = ChaCha20Rng::from_u64(2);
+        for bits in [64usize, 192, 1024] {
+            let m = random_odd(&mut rng, bits);
+            let ctx = MontCtx::new(m.clone());
+            for _ in 0..20 {
+                let a = BigUint::random_below(&mut rng, &m);
+                let b = BigUint::random_below(&mut rng, &m);
+                let got = ctx.from_mont(&ctx.mont_mul(&ctx.to_mont(&a), &ctx.to_mont(&b)));
+                assert_eq!(got, a.mul_mod(&b, &m));
+            }
+        }
+    }
+
+    #[test]
+    fn mod_pow_matches_small() {
+        let ctx = MontCtx::new(big(497));
+        assert_eq!(ctx.mod_pow(&big(4), &big(13)), big(445));
+        assert_eq!(ctx.mod_pow(&big(4), &BigUint::zero()), BigUint::one());
+        assert_eq!(ctx.mod_pow(&big(0), &big(5)), BigUint::zero());
+    }
+
+    #[test]
+    fn mod_pow_matches_naive_random() {
+        let mut r = Xoshiro256::seed_from_u64(3);
+        for _ in 0..100 {
+            let m = (r.next_u64() % 100_000) | 1;
+            if m < 3 {
+                continue;
+            }
+            let base = r.next_u64() % m;
+            let exp = r.next_u64() % 64;
+            let naive = {
+                let mut acc: u128 = 1;
+                for _ in 0..exp {
+                    acc = acc * base as u128 % m as u128;
+                }
+                acc as u64
+            };
+            let ctx = MontCtx::new(big(m as u128));
+            assert_eq!(
+                ctx.mod_pow(&big(base as u128), &big(exp as u128)),
+                big(naive as u128),
+                "base={base} exp={exp} m={m}"
+            );
+        }
+    }
+
+    #[test]
+    fn mod_pow_large_exponent_consistency() {
+        // a^(e1+e2) == a^e1 · a^e2 mod m — catches windowing bugs at width
+        // boundaries without needing an external oracle.
+        let mut rng = ChaCha20Rng::from_u64(4);
+        let m = random_odd(&mut rng, 768);
+        let ctx = MontCtx::new(m.clone());
+        for _ in 0..10 {
+            let a = BigUint::random_below(&mut rng, &m);
+            let e1 = BigUint::random_bits(&mut rng, 300);
+            let e2 = BigUint::random_bits(&mut rng, 300);
+            let lhs = ctx.mod_pow(&a, &e1.add(&e2));
+            let rhs = ctx.mod_pow(&a, &e1).mul_mod(&ctx.mod_pow(&a, &e2), &m);
+            assert_eq!(lhs, rhs);
+        }
+    }
+
+    #[test]
+    fn inverse_binary_matches_euclid() {
+        let mut rng = ChaCha20Rng::from_u64(5);
+        for bits in [64usize, 256, 1024] {
+            let m = random_odd(&mut rng, bits);
+            for _ in 0..20 {
+                let a = BigUint::random_below(&mut rng, &m);
+                let bin = inv_mod_odd(&a, &m);
+                let euc = a.mod_inverse(&m);
+                assert_eq!(bin, euc);
+                if let Some(inv) = bin {
+                    assert_eq!(a.mul_mod(&inv, &m), BigUint::one());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mont_inverse_stays_in_domain() {
+        let mut rng = ChaCha20Rng::from_u64(6);
+        let m = random_odd(&mut rng, 512);
+        let ctx = MontCtx::new(m.clone());
+        for _ in 0..20 {
+            let a = BigUint::random_below(&mut rng, &m);
+            if a.gcd(&m).is_one() {
+                let am = ctx.to_mont(&a);
+                let inv = ctx.mont_inverse(&am).unwrap();
+                let prod = ctx.from_mont(&ctx.mont_mul(&am, &inv));
+                assert!(prod.is_one(), "a·a⁻¹ ≠ 1");
+            }
+        }
+    }
+
+    #[test]
+    fn mont_pow_in_domain_matches() {
+        let mut rng = ChaCha20Rng::from_u64(7);
+        let m = random_odd(&mut rng, 256);
+        let ctx = MontCtx::new(m.clone());
+        let a = BigUint::random_below(&mut rng, &m);
+        let e = BigUint::random_bits(&mut rng, 100);
+        let via_domain = ctx.from_mont(&ctx.mont_pow(&ctx.to_mont(&a), &e));
+        assert_eq!(via_domain, ctx.mod_pow(&a, &e));
+    }
+}

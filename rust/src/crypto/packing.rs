@@ -1,0 +1,274 @@
+//! GH packing (paper §4.2, Algorithm 3) and multi-class GH packing for
+//! SecureBoost-MO (paper §5.3, Algorithms 7–8).
+//!
+//! Gradients are offset to be non-negative, fixed-point encoded, and the
+//! (g, h) pair is bundled into one plaintext integer `gh = (g << b_h) + h`
+//! whose bit budget `b_gh = b_g + b_h` is sized so that a histogram-bin
+//! *sum over all n instances* cannot overflow (eq. 12–13). One ciphertext
+//! then carries both statistics — halving every downstream HE cost.
+
+use super::bigint::BigUint;
+use super::encoding::FixedPointEncoder;
+
+/// Plan for packing scalar (binary-task) g/h pairs.
+#[derive(Clone, Debug)]
+pub struct GhPacker {
+    pub enc: FixedPointEncoder,
+    /// Offset added to every gradient so it is non-negative.
+    pub g_off: f64,
+    /// Bits reserved for the aggregated gradient (eq. 13).
+    pub b_g: usize,
+    /// Bits reserved for the aggregated hessian.
+    pub b_h: usize,
+    /// Total bits per packed pair.
+    pub b_gh: usize,
+}
+
+impl GhPacker {
+    /// Build a plan from the actual g/h vectors (Algorithm 3 preamble):
+    /// `n_bound` is the instance count used for the overflow bound.
+    pub fn plan(g: &[f64], h: &[f64], n_bound: u64, precision: u32) -> Self {
+        assert!(!g.is_empty() && g.len() == h.len());
+        let enc = FixedPointEncoder::new(precision);
+        let g_min = g.iter().copied().fold(f64::INFINITY, f64::min);
+        let g_off = (-g_min).max(0.0);
+        let g_max = g.iter().copied().fold(f64::NEG_INFINITY, f64::max) + g_off;
+        let h_max = h.iter().copied().fold(0.0f64, f64::max);
+        let b_g = enc.sum_bits(g_max, n_bound);
+        let b_h = enc.sum_bits(h_max, n_bound);
+        Self { enc, g_off, b_g, b_h, b_gh: b_g + b_h }
+    }
+
+    /// Plan with a known loss range (binary logistic: g∈[-1,1], h∈[0,1]) —
+    /// lets hosts reproduce the layout without seeing any statistics.
+    pub fn plan_logistic(n_bound: u64, precision: u32) -> Self {
+        let enc = FixedPointEncoder::new(precision);
+        let b_g = enc.sum_bits(2.0, n_bound);
+        let b_h = enc.sum_bits(1.0, n_bound);
+        Self { enc, g_off: 1.0, b_g, b_h, b_gh: b_g + b_h }
+    }
+
+    /// Pack one (g, h) pair (Algorithm 3 body).
+    pub fn pack(&self, g: f64, h: f64) -> BigUint {
+        let ge = self.enc.encode(g + self.g_off);
+        let he = self.enc.encode(h.max(0.0));
+        debug_assert!(ge.bit_length() <= self.b_g && he.bit_length() <= self.b_h);
+        ge.shl(self.b_h).add(&he)
+    }
+
+    pub fn pack_all(&self, g: &[f64], h: &[f64]) -> Vec<BigUint> {
+        g.iter().zip(h).map(|(&gi, &hi)| self.pack(gi, hi)).collect()
+    }
+
+    /// Recover the aggregated (Σg, Σh) from a *sum* of `count` packed
+    /// values (paper Algorithm 6 inner loop): mask off the hessian bits,
+    /// shift for the gradient, then remove the accumulated offset.
+    pub fn unpack_sum(&self, v: &BigUint, count: u64) -> (f64, f64) {
+        let h = self.enc.decode(&v.low_bits(self.b_h));
+        let g_raw = self.enc.decode(&v.shr(self.b_h));
+        (g_raw - self.g_off * count as f64, h)
+    }
+}
+
+/// Multi-class packing plan (SecureBoost-MO, Algorithm 7).
+///
+/// The per-class (g, h) pairs of one instance are packed `η_c = ⌊ι / b_gh⌋`
+/// classes per ciphertext, needing `n_k = ⌈k / η_c⌉` ciphertexts per
+/// instance. Cipher compressing is disabled in MO mode (the plaintext
+/// space is already full), exactly as in the paper.
+#[derive(Clone, Debug)]
+pub struct MoPacker {
+    pub base: GhPacker,
+    /// Number of classes.
+    pub k: usize,
+    /// Classes per ciphertext (η_c, eq. 21).
+    pub eta_c: usize,
+    /// Ciphertexts per instance (n_k, eq. 22).
+    pub n_k: usize,
+}
+
+impl MoPacker {
+    /// `g` and `h` are row-major n×k matrices.
+    pub fn plan(
+        g: &[f64],
+        h: &[f64],
+        k: usize,
+        n_bound: u64,
+        precision: u32,
+        plaintext_bits: usize,
+    ) -> Self {
+        let base = GhPacker::plan(g, h, n_bound, precision);
+        let eta_c = (plaintext_bits / base.b_gh).max(1);
+        assert!(
+            base.b_gh <= plaintext_bits,
+            "one class does not fit the plaintext space: b_gh={} > ι={}",
+            base.b_gh,
+            plaintext_bits
+        );
+        let eta_c = eta_c.min(k.max(1));
+        let n_k = k.div_ceil(eta_c);
+        Self { base, k, eta_c, n_k }
+    }
+
+    /// Number of classes stored in the `idx`-th ciphertext of an instance.
+    pub fn classes_in_ct(&self, idx: usize) -> usize {
+        debug_assert!(idx < self.n_k);
+        (self.k - idx * self.eta_c).min(self.eta_c)
+    }
+
+    /// Pack one instance's g/h vectors (each of length k) into `n_k`
+    /// plaintext integers (Algorithm 7 inner loop). The first class of a
+    /// chunk lands in the top bits.
+    pub fn pack_instance(&self, g_row: &[f64], h_row: &[f64]) -> Vec<BigUint> {
+        assert_eq!(g_row.len(), self.k);
+        assert_eq!(h_row.len(), self.k);
+        let mut out = Vec::with_capacity(self.n_k);
+        for chunk in 0..self.n_k {
+            let classes = self.classes_in_ct(chunk);
+            let mut e = BigUint::zero();
+            for s in 0..classes {
+                let j = chunk * self.eta_c + s;
+                let gh = self.base.pack(g_row[j], h_row[j]);
+                e = e.shl(self.base.b_gh).add(&gh);
+            }
+            out.push(e);
+        }
+        out
+    }
+
+    /// Recover aggregated per-class (Σg, Σh) vectors from decrypted sums
+    /// (Algorithm 8). `sums` has length `n_k`; `count` is the number of
+    /// instances aggregated into them.
+    pub fn unpack_sums(&self, sums: &[BigUint], count: u64) -> (Vec<f64>, Vec<f64>) {
+        assert_eq!(sums.len(), self.n_k);
+        let mut g = Vec::with_capacity(self.k);
+        let mut h = Vec::with_capacity(self.k);
+        for (chunk, v) in sums.iter().enumerate() {
+            let classes = self.classes_in_ct(chunk);
+            for s in 0..classes {
+                let shift = self.base.b_gh * (classes - 1 - s);
+                let gh = v.shr(shift).low_bits(self.base.b_gh);
+                let (gi, hi) = self.base.unpack_sum(&gh, count);
+                g.push(gi);
+                h.push(hi);
+            }
+        }
+        (g, h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn pack_unpack_single() {
+        let p = GhPacker::plan_logistic(1000, 53);
+        for (g, h) in [(-1.0, 0.0), (1.0, 1.0), (0.0, 0.25), (-0.37, 0.91)] {
+            let v = p.pack(g, h);
+            let (gu, hu) = p.unpack_sum(&v, 1);
+            assert!((gu - g).abs() < 1e-9, "g {g} -> {gu}");
+            assert!((hu - h).abs() < 1e-9, "h {h} -> {hu}");
+        }
+    }
+
+    #[test]
+    fn packed_sums_recover_plain_sums() {
+        // The whole point of packing: Σ pack(gᵢ,hᵢ) unpacks to (Σg, Σh).
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let n = 5000usize;
+        let g: Vec<f64> = (0..n).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+        let h: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let p = GhPacker::plan(&g, &h, n as u64, 53);
+        let mut acc = BigUint::zero();
+        for v in p.pack_all(&g, &h) {
+            acc = acc.add(&v);
+        }
+        let (gs, hs) = p.unpack_sum(&acc, n as u64);
+        let (gt, ht) = (g.iter().sum::<f64>(), h.iter().sum::<f64>());
+        assert!((gs - gt).abs() < 1e-6, "{gs} vs {gt}");
+        assert!((hs - ht).abs() < 1e-6, "{hs} vs {ht}");
+        // the aggregate must fit the planned bit budget
+        assert!(acc.bit_length() <= p.b_gh);
+    }
+
+    #[test]
+    fn partial_sums_with_offset_correction() {
+        let g = [-0.9, -0.5, 0.3];
+        let h = [0.1, 0.2, 0.3];
+        let p = GhPacker::plan(&g, &h, 3, 53);
+        let packed = p.pack_all(&g, &h);
+        let two = packed[0].add(&packed[1]);
+        let (gs, hs) = p.unpack_sum(&two, 2);
+        assert!((gs - (-1.4)).abs() < 1e-9);
+        assert!((hs - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_bit_assignment_example() {
+        // §4.4: 1M instances, r=53 → b_g=74, b_h=73, b_gh=147; with a
+        // 1023-bit plaintext space, η_s = ⌊1023/147⌋ = 6.
+        let p = GhPacker::plan_logistic(1_000_000, 53);
+        assert_eq!(p.b_g, 74);
+        assert_eq!(p.b_h, 73);
+        assert_eq!(p.b_gh, 147);
+        assert_eq!(1023 / p.b_gh, 6);
+    }
+
+    #[test]
+    fn mo_pack_roundtrip() {
+        let k = 7;
+        let n = 100usize;
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let g: Vec<f64> = (0..n * k).map(|_| rng.next_f64() - 0.5).collect();
+        let h: Vec<f64> = (0..n * k).map(|_| rng.next_f64() * 0.25).collect();
+        let p = MoPacker::plan(&g, &h, k, n as u64, 53, 1023);
+        assert_eq!(p.eta_c.min(k) * p.n_k >= k, true);
+
+        // aggregate all instances homomorphically in plaintext space
+        let mut sums = vec![BigUint::zero(); p.n_k];
+        for i in 0..n {
+            let row = p.pack_instance(&g[i * k..(i + 1) * k], &h[i * k..(i + 1) * k]);
+            for (s, v) in sums.iter_mut().zip(row) {
+                *s = s.add(&v);
+            }
+        }
+        let (gs, hs) = p.unpack_sums(&sums, n as u64);
+        assert_eq!(gs.len(), k);
+        for j in 0..k {
+            let gt: f64 = (0..n).map(|i| g[i * k + j]).sum();
+            let ht: f64 = (0..n).map(|i| h[i * k + j]).sum();
+            assert!((gs[j] - gt).abs() < 1e-6, "class {j}: {} vs {gt}", gs[j]);
+            assert!((hs[j] - ht).abs() < 1e-6, "class {j}: {} vs {ht}", hs[j]);
+        }
+    }
+
+    #[test]
+    fn mo_last_chunk_partial() {
+        // k not divisible by eta_c → last ciphertext holds fewer classes.
+        let k = 11;
+        let g: Vec<f64> = vec![0.1; k];
+        let h: Vec<f64> = vec![0.2; k];
+        // force small plaintext space so eta_c is small
+        let p = MoPacker::plan(&g, &h, k, 10, 20, 150);
+        assert!(p.n_k > 1);
+        let row = p.pack_instance(&g, &h);
+        let (gs, hs) = p.unpack_sums(&row, 1);
+        for j in 0..k {
+            assert!((gs[j] - 0.1).abs() < 1e-4);
+            assert!((hs[j] - 0.2).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn all_negative_gradients() {
+        let g = [-0.5, -0.9, -0.1];
+        let h = [0.5, 0.5, 0.5];
+        let p = GhPacker::plan(&g, &h, 3, 53);
+        assert!((p.g_off - 0.9).abs() < 1e-12);
+        let v = p.pack(g[1], h[1]);
+        let (gu, _) = p.unpack_sum(&v, 1);
+        assert!((gu - g[1]).abs() < 1e-9);
+    }
+}

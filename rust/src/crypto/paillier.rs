@@ -1,0 +1,383 @@
+//! The Paillier additively homomorphic cryptosystem (Paillier, 1999) —
+//! the default HE schema of SecureBoost / SecureBoost+.
+//!
+//! - Encryption uses the standard `g = n + 1` optimization:
+//!   `Enc(m) = (1 + m·n) · rⁿ mod n²` — one big multiplication plus the
+//!   obfuscation exponentiation.
+//! - Decryption uses CRT over p² and q² (≈ 4× faster than the direct
+//!   `c^λ mod n²` form).
+//! - Ciphertexts are kept **in the Montgomery domain of n²** for their
+//!   whole life: homomorphic addition is then exactly one Montgomery
+//!   multiplication (the hot op of ciphertext histogram building), and
+//!   scalar multiplication / negation are windowed Montgomery
+//!   exponentiation / binary inversion.
+//! - *Fast obfuscation* (DJN-style, on by default for training; exact
+//!   `rⁿ` available via [`PaillierPub::obfuscator_full`]): a public
+//!   `h = r₀ⁿ mod n²` is published and encryption draws `h^ρ` with a short
+//!   (256-bit) exponent ρ. This is the same short-exponent optimization
+//!   production FL stacks use to make million-row encryption tractable.
+
+use super::bigint::BigUint;
+use super::mont::{MontCtx, MontInt};
+use super::prime::gen_prime;
+use crate::util::rng::ChaCha20Rng;
+use std::sync::Arc;
+
+/// Bits of the short obfuscation exponent (fast mode).
+const FAST_OBF_BITS: usize = 256;
+
+/// Size of the precomputed obfuscator pool (perf mode, see below).
+const OBF_POOL: usize = 64;
+/// Pool elements multiplied per encryption.
+const OBF_DRAW: usize = 3;
+
+/// Public key + shared Montgomery context for n².
+#[derive(Clone, Debug)]
+pub struct PaillierPub {
+    pub n: BigUint,
+    pub n_squared: BigUint,
+    /// Montgomery context modulo n² — shared by every ciphertext op.
+    pub ctx: Arc<MontCtx>,
+    /// Montgomery context modulo n (used by decrypt CRT recombination).
+    pub key_bits: usize,
+    /// `h = r₀ⁿ mod n²` in Montgomery form; base for fast obfuscation.
+    h_mont: MontInt,
+    /// Precomputed obfuscator pool: `h^ρᵢ` for random 256-bit ρᵢ. An
+    /// encryption draws the product of [`OBF_DRAW`] random pool entries —
+    /// ~3 Montgomery multiplications instead of a ~330-multiplication
+    /// windowed exponentiation (§Perf iteration 2; the classic
+    /// precomputed-randomizer trade-off — weaker randomizer entropy than
+    /// a fresh exponent, documented in DESIGN.md §Perf; use
+    /// [`Self::encrypt_exact`] when full-strength obfuscation is needed).
+    obf_pool: Vec<MontInt>,
+}
+
+/// Secret key (CRT form).
+#[derive(Clone, Debug)]
+pub struct PaillierSk {
+    pub p: BigUint,
+    pub q: BigUint,
+    p_squared: BigUint,
+    q_squared: BigUint,
+    ctx_p2: Arc<MontCtx>,
+    ctx_q2: Arc<MontCtx>,
+    /// `hp = L_p(g^(p-1) mod p²)⁻¹ mod p`
+    hp: BigUint,
+    hq: BigUint,
+    /// `q⁻¹ mod p` for CRT recombination.
+    q_inv_p: BigUint,
+}
+
+/// A Paillier ciphertext: a Montgomery-domain residue mod n².
+pub type PaillierCt = MontInt;
+
+/// Generate a key pair; `key_bits` is the bit length of `n` (1024/2048).
+pub fn keygen(key_bits: usize, rng: &mut ChaCha20Rng) -> (PaillierPub, PaillierSk) {
+    assert!(key_bits >= 128, "key too small");
+    let half = key_bits / 2;
+    let (p, q, n) = loop {
+        let p = gen_prime(half, rng);
+        let q = gen_prime(key_bits - half, rng);
+        if p == q {
+            continue;
+        }
+        let n = p.mul(&q);
+        if n.bit_length() == key_bits {
+            break (p, q, n);
+        }
+    };
+    let n_squared = n.square();
+    let ctx = Arc::new(MontCtx::new(n_squared.clone()));
+
+    // Fast-obfuscation base: h = r0^n mod n², r0 random.
+    let r0 = BigUint::random_below(rng, &n);
+    let h = ctx.mod_pow(&r0, &n);
+    let h_mont = ctx.to_mont(&h);
+    let obf_pool: Vec<MontInt> = (0..OBF_POOL)
+        .map(|_| {
+            let rho = BigUint::random_bits(rng, FAST_OBF_BITS);
+            ctx.mont_pow(&h_mont, &rho)
+        })
+        .collect();
+
+    let p_squared = p.square();
+    let q_squared = q.square();
+    let ctx_p2 = Arc::new(MontCtx::new(p_squared.clone()));
+    let ctx_q2 = Arc::new(MontCtx::new(q_squared.clone()));
+
+    // hp = L_p(g^(p-1) mod p²)⁻¹ mod p with g = n+1, L_p(x) = (x-1)/p.
+    let g = n.add_u64(1);
+    let p_minus_1 = p.sub(&BigUint::one());
+    let q_minus_1 = q.sub(&BigUint::one());
+    let l_p = |x: &BigUint| x.sub(&BigUint::one()).div_rem(&p).0;
+    let l_q = |x: &BigUint| x.sub(&BigUint::one()).div_rem(&q).0;
+    let hp = l_p(&ctx_p2.mod_pow(&g, &p_minus_1))
+        .mod_inverse(&p)
+        .expect("hp invertible");
+    let hq = l_q(&ctx_q2.mod_pow(&g, &q_minus_1))
+        .mod_inverse(&q)
+        .expect("hq invertible");
+    let q_inv_p = q.mod_inverse(&p).expect("q invertible mod p");
+
+    let pk = PaillierPub { n, n_squared, ctx, key_bits, h_mont, obf_pool };
+    let sk = PaillierSk { p, q, p_squared, q_squared, ctx_p2, ctx_q2, hp, hq, q_inv_p };
+    (pk, sk)
+}
+
+impl PaillierPub {
+    /// Plaintext bit capacity ι (values up to n−1; we use bit_length(n)−1
+    /// to be safe against wraparound).
+    pub fn plaintext_bits(&self) -> usize {
+        self.n.bit_length() - 1
+    }
+
+    /// Serialized ciphertext size in bytes (a residue mod n²).
+    pub fn ct_byte_len(&self) -> usize {
+        self.n_squared.byte_len()
+    }
+
+    /// `(1 + m·n) mod n²` in Montgomery form — the unobfuscated payload.
+    fn payload(&self, m: &BigUint) -> MontInt {
+        debug_assert!(
+            m.bit_length() <= self.plaintext_bits(),
+            "plaintext overflow: {} > {} bits",
+            m.bit_length(),
+            self.plaintext_bits()
+        );
+        let body = BigUint::one().add(&m.mul(&self.n)).rem(&self.n_squared);
+        self.ctx.to_mont(&body)
+    }
+
+    /// Fast obfuscator: `h^ρ mod n²`, ρ short random exponent.
+    pub fn obfuscator_fast(&self, rng: &mut ChaCha20Rng) -> MontInt {
+        let rho = BigUint::random_bits(rng, FAST_OBF_BITS);
+        self.ctx.mont_pow(&self.h_mont, &rho)
+    }
+
+    /// Pooled obfuscator: product of [`OBF_DRAW`] random pool entries —
+    /// ~3 mont_muls (§Perf). Default for bulk training encryption.
+    pub fn obfuscator_pooled(&self, rng: &mut ChaCha20Rng) -> MontInt {
+        let mut acc = self.obf_pool[(rng.next_u64() % OBF_POOL as u64) as usize].clone();
+        for _ in 1..OBF_DRAW {
+            let idx = (rng.next_u64() % OBF_POOL as u64) as usize;
+            self.ctx.mont_mul_assign(&mut acc, &self.obf_pool[idx]);
+        }
+        acc
+    }
+
+    /// Exact obfuscator `rⁿ mod n²` with full-size random `r` (slow path).
+    pub fn obfuscator_full(&self, rng: &mut ChaCha20Rng) -> MontInt {
+        let r = BigUint::random_below(rng, &self.n);
+        self.ctx.to_mont(&self.ctx.mod_pow(&r, &self.n))
+    }
+
+    /// Encrypt with a caller-provided obfuscator (lets the encryption loop
+    /// draw obfuscators from a precomputed pool).
+    pub fn encrypt_with(&self, m: &BigUint, obf: &MontInt) -> PaillierCt {
+        self.ctx.mont_mul(&self.payload(m), obf)
+    }
+
+    /// Encrypt with a pooled obfuscator (bulk/training default).
+    pub fn encrypt(&self, m: &BigUint, rng: &mut ChaCha20Rng) -> PaillierCt {
+        let obf = self.obfuscator_pooled(rng);
+        self.encrypt_with(m, &obf)
+    }
+
+    /// Encrypt with a fresh short-exponent obfuscator (`h^ρ`, ρ 256-bit).
+    pub fn encrypt_fresh(&self, m: &BigUint, rng: &mut ChaCha20Rng) -> PaillierCt {
+        let obf = self.obfuscator_fast(rng);
+        self.encrypt_with(m, &obf)
+    }
+
+    /// Encrypt with an exact full-size `rⁿ` obfuscator (slow path).
+    pub fn encrypt_exact(&self, m: &BigUint, rng: &mut ChaCha20Rng) -> PaillierCt {
+        let obf = self.obfuscator_full(rng);
+        self.encrypt_with(m, &obf)
+    }
+
+    /// Homomorphic addition of plaintexts = multiplication of ciphertexts.
+    #[inline]
+    pub fn add(&self, a: &PaillierCt, b: &PaillierCt) -> PaillierCt {
+        self.ctx.mont_mul(a, b)
+    }
+
+    #[inline]
+    pub fn add_assign(&self, a: &mut PaillierCt, b: &PaillierCt) {
+        self.ctx.mont_mul_assign(a, b);
+    }
+
+    /// Homomorphic scalar multiplication: `Enc(k·m) = Enc(m)^k`.
+    pub fn scalar_mul(&self, c: &PaillierCt, k: &BigUint) -> PaillierCt {
+        self.ctx.mont_pow(c, k)
+    }
+
+    /// `Enc(2^bits · m)` — the cipher-compression shift; pure squarings.
+    pub fn scalar_pow2(&self, c: &PaillierCt, bits: usize) -> PaillierCt {
+        self.ctx.mont_pow2k(c, bits)
+    }
+
+    /// Homomorphic negation: `Enc(-m) = Enc(m)⁻¹ mod n²`
+    /// (the plaintext becomes `n − m`). Used by histogram subtraction.
+    pub fn negate(&self, c: &PaillierCt) -> PaillierCt {
+        self.ctx.mont_inverse(c).expect("ciphertext invertible")
+    }
+
+    /// `a − b` on plaintexts (requires the true difference to be
+    /// non-negative, which histogram subtraction guarantees).
+    pub fn sub(&self, a: &PaillierCt, b: &PaillierCt) -> PaillierCt {
+        self.add(a, &self.negate(b))
+    }
+
+    /// Encryption of zero without obfuscation (identity element).
+    pub fn zero_ct(&self) -> PaillierCt {
+        self.ctx.mont_one()
+    }
+
+    /// Standard-form residue (for wire serialization).
+    pub fn ct_to_bytes(&self, c: &PaillierCt) -> Vec<u8> {
+        self.ctx.from_mont(c).to_bytes_be()
+    }
+
+    pub fn ct_from_bytes(&self, bytes: &[u8]) -> PaillierCt {
+        self.ctx.to_mont(&BigUint::from_bytes_be(bytes))
+    }
+}
+
+impl PaillierSk {
+    /// CRT decryption. Returns the plaintext in `[0, n)`.
+    pub fn decrypt(&self, pk: &PaillierPub, c: &PaillierCt) -> BigUint {
+        let c_std = pk.ctx.from_mont(c);
+        let p_minus_1 = self.p.sub(&BigUint::one());
+        let q_minus_1 = self.q.sub(&BigUint::one());
+
+        // m_p = L_p(c^(p-1) mod p²)·hp mod p
+        let cp = c_std.rem(&self.p_squared);
+        let cq = c_std.rem(&self.q_squared);
+        let xp = self.ctx_p2.mod_pow(&cp, &p_minus_1);
+        let xq = self.ctx_q2.mod_pow(&cq, &q_minus_1);
+        let lp = xp.sub(&BigUint::one()).div_rem(&self.p).0;
+        let lq = xq.sub(&BigUint::one()).div_rem(&self.q).0;
+        let mp = lp.mul_mod(&self.hp, &self.p);
+        let mq = lq.mul_mod(&self.hq, &self.q);
+
+        // CRT: m = mq + q·((mp − mq)·q⁻¹ mod p)
+        let diff = mp.sub_mod(&mq.rem(&self.p), &self.p);
+        let t = diff.mul_mod(&self.q_inv_p, &self.p);
+        mq.add(&self.q.mul(&t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(bits: usize, seed: u64) -> (PaillierPub, PaillierSk, ChaCha20Rng) {
+        let mut rng = ChaCha20Rng::from_u64(seed);
+        let (pk, sk) = keygen(bits, &mut rng);
+        (pk, sk, rng)
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let (pk, sk, mut rng) = setup(512, 1);
+        for v in [0u64, 1, 2, 53, u32::MAX as u64, u64::MAX] {
+            let m = BigUint::from_u64(v);
+            let c = pk.encrypt(&m, &mut rng);
+            assert_eq!(sk.decrypt(&pk, &c), m, "v={v}");
+        }
+    }
+
+    #[test]
+    fn full_obfuscation_roundtrip() {
+        let (pk, sk, mut rng) = setup(512, 2);
+        let m = BigUint::from_u64(123456789);
+        let obf = pk.obfuscator_full(&mut rng);
+        let c = pk.encrypt_with(&m, &obf);
+        assert_eq!(sk.decrypt(&pk, &c), m);
+    }
+
+    #[test]
+    fn homomorphic_addition() {
+        let (pk, sk, mut rng) = setup(512, 3);
+        let a = BigUint::from_u64(11111);
+        let b = BigUint::from_u64(22222);
+        let ca = pk.encrypt(&a, &mut rng);
+        let cb = pk.encrypt(&b, &mut rng);
+        let sum = pk.add(&ca, &cb);
+        assert_eq!(sk.decrypt(&pk, &sum), BigUint::from_u64(33333));
+    }
+
+    #[test]
+    fn homomorphic_scalar_mul() {
+        let (pk, sk, mut rng) = setup(512, 4);
+        let m = BigUint::from_u64(777);
+        let c = pk.encrypt(&m, &mut rng);
+        let c3 = pk.scalar_mul(&c, &BigUint::from_u64(1000));
+        assert_eq!(sk.decrypt(&pk, &c3), BigUint::from_u64(777_000));
+    }
+
+    #[test]
+    fn negation_and_subtraction() {
+        let (pk, sk, mut rng) = setup(512, 5);
+        let a = BigUint::from_u64(5000);
+        let b = BigUint::from_u64(1234);
+        let ca = pk.encrypt(&a, &mut rng);
+        let cb = pk.encrypt(&b, &mut rng);
+        let diff = pk.sub(&ca, &cb);
+        assert_eq!(sk.decrypt(&pk, &diff), BigUint::from_u64(3766));
+        // negate alone: Dec(-b) = n − b
+        let neg = pk.negate(&cb);
+        assert_eq!(sk.decrypt(&pk, &neg), pk.n.sub(&b));
+    }
+
+    #[test]
+    fn zero_ct_is_identity() {
+        let (pk, sk, mut rng) = setup(512, 6);
+        let m = BigUint::from_u64(42);
+        let c = pk.encrypt(&m, &mut rng);
+        let s = pk.add(&c, &pk.zero_ct());
+        assert_eq!(sk.decrypt(&pk, &s), m);
+        assert_eq!(sk.decrypt(&pk, &pk.zero_ct()), BigUint::zero());
+    }
+
+    #[test]
+    fn large_plaintexts_near_capacity() {
+        let (pk, sk, mut rng) = setup(512, 7);
+        let bits = pk.plaintext_bits();
+        let m = BigUint::random_bits(&mut rng, bits - 1);
+        let c = pk.encrypt(&m, &mut rng);
+        assert_eq!(sk.decrypt(&pk, &c), m);
+    }
+
+    #[test]
+    fn add_assign_matches_add() {
+        let (pk, sk, mut rng) = setup(512, 8);
+        let a = BigUint::from_u64(10);
+        let b = BigUint::from_u64(20);
+        let ca = pk.encrypt(&a, &mut rng);
+        let cb = pk.encrypt(&b, &mut rng);
+        let mut acc = ca.clone();
+        pk.add_assign(&mut acc, &cb);
+        assert_eq!(sk.decrypt(&pk, &acc), sk.decrypt(&pk, &pk.add(&ca, &cb)));
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let (pk, sk, mut rng) = setup(512, 9);
+        let m = BigUint::from_u64(987654321);
+        let c = pk.encrypt(&m, &mut rng);
+        let bytes = pk.ct_to_bytes(&c);
+        assert!(bytes.len() <= pk.ct_byte_len());
+        let c2 = pk.ct_from_bytes(&bytes);
+        assert_eq!(sk.decrypt(&pk, &c2), m);
+    }
+
+    #[test]
+    fn ciphertexts_are_randomized() {
+        let (pk, _sk, mut rng) = setup(512, 10);
+        let m = BigUint::from_u64(5);
+        let c1 = pk.encrypt(&m, &mut rng);
+        let c2 = pk.encrypt(&m, &mut rng);
+        assert_ne!(pk.ct_to_bytes(&c1), pk.ct_to_bytes(&c2));
+    }
+}

@@ -1,0 +1,149 @@
+//! Probabilistic primality testing and random prime generation
+//! (for Paillier / IterativeAffine key generation).
+
+use super::bigint::BigUint;
+use super::mont::MontCtx;
+use crate::util::rng::ChaCha20Rng;
+
+/// Small primes for trial division before Miller–Rabin.
+const SMALL_PRIMES: [u64; 60] = [
+    3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59, 61, 67, 71, 73, 79, 83, 89, 97,
+    101, 103, 107, 109, 113, 127, 131, 137, 139, 149, 151, 157, 163, 167, 173, 179, 181, 191, 193,
+    197, 199, 211, 223, 227, 229, 233, 239, 241, 251, 257, 263, 269, 271, 277, 281, 283,
+];
+
+/// Miller–Rabin with `rounds` random bases. For the key sizes used here
+/// (≥ 256-bit primes) 20 rounds gives error < 2⁻⁴⁰ per the standard bound.
+pub fn is_probable_prime(n: &BigUint, rounds: usize, rng: &mut ChaCha20Rng) -> bool {
+    if n.is_zero() || n.is_one() {
+        return false;
+    }
+    if n.is_even() {
+        return *n == BigUint::from_u64(2);
+    }
+    for &p in &SMALL_PRIMES {
+        let pb = BigUint::from_u64(p);
+        if *n == pb {
+            return true;
+        }
+        if n.rem(&pb).is_zero() {
+            return false;
+        }
+    }
+    // write n-1 = d * 2^s
+    let n_minus_1 = n.sub(&BigUint::one());
+    let s = {
+        let mut s = 0usize;
+        let mut d = n_minus_1.clone();
+        while d.is_even() {
+            d = d.shr(1);
+            s += 1;
+        }
+        s
+    };
+    let d = n_minus_1.shr(s);
+    let ctx = MontCtx::new(n.clone());
+    let two = BigUint::from_u64(2);
+    let upper = n.sub(&two); // bases in [2, n-2]
+    'witness: for _ in 0..rounds {
+        let a = BigUint::random_below(rng, &upper).add(&two);
+        let mut x = ctx.mod_pow(&a, &d);
+        if x.is_one() || x == n_minus_1 {
+            continue;
+        }
+        for _ in 0..s - 1 {
+            x = x.mul_mod(&x, n);
+            if x == n_minus_1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Generate a random prime with exactly `bits` bits.
+pub fn gen_prime(bits: usize, rng: &mut ChaCha20Rng) -> BigUint {
+    assert!(bits >= 16, "prime size too small: {bits}");
+    loop {
+        let mut cand = BigUint::random_exact_bits(rng, bits);
+        if cand.is_even() {
+            cand = cand.add_u64(1);
+        }
+        // March forward over odd numbers from the random start; re-randomize
+        // after a while to avoid biasing toward prime gaps.
+        for _ in 0..200 {
+            if is_probable_prime(&cand, 20, rng) {
+                return cand;
+            }
+            cand = cand.add_u64(2);
+            if cand.bit_length() != bits {
+                break;
+            }
+        }
+    }
+}
+
+/// Generate a prime `p` with `gcd(p-1, e) == 1` — not needed by Paillier
+/// (which needs gcd(pq, (p-1)(q-1)) = 1, ensured by equal-size primes), but
+/// used by tests to cross-check generator behaviour.
+pub fn gen_prime_coprime(bits: usize, e: &BigUint, rng: &mut ChaCha20Rng) -> BigUint {
+    loop {
+        let p = gen_prime(bits, rng);
+        if p.sub(&BigUint::one()).gcd(e).is_one() {
+            return p;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_primes_and_composites() {
+        let mut rng = ChaCha20Rng::from_u64(1);
+        for p in [2u64, 3, 5, 7, 97, 257, 65537, 2_147_483_647] {
+            assert!(
+                is_probable_prime(&BigUint::from_u64(p), 20, &mut rng),
+                "{p} should be prime"
+            );
+        }
+        for c in [1u64, 4, 9, 15, 341, 561, 645, 1105, 65535, 4_294_967_295] {
+            assert!(
+                !is_probable_prime(&BigUint::from_u64(c), 20, &mut rng),
+                "{c} should be composite"
+            );
+        }
+    }
+
+    #[test]
+    fn strong_pseudoprimes_rejected() {
+        // Carmichael numbers & base-2 strong pseudoprimes.
+        let mut rng = ChaCha20Rng::from_u64(2);
+        for c in [2047u64, 3277, 4033, 8321, 15841, 29341, 252601, 3215031751] {
+            assert!(
+                !is_probable_prime(&BigUint::from_u64(c), 20, &mut rng),
+                "{c} should be composite"
+            );
+        }
+    }
+
+    #[test]
+    fn generated_primes_have_exact_bits() {
+        let mut rng = ChaCha20Rng::from_u64(3);
+        for bits in [64usize, 128, 256] {
+            let p = gen_prime(bits, &mut rng);
+            assert_eq!(p.bit_length(), bits);
+            assert!(is_probable_prime(&p, 30, &mut rng));
+        }
+    }
+
+    #[test]
+    fn coprime_variant() {
+        let mut rng = ChaCha20Rng::from_u64(4);
+        let e = BigUint::from_u64(65537);
+        let p = gen_prime_coprime(96, &e, &mut rng);
+        assert!(p.sub(&BigUint::one()).gcd(&e).is_one());
+    }
+}

@@ -1,0 +1,203 @@
+//! Quantile binning (paper §2.3.1): every party transforms its feature
+//! values into bin indices before training, LightGBM-style. The binned
+//! matrix is what histogram construction consumes.
+
+use super::dataset::PartySlice;
+
+/// Per-feature bin specification: `edges[k]` is the inclusive upper bound
+/// of bin `k`; the last bin is unbounded.
+#[derive(Clone, Debug)]
+pub struct FeatureBins {
+    pub edges: Vec<f64>,
+    /// The bin that value 0.0 falls into (for sparse-aware histograms).
+    pub zero_bin: u8,
+}
+
+impl FeatureBins {
+    /// Bin a value by binary search over the edges.
+    #[inline]
+    pub fn bin(&self, v: f64) -> u8 {
+        // first edge ≥ v
+        let mut lo = 0usize;
+        let mut hi = self.edges.len(); // last bin has no edge
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if v <= self.edges[mid] {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo as u8
+    }
+
+    pub fn n_bins(&self) -> usize {
+        self.edges.len() + 1
+    }
+
+    /// Split threshold represented by "≤ bin b goes left".
+    pub fn threshold(&self, b: u8) -> f64 {
+        if (b as usize) < self.edges.len() {
+            self.edges[b as usize]
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// A party's binned matrix: row-major `n × d` of bin indices, plus specs.
+#[derive(Clone, Debug)]
+pub struct BinnedMatrix {
+    pub bins: Vec<u8>,
+    pub n: usize,
+    pub d: usize,
+    pub specs: Vec<FeatureBins>,
+}
+
+impl BinnedMatrix {
+    #[inline]
+    pub fn bin(&self, row: usize, col: usize) -> u8 {
+        self.bins[row * self.d + col]
+    }
+
+    pub fn row(&self, row: usize) -> &[u8] {
+        &self.bins[row * self.d..(row + 1) * self.d]
+    }
+
+    pub fn max_bins(&self) -> usize {
+        self.specs.iter().map(|s| s.n_bins()).max().unwrap_or(1)
+    }
+}
+
+/// Compute quantile bin edges for one column. Deduplicates edges so
+/// constant / low-cardinality features get fewer bins.
+pub fn quantile_edges(values: &[f64], max_bins: usize) -> Vec<f64> {
+    assert!(max_bins >= 2);
+    let mut sorted: Vec<f64> = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let mut edges = Vec::with_capacity(max_bins - 1);
+    for k in 1..max_bins {
+        let idx = (k * n) / max_bins;
+        let e = sorted[idx.min(n - 1)];
+        if edges.last().map(|&last: &f64| e > last).unwrap_or(true) {
+            edges.push(e);
+        }
+    }
+    // Drop a final edge equal to the max so the last bin is non-empty.
+    if edges.last().copied() == sorted.last().copied() {
+        edges.pop();
+    }
+    edges
+}
+
+/// Bin a party slice with `max_bins` quantile bins per feature.
+pub fn bin_party(slice: &PartySlice, max_bins: usize) -> BinnedMatrix {
+    assert!(max_bins <= 256, "bin index stored as u8");
+    let d = slice.d();
+    let specs: Vec<FeatureBins> = (0..d)
+        .map(|c| {
+            let col: Vec<f64> = (0..slice.n).map(|r| slice.value(r, c)).collect();
+            let edges = quantile_edges(&col, max_bins);
+            let mut fb = FeatureBins { edges, zero_bin: 0 };
+            fb.zero_bin = fb.bin(0.0);
+            fb
+        })
+        .collect();
+    let mut bins = vec![0u8; slice.n * d];
+    for r in 0..slice.n {
+        for c in 0..d {
+            bins[r * d + c] = specs[c].bin(slice.value(r, c));
+        }
+    }
+    BinnedMatrix { bins, n: slice.n, d, specs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slice_from(cols: Vec<Vec<f64>>) -> PartySlice {
+        let n = cols[0].len();
+        let d = cols.len();
+        let mut x = Vec::with_capacity(n * d);
+        for r in 0..n {
+            for col in &cols {
+                x.push(col[r]);
+            }
+        }
+        PartySlice { cols: (0..d).collect(), x, n }
+    }
+
+    #[test]
+    fn uniform_values_spread_evenly() {
+        let col: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let edges = quantile_edges(&col, 10);
+        assert_eq!(edges.len(), 9);
+        let fb = FeatureBins { edges, zero_bin: 0 };
+        // count per bin roughly equal
+        let mut counts = vec![0usize; fb.n_bins()];
+        for &v in &col {
+            counts[fb.bin(v) as usize] += 1;
+        }
+        for c in &counts {
+            assert!(*c >= 80 && *c <= 120, "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn constant_feature_single_bin() {
+        let col = vec![5.0; 100];
+        let edges = quantile_edges(&col, 32);
+        assert!(edges.is_empty());
+        let fb = FeatureBins { edges, zero_bin: 0 };
+        assert_eq!(fb.n_bins(), 1);
+        assert_eq!(fb.bin(5.0), 0);
+    }
+
+    #[test]
+    fn binning_monotone() {
+        let col: Vec<f64> = (0..500).map(|i| (i as f64).sin() * 10.0).collect();
+        let edges = quantile_edges(&col, 16);
+        let fb = FeatureBins { edges, zero_bin: 0 };
+        let mut sorted = col.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev = 0u8;
+        for v in sorted {
+            let b = fb.bin(v);
+            assert!(b >= prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn bin_party_shapes_and_zero_bin() {
+        let s = slice_from(vec![
+            (0..100).map(|i| i as f64 - 50.0).collect(), // crosses zero
+            vec![1.0; 100],                              // constant
+        ]);
+        let bm = bin_party(&s, 8);
+        assert_eq!((bm.n, bm.d), (100, 2));
+        assert_eq!(bm.specs[1].n_bins(), 1);
+        // zero_bin of col 0: bin containing 0.0
+        let zb = bm.specs[0].zero_bin;
+        assert_eq!(bm.specs[0].bin(0.0), zb);
+        // thresholds ordered
+        let spec = &bm.specs[0];
+        for w in spec.edges.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn threshold_of_last_bin_is_infinite() {
+        let fb = FeatureBins { edges: vec![1.0, 2.0], zero_bin: 0 };
+        assert_eq!(fb.threshold(0), 1.0);
+        assert_eq!(fb.threshold(2), f64::INFINITY);
+        // values route consistently with thresholds
+        assert_eq!(fb.bin(0.5), 0);
+        assert_eq!(fb.bin(1.0), 0);
+        assert_eq!(fb.bin(1.5), 1);
+        assert_eq!(fb.bin(99.0), 2);
+    }
+}

@@ -1,0 +1,194 @@
+//! Dense feature matrices, labels, and vertical (feature-wise) partitioning
+//! across federation parties (paper §2.3.1).
+
+/// A dense, row-major feature matrix plus labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Row-major `n × d` feature values.
+    pub x: Vec<f64>,
+    pub n: usize,
+    pub d: usize,
+    /// Labels: class index for classification (0.0 / 1.0 for binary).
+    pub y: Vec<f64>,
+    /// Number of classes (2 = binary).
+    pub n_classes: usize,
+    /// Human-readable name (dataset preset).
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f64>, n: usize, d: usize, y: Vec<f64>, n_classes: usize) -> Self {
+        assert_eq!(x.len(), n * d, "x must be n×d");
+        assert_eq!(y.len(), n, "y must have n entries");
+        Self { x, n, d, y, n_classes, name: String::from("unnamed") }
+    }
+
+    #[inline]
+    pub fn value(&self, row: usize, col: usize) -> f64 {
+        self.x[row * self.d + col]
+    }
+
+    pub fn row(&self, row: usize) -> &[f64] {
+        &self.x[row * self.d..(row + 1) * self.d]
+    }
+
+    /// Extract a column (feature) as a vector.
+    pub fn column(&self, col: usize) -> Vec<f64> {
+        (0..self.n).map(|r| self.value(r, col)).collect()
+    }
+}
+
+/// One party's vertical slice: which original columns it owns and its own
+/// row-major submatrix. Only the guest slice carries labels.
+#[derive(Clone, Debug)]
+pub struct PartySlice {
+    /// Original column indices (for provenance / debugging only — parties
+    /// never reveal these to each other).
+    pub cols: Vec<usize>,
+    /// Row-major `n × cols.len()` matrix.
+    pub x: Vec<f64>,
+    pub n: usize,
+}
+
+impl PartySlice {
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.cols.len()
+    }
+
+    #[inline]
+    pub fn value(&self, row: usize, local_col: usize) -> f64 {
+        self.x[row * self.d() + local_col]
+    }
+}
+
+/// A vertically partitioned dataset: the guest (labels + some features)
+/// and one or more hosts (features only). Mirrors Table 2's
+/// guest-features / host-features split.
+#[derive(Clone, Debug)]
+pub struct VerticalSplit {
+    pub guest: PartySlice,
+    pub hosts: Vec<PartySlice>,
+    pub y: Vec<f64>,
+    pub n_classes: usize,
+    pub name: String,
+}
+
+impl VerticalSplit {
+    /// Split `ds` giving the first `guest_d` columns to the guest and the
+    /// remainder split evenly across `n_hosts` hosts (paper: datasets are
+    /// "vertically and equally divided").
+    pub fn split(ds: &Dataset, guest_d: usize, n_hosts: usize) -> Self {
+        assert!(guest_d <= ds.d, "guest_d out of range");
+        assert!(n_hosts >= 1, "need at least one host");
+        let host_total = ds.d - guest_d;
+        assert!(host_total >= n_hosts, "each host needs ≥ 1 feature");
+
+        let extract = |cols: &[usize]| -> PartySlice {
+            let mut x = Vec::with_capacity(ds.n * cols.len());
+            for r in 0..ds.n {
+                for &c in cols {
+                    x.push(ds.value(r, c));
+                }
+            }
+            PartySlice { cols: cols.to_vec(), x, n: ds.n }
+        };
+
+        let guest_cols: Vec<usize> = (0..guest_d).collect();
+        let mut hosts = Vec::with_capacity(n_hosts);
+        let per = host_total / n_hosts;
+        let extra = host_total % n_hosts;
+        let mut cur = guest_d;
+        for hid in 0..n_hosts {
+            let take = per + usize::from(hid < extra);
+            let cols: Vec<usize> = (cur..cur + take).collect();
+            cur += take;
+            hosts.push(extract(&cols));
+        }
+        VerticalSplit {
+            guest: extract(&guest_cols),
+            hosts,
+            y: ds.y.clone(),
+            n_classes: ds.n_classes,
+            name: ds.name.clone(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.guest.n
+    }
+
+    /// Total feature count across parties.
+    pub fn d_total(&self) -> usize {
+        self.guest.d() + self.hosts.iter().map(|h| h.d()).sum::<usize>()
+    }
+
+    /// Reassemble a centralized dataset (for the XGB-style local baseline).
+    pub fn to_centralized(&self) -> Dataset {
+        let d = self.d_total();
+        let mut x = Vec::with_capacity(self.n() * d);
+        for r in 0..self.n() {
+            for c in 0..self.guest.d() {
+                x.push(self.guest.value(r, c));
+            }
+            for h in &self.hosts {
+                for c in 0..h.d() {
+                    x.push(h.value(r, c));
+                }
+            }
+        }
+        let mut ds = Dataset::new(x, self.n(), d, self.y.clone(), self.n_classes);
+        ds.name = self.name.clone();
+        ds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        // 4 rows × 5 cols, value = row*10 + col
+        let n = 4;
+        let d = 5;
+        let x: Vec<f64> = (0..n * d).map(|i| ((i / d) * 10 + i % d) as f64).collect();
+        Dataset::new(x, n, d, vec![0.0, 1.0, 1.0, 0.0], 2)
+    }
+
+    #[test]
+    fn accessors() {
+        let ds = toy();
+        assert_eq!(ds.value(2, 3), 23.0);
+        assert_eq!(ds.row(1), &[10.0, 11.0, 12.0, 13.0, 14.0]);
+        assert_eq!(ds.column(4), vec![4.0, 14.0, 24.0, 34.0]);
+    }
+
+    #[test]
+    fn vertical_split_partitions_columns() {
+        let ds = toy();
+        let vs = VerticalSplit::split(&ds, 2, 2);
+        assert_eq!(vs.guest.cols, vec![0, 1]);
+        assert_eq!(vs.hosts[0].cols, vec![2, 3]);
+        assert_eq!(vs.hosts[1].cols, vec![4]);
+        assert_eq!(vs.d_total(), 5);
+        assert_eq!(vs.guest.value(3, 1), 31.0);
+        assert_eq!(vs.hosts[0].value(2, 0), 22.0);
+        assert_eq!(vs.hosts[1].value(0, 0), 4.0);
+    }
+
+    #[test]
+    fn centralized_roundtrip() {
+        let ds = toy();
+        let vs = VerticalSplit::split(&ds, 2, 2);
+        let back = vs.to_centralized();
+        assert_eq!(back.x, ds.x);
+        assert_eq!(back.y, ds.y);
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_without_features_panics() {
+        let ds = toy();
+        VerticalSplit::split(&ds, 4, 2); // 1 leftover feature for 2 hosts
+    }
+}

@@ -1,0 +1,137 @@
+//! Gradient-based One-Side Sampling (paper §6.1, after LightGBM).
+//!
+//! Keep the `top_rate` fraction of instances with the largest |g|, sample
+//! `other_rate` of the rest uniformly, and amplify the small-gradient
+//! survivors by `(1 − top_rate) / other_rate` so histogram statistics stay
+//! (approximately) unbiased.
+
+use crate::util::rng::Xoshiro256;
+
+/// Result of GOSS: the selected instance ids and the weight multiplier
+/// applied to each selected instance's g and h.
+#[derive(Clone, Debug)]
+pub struct GossSample {
+    pub indices: Vec<u32>,
+    pub weights: Vec<f64>,
+}
+
+/// `magnitude[i]` is |g_i| for binary tasks, ‖g_i‖₁ for multi-output.
+pub fn goss_sample(
+    magnitude: &[f64],
+    top_rate: f64,
+    other_rate: f64,
+    rng: &mut Xoshiro256,
+) -> GossSample {
+    let n = magnitude.len();
+    assert!(top_rate > 0.0 && other_rate >= 0.0 && top_rate + other_rate <= 1.0);
+    let top_k = ((n as f64 * top_rate).round() as usize).clamp(1, n);
+    let other_k = (n as f64 * other_rate).round() as usize;
+
+    // indices sorted by |g| descending (partial selection would do; the
+    // full sort is not the bottleneck next to ciphertext math)
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_by(|&a, &b| {
+        magnitude[b as usize]
+            .partial_cmp(&magnitude[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+
+    let mut indices = Vec::with_capacity(top_k + other_k);
+    let mut weights = Vec::with_capacity(top_k + other_k);
+    indices.extend_from_slice(&order[..top_k]);
+    weights.extend(std::iter::repeat(1.0).take(top_k));
+
+    if other_k > 0 && n > top_k {
+        let amplify = (1.0 - top_rate) / other_rate;
+        // uniform sample without replacement from the tail via partial
+        // Fisher–Yates on the remaining order slice
+        let tail = &mut order[top_k..];
+        let take = other_k.min(tail.len());
+        for i in 0..take {
+            let j = i + rng.next_below(tail.len() - i);
+            tail.swap(i, j);
+            indices.push(tail[i]);
+            weights.push(amplify);
+        }
+    }
+    // Keep instance order ascending: histogram loops stream memory better.
+    let mut perm: Vec<usize> = (0..indices.len()).collect();
+    perm.sort_by_key(|&i| indices[i]);
+    GossSample {
+        indices: perm.iter().map(|&i| indices[i]).collect(),
+        weights: perm.iter().map(|&i| weights[i]).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_all_top_gradients() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let n = 1000;
+        let mag: Vec<f64> = (0..n).map(|i| i as f64 / n as f64).collect();
+        let s = goss_sample(&mag, 0.2, 0.1, &mut rng);
+        assert_eq!(s.indices.len(), 300);
+        // the top 200 by magnitude are ids 800..1000 — all must be present
+        let top: std::collections::HashSet<u32> = (800..1000).collect();
+        let kept: std::collections::HashSet<u32> = s.indices.iter().copied().collect();
+        assert!(top.is_subset(&kept));
+    }
+
+    #[test]
+    fn amplification_factor() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let mag: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let s = goss_sample(&mag, 0.2, 0.1, &mut rng);
+        let amp = (1.0 - 0.2) / 0.1;
+        let n_amp = s.weights.iter().filter(|&&w| (w - amp).abs() < 1e-12).count();
+        let n_one = s.weights.iter().filter(|&&w| w == 1.0).count();
+        assert_eq!(n_amp, 10);
+        assert_eq!(n_one, 20);
+    }
+
+    #[test]
+    fn indices_sorted_and_unique() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let mag: Vec<f64> = (0..5000).map(|_| rng.next_f64()).collect();
+        let s = goss_sample(&mag, 0.2, 0.1, &mut rng);
+        for w in s.indices.windows(2) {
+            assert!(w[0] < w[1], "sorted unique");
+        }
+    }
+
+    #[test]
+    fn sum_preserved_in_expectation() {
+        // Σ w_i·g_i over the sample should approximate Σ g_i.
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let n = 20000;
+        let g: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let mag: Vec<f64> = g.iter().map(|x| x.abs()).collect();
+        let total: f64 = mag.iter().sum();
+        let mut est = 0.0;
+        let trials = 30;
+        for t in 0..trials {
+            let mut r = Xoshiro256::seed_from_u64(100 + t);
+            let s = goss_sample(&mag, 0.2, 0.1, &mut r);
+            est += s
+                .indices
+                .iter()
+                .zip(&s.weights)
+                .map(|(&i, &w)| mag[i as usize] * w)
+                .sum::<f64>();
+        }
+        est /= trials as f64;
+        assert!((est - total).abs() / total < 0.05, "est {est} vs {total}");
+    }
+
+    #[test]
+    fn zero_other_rate() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let mag = vec![1.0, 3.0, 2.0, 0.5];
+        let s = goss_sample(&mag, 0.5, 0.0, &mut rng);
+        assert_eq!(s.indices, vec![1, 2]);
+        assert_eq!(s.weights, vec![1.0, 1.0]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Data handling: dense matrices, vertical partitioning, quantile binning
+//! (sparse-aware), GOSS subsampling, and the synthetic dataset generators
+//! that stand in for the paper's evaluation corpora (DESIGN.md §3).
+
+pub mod binning;
+pub mod dataset;
+pub mod goss;
+pub mod sparse;
+pub mod synthetic;

@@ -1,0 +1,283 @@
+//! Synthetic dataset generators shaped like the paper's evaluation corpora
+//! (Table 2). The real corpora (Susy, Higgs, Epsilon, SVHN, ...) are not
+//! redistributable inside this offline environment, so each preset
+//! reproduces the *shape* that drives the paper's cost model — instance
+//! count, feature count, guest/host split, class count, sparsity — at a
+//! configurable `scale` of the instance count, with learnable structure
+//! (linear + pairwise-interaction logits) so model-quality comparisons
+//! (Tables 3–5) remain meaningful. See DESIGN.md §3 (substitutions).
+
+use super::dataset::{Dataset, VerticalSplit};
+use crate::util::pool::parallel_for_chunks;
+use crate::util::rng::Xoshiro256;
+
+/// Shape specification for a synthetic dataset.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    pub name: String,
+    pub n: usize,
+    pub d: usize,
+    pub guest_d: usize,
+    pub n_classes: usize,
+    /// Fraction of entries forced to exactly 0.0 (sparse datasets).
+    pub sparsity: f64,
+    /// Fraction of features that carry signal.
+    pub informative: f64,
+}
+
+impl SyntheticSpec {
+    fn preset(
+        name: &str,
+        n: usize,
+        d: usize,
+        guest_d: usize,
+        n_classes: usize,
+        sparsity: f64,
+        scale: f64,
+    ) -> Self {
+        SyntheticSpec {
+            name: name.to_string(),
+            n: ((n as f64 * scale).round() as usize).max(64),
+            d,
+            guest_d,
+            n_classes,
+            sparsity,
+            informative: 0.4,
+        }
+    }
+
+    /// Give-credit: 150,000 × 10 (5 guest / 5 host), binary.
+    pub fn give_credit(scale: f64) -> Self {
+        Self::preset("give-credit", 150_000, 10, 5, 2, 0.0, scale)
+    }
+
+    /// Susy: 5,000,000 × 18 (4 guest / 14 host), binary.
+    pub fn susy(scale: f64) -> Self {
+        Self::preset("susy", 5_000_000, 18, 4, 2, 0.0, scale)
+    }
+
+    /// Higgs: 11,000,000 × 28 (13 guest / 15 host), binary.
+    pub fn higgs(scale: f64) -> Self {
+        Self::preset("higgs", 11_000_000, 28, 13, 2, 0.0, scale)
+    }
+
+    /// Epsilon: 400,000 × 2000 (1000/1000), binary, high-dimensional.
+    pub fn epsilon(scale: f64) -> Self {
+        Self::preset("epsilon", 400_000, 2000, 1000, 2, 0.0, scale)
+    }
+
+    /// Sensorless: 58,509 × 48 (24/24), 11 classes.
+    pub fn sensorless(scale: f64) -> Self {
+        Self::preset("sensorless", 58_509, 48, 24, 11, 0.0, scale)
+    }
+
+    /// Covtype: 581,012 × 54 (27/27), 7 classes, mostly binary indicators.
+    pub fn covtype(scale: f64) -> Self {
+        Self::preset("covtype", 581_012, 54, 27, 7, 0.6, scale)
+    }
+
+    /// SVHN: 99,289 × 3072 (1536/1536), 10 classes, high-dimensional.
+    pub fn svhn(scale: f64) -> Self {
+        Self::preset("svhn", 99_289, 3072, 1536, 10, 0.0, scale)
+    }
+
+    /// All four binary presets of Figure 7/8 at the given scale.
+    pub fn binary_suite(scale: f64) -> Vec<Self> {
+        vec![
+            Self::give_credit(scale),
+            Self::susy(scale),
+            Self::higgs(scale),
+            Self::epsilon(scale),
+        ]
+    }
+
+    /// The three multi-class presets of Figures 9–10 / Table 5.
+    pub fn multiclass_suite(scale: f64) -> Vec<Self> {
+        vec![Self::sensorless(scale), Self::covtype(scale), Self::svhn(scale)]
+    }
+
+    /// Generate the dataset. Deterministic in (`spec`, `seed`).
+    pub fn generate(&self, seed: u64) -> Dataset {
+        let k = self.n_classes;
+        let d = self.d;
+        let n = self.n;
+        let n_inf = ((d as f64 * self.informative).round() as usize).clamp(1, d);
+
+        // Class weight matrices over the informative features; informative
+        // features are strided across the column range so both guest and
+        // host sides carry signal.
+        let mut wrng = Xoshiro256::seed_from_u64(seed ^ WEIGHT_SEED_SALT);
+        let stride = (d / n_inf).max(1);
+        let inf_cols: Vec<usize> = (0..n_inf).map(|i| (i * stride) % d).collect();
+        let w: Vec<f64> = (0..k * n_inf).map(|_| wrng.next_gaussian()).collect();
+        // pairwise interactions between informative features
+        let n_pairs = (n_inf / 2).max(1);
+        let pairs: Vec<(usize, usize, f64)> = (0..n_pairs)
+            .map(|_| {
+                let a = inf_cols[wrng.next_below(n_inf)];
+                let b = inf_cols[wrng.next_below(n_inf)];
+                (a, b, wrng.next_gaussian())
+            })
+            .collect();
+
+        let mut x = vec![0.0f64; n * d];
+        let mut y = vec![0.0f64; n];
+        let xp = AssertSend(x.as_mut_ptr());
+        let yp = AssertSend(y.as_mut_ptr());
+        let spec = self;
+        parallel_for_chunks(n, move |start, end| {
+            let xp = xp;
+            let yp = yp;
+            let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x5EED ^ start as u64);
+            let mut logits = vec![0.0f64; k];
+            for r in start..end {
+                // row features
+                let row = unsafe { std::slice::from_raw_parts_mut(xp.0.add(r * d), d) };
+                for c in row.iter_mut() {
+                    *c = rng.next_gaussian();
+                }
+                if spec.sparsity > 0.0 {
+                    for c in row.iter_mut() {
+                        if rng.next_f64() < spec.sparsity {
+                            *c = 0.0;
+                        }
+                    }
+                }
+                // logits
+                let scale = 1.5 / (n_inf as f64).sqrt();
+                for (cls, l) in logits.iter_mut().enumerate() {
+                    let mut acc = 0.0;
+                    for (i, &col) in inf_cols.iter().enumerate() {
+                        acc += w[cls * n_inf + i] * row[col];
+                    }
+                    *l = acc * scale;
+                }
+                let int_scale = 1.0 / (pairs.len() as f64).sqrt();
+                for &(a, b, coef) in &pairs {
+                    let v = coef * row[a] * row[b] * int_scale;
+                    // interactions shift classes alternately
+                    for (cls, l) in logits.iter_mut().enumerate() {
+                        if cls % 2 == 0 {
+                            *l += v;
+                        } else {
+                            *l -= v;
+                        }
+                    }
+                }
+                // label: sample from softmax (binary: sigmoid of margin)
+                let label = if k == 2 {
+                    let margin = logits[1] - logits[0] + 0.5 * rng.next_gaussian();
+                    f64::from(margin > 0.0)
+                } else {
+                    let noise = 0.5;
+                    let mut best = 0usize;
+                    let mut best_v = f64::NEG_INFINITY;
+                    for (cls, &l) in logits.iter().enumerate() {
+                        let v = l + noise * rng.next_gaussian();
+                        if v > best_v {
+                            best_v = v;
+                            best = cls;
+                        }
+                    }
+                    best as f64
+                };
+                unsafe {
+                    *yp.0.add(r) = label;
+                }
+            }
+        });
+        let mut ds = Dataset::new(x, n, d, y, k);
+        ds.name = self.name.clone();
+        ds
+    }
+
+    /// Generate + vertically split with the preset's guest/host division.
+    pub fn generate_vertical(&self, seed: u64, n_hosts: usize) -> VerticalSplit {
+        let ds = self.generate(seed);
+        VerticalSplit::split(&ds, self.guest_d, n_hosts)
+    }
+}
+
+/// Salt separating the weight-matrix stream from the row streams.
+const WEIGHT_SEED_SALT: u64 = 0xA0E1_67__5EED_u64;
+
+struct AssertSend<T>(*mut T);
+unsafe impl<T> Send for AssertSend<T> {}
+unsafe impl<T> Sync for AssertSend<T> {}
+impl<T> Clone for AssertSend<T> {
+    fn clone(&self) -> Self {
+        AssertSend(self.0)
+    }
+}
+impl<T> Copy for AssertSend<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let spec = SyntheticSpec::give_credit(0.005);
+        let a = spec.generate(42);
+        let b = spec.generate(42);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = spec.generate(43);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn shapes_match_table2() {
+        let spec = SyntheticSpec::higgs(0.001);
+        let ds = spec.generate(1);
+        assert_eq!(ds.d, 28);
+        assert_eq!(ds.n, 11_000);
+        assert_eq!(ds.n_classes, 2);
+        let vs = spec.generate_vertical(1, 1);
+        assert_eq!(vs.guest.d(), 13);
+        assert_eq!(vs.hosts[0].d(), 15);
+    }
+
+    #[test]
+    fn binary_labels_balanced_enough() {
+        let ds = SyntheticSpec::susy(0.002).generate(7);
+        let pos: f64 = ds.y.iter().sum::<f64>() / ds.n as f64;
+        assert!(pos > 0.25 && pos < 0.75, "positive rate {pos}");
+    }
+
+    #[test]
+    fn multiclass_all_classes_present() {
+        let ds = SyntheticSpec::sensorless(0.02).generate(3);
+        let mut seen = vec![false; ds.n_classes];
+        for &l in &ds.y {
+            seen[l as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all 11 classes present");
+    }
+
+    #[test]
+    fn covtype_is_sparse() {
+        let ds = SyntheticSpec::covtype(0.002).generate(5);
+        let zeros = ds.x.iter().filter(|&&v| v == 0.0).count();
+        let frac = zeros as f64 / ds.x.len() as f64;
+        assert!(frac > 0.5, "sparsity {frac}");
+    }
+
+    #[test]
+    fn signal_exists() {
+        // A trivial 1-feature threshold on an informative column should
+        // beat chance on the binary presets.
+        let ds = SyntheticSpec::give_credit(0.01).generate(11);
+        // column 0 is informative (stride starts at 0)
+        let mut correct = 0usize;
+        for r in 0..ds.n {
+            let pred = f64::from(ds.value(r, 0) > 0.0);
+            if (pred - ds.y[r]).abs() < 0.5 {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.n as f64;
+        let acc = acc.max(1.0 - acc);
+        assert!(acc > 0.52, "single-feature acc {acc}");
+    }
+}

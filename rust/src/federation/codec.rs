@@ -1,0 +1,160 @@
+//! Statistic codecs: how per-instance gradient/hessian statistics become
+//! plaintext integers (and back).
+//!
+//! - [`StatCodec::Packed`] — GH packing (paper Alg. 3): one plaintext per
+//!   instance. SecureBoost+ default for binary tasks.
+//! - [`StatCodec::Separate`] — the SecureBoost (FATE-1.5) baseline: g and
+//!   h encoded into *two* separate plaintexts per instance.
+//! - [`StatCodec::Multi`] — multi-class packing (Alg. 7): ⌈k/η_c⌉
+//!   plaintexts per instance for SecureBoost-MO.
+
+use crate::crypto::bigint::BigUint;
+use crate::crypto::packing::{GhPacker, MoPacker};
+
+#[derive(Clone, Debug)]
+pub enum StatCodec {
+    Packed(GhPacker),
+    Separate(GhPacker),
+    Multi(MoPacker),
+}
+
+impl StatCodec {
+    /// Plaintexts (→ ciphertexts) per instance.
+    pub fn n_k(&self) -> usize {
+        match self {
+            StatCodec::Packed(_) => 1,
+            StatCodec::Separate(_) => 2,
+            StatCodec::Multi(p) => p.n_k,
+        }
+    }
+
+    /// Statistic width (1 for scalar g/h, k for multi-output).
+    pub fn width(&self) -> usize {
+        match self {
+            StatCodec::Packed(_) | StatCodec::Separate(_) => 1,
+            StatCodec::Multi(p) => p.k,
+        }
+    }
+
+    /// Bits per packed statistic — the cipher-compression unit. Only the
+    /// packed scalar codec is compressible (paper: compression disabled
+    /// for MO; the baseline doesn't compress at all).
+    pub fn compressible_b_gh(&self) -> Option<usize> {
+        match self {
+            StatCodec::Packed(p) => Some(p.b_gh),
+            _ => None,
+        }
+    }
+
+    /// Encode one instance's statistics (`g_row`/`h_row` have `width()`
+    /// entries) into `n_k()` plaintexts.
+    pub fn encode_instance(&self, g_row: &[f64], h_row: &[f64]) -> Vec<BigUint> {
+        match self {
+            StatCodec::Packed(p) => vec![p.pack(g_row[0], h_row[0])],
+            StatCodec::Separate(p) => vec![
+                p.enc.encode(g_row[0] + p.g_off),
+                p.enc.encode(h_row[0].max(0.0)),
+            ],
+            StatCodec::Multi(p) => p.pack_instance(g_row, h_row),
+        }
+    }
+
+    /// Encode a whole epoch's statistics; returns a flat vector with
+    /// `n_k()` plaintexts per instance, instance-major.
+    pub fn encode_all(&self, g: &[f64], h: &[f64], n: usize) -> Vec<BigUint> {
+        let w = self.width();
+        debug_assert_eq!(g.len(), n * w);
+        let mut out = Vec::with_capacity(n * self.n_k());
+        for i in 0..n {
+            out.extend(self.encode_instance(&g[i * w..(i + 1) * w], &h[i * w..(i + 1) * w]));
+        }
+        out
+    }
+
+    /// Decode an aggregate over `count` instances from `n_k()` decrypted
+    /// plaintext sums. Returns (Σg, Σh), each `width()` long.
+    pub fn decode_sum(&self, plains: &[BigUint], count: u64) -> (Vec<f64>, Vec<f64>) {
+        debug_assert_eq!(plains.len(), self.n_k());
+        match self {
+            StatCodec::Packed(p) => {
+                let (g, h) = p.unpack_sum(&plains[0], count);
+                (vec![g], vec![h])
+            }
+            StatCodec::Separate(p) => {
+                let g = p.enc.decode(&plains[0]) - p.g_off * count as f64;
+                let h = p.enc.decode(&plains[1]);
+                (vec![g], vec![h])
+            }
+            StatCodec::Multi(p) => p.unpack_sums(plains, count),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn sum_plains(rows: &[Vec<BigUint>]) -> Vec<BigUint> {
+        let n_k = rows[0].len();
+        let mut acc = vec![BigUint::zero(); n_k];
+        for r in rows {
+            for (a, v) in acc.iter_mut().zip(r) {
+                *a = a.add(v);
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn packed_and_separate_agree() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let n = 500;
+        let g: Vec<f64> = (0..n).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+        let h: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let packer = GhPacker::plan(&g, &h, n as u64, 53);
+        for codec in [StatCodec::Packed(packer.clone()), StatCodec::Separate(packer.clone())] {
+            let rows: Vec<Vec<BigUint>> = (0..n)
+                .map(|i| codec.encode_instance(&g[i..=i], &h[i..=i]))
+                .collect();
+            let total = sum_plains(&rows);
+            let (gs, hs) = codec.decode_sum(&total, n as u64);
+            assert!((gs[0] - g.iter().sum::<f64>()).abs() < 1e-6);
+            assert!((hs[0] - h.iter().sum::<f64>()).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn multi_codec_roundtrip() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let (n, k) = (200, 5);
+        let g: Vec<f64> = (0..n * k).map(|_| rng.next_f64() - 0.5).collect();
+        let h: Vec<f64> = (0..n * k).map(|_| rng.next_f64() * 0.25).collect();
+        let mo = MoPacker::plan(&g, &h, k, n as u64, 53, 1023);
+        let codec = StatCodec::Multi(mo);
+        assert_eq!(codec.width(), k);
+        let flat = codec.encode_all(&g, &h, n);
+        assert_eq!(flat.len(), n * codec.n_k());
+        // aggregate
+        let mut acc = vec![BigUint::zero(); codec.n_k()];
+        for i in 0..n {
+            for j in 0..codec.n_k() {
+                acc[j] = acc[j].add(&flat[i * codec.n_k() + j]);
+            }
+        }
+        let (gs, hs) = codec.decode_sum(&acc, n as u64);
+        for j in 0..k {
+            let gt: f64 = (0..n).map(|i| g[i * k + j]).sum();
+            let ht: f64 = (0..n).map(|i| h[i * k + j]).sum();
+            assert!((gs[j] - gt).abs() < 1e-6);
+            assert!((hs[j] - ht).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn compressibility() {
+        let packer = GhPacker::plan_logistic(100, 53);
+        assert!(StatCodec::Packed(packer.clone()).compressible_b_gh().is_some());
+        assert!(StatCodec::Separate(packer).compressible_b_gh().is_none());
+    }
+}

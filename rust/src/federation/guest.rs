@@ -1,0 +1,823 @@
+//! The guest party: owns labels and the secret key, drives boosting.
+//!
+//! Per tree (paper §4.5 pipeline):
+//! 1. compute g/h from current predictions (via the [`ComputeEngine`] —
+//!    the AOT JAX/Pallas path or the pure-Rust oracle),
+//! 2. GOSS-sample, pack (Alg. 3 / Alg. 7) and encrypt,
+//! 3. grow layer-wise: hosts return compressed split statistics
+//!    (Alg. 5), the guest decrypts (Alg. 6), evaluates gains (Alg. 2)
+//!    against its own local candidates, picks global winners, applies
+//!    splits and synchronizes assignments,
+//! 4. after the tree completes, routes the *full* population through it
+//!    to update predictions (host-owned nodes are resolved with
+//!    `ApplySplit` round-trips, as in FATE's distributed inference).
+
+use crate::config::{ModeKind, TrainConfig};
+use crate::crypto::cipher::{CipherSuite, Ct};
+use crate::crypto::compress::{decompress, CompressPlan};
+use crate::crypto::packing::{GhPacker, MoPacker};
+use crate::data::binning::{bin_party, BinnedMatrix};
+use crate::data::dataset::VerticalSplit;
+use crate::data::goss::goss_sample;
+use crate::data::sparse::SparseBinned;
+use crate::federation::codec::StatCodec;
+use crate::federation::message::{CandidateMask, HistTask, NodeStats, ToGuest, ToHost};
+use crate::federation::transport::GuestLink;
+use crate::metrics::{accuracy_multiclass, auc, celoss_multiclass, logloss_binary};
+use crate::runtime::engine::ComputeEngine;
+use crate::tree::histogram::PlainHistogram;
+use crate::tree::node::{SplitRef, Tree};
+use crate::tree::split::{best_local_split, candidate_gain, LocalSplit};
+use crate::util::rng::{ChaCha20Rng, Xoshiro256};
+use crate::util::timer::PhaseTimer;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A candidate split for one node: either the guest's local best or a
+/// decrypted host statistic.
+enum Candidate {
+    Guest(LocalSplit),
+    Host { party: u8, handle: u32, gain: f64, left_g: Vec<f64>, left_h: Vec<f64>, left_count: u32 },
+}
+
+impl Candidate {
+    fn gain(&self) -> f64 {
+        match self {
+            Candidate::Guest(s) => s.gain,
+            Candidate::Host { gain, .. } => *gain,
+        }
+    }
+}
+
+/// Everything the guest accumulates during a training run.
+pub struct GuestOutcome {
+    pub trees: Vec<Tree>,
+    /// Class tag per tree (0 for binary / multi-output trees).
+    pub tree_classes: Vec<usize>,
+    pub tree_seconds: Vec<f64>,
+    pub preds: Vec<f64>,
+    pub loss_curve: Vec<f64>,
+    pub train_metric: f64,
+    pub timer: PhaseTimer,
+}
+
+/// Guest training engine.
+pub struct GuestParty<'a> {
+    vs: &'a VerticalSplit,
+    cfg: &'a TrainConfig,
+    engine: &'a dyn ComputeEngine,
+    links: &'a [GuestLink],
+    bm: BinnedMatrix,
+    sb: Option<SparseBinned>,
+    suite: CipherSuite,
+    rng: Xoshiro256,
+    crng: ChaCha20Rng,
+    /// Fixed statistic layout for the whole run (must match what Setup
+    /// told the hosts — bit widths are part of the protocol, paper §4.5).
+    codec: StatCodec,
+    compress: Option<CompressPlan>,
+    pub timer: PhaseTimer,
+}
+
+impl<'a> GuestParty<'a> {
+    pub fn new(
+        vs: &'a VerticalSplit,
+        cfg: &'a TrainConfig,
+        engine: &'a dyn ComputeEngine,
+        links: &'a [GuestLink],
+        suite: CipherSuite,
+    ) -> Self {
+        let bm = bin_party(&vs.guest, cfg.max_bin);
+        // sparse view only when the data is actually sparse (density gate)
+        let sb = crate::data::sparse::maybe_sparse(&vs.guest, &bm, cfg.sparse_optimization);
+        let (codec, compress) = plan_codec(vs, cfg, &suite);
+        GuestParty {
+            vs,
+            cfg,
+            engine,
+            links,
+            bm,
+            sb,
+            suite,
+            rng: Xoshiro256::seed_from_u64(cfg.seed),
+            crng: ChaCha20Rng::from_u64(cfg.seed ^ 0xC1FE),
+            codec,
+            compress,
+            timer: PhaseTimer::new(),
+        }
+    }
+
+    /// Width of the statistic vectors (1 binary / one-vs-all, k for MO).
+    fn width(&self) -> usize {
+        match self.cfg.mode {
+            ModeKind::MultiOutput => self.vs.n_classes,
+            _ => 1,
+        }
+    }
+
+    /// Run the whole boosting loop. Hosts must already be set up with
+    /// [`Self::setup_hosts`].
+    pub fn train(&mut self) -> GuestOutcome {
+        let n = self.vs.n();
+        let k = self.vs.n_classes;
+        let binary = k == 2;
+        let mo = matches!(self.cfg.mode, ModeKind::MultiOutput);
+        let pred_width = if binary { 1 } else { k };
+        let mut preds = vec![0.0f64; n * pred_width];
+        let mut trees: Vec<Tree> = Vec::new();
+        let mut tree_classes: Vec<usize> = Vec::new();
+        let mut tree_seconds = Vec::new();
+        let mut loss_curve = Vec::new();
+
+        for epoch in 0..self.cfg.epochs {
+            // -------- g/h via the compute engine (L2/L1 artifacts) -----
+            let t_gh = Instant::now();
+            let (g, h) = if binary {
+                self.engine.gh_binary(&self.vs.y, &preds)
+            } else {
+                self.engine.gh_softmax(&self.vs.y, &preds, k)
+            };
+            self.timer.add("guest.gh_compute", t_gh.elapsed());
+
+            if mo || binary {
+                let t0 = Instant::now();
+                let tree = self.build_one_tree(trees.len() as u32, &g, &h, self.width());
+                tree_seconds.push(t0.elapsed().as_secs_f64());
+                self.route_and_update(&tree, &mut preds, 0, pred_width);
+                trees.push(tree);
+                tree_classes.push(0);
+            } else {
+                // traditional multi-class: one tree per class per epoch
+                for cls in 0..k {
+                    let gc: Vec<f64> = (0..n).map(|i| g[i * k + cls]).collect();
+                    let hc: Vec<f64> = (0..n).map(|i| h[i * k + cls]).collect();
+                    let t0 = Instant::now();
+                    let tree = self.build_one_tree(trees.len() as u32, &gc, &hc, 1);
+                    tree_seconds.push(t0.elapsed().as_secs_f64());
+                    self.route_and_update(&tree, &mut preds, cls, pred_width);
+                    trees.push(tree);
+                    tree_classes.push(cls);
+                }
+            }
+
+            let loss = if binary {
+                logloss_binary(&self.vs.y, &preds)
+            } else {
+                celoss_multiclass(&self.vs.y, &preds, k)
+            };
+            loss_curve.push(loss);
+            if self.cfg.verbose {
+                eprintln!(
+                    "[sbp] epoch {epoch:>3} loss {loss:.5} trees {}",
+                    trees.len()
+                );
+            }
+        }
+
+        let train_metric = if binary {
+            auc(&self.vs.y, &preds)
+        } else {
+            accuracy_multiclass(&self.vs.y, &preds, k)
+        };
+        GuestOutcome {
+            trees,
+            tree_classes,
+            tree_seconds,
+            preds,
+            loss_curve,
+            train_metric,
+            timer: self.timer.clone(),
+        }
+    }
+
+    /// Which party builds tree `t` in mix mode (round-robin, guest first).
+    fn mix_owner(&self, tree_id: u32) -> Option<u8> {
+        match self.cfg.mode {
+            ModeKind::Mix { trees_per_party } => {
+                let parties = 1 + self.links.len();
+                let slot = (tree_id as usize / trees_per_party.max(1)) % parties;
+                if slot == 0 {
+                    None // guest
+                } else {
+                    Some((slot - 1) as u8)
+                }
+            }
+            _ => None,
+        }
+    }
+
+    /// Candidate mask for a layer at `depth` under the current mode.
+    fn layer_mask(&self, tree_id: u32, depth: u8) -> CandidateMask {
+        match self.cfg.mode {
+            ModeKind::Default | ModeKind::MultiOutput => CandidateMask::All,
+            ModeKind::Mix { .. } => match self.mix_owner(tree_id) {
+                None => CandidateMask::GuestOnly,
+                Some(h) => CandidateMask::HostOnly(h),
+            },
+            ModeKind::Layered { host_depth, .. } => {
+                if depth < host_depth {
+                    CandidateMask::HostsOnly
+                } else {
+                    CandidateMask::GuestOnly
+                }
+            }
+        }
+    }
+
+    /// Does the protocol need any host participation for this tree?
+    fn tree_uses_hosts(&self, tree_id: u32) -> bool {
+        !matches!(self.layer_mask(tree_id, 0), CandidateMask::GuestOnly)
+            || matches!(self.cfg.mode, ModeKind::Layered { .. })
+    }
+
+    fn hosts_for(&self, mask: CandidateMask) -> Vec<usize> {
+        match mask {
+            CandidateMask::All | CandidateMask::HostsOnly => (0..self.links.len()).collect(),
+            CandidateMask::HostOnly(h) => vec![h as usize],
+            CandidateMask::GuestOnly => Vec::new(),
+        }
+    }
+
+    /// Build one federated tree on (possibly width-k) statistics.
+    fn build_one_tree(&mut self, tree_id: u32, g: &[f64], h: &[f64], w: usize) -> Tree {
+        let n = self.vs.n();
+        // -------- GOSS sampling + weight amplification ------------------
+        // GOSS is skipped for multi-output trees: class-summed gradient
+        // magnitudes are near-uniform in early rounds, so the sample is
+        // arbitrary and the (1−a)/b amplification destabilizes the
+        // vector-valued leaves (measured: sensorless diverges, loss
+        // 2.3 → 65; see EXPERIMENTS.md §Fig9/10 notes).
+        let goss_cfg = if w > 1 { None } else { self.cfg.goss };
+        let (instances, gs, hs): (Vec<u32>, Vec<f64>, Vec<f64>) = match &goss_cfg {
+            Some(gc) => {
+                let mag: Vec<f64> = (0..n)
+                    .map(|i| (0..w).map(|j| g[i * w + j].abs()).sum())
+                    .collect();
+                let s = goss_sample(&mag, gc.top_rate, gc.other_rate, &mut self.rng);
+                let mut gv = g.to_vec();
+                let mut hv = h.to_vec();
+                for (&i, &wt) in s.indices.iter().zip(&s.weights) {
+                    if wt != 1.0 {
+                        for j in 0..w {
+                            gv[i as usize * w + j] *= wt;
+                            hv[i as usize * w + j] *= wt;
+                        }
+                    }
+                }
+                (s.indices, gv, hv)
+            }
+            None => ((0..n as u32).collect(), g.to_vec(), h.to_vec()),
+        };
+
+        // entirely-local guest tree (mix mode)
+        if !self.tree_uses_hosts(tree_id) {
+            let grow = crate::boosting::gbdt::GrowParams::from_config(self.cfg);
+            let t0 = Instant::now();
+            let tree = crate::boosting::gbdt::grow_tree_plain(
+                &self.bm,
+                self.sb.as_ref(),
+                &instances,
+                &gs,
+                &hs,
+                w,
+                &grow,
+            );
+            self.timer.add("guest.local_tree", t0.elapsed());
+            return tree;
+        }
+
+        // -------- pack + encrypt + ship to hosts ------------------------
+        let codec = self.codec.clone();
+        let sampled: Vec<u32> = instances.clone();
+        let t_pack = Instant::now();
+        let (packed_cts, node_total) = {
+            // SAMPLE-ORDER packing: only the GOSS-sampled instances are
+            // encoded and encrypted (row s of `packed` ↔ instances[s]);
+            // hosts rebuild the id→row map from StartTree's instance list.
+            let n_k = codec.n_k();
+            let mut plains = Vec::with_capacity(sampled.len() * n_k);
+            for &i in &sampled {
+                let i = i as usize;
+                plains.extend(
+                    codec.encode_instance(&gs[i * w..(i + 1) * w], &hs[i * w..(i + 1) * w]),
+                );
+            }
+            let cts = self.suite.encrypt_batch(&plains, &mut self.crng);
+            // node totals over the sample (sparse zero-bin recovery)
+            let mut tot = vec![self.suite.zero_ct(); n_k];
+            for row in 0..sampled.len() {
+                for j in 0..n_k {
+                    self.suite.add_assign(&mut tot[j], &cts[row * n_k + j]);
+                }
+            }
+            (cts, tot)
+        };
+        self.timer.add("guest.pack_encrypt", t_pack.elapsed());
+        let packed = Arc::new(packed_cts);
+        let instances_arc = Arc::new(sampled);
+
+        let engaged = self.hosts_for(match self.layer_mask(tree_id, 0) {
+            CandidateMask::GuestOnly => CandidateMask::HostsOnly, // layered: hosts engaged later
+            m => m,
+        });
+        for &hidx in &engaged {
+            self.links[hidx].send(ToHost::StartTree {
+                tree_id,
+                instances: instances_arc.clone(),
+                packed: packed.clone(),
+                node_total: node_total.clone(),
+            });
+        }
+        for &hidx in &engaged {
+            let _ = self.links[hidx].recv(); // Ack
+        }
+
+        // -------- layer-wise growth -------------------------------------
+        let mut tree = Tree::new(w);
+        let mut members: HashMap<u32, Vec<u32>> = HashMap::new();
+        members.insert(0, instances_arc.as_ref().clone());
+        let (rg, rh) = node_totals(&instances, &gs, &hs, w);
+        tree.nodes[0].sum_g = rg;
+        tree.nodes[0].sum_h = rh;
+        tree.nodes[0].n_samples = instances.len() as u32;
+
+        let mut layer: Vec<u32> = vec![0];
+        let mut guest_hist_cache: HashMap<u32, PlainHistogram> = HashMap::new();
+
+        for depth in 0..self.cfg.max_depth {
+            if layer.is_empty() {
+                break;
+            }
+            let mask = self.layer_mask(tree_id, depth);
+            let hosts = self.hosts_for(mask);
+            let guest_active = matches!(mask, CandidateMask::All | CandidateMask::GuestOnly);
+
+            // ---- plan tasks: smaller sibling direct, larger subtracted.
+            // Ciphertext subtraction costs one negation (~inverse) per
+            // (feature, bin) cell, so it only beats a direct rebuild when
+            // the sibling holds > n_bins × (c_neg/c_add) instances — the
+            // planner is cost-aware (DESIGN.md §Perf iteration 1). At the
+            // paper's million-row scale this always chooses subtraction.
+            let host_threshold =
+                self.cfg.max_bin * self.suite.negate_cost_ratio();
+            let host_tasks = self.plan_tasks(&tree, &layer, &members, host_threshold);
+            // Plaintext subtraction is virtually free — always on for the
+            // guest's own f64 histograms.
+            let tasks = self.plan_tasks(&tree, &layer, &members, 0);
+
+            // ---- dispatch to hosts
+            for &hidx in &hosts {
+                self.links[hidx]
+                    .send(ToHost::BuildLayer { tree_id, tasks: host_tasks.clone() });
+            }
+
+            // ---- guest's own histograms + local candidates (overlapped
+            //      with host work in real deployments; sequential here —
+            //      wall time attribution stays per-party via timers)
+            let mut candidates: HashMap<u32, Candidate> = HashMap::new();
+            if guest_active {
+                let t_local = Instant::now();
+                {
+                    let mut new_cache = HashMap::new();
+                    for task in &tasks {
+                        let node = task.node();
+                        let hist = match task {
+                            HistTask::Direct { .. } => self.build_guest_hist(
+                                &members[&node],
+                                &gs,
+                                &hs,
+                                w,
+                                &tree.nodes[node as usize],
+                            ),
+                            HistTask::Subtract { parent, sibling, .. } => {
+                                // In layered mode the guest joins mid-tree:
+                                // no cached parent yet → build directly.
+                                match (guest_hist_cache.get(parent), new_cache.get(sibling)) {
+                                    (Some(p), Some(s)) => {
+                                        let s: &PlainHistogram = s;
+                                        p.subtract(s)
+                                    }
+                                    _ => self.build_guest_hist(
+                                        &members[&node],
+                                        &gs,
+                                        &hs,
+                                        w,
+                                        &tree.nodes[node as usize],
+                                    ),
+                                }
+                            }
+                        };
+                        new_cache.insert(node, hist);
+                    }
+                    for (&node, hist) in &new_cache {
+                        let nd = &tree.nodes[node as usize];
+                        let mut cum = hist.clone();
+                        cum.cumsum();
+                        if let Some(s) = best_local_split(
+                            &cum,
+                            &nd.sum_g,
+                            &nd.sum_h,
+                            nd.n_samples,
+                            &self.cfg.gain,
+                        ) {
+                            candidates.insert(node, Candidate::Guest(s));
+                        }
+                    }
+                    guest_hist_cache = new_cache;
+                }
+                self.timer.add("guest.local_hist+split", t_local.elapsed());
+            }
+
+            // ---- receive + decrypt host statistics, keep global best
+            for &hidx in &hosts {
+                let msg = self.links[hidx].recv();
+                let ToGuest::LayerStats { nodes, .. } = msg else {
+                    panic!("expected LayerStats")
+                };
+                let t_dec = Instant::now();
+                {
+                    for (node, stats) in nodes {
+                        let nd = &tree.nodes[node as usize];
+                        let decoded = self.decode_stats(&codec, stats);
+                        for (handle, count, gsum, hsum) in decoded {
+                            if let Some(gain) = candidate_gain(
+                                &gsum,
+                                &hsum,
+                                count,
+                                &nd.sum_g,
+                                &nd.sum_h,
+                                nd.n_samples,
+                                &self.cfg.gain,
+                            ) {
+                                let better = candidates
+                                    .get(&node)
+                                    .map(|c| gain > c.gain())
+                                    .unwrap_or(true);
+                                if better {
+                                    candidates.insert(
+                                        node,
+                                        Candidate::Host {
+                                            party: hidx as u8,
+                                            handle,
+                                            gain,
+                                            left_g: gsum,
+                                            left_h: hsum,
+                                            left_count: count,
+                                        },
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+                self.timer.add("guest.decrypt+gain", t_dec.elapsed());
+            }
+
+            // ---- apply winners
+            let mut next_layer = Vec::new();
+            for node in layer {
+                let Some(cand) = candidates.remove(&node) else { continue };
+                let insts = members.remove(&node).expect("members tracked");
+                let (split_ref, left_ids, lg, lh, lc, gain) = match cand {
+                    Candidate::Guest(s) => {
+                        let thr = self.bm.specs[s.feature as usize].threshold(s.bin);
+                        let left: Vec<u32> = insts
+                            .iter()
+                            .copied()
+                            .filter(|&i| {
+                                self.bm.bin(i as usize, s.feature as usize) <= s.bin
+                            })
+                            .collect();
+                        (
+                            SplitRef::Guest { feature: s.feature, bin: s.bin, threshold: thr },
+                            left,
+                            s.left_g,
+                            s.left_h,
+                            s.left_count,
+                            s.gain,
+                        )
+                    }
+                    Candidate::Host { party, handle, gain, left_g, left_h, left_count } => {
+                        let link = &self.links[party as usize];
+                        link.send(ToHost::ApplySplit {
+                            tree_id,
+                            node,
+                            handle,
+                            instances: Arc::new(insts.clone()),
+                        });
+                        let ToGuest::LeftInstances { left, .. } = link.recv() else {
+                            panic!("expected LeftInstances")
+                        };
+                        (
+                            SplitRef::Host { party, handle },
+                            left,
+                            left_g,
+                            left_h,
+                            left_count,
+                            gain,
+                        )
+                    }
+                };
+                let (lid, rid) = tree.split_node(node, split_ref);
+                tree.nodes[node as usize].gain = gain;
+                // partition members
+                let leftset: std::collections::HashSet<u32> = left_ids.iter().copied().collect();
+                let (li, ri): (Vec<u32>, Vec<u32>) =
+                    insts.into_iter().partition(|i| leftset.contains(i));
+                debug_assert_eq!(li.len() as u32, lc);
+                let pg = tree.nodes[node as usize].sum_g.clone();
+                let ph = tree.nodes[node as usize].sum_h.clone();
+                let rgv: Vec<f64> = pg.iter().zip(&lg).map(|(a, b)| a - b).collect();
+                let rhv: Vec<f64> = ph.iter().zip(&lh).map(|(a, b)| a - b).collect();
+                set_stats(&mut tree, lid, &lg, &lh, li.len() as u32);
+                set_stats(&mut tree, rid, &rgv, &rhv, ri.len() as u32);
+
+                // synchronize the assignment to all engaged hosts
+                let left_arc = Arc::new(li.clone());
+                for &hidx in &engaged {
+                    self.links[hidx].send(ToHost::SyncAssign {
+                        tree_id,
+                        node,
+                        left_child: lid,
+                        right_child: rid,
+                        left: left_arc.clone(),
+                    });
+                }
+                for &hidx in &engaged {
+                    let _ = self.links[hidx].recv(); // Ack
+                }
+                members.insert(lid, li);
+                members.insert(rid, ri);
+                next_layer.push(lid);
+                next_layer.push(rid);
+            }
+            layer = next_layer;
+        }
+
+        crate::boosting::gbdt::finalize_leaves(
+            &mut tree,
+            self.cfg.gain.lambda,
+            self.cfg.learning_rate,
+        );
+        for &hidx in &engaged {
+            self.links[hidx].send(ToHost::FinishTree { tree_id });
+        }
+        for &hidx in &engaged {
+            let _ = self.links[hidx].recv();
+        }
+        tree
+    }
+
+    /// Decode a host's node statistics into (handle, count, Σg, Σh) rows.
+    fn decode_stats(
+        &self,
+        codec: &StatCodec,
+        stats: NodeStats,
+    ) -> Vec<(u32, u32, Vec<f64>, Vec<f64>)> {
+        match stats {
+            NodeStats::Compressed(packages) => {
+                let StatCodec::Packed(packer) = codec else {
+                    panic!("compressed stats require the packed codec")
+                };
+                let plan = self.compress.expect("compression plan agreed at setup");
+                decompress(&self.suite, &plan, packer, &packages)
+                    .into_iter()
+                    .map(|s| (s.id, s.sample_count, vec![s.g_sum], vec![s.h_sum]))
+                    .collect()
+            }
+            NodeStats::Raw(rows) => {
+                // batch-decrypt all ciphertexts of this node at once
+                let flat: Vec<Ct> = rows.iter().flat_map(|(_, _, cts)| cts.clone()).collect();
+                let plains = self.suite.decrypt_batch(&flat);
+                let n_k = codec.n_k();
+                rows.iter()
+                    .enumerate()
+                    .map(|(idx, (handle, count, _))| {
+                        let (gsum, hsum) = codec
+                            .decode_sum(&plains[idx * n_k..(idx + 1) * n_k], *count as u64);
+                        (*handle, *count, gsum, hsum)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Guest-side plaintext histogram for a node (sparse-aware; large
+    /// nodes use the compute engine's histogram kernel).
+    fn build_guest_hist(
+        &self,
+        insts: &[u32],
+        g: &[f64],
+        h: &[f64],
+        w: usize,
+        node: &crate::tree::node::TreeNode,
+    ) -> PlainHistogram {
+        let n_bins = self.cfg.max_bin;
+        // Engine path: scalar stats over large nodes — the AOT histogram
+        // kernel works on gathered rows.
+        if w == 1 && insts.len() >= 2048 && self.sb.is_none() {
+            let d = self.bm.d;
+            let mut gather_bins = Vec::with_capacity(insts.len() * d);
+            let mut gg = Vec::with_capacity(insts.len());
+            let mut hh = Vec::with_capacity(insts.len());
+            for &i in insts {
+                gather_bins.extend_from_slice(self.bm.row(i as usize));
+                gg.push(g[i as usize]);
+                hh.push(h[i as usize]);
+            }
+            let (gh, hh2, ch) =
+                self.engine.histogram(&gather_bins, insts.len(), d, n_bins, &gg, &hh);
+            return PlainHistogram { n_features: d, n_bins, w: 1, g: gh, h: hh2, count: ch };
+        }
+        match &self.sb {
+            Some(sb) => PlainHistogram::build_sparse(
+                sb,
+                n_bins,
+                insts,
+                g,
+                h,
+                w,
+                &node.sum_g,
+                &node.sum_h,
+                node.n_samples,
+            ),
+            None => PlainHistogram::build(&self.bm, n_bins, insts, g, h, w),
+        }
+    }
+
+    /// Direct/subtract task plan for a layer (smaller sibling direct).
+    /// The larger sibling is derived by subtraction only when it holds
+    /// more than `threshold` instances (0 = always subtract).
+    fn plan_tasks(
+        &self,
+        tree: &Tree,
+        layer: &[u32],
+        members: &HashMap<u32, Vec<u32>>,
+        threshold: usize,
+    ) -> Vec<HistTask> {
+        if layer == [0] {
+            return vec![HistTask::Direct { node: 0 }];
+        }
+        let mut direct = Vec::new();
+        let mut subtract = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for &node in layer {
+            if seen.contains(&node) {
+                continue;
+            }
+            let parent = tree.nodes[node as usize].parent as u32;
+            let pnode = &tree.nodes[parent as usize];
+            let (l, r) = (pnode.left as u32, pnode.right as u32);
+            seen.insert(l);
+            seen.insert(r);
+            let (small, big) =
+                if members[&l].len() <= members[&r].len() { (l, r) } else { (r, l) };
+            direct.push(HistTask::Direct { node: small });
+            if self.cfg.hist_subtraction && members[&big].len() > threshold {
+                subtract.push(HistTask::Subtract { node: big, parent, sibling: small });
+            } else {
+                direct.push(HistTask::Direct { node: big });
+            }
+        }
+        direct.extend(subtract);
+        direct
+    }
+
+    /// Route the full population through a finished tree and add leaf
+    /// weights into the prediction matrix.
+    fn route_and_update(&mut self, tree: &Tree, preds: &mut [f64], class: usize, k: usize) {
+        let n = self.vs.n();
+        let t_route = Instant::now();
+        {
+            let mut at_node: HashMap<u32, Vec<u32>> = HashMap::new();
+            at_node.insert(0, (0..n as u32).collect());
+            // BFS over nodes in id order (children have larger ids)
+            for node in &tree.nodes {
+                let Some(split) = &node.split else { continue };
+                let Some(insts) = at_node.remove(&node.id) else { continue };
+                let left: Vec<u32> = match split {
+                    SplitRef::Guest { feature, bin, .. } => insts
+                        .iter()
+                        .copied()
+                        .filter(|&i| self.bm.bin(i as usize, *feature as usize) <= *bin)
+                        .collect(),
+                    SplitRef::Host { party, handle } => {
+                        let link = &self.links[*party as usize];
+                        link.send(ToHost::ApplySplit {
+                            tree_id: u32::MAX, // routing pass
+                            node: node.id,
+                            handle: *handle,
+                            instances: Arc::new(insts.clone()),
+                        });
+                        let ToGuest::LeftInstances { left, .. } = link.recv() else {
+                            panic!("expected LeftInstances")
+                        };
+                        left
+                    }
+                };
+                let leftset: std::collections::HashSet<u32> = left.iter().copied().collect();
+                let (li, ri): (Vec<u32>, Vec<u32>) =
+                    insts.into_iter().partition(|i| leftset.contains(i));
+                at_node.insert(node.left as u32, li);
+                at_node.insert(node.right as u32, ri);
+            }
+            for (node_id, insts) in at_node {
+                let node = &tree.nodes[node_id as usize];
+                debug_assert!(node.is_leaf());
+                for &i in &insts {
+                    if tree.width == 1 {
+                        preds[i as usize * k + class] += node.weight[0];
+                    } else {
+                        for (j, &v) in node.weight.iter().enumerate() {
+                            preds[i as usize * k + j] += v;
+                        }
+                    }
+                }
+            }
+        }
+        self.timer.add("guest.route_predict", t_route.elapsed());
+    }
+
+    /// One-time host setup (cipher material, codec layout, toggles).
+    pub fn setup_hosts(&mut self) {
+        for link in self.links {
+            link.send(ToHost::Setup {
+                suite_public: self.suite.public_side(),
+                codec: self.codec.clone(),
+                compress: self.compress,
+                n_bins: self.cfg.max_bin,
+                hist_subtraction: self.cfg.hist_subtraction,
+                sparse_optimization: self.cfg.sparse_optimization,
+                seed: self.cfg.seed,
+            });
+        }
+        for link in self.links {
+            let _ = link.recv();
+        }
+    }
+}
+
+/// Plan the fixed statistic layout for a whole run. The bit widths must
+/// bound the *worst case* over all trees: GOSS amplifies small-gradient
+/// survivors by `(1−a)/b`, so the value range is the loss's natural range
+/// scaled by that factor. Guest and hosts agree on this layout once, at
+/// setup (the paper synchronizes `b_gh` and η_s the same way, §4.5).
+fn plan_codec(
+    vs: &VerticalSplit,
+    cfg: &TrainConfig,
+    suite: &CipherSuite,
+) -> (StatCodec, Option<CompressPlan>) {
+    // GOSS never applies to multi-output trees (see build_one_tree)
+    let goss = if matches!(cfg.mode, ModeKind::MultiOutput) { None } else { cfg.goss };
+    let amp = goss
+        .map(|g| ((1.0 - g.top_rate) / g.other_rate.max(1e-9)).max(1.0))
+        .unwrap_or(1.0);
+    // overflow bound: only sampled instances ever enter a histogram sum
+    let sample_frac = goss.map(|g| g.top_rate + g.other_rate).unwrap_or(1.0);
+    let n_bound = ((vs.n() as f64 * sample_frac).ceil() as u64).max(1);
+    let enc = crate::crypto::encoding::FixedPointEncoder::new(cfg.precision);
+    // logistic/softmax ranges: g ∈ [−1, 1]·amp (offset by amp), h ∈ [0, 1]·amp
+    let g_off = amp;
+    let b_g = enc.sum_bits(2.0 * amp, n_bound);
+    let b_h = enc.sum_bits(amp, n_bound);
+    let packer = GhPacker { enc, g_off, b_g, b_h, b_gh: b_g + b_h };
+
+    let codec = match cfg.mode {
+        ModeKind::MultiOutput => {
+            let eta_c = (suite.plaintext_bits() / packer.b_gh).max(1).min(vs.n_classes);
+            assert!(
+                packer.b_gh <= suite.plaintext_bits(),
+                "one class does not fit the plaintext space"
+            );
+            let n_k = vs.n_classes.div_ceil(eta_c);
+            StatCodec::Multi(MoPacker { base: packer, k: vs.n_classes, eta_c, n_k })
+        }
+        _ if cfg.gh_packing => StatCodec::Packed(packer),
+        _ => StatCodec::Separate(packer),
+    };
+    let compress = match (cfg.cipher_compression, codec.compressible_b_gh()) {
+        (true, Some(b_gh)) => Some(CompressPlan::derive(suite.plaintext_bits(), b_gh)),
+        _ => None,
+    };
+    (codec, compress)
+}
+
+fn node_totals(instances: &[u32], g: &[f64], h: &[f64], w: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut sg = vec![0.0; w];
+    let mut sh = vec![0.0; w];
+    for &i in instances {
+        for j in 0..w {
+            sg[j] += g[i as usize * w + j];
+            sh[j] += h[i as usize * w + j];
+        }
+    }
+    (sg, sh)
+}
+
+fn set_stats(tree: &mut Tree, id: u32, g: &[f64], h: &[f64], n: u32) {
+    let node = &mut tree.nodes[id as usize];
+    node.sum_g = g.to_vec();
+    node.sum_h = h.to_vec();
+    node.n_samples = n;
+}

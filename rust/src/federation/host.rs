@@ -1,0 +1,333 @@
+//! The host party: features but no labels. Receives encrypted packed gh,
+//! builds ciphertext histograms (direct or by subtraction), constructs
+//! shuffled split-infos, compresses them, and applies winning splits —
+//! paper Algorithms 1 and 5.
+//!
+//! Runs as a dedicated thread (`run_host`) talking to the guest through a
+//! [`HostLink`]. The host never sees a plaintext statistic or the guest's
+//! labels; the guest never learns which (feature, bin) a split handle
+//! denotes.
+
+use crate::crypto::cipher::{CipherSuite, Ct};
+use crate::crypto::compress::{compress, CompressPlan, SplitStatCt};
+use crate::data::binning::BinnedMatrix;
+use crate::data::sparse::SparseBinned;
+use crate::federation::codec::StatCodec;
+use crate::federation::message::{HistTask, NodeStats, ToGuest, ToHost};
+use crate::federation::transport::HostLink;
+use crate::tree::histogram::CipherHistogram;
+use crate::util::rng::Xoshiro256;
+use crate::util::timer::PhaseTimer;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Host-side per-run state.
+pub struct HostParty {
+    pub id: u8,
+    bm: BinnedMatrix,
+    sb: Option<SparseBinned>,
+    link: HostLink,
+    timer: Arc<Mutex<PhaseTimer>>,
+
+    // protocol parameters (Setup)
+    suite: Option<CipherSuite>,
+    codec: Option<StatCodec>,
+    compress_plan: Option<CompressPlan>,
+    n_bins: usize,
+    hist_subtraction: bool,
+    sparse_optimization: bool,
+    rng: Xoshiro256,
+
+    // per-tree state
+    members: HashMap<u32, Vec<u32>>,
+    packed: Option<Arc<Vec<Ct>>>,
+    /// instance id → row in `packed` (ciphertexts arrive in sample order).
+    pos: Vec<u32>,
+    node_total: Vec<Ct>,
+    hist_cache: HashMap<u32, CipherHistogram>,
+
+    /// handle → (feature, bin, threshold); persists across trees so
+    /// handles stay valid for inference.
+    split_table: Vec<(u32, u8, f64)>,
+}
+
+impl HostParty {
+    pub fn new(
+        id: u8,
+        bm: BinnedMatrix,
+        sb: Option<SparseBinned>,
+        link: HostLink,
+        timer: Arc<Mutex<PhaseTimer>>,
+    ) -> Self {
+        HostParty {
+            id,
+            bm,
+            sb,
+            link,
+            timer,
+            suite: None,
+            codec: None,
+            compress_plan: None,
+            n_bins: 32,
+            hist_subtraction: true,
+            sparse_optimization: false,
+            rng: Xoshiro256::seed_from_u64(0),
+            members: HashMap::new(),
+            packed: None,
+            pos: Vec::new(),
+            node_total: Vec::new(),
+            hist_cache: HashMap::new(),
+            split_table: Vec::new(),
+        }
+    }
+
+    /// Main loop; returns on `Shutdown` or channel close.
+    pub fn run(mut self) {
+        while let Some(msg) = self.link.recv() {
+            match msg {
+                ToHost::Setup {
+                    suite_public,
+                    codec,
+                    compress,
+                    n_bins,
+                    hist_subtraction,
+                    sparse_optimization,
+                    seed,
+                } => {
+                    assert!(!suite_public.has_secret() || matches!(suite_public, CipherSuite::Plain { .. }),
+                        "host must not receive secret key material");
+                    self.suite = Some(suite_public);
+                    self.codec = Some(codec);
+                    self.compress_plan = compress;
+                    self.n_bins = n_bins;
+                    self.hist_subtraction = hist_subtraction;
+                    self.sparse_optimization = sparse_optimization;
+                    self.rng = Xoshiro256::seed_from_u64(seed ^ (self.id as u64 + 1) * 0x9E37);
+                    self.link.send(ToGuest::Ack);
+                }
+                ToHost::StartTree { tree_id: _, instances, packed, node_total } => {
+                    self.members.clear();
+                    self.hist_cache.clear();
+                    // id → sample-row map for histogram indexing
+                    let max_id = instances.iter().copied().max().unwrap_or(0) as usize;
+                    self.pos = vec![u32::MAX; max_id + 1];
+                    for (row, &id) in instances.iter().enumerate() {
+                        self.pos[id as usize] = row as u32;
+                    }
+                    self.members.insert(0, instances.as_ref().clone());
+                    self.packed = Some(packed);
+                    self.node_total = node_total;
+                    self.link.send(ToGuest::Ack);
+                }
+                ToHost::BuildLayer { tree_id, tasks } => {
+                    let reply = self.build_layer(tree_id, &tasks);
+                    self.link.send(reply);
+                }
+                ToHost::ApplySplit { tree_id, node, handle, instances } => {
+                    let (f, b, _thr) = self.split_table[handle as usize];
+                    let left: Vec<u32> = instances
+                        .iter()
+                        .copied()
+                        .filter(|&i| self.bm.bin(i as usize, f as usize) <= b)
+                        .collect();
+                    self.link.send(ToGuest::LeftInstances { tree_id, node, left });
+                }
+                ToHost::SyncAssign { tree_id: _, node, left_child, right_child, left } => {
+                    if let Some(mine) = self.members.remove(&node) {
+                        let leftset: std::collections::HashSet<u32> =
+                            left.iter().copied().collect();
+                        let (li, ri): (Vec<u32>, Vec<u32>) =
+                            mine.into_iter().partition(|i| leftset.contains(i));
+                        self.members.insert(left_child, li);
+                        self.members.insert(right_child, ri);
+                    }
+                    self.link.send(ToGuest::Ack);
+                }
+                ToHost::FinishTree { .. } => {
+                    self.members.clear();
+                    self.hist_cache.clear();
+                    self.packed = None;
+                    self.link.send(ToGuest::Ack);
+                }
+                ToHost::DumpSplitTable => {
+                    self.link.send(ToGuest::SplitTable { entries: self.split_table.clone() });
+                }
+                ToHost::Shutdown => break,
+            }
+        }
+    }
+
+    /// Alg. 5: build histograms for a layer's nodes (direct builds first,
+    /// then subtraction-derived siblings), cumsum, split-info, compress.
+    fn build_layer(&mut self, tree_id: u32, tasks: &[HistTask]) -> ToGuest {
+        let suite = self.suite.clone().expect("Setup first");
+        let codec = self.codec.clone().expect("Setup first");
+        let packed = self.packed.clone().expect("StartTree first");
+        let n_k = codec.n_k();
+        let mut new_cache: HashMap<u32, CipherHistogram> = HashMap::new();
+        let mut t_hist = std::time::Duration::ZERO;
+        let mut t_info = std::time::Duration::ZERO;
+
+        for task in tasks {
+            let start = std::time::Instant::now();
+            let hist = match task {
+                HistTask::Direct { node } => {
+                    let insts = self.members.get(node).cloned().unwrap_or_default();
+                    // node-level gate: sparse recovery costs ~1 negation per
+                    // feature; it pays only when the elided work exceeds it
+                    let sparse_worth = self
+                        .sb
+                        .as_ref()
+                        .map(|sb| {
+                            let zero_frac = 1.0 - sb.density();
+                            insts.len() as f64 * zero_frac
+                                > suite.negate_cost_ratio() as f64
+                        })
+                        .unwrap_or(false);
+                    match (self.sparse_optimization && sparse_worth, &self.sb) {
+                        (true, Some(sb)) => {
+                            // node totals for zero-bin recovery: Σ over the
+                            // node's members (root uses the tree totals)
+                            let node_total = if *node == 0 {
+                                self.node_total.clone()
+                            } else {
+                                let mut tot = vec![suite.zero_ct(); n_k];
+                                for &i in &insts {
+                                    let row = self.pos[i as usize] as usize;
+                                    for j in 0..n_k {
+                                        suite.add_assign(
+                                            &mut tot[j],
+                                            &packed[row * n_k + j],
+                                        );
+                                    }
+                                }
+                                tot
+                            };
+                            CipherHistogram::build_sparse(
+                                &suite,
+                                sb,
+                                self.n_bins,
+                                &insts,
+                                &packed,
+                                &self.pos,
+                                n_k,
+                                &node_total,
+                                insts.len() as u32,
+                            )
+                        }
+                        _ => CipherHistogram::build(
+                            &suite,
+                            &self.bm,
+                            self.n_bins,
+                            &insts,
+                            &packed,
+                            &self.pos,
+                            n_k,
+                        ),
+                    }
+                }
+                HistTask::Subtract { node: _, parent, sibling } => {
+                    let parent_h =
+                        self.hist_cache.get(parent).expect("parent histogram cached");
+                    let sib_h = new_cache.get(sibling).expect("sibling built first");
+                    parent_h.subtract(&suite, sib_h)
+                }
+            };
+            t_hist += start.elapsed();
+            new_cache.insert(task.node(), hist);
+        }
+
+        // cumsum + split-info construction + shuffle + compress per node
+        let mut nodes_out = Vec::with_capacity(tasks.len());
+        for task in tasks {
+            let node = task.node();
+            let start = std::time::Instant::now();
+            let mut hist = clone_hist(&suite, &new_cache[&node]);
+            hist.cumsum(&suite);
+            let node_count: u32 = self.members.get(&node).map(|m| m.len() as u32).unwrap_or(
+                // subtraction nodes: count = parent − sibling tracked in hist
+                hist.count[hist.cell(0, self.n_bins - 1)],
+            );
+            let mut stats: Vec<(u32, u32, Vec<Ct>)> = Vec::new();
+            for f in 0..hist.n_features {
+                let mut prev_cnt = u32::MAX;
+                for b in 0..self.n_bins.saturating_sub(1) {
+                    let cell = hist.cell(f, b);
+                    let cnt = hist.count[cell];
+                    if cnt == 0 || cnt == node_count {
+                        continue; // no-op split, never a candidate
+                    }
+                    if cnt == prev_cnt {
+                        // empty bin: cumulative stats identical to the
+                        // previous candidate → same split, skip (§Perf:
+                        // saves a compression shift + 1/η_s decryption)
+                        continue;
+                    }
+                    prev_cnt = cnt;
+                    let handle = self.split_table.len() as u32;
+                    self.split_table.push((
+                        f as u32,
+                        b as u8,
+                        self.bm.specs[f].threshold(b as u8),
+                    ));
+                    let cts: Vec<Ct> =
+                        hist.cells[cell * n_k..(cell + 1) * n_k].to_vec();
+                    stats.push((handle, cnt, cts));
+                }
+            }
+            // ShuffleAndSendToGuest (Alg. 1): hide feature/bin ordering
+            self.rng.shuffle(&mut stats);
+
+            let payload = match (&self.compress_plan, codec.compressible_b_gh()) {
+                (Some(plan), Some(_)) => {
+                    let flat: Vec<SplitStatCt> = stats
+                        .into_iter()
+                        .map(|(id, count, mut cts)| SplitStatCt {
+                            ct: cts.pop().expect("n_k = 1 for compressible codec"),
+                            id,
+                            sample_count: count,
+                        })
+                        .collect();
+                    NodeStats::Compressed(compress(&suite, plan, &flat))
+                }
+                _ => NodeStats::Raw(stats),
+            };
+            t_info += start.elapsed();
+            nodes_out.push((node, payload));
+        }
+
+        self.hist_cache = new_cache;
+        if let Ok(mut t) = self.timer.lock() {
+            t.add("host.histogram", t_hist);
+            t.add("host.splitinfo+compress", t_info);
+        }
+        ToGuest::LayerStats { tree_id, nodes: nodes_out }
+    }
+}
+
+/// Clone a ciphertext histogram (cumsum is destructive; the cache keeps
+/// the raw version for next layer's subtraction).
+fn clone_hist(suite: &CipherSuite, h: &CipherHistogram) -> CipherHistogram {
+    let _ = suite;
+    CipherHistogram {
+        n_features: h.n_features,
+        n_bins: h.n_bins,
+        n_k: h.n_k,
+        cells: h.cells.clone(),
+        count: h.count.clone(),
+    }
+}
+
+/// Spawn a host thread. Returns its join handle.
+pub fn spawn_host(
+    id: u8,
+    bm: BinnedMatrix,
+    sb: Option<SparseBinned>,
+    link: HostLink,
+    timer: Arc<Mutex<PhaseTimer>>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("sbp-host-{id}"))
+        .spawn(move || HostParty::new(id, bm, sb, link, timer).run())
+        .expect("spawn host thread")
+}

@@ -1,0 +1,190 @@
+//! Protocol messages between the guest and the hosts, with wire-size
+//! accounting for the network model.
+//!
+//! Sizes are computed from the logical payload (ciphertexts dominate:
+//! `ct_byte_len` each; ids/counts 4 bytes; f64 8 bytes) plus a small
+//! framing overhead per message — the quantities the paper's
+//! communication cost model (eq. 10/16) counts.
+
+use crate::crypto::cipher::Ct;
+use crate::crypto::compress::CtPackage;
+use std::sync::Arc;
+
+/// Framing overhead charged per message.
+pub const MSG_OVERHEAD: usize = 64;
+
+/// Which parties may propose splits in a layer (mechanism modes, §5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CandidateMask {
+    /// Everyone (SecureBoost+ default).
+    All,
+    /// Only the named host (mix-mode host trees; layered-mode host layers).
+    HostOnly(u8),
+    /// All hosts, no guest (layered host layers with multiple hosts).
+    HostsOnly,
+    /// Guest only — hosts skip the layer entirely.
+    GuestOnly,
+}
+
+/// One histogram task for a host in a layer.
+#[derive(Clone, Debug)]
+pub enum HistTask {
+    /// Build this node's histogram directly from its member instances.
+    Direct { node: u32 },
+    /// Derive this node by ciphertext subtraction: `parent − sibling`
+    /// (both already in the host's cache; sibling built this layer).
+    Subtract { node: u32, parent: u32, sibling: u32 },
+}
+
+impl HistTask {
+    pub fn node(&self) -> u32 {
+        match self {
+            HistTask::Direct { node } => *node,
+            HistTask::Subtract { node, .. } => *node,
+        }
+    }
+}
+
+/// Guest → host messages.
+pub enum ToHost {
+    /// One-time setup: cipher public material and protocol parameters.
+    Setup {
+        suite_public: crate::crypto::cipher::CipherSuite,
+        codec: super::codec::StatCodec,
+        compress: Option<crate::crypto::compress::CompressPlan>,
+        n_bins: usize,
+        hist_subtraction: bool,
+        sparse_optimization: bool,
+        seed: u64,
+    },
+    /// Start a boosting tree: encrypted packed gh for the (sampled)
+    /// training instances, instance-major `n_k` ciphertexts each.
+    StartTree {
+        tree_id: u32,
+        instances: Arc<Vec<u32>>,
+        packed: Arc<Vec<Ct>>,
+        /// Σ over all sampled instances (for sparse zero-bin recovery).
+        node_total: Vec<Ct>,
+    },
+    /// Build histograms + split stats for the given nodes.
+    BuildLayer { tree_id: u32, tasks: Vec<HistTask> },
+    /// The split at `node` (host-owned, via `handle`) won: partition the
+    /// given instances and reply with those going left.
+    ApplySplit { tree_id: u32, node: u32, handle: u32, instances: Arc<Vec<u32>> },
+    /// Assignment sync: `left` of `node`'s members go to `left_child`,
+    /// the rest to `right_child` (paper: "synchronized to all parties").
+    SyncAssign { tree_id: u32, node: u32, left_child: u32, right_child: u32, left: Arc<Vec<u32>> },
+    /// Free per-tree state.
+    FinishTree { tree_id: u32 },
+    /// Evaluation-only: reveal the split table to the driver (out of
+    /// protocol; used by the experiment harness for inference).
+    DumpSplitTable,
+    Shutdown,
+}
+
+/// A host's split statistics for one node, possibly compressed.
+pub enum NodeStats {
+    Compressed(Vec<CtPackage>),
+    /// Uncompressed: (id, sample_count, n_k ciphertexts) per candidate.
+    Raw(Vec<(u32, u32, Vec<Ct>)>),
+}
+
+/// Host → guest messages.
+pub enum ToGuest {
+    /// Split statistics for the nodes of a layer, in task order.
+    LayerStats { tree_id: u32, nodes: Vec<(u32, NodeStats)> },
+    /// Instances going left under a host-owned split.
+    LeftInstances { tree_id: u32, node: u32, left: Vec<u32> },
+    /// The host's split table: handle → (feature, bin, threshold).
+    SplitTable { entries: Vec<(u32, u8, f64)> },
+    /// Acknowledgement for barrier-style messages.
+    Ack,
+}
+
+/// Wire size of a guest→host message given the ciphertext byte length.
+pub fn to_host_size(msg: &ToHost, ct_len: usize) -> usize {
+    MSG_OVERHEAD
+        + match msg {
+            ToHost::Setup { .. } => 512, // key material + parameters
+            ToHost::StartTree { instances, packed, node_total, .. } => {
+                instances.len() * 4 + packed.len() * ct_len + node_total.len() * ct_len
+            }
+            ToHost::BuildLayer { tasks, .. } => tasks.len() * 12,
+            ToHost::ApplySplit { instances, .. } => 12 + instances.len() * 4,
+            ToHost::SyncAssign { left, .. } => 16 + left.len() * 4,
+            ToHost::FinishTree { .. } | ToHost::Shutdown | ToHost::DumpSplitTable => 0,
+        }
+}
+
+/// Wire size of a host→guest message.
+pub fn to_guest_size(msg: &ToGuest, ct_len: usize) -> usize {
+    MSG_OVERHEAD
+        + match msg {
+            ToGuest::LayerStats { nodes, .. } => nodes
+                .iter()
+                .map(|(_, s)| match s {
+                    NodeStats::Compressed(pkgs) => pkgs
+                        .iter()
+                        .map(|p| ct_len + p.ids.len() * 8)
+                        .sum::<usize>(),
+                    NodeStats::Raw(stats) => stats
+                        .iter()
+                        .map(|(_, _, cts)| 8 + cts.len() * ct_len)
+                        .sum::<usize>(),
+                })
+                .sum::<usize>(),
+            ToGuest::LeftInstances { left, .. } => 8 + left.len() * 4,
+            ToGuest::SplitTable { entries } => entries.len() * 16,
+            ToGuest::Ack => 0,
+        }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_scale_with_payload() {
+        let small = ToHost::ApplySplit {
+            tree_id: 0,
+            node: 1,
+            handle: 2,
+            instances: Arc::new(vec![1, 2, 3]),
+        };
+        let big = ToHost::ApplySplit {
+            tree_id: 0,
+            node: 1,
+            handle: 2,
+            instances: Arc::new((0..1000).collect()),
+        };
+        assert!(to_host_size(&big, 256) > to_host_size(&small, 256) + 3900);
+    }
+
+    #[test]
+    fn compressed_stats_smaller_than_raw() {
+        use crate::crypto::cipher::CipherSuite;
+        let suite = CipherSuite::new_plain(512);
+        let ct = suite.zero_ct();
+        // 6 stats compressed into one package vs 6 raw stats
+        let compressed = ToGuest::LayerStats {
+            tree_id: 0,
+            nodes: vec![(
+                0,
+                NodeStats::Compressed(vec![CtPackage {
+                    ct: ct.clone(),
+                    ids: vec![0, 1, 2, 3, 4, 5],
+                    counts: vec![1; 6],
+                }]),
+            )],
+        };
+        let raw = ToGuest::LayerStats {
+            tree_id: 0,
+            nodes: vec![(
+                0,
+                NodeStats::Raw((0..6).map(|i| (i, 1u32, vec![ct.clone()])).collect()),
+            )],
+        };
+        let cl = 128;
+        assert!(to_guest_size(&compressed, cl) < to_guest_size(&raw, cl));
+    }
+}

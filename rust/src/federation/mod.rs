@@ -1,0 +1,15 @@
+//! The vertical federation protocol: message types, the byte-accounting
+//! transport, the statistic codecs (packed / separate / multi-class), and
+//! the guest / host party implementations.
+//!
+//! Threading model: each host party runs on its own OS thread with a pair
+//! of mpsc channels to the guest; the guest drives training synchronously
+//! in rounds (the protocol is round-structured, matching FATE). All
+//! cross-party traffic passes through [`transport::Transport`], which
+//! counts bytes and models the paper's 1 GbE intranet.
+
+pub mod codec;
+pub mod guest;
+pub mod host;
+pub mod message;
+pub mod transport;

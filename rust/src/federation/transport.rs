@@ -1,0 +1,185 @@
+//! In-process transport with byte accounting and a network-time model.
+//!
+//! The paper's testbed is two machines on a 1 GbE intranet; our parties
+//! are threads. Every message carries its computed wire size; the
+//! [`NetCounters`] accumulate volume per direction, and
+//! [`NetworkModel::simulated_seconds`] converts volume + message count to
+//! the time the paper's link would have spent — reported alongside wall
+//! time in every bench (DESIGN.md §3, substitutions).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// Cumulative traffic counters (shared guest-side and host-side).
+#[derive(Debug, Default)]
+pub struct NetCounters {
+    pub bytes_to_host: AtomicU64,
+    pub bytes_to_guest: AtomicU64,
+    pub msgs_to_host: AtomicU64,
+    pub msgs_to_guest: AtomicU64,
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NetSnapshot {
+    pub bytes_to_host: u64,
+    pub bytes_to_guest: u64,
+    pub msgs_to_host: u64,
+    pub msgs_to_guest: u64,
+}
+
+impl NetCounters {
+    pub fn snapshot(&self) -> NetSnapshot {
+        NetSnapshot {
+            bytes_to_host: self.bytes_to_host.load(Ordering::Relaxed),
+            bytes_to_guest: self.bytes_to_guest.load(Ordering::Relaxed),
+            msgs_to_host: self.msgs_to_host.load(Ordering::Relaxed),
+            msgs_to_guest: self.msgs_to_guest.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl NetSnapshot {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_to_host + self.bytes_to_guest
+    }
+
+    pub fn diff(&self, earlier: &NetSnapshot) -> NetSnapshot {
+        NetSnapshot {
+            bytes_to_host: self.bytes_to_host - earlier.bytes_to_host,
+            bytes_to_guest: self.bytes_to_guest - earlier.bytes_to_guest,
+            msgs_to_host: self.msgs_to_host - earlier.msgs_to_host,
+            msgs_to_guest: self.msgs_to_guest - earlier.msgs_to_guest,
+        }
+    }
+}
+
+/// Link model matching the paper's environment (§7.1): 1 GbE, intranet.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkModel {
+    pub bandwidth_bytes_per_sec: f64,
+    pub latency_sec_per_msg: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        NetworkModel {
+            bandwidth_bytes_per_sec: 125e6, // 1 Gbit/s
+            latency_sec_per_msg: 0.5e-3,    // intranet RTT/2
+        }
+    }
+}
+
+impl NetworkModel {
+    /// Time the modelled link needs for a traffic snapshot.
+    pub fn simulated_seconds(&self, s: &NetSnapshot) -> f64 {
+        s.total_bytes() as f64 / self.bandwidth_bytes_per_sec
+            + (s.msgs_to_host + s.msgs_to_guest) as f64 * self.latency_sec_per_msg
+    }
+}
+
+/// Guest-side handle to one host: send [`super::message::ToHost`],
+/// receive [`super::message::ToGuest`], all sizes recorded.
+pub struct GuestLink {
+    pub tx: Sender<super::message::ToHost>,
+    pub rx: Receiver<super::message::ToGuest>,
+    pub counters: Arc<NetCounters>,
+    pub ct_len: usize,
+}
+
+/// Host-side endpoint.
+pub struct HostLink {
+    pub rx: Receiver<super::message::ToHost>,
+    pub tx: Sender<super::message::ToGuest>,
+    pub counters: Arc<NetCounters>,
+    pub ct_len: usize,
+}
+
+/// Create a connected (guest, host) link pair with shared counters.
+pub fn link_pair(ct_len: usize) -> (GuestLink, HostLink) {
+    let (g2h_tx, g2h_rx) = channel();
+    let (h2g_tx, h2g_rx) = channel();
+    let counters = Arc::new(NetCounters::default());
+    (
+        GuestLink { tx: g2h_tx, rx: h2g_rx, counters: counters.clone(), ct_len },
+        HostLink { rx: g2h_rx, tx: h2g_tx, counters, ct_len },
+    )
+}
+
+impl GuestLink {
+    pub fn send(&self, msg: super::message::ToHost) {
+        let size = super::message::to_host_size(&msg, self.ct_len) as u64;
+        self.counters.bytes_to_host.fetch_add(size, Ordering::Relaxed);
+        self.counters.msgs_to_host.fetch_add(1, Ordering::Relaxed);
+        // receiver gone = host panicked; surface it at the join instead
+        let _ = self.tx.send(msg);
+    }
+
+    pub fn recv(&self) -> super::message::ToGuest {
+        self.rx.recv().expect("host channel closed unexpectedly")
+    }
+}
+
+impl HostLink {
+    pub fn recv(&self) -> Option<super::message::ToHost> {
+        self.rx.recv().ok()
+    }
+
+    pub fn send(&self, msg: super::message::ToGuest) {
+        let size = super::message::to_guest_size(&msg, self.ct_len) as u64;
+        self.counters.bytes_to_guest.fetch_add(size, Ordering::Relaxed);
+        self.counters.msgs_to_guest.fetch_add(1, Ordering::Relaxed);
+        let _ = self.tx.send(msg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::federation::message::{ToGuest, ToHost};
+    use std::sync::Arc as StdArc;
+
+    #[test]
+    fn counters_accumulate_both_directions() {
+        let (g, h) = link_pair(256);
+        g.send(ToHost::ApplySplit {
+            tree_id: 0,
+            node: 0,
+            handle: 0,
+            instances: StdArc::new(vec![1, 2, 3, 4]),
+        });
+        let msg = h.recv().unwrap();
+        match msg {
+            ToHost::ApplySplit { instances, .. } => assert_eq!(instances.len(), 4),
+            _ => panic!("wrong message"),
+        }
+        h.send(ToGuest::LeftInstances { tree_id: 0, node: 0, left: vec![1, 2] });
+        let _ = g.recv();
+        let s = g.counters.snapshot();
+        assert!(s.bytes_to_host > 0 && s.bytes_to_guest > 0);
+        assert_eq!(s.msgs_to_host, 1);
+        assert_eq!(s.msgs_to_guest, 1);
+    }
+
+    #[test]
+    fn network_model_accounts_latency_and_bandwidth() {
+        let m = NetworkModel::default();
+        let s = NetSnapshot {
+            bytes_to_host: 125_000_000,
+            bytes_to_guest: 0,
+            msgs_to_host: 2,
+            msgs_to_guest: 0,
+        };
+        let t = m.simulated_seconds(&s);
+        assert!((t - (1.0 + 0.001)).abs() < 1e-9, "t = {t}");
+    }
+
+    #[test]
+    fn snapshot_diff() {
+        let a = NetSnapshot { bytes_to_host: 10, bytes_to_guest: 5, msgs_to_host: 1, msgs_to_guest: 1 };
+        let b = NetSnapshot { bytes_to_host: 30, bytes_to_guest: 15, msgs_to_host: 3, msgs_to_guest: 2 };
+        let d = b.diff(&a);
+        assert_eq!(d.bytes_to_host, 20);
+        assert_eq!(d.total_bytes(), 30);
+    }
+}

@@ -1,0 +1,50 @@
+//! # SecureBoost+ — vertical federated gradient boosting
+//!
+//! A from-scratch reproduction of *SecureBoost+: A High Performance Gradient
+//! Boosting Tree Framework for Large Scale Vertical Federated Learning*
+//! (Chen et al., 2021) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the federated coordinator: guest/host
+//!   parties, homomorphic-ciphertext histograms, GH packing, cipher
+//!   compressing, split finding, mix/layered/multi-output tree modes,
+//!   GOSS, and the boosting driver.
+//! - **Layer 2/1 (python/compile)** — the guest's plaintext compute graph
+//!   (g/h, histograms, gain scans) authored in JAX + Pallas, AOT-lowered to
+//!   HLO text and executed from Rust via PJRT (see [`runtime`]).
+//!
+//! Python never runs on the training path; `make artifacts` is the only
+//! python invocation.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use sbp::prelude::*;
+//!
+//! let vs = SyntheticSpec::give_credit(0.02).generate_vertical(7, /*hosts=*/ 1);
+//! let cfg = TrainConfig::default();
+//! let report = train_federated(&vs, &cfg).unwrap();
+//! println!("AUC = {:.4}", report.train_metric);
+//! ```
+
+pub mod bench_harness;
+pub mod boosting;
+pub mod config;
+pub mod coordinator;
+pub mod crypto;
+pub mod data;
+pub mod federation;
+pub mod metrics;
+pub mod runtime;
+pub mod tree;
+pub mod util;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::config::{CipherKind, GossConfig, ModeKind, TrainConfig};
+    pub use crate::coordinator::{train_centralized, train_federated, TrainReport};
+    pub use crate::crypto::cipher::CipherSuite;
+    pub use crate::data::dataset::{Dataset, VerticalSplit};
+    pub use crate::data::synthetic::SyntheticSpec;
+    pub use crate::metrics::{accuracy_multiclass, auc};
+    pub use crate::runtime::engine::{ComputeEngine, CpuEngine};
+}

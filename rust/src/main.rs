@@ -1,0 +1,223 @@
+//! `sbp` — the SecureBoost+ launcher.
+//!
+//! Subcommands:
+//!   train    train a federated model on a synthetic preset
+//!   datagen  describe / emit the synthetic dataset presets
+//!   engines  check artifact availability and engine parity
+//!
+//! Examples:
+//!   sbp train --dataset give-credit --scale 0.01 --cipher paillier
+//!   sbp train --dataset sensorless --scale 0.01 --mode mo
+//!   sbp datagen --list
+
+use sbp::config::{CipherKind, GossConfig, ModeKind, TrainConfig};
+use sbp::coordinator::{train_centralized, train_federated, train_federated_with_engine};
+use sbp::data::synthetic::SyntheticSpec;
+use sbp::runtime::engine::{ComputeEngine, CpuEngine};
+use sbp::runtime::pjrt::XlaEngine;
+use sbp::util::args::Args;
+
+fn spec_by_name(name: &str, scale: f64) -> Option<SyntheticSpec> {
+    Some(match name {
+        "give-credit" | "give_credit" => SyntheticSpec::give_credit(scale),
+        "susy" => SyntheticSpec::susy(scale),
+        "higgs" => SyntheticSpec::higgs(scale),
+        "epsilon" => SyntheticSpec::epsilon(scale),
+        "sensorless" => SyntheticSpec::sensorless(scale),
+        "covtype" => SyntheticSpec::covtype(scale),
+        "svhn" => SyntheticSpec::svhn(scale),
+        _ => return None,
+    })
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("datagen") => cmd_datagen(&args),
+        Some("engines") => cmd_engines(&args),
+        _ => {
+            eprintln!(
+                "usage: sbp <train|datagen|engines> [options]\n\
+                 \n\
+                 train options:\n\
+                 \x20 --dataset <preset>     give-credit|susy|higgs|epsilon|sensorless|covtype|svhn\n\
+                 \x20 --scale <f>            instance-count scale factor (default 0.01)\n\
+                 \x20 --cipher <c>           paillier|iterative-affine|plain (default paillier)\n\
+                 \x20 --key-bits <n>         HE key length (default 1024)\n\
+                 \x20 --epochs <n>           boosting rounds (default 25)\n\
+                 \x20 --depth <n>            tree depth (default 5)\n\
+                 \x20 --mode <m>             default|mix|layered|mo\n\
+                 \x20 --hosts <n>            number of host parties (default 1)\n\
+                 \x20 --engine <e>           cpu|xla (default cpu)\n\
+                 \x20 --baseline             run the SecureBoost (FATE-1.5) baseline\n\
+                 \x20 --centralized          run the local XGB-style baseline instead\n\
+                 \x20 --no-goss --no-packing --no-subtraction --no-compression\n\
+                 \x20 --seed <n> --verbose"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn build_config(args: &Args) -> TrainConfig {
+    let mut cfg = if args.flag("baseline") {
+        TrainConfig::secureboost_baseline()
+    } else {
+        TrainConfig::secureboost_plus()
+    };
+    cfg.epochs = args.get_parse("epochs", cfg.epochs);
+    cfg.max_depth = args.get_parse("depth", cfg.max_depth);
+    cfg.max_bin = args.get_parse("bins", cfg.max_bin);
+    cfg.learning_rate = args.get_parse("lr", cfg.learning_rate);
+    cfg.key_bits = args.get_parse("key-bits", cfg.key_bits);
+    cfg.seed = args.get_parse("seed", cfg.seed);
+    cfg.n_hosts = args.get_parse("hosts", cfg.n_hosts);
+    cfg.verbose = args.flag("verbose");
+    if let Some(c) = args.get("cipher") {
+        cfg.cipher = CipherKind::parse(c).unwrap_or_else(|| {
+            eprintln!("unknown cipher '{c}'");
+            std::process::exit(2);
+        });
+    }
+    if args.flag("no-goss") {
+        cfg.goss = None;
+    } else if !args.flag("baseline") {
+        cfg.goss = Some(GossConfig {
+            top_rate: args.get_parse("goss-top", 0.2),
+            other_rate: args.get_parse("goss-other", 0.1),
+        });
+    }
+    if args.flag("no-packing") {
+        cfg.gh_packing = false;
+        cfg.cipher_compression = false;
+    }
+    if args.flag("no-subtraction") {
+        cfg.hist_subtraction = false;
+    }
+    if args.flag("no-compression") {
+        cfg.cipher_compression = false;
+    }
+    match args.get("mode") {
+        Some("mix") => {
+            cfg.mode = ModeKind::Mix { trees_per_party: args.get_parse("trees-per-party", 1) }
+        }
+        Some("layered") => {
+            let gd = args.get_parse("guest-depth", 2u8);
+            let hd = args.get_parse("host-depth", cfg.max_depth.saturating_sub(gd));
+            cfg.mode = ModeKind::Layered { guest_depth: gd, host_depth: hd };
+        }
+        Some("mo") => {
+            cfg.mode = ModeKind::MultiOutput;
+            cfg.cipher_compression = false;
+        }
+        Some("default") | None => {}
+        Some(m) => {
+            eprintln!("unknown mode '{m}'");
+            std::process::exit(2);
+        }
+    }
+    cfg
+}
+
+fn cmd_train(args: &Args) {
+    let name = args.get_or("dataset", "give-credit");
+    let scale: f64 = args.get_parse("scale", 0.01);
+    let Some(spec) = spec_by_name(&name, scale) else {
+        eprintln!("unknown dataset preset '{name}'");
+        std::process::exit(2);
+    };
+    let cfg = build_config(args);
+    if let Err(e) = cfg.validate() {
+        eprintln!("invalid configuration: {e}");
+        std::process::exit(2);
+    }
+    eprintln!(
+        "[sbp] generating '{}' at scale {scale} ({} instances × {} features)",
+        spec.name, spec.n, spec.d
+    );
+    let report = if args.flag("centralized") {
+        let ds = spec.generate(cfg.seed);
+        train_centralized(&ds, &cfg).expect("training failed")
+    } else {
+        let vs = spec.generate_vertical(cfg.seed, cfg.n_hosts);
+        match args.get("engine") {
+            Some("xla") => {
+                let engine = XlaEngine::load(XlaEngine::default_dir())
+                    .expect("loading artifacts (run `make artifacts`)");
+                eprintln!("[sbp] engine: xla-pjrt (N_TILE={})", engine.tiles.n_tile);
+                train_federated_with_engine(&vs, &cfg, &engine).expect("training failed")
+            }
+            _ => train_federated(&vs, &cfg).expect("training failed"),
+        }
+    };
+    println!("{}", report.summary());
+    println!("loss curve: {:?}", report.loss_curve);
+    if !report.phase_report.is_empty() {
+        println!("phases:\n{}", report.phase_report);
+    }
+    println!(
+        "HE ops: enc={} dec={} add={} smul={} neg={}",
+        report.ops.encrypts, report.ops.decrypts, report.ops.adds, report.ops.scalar_muls,
+        report.ops.negates
+    );
+}
+
+fn cmd_datagen(args: &Args) {
+    let scale: f64 = args.get_parse("scale", 1.0);
+    println!("dataset presets (Table 2 of the paper), at scale {scale}:");
+    println!(
+        "{:<12} {:>10} {:>6} {:>8} {:>8} {:>7}",
+        "name", "instances", "feats", "guest_d", "classes", "sparse"
+    );
+    for spec in [
+        SyntheticSpec::give_credit(scale),
+        SyntheticSpec::susy(scale),
+        SyntheticSpec::higgs(scale),
+        SyntheticSpec::epsilon(scale),
+        SyntheticSpec::sensorless(scale),
+        SyntheticSpec::covtype(scale),
+        SyntheticSpec::svhn(scale),
+    ] {
+        println!(
+            "{:<12} {:>10} {:>6} {:>8} {:>8} {:>7.2}",
+            spec.name, spec.n, spec.d, spec.guest_d, spec.n_classes, spec.sparsity
+        );
+    }
+}
+
+fn cmd_engines(args: &Args) {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(XlaEngine::default_dir);
+    println!("artifact dir: {dir:?}");
+    match XlaEngine::load(&dir) {
+        Err(e) => {
+            println!("XlaEngine: UNAVAILABLE ({e:#})");
+            println!("CpuEngine:  available (pure-Rust fallback)");
+        }
+        Ok(engine) => {
+            println!(
+                "XlaEngine: loaded (tiles: N={} F={} B={} K={})",
+                engine.tiles.n_tile, engine.tiles.f_tile, engine.tiles.bins, engine.tiles.k_tile
+            );
+            // quick parity check against the CPU oracle
+            let y: Vec<f64> = (0..100).map(|i| f64::from(i % 2 == 0)).collect();
+            let s: Vec<f64> = (0..100).map(|i| (i as f64 - 50.0) / 10.0).collect();
+            let (gx, hx) = engine.gh_binary(&y, &s);
+            let (gc, hc) = CpuEngine.gh_binary(&y, &s);
+            let gmax = gx
+                .iter()
+                .zip(&gc)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            let hmax = hx
+                .iter()
+                .zip(&hc)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            println!("gh_binary parity vs CpuEngine: max|dg|={gmax:.2e} max|dh|={hmax:.2e}");
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Evaluation metrics: AUC for binary tasks, accuracy for multi-class
+//! (the paper's Table 3/4/5 metrics), plus log-loss for training curves.
+
+/// Rank-based AUC (equivalent to the Mann–Whitney U statistic), with tie
+/// handling by midrank.
+pub fn auc(y_true: &[f64], scores: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), scores.len());
+    let n = y_true.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal));
+
+    // midranks
+    let mut ranks = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        let mid = (i + j) as f64 / 2.0 + 1.0;
+        for &idx in &order[i..=j] {
+            ranks[idx] = mid;
+        }
+        i = j + 1;
+    }
+    let n_pos = y_true.iter().filter(|&&y| y > 0.5).count() as f64;
+    let n_neg = n as f64 - n_pos;
+    if n_pos == 0.0 || n_neg == 0.0 {
+        return 0.5;
+    }
+    let rank_sum: f64 = y_true
+        .iter()
+        .zip(&ranks)
+        .filter(|(&y, _)| y > 0.5)
+        .map(|(_, &r)| r)
+        .sum();
+    (rank_sum - n_pos * (n_pos + 1.0) / 2.0) / (n_pos * n_neg)
+}
+
+/// Multi-class accuracy given per-class score rows (row-major n×k).
+pub fn accuracy_multiclass(y_true: &[f64], scores: &[f64], k: usize) -> f64 {
+    let n = y_true.len();
+    assert_eq!(scores.len(), n * k);
+    let mut correct = 0usize;
+    for i in 0..n {
+        let row = &scores[i * k..(i + 1) * k];
+        let mut best = 0usize;
+        for j in 1..k {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        if best as f64 == y_true[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// Binary accuracy at a 0.5 probability threshold (scores are logits).
+pub fn accuracy_binary(y_true: &[f64], logits: &[f64]) -> f64 {
+    let n = y_true.len();
+    let correct = y_true
+        .iter()
+        .zip(logits)
+        .filter(|(&y, &s)| (s > 0.0) == (y > 0.5))
+        .count();
+    correct as f64 / n as f64
+}
+
+/// Binary log-loss from logits.
+pub fn logloss_binary(y_true: &[f64], logits: &[f64]) -> f64 {
+    let n = y_true.len() as f64;
+    y_true
+        .iter()
+        .zip(logits)
+        .map(|(&y, &s)| {
+            let p = sigmoid(s).clamp(1e-12, 1.0 - 1e-12);
+            -(y * p.ln() + (1.0 - y) * (1.0 - p).ln())
+        })
+        .sum::<f64>()
+        / n
+}
+
+/// Multi-class cross-entropy from logit rows.
+pub fn celoss_multiclass(y_true: &[f64], logits: &[f64], k: usize) -> f64 {
+    let n = y_true.len();
+    let mut total = 0.0;
+    for i in 0..n {
+        let row = &logits[i * k..(i + 1) * k];
+        let m = row.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let z: f64 = row.iter().map(|&v| (v - m).exp()).sum();
+        let cls = y_true[i] as usize;
+        let logp = row[cls] - m - z.ln();
+        total -= logp;
+    }
+    total / n as f64
+}
+
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auc_perfect_and_inverted() {
+        let y = [0.0, 0.0, 1.0, 1.0];
+        assert_eq!(auc(&y, &[0.1, 0.2, 0.8, 0.9]), 1.0);
+        assert_eq!(auc(&y, &[0.9, 0.8, 0.2, 0.1]), 0.0);
+    }
+
+    #[test]
+    fn auc_random_is_half() {
+        let y: Vec<f64> = (0..1000).map(|i| f64::from(i % 2 == 0)).collect();
+        let s: Vec<f64> = (0..1000).map(|i| ((i * 2654435761u64 as usize) % 997) as f64).collect();
+        let a = auc(&y, &s);
+        assert!((a - 0.5).abs() < 0.06, "auc {a}");
+    }
+
+    #[test]
+    fn auc_with_ties() {
+        let y = [0.0, 1.0, 0.0, 1.0];
+        let s = [0.5, 0.5, 0.5, 0.5];
+        assert!((auc(&y, &s) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_degenerate_single_class() {
+        assert_eq!(auc(&[1.0, 1.0], &[0.3, 0.7]), 0.5);
+    }
+
+    #[test]
+    fn accuracy_multiclass_basic() {
+        let y = [0.0, 1.0, 2.0];
+        #[rustfmt::skip]
+        let s = [
+            0.9, 0.05, 0.05,
+            0.1, 0.8, 0.1,
+            0.2, 0.5, 0.3,
+        ];
+        assert!((accuracy_multiclass(&y, &s, 3) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logloss_sanity() {
+        let y = [1.0, 0.0];
+        let confident = [5.0, -5.0];
+        let wrong = [-5.0, 5.0];
+        assert!(logloss_binary(&y, &confident) < 0.05);
+        assert!(logloss_binary(&y, &wrong) > 3.0);
+    }
+
+    #[test]
+    fn celoss_matches_binary_case() {
+        // two-class CE with logits (0, s) equals binary logloss with logit s
+        let y = [1.0, 0.0, 1.0];
+        let s = [0.7, -0.3, 1.5];
+        let two_col: Vec<f64> = s.iter().flat_map(|&v| [0.0, v]).collect();
+        let ce = celoss_multiclass(&y, &two_col, 2);
+        let ll = logloss_binary(&y, &s);
+        assert!((ce - ll).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,164 @@
+//! `ComputeEngine`: the guest's plaintext numeric kernel interface.
+//!
+//! Two implementations:
+//! - [`CpuEngine`] — pure Rust; the correctness oracle and fallback.
+//! - [`crate::runtime::pjrt::XlaEngine`] — executes the AOT artifacts.
+//!
+//! Both are interchangeable; integration tests assert they agree to
+//! float tolerance on every entry point.
+
+use crate::boosting::loss;
+
+/// Plaintext numeric kernels used by the guest on the training path.
+///
+/// Not `Send`/`Sync`: the guest drives training from a single thread, and
+/// the PJRT client wrapper is single-threaded by construction.
+pub trait ComputeEngine {
+    fn name(&self) -> &'static str;
+
+    /// Binary logistic g/h from labels and logits.
+    fn gh_binary(&self, y: &[f64], logits: &[f64]) -> (Vec<f64>, Vec<f64>);
+
+    /// Softmax CE g/h (row-major n×k).
+    fn gh_softmax(&self, y: &[f64], logits: &[f64], k: usize) -> (Vec<f64>, Vec<f64>);
+
+    /// Histogram of (g, h) over `bin_idx` (row-major n×d, values < n_bins):
+    /// returns (g_hist, h_hist, count), each feature-major `d × n_bins`.
+    fn histogram(
+        &self,
+        bin_idx: &[u8],
+        n: usize,
+        d: usize,
+        n_bins: usize,
+        g: &[f64],
+        h: &[f64],
+    ) -> (Vec<f64>, Vec<f64>, Vec<u32>);
+
+    /// Split gains for every (feature, bin) from a *cumulative* histogram
+    /// plus node totals (paper eq. 6). Returns d×n_bins gains (last bin
+    /// meaningless; emitted as 0).
+    fn gain_scan(
+        &self,
+        g_cum: &[f64],
+        h_cum: &[f64],
+        d: usize,
+        n_bins: usize,
+        g_total: f64,
+        h_total: f64,
+        lambda: f64,
+    ) -> Vec<f64>;
+}
+
+/// Pure-Rust reference engine.
+#[derive(Default, Clone, Copy, Debug)]
+pub struct CpuEngine;
+
+impl ComputeEngine for CpuEngine {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn gh_binary(&self, y: &[f64], logits: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        loss::compute_gh(loss::Objective::BinaryLogistic, y, logits)
+    }
+
+    fn gh_softmax(&self, y: &[f64], logits: &[f64], k: usize) -> (Vec<f64>, Vec<f64>) {
+        loss::compute_gh(loss::Objective::SoftmaxCE { k }, y, logits)
+    }
+
+    fn histogram(
+        &self,
+        bin_idx: &[u8],
+        n: usize,
+        d: usize,
+        n_bins: usize,
+        g: &[f64],
+        h: &[f64],
+    ) -> (Vec<f64>, Vec<f64>, Vec<u32>) {
+        let mut gh = vec![0.0f64; d * n_bins];
+        let mut hh = vec![0.0f64; d * n_bins];
+        let mut ch = vec![0u32; d * n_bins];
+        for i in 0..n {
+            let row = &bin_idx[i * d..(i + 1) * d];
+            for (f, &b) in row.iter().enumerate() {
+                let cell = f * n_bins + b as usize;
+                gh[cell] += g[i];
+                hh[cell] += h[i];
+                ch[cell] += 1;
+            }
+        }
+        (gh, hh, ch)
+    }
+
+    fn gain_scan(
+        &self,
+        g_cum: &[f64],
+        h_cum: &[f64],
+        d: usize,
+        n_bins: usize,
+        g_total: f64,
+        h_total: f64,
+        lambda: f64,
+    ) -> Vec<f64> {
+        let mut out = vec![0.0f64; d * n_bins];
+        let parent = g_total * g_total / (h_total + lambda);
+        for f in 0..d {
+            for b in 0..n_bins - 1 {
+                let cell = f * n_bins + b;
+                let gl = g_cum[cell];
+                let hl = h_cum[cell];
+                let gr = g_total - gl;
+                let hr = h_total - hl;
+                out[cell] =
+                    0.5 * (gl * gl / (hl + lambda) + gr * gr / (hr + lambda) - parent);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_totals() {
+        let e = CpuEngine;
+        let n = 10;
+        let d = 2;
+        let bins: Vec<u8> = (0..n * d).map(|i| (i % 4) as u8).collect();
+        let g: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let h = vec![1.0; n];
+        let (gh, hh, ch) = e.histogram(&bins, n, d, 4, &g, &h);
+        for f in 0..d {
+            let gs: f64 = (0..4).map(|b| gh[f * 4 + b]).sum();
+            let hs: f64 = (0..4).map(|b| hh[f * 4 + b]).sum();
+            let cs: u32 = (0..4).map(|b| ch[f * 4 + b]).sum();
+            assert!((gs - 45.0).abs() < 1e-12);
+            assert!((hs - 10.0).abs() < 1e-12);
+            assert_eq!(cs, 10);
+        }
+    }
+
+    #[test]
+    fn gain_scan_matches_split_module() {
+        let e = CpuEngine;
+        // single feature, 4 bins, simple cumulative stats
+        let g_cum = [1.0, 3.0, 2.5, 4.0];
+        let h_cum = [2.0, 4.0, 6.0, 8.0];
+        let gains = e.gain_scan(&g_cum, &h_cum, 1, 4, 4.0, 8.0, 0.5);
+        for b in 0..3 {
+            let expect = crate::tree::split::gain_scalar(
+                g_cum[b],
+                h_cum[b],
+                4.0 - g_cum[b],
+                8.0 - h_cum[b],
+                4.0,
+                8.0,
+                0.5,
+            );
+            assert!((gains[b] - expect).abs() < 1e-12);
+        }
+        assert_eq!(gains[3], 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! The compute-engine abstraction and the PJRT runtime that executes the
+//! AOT-compiled JAX/Pallas artifacts from `artifacts/*.hlo.txt`.
+//!
+//! The guest's plaintext numeric work (g/h from predictions, histogram
+//! aggregation, gain scans) is expressed once in JAX (L2) on top of Pallas
+//! kernels (L1), lowered at build time, and executed here through the
+//! `xla` crate's PJRT CPU client — Python never runs at training time.
+
+pub mod engine;
+pub mod pjrt;

@@ -1,0 +1,577 @@
+//! Histograms — the computational heart of histogram-based GBDT.
+//!
+//! Two families:
+//! - [`PlainHistogram`] — f64 statistics, used by the guest for its own
+//!   features and by the centralized baseline. Generalizes to width-`w`
+//!   statistic vectors for multi-output trees.
+//! - [`CipherHistogram`] — homomorphic-ciphertext statistics built by
+//!   hosts over the guest's encrypted packed gh (paper Alg. 1/5). Cells
+//!   hold `n_k` ciphertexts per bin (1 for packed binary, 2 for the
+//!   unpacked SecureBoost baseline, ⌈k/η_c⌉ for SecureBoost-MO).
+//!
+//! Both support the sibling trick (paper §4.3): `sibling = parent − child`
+//! per cell, which for ciphertexts replaces `n_sibling` homomorphic adds
+//! per feature with `n_bins` subtractions.
+
+use crate::crypto::cipher::{CipherSuite, Ct};
+use crate::data::binning::BinnedMatrix;
+use crate::data::sparse::SparseBinned;
+use crate::util::pool::parallel_for_dynamic;
+
+/// Plaintext histogram: per (feature, bin), Σg / Σh (width-w) and counts.
+#[derive(Clone, Debug)]
+pub struct PlainHistogram {
+    pub n_features: usize,
+    pub n_bins: usize,
+    /// Statistic width (1 = scalar g/h, k = multi-output).
+    pub w: usize,
+    /// `g[(f*n_bins + b)*w + j]`
+    pub g: Vec<f64>,
+    pub h: Vec<f64>,
+    pub count: Vec<u32>,
+}
+
+impl PlainHistogram {
+    pub fn zeros(n_features: usize, n_bins: usize, w: usize) -> Self {
+        PlainHistogram {
+            n_features,
+            n_bins,
+            w,
+            g: vec![0.0; n_features * n_bins * w],
+            h: vec![0.0; n_features * n_bins * w],
+            count: vec![0u32; n_features * n_bins],
+        }
+    }
+
+    #[inline]
+    pub fn cell(&self, f: usize, b: usize) -> usize {
+        f * self.n_bins + b
+    }
+
+    /// Dense build over the instances of one node.
+    pub fn build(
+        bm: &BinnedMatrix,
+        n_bins: usize,
+        instances: &[u32],
+        g: &[f64],
+        h: &[f64],
+        w: usize,
+    ) -> Self {
+        let mut hist = Self::zeros(bm.d, n_bins, w);
+        for &i in instances {
+            let i = i as usize;
+            let row = bm.row(i);
+            for (f, &b) in row.iter().enumerate() {
+                let cell = hist.cell(f, b as usize);
+                hist.count[cell] += 1;
+                let base = cell * w;
+                for j in 0..w {
+                    hist.g[base + j] += g[i * w + j];
+                    hist.h[base + j] += h[i * w + j];
+                }
+            }
+        }
+        hist
+    }
+
+    /// Sparse-aware build (paper §6.2): only stored entries are visited;
+    /// each feature's zero-bin statistics are recovered from the node
+    /// totals by subtraction.
+    pub fn build_sparse(
+        sb: &SparseBinned,
+        n_bins: usize,
+        instances: &[u32],
+        g: &[f64],
+        h: &[f64],
+        w: usize,
+        node_g: &[f64],
+        node_h: &[f64],
+        node_count: u32,
+    ) -> Self {
+        let mut hist = Self::zeros(sb.d, n_bins, w);
+        for &i in instances {
+            let i = i as usize;
+            for (f, b) in sb.row(i) {
+                let cell = hist.cell(f as usize, b as usize);
+                hist.count[cell] += 1;
+                let base = cell * w;
+                for j in 0..w {
+                    hist.g[base + j] += g[i * w + j];
+                    hist.h[base + j] += h[i * w + j];
+                }
+            }
+        }
+        // zero-bin recovery: whole-node totals minus what this feature saw
+        for f in 0..sb.d {
+            let (mut fg, mut fh) = (vec![0.0; w], vec![0.0; w]);
+            let mut fc = 0u32;
+            for b in 0..n_bins {
+                let cell = hist.cell(f, b);
+                fc += hist.count[cell];
+                for j in 0..w {
+                    fg[j] += hist.g[cell * w + j];
+                    fh[j] += hist.h[cell * w + j];
+                }
+            }
+            let zb = sb.zero_bins[f] as usize;
+            let cell = hist.cell(f, zb);
+            hist.count[cell] += node_count - fc;
+            for j in 0..w {
+                hist.g[cell * w + j] += node_g[j] - fg[j];
+                hist.h[cell * w + j] += node_h[j] - fh[j];
+            }
+        }
+        hist
+    }
+
+    /// `self − other`, elementwise (parent − child = sibling).
+    pub fn subtract(&self, child: &PlainHistogram) -> PlainHistogram {
+        assert_eq!(self.g.len(), child.g.len());
+        let mut out = self.clone();
+        for (o, c) in out.g.iter_mut().zip(&child.g) {
+            *o -= c;
+        }
+        for (o, c) in out.h.iter_mut().zip(&child.h) {
+            *o -= c;
+        }
+        for (o, c) in out.count.iter_mut().zip(&child.count) {
+            *o -= c;
+        }
+        out
+    }
+
+    /// In-place per-feature prefix sum over bins (paper Alg. 1 cumsum).
+    pub fn cumsum(&mut self) {
+        for f in 0..self.n_features {
+            for b in 1..self.n_bins {
+                let prev = self.cell(f, b - 1);
+                let cur = self.cell(f, b);
+                self.count[cur] += self.count[prev];
+                for j in 0..self.w {
+                    self.g[cur * self.w + j] = self.g[cur * self.w + j] + self.g[prev * self.w + j];
+                    self.h[cur * self.w + j] = self.h[cur * self.w + j] + self.h[prev * self.w + j];
+                }
+            }
+        }
+    }
+}
+
+/// Ciphertext histogram: per (feature, bin), `n_k` ciphertext slots of
+/// aggregated packed gh, plus plaintext sample counts (counts are public
+/// in the protocol — the paper shares them via split-info sample_count).
+pub struct CipherHistogram {
+    pub n_features: usize,
+    pub n_bins: usize,
+    /// Ciphertexts per cell.
+    pub n_k: usize,
+    pub cells: Vec<Ct>,
+    pub count: Vec<u32>,
+}
+
+impl CipherHistogram {
+    pub fn zeros(suite: &CipherSuite, n_features: usize, n_bins: usize, n_k: usize) -> Self {
+        CipherHistogram {
+            n_features,
+            n_bins,
+            n_k,
+            cells: vec![suite.zero_ct(); n_features * n_bins * n_k],
+            count: vec![0u32; n_features * n_bins],
+        }
+    }
+
+    #[inline]
+    pub fn cell(&self, f: usize, b: usize) -> usize {
+        f * self.n_bins + b
+    }
+
+    /// Dense ciphertext build (paper Alg. 1 / 5). `pos[id]` maps an
+    /// instance id to its row in `packed` (the guest ships ciphertexts in
+    /// sample order so unsampled instances are never encrypted). Parallel
+    /// across features — each feature column accumulates into disjoint
+    /// cells.
+    pub fn build(
+        suite: &CipherSuite,
+        bm: &BinnedMatrix,
+        n_bins: usize,
+        instances: &[u32],
+        packed: &[Ct],
+        pos: &[u32],
+        n_k: usize,
+    ) -> Self {
+        let mut hist = Self::zeros(suite, bm.d, n_bins, n_k);
+        let cells_ptr = SendPtr(hist.cells.as_mut_ptr());
+        let count_ptr = SendPtr(hist.count.as_mut_ptr());
+        parallel_for_dynamic(bm.d, 1, move |f| {
+            let cells_ptr = cells_ptr;
+            let count_ptr = count_ptr;
+            for &i in instances {
+                let i = i as usize;
+                let row = pos[i] as usize;
+                let b = bm.bin(i, f) as usize;
+                let cell = f * n_bins + b;
+                // SAFETY: each worker owns feature f's cells exclusively.
+                unsafe {
+                    *count_ptr.0.add(cell) += 1;
+                    for j in 0..n_k {
+                        let slot = &mut *cells_ptr.0.add(cell * n_k + j);
+                        suite.add_assign(slot, &packed[row * n_k + j]);
+                    }
+                }
+            }
+        });
+        hist
+    }
+
+    /// Sparse-aware ciphertext build: visits only stored entries, then
+    /// recovers each feature's zero bin as `node_total − Σ stored bins`
+    /// (two homomorphic ops per feature instead of per-instance adds).
+    pub fn build_sparse(
+        suite: &CipherSuite,
+        sb: &SparseBinned,
+        n_bins: usize,
+        instances: &[u32],
+        packed: &[Ct],
+        pos: &[u32],
+        n_k: usize,
+        node_total: &[Ct],
+        node_count: u32,
+    ) -> Self {
+        assert_eq!(node_total.len(), n_k);
+        let mut hist = Self::zeros(suite, sb.d, n_bins, n_k);
+        // Sparse layout is row-major, so single-threaded accumulation per
+        // feature is racy; accumulate per-row instead, locking nothing by
+        // chunking rows per worker into thread-local histograms would cost
+        // memory (f*b ciphertexts per worker). Entry counts are already
+        // ~density × n × d, so we walk rows serially but parallelize the
+        // expensive zero-bin recovery + later cumsum instead.
+        for &i in instances {
+            let i = i as usize;
+            let row = pos[i] as usize;
+            for (f, b) in sb.row(i) {
+                let cell = hist.cell(f as usize, b as usize);
+                hist.count[cell] += 1;
+                for j in 0..n_k {
+                    let idx = cell * n_k + j;
+                    // split_at_mut dance not needed: cells[idx] and packed
+                    // never alias
+                    let slot = &mut hist.cells[idx];
+                    suite.add_assign(slot, &packed[row * n_k + j]);
+                }
+            }
+        }
+        let zero_bins = &sb.zero_bins;
+        let cells_ptr = SendPtr(hist.cells.as_mut_ptr());
+        let count_ptr = SendPtr(hist.count.as_mut_ptr());
+        let countsnap: Vec<u32> = hist.count.clone();
+        parallel_for_dynamic(sb.d, 1, move |f| {
+            let cells_ptr = cells_ptr;
+            let count_ptr = count_ptr;
+            let mut fc = 0u32;
+            // Σ over this feature's stored bins (cheap adds), then ONE
+            // negation per feature: fsum = total − Σ stored. Negation is
+            // the expensive op (~a modular inverse), so it must not run
+            // per bin — this is exactly the paper's "two homomorphic
+            // additions" claim for sparse recovery (§6.2).
+            let mut acc: Vec<Ct> = vec![suite.zero_ct(); n_k];
+            for b in 0..n_bins {
+                let cell = f * n_bins + b;
+                fc += countsnap[cell];
+                if countsnap[cell] == 0 {
+                    continue;
+                }
+                unsafe {
+                    for (j, a) in acc.iter_mut().enumerate() {
+                        let stored = &*cells_ptr.0.add(cell * n_k + j);
+                        suite.add_assign(a, stored);
+                    }
+                }
+            }
+            let zb = zero_bins[f] as usize;
+            let cell = f * n_bins + zb;
+            unsafe {
+                *count_ptr.0.add(cell) += node_count - fc;
+                for (j, a) in acc.into_iter().enumerate() {
+                    let fs = suite.sub(&node_total[j], &a);
+                    let slot = &mut *cells_ptr.0.add(cell * n_k + j);
+                    suite.add_assign(slot, &fs);
+                }
+            }
+        });
+        hist
+    }
+
+    /// Sibling via homomorphic subtraction (paper §4.3, Figure 2).
+    pub fn subtract(&self, suite: &CipherSuite, child: &CipherHistogram) -> CipherHistogram {
+        assert_eq!(self.cells.len(), child.cells.len());
+        let n_cells = self.cells.len();
+        let mut out = CipherHistogram {
+            n_features: self.n_features,
+            n_bins: self.n_bins,
+            n_k: self.n_k,
+            cells: vec![suite.zero_ct(); n_cells],
+            count: self
+                .count
+                .iter()
+                .zip(&child.count)
+                .map(|(p, c)| p - c)
+                .collect(),
+        };
+        let out_ptr = SendPtr(out.cells.as_mut_ptr());
+        parallel_for_dynamic(n_cells, 8, move |i| {
+            let out_ptr = out_ptr;
+            unsafe {
+                *out_ptr.0.add(i) = suite.sub(&self.cells[i], &child.cells[i]);
+            }
+        });
+        out
+    }
+
+    /// Per-feature ciphertext prefix sums over bins (Alg. 1 cumsum),
+    /// parallel across features.
+    pub fn cumsum(&mut self, suite: &CipherSuite) {
+        let n_bins = self.n_bins;
+        let n_k = self.n_k;
+        let cells_ptr = SendPtr(self.cells.as_mut_ptr());
+        let count_ptr = SendPtr(self.count.as_mut_ptr());
+        parallel_for_dynamic(self.n_features, 1, move |f| {
+            let cells_ptr = cells_ptr;
+            let count_ptr = count_ptr;
+            for b in 1..n_bins {
+                let prev = f * n_bins + b - 1;
+                let cur = f * n_bins + b;
+                unsafe {
+                    *count_ptr.0.add(cur) += *count_ptr.0.add(prev);
+                    for j in 0..n_k {
+                        let prev_ct: &Ct = &*cells_ptr.0.add(prev * n_k + j);
+                        let slot = &mut *cells_ptr.0.add(cur * n_k + j);
+                        suite.add_assign(slot, prev_ct);
+                    }
+                }
+            }
+        });
+    }
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::packing::GhPacker;
+    use crate::data::binning::bin_party;
+    use crate::data::dataset::PartySlice;
+    use crate::util::rng::{ChaCha20Rng, Xoshiro256};
+
+    fn toy_binned(n: usize, d: usize, seed: u64) -> BinnedMatrix {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.next_gaussian()).collect();
+        let slice = PartySlice { cols: (0..d).collect(), x, n };
+        bin_party(&slice, 8)
+    }
+
+    #[test]
+    fn plain_build_totals() {
+        let bm = toy_binned(200, 4, 1);
+        let g: Vec<f64> = (0..200).map(|i| i as f64 * 0.01 - 1.0).collect();
+        let h: Vec<f64> = (0..200).map(|i| i as f64 * 0.001).collect();
+        let instances: Vec<u32> = (0..200).collect();
+        let hist = PlainHistogram::build(&bm, 8, &instances, &g, &h, 1);
+        // every feature's bins must sum to the node totals
+        let gt: f64 = g.iter().sum();
+        let ht: f64 = h.iter().sum();
+        for f in 0..4 {
+            let fg: f64 = (0..8).map(|b| hist.g[hist.cell(f, b)]).sum();
+            let fh: f64 = (0..8).map(|b| hist.h[hist.cell(f, b)]).sum();
+            let fc: u32 = (0..8).map(|b| hist.count[hist.cell(f, b)]).sum();
+            assert!((fg - gt).abs() < 1e-9);
+            assert!((fh - ht).abs() < 1e-9);
+            assert_eq!(fc, 200);
+        }
+    }
+
+    #[test]
+    fn plain_subtract_equals_direct() {
+        let bm = toy_binned(300, 3, 2);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let g: Vec<f64> = (0..300).map(|_| rng.next_gaussian()).collect();
+        let h: Vec<f64> = (0..300).map(|_| rng.next_f64()).collect();
+        let all: Vec<u32> = (0..300).collect();
+        let left: Vec<u32> = (0..120).collect();
+        let right: Vec<u32> = (120..300).collect();
+        let hp = PlainHistogram::build(&bm, 8, &all, &g, &h, 1);
+        let hl = PlainHistogram::build(&bm, 8, &left, &g, &h, 1);
+        let hr_direct = PlainHistogram::build(&bm, 8, &right, &g, &h, 1);
+        let hr_sub = hp.subtract(&hl);
+        for i in 0..hr_direct.g.len() {
+            assert!((hr_sub.g[i] - hr_direct.g[i]).abs() < 1e-9);
+            assert!((hr_sub.h[i] - hr_direct.h[i]).abs() < 1e-9);
+        }
+        assert_eq!(hr_sub.count, hr_direct.count);
+    }
+
+    #[test]
+    fn plain_cumsum_monotone_counts() {
+        let bm = toy_binned(100, 2, 4);
+        let g = vec![0.5; 100];
+        let h = vec![0.25; 100];
+        let all: Vec<u32> = (0..100).collect();
+        let mut hist = PlainHistogram::build(&bm, 8, &all, &g, &h, 1);
+        hist.cumsum();
+        for f in 0..2 {
+            assert_eq!(hist.count[hist.cell(f, 7)], 100);
+            assert!((hist.g[hist.cell(f, 7)] - 50.0).abs() < 1e-9);
+            for b in 1..8 {
+                assert!(hist.count[hist.cell(f, b)] >= hist.count[hist.cell(f, b - 1)]);
+            }
+        }
+    }
+
+    #[test]
+    fn plain_multi_width() {
+        let bm = toy_binned(50, 2, 5);
+        let w = 3;
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let g: Vec<f64> = (0..50 * w).map(|_| rng.next_gaussian()).collect();
+        let h: Vec<f64> = (0..50 * w).map(|_| rng.next_f64()).collect();
+        let all: Vec<u32> = (0..50).collect();
+        let hist = PlainHistogram::build(&bm, 8, &all, &g, &h, w);
+        for j in 0..w {
+            let gt: f64 = (0..50).map(|i| g[i * w + j]).sum();
+            let fg: f64 = (0..8).map(|b| hist.g[hist.cell(0, b) * w + j]).sum();
+            assert!((fg - gt).abs() < 1e-9, "class {j}");
+        }
+    }
+
+    fn cipher_fixture() -> (CipherSuite, GhPacker, Vec<Ct>, Vec<f64>, Vec<f64>, BinnedMatrix) {
+        let mut crng = ChaCha20Rng::from_u64(42);
+        let suite = CipherSuite::new_paillier(512, &mut crng);
+        let n = 60;
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let g: Vec<f64> = (0..n).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+        let h: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let packer = GhPacker::plan(&g, &h, n as u64, 40);
+        let plains = packer.pack_all(&g, &h);
+        let cts = suite.encrypt_batch(&plains, &mut crng);
+        let bm = toy_binned(n, 2, 8);
+        (suite, packer, cts, g, h, bm)
+    }
+
+    fn decrypt_cell(
+        suite: &CipherSuite,
+        packer: &GhPacker,
+        hist: &CipherHistogram,
+        f: usize,
+        b: usize,
+    ) -> (f64, f64) {
+        let cell = hist.cell(f, b);
+        let d = suite.decrypt(&hist.cells[cell]);
+        packer.unpack_sum(&d, hist.count[cell] as u64)
+    }
+
+    #[test]
+    fn cipher_build_matches_plain() {
+        let (suite, packer, cts, g, h, bm) = cipher_fixture();
+        let all: Vec<u32> = (0..60).collect();
+        let pos: Vec<u32> = (0..60).collect();
+        let chist = CipherHistogram::build(&suite, &bm, 8, &all, &cts, &pos, 1);
+        let phist = PlainHistogram::build(&bm, 8, &all, &g, &h, 1);
+        for f in 0..2 {
+            for b in 0..8 {
+                let (cg, ch) = decrypt_cell(&suite, &packer, &chist, f, b);
+                let cell = phist.cell(f, b);
+                assert!((cg - phist.g[cell]).abs() < 1e-6, "f{f} b{b}");
+                assert!((ch - phist.h[cell]).abs() < 1e-6);
+                assert_eq!(chist.count[cell], phist.count[cell]);
+            }
+        }
+    }
+
+    #[test]
+    fn cipher_subtract_matches_direct() {
+        let (suite, packer, cts, _g, _h, bm) = cipher_fixture();
+        let all: Vec<u32> = (0..60).collect();
+        let left: Vec<u32> = (0..25).collect();
+        let right: Vec<u32> = (25..60).collect();
+        let pos: Vec<u32> = (0..60).collect();
+        let hp = CipherHistogram::build(&suite, &bm, 8, &all, &cts, &pos, 1);
+        let hl = CipherHistogram::build(&suite, &bm, 8, &left, &cts, &pos, 1);
+        let hr_direct = CipherHistogram::build(&suite, &bm, 8, &right, &cts, &pos, 1);
+        let hr = hp.subtract(&suite, &hl);
+        for f in 0..2 {
+            for b in 0..8 {
+                let (sg, sh) = decrypt_cell(&suite, &packer, &hr, f, b);
+                let (dg, dh) = decrypt_cell(&suite, &packer, &hr_direct, f, b);
+                assert!((sg - dg).abs() < 1e-6, "f{f} b{b}: {sg} vs {dg}");
+                assert!((sh - dh).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn cipher_cumsum_last_bin_is_total() {
+        let (suite, packer, cts, g, h, bm) = cipher_fixture();
+        let all: Vec<u32> = (0..60).collect();
+        let pos: Vec<u32> = (0..60).collect();
+        let mut hist = CipherHistogram::build(&suite, &bm, 8, &all, &cts, &pos, 1);
+        hist.cumsum(&suite);
+        let gt: f64 = g.iter().sum();
+        let ht: f64 = h.iter().sum();
+        for f in 0..2 {
+            let (cg, ch) = decrypt_cell(&suite, &packer, &hist, f, 7);
+            assert!((cg - gt).abs() < 1e-6);
+            assert!((ch - ht).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cipher_sparse_build_matches_dense() {
+        use crate::data::sparse::SparseBinned;
+        let (suite, packer, cts, _g, _h, bm) = cipher_fixture();
+        // mark ~40% of entries "zero" (elide them); zero_bins must absorb
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let mask: Vec<bool> = (0..60 * 2).map(|_| rng.next_f64() < 0.4).collect();
+        // dense reference: entries counted into their own bins, BUT the
+        // sparse path puts elided entries into the feature's zero_bin; to
+        // compare we build the dense equivalent with masked bins rewritten.
+        let mut bm2 = bm.clone();
+        for r in 0..60 {
+            for c in 0..2 {
+                if mask[r * 2 + c] {
+                    bm2.bins[r * 2 + c] = bm.specs[c].zero_bin;
+                }
+            }
+        }
+        let all: Vec<u32> = (0..60).collect();
+        let pos: Vec<u32> = (0..60).collect();
+        let dense_ref = CipherHistogram::build(&suite, &bm2, 8, &all, &cts, &pos, 1);
+
+        let sb = SparseBinned::from_dense(&bm, |r, c| mask[r * 2 + c]);
+        // node totals: Σ packed over node instances
+        let mut total = suite.zero_ct();
+        for i in 0..60 {
+            suite.add_assign(&mut total, &cts[i]);
+        }
+        let sparse =
+            CipherHistogram::build_sparse(&suite, &sb, 8, &all, &cts, &pos, 1, &[total], 60);
+        for f in 0..2 {
+            for b in 0..8 {
+                let (sg, sh) = decrypt_cell(&suite, &packer, &sparse, f, b);
+                let (dg, dh) = decrypt_cell(&suite, &packer, &dense_ref, f, b);
+                assert!((sg - dg).abs() < 1e-6, "f{f} b{b}");
+                assert!((sh - dh).abs() < 1e-6);
+                assert_eq!(
+                    sparse.count[sparse.cell(f, b)],
+                    dense_ref.count[dense_ref.cell(f, b)]
+                );
+            }
+        }
+    }
+}

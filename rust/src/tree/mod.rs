@@ -1,0 +1,7 @@
+//! Decision-tree machinery: tree structure, plaintext + ciphertext
+//! histograms (with subtraction), split gain and split finding.
+
+pub mod histogram;
+pub mod node;
+pub mod predict;
+pub mod split;

@@ -1,0 +1,133 @@
+//! Federated decision-tree structure.
+//!
+//! A node's split either belongs to the guest (feature + bin are known to
+//! the guest) or to a host, in which case the guest's copy of the tree
+//! stores only an opaque `(party, handle)` — the host privately resolves
+//! the handle to its local (feature, bin) pair. This mirrors the paper's
+//! split-info shuffling: the guest never learns host feature semantics.
+
+/// Who owns a split and what the owner needs to apply it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SplitRef {
+    /// Guest-owned: local feature index, bin threshold ("≤ bin → left"),
+    /// and the raw-value threshold for unbinned inference.
+    Guest { feature: u32, bin: u8, threshold: f64 },
+    /// Host-owned: opaque handle into the host's private split table.
+    Host { party: u8, handle: u32 },
+}
+
+/// One node of a (possibly multi-output) decision tree.
+#[derive(Clone, Debug)]
+pub struct TreeNode {
+    pub id: u32,
+    pub parent: i32,
+    pub left: i32,
+    pub right: i32,
+    pub depth: u8,
+    pub split: Option<SplitRef>,
+    /// Leaf output(s): 1 value for binary, k for multi-output trees.
+    pub weight: Vec<f64>,
+    pub n_samples: u32,
+    pub sum_g: Vec<f64>,
+    pub sum_h: Vec<f64>,
+    pub gain: f64,
+}
+
+impl TreeNode {
+    pub fn new_root(width: usize) -> Self {
+        TreeNode {
+            id: 0,
+            parent: -1,
+            left: -1,
+            right: -1,
+            depth: 0,
+            split: None,
+            weight: vec![0.0; width],
+            n_samples: 0,
+            sum_g: vec![0.0; width],
+            sum_h: vec![0.0; width],
+            gain: 0.0,
+        }
+    }
+
+    pub fn is_leaf(&self) -> bool {
+        self.split.is_none()
+    }
+}
+
+/// A grown tree. `width` is the leaf-output dimension (1 or #classes).
+#[derive(Clone, Debug)]
+pub struct Tree {
+    pub nodes: Vec<TreeNode>,
+    pub width: usize,
+}
+
+impl Tree {
+    pub fn new(width: usize) -> Self {
+        Tree { nodes: vec![TreeNode::new_root(width)], width }
+    }
+
+    /// Attach two children to `node_id`; returns (left_id, right_id).
+    pub fn split_node(&mut self, node_id: u32, split: SplitRef) -> (u32, u32) {
+        let depth = self.nodes[node_id as usize].depth;
+        let left_id = self.nodes.len() as u32;
+        let right_id = left_id + 1;
+        let mk = |id: u32| TreeNode {
+            id,
+            parent: node_id as i32,
+            depth: depth + 1,
+            ..TreeNode::new_root(self.width)
+        };
+        self.nodes.push(mk(left_id));
+        self.nodes.push(mk(right_id));
+        let node = &mut self.nodes[node_id as usize];
+        node.split = Some(split);
+        node.left = left_id as i32;
+        node.right = right_id as i32;
+        (left_id, right_id)
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_leaf()).count()
+    }
+
+    pub fn max_depth(&self) -> u8 {
+        self.nodes.iter().map(|n| n.depth).max().unwrap_or(0)
+    }
+
+    /// Ids of the current leaves (used by layer-wise growth).
+    pub fn leaf_ids(&self) -> Vec<u32> {
+        self.nodes.iter().filter(|n| n.is_leaf()).map(|n| n.id).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grow_structure() {
+        let mut t = Tree::new(1);
+        assert_eq!(t.n_leaves(), 1);
+        let (l, r) = t.split_node(
+            0,
+            SplitRef::Guest { feature: 3, bin: 7, threshold: 1.5 },
+        );
+        assert_eq!((l, r), (1, 2));
+        assert_eq!(t.n_leaves(), 2);
+        assert_eq!(t.nodes[0].left, 1);
+        assert_eq!(t.nodes[1].parent, 0);
+        assert_eq!(t.nodes[1].depth, 1);
+        let (l2, _r2) = t.split_node(l, SplitRef::Host { party: 0, handle: 9 });
+        assert_eq!(t.nodes[l2 as usize].depth, 2);
+        assert_eq!(t.max_depth(), 2);
+        assert_eq!(t.leaf_ids(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn multi_output_width() {
+        let t = Tree::new(5);
+        assert_eq!(t.nodes[0].weight.len(), 5);
+        assert_eq!(t.nodes[0].sum_g.len(), 5);
+    }
+}

@@ -1,0 +1,297 @@
+//! Federated inference and model (de)serialization.
+//!
+//! A trained model is split across parties exactly like the training
+//! data: the guest holds tree structures, leaf weights and its own split
+//! thresholds; each host holds a private table mapping its split handles
+//! to (feature, threshold). Inference routes an instance level by level,
+//! asking the owning party for each decision — here the parties are
+//! colocated structs, in deployment they are FATE-style services.
+//!
+//! Serialization is per-party JSON (a host's table never leaves it).
+
+use super::node::{SplitRef, Tree, TreeNode};
+use crate::config::json::Json;
+
+/// A host's private share of a model: handle → (local feature, threshold).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostModel {
+    pub party: u8,
+    /// Indexed by handle: (local feature index, bin, raw-value threshold).
+    pub splits: Vec<(u32, u8, f64)>,
+}
+
+impl HostModel {
+    /// Route one instance: does it go left under `handle`?
+    pub fn goes_left(&self, handle: u32, row: &[f64]) -> bool {
+        let (feature, _bin, threshold) = self.splits[handle as usize];
+        row[feature as usize] <= threshold
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("party", Json::Num(self.party as f64)),
+            (
+                "splits",
+                Json::Arr(
+                    self.splits
+                        .iter()
+                        .map(|(f, b, t)| {
+                            Json::Arr(vec![
+                                Json::Num(*f as f64),
+                                Json::Num(*b as f64),
+                                Json::Num(*t),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let party = v.get("party").and_then(Json::as_f64).ok_or("missing party")? as u8;
+        let splits = v
+            .get("splits")
+            .and_then(Json::as_arr)
+            .ok_or("missing splits")?
+            .iter()
+            .map(|row| {
+                let a = row.as_arr().ok_or("bad split row")?;
+                Ok((
+                    a[0].as_f64().ok_or("bad feature")? as u32,
+                    a[1].as_f64().ok_or("bad bin")? as u8,
+                    a[2].as_f64().ok_or("bad threshold")?,
+                ))
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(HostModel { party, splits })
+    }
+}
+
+/// The guest's share: the boosted trees (host splits are opaque handles).
+#[derive(Clone, Debug)]
+pub struct GuestModel {
+    /// (tree, class): class 0 for binary / multi-output trees.
+    pub trees: Vec<(Tree, usize)>,
+    pub n_classes: usize,
+    /// Width of a prediction row (1 binary, k multi-class).
+    pub pred_width: usize,
+}
+
+impl GuestModel {
+    /// Predict one instance from raw (unbinned) per-party feature rows.
+    /// `guest_row` is the guest's features; `hosts[p]`/`host_rows[p]` the
+    /// p-th host's model share and features.
+    pub fn predict_row(
+        &self,
+        guest_row: &[f64],
+        hosts: &[HostModel],
+        host_rows: &[&[f64]],
+    ) -> Vec<f64> {
+        let mut out = vec![0.0; self.pred_width];
+        for (tree, class) in &self.trees {
+            let mut cur = 0usize;
+            loop {
+                let node: &TreeNode = &tree.nodes[cur];
+                match &node.split {
+                    None => {
+                        if tree.width == 1 {
+                            out[*class] += node.weight[0];
+                        } else {
+                            for (j, &w) in node.weight.iter().enumerate() {
+                                out[j] += w;
+                            }
+                        }
+                        break;
+                    }
+                    Some(SplitRef::Guest { feature, threshold, .. }) => {
+                        let left = guest_row[*feature as usize] <= *threshold;
+                        cur = if left { node.left as usize } else { node.right as usize };
+                    }
+                    Some(SplitRef::Host { party, handle }) => {
+                        let p = *party as usize;
+                        let left = hosts[p].goes_left(*handle, host_rows[p]);
+                        cur = if left { node.left as usize } else { node.right as usize };
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let trees = self
+            .trees
+            .iter()
+            .map(|(t, class)| {
+                Json::obj(vec![
+                    ("class", Json::Num(*class as f64)),
+                    ("width", Json::Num(t.width as f64)),
+                    (
+                        "nodes",
+                        Json::Arr(t.nodes.iter().map(node_to_json).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("n_classes", Json::Num(self.n_classes as f64)),
+            ("pred_width", Json::Num(self.pred_width as f64)),
+            ("trees", Json::Arr(trees)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let n_classes =
+            v.get("n_classes").and_then(Json::as_usize).ok_or("missing n_classes")?;
+        let pred_width =
+            v.get("pred_width").and_then(Json::as_usize).ok_or("missing pred_width")?;
+        let trees = v
+            .get("trees")
+            .and_then(Json::as_arr)
+            .ok_or("missing trees")?
+            .iter()
+            .map(|tv| {
+                let class = tv.get("class").and_then(Json::as_usize).ok_or("class")?;
+                let width = tv.get("width").and_then(Json::as_usize).ok_or("width")?;
+                let nodes = tv
+                    .get("nodes")
+                    .and_then(Json::as_arr)
+                    .ok_or("nodes")?
+                    .iter()
+                    .map(node_from_json)
+                    .collect::<Result<Vec<_>, String>>()?;
+                Ok((Tree { nodes, width }, class))
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(GuestModel { trees, n_classes, pred_width })
+    }
+}
+
+fn node_to_json(n: &TreeNode) -> Json {
+    let split = match &n.split {
+        None => Json::Null,
+        Some(SplitRef::Guest { feature, bin, threshold }) => Json::obj(vec![
+            ("kind", Json::Str("guest".into())),
+            ("feature", Json::Num(*feature as f64)),
+            ("bin", Json::Num(*bin as f64)),
+            ("threshold", Json::Num(*threshold)),
+        ]),
+        Some(SplitRef::Host { party, handle }) => Json::obj(vec![
+            ("kind", Json::Str("host".into())),
+            ("party", Json::Num(*party as f64)),
+            ("handle", Json::Num(*handle as f64)),
+        ]),
+    };
+    Json::obj(vec![
+        ("id", Json::Num(n.id as f64)),
+        ("parent", Json::Num(n.parent as f64)),
+        ("left", Json::Num(n.left as f64)),
+        ("right", Json::Num(n.right as f64)),
+        ("depth", Json::Num(n.depth as f64)),
+        ("split", split),
+        ("weight", Json::Arr(n.weight.iter().map(|&w| Json::Num(w)).collect())),
+        ("n_samples", Json::Num(n.n_samples as f64)),
+        ("gain", Json::Num(n.gain)),
+    ])
+}
+
+fn node_from_json(v: &Json) -> Result<TreeNode, String> {
+    let num = |k: &str| v.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing {k}"));
+    let split = match v.get("split") {
+        None | Some(Json::Null) => None,
+        Some(sv) => match sv.get("kind").and_then(Json::as_str) {
+            Some("guest") => Some(SplitRef::Guest {
+                feature: sv.get("feature").and_then(Json::as_f64).ok_or("feature")? as u32,
+                bin: sv.get("bin").and_then(Json::as_f64).ok_or("bin")? as u8,
+                threshold: sv.get("threshold").and_then(Json::as_f64).ok_or("threshold")?,
+            }),
+            Some("host") => Some(SplitRef::Host {
+                party: sv.get("party").and_then(Json::as_f64).ok_or("party")? as u8,
+                handle: sv.get("handle").and_then(Json::as_f64).ok_or("handle")? as u32,
+            }),
+            _ => return Err("bad split kind".into()),
+        },
+    };
+    let weight = v
+        .get("weight")
+        .and_then(Json::as_arr)
+        .ok_or("weight")?
+        .iter()
+        .map(|w| w.as_f64().ok_or_else(|| "bad weight".to_string()))
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(TreeNode {
+        id: num("id")? as u32,
+        parent: num("parent")? as i32,
+        left: num("left")? as i32,
+        right: num("right")? as i32,
+        depth: num("depth")? as u8,
+        split,
+        weight,
+        n_samples: num("n_samples")? as u32,
+        sum_g: Vec::new(), // training-time statistics are not serialized
+        sum_h: Vec::new(),
+        gain: num("gain")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_model() -> (GuestModel, Vec<HostModel>) {
+        let mut t = Tree::new(1);
+        let (l, _r) = t.split_node(
+            0,
+            SplitRef::Guest { feature: 0, bin: 3, threshold: 0.5 },
+        );
+        let (_ll, _lr) = t.split_node(l, SplitRef::Host { party: 0, handle: 1 });
+        // leaves: ids 3,4 (under l) and 2 (right of root)
+        t.nodes[2].weight = vec![1.0];
+        t.nodes[3].weight = vec![2.0];
+        t.nodes[4].weight = vec![3.0];
+        let guest = GuestModel { trees: vec![(t, 0)], n_classes: 2, pred_width: 1 };
+        let host = HostModel { party: 0, splits: vec![(9, 0, 0.0), (1, 2, -1.0)] };
+        (guest, vec![host])
+    }
+
+    #[test]
+    fn routing_guest_and_host_splits() {
+        let (guest, hosts) = toy_model();
+        // guest_row[0] > 0.5 → right leaf (weight 1)
+        let p = guest.predict_row(&[0.9], &hosts, &[&[0.0, 0.0]]);
+        assert_eq!(p, vec![1.0]);
+        // guest left, host feature 1 ≤ −1 → left leaf (weight 2)
+        let p = guest.predict_row(&[0.1], &hosts, &[&[0.0, -2.0]]);
+        assert_eq!(p, vec![2.0]);
+        // guest left, host right → weight 3
+        let p = guest.predict_row(&[0.1], &hosts, &[&[0.0, 5.0]]);
+        assert_eq!(p, vec![3.0]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let (guest, hosts) = toy_model();
+        let gj = guest.to_json().to_string_pretty();
+        let hj = hosts[0].to_json().to_string_pretty();
+        let guest2 = GuestModel::from_json(&Json::parse(&gj).unwrap()).unwrap();
+        let host2 = HostModel::from_json(&Json::parse(&hj).unwrap()).unwrap();
+        assert_eq!(host2, hosts[0]);
+        assert_eq!(guest2.trees.len(), 1);
+        // predictions identical after round-trip
+        for row in [[0.9f64], [0.1]] {
+            for hrow in [[0.0f64, -2.0], [0.0, 5.0]] {
+                assert_eq!(
+                    guest.predict_row(&row, &hosts, &[&hrow]),
+                    guest2.predict_row(&row, &[host2.clone()], &[&hrow]),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        assert!(GuestModel::from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(HostModel::from_json(&Json::parse("{\"party\": 0}").unwrap()).is_err());
+    }
+}

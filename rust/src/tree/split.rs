@@ -1,0 +1,245 @@
+//! Split gain (paper eq. 6; multi-output eq. 19–20), leaf weights
+//! (eq. 7 / 18), and best-split scans over cumulative histograms.
+
+use super::histogram::PlainHistogram;
+
+/// Regularization and structural constraints on splits.
+#[derive(Clone, Copy, Debug)]
+pub struct GainParams {
+    /// L2 leaf regularization λ.
+    pub lambda: f64,
+    /// Minimum Σh on each side of a split (XGBoost's min_child_weight).
+    pub min_child_weight: f64,
+    /// Minimum sample count on each side.
+    pub min_leaf_samples: u32,
+    /// Minimum gain to accept a split.
+    pub min_gain: f64,
+}
+
+impl Default for GainParams {
+    fn default() -> Self {
+        GainParams { lambda: 0.1, min_child_weight: 0.0, min_leaf_samples: 2, min_gain: 1e-6 }
+    }
+}
+
+/// Width-w split gain: ½ Σⱼ [gl²/(hl+λ) + gr²/(hr+λ) − g²/(h+λ)].
+/// For w = 1 this is exactly eq. 6; for w = k it equals eq. 19–20 (the
+/// parent/child score decomposition).
+#[inline]
+pub fn gain(
+    gl: &[f64],
+    hl: &[f64],
+    gr: &[f64],
+    hr: &[f64],
+    gp: &[f64],
+    hp: &[f64],
+    lambda: f64,
+) -> f64 {
+    let mut acc = 0.0;
+    for j in 0..gl.len() {
+        acc += gl[j] * gl[j] / (hl[j] + lambda) + gr[j] * gr[j] / (hr[j] + lambda)
+            - gp[j] * gp[j] / (hp[j] + lambda);
+    }
+    0.5 * acc
+}
+
+/// Scalar fast path for binary trees.
+#[inline]
+pub fn gain_scalar(gl: f64, hl: f64, gr: f64, hr: f64, gp: f64, hp: f64, lambda: f64) -> f64 {
+    0.5 * (gl * gl / (hl + lambda) + gr * gr / (hr + lambda) - gp * gp / (hp + lambda))
+}
+
+/// Leaf weight(s): `w_j = −Σg / (Σh + λ)` per output (eq. 7 / 18).
+pub fn leaf_weight(sum_g: &[f64], sum_h: &[f64], lambda: f64, learning_rate: f64) -> Vec<f64> {
+    sum_g
+        .iter()
+        .zip(sum_h)
+        .map(|(&g, &h)| -g / (h + lambda) * learning_rate)
+        .collect()
+}
+
+/// A candidate split found locally (feature indices are party-local).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LocalSplit {
+    pub feature: u32,
+    pub bin: u8,
+    pub gain: f64,
+    /// Left-side aggregated statistics (the guest needs them to seed the
+    /// children's node totals without another pass).
+    pub left_g: Vec<f64>,
+    pub left_h: Vec<f64>,
+    pub left_count: u32,
+}
+
+/// Scan a *cumulative* histogram for the best split of a node with totals
+/// `(gp, hp, count)`. Returns `None` when no split satisfies constraints.
+pub fn best_local_split(
+    hist: &PlainHistogram,
+    gp: &[f64],
+    hp: &[f64],
+    count: u32,
+    params: &GainParams,
+) -> Option<LocalSplit> {
+    let w = hist.w;
+    debug_assert_eq!(gp.len(), w);
+    let mut best: Option<LocalSplit> = None;
+    let mut gr = vec![0.0; w];
+    let mut hr = vec![0.0; w];
+    for f in 0..hist.n_features {
+        // last bin excluded: splitting there sends everything left
+        for b in 0..hist.n_bins.saturating_sub(1) {
+            let cell = hist.cell(f, b);
+            let lc = hist.count[cell];
+            let rc = count - lc;
+            if lc < params.min_leaf_samples || rc < params.min_leaf_samples {
+                continue;
+            }
+            let gl = &hist.g[cell * w..(cell + 1) * w];
+            let hl = &hist.h[cell * w..(cell + 1) * w];
+            let (mut hlt, mut hrt) = (0.0, 0.0);
+            for j in 0..w {
+                gr[j] = gp[j] - gl[j];
+                hr[j] = hp[j] - hl[j];
+                hlt += hl[j];
+                hrt += hr[j];
+            }
+            if hlt < params.min_child_weight || hrt < params.min_child_weight {
+                continue;
+            }
+            let g = gain(gl, hl, &gr, &hr, gp, hp, params.lambda);
+            if g > params.min_gain && best.as_ref().map(|s| g > s.gain).unwrap_or(true) {
+                best = Some(LocalSplit {
+                    feature: f as u32,
+                    bin: b as u8,
+                    gain: g,
+                    left_g: gl.to_vec(),
+                    left_h: hl.to_vec(),
+                    left_count: lc,
+                });
+            }
+        }
+    }
+    best
+}
+
+/// Evaluate one candidate (gl, hl, lc) against node totals — the guest
+/// uses this on decrypted host split statistics (Alg. 2 inner loop).
+pub fn candidate_gain(
+    gl: &[f64],
+    hl: &[f64],
+    lc: u32,
+    gp: &[f64],
+    hp: &[f64],
+    count: u32,
+    params: &GainParams,
+) -> Option<f64> {
+    let rc = count.checked_sub(lc)?;
+    if lc < params.min_leaf_samples || rc < params.min_leaf_samples {
+        return None;
+    }
+    let w = gl.len();
+    let mut gr = vec![0.0; w];
+    let mut hr = vec![0.0; w];
+    let (mut hlt, mut hrt) = (0.0, 0.0);
+    for j in 0..w {
+        gr[j] = gp[j] - gl[j];
+        hr[j] = hp[j] - hl[j];
+        hlt += hl[j];
+        hrt += hr[j];
+    }
+    if hlt < params.min_child_weight || hrt < params.min_child_weight {
+        return None;
+    }
+    let g = gain(gl, hl, &gr, &hr, gp, hp, params.lambda);
+    (g > params.min_gain).then_some(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::binning::bin_party;
+    use crate::data::dataset::PartySlice;
+
+    #[test]
+    fn gain_scalar_matches_vector() {
+        let g = gain(&[1.5], &[2.0], &[-0.5], &[1.0], &[1.0], &[3.0], 0.5);
+        let s = gain_scalar(1.5, 2.0, -0.5, 1.0, 1.0, 3.0, 0.5);
+        assert!((g - s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_split_has_high_gain() {
+        // g = +1 on left half, −1 on right half → splitting at the middle
+        // separates them; gain formula must prefer that split.
+        // feature 0: value = index (separates), feature 1: constant noise
+        let n = 100;
+        let x: Vec<f64> = (0..n).flat_map(|i| [i as f64, (i % 7) as f64]).collect();
+        let slice = PartySlice { cols: vec![0, 1], x, n };
+        let bm = bin_party(&slice, 8);
+        let g: Vec<f64> = (0..n).map(|i| if i < n / 2 { 1.0 } else { -1.0 }).collect();
+        let h = vec![1.0; n];
+        let all: Vec<u32> = (0..n as u32).collect();
+        let mut hist = crate::tree::histogram::PlainHistogram::build(&bm, 8, &all, &g, &h, 1);
+        hist.cumsum();
+        let params = GainParams::default();
+        let split = best_local_split(&hist, &[0.0], &[n as f64], n as u32, &params).unwrap();
+        assert_eq!(split.feature, 0, "must pick the separating feature");
+        assert!(split.gain > 30.0, "gain {}", split.gain);
+        // left side is (near-)pure +1: quantile edges need not land exactly
+        // on the class boundary, so require ≥90% purity rather than equality
+        let purity = split.left_g.iter().sum::<f64>() / split.left_count as f64;
+        assert!(purity > 0.9, "left purity {purity}");
+    }
+
+    #[test]
+    fn constraints_reject() {
+        let params = GainParams { min_leaf_samples: 10, ..Default::default() };
+        // 5 on the left — rejected
+        assert!(candidate_gain(&[1.0], &[1.0], 5, &[0.0], &[2.0], 100, &params).is_none());
+        // hessian constraint
+        let params2 = GainParams { min_child_weight: 5.0, ..Default::default() };
+        assert!(candidate_gain(&[1.0], &[1.0], 50, &[0.0], &[2.0], 100, &params2).is_none());
+        // left count exceeding total is invalid
+        assert!(candidate_gain(&[1.0], &[1.0], 101, &[0.0], &[2.0], 100, &params).is_none());
+    }
+
+    #[test]
+    fn leaf_weight_direction() {
+        let w = leaf_weight(&[2.0], &[3.0], 1.0, 0.3);
+        assert!((w[0] + 0.15).abs() < 1e-12); // −2/4·0.3
+        let wm = leaf_weight(&[1.0, -1.0], &[1.0, 1.0], 1.0, 1.0);
+        assert_eq!(wm.len(), 2);
+        assert!(wm[0] < 0.0 && wm[1] > 0.0);
+    }
+
+    #[test]
+    fn candidate_gain_matches_scan() {
+        // The federated scan (candidate_gain over decrypted stats) must
+        // agree with the local scan on identical statistics.
+        let n = 64;
+        let x: Vec<f64> = (0..n).map(|i| (i * 37 % 64) as f64).collect();
+        let slice = PartySlice { cols: vec![0], x, n };
+        let bm = bin_party(&slice, 8);
+        let g: Vec<f64> = (0..n).map(|i| ((i * 13 % 7) as f64) - 3.0).collect();
+        let h = vec![0.5; n];
+        let all: Vec<u32> = (0..n as u32).collect();
+        let mut hist = crate::tree::histogram::PlainHistogram::build(&bm, 8, &all, &g, &h, 1);
+        hist.cumsum();
+        let gp: f64 = g.iter().sum();
+        let hp: f64 = h.iter().sum();
+        let params = GainParams::default();
+        let best = best_local_split(&hist, &[gp], &[hp], n as u32, &params).unwrap();
+        let cell = hist.cell(best.feature as usize, best.bin as usize);
+        let via_candidate = candidate_gain(
+            &hist.g[cell..cell + 1],
+            &hist.h[cell..cell + 1],
+            hist.count[cell],
+            &[gp],
+            &[hp],
+            n as u32,
+            &params,
+        )
+        .unwrap();
+        assert!((via_candidate - best.gain).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,101 @@
+//! Minimal CLI argument parser (no `clap` in the offline crate universe).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            Some(s) => s.parse().unwrap_or(default),
+            None => default,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        // NOTE: a bare `--flag` followed by a non-`--` token consumes it as
+        // a value (there is no flag registry); put flags last or use `=`.
+        let a = Args::parse(s(&[
+            "train", "--depth", "5", "--cipher=paillier", "data.bin", "--verbose",
+        ]));
+        assert_eq!(a.positional, vec!["train", "data.bin"]);
+        assert_eq!(a.get("depth"), Some("5"));
+        assert_eq!(a.get("cipher"), Some("paillier"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_parse("depth", 0usize), 5);
+        assert_eq!(a.get_parse("missing", 7usize), 7);
+        assert_eq!(a.get_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(s(&["--fast"]));
+        assert!(a.flag("fast"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        // `--bias -3` : "-3" does not start with "--", so it is a value.
+        let a = Args::parse(s(&["--bias", "-3"]));
+        assert_eq!(a.get_parse("bias", 0i64), -3);
+    }
+}

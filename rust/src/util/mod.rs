@@ -1,0 +1,10 @@
+//! Environment substrates: PRNG, thread pool, timers, CLI argument parsing.
+//!
+//! The offline crate universe contains only the `xla` closure, so the usual
+//! suspects (`rand`, `rayon`, `clap`) are reimplemented here at the size this
+//! project needs.
+
+pub mod args;
+pub mod pool;
+pub mod rng;
+pub mod timer;

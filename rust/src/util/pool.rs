@@ -1,0 +1,165 @@
+//! A small scoped thread pool (`rayon` is not available offline).
+//!
+//! The pool powers the hot loops of the coordinator: batch Paillier
+//! encryption/decryption, ciphertext histogram accumulation, and dataset
+//! synthesis. Work is partitioned into contiguous chunks, one per worker,
+//! which matches the memory-streaming access patterns of those loops better
+//! than fine-grained stealing would.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Number of worker threads used by [`parallel_for`] / [`parallel_map`].
+///
+/// Defaults to the number of available CPUs; override with the
+/// `SBP_THREADS` environment variable (useful to pin benches).
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("SBP_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                if n > 0 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    })
+}
+
+/// Run `f(start..end)` over `0..n` split into per-thread contiguous ranges.
+///
+/// `f` is called once per worker with its chunk bounds; workers run on
+/// scoped threads so `f` may borrow from the caller's stack.
+pub fn parallel_for_chunks<F>(n: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = num_threads().min(n);
+    if workers <= 1 || n < 2 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let start = w * chunk;
+            let end = ((w + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(start, end));
+        }
+    });
+}
+
+/// Dynamic (work-stealing-lite) parallel for: workers grab blocks of
+/// `block` indices from a shared atomic counter. Better for skewed
+/// per-item costs (e.g. Paillier encryption with varying obfuscation).
+pub fn parallel_for_dynamic<F>(n: usize, block: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n < 2 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    let block = block.max(1);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let f = &f;
+            let cursor = &cursor;
+            scope.spawn(move || loop {
+                let start = cursor.fetch_add(block, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + block).min(n);
+                for i in start..end {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map producing a `Vec<T>` in index order.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let ptr = SendPtr(out.as_mut_ptr());
+        let f = &f;
+        parallel_for_dynamic(n, 16, move |i| {
+            // SAFETY: each index i is visited exactly once across all workers,
+            // so writes are disjoint. `ptr` is captured by copy.
+            let ptr = ptr;
+            unsafe {
+                *ptr.0.add(i) = f(i);
+            }
+        });
+    }
+    out
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_all_indices_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_chunks(1000, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn dynamic_covers_all_indices_once() {
+        let hits: Vec<AtomicU64> = (0..777).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_dynamic(777, 5, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let v = parallel_map(500, |i| i * i);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        parallel_for_chunks(0, |_, _| panic!("must not run"));
+        let v = parallel_map(1, |i| i + 1);
+        assert_eq!(v, vec![1]);
+    }
+}

@@ -1,0 +1,289 @@
+//! Deterministic and OS-entropy random number generation.
+//!
+//! Two generators:
+//! - [`Xoshiro256`] — fast, splittable, seedable PRNG for data synthesis,
+//!   GOSS sampling, split-info shuffling, tests and benches (deterministic).
+//! - [`ChaCha20Rng`] — cryptographic stream generator used for Paillier /
+//!   IterativeAffine key generation and obfuscators, seeded from
+//!   `/dev/urandom` by default (or a fixed seed in tests).
+
+use std::fs::File;
+use std::io::Read;
+
+/// SplitMix64 — used to expand small seeds into full PRNG state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ — public-domain PRNG by Blackman & Vigna.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed deterministically from a single u64 via SplitMix64.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform usize in [0, n). `n` must be > 0.
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free-enough bound for our uses.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn next_gaussian(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            let u2 = self.next_f64();
+            if u1 > f64::EPSILON {
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Derive an independent child generator (for per-thread streams).
+    pub fn split(&mut self) -> Xoshiro256 {
+        Xoshiro256::seed_from_u64(self.next_u64())
+    }
+}
+
+/// ChaCha20 block function — RFC 8439. Used as a CSPRNG for key generation.
+#[derive(Clone)]
+pub struct ChaCha20Rng {
+    key: [u32; 8],
+    counter: u64,
+    nonce: [u32; 2],
+    buf: [u8; 64],
+    pos: usize,
+}
+
+#[inline]
+fn quarter_round(state: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+    state[a] = state[a].wrapping_add(state[b]);
+    state[d] = (state[d] ^ state[a]).rotate_left(16);
+    state[c] = state[c].wrapping_add(state[d]);
+    state[b] = (state[b] ^ state[c]).rotate_left(12);
+    state[a] = state[a].wrapping_add(state[b]);
+    state[d] = (state[d] ^ state[a]).rotate_left(8);
+    state[c] = state[c].wrapping_add(state[d]);
+    state[b] = (state[b] ^ state[c]).rotate_left(7);
+}
+
+impl ChaCha20Rng {
+    /// Seed from 32 bytes of key material.
+    pub fn from_seed(seed: [u8; 32]) -> Self {
+        let mut key = [0u32; 8];
+        for (i, k) in key.iter_mut().enumerate() {
+            *k = u32::from_le_bytes(seed[i * 4..i * 4 + 4].try_into().unwrap());
+        }
+        Self { key, counter: 0, nonce: [0, 0], buf: [0u8; 64], pos: 64 }
+    }
+
+    /// Seed from the operating system (`/dev/urandom`).
+    pub fn from_os_entropy() -> Self {
+        let mut seed = [0u8; 32];
+        let mut f = File::open("/dev/urandom").expect("open /dev/urandom");
+        f.read_exact(&mut seed).expect("read /dev/urandom");
+        Self::from_seed(seed)
+    }
+
+    /// Deterministic seeding for tests.
+    pub fn from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut bytes = [0u8; 32];
+        for i in 0..4 {
+            bytes[i * 8..i * 8 + 8].copy_from_slice(&splitmix64(&mut sm).to_le_bytes());
+        }
+        Self::from_seed(bytes)
+    }
+
+    fn refill(&mut self) {
+        const SIGMA: [u32; 4] = [0x61707865, 0x3320646e, 0x79622d32, 0x6b206574];
+        let mut state = [0u32; 16];
+        state[0..4].copy_from_slice(&SIGMA);
+        state[4..12].copy_from_slice(&self.key);
+        state[12] = self.counter as u32;
+        state[13] = (self.counter >> 32) as u32;
+        state[14] = self.nonce[0];
+        state[15] = self.nonce[1];
+        let initial = state;
+        for _ in 0..10 {
+            quarter_round(&mut state, 0, 4, 8, 12);
+            quarter_round(&mut state, 1, 5, 9, 13);
+            quarter_round(&mut state, 2, 6, 10, 14);
+            quarter_round(&mut state, 3, 7, 11, 15);
+            quarter_round(&mut state, 0, 5, 10, 15);
+            quarter_round(&mut state, 1, 6, 11, 12);
+            quarter_round(&mut state, 2, 7, 8, 13);
+            quarter_round(&mut state, 3, 4, 9, 14);
+        }
+        for i in 0..16 {
+            let w = state[i].wrapping_add(initial[i]);
+            self.buf[i * 4..i * 4 + 4].copy_from_slice(&w.to_le_bytes());
+        }
+        self.counter = self.counter.wrapping_add(1);
+        self.pos = 0;
+    }
+
+    pub fn fill_bytes(&mut self, out: &mut [u8]) {
+        for byte in out.iter_mut() {
+            if self.pos == 64 {
+                self.refill();
+            }
+            *byte = self.buf[self.pos];
+            self.pos += 1;
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut b = [0u8; 8];
+        self.fill_bytes(&mut b);
+        u64::from_le_bytes(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xoshiro_deterministic() {
+        let mut a = Xoshiro256::seed_from_u64(42);
+        let mut b = Xoshiro256::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn xoshiro_f64_in_unit_interval() {
+        let mut r = Xoshiro256::seed_from_u64(1);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn xoshiro_below_bounds() {
+        let mut r = Xoshiro256::seed_from_u64(3);
+        for n in [1usize, 2, 7, 100, 12345] {
+            for _ in 0..200 {
+                assert!(r.next_below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn xoshiro_gaussian_moments() {
+        let mut r = Xoshiro256::seed_from_u64(5);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::seed_from_u64(9);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chacha_rfc8439_block1() {
+        // RFC 8439 §2.3.2 test vector: key = 00 01 02 ... 1f, counter = 1,
+        // nonce = 000000090000004a00000000. We verify our block function by
+        // plugging in the RFC's nonce/counter arrangement.
+        let mut key = [0u8; 32];
+        for (i, k) in key.iter_mut().enumerate() {
+            *k = i as u8;
+        }
+        let mut rng = ChaCha20Rng::from_seed(key);
+        rng.counter = 1;
+        // RFC nonce words: state[13]=0 is our counter-high; RFC places the
+        // 96-bit nonce in words 13..16 — our layout uses a 64-bit counter so
+        // we emulate: counter=1 (word12), word13=0x09000000? No — instead,
+        // match the RFC layout directly: counter_low=1, counter_high=0x00000009?
+        // The RFC nonce is 00:00:00:09 | 00:00:00:4a | 00:00:00:00 (LE words
+        // 0x09000000, 0x4a000000, 0x00000000). Our layout: word12=ctr_lo,
+        // word13=ctr_hi, word14=nonce0, word15=nonce1. Set ctr_hi=0x09000000.
+        rng.counter = 1 | ((0x0900_0000u64) << 32);
+        rng.nonce = [0x4a00_0000, 0x0000_0000];
+        rng.refill();
+        // First 16 bytes of the RFC keystream block.
+        let expect: [u8; 16] = [
+            0x10, 0xf1, 0xe7, 0xe4, 0xd1, 0x3b, 0x59, 0x15, 0x50, 0x0f, 0xdd, 0x1f, 0xa3, 0x20,
+            0x71, 0xc4,
+        ];
+        assert_eq!(&rng.buf[..16], &expect);
+    }
+
+    #[test]
+    fn chacha_deterministic_and_distinct() {
+        let mut a = ChaCha20Rng::from_u64(1);
+        let mut b = ChaCha20Rng::from_u64(1);
+        let mut c = ChaCha20Rng::from_u64(2);
+        let (x, y, z) = (a.next_u64(), b.next_u64(), c.next_u64());
+        assert_eq!(x, y);
+        assert_ne!(x, z);
+    }
+}

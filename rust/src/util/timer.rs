@@ -1,0 +1,92 @@
+//! Phase timers used by the coordinator to attribute wall time to protocol
+//! phases (encryption, histogram, split finding, communication, ...).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Accumulates named durations; cheap enough to thread through the trainer.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    totals: BTreeMap<&'static str, Duration>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `phase`.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.add(phase, start.elapsed());
+        out
+    }
+
+    /// Record an externally measured duration.
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        *self.totals.entry(phase).or_default() += d;
+        *self.counts.entry(phase).or_default() += 1;
+    }
+
+    /// Merge another timer into this one (e.g. per-party timers).
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k).or_default() += *v;
+        }
+    }
+
+    pub fn total(&self, phase: &str) -> Duration {
+        self.totals.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&'static str, Duration, u64)> + '_ {
+        self.totals
+            .iter()
+            .map(|(k, v)| (*k, *v, self.counts.get(k).copied().unwrap_or(0)))
+    }
+
+    /// Render a compact report, longest phase first.
+    pub fn report(&self) -> String {
+        let mut rows: Vec<_> = self.phases().collect();
+        rows.sort_by(|a, b| b.1.cmp(&a.1));
+        let mut s = String::new();
+        for (name, dur, n) in rows {
+            s.push_str(&format!("  {name:<28} {:>10.3}s  x{n}\n", dur.as_secs_f64()));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_merges() {
+        let mut t = PhaseTimer::new();
+        t.add("a", Duration::from_millis(5));
+        t.add("a", Duration::from_millis(7));
+        t.add("b", Duration::from_millis(1));
+        assert_eq!(t.total("a"), Duration::from_millis(12));
+
+        let mut u = PhaseTimer::new();
+        u.add("a", Duration::from_millis(3));
+        u.merge(&t);
+        assert_eq!(u.total("a"), Duration::from_millis(15));
+        assert_eq!(u.total("b"), Duration::from_millis(1));
+        assert!(u.report().contains('a'));
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = PhaseTimer::new();
+        let v = t.time("work", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(t.total("work") > Duration::ZERO || t.total("work") == Duration::ZERO);
+    }
+}

@@ -1,0 +1,284 @@
+//! Property-based tests over the crypto substrate's invariants —
+//! randomized inputs with deterministic seeds (a lightweight
+//! proptest-style harness; shrinkage isn't needed at these sizes).
+//!
+//! Invariants covered:
+//! - bignum ring laws (distributivity, div/mod reconstruction)
+//! - Paillier homomorphism over random op sequences
+//! - GH packing: Σ pack(gᵢ,hᵢ) unpacks to (Σg, Σh) for any subset
+//! - compression: decompress ∘ compress = id for any stat count
+//! - histogram algebra: parent = left + right in ciphertext
+//! - fixed-point precision bounds
+
+use sbp::crypto::bigint::BigUint;
+use sbp::crypto::cipher::{CipherSuite, Ct};
+use sbp::crypto::compress::{compress, decompress, CompressPlan, SplitStatCt};
+use sbp::crypto::packing::GhPacker;
+use sbp::util::rng::{ChaCha20Rng, Xoshiro256};
+
+const CASES: usize = 40;
+
+fn rand_big(r: &mut Xoshiro256, max_limbs: usize) -> BigUint {
+    let n = r.next_below(max_limbs) + 1;
+    BigUint::from_limbs((0..n).map(|_| r.next_u64()).collect())
+}
+
+#[test]
+fn prop_bignum_ring_laws() {
+    let mut r = Xoshiro256::seed_from_u64(0xB16);
+    for _ in 0..CASES {
+        let a = rand_big(&mut r, 12);
+        let b = rand_big(&mut r, 12);
+        let c = rand_big(&mut r, 12);
+        // (a + b)·c = a·c + b·c
+        assert_eq!(a.add(&b).mul(&c), a.mul(&c).add(&b.mul(&c)));
+        // a = (a / b)·b + a % b
+        if !b.is_zero() {
+            let (q, rem) = a.div_rem(&b);
+            assert_eq!(q.mul(&b).add(&rem), a);
+        }
+        // shift laws: (a << k) >> k = a
+        let k = r.next_below(120);
+        assert_eq!(a.shl(k).shr(k), a);
+    }
+}
+
+#[test]
+fn prop_modular_identities() {
+    let mut r = Xoshiro256::seed_from_u64(0x40D);
+    let mut crng = ChaCha20Rng::from_u64(5);
+    for _ in 0..20 {
+        let mut m = BigUint::random_exact_bits(&mut crng, 256);
+        if m.is_even() {
+            m = m.add_u64(1);
+        }
+        let a = BigUint::random_below(&mut crng, &m);
+        let b = BigUint::random_below(&mut crng, &m);
+        let e1 = BigUint::from_u64(r.next_u64() % 1000);
+        let e2 = BigUint::from_u64(r.next_u64() % 1000);
+        // a^(e1+e2) = a^e1 · a^e2 (mod m)
+        assert_eq!(
+            a.mod_pow(&e1.add(&e2), &m),
+            a.mod_pow(&e1, &m).mul_mod(&a.mod_pow(&e2, &m), &m)
+        );
+        // (a·b)^e = a^e · b^e (mod m)
+        assert_eq!(
+            a.mul_mod(&b, &m).mod_pow(&e1, &m),
+            a.mod_pow(&e1, &m).mul_mod(&b.mod_pow(&e1, &m), &m)
+        );
+    }
+}
+
+/// Random homomorphic op sequences must track a plaintext shadow.
+#[test]
+fn prop_paillier_homomorphism_sequences() {
+    let mut crng = ChaCha20Rng::from_u64(11);
+    let suite = CipherSuite::new_paillier(512, &mut crng);
+    let mut r = Xoshiro256::seed_from_u64(12);
+    let modulus_bits = suite.plaintext_bits();
+    for _ in 0..10 {
+        // shadow value tracked in plain arithmetic (bounded well below ι)
+        let mut shadow = BigUint::from_u64(r.next_u64() >> 8);
+        let mut ct = suite.encrypt(&shadow, &mut crng);
+        for _ in 0..8 {
+            match r.next_below(3) {
+                0 => {
+                    let v = BigUint::from_u64(r.next_u64() >> 8);
+                    let c2 = suite.encrypt(&v, &mut crng);
+                    ct = suite.add(&ct, &c2);
+                    shadow = shadow.add(&v);
+                }
+                1 => {
+                    let k = BigUint::from_u64((r.next_u64() % 1000).max(1));
+                    ct = suite.scalar_mul(&ct, &k);
+                    shadow = shadow.mul(&k);
+                }
+                _ => {
+                    // subtract something smaller than the shadow
+                    let v = BigUint::from_u64(r.next_u64() % 1000);
+                    if shadow.cmp_big(&v) == std::cmp::Ordering::Greater {
+                        let c2 = suite.encrypt(&v, &mut crng);
+                        ct = suite.sub(&ct, &c2);
+                        shadow = shadow.sub(&v);
+                    }
+                }
+            }
+            if shadow.bit_length() > modulus_bits - 16 {
+                break; // stay far from wraparound
+            }
+        }
+        assert_eq!(suite.decrypt(&ct), shadow);
+    }
+}
+
+#[test]
+fn prop_packed_subset_sums() {
+    let mut r = Xoshiro256::seed_from_u64(21);
+    for case in 0..CASES {
+        let n = r.next_below(300) + 2;
+        let g: Vec<f64> = (0..n).map(|_| r.next_f64() * 2.0 - 1.0).collect();
+        let h: Vec<f64> = (0..n).map(|_| r.next_f64()).collect();
+        let p = GhPacker::plan(&g, &h, n as u64, 53);
+        let packed = p.pack_all(&g, &h);
+        // random subset
+        let subset: Vec<usize> = (0..n).filter(|_| r.next_f64() < 0.4).collect();
+        if subset.is_empty() {
+            continue;
+        }
+        let mut acc = BigUint::zero();
+        let (mut gs, mut hs) = (0.0f64, 0.0f64);
+        for &i in &subset {
+            acc = acc.add(&packed[i]);
+            gs += g[i];
+            hs += h[i];
+        }
+        let (gu, hu) = p.unpack_sum(&acc, subset.len() as u64);
+        assert!((gu - gs).abs() < 1e-6, "case {case}: g {gu} vs {gs}");
+        assert!((hu - hs).abs() < 1e-6, "case {case}: h {hu} vs {hs}");
+    }
+}
+
+#[test]
+fn prop_compress_roundtrip_any_count() {
+    let mut crng = ChaCha20Rng::from_u64(31);
+    let suite = CipherSuite::new_paillier(512, &mut crng);
+    let mut r = Xoshiro256::seed_from_u64(32);
+    let packer = GhPacker::plan_logistic(500, 40);
+    let plan = CompressPlan::derive(suite.plaintext_bits(), packer.b_gh);
+    assert!(plan.capacity >= 2, "test needs real compression");
+    for count in [1usize, 2, plan.capacity - 1, plan.capacity, plan.capacity + 1, 23] {
+        let stats: Vec<SplitStatCt> = (0..count)
+            .map(|i| {
+                let g = r.next_f64() * 2.0 - 1.0;
+                let h = r.next_f64();
+                let plain = packer.pack(g, h);
+                SplitStatCt {
+                    ct: suite.encrypt(&plain, &mut crng),
+                    id: i as u32,
+                    sample_count: 1,
+                }
+            })
+            .collect();
+        let pkgs = compress(&suite, &plan, &stats);
+        assert_eq!(pkgs.len(), count.div_ceil(plan.capacity));
+        let rec = decompress(&suite, &plan, &packer, &pkgs);
+        assert_eq!(rec.len(), count);
+        for (i, row) in rec.iter().enumerate() {
+            assert_eq!(row.id, i as u32);
+        }
+    }
+}
+
+/// parent histogram == left + right, in ciphertext, for random splits.
+#[test]
+fn prop_cipher_histogram_additivity() {
+    use sbp::data::binning::bin_party;
+    use sbp::data::dataset::PartySlice;
+    use sbp::tree::histogram::CipherHistogram;
+
+    let mut crng = ChaCha20Rng::from_u64(41);
+    let suite = CipherSuite::new_paillier(512, &mut crng);
+    let mut r = Xoshiro256::seed_from_u64(42);
+    let n = 80;
+    let d = 3;
+    let x: Vec<f64> = (0..n * d).map(|_| r.next_gaussian()).collect();
+    let bm = bin_party(&PartySlice { cols: (0..d).collect(), x, n }, 8);
+    let g: Vec<f64> = (0..n).map(|_| r.next_f64() * 2.0 - 1.0).collect();
+    let h: Vec<f64> = (0..n).map(|_| r.next_f64()).collect();
+    let packer = GhPacker::plan(&g, &h, n as u64, 40);
+    let plains = packer.pack_all(&g, &h);
+    let cts: Vec<Ct> = suite.encrypt_batch(&plains, &mut crng);
+    let pos: Vec<u32> = (0..n as u32).collect();
+
+    for _ in 0..5 {
+        // random partition
+        let mut left = Vec::new();
+        let mut right = Vec::new();
+        for i in 0..n as u32 {
+            if r.next_f64() < 0.5 {
+                left.push(i)
+            } else {
+                right.push(i)
+            }
+        }
+        if left.is_empty() || right.is_empty() {
+            continue;
+        }
+        let all: Vec<u32> = (0..n as u32).collect();
+        let hp = CipherHistogram::build(&suite, &bm, 8, &all, &cts, &pos, 1);
+        let hl = CipherHistogram::build(&suite, &bm, 8, &left, &cts, &pos, 1);
+        let hr = CipherHistogram::build(&suite, &bm, 8, &right, &cts, &pos, 1);
+        for f in 0..d {
+            for b in 0..8 {
+                let cell = hp.cell(f, b);
+                let sum = suite.add(&hl.cells[cell], &hr.cells[cell]);
+                assert_eq!(
+                    suite.decrypt(&sum),
+                    suite.decrypt(&hp.cells[cell]),
+                    "f{f} b{b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fixed_point_precision_bound() {
+    use sbp::crypto::encoding::FixedPointEncoder;
+    let mut r = Xoshiro256::seed_from_u64(51);
+    for prec in [20u32, 40, 53] {
+        let enc = FixedPointEncoder::new(prec);
+        let ulp = 2f64.powi(-(prec as i32));
+        for _ in 0..CASES {
+            let x = r.next_f64() * 100.0;
+            let err = (enc.decode(&enc.encode(x)) - x).abs();
+            // decode goes through f64, so allow an extra float ulp at 53
+            assert!(err <= ulp + x.abs() * f64::EPSILON, "prec {prec}: err {err}");
+        }
+    }
+}
+
+/// Negation edges: Dec(−0) = 0; Dec(a − a) = 0 under every schema.
+#[test]
+fn prop_negation_edges() {
+    let mut crng = ChaCha20Rng::from_u64(61);
+    for suite in [
+        CipherSuite::new_paillier(512, &mut crng),
+        CipherSuite::new_affine(512, &mut crng),
+        CipherSuite::new_plain(511),
+    ] {
+        let zero = suite.encrypt(&BigUint::zero(), &mut crng);
+        assert_eq!(
+            suite.decrypt(&suite.negate(&zero)),
+            BigUint::zero(),
+            "{}",
+            suite.kind_name()
+        );
+        let a = suite.encrypt(&BigUint::from_u64(777), &mut crng);
+        assert_eq!(suite.decrypt(&suite.sub(&a, &a)), BigUint::zero());
+    }
+}
+
+/// `scalar_pow2` must equal `scalar_mul` by 2^k (the compression shift).
+#[test]
+fn prop_scalar_pow2_matches_scalar_mul() {
+    let mut crng = ChaCha20Rng::from_u64(71);
+    for suite in [
+        CipherSuite::new_paillier(512, &mut crng),
+        CipherSuite::new_affine(512, &mut crng),
+        CipherSuite::new_plain(400),
+    ] {
+        let m = BigUint::from_u64(12345);
+        let c = suite.encrypt(&m, &mut crng);
+        for k in [1usize, 7, 64, 147] {
+            let a = suite.scalar_pow2(&c, k);
+            let b = suite.scalar_mul(&c, &BigUint::one().shl(k));
+            assert_eq!(
+                suite.decrypt(&a),
+                suite.decrypt(&b),
+                "{} k={k}",
+                suite.kind_name()
+            );
+        }
+    }
+}

@@ -1,0 +1,436 @@
+//! End-to-end integration tests over the federated protocol: guest+host
+//! threads, real ciphertext histograms, split finding, and the equivalence
+//! properties the paper claims (lossless vs. centralized; optimization
+//! toggles change cost, not models).
+
+use sbp::config::{CipherKind, GossConfig, ModeKind, TrainConfig};
+use sbp::coordinator::{train_centralized, train_federated};
+use sbp::data::synthetic::SyntheticSpec;
+
+fn fast_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::secureboost_plus();
+    cfg.epochs = 6;
+    cfg.max_depth = 3;
+    cfg.cipher = CipherKind::Plain;
+    cfg.key_bits = 1024;
+    cfg.goss = None;
+    cfg.sparse_optimization = false;
+    cfg
+}
+
+#[test]
+fn federated_matches_centralized_plain() {
+    // With the mock cipher and no sampling, federated split finding sees
+    // exactly the same statistics as centralized training → same quality.
+    let spec = SyntheticSpec::give_credit(0.004);
+    let vs = spec.generate_vertical(11, 1);
+    let ds = vs.to_centralized();
+    let cfg = fast_cfg();
+    let fed = train_federated(&vs, &cfg).unwrap();
+    let cen = train_centralized(&ds, &cfg).unwrap();
+    assert!(
+        (fed.train_metric - cen.train_metric).abs() < 0.02,
+        "federated {} vs centralized {}",
+        fed.train_metric,
+        cen.train_metric
+    );
+    assert!(fed.train_metric > 0.75, "AUC {}", fed.train_metric);
+    assert_eq!(fed.trees_built, cfg.epochs);
+}
+
+#[test]
+fn federated_paillier_binary_learns() {
+    let spec = SyntheticSpec::give_credit(0.0015);
+    let vs = spec.generate_vertical(3, 1);
+    let mut cfg = fast_cfg();
+    cfg.cipher = CipherKind::Paillier;
+    cfg.key_bits = 512; // small key keeps CI fast; algebra identical
+    cfg.epochs = 4;
+    let rep = train_federated(&vs, &cfg).unwrap();
+    assert!(rep.train_metric > 0.7, "AUC {}", rep.train_metric);
+    // encrypted traffic actually flowed
+    assert!(rep.comm.total_bytes() > 10_000);
+    assert!(rep.ops.encrypts > 0 && rep.ops.decrypts > 0 && rep.ops.adds > 0);
+}
+
+#[test]
+fn paillier_matches_plain_cipher_model() {
+    // HE must be *lossless*: same splits, same AUC as the mock cipher.
+    let spec = SyntheticSpec::give_credit(0.001);
+    let vs = spec.generate_vertical(5, 1);
+    let mut plain = fast_cfg();
+    plain.epochs = 3;
+    let mut paillier = plain.clone();
+    paillier.cipher = CipherKind::Paillier;
+    paillier.key_bits = 512;
+    let rp = train_federated(&vs, &plain).unwrap();
+    let re = train_federated(&vs, &paillier).unwrap();
+    assert!(
+        (rp.train_metric - re.train_metric).abs() < 1e-6,
+        "plain {} vs paillier {}",
+        rp.train_metric,
+        re.train_metric
+    );
+}
+
+#[test]
+fn affine_matches_plain_cipher_model() {
+    let spec = SyntheticSpec::give_credit(0.001);
+    let vs = spec.generate_vertical(7, 1);
+    let mut plain = fast_cfg();
+    plain.epochs = 3;
+    let mut affine = plain.clone();
+    affine.cipher = CipherKind::IterativeAffine;
+    affine.key_bits = 1024;
+    let rp = train_federated(&vs, &plain).unwrap();
+    let ra = train_federated(&vs, &affine).unwrap();
+    assert!(
+        (rp.train_metric - ra.train_metric).abs() < 1e-6,
+        "plain {} vs affine {}",
+        rp.train_metric,
+        ra.train_metric
+    );
+}
+
+#[test]
+fn baseline_and_optimized_same_model_different_cost() {
+    // The cipher-optimization framework is *lossless*: SecureBoost and
+    // SecureBoost+ (no GOSS) build the same model; the + variant uses
+    // fewer HE ops and less traffic (paper §4.6).
+    let spec = SyntheticSpec::give_credit(0.002);
+    let vs = spec.generate_vertical(13, 1);
+
+    let mut base = TrainConfig::secureboost_baseline();
+    base.epochs = 3;
+    base.max_depth = 3;
+    base.cipher = CipherKind::Plain;
+    let mut plus = base.clone();
+    plus.gh_packing = true;
+    plus.hist_subtraction = true;
+    plus.cipher_compression = true;
+
+    let rb = train_federated(&vs, &base).unwrap();
+    let rp = train_federated(&vs, &plus).unwrap();
+    assert!(
+        (rb.train_metric - rp.train_metric).abs() < 1e-9,
+        "baseline {} vs plus {}",
+        rb.train_metric,
+        rp.train_metric
+    );
+    assert!(
+        rp.ops.adds < rb.ops.adds,
+        "packing+subtraction must reduce HE additions: {} vs {}",
+        rp.ops.adds,
+        rb.ops.adds
+    );
+    assert!(
+        rp.ops.decrypts < rb.ops.decrypts,
+        "compression must reduce decryptions: {} vs {}",
+        rp.ops.decrypts,
+        rb.ops.decrypts
+    );
+    assert!(
+        rp.comm.bytes_to_guest < rb.comm.bytes_to_guest,
+        "compression must reduce host→guest traffic: {} vs {}",
+        rp.comm.bytes_to_guest,
+        rb.comm.bytes_to_guest
+    );
+}
+
+#[test]
+fn mix_and_layered_modes_run_and_learn() {
+    let spec = SyntheticSpec::give_credit(0.002);
+    let vs = spec.generate_vertical(17, 1);
+    let mut cfg = fast_cfg();
+    cfg.epochs = 6;
+    cfg.max_depth = 5;
+
+    let default = train_federated(&vs, &cfg).unwrap();
+
+    let mut mix = cfg.clone();
+    mix.mode = ModeKind::Mix { trees_per_party: 1 };
+    let rmix = train_federated(&vs, &mix).unwrap();
+
+    let mut layered = cfg.clone();
+    layered.mode = ModeKind::Layered { guest_depth: 2, host_depth: 3 };
+    let rlay = train_federated(&vs, &layered).unwrap();
+
+    for (name, r) in [("mix", &rmix), ("layered", &rlay)] {
+        assert!(r.train_metric > 0.70, "{name} AUC {}", r.train_metric);
+        assert!(
+            r.train_metric > default.train_metric - 0.08,
+            "{name} {} vs default {}",
+            r.train_metric,
+            default.train_metric
+        );
+    }
+    // both modes skip federation work → less traffic than default
+    assert!(rmix.comm.total_bytes() < default.comm.total_bytes());
+    assert!(rlay.comm.total_bytes() < default.comm.total_bytes());
+}
+
+#[test]
+fn multiclass_ova_and_mo() {
+    let spec = SyntheticSpec::sensorless(0.004);
+    let vs = spec.generate_vertical(23, 1);
+    let mut cfg = fast_cfg();
+    cfg.epochs = 3;
+
+    let ova = train_federated(&vs, &cfg).unwrap();
+    assert_eq!(ova.trees_built, 3 * 11, "one tree per class per epoch");
+
+    let mut mo = cfg.clone();
+    mo.mode = ModeKind::MultiOutput;
+    mo.cipher_compression = false; // MO disables compression (paper §7.3.2)
+    let rmo = train_federated(&vs, &mo).unwrap();
+    assert_eq!(rmo.trees_built, 3, "one MO tree per epoch");
+    assert!(rmo.train_metric > 1.2 / 11.0, "accuracy {}", rmo.train_metric);
+}
+
+#[test]
+fn mo_paillier_small() {
+    let spec = SyntheticSpec::sensorless(0.0015);
+    let vs = spec.generate_vertical(29, 1);
+    let mut cfg = fast_cfg();
+    cfg.epochs = 2;
+    cfg.max_depth = 2;
+    cfg.mode = ModeKind::MultiOutput;
+    cfg.cipher = CipherKind::Paillier;
+    cfg.key_bits = 512;
+    cfg.cipher_compression = false;
+    let rep = train_federated(&vs, &cfg).unwrap();
+    assert_eq!(rep.trees_built, 2);
+    assert!(rep.train_metric > 1.0 / 11.0);
+}
+
+#[test]
+fn goss_federated() {
+    let spec = SyntheticSpec::give_credit(0.002);
+    let vs = spec.generate_vertical(31, 1);
+    let mut cfg = fast_cfg();
+    cfg.goss = Some(GossConfig::default());
+    let rep = train_federated(&vs, &cfg).unwrap();
+    assert!(rep.train_metric > 0.72, "AUC {}", rep.train_metric);
+}
+
+#[test]
+fn two_hosts() {
+    let spec = SyntheticSpec::higgs(0.0002);
+    let vs = spec.generate_vertical(37, 2);
+    assert_eq!(vs.hosts.len(), 2);
+    let mut cfg = fast_cfg();
+    cfg.n_hosts = 2;
+    cfg.epochs = 3;
+    let rep = train_federated(&vs, &cfg).unwrap();
+    assert!(rep.train_metric > 0.6, "AUC {}", rep.train_metric);
+}
+
+#[test]
+fn sparse_optimization_federated() {
+    let spec = SyntheticSpec::covtype(0.0005);
+    let vs = spec.generate_vertical(41, 1);
+    let mut dense = fast_cfg();
+    dense.epochs = 2;
+    let mut sparse = dense.clone();
+    sparse.sparse_optimization = true;
+    let rd = train_federated(&vs, &dense).unwrap();
+    let rs = train_federated(&vs, &sparse).unwrap();
+    // models must match in quality; sparse path does fewer HE adds
+    assert!(
+        (rd.train_metric - rs.train_metric).abs() < 0.05,
+        "dense {} vs sparse {}",
+        rd.train_metric,
+        rs.train_metric
+    );
+    assert!(rs.ops.adds < rd.ops.adds, "sparse {} vs dense {}", rs.ops.adds, rd.ops.adds);
+}
+
+#[test]
+fn invalid_config_rejected() {
+    let spec = SyntheticSpec::give_credit(0.001);
+    let vs = spec.generate_vertical(1, 1);
+    let mut cfg = fast_cfg();
+    cfg.cipher_compression = true;
+    cfg.gh_packing = false;
+    assert!(train_federated(&vs, &cfg).is_err());
+}
+
+#[test]
+fn tiny_extremes() {
+    // degenerate sizes: few rows, depth deeper than data supports, 4 bins
+    let mut spec = SyntheticSpec::give_credit(0.0005); // ~75 rows
+    spec.d = 4;
+    spec.guest_d = 2;
+    let vs = spec.generate_vertical(3, 1);
+    let mut cfg = fast_cfg();
+    cfg.epochs = 2;
+    cfg.max_depth = 6;
+    cfg.max_bin = 4;
+    let rep = train_federated(&vs, &cfg).unwrap();
+    assert_eq!(rep.trees_built, 2);
+    // trees cannot be deeper than the data allows, and must not panic
+    for t in &rep.trees {
+        assert!(t.max_depth() <= 6);
+    }
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let vs = SyntheticSpec::give_credit(0.001).generate_vertical(5, 1);
+    let mut cfg = fast_cfg();
+    cfg.epochs = 3;
+    cfg.seed = 77;
+    let a = train_federated(&vs, &cfg).unwrap();
+    let b = train_federated(&vs, &cfg).unwrap();
+    assert_eq!(a.train_metric, b.train_metric);
+    assert_eq!(a.loss_curve, b.loss_curve);
+    assert_eq!(a.trees_built, b.trees_built);
+}
+
+#[test]
+fn host_split_refs_are_opaque() {
+    // The guest's tree must never contain host feature indices — only
+    // (party, handle) pairs (paper: split-info shuffling).
+    use sbp::tree::node::SplitRef;
+    let vs = SyntheticSpec::susy(0.0001).generate_vertical(9, 1);
+    let mut cfg = fast_cfg();
+    cfg.epochs = 3;
+    let rep = train_federated(&vs, &cfg).unwrap();
+    let mut host_splits = 0;
+    for t in &rep.trees {
+        for n in &t.nodes {
+            match &n.split {
+                Some(SplitRef::Host { party, .. }) => {
+                    assert_eq!(*party, 0);
+                    host_splits += 1;
+                }
+                Some(SplitRef::Guest { feature, .. }) => {
+                    assert!((*feature as usize) < vs.guest.d());
+                }
+                None => {}
+            }
+        }
+    }
+    // susy gives the host 14 of 18 features — hosts must win splits
+    assert!(host_splits > 0, "host features must participate");
+}
+
+#[test]
+fn depth_one_stumps() {
+    let vs = SyntheticSpec::give_credit(0.001).generate_vertical(13, 1);
+    let mut cfg = fast_cfg();
+    cfg.epochs = 5;
+    cfg.max_depth = 1;
+    let rep = train_federated(&vs, &cfg).unwrap();
+    for t in &rep.trees {
+        assert!(t.max_depth() <= 1);
+        assert!(t.n_leaves() <= 2);
+    }
+    assert!(rep.train_metric > 0.6);
+}
+
+#[test]
+fn unbalanced_guest_host_feature_split() {
+    // guest holds a single feature; host holds the rest
+    let mut spec = SyntheticSpec::higgs(0.0001);
+    spec.guest_d = 1;
+    let vs = spec.generate_vertical(21, 1);
+    assert_eq!(vs.guest.d(), 1);
+    let mut cfg = fast_cfg();
+    cfg.epochs = 3;
+    let rep = train_federated(&vs, &cfg).unwrap();
+    assert!(rep.train_metric > 0.55, "AUC {}", rep.train_metric);
+}
+
+#[test]
+fn layered_tree_structure_respected() {
+    use sbp::tree::node::SplitRef;
+    let vs = SyntheticSpec::higgs(0.0002).generate_vertical(23, 1);
+    let mut cfg = fast_cfg();
+    cfg.epochs = 2;
+    cfg.max_depth = 5;
+    cfg.mode = ModeKind::Layered { guest_depth: 2, host_depth: 3 };
+    let rep = train_federated(&vs, &cfg).unwrap();
+    for t in &rep.trees {
+        for n in &t.nodes {
+            match &n.split {
+                Some(SplitRef::Host { .. }) => {
+                    assert!(n.depth < 3, "host split at depth {} ≥ host_depth", n.depth)
+                }
+                Some(SplitRef::Guest { .. }) => {
+                    assert!(n.depth >= 3, "guest split at depth {} < host_depth", n.depth)
+                }
+                None => {}
+            }
+        }
+    }
+}
+
+#[test]
+fn mix_tree_ownership_alternates() {
+    use sbp::tree::node::SplitRef;
+    let vs = SyntheticSpec::give_credit(0.002).generate_vertical(25, 1);
+    let mut cfg = fast_cfg();
+    cfg.epochs = 4; // trees: guest, host0, guest, host0
+    cfg.mode = ModeKind::Mix { trees_per_party: 1 };
+    let rep = train_federated(&vs, &cfg).unwrap();
+    for (i, t) in rep.trees.iter().enumerate() {
+        let expect_guest = i % 2 == 0;
+        for n in &t.nodes {
+            match &n.split {
+                Some(SplitRef::Guest { .. }) => {
+                    assert!(expect_guest, "tree {i} should be host-owned")
+                }
+                Some(SplitRef::Host { .. }) => {
+                    assert!(!expect_guest, "tree {i} should be guest-owned")
+                }
+                None => {}
+            }
+        }
+    }
+}
+
+#[test]
+fn exported_model_reproduces_training_predictions() {
+    // Train, export the per-party model shares, JSON round-trip them, and
+    // verify raw-value inference reproduces the training-time quality
+    // (binned routing `bin ≤ b` ⟺ raw routing `x ≤ edges[b]`).
+    use sbp::config::json::Json;
+    use sbp::metrics::auc;
+    use sbp::tree::predict::{GuestModel, HostModel};
+
+    let vs = SyntheticSpec::give_credit(0.002).generate_vertical(55, 1);
+    let mut cfg = fast_cfg();
+    cfg.epochs = 4;
+    let rep = train_federated(&vs, &cfg).unwrap();
+    let (guest_m, host_ms) = rep.model();
+
+    // JSON round-trip each share
+    let guest_m =
+        GuestModel::from_json(&Json::parse(&guest_m.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+    let host_ms: Vec<HostModel> = host_ms
+        .iter()
+        .map(|h| {
+            HostModel::from_json(&Json::parse(&h.to_json().to_string_pretty()).unwrap()).unwrap()
+        })
+        .collect();
+
+    let n = vs.n();
+    let mut scores = Vec::with_capacity(n);
+    for i in 0..n {
+        let guest_row: Vec<f64> =
+            (0..vs.guest.d()).map(|c| vs.guest.value(i, c)).collect();
+        let host_row: Vec<f64> =
+            (0..vs.hosts[0].d()).map(|c| vs.hosts[0].value(i, c)).collect();
+        let p = guest_m.predict_row(&guest_row, &host_ms, &[&host_row]);
+        scores.push(p[0]);
+    }
+    let inferred_auc = auc(&vs.y, &scores);
+    assert!(
+        (inferred_auc - rep.train_metric).abs() < 1e-9,
+        "inference AUC {} vs training {}",
+        inferred_auc,
+        rep.train_metric
+    );
+}

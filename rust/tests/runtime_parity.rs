@@ -1,0 +1,139 @@
+//! Artifact round-trip: the PJRT-executed AOT artifacts (JAX/Pallas,
+//! lowered to HLO text) must agree with the pure-Rust `CpuEngine` on
+//! every `ComputeEngine` entry point — and a federated training run on
+//! the XLA engine must match the CPU engine's model exactly.
+//!
+//! Requires `make artifacts`; tests are skipped (with a loud message)
+//! when the artifacts are missing so `cargo test` works pre-build.
+
+use sbp::runtime::engine::{ComputeEngine, CpuEngine};
+use sbp::runtime::pjrt::XlaEngine;
+use sbp::util::rng::Xoshiro256;
+
+fn engine_or_skip() -> Option<XlaEngine> {
+    match XlaEngine::load(XlaEngine::default_dir()) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP runtime_parity: {e:#} — run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn gh_binary_parity() {
+    let Some(xla) = engine_or_skip() else { return };
+    let cpu = CpuEngine;
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    // sweep sizes incl. non-multiples of the tile
+    for n in [1usize, 100, 4096, 5000] {
+        let y: Vec<f64> = (0..n).map(|_| f64::from(rng.next_f64() > 0.5)).collect();
+        let s: Vec<f64> = (0..n).map(|_| rng.next_gaussian() * 3.0).collect();
+        let (gx, hx) = xla.gh_binary(&y, &s);
+        let (gc, hc) = cpu.gh_binary(&y, &s);
+        assert_eq!(gx.len(), n);
+        for i in 0..n {
+            assert!((gx[i] - gc[i]).abs() < 1e-5, "n={n} i={i}: {} vs {}", gx[i], gc[i]);
+            assert!((hx[i] - hc[i]).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn gh_softmax_parity() {
+    let Some(xla) = engine_or_skip() else { return };
+    let cpu = CpuEngine;
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    for (n, k) in [(64usize, 3usize), (1000, 7), (4096, 8), (4100, 5)] {
+        let y: Vec<f64> = (0..n).map(|_| rng.next_below(k) as f64).collect();
+        let s: Vec<f64> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        let (gx, hx) = xla.gh_softmax(&y, &s, k);
+        let (gc, hc) = cpu.gh_softmax(&y, &s, k);
+        for i in 0..n * k {
+            assert!((gx[i] - gc[i]).abs() < 1e-5, "(n={n},k={k}) i={i}");
+            assert!((hx[i] - hc[i]).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn histogram_parity() {
+    let Some(xla) = engine_or_skip() else { return };
+    let cpu = CpuEngine;
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    for (n, d, n_bins) in [(500usize, 5usize, 16usize), (4096, 32, 32), (6000, 40, 32)] {
+        let bins: Vec<u8> = (0..n * d).map(|_| rng.next_below(n_bins) as u8).collect();
+        let g: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let h: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let (gx, hx, cx) = xla.histogram(&bins, n, d, n_bins, &g, &h);
+        let (gc, hc, cc) = cpu.histogram(&bins, n, d, n_bins, &g, &h);
+        assert_eq!(cx, cc, "counts must match exactly (n={n},d={d})");
+        for i in 0..d * n_bins {
+            // f32 accumulation over ≤6000 values: generous tolerance
+            assert!((gx[i] - gc[i]).abs() < 2e-2, "g[{i}]: {} vs {}", gx[i], gc[i]);
+            assert!((hx[i] - hc[i]).abs() < 2e-2);
+        }
+    }
+}
+
+#[test]
+fn gain_scan_parity() {
+    let Some(xla) = engine_or_skip() else { return };
+    let cpu = CpuEngine;
+    let mut rng = Xoshiro256::seed_from_u64(4);
+    for (d, n_bins) in [(5usize, 16usize), (32, 32), (50, 32)] {
+        // monotone cumulative stats
+        let mut g_cum = vec![0.0f64; d * n_bins];
+        let mut h_cum = vec![0.0f64; d * n_bins];
+        let mut gt = 0.0;
+        let mut ht = 0.0;
+        for f in 0..d {
+            let (mut ag, mut ah) = (0.0f64, 0.0f64);
+            for b in 0..n_bins {
+                ag += rng.next_gaussian();
+                ah += rng.next_f64() + 0.05;
+                g_cum[f * n_bins + b] = ag;
+                h_cum[f * n_bins + b] = ah;
+            }
+            gt = ag;
+            ht = ah;
+        }
+        let xs = xla.gain_scan(&g_cum, &h_cum, d, n_bins, gt, ht, 0.3);
+        let cs = cpu.gain_scan(&g_cum, &h_cum, d, n_bins, gt, ht, 0.3);
+        for i in 0..d * n_bins {
+            assert!(
+                (xs[i] - cs[i]).abs() < 1e-2 * (1.0 + cs[i].abs()),
+                "gain[{i}]: {} vs {}",
+                xs[i],
+                cs[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn federated_training_same_model_on_both_engines() {
+    let Some(xla) = engine_or_skip() else { return };
+    use sbp::config::{CipherKind, TrainConfig};
+    use sbp::coordinator::train_federated_with_engine;
+    use sbp::data::synthetic::SyntheticSpec;
+
+    let vs = SyntheticSpec::give_credit(0.002).generate_vertical(19, 1);
+    let mut cfg = TrainConfig::secureboost_plus();
+    cfg.epochs = 4;
+    cfg.max_depth = 3;
+    cfg.cipher = CipherKind::Plain;
+    cfg.goss = None;
+    cfg.sparse_optimization = false;
+
+    let rx = train_federated_with_engine(&vs, &cfg, &xla).unwrap();
+    let rc = train_federated_with_engine(&vs, &cfg, &CpuEngine).unwrap();
+    // f32 vs f64 g/h can flip rare tie-break splits; quality must agree
+    assert!(
+        (rx.train_metric - rc.train_metric).abs() < 5e-3,
+        "xla {} vs cpu {}",
+        rx.train_metric,
+        rc.train_metric
+    );
+    assert!(rx.train_metric > 0.75);
+}
