@@ -48,6 +48,31 @@ pub enum ModeKind {
     MultiOutput,
 }
 
+/// How the guest reaches the host parties.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// Hosts run as threads in this process, joined by in-memory channels
+    /// (the historical default; byte accounting still uses exact
+    /// serialized wire sizes).
+    #[default]
+    InMemory,
+    /// Hosts run as separate processes (`sbp serve-host`); one framed TCP
+    /// connection per host, in the order of the host feature slices.
+    Tcp {
+        /// One `host:port` address per host party.
+        hosts: Vec<String>,
+    },
+}
+
+impl TransportKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InMemory => "in-memory",
+            TransportKind::Tcp { .. } => "tcp",
+        }
+    }
+}
+
 /// GOSS configuration (§6.1).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct GossConfig {
@@ -91,6 +116,8 @@ pub struct TrainConfig {
 
     pub mode: ModeKind,
     pub n_hosts: usize,
+    /// How to reach the host parties (in-memory threads or framed TCP).
+    pub transport: TransportKind,
     pub seed: u64,
     /// Print per-tree progress.
     pub verbose: bool,
@@ -122,6 +149,7 @@ impl TrainConfig {
             sparse_optimization: true,
             mode: ModeKind::Default,
             n_hosts: 1,
+            transport: TransportKind::InMemory,
             seed: 42,
             verbose: false,
         }
@@ -187,6 +215,18 @@ impl TrainConfig {
         if self.key_bits < 128 {
             return Err("key_bits too small".into());
         }
+        if let TransportKind::Tcp { hosts } = &self.transport {
+            if hosts.is_empty() {
+                return Err("tcp transport needs at least one host address".into());
+            }
+            if hosts.len() != self.n_hosts {
+                return Err(format!(
+                    "tcp transport: {} host addresses but n_hosts = {}",
+                    hosts.len(),
+                    self.n_hosts
+                ));
+            }
+        }
         Ok(())
     }
 }
@@ -234,6 +274,20 @@ mod tests {
         let mut c = TrainConfig::secureboost_plus();
         c.goss = Some(GossConfig { top_rate: 0.8, other_rate: 0.5 });
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn tcp_transport_validation() {
+        let mut c = TrainConfig::secureboost_plus();
+        assert_eq!(c.transport, TransportKind::InMemory);
+        c.transport = TransportKind::Tcp { hosts: vec![] };
+        assert!(c.validate().is_err());
+        c.transport = TransportKind::Tcp {
+            hosts: vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()],
+        };
+        assert!(c.validate().is_err(), "address count must match n_hosts");
+        c.n_hosts = 2;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

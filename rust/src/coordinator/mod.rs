@@ -1,21 +1,24 @@
-//! The coordinator/driver: spawns the host party threads, runs the guest
-//! training engine, and assembles the [`TrainReport`] the experiment
-//! harness consumes (timings, traffic, HE-op counts, model quality).
+//! The coordinator/driver: brings up the host parties (in-process threads
+//! over in-memory links, or framed-TCP connections to `sbp serve-host`
+//! processes, per [`TransportKind`]), runs the guest training engine, and
+//! assembles the [`TrainReport`] the experiment harness consumes
+//! (timings, traffic, HE-op counts, model quality).
 
-use crate::config::{CipherKind, TrainConfig};
+use crate::config::{CipherKind, TrainConfig, TransportKind};
 use crate::crypto::cipher::{CipherSuite, OpSnapshot, OPS};
 use crate::data::binning::bin_party;
 use crate::data::dataset::{Dataset, VerticalSplit};
 use crate::federation::guest::GuestParty;
 use crate::federation::host::spawn_host;
 use crate::federation::message::{ToGuest, ToHost};
+use crate::federation::tcp::TcpGuestTransport;
 use crate::tree::predict::{GuestModel, HostModel};
-use crate::federation::transport::{link_pair, NetSnapshot, NetworkModel};
+use crate::federation::transport::{link_pair, GuestTransport, NetSnapshot, NetworkModel};
 use crate::runtime::engine::{ComputeEngine, CpuEngine};
 use crate::tree::node::Tree;
 use crate::util::rng::ChaCha20Rng;
 use crate::util::timer::PhaseTimer;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::sync::{Arc, Mutex};
 
 /// Everything a training run produces.
@@ -137,18 +140,37 @@ pub fn train_federated_with_engine(
     let suite = make_suite(cfg);
     let ct_len = suite.ct_byte_len();
 
-    // spawn hosts
-    let mut guest_links = Vec::with_capacity(vs.hosts.len());
+    // bring up the host parties behind the configured transport
+    let mut guest_links: Vec<Box<dyn GuestTransport>> = Vec::with_capacity(vs.hosts.len());
     let mut handles = Vec::new();
     let mut host_timers = Vec::new();
-    for (hid, slice) in vs.hosts.iter().enumerate() {
-        let (gl, hl) = link_pair(ct_len);
-        let bm = bin_party(slice, cfg.max_bin);
-        let sb = crate::data::sparse::maybe_sparse(slice, &bm, cfg.sparse_optimization);
-        let timer = Arc::new(Mutex::new(PhaseTimer::new()));
-        host_timers.push(timer.clone());
-        handles.push(spawn_host(hid as u8, bm, sb, hl, timer));
-        guest_links.push(gl);
+    match &cfg.transport {
+        TransportKind::InMemory => {
+            for (hid, slice) in vs.hosts.iter().enumerate() {
+                let (gl, hl) = link_pair(ct_len);
+                let bm = bin_party(slice, cfg.max_bin);
+                let sb =
+                    crate::data::sparse::maybe_sparse(slice, &bm, cfg.sparse_optimization);
+                let timer = Arc::new(Mutex::new(PhaseTimer::new()));
+                host_timers.push(timer.clone());
+                handles.push(spawn_host(hid as u8, bm, sb, hl, timer));
+                guest_links.push(Box::new(gl));
+            }
+        }
+        TransportKind::Tcp { hosts } => {
+            if hosts.len() != vs.hosts.len() {
+                return Err(anyhow!(
+                    "tcp transport: {} addresses for {} host feature slices",
+                    hosts.len(),
+                    vs.hosts.len()
+                ));
+            }
+            for addr in hosts {
+                let t = TcpGuestTransport::connect(addr, suite.clone())
+                    .map_err(|e| anyhow!("connecting to host at {addr}: {e}"))?;
+                guest_links.push(Box::new(t));
+            }
+        }
     }
 
     // run guest
@@ -180,13 +202,8 @@ pub fn train_federated_with_engine(
     }
     let comm = guest_links
         .iter()
-        .map(|l| l.counters.snapshot())
-        .fold(NetSnapshot::default(), |acc, s| NetSnapshot {
-            bytes_to_host: acc.bytes_to_host + s.bytes_to_host,
-            bytes_to_guest: acc.bytes_to_guest + s.bytes_to_guest,
-            msgs_to_host: acc.msgs_to_host + s.msgs_to_host,
-            msgs_to_guest: acc.msgs_to_guest + s.msgs_to_guest,
-        });
+        .map(|l| l.snapshot())
+        .fold(NetSnapshot::default(), |acc, s| acc.add(&s));
     let net = NetworkModel::default();
     let total_tree: f64 = outcome.tree_seconds.iter().sum();
     Ok(TrainReport {

@@ -16,7 +16,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// A ciphertext under whichever schema the suite was built with.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Ct {
     Paillier(PaillierCt),
     Affine(AffineCt),

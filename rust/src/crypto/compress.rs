@@ -41,7 +41,7 @@ pub struct SplitStatCt {
 
 /// A compressed package: one ciphertext carrying ≤ η_s statistics
 /// (most-significant = first pushed), plus their ids and counts.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CtPackage {
     pub ct: Ct,
     pub ids: Vec<u32>,

@@ -48,11 +48,19 @@ impl GhPacker {
         Self { enc, g_off: 1.0, b_g, b_h, b_gh: b_g + b_h }
     }
 
-    /// Pack one (g, h) pair (Algorithm 3 body).
+    /// Pack one (g, h) pair (Algorithm 3 body). Rejects values outside
+    /// the planned bit budget: a silently overflowing pack would corrupt
+    /// every histogram sum it enters, so this is a hard check (two
+    /// `bit_length` reads — negligible next to the shift/add).
     pub fn pack(&self, g: f64, h: f64) -> BigUint {
         let ge = self.enc.encode(g + self.g_off);
         let he = self.enc.encode(h.max(0.0));
-        debug_assert!(ge.bit_length() <= self.b_g && he.bit_length() <= self.b_h);
+        assert!(
+            ge.bit_length() <= self.b_g && he.bit_length() <= self.b_h,
+            "g/h magnitude exceeds the planned packing budget (b_g={}, b_h={})",
+            self.b_g,
+            self.b_h
+        );
         ge.shl(self.b_h).add(&he)
     }
 

@@ -125,6 +125,21 @@ pub fn keygen(key_bits: usize, rng: &mut ChaCha20Rng) -> (PaillierPub, PaillierS
 }
 
 impl PaillierPub {
+    /// Rebuild a *host-side* public key from its wire form: the modulus
+    /// `n` plus the declared key length. Reconstructs the n² Montgomery
+    /// context so all homomorphic ops work; the obfuscation material
+    /// (`h`, pool) is **not** transferred — hosts only ever add/scale
+    /// ciphertexts, never encrypt, so the pool stays empty and the
+    /// pooled/fast encryption paths panic on such a key (`encrypt_exact`
+    /// would still obfuscate correctly via a full-size `rⁿ`).
+    pub fn public_from_parts(n: BigUint, key_bits: usize) -> Self {
+        assert!(!n.is_even() && !n.is_zero(), "paillier modulus must be odd");
+        let n_squared = n.square();
+        let ctx = Arc::new(MontCtx::new(n_squared.clone()));
+        let h_mont = ctx.mont_one();
+        PaillierPub { n, n_squared, ctx, key_bits, h_mont, obf_pool: Vec::new() }
+    }
+
     /// Plaintext bit capacity ι (values up to n−1; we use bit_length(n)−1
     /// to be safe against wraparound).
     pub fn plaintext_bits(&self) -> usize {
@@ -150,6 +165,10 @@ impl PaillierPub {
 
     /// Fast obfuscator: `h^ρ mod n²`, ρ short random exponent.
     pub fn obfuscator_fast(&self, rng: &mut ChaCha20Rng) -> MontInt {
+        assert!(
+            !self.obf_pool.is_empty(),
+            "wire-reconstructed public key has no obfuscation base (hosts never encrypt)"
+        );
         let rho = BigUint::random_bits(rng, FAST_OBF_BITS);
         self.ctx.mont_pow(&self.h_mont, &rho)
     }
@@ -157,6 +176,10 @@ impl PaillierPub {
     /// Pooled obfuscator: product of [`OBF_DRAW`] random pool entries —
     /// ~3 mont_muls (§Perf). Default for bulk training encryption.
     pub fn obfuscator_pooled(&self, rng: &mut ChaCha20Rng) -> MontInt {
+        assert!(
+            !self.obf_pool.is_empty(),
+            "wire-reconstructed public key has no obfuscator pool (hosts never encrypt)"
+        );
         let mut acc = self.obf_pool[(rng.next_u64() % OBF_POOL as u64) as usize].clone();
         for _ in 1..OBF_DRAW {
             let idx = (rng.next_u64() % OBF_POOL as u64) as usize;
@@ -370,6 +393,27 @@ mod tests {
         assert!(bytes.len() <= pk.ct_byte_len());
         let c2 = pk.ct_from_bytes(&bytes);
         assert_eq!(sk.decrypt(&pk, &c2), m);
+    }
+
+    #[test]
+    fn public_from_parts_operates_on_ciphertexts() {
+        // the host's wire-reconstructed key must interoperate with
+        // ciphertexts produced (and later decrypted) by the full key
+        let (pk, sk, mut rng) = setup(512, 11);
+        let host_pk = PaillierPub::public_from_parts(pk.n.clone(), pk.key_bits);
+        assert_eq!(host_pk.ct_byte_len(), pk.ct_byte_len());
+        assert_eq!(host_pk.plaintext_bits(), pk.plaintext_bits());
+        let a = pk.encrypt(&BigUint::from_u64(70), &mut rng);
+        let b = pk.encrypt(&BigUint::from_u64(5), &mut rng);
+        let sum = host_pk.add(&a, &b);
+        assert_eq!(sk.decrypt(&pk, &sum), BigUint::from_u64(75));
+        let diff = host_pk.sub(&a, &b);
+        assert_eq!(sk.decrypt(&pk, &diff), BigUint::from_u64(65));
+        let bytes = host_pk.ct_to_bytes(&sum);
+        assert_eq!(
+            sk.decrypt(&pk, &host_pk.ct_from_bytes(&bytes)),
+            BigUint::from_u64(75)
+        );
     }
 
     #[test]

@@ -1,5 +1,7 @@
-//! Statistic codecs: how per-instance gradient/hessian statistics become
-//! plaintext integers (and back).
+//! Statistic codecs **and** the wire codec of the federation protocol.
+//!
+//! Statistic codecs — how per-instance gradient/hessian statistics become
+//! plaintext integers (and back):
 //!
 //! - [`StatCodec::Packed`] — GH packing (paper Alg. 3): one plaintext per
 //!   instance. SecureBoost+ default for binary tasks.
@@ -7,9 +9,33 @@
 //!   h encoded into *two* separate plaintexts per instance.
 //! - [`StatCodec::Multi`] — multi-class packing (Alg. 7): ⌈k/η_c⌉
 //!   plaintexts per instance for SecureBoost-MO.
+//!
+//! Wire codec — how [`ToHost`]/[`ToGuest`] messages become length-prefixed
+//! frames on a byte transport ([`crate::federation::tcp`]):
+//!
+//! - Frame = `u64 LE payload length` + payload; payload = `u8 tag` + body.
+//!   The tag equals the message's kind index, so per-kind traffic counters
+//!   ([`crate::federation::transport::NetCounters`]) and the wire agree.
+//! - Ciphertexts travel in standard (non-Montgomery) form, left-padded to
+//!   the suite's fixed `ct_byte_len`, so frame sizes are computable without
+//!   serializing — [`to_host_wire_len`]/[`to_guest_wire_len`] return the
+//!   *exact* number of bytes a message occupies on the wire, and the
+//!   in-memory transport charges those same numbers.
+//! - Messages are already batched level-wise by the protocol (one
+//!   `BuildLayer`/`LayerStats` message carries every node of a depth), so
+//!   one frame per layer crosses the socket.
+//! - Decoding is defensive: truncated buffers, bad tags, and garbage
+//!   length fields return [`WireError`] instead of panicking or
+//!   over-allocating.
 
 use crate::crypto::bigint::BigUint;
+use crate::crypto::cipher::{CipherSuite, Ct};
+use crate::crypto::compress::{CompressPlan, CtPackage};
+use crate::crypto::encoding::FixedPointEncoder;
 use crate::crypto::packing::{GhPacker, MoPacker};
+use crate::federation::message::{HistTask, NodeStats, ToGuest, ToHost};
+use std::io::{Read, Write};
+use std::sync::Arc;
 
 #[derive(Clone, Debug)]
 pub enum StatCodec {
@@ -90,6 +116,795 @@ impl StatCodec {
     }
 }
 
+// ====================================================================
+// Wire codec
+// ====================================================================
+
+/// Bytes of the per-frame length prefix (u64 LE).
+pub const FRAME_HEADER_LEN: usize = 8;
+
+/// Upper bound accepted for a single frame (1 TiB; a garbage length field
+/// fails fast instead of driving a huge allocation — real frames are read
+/// incrementally in 1 MiB steps anyway).
+pub const MAX_FRAME_LEN: u64 = 1 << 40;
+
+/// Errors surfaced by the wire codec. Protocol errors are distinguished
+/// from I/O errors so transports can decide what is fatal.
+#[derive(Debug)]
+pub enum WireError {
+    /// The buffer/stream ended before the structure was complete.
+    Truncated,
+    /// An enum tag byte had no defined meaning.
+    BadTag { what: &'static str, tag: u8 },
+    /// A structurally invalid payload (bad length field, missing Setup, …).
+    Malformed(&'static str),
+    /// The length prefix exceeds [`MAX_FRAME_LEN`].
+    FrameTooLarge(u64),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::BadTag { what, tag } => write!(f, "bad {what} tag {tag:#04x}"),
+            WireError::Malformed(m) => write!(f, "malformed frame: {m}"),
+            WireError::FrameTooLarge(n) => write!(f, "frame length {n} exceeds limit"),
+            WireError::Io(e) => write!(f, "transport i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+// ----------------------------------------------------------- primitives
+
+/// Cursor over a received payload with bounds-checked reads.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A `u32` length field for a sequence of `elem_size`-byte elements;
+    /// rejects lengths that cannot fit in the remaining buffer *before*
+    /// any allocation happens.
+    fn seq_len(&mut self, elem_size: usize) -> Result<usize, WireError> {
+        let n = self.u32()? as usize;
+        if n > self.remaining() / elem_size.max(1) {
+            return Err(WireError::Malformed("sequence length exceeds frame"));
+        }
+        Ok(n)
+    }
+
+    /// All bytes must have been consumed.
+    fn finish(self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(WireError::Malformed("trailing bytes after message"));
+        }
+        Ok(())
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32_list(out: &mut Vec<u8>, xs: &[u32]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        put_u32(out, x);
+    }
+}
+
+fn get_u32_list(r: &mut Reader) -> Result<Vec<u32>, WireError> {
+    let n = r.seq_len(4)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(r.u32()?);
+    }
+    Ok(out)
+}
+
+fn put_biguint(out: &mut Vec<u8>, v: &BigUint) {
+    let bytes = v.to_bytes_be();
+    put_u32(out, bytes.len() as u32);
+    out.extend_from_slice(&bytes);
+}
+
+fn get_biguint(r: &mut Reader) -> Result<BigUint, WireError> {
+    let n = r.seq_len(1)?;
+    Ok(BigUint::from_bytes_be(r.take(n)?))
+}
+
+fn biguint_wire_len(v: &BigUint) -> usize {
+    4 + v.byte_len()
+}
+
+// ------------------------------------------------------------ ciphertexts
+
+/// Serialize a ciphertext in standard form, left-padded to `ct_len` bytes
+/// so every ciphertext of a run has identical wire width.
+fn put_ct(out: &mut Vec<u8>, suite: &CipherSuite, ct_len: usize, ct: &Ct) {
+    let bytes = match (suite, ct) {
+        (CipherSuite::Paillier { pk, .. }, Ct::Paillier(c)) => pk.ct_to_bytes(c),
+        (CipherSuite::Affine { .. }, Ct::Affine(c)) => c.to_bytes_be(),
+        (CipherSuite::Plain { .. }, Ct::Plain(v)) => v.to_bytes_be(),
+        _ => panic!("ciphertext kind does not match cipher suite"),
+    };
+    assert!(bytes.len() <= ct_len, "ciphertext exceeds fixed wire width");
+    out.resize(out.len() + (ct_len - bytes.len()), 0);
+    out.extend_from_slice(&bytes);
+}
+
+fn get_ct(r: &mut Reader, suite: &CipherSuite, ct_len: usize) -> Result<Ct, WireError> {
+    let bytes = r.take(ct_len)?;
+    Ok(match suite {
+        CipherSuite::Paillier { pk, .. } => Ct::Paillier(pk.ct_from_bytes(bytes)),
+        CipherSuite::Affine { .. } => Ct::Affine(BigUint::from_bytes_be(bytes)),
+        CipherSuite::Plain { .. } => Ct::Plain(BigUint::from_bytes_be(bytes)),
+    })
+}
+
+// ------------------------------------------------------- protocol pieces
+
+const SUITE_PAILLIER: u8 = 0;
+const SUITE_AFFINE: u8 = 1;
+const SUITE_PLAIN: u8 = 2;
+
+/// Serialize the *public side* of a cipher suite (what `Setup` ships to a
+/// host). Secret material is never written.
+fn put_suite(out: &mut Vec<u8>, suite: &CipherSuite) {
+    match suite {
+        CipherSuite::Paillier { pk, .. } => {
+            out.push(SUITE_PAILLIER);
+            put_biguint(out, &pk.n);
+            put_u32(out, pk.key_bits as u32);
+        }
+        CipherSuite::Affine { pubp, .. } => {
+            out.push(SUITE_AFFINE);
+            put_biguint(out, &pubp.n);
+            put_u32(out, pubp.key_bits as u32);
+        }
+        CipherSuite::Plain { bits, .. } => {
+            out.push(SUITE_PLAIN);
+            put_u32(out, *bits as u32);
+        }
+    }
+}
+
+fn get_suite(r: &mut Reader) -> Result<CipherSuite, WireError> {
+    match r.u8()? {
+        SUITE_PAILLIER => {
+            let n = get_biguint(r)?;
+            let key_bits = r.u32()? as usize;
+            // n must be odd (Montgomery contexts require odd moduli) and of
+            // sane size before we square it to rebuild the n² context.
+            if n.bit_length() < 8 || n.bit_length() > (1 << 16) || n.is_even() {
+                return Err(WireError::Malformed("implausible paillier modulus"));
+            }
+            let pk = crate::crypto::paillier::PaillierPub::public_from_parts(n, key_bits);
+            Ok(CipherSuite::Paillier { pk: Arc::new(pk), sk: None })
+        }
+        SUITE_AFFINE => {
+            let n = get_biguint(r)?;
+            let key_bits = r.u32()? as usize;
+            if n.is_zero() || n.is_even() || n.bit_length() > (1 << 16) {
+                return Err(WireError::Malformed("implausible affine modulus"));
+            }
+            Ok(CipherSuite::Affine {
+                pubp: crate::crypto::iterative_affine::AffinePub { n, key_bits },
+                key: None,
+            })
+        }
+        SUITE_PLAIN => {
+            let bits = r.u32()? as usize;
+            if bits == 0 || bits > 1 << 20 {
+                return Err(WireError::Malformed("plain suite bits out of range"));
+            }
+            Ok(CipherSuite::new_plain(bits))
+        }
+        t => Err(WireError::BadTag { what: "cipher suite", tag: t }),
+    }
+}
+
+fn suite_wire_len(suite: &CipherSuite) -> usize {
+    1 + match suite {
+        CipherSuite::Paillier { pk, .. } => biguint_wire_len(&pk.n) + 4,
+        CipherSuite::Affine { pubp, .. } => biguint_wire_len(&pubp.n) + 4,
+        CipherSuite::Plain { .. } => 4,
+    }
+}
+
+/// GhPacker wire size: precision + g_off + b_g + b_h + b_gh.
+const PACKER_WIRE_LEN: usize = 4 + 8 + 4 + 4 + 4;
+
+fn put_packer(out: &mut Vec<u8>, p: &GhPacker) {
+    put_u32(out, p.enc.precision);
+    put_f64(out, p.g_off);
+    put_u32(out, p.b_g as u32);
+    put_u32(out, p.b_h as u32);
+    put_u32(out, p.b_gh as u32);
+}
+
+fn get_packer(r: &mut Reader) -> Result<GhPacker, WireError> {
+    let precision = r.u32()?;
+    if precision > 63 {
+        return Err(WireError::Malformed("fixed-point precision out of range"));
+    }
+    let g_off = r.f64()?;
+    if !g_off.is_finite() {
+        return Err(WireError::Malformed("non-finite gradient offset"));
+    }
+    let b_g = r.u32()? as usize;
+    let b_h = r.u32()? as usize;
+    let b_gh = r.u32()? as usize;
+    // every in-tree plan satisfies b_gh = b_g + b_h; bit widths beyond any
+    // plausible plaintext space are rejected so a hostile Setup frame
+    // cannot drive multi-gigabyte BigUint shifts later
+    if b_g == 0 || b_h == 0 || b_gh != b_g + b_h || b_gh > (1 << 20) {
+        return Err(WireError::Malformed("implausible packing bit budget"));
+    }
+    Ok(GhPacker { enc: FixedPointEncoder::new(precision), g_off, b_g, b_h, b_gh })
+}
+
+const CODEC_PACKED: u8 = 0;
+const CODEC_SEPARATE: u8 = 1;
+const CODEC_MULTI: u8 = 2;
+
+fn put_stat_codec(out: &mut Vec<u8>, c: &StatCodec) {
+    match c {
+        StatCodec::Packed(p) => {
+            out.push(CODEC_PACKED);
+            put_packer(out, p);
+        }
+        StatCodec::Separate(p) => {
+            out.push(CODEC_SEPARATE);
+            put_packer(out, p);
+        }
+        StatCodec::Multi(m) => {
+            out.push(CODEC_MULTI);
+            put_packer(out, &m.base);
+            put_u32(out, m.k as u32);
+            put_u32(out, m.eta_c as u32);
+            put_u32(out, m.n_k as u32);
+        }
+    }
+}
+
+fn get_stat_codec(r: &mut Reader) -> Result<StatCodec, WireError> {
+    match r.u8()? {
+        CODEC_PACKED => Ok(StatCodec::Packed(get_packer(r)?)),
+        CODEC_SEPARATE => Ok(StatCodec::Separate(get_packer(r)?)),
+        CODEC_MULTI => {
+            let base = get_packer(r)?;
+            let k = r.u32()? as usize;
+            let eta_c = r.u32()? as usize;
+            let n_k = r.u32()? as usize;
+            if k == 0 || eta_c == 0 || n_k == 0 || n_k != k.div_ceil(eta_c) {
+                return Err(WireError::Malformed("inconsistent multi-class packing plan"));
+            }
+            Ok(StatCodec::Multi(MoPacker { base, k, eta_c, n_k }))
+        }
+        t => Err(WireError::BadTag { what: "stat codec", tag: t }),
+    }
+}
+
+fn stat_codec_wire_len(c: &StatCodec) -> usize {
+    1 + PACKER_WIRE_LEN + if matches!(c, StatCodec::Multi(_)) { 12 } else { 0 }
+}
+
+const TASK_DIRECT: u8 = 0;
+const TASK_SUBTRACT: u8 = 1;
+
+fn put_task(out: &mut Vec<u8>, t: &HistTask) {
+    match t {
+        HistTask::Direct { node } => {
+            out.push(TASK_DIRECT);
+            put_u32(out, *node);
+        }
+        HistTask::Subtract { node, parent, sibling } => {
+            out.push(TASK_SUBTRACT);
+            put_u32(out, *node);
+            put_u32(out, *parent);
+            put_u32(out, *sibling);
+        }
+    }
+}
+
+fn get_task(r: &mut Reader) -> Result<HistTask, WireError> {
+    match r.u8()? {
+        TASK_DIRECT => Ok(HistTask::Direct { node: r.u32()? }),
+        TASK_SUBTRACT => Ok(HistTask::Subtract {
+            node: r.u32()?,
+            parent: r.u32()?,
+            sibling: r.u32()?,
+        }),
+        t => Err(WireError::BadTag { what: "hist task", tag: t }),
+    }
+}
+
+fn task_wire_len(t: &HistTask) -> usize {
+    match t {
+        HistTask::Direct { .. } => 5,
+        HistTask::Subtract { .. } => 13,
+    }
+}
+
+const STATS_COMPRESSED: u8 = 0;
+const STATS_RAW: u8 = 1;
+
+fn put_node_stats(out: &mut Vec<u8>, suite: &CipherSuite, ct_len: usize, s: &NodeStats) {
+    match s {
+        NodeStats::Compressed(pkgs) => {
+            out.push(STATS_COMPRESSED);
+            put_u32(out, pkgs.len() as u32);
+            for p in pkgs {
+                put_ct(out, suite, ct_len, &p.ct);
+                put_u32_list(out, &p.ids);
+                put_u32_list(out, &p.counts);
+            }
+        }
+        NodeStats::Raw(rows) => {
+            out.push(STATS_RAW);
+            put_u32(out, rows.len() as u32);
+            for (id, count, cts) in rows {
+                put_u32(out, *id);
+                put_u32(out, *count);
+                put_u32(out, cts.len() as u32);
+                for ct in cts {
+                    put_ct(out, suite, ct_len, ct);
+                }
+            }
+        }
+    }
+}
+
+fn get_node_stats(
+    r: &mut Reader,
+    suite: &CipherSuite,
+    ct_len: usize,
+) -> Result<NodeStats, WireError> {
+    match r.u8()? {
+        STATS_COMPRESSED => {
+            let n = r.seq_len(ct_len + 8)?;
+            let mut pkgs = Vec::with_capacity(n);
+            for _ in 0..n {
+                let ct = get_ct(r, suite, ct_len)?;
+                let ids = get_u32_list(r)?;
+                let counts = get_u32_list(r)?;
+                if ids.len() != counts.len() || ids.is_empty() {
+                    return Err(WireError::Malformed("package ids/counts mismatch"));
+                }
+                pkgs.push(CtPackage { ct, ids, counts });
+            }
+            Ok(NodeStats::Compressed(pkgs))
+        }
+        STATS_RAW => {
+            let n = r.seq_len(12)?;
+            let mut rows = Vec::with_capacity(n);
+            for _ in 0..n {
+                let id = r.u32()?;
+                let count = r.u32()?;
+                let n_cts = r.seq_len(ct_len)?;
+                let mut cts = Vec::with_capacity(n_cts);
+                for _ in 0..n_cts {
+                    cts.push(get_ct(r, suite, ct_len)?);
+                }
+                rows.push((id, count, cts));
+            }
+            Ok(NodeStats::Raw(rows))
+        }
+        t => Err(WireError::BadTag { what: "node stats", tag: t }),
+    }
+}
+
+fn node_stats_wire_len(s: &NodeStats, ct_len: usize) -> usize {
+    1 + match s {
+        NodeStats::Compressed(pkgs) => {
+            4 + pkgs
+                .iter()
+                .map(|p| ct_len + 4 + p.ids.len() * 4 + 4 + p.counts.len() * 4)
+                .sum::<usize>()
+        }
+        NodeStats::Raw(rows) => {
+            4 + rows.iter().map(|(_, _, cts)| 12 + cts.len() * ct_len).sum::<usize>()
+        }
+    }
+}
+
+// ------------------------------------------------------- whole messages
+
+/// Serialize a guest→host message into a frame payload (no length prefix).
+pub fn encode_to_host(suite: &CipherSuite, ct_len: usize, msg: &ToHost) -> Vec<u8> {
+    let mut out = Vec::with_capacity(to_host_wire_len(msg, ct_len) - FRAME_HEADER_LEN);
+    out.push(msg.kind().index() as u8);
+    match msg {
+        ToHost::Setup {
+            suite_public,
+            codec,
+            compress,
+            n_bins,
+            hist_subtraction,
+            sparse_optimization,
+            seed,
+        } => {
+            put_suite(&mut out, suite_public);
+            put_stat_codec(&mut out, codec);
+            match compress {
+                Some(p) => {
+                    out.push(1);
+                    put_u32(&mut out, p.capacity as u32);
+                    put_u32(&mut out, p.b_gh as u32);
+                }
+                None => out.push(0),
+            }
+            put_u32(&mut out, *n_bins as u32);
+            out.push(*hist_subtraction as u8);
+            out.push(*sparse_optimization as u8);
+            put_u64(&mut out, *seed);
+        }
+        ToHost::StartTree { tree_id, instances, packed, node_total } => {
+            put_u32(&mut out, *tree_id);
+            put_u32_list(&mut out, instances);
+            put_u32(&mut out, packed.len() as u32);
+            for ct in packed.iter() {
+                put_ct(&mut out, suite, ct_len, ct);
+            }
+            put_u32(&mut out, node_total.len() as u32);
+            for ct in node_total {
+                put_ct(&mut out, suite, ct_len, ct);
+            }
+        }
+        ToHost::BuildLayer { tree_id, tasks } => {
+            put_u32(&mut out, *tree_id);
+            put_u32(&mut out, tasks.len() as u32);
+            for t in tasks {
+                put_task(&mut out, t);
+            }
+        }
+        ToHost::ApplySplit { tree_id, node, handle, instances } => {
+            put_u32(&mut out, *tree_id);
+            put_u32(&mut out, *node);
+            put_u32(&mut out, *handle);
+            put_u32_list(&mut out, instances);
+        }
+        ToHost::SyncAssign { tree_id, node, left_child, right_child, left } => {
+            put_u32(&mut out, *tree_id);
+            put_u32(&mut out, *node);
+            put_u32(&mut out, *left_child);
+            put_u32(&mut out, *right_child);
+            put_u32_list(&mut out, left);
+        }
+        ToHost::FinishTree { tree_id } => put_u32(&mut out, *tree_id),
+        ToHost::DumpSplitTable | ToHost::Shutdown => {}
+    }
+    debug_assert_eq!(out.len() + FRAME_HEADER_LEN, to_host_wire_len(msg, ct_len));
+    out
+}
+
+/// Decode a guest→host frame payload. `Setup` needs no prior state; every
+/// ciphertext-bearing message needs the `(suite, ct_len)` pair the host
+/// learned from `Setup`.
+pub fn decode_to_host(
+    setup: Option<(&CipherSuite, usize)>,
+    payload: &[u8],
+) -> Result<ToHost, WireError> {
+    let mut r = Reader::new(payload);
+    let tag = r.u8()?;
+    let msg = match tag {
+        0 => {
+            let suite_public = get_suite(&mut r)?;
+            let codec = get_stat_codec(&mut r)?;
+            let compress = match r.u8()? {
+                0 => None,
+                1 => {
+                    let capacity = r.u32()? as usize;
+                    let b_gh = r.u32()? as usize;
+                    // a valid plan packs η_s · b_gh bits into one plaintext
+                    // (CompressPlan::derive), so anything beyond the suite's
+                    // plaintext capacity is hostile or corrupt — executing it
+                    // would grow host-side ciphertext shifts without bound
+                    if capacity == 0
+                        || b_gh == 0
+                        || capacity.saturating_mul(b_gh) > suite_public.plaintext_bits()
+                    {
+                        return Err(WireError::Malformed("implausible compression plan"));
+                    }
+                    Some(CompressPlan { capacity, b_gh })
+                }
+                t => return Err(WireError::BadTag { what: "compress flag", tag: t }),
+            };
+            ToHost::Setup {
+                suite_public,
+                codec,
+                compress,
+                n_bins: r.u32()? as usize,
+                hist_subtraction: r.u8()? != 0,
+                sparse_optimization: r.u8()? != 0,
+                seed: r.u64()?,
+            }
+        }
+        1 => {
+            let (suite, ct_len) =
+                setup.ok_or(WireError::Malformed("StartTree before Setup"))?;
+            let tree_id = r.u32()?;
+            let instances = get_u32_list(&mut r)?;
+            let n_packed = r.seq_len(ct_len)?;
+            let mut packed = Vec::with_capacity(n_packed);
+            for _ in 0..n_packed {
+                packed.push(get_ct(&mut r, suite, ct_len)?);
+            }
+            let n_tot = r.seq_len(ct_len)?;
+            let mut node_total = Vec::with_capacity(n_tot);
+            for _ in 0..n_tot {
+                node_total.push(get_ct(&mut r, suite, ct_len)?);
+            }
+            ToHost::StartTree {
+                tree_id,
+                instances: Arc::new(instances),
+                packed: Arc::new(packed),
+                node_total,
+            }
+        }
+        2 => {
+            let tree_id = r.u32()?;
+            let n = r.seq_len(5)?;
+            let mut tasks = Vec::with_capacity(n);
+            for _ in 0..n {
+                tasks.push(get_task(&mut r)?);
+            }
+            ToHost::BuildLayer { tree_id, tasks }
+        }
+        3 => ToHost::ApplySplit {
+            tree_id: r.u32()?,
+            node: r.u32()?,
+            handle: r.u32()?,
+            instances: Arc::new(get_u32_list(&mut r)?),
+        },
+        4 => ToHost::SyncAssign {
+            tree_id: r.u32()?,
+            node: r.u32()?,
+            left_child: r.u32()?,
+            right_child: r.u32()?,
+            left: Arc::new(get_u32_list(&mut r)?),
+        },
+        5 => ToHost::FinishTree { tree_id: r.u32()? },
+        6 => ToHost::DumpSplitTable,
+        7 => ToHost::Shutdown,
+        t => return Err(WireError::BadTag { what: "to-host message", tag: t }),
+    };
+    r.finish()?;
+    Ok(msg)
+}
+
+/// Serialize a host→guest message into a frame payload (no length prefix).
+pub fn encode_to_guest(suite: &CipherSuite, ct_len: usize, msg: &ToGuest) -> Vec<u8> {
+    let mut out = Vec::with_capacity(to_guest_wire_len(msg, ct_len) - FRAME_HEADER_LEN);
+    out.push(msg.kind().index() as u8);
+    match msg {
+        ToGuest::LayerStats { tree_id, nodes } => {
+            put_u32(&mut out, *tree_id);
+            put_u32(&mut out, nodes.len() as u32);
+            for (node, stats) in nodes {
+                put_u32(&mut out, *node);
+                put_node_stats(&mut out, suite, ct_len, stats);
+            }
+        }
+        ToGuest::LeftInstances { tree_id, node, left } => {
+            put_u32(&mut out, *tree_id);
+            put_u32(&mut out, *node);
+            put_u32_list(&mut out, left);
+        }
+        ToGuest::SplitTable { entries } => {
+            put_u32(&mut out, entries.len() as u32);
+            for (handle, bin, threshold) in entries {
+                put_u32(&mut out, *handle);
+                out.push(*bin);
+                put_f64(&mut out, *threshold);
+            }
+        }
+        ToGuest::Ack => {}
+    }
+    debug_assert_eq!(out.len() + FRAME_HEADER_LEN, to_guest_wire_len(msg, ct_len));
+    out
+}
+
+/// Decode a host→guest frame payload with the guest's cipher suite.
+pub fn decode_to_guest(
+    suite: &CipherSuite,
+    ct_len: usize,
+    payload: &[u8],
+) -> Result<ToGuest, WireError> {
+    let mut r = Reader::new(payload);
+    let tag = r.u8()?;
+    let msg = match tag {
+        0 => {
+            let tree_id = r.u32()?;
+            let n = r.seq_len(5)?;
+            let mut nodes = Vec::with_capacity(n);
+            for _ in 0..n {
+                let node = r.u32()?;
+                let stats = get_node_stats(&mut r, suite, ct_len)?;
+                nodes.push((node, stats));
+            }
+            ToGuest::LayerStats { tree_id, nodes }
+        }
+        1 => ToGuest::LeftInstances {
+            tree_id: r.u32()?,
+            node: r.u32()?,
+            left: get_u32_list(&mut r)?,
+        },
+        2 => {
+            let n = r.seq_len(13)?;
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                let handle = r.u32()?;
+                let bin = r.u8()?;
+                let threshold = r.f64()?;
+                entries.push((handle, bin, threshold));
+            }
+            ToGuest::SplitTable { entries }
+        }
+        3 => ToGuest::Ack,
+        t => return Err(WireError::BadTag { what: "to-guest message", tag: t }),
+    };
+    r.finish()?;
+    Ok(msg)
+}
+
+// ------------------------------------------------------- exact wire sizes
+
+/// Exact wire footprint of a guest→host message: frame header + tag +
+/// body, byte-for-byte what [`encode_to_host`] plus the length prefix
+/// produce. The in-memory transport charges these same numbers, so
+/// traffic accounting is transport-independent.
+pub fn to_host_wire_len(msg: &ToHost, ct_len: usize) -> usize {
+    FRAME_HEADER_LEN
+        + 1
+        + match msg {
+            ToHost::Setup { suite_public, codec, compress, .. } => {
+                suite_wire_len(suite_public)
+                    + stat_codec_wire_len(codec)
+                    + 1
+                    + if compress.is_some() { 8 } else { 0 }
+                    + 4 // n_bins
+                    + 1 // hist_subtraction
+                    + 1 // sparse_optimization
+                    + 8 // seed
+            }
+            ToHost::StartTree { instances, packed, node_total, .. } => {
+                4 + (4 + instances.len() * 4)
+                    + (4 + packed.len() * ct_len)
+                    + (4 + node_total.len() * ct_len)
+            }
+            ToHost::BuildLayer { tasks, .. } => {
+                4 + 4 + tasks.iter().map(task_wire_len).sum::<usize>()
+            }
+            ToHost::ApplySplit { instances, .. } => 12 + 4 + instances.len() * 4,
+            ToHost::SyncAssign { left, .. } => 16 + 4 + left.len() * 4,
+            ToHost::FinishTree { .. } => 4,
+            ToHost::DumpSplitTable | ToHost::Shutdown => 0,
+        }
+}
+
+/// Exact wire footprint of a host→guest message (see [`to_host_wire_len`]).
+pub fn to_guest_wire_len(msg: &ToGuest, ct_len: usize) -> usize {
+    FRAME_HEADER_LEN
+        + 1
+        + match msg {
+            ToGuest::LayerStats { nodes, .. } => {
+                4 + 4
+                    + nodes
+                        .iter()
+                        .map(|(_, s)| 4 + node_stats_wire_len(s, ct_len))
+                        .sum::<usize>()
+            }
+            ToGuest::LeftInstances { left, .. } => 8 + 4 + left.len() * 4,
+            ToGuest::SplitTable { entries } => 4 + entries.len() * 13,
+            ToGuest::Ack => 0,
+        }
+}
+
+// ------------------------------------------------------------- frame i/o
+
+/// Read exactly `buf.len()` bytes; `Ok(false)` when the stream is cleanly
+/// closed before the first byte, `Err(Truncated)` when it dies mid-way.
+fn read_exact_or(r: &mut impl Read, buf: &mut [u8]) -> Result<bool, WireError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return if got == 0 { Ok(false) } else { Err(WireError::Truncated) };
+            }
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    Ok(true)
+}
+
+/// Write one frame: u64 LE length prefix + payload.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame; `Ok(None)` on clean end-of-stream at a frame boundary.
+/// The body is read incrementally (1 MiB steps), so a garbage length
+/// field cannot drive a giant up-front allocation.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, WireError> {
+    let mut hdr = [0u8; FRAME_HEADER_LEN];
+    if !read_exact_or(r, &mut hdr)? {
+        return Ok(None);
+    }
+    let len = u64::from_le_bytes(hdr);
+    if len > MAX_FRAME_LEN {
+        return Err(WireError::FrameTooLarge(len));
+    }
+    let len = len as usize;
+    let mut buf = Vec::with_capacity(len.min(1 << 20));
+    let mut filled = 0;
+    while filled < len {
+        let step = (len - filled).min(1 << 20);
+        buf.resize(filled + step, 0);
+        if !read_exact_or(r, &mut buf[filled..filled + step])? {
+            return Err(WireError::Truncated);
+        }
+        filled += step;
+    }
+    Ok(Some(buf))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -156,5 +971,47 @@ mod tests {
         let packer = GhPacker::plan_logistic(100, 53);
         assert!(StatCodec::Packed(packer.clone()).compressible_b_gh().is_some());
         assert!(StatCodec::Separate(packer).compressible_b_gh().is_none());
+    }
+
+    #[test]
+    fn wire_len_matches_encoding_for_simple_messages() {
+        let suite = CipherSuite::new_plain(512);
+        let ct_len = suite.ct_byte_len();
+        let msgs = [
+            ToHost::ApplySplit {
+                tree_id: 1,
+                node: 2,
+                handle: 3,
+                instances: Arc::new(vec![4, 5, 6]),
+            },
+            ToHost::FinishTree { tree_id: 9 },
+            ToHost::Shutdown,
+        ];
+        for m in &msgs {
+            let payload = encode_to_host(&suite, ct_len, m);
+            assert_eq!(payload.len() + FRAME_HEADER_LEN, to_host_wire_len(m, ct_len));
+        }
+        let g = ToGuest::LeftInstances { tree_id: 0, node: 1, left: vec![1, 2, 3, 4] };
+        let payload = encode_to_guest(&suite, ct_len, &g);
+        assert_eq!(payload.len() + FRAME_HEADER_LEN, to_guest_wire_len(&g, ct_len));
+    }
+
+    #[test]
+    fn frame_roundtrip_over_buffer() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversize_frame_rejected() {
+        let mut buf = (MAX_FRAME_LEN + 1).to_le_bytes().to_vec();
+        buf.extend_from_slice(&[0; 16]);
+        let mut cur = std::io::Cursor::new(buf);
+        assert!(matches!(read_frame(&mut cur), Err(WireError::FrameTooLarge(_))));
     }
 }

@@ -22,7 +22,7 @@ use crate::data::goss::goss_sample;
 use crate::data::sparse::SparseBinned;
 use crate::federation::codec::StatCodec;
 use crate::federation::message::{CandidateMask, HistTask, NodeStats, ToGuest, ToHost};
-use crate::federation::transport::GuestLink;
+use crate::federation::transport::GuestTransport;
 use crate::metrics::{accuracy_multiclass, auc, celoss_multiclass, logloss_binary};
 use crate::runtime::engine::ComputeEngine;
 use crate::tree::histogram::PlainHistogram;
@@ -67,7 +67,7 @@ pub struct GuestParty<'a> {
     vs: &'a VerticalSplit,
     cfg: &'a TrainConfig,
     engine: &'a dyn ComputeEngine,
-    links: &'a [GuestLink],
+    links: &'a [Box<dyn GuestTransport>],
     bm: BinnedMatrix,
     sb: Option<SparseBinned>,
     suite: CipherSuite,
@@ -85,7 +85,7 @@ impl<'a> GuestParty<'a> {
         vs: &'a VerticalSplit,
         cfg: &'a TrainConfig,
         engine: &'a dyn ComputeEngine,
-        links: &'a [GuestLink],
+        links: &'a [Box<dyn GuestTransport>],
         suite: CipherSuite,
     ) -> Self {
         let bm = bin_party(&vs.guest, cfg.max_bin);

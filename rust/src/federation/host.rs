@@ -3,8 +3,11 @@
 //! shuffled split-infos, compresses them, and applies winning splits —
 //! paper Algorithms 1 and 5.
 //!
-//! Runs as a dedicated thread (`run_host`) talking to the guest through a
-//! [`HostLink`]. The host never sees a plaintext statistic or the guest's
+//! Talks to the guest through any [`HostTransport`]: the in-process
+//! [`HostLink`] (host runs as a thread, see [`spawn_host`]) or the framed
+//! TCP transport (host runs as its own process, see
+//! [`crate::federation::tcp::serve_host_once`] and the `sbp serve-host`
+//! subcommand). The host never sees a plaintext statistic or the guest's
 //! labels; the guest never learns which (feature, bin) a split handle
 //! denotes.
 
@@ -14,19 +17,20 @@ use crate::data::binning::BinnedMatrix;
 use crate::data::sparse::SparseBinned;
 use crate::federation::codec::StatCodec;
 use crate::federation::message::{HistTask, NodeStats, ToGuest, ToHost};
-use crate::federation::transport::HostLink;
+use crate::federation::transport::{HostLink, HostTransport};
 use crate::tree::histogram::CipherHistogram;
 use crate::util::rng::Xoshiro256;
 use crate::util::timer::PhaseTimer;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-/// Host-side per-run state.
-pub struct HostParty {
+/// Host-side per-run state, generic over the transport carrying the
+/// guest's protocol messages.
+pub struct HostParty<T: HostTransport> {
     pub id: u8,
     bm: BinnedMatrix,
     sb: Option<SparseBinned>,
-    link: HostLink,
+    link: T,
     timer: Arc<Mutex<PhaseTimer>>,
 
     // protocol parameters (Setup)
@@ -51,12 +55,12 @@ pub struct HostParty {
     split_table: Vec<(u32, u8, f64)>,
 }
 
-impl HostParty {
+impl<T: HostTransport> HostParty<T> {
     pub fn new(
         id: u8,
         bm: BinnedMatrix,
         sb: Option<SparseBinned>,
-        link: HostLink,
+        link: T,
         timer: Arc<Mutex<PhaseTimer>>,
     ) -> Self {
         HostParty {
@@ -318,7 +322,9 @@ fn clone_hist(suite: &CipherSuite, h: &CipherHistogram) -> CipherHistogram {
     }
 }
 
-/// Spawn a host thread. Returns its join handle.
+/// Spawn an in-process host thread over an mpsc [`HostLink`]. Returns its
+/// join handle. (Networked hosts run through
+/// [`crate::federation::tcp::serve_host_once`] instead.)
 pub fn spawn_host(
     id: u8,
     bm: BinnedMatrix,

@@ -1,17 +1,15 @@
-//! Protocol messages between the guest and the hosts, with wire-size
-//! accounting for the network model.
+//! Protocol messages between the guest and the hosts.
 //!
-//! Sizes are computed from the logical payload (ciphertexts dominate:
-//! `ct_byte_len` each; ids/counts 4 bytes; f64 8 bytes) plus a small
-//! framing overhead per message — the quantities the paper's
-//! communication cost model (eq. 10/16) counts.
+//! Every message has a [`ToHostKind`]/[`ToGuestKind`] — the kind's index
+//! doubles as the wire tag byte in [`super::codec`], and the transport's
+//! [`super::transport::NetCounters`] accumulate traffic per kind. Sizes
+//! reported by [`to_host_size`]/[`to_guest_size`] are the *exact* number
+//! of serialized bytes (frame header included), not struct sizes: the
+//! quantities the paper's communication cost model (eq. 10/16) counts.
 
 use crate::crypto::cipher::Ct;
 use crate::crypto::compress::CtPackage;
 use std::sync::Arc;
-
-/// Framing overhead charged per message.
-pub const MSG_OVERHEAD: usize = 64;
 
 /// Which parties may propose splits in a layer (mechanism modes, §5).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -27,7 +25,7 @@ pub enum CandidateMask {
 }
 
 /// One histogram task for a host in a layer.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum HistTask {
     /// Build this node's histogram directly from its member instances.
     Direct { node: u32 },
@@ -41,6 +39,89 @@ impl HistTask {
         match self {
             HistTask::Direct { node } => *node,
             HistTask::Subtract { node, .. } => *node,
+        }
+    }
+}
+
+/// Message-kind tags for guest→host traffic. The discriminant is the wire
+/// tag byte and the per-kind counter index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ToHostKind {
+    Setup = 0,
+    StartTree = 1,
+    BuildLayer = 2,
+    ApplySplit = 3,
+    SyncAssign = 4,
+    FinishTree = 5,
+    DumpSplitTable = 6,
+    Shutdown = 7,
+}
+
+/// Number of guest→host message kinds.
+pub const TO_HOST_KINDS: usize = 8;
+
+impl ToHostKind {
+    pub const ALL: [ToHostKind; TO_HOST_KINDS] = [
+        ToHostKind::Setup,
+        ToHostKind::StartTree,
+        ToHostKind::BuildLayer,
+        ToHostKind::ApplySplit,
+        ToHostKind::SyncAssign,
+        ToHostKind::FinishTree,
+        ToHostKind::DumpSplitTable,
+        ToHostKind::Shutdown,
+    ];
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ToHostKind::Setup => "Setup",
+            ToHostKind::StartTree => "StartTree",
+            ToHostKind::BuildLayer => "BuildLayer",
+            ToHostKind::ApplySplit => "ApplySplit",
+            ToHostKind::SyncAssign => "SyncAssign",
+            ToHostKind::FinishTree => "FinishTree",
+            ToHostKind::DumpSplitTable => "DumpSplitTable",
+            ToHostKind::Shutdown => "Shutdown",
+        }
+    }
+}
+
+/// Message-kind tags for host→guest traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ToGuestKind {
+    LayerStats = 0,
+    LeftInstances = 1,
+    SplitTable = 2,
+    Ack = 3,
+}
+
+/// Number of host→guest message kinds.
+pub const TO_GUEST_KINDS: usize = 4;
+
+impl ToGuestKind {
+    pub const ALL: [ToGuestKind; TO_GUEST_KINDS] = [
+        ToGuestKind::LayerStats,
+        ToGuestKind::LeftInstances,
+        ToGuestKind::SplitTable,
+        ToGuestKind::Ack,
+    ];
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ToGuestKind::LayerStats => "LayerStats",
+            ToGuestKind::LeftInstances => "LeftInstances",
+            ToGuestKind::SplitTable => "SplitTable",
+            ToGuestKind::Ack => "Ack",
         }
     }
 }
@@ -82,7 +163,23 @@ pub enum ToHost {
     Shutdown,
 }
 
+impl ToHost {
+    pub fn kind(&self) -> ToHostKind {
+        match self {
+            ToHost::Setup { .. } => ToHostKind::Setup,
+            ToHost::StartTree { .. } => ToHostKind::StartTree,
+            ToHost::BuildLayer { .. } => ToHostKind::BuildLayer,
+            ToHost::ApplySplit { .. } => ToHostKind::ApplySplit,
+            ToHost::SyncAssign { .. } => ToHostKind::SyncAssign,
+            ToHost::FinishTree { .. } => ToHostKind::FinishTree,
+            ToHost::DumpSplitTable => ToHostKind::DumpSplitTable,
+            ToHost::Shutdown => ToHostKind::Shutdown,
+        }
+    }
+}
+
 /// A host's split statistics for one node, possibly compressed.
+#[derive(Debug, PartialEq)]
 pub enum NodeStats {
     Compressed(Vec<CtPackage>),
     /// Uncompressed: (id, sample_count, n_k ciphertexts) per candidate.
@@ -90,6 +187,7 @@ pub enum NodeStats {
 }
 
 /// Host → guest messages.
+#[derive(Debug, PartialEq)]
 pub enum ToGuest {
     /// Split statistics for the nodes of a layer, in task order.
     LayerStats { tree_id: u32, nodes: Vec<(u32, NodeStats)> },
@@ -101,42 +199,25 @@ pub enum ToGuest {
     Ack,
 }
 
-/// Wire size of a guest→host message given the ciphertext byte length.
-pub fn to_host_size(msg: &ToHost, ct_len: usize) -> usize {
-    MSG_OVERHEAD
-        + match msg {
-            ToHost::Setup { .. } => 512, // key material + parameters
-            ToHost::StartTree { instances, packed, node_total, .. } => {
-                instances.len() * 4 + packed.len() * ct_len + node_total.len() * ct_len
-            }
-            ToHost::BuildLayer { tasks, .. } => tasks.len() * 12,
-            ToHost::ApplySplit { instances, .. } => 12 + instances.len() * 4,
-            ToHost::SyncAssign { left, .. } => 16 + left.len() * 4,
-            ToHost::FinishTree { .. } | ToHost::Shutdown | ToHost::DumpSplitTable => 0,
+impl ToGuest {
+    pub fn kind(&self) -> ToGuestKind {
+        match self {
+            ToGuest::LayerStats { .. } => ToGuestKind::LayerStats,
+            ToGuest::LeftInstances { .. } => ToGuestKind::LeftInstances,
+            ToGuest::SplitTable { .. } => ToGuestKind::SplitTable,
+            ToGuest::Ack => ToGuestKind::Ack,
         }
+    }
 }
 
-/// Wire size of a host→guest message.
+/// Exact serialized size of a guest→host message (frame header included).
+pub fn to_host_size(msg: &ToHost, ct_len: usize) -> usize {
+    super::codec::to_host_wire_len(msg, ct_len)
+}
+
+/// Exact serialized size of a host→guest message (frame header included).
 pub fn to_guest_size(msg: &ToGuest, ct_len: usize) -> usize {
-    MSG_OVERHEAD
-        + match msg {
-            ToGuest::LayerStats { nodes, .. } => nodes
-                .iter()
-                .map(|(_, s)| match s {
-                    NodeStats::Compressed(pkgs) => pkgs
-                        .iter()
-                        .map(|p| ct_len + p.ids.len() * 8)
-                        .sum::<usize>(),
-                    NodeStats::Raw(stats) => stats
-                        .iter()
-                        .map(|(_, _, cts)| 8 + cts.len() * ct_len)
-                        .sum::<usize>(),
-                })
-                .sum::<usize>(),
-            ToGuest::LeftInstances { left, .. } => 8 + left.len() * 4,
-            ToGuest::SplitTable { entries } => entries.len() * 16,
-            ToGuest::Ack => 0,
-        }
+    super::codec::to_guest_wire_len(msg, ct_len)
 }
 
 #[cfg(test)]
@@ -186,5 +267,17 @@ mod tests {
         };
         let cl = 128;
         assert!(to_guest_size(&compressed, cl) < to_guest_size(&raw, cl));
+    }
+
+    #[test]
+    fn kind_indices_cover_all_tags() {
+        for (i, k) in ToHostKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i);
+        }
+        for (i, k) in ToGuestKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i);
+        }
+        assert_eq!(ToHost::Shutdown.kind(), ToHostKind::Shutdown);
+        assert_eq!(ToGuest::Ack.kind(), ToGuestKind::Ack);
     }
 }

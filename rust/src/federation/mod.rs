@@ -1,15 +1,29 @@
-//! The vertical federation protocol: message types, the byte-accounting
-//! transport, the statistic codecs (packed / separate / multi-class), and
-//! the guest / host party implementations.
+//! The vertical federation protocol: message types, the pluggable
+//! transport layer, the wire codec, the statistic codecs
+//! (packed / separate / multi-class), and the guest / host party
+//! implementations.
 //!
-//! Threading model: each host party runs on its own OS thread with a pair
-//! of mpsc channels to the guest; the guest drives training synchronously
-//! in rounds (the protocol is round-structured, matching FATE). All
-//! cross-party traffic passes through [`transport::Transport`], which
-//! counts bytes and models the paper's 1 GbE intranet.
+//! Deployment models (selected by [`crate::config::TransportKind`]):
+//!
+//! - **In-process** — each host party runs on its own OS thread with a
+//!   pair of mpsc channels to the guest ([`transport::link_pair`]). The
+//!   default for tests, benches, and single-machine experiments.
+//! - **Networked** — each host party runs as its own process
+//!   (`sbp serve-host`); the guest connects over framed TCP
+//!   ([`tcp::TcpGuestTransport`]) and every message is serialized through
+//!   [`codec`].
+//!
+//! The guest drives training synchronously in rounds (the protocol is
+//! round-structured, matching FATE) through the
+//! [`transport::GuestTransport`] trait; hosts serve through
+//! [`transport::HostTransport`]. All cross-party traffic is counted in
+//! [`transport::NetCounters`] as exact serialized wire bytes, per
+//! direction and per message kind, and fed to the paper's 1 GbE network
+//! model.
 
 pub mod codec;
 pub mod guest;
 pub mod host;
 pub mod message;
+pub mod tcp;
 pub mod transport;

@@ -1,0 +1,248 @@
+//! Length-prefixed framed TCP transport — the networked implementation of
+//! [`GuestTransport`]/[`HostTransport`].
+//!
+//! Every [`ToHost`]/[`ToGuest`] message is serialized through
+//! [`super::codec`] into one frame (`u64 LE length` + payload). The
+//! protocol is already batched level-wise — one `BuildLayer` /
+//! `LayerStats` message carries all nodes of a depth — so a layer costs a
+//! single frame in each direction regardless of tree width.
+//!
+//! Connection bring-up needs no handshake: the first frame the guest sends
+//! is `Setup`, which carries the cipher suite's public material; the host
+//! side decodes it and locks the suite (and with it the fixed ciphertext
+//! wire width) for the rest of the session. [`NetCounters`] on both ends
+//! record the actual framed byte counts, which equal the in-memory
+//! transport's accounting byte-for-byte (`codec::*_wire_len` are exact).
+//!
+//! Concurrency: one socket per guest↔host pair, strictly request/response
+//! per the round-structured protocol, so a `Mutex<TcpStream>` per
+//! direction-agnostic endpoint suffices.
+
+use super::codec;
+use super::message::{ToGuest, ToHost};
+use super::transport::{GuestTransport, HostTransport, NetCounters, NetSnapshot};
+use crate::crypto::cipher::CipherSuite;
+use crate::data::binning::BinnedMatrix;
+use crate::data::sparse::SparseBinned;
+use crate::federation::host::HostParty;
+use crate::util::timer::PhaseTimer;
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+
+/// Guest-side endpoint of one guest↔host TCP connection.
+pub struct TcpGuestTransport {
+    stream: Mutex<TcpStream>,
+    suite: CipherSuite,
+    ct_len: usize,
+    counters: Arc<NetCounters>,
+}
+
+impl TcpGuestTransport {
+    /// Connect to a host party at `addr` (e.g. `"127.0.0.1:7878"`). The
+    /// guest's cipher suite fixes the ciphertext wire width; hosts learn
+    /// it from the `Setup` frame.
+    pub fn connect(addr: &str, suite: CipherSuite) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let ct_len = suite.ct_byte_len();
+        Ok(TcpGuestTransport {
+            stream: Mutex::new(stream),
+            suite,
+            ct_len,
+            counters: Arc::new(NetCounters::default()),
+        })
+    }
+
+    pub fn counters(&self) -> Arc<NetCounters> {
+        self.counters.clone()
+    }
+}
+
+impl GuestTransport for TcpGuestTransport {
+    fn send(&self, msg: ToHost) {
+        let payload = codec::encode_to_host(&self.suite, self.ct_len, &msg);
+        self.counters
+            .record_to_host(msg.kind(), (payload.len() + codec::FRAME_HEADER_LEN) as u64);
+        let mut s = self.stream.lock().expect("tcp stream poisoned");
+        codec::write_frame(&mut *s, &payload).expect("tcp send to host failed");
+    }
+
+    fn recv(&self) -> ToGuest {
+        let payload = {
+            let mut s = self.stream.lock().expect("tcp stream poisoned");
+            codec::read_frame(&mut *s)
+                .expect("tcp recv from host failed")
+                .expect("host closed the connection mid-protocol")
+        };
+        let msg = codec::decode_to_guest(&self.suite, self.ct_len, &payload)
+            .expect("malformed frame from host");
+        self.counters
+            .record_to_guest(msg.kind(), (payload.len() + codec::FRAME_HEADER_LEN) as u64);
+        msg
+    }
+
+    fn snapshot(&self) -> NetSnapshot {
+        self.counters.snapshot()
+    }
+}
+
+/// Host-side endpoint. The cipher suite is unknown until the guest's
+/// `Setup` frame arrives; it is captured then and used for every
+/// subsequent ciphertext-bearing frame in both directions.
+pub struct TcpHostTransport {
+    stream: Mutex<TcpStream>,
+    suite: Mutex<Option<(CipherSuite, usize)>>,
+    counters: Arc<NetCounters>,
+}
+
+impl TcpHostTransport {
+    pub fn new(stream: TcpStream) -> Self {
+        stream.set_nodelay(true).ok();
+        TcpHostTransport {
+            stream: Mutex::new(stream),
+            suite: Mutex::new(None),
+            counters: Arc::new(NetCounters::default()),
+        }
+    }
+
+    pub fn counters(&self) -> Arc<NetCounters> {
+        self.counters.clone()
+    }
+}
+
+impl HostTransport for TcpHostTransport {
+    fn recv(&self) -> Option<ToHost> {
+        let payload = {
+            let mut s = self.stream.lock().expect("tcp stream poisoned");
+            match codec::read_frame(&mut *s) {
+                Ok(Some(p)) => p,
+                Ok(None) => return None, // guest closed cleanly
+                Err(e) => {
+                    eprintln!("[sbp-host] transport error, closing: {e}");
+                    return None;
+                }
+            }
+        };
+        let mut suite = self.suite.lock().expect("suite poisoned");
+        let msg = match codec::decode_to_host(
+            suite.as_ref().map(|(s, l)| (s, *l)),
+            &payload,
+        ) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("[sbp-host] malformed frame, closing: {e}");
+                return None;
+            }
+        };
+        if let ToHost::Setup { suite_public, .. } = &msg {
+            let ct_len = suite_public.ct_byte_len();
+            *suite = Some((suite_public.clone(), ct_len));
+        }
+        self.counters
+            .record_to_host(msg.kind(), (payload.len() + codec::FRAME_HEADER_LEN) as u64);
+        Some(msg)
+    }
+
+    fn send(&self, msg: ToGuest) {
+        let (suite, ct_len) = self
+            .suite
+            .lock()
+            .expect("suite poisoned")
+            .clone()
+            .expect("host cannot send before Setup");
+        let payload = codec::encode_to_guest(&suite, ct_len, &msg);
+        self.counters
+            .record_to_guest(msg.kind(), (payload.len() + codec::FRAME_HEADER_LEN) as u64);
+        let mut s = self.stream.lock().expect("tcp stream poisoned");
+        codec::write_frame(&mut *s, &payload).expect("tcp send to guest failed");
+    }
+}
+
+/// Accept one guest connection on `listener` and run a host party over it
+/// until `Shutdown`/close. Returns the peer address it served.
+///
+/// This is the body of the `sbp serve-host` subcommand and of the
+/// transport-parity integration test.
+pub fn serve_host_once(
+    listener: &TcpListener,
+    id: u8,
+    bm: BinnedMatrix,
+    sb: Option<SparseBinned>,
+    timer: Arc<Mutex<PhaseTimer>>,
+) -> std::io::Result<std::net::SocketAddr> {
+    let (stream, peer) = listener.accept()?;
+    let transport = TcpHostTransport::new(stream);
+    HostParty::new(id, bm, sb, transport, timer).run();
+    Ok(peer)
+}
+
+/// Decode errors on the guest side panic (the guest drives the protocol
+/// and cannot make progress), host-side errors end the serve loop — see
+/// [`TcpHostTransport::recv`]. Exposed for reuse by error-path tests.
+pub use super::codec::WireError as TcpWireError;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::federation::message::{ToGuestKind, ToHostKind};
+    use std::thread;
+
+    #[test]
+    fn frames_cross_a_real_socket() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let server = thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let host = TcpHostTransport::new(stream);
+            // Setup must arrive first and fix the suite
+            let msg = host.recv().expect("setup frame");
+            assert!(matches!(msg, ToHost::Setup { .. }));
+            host.send(ToGuest::Ack);
+            let msg = host.recv().expect("apply frame");
+            let ToHost::ApplySplit { instances, .. } = msg else {
+                panic!("expected ApplySplit")
+            };
+            host.send(ToGuest::LeftInstances {
+                tree_id: 0,
+                node: 0,
+                left: instances.iter().copied().filter(|i| i % 2 == 0).collect(),
+            });
+            assert!(host.recv().is_none(), "guest closes after shutdown");
+        });
+
+        let suite = CipherSuite::new_plain(256);
+        let guest = TcpGuestTransport::connect(&addr.to_string(), suite.clone()).unwrap();
+        let packer = crate::crypto::packing::GhPacker::plan_logistic(100, 53);
+        guest.send(ToHost::Setup {
+            suite_public: suite.public_side(),
+            codec: crate::federation::codec::StatCodec::Packed(packer),
+            compress: None,
+            n_bins: 32,
+            hist_subtraction: true,
+            sparse_optimization: false,
+            seed: 7,
+        });
+        assert!(matches!(guest.recv(), ToGuest::Ack));
+        guest.send(ToHost::ApplySplit {
+            tree_id: 0,
+            node: 0,
+            handle: 0,
+            instances: Arc::new(vec![1, 2, 3, 4]),
+        });
+        let ToGuest::LeftInstances { left, .. } = guest.recv() else {
+            panic!("expected LeftInstances")
+        };
+        assert_eq!(left, vec![2, 4]);
+
+        let snap = guest.snapshot();
+        assert_eq!(snap.msgs_to_host, 2);
+        assert_eq!(snap.msgs_to_guest, 2);
+        assert_eq!(snap.to_host_kind_msgs[ToHostKind::Setup.index()], 1);
+        assert_eq!(snap.to_guest_kind_msgs[ToGuestKind::Ack.index()], 1);
+        assert!(snap.bytes_to_host > 0 && snap.bytes_to_guest > 0);
+
+        drop(guest); // closes the socket → server recv sees clean EOF
+        server.join().unwrap();
+    }
+}

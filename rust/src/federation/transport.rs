@@ -1,42 +1,129 @@
-//! In-process transport with byte accounting and a network-time model.
+//! Pluggable party-to-party transport with byte accounting and a
+//! network-time model.
 //!
-//! The paper's testbed is two machines on a 1 GbE intranet; our parties
-//! are threads. Every message carries its computed wire size; the
-//! [`NetCounters`] accumulate volume per direction, and
+//! Two implementations sit behind the [`GuestTransport`]/[`HostTransport`]
+//! traits:
+//!
+//! - the in-process [`GuestLink`]/[`HostLink`] pair (mpsc channels; the
+//!   historical default — parties are threads in one process), and
+//! - the framed TCP transport in [`super::tcp`], which serializes every
+//!   message through [`super::codec`] and crosses a real socket.
+//!
+//! Both charge the **same** per-message byte counts: the in-memory links
+//! use [`super::codec::to_host_wire_len`]/[`to_guest_wire_len`], which are
+//! exact serialized sizes (frame header included), so traffic accounting
+//! is transport-independent — the parity test in `tests/federated.rs`
+//! asserts byte-for-byte equal [`NetSnapshot`]s across transports.
+//!
+//! [`NetCounters`] accumulate volume per direction *and per message kind*;
 //! [`NetworkModel::simulated_seconds`] converts volume + message count to
-//! the time the paper's link would have spent — reported alongside wall
-//! time in every bench (DESIGN.md §3, substitutions).
+//! the time the paper's 1 GbE link would have spent — reported alongside
+//! wall time in every bench (DESIGN.md §3, substitutions).
 
+use super::codec;
+use super::message::{
+    ToGuest, ToGuestKind, ToHost, ToHostKind, TO_GUEST_KINDS, TO_HOST_KINDS,
+};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
-/// Cumulative traffic counters (shared guest-side and host-side).
-#[derive(Debug, Default)]
+/// Guest-side handle to one host party: send [`ToHost`], receive
+/// [`ToGuest`]. Implementations record exact wire sizes in their
+/// [`NetCounters`].
+pub trait GuestTransport {
+    fn send(&self, msg: ToHost);
+    fn recv(&self) -> ToGuest;
+    /// Traffic seen by this link so far.
+    fn snapshot(&self) -> NetSnapshot;
+}
+
+/// Host-side endpoint: receive [`ToHost`] (None on shutdown/close), send
+/// [`ToGuest`].
+pub trait HostTransport {
+    fn recv(&self) -> Option<ToHost>;
+    fn send(&self, msg: ToGuest);
+}
+
+/// Cumulative traffic counters (shared guest-side and host-side), overall
+/// and per message kind.
+#[derive(Debug)]
 pub struct NetCounters {
     pub bytes_to_host: AtomicU64,
     pub bytes_to_guest: AtomicU64,
     pub msgs_to_host: AtomicU64,
     pub msgs_to_guest: AtomicU64,
+    pub to_host_kind_bytes: [AtomicU64; TO_HOST_KINDS],
+    pub to_host_kind_msgs: [AtomicU64; TO_HOST_KINDS],
+    pub to_guest_kind_bytes: [AtomicU64; TO_GUEST_KINDS],
+    pub to_guest_kind_msgs: [AtomicU64; TO_GUEST_KINDS],
 }
 
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
-pub struct NetSnapshot {
-    pub bytes_to_host: u64,
-    pub bytes_to_guest: u64,
-    pub msgs_to_host: u64,
-    pub msgs_to_guest: u64,
+impl Default for NetCounters {
+    fn default() -> Self {
+        NetCounters {
+            bytes_to_host: AtomicU64::new(0),
+            bytes_to_guest: AtomicU64::new(0),
+            msgs_to_host: AtomicU64::new(0),
+            msgs_to_guest: AtomicU64::new(0),
+            to_host_kind_bytes: std::array::from_fn(|_| AtomicU64::new(0)),
+            to_host_kind_msgs: std::array::from_fn(|_| AtomicU64::new(0)),
+            to_guest_kind_bytes: std::array::from_fn(|_| AtomicU64::new(0)),
+            to_guest_kind_msgs: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
 }
 
 impl NetCounters {
+    /// Record one guest→host message of `bytes` serialized bytes.
+    pub fn record_to_host(&self, kind: ToHostKind, bytes: u64) {
+        self.bytes_to_host.fetch_add(bytes, Ordering::Relaxed);
+        self.msgs_to_host.fetch_add(1, Ordering::Relaxed);
+        self.to_host_kind_bytes[kind.index()].fetch_add(bytes, Ordering::Relaxed);
+        self.to_host_kind_msgs[kind.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one host→guest message of `bytes` serialized bytes.
+    pub fn record_to_guest(&self, kind: ToGuestKind, bytes: u64) {
+        self.bytes_to_guest.fetch_add(bytes, Ordering::Relaxed);
+        self.msgs_to_guest.fetch_add(1, Ordering::Relaxed);
+        self.to_guest_kind_bytes[kind.index()].fetch_add(bytes, Ordering::Relaxed);
+        self.to_guest_kind_msgs[kind.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> NetSnapshot {
         NetSnapshot {
             bytes_to_host: self.bytes_to_host.load(Ordering::Relaxed),
             bytes_to_guest: self.bytes_to_guest.load(Ordering::Relaxed),
             msgs_to_host: self.msgs_to_host.load(Ordering::Relaxed),
             msgs_to_guest: self.msgs_to_guest.load(Ordering::Relaxed),
+            to_host_kind_bytes: std::array::from_fn(|i| {
+                self.to_host_kind_bytes[i].load(Ordering::Relaxed)
+            }),
+            to_host_kind_msgs: std::array::from_fn(|i| {
+                self.to_host_kind_msgs[i].load(Ordering::Relaxed)
+            }),
+            to_guest_kind_bytes: std::array::from_fn(|i| {
+                self.to_guest_kind_bytes[i].load(Ordering::Relaxed)
+            }),
+            to_guest_kind_msgs: std::array::from_fn(|i| {
+                self.to_guest_kind_msgs[i].load(Ordering::Relaxed)
+            }),
         }
     }
+}
+
+/// Point-in-time copy of [`NetCounters`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NetSnapshot {
+    pub bytes_to_host: u64,
+    pub bytes_to_guest: u64,
+    pub msgs_to_host: u64,
+    pub msgs_to_guest: u64,
+    pub to_host_kind_bytes: [u64; TO_HOST_KINDS],
+    pub to_host_kind_msgs: [u64; TO_HOST_KINDS],
+    pub to_guest_kind_bytes: [u64; TO_GUEST_KINDS],
+    pub to_guest_kind_msgs: [u64; TO_GUEST_KINDS],
 }
 
 impl NetSnapshot {
@@ -50,7 +137,73 @@ impl NetSnapshot {
             bytes_to_guest: self.bytes_to_guest - earlier.bytes_to_guest,
             msgs_to_host: self.msgs_to_host - earlier.msgs_to_host,
             msgs_to_guest: self.msgs_to_guest - earlier.msgs_to_guest,
+            to_host_kind_bytes: std::array::from_fn(|i| {
+                self.to_host_kind_bytes[i] - earlier.to_host_kind_bytes[i]
+            }),
+            to_host_kind_msgs: std::array::from_fn(|i| {
+                self.to_host_kind_msgs[i] - earlier.to_host_kind_msgs[i]
+            }),
+            to_guest_kind_bytes: std::array::from_fn(|i| {
+                self.to_guest_kind_bytes[i] - earlier.to_guest_kind_bytes[i]
+            }),
+            to_guest_kind_msgs: std::array::from_fn(|i| {
+                self.to_guest_kind_msgs[i] - earlier.to_guest_kind_msgs[i]
+            }),
         }
+    }
+
+    /// Elementwise sum (aggregating links).
+    pub fn add(&self, other: &NetSnapshot) -> NetSnapshot {
+        NetSnapshot {
+            bytes_to_host: self.bytes_to_host + other.bytes_to_host,
+            bytes_to_guest: self.bytes_to_guest + other.bytes_to_guest,
+            msgs_to_host: self.msgs_to_host + other.msgs_to_host,
+            msgs_to_guest: self.msgs_to_guest + other.msgs_to_guest,
+            to_host_kind_bytes: std::array::from_fn(|i| {
+                self.to_host_kind_bytes[i] + other.to_host_kind_bytes[i]
+            }),
+            to_host_kind_msgs: std::array::from_fn(|i| {
+                self.to_host_kind_msgs[i] + other.to_host_kind_msgs[i]
+            }),
+            to_guest_kind_bytes: std::array::from_fn(|i| {
+                self.to_guest_kind_bytes[i] + other.to_guest_kind_bytes[i]
+            }),
+            to_guest_kind_msgs: std::array::from_fn(|i| {
+                self.to_guest_kind_msgs[i] + other.to_guest_kind_msgs[i]
+            }),
+        }
+    }
+
+    /// Human-readable per-kind traffic table (serialized wire bytes).
+    pub fn by_kind_report(&self) -> String {
+        let mut out = String::new();
+        out.push_str("guest→host:\n");
+        for k in ToHostKind::ALL {
+            let (m, b) =
+                (self.to_host_kind_msgs[k.index()], self.to_host_kind_bytes[k.index()]);
+            if m > 0 {
+                out.push_str(&format!(
+                    "  {:<14} {:>8} msgs {:>14} B\n",
+                    k.name(),
+                    m,
+                    b
+                ));
+            }
+        }
+        out.push_str("host→guest:\n");
+        for k in ToGuestKind::ALL {
+            let (m, b) =
+                (self.to_guest_kind_msgs[k.index()], self.to_guest_kind_bytes[k.index()]);
+            if m > 0 {
+                out.push_str(&format!(
+                    "  {:<14} {:>8} msgs {:>14} B\n",
+                    k.name(),
+                    m,
+                    b
+                ));
+            }
+        }
+        out
     }
 }
 
@@ -78,19 +231,18 @@ impl NetworkModel {
     }
 }
 
-/// Guest-side handle to one host: send [`super::message::ToHost`],
-/// receive [`super::message::ToGuest`], all sizes recorded.
+/// In-process guest-side link: mpsc channels, exact wire-size accounting.
 pub struct GuestLink {
-    pub tx: Sender<super::message::ToHost>,
-    pub rx: Receiver<super::message::ToGuest>,
+    pub tx: Sender<ToHost>,
+    pub rx: Receiver<ToGuest>,
     pub counters: Arc<NetCounters>,
     pub ct_len: usize,
 }
 
-/// Host-side endpoint.
+/// In-process host-side endpoint.
 pub struct HostLink {
-    pub rx: Receiver<super::message::ToHost>,
-    pub tx: Sender<super::message::ToGuest>,
+    pub rx: Receiver<ToHost>,
+    pub tx: Sender<ToGuest>,
     pub counters: Arc<NetCounters>,
     pub ct_len: usize,
 }
@@ -106,29 +258,31 @@ pub fn link_pair(ct_len: usize) -> (GuestLink, HostLink) {
     )
 }
 
-impl GuestLink {
-    pub fn send(&self, msg: super::message::ToHost) {
-        let size = super::message::to_host_size(&msg, self.ct_len) as u64;
-        self.counters.bytes_to_host.fetch_add(size, Ordering::Relaxed);
-        self.counters.msgs_to_host.fetch_add(1, Ordering::Relaxed);
+impl GuestTransport for GuestLink {
+    fn send(&self, msg: ToHost) {
+        let size = codec::to_host_wire_len(&msg, self.ct_len) as u64;
+        self.counters.record_to_host(msg.kind(), size);
         // receiver gone = host panicked; surface it at the join instead
         let _ = self.tx.send(msg);
     }
 
-    pub fn recv(&self) -> super::message::ToGuest {
+    fn recv(&self) -> ToGuest {
         self.rx.recv().expect("host channel closed unexpectedly")
+    }
+
+    fn snapshot(&self) -> NetSnapshot {
+        self.counters.snapshot()
     }
 }
 
-impl HostLink {
-    pub fn recv(&self) -> Option<super::message::ToHost> {
+impl HostTransport for HostLink {
+    fn recv(&self) -> Option<ToHost> {
         self.rx.recv().ok()
     }
 
-    pub fn send(&self, msg: super::message::ToGuest) {
-        let size = super::message::to_guest_size(&msg, self.ct_len) as u64;
-        self.counters.bytes_to_guest.fetch_add(size, Ordering::Relaxed);
-        self.counters.msgs_to_guest.fetch_add(1, Ordering::Relaxed);
+    fn send(&self, msg: ToGuest) {
+        let size = codec::to_guest_wire_len(&msg, self.ct_len) as u64;
+        self.counters.record_to_guest(msg.kind(), size);
         let _ = self.tx.send(msg);
     }
 }
@@ -159,6 +313,13 @@ mod tests {
         assert!(s.bytes_to_host > 0 && s.bytes_to_guest > 0);
         assert_eq!(s.msgs_to_host, 1);
         assert_eq!(s.msgs_to_guest, 1);
+        // per-kind counters agree with the totals
+        assert_eq!(s.to_host_kind_msgs[ToHostKind::ApplySplit.index()], 1);
+        assert_eq!(s.to_host_kind_bytes[ToHostKind::ApplySplit.index()], s.bytes_to_host);
+        assert_eq!(
+            s.to_guest_kind_bytes[ToGuestKind::LeftInstances.index()],
+            s.bytes_to_guest
+        );
     }
 
     #[test]
@@ -166,20 +327,54 @@ mod tests {
         let m = NetworkModel::default();
         let s = NetSnapshot {
             bytes_to_host: 125_000_000,
-            bytes_to_guest: 0,
             msgs_to_host: 2,
-            msgs_to_guest: 0,
+            ..NetSnapshot::default()
         };
         let t = m.simulated_seconds(&s);
         assert!((t - (1.0 + 0.001)).abs() < 1e-9, "t = {t}");
     }
 
     #[test]
-    fn snapshot_diff() {
-        let a = NetSnapshot { bytes_to_host: 10, bytes_to_guest: 5, msgs_to_host: 1, msgs_to_guest: 1 };
-        let b = NetSnapshot { bytes_to_host: 30, bytes_to_guest: 15, msgs_to_host: 3, msgs_to_guest: 2 };
+    fn snapshot_diff_and_add() {
+        let a = NetSnapshot {
+            bytes_to_host: 10,
+            bytes_to_guest: 5,
+            msgs_to_host: 1,
+            msgs_to_guest: 1,
+            ..NetSnapshot::default()
+        };
+        let b = NetSnapshot {
+            bytes_to_host: 30,
+            bytes_to_guest: 15,
+            msgs_to_host: 3,
+            msgs_to_guest: 2,
+            ..NetSnapshot::default()
+        };
         let d = b.diff(&a);
         assert_eq!(d.bytes_to_host, 20);
         assert_eq!(d.total_bytes(), 30);
+        let s = a.add(&b);
+        assert_eq!(s.bytes_to_host, 40);
+        assert_eq!(s.msgs_to_guest, 3);
+    }
+
+    #[test]
+    fn wire_sizes_match_codec_exactly() {
+        // the in-memory accounting must equal the serialized frame length
+        use crate::crypto::cipher::CipherSuite;
+        let suite = CipherSuite::new_plain(512);
+        let ct_len = suite.ct_byte_len();
+        let msg = ToHost::SyncAssign {
+            tree_id: 7,
+            node: 3,
+            left_child: 4,
+            right_child: 5,
+            left: StdArc::new(vec![1, 2, 3]),
+        };
+        let encoded = codec::encode_to_host(&suite, ct_len, &msg);
+        assert_eq!(
+            encoded.len() + codec::FRAME_HEADER_LEN,
+            codec::to_host_wire_len(&msg, ct_len)
+        );
     }
 }

@@ -15,6 +15,23 @@
 //! Python never runs on the training path; `make artifacts` is the only
 //! python invocation.
 //!
+//! ## Transports
+//!
+//! The federation layer is transport-pluggable
+//! ([`federation::transport::GuestTransport`] /
+//! [`federation::transport::HostTransport`], selected by
+//! [`config::TransportKind`]):
+//!
+//! - **in-memory** — host parties run as threads joined by mpsc channels
+//!   (default; tests and benches);
+//! - **framed TCP** — host parties run as separate processes
+//!   (`sbp serve-host` ↔ `sbp train-guest`); every message is serialized
+//!   through the wire codec in [`federation::codec`].
+//!
+//! Both charge identical *exact serialized* byte counts per message kind
+//! to [`federation::transport::NetCounters`], and both train bit-identical
+//! models at the same seed (`tests/federated.rs` parity tests).
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -40,7 +57,7 @@ pub mod util;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
-    pub use crate::config::{CipherKind, GossConfig, ModeKind, TrainConfig};
+    pub use crate::config::{CipherKind, GossConfig, ModeKind, TrainConfig, TransportKind};
     pub use crate::coordinator::{train_centralized, train_federated, TrainReport};
     pub use crate::crypto::cipher::CipherSuite;
     pub use crate::data::dataset::{Dataset, VerticalSplit};

@@ -1,21 +1,32 @@
 //! `sbp` — the SecureBoost+ launcher.
 //!
 //! Subcommands:
-//!   train    train a federated model on a synthetic preset
-//!   datagen  describe / emit the synthetic dataset presets
-//!   engines  check artifact availability and engine parity
+//!   train        train a federated model on a synthetic preset (in-process hosts)
+//!   train-guest  train as the guest party over TCP (`--connect host:port[,..]`)
+//!   serve-host   run one host party as a TCP server for a training run
+//!   datagen      describe / emit the synthetic dataset presets
+//!   engines      check artifact availability and engine parity
 //!
 //! Examples:
 //!   sbp train --dataset give-credit --scale 0.01 --cipher paillier
 //!   sbp train --dataset sensorless --scale 0.01 --mode mo
 //!   sbp datagen --list
+//!
+//! Two-terminal networked run (same preset/seed/bins on both sides):
+//!   terminal 1:  sbp serve-host  --dataset give-credit --scale 0.01 --port 7878
+//!   terminal 2:  sbp train-guest --dataset give-credit --scale 0.01 --connect 127.0.0.1:7878
 
-use sbp::config::{CipherKind, GossConfig, ModeKind, TrainConfig};
+use sbp::config::{CipherKind, GossConfig, ModeKind, TrainConfig, TransportKind};
 use sbp::coordinator::{train_centralized, train_federated, train_federated_with_engine};
+use sbp::data::binning::bin_party;
 use sbp::data::synthetic::SyntheticSpec;
+use sbp::federation::tcp::serve_host_once;
 use sbp::runtime::engine::{ComputeEngine, CpuEngine};
 use sbp::runtime::pjrt::XlaEngine;
 use sbp::util::args::Args;
+use sbp::util::timer::PhaseTimer;
+use std::net::TcpListener;
+use std::sync::{Arc, Mutex};
 
 fn spec_by_name(name: &str, scale: f64) -> Option<SyntheticSpec> {
     Some(match name {
@@ -33,12 +44,14 @@ fn spec_by_name(name: &str, scale: f64) -> Option<SyntheticSpec> {
 fn main() {
     let args = Args::from_env();
     match args.positional.first().map(|s| s.as_str()) {
-        Some("train") => cmd_train(&args),
+        Some("train") => cmd_train(&args, false),
+        Some("train-guest") => cmd_train(&args, true),
+        Some("serve-host") => cmd_serve_host(&args),
         Some("datagen") => cmd_datagen(&args),
         Some("engines") => cmd_engines(&args),
         _ => {
             eprintln!(
-                "usage: sbp <train|datagen|engines> [options]\n\
+                "usage: sbp <train|train-guest|serve-host|datagen|engines> [options]\n\
                  \n\
                  train options:\n\
                  \x20 --dataset <preset>     give-credit|susy|higgs|epsilon|sensorless|covtype|svhn\n\
@@ -53,7 +66,16 @@ fn main() {
                  \x20 --baseline             run the SecureBoost (FATE-1.5) baseline\n\
                  \x20 --centralized          run the local XGB-style baseline instead\n\
                  \x20 --no-goss --no-packing --no-subtraction --no-compression\n\
-                 \x20 --seed <n> --verbose"
+                 \x20 --seed <n> --verbose\n\
+                 \n\
+                 train-guest: train options plus\n\
+                 \x20 --connect <a1[,a2..]>  host party addresses, one per host slice\n\
+                 \n\
+                 serve-host options (dataset/seed/bins/hosts must match the guest):\n\
+                 \x20 --dataset --scale --seed --bins --hosts  as for train\n\
+                 \x20 --host-id <i>          which host feature slice to serve (default 0)\n\
+                 \x20 --bind <ip>            listen address (default 127.0.0.1)\n\
+                 \x20 --port <p>             listen port (default 7878)"
             );
             std::process::exit(2);
         }
@@ -120,14 +142,37 @@ fn build_config(args: &Args) -> TrainConfig {
     cfg
 }
 
-fn cmd_train(args: &Args) {
+fn cmd_train(args: &Args, networked: bool) {
     let name = args.get_or("dataset", "give-credit");
     let scale: f64 = args.get_parse("scale", 0.01);
     let Some(spec) = spec_by_name(&name, scale) else {
         eprintln!("unknown dataset preset '{name}'");
         std::process::exit(2);
     };
-    let cfg = build_config(args);
+    let mut cfg = build_config(args);
+    if networked {
+        let Some(connect) = args.get("connect") else {
+            eprintln!("train-guest requires --connect <host:port[,host:port..]>");
+            std::process::exit(2);
+        };
+        let addrs: Vec<String> =
+            connect.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+        // an explicit --hosts that disagrees with the address count means
+        // guest and hosts would generate different vertical splits —
+        // refuse instead of silently training on a wrong partition
+        if args.get("hosts").is_some() && cfg.n_hosts != addrs.len() {
+            eprintln!(
+                "--hosts {} conflicts with {} --connect address(es); \
+                 pass one address per host feature slice",
+                cfg.n_hosts,
+                addrs.len()
+            );
+            std::process::exit(2);
+        }
+        cfg.n_hosts = addrs.len();
+        cfg.transport = TransportKind::Tcp { hosts: addrs };
+    }
+    let cfg = cfg;
     if let Err(e) = cfg.validate() {
         eprintln!("invalid configuration: {e}");
         std::process::exit(2);
@@ -161,6 +206,58 @@ fn cmd_train(args: &Args) {
         report.ops.encrypts, report.ops.decrypts, report.ops.adds, report.ops.scalar_muls,
         report.ops.negates
     );
+    if report.comm.total_bytes() > 0 {
+        println!("wire traffic by message kind:\n{}", report.comm.by_kind_report());
+    }
+}
+
+fn cmd_serve_host(args: &Args) {
+    let name = args.get_or("dataset", "give-credit");
+    let scale: f64 = args.get_parse("scale", 0.01);
+    let Some(spec) = spec_by_name(&name, scale) else {
+        eprintln!("unknown dataset preset '{name}'");
+        std::process::exit(2);
+    };
+    let cfg = build_config(args);
+    let host_id: usize = args.get_parse("host-id", 0);
+    let bind = args.get_or("bind", "127.0.0.1");
+    let port: u16 = args.get_parse("port", 7878);
+
+    eprintln!(
+        "[sbp] generating '{}' at scale {scale} (host slice {host_id} of {})",
+        spec.name, cfg.n_hosts
+    );
+    let vs = spec.generate_vertical(cfg.seed, cfg.n_hosts);
+    if host_id >= vs.hosts.len() {
+        eprintln!("host-id {host_id} out of range ({} host slices)", vs.hosts.len());
+        std::process::exit(2);
+    }
+    let bm = bin_party(&vs.hosts[host_id], cfg.max_bin);
+    let sb = sbp::data::sparse::maybe_sparse(&vs.hosts[host_id], &bm, cfg.sparse_optimization);
+    let timer = Arc::new(Mutex::new(PhaseTimer::new()));
+
+    let listener = match TcpListener::bind((bind.as_str(), port)) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("cannot bind {bind}:{port}: {e}");
+            std::process::exit(1);
+        }
+    };
+    eprintln!(
+        "[sbp] host {host_id} serving {} features on {bind}:{port} — waiting for a guest",
+        bm.d
+    );
+    match serve_host_once(&listener, host_id as u8, bm, sb, timer.clone()) {
+        Ok(peer) => eprintln!("[sbp] training run with guest {peer} complete"),
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            std::process::exit(1);
+        }
+    }
+    let report = timer.lock().expect("timer").report();
+    if !report.is_empty() {
+        println!("host phase breakdown:\n{report}");
+    }
 }
 
 fn cmd_datagen(args: &Args) {

@@ -7,18 +7,15 @@
 //! `N_TILE` instances, `F_TILE` features, `B` bins, `K` classes. The
 //! engine pads/tiles arbitrary problem sizes onto those shapes; padding
 //! rows carry zero g/h so they never perturb statistics.
+//!
+//! The PJRT client comes from the external `xla` crate, which is not part
+//! of the offline crate universe. The real engine is therefore gated
+//! behind the `sbp_xla_pjrt` cfg flag (vendor the `xla` crate, declare
+//! the dependency, build with `RUSTFLAGS="--cfg sbp_xla_pjrt"`); without
+//! it this module compiles a stub whose [`XlaEngine::load`] always fails,
+//! so every caller takes its existing CpuEngine fallback path.
 
-use super::engine::ComputeEngine;
-use crate::config::json::Json;
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
-
-/// One compiled artifact.
-struct Artifact {
-    exe: xla::PjRtLoadedExecutable,
-}
+use std::path::PathBuf;
 
 /// Tile geometry, read from `artifacts/manifest.json`.
 #[derive(Clone, Copy, Debug)]
@@ -29,252 +26,346 @@ pub struct Tiles {
     pub k_tile: usize,
 }
 
-/// PJRT-backed engine. Thread-safe: executions are serialized on a mutex
-/// (the PJRT CPU client parallelizes internally; the guest calls these
-/// once per epoch / per large node, so contention is nil).
-pub struct XlaEngine {
-    _client: xla::PjRtClient,
-    arts: Mutex<HashMap<String, Artifact>>,
-    pub tiles: Tiles,
+/// Default artifact directory (`$SBP_ARTIFACTS` or `artifacts/`).
+fn artifact_dir() -> PathBuf {
+    std::env::var("SBP_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    })
 }
 
-impl XlaEngine {
-    /// Load every artifact listed in `<dir>/manifest.json`.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref();
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
-        let manifest =
-            Json::parse(&text).map_err(|e| anyhow!("manifest.json parse error: {e}"))?;
-        let tiles = Tiles {
-            n_tile: manifest.get("n_tile").and_then(Json::as_usize).unwrap_or(4096),
-            f_tile: manifest.get("f_tile").and_then(Json::as_usize).unwrap_or(32),
-            bins: manifest.get("bins").and_then(Json::as_usize).unwrap_or(32),
-            k_tile: manifest.get("k_tile").and_then(Json::as_usize).unwrap_or(8),
-        };
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        let mut arts = HashMap::new();
-        let listed = manifest
-            .get("artifacts")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?;
-        for name in listed {
-            let name = name.as_str().ok_or_else(|| anyhow!("artifact name not a string"))?;
-            let path: PathBuf = dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-            arts.insert(name.to_string(), Artifact { exe });
+#[cfg(not(sbp_xla_pjrt))]
+pub use stub::XlaEngine;
+#[cfg(sbp_xla_pjrt)]
+pub use xla_impl::XlaEngine;
+
+/// Stub engine compiled when the `sbp_xla_pjrt` cfg (and with it the
+/// external `xla` crate) is unavailable. `load` always fails; the
+/// `ComputeEngine` impl delegates to the pure-Rust oracle so the type
+/// remains usable in generic positions.
+#[cfg(not(sbp_xla_pjrt))]
+mod stub {
+    use super::Tiles;
+    use crate::runtime::engine::{ComputeEngine, CpuEngine};
+    use anyhow::{anyhow, Result};
+    use std::path::{Path, PathBuf};
+
+    pub struct XlaEngine {
+        pub tiles: Tiles,
+    }
+
+    impl XlaEngine {
+        pub fn load(_dir: impl AsRef<Path>) -> Result<Self> {
+            Err(anyhow!(
+                "XlaEngine unavailable: built without `--cfg sbp_xla_pjrt` \
+                 (the external `xla` crate is not vendored in this workspace)"
+            ))
         }
-        Ok(XlaEngine { _client: client, arts: Mutex::new(arts), tiles })
-    }
 
-    /// Default artifact directory (`$SBP_ARTIFACTS` or `artifacts/`).
-    pub fn default_dir() -> PathBuf {
-        std::env::var("SBP_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
-            PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
-        })
-    }
-
-    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let arts = self.arts.lock().expect("engine poisoned");
-        let art = arts
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
-        let result = art
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
-        result.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
-    }
-
-    /// Execute a two-in/two-out elementwise-tiled artifact over `n` items.
-    fn run_gh_tiled(&self, name: &str, a: &[f32], b: &[f32], n: usize) -> Result<(Vec<f64>, Vec<f64>)> {
-        let nt = self.tiles.n_tile;
-        let mut g = Vec::with_capacity(n);
-        let mut h = Vec::with_capacity(n);
-        let mut start = 0usize;
-        while start < n {
-            let end = (start + nt).min(n);
-            let mut ta = a[start..end].to_vec();
-            let mut tb = b[start..end].to_vec();
-            ta.resize(nt, 0.0);
-            tb.resize(nt, 0.0);
-            let la = xla::Literal::vec1(&ta);
-            let lb = xla::Literal::vec1(&tb);
-            let out = self.run(name, &[la, lb])?;
-            let gt = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-            let ht = out[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-            g.extend(gt[..end - start].iter().map(|&v| v as f64));
-            h.extend(ht[..end - start].iter().map(|&v| v as f64));
-            start = end;
+        pub fn default_dir() -> PathBuf {
+            super::artifact_dir()
         }
-        Ok((g, h))
+    }
+
+    impl ComputeEngine for XlaEngine {
+        fn name(&self) -> &'static str {
+            "xla-pjrt(stub)"
+        }
+
+        fn gh_binary(&self, y: &[f64], logits: &[f64]) -> (Vec<f64>, Vec<f64>) {
+            CpuEngine.gh_binary(y, logits)
+        }
+
+        fn gh_softmax(&self, y: &[f64], logits: &[f64], k: usize) -> (Vec<f64>, Vec<f64>) {
+            CpuEngine.gh_softmax(y, logits, k)
+        }
+
+        fn histogram(
+            &self,
+            bin_idx: &[u8],
+            n: usize,
+            d: usize,
+            n_bins: usize,
+            g: &[f64],
+            h: &[f64],
+        ) -> (Vec<f64>, Vec<f64>, Vec<u32>) {
+            CpuEngine.histogram(bin_idx, n, d, n_bins, g, h)
+        }
+
+        fn gain_scan(
+            &self,
+            g_cum: &[f64],
+            h_cum: &[f64],
+            d: usize,
+            n_bins: usize,
+            g_total: f64,
+            h_total: f64,
+            lambda: f64,
+        ) -> Vec<f64> {
+            CpuEngine.gain_scan(g_cum, h_cum, d, n_bins, g_total, h_total, lambda)
+        }
     }
 }
 
-impl ComputeEngine for XlaEngine {
-    fn name(&self) -> &'static str {
-        "xla-pjrt"
+#[cfg(sbp_xla_pjrt)]
+mod xla_impl {
+    use super::Tiles;
+    use crate::config::json::Json;
+    use crate::runtime::engine::ComputeEngine;
+    use anyhow::{anyhow, Context, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
+
+    /// One compiled artifact.
+    struct Artifact {
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    fn gh_binary(&self, y: &[f64], logits: &[f64]) -> (Vec<f64>, Vec<f64>) {
-        let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
-        let sf: Vec<f32> = logits.iter().map(|&v| v as f32).collect();
-        self.run_gh_tiled("gh_binary", &yf, &sf, y.len())
-            .expect("gh_binary artifact execution failed")
+    /// PJRT-backed engine. Thread-safe: executions are serialized on a mutex
+    /// (the PJRT CPU client parallelizes internally; the guest calls these
+    /// once per epoch / per large node, so contention is nil).
+    pub struct XlaEngine {
+        _client: xla::PjRtClient,
+        arts: Mutex<HashMap<String, Artifact>>,
+        pub tiles: Tiles,
     }
 
-    fn gh_softmax(&self, y: &[f64], logits: &[f64], k: usize) -> (Vec<f64>, Vec<f64>) {
-        let kt = self.tiles.k_tile;
-        assert!(k <= kt, "k={k} exceeds compiled K_TILE={kt}");
-        let n = y.len();
-        let nt = self.tiles.n_tile;
-        let mut g = vec![0.0f64; n * k];
-        let mut h = vec![0.0f64; n * k];
-        let mut start = 0usize;
-        while start < n {
-            let end = (start + nt).min(n);
-            let rows = end - start;
-            // one-hot labels padded to K_TILE; padding classes get logits
-            // of −inf surrogate (−1e9) so softmax mass on them is ~0.
-            let mut yoh = vec![0.0f32; nt * kt];
-            let mut lg = vec![-1e9f32; nt * kt];
-            for i in 0..rows {
-                let cls = y[start + i] as usize;
-                yoh[i * kt + cls] = 1.0;
-                for j in 0..k {
-                    lg[i * kt + j] = logits[(start + i) * k + j] as f32;
-                }
+    impl XlaEngine {
+        /// Load every artifact listed in `<dir>/manifest.json`.
+        pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = dir.as_ref();
+            let manifest_path = dir.join("manifest.json");
+            let text = std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+            let manifest =
+                Json::parse(&text).map_err(|e| anyhow!("manifest.json parse error: {e}"))?;
+            let tiles = Tiles {
+                n_tile: manifest.get("n_tile").and_then(Json::as_usize).unwrap_or(4096),
+                f_tile: manifest.get("f_tile").and_then(Json::as_usize).unwrap_or(32),
+                bins: manifest.get("bins").and_then(Json::as_usize).unwrap_or(32),
+                k_tile: manifest.get("k_tile").and_then(Json::as_usize).unwrap_or(8),
+            };
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            let mut arts = HashMap::new();
+            let listed = manifest
+                .get("artifacts")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?;
+            for name in listed {
+                let name = name.as_str().ok_or_else(|| anyhow!("artifact name not a string"))?;
+                let path: PathBuf = dir.join(format!("{name}.hlo.txt"));
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+                arts.insert(name.to_string(), Artifact { exe });
             }
-            // padding rows: class 0 one-hot, logit 0 on class 0 (harmless)
-            for i in rows..nt {
-                yoh[i * kt] = 1.0;
-                lg[i * kt] = 0.0;
-            }
-            let ly = xla::Literal::vec1(&yoh).reshape(&[nt as i64, kt as i64]).unwrap();
-            let ll = xla::Literal::vec1(&lg).reshape(&[nt as i64, kt as i64]).unwrap();
-            let out = self.run("gh_softmax", &[ly, ll]).expect("gh_softmax failed");
-            let gt = out[0].to_vec::<f32>().unwrap();
-            let ht = out[1].to_vec::<f32>().unwrap();
-            for i in 0..rows {
-                for j in 0..k {
-                    g[(start + i) * k + j] = gt[i * kt + j] as f64;
-                    h[(start + i) * k + j] = ht[i * kt + j] as f64;
-                }
-            }
-            start = end;
+            Ok(XlaEngine { _client: client, arts: Mutex::new(arts), tiles })
         }
-        (g, h)
+
+        /// Default artifact directory (`$SBP_ARTIFACTS` or `artifacts/`).
+        pub fn default_dir() -> PathBuf {
+            super::artifact_dir()
+        }
+
+        fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let arts = self.arts.lock().expect("engine poisoned");
+            let art = arts
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+            let result = art
+                .exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+            result.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
+        }
+
+        /// Execute a two-in/two-out elementwise-tiled artifact over `n` items.
+        fn run_gh_tiled(&self, name: &str, a: &[f32], b: &[f32], n: usize) -> Result<(Vec<f64>, Vec<f64>)> {
+            let nt = self.tiles.n_tile;
+            let mut g = Vec::with_capacity(n);
+            let mut h = Vec::with_capacity(n);
+            let mut start = 0usize;
+            while start < n {
+                let end = (start + nt).min(n);
+                let mut ta = a[start..end].to_vec();
+                let mut tb = b[start..end].to_vec();
+                ta.resize(nt, 0.0);
+                tb.resize(nt, 0.0);
+                let la = xla::Literal::vec1(&ta);
+                let lb = xla::Literal::vec1(&tb);
+                let out = self.run(name, &[la, lb])?;
+                let gt = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+                let ht = out[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+                g.extend(gt[..end - start].iter().map(|&v| v as f64));
+                h.extend(ht[..end - start].iter().map(|&v| v as f64));
+                start = end;
+            }
+            Ok((g, h))
+        }
     }
 
-    fn histogram(
-        &self,
-        bin_idx: &[u8],
-        n: usize,
-        d: usize,
-        n_bins: usize,
-        g: &[f64],
-        h: &[f64],
-    ) -> (Vec<f64>, Vec<f64>, Vec<u32>) {
-        let bt = self.tiles.bins;
-        assert!(n_bins <= bt, "n_bins={n_bins} exceeds compiled B={bt}");
-        let nt = self.tiles.n_tile;
-        let ft = self.tiles.f_tile;
-        let mut gh_out = vec![0.0f64; d * n_bins];
-        let mut hh_out = vec![0.0f64; d * n_bins];
-        let mut ch_out = vec![0u32; d * n_bins];
+    impl ComputeEngine for XlaEngine {
+        fn name(&self) -> &'static str {
+            "xla-pjrt"
+        }
 
-        let mut row_start = 0usize;
-        while row_start < n {
-            let row_end = (row_start + nt).min(n);
-            let rows = row_end - row_start;
-            // ghc tile: (N_TILE, 3) = g, h, count-indicator
-            let mut ghc = vec![0.0f32; nt * 3];
-            for i in 0..rows {
-                ghc[i * 3] = g[row_start + i] as f32;
-                ghc[i * 3 + 1] = h[row_start + i] as f32;
-                ghc[i * 3 + 2] = 1.0;
+        fn gh_binary(&self, y: &[f64], logits: &[f64]) -> (Vec<f64>, Vec<f64>) {
+            let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+            let sf: Vec<f32> = logits.iter().map(|&v| v as f32).collect();
+            self.run_gh_tiled("gh_binary", &yf, &sf, y.len())
+                .expect("gh_binary artifact execution failed")
+        }
+
+        fn gh_softmax(&self, y: &[f64], logits: &[f64], k: usize) -> (Vec<f64>, Vec<f64>) {
+            let kt = self.tiles.k_tile;
+            assert!(k <= kt, "k={k} exceeds compiled K_TILE={kt}");
+            let n = y.len();
+            let nt = self.tiles.n_tile;
+            let mut g = vec![0.0f64; n * k];
+            let mut h = vec![0.0f64; n * k];
+            let mut start = 0usize;
+            while start < n {
+                let end = (start + nt).min(n);
+                let rows = end - start;
+                // one-hot labels padded to K_TILE; padding classes get logits
+                // of −inf surrogate (−1e9) so softmax mass on them is ~0.
+                let mut yoh = vec![0.0f32; nt * kt];
+                let mut lg = vec![-1e9f32; nt * kt];
+                for i in 0..rows {
+                    let cls = y[start + i] as usize;
+                    yoh[i * kt + cls] = 1.0;
+                    for j in 0..k {
+                        lg[i * kt + j] = logits[(start + i) * k + j] as f32;
+                    }
+                }
+                // padding rows: class 0 one-hot, logit 0 on class 0 (harmless)
+                for i in rows..nt {
+                    yoh[i * kt] = 1.0;
+                    lg[i * kt] = 0.0;
+                }
+                let ly = xla::Literal::vec1(&yoh).reshape(&[nt as i64, kt as i64]).unwrap();
+                let ll = xla::Literal::vec1(&lg).reshape(&[nt as i64, kt as i64]).unwrap();
+                let out = self.run("gh_softmax", &[ly, ll]).expect("gh_softmax failed");
+                let gt = out[0].to_vec::<f32>().unwrap();
+                let ht = out[1].to_vec::<f32>().unwrap();
+                for i in 0..rows {
+                    for j in 0..k {
+                        g[(start + i) * k + j] = gt[i * kt + j] as f64;
+                        h[(start + i) * k + j] = ht[i * kt + j] as f64;
+                    }
+                }
+                start = end;
             }
-            let lgh = xla::Literal::vec1(&ghc).reshape(&[nt as i64, 3]).unwrap();
+            (g, h)
+        }
 
+        fn histogram(
+            &self,
+            bin_idx: &[u8],
+            n: usize,
+            d: usize,
+            n_bins: usize,
+            g: &[f64],
+            h: &[f64],
+        ) -> (Vec<f64>, Vec<f64>, Vec<u32>) {
+            let bt = self.tiles.bins;
+            assert!(n_bins <= bt, "n_bins={n_bins} exceeds compiled B={bt}");
+            let nt = self.tiles.n_tile;
+            let ft = self.tiles.f_tile;
+            let mut gh_out = vec![0.0f64; d * n_bins];
+            let mut hh_out = vec![0.0f64; d * n_bins];
+            let mut ch_out = vec![0u32; d * n_bins];
+
+            let mut row_start = 0usize;
+            while row_start < n {
+                let row_end = (row_start + nt).min(n);
+                let rows = row_end - row_start;
+                // ghc tile: (N_TILE, 3) = g, h, count-indicator
+                let mut ghc = vec![0.0f32; nt * 3];
+                for i in 0..rows {
+                    ghc[i * 3] = g[row_start + i] as f32;
+                    ghc[i * 3 + 1] = h[row_start + i] as f32;
+                    ghc[i * 3 + 2] = 1.0;
+                }
+                let lgh = xla::Literal::vec1(&ghc).reshape(&[nt as i64, 3]).unwrap();
+
+                let mut f_start = 0usize;
+                while f_start < d {
+                    let f_end = (f_start + ft).min(d);
+                    let fcols = f_end - f_start;
+                    let mut bins = vec![0i32; nt * ft];
+                    for i in 0..rows {
+                        for f in 0..fcols {
+                            bins[i * ft + f] = bin_idx[(row_start + i) * d + f_start + f] as i32;
+                        }
+                    }
+                    let lb = xla::Literal::vec1(&bins).reshape(&[nt as i64, ft as i64]).unwrap();
+                    let out = self.run("hist", &[lb, lgh.clone()]).expect("hist artifact failed");
+                    let tile = out[0].to_vec::<f32>().unwrap(); // (F_TILE, B, 3)
+                    for f in 0..fcols {
+                        for b in 0..n_bins {
+                            let src = (f * bt + b) * 3;
+                            let dst = (f_start + f) * n_bins + b;
+                            gh_out[dst] += tile[src] as f64;
+                            hh_out[dst] += tile[src + 1] as f64;
+                            ch_out[dst] += tile[src + 2].round() as u32;
+                        }
+                    }
+                    f_start = f_end;
+                }
+                row_start = row_end;
+            }
+            (gh_out, hh_out, ch_out)
+        }
+
+        fn gain_scan(
+            &self,
+            g_cum: &[f64],
+            h_cum: &[f64],
+            d: usize,
+            n_bins: usize,
+            g_total: f64,
+            h_total: f64,
+            lambda: f64,
+        ) -> Vec<f64> {
+            let bt = self.tiles.bins;
+            let ft = self.tiles.f_tile;
+            assert!(n_bins <= bt);
+            let mut out = vec![0.0f64; d * n_bins];
+            let params = xla::Literal::vec1(&[g_total as f32, h_total as f32, lambda as f32]);
             let mut f_start = 0usize;
             while f_start < d {
                 let f_end = (f_start + ft).min(d);
                 let fcols = f_end - f_start;
-                let mut bins = vec![0i32; nt * ft];
-                for i in 0..rows {
-                    for f in 0..fcols {
-                        bins[i * ft + f] = bin_idx[(row_start + i) * d + f_start + f] as i32;
-                    }
-                }
-                let lb = xla::Literal::vec1(&bins).reshape(&[nt as i64, ft as i64]).unwrap();
-                let out = self.run("hist", &[lb, lgh.clone()]).expect("hist artifact failed");
-                let tile = out[0].to_vec::<f32>().unwrap(); // (F_TILE, B, 3)
+                let mut gt = vec![0.0f32; ft * bt];
+                // padding features: cum stats equal to totals → gain 0? They
+                // compute to parent-vs-parent ≈ 0; sliced off anyway.
+                let mut ht = vec![0.0f32; ft * bt];
                 for f in 0..fcols {
                     for b in 0..n_bins {
-                        let src = (f * bt + b) * 3;
-                        let dst = (f_start + f) * n_bins + b;
-                        gh_out[dst] += tile[src] as f64;
-                        hh_out[dst] += tile[src + 1] as f64;
-                        ch_out[dst] += tile[src + 2].round() as u32;
+                        gt[f * bt + b] = g_cum[(f_start + f) * n_bins + b] as f32;
+                        ht[f * bt + b] = h_cum[(f_start + f) * n_bins + b] as f32;
+                    }
+                }
+                let lg = xla::Literal::vec1(&gt).reshape(&[ft as i64, bt as i64]).unwrap();
+                let lh = xla::Literal::vec1(&ht).reshape(&[ft as i64, bt as i64]).unwrap();
+                let res = self.run("gain", &[lg, lh, params.clone()]).expect("gain artifact failed");
+                let tile = res[0].to_vec::<f32>().unwrap();
+                for f in 0..fcols {
+                    // the last *logical* bin is never a valid split; leave it 0
+                    // (the kernel masks only the last tile bin)
+                    for b in 0..n_bins - 1 {
+                        out[(f_start + f) * n_bins + b] = tile[f * bt + b] as f64;
                     }
                 }
                 f_start = f_end;
             }
-            row_start = row_end;
+            out
         }
-        (gh_out, hh_out, ch_out)
-    }
-
-    fn gain_scan(
-        &self,
-        g_cum: &[f64],
-        h_cum: &[f64],
-        d: usize,
-        n_bins: usize,
-        g_total: f64,
-        h_total: f64,
-        lambda: f64,
-    ) -> Vec<f64> {
-        let bt = self.tiles.bins;
-        let ft = self.tiles.f_tile;
-        assert!(n_bins <= bt);
-        let mut out = vec![0.0f64; d * n_bins];
-        let params = xla::Literal::vec1(&[g_total as f32, h_total as f32, lambda as f32]);
-        let mut f_start = 0usize;
-        while f_start < d {
-            let f_end = (f_start + ft).min(d);
-            let fcols = f_end - f_start;
-            let mut gt = vec![0.0f32; ft * bt];
-            // padding features: cum stats equal to totals → gain 0? They
-            // compute to parent-vs-parent ≈ 0; sliced off anyway.
-            let mut ht = vec![0.0f32; ft * bt];
-            for f in 0..fcols {
-                for b in 0..n_bins {
-                    gt[f * bt + b] = g_cum[(f_start + f) * n_bins + b] as f32;
-                    ht[f * bt + b] = h_cum[(f_start + f) * n_bins + b] as f32;
-                }
-            }
-            let lg = xla::Literal::vec1(&gt).reshape(&[ft as i64, bt as i64]).unwrap();
-            let lh = xla::Literal::vec1(&ht).reshape(&[ft as i64, bt as i64]).unwrap();
-            let res = self.run("gain", &[lg, lh, params.clone()]).expect("gain artifact failed");
-            let tile = res[0].to_vec::<f32>().unwrap();
-            for f in 0..fcols {
-                // the last *logical* bin is never a valid split; leave it 0
-                // (the kernel masks only the last tile bin)
-                for b in 0..n_bins - 1 {
-                    out[(f_start + f) * n_bins + b] = tile[f * bt + b] as f64;
-                }
-            }
-            f_start = f_end;
-        }
-        out
     }
 }

@@ -17,7 +17,7 @@ pub enum SplitRef {
 }
 
 /// One node of a (possibly multi-output) decision tree.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TreeNode {
     pub id: u32,
     pub parent: i32,
@@ -56,7 +56,7 @@ impl TreeNode {
 }
 
 /// A grown tree. `width` is the leaf-output dimension (1 or #classes).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Tree {
     pub nodes: Vec<TreeNode>,
     pub width: usize,

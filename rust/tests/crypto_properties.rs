@@ -259,6 +259,138 @@ fn prop_negation_edges() {
     }
 }
 
+/// GH packing at the capacity boundary: every instance at the maximum
+/// planned magnitude, aggregated over exactly `n_bound` samples, must
+/// stay inside the planned bit budget and unpack to the plaintext sums.
+#[test]
+fn packing_capacity_boundary_max_magnitude() {
+    for n_bound in [1u64, 2, 100, 4096] {
+        let p = GhPacker::plan_logistic(n_bound, 53);
+        // logistic worst case: g = +1.0 (raw 2.0 after offset), h = 1.0
+        let one = p.pack(1.0, 1.0);
+        let mut acc = BigUint::zero();
+        for _ in 0..n_bound {
+            acc = acc.add(&one);
+        }
+        assert!(
+            acc.bit_length() <= p.b_gh,
+            "n={n_bound}: aggregate spills the budget ({} > {})",
+            acc.bit_length(),
+            p.b_gh
+        );
+        // the h field must not have leaked into the g field
+        let (gs, hs) = p.unpack_sum(&acc, n_bound);
+        assert!((gs - n_bound as f64).abs() < 1e-6, "g {gs} vs {n_bound}");
+        assert!((hs - n_bound as f64).abs() < 1e-6, "h {hs} vs {n_bound}");
+
+        // the negative extreme likewise: g = −1.0 encodes to raw 0
+        let neg = p.pack(-1.0, 0.0);
+        let (gn, hn) = p.unpack_sum(&neg, 1);
+        assert!((gn + 1.0).abs() < 1e-9 && hn == 0.0);
+    }
+}
+
+/// Data-derived plans hit the same boundary exactly: the plan is built
+/// from the actual vectors, then every instance is packed and aggregated.
+#[test]
+fn packing_capacity_boundary_data_derived() {
+    let mut r = Xoshiro256::seed_from_u64(81);
+    let n = 1000usize;
+    let mut g: Vec<f64> = (0..n).map(|_| r.next_f64() * 2.0 - 1.0).collect();
+    let mut h: Vec<f64> = (0..n).map(|_| r.next_f64()).collect();
+    // force the extremes to be present so max-magnitude packing happens
+    g[0] = -1.0;
+    g[1] = 1.0;
+    h[0] = 1.0;
+    let p = GhPacker::plan(&g, &h, n as u64, 53);
+    let mut acc = BigUint::zero();
+    for (gi, hi) in g.iter().zip(&h) {
+        acc = acc.add(&p.pack(*gi, *hi));
+    }
+    assert!(acc.bit_length() <= p.b_gh);
+    let (gs, hs) = p.unpack_sum(&acc, n as u64);
+    assert!((gs - g.iter().sum::<f64>()).abs() < 1e-6);
+    assert!((hs - h.iter().sum::<f64>()).abs() < 1e-6);
+}
+
+/// A gradient outside the planned range must be rejected, not silently
+/// corrupt neighbouring bit fields.
+#[test]
+#[should_panic(expected = "packing budget")]
+fn packing_overflow_gradient_rejected() {
+    let g = [0.05, -0.1, 0.02];
+    let h = [0.01, 0.02, 0.03];
+    let p = GhPacker::plan(&g, &h, 3, 53);
+    let _ = p.pack(5.0, 0.01); // ~50× the planned gradient range
+}
+
+/// A hessian outside the planned range must be rejected too.
+#[test]
+#[should_panic(expected = "packing budget")]
+fn packing_overflow_hessian_rejected() {
+    let g = [0.05, -0.1, 0.02];
+    let h = [0.01, 0.02, 0.03];
+    let p = GhPacker::plan(&g, &h, 3, 53);
+    let _ = p.pack(0.0, 7.0);
+}
+
+/// Multi-class planning must refuse a plaintext space too small for even
+/// one class (paper eq. 21 requires η_c ≥ 1).
+#[test]
+#[should_panic(expected = "does not fit")]
+fn mo_packing_rejects_tiny_plaintext_space() {
+    use sbp::crypto::packing::MoPacker;
+    let k = 4;
+    let g = vec![0.5; k];
+    let h = vec![0.5; k];
+    // b_gh for n=1M at r=53 is 147 bits; 100 bits cannot hold one class
+    let _ = MoPacker::plan(&g, &h, k, 1_000_000, 53, 100);
+}
+
+/// Cipher compression at η_s capacity with every slot at the maximum
+/// aggregated magnitude: the top slot sits flush against the plaintext
+/// capacity, and every slot must still unpack to its plaintext sums.
+#[test]
+fn compression_full_capacity_max_magnitude() {
+    let mut crng = ChaCha20Rng::from_u64(91);
+    for suite in [
+        CipherSuite::new_paillier(512, &mut crng),
+        CipherSuite::new_affine(1024, &mut crng),
+    ] {
+        let n_bound = 1000u64;
+        let packer = GhPacker::plan_logistic(n_bound, 53);
+        let plan = CompressPlan::derive(suite.plaintext_bits(), packer.b_gh);
+        assert!(plan.capacity >= 2);
+        // each stat: the max-magnitude aggregate over n_bound instances
+        let max_pack = packer.pack(1.0, 1.0);
+        let mut aggregate = BigUint::zero();
+        for _ in 0..n_bound {
+            aggregate = aggregate.add(&max_pack);
+        }
+        let stats: Vec<SplitStatCt> = (0..plan.capacity)
+            .map(|i| SplitStatCt {
+                ct: suite.encrypt(&aggregate, &mut crng),
+                id: i as u32,
+                sample_count: n_bound as u32,
+            })
+            .collect();
+        let pkgs = compress(&suite, &plan, &stats);
+        assert_eq!(pkgs.len(), 1, "exactly one full package");
+        let rec = decompress(&suite, &plan, &packer, &pkgs);
+        assert_eq!(rec.len(), plan.capacity);
+        for row in rec {
+            assert_eq!(row.sample_count, n_bound as u32);
+            assert!(
+                (row.g_sum - n_bound as f64).abs() < 1e-6,
+                "{}: g {} vs {n_bound}",
+                suite.kind_name(),
+                row.g_sum
+            );
+            assert!((row.h_sum - n_bound as f64).abs() < 1e-6);
+        }
+    }
+}
+
 /// `scalar_pow2` must equal `scalar_mul` by 2^k (the compression shift).
 #[test]
 fn prop_scalar_pow2_matches_scalar_mul() {

@@ -390,6 +390,97 @@ fn mix_tree_ownership_alternates() {
     }
 }
 
+/// Run one in-process host over loopback TCP and train against it.
+fn train_over_tcp(vs: &sbp::data::dataset::VerticalSplit, cfg: &TrainConfig) -> sbp::coordinator::TrainReport {
+    use sbp::config::TransportKind;
+    use sbp::data::binning::bin_party;
+    use sbp::federation::tcp::serve_host_once;
+    use sbp::util::timer::PhaseTimer;
+    use std::net::TcpListener;
+    use std::sync::{Arc, Mutex};
+
+    assert_eq!(vs.hosts.len(), 1, "helper serves a single host");
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap();
+    let bm = bin_party(&vs.hosts[0], cfg.max_bin);
+    let sb = sbp::data::sparse::maybe_sparse(&vs.hosts[0], &bm, cfg.sparse_optimization);
+    let timer = Arc::new(Mutex::new(PhaseTimer::new()));
+    let server = std::thread::spawn(move || {
+        serve_host_once(&listener, 0, bm, sb, timer).expect("host serve failed");
+    });
+
+    let mut tcp_cfg = cfg.clone();
+    tcp_cfg.transport = TransportKind::Tcp { hosts: vec![addr.to_string()] };
+    let report = train_federated(vs, &tcp_cfg).expect("tcp training failed");
+    server.join().expect("host thread panicked");
+    report
+}
+
+#[test]
+fn tcp_transport_parity_with_in_memory() {
+    // The tentpole guarantee: a real byte-serialized socket transport
+    // trains the *identical* model to the in-memory channel transport —
+    // same trees bit for bit, same metric, same loss curve — and the two
+    // transports account the same serialized wire bytes.
+    let spec = SyntheticSpec::give_credit(0.002);
+    let vs = spec.generate_vertical(19, 1);
+    let mut cfg = fast_cfg();
+    cfg.epochs = 3;
+    cfg.seed = 1234;
+
+    let mem = train_federated(&vs, &cfg).unwrap();
+    let tcp = train_over_tcp(&vs, &cfg);
+
+    assert_eq!(mem.trees, tcp.trees, "trees must be bit-identical across transports");
+    assert_eq!(mem.tree_classes, tcp.tree_classes);
+    assert_eq!(mem.train_metric, tcp.train_metric, "train metric must match exactly");
+    assert_eq!(mem.loss_curve, tcp.loss_curve);
+    assert_eq!(mem.host_tables, tcp.host_tables);
+    // byte accounting is transport-independent: the in-memory links charge
+    // the exact serialized frame sizes the TCP transport actually sent
+    assert_eq!(mem.comm, tcp.comm, "per-kind wire-byte accounting must match");
+    assert!(tcp.comm.total_bytes() > 10_000);
+    assert!(tcp.comm.to_host_kind_bytes.iter().sum::<u64>() == tcp.comm.bytes_to_host);
+    assert!(tcp.comm.to_guest_kind_bytes.iter().sum::<u64>() == tcp.comm.bytes_to_guest);
+}
+
+#[test]
+fn tcp_transport_parity_paillier_ciphertexts() {
+    // Same guarantee with real Paillier ciphertexts crossing the socket
+    // (wire form is standard-residue, host rebuilds the Montgomery ctx).
+    let spec = SyntheticSpec::give_credit(0.001);
+    let vs = spec.generate_vertical(23, 1);
+    let mut cfg = fast_cfg();
+    cfg.cipher = CipherKind::Paillier;
+    cfg.key_bits = 512;
+    cfg.epochs = 2;
+
+    let mem = train_federated(&vs, &cfg).unwrap();
+    let tcp = train_over_tcp(&vs, &cfg);
+    assert_eq!(mem.trees, tcp.trees);
+    assert_eq!(mem.train_metric, tcp.train_metric);
+    assert_eq!(mem.comm, tcp.comm);
+    assert!(tcp.ops.encrypts > 0 && tcp.ops.decrypts > 0);
+}
+
+#[test]
+fn tcp_transport_parity_compressed_and_affine() {
+    // Compressed split statistics (CtPackage frames) under the iterative
+    // affine cipher must also cross the wire losslessly.
+    let spec = SyntheticSpec::give_credit(0.001);
+    let vs = spec.generate_vertical(29, 1);
+    let mut cfg = fast_cfg();
+    cfg.cipher = CipherKind::IterativeAffine;
+    cfg.key_bits = 1024;
+    cfg.epochs = 2;
+
+    let mem = train_federated(&vs, &cfg).unwrap();
+    let tcp = train_over_tcp(&vs, &cfg);
+    assert_eq!(mem.trees, tcp.trees);
+    assert_eq!(mem.train_metric, tcp.train_metric);
+    assert_eq!(mem.comm, tcp.comm);
+}
+
 #[test]
 fn exported_model_reproduces_training_predictions() {
     // Train, export the per-party model shares, JSON round-trip them, and

@@ -1,0 +1,347 @@
+//! Wire-codec property tests: every `ToHost`/`ToGuest` variant must
+//! encode→decode round-trip byte-identically — including ciphertext
+//! payloads at Paillier and iterative-affine key sizes — the exact-length
+//! functions must agree with the encoder, and truncated/garbage frames
+//! must fail with errors, never panics or runaway allocations.
+
+use sbp::crypto::bigint::BigUint;
+use sbp::crypto::cipher::{CipherSuite, Ct};
+use sbp::crypto::compress::{CompressPlan, CtPackage};
+use sbp::crypto::packing::{GhPacker, MoPacker};
+use sbp::federation::codec::{
+    self, decode_to_guest, decode_to_host, encode_to_guest, encode_to_host, StatCodec,
+    WireError, FRAME_HEADER_LEN,
+};
+use sbp::federation::message::{HistTask, NodeStats, ToGuest, ToHost};
+use sbp::util::rng::ChaCha20Rng;
+use std::sync::Arc;
+
+/// The cipher suites a run can negotiate, at the key sizes the paper
+/// benchmarks (scaled down for CI: 512-bit Paillier, 1024-bit affine).
+fn suites() -> Vec<CipherSuite> {
+    let mut rng = ChaCha20Rng::from_u64(0xC0DEC);
+    vec![
+        CipherSuite::new_paillier(512, &mut rng),
+        CipherSuite::new_affine(1024, &mut rng),
+        CipherSuite::new_plain(1023),
+    ]
+}
+
+fn cts(suite: &CipherSuite, n: usize, rng: &mut ChaCha20Rng) -> Vec<Ct> {
+    (0..n)
+        .map(|i| suite.encrypt(&BigUint::from_u64(1000 + i as u64), rng))
+        .collect()
+}
+
+fn sample_to_host_messages(suite: &CipherSuite, rng: &mut ChaCha20Rng) -> Vec<ToHost> {
+    let packer = GhPacker::plan_logistic(10_000, 53);
+    let g: Vec<f64> = vec![0.5, -0.25, 0.1, 0.9, -0.9, 0.0];
+    let h: Vec<f64> = vec![0.25; 6];
+    let mo = MoPacker::plan(&g, &h, 3, 100, 53, suite.plaintext_bits());
+    vec![
+        ToHost::Setup {
+            suite_public: suite.public_side(),
+            codec: StatCodec::Packed(packer.clone()),
+            compress: Some(CompressPlan::derive(suite.plaintext_bits(), packer.b_gh)),
+            n_bins: 32,
+            hist_subtraction: true,
+            sparse_optimization: false,
+            seed: 0xDEADBEEF,
+        },
+        ToHost::Setup {
+            suite_public: suite.public_side(),
+            codec: StatCodec::Separate(packer.clone()),
+            compress: None,
+            n_bins: 8,
+            hist_subtraction: false,
+            sparse_optimization: true,
+            seed: 1,
+        },
+        ToHost::Setup {
+            suite_public: suite.public_side(),
+            codec: StatCodec::Multi(mo),
+            compress: None,
+            n_bins: 64,
+            hist_subtraction: true,
+            sparse_optimization: true,
+            seed: u64::MAX,
+        },
+        ToHost::StartTree {
+            tree_id: 3,
+            instances: Arc::new(vec![5, 9, 2, 77]),
+            packed: Arc::new(cts(suite, 4, rng)),
+            node_total: cts(suite, 1, rng),
+        },
+        ToHost::StartTree {
+            tree_id: 4,
+            instances: Arc::new(Vec::new()),
+            packed: Arc::new(Vec::new()),
+            node_total: Vec::new(),
+        },
+        ToHost::BuildLayer {
+            tree_id: 5,
+            tasks: vec![
+                HistTask::Direct { node: 0 },
+                HistTask::Subtract { node: 2, parent: 0, sibling: 1 },
+            ],
+        },
+        ToHost::ApplySplit {
+            tree_id: 6,
+            node: 4,
+            handle: 99,
+            instances: Arc::new(vec![1, 2, 3]),
+        },
+        ToHost::SyncAssign {
+            tree_id: 7,
+            node: 1,
+            left_child: 3,
+            right_child: 4,
+            left: Arc::new(vec![10, 20]),
+        },
+        ToHost::FinishTree { tree_id: 8 },
+        ToHost::DumpSplitTable,
+        ToHost::Shutdown,
+    ]
+}
+
+fn sample_to_guest_messages(suite: &CipherSuite, rng: &mut ChaCha20Rng) -> Vec<ToGuest> {
+    let raw_rows: Vec<(u32, u32, Vec<Ct>)> = vec![
+        (0, 3, cts(suite, 2, rng)),
+        (7, 1, cts(suite, 1, rng)),
+    ];
+    let pkg = CtPackage {
+        ct: suite.encrypt(&BigUint::from_u64(42), rng),
+        ids: vec![3, 1, 4],
+        counts: vec![9, 2, 6],
+    };
+    vec![
+        ToGuest::LayerStats {
+            tree_id: 1,
+            nodes: vec![
+                (0, NodeStats::Raw(raw_rows)),
+                (1, NodeStats::Compressed(vec![pkg])),
+                (2, NodeStats::Raw(Vec::new())),
+            ],
+        },
+        ToGuest::LeftInstances { tree_id: 2, node: 5, left: vec![4, 8, 15, 16, 23, 42] },
+        ToGuest::LeftInstances { tree_id: 2, node: 6, left: Vec::new() },
+        ToGuest::SplitTable {
+            entries: vec![(0, 7, 1.5), (1, 0, -3.25), (2, 255, f64::MAX)],
+        },
+        ToGuest::Ack,
+    ]
+}
+
+/// Byte-identical double round-trip: encode → decode → encode.
+#[test]
+fn to_host_roundtrips_all_variants_all_suites() {
+    for suite in suites() {
+        let mut rng = ChaCha20Rng::from_u64(7);
+        let ct_len = suite.ct_byte_len();
+        let setup_state = (suite.public_side(), ct_len);
+        for msg in sample_to_host_messages(&suite, &mut rng) {
+            let bytes = encode_to_host(&suite, ct_len, &msg);
+            assert_eq!(
+                bytes.len() + FRAME_HEADER_LEN,
+                codec::to_host_wire_len(&msg, ct_len),
+                "wire length mismatch for {:?} under {}",
+                msg.kind(),
+                suite.kind_name()
+            );
+            let decoded = decode_to_host(Some((&setup_state.0, setup_state.1)), &bytes)
+                .unwrap_or_else(|e| panic!("{} decode failed: {e}", suite.kind_name()));
+            assert_eq!(decoded.kind(), msg.kind());
+            let re = encode_to_host(&suite, ct_len, &decoded);
+            assert_eq!(re, bytes, "re-encoding differs for {:?}", msg.kind());
+        }
+    }
+}
+
+#[test]
+fn to_guest_roundtrips_all_variants_all_suites() {
+    for suite in suites() {
+        let mut rng = ChaCha20Rng::from_u64(9);
+        let ct_len = suite.ct_byte_len();
+        for msg in sample_to_guest_messages(&suite, &mut rng) {
+            let bytes = encode_to_guest(&suite, ct_len, &msg);
+            assert_eq!(
+                bytes.len() + FRAME_HEADER_LEN,
+                codec::to_guest_wire_len(&msg, ct_len),
+                "wire length mismatch for {:?}",
+                msg.kind()
+            );
+            let decoded = decode_to_guest(&suite, ct_len, &bytes).expect("decode");
+            assert_eq!(decoded, msg, "decoded message differs for {:?}", msg.kind());
+            let re = encode_to_guest(&suite, ct_len, &decoded);
+            assert_eq!(re, bytes);
+        }
+    }
+}
+
+/// Decoded Setup must preserve everything a host needs: cipher identity,
+/// plaintext capacity, ciphertext width, codec layout, compression plan —
+/// and ciphertexts encrypted by the guest must decrypt identically after
+/// crossing the wire through the *reconstructed* suite.
+#[test]
+fn setup_reconstructs_operational_suite() {
+    for suite in suites() {
+        let mut rng = ChaCha20Rng::from_u64(11);
+        let ct_len = suite.ct_byte_len();
+        let packer = GhPacker::plan_logistic(1_000_000, 53);
+        let msg = ToHost::Setup {
+            suite_public: suite.public_side(),
+            codec: StatCodec::Packed(packer.clone()),
+            compress: Some(CompressPlan::derive(suite.plaintext_bits(), packer.b_gh)),
+            n_bins: 32,
+            hist_subtraction: true,
+            sparse_optimization: true,
+            seed: 99,
+        };
+        let bytes = encode_to_host(&suite, ct_len, &msg);
+        let ToHost::Setup { suite_public: host_suite, codec, compress, n_bins, seed, .. } =
+            decode_to_host(None, &bytes).expect("setup decode")
+        else {
+            panic!("expected Setup");
+        };
+        assert_eq!(host_suite.kind_name(), suite.kind_name());
+        assert_eq!(host_suite.plaintext_bits(), suite.plaintext_bits());
+        assert_eq!(host_suite.ct_byte_len(), ct_len);
+        assert!(!host_suite.has_secret() || matches!(host_suite, CipherSuite::Plain { .. }));
+        let StatCodec::Packed(p) = codec else { panic!("expected packed codec") };
+        assert_eq!((p.b_g, p.b_h, p.b_gh), (packer.b_g, packer.b_h, packer.b_gh));
+        assert_eq!(p.g_off, packer.g_off);
+        assert_eq!(compress, Some(CompressPlan::derive(suite.plaintext_bits(), packer.b_gh)));
+        assert_eq!(n_bins, 32);
+        assert_eq!(seed, 99);
+
+        // guest-encrypted ciphertexts survive: encode with the guest suite,
+        // homomorphically add through the host's reconstructed suite,
+        // decrypt with the guest's secret key
+        let a = suite.encrypt(&BigUint::from_u64(30), &mut rng);
+        let b = suite.encrypt(&BigUint::from_u64(12), &mut rng);
+        let start = ToHost::StartTree {
+            tree_id: 0,
+            instances: Arc::new(vec![0, 1]),
+            packed: Arc::new(vec![a, b]),
+            node_total: vec![],
+        };
+        let wire = encode_to_host(&suite, ct_len, &start);
+        let ToHost::StartTree { packed, .. } =
+            decode_to_host(Some((&host_suite, ct_len)), &wire).expect("start decode")
+        else {
+            panic!("expected StartTree");
+        };
+        let sum = host_suite.add(&packed[0], &packed[1]);
+        assert_eq!(suite.decrypt(&sum), BigUint::from_u64(42), "{}", suite.kind_name());
+    }
+}
+
+/// Every strict prefix of a valid payload must decode to an error —
+/// never a panic, never a bogus success.
+#[test]
+fn truncated_payloads_error_cleanly() {
+    let suite = CipherSuite::new_plain(256);
+    let ct_len = suite.ct_byte_len();
+    let mut rng = ChaCha20Rng::from_u64(13);
+    let setup_state = (suite.public_side(), ct_len);
+    for msg in sample_to_host_messages(&suite, &mut rng) {
+        let bytes = encode_to_host(&suite, ct_len, &msg);
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_to_host(Some((&setup_state.0, setup_state.1)), &bytes[..cut]).is_err(),
+                "prefix of len {cut}/{} decoded successfully for {:?}",
+                bytes.len(),
+                msg.kind()
+            );
+        }
+    }
+    for msg in sample_to_guest_messages(&suite, &mut rng) {
+        let bytes = encode_to_guest(&suite, ct_len, &msg);
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_to_guest(&suite, ct_len, &bytes[..cut]).is_err(),
+                "prefix of len {cut} decoded for {:?}",
+                msg.kind()
+            );
+        }
+    }
+}
+
+/// Garbage payloads (random bytes) must error out, and length fields that
+/// point past the frame must be rejected before allocation.
+#[test]
+fn garbage_payloads_error_cleanly() {
+    let suite = CipherSuite::new_plain(256);
+    let ct_len = suite.ct_byte_len();
+    let mut rng = ChaCha20Rng::from_u64(17);
+    for len in [0usize, 1, 7, 64, 1000] {
+        for _ in 0..50 {
+            let buf: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            // either a clean error or a successful decode of a small message;
+            // both are fine — what is not fine is a panic or huge allocation
+            let _ = decode_to_host(Some((&suite, ct_len)), &buf);
+            let _ = decode_to_guest(&suite, ct_len, &buf);
+        }
+    }
+    // unknown tags
+    assert!(matches!(
+        decode_to_host(Some((&suite, ct_len)), &[200]),
+        Err(WireError::BadTag { .. })
+    ));
+    assert!(matches!(
+        decode_to_guest(&suite, ct_len, &[99]),
+        Err(WireError::BadTag { .. })
+    ));
+    // an ApplySplit claiming 2^32-1 instances in a 20-byte frame
+    let mut evil = vec![3u8];
+    evil.extend_from_slice(&1u32.to_le_bytes());
+    evil.extend_from_slice(&2u32.to_le_bytes());
+    evil.extend_from_slice(&3u32.to_le_bytes());
+    evil.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert!(matches!(
+        decode_to_host(Some((&suite, ct_len)), &evil),
+        Err(WireError::Malformed(_))
+    ));
+    // ciphertext-bearing message before Setup
+    let start = ToHost::StartTree {
+        tree_id: 0,
+        instances: Arc::new(vec![1]),
+        packed: Arc::new(vec![suite.encrypt(&BigUint::from_u64(1), &mut rng)]),
+        node_total: vec![],
+    };
+    let bytes = encode_to_host(&suite, ct_len, &start);
+    assert!(matches!(decode_to_host(None, &bytes), Err(WireError::Malformed(_))));
+}
+
+/// Trailing bytes after a complete message are a framing error.
+#[test]
+fn trailing_bytes_rejected() {
+    let suite = CipherSuite::new_plain(256);
+    let ct_len = suite.ct_byte_len();
+    let mut bytes = encode_to_host(&suite, ct_len, &ToHost::FinishTree { tree_id: 1 });
+    bytes.push(0);
+    assert!(matches!(
+        decode_to_host(Some((&suite, ct_len)), &bytes),
+        Err(WireError::Malformed(_))
+    ));
+}
+
+/// Frame reader: truncated header, truncated body, oversize declaration.
+#[test]
+fn frame_reader_error_cases() {
+    use std::io::Cursor;
+    // truncated header
+    let mut cur = Cursor::new(vec![1u8, 2, 3]);
+    assert!(matches!(codec::read_frame(&mut cur), Err(WireError::Truncated)));
+    // header promises more body than exists
+    let mut buf = 100u64.to_le_bytes().to_vec();
+    buf.extend_from_slice(&[7; 10]);
+    let mut cur = Cursor::new(buf);
+    assert!(matches!(codec::read_frame(&mut cur), Err(WireError::Truncated)));
+    // oversize length field fails fast
+    let mut cur = Cursor::new((codec::MAX_FRAME_LEN + 1).to_le_bytes().to_vec());
+    assert!(matches!(codec::read_frame(&mut cur), Err(WireError::FrameTooLarge(_))));
+    // clean EOF at a frame boundary is not an error
+    let mut cur = Cursor::new(Vec::<u8>::new());
+    assert!(codec::read_frame(&mut cur).unwrap().is_none());
+}
