@@ -1,0 +1,157 @@
+//! Prediction-throughput benchmark for the model-lifecycle subsystem:
+//! rows/sec and wire bytes/row of batched federated inference, per
+//! transport, against the colocated single-process oracle.
+//!
+//! The full lifecycle is exercised, not simulated: a model is trained,
+//! saved to versioned per-party artifacts, re-loaded, and served. Output
+//! goes to `BENCH_predict.json` at the repository root (override with
+//! `SBP_BENCH_OUT`); rerun with `cargo bench --bench predict_throughput`.
+
+mod common;
+
+use sbp::bench_harness::{fmt_secs, time_once, Table};
+use sbp::config::json::Json;
+use sbp::config::{CipherKind, TrainConfig};
+use sbp::coordinator::{
+    predict_centralized, predict_federated_in_memory, predict_federated_tcp, train_federated,
+};
+use sbp::data::synthetic::SyntheticSpec;
+use sbp::federation::predict::serve_predict_once;
+use sbp::model::{guest_file_name, host_file_name, GuestArtifact, HostArtifact, Objective};
+
+fn main() {
+    let m = common::scale_mult();
+    let epochs = common::bench_epochs(10);
+    let spec = SyntheticSpec::give_credit(0.05 * m); // 7,500 × 10 at default scale
+    let mut cfg = TrainConfig::secureboost_plus();
+    cfg.epochs = epochs;
+    cfg.cipher = CipherKind::Plain; // inference routes plaintext; cipher is irrelevant here
+    cfg.goss = None;
+
+    println!("\n=== Prediction throughput: batched federated inference ===");
+    println!("dataset {} scale {:.3} epochs {epochs}\n", spec.name, 0.05 * m);
+    let vs = spec.generate_vertical(cfg.seed, 1);
+    let report = train_federated(&vs, &cfg).expect("training run");
+    println!("trained: {}", report.summary());
+
+    // ---- save → load through the versioned artifact format ------------
+    let dir = std::env::temp_dir().join(format!("sbp-bench-predict-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let (guest_m, host_ms) = report.model();
+    GuestArtifact {
+        model: guest_m,
+        objective: Objective::for_classes(vs.n_classes),
+        dataset: vs.name.clone(),
+        n_hosts: vs.hosts.len(),
+        max_bin: cfg.max_bin,
+        guest_features: vs.guest.d(),
+        seed: cfg.seed,
+        scale: 0.05 * m,
+    }
+    .save(&dir.join(guest_file_name()))
+    .expect("save guest artifact");
+    for (p, hm) in host_ms.iter().enumerate() {
+        HostArtifact {
+            model: hm.clone(),
+            dataset: vs.name.clone(),
+            n_features: vs.hosts[p].d(),
+            n_hosts: vs.hosts.len(),
+            seed: cfg.seed,
+            scale: 0.05 * m,
+        }
+        .save(&dir.join(host_file_name(p)))
+        .expect("save host artifact");
+    }
+    let guest_art = GuestArtifact::load(&dir.join(guest_file_name())).expect("load guest");
+    let host_arts: Vec<HostArtifact> = (0..vs.hosts.len())
+        .map(|p| HostArtifact::load(&dir.join(host_file_name(p))).expect("load host"))
+        .collect();
+    let host_models: Vec<_> = host_arts.iter().map(|a| a.model.clone()).collect();
+    let n = vs.n();
+
+    // ---- colocated oracle ---------------------------------------------
+    let (t_cen, cen_preds) = time_once(|| predict_centralized(&guest_art.model, &host_models, &vs));
+
+    // ---- in-memory federated ------------------------------------------
+    let mem = predict_federated_in_memory(&guest_art.model, &host_models, &vs)
+        .expect("in-memory federated predict");
+    assert_eq!(mem.preds, cen_preds, "in-memory federated must match colocated exactly");
+
+    // ---- loopback TCP federated ---------------------------------------
+    let mut addrs = Vec::new();
+    let mut servers = Vec::new();
+    for (p, art) in host_arts.iter().enumerate() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        addrs.push(listener.local_addr().unwrap().to_string());
+        let model = art.model.clone();
+        let slice = vs.hosts[p].clone();
+        servers.push(std::thread::spawn(move || {
+            serve_predict_once(&listener, model, slice).expect("serve predict");
+        }));
+    }
+    let tcp = predict_federated_tcp(&guest_art.model, &vs.guest, &addrs)
+        .expect("tcp federated predict");
+    for s in servers {
+        s.join().expect("predict server thread");
+    }
+    assert_eq!(tcp.preds, cen_preds, "tcp federated must match colocated exactly");
+    assert_eq!(tcp.comm, mem.comm, "transports must account identical wire bytes");
+
+    // ---- report --------------------------------------------------------
+    let mut table = Table::new(&["transport", "rows", "wall", "rows/sec", "bytes/row"]);
+    table.row(&[
+        "colocated".into(),
+        n.to_string(),
+        fmt_secs(t_cen),
+        format!("{:.0}", n as f64 / t_cen.max(1e-12)),
+        "0".into(),
+    ]);
+    for r in [&mem, &tcp] {
+        table.row(&[
+            r.transport.to_string(),
+            r.n_rows.to_string(),
+            fmt_secs(r.wall_seconds),
+            format!("{:.0}", r.rows_per_sec),
+            format!("{:.1}", r.bytes_per_row),
+        ]);
+    }
+    table.print();
+
+    let transport_json = |rps: f64, bpr: f64, wall: f64| {
+        Json::obj(vec![
+            ("rows_per_sec", Json::Num((rps * 10.0).round() / 10.0)),
+            ("bytes_per_row", Json::Num((bpr * 10.0).round() / 10.0)),
+            ("wall_seconds", Json::Num(wall)),
+        ])
+    };
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("predict_throughput".into())),
+        ("dataset", Json::Str(vs.name.clone())),
+        ("rows", Json::Num(n as f64)),
+        ("trees", Json::Num(guest_art.model.trees.len() as f64)),
+        ("hosts", Json::Num(vs.hosts.len() as f64)),
+        ("max_depth", Json::Num(cfg.max_depth as f64)),
+        (
+            "transports",
+            Json::obj(vec![
+                (
+                    "colocated",
+                    transport_json(n as f64 / t_cen.max(1e-12), 0.0, t_cen),
+                ),
+                (
+                    "in-memory",
+                    transport_json(mem.rows_per_sec, mem.bytes_per_row, mem.wall_seconds),
+                ),
+                ("tcp", transport_json(tcp.rows_per_sec, tcp.bytes_per_row, tcp.wall_seconds)),
+            ]),
+        ),
+        (
+            "note",
+            Json::Str("regenerate with `cargo bench --bench predict_throughput`".into()),
+        ),
+    ]);
+    let out = std::env::var("SBP_BENCH_OUT").unwrap_or_else(|_| "../BENCH_predict.json".into());
+    std::fs::write(&out, doc.to_string_pretty()).expect("write bench json");
+    println!("\nwrote {out}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

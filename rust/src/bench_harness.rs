@@ -8,15 +8,22 @@ use std::time::Instant;
 /// Measurement statistics over repeated runs.
 #[derive(Debug, Clone, Copy)]
 pub struct Stats {
+    /// Middle sample.
     pub median: f64,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub stddev: f64,
+    /// Fastest sample.
     pub min: f64,
+    /// Slowest sample.
     pub max: f64,
+    /// Number of measured runs.
     pub runs: usize,
 }
 
 impl Stats {
+    /// Summarize raw samples (seconds).
     pub fn from_samples(mut samples: Vec<f64>) -> Stats {
         assert!(!samples.is_empty());
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -74,15 +81,18 @@ pub struct Table {
 }
 
 impl Table {
+    /// Start a table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append one row (must match the header count).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len());
         self.rows.push(cells.to_vec());
     }
 
+    /// Print the table with auto-sized columns.
     pub fn print(&self) {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {

@@ -20,8 +20,11 @@ use std::collections::HashMap;
 /// Parameters for growing one plaintext tree.
 #[derive(Clone, Debug)]
 pub struct GrowParams {
+    /// Maximum tree depth.
     pub max_depth: u8,
+    /// Split gain constraints and regularization.
     pub gain: GainParams,
+    /// Shrinkage applied to leaf weights.
     pub learning_rate: f64,
     /// Plaintext histogram subtraction (compute smaller child, derive
     /// the sibling). Always beneficial; toggle exists for ablations.
@@ -31,6 +34,7 @@ pub struct GrowParams {
 }
 
 impl GrowParams {
+    /// Extract growth parameters from a full training config.
     pub fn from_config(cfg: &TrainConfig) -> Self {
         GrowParams {
             max_depth: cfg.max_depth,
@@ -269,6 +273,7 @@ pub fn accumulate_predictions(
 pub struct GbdtModel {
     /// (tree, class) — class is 0 for binary / MO trees.
     pub trees: Vec<(Tree, usize)>,
+    /// Number of classes (2 = binary).
     pub k: usize,
     /// Width of prediction rows (1 for binary, k for multi-class).
     pub pred_width: usize,
@@ -276,10 +281,13 @@ pub struct GbdtModel {
 
 /// Training artifacts the experiment harness consumes.
 pub struct CentralizedReport {
+    /// The trained model.
     pub model: GbdtModel,
+    /// Training loss after each epoch.
     pub loss_curve: Vec<f64>,
     /// AUC for binary tasks, accuracy for multi-class.
     pub train_metric: f64,
+    /// Total training wall time.
     pub train_seconds: f64,
 }
 

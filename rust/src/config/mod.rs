@@ -9,13 +9,16 @@ use crate::tree::split::GainParams;
 /// Which HE schema to use (paper §7.1 benchmarks both).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CipherKind {
+    /// Paillier (the paper's default).
     Paillier,
+    /// FATE-style iterative affine cipher.
     IterativeAffine,
     /// No encryption — tests & ablation lower bound only.
     Plain,
 }
 
 impl CipherKind {
+    /// Parse a cipher name from the CLI.
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "paillier" => Some(CipherKind::Paillier),
@@ -25,6 +28,7 @@ impl CipherKind {
         }
     }
 
+    /// Cipher name for logs and reports.
     pub fn name(&self) -> &'static str {
         match self {
             CipherKind::Paillier => "paillier",
@@ -65,6 +69,7 @@ pub enum TransportKind {
 }
 
 impl TransportKind {
+    /// Transport name for logs and reports.
     pub fn name(&self) -> &'static str {
         match self {
             TransportKind::InMemory => "in-memory",
@@ -76,7 +81,9 @@ impl TransportKind {
 /// GOSS configuration (§6.1).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct GossConfig {
+    /// Fraction of instances with the largest |g| always kept.
     pub top_rate: f64,
+    /// Uniform sample fraction of the remainder.
     pub other_rate: f64,
 }
 
@@ -91,12 +98,18 @@ impl Default for GossConfig {
 pub struct TrainConfig {
     /// Boosting rounds (per class for one-vs-all multi-class).
     pub epochs: usize,
+    /// Maximum tree depth.
     pub max_depth: u8,
+    /// Quantile bins per feature.
     pub max_bin: usize,
+    /// Shrinkage applied to leaf weights.
     pub learning_rate: f64,
+    /// Split gain constraints and regularization.
     pub gain: GainParams,
 
+    /// Which HE schema encrypts the statistics.
     pub cipher: CipherKind,
+    /// HE key length in bits.
     pub key_bits: usize,
     /// Fixed-point precision r (paper eq. 11; default 53).
     pub precision: u32,
@@ -111,13 +124,18 @@ pub struct TrainConfig {
     pub cipher_compression: bool,
 
     // ---- engineering optimizations (§6) ----
+    /// GOSS sampling (§6.1); `None` disables it.
     pub goss: Option<GossConfig>,
+    /// Sparse-aware histogram building (§6.2).
     pub sparse_optimization: bool,
 
+    /// Training-mechanism mode (§5).
     pub mode: ModeKind,
+    /// Number of host parties.
     pub n_hosts: usize,
     /// How to reach the host parties (in-memory threads or framed TCP).
     pub transport: TransportKind,
+    /// Master seed: data generation, GOSS, shuffling, keygen.
     pub seed: u64,
     /// Print per-tree progress.
     pub verbose: bool,
@@ -168,17 +186,20 @@ impl TrainConfig {
         }
     }
 
+    /// Builder-style cipher override.
     pub fn with_cipher(mut self, cipher: CipherKind, key_bits: usize) -> Self {
         self.cipher = cipher;
         self.key_bits = key_bits;
         self
     }
 
+    /// Builder-style mode override.
     pub fn with_mode(mut self, mode: ModeKind) -> Self {
         self.mode = mode;
         self
     }
 
+    /// Builder-style epoch override.
     pub fn with_epochs(mut self, epochs: usize) -> Self {
         self.epochs = epochs;
         self

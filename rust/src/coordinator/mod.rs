@@ -3,6 +3,12 @@
 //! processes, per [`TransportKind`]), runs the guest training engine, and
 //! assembles the [`TrainReport`] the experiment harness consumes
 //! (timings, traffic, HE-op counts, model quality).
+//!
+//! The same bring-up logic serves the *inference* side of the model
+//! lifecycle: [`predict_federated_in_memory`] / [`predict_federated_tcp`]
+//! connect a saved guest model share to serving hosts
+//! ([`crate::federation::predict`]) and produce a [`PredictReport`] with
+//! throughput and exact wire-traffic accounting.
 
 use crate::config::{CipherKind, TrainConfig, TransportKind};
 use crate::crypto::cipher::{CipherSuite, OpSnapshot, OPS};
@@ -24,27 +30,40 @@ use std::sync::{Arc, Mutex};
 /// Everything a training run produces.
 #[derive(Debug)]
 pub struct TrainReport {
+    /// Dataset preset name.
     pub dataset: String,
+    /// Cipher schema name.
     pub cipher: &'static str,
+    /// Training-mechanism mode name.
     pub mode: String,
+    /// Training instances.
     pub n_instances: usize,
+    /// Total features across parties.
     pub n_features: usize,
+    /// Number of trees built.
     pub trees_built: usize,
     /// Wall time per tree (tree building only, as in the paper's Fig. 7).
     pub tree_seconds: Vec<f64>,
+    /// Sum of per-tree build times.
     pub total_tree_seconds: f64,
+    /// Mean per-tree build time (Fig. 7's metric).
     pub avg_tree_seconds: f64,
     /// Total wall time including keygen / binning / eval.
     pub wall_seconds: f64,
+    /// Exact serialized wire traffic, per direction and kind.
     pub comm: NetSnapshot,
     /// Time the paper's 1 GbE link would need for `comm`.
     pub simulated_network_seconds: f64,
+    /// Homomorphic-operation counts of this run.
     pub ops: OpSnapshot,
     /// AUC (binary) or accuracy (multi-class) on the training set —
     /// the paper reports train scores (§7.1 Metrics).
     pub train_metric: f64,
+    /// Training loss after each epoch.
     pub loss_curve: Vec<f64>,
+    /// Per-phase wall-time breakdown (guest + hosts).
     pub phase_report: String,
+    /// The boosted trees, in build order.
     pub trees: Vec<Tree>,
     /// Per-class tags matching `trees` (0 for binary / MO).
     pub tree_classes: Vec<usize>,
@@ -87,6 +106,7 @@ impl TrainReport {
         }
     }
 
+    /// One-line run summary for logs.
     pub fn summary(&self) -> String {
         format!(
             "{:<12} cipher={:<17} mode={:<8} trees={:>3} avg_tree={:>8.3}s metric={:.4} comm={:.1}MiB net≈{:.2}s",
@@ -227,6 +247,160 @@ pub fn train_federated_with_engine(
         trees: outcome.trees,
         host_tables,
     })
+}
+
+/// Everything a federated batch-prediction run produces.
+#[derive(Debug)]
+pub struct PredictReport {
+    /// Rows scored.
+    pub n_rows: usize,
+    /// Columns per prediction row (1 binary, k multi-class).
+    pub pred_width: usize,
+    /// Raw margins, row-major `n_rows × pred_width`.
+    pub preds: Vec<f64>,
+    /// Wall time of the prediction pass (transport included).
+    pub wall_seconds: f64,
+    /// `n_rows / wall_seconds`.
+    pub rows_per_sec: f64,
+    /// Exact serialized wire traffic of the prediction pass.
+    pub comm: NetSnapshot,
+    /// `comm.total_bytes() / n_rows`.
+    pub bytes_per_row: f64,
+    /// Which transport carried the routing queries.
+    pub transport: &'static str,
+}
+
+impl PredictReport {
+    /// Assemble a report, deriving rows/sec and bytes/row — the single
+    /// place those derivations live (CLI and benches included).
+    pub fn new(
+        preds: Vec<f64>,
+        pred_width: usize,
+        n_rows: usize,
+        wall: f64,
+        comm: NetSnapshot,
+        transport: &'static str,
+    ) -> PredictReport {
+        PredictReport {
+            n_rows,
+            pred_width,
+            preds,
+            wall_seconds: wall,
+            rows_per_sec: n_rows as f64 / wall.max(1e-12),
+            bytes_per_row: comm.total_bytes() as f64 / n_rows.max(1) as f64,
+            comm,
+            transport,
+        }
+    }
+}
+
+/// Colocated (single-process, no transport) inference: every party's
+/// share and features in one place. The oracle the federated paths must
+/// match bit for bit.
+pub fn predict_centralized(
+    model: &GuestModel,
+    hosts: &[HostModel],
+    vs: &VerticalSplit,
+) -> Vec<f64> {
+    let n = vs.n();
+    let k = model.pred_width;
+    let mut preds = vec![0.0f64; n * k];
+    for i in 0..n {
+        let guest_row = &vs.guest.x[i * vs.guest.d()..(i + 1) * vs.guest.d()];
+        let host_rows: Vec<&[f64]> =
+            vs.hosts.iter().map(|h| &h.x[i * h.d()..(i + 1) * h.d()]).collect();
+        let p = model.predict_row(guest_row, hosts, &host_rows);
+        preds[i * k..(i + 1) * k].copy_from_slice(&p);
+    }
+    preds
+}
+
+/// Batched federated inference with in-process serving hosts (one thread
+/// per host model share, mpsc links).
+pub fn predict_federated_in_memory(
+    model: &GuestModel,
+    host_models: &[HostModel],
+    vs: &VerticalSplit,
+) -> Result<PredictReport> {
+    if host_models.len() != vs.hosts.len() {
+        return Err(anyhow!(
+            "{} host model shares for {} host feature slices",
+            host_models.len(),
+            vs.hosts.len()
+        ));
+    }
+    for (p, hm) in host_models.iter().enumerate() {
+        if hm.party as usize != p {
+            return Err(anyhow!(
+                "host share in slot {p} records party {} — shares out of order",
+                hm.party
+            ));
+        }
+    }
+    let wall0 = std::time::Instant::now();
+    let mut links: Vec<Box<dyn GuestTransport>> = Vec::with_capacity(host_models.len());
+    let mut handles = Vec::new();
+    for (hm, slice) in host_models.iter().zip(&vs.hosts) {
+        let (gl, hl) = link_pair(8);
+        handles.push(crate::federation::predict::spawn_predict_host(
+            hm.clone(),
+            slice.clone(),
+            hl,
+        ));
+        links.push(Box::new(gl));
+    }
+    let preds = crate::federation::predict::federated_predict(model, &vs.guest, &links);
+    for link in &links {
+        link.send(ToHost::Shutdown);
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow!("predict host thread panicked"))?;
+    }
+    let comm = links
+        .iter()
+        .map(|l| l.snapshot())
+        .fold(NetSnapshot::default(), |acc, s| acc.add(&s));
+    Ok(PredictReport::new(
+        preds,
+        model.pred_width,
+        vs.n(),
+        wall0.elapsed().as_secs_f64(),
+        comm,
+        "in-memory",
+    ))
+}
+
+/// Batched federated inference against remote `sbp serve-predict` hosts
+/// over framed TCP, one address per host party in party order.
+pub fn predict_federated_tcp(
+    model: &GuestModel,
+    guest_slice: &crate::data::dataset::PartySlice,
+    addrs: &[String],
+) -> Result<PredictReport> {
+    let wall0 = std::time::Instant::now();
+    let suite = CipherSuite::new_plain(64); // inference frames carry no ciphertexts
+    let mut links: Vec<Box<dyn GuestTransport>> = Vec::with_capacity(addrs.len());
+    for addr in addrs {
+        let t = TcpGuestTransport::connect(addr, suite.clone())
+            .map_err(|e| anyhow!("connecting to predict host at {addr}: {e}"))?;
+        links.push(Box::new(t));
+    }
+    let preds = crate::federation::predict::federated_predict(model, guest_slice, &links);
+    for link in &links {
+        link.send(ToHost::Shutdown);
+    }
+    let comm = links
+        .iter()
+        .map(|l| l.snapshot())
+        .fold(NetSnapshot::default(), |acc, s| acc.add(&s));
+    Ok(PredictReport::new(
+        preds,
+        model.pred_width,
+        guest_slice.n,
+        wall0.elapsed().as_secs_f64(),
+        comm,
+        "tcp",
+    ))
 }
 
 /// Train the centralized (XGBoost-style) local baseline on the

@@ -26,14 +26,17 @@ impl std::fmt::Debug for BigUint {
 }
 
 impl BigUint {
+    /// The value 0.
     pub fn zero() -> Self {
         Self { limbs: Vec::new() }
     }
 
+    /// The value 1.
     pub fn one() -> Self {
         Self { limbs: vec![1] }
     }
 
+    /// From a u64.
     pub fn from_u64(v: u64) -> Self {
         if v == 0 {
             Self::zero()
@@ -42,6 +45,7 @@ impl BigUint {
         }
     }
 
+    /// From a u128.
     pub fn from_u128(v: u128) -> Self {
         let lo = v as u64;
         let hi = (v >> 64) as u64;
@@ -50,6 +54,7 @@ impl BigUint {
         out
     }
 
+    /// From little-endian 64-bit limbs (normalized).
     pub fn from_limbs(limbs: Vec<u64>) -> Self {
         let mut out = Self { limbs };
         out.normalize();
@@ -63,16 +68,19 @@ impl BigUint {
         }
     }
 
+    /// Is this 0?
     #[inline]
     pub fn is_zero(&self) -> bool {
         self.limbs.is_empty()
     }
 
+    /// Is this 1?
     #[inline]
     pub fn is_one(&self) -> bool {
         self.limbs.len() == 1 && self.limbs[0] == 1
     }
 
+    /// Is this even?
     #[inline]
     pub fn is_even(&self) -> bool {
         self.limbs.first().map(|l| l & 1 == 0).unwrap_or(true)
@@ -92,10 +100,12 @@ impl BigUint {
         self.limbs.get(limb).map(|l| (l >> off) & 1 == 1).unwrap_or(false)
     }
 
+    /// Lowest 64 bits.
     pub fn low_u64(&self) -> u64 {
         self.limbs.first().copied().unwrap_or(0)
     }
 
+    /// Lowest 128 bits.
     pub fn low_u128(&self) -> u128 {
         let lo = self.low_u64() as u128;
         let hi = self.limbs.get(1).copied().unwrap_or(0) as u128;
@@ -104,6 +114,7 @@ impl BigUint {
 
     // ---------------------------------------------------------------- cmp
 
+    /// Magnitude comparison.
     pub fn cmp_big(&self, other: &Self) -> Ordering {
         if self.limbs.len() != other.limbs.len() {
             return self.limbs.len().cmp(&other.limbs.len());
@@ -119,6 +130,7 @@ impl BigUint {
 
     // ------------------------------------------------------------ add/sub
 
+    /// `self + other`.
     pub fn add(&self, other: &Self) -> Self {
         let (a, b) = if self.limbs.len() >= other.limbs.len() {
             (&self.limbs, &other.limbs)
@@ -140,6 +152,7 @@ impl BigUint {
         Self::from_limbs(out)
     }
 
+    /// `self + v`.
     pub fn add_u64(&self, v: u64) -> Self {
         self.add(&Self::from_u64(v))
     }
@@ -162,6 +175,7 @@ impl BigUint {
 
     // ---------------------------------------------------------------- mul
 
+    /// `self · other` (schoolbook).
     pub fn mul(&self, other: &Self) -> Self {
         if self.is_zero() || other.is_zero() {
             return Self::zero();
@@ -227,6 +241,7 @@ impl BigUint {
         Self { limbs }
     }
 
+    /// `self · v`.
     pub fn mul_u64(&self, v: u64) -> Self {
         if v == 0 || self.is_zero() {
             return Self::zero();
@@ -252,6 +267,7 @@ impl BigUint {
 
     // --------------------------------------------------------------- shifts
 
+    /// `self << bits`.
     pub fn shl(&self, bits: usize) -> Self {
         if self.is_zero() {
             return Self::zero();
@@ -274,6 +290,7 @@ impl BigUint {
         Self::from_limbs(out)
     }
 
+    /// `self >> bits`.
     pub fn shr(&self, bits: usize) -> Self {
         let limb_shift = bits / 64;
         if limb_shift >= self.limbs.len() {
@@ -329,6 +346,7 @@ impl BigUint {
         self.div_rem_knuth(divisor)
     }
 
+    /// Quotient and remainder by a u64 divisor.
     pub fn div_rem_u64(&self, d: u64) -> (Self, u64) {
         assert!(d != 0);
         let mut out = vec![0u64; self.limbs.len()];
@@ -401,12 +419,14 @@ impl BigUint {
         (Self::from_limbs(q), rem)
     }
 
+    /// `self mod m`.
     pub fn rem(&self, m: &Self) -> Self {
         self.div_rem(m).1
     }
 
     // --------------------------------------------------------- modular ops
 
+    /// `(self + other) mod m` (inputs already reduced).
     pub fn add_mod(&self, other: &Self, m: &Self) -> Self {
         let s = self.add(other);
         if s.cmp_big(m) == Ordering::Less {
@@ -425,6 +445,7 @@ impl BigUint {
         }
     }
 
+    /// `(self · other) mod m`.
     pub fn mul_mod(&self, other: &Self, m: &Self) -> Self {
         self.mul(other).rem(m)
     }
@@ -452,6 +473,7 @@ impl BigUint {
         result
     }
 
+    /// Greatest common divisor (binary GCD).
     pub fn gcd(&self, other: &Self) -> Self {
         let (mut a, mut b) = (self.clone(), other.clone());
         while !b.is_zero() {
@@ -534,6 +556,7 @@ impl BigUint {
 
     // ----------------------------------------------------------- serialization
 
+    /// Lowercase hex, no leading zeros.
     pub fn to_hex(&self) -> String {
         if self.is_zero() {
             return "0".to_string();
@@ -545,6 +568,7 @@ impl BigUint {
         s
     }
 
+    /// Parse lowercase/uppercase hex.
     pub fn from_hex(s: &str) -> Option<Self> {
         let s = s.trim_start_matches("0x");
         if s.is_empty() || !s.chars().all(|c| c.is_ascii_hexdigit()) {
@@ -562,6 +586,7 @@ impl BigUint {
         Some(Self::from_limbs(limbs))
     }
 
+    /// Big-endian bytes, no leading zeros (empty for 0).
     pub fn to_bytes_be(&self) -> Vec<u8> {
         if self.is_zero() {
             return vec![0];
@@ -575,6 +600,7 @@ impl BigUint {
         out
     }
 
+    /// From big-endian bytes.
     pub fn from_bytes_be(bytes: &[u8]) -> Self {
         let mut limbs = Vec::with_capacity(bytes.len().div_ceil(8));
         let mut chunk_end = bytes.len();

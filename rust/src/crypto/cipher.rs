@@ -18,7 +18,9 @@ use std::sync::Arc;
 /// A ciphertext under whichever schema the suite was built with.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Ct {
+    /// Paillier ciphertext (Montgomery form mod n²).
     Paillier(PaillierCt),
+    /// Iterative-affine ciphertext (residue mod n).
     Affine(AffineCt),
     /// Plaintext passthrough (mock cipher for tests and the "no crypto
     /// overhead" ablation lower bound). Value stored mod 2^bits.
@@ -28,23 +30,34 @@ pub enum Ct {
 /// Global homomorphic-operation counters (process-wide, reset per bench).
 #[derive(Debug, Default)]
 pub struct OpCounters {
+    /// Encryptions performed.
     pub encrypts: AtomicU64,
+    /// Decryptions performed.
     pub decrypts: AtomicU64,
+    /// Homomorphic additions.
     pub adds: AtomicU64,
+    /// Homomorphic scalar multiplications (incl. pow-2 shifts).
     pub scalar_muls: AtomicU64,
+    /// Homomorphic negations.
     pub negates: AtomicU64,
 }
 
 /// Snapshot of [`OpCounters`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct OpSnapshot {
+    /// Encryptions performed.
     pub encrypts: u64,
+    /// Decryptions performed.
     pub decrypts: u64,
+    /// Homomorphic additions.
     pub adds: u64,
+    /// Homomorphic scalar multiplications (incl. pow-2 shifts).
     pub scalar_muls: u64,
+    /// Homomorphic negations.
     pub negates: u64,
 }
 
+/// The process-wide homomorphic-operation counters.
 pub static OPS: OpCounters = OpCounters {
     encrypts: AtomicU64::new(0),
     decrypts: AtomicU64::new(0),
@@ -54,6 +67,7 @@ pub static OPS: OpCounters = OpCounters {
 };
 
 impl OpCounters {
+    /// Point-in-time copy of the counters.
     pub fn snapshot(&self) -> OpSnapshot {
         OpSnapshot {
             encrypts: self.encrypts.load(Ordering::Relaxed),
@@ -64,6 +78,7 @@ impl OpCounters {
         }
     }
 
+    /// Zero all counters.
     pub fn reset(&self) {
         self.encrypts.store(0, Ordering::Relaxed);
         self.decrypts.store(0, Ordering::Relaxed);
@@ -74,6 +89,7 @@ impl OpCounters {
 }
 
 impl OpSnapshot {
+    /// Counter deltas since `earlier`.
     pub fn diff(&self, earlier: &OpSnapshot) -> OpSnapshot {
         OpSnapshot {
             encrypts: self.encrypts - earlier.encrypts,
@@ -89,14 +105,17 @@ impl OpSnapshot {
 /// "public side" clone handed to hosts can perform only homomorphic ops.
 #[derive(Clone, Debug)]
 pub enum CipherSuite {
+    /// Paillier (the paper's default schema).
     Paillier {
         pk: Arc<PaillierPub>,
         sk: Option<Arc<PaillierSk>>,
     },
+    /// FATE-style iterative affine cipher.
     Affine {
         pubp: AffinePub,
         key: Option<Arc<AffineKey>>,
     },
+    /// No encryption — tests and ablation lower bound only.
     Plain {
         bits: usize,
         modulus: BigUint,
@@ -104,11 +123,13 @@ pub enum CipherSuite {
 }
 
 impl CipherSuite {
+    /// Generate a fresh Paillier suite (guest side, with secret key).
     pub fn new_paillier(key_bits: usize, rng: &mut ChaCha20Rng) -> Self {
         let (pk, sk) = paillier_keygen(key_bits, rng);
         CipherSuite::Paillier { pk: Arc::new(pk), sk: Some(Arc::new(sk)) }
     }
 
+    /// Generate a fresh iterative-affine suite (guest side).
     pub fn new_affine(key_bits: usize, rng: &mut ChaCha20Rng) -> Self {
         let key = AffineKey::generate(key_bits, rng);
         CipherSuite::Affine { pubp: key.public(), key: Some(Arc::new(key)) }
@@ -134,6 +155,7 @@ impl CipherSuite {
         }
     }
 
+    /// Schema name for logs and reports.
     pub fn kind_name(&self) -> &'static str {
         match self {
             CipherSuite::Paillier { .. } => "paillier",
@@ -160,6 +182,7 @@ impl CipherSuite {
         }
     }
 
+    /// Encrypt one plaintext (guest side).
     pub fn encrypt(&self, m: &BigUint, rng: &mut ChaCha20Rng) -> Ct {
         OPS.encrypts.fetch_add(1, Ordering::Relaxed);
         match self {
@@ -195,6 +218,7 @@ impl CipherSuite {
         out
     }
 
+    /// Decrypt one ciphertext (requires the secret material).
     pub fn decrypt(&self, c: &Ct) -> BigUint {
         OPS.decrypts.fetch_add(1, Ordering::Relaxed);
         match (self, c) {
@@ -227,6 +251,7 @@ impl CipherSuite {
         out
     }
 
+    /// Homomorphic addition of plaintexts.
     #[inline]
     pub fn add(&self, a: &Ct, b: &Ct) -> Ct {
         OPS.adds.fetch_add(1, Ordering::Relaxed);
@@ -244,6 +269,7 @@ impl CipherSuite {
         }
     }
 
+    /// In-place homomorphic addition.
     #[inline]
     pub fn add_assign(&self, a: &mut Ct, b: &Ct) {
         OPS.adds.fetch_add(1, Ordering::Relaxed);
@@ -261,6 +287,7 @@ impl CipherSuite {
         }
     }
 
+    /// Homomorphic scalar multiplication `Enc(k·m)`.
     pub fn scalar_mul(&self, c: &Ct, k: &BigUint) -> Ct {
         OPS.scalar_muls.fetch_add(1, Ordering::Relaxed);
         match (self, c) {
@@ -337,6 +364,7 @@ impl CipherSuite {
         }
     }
 
+    /// Does this suite hold secret key material (guest side)?
     pub fn has_secret(&self) -> bool {
         match self {
             CipherSuite::Paillier { sk, .. } => sk.is_some(),

@@ -19,6 +19,7 @@ pub struct CompressPlan {
 }
 
 impl CompressPlan {
+    /// Fill the plaintext space: `η_s = ⌊ι / b_gh⌋` (eq. 14).
     pub fn derive(plaintext_bits: usize, b_gh: usize) -> Self {
         Self { capacity: (plaintext_bits / b_gh).max(1), b_gh }
     }
@@ -34,8 +35,11 @@ impl CompressPlan {
 /// sample count the guest needs for the offset correction.
 #[derive(Clone, Debug)]
 pub struct SplitStatCt {
+    /// Ciphertext of the left-side packed Σgh.
     pub ct: Ct,
+    /// Shuffled split-info id (the host's split handle).
     pub id: u32,
+    /// Left-side sample count (public in the protocol).
     pub sample_count: u32,
 }
 
@@ -43,8 +47,11 @@ pub struct SplitStatCt {
 /// (most-significant = first pushed), plus their ids and counts.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CtPackage {
+    /// One ciphertext carrying ≤ η_s shifted statistics.
     pub ct: Ct,
+    /// Split ids, most-significant slot first.
     pub ids: Vec<u32>,
+    /// Left-side sample counts, aligned with `ids`.
     pub counts: Vec<u32>,
 }
 
@@ -77,9 +84,13 @@ pub fn compress(suite: &CipherSuite, plan: &CompressPlan, stats: &[SplitStatCt])
 /// One recovered split statistic on the guest.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SplitStatPlain {
+    /// Split id (host split handle).
     pub id: u32,
+    /// Left-side sample count.
     pub sample_count: u32,
+    /// Recovered left-side Σg (offset removed).
     pub g_sum: f64,
+    /// Recovered left-side Σh.
     pub h_sum: f64,
 }
 

@@ -9,8 +9,10 @@ use super::bigint::BigUint;
 /// Default fixed-point precision (the paper's `r = 53`).
 pub const DEFAULT_PRECISION: u32 = 53;
 
+/// Fixed-point encoder with precision `r` bits.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FixedPointEncoder {
+    /// Fractional bits `r` (eq. 11).
     pub precision: u32,
 }
 
@@ -21,6 +23,7 @@ impl Default for FixedPointEncoder {
 }
 
 impl FixedPointEncoder {
+    /// Encoder with the given precision (≤ 63).
     pub fn new(precision: u32) -> Self {
         assert!(precision <= 63, "precision too large");
         Self { precision }

@@ -40,7 +40,9 @@ pub struct AffineKey {
 /// Public parameters a host needs to operate on ciphertexts.
 #[derive(Clone, Debug)]
 pub struct AffinePub {
+    /// The shared modulus.
     pub n: BigUint,
+    /// Modulus bit length.
     pub key_bits: usize,
 }
 
@@ -68,6 +70,7 @@ impl AffineKey {
         Self { rounds, a, a_inv, n }
     }
 
+    /// The public parameters a host receives.
     pub fn public(&self) -> AffinePub {
         AffinePub { n: self.n.clone(), key_bits: self.n.bit_length() }
     }
@@ -89,28 +92,34 @@ impl AffineKey {
 }
 
 impl AffinePub {
+    /// Plaintext capacity ι in bits.
     pub fn plaintext_bits(&self) -> usize {
         self.n.bit_length() - 1
     }
 
+    /// Serialized ciphertext width in bytes.
     pub fn ct_byte_len(&self) -> usize {
         self.n.byte_len()
     }
 
+    /// Homomorphic addition (residue addition mod n).
     #[inline]
     pub fn add(&self, a: &AffineCt, b: &AffineCt) -> AffineCt {
         a.add_mod(b, &self.n)
     }
 
+    /// In-place homomorphic addition.
     #[inline]
     pub fn add_assign(&self, a: &mut AffineCt, b: &AffineCt) {
         *a = a.add_mod(b, &self.n);
     }
 
+    /// Homomorphic scalar multiplication.
     pub fn scalar_mul(&self, c: &AffineCt, k: &BigUint) -> AffineCt {
         c.mul_mod(k, &self.n)
     }
 
+    /// Homomorphic negation (`n − c`).
     pub fn negate(&self, c: &AffineCt) -> AffineCt {
         if c.is_zero() {
             BigUint::zero()
@@ -119,10 +128,12 @@ impl AffinePub {
         }
     }
 
+    /// `a − b` on plaintexts (true difference must be ≥ 0).
     pub fn sub(&self, a: &AffineCt, b: &AffineCt) -> AffineCt {
         a.sub_mod(b, &self.n)
     }
 
+    /// The additive identity.
     pub fn zero_ct(&self) -> AffineCt {
         BigUint::zero()
     }

@@ -57,6 +57,7 @@ impl MontCtx {
         Self { n, minv, r2: pad(&r2_big), one: pad(&one_big), m }
     }
 
+    /// Limb count of the modulus.
     #[inline]
     pub fn limbs(&self) -> usize {
         self.n

@@ -13,6 +13,7 @@ use super::encoding::FixedPointEncoder;
 /// Plan for packing scalar (binary-task) g/h pairs.
 #[derive(Clone, Debug)]
 pub struct GhPacker {
+    /// Fixed-point encoding of the raw statistics.
     pub enc: FixedPointEncoder,
     /// Offset added to every gradient so it is non-negative.
     pub g_off: f64,
@@ -64,6 +65,7 @@ impl GhPacker {
         ge.shl(self.b_h).add(&he)
     }
 
+    /// Pack every (g, h) pair of a vector.
     pub fn pack_all(&self, g: &[f64], h: &[f64]) -> Vec<BigUint> {
         g.iter().zip(h).map(|(&gi, &hi)| self.pack(gi, hi)).collect()
     }
@@ -86,6 +88,7 @@ impl GhPacker {
 /// space is already full), exactly as in the paper.
 #[derive(Clone, Debug)]
 pub struct MoPacker {
+    /// Per-class scalar packing layout.
     pub base: GhPacker,
     /// Number of classes.
     pub k: usize,

@@ -34,7 +34,9 @@ const OBF_DRAW: usize = 3;
 /// Public key + shared Montgomery context for n².
 #[derive(Clone, Debug)]
 pub struct PaillierPub {
+    /// Modulus `n = p·q`.
     pub n: BigUint,
+    /// `n²`, the ciphertext modulus.
     pub n_squared: BigUint,
     /// Montgomery context modulo n² — shared by every ciphertext op.
     pub ctx: Arc<MontCtx>,
@@ -55,7 +57,9 @@ pub struct PaillierPub {
 /// Secret key (CRT form).
 #[derive(Clone, Debug)]
 pub struct PaillierSk {
+    /// First prime factor.
     pub p: BigUint,
+    /// Second prime factor.
     pub q: BigUint,
     p_squared: BigUint,
     q_squared: BigUint,
@@ -224,6 +228,7 @@ impl PaillierPub {
         self.ctx.mont_mul(a, b)
     }
 
+    /// In-place homomorphic addition.
     #[inline]
     pub fn add_assign(&self, a: &mut PaillierCt, b: &PaillierCt) {
         self.ctx.mont_mul_assign(a, b);
@@ -261,6 +266,7 @@ impl PaillierPub {
         self.ctx.from_mont(c).to_bytes_be()
     }
 
+    /// Rebuild a ciphertext from its standard-form wire bytes.
     pub fn ct_from_bytes(&self, bytes: &[u8]) -> PaillierCt {
         self.ctx.to_mont(&BigUint::from_bytes_be(bytes))
     }

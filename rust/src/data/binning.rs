@@ -8,6 +8,7 @@ use super::dataset::PartySlice;
 /// of bin `k`; the last bin is unbounded.
 #[derive(Clone, Debug)]
 pub struct FeatureBins {
+    /// Ascending inclusive upper bounds; `edges.len() + 1` bins.
     pub edges: Vec<f64>,
     /// The bin that value 0.0 falls into (for sparse-aware histograms).
     pub zero_bin: u8,
@@ -31,6 +32,7 @@ impl FeatureBins {
         lo as u8
     }
 
+    /// Number of bins (edge count + 1).
     pub fn n_bins(&self) -> usize {
         self.edges.len() + 1
     }
@@ -48,22 +50,29 @@ impl FeatureBins {
 /// A party's binned matrix: row-major `n × d` of bin indices, plus specs.
 #[derive(Clone, Debug)]
 pub struct BinnedMatrix {
+    /// Row-major `n × d` bin indices.
     pub bins: Vec<u8>,
+    /// Number of rows.
     pub n: usize,
+    /// Number of features.
     pub d: usize,
+    /// Per-feature bin edges and zero-bin metadata.
     pub specs: Vec<FeatureBins>,
 }
 
 impl BinnedMatrix {
+    /// Bin index of one cell.
     #[inline]
     pub fn bin(&self, row: usize, col: usize) -> u8 {
         self.bins[row * self.d + col]
     }
 
+    /// One row of bin indices.
     pub fn row(&self, row: usize) -> &[u8] {
         &self.bins[row * self.d..(row + 1) * self.d]
     }
 
+    /// Largest per-feature bin count.
     pub fn max_bins(&self) -> usize {
         self.specs.iter().map(|s| s.n_bins()).max().unwrap_or(1)
     }

@@ -6,7 +6,9 @@
 pub struct Dataset {
     /// Row-major `n × d` feature values.
     pub x: Vec<f64>,
+    /// Number of rows.
     pub n: usize,
+    /// Number of features.
     pub d: usize,
     /// Labels: class index for classification (0.0 / 1.0 for binary).
     pub y: Vec<f64>,
@@ -17,17 +19,20 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Build a dataset, checking shape invariants.
     pub fn new(x: Vec<f64>, n: usize, d: usize, y: Vec<f64>, n_classes: usize) -> Self {
         assert_eq!(x.len(), n * d, "x must be n×d");
         assert_eq!(y.len(), n, "y must have n entries");
         Self { x, n, d, y, n_classes, name: String::from("unnamed") }
     }
 
+    /// One feature value.
     #[inline]
     pub fn value(&self, row: usize, col: usize) -> f64 {
         self.x[row * self.d + col]
     }
 
+    /// One full feature row.
     pub fn row(&self, row: usize) -> &[f64] {
         &self.x[row * self.d..(row + 1) * self.d]
     }
@@ -47,15 +52,18 @@ pub struct PartySlice {
     pub cols: Vec<usize>,
     /// Row-major `n × cols.len()` matrix.
     pub x: Vec<f64>,
+    /// Number of rows (same on every party).
     pub n: usize,
 }
 
 impl PartySlice {
+    /// Width of this party's feature slice.
     #[inline]
     pub fn d(&self) -> usize {
         self.cols.len()
     }
 
+    /// One feature value by party-local column index.
     #[inline]
     pub fn value(&self, row: usize, local_col: usize) -> f64 {
         self.x[row * self.d() + local_col]
@@ -67,10 +75,15 @@ impl PartySlice {
 /// guest-features / host-features split.
 #[derive(Clone, Debug)]
 pub struct VerticalSplit {
+    /// The guest's feature slice (the label owner).
     pub guest: PartySlice,
+    /// One feature slice per host party.
     pub hosts: Vec<PartySlice>,
+    /// Labels (held by the guest only in the protocol).
     pub y: Vec<f64>,
+    /// Number of classes (2 = binary).
     pub n_classes: usize,
+    /// Dataset preset name.
     pub name: String,
 }
 
@@ -114,6 +127,7 @@ impl VerticalSplit {
         }
     }
 
+    /// Number of rows.
     pub fn n(&self) -> usize {
         self.guest.n
     }

@@ -11,7 +11,9 @@ use crate::util::rng::Xoshiro256;
 /// applied to each selected instance's g and h.
 #[derive(Clone, Debug)]
 pub struct GossSample {
+    /// Selected instance ids (ascending).
     pub indices: Vec<u32>,
+    /// Per-selected-instance g/h multiplier.
     pub weights: Vec<f64>,
 }
 

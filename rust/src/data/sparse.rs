@@ -46,10 +46,15 @@ pub fn maybe_sparse(slice: &PartySlice, bm: &BinnedMatrix, enabled: bool) -> Opt
 /// matrix: for each row, (feature, bin) pairs.
 #[derive(Clone, Debug)]
 pub struct SparseBinned {
+    /// CSR row offsets into `feat_idx`/`bin_idx`.
     pub row_ptr: Vec<u32>,
+    /// Feature index per stored (non-zero) entry.
     pub feat_idx: Vec<u16>,
+    /// Bin index per stored entry.
     pub bin_idx: Vec<u8>,
+    /// Number of rows.
     pub n: usize,
+    /// Number of features.
     pub d: usize,
     /// Per-feature zero bin (where all omitted entries would land).
     pub zero_bins: Vec<u8>,
@@ -90,6 +95,7 @@ impl SparseBinned {
         self.feat_idx[lo..hi].iter().copied().zip(self.bin_idx[lo..hi].iter().copied())
     }
 
+    /// Number of stored (non-zero-bin) entries.
     pub fn nnz(&self) -> usize {
         self.feat_idx.len()
     }

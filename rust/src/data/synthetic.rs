@@ -14,10 +14,15 @@ use crate::util::rng::Xoshiro256;
 /// Shape specification for a synthetic dataset.
 #[derive(Clone, Debug)]
 pub struct SyntheticSpec {
+    /// Preset name (matches the paper's Table 2).
     pub name: String,
+    /// Instance count.
     pub n: usize,
+    /// Total feature count.
     pub d: usize,
+    /// Features owned by the guest in the vertical split.
     pub guest_d: usize,
+    /// Number of classes (2 = binary).
     pub n_classes: usize,
     /// Fraction of entries forced to exactly 0.0 (sparse datasets).
     pub sparsity: f64,

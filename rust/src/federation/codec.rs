@@ -37,10 +37,15 @@ use crate::federation::message::{HistTask, NodeStats, ToGuest, ToHost};
 use std::io::{Read, Write};
 use std::sync::Arc;
 
+/// How per-instance statistics are encoded into plaintexts (see the
+/// module docs for the three layouts).
 #[derive(Clone, Debug)]
 pub enum StatCodec {
+    /// GH packing: one plaintext per instance (Alg. 3).
     Packed(GhPacker),
+    /// SecureBoost baseline: separate g and h plaintexts.
     Separate(GhPacker),
+    /// Multi-class packing (Alg. 7).
     Multi(MoPacker),
 }
 
@@ -140,6 +145,7 @@ pub enum WireError {
     Malformed(&'static str),
     /// The length prefix exceeds [`MAX_FRAME_LEN`].
     FrameTooLarge(u64),
+    /// An underlying transport I/O error.
     Io(std::io::Error),
 }
 
@@ -625,6 +631,13 @@ pub fn encode_to_host(suite: &CipherSuite, ct_len: usize, msg: &ToHost) -> Vec<u
         }
         ToHost::FinishTree { tree_id } => put_u32(&mut out, *tree_id),
         ToHost::DumpSplitTable | ToHost::Shutdown => {}
+        ToHost::PredictRoute { queries } => {
+            put_u32(&mut out, queries.len() as u32);
+            for (row, handle) in queries {
+                put_u32(&mut out, *row);
+                put_u32(&mut out, *handle);
+            }
+        }
     }
     debug_assert_eq!(out.len() + FRAME_HEADER_LEN, to_host_wire_len(msg, ct_len));
     out
@@ -719,6 +732,14 @@ pub fn decode_to_host(
         5 => ToHost::FinishTree { tree_id: r.u32()? },
         6 => ToHost::DumpSplitTable,
         7 => ToHost::Shutdown,
+        8 => {
+            let n = r.seq_len(8)?;
+            let mut queries = Vec::with_capacity(n);
+            for _ in 0..n {
+                queries.push((r.u32()?, r.u32()?));
+            }
+            ToHost::PredictRoute { queries }
+        }
         t => return Err(WireError::BadTag { what: "to-host message", tag: t }),
     };
     r.finish()?;
@@ -752,6 +773,11 @@ pub fn encode_to_guest(suite: &CipherSuite, ct_len: usize, msg: &ToGuest) -> Vec
             }
         }
         ToGuest::Ack => {}
+        ToGuest::RouteAnswers { n, bits } => {
+            assert_eq!(bits.len(), (*n as usize).div_ceil(8), "answer bitmap sized to n");
+            put_u32(&mut out, *n);
+            out.extend_from_slice(bits);
+        }
     }
     debug_assert_eq!(out.len() + FRAME_HEADER_LEN, to_guest_wire_len(msg, ct_len));
     out
@@ -794,6 +820,14 @@ pub fn decode_to_guest(
             ToGuest::SplitTable { entries }
         }
         3 => ToGuest::Ack,
+        4 => {
+            let n = r.u32()?;
+            let n_bytes = (n as usize).div_ceil(8);
+            if n_bytes > r.remaining() {
+                return Err(WireError::Malformed("answer bitmap exceeds frame"));
+            }
+            ToGuest::RouteAnswers { n, bits: r.take(n_bytes)?.to_vec() }
+        }
         t => return Err(WireError::BadTag { what: "to-guest message", tag: t }),
     };
     r.finish()?;
@@ -832,6 +866,7 @@ pub fn to_host_wire_len(msg: &ToHost, ct_len: usize) -> usize {
             ToHost::SyncAssign { left, .. } => 16 + 4 + left.len() * 4,
             ToHost::FinishTree { .. } => 4,
             ToHost::DumpSplitTable | ToHost::Shutdown => 0,
+            ToHost::PredictRoute { queries } => 4 + queries.len() * 8,
         }
 }
 
@@ -850,6 +885,7 @@ pub fn to_guest_wire_len(msg: &ToGuest, ct_len: usize) -> usize {
             ToGuest::LeftInstances { left, .. } => 8 + 4 + left.len() * 4,
             ToGuest::SplitTable { entries } => 4 + entries.len() * 13,
             ToGuest::Ack => 0,
+            ToGuest::RouteAnswers { n, .. } => 4 + (*n as usize).div_ceil(8),
         }
 }
 
@@ -1005,6 +1041,33 @@ mod tests {
         assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"hello");
         assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"");
         assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn predict_messages_roundtrip_and_match_wire_len() {
+        let suite = CipherSuite::new_plain(128);
+        let ct_len = suite.ct_byte_len();
+        let q = ToHost::PredictRoute { queries: vec![(0, 5), (17, 2), (9, 9)] };
+        let payload = encode_to_host(&suite, ct_len, &q);
+        assert_eq!(payload.len() + FRAME_HEADER_LEN, to_host_wire_len(&q, ct_len));
+        // PredictRoute carries no ciphertexts, so it decodes without Setup
+        let back = decode_to_host(None, &payload).unwrap();
+        let ToHost::PredictRoute { queries } = back else { panic!("wrong kind") };
+        assert_eq!(queries, vec![(0, 5), (17, 2), (9, 9)]);
+
+        for n in [0u32, 1, 7, 8, 9, 64] {
+            let bits = vec![0xA5u8; (n as usize).div_ceil(8)];
+            let a = ToGuest::RouteAnswers { n, bits: bits.clone() };
+            let payload = encode_to_guest(&suite, ct_len, &a);
+            assert_eq!(payload.len() + FRAME_HEADER_LEN, to_guest_wire_len(&a, ct_len));
+            let back = decode_to_guest(&suite, ct_len, &payload).unwrap();
+            assert_eq!(back, ToGuest::RouteAnswers { n, bits });
+        }
+        // truncated bitmap rejected, not panicked
+        let a = ToGuest::RouteAnswers { n: 64, bits: vec![0u8; 8] };
+        let mut payload = encode_to_guest(&suite, ct_len, &a);
+        payload.truncate(payload.len() - 3);
+        assert!(decode_to_guest(&suite, ct_len, &payload).is_err());
     }
 
     #[test]

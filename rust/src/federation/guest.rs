@@ -52,13 +52,19 @@ impl Candidate {
 
 /// Everything the guest accumulates during a training run.
 pub struct GuestOutcome {
+    /// The boosted trees, in build order.
     pub trees: Vec<Tree>,
     /// Class tag per tree (0 for binary / multi-output trees).
     pub tree_classes: Vec<usize>,
+    /// Wall time per tree (tree building only).
     pub tree_seconds: Vec<f64>,
+    /// Final raw margins over the training set.
     pub preds: Vec<f64>,
+    /// Training loss after each epoch.
     pub loss_curve: Vec<f64>,
+    /// AUC (binary) or accuracy (multi-class) on the training set.
     pub train_metric: f64,
+    /// Guest-side phase timings.
     pub timer: PhaseTimer,
 }
 
@@ -77,10 +83,13 @@ pub struct GuestParty<'a> {
     /// told the hosts — bit widths are part of the protocol, paper §4.5).
     codec: StatCodec,
     compress: Option<CompressPlan>,
+    /// Guest-side phase timings (merged into the train report).
     pub timer: PhaseTimer,
 }
 
 impl<'a> GuestParty<'a> {
+    /// Build a guest over pre-connected host links (does not talk yet;
+    /// call [`Self::setup_hosts`] before [`Self::train`]).
     pub fn new(
         vs: &'a VerticalSplit,
         cfg: &'a TrainConfig,

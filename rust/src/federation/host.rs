@@ -27,6 +27,7 @@ use std::sync::{Arc, Mutex};
 /// Host-side per-run state, generic over the transport carrying the
 /// guest's protocol messages.
 pub struct HostParty<T: HostTransport> {
+    /// This host's party index.
     pub id: u8,
     bm: BinnedMatrix,
     sb: Option<SparseBinned>,
@@ -56,6 +57,7 @@ pub struct HostParty<T: HostTransport> {
 }
 
 impl<T: HostTransport> HostParty<T> {
+    /// Build a host party over its binned feature slice and transport.
     pub fn new(
         id: u8,
         bm: BinnedMatrix,
@@ -155,6 +157,25 @@ impl<T: HostTransport> HostParty<T> {
                 }
                 ToHost::DumpSplitTable => {
                     self.link.send(ToGuest::SplitTable { entries: self.split_table.clone() });
+                }
+                ToHost::PredictRoute { queries } => {
+                    // in-session inference against the just-trained split
+                    // table: binned routing `bin ≤ b` is exactly the raw
+                    // rule `x ≤ threshold` the exported model applies
+                    let n = queries.len();
+                    let mut bits = vec![0u8; n.div_ceil(8)];
+                    for (i, (row, handle)) in queries.iter().enumerate() {
+                        let left = (*row as usize) < self.bm.n
+                            && (*handle as usize) < self.split_table.len()
+                            && {
+                                let (f, b, _thr) = self.split_table[*handle as usize];
+                                self.bm.bin(*row as usize, f as usize) <= b
+                            };
+                        if left {
+                            bits[i / 8] |= 1 << (i % 8);
+                        }
+                    }
+                    self.link.send(ToGuest::RouteAnswers { n: n as u32, bits });
                 }
                 ToHost::Shutdown => break,
             }

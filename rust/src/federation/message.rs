@@ -35,6 +35,7 @@ pub enum HistTask {
 }
 
 impl HistTask {
+    /// The node this task builds.
     pub fn node(&self) -> u32 {
         match self {
             HistTask::Direct { node } => *node,
@@ -48,20 +49,31 @@ impl HistTask {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u8)]
 pub enum ToHostKind {
+    /// One-time cipher/codec setup.
     Setup = 0,
+    /// Encrypted packed g/h for one boosting tree.
     StartTree = 1,
+    /// Histogram tasks for one tree layer.
     BuildLayer = 2,
+    /// Apply a winning host split to a node's members.
     ApplySplit = 3,
+    /// Synchronize a node's left/right assignment.
     SyncAssign = 4,
+    /// Free per-tree state.
     FinishTree = 5,
+    /// Reveal the split table to the driver (evaluation only).
     DumpSplitTable = 6,
+    /// End the session.
     Shutdown = 7,
+    /// Batched inference routing queries (federated prediction phase).
+    PredictRoute = 8,
 }
 
 /// Number of guest→host message kinds.
-pub const TO_HOST_KINDS: usize = 8;
+pub const TO_HOST_KINDS: usize = 9;
 
 impl ToHostKind {
+    /// Every guest→host kind, in tag order.
     pub const ALL: [ToHostKind; TO_HOST_KINDS] = [
         ToHostKind::Setup,
         ToHostKind::StartTree,
@@ -71,12 +83,15 @@ impl ToHostKind {
         ToHostKind::FinishTree,
         ToHostKind::DumpSplitTable,
         ToHostKind::Shutdown,
+        ToHostKind::PredictRoute,
     ];
 
+    /// Wire tag byte / per-kind counter index.
     pub fn index(self) -> usize {
         self as usize
     }
 
+    /// Human-readable name for traffic reports.
     pub fn name(self) -> &'static str {
         match self {
             ToHostKind::Setup => "Setup",
@@ -87,6 +102,7 @@ impl ToHostKind {
             ToHostKind::FinishTree => "FinishTree",
             ToHostKind::DumpSplitTable => "DumpSplitTable",
             ToHostKind::Shutdown => "Shutdown",
+            ToHostKind::PredictRoute => "PredictRoute",
         }
     }
 }
@@ -95,33 +111,44 @@ impl ToHostKind {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u8)]
 pub enum ToGuestKind {
+    /// Split statistics for a layer's nodes.
     LayerStats = 0,
+    /// Instances routed left under a host split.
     LeftInstances = 1,
+    /// The host's split table (evaluation only).
     SplitTable = 2,
+    /// Barrier acknowledgement.
     Ack = 3,
+    /// Bit-packed answers to a `PredictRoute` batch.
+    RouteAnswers = 4,
 }
 
 /// Number of host→guest message kinds.
-pub const TO_GUEST_KINDS: usize = 4;
+pub const TO_GUEST_KINDS: usize = 5;
 
 impl ToGuestKind {
+    /// Every host→guest kind, in tag order.
     pub const ALL: [ToGuestKind; TO_GUEST_KINDS] = [
         ToGuestKind::LayerStats,
         ToGuestKind::LeftInstances,
         ToGuestKind::SplitTable,
         ToGuestKind::Ack,
+        ToGuestKind::RouteAnswers,
     ];
 
+    /// Wire tag byte / per-kind counter index.
     pub fn index(self) -> usize {
         self as usize
     }
 
+    /// Human-readable name for traffic reports.
     pub fn name(self) -> &'static str {
         match self {
             ToGuestKind::LayerStats => "LayerStats",
             ToGuestKind::LeftInstances => "LeftInstances",
             ToGuestKind::SplitTable => "SplitTable",
             ToGuestKind::Ack => "Ack",
+            ToGuestKind::RouteAnswers => "RouteAnswers",
         }
     }
 }
@@ -160,10 +187,25 @@ pub enum ToHost {
     /// Evaluation-only: reveal the split table to the driver (out of
     /// protocol; used by the experiment harness for inference).
     DumpSplitTable,
+    /// End the session.
     Shutdown,
+    /// Federated inference: for each `(record, handle)` query, does the
+    /// named record go *left* under the host-owned split `handle`? One
+    /// message carries a whole batch level's queries, so a batch of
+    /// samples advances one host-routing step per round trip.
+    ///
+    /// Privacy: the host learns which of its splits are consulted for
+    /// which record ids (the same access pattern training's `ApplySplit`
+    /// already reveals), but never the tree position, other parties'
+    /// routing decisions, leaf values, or the final prediction.
+    PredictRoute {
+        /// `(record id, split handle)` per query, in query order.
+        queries: Vec<(u32, u32)>,
+    },
 }
 
 impl ToHost {
+    /// Wire tag / counter kind of this message.
     pub fn kind(&self) -> ToHostKind {
         match self {
             ToHost::Setup { .. } => ToHostKind::Setup,
@@ -174,6 +216,7 @@ impl ToHost {
             ToHost::FinishTree { .. } => ToHostKind::FinishTree,
             ToHost::DumpSplitTable => ToHostKind::DumpSplitTable,
             ToHost::Shutdown => ToHostKind::Shutdown,
+            ToHost::PredictRoute { .. } => ToHostKind::PredictRoute,
         }
     }
 }
@@ -181,6 +224,7 @@ impl ToHost {
 /// A host's split statistics for one node, possibly compressed.
 #[derive(Debug, PartialEq)]
 pub enum NodeStats {
+    /// Cipher-compressed packages (Alg. 4), η_s stats per ciphertext.
     Compressed(Vec<CtPackage>),
     /// Uncompressed: (id, sample_count, n_k ciphertexts) per candidate.
     Raw(Vec<(u32, u32, Vec<Ct>)>),
@@ -197,15 +241,27 @@ pub enum ToGuest {
     SplitTable { entries: Vec<(u32, u8, f64)> },
     /// Acknowledgement for barrier-style messages.
     Ack,
+    /// Answers to a `PredictRoute` batch, bit-packed in query order:
+    /// bit `i` (LSB-first within each byte) set ⇔ query `i` goes left.
+    /// The host reveals one routing bit per consulted split and nothing
+    /// else about its feature values.
+    RouteAnswers {
+        /// Number of valid answer bits (equals the query count).
+        n: u32,
+        /// `⌈n/8⌉` bytes of LSB-first routing bits.
+        bits: Vec<u8>,
+    },
 }
 
 impl ToGuest {
+    /// Wire tag / counter kind of this message.
     pub fn kind(&self) -> ToGuestKind {
         match self {
             ToGuest::LayerStats { .. } => ToGuestKind::LayerStats,
             ToGuest::LeftInstances { .. } => ToGuestKind::LeftInstances,
             ToGuest::SplitTable { .. } => ToGuestKind::SplitTable,
             ToGuest::Ack => ToGuestKind::Ack,
+            ToGuest::RouteAnswers { .. } => ToGuestKind::RouteAnswers,
         }
     }
 }

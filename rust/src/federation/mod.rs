@@ -21,9 +21,16 @@
 //! direction and per message kind, and fed to the paper's 1 GbE network
 //! model.
 
+//! Beyond training, the same transports carry the *federated inference*
+//! phase ([`predict`]): the guest resolves host-owned splits with batched
+//! [`message::ToHost::PredictRoute`] routing queries against each host's
+//! private split table — see [`crate::model`] for the per-party model
+//! artifacts this phase serves.
+
 pub mod codec;
 pub mod guest;
 pub mod host;
 pub mod message;
+pub mod predict;
 pub mod tcp;
 pub mod transport;

@@ -1,0 +1,339 @@
+//! Federated batch inference over the pluggable transport layer.
+//!
+//! Reproduces the paper's *federated inference* phase (SecureBoost
+//! §"Federated Inference"): the guest walks each sample down its trees;
+//! guest-owned splits are resolved locally, and host-owned splits are
+//! resolved by asking the owning host to apply its private
+//! `(feature, threshold)` rule. The protocol is **batched level-wise**:
+//! every sample × tree pair advances through all of its consecutive
+//! guest-owned splits for free, then all pending host queries across the
+//! whole batch and *all trees* are shipped in a single
+//! [`ToHost::PredictRoute`] message per host, answered by one bit-packed
+//! [`ToGuest::RouteAnswers`]. A batch therefore costs at most
+//! `max_depth` round trips per host, independent of batch size and tree
+//! count.
+//!
+//! Privacy directions:
+//!
+//! - the **guest** learns one routing bit per consulted host split —
+//!   exactly what it must learn to reach a leaf, and the same bit
+//!   training's `ApplySplit`/`LeftInstances` exchange already revealed;
+//! - a **host** learns which of its split handles are consulted for
+//!   which record ids, but never the tree position of a split, the
+//!   routing decisions of other parties, leaf values, or predictions.
+//!
+//! Both the in-memory ([`spawn_predict_host`]) and framed-TCP
+//! ([`serve_predict_once`]) deployments run this exact message flow, and
+//! both charge identical serialized byte counts to
+//! [`super::transport::NetCounters`] — asserted by
+//! `tests/predict_parity.rs`.
+
+use super::message::{ToGuest, ToHost};
+use super::transport::{GuestTransport, HostLink, HostTransport};
+use crate::data::dataset::PartySlice;
+use crate::tree::node::SplitRef;
+use crate::tree::predict::{GuestModel, HostModel};
+
+/// Host-side inference service: the host's private model share plus its
+/// raw feature rows keyed by record id. Answers [`ToHost::PredictRoute`]
+/// batches until `Shutdown`/close.
+pub struct PredictHostParty<T: HostTransport> {
+    model: HostModel,
+    slice: PartySlice,
+    link: T,
+}
+
+impl<T: HostTransport> PredictHostParty<T> {
+    /// Build a serving party from a loaded host model share and the
+    /// host's feature slice (record id = row index).
+    pub fn new(model: HostModel, slice: PartySlice, link: T) -> Self {
+        PredictHostParty { model, slice, link }
+    }
+
+    /// Serve routing queries until `Shutdown` or transport close.
+    pub fn run(self) {
+        let d = self.slice.d();
+        while let Some(msg) = self.link.recv() {
+            match msg {
+                ToHost::PredictRoute { queries } => {
+                    let n = queries.len();
+                    let mut bits = vec![0u8; n.div_ceil(8)];
+                    for (i, (row, handle)) in queries.iter().enumerate() {
+                        let left = self.goes_left(*row as usize, *handle as usize, d);
+                        if left {
+                            bits[i / 8] |= 1 << (i % 8);
+                        }
+                    }
+                    self.link.send(ToGuest::RouteAnswers { n: n as u32, bits });
+                }
+                ToHost::Shutdown => break,
+                other => {
+                    // inference sessions speak only PredictRoute/Shutdown;
+                    // anything else is a protocol error — close rather
+                    // than answer wrong
+                    eprintln!(
+                        "[sbp-predict-host] unexpected {:?} message in inference session, closing",
+                        other.kind()
+                    );
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Bounds-checked routing: malformed queries (unknown record or
+    /// handle) route right and are reported, rather than panicking the
+    /// serving party.
+    fn goes_left(&self, row: usize, handle: usize, d: usize) -> bool {
+        if row >= self.slice.n || handle >= self.model.splits.len() {
+            eprintln!(
+                "[sbp-predict-host] query out of range (row {row}, handle {handle}); \
+                 answering right"
+            );
+            return false;
+        }
+        self.model.goes_left(handle as u32, &self.slice.x[row * d..(row + 1) * d])
+    }
+}
+
+/// Spawn an in-process inference host thread over an mpsc [`HostLink`]
+/// (the in-memory analogue of [`serve_predict_once`]).
+pub fn spawn_predict_host(
+    model: HostModel,
+    slice: PartySlice,
+    link: HostLink,
+) -> std::thread::JoinHandle<()> {
+    let party = model.party;
+    std::thread::Builder::new()
+        .name(format!("sbp-predict-host-{party}"))
+        .spawn(move || PredictHostParty::new(model, slice, link).run())
+        .expect("spawn predict host thread")
+}
+
+/// Accept one guest connection on `listener` and serve inference routing
+/// queries over it until `Shutdown`/close. Returns the peer address.
+/// This is the body of the `sbp serve-predict` subcommand.
+pub fn serve_predict_once(
+    listener: &std::net::TcpListener,
+    model: HostModel,
+    slice: PartySlice,
+) -> std::io::Result<std::net::SocketAddr> {
+    let (stream, peer) = listener.accept()?;
+    let transport = super::tcp::TcpHostTransport::new(stream);
+    PredictHostParty::new(model, slice, transport).run();
+    Ok(peer)
+}
+
+/// One in-flight (tree, sample) walk.
+struct Cursor {
+    tree: u32,
+    row: u32,
+    node: u32,
+}
+
+/// Drive batched federated inference for every row of `guest` (record
+/// id = row index on every party) and return the raw margin matrix,
+/// row-major `n × pred_width` — bit-identical to colocated
+/// [`GuestModel::predict_row`] on the same shares.
+///
+/// `links` must hold one [`GuestTransport`] per host party referenced by
+/// the model, in party order, each connected to a serving
+/// [`PredictHostParty`].
+pub fn federated_predict(
+    model: &GuestModel,
+    guest: &PartySlice,
+    links: &[Box<dyn GuestTransport>],
+) -> Vec<f64> {
+    let n = guest.n;
+    let d = guest.d();
+    let n_trees = model.trees.len();
+    // every referenced host party must have a connected link
+    for (tree, _) in &model.trees {
+        for node in &tree.nodes {
+            if let Some(SplitRef::Host { party, .. }) = &node.split {
+                assert!(
+                    (*party as usize) < links.len(),
+                    "model references host party {party} but only {} link(s) are connected",
+                    links.len()
+                );
+            }
+        }
+    }
+    // final leaf per (tree, sample); filled as cursors finish
+    let mut final_node: Vec<u32> = vec![0; n_trees * n];
+    let mut active: Vec<Cursor> = Vec::with_capacity(n_trees * n);
+    for t in 0..n_trees {
+        for i in 0..n {
+            active.push(Cursor { tree: t as u32, row: i as u32, node: 0 });
+        }
+    }
+
+    while !active.is_empty() {
+        // ---- phase A: advance through guest-owned splits / settle leaves
+        let mut i = 0;
+        while i < active.len() {
+            let c = &mut active[i];
+            let (tree, _class) = &model.trees[c.tree as usize];
+            let guest_row = &guest.x[c.row as usize * d..(c.row as usize + 1) * d];
+            let mut finished = false;
+            loop {
+                let node = &tree.nodes[c.node as usize];
+                match &node.split {
+                    None => {
+                        final_node[c.tree as usize * n + c.row as usize] = c.node;
+                        finished = true;
+                        break;
+                    }
+                    Some(SplitRef::Guest { feature, threshold, .. }) => {
+                        let left = guest_row[*feature as usize] <= *threshold;
+                        c.node = if left { node.left as u32 } else { node.right as u32 };
+                    }
+                    Some(SplitRef::Host { .. }) => break, // needs a host answer
+                }
+            }
+            if finished {
+                active.swap_remove(i); // swapped-in cursor re-processed at i
+            } else {
+                i += 1;
+            }
+        }
+        if active.is_empty() {
+            break;
+        }
+
+        // ---- phase B: one PredictRoute per host for every pending walk
+        let mut pending: Vec<Vec<usize>> = vec![Vec::new(); links.len()];
+        for (idx, c) in active.iter().enumerate() {
+            let (tree, _) = &model.trees[c.tree as usize];
+            let Some(SplitRef::Host { party, .. }) = &tree.nodes[c.node as usize].split else {
+                unreachable!("phase A leaves cursors at host splits only")
+            };
+            pending[*party as usize].push(idx);
+        }
+        for (p, idxs) in pending.iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let queries: Vec<(u32, u32)> = idxs
+                .iter()
+                .map(|&idx| {
+                    let c = &active[idx];
+                    let (tree, _) = &model.trees[c.tree as usize];
+                    let Some(SplitRef::Host { handle, .. }) =
+                        &tree.nodes[c.node as usize].split
+                    else {
+                        unreachable!()
+                    };
+                    (c.row, *handle)
+                })
+                .collect();
+            links[p].send(ToHost::PredictRoute { queries });
+        }
+        for (p, idxs) in pending.iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let msg = links[p].recv();
+            let ToGuest::RouteAnswers { n: n_ans, bits } = msg else {
+                panic!("expected RouteAnswers from host {p}")
+            };
+            assert_eq!(n_ans as usize, idxs.len(), "host {p} answered a different batch size");
+            for (q, &idx) in idxs.iter().enumerate() {
+                let left = bits[q / 8] & (1 << (q % 8)) != 0;
+                let c = &mut active[idx];
+                let (tree, _) = &model.trees[c.tree as usize];
+                let node = &tree.nodes[c.node as usize];
+                c.node = if left { node.left as u32 } else { node.right as u32 };
+            }
+        }
+    }
+
+    // ---- accumulate leaf weights in tree order (matches predict_row's
+    // per-row summation order exactly, so results are bit-identical)
+    let k = model.pred_width;
+    let mut preds = vec![0.0f64; n * k];
+    for i in 0..n {
+        for (t, (tree, class)) in model.trees.iter().enumerate() {
+            let leaf = &tree.nodes[final_node[t * n + i] as usize];
+            if tree.width == 1 {
+                preds[i * k + *class] += leaf.weight[0];
+            } else {
+                for (j, &w) in leaf.weight.iter().enumerate() {
+                    preds[i * k + j] += w;
+                }
+            }
+        }
+    }
+    preds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::federation::transport::link_pair;
+    use crate::tree::node::Tree;
+
+    /// Guest tree: root guest split, left child host split — exercising
+    /// both local advancement and a host round trip.
+    fn toy_shares() -> (GuestModel, HostModel) {
+        let mut t = Tree::new(1);
+        let (l, _r) = t.split_node(0, SplitRef::Guest { feature: 0, bin: 3, threshold: 0.5 });
+        t.split_node(l, SplitRef::Host { party: 0, handle: 1 });
+        t.nodes[2].weight = vec![1.0];
+        t.nodes[3].weight = vec![2.0];
+        t.nodes[4].weight = vec![3.0];
+        let guest = GuestModel { trees: vec![(t, 0)], n_classes: 2, pred_width: 1 };
+        let host = HostModel { party: 0, splits: vec![(0, 0, 9.0), (1, 2, -1.0)] };
+        (guest, host)
+    }
+
+    #[test]
+    fn batched_protocol_matches_colocated_predict() {
+        let (guest_m, host_m) = toy_shares();
+        // 4 rows: guest feature picks the branch, host feature 1 vs −1
+        let guest_slice = PartySlice {
+            cols: vec![0],
+            x: vec![0.9, 0.1, 0.1, 0.4],
+            n: 4,
+        };
+        let host_slice = PartySlice {
+            cols: vec![1, 2],
+            x: vec![0.0, 0.0, 0.0, -2.0, 0.0, 5.0, 0.0, -1.5],
+            n: 4,
+        };
+
+        let (gl, hl) = link_pair(8);
+        let handle = spawn_predict_host(host_m.clone(), host_slice.clone(), hl);
+        let links: Vec<Box<dyn GuestTransport>> = vec![Box::new(gl)];
+        let preds = federated_predict(&guest_m, &guest_slice, &links);
+        links[0].send(ToHost::Shutdown);
+        handle.join().unwrap();
+
+        assert_eq!(preds.len(), 4);
+        for i in 0..4 {
+            let grow = &guest_slice.x[i..=i];
+            let hrow = &host_slice.x[i * 2..(i + 1) * 2];
+            let expect = guest_m.predict_row(grow, std::slice::from_ref(&host_m), &[hrow]);
+            assert_eq!(preds[i], expect[0], "row {i}");
+        }
+        // expected leaves: row0 → right (1.0); row1 → host left (2.0);
+        // row2 → host right (3.0); row3 → host left (2.0)
+        assert_eq!(preds, vec![1.0, 2.0, 3.0, 2.0]);
+        // exactly one PredictRoute round trip for the whole batch
+        let snap = links[0].snapshot();
+        assert_eq!(snap.msgs_to_host, 2, "one PredictRoute + one Shutdown");
+        assert_eq!(snap.msgs_to_guest, 1, "one RouteAnswers");
+    }
+
+    #[test]
+    fn guest_only_model_needs_no_links() {
+        let mut t = Tree::new(1);
+        t.split_node(0, SplitRef::Guest { feature: 0, bin: 0, threshold: 0.0 });
+        t.nodes[1].weight = vec![-1.0];
+        t.nodes[2].weight = vec![1.0];
+        let m = GuestModel { trees: vec![(t, 0)], n_classes: 2, pred_width: 1 };
+        let slice = PartySlice { cols: vec![0], x: vec![-0.5, 0.5], n: 2 };
+        let preds = federated_predict(&m, &slice, &[]);
+        assert_eq!(preds, vec![-1.0, 1.0]);
+    }
+}

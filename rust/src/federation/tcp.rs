@@ -53,6 +53,7 @@ impl TcpGuestTransport {
         })
     }
 
+    /// This endpoint's traffic counters.
     pub fn counters(&self) -> Arc<NetCounters> {
         self.counters.clone()
     }
@@ -96,6 +97,7 @@ pub struct TcpHostTransport {
 }
 
 impl TcpHostTransport {
+    /// Wrap an accepted guest connection.
     pub fn new(stream: TcpStream) -> Self {
         stream.set_nodelay(true).ok();
         TcpHostTransport {
@@ -105,6 +107,7 @@ impl TcpHostTransport {
         }
     }
 
+    /// This endpoint's traffic counters.
     pub fn counters(&self) -> Arc<NetCounters> {
         self.counters.clone()
     }
@@ -144,12 +147,18 @@ impl HostTransport for TcpHostTransport {
     }
 
     fn send(&self, msg: ToGuest) {
-        let (suite, ct_len) = self
-            .suite
-            .lock()
-            .expect("suite poisoned")
-            .clone()
-            .expect("host cannot send before Setup");
+        // Training sessions lock the suite from the guest's Setup frame.
+        // Inference sessions (serve_predict) carry no ciphertexts and
+        // never send Setup, so ct-free messages fall back to a fixed
+        // plain suite — their wire size is ct_len-independent, keeping
+        // byte accounting identical across transports.
+        let (suite, ct_len) = self.suite.lock().expect("suite poisoned").clone().unwrap_or_else(
+            || {
+                let s = CipherSuite::new_plain(64);
+                let l = s.ct_byte_len();
+                (s, l)
+            },
+        );
         let payload = codec::encode_to_guest(&suite, ct_len, &msg);
         self.counters
             .record_to_guest(msg.kind(), (payload.len() + codec::FRAME_HEADER_LEN) as u64);

@@ -32,7 +32,9 @@ use std::sync::Arc;
 /// [`ToGuest`]. Implementations record exact wire sizes in their
 /// [`NetCounters`].
 pub trait GuestTransport {
+    /// Send one message to the host (recording its exact wire size).
     fn send(&self, msg: ToHost);
+    /// Block until the host's next message.
     fn recv(&self) -> ToGuest;
     /// Traffic seen by this link so far.
     fn snapshot(&self) -> NetSnapshot;
@@ -41,7 +43,9 @@ pub trait GuestTransport {
 /// Host-side endpoint: receive [`ToHost`] (None on shutdown/close), send
 /// [`ToGuest`].
 pub trait HostTransport {
+    /// Block for the guest's next message; `None` on shutdown/close.
     fn recv(&self) -> Option<ToHost>;
+    /// Send one message to the guest (recording its exact wire size).
     fn send(&self, msg: ToGuest);
 }
 
@@ -49,13 +53,21 @@ pub trait HostTransport {
 /// and per message kind.
 #[derive(Debug)]
 pub struct NetCounters {
+    /// Total guest→host bytes.
     pub bytes_to_host: AtomicU64,
+    /// Total host→guest bytes.
     pub bytes_to_guest: AtomicU64,
+    /// Total guest→host messages.
     pub msgs_to_host: AtomicU64,
+    /// Total host→guest messages.
     pub msgs_to_guest: AtomicU64,
+    /// Guest→host bytes per message kind.
     pub to_host_kind_bytes: [AtomicU64; TO_HOST_KINDS],
+    /// Guest→host messages per kind.
     pub to_host_kind_msgs: [AtomicU64; TO_HOST_KINDS],
+    /// Host→guest bytes per message kind.
     pub to_guest_kind_bytes: [AtomicU64; TO_GUEST_KINDS],
+    /// Host→guest messages per kind.
     pub to_guest_kind_msgs: [AtomicU64; TO_GUEST_KINDS],
 }
 
@@ -91,6 +103,7 @@ impl NetCounters {
         self.to_guest_kind_msgs[kind.index()].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Point-in-time copy of all counters.
     pub fn snapshot(&self) -> NetSnapshot {
         NetSnapshot {
             bytes_to_host: self.bytes_to_host.load(Ordering::Relaxed),
@@ -116,21 +129,31 @@ impl NetCounters {
 /// Point-in-time copy of [`NetCounters`].
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct NetSnapshot {
+    /// Total guest→host bytes.
     pub bytes_to_host: u64,
+    /// Total host→guest bytes.
     pub bytes_to_guest: u64,
+    /// Total guest→host messages.
     pub msgs_to_host: u64,
+    /// Total host→guest messages.
     pub msgs_to_guest: u64,
+    /// Guest→host bytes per message kind.
     pub to_host_kind_bytes: [u64; TO_HOST_KINDS],
+    /// Guest→host messages per kind.
     pub to_host_kind_msgs: [u64; TO_HOST_KINDS],
+    /// Host→guest bytes per message kind.
     pub to_guest_kind_bytes: [u64; TO_GUEST_KINDS],
+    /// Host→guest messages per kind.
     pub to_guest_kind_msgs: [u64; TO_GUEST_KINDS],
 }
 
 impl NetSnapshot {
+    /// Bytes over both directions.
     pub fn total_bytes(&self) -> u64 {
         self.bytes_to_host + self.bytes_to_guest
     }
 
+    /// Traffic since `earlier` (elementwise difference).
     pub fn diff(&self, earlier: &NetSnapshot) -> NetSnapshot {
         NetSnapshot {
             bytes_to_host: self.bytes_to_host - earlier.bytes_to_host,
@@ -210,7 +233,9 @@ impl NetSnapshot {
 /// Link model matching the paper's environment (§7.1): 1 GbE, intranet.
 #[derive(Clone, Copy, Debug)]
 pub struct NetworkModel {
+    /// Link bandwidth in bytes per second.
     pub bandwidth_bytes_per_sec: f64,
+    /// Per-message latency in seconds.
     pub latency_sec_per_msg: f64,
 }
 
@@ -233,17 +258,25 @@ impl NetworkModel {
 
 /// In-process guest-side link: mpsc channels, exact wire-size accounting.
 pub struct GuestLink {
+    /// Guest→host channel.
     pub tx: Sender<ToHost>,
+    /// Host→guest channel.
     pub rx: Receiver<ToGuest>,
+    /// Shared traffic counters (same object on both ends).
     pub counters: Arc<NetCounters>,
+    /// Fixed serialized ciphertext width for size accounting.
     pub ct_len: usize,
 }
 
 /// In-process host-side endpoint.
 pub struct HostLink {
+    /// Guest→host channel.
     pub rx: Receiver<ToHost>,
+    /// Host→guest channel.
     pub tx: Sender<ToGuest>,
+    /// Shared traffic counters (same object on both ends).
     pub counters: Arc<NetCounters>,
+    /// Fixed serialized ciphertext width for size accounting.
     pub ct_len: usize,
 }
 

@@ -32,6 +32,17 @@
 //! to [`federation::transport::NetCounters`], and both train bit-identical
 //! models at the same seed (`tests/federated.rs` parity tests).
 //!
+//! ## Model lifecycle
+//!
+//! Trained models outlive the training process: [`model`] defines a
+//! versioned per-party artifact format (the guest keeps topology, leaf
+//! weights, objective, and binning metadata; each host keeps only its
+//! private split table), and [`federation::predict`] serves *federated
+//! inference* over the same pluggable transports with batched routing
+//! queries. The CLI wires the whole cycle together:
+//! `sbp save` → `sbp serve-predict` / `sbp predict`. See
+//! `docs/ARCHITECTURE.md` for the message flows.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -41,7 +52,14 @@
 //! let cfg = TrainConfig::default();
 //! let report = train_federated(&vs, &cfg).unwrap();
 //! println!("AUC = {:.4}", report.train_metric);
+//!
+//! // deployable per-party model shares + colocated inference
+//! let (guest_model, host_models) = report.model();
+//! let preds = predict_centralized(&guest_model, &host_models, &vs);
+//! assert_eq!(preds.len(), vs.n() * guest_model.pred_width);
 //! ```
+
+#![warn(missing_docs)]
 
 pub mod bench_harness;
 pub mod boosting;
@@ -51,6 +69,7 @@ pub mod crypto;
 pub mod data;
 pub mod federation;
 pub mod metrics;
+pub mod model;
 pub mod runtime;
 pub mod tree;
 pub mod util;
@@ -58,10 +77,15 @@ pub mod util;
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::config::{CipherKind, GossConfig, ModeKind, TrainConfig, TransportKind};
-    pub use crate::coordinator::{train_centralized, train_federated, TrainReport};
+    pub use crate::coordinator::{
+        predict_centralized, predict_federated_in_memory, predict_federated_tcp,
+        train_centralized, train_federated, PredictReport, TrainReport,
+    };
     pub use crate::crypto::cipher::CipherSuite;
     pub use crate::data::dataset::{Dataset, VerticalSplit};
     pub use crate::data::synthetic::SyntheticSpec;
     pub use crate::metrics::{accuracy_multiclass, auc};
+    pub use crate::model::{GuestArtifact, HostArtifact, ModelError, Objective};
     pub use crate::runtime::engine::{ComputeEngine, CpuEngine};
+    pub use crate::tree::predict::{GuestModel, HostModel};
 }

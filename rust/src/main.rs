@@ -1,31 +1,49 @@
 //! `sbp` — the SecureBoost+ launcher.
 //!
 //! Subcommands:
-//!   train        train a federated model on a synthetic preset (in-process hosts)
-//!   train-guest  train as the guest party over TCP (`--connect host:port[,..]`)
-//!   serve-host   run one host party as a TCP server for a training run
-//!   datagen      describe / emit the synthetic dataset presets
-//!   engines      check artifact availability and engine parity
+//!   train          train a federated model on a synthetic preset (in-process hosts)
+//!   train-guest    train as the guest party over TCP (`--connect host:port[,..]`)
+//!   serve-host     run one host party as a TCP server for a training run
+//!   save           train and write per-party model artifacts to a directory
+//!   predict        score a preset with a saved model (colocated or `--connect`)
+//!   serve-predict  serve one host's share for federated inference over TCP
+//!   datagen        describe / emit the synthetic dataset presets
+//!   engines        check artifact availability and engine parity
 //!
 //! Examples:
 //!   sbp train --dataset give-credit --scale 0.01 --cipher paillier
 //!   sbp train --dataset sensorless --scale 0.01 --mode mo
+//!   sbp save  --dataset give-credit --scale 0.01 --out model/
+//!   sbp predict --model model/ --dataset give-credit --scale 0.01
 //!   sbp datagen --list
 //!
 //! Two-terminal networked run (same preset/seed/bins on both sides):
 //!   terminal 1:  sbp serve-host  --dataset give-credit --scale 0.01 --port 7878
 //!   terminal 2:  sbp train-guest --dataset give-credit --scale 0.01 --connect 127.0.0.1:7878
+//!
+//! Two-terminal federated inference on a saved model:
+//!   terminal 1:  sbp serve-predict --model model/host-0.model.json \
+//!                    --dataset give-credit --scale 0.01 --port 7979
+//!   terminal 2:  sbp predict --model model/ --dataset give-credit --scale 0.01 \
+//!                    --connect 127.0.0.1:7979
 
 use sbp::config::{CipherKind, GossConfig, ModeKind, TrainConfig, TransportKind};
-use sbp::coordinator::{train_centralized, train_federated, train_federated_with_engine};
+use sbp::coordinator::{
+    predict_centralized, predict_federated_tcp, train_centralized, train_federated,
+    train_federated_with_engine,
+};
 use sbp::data::binning::bin_party;
 use sbp::data::synthetic::SyntheticSpec;
+use sbp::federation::predict::serve_predict_once;
 use sbp::federation::tcp::serve_host_once;
+use sbp::metrics::{accuracy_multiclass, auc};
+use sbp::model::{guest_file_name, host_file_name, GuestArtifact, HostArtifact, Objective};
 use sbp::runtime::engine::{ComputeEngine, CpuEngine};
 use sbp::runtime::pjrt::XlaEngine;
 use sbp::util::args::Args;
 use sbp::util::timer::PhaseTimer;
 use std::net::TcpListener;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 fn spec_by_name(name: &str, scale: f64) -> Option<SyntheticSpec> {
@@ -47,11 +65,14 @@ fn main() {
         Some("train") => cmd_train(&args, false),
         Some("train-guest") => cmd_train(&args, true),
         Some("serve-host") => cmd_serve_host(&args),
+        Some("save") => cmd_save(&args),
+        Some("predict") => cmd_predict(&args),
+        Some("serve-predict") => cmd_serve_predict(&args),
         Some("datagen") => cmd_datagen(&args),
         Some("engines") => cmd_engines(&args),
         _ => {
             eprintln!(
-                "usage: sbp <train|train-guest|serve-host|datagen|engines> [options]\n\
+                "usage: sbp <train|train-guest|serve-host|save|predict|serve-predict|datagen|engines> [options]\n\
                  \n\
                  train options:\n\
                  \x20 --dataset <preset>     give-credit|susy|higgs|epsilon|sensorless|covtype|svhn\n\
@@ -75,7 +96,21 @@ fn main() {
                  \x20 --dataset --scale --seed --bins --hosts  as for train\n\
                  \x20 --host-id <i>          which host feature slice to serve (default 0)\n\
                  \x20 --bind <ip>            listen address (default 127.0.0.1)\n\
-                 \x20 --port <p>             listen port (default 7878)"
+                 \x20 --port <p>             listen port (default 7878)\n\
+                 \n\
+                 save: train options plus\n\
+                 \x20 --out <dir>            artifact directory (default model/)\n\
+                 \n\
+                 predict options:\n\
+                 \x20 --model <dir|file>     guest artifact (dir uses guest.model.json)\n\
+                 \x20 --dataset --scale --seed --hosts  as for train (regenerates rows)\n\
+                 \x20 --connect <a1[,a2..]>  serve-predict addresses (else colocated\n\
+                 \x20                        host artifacts from the model dir)\n\
+                 \n\
+                 serve-predict options:\n\
+                 \x20 --model <file>         this host's artifact (host-<i>.model.json)\n\
+                 \x20 --dataset --scale --seed --hosts --host-id  as for serve-host\n\
+                 \x20 --bind <ip> --port <p> listen address (default 127.0.0.1:7979)"
             );
             std::process::exit(2);
         }
@@ -257,6 +292,309 @@ fn cmd_serve_host(args: &Args) {
     let report = timer.lock().expect("timer").report();
     if !report.is_empty() {
         println!("host phase breakdown:\n{report}");
+    }
+}
+
+/// Train in-process and write the per-party model artifacts.
+fn cmd_save(args: &Args) {
+    let name = args.get_or("dataset", "give-credit");
+    let scale: f64 = args.get_parse("scale", 0.01);
+    let Some(spec) = spec_by_name(&name, scale) else {
+        eprintln!("unknown dataset preset '{name}'");
+        std::process::exit(2);
+    };
+    let cfg = build_config(args);
+    if let Err(e) = cfg.validate() {
+        eprintln!("invalid configuration: {e}");
+        std::process::exit(2);
+    }
+    let out_dir = PathBuf::from(args.get_or("out", "model"));
+    if let Err(e) = std::fs::create_dir_all(&out_dir) {
+        eprintln!("cannot create {}: {e}", out_dir.display());
+        std::process::exit(1);
+    }
+    eprintln!(
+        "[sbp] generating '{}' at scale {scale} ({} instances × {} features)",
+        spec.name, spec.n, spec.d
+    );
+    let vs = spec.generate_vertical(cfg.seed, cfg.n_hosts);
+    let report = train_federated(&vs, &cfg).expect("training failed");
+    println!("{}", report.summary());
+    let (guest_m, host_ms) = report.model();
+    let guest_art = GuestArtifact {
+        model: guest_m,
+        objective: Objective::for_classes(vs.n_classes),
+        dataset: vs.name.clone(),
+        n_hosts: vs.hosts.len(),
+        max_bin: cfg.max_bin,
+        guest_features: vs.guest.d(),
+        seed: cfg.seed,
+        scale,
+    };
+    let gpath = out_dir.join(guest_file_name());
+    if let Err(e) = guest_art.save(&gpath) {
+        eprintln!("saving guest artifact: {e}");
+        std::process::exit(1);
+    }
+    println!("wrote {}", gpath.display());
+    for (p, hm) in host_ms.into_iter().enumerate() {
+        let art = HostArtifact {
+            n_features: vs.hosts[p].d(),
+            model: hm,
+            dataset: vs.name.clone(),
+            n_hosts: vs.hosts.len(),
+            seed: cfg.seed,
+            scale,
+        };
+        let hpath = out_dir.join(host_file_name(p));
+        if let Err(e) = art.save(&hpath) {
+            eprintln!("saving host artifact {p}: {e}");
+            std::process::exit(1);
+        }
+        println!("wrote {}", hpath.display());
+    }
+}
+
+/// Resolve `--model` to the guest artifact path (a directory means its
+/// canonical `guest.model.json`).
+fn guest_artifact_path(arg: &str) -> PathBuf {
+    let p = PathBuf::from(arg);
+    if p.is_dir() {
+        p.join(guest_file_name())
+    } else {
+        p
+    }
+}
+
+/// Score a regenerated preset with a saved model — colocated when the
+/// host artifacts sit next to the guest one, federated over TCP with
+/// `--connect`.
+fn cmd_predict(args: &Args) {
+    let Some(model_arg) = args.get("model") else {
+        eprintln!("predict requires --model <dir|guest.model.json>");
+        std::process::exit(2);
+    };
+    let gpath = guest_artifact_path(model_arg);
+    let guest_art = match GuestArtifact::load(&gpath) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("loading {}: {e}", gpath.display());
+            std::process::exit(1);
+        }
+    };
+    // defaults come from the artifact's recorded training parameters, so
+    // a bare `sbp predict --model dir/` regenerates exactly the rows the
+    // model was trained on
+    let name = args.get_or("dataset", guest_art.dataset.as_str());
+    let scale: f64 = args.get_parse("scale", guest_art.scale);
+    let Some(spec) = spec_by_name(&name, scale) else {
+        eprintln!("unknown dataset preset '{name}'");
+        std::process::exit(2);
+    };
+    if name != guest_art.dataset {
+        eprintln!(
+            "warning: model was trained on '{}' but scoring '{}'",
+            guest_art.dataset, name
+        );
+    }
+    let seed: u64 = args.get_parse("seed", guest_art.seed);
+    let n_hosts: usize = args.get_parse("hosts", guest_art.n_hosts.max(1));
+    let vs = spec.generate_vertical(seed, n_hosts);
+    if vs.guest.d() != guest_art.guest_features {
+        eprintln!(
+            "guest slice has {} features but the model expects {}",
+            vs.guest.d(),
+            guest_art.guest_features
+        );
+        std::process::exit(2);
+    }
+
+    let report = if let Some(connect) = args.get("connect") {
+        let addrs: Vec<String> = connect
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if addrs.len() != guest_art.n_hosts {
+            eprintln!(
+                "{} --connect address(es) for a model with {} host share(s)",
+                addrs.len(),
+                guest_art.n_hosts
+            );
+            std::process::exit(2);
+        }
+        predict_federated_tcp(&guest_art.model, &vs.guest, &addrs)
+            .expect("federated prediction failed")
+    } else {
+        // colocated: load every host artifact from the model directory
+        if vs.hosts.len() != guest_art.n_hosts {
+            eprintln!(
+                "--hosts regenerated {} host slice(s) but the model was trained with {}",
+                vs.hosts.len(),
+                guest_art.n_hosts
+            );
+            std::process::exit(2);
+        }
+        let dir = gpath.parent().unwrap_or(Path::new("."));
+        let mut host_models = Vec::with_capacity(guest_art.n_hosts);
+        for p in 0..guest_art.n_hosts {
+            let hpath = dir.join(host_file_name(p));
+            match HostArtifact::load(&hpath) {
+                Ok(a) => {
+                    if a.model.party as usize != p {
+                        eprintln!(
+                            "{} records party {} but sits in slot {p} — artifacts swapped?",
+                            hpath.display(),
+                            a.model.party
+                        );
+                        std::process::exit(2);
+                    }
+                    if vs.hosts[p].d() != a.n_features {
+                        eprintln!(
+                            "host slice {p} has {} features but its artifact expects {} \
+                             (check --dataset/--scale/--hosts)",
+                            vs.hosts[p].d(),
+                            a.n_features
+                        );
+                        std::process::exit(2);
+                    }
+                    host_models.push(a.model);
+                }
+                Err(e) => {
+                    eprintln!(
+                        "loading {}: {e}\n(hint: use --connect for remote hosts)",
+                        hpath.display()
+                    );
+                    std::process::exit(1);
+                }
+            }
+        }
+        if let Err(e) = guest_art.validate_against_hosts(&host_models) {
+            eprintln!("model shares are inconsistent: {e}");
+            std::process::exit(2);
+        }
+        let t0 = std::time::Instant::now();
+        let preds = predict_centralized(&guest_art.model, &host_models, &vs);
+        let wall = t0.elapsed().as_secs_f64();
+        sbp::coordinator::PredictReport::new(
+            preds,
+            guest_art.model.pred_width,
+            vs.n(),
+            wall,
+            Default::default(),
+            "colocated",
+        )
+    };
+
+    let metric = match guest_art.objective {
+        Objective::BinaryLogistic => {
+            let scores: Vec<f64> = (0..report.n_rows).map(|i| report.preds[i]).collect();
+            ("AUC", auc(&vs.y, &scores))
+        }
+        Objective::SoftmaxCE { k } => {
+            ("accuracy", accuracy_multiclass(&vs.y, &report.preds, k))
+        }
+    };
+    println!(
+        "predict [{}] rows={} trees={} {}={:.4} {:.0} rows/s {:.1} B/row wall={:.3}s",
+        report.transport,
+        report.n_rows,
+        guest_art.model.trees.len(),
+        metric.0,
+        metric.1,
+        report.rows_per_sec,
+        report.bytes_per_row,
+        report.wall_seconds,
+    );
+    if report.comm.total_bytes() > 0 {
+        println!("wire traffic by message kind:\n{}", report.comm.by_kind_report());
+    }
+    if let Some(out) = args.get("out") {
+        let rows: Vec<sbp::config::json::Json> = (0..report.n_rows)
+            .map(|i| {
+                sbp::config::json::Json::Arr(
+                    report.preds[i * report.pred_width..(i + 1) * report.pred_width]
+                        .iter()
+                        .map(|&v| sbp::config::json::Json::Num(v))
+                        .collect(),
+                )
+            })
+            .collect();
+        let doc = sbp::config::json::Json::Arr(rows);
+        if let Err(e) = std::fs::write(out, doc.to_string_pretty()) {
+            eprintln!("writing {out}: {e}");
+            std::process::exit(1);
+        }
+        println!("wrote {out}");
+    }
+}
+
+/// Serve one host's model share for federated inference over TCP.
+fn cmd_serve_predict(args: &Args) {
+    let Some(model_arg) = args.get("model") else {
+        eprintln!("serve-predict requires --model <host-artifact.json>");
+        std::process::exit(2);
+    };
+    let art = match HostArtifact::load(Path::new(model_arg)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("loading {model_arg}: {e}");
+            std::process::exit(1);
+        }
+    };
+    // defaults come from the artifact's recorded training parameters
+    let name = args.get_or("dataset", art.dataset.as_str());
+    let scale: f64 = args.get_parse("scale", art.scale);
+    let Some(spec) = spec_by_name(&name, scale) else {
+        eprintln!("unknown dataset preset '{name}'");
+        std::process::exit(2);
+    };
+    let seed: u64 = args.get_parse("seed", art.seed);
+    let n_hosts: usize = args.get_parse("hosts", art.n_hosts.max(1));
+    let host_id: usize = args.get_parse("host-id", art.model.party as usize);
+    let bind = args.get_or("bind", "127.0.0.1");
+    let port: u16 = args.get_parse("port", 7979);
+
+    if host_id != art.model.party as usize {
+        eprintln!(
+            "--host-id {host_id} does not match the artifact's party {} — \
+             serve each share on its own slice",
+            art.model.party
+        );
+        std::process::exit(2);
+    }
+    let vs = spec.generate_vertical(seed, n_hosts);
+    if host_id >= vs.hosts.len() {
+        eprintln!("host-id {host_id} out of range ({} host slices)", vs.hosts.len());
+        std::process::exit(2);
+    }
+    let slice = vs.hosts[host_id].clone();
+    if slice.d() != art.n_features {
+        eprintln!(
+            "host slice has {} features but the artifact expects {} \
+             (check --dataset/--scale/--hosts/--host-id)",
+            slice.d(),
+            art.n_features
+        );
+        std::process::exit(2);
+    }
+    let listener = match TcpListener::bind((bind.as_str(), port)) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("cannot bind {bind}:{port}: {e}");
+            std::process::exit(1);
+        }
+    };
+    eprintln!(
+        "[sbp] predict host {host_id} serving {} splits on {bind}:{port} — waiting for a guest",
+        art.model.splits.len()
+    );
+    match serve_predict_once(&listener, art.model, slice) {
+        Ok(peer) => eprintln!("[sbp] inference session with guest {peer} complete"),
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            std::process::exit(1);
+        }
     }
 }
 

@@ -97,6 +97,7 @@ pub fn celoss_multiclass(y_true: &[f64], logits: &[f64], k: usize) -> f64 {
     total / n as f64
 }
 
+/// Numerically stable logistic function.
 #[inline]
 pub fn sigmoid(x: f64) -> f64 {
     1.0 / (1.0 + (-x).exp())

@@ -1,0 +1,641 @@
+//! Versioned on-disk model artifacts and the model lifecycle.
+//!
+//! A trained model is *split across parties* exactly like the training
+//! data, mirroring the paper's privacy model (SecureBoost §"Federated
+//! Inference"; SecureBoost+ inherits the same semi-honest setting):
+//!
+//! - the **guest artifact** holds everything needed to drive inference —
+//!   tree topology, leaf weights, the guest's own split thresholds, the
+//!   objective, and binning metadata — but host splits appear only as
+//!   opaque `(party, handle)` pairs;
+//! - each **host artifact** holds only that host's private lookup table
+//!   mapping split handles to its local `(feature, bin, threshold)`
+//!   triples. A host artifact reveals nothing about tree structure, leaf
+//!   values, labels, or any other party's features.
+//!
+//! Artifacts are JSON (via [`crate::config::json`]; the offline crate
+//! universe has no serde) wrapped in a *versioned envelope*:
+//!
+//! ```json
+//! { "format": "sbp-model", "version": 1, "role": "guest", "payload": { … } }
+//! ```
+//!
+//! ## Version policy
+//!
+//! [`MODEL_VERSION`] bumps whenever the payload schema changes
+//! incompatibly — a field is removed or re-interpreted, the tree-node
+//! encoding changes, or split routing semantics change ("≤ threshold goes
+//! left"). Adding a new *optional* field does not bump the version.
+//! Loaders reject any version other than the one they were built with
+//! ([`ModelError::Version`]) instead of guessing: a model file is a
+//! contract between the party that saved it and every party that serves
+//! it, and silent reinterpretation of split thresholds would corrupt
+//! predictions rather than fail loudly.
+//!
+//! All load paths return [`ModelError`] — corrupted, truncated, or
+//! role-mismatched files are errors, never panics (asserted by
+//! `tests/model_lifecycle.rs`).
+
+use crate::config::json::Json;
+use crate::tree::node::SplitRef;
+use crate::tree::predict::{GuestModel, HostModel};
+use std::path::Path;
+
+/// Magic string identifying an sbp model file.
+pub const MODEL_FORMAT: &str = "sbp-model";
+
+/// Current (and only supported) model format version. See the module
+/// docs for what constitutes a version bump.
+pub const MODEL_VERSION: u64 = 1;
+
+/// Errors surfaced by model save/load. Structural problems are
+/// distinguished from I/O so callers can tell "bad file" from "no file".
+#[derive(Debug)]
+pub enum ModelError {
+    /// Reading or writing the file failed.
+    Io(std::io::Error),
+    /// The file is not valid JSON (truncated, corrupted, not JSON).
+    Parse(String),
+    /// The JSON is well-formed but not a valid artifact of the expected
+    /// role/schema.
+    Format(String),
+    /// The envelope declares a version this build does not understand.
+    Version {
+        /// Version found in the file.
+        found: u64,
+        /// Version this build supports.
+        supported: u64,
+    },
+}
+
+impl std::fmt::Display for ModelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ModelError::Io(e) => write!(f, "model i/o: {e}"),
+            ModelError::Parse(m) => write!(f, "model file is not valid JSON: {m}"),
+            ModelError::Format(m) => write!(f, "malformed model file: {m}"),
+            ModelError::Version { found, supported } => write!(
+                f,
+                "unsupported model format version {found} (this build supports {supported})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ModelError {}
+
+impl From<std::io::Error> for ModelError {
+    fn from(e: std::io::Error) -> Self {
+        ModelError::Io(e)
+    }
+}
+
+/// The training objective recorded in the guest artifact, so inference
+/// can map raw margins to the right score/probability semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Binary classification with logistic loss; margins are logits.
+    BinaryLogistic,
+    /// `k`-class classification with softmax cross-entropy; margins are
+    /// per-class logits.
+    SoftmaxCE {
+        /// Number of classes.
+        k: usize,
+    },
+}
+
+impl Objective {
+    /// Objective for a dataset with `n_classes` classes.
+    pub fn for_classes(n_classes: usize) -> Objective {
+        if n_classes == 2 {
+            Objective::BinaryLogistic
+        } else {
+            Objective::SoftmaxCE { k: n_classes }
+        }
+    }
+
+    fn to_json(self) -> Json {
+        match self {
+            Objective::BinaryLogistic => Json::obj(vec![(
+                "kind",
+                Json::Str("binary-logistic".into()),
+            )]),
+            Objective::SoftmaxCE { k } => Json::obj(vec![
+                ("kind", Json::Str("softmax-ce".into())),
+                ("k", Json::Num(k as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Objective, ModelError> {
+        match v.get("kind").and_then(Json::as_str) {
+            Some("binary-logistic") => Ok(Objective::BinaryLogistic),
+            Some("softmax-ce") => {
+                let k = v
+                    .get("k")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| ModelError::Format("softmax objective missing k".into()))?;
+                if k < 2 {
+                    return Err(ModelError::Format("softmax objective needs k ≥ 2".into()));
+                }
+                Ok(Objective::SoftmaxCE { k })
+            }
+            _ => Err(ModelError::Format("unknown or missing objective kind".into())),
+        }
+    }
+}
+
+/// The guest's deployable model share plus the training metadata needed
+/// to serve it (see the module docs for the privacy split).
+#[derive(Clone, Debug)]
+pub struct GuestArtifact {
+    /// Trees, leaf weights, and the guest's own split thresholds.
+    pub model: GuestModel,
+    /// Loss the margins were trained against.
+    pub objective: Objective,
+    /// Dataset preset the model was trained on (presets are regenerated
+    /// deterministically at serve time).
+    pub dataset: String,
+    /// Number of host parties whose artifacts complement this one.
+    pub n_hosts: usize,
+    /// Binning metadata: quantile-bin budget used at training time.
+    pub max_bin: usize,
+    /// Binning metadata: width of the guest's feature slice.
+    pub guest_features: usize,
+    /// Seed the training preset was generated with — serving regenerates
+    /// the same rows from it.
+    pub seed: u64,
+    /// Instance-count scale the preset was generated at.
+    pub scale: f64,
+}
+
+/// One host's deployable model share: its private split lookup table
+/// (handles → local feature/bin/threshold) plus the preset parameters
+/// needed to regenerate its feature slice at serve time — and nothing
+/// about trees, leaves, labels, or other parties.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostArtifact {
+    /// The host's split table keyed by opaque handles.
+    pub model: HostModel,
+    /// Dataset preset (must match the guest artifact at serve time).
+    pub dataset: String,
+    /// Width of this host's feature slice (routing sanity check).
+    pub n_features: usize,
+    /// Number of host parties the training split was generated with.
+    pub n_hosts: usize,
+    /// Seed the training preset was generated with.
+    pub seed: u64,
+    /// Instance-count scale the preset was generated at.
+    pub scale: f64,
+}
+
+/// Seeds are full-range u64; JSON numbers are f64 and would silently
+/// round seeds above 2^53, regenerating *different* rows at serve time —
+/// so seeds travel as decimal strings.
+fn seed_to_json(seed: u64) -> Json {
+    Json::Str(seed.to_string())
+}
+
+fn get_seed(p: &Json) -> Result<u64, ModelError> {
+    p.get("seed")
+        .and_then(Json::as_str)
+        .and_then(|s| s.parse::<u64>().ok())
+        .ok_or_else(|| ModelError::Format("missing or non-integer seed".into()))
+}
+
+fn envelope(role: &str, payload: Json) -> Json {
+    Json::obj(vec![
+        ("format", Json::Str(MODEL_FORMAT.into())),
+        ("version", Json::Num(MODEL_VERSION as f64)),
+        ("role", Json::Str(role.into())),
+        ("payload", payload),
+    ])
+}
+
+/// Validate the envelope and return the payload.
+fn open_envelope<'a>(v: &'a Json, want_role: &str) -> Result<&'a Json, ModelError> {
+    let format = v
+        .get("format")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ModelError::Format("missing format field".into()))?;
+    if format != MODEL_FORMAT {
+        return Err(ModelError::Format(format!("not an sbp model file (format '{format}')")));
+    }
+    let version = v
+        .get("version")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| ModelError::Format("missing version field".into()))? as u64;
+    if version != MODEL_VERSION {
+        return Err(ModelError::Version { found: version, supported: MODEL_VERSION });
+    }
+    let role = v
+        .get("role")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ModelError::Format("missing role field".into()))?;
+    if role != want_role {
+        return Err(ModelError::Format(format!(
+            "artifact role is '{role}', expected '{want_role}'"
+        )));
+    }
+    v.get("payload").ok_or_else(|| ModelError::Format("missing payload".into()))
+}
+
+/// Structural validation of a decoded guest model: every child index in
+/// range, every guest feature index within the guest's slice width,
+/// every host reference within the declared party count, leaf widths
+/// consistent — so a corrupted file fails at load time instead of
+/// panicking mid-inference.
+fn validate_guest_model(
+    m: &GuestModel,
+    n_hosts: usize,
+    guest_features: usize,
+) -> Result<(), ModelError> {
+    if m.pred_width == 0 {
+        return Err(ModelError::Format("pred_width must be ≥ 1".into()));
+    }
+    for (ti, (tree, class)) in m.trees.iter().enumerate() {
+        if tree.nodes.is_empty() {
+            return Err(ModelError::Format(format!("tree {ti} has no nodes")));
+        }
+        if tree.width == 0 {
+            return Err(ModelError::Format(format!("tree {ti} has width 0")));
+        }
+        if tree.width == 1 && *class >= m.pred_width {
+            return Err(ModelError::Format(format!(
+                "tree {ti} class {class} out of range for pred_width {}",
+                m.pred_width
+            )));
+        }
+        for node in &tree.nodes {
+            match &node.split {
+                None => {
+                    if node.weight.len() != tree.width {
+                        return Err(ModelError::Format(format!(
+                            "tree {ti} node {} leaf width {} ≠ tree width {}",
+                            node.id,
+                            node.weight.len(),
+                            tree.width
+                        )));
+                    }
+                }
+                Some(split) => {
+                    let n = tree.nodes.len() as i32;
+                    if node.left < 0 || node.left >= n || node.right < 0 || node.right >= n {
+                        return Err(ModelError::Format(format!(
+                            "tree {ti} node {} has child index out of range",
+                            node.id
+                        )));
+                    }
+                    match split {
+                        SplitRef::Host { party, .. } => {
+                            if (*party as usize) >= n_hosts {
+                                return Err(ModelError::Format(format!(
+                                    "tree {ti} node {} references host party {party} \
+                                     but the artifact declares {n_hosts} host(s)",
+                                    node.id
+                                )));
+                            }
+                        }
+                        SplitRef::Guest { feature, threshold, .. } => {
+                            if (*feature as usize) >= guest_features {
+                                return Err(ModelError::Format(format!(
+                                    "tree {ti} node {} references guest feature {feature} \
+                                     but the guest has {guest_features}",
+                                    node.id
+                                )));
+                            }
+                            if threshold.is_nan() {
+                                return Err(ModelError::Format(format!(
+                                    "tree {ti} node {} has NaN threshold",
+                                    node.id
+                                )));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+impl GuestArtifact {
+    /// Serialize into the versioned envelope.
+    pub fn to_json(&self) -> Json {
+        let payload = Json::obj(vec![
+            ("model", self.model.to_json()),
+            ("objective", self.objective.to_json()),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("n_hosts", Json::Num(self.n_hosts as f64)),
+            ("max_bin", Json::Num(self.max_bin as f64)),
+            ("guest_features", Json::Num(self.guest_features as f64)),
+            ("seed", seed_to_json(self.seed)),
+            ("scale", Json::Num(self.scale)),
+        ]);
+        envelope("guest", payload)
+    }
+
+    /// Decode and structurally validate a guest artifact.
+    pub fn from_json(v: &Json) -> Result<Self, ModelError> {
+        let p = open_envelope(v, "guest")?;
+        let n_hosts = p
+            .get("n_hosts")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| ModelError::Format("missing n_hosts".into()))?;
+        let guest_features = p
+            .get("guest_features")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| ModelError::Format("missing guest_features".into()))?;
+        let model_v = p.get("model").ok_or_else(|| ModelError::Format("missing model".into()))?;
+        let model = GuestModel::from_json(model_v).map_err(ModelError::Format)?;
+        validate_guest_model(&model, n_hosts, guest_features)?;
+        let objective = Objective::from_json(
+            p.get("objective").ok_or_else(|| ModelError::Format("missing objective".into()))?,
+        )?;
+        let dataset = p
+            .get("dataset")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ModelError::Format("missing dataset".into()))?
+            .to_string();
+        let max_bin = p
+            .get("max_bin")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| ModelError::Format("missing max_bin".into()))?;
+        let seed = get_seed(p)?;
+        let scale = p
+            .get("scale")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| ModelError::Format("missing scale".into()))?;
+        if !scale.is_finite() || scale <= 0.0 {
+            return Err(ModelError::Format("scale must be finite and positive".into()));
+        }
+        Ok(GuestArtifact {
+            model,
+            objective,
+            dataset,
+            n_hosts,
+            max_bin,
+            guest_features,
+            seed,
+            scale,
+        })
+    }
+
+    /// Cross-share validation for colocated serving: every `(party,
+    /// handle)` the trees reference must exist in the loaded host tables.
+    pub fn validate_against_hosts(&self, hosts: &[HostModel]) -> Result<(), ModelError> {
+        for (ti, (tree, _)) in self.model.trees.iter().enumerate() {
+            for node in &tree.nodes {
+                if let Some(SplitRef::Host { party, handle }) = &node.split {
+                    let table = hosts.get(*party as usize).ok_or_else(|| {
+                        ModelError::Format(format!(
+                            "tree {ti} references host party {party} but only {} \
+                             host share(s) are loaded",
+                            hosts.len()
+                        ))
+                    })?;
+                    if (*handle as usize) >= table.splits.len() {
+                        return Err(ModelError::Format(format!(
+                            "tree {ti} references handle {handle} of host {party}, \
+                             whose table has {} entries",
+                            table.splits.len()
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Write the artifact to `path` (pretty-printed JSON).
+    pub fn save(&self, path: &Path) -> Result<(), ModelError> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Read and validate an artifact from `path`.
+    pub fn load(path: &Path) -> Result<Self, ModelError> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text).map_err(ModelError::Parse)?;
+        Self::from_json(&v)
+    }
+
+    /// Highest host party index referenced by any tree, plus one
+    /// (0 when every split is guest-owned).
+    pub fn referenced_hosts(&self) -> usize {
+        let mut max: Option<u8> = None;
+        for (tree, _) in &self.model.trees {
+            for node in &tree.nodes {
+                if let Some(SplitRef::Host { party, .. }) = &node.split {
+                    max = Some(max.map_or(*party, |m: u8| m.max(*party)));
+                }
+            }
+        }
+        max.map(|m| m as usize + 1).unwrap_or(0)
+    }
+}
+
+impl HostArtifact {
+    /// Serialize into the versioned envelope.
+    pub fn to_json(&self) -> Json {
+        let payload = Json::obj(vec![
+            ("model", self.model.to_json()),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("n_features", Json::Num(self.n_features as f64)),
+            ("n_hosts", Json::Num(self.n_hosts as f64)),
+            ("seed", seed_to_json(self.seed)),
+            ("scale", Json::Num(self.scale)),
+        ]);
+        envelope("host", payload)
+    }
+
+    /// Decode and structurally validate a host artifact.
+    pub fn from_json(v: &Json) -> Result<Self, ModelError> {
+        let p = open_envelope(v, "host")?;
+        let model_v = p.get("model").ok_or_else(|| ModelError::Format("missing model".into()))?;
+        let model = HostModel::from_json(model_v).map_err(ModelError::Format)?;
+        let dataset = p
+            .get("dataset")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ModelError::Format("missing dataset".into()))?
+            .to_string();
+        let n_features = p
+            .get("n_features")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| ModelError::Format("missing n_features".into()))?;
+        let n_hosts = p
+            .get("n_hosts")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| ModelError::Format("missing n_hosts".into()))?;
+        let seed = get_seed(p)?;
+        let scale = p
+            .get("scale")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| ModelError::Format("missing scale".into()))?;
+        if !scale.is_finite() || scale <= 0.0 {
+            return Err(ModelError::Format("scale must be finite and positive".into()));
+        }
+        for (i, (f, _b, t)) in model.splits.iter().enumerate() {
+            if (*f as usize) >= n_features {
+                return Err(ModelError::Format(format!(
+                    "split {i} references feature {f} but the host has {n_features}"
+                )));
+            }
+            if t.is_nan() {
+                return Err(ModelError::Format(format!("split {i} has NaN threshold")));
+            }
+        }
+        Ok(HostArtifact { model, dataset, n_features, n_hosts, seed, scale })
+    }
+
+    /// Write the artifact to `path` (pretty-printed JSON).
+    pub fn save(&self, path: &Path) -> Result<(), ModelError> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Read and validate an artifact from `path`.
+    pub fn load(path: &Path) -> Result<Self, ModelError> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text).map_err(ModelError::Parse)?;
+        Self::from_json(&v)
+    }
+}
+
+/// Canonical artifact file name for the guest share.
+pub fn guest_file_name() -> String {
+    "guest.model.json".to_string()
+}
+
+/// Canonical artifact file name for host party `p`.
+pub fn host_file_name(p: usize) -> String {
+    format!("host-{p}.model.json")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::node::Tree;
+
+    fn toy_guest() -> GuestArtifact {
+        let mut t = Tree::new(1);
+        let (l, _r) = t.split_node(0, SplitRef::Guest { feature: 0, bin: 3, threshold: 0.5 });
+        t.split_node(l, SplitRef::Host { party: 0, handle: 1 });
+        t.nodes[2].weight = vec![1.0];
+        t.nodes[3].weight = vec![2.0];
+        t.nodes[4].weight = vec![3.0];
+        GuestArtifact {
+            model: GuestModel { trees: vec![(t, 0)], n_classes: 2, pred_width: 1 },
+            objective: Objective::BinaryLogistic,
+            dataset: "toy".into(),
+            n_hosts: 1,
+            max_bin: 32,
+            guest_features: 1,
+            seed: 42,
+            scale: 0.01,
+        }
+    }
+
+    #[test]
+    fn envelope_roundtrip_guest() {
+        let a = toy_guest();
+        let text = a.to_json().to_string_pretty();
+        let back = GuestArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.dataset, "toy");
+        assert_eq!(back.objective, Objective::BinaryLogistic);
+        assert_eq!(back.model.trees.len(), 1);
+        assert_eq!(back.referenced_hosts(), 1);
+    }
+
+    #[test]
+    fn envelope_roundtrip_host() {
+        let a = HostArtifact {
+            model: HostModel { party: 0, splits: vec![(0, 1, 0.25), (1, 2, -3.0)] },
+            dataset: "toy".into(),
+            n_features: 2,
+            n_hosts: 1,
+            seed: 42,
+            scale: 0.01,
+        };
+        let text = a.to_json().to_string_pretty();
+        let back = HostArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let mut v = toy_guest().to_json();
+        if let Json::Obj(m) = &mut v {
+            m.insert("version".into(), Json::Num(99.0));
+        }
+        match GuestArtifact::from_json(&v) {
+            Err(ModelError::Version { found: 99, supported: MODEL_VERSION }) => {}
+            other => panic!("expected version error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn role_mismatch_rejected() {
+        let v = toy_guest().to_json();
+        assert!(matches!(HostArtifact::from_json(&v), Err(ModelError::Format(_))));
+    }
+
+    #[test]
+    fn out_of_range_children_rejected() {
+        let mut a = toy_guest();
+        a.model.trees[0].0.nodes[0].left = 40;
+        let v = a.to_json();
+        assert!(matches!(GuestArtifact::from_json(&v), Err(ModelError::Format(_))));
+    }
+
+    #[test]
+    fn guest_feature_out_of_range_rejected() {
+        let mut a = toy_guest();
+        a.guest_features = 0; // trees reference guest feature 0 → reject
+        let v = a.to_json();
+        assert!(matches!(GuestArtifact::from_json(&v), Err(ModelError::Format(_))));
+    }
+
+    #[test]
+    fn large_seed_roundtrips_exactly() {
+        let mut a = toy_guest();
+        a.seed = (1u64 << 53) + 1; // not representable as f64
+        let text = a.to_json().to_string_pretty();
+        let back = GuestArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.seed, (1u64 << 53) + 1);
+    }
+
+    #[test]
+    fn host_party_out_of_range_rejected() {
+        let mut a = toy_guest();
+        a.n_hosts = 0; // trees reference party 0 → must fail to load
+        let v = a.to_json();
+        assert!(matches!(GuestArtifact::from_json(&v), Err(ModelError::Format(_))));
+    }
+
+    #[test]
+    fn handle_out_of_range_caught_by_cross_validation() {
+        let a = toy_guest(); // references host 0, handle 1
+        let short = HostModel { party: 0, splits: vec![(0, 0, 1.0)] };
+        assert!(matches!(
+            a.validate_against_hosts(std::slice::from_ref(&short)),
+            Err(ModelError::Format(_))
+        ));
+        let ok = HostModel { party: 0, splits: vec![(0, 0, 1.0), (1, 0, 2.0)] };
+        assert!(a.validate_against_hosts(std::slice::from_ref(&ok)).is_ok());
+    }
+
+    #[test]
+    fn host_feature_out_of_range_rejected() {
+        let a = HostArtifact {
+            model: HostModel { party: 0, splits: vec![(7, 0, 0.0)] },
+            dataset: "toy".into(),
+            n_features: 2,
+            n_hosts: 1,
+            seed: 42,
+            scale: 0.01,
+        };
+        let v = a.to_json();
+        assert!(matches!(HostArtifact::from_json(&v), Err(ModelError::Format(_))));
+    }
+}

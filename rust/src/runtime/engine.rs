@@ -14,6 +14,7 @@ use crate::boosting::loss;
 /// Not `Send`/`Sync`: the guest drives training from a single thread, and
 /// the PJRT client wrapper is single-threaded by construction.
 pub trait ComputeEngine {
+    /// Engine name for logs and reports.
     fn name(&self) -> &'static str;
 
     /// Binary logistic g/h from labels and logits.

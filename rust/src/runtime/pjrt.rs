@@ -20,9 +20,13 @@ use std::path::PathBuf;
 /// Tile geometry, read from `artifacts/manifest.json`.
 #[derive(Clone, Copy, Debug)]
 pub struct Tiles {
+    /// Instances per tile.
     pub n_tile: usize,
+    /// Features per tile.
     pub f_tile: usize,
+    /// Histogram bins per feature.
     pub bins: usize,
+    /// Classes per tile (multi-class kernels).
     pub k_tile: usize,
 }
 
@@ -49,11 +53,15 @@ mod stub {
     use anyhow::{anyhow, Result};
     use std::path::{Path, PathBuf};
 
+    /// Stub engine: construction always fails, compute delegates to
+    /// [`CpuEngine`].
     pub struct XlaEngine {
+        /// Tile geometry (defaults; no manifest was loaded).
         pub tiles: Tiles,
     }
 
     impl XlaEngine {
+        /// Always fails in the stub build (see module docs).
         pub fn load(_dir: impl AsRef<Path>) -> Result<Self> {
             Err(anyhow!(
                 "XlaEngine unavailable: built without `--cfg sbp_xla_pjrt` \
@@ -61,6 +69,7 @@ mod stub {
             ))
         }
 
+        /// Default artifact directory (`$SBP_ARTIFACTS` or `artifacts/`).
         pub fn default_dir() -> PathBuf {
             super::artifact_dir()
         }
@@ -127,6 +136,7 @@ mod xla_impl {
     pub struct XlaEngine {
         _client: xla::PjRtClient,
         arts: Mutex<HashMap<String, Artifact>>,
+        /// Tile geometry from the artifact manifest.
         pub tiles: Tiles,
     }
 

@@ -21,17 +21,22 @@ use crate::util::pool::parallel_for_dynamic;
 /// Plaintext histogram: per (feature, bin), Σg / Σh (width-w) and counts.
 #[derive(Clone, Debug)]
 pub struct PlainHistogram {
+    /// Number of features.
     pub n_features: usize,
+    /// Bins per feature.
     pub n_bins: usize,
     /// Statistic width (1 = scalar g/h, k = multi-output).
     pub w: usize,
     /// `g[(f*n_bins + b)*w + j]`
     pub g: Vec<f64>,
+    /// `h[(f*n_bins + b)*w + j]`
     pub h: Vec<f64>,
+    /// Sample count per (feature, bin).
     pub count: Vec<u32>,
 }
 
 impl PlainHistogram {
+    /// All-zero histogram of the given shape.
     pub fn zeros(n_features: usize, n_bins: usize, w: usize) -> Self {
         PlainHistogram {
             n_features,
@@ -43,6 +48,7 @@ impl PlainHistogram {
         }
     }
 
+    /// Flat (feature, bin) cell index.
     #[inline]
     pub fn cell(&self, f: usize, b: usize) -> usize {
         f * self.n_bins + b
@@ -160,15 +166,20 @@ impl PlainHistogram {
 /// aggregated packed gh, plus plaintext sample counts (counts are public
 /// in the protocol — the paper shares them via split-info sample_count).
 pub struct CipherHistogram {
+    /// Number of features.
     pub n_features: usize,
+    /// Bins per feature.
     pub n_bins: usize,
     /// Ciphertexts per cell.
     pub n_k: usize,
+    /// `cells[(f*n_bins + b)*n_k + j]` — aggregated ciphertexts.
     pub cells: Vec<Ct>,
+    /// Sample count per (feature, bin) — plaintext, protocol-public.
     pub count: Vec<u32>,
 }
 
 impl CipherHistogram {
+    /// All-`Enc(0)` histogram of the given shape.
     pub fn zeros(suite: &CipherSuite, n_features: usize, n_bins: usize, n_k: usize) -> Self {
         CipherHistogram {
             n_features,
@@ -179,6 +190,7 @@ impl CipherHistogram {
         }
     }
 
+    /// Flat (feature, bin) cell index.
     #[inline]
     pub fn cell(&self, f: usize, b: usize) -> usize {
         f * self.n_bins + b

@@ -19,21 +19,32 @@ pub enum SplitRef {
 /// One node of a (possibly multi-output) decision tree.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TreeNode {
+    /// Node id (index into the tree's node vector).
     pub id: u32,
+    /// Parent id (−1 for the root).
     pub parent: i32,
+    /// Left child id (−1 while a leaf).
     pub left: i32,
+    /// Right child id (−1 while a leaf).
     pub right: i32,
+    /// Depth from the root (root = 0).
     pub depth: u8,
+    /// The split applied at this node (`None` = leaf).
     pub split: Option<SplitRef>,
     /// Leaf output(s): 1 value for binary, k for multi-output trees.
     pub weight: Vec<f64>,
+    /// Training instances routed through this node.
     pub n_samples: u32,
+    /// Σg over member instances (training-time only).
     pub sum_g: Vec<f64>,
+    /// Σh over member instances (training-time only).
     pub sum_h: Vec<f64>,
+    /// Gain of the applied split (0 for leaves).
     pub gain: f64,
 }
 
 impl TreeNode {
+    /// A fresh root node with width-`width` statistics.
     pub fn new_root(width: usize) -> Self {
         TreeNode {
             id: 0,
@@ -50,6 +61,7 @@ impl TreeNode {
         }
     }
 
+    /// Is this node currently a leaf?
     pub fn is_leaf(&self) -> bool {
         self.split.is_none()
     }
@@ -58,11 +70,14 @@ impl TreeNode {
 /// A grown tree. `width` is the leaf-output dimension (1 or #classes).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tree {
+    /// Nodes indexed by id (children have larger ids).
     pub nodes: Vec<TreeNode>,
+    /// Leaf-output dimension (1 or #classes).
     pub width: usize,
 }
 
 impl Tree {
+    /// A single-root tree of the given output width.
     pub fn new(width: usize) -> Self {
         Tree { nodes: vec![TreeNode::new_root(width)], width }
     }
@@ -87,10 +102,12 @@ impl Tree {
         (left_id, right_id)
     }
 
+    /// Current leaf count.
     pub fn n_leaves(&self) -> usize {
         self.nodes.iter().filter(|n| n.is_leaf()).count()
     }
 
+    /// Depth of the deepest node.
     pub fn max_depth(&self) -> u8 {
         self.nodes.iter().map(|n| n.depth).max().unwrap_or(0)
     }

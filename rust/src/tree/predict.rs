@@ -15,6 +15,7 @@ use crate::config::json::Json;
 /// A host's private share of a model: handle → (local feature, threshold).
 #[derive(Clone, Debug, PartialEq)]
 pub struct HostModel {
+    /// This host's party index.
     pub party: u8,
     /// Indexed by handle: (local feature index, bin, raw-value threshold).
     pub splits: Vec<(u32, u8, f64)>,
@@ -27,6 +28,7 @@ impl HostModel {
         row[feature as usize] <= threshold
     }
 
+    /// Serialize the table (see [`crate::model`] for the envelope).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("party", Json::Num(self.party as f64)),
@@ -48,6 +50,7 @@ impl HostModel {
         ])
     }
 
+    /// Decode a table; structural errors are returned, not panicked.
     pub fn from_json(v: &Json) -> Result<Self, String> {
         let party = v.get("party").and_then(Json::as_f64).ok_or("missing party")? as u8;
         let splits = v
@@ -57,6 +60,9 @@ impl HostModel {
             .iter()
             .map(|row| {
                 let a = row.as_arr().ok_or("bad split row")?;
+                if a.len() != 3 {
+                    return Err("split row must have 3 entries".to_string());
+                }
                 Ok((
                     a[0].as_f64().ok_or("bad feature")? as u32,
                     a[1].as_f64().ok_or("bad bin")? as u8,
@@ -73,6 +79,7 @@ impl HostModel {
 pub struct GuestModel {
     /// (tree, class): class 0 for binary / multi-output trees.
     pub trees: Vec<(Tree, usize)>,
+    /// Number of classes (2 = binary).
     pub n_classes: usize,
     /// Width of a prediction row (1 binary, k multi-class).
     pub pred_width: usize,
@@ -119,6 +126,7 @@ impl GuestModel {
         out
     }
 
+    /// Serialize the trees (see [`crate::model`] for the envelope).
     pub fn to_json(&self) -> Json {
         let trees = self
             .trees
@@ -141,6 +149,7 @@ impl GuestModel {
         ])
     }
 
+    /// Decode trees; structural errors are returned, not panicked.
     pub fn from_json(v: &Json) -> Result<Self, String> {
         let n_classes =
             v.get("n_classes").and_then(Json::as_usize).ok_or("missing n_classes")?;

@@ -61,13 +61,18 @@ pub fn leaf_weight(sum_g: &[f64], sum_h: &[f64], lambda: f64, learning_rate: f64
 /// A candidate split found locally (feature indices are party-local).
 #[derive(Clone, Debug, PartialEq)]
 pub struct LocalSplit {
+    /// Party-local feature index.
     pub feature: u32,
+    /// Split bin (`≤ bin` routes left).
     pub bin: u8,
+    /// Split gain (eq. 6 / 19).
     pub gain: f64,
     /// Left-side aggregated statistics (the guest needs them to seed the
     /// children's node totals without another pass).
     pub left_g: Vec<f64>,
+    /// Left-side Σh per output.
     pub left_h: Vec<f64>,
+    /// Left-side sample count.
     pub left_count: u32,
 }
 

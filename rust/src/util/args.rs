@@ -4,10 +4,14 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Arguments without a `--` prefix, in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` pairs.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
 }
 
@@ -37,22 +41,27 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (argv[0] excluded).
     pub fn from_env() -> Self {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Is the bare flag present?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Value of `--name` or a default.
     pub fn get_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// Parsed value of `--name`; the default on absence or parse failure.
     pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
         match self.get(name) {
             Some(s) => s.parse().unwrap_or(default),

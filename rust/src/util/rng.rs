@@ -39,6 +39,7 @@ impl Xoshiro256 {
         Self { s }
     }
 
+    /// Next 64 random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]
@@ -55,6 +56,7 @@ impl Xoshiro256 {
         result
     }
 
+    /// Next 32 random bits.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
@@ -178,6 +180,7 @@ impl ChaCha20Rng {
         self.pos = 0;
     }
 
+    /// Fill a buffer with key-stream bytes.
     pub fn fill_bytes(&mut self, out: &mut [u8]) {
         for byte in out.iter_mut() {
             if self.pos == 64 {
@@ -188,6 +191,7 @@ impl ChaCha20Rng {
         }
     }
 
+    /// Next 64 random bits.
     pub fn next_u64(&mut self) -> u64 {
         let mut b = [0u8; 8];
         self.fill_bytes(&mut b);

@@ -12,6 +12,7 @@ pub struct PhaseTimer {
 }
 
 impl PhaseTimer {
+    /// Empty timer.
     pub fn new() -> Self {
         Self::default()
     }
@@ -40,10 +41,12 @@ impl PhaseTimer {
         }
     }
 
+    /// Accumulated duration of one phase.
     pub fn total(&self, phase: &str) -> Duration {
         self.totals.get(phase).copied().unwrap_or_default()
     }
 
+    /// Iterate `(phase, total, hits)` in first-seen order.
     pub fn phases(&self) -> impl Iterator<Item = (&'static str, Duration, u64)> + '_ {
         self.totals
             .iter()

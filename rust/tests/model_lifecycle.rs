@@ -1,0 +1,224 @@
+//! Model-lifecycle round-trip tests: save → load → predict must be
+//! bit-identical to in-memory prediction for binary and multi-class
+//! models under every cipher, and damaged model files must be rejected
+//! with errors, never panics.
+
+use sbp::config::json::Json;
+use sbp::config::{CipherKind, ModeKind, TrainConfig};
+use sbp::coordinator::{predict_centralized, train_federated};
+use sbp::data::synthetic::SyntheticSpec;
+use sbp::model::{
+    guest_file_name, host_file_name, GuestArtifact, HostArtifact, ModelError, Objective,
+    MODEL_VERSION,
+};
+use std::path::PathBuf;
+
+fn fast_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::secureboost_plus();
+    cfg.epochs = 3;
+    cfg.max_depth = 3;
+    cfg.cipher = CipherKind::Plain;
+    cfg.goss = None;
+    cfg.sparse_optimization = false;
+    cfg
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sbp-test-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    dir
+}
+
+/// Train on `spec`, save per-party artifacts, reload them, and assert
+/// the reloaded model predicts bit-identically to the in-memory shares.
+fn roundtrip_case(spec: SyntheticSpec, cfg: &TrainConfig, tag: &str) {
+    let vs = spec.generate_vertical(cfg.seed, cfg.n_hosts);
+    let rep = train_federated(&vs, cfg).expect("training run");
+    let (guest_m, host_ms) = rep.model();
+    let in_memory = predict_centralized(&guest_m, &host_ms, &vs);
+
+    let dir = temp_dir(tag);
+    let art = GuestArtifact {
+        model: guest_m,
+        objective: Objective::for_classes(vs.n_classes),
+        dataset: vs.name.clone(),
+        n_hosts: vs.hosts.len(),
+        max_bin: cfg.max_bin,
+        guest_features: vs.guest.d(),
+        seed: cfg.seed,
+        scale: 0.002,
+    };
+    art.save(&dir.join(guest_file_name())).expect("save guest");
+    for (p, hm) in host_ms.iter().enumerate() {
+        HostArtifact {
+            model: hm.clone(),
+            dataset: vs.name.clone(),
+            n_features: vs.hosts[p].d(),
+            n_hosts: vs.hosts.len(),
+            seed: cfg.seed,
+            scale: 0.002,
+        }
+        .save(&dir.join(host_file_name(p)))
+        .expect("save host");
+    }
+
+    let guest2 = GuestArtifact::load(&dir.join(guest_file_name())).expect("load guest");
+    let host2: Vec<_> = (0..vs.hosts.len())
+        .map(|p| HostArtifact::load(&dir.join(host_file_name(p))).expect("load host").model)
+        .collect();
+    assert_eq!(guest2.objective, art.objective);
+    assert_eq!(guest2.dataset, vs.name);
+    assert_eq!(guest2.model.trees.len(), art.model.trees.len());
+
+    let reloaded = predict_centralized(&guest2.model, &host2, &vs);
+    assert_eq!(
+        reloaded, in_memory,
+        "{tag}: reloaded model must predict bit-identically to the in-memory shares"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn roundtrip_binary_plain() {
+    roundtrip_case(SyntheticSpec::give_credit(0.002), &fast_cfg(), "bin-plain");
+}
+
+#[test]
+fn roundtrip_binary_paillier() {
+    let mut cfg = fast_cfg();
+    cfg.cipher = CipherKind::Paillier;
+    cfg.key_bits = 512;
+    cfg.epochs = 2;
+    roundtrip_case(SyntheticSpec::give_credit(0.001), &cfg, "bin-paillier");
+}
+
+#[test]
+fn roundtrip_binary_affine() {
+    let mut cfg = fast_cfg();
+    cfg.cipher = CipherKind::IterativeAffine;
+    cfg.key_bits = 1024;
+    cfg.epochs = 2;
+    roundtrip_case(SyntheticSpec::give_credit(0.001), &cfg, "bin-affine");
+}
+
+#[test]
+fn roundtrip_multiclass_one_vs_all() {
+    let mut cfg = fast_cfg();
+    cfg.epochs = 2;
+    roundtrip_case(SyntheticSpec::sensorless(0.003), &cfg, "mc-ova");
+}
+
+#[test]
+fn roundtrip_multiclass_multi_output() {
+    let mut cfg = fast_cfg();
+    cfg.epochs = 2;
+    cfg.mode = ModeKind::MultiOutput;
+    cfg.cipher_compression = false;
+    roundtrip_case(SyntheticSpec::sensorless(0.003), &cfg, "mc-mo");
+}
+
+#[test]
+fn roundtrip_two_hosts() {
+    let mut cfg = fast_cfg();
+    cfg.n_hosts = 2;
+    roundtrip_case(SyntheticSpec::higgs(0.0002), &cfg, "two-hosts");
+}
+
+/// A real saved artifact, for the damage tests below.
+fn saved_guest_artifact(tag: &str) -> (PathBuf, String) {
+    let vs = SyntheticSpec::give_credit(0.001).generate_vertical(3, 1);
+    let cfg = fast_cfg();
+    let rep = train_federated(&vs, &cfg).expect("training run");
+    let (guest_m, _) = rep.model();
+    let dir = temp_dir(tag);
+    let art = GuestArtifact {
+        model: guest_m,
+        objective: Objective::BinaryLogistic,
+        dataset: vs.name.clone(),
+        n_hosts: 1,
+        max_bin: cfg.max_bin,
+        guest_features: vs.guest.d(),
+        seed: cfg.seed,
+        scale: 0.001,
+    };
+    let path = dir.join(guest_file_name());
+    art.save(&path).expect("save guest");
+    let text = std::fs::read_to_string(&path).expect("read back");
+    (path, text)
+}
+
+#[test]
+fn truncated_file_rejected() {
+    let (path, text) = saved_guest_artifact("truncated");
+    for frac in [0.1, 0.5, 0.9] {
+        let cut = (text.len() as f64 * frac) as usize;
+        std::fs::write(&path, &text[..cut]).unwrap();
+        match GuestArtifact::load(&path) {
+            Err(ModelError::Parse(_)) | Err(ModelError::Format(_)) => {}
+            other => panic!("truncation at {frac} must be rejected, got {other:?}"),
+        }
+    }
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+#[test]
+fn garbage_and_missing_files_rejected() {
+    let dir = temp_dir("garbage");
+    let path = dir.join(guest_file_name());
+    assert!(matches!(GuestArtifact::load(&path), Err(ModelError::Io(_))), "missing file");
+    std::fs::write(&path, "not json at all {{{").unwrap();
+    assert!(matches!(GuestArtifact::load(&path), Err(ModelError::Parse(_))));
+    std::fs::write(&path, "{\"format\": \"something-else\", \"version\": 1}").unwrap();
+    assert!(matches!(GuestArtifact::load(&path), Err(ModelError::Format(_))));
+    std::fs::write(&path, "{}").unwrap();
+    assert!(matches!(GuestArtifact::load(&path), Err(ModelError::Format(_))));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn version_mismatch_rejected_at_load() {
+    let (path, text) = saved_guest_artifact("version");
+    let bumped = text.replacen(
+        &format!("\"version\": {MODEL_VERSION}"),
+        &format!("\"version\": {}", MODEL_VERSION + 1),
+        1,
+    );
+    assert_ne!(bumped, text, "version field must be present to rewrite");
+    std::fs::write(&path, bumped).unwrap();
+    match GuestArtifact::load(&path) {
+        Err(ModelError::Version { found, supported }) => {
+            assert_eq!(found, MODEL_VERSION + 1);
+            assert_eq!(supported, MODEL_VERSION);
+        }
+        other => panic!("expected version error, got {other:?}"),
+    }
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+#[test]
+fn role_mismatch_rejected_at_load() {
+    let (path, _) = saved_guest_artifact("role");
+    assert!(matches!(HostArtifact::load(&path), Err(ModelError::Format(_))));
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+#[test]
+fn corrupted_payload_rejected_not_panicking() {
+    let (path, text) = saved_guest_artifact("payload");
+    let v = Json::parse(&text).unwrap();
+    // splice out-of-range child indices into the first split node
+    let corrupted = text.replacen("\"left\": 1", "\"left\": 100000", 1);
+    if corrupted != text {
+        std::fs::write(&path, &corrupted).unwrap();
+        assert!(matches!(GuestArtifact::load(&path), Err(ModelError::Format(_))));
+    }
+    // drop the objective entirely
+    if let Json::Obj(mut m) = v {
+        if let Some(Json::Obj(p)) = m.get_mut("payload") {
+            p.remove("objective");
+        }
+        std::fs::write(&path, Json::Obj(m).to_string_pretty()).unwrap();
+        assert!(matches!(GuestArtifact::load(&path), Err(ModelError::Format(_))));
+    }
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}

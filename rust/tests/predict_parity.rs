@@ -1,0 +1,156 @@
+//! Federated-inference parity tests: the batched prediction protocol
+//! must produce bit-identical outputs to colocated inference over both
+//! transports, and both transports must account identical wire bytes.
+
+use sbp::config::{CipherKind, TrainConfig};
+use sbp::coordinator::{
+    predict_centralized, predict_federated_in_memory, predict_federated_tcp, train_federated,
+    TrainReport,
+};
+use sbp::data::dataset::VerticalSplit;
+use sbp::data::synthetic::SyntheticSpec;
+use sbp::federation::message::{ToGuestKind, ToHostKind};
+use sbp::federation::predict::serve_predict_once;
+use sbp::metrics::auc;
+use sbp::tree::predict::HostModel;
+
+fn fast_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::secureboost_plus();
+    cfg.epochs = 4;
+    cfg.max_depth = 3;
+    cfg.cipher = CipherKind::Plain;
+    cfg.goss = None;
+    cfg.sparse_optimization = false;
+    cfg
+}
+
+/// Serve every host share over loopback TCP and run a federated predict.
+fn predict_over_tcp(
+    rep_model: &sbp::tree::predict::GuestModel,
+    host_models: &[HostModel],
+    vs: &VerticalSplit,
+) -> sbp::coordinator::PredictReport {
+    let mut addrs = Vec::new();
+    let mut servers = Vec::new();
+    for (p, hm) in host_models.iter().enumerate() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        addrs.push(listener.local_addr().unwrap().to_string());
+        let model = hm.clone();
+        let slice = vs.hosts[p].clone();
+        servers.push(std::thread::spawn(move || {
+            serve_predict_once(&listener, model, slice).expect("serve predict");
+        }));
+    }
+    let report =
+        predict_federated_tcp(rep_model, &vs.guest, &addrs).expect("tcp federated predict");
+    for s in servers {
+        s.join().expect("predict server thread");
+    }
+    report
+}
+
+fn train(spec: SyntheticSpec, cfg: &TrainConfig) -> (VerticalSplit, TrainReport) {
+    let vs = spec.generate_vertical(cfg.seed, cfg.n_hosts);
+    let rep = train_federated(&vs, cfg).expect("training run");
+    (vs, rep)
+}
+
+#[test]
+fn federated_predict_matches_centralized_exactly() {
+    let (vs, rep) = train(SyntheticSpec::give_credit(0.002), &fast_cfg());
+    let (guest_m, host_ms) = rep.model();
+
+    let cen = predict_centralized(&guest_m, &host_ms, &vs);
+    let mem = predict_federated_in_memory(&guest_m, &host_ms, &vs).unwrap();
+    let tcp = predict_over_tcp(&guest_m, &host_ms, &vs);
+
+    assert_eq!(mem.preds, cen, "in-memory federated must equal colocated bit for bit");
+    assert_eq!(tcp.preds, cen, "tcp federated must equal colocated bit for bit");
+    assert_eq!(mem.n_rows, vs.n());
+
+    // prediction quality equals training-time quality (no sampling)
+    let a = auc(&vs.y, &cen);
+    assert!(
+        (a - rep.train_metric).abs() < 1e-9,
+        "inference AUC {a} vs training metric {}",
+        rep.train_metric
+    );
+}
+
+#[test]
+fn transports_account_identical_bytes() {
+    let (vs, rep) = train(SyntheticSpec::give_credit(0.002), &fast_cfg());
+    let (guest_m, host_ms) = rep.model();
+
+    let mem = predict_federated_in_memory(&guest_m, &host_ms, &vs).unwrap();
+    let tcp = predict_over_tcp(&guest_m, &host_ms, &vs);
+
+    // NetCounters parity: the in-memory links charge the exact serialized
+    // frame sizes the TCP transport actually sent, per kind and direction
+    assert_eq!(mem.comm, tcp.comm, "per-kind wire accounting must match across transports");
+    assert!(mem.comm.total_bytes() > 0, "host splits must have been consulted");
+    assert_eq!(
+        mem.comm.to_host_kind_bytes.iter().sum::<u64>(),
+        mem.comm.bytes_to_host
+    );
+    assert_eq!(
+        mem.comm.to_guest_kind_bytes.iter().sum::<u64>(),
+        mem.comm.bytes_to_guest
+    );
+    // only inference-phase message kinds flow: PredictRoute + Shutdown
+    // guest→host, RouteAnswers host→guest
+    for k in ToHostKind::ALL {
+        let msgs = mem.comm.to_host_kind_msgs[k.index()];
+        match k {
+            ToHostKind::PredictRoute | ToHostKind::Shutdown => {}
+            _ => assert_eq!(msgs, 0, "unexpected {} traffic in inference", k.name()),
+        }
+    }
+    for k in ToGuestKind::ALL {
+        let msgs = mem.comm.to_guest_kind_msgs[k.index()];
+        match k {
+            ToGuestKind::RouteAnswers => {}
+            _ => assert_eq!(msgs, 0, "unexpected {} traffic in inference", k.name()),
+        }
+    }
+    // batched level-wise routing: at most one PredictRoute round trip per
+    // tree depth (not per sample, not per tree)
+    let route_msgs = mem.comm.to_host_kind_msgs[ToHostKind::PredictRoute.index()];
+    assert!(
+        route_msgs <= fast_cfg().max_depth as u64,
+        "{route_msgs} routing round trips for depth {}",
+        fast_cfg().max_depth
+    );
+}
+
+#[test]
+fn multi_host_predict_parity() {
+    let mut cfg = fast_cfg();
+    cfg.n_hosts = 2;
+    let (vs, rep) = train(SyntheticSpec::higgs(0.0002), &cfg);
+    let (guest_m, host_ms) = rep.model();
+    assert_eq!(host_ms.len(), 2);
+
+    let cen = predict_centralized(&guest_m, &host_ms, &vs);
+    let mem = predict_federated_in_memory(&guest_m, &host_ms, &vs).unwrap();
+    let tcp = predict_over_tcp(&guest_m, &host_ms, &vs);
+    assert_eq!(mem.preds, cen);
+    assert_eq!(tcp.preds, cen);
+    assert_eq!(mem.comm, tcp.comm);
+}
+
+#[test]
+fn multiclass_predict_parity() {
+    let mut cfg = fast_cfg();
+    cfg.epochs = 2;
+    let (vs, rep) = train(SyntheticSpec::sensorless(0.003), &cfg);
+    let (guest_m, host_ms) = rep.model();
+    assert_eq!(guest_m.pred_width, vs.n_classes);
+
+    let cen = predict_centralized(&guest_m, &host_ms, &vs);
+    let mem = predict_federated_in_memory(&guest_m, &host_ms, &vs).unwrap();
+    let tcp = predict_over_tcp(&guest_m, &host_ms, &vs);
+    assert_eq!(mem.preds, cen);
+    assert_eq!(tcp.preds, cen);
+    assert_eq!(mem.comm, tcp.comm);
+}

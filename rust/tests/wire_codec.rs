@@ -101,6 +101,8 @@ fn sample_to_host_messages(suite: &CipherSuite, rng: &mut ChaCha20Rng) -> Vec<To
         ToHost::FinishTree { tree_id: 8 },
         ToHost::DumpSplitTable,
         ToHost::Shutdown,
+        ToHost::PredictRoute { queries: vec![(0, 1), (5, 2), (9, 0)] },
+        ToHost::PredictRoute { queries: Vec::new() },
     ]
 }
 
@@ -129,6 +131,8 @@ fn sample_to_guest_messages(suite: &CipherSuite, rng: &mut ChaCha20Rng) -> Vec<T
             entries: vec![(0, 7, 1.5), (1, 0, -3.25), (2, 255, f64::MAX)],
         },
         ToGuest::Ack,
+        ToGuest::RouteAnswers { n: 11, bits: vec![0b1010_1010, 0b0000_0101] },
+        ToGuest::RouteAnswers { n: 0, bits: Vec::new() },
     ]
 }
 
