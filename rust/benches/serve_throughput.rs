@@ -1,0 +1,132 @@
+//! Serving-throughput benchmark for the long-lived inference service:
+//! sessions/sec, rows/sec, and routing-cache hit rate of one host
+//! process multiplexing many guest sessions, at cache capacities
+//! 0 (off) / small / large.
+//!
+//! The full serving stack is exercised, not simulated: one
+//! `serve_predict_tcp` loop per capacity (thread-per-session over
+//! loopback framed TCP), a fresh `SessionHello`-handshaked client
+//! session per pass over the batch, every session asserted bit-identical
+//! to the colocated oracle. Output goes to `BENCH_serve.json` at the
+//! repository root (override with `SBP_BENCH_OUT`); rerun with
+//! `cargo bench --bench serve_throughput`.
+
+mod common;
+
+use sbp::config::json::Json;
+use sbp::config::{CipherKind, TrainConfig};
+use sbp::coordinator::{
+    predict_centralized, predict_sessions_tcp, serve_predict_tcp, train_federated,
+};
+use sbp::data::synthetic::SyntheticSpec;
+use sbp::federation::predict::PredictOptions;
+use sbp::federation::serve::ServeConfig;
+
+const SESSIONS: usize = 6;
+const CONCURRENCY: usize = 2;
+
+fn main() {
+    let m = common::scale_mult();
+    let epochs = common::bench_epochs(10);
+    let spec = SyntheticSpec::give_credit(0.02 * m); // 3,000 × 10 at default scale
+    let mut cfg = TrainConfig::secureboost_plus();
+    cfg.epochs = epochs;
+    cfg.cipher = CipherKind::Plain; // inference routes plaintext
+    cfg.goss = None;
+
+    println!("\n=== Serving throughput: multi-session inference service ===");
+    println!(
+        "dataset {} scale {:.3} epochs {epochs} sessions {SESSIONS} (concurrency {CONCURRENCY})\n",
+        spec.name,
+        0.02 * m
+    );
+    let vs = spec.generate_vertical(cfg.seed, 1);
+    let report = train_federated(&vs, &cfg).expect("training run");
+    println!("trained: {}", report.summary());
+    let (guest_m, host_ms) = report.model();
+    let oracle = predict_centralized(&guest_m, &host_ms, &vs);
+    let n = vs.n();
+
+    let mut table = sbp::bench_harness::Table::new(&[
+        "cache", "sessions", "rows/sec", "sessions/sec", "hit rate", "B/query",
+    ]);
+    let mut points: Vec<Json> = Vec::new();
+    for capacity in [0usize, 4096, 1 << 16] {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        let addr = listener.local_addr().unwrap().to_string();
+        let model = host_ms[0].clone();
+        let slice = vs.hosts[0].clone();
+        let server = std::thread::spawn(move || {
+            serve_predict_tcp(
+                &listener,
+                model,
+                slice,
+                ServeConfig { cache_capacity: capacity, ..ServeConfig::default() },
+                SESSIONS,
+            )
+            .expect("serve loop")
+        });
+
+        let t0 = std::time::Instant::now();
+        let reports = predict_sessions_tcp(
+            &guest_m,
+            &vs.guest,
+            &[addr],
+            SESSIONS,
+            CONCURRENCY,
+            PredictOptions::default(),
+        )
+        .expect("client sessions");
+        let wall = t0.elapsed().as_secs_f64();
+        let serve_report = server.join().expect("server thread");
+
+        for r in &reports {
+            assert_eq!(
+                r.preds, oracle,
+                "session {} must be bit-identical to colocated (cache {capacity})",
+                r.session_id
+            );
+        }
+        let rows_per_sec = (SESSIONS * n) as f64 / wall.max(1e-12);
+        let sessions_per_sec = SESSIONS as f64 / wall.max(1e-12);
+        let hit_rate = serve_report.cache.hit_rate();
+        table.row(&[
+            capacity.to_string(),
+            SESSIONS.to_string(),
+            format!("{rows_per_sec:.0}"),
+            format!("{sessions_per_sec:.1}"),
+            format!("{:.1}%", hit_rate * 100.0),
+            format!("{:.1}", serve_report.bytes_per_query),
+        ]);
+        points.push(Json::obj(vec![
+            ("cache_capacity", Json::Num(capacity as f64)),
+            ("sessions", Json::Num(SESSIONS as f64)),
+            ("rows_per_sec", Json::Num((rows_per_sec * 10.0).round() / 10.0)),
+            ("sessions_per_sec", Json::Num((sessions_per_sec * 10.0).round() / 10.0)),
+            ("cache_hit_rate", Json::Num((hit_rate * 1000.0).round() / 1000.0)),
+            (
+                "bytes_per_query",
+                Json::Num((serve_report.bytes_per_query * 10.0).round() / 10.0),
+            ),
+            ("queries_answered", Json::Num(serve_report.queries_answered as f64)),
+        ]));
+    }
+    table.print();
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("serve_throughput".into())),
+        ("dataset", Json::Str(vs.name.clone())),
+        ("rows", Json::Num(n as f64)),
+        ("trees", Json::Num(guest_m.trees.len() as f64)),
+        ("sessions", Json::Num(SESSIONS as f64)),
+        ("concurrency", Json::Num(CONCURRENCY as f64)),
+        ("capacities", Json::Arr(points)),
+        (
+            "note",
+            Json::Str("regenerate with `cargo bench --bench serve_throughput`".into()),
+        ),
+    ]);
+    let out = std::env::var("SBP_BENCH_OUT").unwrap_or_else(|_| "../BENCH_serve.json".into());
+    std::fs::write(&out, doc.to_string_pretty()).expect("write bench json");
+    println!("\nwrote {out}");
+}

@@ -268,6 +268,15 @@ pub struct PredictReport {
     pub bytes_per_row: f64,
     /// Which transport carried the routing queries.
     pub transport: &'static str,
+    /// Serving-session id this batch ran under
+    /// ([`crate::federation::message::SESSIONLESS_ID`] for the legacy
+    /// single-shot flow).
+    pub session_id: u32,
+    /// Routing queries resolved from the session memo instead of the
+    /// wire (cache-suppressed queries).
+    pub suppressed_queries: u64,
+    /// Decoy queries padded into this session's batches.
+    pub decoy_queries: u64,
 }
 
 impl PredictReport {
@@ -290,7 +299,23 @@ impl PredictReport {
             bytes_per_row: comm.total_bytes() as f64 / n_rows.max(1) as f64,
             comm,
             transport,
+            session_id: crate::federation::message::SESSIONLESS_ID,
+            suppressed_queries: 0,
+            decoy_queries: 0,
         }
+    }
+
+    /// Attach serving-session statistics (builder style).
+    pub fn with_session(
+        mut self,
+        session_id: u32,
+        suppressed_queries: u64,
+        decoy_queries: u64,
+    ) -> PredictReport {
+        self.session_id = session_id;
+        self.suppressed_queries = suppressed_queries;
+        self.decoy_queries = decoy_queries;
+        self
     }
 }
 
@@ -401,6 +426,199 @@ pub fn predict_federated_tcp(
         comm,
         "tcp",
     ))
+}
+
+/// One serving session over framed TCP against live `sbp serve-predict`
+/// hosts: `SessionHello` handshake, one scored batch, `SessionClose`.
+/// The servers keep running afterwards — this is the client half of the
+/// long-lived inference service. `session_id` must be nonzero.
+pub fn predict_session_tcp(
+    model: &GuestModel,
+    guest_slice: &crate::data::dataset::PartySlice,
+    addrs: &[String],
+    session_id: u32,
+    opts: crate::federation::predict::PredictOptions,
+) -> Result<PredictReport> {
+    let wall0 = std::time::Instant::now();
+    let suite = CipherSuite::new_plain(64); // inference frames carry no ciphertexts
+    let mut links: Vec<Box<dyn GuestTransport>> = Vec::with_capacity(addrs.len());
+    for addr in addrs {
+        let t = TcpGuestTransport::connect(addr, suite.clone())
+            .map_err(|e| anyhow!("connecting to predict host at {addr}: {e}"))?;
+        links.push(Box::new(t));
+    }
+    let mut session = crate::federation::predict::PredictSession::new(model, session_id, opts);
+    session.open(&links);
+    let preds = session.predict_batch(guest_slice, &links);
+    let suppressed = session.suppressed_queries();
+    let decoys = session.decoy_queries();
+    session.close(&links);
+    let comm = links
+        .iter()
+        .map(|l| l.snapshot())
+        .fold(NetSnapshot::default(), |acc, s| acc.add(&s));
+    Ok(PredictReport::new(
+        preds,
+        model.pred_width,
+        guest_slice.n,
+        wall0.elapsed().as_secs_f64(),
+        comm,
+        "tcp-session",
+    )
+    .with_session(session_id, suppressed, decoys))
+}
+
+/// Run `n_sessions` serving sessions against live hosts with a
+/// **sliding window** of `concurrency` workers (1 = strictly
+/// sequential): each worker starts the next pending session the moment
+/// its previous one completes, so one slow session never convoys the
+/// rest of the window. Each session scores the full `guest_slice` batch
+/// with fresh connections and a fresh memo. Session ids are
+/// `1..=n_sessions`; reports come back in session order. This is the
+/// client mode of `sbp predict --sessions N`.
+pub fn predict_sessions_tcp(
+    model: &GuestModel,
+    guest_slice: &crate::data::dataset::PartySlice,
+    addrs: &[String],
+    n_sessions: usize,
+    concurrency: usize,
+    opts: crate::federation::predict::PredictOptions,
+) -> Result<Vec<PredictReport>> {
+    let workers = concurrency.max(1).min(n_sessions.max(1));
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let results: std::sync::Mutex<Vec<Option<Result<PredictReport>>>> =
+        std::sync::Mutex::new((0..n_sessions).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let s = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if s >= n_sessions {
+                    break;
+                }
+                let report = predict_session_tcp(model, guest_slice, addrs, (s + 1) as u32, opts);
+                if let Ok(mut slots) = results.lock() {
+                    slots[s] = Some(report);
+                }
+            });
+        }
+    });
+    let results = results.into_inner().unwrap_or_else(|e| e.into_inner());
+    let mut out = Vec::with_capacity(n_sessions);
+    for (s, slot) in results.into_iter().enumerate() {
+        match slot {
+            Some(Ok(report)) => out.push(report),
+            Some(Err(e)) => return Err(e),
+            None => return Err(anyhow!("session {} did not complete", s + 1)),
+        }
+    }
+    Ok(out)
+}
+
+/// Ask each serving host to wind down gracefully: open a *handshaked*
+/// control session per address and send `Shutdown` inside it —
+/// administrative stop is reserved to protocol speakers, so a legacy
+/// client's hello-less `Shutdown` can never stop a server. Active
+/// sessions drain; the serve loops stop accepting
+/// ([`crate::federation::serve::serve_predict_loop`]).
+pub fn shutdown_predict_hosts(addrs: &[String]) -> Result<()> {
+    let suite = CipherSuite::new_plain(64);
+    for addr in addrs {
+        let t = TcpGuestTransport::connect(addr, suite.clone())
+            .map_err(|e| anyhow!("connecting to predict host at {addr}: {e}"))?;
+        t.send(ToHost::SessionHello {
+            session_id: u32::MAX, // conventional control-session id
+            protocol: crate::federation::message::SERVE_PROTOCOL_VERSION,
+        });
+        let ToGuest::SessionAccept { .. } = t.recv() else {
+            return Err(anyhow!("predict host at {addr} rejected the control session"));
+        };
+        t.send(ToHost::Shutdown);
+    }
+    Ok(())
+}
+
+/// Aggregate outcome of one completed multi-session serving run (the
+/// host side of the long-lived inference service).
+#[derive(Debug)]
+pub struct ServeReport {
+    /// The most recent per-session reports, in completion order (id,
+    /// queries, wall, exact per-session wire traffic) — capped at
+    /// [`crate::federation::serve::RETAINED_SESSION_REPORTS`].
+    pub sessions: Vec<crate::federation::serve::SessionReport>,
+    /// Per-session reports dropped after the retention cap was hit
+    /// (aggregates below still cover them exactly).
+    pub sessions_dropped: u64,
+    /// Sessions served.
+    pub n_sessions: usize,
+    /// Routing queries answered across all sessions.
+    pub queries_answered: u64,
+    /// Routing-cache counters (shared across sessions).
+    pub cache: crate::federation::serve::CacheStats,
+    /// Exact serialized wire traffic across all sessions.
+    pub comm: NetSnapshot,
+    /// Wall time of the whole serve loop.
+    pub wall_seconds: f64,
+    /// `n_sessions / wall_seconds`.
+    pub sessions_per_sec: f64,
+    /// `queries_answered / wall_seconds` — the host-side row-routing
+    /// throughput.
+    pub queries_per_sec: f64,
+    /// `comm.total_bytes() / queries_answered`.
+    pub bytes_per_query: f64,
+}
+
+impl ServeReport {
+    /// One-line service summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "served {} session(s): {} queries, {:.0} queries/s, {:.1} B/query, \
+             cache {}/{} hit/miss ({:.1}% hit rate)",
+            self.n_sessions,
+            self.queries_answered,
+            self.queries_per_sec,
+            self.bytes_per_query,
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.hit_rate() * 100.0,
+        )
+    }
+}
+
+/// Serve one host's model share as a long-lived multi-session inference
+/// service on `listener`: thread-per-session off accepted connections,
+/// shared load-once model and LRU routing cache, until `max_sessions`
+/// serving sessions have **completed** (0 = until
+/// [`shutdown_predict_hosts`] requests wind-down; stray connections that
+/// do no serving work consume no budget). This is the body of the
+/// looping `sbp serve-predict` subcommand.
+pub fn serve_predict_tcp(
+    listener: &std::net::TcpListener,
+    model: HostModel,
+    slice: crate::data::dataset::PartySlice,
+    cfg: crate::federation::serve::ServeConfig,
+    max_sessions: usize,
+) -> Result<ServeReport> {
+    let state = crate::federation::serve::HostServeState::new(model, slice, cfg);
+    let wall0 = std::time::Instant::now();
+    let loop_report =
+        crate::federation::serve::serve_predict_loop(listener, &state, max_sessions)
+            .map_err(|e| anyhow!("serve loop failed: {e}"))?;
+    let wall = wall0.elapsed().as_secs_f64();
+    let n_sessions = state.sessions_served() as usize;
+    let comm = loop_report.comm;
+    let queries_answered = state.queries_answered();
+    Ok(ServeReport {
+        n_sessions,
+        queries_answered,
+        cache: state.cache_stats(),
+        comm,
+        wall_seconds: wall,
+        sessions_per_sec: n_sessions as f64 / wall.max(1e-12),
+        queries_per_sec: queries_answered as f64 / wall.max(1e-12),
+        bytes_per_query: comm.total_bytes() as f64 / queries_answered.max(1) as f64,
+        sessions_dropped: loop_report.sessions_dropped,
+        sessions: loop_report.sessions,
+    })
 }
 
 /// Train the centralized (XGBoost-style) local baseline on the

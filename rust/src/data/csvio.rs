@@ -1,0 +1,228 @@
+//! Minimal CSV loading for serving **arbitrary data** through a saved
+//! model (ROADMAP "model lifecycle ergonomics"): each party loads its
+//! own CSV and maps its model features to columns *by header name*, so
+//! `sbp predict` / `sbp serve-predict` are no longer tied to the
+//! regenerated synthetic presets.
+//!
+//! Format: one header line of comma-separated column names, then one
+//! numeric row per record. Values are parsed as `f64`; cells may not be
+//! empty. No quoting/escaping — column names and values must not contain
+//! commas (the in-tree datagen emitter never produces them). Record id =
+//! row index, so every party's CSV must list the **same records in the
+//! same order** — exactly the alignment contract the synthetic presets
+//! already rely on.
+
+use crate::data::dataset::PartySlice;
+use std::path::Path;
+
+/// A parsed CSV file: header names plus a dense row-major cell matrix.
+#[derive(Clone, Debug)]
+pub struct CsvTable {
+    /// Column names from the header line, in file order.
+    pub headers: Vec<String>,
+    /// Number of data rows.
+    pub rows: usize,
+    /// Row-major `rows × headers.len()` cell values.
+    pub cells: Vec<f64>,
+}
+
+impl CsvTable {
+    /// Parse a CSV from text (see the module docs for the dialect).
+    pub fn parse(text: &str) -> Result<CsvTable, String> {
+        let mut lines = text.lines().map(|l| l.trim_end_matches('\r'));
+        let header_line = loop {
+            match lines.next() {
+                Some(l) if l.trim().is_empty() => continue,
+                Some(l) => break l,
+                None => return Err("empty file: no header line".into()),
+            }
+        };
+        let headers: Vec<String> =
+            header_line.split(',').map(|h| h.trim().to_string()).collect();
+        if headers.iter().any(|h| h.is_empty()) {
+            return Err("header contains an empty column name".into());
+        }
+        for (i, h) in headers.iter().enumerate() {
+            if headers[..i].contains(h) {
+                return Err(format!("duplicate column name '{h}' in header"));
+            }
+        }
+        let d = headers.len();
+        let mut cells = Vec::new();
+        let mut rows = 0usize;
+        for (lineno, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue; // tolerate blank lines (e.g. a trailing newline)
+            }
+            let mut fields = 0usize;
+            for field in line.split(',') {
+                let field = field.trim();
+                let v: f64 = field.parse().map_err(|_| {
+                    format!(
+                        "row {} column {} ('{}'): not a number",
+                        lineno + 2, // 1-based, counting the header line
+                        fields + 1,
+                        field
+                    )
+                })?;
+                cells.push(v);
+                fields += 1;
+            }
+            if fields != d {
+                return Err(format!(
+                    "row {} has {} field(s), header has {}",
+                    lineno + 2,
+                    fields,
+                    d
+                ));
+            }
+            rows += 1;
+        }
+        Ok(CsvTable { headers, rows, cells })
+    }
+
+    /// Load and parse a CSV file.
+    pub fn load(path: &Path) -> Result<CsvTable, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Index of a named column.
+    pub fn column_index(&self, name: &str) -> Option<usize> {
+        self.headers.iter().position(|h| h == name)
+    }
+
+    /// One column's values by name.
+    pub fn column(&self, name: &str) -> Result<Vec<f64>, String> {
+        let d = self.headers.len();
+        let c = self
+            .column_index(name)
+            .ok_or_else(|| format!("no column named '{name}' in header"))?;
+        Ok((0..self.rows).map(|r| self.cells[r * d + c]).collect())
+    }
+
+    /// Build this party's feature slice from a **header-driven feature →
+    /// column map**: model feature `i` reads the column named
+    /// `features[i]`. With `features = None`, all columns are taken in
+    /// file order (minus `exclude`, typically the label column).
+    pub fn party_slice(
+        &self,
+        features: Option<&[String]>,
+        exclude: Option<&str>,
+    ) -> Result<PartySlice, String> {
+        let d = self.headers.len();
+        let cols: Vec<usize> = match features {
+            Some(names) => names
+                .iter()
+                .map(|name| {
+                    self.column_index(name)
+                        .ok_or_else(|| format!("feature map names unknown column '{name}'"))
+                })
+                .collect::<Result<Vec<_>, String>>()?,
+            None => (0..d).filter(|&c| Some(self.headers[c].as_str()) != exclude).collect(),
+        };
+        if cols.is_empty() {
+            return Err("feature map selects no columns".into());
+        }
+        let mut x = Vec::with_capacity(self.rows * cols.len());
+        for r in 0..self.rows {
+            for &c in &cols {
+                x.push(self.cells[r * d + c]);
+            }
+        }
+        Ok(PartySlice { cols, x, n: self.rows })
+    }
+}
+
+/// Write one party's rows as a CSV with the canonical preset header
+/// (`f<global column index>` per feature, plus a final `label` column
+/// when labels are given) — the emitter side of the `--data` lifecycle,
+/// used by `sbp datagen --emit`.
+pub fn write_party_csv(
+    path: &Path,
+    slice: &PartySlice,
+    labels: Option<&[f64]>,
+) -> Result<(), String> {
+    if let Some(y) = labels {
+        if y.len() != slice.n {
+            return Err(format!("{} labels for {} rows", y.len(), slice.n));
+        }
+    }
+    let d = slice.d();
+    let mut out = String::new();
+    for (j, c) in slice.cols.iter().enumerate() {
+        if j > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("f{c}"));
+    }
+    if labels.is_some() {
+        out.push_str(",label");
+    }
+    out.push('\n');
+    for r in 0..slice.n {
+        for j in 0..d {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{}", slice.x[r * d + j]));
+        }
+        if let Some(y) = labels {
+            out.push_str(&format!(",{}", y[r]));
+        }
+        out.push('\n');
+    }
+    std::fs::write(path, out).map_err(|e| format!("writing {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_header_and_rows() {
+        let t = CsvTable::parse("a, b ,c\n1,2.5,-3\n4,5,6e1\n").unwrap();
+        assert_eq!(t.headers, vec!["a", "b", "c"]);
+        assert_eq!(t.rows, 2);
+        assert_eq!(t.cells, vec![1.0, 2.5, -3.0, 4.0, 5.0, 60.0]);
+        assert_eq!(t.column("b").unwrap(), vec![2.5, 5.0]);
+        assert!(t.column("nope").is_err());
+    }
+
+    #[test]
+    fn header_driven_feature_map_selects_and_reorders() {
+        let t = CsvTable::parse("x,y,label\n1,2,0\n3,4,1\n").unwrap();
+        // feature 0 ← column "y", feature 1 ← column "x"
+        let s = t.party_slice(Some(&["y".to_string(), "x".to_string()]), None).unwrap();
+        assert_eq!(s.d(), 2);
+        assert_eq!(s.x, vec![2.0, 1.0, 4.0, 3.0]);
+        // default map: every column except the excluded label
+        let s = t.party_slice(None, Some("label")).unwrap();
+        assert_eq!(s.cols, vec![0, 1]);
+        assert_eq!(s.x, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn rejects_malformed_inputs() {
+        assert!(CsvTable::parse("").is_err());
+        assert!(CsvTable::parse("a,a\n1,2\n").is_err(), "duplicate header");
+        assert!(CsvTable::parse("a,b\n1\n").is_err(), "short row");
+        assert!(CsvTable::parse("a,b\n1,x\n").is_err(), "non-numeric cell");
+        let t = CsvTable::parse("a,b\n1,2\n").unwrap();
+        assert!(t.party_slice(Some(&["c".to_string()]), None).is_err());
+    }
+
+    #[test]
+    fn emit_then_load_roundtrips() {
+        let slice = PartySlice { cols: vec![3, 5], x: vec![1.5, -2.0, 0.25, 9.0], n: 2 };
+        let path = std::env::temp_dir().join(format!("sbp-csvio-{}.csv", std::process::id()));
+        write_party_csv(&path, &slice, Some(&[1.0, 0.0])).unwrap();
+        let t = CsvTable::load(&path).unwrap();
+        assert_eq!(t.headers, vec!["f3", "f5", "label"]);
+        let back = t.party_slice(None, Some("label")).unwrap();
+        assert_eq!(back.x, slice.x);
+        assert_eq!(t.column("label").unwrap(), vec![1.0, 0.0]);
+        let _ = std::fs::remove_file(&path);
+    }
+}

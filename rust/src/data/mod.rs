@@ -1,8 +1,10 @@
 //! Data handling: dense matrices, vertical partitioning, quantile binning
-//! (sparse-aware), GOSS subsampling, and the synthetic dataset generators
-//! that stand in for the paper's evaluation corpora (DESIGN.md §3).
+//! (sparse-aware), GOSS subsampling, the synthetic dataset generators
+//! that stand in for the paper's evaluation corpora (DESIGN.md §3), and
+//! CSV ingestion for serving arbitrary data through a saved model.
 
 pub mod binning;
+pub mod csvio;
 pub mod dataset;
 pub mod goss;
 pub mod sparse;

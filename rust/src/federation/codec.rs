@@ -630,14 +630,20 @@ pub fn encode_to_host(suite: &CipherSuite, ct_len: usize, msg: &ToHost) -> Vec<u
             put_u32_list(&mut out, left);
         }
         ToHost::FinishTree { tree_id } => put_u32(&mut out, *tree_id),
-        ToHost::DumpSplitTable | ToHost::Shutdown => {}
-        ToHost::PredictRoute { queries } => {
+        ToHost::DumpSplitTable | ToHost::Shutdown | ToHost::KeepAlive => {}
+        ToHost::PredictRoute { session, queries } => {
+            put_u32(&mut out, *session);
             put_u32(&mut out, queries.len() as u32);
             for (row, handle) in queries {
                 put_u32(&mut out, *row);
                 put_u32(&mut out, *handle);
             }
         }
+        ToHost::SessionHello { session_id, protocol } => {
+            put_u32(&mut out, *session_id);
+            put_u32(&mut out, *protocol);
+        }
+        ToHost::SessionClose { session_id } => put_u32(&mut out, *session_id),
     }
     debug_assert_eq!(out.len() + FRAME_HEADER_LEN, to_host_wire_len(msg, ct_len));
     out
@@ -733,13 +739,30 @@ pub fn decode_to_host(
         6 => ToHost::DumpSplitTable,
         7 => ToHost::Shutdown,
         8 => {
+            let session = r.u32()?;
             let n = r.seq_len(8)?;
             let mut queries = Vec::with_capacity(n);
             for _ in 0..n {
                 queries.push((r.u32()?, r.u32()?));
             }
-            ToHost::PredictRoute { queries }
+            ToHost::PredictRoute { session, queries }
         }
+        9 => {
+            let session_id = r.u32()?;
+            let protocol = r.u32()?;
+            // a hello must announce a real (nonzero) session and a
+            // protocol version this build speaks — anything else is a
+            // malformed handshake the serving host rejects up front
+            if session_id == crate::federation::message::SESSIONLESS_ID {
+                return Err(WireError::Malformed("SessionHello with reserved session id 0"));
+            }
+            if protocol != crate::federation::message::SERVE_PROTOCOL_VERSION {
+                return Err(WireError::Malformed("unsupported serve protocol version"));
+            }
+            ToHost::SessionHello { session_id, protocol }
+        }
+        10 => ToHost::SessionClose { session_id: r.u32()? },
+        11 => ToHost::KeepAlive,
         t => return Err(WireError::BadTag { what: "to-host message", tag: t }),
     };
     r.finish()?;
@@ -773,10 +796,15 @@ pub fn encode_to_guest(suite: &CipherSuite, ct_len: usize, msg: &ToGuest) -> Vec
             }
         }
         ToGuest::Ack => {}
-        ToGuest::RouteAnswers { n, bits } => {
+        ToGuest::RouteAnswers { session, n, bits } => {
             assert_eq!(bits.len(), (*n as usize).div_ceil(8), "answer bitmap sized to n");
+            put_u32(&mut out, *session);
             put_u32(&mut out, *n);
             out.extend_from_slice(bits);
+        }
+        ToGuest::SessionAccept { session_id, max_inflight } => {
+            put_u32(&mut out, *session_id);
+            put_u32(&mut out, *max_inflight);
         }
     }
     debug_assert_eq!(out.len() + FRAME_HEADER_LEN, to_guest_wire_len(msg, ct_len));
@@ -821,13 +849,15 @@ pub fn decode_to_guest(
         }
         3 => ToGuest::Ack,
         4 => {
+            let session = r.u32()?;
             let n = r.u32()?;
             let n_bytes = (n as usize).div_ceil(8);
             if n_bytes > r.remaining() {
                 return Err(WireError::Malformed("answer bitmap exceeds frame"));
             }
-            ToGuest::RouteAnswers { n, bits: r.take(n_bytes)?.to_vec() }
+            ToGuest::RouteAnswers { session, n, bits: r.take(n_bytes)?.to_vec() }
         }
+        5 => ToGuest::SessionAccept { session_id: r.u32()?, max_inflight: r.u32()? },
         t => return Err(WireError::BadTag { what: "to-guest message", tag: t }),
     };
     r.finish()?;
@@ -865,8 +895,10 @@ pub fn to_host_wire_len(msg: &ToHost, ct_len: usize) -> usize {
             ToHost::ApplySplit { instances, .. } => 12 + 4 + instances.len() * 4,
             ToHost::SyncAssign { left, .. } => 16 + 4 + left.len() * 4,
             ToHost::FinishTree { .. } => 4,
-            ToHost::DumpSplitTable | ToHost::Shutdown => 0,
-            ToHost::PredictRoute { queries } => 4 + queries.len() * 8,
+            ToHost::DumpSplitTable | ToHost::Shutdown | ToHost::KeepAlive => 0,
+            ToHost::PredictRoute { queries, .. } => 4 + 4 + queries.len() * 8,
+            ToHost::SessionHello { .. } => 8,
+            ToHost::SessionClose { .. } => 4,
         }
 }
 
@@ -885,7 +917,8 @@ pub fn to_guest_wire_len(msg: &ToGuest, ct_len: usize) -> usize {
             ToGuest::LeftInstances { left, .. } => 8 + 4 + left.len() * 4,
             ToGuest::SplitTable { entries } => 4 + entries.len() * 13,
             ToGuest::Ack => 0,
-            ToGuest::RouteAnswers { n, .. } => 4 + (*n as usize).div_ceil(8),
+            ToGuest::RouteAnswers { n, .. } => 4 + 4 + (*n as usize).div_ceil(8),
+            ToGuest::SessionAccept { .. } => 8,
         }
 }
 
@@ -1047,24 +1080,25 @@ mod tests {
     fn predict_messages_roundtrip_and_match_wire_len() {
         let suite = CipherSuite::new_plain(128);
         let ct_len = suite.ct_byte_len();
-        let q = ToHost::PredictRoute { queries: vec![(0, 5), (17, 2), (9, 9)] };
+        let q = ToHost::PredictRoute { session: 7, queries: vec![(0, 5), (17, 2), (9, 9)] };
         let payload = encode_to_host(&suite, ct_len, &q);
         assert_eq!(payload.len() + FRAME_HEADER_LEN, to_host_wire_len(&q, ct_len));
         // PredictRoute carries no ciphertexts, so it decodes without Setup
         let back = decode_to_host(None, &payload).unwrap();
-        let ToHost::PredictRoute { queries } = back else { panic!("wrong kind") };
+        let ToHost::PredictRoute { session, queries } = back else { panic!("wrong kind") };
+        assert_eq!(session, 7);
         assert_eq!(queries, vec![(0, 5), (17, 2), (9, 9)]);
 
         for n in [0u32, 1, 7, 8, 9, 64] {
             let bits = vec![0xA5u8; (n as usize).div_ceil(8)];
-            let a = ToGuest::RouteAnswers { n, bits: bits.clone() };
+            let a = ToGuest::RouteAnswers { session: 3, n, bits: bits.clone() };
             let payload = encode_to_guest(&suite, ct_len, &a);
             assert_eq!(payload.len() + FRAME_HEADER_LEN, to_guest_wire_len(&a, ct_len));
             let back = decode_to_guest(&suite, ct_len, &payload).unwrap();
-            assert_eq!(back, ToGuest::RouteAnswers { n, bits });
+            assert_eq!(back, ToGuest::RouteAnswers { session: 3, n, bits });
         }
         // truncated bitmap rejected, not panicked
-        let a = ToGuest::RouteAnswers { n: 64, bits: vec![0u8; 8] };
+        let a = ToGuest::RouteAnswers { session: 3, n: 64, bits: vec![0u8; 8] };
         let mut payload = encode_to_guest(&suite, ct_len, &a);
         payload.truncate(payload.len() - 3);
         assert!(decode_to_guest(&suite, ct_len, &payload).is_err());

@@ -11,6 +11,18 @@ use crate::crypto::cipher::Ct;
 use crate::crypto::compress::CtPackage;
 use std::sync::Arc;
 
+/// Version of the *serving* session protocol spoken after a
+/// [`ToHost::SessionHello`]. Bumps whenever the meaning of a serving
+/// frame changes incompatibly (query encoding, answer packing, session
+/// semantics). The wire codec rejects hellos for any other version —
+/// a serving host must never half-understand a session.
+pub const SERVE_PROTOCOL_VERSION: u32 = 1;
+
+/// Session id reserved for the legacy *sessionless* inference flow
+/// (a bare `PredictRoute` without a preceding handshake). Real sessions
+/// pick a nonzero id; the codec rejects a `SessionHello` claiming id 0.
+pub const SESSIONLESS_ID: u32 = 0;
+
 /// Which parties may propose splits in a layer (mechanism modes, §5).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CandidateMask {
@@ -67,10 +79,16 @@ pub enum ToHostKind {
     Shutdown = 7,
     /// Batched inference routing queries (federated prediction phase).
     PredictRoute = 8,
+    /// Open a serving session (long-lived inference service).
+    SessionHello = 9,
+    /// Close a serving session without tearing down the server.
+    SessionClose = 10,
+    /// Liveness probe for an idle serving session.
+    KeepAlive = 11,
 }
 
 /// Number of guest→host message kinds.
-pub const TO_HOST_KINDS: usize = 9;
+pub const TO_HOST_KINDS: usize = 12;
 
 impl ToHostKind {
     /// Every guest→host kind, in tag order.
@@ -84,6 +102,9 @@ impl ToHostKind {
         ToHostKind::DumpSplitTable,
         ToHostKind::Shutdown,
         ToHostKind::PredictRoute,
+        ToHostKind::SessionHello,
+        ToHostKind::SessionClose,
+        ToHostKind::KeepAlive,
     ];
 
     /// Wire tag byte / per-kind counter index.
@@ -103,6 +124,9 @@ impl ToHostKind {
             ToHostKind::DumpSplitTable => "DumpSplitTable",
             ToHostKind::Shutdown => "Shutdown",
             ToHostKind::PredictRoute => "PredictRoute",
+            ToHostKind::SessionHello => "SessionHello",
+            ToHostKind::SessionClose => "SessionClose",
+            ToHostKind::KeepAlive => "KeepAlive",
         }
     }
 }
@@ -121,10 +145,12 @@ pub enum ToGuestKind {
     Ack = 3,
     /// Bit-packed answers to a `PredictRoute` batch.
     RouteAnswers = 4,
+    /// Acceptance of a [`ToHostKind::SessionHello`] handshake.
+    SessionAccept = 5,
 }
 
 /// Number of host→guest message kinds.
-pub const TO_GUEST_KINDS: usize = 5;
+pub const TO_GUEST_KINDS: usize = 6;
 
 impl ToGuestKind {
     /// Every host→guest kind, in tag order.
@@ -134,6 +160,7 @@ impl ToGuestKind {
         ToGuestKind::SplitTable,
         ToGuestKind::Ack,
         ToGuestKind::RouteAnswers,
+        ToGuestKind::SessionAccept,
     ];
 
     /// Wire tag byte / per-kind counter index.
@@ -149,6 +176,7 @@ impl ToGuestKind {
             ToGuestKind::SplitTable => "SplitTable",
             ToGuestKind::Ack => "Ack",
             ToGuestKind::RouteAnswers => "RouteAnswers",
+            ToGuestKind::SessionAccept => "SessionAccept",
         }
     }
 }
@@ -199,9 +227,37 @@ pub enum ToHost {
     /// already reveals), but never the tree position, other parties'
     /// routing decisions, leaf values, or the final prediction.
     PredictRoute {
+        /// The serving session this batch belongs to
+        /// ([`SESSIONLESS_ID`] for the legacy single-shot flow).
+        session: u32,
         /// `(record id, split handle)` per query, in query order.
         queries: Vec<(u32, u32)>,
     },
+    /// Open a long-lived serving session: the guest announces a nonzero
+    /// session id of its choosing and the serve-protocol version it
+    /// speaks. The host answers [`ToGuest::SessionAccept`] (echoing the
+    /// id) or closes the connection. Carries no model or feature data —
+    /// a hello reveals nothing beyond "a client arrived".
+    SessionHello {
+        /// Client-chosen nonzero session id, echoed on every frame of
+        /// the session so a multiplexing host can attribute traffic.
+        session_id: u32,
+        /// Must equal [`SERVE_PROTOCOL_VERSION`]; the codec rejects
+        /// anything else at decode time.
+        protocol: u32,
+    },
+    /// End one serving session cleanly. The server keeps running and
+    /// keeps accepting new sessions. ([`ToHost::Shutdown`] sent *inside
+    /// a handshaked session* instead asks the whole serving process to
+    /// wind down; on a hello-less legacy connection `Shutdown` only
+    /// ends that connection.)
+    SessionClose {
+        /// The session being closed (must match the hello).
+        session_id: u32,
+    },
+    /// Keep-alive probe: an idle session proves liveness without
+    /// shipping queries. Answered with [`ToGuest::Ack`].
+    KeepAlive,
 }
 
 impl ToHost {
@@ -217,6 +273,9 @@ impl ToHost {
             ToHost::DumpSplitTable => ToHostKind::DumpSplitTable,
             ToHost::Shutdown => ToHostKind::Shutdown,
             ToHost::PredictRoute { .. } => ToHostKind::PredictRoute,
+            ToHost::SessionHello { .. } => ToHostKind::SessionHello,
+            ToHost::SessionClose { .. } => ToHostKind::SessionClose,
+            ToHost::KeepAlive => ToHostKind::KeepAlive,
         }
     }
 }
@@ -246,10 +305,23 @@ pub enum ToGuest {
     /// The host reveals one routing bit per consulted split and nothing
     /// else about its feature values.
     RouteAnswers {
+        /// The serving session the answered batch belongs to (echoes the
+        /// query's session id; [`SESSIONLESS_ID`] for legacy flows).
+        session: u32,
         /// Number of valid answer bits (equals the query count).
         n: u32,
         /// `⌈n/8⌉` bytes of LSB-first routing bits.
         bits: Vec<u8>,
+    },
+    /// The host accepted a [`ToHost::SessionHello`]: the session is open
+    /// and `PredictRoute` batches tagged with its id will be answered.
+    SessionAccept {
+        /// Echo of the hello's session id.
+        session_id: u32,
+        /// How many unanswered `PredictRoute` batches the session may
+        /// have in flight before the host stops reading its frames —
+        /// the bound of the host's per-session queue (backpressure).
+        max_inflight: u32,
     },
 }
 
@@ -262,6 +334,7 @@ impl ToGuest {
             ToGuest::SplitTable { .. } => ToGuestKind::SplitTable,
             ToGuest::Ack => ToGuestKind::Ack,
             ToGuest::RouteAnswers { .. } => ToGuestKind::RouteAnswers,
+            ToGuest::SessionAccept { .. } => ToGuestKind::SessionAccept,
         }
     }
 }

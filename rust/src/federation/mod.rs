@@ -22,15 +22,21 @@
 //! model.
 
 //! Beyond training, the same transports carry the *federated inference*
-//! phase ([`predict`]): the guest resolves host-owned splits with batched
+//! phase: the guest resolves host-owned splits with batched
 //! [`message::ToHost::PredictRoute`] routing queries against each host's
 //! private split table — see [`crate::model`] for the per-party model
-//! artifacts this phase serves.
+//! artifacts this phase serves. Inference is split into a guest-side
+//! session engine ([`predict`], with [`predict::PredictSession`]) and a
+//! host-side multi-session serving engine ([`serve`], with the shared
+//! LRU routing cache): one long-lived host process multiplexes many
+//! concurrent guest sessions opened by a
+//! [`message::ToHost::SessionHello`] handshake.
 
 pub mod codec;
 pub mod guest;
 pub mod host;
 pub mod message;
 pub mod predict;
+pub mod serve;
 pub mod tcp;
 pub mod transport;

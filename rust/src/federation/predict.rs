@@ -1,4 +1,6 @@
-//! Federated batch inference over the pluggable transport layer.
+//! Federated batch inference over the pluggable transport layer — the
+//! **guest side** of the serving stack ([`super::serve`] is the host
+//! side).
 //!
 //! Reproduces the paper's *federated inference* phase (SecureBoost
 //! §"Federated Inference"): the guest walks each sample down its trees;
@@ -13,6 +15,17 @@
 //! `max_depth` round trips per host, independent of batch size and tree
 //! count.
 //!
+//! [`PredictSession`] is the reusable per-session state machine behind
+//! the long-lived service: it opens with a `SessionHello` handshake,
+//! scores any number of batches over one shared immutable model, keeps a
+//! per-session **routing memo** so a `(host, record, handle)` decision
+//! learned once is never re-queried (those are the protocol's
+//! *cache-suppressed* queries, counted per session), optionally pads
+//! every outgoing batch with decoy queries to blunt the host's view of
+//! the access pattern, and closes with `SessionClose`. The legacy
+//! single-shot [`federated_predict`] is a thin hello-less wrapper over
+//! one sessionless batch.
+//!
 //! Privacy directions:
 //!
 //! - the **guest** learns one routing bit per consulted host split —
@@ -21,6 +34,12 @@
 //! - a **host** learns which of its split handles are consulted for
 //!   which record ids, but never the tree position of a split, the
 //!   routing decisions of other parties, leaf values, or predictions.
+//!   Decoy padding ([`PredictOptions::dummy_queries`]) dilutes that
+//!   access pattern: decoys are drawn from the same record and handle
+//!   population as real queries **and shuffled into the batch** (a
+//!   fixed-position tail would be trivially separable), so the host
+//!   cannot tell them apart, and their (correct) answers are simply
+//!   discarded by the guest.
 //!
 //! Both the in-memory ([`spawn_predict_host`]) and framed-TCP
 //! ([`serve_predict_once`]) deployments run this exact message flow, and
@@ -28,91 +47,68 @@
 //! [`super::transport::NetCounters`] — asserted by
 //! `tests/predict_parity.rs`.
 
-use super::message::{ToGuest, ToHost};
-use super::transport::{GuestTransport, HostLink, HostTransport};
+use super::message::{ToGuest, ToHost, SERVE_PROTOCOL_VERSION, SESSIONLESS_ID};
+use super::serve::{serve_session, HostServeState, ServeConfig, SessionOutcome};
+use super::transport::{GuestTransport, HostTransport};
 use crate::data::dataset::PartySlice;
 use crate::tree::node::SplitRef;
 use crate::tree::predict::{GuestModel, HostModel};
+use crate::util::rng::Xoshiro256;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
 
-/// Host-side inference service: the host's private model share plus its
-/// raw feature rows keyed by record id. Answers [`ToHost::PredictRoute`]
-/// batches until `Shutdown`/close.
+/// Host-side inference service for **one** session: the host's model
+/// share plus its raw feature rows keyed by record id. Answers
+/// [`ToHost::PredictRoute`] batches until the session ends. Kept as the
+/// single-session veneer over [`super::serve::HostServeState`] — the
+/// looping, cache-enabled, multi-session service lives in
+/// [`super::serve`].
 pub struct PredictHostParty<T: HostTransport> {
-    model: HostModel,
-    slice: PartySlice,
+    state: std::sync::Arc<HostServeState>,
     link: T,
 }
 
 impl<T: HostTransport> PredictHostParty<T> {
     /// Build a serving party from a loaded host model share and the
-    /// host's feature slice (record id = row index).
+    /// host's feature slice (record id = row index). Caching is off —
+    /// single-session servers see no repeat traffic worth memoizing.
     pub fn new(model: HostModel, slice: PartySlice, link: T) -> Self {
-        PredictHostParty { model, slice, link }
+        let state = HostServeState::new(
+            model,
+            slice,
+            ServeConfig { cache_capacity: 0, ..ServeConfig::default() },
+        );
+        PredictHostParty { state, link }
     }
 
-    /// Serve routing queries until `Shutdown` or transport close.
-    pub fn run(self) {
-        let d = self.slice.d();
-        while let Some(msg) = self.link.recv() {
-            match msg {
-                ToHost::PredictRoute { queries } => {
-                    let n = queries.len();
-                    let mut bits = vec![0u8; n.div_ceil(8)];
-                    for (i, (row, handle)) in queries.iter().enumerate() {
-                        let left = self.goes_left(*row as usize, *handle as usize, d);
-                        if left {
-                            bits[i / 8] |= 1 << (i % 8);
-                        }
-                    }
-                    self.link.send(ToGuest::RouteAnswers { n: n as u32, bits });
-                }
-                ToHost::Shutdown => break,
-                other => {
-                    // inference sessions speak only PredictRoute/Shutdown;
-                    // anything else is a protocol error — close rather
-                    // than answer wrong
-                    eprintln!(
-                        "[sbp-predict-host] unexpected {:?} message in inference session, closing",
-                        other.kind()
-                    );
-                    break;
-                }
-            }
-        }
-    }
-
-    /// Bounds-checked routing: malformed queries (unknown record or
-    /// handle) route right and are reported, rather than panicking the
-    /// serving party.
-    fn goes_left(&self, row: usize, handle: usize, d: usize) -> bool {
-        if row >= self.slice.n || handle >= self.model.splits.len() {
-            eprintln!(
-                "[sbp-predict-host] query out of range (row {row}, handle {handle}); \
-                 answering right"
-            );
-            return false;
-        }
-        self.model.goes_left(handle as u32, &self.slice.x[row * d..(row + 1) * d])
+    /// Serve routing queries until the session closes (by
+    /// `SessionClose`, `Shutdown`, or transport close).
+    pub fn run(self) -> SessionOutcome {
+        serve_session(&self.state, self.link)
     }
 }
 
-/// Spawn an in-process inference host thread over an mpsc [`HostLink`]
-/// (the in-memory analogue of [`serve_predict_once`]).
-pub fn spawn_predict_host(
+/// Spawn an in-process inference host thread over any owned host
+/// transport (the in-memory analogue of [`serve_predict_once`]).
+pub fn spawn_predict_host<T: HostTransport + Send + 'static>(
     model: HostModel,
     slice: PartySlice,
-    link: HostLink,
+    link: T,
 ) -> std::thread::JoinHandle<()> {
     let party = model.party;
     std::thread::Builder::new()
         .name(format!("sbp-predict-host-{party}"))
-        .spawn(move || PredictHostParty::new(model, slice, link).run())
+        .spawn(move || {
+            PredictHostParty::new(model, slice, link).run();
+        })
         .expect("spawn predict host thread")
 }
 
 /// Accept one guest connection on `listener` and serve inference routing
-/// queries over it until `Shutdown`/close. Returns the peer address.
-/// This is the body of the `sbp serve-predict` subcommand.
+/// queries over it until the session ends. Returns the peer address.
+/// Single-session body of `sbp serve-predict --max-sessions 1`; the
+/// looping multi-session variant is
+/// [`super::serve::serve_predict_loop`].
 pub fn serve_predict_once(
     listener: &std::net::TcpListener,
     model: HostModel,
@@ -124,6 +120,29 @@ pub fn serve_predict_once(
     Ok(peer)
 }
 
+/// Per-session client knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct PredictOptions {
+    /// Decoy queries shuffled into every outgoing `PredictRoute` batch
+    /// (per host). 0 disables padding.
+    pub dummy_queries: usize,
+    /// Seed of the per-session decoy stream (mixed with the session id,
+    /// so concurrent sessions draw different decoys). **Defaults to OS
+    /// entropy**: decoys only obfuscate if the host cannot predict them,
+    /// and any value derivable from artifact metadata (like the training
+    /// seed, which host artifacts also record) would let the host replay
+    /// the decoy stream and strip the padding. Fix it explicitly only
+    /// for reproducible tests and benches.
+    pub seed: u64,
+}
+
+impl Default for PredictOptions {
+    fn default() -> Self {
+        let mut entropy = crate::util::rng::ChaCha20Rng::from_os_entropy();
+        PredictOptions { dummy_queries: 0, seed: entropy.next_u64() }
+    }
+}
+
 /// One in-flight (tree, sample) walk.
 struct Cursor {
     tree: u32,
@@ -131,92 +150,226 @@ struct Cursor {
     node: u32,
 }
 
-/// Drive batched federated inference for every row of `guest` (record
-/// id = row index on every party) and return the raw margin matrix,
-/// row-major `n × pred_width` — bit-identical to colocated
-/// [`GuestModel::predict_row`] on the same shares.
-///
-/// `links` must hold one [`GuestTransport`] per host party referenced by
-/// the model, in party order, each connected to a serving
-/// [`PredictHostParty`].
-pub fn federated_predict(
-    model: &GuestModel,
-    guest: &PartySlice,
-    links: &[Box<dyn GuestTransport>],
-) -> Vec<f64> {
-    let n = guest.n;
-    let d = guest.d();
-    let n_trees = model.trees.len();
-    // every referenced host party must have a connected link
-    for (tree, _) in &model.trees {
-        for node in &tree.nodes {
-            if let Some(SplitRef::Host { party, .. }) = &node.split {
-                assert!(
-                    (*party as usize) < links.len(),
-                    "model references host party {party} but only {} link(s) are connected",
-                    links.len()
-                );
-            }
-        }
-    }
-    // final leaf per (tree, sample); filled as cursors finish
-    let mut final_node: Vec<u32> = vec![0; n_trees * n];
-    let mut active: Vec<Cursor> = Vec::with_capacity(n_trees * n);
-    for t in 0..n_trees {
-        for i in 0..n {
-            active.push(Cursor { tree: t as u32, row: i as u32, node: 0 });
-        }
+/// A reusable guest-side prediction session over a shared, load-once
+/// model: handshake, any number of scored batches, close. See the module
+/// docs for the memo ("cache-suppressed" queries) and decoy semantics.
+pub struct PredictSession<'a> {
+    model: &'a GuestModel,
+    session_id: u32,
+    opts: PredictOptions,
+    /// `(host party, record id, handle) → routing bit`, filled from every
+    /// `RouteAnswers` frame of this session (decoys included — their
+    /// answers are correct too).
+    memo: HashMap<(u8, u32, u32), bool>,
+    /// Per-party pool of host handles the model references (decoy pool:
+    /// decoys are indistinguishable from real consultations).
+    host_handles: Vec<Vec<u32>>,
+    rng: Xoshiro256,
+    suppressed: u64,
+    decoys: u64,
+}
+
+impl<'a> PredictSession<'a> {
+    /// Create a session with a client-chosen nonzero id.
+    pub fn new(model: &'a GuestModel, session_id: u32, opts: PredictOptions) -> Self {
+        assert_ne!(session_id, SESSIONLESS_ID, "session id 0 is reserved for the legacy flow");
+        Self::build(model, session_id, opts)
     }
 
-    while !active.is_empty() {
-        // ---- phase A: advance through guest-owned splits / settle leaves
-        let mut i = 0;
-        while i < active.len() {
-            let c = &mut active[i];
-            let (tree, _class) = &model.trees[c.tree as usize];
-            let guest_row = &guest.x[c.row as usize * d..(c.row as usize + 1) * d];
-            let mut finished = false;
-            loop {
-                let node = &tree.nodes[c.node as usize];
-                match &node.split {
-                    None => {
-                        final_node[c.tree as usize * n + c.row as usize] = c.node;
-                        finished = true;
-                        break;
+    /// The legacy hello-less session ([`SESSIONLESS_ID`]): what
+    /// [`federated_predict`] runs under.
+    pub fn sessionless(model: &'a GuestModel) -> Self {
+        Self::build(model, SESSIONLESS_ID, PredictOptions::default())
+    }
+
+    fn build(model: &'a GuestModel, session_id: u32, opts: PredictOptions) -> Self {
+        let mut host_handles: Vec<Vec<u32>> = Vec::new();
+        for (tree, _) in &model.trees {
+            for node in &tree.nodes {
+                if let Some(SplitRef::Host { party, handle }) = &node.split {
+                    let p = *party as usize;
+                    if host_handles.len() <= p {
+                        host_handles.resize_with(p + 1, Vec::new);
                     }
-                    Some(SplitRef::Guest { feature, threshold, .. }) => {
-                        let left = guest_row[*feature as usize] <= *threshold;
-                        c.node = if left { node.left as u32 } else { node.right as u32 };
-                    }
-                    Some(SplitRef::Host { .. }) => break, // needs a host answer
+                    host_handles[p].push(*handle);
                 }
             }
-            if finished {
-                active.swap_remove(i); // swapped-in cursor re-processed at i
-            } else {
-                i += 1;
-            }
         }
-        if active.is_empty() {
-            break;
+        for pool in &mut host_handles {
+            pool.sort_unstable();
+            pool.dedup();
+        }
+        PredictSession {
+            model,
+            session_id,
+            opts,
+            memo: HashMap::new(),
+            host_handles,
+            rng: Xoshiro256::seed_from_u64(opts.seed ^ (session_id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            suppressed: 0,
+            decoys: 0,
+        }
+    }
+
+    /// This session's id.
+    pub fn session_id(&self) -> u32 {
+        self.session_id
+    }
+
+    /// Queries resolved from the session memo instead of the wire
+    /// (including within-batch duplicates collapsed before sending).
+    pub fn suppressed_queries(&self) -> u64 {
+        self.suppressed
+    }
+
+    /// Decoy queries sent so far.
+    pub fn decoy_queries(&self) -> u64 {
+        self.decoys
+    }
+
+    /// Open the session: one `SessionHello` per host, each answered by a
+    /// `SessionAccept` echoing the id. Panics on a rejected handshake —
+    /// the guest cannot proceed against a host that refused it.
+    pub fn open(&self, links: &[Box<dyn GuestTransport>]) {
+        for link in links {
+            link.send(ToHost::SessionHello {
+                session_id: self.session_id,
+                protocol: SERVE_PROTOCOL_VERSION,
+            });
+        }
+        for (p, link) in links.iter().enumerate() {
+            let msg = link.recv();
+            let ToGuest::SessionAccept { session_id, .. } = msg else {
+                panic!("host {p} rejected the session handshake")
+            };
+            assert_eq!(
+                session_id, self.session_id,
+                "host {p} accepted a different session id"
+            );
+        }
+    }
+
+    /// Probe every host of an idle session (`KeepAlive` → `Ack`).
+    pub fn keep_alive(&self, links: &[Box<dyn GuestTransport>]) {
+        for link in links {
+            link.send(ToHost::KeepAlive);
+        }
+        for (p, link) in links.iter().enumerate() {
+            let ToGuest::Ack = link.recv() else {
+                panic!("host {p} answered a keep-alive with a non-Ack")
+            };
+        }
+    }
+
+    /// Close the session on every host. The servers keep running and
+    /// keep accepting new sessions.
+    pub fn close(self, links: &[Box<dyn GuestTransport>]) {
+        for link in links {
+            link.send(ToHost::SessionClose { session_id: self.session_id });
+        }
+    }
+
+    /// Drive batched federated inference for every row of `guest`
+    /// (record id = row index on every party) and return the raw margin
+    /// matrix, row-major `n × pred_width` — bit-identical to colocated
+    /// [`GuestModel::predict_row`] on the same shares, with or without
+    /// memo suppression and decoy padding.
+    ///
+    /// `links` must hold one [`GuestTransport`] per host party referenced
+    /// by the model, in party order, each connected to a serving host.
+    pub fn predict_batch(
+        &mut self,
+        guest: &PartySlice,
+        links: &[Box<dyn GuestTransport>],
+    ) -> Vec<f64> {
+        let model = self.model;
+        let n = guest.n;
+        let d = guest.d();
+        let n_trees = model.trees.len();
+        // every referenced host party must have a connected link;
+        // `host_handles` (built once per session) already records the
+        // highest referenced party, so this is O(1) per batch
+        assert!(
+            self.host_handles.len() <= links.len(),
+            "model references host parties up to {} but only {} link(s) are connected",
+            self.host_handles.len().saturating_sub(1),
+            links.len()
+        );
+        // final leaf per (tree, sample); filled as cursors finish
+        let mut final_node: Vec<u32> = vec![0; n_trees * n];
+        let mut active: Vec<Cursor> = Vec::with_capacity(n_trees * n);
+        for t in 0..n_trees {
+            for i in 0..n {
+                active.push(Cursor { tree: t as u32, row: i as u32, node: 0 });
+            }
         }
 
-        // ---- phase B: one PredictRoute per host for every pending walk
-        let mut pending: Vec<Vec<usize>> = vec![Vec::new(); links.len()];
-        for (idx, c) in active.iter().enumerate() {
-            let (tree, _) = &model.trees[c.tree as usize];
-            let Some(SplitRef::Host { party, .. }) = &tree.nodes[c.node as usize].split else {
-                unreachable!("phase A leaves cursors at host splits only")
-            };
-            pending[*party as usize].push(idx);
-        }
-        for (p, idxs) in pending.iter().enumerate() {
-            if idxs.is_empty() {
-                continue;
+        while !active.is_empty() {
+            // ---- phase A: advance through guest-owned splits and
+            // memo-answered host splits / settle leaves
+            let mut i = 0;
+            while i < active.len() {
+                let c = &mut active[i];
+                let (tree, _class) = &model.trees[c.tree as usize];
+                let guest_row = &guest.x[c.row as usize * d..(c.row as usize + 1) * d];
+                let mut finished = false;
+                loop {
+                    let node = &tree.nodes[c.node as usize];
+                    match &node.split {
+                        None => {
+                            final_node[c.tree as usize * n + c.row as usize] = c.node;
+                            finished = true;
+                            break;
+                        }
+                        Some(SplitRef::Guest { feature, threshold, .. }) => {
+                            let left = guest_row[*feature as usize] <= *threshold;
+                            c.node = if left { node.left as u32 } else { node.right as u32 };
+                        }
+                        Some(SplitRef::Host { party, handle }) => {
+                            // a decision this session already learned
+                            // never crosses the wire again
+                            match self.memo.get(&(*party, c.row, *handle)) {
+                                Some(&left) => {
+                                    self.suppressed += 1;
+                                    c.node =
+                                        if left { node.left as u32 } else { node.right as u32 };
+                                }
+                                None => break, // needs a host answer
+                            }
+                        }
+                    }
+                }
+                if finished {
+                    active.swap_remove(i); // swapped-in cursor re-processed at i
+                } else {
+                    i += 1;
+                }
             }
-            let queries: Vec<(u32, u32)> = idxs
-                .iter()
-                .map(|&idx| {
+            if active.is_empty() {
+                break;
+            }
+
+            // ---- phase B: one PredictRoute per host for every pending
+            // walk, duplicates collapsed, decoys appended
+            let mut pending: Vec<Vec<usize>> = vec![Vec::new(); links.len()];
+            for (idx, c) in active.iter().enumerate() {
+                let (tree, _) = &model.trees[c.tree as usize];
+                let Some(SplitRef::Host { party, .. }) = &tree.nodes[c.node as usize].split
+                else {
+                    unreachable!("phase A leaves cursors at host splits only")
+                };
+                pending[*party as usize].push(idx);
+            }
+            // (host, cursor idxs, queries sent, answer slot per cursor)
+            let mut rounds: Vec<(usize, Vec<usize>, Vec<(u32, u32)>, Vec<usize>)> = Vec::new();
+            for (p, idxs) in pending.into_iter().enumerate() {
+                if idxs.is_empty() {
+                    continue;
+                }
+                let mut queries: Vec<(u32, u32)> = Vec::new();
+                let mut qpos: HashMap<(u32, u32), usize> = HashMap::new();
+                let mut slots: Vec<usize> = Vec::with_capacity(idxs.len());
+                for &idx in &idxs {
                     let c = &active[idx];
                     let (tree, _) = &model.trees[c.tree as usize];
                     let Some(SplitRef::Host { handle, .. }) =
@@ -224,47 +377,113 @@ pub fn federated_predict(
                     else {
                         unreachable!()
                     };
-                    (c.row, *handle)
-                })
-                .collect();
-            links[p].send(ToHost::PredictRoute { queries });
-        }
-        for (p, idxs) in pending.iter().enumerate() {
-            if idxs.is_empty() {
-                continue;
+                    let key = (c.row, *handle);
+                    let slot = match qpos.entry(key) {
+                        Entry::Occupied(e) => {
+                            // same (record, handle) pending for several
+                            // trees: ask once, fan the answer out
+                            self.suppressed += 1;
+                            *e.get()
+                        }
+                        Entry::Vacant(v) => {
+                            queries.push(key);
+                            *v.insert(queries.len() - 1)
+                        }
+                    };
+                    slots.push(slot);
+                }
+                if self.opts.dummy_queries > 0 && n > 0 {
+                    let pool = self.host_handles.get(p).filter(|h| !h.is_empty());
+                    if let Some(pool) = pool {
+                        for _ in 0..self.opts.dummy_queries {
+                            let row = self.rng.next_below(n) as u32;
+                            let handle = pool[self.rng.next_below(pool.len())];
+                            queries.push((row, handle));
+                            self.decoys += 1;
+                        }
+                        // decoys must be indistinguishable by *position*
+                        // too — a fixed-size tail would be trivially
+                        // separable — so shuffle the whole batch and
+                        // remap the cursors' answer slots accordingly
+                        let mut order: Vec<usize> = (0..queries.len()).collect();
+                        self.rng.shuffle(&mut order);
+                        let mut new_pos = vec![0usize; queries.len()];
+                        for (np, &op) in order.iter().enumerate() {
+                            new_pos[op] = np;
+                        }
+                        queries = order.iter().map(|&op| queries[op]).collect();
+                        for slot in &mut slots {
+                            *slot = new_pos[*slot];
+                        }
+                    }
+                }
+                links[p].send(ToHost::PredictRoute {
+                    session: self.session_id,
+                    queries: queries.clone(),
+                });
+                rounds.push((p, idxs, queries, slots));
             }
-            let msg = links[p].recv();
-            let ToGuest::RouteAnswers { n: n_ans, bits } = msg else {
-                panic!("expected RouteAnswers from host {p}")
-            };
-            assert_eq!(n_ans as usize, idxs.len(), "host {p} answered a different batch size");
-            for (q, &idx) in idxs.iter().enumerate() {
-                let left = bits[q / 8] & (1 << (q % 8)) != 0;
-                let c = &mut active[idx];
-                let (tree, _) = &model.trees[c.tree as usize];
-                let node = &tree.nodes[c.node as usize];
-                c.node = if left { node.left as u32 } else { node.right as u32 };
-            }
-        }
-    }
-
-    // ---- accumulate leaf weights in tree order (matches predict_row's
-    // per-row summation order exactly, so results are bit-identical)
-    let k = model.pred_width;
-    let mut preds = vec![0.0f64; n * k];
-    for i in 0..n {
-        for (t, (tree, class)) in model.trees.iter().enumerate() {
-            let leaf = &tree.nodes[final_node[t * n + i] as usize];
-            if tree.width == 1 {
-                preds[i * k + *class] += leaf.weight[0];
-            } else {
-                for (j, &w) in leaf.weight.iter().enumerate() {
-                    preds[i * k + j] += w;
+            for (p, idxs, queries, slots) in rounds {
+                let msg = links[p].recv();
+                let ToGuest::RouteAnswers { session, n: n_ans, bits } = msg else {
+                    panic!("expected RouteAnswers from host {p}")
+                };
+                assert_eq!(
+                    session, self.session_id,
+                    "host {p} answered for a different session"
+                );
+                assert_eq!(
+                    n_ans as usize,
+                    queries.len(),
+                    "host {p} answered a different batch size"
+                );
+                // memoize every answered (record, handle) — decoys too
+                for (q, &(row, handle)) in queries.iter().enumerate() {
+                    let left = bits[q / 8] & (1 << (q % 8)) != 0;
+                    self.memo.insert((p as u8, row, handle), left);
+                }
+                for (k, &idx) in idxs.iter().enumerate() {
+                    let slot = slots[k];
+                    let left = bits[slot / 8] & (1 << (slot % 8)) != 0;
+                    let c = &mut active[idx];
+                    let (tree, _) = &model.trees[c.tree as usize];
+                    let node = &tree.nodes[c.node as usize];
+                    c.node = if left { node.left as u32 } else { node.right as u32 };
                 }
             }
         }
+
+        // ---- accumulate leaf weights in tree order (matches
+        // predict_row's per-row summation order exactly, so results are
+        // bit-identical)
+        let k = model.pred_width;
+        let mut preds = vec![0.0f64; n * k];
+        for i in 0..n {
+            for (t, (tree, class)) in model.trees.iter().enumerate() {
+                let leaf = &tree.nodes[final_node[t * n + i] as usize];
+                if tree.width == 1 {
+                    preds[i * k + *class] += leaf.weight[0];
+                } else {
+                    for (j, &w) in leaf.weight.iter().enumerate() {
+                        preds[i * k + j] += w;
+                    }
+                }
+            }
+        }
+        preds
     }
-    preds
+}
+
+/// Drive one sessionless batched federated prediction (the legacy
+/// single-shot flow): equivalent to a [`PredictSession`] without the
+/// hello/close handshake, under [`SESSIONLESS_ID`]. See
+/// [`PredictSession::predict_batch`] for the contract.
+pub fn federated_predict(
+    model: &GuestModel,
+    guest: &PartySlice,
+    links: &[Box<dyn GuestTransport>],
+) -> Vec<f64> {
+    PredictSession::sessionless(model).predict_batch(guest, links)
 }
 
 #[cfg(test)]
@@ -335,5 +554,63 @@ mod tests {
         let slice = PartySlice { cols: vec![0], x: vec![-0.5, 0.5], n: 2 };
         let preds = federated_predict(&m, &slice, &[]);
         assert_eq!(preds, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn session_memo_suppresses_repeat_queries_bit_identically() {
+        let (guest_m, host_m) = toy_shares();
+        let guest_slice = PartySlice { cols: vec![0], x: vec![0.1, 0.1], n: 2 };
+        let host_slice =
+            PartySlice { cols: vec![1, 2], x: vec![0.0, -2.0, 0.0, 5.0], n: 2 };
+
+        let (gl, hl) = link_pair(8);
+        let handle = spawn_predict_host(host_m, host_slice, hl);
+        let links: Vec<Box<dyn GuestTransport>> = vec![Box::new(gl)];
+        let mut session = PredictSession::new(&guest_m, 42, PredictOptions::default());
+        let first = session.predict_batch(&guest_slice, &links);
+        let snap1 = links[0].snapshot();
+        // second pass over the same rows: every host decision comes from
+        // the memo — no further PredictRoute traffic at all
+        let second = session.predict_batch(&guest_slice, &links);
+        let snap2 = links[0].snapshot();
+        assert_eq!(first, second, "memo-resolved pass must be bit-identical");
+        assert_eq!(snap1, snap2, "no wire traffic for a fully memoized batch");
+        assert!(session.suppressed_queries() >= 2);
+        links[0].send(ToHost::Shutdown);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn decoy_padding_leaves_predictions_unchanged() {
+        let (guest_m, host_m) = toy_shares();
+        let guest_slice = PartySlice { cols: vec![0], x: vec![0.1, 0.1, 0.4], n: 3 };
+        let host_slice = PartySlice {
+            cols: vec![1, 2],
+            x: vec![0.0, -2.0, 0.0, 5.0, 0.0, -1.5],
+            n: 3,
+        };
+
+        let run = |dummy_queries: usize| {
+            let (gl, hl) = link_pair(8);
+            let handle = spawn_predict_host(host_m.clone(), host_slice.clone(), hl);
+            let links: Vec<Box<dyn GuestTransport>> = vec![Box::new(gl)];
+            let mut session = PredictSession::new(
+                &guest_m,
+                7,
+                PredictOptions { dummy_queries, seed: 99 },
+            );
+            let preds = session.predict_batch(&guest_slice, &links);
+            let decoys = session.decoy_queries();
+            let bytes = links[0].snapshot().bytes_to_host;
+            links[0].send(ToHost::Shutdown);
+            handle.join().unwrap();
+            (preds, decoys, bytes)
+        };
+        let (plain, d0, b0) = run(0);
+        let (padded, d8, b8) = run(8);
+        assert_eq!(plain, padded, "decoys must not change predictions");
+        assert_eq!(d0, 0);
+        assert_eq!(d8, 8, "one padded PredictRoute batch in this walk");
+        assert!(b8 > b0, "padding must cost wire bytes");
     }
 }

@@ -1,0 +1,814 @@
+//! The host-side **inference serving engine**: a long-lived service that
+//! multiplexes many guest prediction sessions over one loaded model
+//! share, with an LRU routing cache shared across sessions.
+//!
+//! This is the serving half of the split introduced with the
+//! session-multiplexed protocol: the *guest*-side per-session walk lives
+//! in [`super::predict`] ([`super::predict::PredictSession`]); this
+//! module owns everything that runs on the serving host —
+//!
+//! - [`HostServeState`] — the shared, load-once, immutable model share
+//!   and feature slice plus the [`RoutingCache`] and service counters;
+//!   one instance serves every session of a server's lifetime;
+//! - [`serve_session`] — the per-session state machine
+//!   (`SessionHello → SessionAccept`, `PredictRoute → RouteAnswers`,
+//!   `KeepAlive → Ack`, `SessionClose`), transport-agnostic;
+//! - [`serve_predict_loop`] — the framed-TCP accept loop behind
+//!   `sbp serve-predict`: thread-per-session off accepted connections,
+//!   bounded per-session batches, graceful shutdown.
+//!
+//! ## Cache placement and correctness
+//!
+//! The cache memoizes `(record id, split handle) → routing bit` **on the
+//! host**, across batches *and across sessions*: repeat traffic from the
+//! same record population hits the same hot splits (ROADMAP "Prediction
+//! caching"), so a warm cache answers without touching the feature
+//! matrix. Because host routing is a pure function of the immutable
+//! model share and feature slice, a cached bit always equals the
+//! recomputed bit — cached and uncached serving are **bit-identical**
+//! (asserted by `tests/serve_multi_session.rs`), and the cache is
+//! invisible on the wire: every query is still answered, only host CPU
+//! is saved. Hit/miss counts are surfaced through [`CacheStats`] in
+//! `NetCounters` style.
+//!
+//! ## Backpressure
+//!
+//! Per-session queues are bounded at three levels: the transport queue
+//! ([`super::transport::link_pair_bounded`] in-process; the OS socket
+//! buffer plus strict request/response framing over TCP), the
+//! `max_inflight` bound a [`ToGuest::SessionAccept`] announces, and the
+//! [`ServeConfig::max_batch_queries`] ceiling on a single
+//! `PredictRoute` batch — a session that exceeds it is closed as a
+//! protocol error instead of growing the server's memory without bound.
+
+use super::message::{ToGuest, ToHost, SERVE_PROTOCOL_VERSION, SESSIONLESS_ID};
+use super::transport::{HostTransport, NetSnapshot};
+use crate::data::dataset::PartySlice;
+use crate::tree::predict::HostModel;
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Sentinel index for the intrusive LRU list.
+const NIL: usize = usize::MAX;
+
+/// Point-in-time routing-cache counters, in the style of
+/// [`super::transport::NetSnapshot`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that had to touch the feature matrix.
+    pub misses: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+    /// Configured capacity (0 = caching disabled).
+    pub capacity: usize,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from the cache (0.0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct LruNode {
+    key: (u32, u32),
+    bit: bool,
+    prev: usize,
+    next: usize,
+}
+
+struct LruInner {
+    map: HashMap<(u32, u32), usize>,
+    nodes: Vec<LruNode>,
+    head: usize,
+    tail: usize,
+    free: Vec<usize>,
+}
+
+impl LruInner {
+    fn detach(&mut self, i: usize) {
+        let (p, n) = (self.nodes[i].prev, self.nodes[i].next);
+        if p != NIL {
+            self.nodes[p].next = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.nodes[n].prev = p;
+        } else {
+            self.tail = p;
+        }
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.nodes[i].prev = NIL;
+        self.nodes[i].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head].prev = i;
+        } else {
+            self.tail = i;
+        }
+        self.head = i;
+    }
+}
+
+/// A bounded LRU memo of `(record id, split handle) → routing bit`,
+/// shared by every serving session of a host process. Thread-safe;
+/// `capacity = 0` disables caching entirely (every lookup misses
+/// without being counted, nothing is stored) so the uncached baseline
+/// stays allocation-free.
+pub struct RoutingCache {
+    inner: Mutex<LruInner>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl RoutingCache {
+    /// Create a cache holding at most `capacity` routing bits.
+    pub fn new(capacity: usize) -> Self {
+        RoutingCache {
+            inner: Mutex::new(LruInner {
+                map: HashMap::new(),
+                nodes: Vec::new(),
+                head: NIL,
+                tail: NIL,
+                free: Vec::new(),
+            }),
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Configured capacity (0 = caching disabled).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Lock once for a whole batch of lookups/stores — the serving hot
+    /// path takes one mutex acquisition per `PredictRoute` batch, not
+    /// per query. Caller must ensure `capacity() > 0`.
+    pub fn batch(&self) -> CacheBatch<'_> {
+        debug_assert!(self.capacity > 0, "batch() on a disabled cache");
+        CacheBatch {
+            cache: self,
+            inner: self.inner.lock().expect("routing cache poisoned"),
+        }
+    }
+
+    /// Cached routing bit for `key`, refreshing its recency on a hit.
+    pub fn lookup(&self, key: (u32, u32)) -> Option<bool> {
+        if self.capacity == 0 {
+            return None;
+        }
+        self.batch().lookup(key)
+    }
+
+    /// Remember a computed routing bit, evicting the least-recently-used
+    /// entry when full.
+    pub fn store(&self, key: (u32, u32), bit: bool) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.batch().store(key, bit)
+    }
+
+    /// Current hit/miss/occupancy counters.
+    pub fn stats(&self) -> CacheStats {
+        let entries = self.inner.lock().expect("routing cache poisoned").map.len();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries,
+            capacity: self.capacity,
+        }
+    }
+}
+
+/// A held lock over the cache for batched access (see
+/// [`RoutingCache::batch`]).
+pub struct CacheBatch<'a> {
+    cache: &'a RoutingCache,
+    inner: std::sync::MutexGuard<'a, LruInner>,
+}
+
+impl CacheBatch<'_> {
+    /// Cached routing bit for `key`, refreshing its recency on a hit.
+    pub fn lookup(&mut self, key: (u32, u32)) -> Option<bool> {
+        match self.inner.map.get(&key).copied() {
+            Some(i) => {
+                self.inner.detach(i);
+                self.inner.push_front(i);
+                self.cache.hits.fetch_add(1, Ordering::Relaxed);
+                Some(self.inner.nodes[i].bit)
+            }
+            None => {
+                self.cache.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Remember a computed routing bit, evicting the least-recently-used
+    /// entry when full.
+    pub fn store(&mut self, key: (u32, u32), bit: bool) {
+        if let Some(i) = self.inner.map.get(&key).copied() {
+            // racing sessions may store the same key twice; routing is
+            // deterministic so the bit is necessarily identical
+            self.inner.nodes[i].bit = bit;
+            self.inner.detach(i);
+            self.inner.push_front(i);
+            return;
+        }
+        if self.inner.map.len() >= self.cache.capacity {
+            let victim = self.inner.tail;
+            self.inner.detach(victim);
+            let old_key = self.inner.nodes[victim].key;
+            self.inner.map.remove(&old_key);
+            self.inner.free.push(victim);
+        }
+        let slot = match self.inner.free.pop() {
+            Some(s) => {
+                self.inner.nodes[s] = LruNode { key, bit, prev: NIL, next: NIL };
+                s
+            }
+            None => {
+                self.inner.nodes.push(LruNode { key, bit, prev: NIL, next: NIL });
+                self.inner.nodes.len() - 1
+            }
+        };
+        self.inner.map.insert(key, slot);
+        self.inner.push_front(slot);
+    }
+}
+
+/// Tunables of a serving host process.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Routing-cache capacity in entries (0 disables caching).
+    pub cache_capacity: usize,
+    /// Largest `PredictRoute` batch a session may send; bigger batches
+    /// are a protocol error and close the session (memory backpressure).
+    pub max_batch_queries: usize,
+    /// In-flight batch bound announced in `SessionAccept`. The protocol
+    /// is strictly request/response today, so this is 1.
+    pub max_inflight: u32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            cache_capacity: 1 << 16,
+            max_batch_queries: 1 << 22,
+            max_inflight: 1,
+        }
+    }
+}
+
+/// The shared, immutable state of a serving host process: one loaded
+/// model share + feature slice serving *every* session, the routing
+/// cache, and service-level counters. Cheap to clone behind an [`Arc`];
+/// sessions only read the model and share the cache.
+pub struct HostServeState {
+    model: HostModel,
+    slice: PartySlice,
+    cache: RoutingCache,
+    cfg: ServeConfig,
+    stop: AtomicBool,
+    sessions_served: AtomicU64,
+    queries_answered: AtomicU64,
+}
+
+impl HostServeState {
+    /// Build the shared serving state from a loaded host model share and
+    /// the host's feature rows (record id = row index).
+    pub fn new(model: HostModel, slice: PartySlice, cfg: ServeConfig) -> Arc<Self> {
+        Arc::new(HostServeState {
+            model,
+            slice,
+            cache: RoutingCache::new(cfg.cache_capacity),
+            cfg,
+            stop: AtomicBool::new(false),
+            sessions_served: AtomicU64::new(0),
+            queries_answered: AtomicU64::new(0),
+        })
+    }
+
+    /// Routing-cache counters (shared across all sessions).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Sessions completed so far.
+    pub fn sessions_served(&self) -> u64 {
+        self.sessions_served.load(Ordering::Relaxed)
+    }
+
+    /// Routing queries answered so far (all sessions).
+    pub fn queries_answered(&self) -> u64 {
+        self.queries_answered.load(Ordering::Relaxed)
+    }
+
+    /// Ask the serve loop to stop accepting new sessions.
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Has a graceful shutdown been requested?
+    pub fn stop_requested(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Answer one query batch through the cache, returning the bit-packed
+    /// answers — or `None` if any query is out of range (unknown record
+    /// or handle), which is a contract violation the session must be
+    /// closed over: silently answering "right" for rows this host does
+    /// not have (e.g. misaligned `--data` CSVs across parties) would
+    /// produce wrong predictions with no error anywhere. Cached and
+    /// uncached paths produce identical bits: routing is a pure function
+    /// of the immutable model share and slice.
+    fn answer(&self, queries: &[(u32, u32)]) -> Option<Vec<u8>> {
+        let d = self.slice.d();
+        for &(row, handle) in queries {
+            if row as usize >= self.slice.n || handle as usize >= self.model.splits.len() {
+                eprintln!(
+                    "[sbp-serve] query out of range (row {row} of {}, handle {handle} of {})",
+                    self.slice.n,
+                    self.model.splits.len()
+                );
+                return None;
+            }
+        }
+        let mut bits = vec![0u8; queries.len().div_ceil(8)];
+        if self.cache.capacity() == 0 {
+            for (i, &(row, handle)) in queries.iter().enumerate() {
+                let row = row as usize;
+                if self.model.goes_left(handle, &self.slice.x[row * d..(row + 1) * d]) {
+                    bits[i / 8] |= 1 << (i % 8);
+                }
+            }
+        } else {
+            // one lock acquisition per batch: concurrent sessions
+            // contend once per round trip, not once per query
+            let mut cache = self.cache.batch();
+            for (i, &(row, handle)) in queries.iter().enumerate() {
+                let left = match cache.lookup((row, handle)) {
+                    Some(bit) => bit,
+                    None => {
+                        let r = row as usize;
+                        let bit = self
+                            .model
+                            .goes_left(handle, &self.slice.x[r * d..(r + 1) * d]);
+                        cache.store((row, handle), bit);
+                        bit
+                    }
+                };
+                if left {
+                    bits[i / 8] |= 1 << (i % 8);
+                }
+            }
+        }
+        self.queries_answered.fetch_add(queries.len() as u64, Ordering::Relaxed);
+        Some(bits)
+    }
+}
+
+/// What one serving session did, reported when it ends.
+#[derive(Clone, Debug)]
+pub struct SessionOutcome {
+    /// The session's id ([`SESSIONLESS_ID`] for a legacy hello-less
+    /// client).
+    pub session_id: u32,
+    /// Routing queries answered in this session.
+    pub queries: u64,
+    /// `PredictRoute` batches answered.
+    pub batches: u64,
+    /// Keep-alive probes answered.
+    pub keep_alives: u64,
+    /// Ended by `SessionClose`/`Shutdown` (vs transport close or
+    /// protocol error).
+    pub clean_close: bool,
+    /// Wall time from first frame awaited to session end.
+    pub wall_seconds: f64,
+}
+
+impl SessionOutcome {
+    /// A connection that did no serving work — no query batches, no
+    /// keep-alives. Covers both the administrative stop connection
+    /// `shutdown_predict_hosts` opens and stray probes (port scanners,
+    /// health checks) that connect without speaking the protocol. Such
+    /// connections are excluded from session counters, reports, and the
+    /// `--max-sessions` budget.
+    pub fn is_control_only(&self) -> bool {
+        self.batches == 0 && self.keep_alives == 0
+    }
+}
+
+/// Serve one guest session over `link` until it closes: the per-session
+/// state machine of the long-lived inference service. Transport-agnostic
+/// — `sbp serve-predict` runs it over framed TCP, tests run it over
+/// in-memory links.
+///
+/// Protocol: an optional `SessionHello` (answered with `SessionAccept`)
+/// fixes the session id; every subsequent `PredictRoute` must carry that
+/// id. A hello-less session is the legacy single-shot flow and runs
+/// under [`SESSIONLESS_ID`]. Any protocol violation — double hello,
+/// wrong session id, oversized batch, a training-phase message — closes
+/// the session (never the whole server) rather than answering wrong.
+pub fn serve_session<T: HostTransport>(state: &HostServeState, link: T) -> SessionOutcome {
+    let t0 = std::time::Instant::now();
+    let mut session_id = SESSIONLESS_ID;
+    let mut hello_seen = false;
+    let mut queries = 0u64;
+    let mut batches = 0u64;
+    let mut keep_alives = 0u64;
+    let mut clean_close = false;
+    while let Some(msg) = link.recv() {
+        match msg {
+            ToHost::SessionHello { session_id: sid, protocol } => {
+                if hello_seen {
+                    eprintln!("[sbp-serve] duplicate SessionHello in session {session_id}, closing");
+                    break;
+                }
+                // the codec already rejects other versions; keep the
+                // check so in-memory links get the same contract
+                if protocol != SERVE_PROTOCOL_VERSION || sid == SESSIONLESS_ID {
+                    eprintln!("[sbp-serve] malformed SessionHello, closing");
+                    break;
+                }
+                hello_seen = true;
+                session_id = sid;
+                link.send(ToGuest::SessionAccept {
+                    session_id: sid,
+                    max_inflight: state.cfg.max_inflight,
+                });
+            }
+            ToHost::PredictRoute { session, queries: q } => {
+                if session != session_id {
+                    eprintln!(
+                        "[sbp-serve] PredictRoute for session {session} on session {session_id}, closing"
+                    );
+                    break;
+                }
+                if q.len() > state.cfg.max_batch_queries {
+                    eprintln!(
+                        "[sbp-serve] batch of {} queries exceeds the per-session bound {}, closing",
+                        q.len(),
+                        state.cfg.max_batch_queries
+                    );
+                    break;
+                }
+                let Some(bits) = state.answer(&q) else {
+                    eprintln!(
+                        "[sbp-serve] session {session_id} queried records/handles this \
+                         host does not have (misaligned data?), closing"
+                    );
+                    break;
+                };
+                queries += q.len() as u64;
+                batches += 1;
+                link.send(ToGuest::RouteAnswers { session, n: q.len() as u32, bits });
+            }
+            ToHost::KeepAlive => {
+                keep_alives += 1;
+                link.send(ToGuest::Ack);
+            }
+            ToHost::SessionClose { session_id: sid } => {
+                if sid == session_id {
+                    clean_close = true;
+                } else {
+                    eprintln!(
+                        "[sbp-serve] SessionClose for {sid} on session {session_id}, closing anyway"
+                    );
+                }
+                break;
+            }
+            ToHost::Shutdown => {
+                // administrative wind-down is reserved to *handshaked*
+                // sessions (what coordinator::shutdown_predict_hosts
+                // opens): a hello-less legacy client's trailing Shutdown
+                // — including one on a link that happened to carry zero
+                // queries — only ends its own connection, so a plain
+                // `sbp predict` can never kill a multi-session server.
+                if hello_seen {
+                    state.request_stop();
+                }
+                clean_close = true;
+                break;
+            }
+            other => {
+                eprintln!(
+                    "[sbp-serve] unexpected {:?} message in serving session, closing",
+                    other.kind()
+                );
+                break;
+            }
+        }
+    }
+    let outcome = SessionOutcome {
+        session_id,
+        queries,
+        batches,
+        keep_alives,
+        clean_close,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    };
+    if !outcome.is_control_only() {
+        state.sessions_served.fetch_add(1, Ordering::Relaxed);
+    }
+    outcome
+}
+
+/// Spawn an in-process serving session thread over any owned host
+/// transport (the in-memory analogue of one accepted TCP session).
+pub fn spawn_serve_session<T: HostTransport + Send + 'static>(
+    state: Arc<HostServeState>,
+    link: T,
+) -> std::thread::JoinHandle<SessionOutcome> {
+    std::thread::Builder::new()
+        .name("sbp-serve-session".into())
+        .spawn(move || serve_session(&state, link))
+        .expect("spawn serve session thread")
+}
+
+/// One served session as seen by the host process: its outcome, peer
+/// address, and exact per-session wire traffic.
+#[derive(Clone, Debug)]
+pub struct SessionReport {
+    /// What the session did.
+    pub outcome: SessionOutcome,
+    /// Peer address of the guest connection.
+    pub peer: String,
+    /// Exact serialized wire traffic of this session alone.
+    pub comm: NetSnapshot,
+}
+
+/// How many per-session reports a serve loop retains in memory. An
+/// unlimited (`max_sessions = 0`) server runs indefinitely; the
+/// aggregate traffic stays exact forever, but individual
+/// [`SessionReport`]s beyond this many are dropped oldest-first
+/// (counted in [`ServeLoopReport::sessions_dropped`]).
+pub const RETAINED_SESSION_REPORTS: usize = 4096;
+
+/// Bounded-memory outcome of a completed serve loop.
+#[derive(Debug, Default)]
+pub struct ServeLoopReport {
+    /// The most recent per-session reports, in completion order (at
+    /// most [`RETAINED_SESSION_REPORTS`]); control-only connections are
+    /// excluded.
+    pub sessions: Vec<SessionReport>,
+    /// Exact aggregate wire traffic across **all** served sessions,
+    /// including any whose individual reports were dropped.
+    pub comm: NetSnapshot,
+    /// Per-session reports dropped after the retention cap was hit.
+    pub sessions_dropped: u64,
+}
+
+struct LoopAccum {
+    sessions: Vec<SessionReport>,
+    comm: NetSnapshot,
+    dropped: u64,
+}
+
+/// Accept guest connections on `listener` and serve each as its own
+/// session on its own thread until `max_sessions` *serving* sessions
+/// have **completed** (0 = unlimited) or a handshaked session requests
+/// shutdown ([`ToHost::Shutdown`] after a hello →
+/// [`HostServeState::request_stop`]). Control-only connections (stray
+/// probes, the administrative stop connection) consume no session
+/// budget and produce no report.
+///
+/// This is the body of the looping `sbp serve-predict` subcommand: one
+/// host process, many concurrent guest sessions, one shared model share
+/// and routing cache. Finished session threads are reaped as the loop
+/// runs and per-session reports are capped
+/// ([`RETAINED_SESSION_REPORTS`]), so an unlimited server's memory is
+/// bounded by its *concurrent* sessions, not its lifetime. Shutdown
+/// requests and budget exhaustion wake the accept loop with a loopback
+/// self-connection, so it reacts promptly even with no client traffic.
+pub fn serve_predict_loop(
+    listener: &TcpListener,
+    state: &Arc<HostServeState>,
+    max_sessions: usize,
+) -> std::io::Result<ServeLoopReport> {
+    let local = listener.local_addr()?;
+    // the wake-up self-connection must target a routable address even
+    // when the listener is bound to the unspecified address (0.0.0.0 /
+    // ::), so rewrite those to the loopback of the same family
+    let wake_ip = match local.ip() {
+        std::net::IpAddr::V4(ip) if ip.is_unspecified() => {
+            std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+        }
+        std::net::IpAddr::V6(ip) if ip.is_unspecified() => {
+            std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+        }
+        ip => ip,
+    };
+    let wake = std::net::SocketAddr::new(wake_ip, local.port());
+    let accum: Arc<Mutex<LoopAccum>> = Arc::new(Mutex::new(LoopAccum {
+        sessions: Vec::new(),
+        comm: NetSnapshot::default(),
+        dropped: 0,
+    }));
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut next_id = 0usize;
+    while !state.stop_requested() && !budget_met(state, max_sessions) {
+        let (stream, peer) = match listener.accept() {
+            Ok(conn) => conn,
+            Err(e) => {
+                // never abandon in-flight sessions over an accept error
+                // (EMFILE under load, etc.): stop accepting, drain below
+                eprintln!("[sbp-serve] accept failed, draining sessions: {e}");
+                break;
+            }
+        };
+        if state.stop_requested() || budget_met(state, max_sessions) {
+            break; // the wake-up connection (or a late arrival) — drop it
+        }
+        // reap finished session threads so a long-lived server's handle
+        // list is bounded by concurrency, not lifetime
+        handles.retain(|h| !h.is_finished());
+        next_id += 1;
+        let st = state.clone();
+        let sink = accum.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("sbp-serve-session-{next_id}"))
+            .spawn(move || {
+                let transport = super::tcp::TcpHostTransport::new(stream);
+                let counters = transport.counters();
+                let outcome = serve_session(&st, transport);
+                // control-only connections are not serving sessions —
+                // keep them out of the reports and aggregates
+                if !outcome.is_control_only() {
+                    if let Ok(mut acc) = sink.lock() {
+                        let comm = counters.snapshot();
+                        acc.comm = acc.comm.add(&comm);
+                        acc.sessions.push(SessionReport {
+                            outcome,
+                            peer: peer.to_string(),
+                            comm,
+                        });
+                        if acc.sessions.len() > RETAINED_SESSION_REPORTS {
+                            acc.sessions.remove(0);
+                            acc.dropped += 1;
+                        }
+                    }
+                }
+                if st.stop_requested() || budget_met(&st, max_sessions) {
+                    // poke the accept loop awake so it sees the state
+                    let _ = TcpStream::connect(wake);
+                }
+            })
+            .expect("spawn serve session thread");
+        handles.push(handle);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let accum = Arc::try_unwrap(accum)
+        .map(|m| m.into_inner().unwrap_or_else(|e| e.into_inner()))
+        .unwrap_or_else(|_| LoopAccum {
+            sessions: Vec::new(),
+            comm: NetSnapshot::default(),
+            dropped: 0,
+        });
+    Ok(ServeLoopReport {
+        sessions: accum.sessions,
+        comm: accum.comm,
+        sessions_dropped: accum.dropped,
+    })
+}
+
+/// The loop's session budget: `max_sessions` completed serving sessions
+/// (0 = unlimited). One definition shared by the accept loop and the
+/// session threads' wake-up check.
+fn budget_met(state: &HostServeState, max_sessions: usize) -> bool {
+    max_sessions != 0 && state.sessions_served() >= max_sessions as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::federation::transport::link_pair_bounded;
+
+    fn toy_state(cache_capacity: usize) -> Arc<HostServeState> {
+        // two splits over two features; 4 rows
+        let model = HostModel { party: 0, splits: vec![(0, 0, 1.0), (1, 2, -1.0)] };
+        let slice = PartySlice {
+            cols: vec![0, 1],
+            x: vec![0.5, 0.0, 2.0, -2.0, 0.5, 5.0, 2.0, -1.5],
+            n: 4,
+        };
+        HostServeState::new(
+            model,
+            slice,
+            ServeConfig { cache_capacity, ..ServeConfig::default() },
+        )
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let c = RoutingCache::new(2);
+        c.store((0, 0), true);
+        c.store((1, 0), false);
+        assert_eq!(c.lookup((0, 0)), Some(true)); // refresh (0,0)
+        c.store((2, 0), true); // evicts (1,0)
+        assert_eq!(c.lookup((1, 0)), None);
+        assert_eq!(c.lookup((0, 0)), Some(true));
+        assert_eq!(c.lookup((2, 0)), Some(true));
+        let s = c.stats();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.hits, 4);
+        assert_eq!(s.misses, 1);
+    }
+
+    #[test]
+    fn zero_capacity_cache_is_inert() {
+        let c = RoutingCache::new(0);
+        c.store((0, 0), true);
+        assert_eq!(c.lookup((0, 0)), None);
+        assert_eq!(c.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn session_state_machine_handshake_and_answers() {
+        let state = toy_state(16);
+        let (guest, host) = link_pair_bounded(8, 1);
+        let handle = spawn_serve_session(state.clone(), host);
+
+        guest.send(ToHost::SessionHello { session_id: 7, protocol: SERVE_PROTOCOL_VERSION });
+        let ToGuest::SessionAccept { session_id, max_inflight } = guest.recv() else {
+            panic!("expected SessionAccept")
+        };
+        assert_eq!(session_id, 7);
+        assert_eq!(max_inflight, 1);
+
+        guest.send(ToHost::KeepAlive);
+        assert!(matches!(guest.recv(), ToGuest::Ack));
+
+        // row 1 under handle 0: x[1*2+0] = 2.0 > 1.0 → right;
+        // row 1 under handle 1: x[1*2+1] = -2.0 ≤ -1.0 → left
+        guest.send(ToHost::PredictRoute { session: 7, queries: vec![(1, 0), (1, 1)] });
+        let ToGuest::RouteAnswers { session, n, bits } = guest.recv() else {
+            panic!("expected RouteAnswers")
+        };
+        assert_eq!((session, n), (7, 2));
+        assert_eq!(bits, vec![0b10]);
+
+        // repeat: both answers now come from the cache, bit-identically
+        guest.send(ToHost::PredictRoute { session: 7, queries: vec![(1, 0), (1, 1)] });
+        let ToGuest::RouteAnswers { bits: bits2, .. } = guest.recv() else {
+            panic!("expected RouteAnswers")
+        };
+        assert_eq!(bits2, vec![0b10]);
+        guest.send(ToHost::SessionClose { session_id: 7 });
+        let outcome = handle.join().expect("session thread");
+        assert!(outcome.clean_close);
+        assert_eq!(outcome.queries, 4);
+        assert_eq!(outcome.batches, 2);
+        assert_eq!(outcome.keep_alives, 1);
+        let cs = state.cache_stats();
+        assert_eq!(cs.hits, 2);
+        assert_eq!(cs.misses, 2);
+        assert!(cs.hit_rate() > 0.4 && cs.hit_rate() < 0.6);
+    }
+
+    #[test]
+    fn wrong_session_id_closes_the_session() {
+        let state = toy_state(0);
+        let (guest, host) = link_pair_bounded(8, 1);
+        let handle = spawn_serve_session(state, host);
+        guest.send(ToHost::SessionHello { session_id: 9, protocol: SERVE_PROTOCOL_VERSION });
+        let ToGuest::SessionAccept { .. } = guest.recv() else { panic!("expected accept") };
+        guest.send(ToHost::PredictRoute { session: 3, queries: vec![(0, 0)] });
+        let outcome = handle.join().expect("session thread");
+        assert!(!outcome.clean_close);
+        assert_eq!(outcome.batches, 0);
+    }
+
+    #[test]
+    fn legacy_sessionless_flow_still_served() {
+        let state = toy_state(0);
+        let (guest, host) = link_pair_bounded(8, 1);
+        let handle = spawn_serve_session(state, host);
+        guest.send(ToHost::PredictRoute { session: SESSIONLESS_ID, queries: vec![(0, 0)] });
+        let ToGuest::RouteAnswers { session, n, bits } = guest.recv() else {
+            panic!("expected RouteAnswers")
+        };
+        // row 0 under handle 0: x[0] = 0.5 ≤ 1.0 → left
+        assert_eq!((session, n, bits), (SESSIONLESS_ID, 1, vec![1u8]));
+        guest.send(ToHost::Shutdown);
+        let outcome = handle.join().expect("session thread");
+        assert!(outcome.clean_close);
+    }
+}

@@ -16,7 +16,13 @@
 //!
 //! Concurrency: one socket per guest↔host pair, strictly request/response
 //! per the round-structured protocol, so a `Mutex<TcpStream>` per
-//! direction-agnostic endpoint suffices.
+//! direction-agnostic endpoint suffices. The long-lived serving path
+//! multiplexes many *sessions* over one listener — each accepted
+//! connection becomes its own [`TcpHostTransport`] driven by its own
+//! session thread ([`crate::federation::serve::serve_predict_loop`]),
+//! so per-session backpressure is the socket buffer plus the strict
+//! request/response framing, and per-session byte accounting is simply
+//! this endpoint's [`NetCounters`].
 
 use super::codec;
 use super::message::{ToGuest, ToHost};

@@ -25,7 +25,7 @@ use super::message::{
     ToGuest, ToGuestKind, ToHost, ToHostKind, TO_GUEST_KINDS, TO_HOST_KINDS,
 };
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 
 /// Guest-side handle to one host party: send [`ToHost`], receive
@@ -320,6 +320,79 @@ impl HostTransport for HostLink {
     }
 }
 
+/// Bounded in-process guest-side link for *serving* sessions: the
+/// guest→host direction is a rendezvous-style `sync_channel`, so a guest
+/// that outruns the serving host's per-session queue **blocks** instead
+/// of growing an unbounded backlog — the in-memory analogue of TCP's
+/// socket-buffer backpressure. Byte accounting is identical to
+/// [`GuestLink`].
+pub struct BoundedGuestLink {
+    tx: SyncSender<ToHost>,
+    rx: Receiver<ToGuest>,
+    counters: Arc<NetCounters>,
+    ct_len: usize,
+}
+
+/// Host-side endpoint of a bounded serving link (see
+/// [`BoundedGuestLink`]). The host→guest direction stays unbounded: the
+/// round-structured protocol never has more than one reply in flight per
+/// outstanding request, so the request bound is the session bound.
+pub struct BoundedHostLink {
+    rx: Receiver<ToHost>,
+    tx: Sender<ToGuest>,
+    counters: Arc<NetCounters>,
+    ct_len: usize,
+}
+
+impl BoundedHostLink {
+    /// Shared traffic counters of this link pair.
+    pub fn counters(&self) -> Arc<NetCounters> {
+        self.counters.clone()
+    }
+}
+
+/// Create a connected (guest, host) serving-link pair whose guest→host
+/// queue holds at most `queue` pending messages (the per-session
+/// backpressure bound; `queue = 0` gives a fully synchronous rendezvous).
+pub fn link_pair_bounded(ct_len: usize, queue: usize) -> (BoundedGuestLink, BoundedHostLink) {
+    let (g2h_tx, g2h_rx) = sync_channel(queue);
+    let (h2g_tx, h2g_rx) = channel();
+    let counters = Arc::new(NetCounters::default());
+    (
+        BoundedGuestLink { tx: g2h_tx, rx: h2g_rx, counters: counters.clone(), ct_len },
+        BoundedHostLink { rx: g2h_rx, tx: h2g_tx, counters, ct_len },
+    )
+}
+
+impl GuestTransport for BoundedGuestLink {
+    fn send(&self, msg: ToHost) {
+        let size = codec::to_host_wire_len(&msg, self.ct_len) as u64;
+        self.counters.record_to_host(msg.kind(), size);
+        // blocks while the session queue is full — that is the point
+        let _ = self.tx.send(msg);
+    }
+
+    fn recv(&self) -> ToGuest {
+        self.rx.recv().expect("serving host channel closed unexpectedly")
+    }
+
+    fn snapshot(&self) -> NetSnapshot {
+        self.counters.snapshot()
+    }
+}
+
+impl HostTransport for BoundedHostLink {
+    fn recv(&self) -> Option<ToHost> {
+        self.rx.recv().ok()
+    }
+
+    fn send(&self, msg: ToGuest) {
+        let size = codec::to_guest_wire_len(&msg, self.ct_len) as u64;
+        self.counters.record_to_guest(msg.kind(), size);
+        let _ = self.tx.send(msg);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -353,6 +426,22 @@ mod tests {
             s.to_guest_kind_bytes[ToGuestKind::LeftInstances.index()],
             s.bytes_to_guest
         );
+    }
+
+    #[test]
+    fn bounded_pair_carries_messages_and_counts() {
+        let (g, h) = link_pair_bounded(8, 4);
+        g.send(ToHost::KeepAlive);
+        assert!(matches!(h.recv(), Some(ToHost::KeepAlive)));
+        h.send(ToGuest::Ack);
+        let _ = g.recv();
+        let s = g.snapshot();
+        assert_eq!(s.msgs_to_host, 1);
+        assert_eq!(s.msgs_to_guest, 1);
+        assert_eq!(s.to_host_kind_msgs[ToHostKind::KeepAlive.index()], 1);
+        // closing the guest side ends the host's recv loop cleanly
+        drop(g);
+        assert!(h.recv().is_none());
     }
 
     #[test]

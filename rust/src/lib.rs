@@ -79,8 +79,11 @@ pub mod prelude {
     pub use crate::config::{CipherKind, GossConfig, ModeKind, TrainConfig, TransportKind};
     pub use crate::coordinator::{
         predict_centralized, predict_federated_in_memory, predict_federated_tcp,
-        train_centralized, train_federated, PredictReport, TrainReport,
+        predict_sessions_tcp, serve_predict_tcp, train_centralized, train_federated,
+        PredictReport, ServeReport, TrainReport,
     };
+    pub use crate::federation::predict::{PredictOptions, PredictSession};
+    pub use crate::federation::serve::{CacheStats, ServeConfig};
     pub use crate::crypto::cipher::CipherSuite;
     pub use crate::data::dataset::{Dataset, VerticalSplit};
     pub use crate::data::synthetic::SyntheticSpec;

@@ -5,9 +5,10 @@
 //!   train-guest    train as the guest party over TCP (`--connect host:port[,..]`)
 //!   serve-host     run one host party as a TCP server for a training run
 //!   save           train and write per-party model artifacts to a directory
-//!   predict        score a preset with a saved model (colocated or `--connect`)
-//!   serve-predict  serve one host's share for federated inference over TCP
-//!   datagen        describe / emit the synthetic dataset presets
+//!   predict        score rows with a saved model (colocated, or sessions against
+//!                  live hosts via `--connect`; preset rows or `--data file.csv`)
+//!   serve-predict  long-lived multi-session inference service for one host share
+//!   datagen        describe the synthetic presets / emit per-party CSVs (`--emit`)
 //!   engines        check artifact availability and engine parity
 //!
 //! Examples:
@@ -21,10 +22,18 @@
 //!   terminal 1:  sbp serve-host  --dataset give-credit --scale 0.01 --port 7878
 //!   terminal 2:  sbp train-guest --dataset give-credit --scale 0.01 --connect 127.0.0.1:7878
 //!
-//! Two-terminal federated inference on a saved model:
+//! Long-lived federated inference on a saved model (10 sessions, 2 at a
+//! time, against one serving host process with a warm routing cache):
 //!   terminal 1:  sbp serve-predict --model model/host-0.model.json \
-//!                    --dataset give-credit --scale 0.01 --port 7979
-//!   terminal 2:  sbp predict --model model/ --dataset give-credit --scale 0.01 \
+//!                    --max-sessions 10 --cache-capacity 65536 --port 7979
+//!   terminal 2:  sbp predict --model model/ --connect 127.0.0.1:7979 \
+//!                    --sessions 10 --concurrency 2
+//!
+//! Scoring arbitrary CSV rows (header-driven feature→column map per party):
+//!   sbp datagen --emit guest --dataset give-credit --scale 0.01 --out guest.csv
+//!   sbp datagen --emit host-0 --dataset give-credit --scale 0.01 --out host0.csv
+//!   terminal 1:  sbp serve-predict --model model/host-0.model.json --data host0.csv
+//!   terminal 2:  sbp predict --model model/ --data guest.csv --label label \
 //!                    --connect 127.0.0.1:7979
 
 use sbp::config::{CipherKind, GossConfig, ModeKind, TrainConfig, TransportKind};
@@ -34,7 +43,6 @@ use sbp::coordinator::{
 };
 use sbp::data::binning::bin_party;
 use sbp::data::synthetic::SyntheticSpec;
-use sbp::federation::predict::serve_predict_once;
 use sbp::federation::tcp::serve_host_once;
 use sbp::metrics::{accuracy_multiclass, auc};
 use sbp::model::{guest_file_name, host_file_name, GuestArtifact, HostArtifact, Objective};
@@ -104,13 +112,30 @@ fn main() {
                  predict options:\n\
                  \x20 --model <dir|file>     guest artifact (dir uses guest.model.json)\n\
                  \x20 --dataset --scale --seed --hosts  as for train (regenerates rows)\n\
+                 \x20 --data <file.csv>      score arbitrary CSV rows instead of a preset\n\
+                 \x20 --features <a,b,..>    feature→column map by header name (default:\n\
+                 \x20                        all columns in file order, minus --label)\n\
+                 \x20 --label <col>          label column for the metric (optional)\n\
                  \x20 --connect <a1[,a2..]>  serve-predict addresses (else colocated\n\
                  \x20                        host artifacts from the model dir)\n\
+                 \x20 --sessions <n>         serving sessions to run (default 1)\n\
+                 \x20 --concurrency <n>      sessions in flight at once (default 1)\n\
+                 \x20 --dummy-queries <n>    decoy queries shuffled into each routing batch\n\
+                 \x20 --decoy-seed <n>       pin the decoy stream (default: OS entropy)\n\
+                 \x20 --shutdown-hosts       ask the serving hosts to exit afterwards\n\
                  \n\
                  serve-predict options:\n\
                  \x20 --model <file>         this host's artifact (host-<i>.model.json)\n\
                  \x20 --dataset --scale --seed --hosts --host-id  as for serve-host\n\
-                 \x20 --bind <ip> --port <p> listen address (default 127.0.0.1:7979)"
+                 \x20 --data <file.csv> --features <a,b,..>  serve CSV rows instead\n\
+                 \x20 --max-sessions <n>     sessions to serve before exiting (default 1;\n\
+                 \x20                        0 = until `predict --shutdown-hosts` asks)\n\
+                 \x20 --cache-capacity <n>   routing-cache entries (default 65536; 0 off)\n\
+                 \x20 --bind <ip> --port <p> listen address (default 127.0.0.1:7979)\n\
+                 \n\
+                 datagen options:\n\
+                 \x20 --emit <guest|host-i>  write one party's rows as CSV (--dataset\n\
+                 \x20                        --scale --seed --hosts --out as above)"
             );
             std::process::exit(2);
         }
@@ -366,9 +391,57 @@ fn guest_artifact_path(arg: &str) -> PathBuf {
     }
 }
 
-/// Score a regenerated preset with a saved model — colocated when the
-/// host artifacts sit next to the guest one, federated over TCP with
-/// `--connect`.
+/// Parse a `--features a,b,c` header-driven feature→column map.
+fn feature_map(args: &Args) -> Option<Vec<String>> {
+    args.get("features").map(|s| {
+        s.split(',').map(|f| f.trim().to_string()).filter(|f| !f.is_empty()).collect()
+    })
+}
+
+/// Parse a `--connect a1,a2` address list.
+fn connect_addrs(connect: &str) -> Vec<String> {
+    connect.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+}
+
+/// Load one party's rows from a `--data` CSV, applying the
+/// header-driven `--features` map (and excluding/extracting `label_col`
+/// when given). Exits with a message on any error.
+fn load_csv_party(
+    args: &Args,
+    data: &str,
+    label_col: Option<&str>,
+) -> (sbp::data::dataset::PartySlice, Option<Vec<f64>>) {
+    let table = match sbp::data::csvio::CsvTable::load(Path::new(data)) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+    };
+    let features = feature_map(args);
+    let slice = match table.party_slice(features.as_deref(), label_col) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{data}: {e}");
+            std::process::exit(2);
+        }
+    };
+    let labels = label_col.map(|col| match table.column(col) {
+        Ok(y) => y,
+        Err(e) => {
+            eprintln!("{data}: {e}");
+            std::process::exit(2);
+        }
+    });
+    (slice, labels)
+}
+
+/// Score with a saved model — colocated when the host artifacts sit
+/// next to the guest one, federated over TCP with `--connect`. Rows come
+/// from the regenerated training preset, or from an arbitrary CSV with
+/// `--data` (header-driven feature→column map via `--features`). With
+/// `--sessions`/`--concurrency` the client runs many serving sessions
+/// against live `sbp serve-predict` hosts.
 fn cmd_predict(args: &Args) {
     let Some(model_arg) = args.get("model") else {
         eprintln!("predict requires --model <dir|guest.model.json>");
@@ -382,39 +455,52 @@ fn cmd_predict(args: &Args) {
             std::process::exit(1);
         }
     };
-    // defaults come from the artifact's recorded training parameters, so
-    // a bare `sbp predict --model dir/` regenerates exactly the rows the
-    // model was trained on
-    let name = args.get_or("dataset", guest_art.dataset.as_str());
-    let scale: f64 = args.get_parse("scale", guest_art.scale);
-    let Some(spec) = spec_by_name(&name, scale) else {
-        eprintln!("unknown dataset preset '{name}'");
+    let n_sessions: usize = args.get_parse("sessions", 1);
+    let concurrency: usize = args.get_parse("concurrency", 1);
+    let dummy_queries: usize = args.get_parse("dummy-queries", 0);
+    if n_sessions == 0 {
+        eprintln!("--sessions must be ≥ 1");
         std::process::exit(2);
-    };
-    if name != guest_art.dataset {
-        eprintln!(
-            "warning: model was trained on '{}' but scoring '{}'",
-            guest_art.dataset, name
-        );
     }
-    let seed: u64 = args.get_parse("seed", guest_art.seed);
-    let n_hosts: usize = args.get_parse("hosts", guest_art.n_hosts.max(1));
-    let vs = spec.generate_vertical(seed, n_hosts);
-    if vs.guest.d() != guest_art.guest_features {
+
+    // ---- rows: arbitrary CSV (--data) or the regenerated preset ------
+    let (guest_slice, labels, preset_vs) = if let Some(data) = args.get("data") {
+        let (slice, labels) = load_csv_party(args, data, args.get("label"));
+        (slice, labels, None)
+    } else {
+        // defaults come from the artifact's recorded training
+        // parameters, so a bare `sbp predict --model dir/` regenerates
+        // exactly the rows the model was trained on
+        let name = args.get_or("dataset", guest_art.dataset.as_str());
+        let scale: f64 = args.get_parse("scale", guest_art.scale);
+        let Some(spec) = spec_by_name(&name, scale) else {
+            eprintln!("unknown dataset preset '{name}'");
+            std::process::exit(2);
+        };
+        if name != guest_art.dataset {
+            eprintln!(
+                "warning: model was trained on '{}' but scoring '{}'",
+                guest_art.dataset, name
+            );
+        }
+        let seed: u64 = args.get_parse("seed", guest_art.seed);
+        let n_hosts: usize = args.get_parse("hosts", guest_art.n_hosts.max(1));
+        let vs = spec.generate_vertical(seed, n_hosts);
+        let labels = vs.y.clone();
+        (vs.guest.clone(), Some(labels), Some(vs))
+    };
+    if guest_slice.d() != guest_art.guest_features {
         eprintln!(
-            "guest slice has {} features but the model expects {}",
-            vs.guest.d(),
+            "guest slice has {} features but the model expects {} \
+             (check --features / --dataset)",
+            guest_slice.d(),
             guest_art.guest_features
         );
         std::process::exit(2);
     }
 
     let report = if let Some(connect) = args.get("connect") {
-        let addrs: Vec<String> = connect
-            .split(',')
-            .map(|s| s.trim().to_string())
-            .filter(|s| !s.is_empty())
-            .collect();
+        let addrs = connect_addrs(connect);
         if addrs.len() != guest_art.n_hosts {
             eprintln!(
                 "{} --connect address(es) for a model with {} host share(s)",
@@ -423,10 +509,73 @@ fn cmd_predict(args: &Args) {
             );
             std::process::exit(2);
         }
-        predict_federated_tcp(&guest_art.model, &vs.guest, &addrs)
-            .expect("federated prediction failed")
+        let reports = if n_sessions == 1 && concurrency <= 1 && dummy_queries == 0 {
+            // single-shot legacy flow: no handshake, sessionless frames
+            vec![predict_federated_tcp(&guest_art.model, &guest_slice, &addrs)
+                .expect("federated prediction failed")]
+        } else {
+            // decoy seed defaults to OS entropy (PredictOptions::default):
+            // the hosts also hold the artifact's training seed, so any
+            // metadata-derived seed would let them replay the decoy
+            // stream. --decoy-seed pins it for reproducible experiments.
+            let mut opts = sbp::federation::predict::PredictOptions {
+                dummy_queries,
+                ..sbp::federation::predict::PredictOptions::default()
+            };
+            if let Some(s) = args.get("decoy-seed") {
+                match s.parse::<u64>() {
+                    Ok(v) => opts.seed = v,
+                    Err(_) => {
+                        eprintln!("--decoy-seed must be an unsigned integer");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            sbp::coordinator::predict_sessions_tcp(
+                &guest_art.model,
+                &guest_slice,
+                &addrs,
+                n_sessions,
+                concurrency,
+                opts,
+            )
+            .expect("serving sessions failed")
+        };
+        for r in &reports {
+            if reports.len() > 1 || r.session_id != 0 {
+                println!(
+                    "session {:>3}: {} rows {:.0} rows/s {:.1} B/row \
+                     suppressed={} decoys={}",
+                    r.session_id,
+                    r.n_rows,
+                    r.rows_per_sec,
+                    r.bytes_per_row,
+                    r.suppressed_queries,
+                    r.decoy_queries,
+                );
+            }
+        }
+        // identical rows → identical predictions in every session; all
+        // downstream reporting uses the first
+        let mut reports = reports;
+        if args.flag("shutdown-hosts") {
+            if let Err(e) = sbp::coordinator::shutdown_predict_hosts(&addrs) {
+                eprintln!("warning: shutting down hosts: {e}");
+            } else {
+                eprintln!("[sbp] asked {} host(s) to shut down", addrs.len());
+            }
+        }
+        reports.swap_remove(0)
     } else {
         // colocated: load every host artifact from the model directory
+        let Some(vs) = preset_vs.as_ref() else {
+            eprintln!(
+                "--data scores against live hosts only: each party owns its rows, so \
+                 pass --connect <serve-predict addresses> (colocated mode needs the \
+                 regenerated preset)"
+            );
+            std::process::exit(2);
+        };
         if vs.hosts.len() != guest_art.n_hosts {
             eprintln!(
                 "--hosts regenerated {} host slice(s) but the model was trained with {}",
@@ -474,7 +623,7 @@ fn cmd_predict(args: &Args) {
             std::process::exit(2);
         }
         let t0 = std::time::Instant::now();
-        let preds = predict_centralized(&guest_art.model, &host_models, &vs);
+        let preds = predict_centralized(&guest_art.model, &host_models, vs);
         let wall = t0.elapsed().as_secs_f64();
         sbp::coordinator::PredictReport::new(
             preds,
@@ -486,22 +635,23 @@ fn cmd_predict(args: &Args) {
         )
     };
 
-    let metric = match guest_art.objective {
+    let metric = labels.as_ref().map(|y| match guest_art.objective {
         Objective::BinaryLogistic => {
             let scores: Vec<f64> = (0..report.n_rows).map(|i| report.preds[i]).collect();
-            ("AUC", auc(&vs.y, &scores))
+            ("AUC", auc(y, &scores))
         }
-        Objective::SoftmaxCE { k } => {
-            ("accuracy", accuracy_multiclass(&vs.y, &report.preds, k))
-        }
+        Objective::SoftmaxCE { k } => ("accuracy", accuracy_multiclass(y, &report.preds, k)),
+    });
+    let metric_str = match metric {
+        Some((name, v)) => format!("{name}={v:.4} "),
+        None => String::new(), // CSV without --label: raw margins only
     };
     println!(
-        "predict [{}] rows={} trees={} {}={:.4} {:.0} rows/s {:.1} B/row wall={:.3}s",
+        "predict [{}] rows={} trees={} {}{:.0} rows/s {:.1} B/row wall={:.3}s",
         report.transport,
         report.n_rows,
         guest_art.model.trees.len(),
-        metric.0,
-        metric.1,
+        metric_str,
         report.rows_per_sec,
         report.bytes_per_row,
         report.wall_seconds,
@@ -529,7 +679,11 @@ fn cmd_predict(args: &Args) {
     }
 }
 
-/// Serve one host's model share for federated inference over TCP.
+/// Serve one host's model share as a long-lived multi-session inference
+/// service over TCP: load-once model, shared LRU routing cache,
+/// thread-per-session, `--max-sessions` bounded with graceful shutdown.
+/// Host rows come from the regenerated preset or an arbitrary CSV
+/// (`--data`, `--features`).
 fn cmd_serve_predict(args: &Args) {
     let Some(model_arg) = args.get("model") else {
         eprintln!("serve-predict requires --model <host-artifact.json>");
@@ -542,18 +696,11 @@ fn cmd_serve_predict(args: &Args) {
             std::process::exit(1);
         }
     };
-    // defaults come from the artifact's recorded training parameters
-    let name = args.get_or("dataset", art.dataset.as_str());
-    let scale: f64 = args.get_parse("scale", art.scale);
-    let Some(spec) = spec_by_name(&name, scale) else {
-        eprintln!("unknown dataset preset '{name}'");
-        std::process::exit(2);
-    };
-    let seed: u64 = args.get_parse("seed", art.seed);
-    let n_hosts: usize = args.get_parse("hosts", art.n_hosts.max(1));
     let host_id: usize = args.get_parse("host-id", art.model.party as usize);
     let bind = args.get_or("bind", "127.0.0.1");
     let port: u16 = args.get_parse("port", 7979);
+    let max_sessions: usize = args.get_parse("max-sessions", 1);
+    let cache_capacity: usize = args.get_parse("cache-capacity", 1usize << 16);
 
     if host_id != art.model.party as usize {
         eprintln!(
@@ -563,16 +710,29 @@ fn cmd_serve_predict(args: &Args) {
         );
         std::process::exit(2);
     }
-    let vs = spec.generate_vertical(seed, n_hosts);
-    if host_id >= vs.hosts.len() {
-        eprintln!("host-id {host_id} out of range ({} host slices)", vs.hosts.len());
-        std::process::exit(2);
-    }
-    let slice = vs.hosts[host_id].clone();
+    let slice = if let Some(data) = args.get("data") {
+        load_csv_party(args, data, None).0
+    } else {
+        // defaults come from the artifact's recorded training parameters
+        let name = args.get_or("dataset", art.dataset.as_str());
+        let scale: f64 = args.get_parse("scale", art.scale);
+        let Some(spec) = spec_by_name(&name, scale) else {
+            eprintln!("unknown dataset preset '{name}'");
+            std::process::exit(2);
+        };
+        let seed: u64 = args.get_parse("seed", art.seed);
+        let n_hosts: usize = args.get_parse("hosts", art.n_hosts.max(1));
+        let vs = spec.generate_vertical(seed, n_hosts);
+        if host_id >= vs.hosts.len() {
+            eprintln!("host-id {host_id} out of range ({} host slices)", vs.hosts.len());
+            std::process::exit(2);
+        }
+        vs.hosts[host_id].clone()
+    };
     if slice.d() != art.n_features {
         eprintln!(
             "host slice has {} features but the artifact expects {} \
-             (check --dataset/--scale/--hosts/--host-id)",
+             (check --data/--features or --dataset/--scale/--hosts/--host-id)",
             slice.d(),
             art.n_features
         );
@@ -586,11 +746,40 @@ fn cmd_serve_predict(args: &Args) {
         }
     };
     eprintln!(
-        "[sbp] predict host {host_id} serving {} splits on {bind}:{port} — waiting for a guest",
-        art.model.splits.len()
+        "[sbp] predict host {host_id} serving {} splits on {bind}:{port} \
+         (max-sessions={}, cache-capacity={}) — waiting for guests",
+        art.model.splits.len(),
+        if max_sessions == 0 { "∞".to_string() } else { max_sessions.to_string() },
+        cache_capacity,
     );
-    match serve_predict_once(&listener, art.model, slice) {
-        Ok(peer) => eprintln!("[sbp] inference session with guest {peer} complete"),
+    let cfg = sbp::federation::serve::ServeConfig {
+        cache_capacity,
+        ..sbp::federation::serve::ServeConfig::default()
+    };
+    match sbp::coordinator::serve_predict_tcp(&listener, art.model, slice, cfg, max_sessions) {
+        Ok(report) => {
+            for s in &report.sessions {
+                eprintln!(
+                    "[sbp] session {} from {}: {} queries in {} batches, {} B, \
+                     {}{:.3}s",
+                    s.outcome.session_id,
+                    s.peer,
+                    s.outcome.queries,
+                    s.outcome.batches,
+                    s.comm.total_bytes(),
+                    if s.outcome.clean_close { "" } else { "unclean close, " },
+                    s.outcome.wall_seconds,
+                );
+            }
+            if report.sessions_dropped > 0 {
+                eprintln!(
+                    "[sbp] ({} older session report(s) dropped past the retention cap; \
+                     aggregates are exact)",
+                    report.sessions_dropped
+                );
+            }
+            println!("{}", report.summary());
+        }
         Err(e) => {
             eprintln!("serve failed: {e}");
             std::process::exit(1);
@@ -599,6 +788,43 @@ fn cmd_serve_predict(args: &Args) {
 }
 
 fn cmd_datagen(args: &Args) {
+    // --emit <guest|host-i>: write one party's rows as a CSV with the
+    // canonical header (f<global column>, guest rows get a label column)
+    // — the file `sbp predict --data` / `serve-predict --data` consume
+    if let Some(party) = args.get("emit") {
+        let name = args.get_or("dataset", "give-credit");
+        let scale: f64 = args.get_parse("scale", 0.01);
+        let Some(spec) = spec_by_name(&name, scale) else {
+            eprintln!("unknown dataset preset '{name}'");
+            std::process::exit(2);
+        };
+        let seed: u64 = args.get_parse("seed", 42);
+        let n_hosts: usize = args.get_parse("hosts", 1);
+        let out = args.get_or("out", format!("{party}.csv").as_str());
+        let vs = spec.generate_vertical(seed, n_hosts);
+        let result = if party == "guest" {
+            sbp::data::csvio::write_party_csv(Path::new(&out), &vs.guest, Some(&vs.y))
+        } else if let Some(i) =
+            party.strip_prefix("host-").and_then(|s| s.parse::<usize>().ok())
+        {
+            if i >= vs.hosts.len() {
+                eprintln!("host-{i} out of range ({} host slices)", vs.hosts.len());
+                std::process::exit(2);
+            }
+            sbp::data::csvio::write_party_csv(Path::new(&out), &vs.hosts[i], None)
+        } else {
+            eprintln!("--emit takes 'guest' or 'host-<i>', got '{party}'");
+            std::process::exit(2);
+        };
+        match result {
+            Ok(()) => println!("wrote {out} ({} rows)", vs.n()),
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
     let scale: f64 = args.get_parse("scale", 1.0);
     println!("dataset presets (Table 2 of the paper), at scale {scale}:");
     println!(

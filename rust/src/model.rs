@@ -66,6 +66,14 @@ pub enum ModelError {
         /// Version this build supports.
         supported: u64,
     },
+    /// The payload does not hash to the envelope's FNV-1a checksum —
+    /// the artifact was corrupted or tampered with after it was saved.
+    Checksum {
+        /// Checksum recorded in the envelope (hex).
+        expected: String,
+        /// Checksum recomputed from the payload (hex).
+        found: String,
+    },
 }
 
 impl std::fmt::Display for ModelError {
@@ -77,6 +85,11 @@ impl std::fmt::Display for ModelError {
             ModelError::Version { found, supported } => write!(
                 f,
                 "unsupported model format version {found} (this build supports {supported})"
+            ),
+            ModelError::Checksum { expected, found } => write!(
+                f,
+                "model payload checksum mismatch: envelope records {expected}, \
+                 payload hashes to {found} — the artifact is corrupted"
             ),
         }
     }
@@ -203,11 +216,35 @@ fn get_seed(p: &Json) -> Result<u64, ModelError> {
         .ok_or_else(|| ModelError::Format("missing or non-integer seed".into()))
 }
 
+/// FNV-1a 64-bit hash — the artifact integrity checksum. Not a
+/// cryptographic MAC: it catches corruption (truncation, bit rot, a
+/// hand-edited threshold), not a deliberate adversary, who could simply
+/// recompute it. Deterministic across platforms.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Checksum of a payload's canonical serialization. The canonical form
+/// is `Json::to_string_pretty` of the payload value: object keys are
+/// BTreeMap-sorted and number formatting is the single in-tree
+/// serializer, so save-time and load-time serializations agree
+/// byte-for-byte.
+fn payload_checksum(payload: &Json) -> String {
+    format!("{:016x}", fnv1a64(payload.to_string_pretty().as_bytes()))
+}
+
 fn envelope(role: &str, payload: Json) -> Json {
+    let checksum = payload_checksum(&payload);
     Json::obj(vec![
         ("format", Json::Str(MODEL_FORMAT.into())),
         ("version", Json::Num(MODEL_VERSION as f64)),
         ("role", Json::Str(role.into())),
+        ("checksum", Json::Str(checksum)),
         ("payload", payload),
     ])
 }
@@ -237,7 +274,21 @@ fn open_envelope<'a>(v: &'a Json, want_role: &str) -> Result<&'a Json, ModelErro
             "artifact role is '{role}', expected '{want_role}'"
         )));
     }
-    v.get("payload").ok_or_else(|| ModelError::Format("missing payload".into()))
+    let payload =
+        v.get("payload").ok_or_else(|| ModelError::Format("missing payload".into()))?;
+    // checksum is an *optional* envelope field (adding it did not bump
+    // the version — pre-checksum artifacts still load), but when present
+    // it must match the payload's canonical serialization
+    if let Some(expected) = v.get("checksum").and_then(Json::as_str) {
+        let found = payload_checksum(payload);
+        if expected != found {
+            return Err(ModelError::Checksum {
+                expected: expected.to_string(),
+                found,
+            });
+        }
+    }
+    Ok(payload)
 }
 
 /// Structural validation of a decoded guest model: every child index in
@@ -572,6 +623,38 @@ mod tests {
             Err(ModelError::Version { found: 99, supported: MODEL_VERSION }) => {}
             other => panic!("expected version error, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn corrupted_payload_fails_checksum() {
+        let mut v = toy_guest().to_json();
+        if let Json::Obj(m) = &mut v {
+            let Some(Json::Obj(p)) = m.get_mut("payload") else {
+                panic!("payload must be an object")
+            };
+            p.insert("max_bin".into(), Json::Num(999.0));
+        }
+        match GuestArtifact::from_json(&v) {
+            Err(ModelError::Checksum { expected, found }) => assert_ne!(expected, found),
+            other => panic!("expected checksum error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_checksum_still_loads() {
+        // pre-checksum artifacts (the field is optional — no version bump)
+        let mut v = toy_guest().to_json();
+        if let Json::Obj(m) = &mut v {
+            assert!(m.remove("checksum").is_some(), "save must record a checksum");
+        }
+        assert!(GuestArtifact::from_json(&v).is_ok());
     }
 
     #[test]

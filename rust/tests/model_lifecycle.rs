@@ -206,19 +206,63 @@ fn role_mismatch_rejected_at_load() {
 fn corrupted_payload_rejected_not_panicking() {
     let (path, text) = saved_guest_artifact("payload");
     let v = Json::parse(&text).unwrap();
-    // splice out-of-range child indices into the first split node
+    // any textual payload edit now trips the FNV-1a envelope checksum
+    // before structural validation even runs
     let corrupted = text.replacen("\"left\": 1", "\"left\": 100000", 1);
     if corrupted != text {
         std::fs::write(&path, &corrupted).unwrap();
-        assert!(matches!(GuestArtifact::load(&path), Err(ModelError::Format(_))));
+        assert!(matches!(GuestArtifact::load(&path), Err(ModelError::Checksum { .. })));
     }
-    // drop the objective entirely
+    // the same edit on a checksum-less (legacy) envelope falls through to
+    // structural validation, which still rejects it
+    if let Json::Obj(mut m) = v.clone() {
+        m.remove("checksum");
+        let legacy = Json::Obj(m).to_string_pretty();
+        let legacy_corrupted = legacy.replacen("\"left\": 1", "\"left\": 100000", 1);
+        if legacy_corrupted != legacy {
+            std::fs::write(&path, &legacy_corrupted).unwrap();
+            assert!(matches!(GuestArtifact::load(&path), Err(ModelError::Format(_))));
+        }
+    }
+    // drop the objective entirely (checksum catches the payload edit)
     if let Json::Obj(mut m) = v {
         if let Some(Json::Obj(p)) = m.get_mut("payload") {
             p.remove("objective");
         }
         std::fs::write(&path, Json::Obj(m).to_string_pretty()).unwrap();
-        assert!(matches!(GuestArtifact::load(&path), Err(ModelError::Format(_))));
+        assert!(matches!(GuestArtifact::load(&path), Err(ModelError::Checksum { .. })));
     }
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+#[test]
+fn checksum_roundtrip_and_corruption() {
+    let (path, text) = saved_guest_artifact("checksum");
+    // the saved envelope records a checksum and verifies on load
+    assert!(text.contains("\"checksum\""), "save must record a checksum");
+    assert!(GuestArtifact::load(&path).is_ok(), "pristine artifact verifies");
+    // flip one payload character (a digit inside a weight/threshold):
+    // structurally valid JSON, semantically different model → Checksum
+    let v = Json::parse(&text).unwrap();
+    if let Json::Obj(mut m) = v {
+        if let Some(Json::Obj(p)) = m.get_mut("payload") {
+            p.insert("max_bin".into(), Json::Num(12345.0));
+        }
+        std::fs::write(&path, Json::Obj(m).to_string_pretty()).unwrap();
+    }
+    match GuestArtifact::load(&path) {
+        Err(ModelError::Checksum { expected, found }) => {
+            assert_ne!(expected, found);
+            assert_eq!(expected.len(), 16, "fnv1a64 hex is 16 chars");
+        }
+        other => panic!("expected checksum error, got {other:?}"),
+    }
+    // a forged checksum field is equally rejected
+    std::fs::write(
+        &path,
+        text.replacen("\"checksum\": \"", "\"checksum\": \"0000", 1),
+    )
+    .unwrap();
+    assert!(matches!(GuestArtifact::load(&path), Err(ModelError::Checksum { .. })));
     std::fs::remove_dir_all(path.parent().unwrap()).ok();
 }

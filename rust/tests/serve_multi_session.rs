@@ -1,0 +1,295 @@
+//! Long-lived inference service tests: **one** host process multiplexing
+//! many guest sessions (sequential and concurrent) over framed TCP, each
+//! session bit-identical to the colocated oracle; the shared routing
+//! cache invisible on the wire but hot across sessions; decoy padding
+//! changing bytes, never predictions; graceful shutdown draining an
+//! unbounded server.
+
+use sbp::config::{CipherKind, TrainConfig};
+use sbp::coordinator::{
+    predict_centralized, predict_federated_tcp, predict_sessions_tcp, serve_predict_tcp,
+    shutdown_predict_hosts, train_federated, PredictReport, ServeReport,
+};
+use sbp::data::dataset::VerticalSplit;
+use sbp::data::synthetic::SyntheticSpec;
+use sbp::federation::predict::PredictOptions;
+use sbp::federation::serve::ServeConfig;
+use sbp::tree::predict::{GuestModel, HostModel};
+
+fn fast_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::secureboost_plus();
+    cfg.epochs = 4;
+    cfg.max_depth = 3;
+    cfg.cipher = CipherKind::Plain;
+    cfg.goss = None;
+    cfg.sparse_optimization = false;
+    cfg
+}
+
+fn train(spec: SyntheticSpec, cfg: &TrainConfig) -> (VerticalSplit, GuestModel, Vec<HostModel>) {
+    let vs = spec.generate_vertical(cfg.seed, cfg.n_hosts);
+    let rep = train_federated(&vs, cfg).expect("training run");
+    let (guest_m, host_ms) = rep.model();
+    (vs, guest_m, host_ms)
+}
+
+/// Start one serving host process (thread) for host party 0 and return
+/// (address, join handle).
+fn start_server(
+    vs: &VerticalSplit,
+    host_ms: &[HostModel],
+    cache_capacity: usize,
+    max_sessions: usize,
+) -> (String, std::thread::JoinHandle<ServeReport>) {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    let model = host_ms[0].clone();
+    let slice = vs.hosts[0].clone();
+    let handle = std::thread::spawn(move || {
+        serve_predict_tcp(
+            &listener,
+            model,
+            slice,
+            ServeConfig { cache_capacity, ..ServeConfig::default() },
+            max_sessions,
+        )
+        .expect("serve loop")
+    });
+    (addr, handle)
+}
+
+#[test]
+fn one_host_process_serves_sequential_and_concurrent_sessions() {
+    let (vs, guest_m, host_ms) = train(SyntheticSpec::give_credit(0.002), &fast_cfg());
+    let oracle = predict_centralized(&guest_m, &host_ms, &vs);
+    let (addr, server) = start_server(&vs, &host_ms, 1 << 16, 5);
+
+    // 3 strictly sequential sessions, then 2 concurrent ones, all against
+    // the same host process and the same warm cache
+    let seq = predict_sessions_tcp(
+        &guest_m,
+        &vs.guest,
+        std::slice::from_ref(&addr),
+        3,
+        1,
+        PredictOptions::default(),
+    )
+    .expect("sequential sessions");
+    let conc = predict_sessions_tcp(
+        &guest_m,
+        &vs.guest,
+        std::slice::from_ref(&addr),
+        2,
+        2,
+        PredictOptions::default(),
+    )
+    .expect("concurrent sessions");
+    let serve_report = server.join().expect("server thread");
+
+    assert_eq!(seq.len(), 3);
+    assert_eq!(conc.len(), 2);
+    for r in seq.iter().chain(conc.iter()) {
+        assert_eq!(
+            r.preds, oracle,
+            "session {} must be bit-identical to colocated",
+            r.session_id
+        );
+        assert_eq!(r.n_rows, vs.n());
+    }
+    assert_eq!(serve_report.n_sessions, 5, "one host process served every session");
+
+    // repeat traffic: sessions 2..5 re-ask the routing decisions session 1
+    // populated, so the shared cache must report a real hit rate
+    assert!(serve_report.cache.hits > 0, "repeat sessions must hit the cache");
+    assert!(serve_report.cache.hit_rate() > 0.5, "4 of 5 sessions are repeats");
+    assert_eq!(serve_report.queries_answered, serve_report.cache.hits + serve_report.cache.misses);
+
+    // per-session wire accounting is exactly reproducible: every session
+    // does identical work with a fresh memo, and the cache never
+    // suppresses an on-the-wire message
+    let host_side = &serve_report.sessions[0].comm;
+    for s in &serve_report.sessions {
+        assert_eq!(
+            s.comm, *host_side,
+            "session {} accounted different wire bytes",
+            s.outcome.session_id
+        );
+        assert!(s.outcome.clean_close, "sessions end with SessionClose");
+    }
+    let client_side = &seq[0].comm;
+    for r in seq.iter().chain(conc.iter()) {
+        assert_eq!(r.comm, *client_side, "client-side accounting must be reproducible");
+    }
+    // both ends of the wire agree byte-for-byte
+    assert_eq!(*client_side, *host_side);
+}
+
+#[test]
+fn cached_and_uncached_serving_are_bit_identical() {
+    let (vs, guest_m, host_ms) = train(SyntheticSpec::give_credit(0.002), &fast_cfg());
+    let oracle = predict_centralized(&guest_m, &host_ms, &vs);
+
+    let run = |cache_capacity: usize| -> (Vec<PredictReport>, ServeReport) {
+        let (addr, server) = start_server(&vs, &host_ms, cache_capacity, 4);
+        let reports = predict_sessions_tcp(
+            &guest_m,
+            &vs.guest,
+            std::slice::from_ref(&addr),
+            4,
+            1,
+            PredictOptions::default(),
+        )
+        .expect("sessions");
+        (reports, server.join().expect("server thread"))
+    };
+    let (miss_path, uncached) = run(0);
+    let (hit_path, cached) = run(1 << 16);
+
+    assert_eq!(uncached.cache.hits, 0, "capacity 0 disables the cache");
+    assert_eq!(uncached.cache.misses, 0);
+    assert!(cached.cache.hits > 0, "repeat sessions must hit");
+    for (m, h) in miss_path.iter().zip(&hit_path) {
+        assert_eq!(m.preds, oracle);
+        assert_eq!(h.preds, m.preds, "hit path must equal miss path bit for bit");
+        assert_eq!(h.comm, m.comm, "the cache must be invisible on the wire");
+    }
+    assert_eq!(cached.queries_answered, uncached.queries_answered);
+}
+
+#[test]
+fn decoy_padding_changes_bytes_not_predictions() {
+    let (vs, guest_m, host_ms) = train(SyntheticSpec::give_credit(0.002), &fast_cfg());
+    let oracle = predict_centralized(&guest_m, &host_ms, &vs);
+
+    let run = |dummy_queries: usize| -> Vec<PredictReport> {
+        let (addr, server) = start_server(&vs, &host_ms, 1 << 12, 2);
+        let reports = predict_sessions_tcp(
+            &guest_m,
+            &vs.guest,
+            std::slice::from_ref(&addr),
+            2,
+            1,
+            PredictOptions { dummy_queries, seed: 1234 },
+        )
+        .expect("sessions");
+        server.join().expect("server thread");
+        reports
+    };
+    let plain = run(0);
+    let padded = run(16);
+    for (p, q) in plain.iter().zip(&padded) {
+        assert_eq!(p.preds, oracle);
+        assert_eq!(q.preds, p.preds, "decoys must not change predictions");
+        assert_eq!(p.decoy_queries, 0);
+        assert!(q.decoy_queries >= 16, "every sent batch is padded");
+        assert!(
+            q.comm.bytes_to_host > p.comm.bytes_to_host,
+            "padding must cost wire bytes"
+        );
+    }
+}
+
+#[test]
+fn unbounded_server_drains_on_graceful_shutdown() {
+    let (vs, guest_m, host_ms) = train(SyntheticSpec::give_credit(0.002), &fast_cfg());
+    let oracle = predict_centralized(&guest_m, &host_ms, &vs);
+    let (addr, server) = start_server(&vs, &host_ms, 1 << 12, 0); // no session limit
+
+    let reports = predict_sessions_tcp(
+        &guest_m,
+        &vs.guest,
+        std::slice::from_ref(&addr),
+        1,
+        1,
+        PredictOptions::default(),
+    )
+    .expect("session");
+    assert_eq!(reports[0].preds, oracle);
+
+    // a bare control connection carrying only Shutdown asks the whole
+    // service to wind down; the accept loop must observe it and return
+    // instead of blocking forever — and the control connection itself
+    // must not show up as a served session
+    shutdown_predict_hosts(std::slice::from_ref(&addr)).expect("shutdown request");
+    let serve_report = server.join().expect("server thread");
+    assert_eq!(serve_report.n_sessions, 1, "control connections are not sessions");
+    assert!(serve_report.queries_answered > 0);
+}
+
+#[test]
+fn legacy_single_shot_client_does_not_kill_the_server() {
+    let (vs, guest_m, host_ms) = train(SyntheticSpec::give_credit(0.002), &fast_cfg());
+    let oracle = predict_centralized(&guest_m, &host_ms, &vs);
+    let (addr, server) = start_server(&vs, &host_ms, 1 << 12, 2);
+
+    // the legacy sessionless flow ends with a Shutdown frame after its
+    // queries — that must end only *its* session, not the whole service
+    let legacy = predict_federated_tcp(&guest_m, &vs.guest, std::slice::from_ref(&addr))
+        .expect("legacy single-shot predict");
+    assert_eq!(legacy.preds, oracle);
+
+    // worst case: a hello-less connection that sends *only* Shutdown
+    // (e.g. a legacy client whose link carried zero queries) — still
+    // must not stop the server, and must not consume session budget
+    {
+        use sbp::federation::transport::GuestTransport;
+        let t = sbp::federation::tcp::TcpGuestTransport::connect(
+            &addr,
+            sbp::crypto::cipher::CipherSuite::new_plain(64),
+        )
+        .expect("bare connection");
+        t.send(sbp::federation::message::ToHost::Shutdown);
+    }
+
+    // the server must still be accepting: a second, session-ful client
+    let after = predict_sessions_tcp(
+        &guest_m,
+        &vs.guest,
+        std::slice::from_ref(&addr),
+        1,
+        1,
+        PredictOptions::default(),
+    )
+    .expect("server must still accept after a legacy client");
+    assert_eq!(after[0].preds, oracle);
+    let serve_report = server.join().expect("server thread");
+    assert_eq!(serve_report.n_sessions, 2);
+}
+
+#[test]
+fn two_host_processes_serve_multi_party_sessions() {
+    let mut cfg = fast_cfg();
+    cfg.n_hosts = 2;
+    let (vs, guest_m, host_ms) = train(SyntheticSpec::higgs(0.0002), &cfg);
+    assert_eq!(host_ms.len(), 2);
+    let oracle = predict_centralized(&guest_m, &host_ms, &vs);
+
+    let mut addrs = Vec::new();
+    let mut servers = Vec::new();
+    for p in 0..2 {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        addrs.push(listener.local_addr().unwrap().to_string());
+        let model = host_ms[p].clone();
+        let slice = vs.hosts[p].clone();
+        servers.push(std::thread::spawn(move || {
+            serve_predict_tcp(
+                &listener,
+                model,
+                slice,
+                ServeConfig { cache_capacity: 1 << 12, ..ServeConfig::default() },
+                2,
+            )
+            .expect("serve loop")
+        }));
+    }
+    let reports =
+        predict_sessions_tcp(&guest_m, &vs.guest, &addrs, 2, 1, PredictOptions::default())
+            .expect("sessions");
+    for server in servers {
+        let rep = server.join().expect("server thread");
+        assert_eq!(rep.n_sessions, 2);
+    }
+    for r in &reports {
+        assert_eq!(r.preds, oracle, "multi-host session must match colocated");
+    }
+}

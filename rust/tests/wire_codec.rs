@@ -101,8 +101,18 @@ fn sample_to_host_messages(suite: &CipherSuite, rng: &mut ChaCha20Rng) -> Vec<To
         ToHost::FinishTree { tree_id: 8 },
         ToHost::DumpSplitTable,
         ToHost::Shutdown,
-        ToHost::PredictRoute { queries: vec![(0, 1), (5, 2), (9, 0)] },
-        ToHost::PredictRoute { queries: Vec::new() },
+        ToHost::PredictRoute { session: 0, queries: vec![(0, 1), (5, 2), (9, 0)] },
+        ToHost::PredictRoute { session: 0xDEAD, queries: Vec::new() },
+        ToHost::SessionHello {
+            session_id: 1,
+            protocol: sbp::federation::message::SERVE_PROTOCOL_VERSION,
+        },
+        ToHost::SessionHello {
+            session_id: u32::MAX,
+            protocol: sbp::federation::message::SERVE_PROTOCOL_VERSION,
+        },
+        ToHost::SessionClose { session_id: 1 },
+        ToHost::KeepAlive,
     ]
 }
 
@@ -131,8 +141,10 @@ fn sample_to_guest_messages(suite: &CipherSuite, rng: &mut ChaCha20Rng) -> Vec<T
             entries: vec![(0, 7, 1.5), (1, 0, -3.25), (2, 255, f64::MAX)],
         },
         ToGuest::Ack,
-        ToGuest::RouteAnswers { n: 11, bits: vec![0b1010_1010, 0b0000_0101] },
-        ToGuest::RouteAnswers { n: 0, bits: Vec::new() },
+        ToGuest::RouteAnswers { session: 0, n: 11, bits: vec![0b1010_1010, 0b0000_0101] },
+        ToGuest::RouteAnswers { session: 9, n: 0, bits: Vec::new() },
+        ToGuest::SessionAccept { session_id: 1, max_inflight: 1 },
+        ToGuest::SessionAccept { session_id: u32::MAX, max_inflight: 64 },
     ]
 }
 
@@ -315,6 +327,54 @@ fn garbage_payloads_error_cleanly() {
     };
     let bytes = encode_to_host(&suite, ct_len, &start);
     assert!(matches!(decode_to_host(None, &bytes), Err(WireError::Malformed(_))));
+}
+
+/// A malformed `SessionHello` — reserved session id 0, an unknown
+/// protocol version, or a truncated handshake frame — must be rejected
+/// by the codec with an error, never accepted or panicked: a serving
+/// host that half-understands a handshake would answer a session it
+/// cannot attribute.
+#[test]
+fn malformed_session_hello_rejected() {
+    use sbp::federation::message::SERVE_PROTOCOL_VERSION;
+    let suite = CipherSuite::new_plain(256);
+    let ct_len = suite.ct_byte_len();
+
+    // hand-build hello payloads: tag 9, session id, protocol (u32 LE each)
+    let hello = |session_id: u32, protocol: u32| {
+        let mut p = vec![9u8];
+        p.extend_from_slice(&session_id.to_le_bytes());
+        p.extend_from_slice(&protocol.to_le_bytes());
+        p
+    };
+    // the valid shape decodes
+    let ok = decode_to_host(None, &hello(7, SERVE_PROTOCOL_VERSION)).expect("valid hello");
+    assert!(matches!(ok, ToHost::SessionHello { session_id: 7, .. }));
+    // reserved session id 0
+    assert!(matches!(
+        decode_to_host(None, &hello(0, SERVE_PROTOCOL_VERSION)),
+        Err(WireError::Malformed(_))
+    ));
+    // protocol versions this build does not speak
+    for bad in [0u32, SERVE_PROTOCOL_VERSION + 1, u32::MAX] {
+        assert!(
+            matches!(decode_to_host(None, &hello(5, bad)), Err(WireError::Malformed(_))),
+            "protocol {bad} must be rejected"
+        );
+    }
+    // truncated handshake frames
+    let full = encode_to_host(
+        &suite,
+        ct_len,
+        &ToHost::SessionHello { session_id: 3, protocol: SERVE_PROTOCOL_VERSION },
+    );
+    for cut in 0..full.len() {
+        assert!(decode_to_host(None, &full[..cut]).is_err(), "prefix {cut} accepted");
+    }
+    // trailing garbage after a complete hello
+    let mut long = full.clone();
+    long.push(0);
+    assert!(matches!(decode_to_host(None, &long), Err(WireError::Malformed(_))));
 }
 
 /// Trailing bytes after a complete message are a framing error.
