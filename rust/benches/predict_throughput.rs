@@ -1,11 +1,19 @@
 //! Prediction-throughput benchmark for the model-lifecycle subsystem:
 //! rows/sec and wire bytes/row of batched federated inference, per
-//! transport, against the colocated single-process oracle.
+//! transport, against the colocated single-process oracle — including
+//! the **pipelined streaming** path (chunked, `max_inflight` chunks on
+//! the wire) and the **delta-suppressed repeat-scoring** workload.
 //!
 //! The full lifecycle is exercised, not simulated: a model is trained,
 //! saved to versioned per-party artifacts, re-loaded, and served. Output
 //! goes to `BENCH_predict.json` at the repository root (override with
 //! `SBP_BENCH_OUT`); rerun with `cargo bench --bench predict_throughput`.
+//!
+//! `cargo bench --bench predict_throughput -- --smoke` runs the same
+//! end-to-end pipeline at tiny shapes with every parity assertion armed
+//! and **no** JSON output — the CI regression check for the serving hot
+//! path (any drift between pipelined, lockstep, and colocated scoring
+//! fails the run).
 
 mod common;
 
@@ -13,23 +21,27 @@ use sbp::bench_harness::{fmt_secs, time_once, Table};
 use sbp::config::json::Json;
 use sbp::config::{CipherKind, TrainConfig};
 use sbp::coordinator::{
-    predict_centralized, predict_federated_in_memory, predict_federated_tcp, train_federated,
+    predict_centralized, predict_federated_in_memory, predict_federated_tcp,
+    predict_session_tcp, predict_stream_passes_tcp, serve_predict_tcp, train_federated,
 };
 use sbp::data::synthetic::SyntheticSpec;
-use sbp::federation::predict::serve_predict_once;
+use sbp::federation::predict::{serve_predict_once, PredictOptions};
+use sbp::federation::serve::ServeConfig;
 use sbp::model::{guest_file_name, host_file_name, GuestArtifact, HostArtifact, Objective};
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let m = common::scale_mult();
-    let epochs = common::bench_epochs(10);
-    let spec = SyntheticSpec::give_credit(0.05 * m); // 7,500 × 10 at default scale
+    let scale = if smoke { 0.004 } else { 0.05 * m };
+    let epochs = if smoke { 3 } else { common::bench_epochs(10) };
+    let spec = SyntheticSpec::give_credit(scale); // 7,500 × 10 at default bench scale
     let mut cfg = TrainConfig::secureboost_plus();
     cfg.epochs = epochs;
     cfg.cipher = CipherKind::Plain; // inference routes plaintext; cipher is irrelevant here
     cfg.goss = None;
 
     println!("\n=== Prediction throughput: batched federated inference ===");
-    println!("dataset {} scale {:.3} epochs {epochs}\n", spec.name, 0.05 * m);
+    println!("dataset {} scale {scale:.3} epochs {epochs}{}\n", spec.name, if smoke { " [smoke]" } else { "" });
     let vs = spec.generate_vertical(cfg.seed, 1);
     let report = train_federated(&vs, &cfg).expect("training run");
     println!("trained: {}", report.summary());
@@ -46,7 +58,7 @@ fn main() {
         max_bin: cfg.max_bin,
         guest_features: vs.guest.d(),
         seed: cfg.seed,
-        scale: 0.05 * m,
+        scale,
     }
     .save(&dir.join(guest_file_name()))
     .expect("save guest artifact");
@@ -57,7 +69,7 @@ fn main() {
             n_features: vs.hosts[p].d(),
             n_hosts: vs.hosts.len(),
             seed: cfg.seed,
-            scale: 0.05 * m,
+            scale,
         }
         .save(&dir.join(host_file_name(p)))
         .expect("save host artifact");
@@ -77,7 +89,7 @@ fn main() {
         .expect("in-memory federated predict");
     assert_eq!(mem.preds, cen_preds, "in-memory federated must match colocated exactly");
 
-    // ---- loopback TCP federated ---------------------------------------
+    // ---- loopback TCP federated (lockstep single batch) ---------------
     let mut addrs = Vec::new();
     let mut servers = Vec::new();
     for (p, art) in host_arts.iter().enumerate() {
@@ -97,6 +109,70 @@ fn main() {
     assert_eq!(tcp.preds, cen_preds, "tcp federated must match colocated exactly");
     assert_eq!(tcp.comm, mem.comm, "transports must account identical wire bytes");
 
+    // ---- pipelined streaming + repeat scoring through the serving loop
+    let batch_rows = (n / 8).clamp(1, 1024);
+    let stream_opts = PredictOptions {
+        batch_rows,
+        max_inflight: 4,
+        seed: 42,
+        ..PredictOptions::default()
+    };
+    let start_loop = |delta_window: usize, max_sessions: usize| {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        let addr = listener.local_addr().unwrap().to_string();
+        let model = host_models[0].clone();
+        let slice = vs.hosts[0].clone();
+        let handle = std::thread::spawn(move || {
+            serve_predict_tcp(
+                &listener,
+                model,
+                slice,
+                ServeConfig { delta_window, ..ServeConfig::default() },
+                max_sessions,
+            )
+            .expect("serve loop")
+        });
+        (addr, handle)
+    };
+
+    // delta on: one pipelined single-pass session, one 2-pass repeat
+    // session. The basis must hold every distinct (record, handle) key
+    // of the batch for pass 2 to go fully wire-free, so size the window
+    // to the worst case (rows × consulted handles) rather than the
+    // 64Ki serving default.
+    let (addr_on, server_on) = start_loop(1 << 20, 2);
+    let addrs_on = [addr_on];
+    let pipelined = predict_session_tcp(&guest_art.model, &vs.guest, &addrs_on, 1, stream_opts)
+        .expect("pipelined session");
+    assert_eq!(pipelined.preds, cen_preds, "pipelined must match colocated exactly");
+    let passes_on =
+        predict_stream_passes_tcp(&guest_art.model, &vs.guest, &addrs_on, 2, stream_opts, 2)
+            .expect("repeat-scoring session (delta on)");
+    let serve_on = server_on.join().expect("serve loop thread");
+    for pass in &passes_on {
+        assert_eq!(pass.preds, cen_preds, "repeat passes must match colocated exactly");
+    }
+    assert_eq!(
+        passes_on[1].comm.total_bytes(),
+        0,
+        "delta-suppressed repeat pass must be wire-free"
+    );
+
+    // delta off: the same 2-pass repeat workload re-pays the wire cost
+    let (addr_off, server_off) = start_loop(0, 1);
+    let addrs_off = [addr_off];
+    let passes_off =
+        predict_stream_passes_tcp(&guest_art.model, &vs.guest, &addrs_off, 1, stream_opts, 2)
+            .expect("repeat-scoring session (delta off)");
+    server_off.join().expect("serve loop thread");
+    for pass in &passes_off {
+        assert_eq!(pass.preds, cen_preds, "repeat passes must match colocated exactly");
+    }
+    assert!(
+        passes_off[1].comm.total_bytes() > 0,
+        "without delta suppression the repeat pass pays wire bytes again"
+    );
+
     // ---- report --------------------------------------------------------
     let mut table = Table::new(&["transport", "rows", "wall", "rows/sec", "bytes/row"]);
     table.row(&[
@@ -106,7 +182,7 @@ fn main() {
         format!("{:.0}", n as f64 / t_cen.max(1e-12)),
         "0".into(),
     ]);
-    for r in [&mem, &tcp] {
+    for r in [&mem, &tcp, &pipelined] {
         table.row(&[
             r.transport.to_string(),
             r.n_rows.to_string(),
@@ -116,12 +192,41 @@ fn main() {
         ]);
     }
     table.print();
+    println!(
+        "pipeline: {} chunks × {} rows, window {}, mean in-flight {:.2}, stall {}",
+        pipelined.chunks,
+        batch_rows,
+        stream_opts.max_inflight,
+        pipelined.mean_inflight,
+        fmt_secs(pipelined.stall_seconds),
+    );
+    println!(
+        "repeat scoring (pass 2 bytes/row): delta on {:.2} vs off {:.2} \
+         ({} answers elided server-side)",
+        passes_on[1].bytes_per_row,
+        passes_off[1].bytes_per_row,
+        serve_on.answers_elided,
+    );
+
+    if smoke {
+        println!("\n[smoke] serving-path parity OK (no JSON written)");
+        let _ = std::fs::remove_dir_all(&dir);
+        return;
+    }
 
     let transport_json = |rps: f64, bpr: f64, wall: f64| {
         Json::obj(vec![
             ("rows_per_sec", Json::Num((rps * 10.0).round() / 10.0)),
             ("bytes_per_row", Json::Num((bpr * 10.0).round() / 10.0)),
             ("wall_seconds", Json::Num(wall)),
+        ])
+    };
+    let pass_json = |r: &sbp::coordinator::PredictReport| {
+        Json::obj(vec![
+            ("rows_per_sec", Json::Num((r.rows_per_sec * 10.0).round() / 10.0)),
+            ("bytes_per_row", Json::Num((r.bytes_per_row * 100.0).round() / 100.0)),
+            ("suppressed", Json::Num(r.suppressed_queries as f64)),
+            ("delta_elided", Json::Num(r.delta_elided as f64)),
         ])
     };
     let doc = Json::obj(vec![
@@ -143,6 +248,44 @@ fn main() {
                     transport_json(mem.rows_per_sec, mem.bytes_per_row, mem.wall_seconds),
                 ),
                 ("tcp", transport_json(tcp.rows_per_sec, tcp.bytes_per_row, tcp.wall_seconds)),
+                (
+                    "tcp-pipelined",
+                    transport_json(
+                        pipelined.rows_per_sec,
+                        pipelined.bytes_per_row,
+                        pipelined.wall_seconds,
+                    ),
+                ),
+            ]),
+        ),
+        (
+            "pipeline",
+            Json::obj(vec![
+                ("batch_rows", Json::Num(batch_rows as f64)),
+                ("max_inflight", Json::Num(stream_opts.max_inflight as f64)),
+                ("chunks", Json::Num(pipelined.chunks as f64)),
+                ("mean_inflight", Json::Num((pipelined.mean_inflight * 100.0).round() / 100.0)),
+                ("stall_seconds", Json::Num(pipelined.stall_seconds)),
+            ]),
+        ),
+        (
+            "repeat_scoring",
+            Json::obj(vec![
+                (
+                    "delta_on",
+                    Json::obj(vec![
+                        ("pass1", pass_json(&passes_on[0])),
+                        ("pass2", pass_json(&passes_on[1])),
+                        ("answers_elided", Json::Num(serve_on.answers_elided as f64)),
+                    ]),
+                ),
+                (
+                    "delta_off",
+                    Json::obj(vec![
+                        ("pass1", pass_json(&passes_off[0])),
+                        ("pass2", pass_json(&passes_off[1])),
+                    ]),
+                ),
             ]),
         ),
         (

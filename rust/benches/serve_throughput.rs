@@ -26,9 +26,11 @@ const SESSIONS: usize = 6;
 const CONCURRENCY: usize = 2;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let m = common::scale_mult();
-    let epochs = common::bench_epochs(10);
-    let spec = SyntheticSpec::give_credit(0.02 * m); // 3,000 × 10 at default scale
+    let epochs = if smoke { 3 } else { common::bench_epochs(10) };
+    let scale = if smoke { 0.004 } else { 0.02 * m };
+    let spec = SyntheticSpec::give_credit(scale); // 3,000 × 10 at default scale
     let mut cfg = TrainConfig::secureboost_plus();
     cfg.epochs = epochs;
     cfg.cipher = CipherKind::Plain; // inference routes plaintext
@@ -36,9 +38,9 @@ fn main() {
 
     println!("\n=== Serving throughput: multi-session inference service ===");
     println!(
-        "dataset {} scale {:.3} epochs {epochs} sessions {SESSIONS} (concurrency {CONCURRENCY})\n",
+        "dataset {} scale {scale:.3} epochs {epochs} sessions {SESSIONS} (concurrency {CONCURRENCY}){}\n",
         spec.name,
-        0.02 * m
+        if smoke { " [smoke]" } else { "" }
     );
     let vs = spec.generate_vertical(cfg.seed, 1);
     let report = train_federated(&vs, &cfg).expect("training run");
@@ -112,6 +114,11 @@ fn main() {
         ]));
     }
     table.print();
+
+    if smoke {
+        println!("\n[smoke] multi-session serving parity OK (no JSON written)");
+        return;
+    }
 
     let doc = Json::obj(vec![
         ("bench", Json::Str("serve_throughput".into())),

@@ -277,6 +277,16 @@ pub struct PredictReport {
     pub suppressed_queries: u64,
     /// Decoy queries padded into this session's batches.
     pub decoy_queries: u64,
+    /// Answers the hosts elided via `RouteAnswersDelta` (cache-aware
+    /// wire suppression), resolved from the guest's mirrored basis.
+    pub delta_elided: u64,
+    /// Chunks the pass was pipelined into (0 = single-batch lockstep).
+    pub chunks: u64,
+    /// Mean chunks in flight while streaming (pipeline occupancy).
+    pub mean_inflight: f64,
+    /// Guest wall seconds blocked on host answers with nothing else
+    /// runnable (pipeline stall time).
+    pub stall_seconds: f64,
 }
 
 impl PredictReport {
@@ -302,6 +312,10 @@ impl PredictReport {
             session_id: crate::federation::message::SESSIONLESS_ID,
             suppressed_queries: 0,
             decoy_queries: 0,
+            delta_elided: 0,
+            chunks: 0,
+            mean_inflight: 0.0,
+            stall_seconds: 0.0,
         }
     }
 
@@ -315,6 +329,19 @@ impl PredictReport {
         self.session_id = session_id;
         self.suppressed_queries = suppressed_queries;
         self.decoy_queries = decoy_queries;
+        self
+    }
+
+    /// Attach pipelined-streaming statistics (builder style).
+    pub fn with_stream(
+        mut self,
+        stream: &crate::federation::predict::StreamReport,
+        delta_elided: u64,
+    ) -> PredictReport {
+        self.chunks = stream.chunks;
+        self.mean_inflight = stream.mean_inflight;
+        self.stall_seconds = stream.stall_seconds;
+        self.delta_elided = delta_elided;
         self
     }
 }
@@ -430,8 +457,13 @@ pub fn predict_federated_tcp(
 
 /// One serving session over framed TCP against live `sbp serve-predict`
 /// hosts: `SessionHello` handshake, one scored batch, `SessionClose`.
-/// The servers keep running afterwards — this is the client half of the
-/// long-lived inference service. `session_id` must be nonzero.
+/// With [`crate::federation::predict::PredictOptions::batch_rows`] set,
+/// the batch is scored through the **pipelined streaming** engine
+/// (chunked, up to `max_inflight` chunks in flight) instead of the
+/// lockstep single-batch walk — bit-identical output, near-in-memory
+/// throughput. The servers keep running afterwards — this is the client
+/// half of the long-lived inference service. `session_id` must be
+/// nonzero.
 pub fn predict_session_tcp(
     model: &GuestModel,
     guest_slice: &crate::data::dataset::PartySlice,
@@ -449,23 +481,97 @@ pub fn predict_session_tcp(
     }
     let mut session = crate::federation::predict::PredictSession::new(model, session_id, opts);
     session.open(&links);
-    let preds = session.predict_batch(guest_slice, &links);
+    let (preds, stream, transport) = if opts.batch_rows > 0 {
+        let (preds, stream) = session.predict_stream(guest_slice, &links);
+        (preds, Some(stream), "tcp-pipelined")
+    } else {
+        (session.predict_batch(guest_slice, &links), None, "tcp-session")
+    };
     let suppressed = session.suppressed_queries();
     let decoys = session.decoy_queries();
+    let delta_elided = session.delta_elided_answers();
     session.close(&links);
     let comm = links
         .iter()
         .map(|l| l.snapshot())
         .fold(NetSnapshot::default(), |acc, s| acc.add(&s));
-    Ok(PredictReport::new(
+    let mut report = PredictReport::new(
         preds,
         model.pred_width,
         guest_slice.n,
         wall0.elapsed().as_secs_f64(),
         comm,
-        "tcp-session",
+        transport,
     )
-    .with_session(session_id, suppressed, decoys))
+    .with_session(session_id, suppressed, decoys);
+    if let Some(stream) = stream {
+        report = report.with_stream(&stream, delta_elided);
+    }
+    Ok(report)
+}
+
+/// Repeat-scoring client: one serving session, `passes` streamed scans
+/// of the same `guest_slice` batch, one [`PredictReport`] per pass with
+/// **per-pass** wall/wire/suppression accounting. This is the
+/// memo-heavy workload the delta protocol targets: pass 1 synchronizes
+/// the per-host delta bases, so later passes resolve repeat routing
+/// decisions locally (suppressed) or receive them elided
+/// (`RouteAnswersDelta`), cutting bytes/row — bit-identical output
+/// every pass.
+pub fn predict_stream_passes_tcp(
+    model: &GuestModel,
+    guest_slice: &crate::data::dataset::PartySlice,
+    addrs: &[String],
+    session_id: u32,
+    opts: crate::federation::predict::PredictOptions,
+    passes: usize,
+) -> Result<Vec<PredictReport>> {
+    let suite = CipherSuite::new_plain(64); // inference frames carry no ciphertexts
+    let mut links: Vec<Box<dyn GuestTransport>> = Vec::with_capacity(addrs.len());
+    for addr in addrs {
+        let t = TcpGuestTransport::connect(addr, suite.clone())
+            .map_err(|e| anyhow!("connecting to predict host at {addr}: {e}"))?;
+        links.push(Box::new(t));
+    }
+    let mut session = crate::federation::predict::PredictSession::new(model, session_id, opts);
+    session.open(&links);
+    let mut reports = Vec::with_capacity(passes);
+    let mut comm_before = links
+        .iter()
+        .map(|l| l.snapshot())
+        .fold(NetSnapshot::default(), |acc, s| acc.add(&s));
+    let (mut sup_before, mut dec_before, mut eli_before) = (0u64, 0u64, 0u64);
+    for _ in 0..passes.max(1) {
+        let wall0 = std::time::Instant::now();
+        let (preds, stream) = session.predict_stream(guest_slice, &links);
+        let wall = wall0.elapsed().as_secs_f64();
+        let comm_now = links
+            .iter()
+            .map(|l| l.snapshot())
+            .fold(NetSnapshot::default(), |acc, s| acc.add(&s));
+        let comm = comm_now.diff(&comm_before);
+        comm_before = comm_now;
+        let (sup, dec, eli) = (
+            session.suppressed_queries(),
+            session.decoy_queries(),
+            session.delta_elided_answers(),
+        );
+        reports.push(
+            PredictReport::new(
+                preds,
+                model.pred_width,
+                guest_slice.n,
+                wall,
+                comm,
+                "tcp-pipelined",
+            )
+            .with_session(session_id, sup - sup_before, dec - dec_before)
+            .with_stream(&stream, eli - eli_before),
+        );
+        (sup_before, dec_before, eli_before) = (sup, dec, eli);
+    }
+    session.close(&links);
+    Ok(reports)
 }
 
 /// Run `n_sessions` serving sessions against live hosts with a
@@ -552,6 +658,9 @@ pub struct ServeReport {
     pub n_sessions: usize,
     /// Routing queries answered across all sessions.
     pub queries_answered: u64,
+    /// Answers elided from the wire by delta suppression
+    /// (`RouteAnswersDelta`) across all sessions.
+    pub answers_elided: u64,
     /// Routing-cache counters (shared across sessions).
     pub cache: crate::federation::serve::CacheStats,
     /// Exact serialized wire traffic across all sessions.
@@ -571,10 +680,12 @@ impl ServeReport {
     /// One-line service summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "served {} session(s): {} queries, {:.0} queries/s, {:.1} B/query, \
+            "served {} session(s): {} queries ({} answers delta-elided), \
+             {:.0} queries/s, {:.1} B/query, \
              cache {}/{} hit/miss ({:.1}% hit rate)",
             self.n_sessions,
             self.queries_answered,
+            self.answers_elided,
             self.queries_per_sec,
             self.bytes_per_query,
             self.cache.hits,
@@ -610,6 +721,7 @@ pub fn serve_predict_tcp(
     Ok(ServeReport {
         n_sessions,
         queries_answered,
+        answers_elided: state.answers_elided(),
         cache: state.cache_stats(),
         comm,
         wall_seconds: wall,

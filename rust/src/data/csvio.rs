@@ -6,11 +6,14 @@
 //!
 //! Format: one header line of comma-separated column names, then one
 //! numeric row per record. Values are parsed as `f64`; cells may not be
-//! empty. No quoting/escaping — column names and values must not contain
-//! commas (the in-tree datagen emitter never produces them). Record id =
-//! row index, so every party's CSV must list the **same records in the
-//! same order** — exactly the alignment contract the synthetic presets
-//! already rely on.
+//! empty. **RFC-4180 quoting is supported**: a field may be wrapped in
+//! double quotes, inside which commas, CR/LF line breaks, and doubled
+//! quotes (`""` → `"`) are literal — so column names containing commas,
+//! quotes, or newlines survive a round trip through
+//! [`write_party_csv`]/[`csv_field`]. Record id = row index, so every
+//! party's CSV must list the **same records in the same order** —
+//! exactly the alignment contract the synthetic presets already rely
+//! on.
 
 use crate::data::dataset::PartySlice;
 use std::path::Path;
@@ -26,58 +29,184 @@ pub struct CsvTable {
     pub cells: Vec<f64>,
 }
 
+/// Scan CSV text record by record, honoring RFC-4180 quoting: a field
+/// wrapped in `"` may contain commas, CR/LF record separators, and `""`
+/// escapes for a literal quote; unquoted fields may contain neither
+/// quotes nor bare carriage returns (a stray CR silently splitting a
+/// record would shift every following record id — the cross-party
+/// alignment contract — so it errors loudly instead). Records are
+/// separated by LF or CRLF; blank (whitespace-only, unquoted
+/// single-field) records are dropped, so a trailing newline costs
+/// nothing. Each completed record is handed to `on_record` and then
+/// dropped — the scan holds one record in memory, never the file,
+/// which is what keeps million-row `--data` loading at bounded overhead.
+fn parse_records(
+    text: &str,
+    mut on_record: impl FnMut(Vec<String>) -> Result<(), String>,
+) -> Result<(), String> {
+    let mut record: Vec<String> = Vec::new();
+    let mut field = String::new();
+    let mut field_quoted = false;
+    let mut in_quotes = false;
+    let mut chars = text.chars().peekable();
+    let mut end_record = |record: &mut Vec<String>,
+                          field: &mut String,
+                          field_quoted: &mut bool|
+     -> Result<(), String> {
+        record.push(std::mem::take(field));
+        let blank = record.len() == 1 && !*field_quoted && record[0].trim().is_empty();
+        *field_quoted = false;
+        if blank {
+            record.clear();
+            Ok(())
+        } else {
+            on_record(std::mem::take(record))
+        }
+    };
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            if c == '"' {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    field.push('"'); // "" escape → literal quote
+                } else {
+                    in_quotes = false; // closing quote
+                }
+            } else {
+                field.push(c); // commas and newlines are literal here
+            }
+            continue;
+        }
+        match c {
+            '"' => {
+                if !field.trim().is_empty() || field_quoted {
+                    return Err(
+                        "quote inside an unquoted field (RFC 4180 requires the whole \
+                         field quoted)"
+                            .into(),
+                    );
+                }
+                field.clear(); // drop pre-quote padding whitespace
+                field_quoted = true;
+                in_quotes = true;
+            }
+            ',' => {
+                record.push(std::mem::take(&mut field));
+                field_quoted = false;
+            }
+            '\r' => {
+                if chars.peek() != Some(&'\n') {
+                    // a bare CR is not a record separator in this
+                    // dialect: silently breaking the record here would
+                    // shift row indices and misalign the parties
+                    return Err(
+                        "bare carriage return outside quotes (quote the field, or use \
+                         LF/CRLF record separators)"
+                            .into(),
+                    );
+                }
+                chars.next();
+                end_record(&mut record, &mut field, &mut field_quoted)?;
+            }
+            '\n' => end_record(&mut record, &mut field, &mut field_quoted)?,
+            c => {
+                if field_quoted {
+                    // RFC 4180 allows only a delimiter after a closing
+                    // quote; silently appending would turn `"1"5` into
+                    // the number 15. Padding whitespace is tolerated
+                    // (symmetric with the pre-quote padding above).
+                    if !c.is_whitespace() {
+                        return Err(format!(
+                            "text after a closing quote ('{c}'); RFC 4180 allows only \
+                             a delimiter there"
+                        ));
+                    }
+                } else {
+                    field.push(c);
+                }
+            }
+        }
+    }
+    if in_quotes {
+        return Err("unterminated quoted field at end of file".into());
+    }
+    if !field.is_empty() || !record.is_empty() || field_quoted {
+        end_record(&mut record, &mut field, &mut field_quoted)?;
+    }
+    Ok(())
+}
+
+/// Escape one field for CSV output: quoted (with `""` escapes) exactly
+/// when it contains a comma, a quote, or a line break — the emitter
+/// side of the RFC-4180 dialect [`CsvTable::parse`] reads.
+pub fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r') {
+        let mut out = String::with_capacity(s.len() + 2);
+        out.push('"');
+        for c in s.chars() {
+            if c == '"' {
+                out.push('"');
+            }
+            out.push(c);
+        }
+        out.push('"');
+        out
+    } else {
+        s.to_string()
+    }
+}
+
 impl CsvTable {
     /// Parse a CSV from text (see the module docs for the dialect).
+    /// Records are converted to numbers as they are scanned — one
+    /// record's fields are the only transient string allocations, so
+    /// peak memory is the `f64` cell matrix, not a string copy of the
+    /// file.
     pub fn parse(text: &str) -> Result<CsvTable, String> {
-        let mut lines = text.lines().map(|l| l.trim_end_matches('\r'));
-        let header_line = loop {
-            match lines.next() {
-                Some(l) if l.trim().is_empty() => continue,
-                Some(l) => break l,
-                None => return Err("empty file: no header line".into()),
-            }
-        };
-        let headers: Vec<String> =
-            header_line.split(',').map(|h| h.trim().to_string()).collect();
-        if headers.iter().any(|h| h.is_empty()) {
-            return Err("header contains an empty column name".into());
-        }
-        for (i, h) in headers.iter().enumerate() {
-            if headers[..i].contains(h) {
-                return Err(format!("duplicate column name '{h}' in header"));
-            }
-        }
-        let d = headers.len();
-        let mut cells = Vec::new();
+        let mut headers: Option<Vec<String>> = None;
+        let mut cells: Vec<f64> = Vec::new();
         let mut rows = 0usize;
-        for (lineno, line) in lines.enumerate() {
-            if line.trim().is_empty() {
-                continue; // tolerate blank lines (e.g. a trailing newline)
+        let mut recno = 0usize; // 1-based, counting the header record
+        parse_records(text, |rec| {
+            recno += 1;
+            if headers.is_none() {
+                let hs: Vec<String> = rec.iter().map(|h| h.trim().to_string()).collect();
+                if hs.iter().any(|h| h.is_empty()) {
+                    return Err("header contains an empty column name".into());
+                }
+                for (i, h) in hs.iter().enumerate() {
+                    if hs[..i].contains(h) {
+                        return Err(format!("duplicate column name '{h}' in header"));
+                    }
+                }
+                headers = Some(hs);
+                return Ok(());
             }
-            let mut fields = 0usize;
-            for field in line.split(',') {
-                let field = field.trim();
+            let headers = headers.as_ref().expect("header set above");
+            if rec.len() != headers.len() {
+                return Err(format!(
+                    "record {recno} has {} field(s), header has {}",
+                    rec.len(),
+                    headers.len()
+                ));
+            }
+            for (col, raw) in rec.iter().enumerate() {
+                let field = raw.trim();
                 let v: f64 = field.parse().map_err(|_| {
                     format!(
-                        "row {} column {} ('{}'): not a number",
-                        lineno + 2, // 1-based, counting the header line
-                        fields + 1,
+                        "record {recno} column {} ('{}'): not a number",
+                        col + 1,
                         field
                     )
                 })?;
                 cells.push(v);
-                fields += 1;
-            }
-            if fields != d {
-                return Err(format!(
-                    "row {} has {} field(s), header has {}",
-                    lineno + 2,
-                    fields,
-                    d
-                ));
             }
             rows += 1;
-        }
+            Ok(())
+        })?;
+        let Some(headers) = headers else {
+            return Err("empty file: no header line".into());
+        };
         Ok(CsvTable { headers, rows, cells })
     }
 
@@ -155,7 +284,10 @@ pub fn write_party_csv(
         if j > 0 {
             out.push(',');
         }
-        out.push_str(&format!("f{c}"));
+        // canonical `f<col>` names never need quoting, but route them
+        // through the escaper anyway so the emitter stays correct if
+        // header naming ever grows richer
+        out.push_str(&csv_field(&format!("f{c}")));
     }
     if labels.is_some() {
         out.push_str(",label");
@@ -211,6 +343,63 @@ mod tests {
         assert!(CsvTable::parse("a,b\n1,x\n").is_err(), "non-numeric cell");
         let t = CsvTable::parse("a,b\n1,2\n").unwrap();
         assert!(t.party_slice(Some(&["c".to_string()]), None).is_err());
+    }
+
+    #[test]
+    fn quoted_fields_with_commas_quotes_and_newlines() {
+        // RFC-4180: quoted header names may hold commas, doubled quotes,
+        // and even line breaks; quoted numeric cells parse after unquote
+        let text = "\"a,b\",\"say \"\"hi\"\"\",\"multi\nline\"\r\n\"1.5\",2,3\n4,\"5e-1\",6\r\n";
+        let t = CsvTable::parse(text).unwrap();
+        assert_eq!(t.headers, vec!["a,b", "say \"hi\"", "multi\nline"]);
+        assert_eq!(t.rows, 2);
+        assert_eq!(t.cells, vec![1.5, 2.0, 3.0, 4.0, 0.5, 6.0]);
+        assert_eq!(t.column("a,b").unwrap(), vec![1.5, 4.0]);
+        // feature map by a comma-bearing name
+        let s = t.party_slice(Some(&["a,b".to_string()]), None).unwrap();
+        assert_eq!(s.x, vec![1.5, 4.0]);
+    }
+
+    #[test]
+    fn csv_field_escaping_roundtrips() {
+        for name in ["plain", "with,comma", "with \"quotes\"", "line\nbreak", "cr\rbreak", ""] {
+            let escaped = csv_field(name);
+            let text = format!("{escaped},x\n1,2\n");
+            // an empty name is rejected by the header check, so wrap it
+            if name.is_empty() {
+                assert_eq!(escaped, "");
+                continue;
+            }
+            let t = CsvTable::parse(&text)
+                .unwrap_or_else(|e| panic!("parsing escaped '{name}': {e}"));
+            assert_eq!(t.headers[0], name, "escape/parse must round-trip");
+        }
+        assert_eq!(csv_field("a,b"), "\"a,b\"");
+        assert_eq!(csv_field("q\"q"), "\"q\"\"q\"");
+        assert_eq!(csv_field("plain"), "plain");
+    }
+
+    #[test]
+    fn quote_errors_are_clean() {
+        // quote opened, never closed
+        assert!(CsvTable::parse("a,b\n\"1,2\n").is_err());
+        // quote in the middle of an unquoted field
+        assert!(CsvTable::parse("a,b\n1\"2,3\n").is_err());
+        // text after a closing quote must error, not merge into the
+        // field (`"1"5` silently parsing as 15 would corrupt data)
+        assert!(CsvTable::parse("a,b\n\"1\"5,2\n").is_err());
+        assert!(CsvTable::parse("a,b\n\"1\"\"2\"x,3\n").is_err());
+        // …but padding whitespace after a closing quote is tolerated
+        let t = CsvTable::parse("a,b\n\"1\" ,2\n").unwrap();
+        assert_eq!(t.cells, vec![1.0, 2.0]);
+        // a bare CR must error, not silently split the record — a
+        // silent split would shift every later record id and misalign
+        // the parties' row-index contract
+        assert!(CsvTable::parse("a\n1\r2\n").is_err());
+        // CR inside a quoted field stays literal; CRLF separates
+        let t = CsvTable::parse("\"a\rb\"\r\n1\r\n").unwrap();
+        assert_eq!(t.headers, vec!["a\rb"]);
+        assert_eq!(t.cells, vec![1.0]);
     }
 
     #[test]

@@ -570,7 +570,18 @@ fn node_stats_wire_len(s: &NodeStats, ct_len: usize) -> usize {
 
 /// Serialize a guest→host message into a frame payload (no length prefix).
 pub fn encode_to_host(suite: &CipherSuite, ct_len: usize, msg: &ToHost) -> Vec<u8> {
-    let mut out = Vec::with_capacity(to_host_wire_len(msg, ct_len) - FRAME_HEADER_LEN);
+    let mut out = Vec::new();
+    encode_to_host_into(suite, ct_len, msg, &mut out);
+    out
+}
+
+/// Serialize a guest→host message into a **reused** buffer (cleared
+/// first) — the allocation-free variant of [`encode_to_host`] the framed
+/// transports call with a per-connection scratch buffer, so the serving
+/// hot path encodes every frame without a fresh heap allocation.
+pub fn encode_to_host_into(suite: &CipherSuite, ct_len: usize, msg: &ToHost, out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(to_host_wire_len(msg, ct_len) - FRAME_HEADER_LEN);
     out.push(msg.kind().index() as u8);
     match msg {
         ToHost::Setup {
@@ -582,71 +593,71 @@ pub fn encode_to_host(suite: &CipherSuite, ct_len: usize, msg: &ToHost) -> Vec<u
             sparse_optimization,
             seed,
         } => {
-            put_suite(&mut out, suite_public);
-            put_stat_codec(&mut out, codec);
+            put_suite(out, suite_public);
+            put_stat_codec(out, codec);
             match compress {
                 Some(p) => {
                     out.push(1);
-                    put_u32(&mut out, p.capacity as u32);
-                    put_u32(&mut out, p.b_gh as u32);
+                    put_u32(out, p.capacity as u32);
+                    put_u32(out, p.b_gh as u32);
                 }
                 None => out.push(0),
             }
-            put_u32(&mut out, *n_bins as u32);
+            put_u32(out, *n_bins as u32);
             out.push(*hist_subtraction as u8);
             out.push(*sparse_optimization as u8);
-            put_u64(&mut out, *seed);
+            put_u64(out, *seed);
         }
         ToHost::StartTree { tree_id, instances, packed, node_total } => {
-            put_u32(&mut out, *tree_id);
-            put_u32_list(&mut out, instances);
-            put_u32(&mut out, packed.len() as u32);
+            put_u32(out, *tree_id);
+            put_u32_list(out, instances);
+            put_u32(out, packed.len() as u32);
             for ct in packed.iter() {
-                put_ct(&mut out, suite, ct_len, ct);
+                put_ct(out, suite, ct_len, ct);
             }
-            put_u32(&mut out, node_total.len() as u32);
+            put_u32(out, node_total.len() as u32);
             for ct in node_total {
-                put_ct(&mut out, suite, ct_len, ct);
+                put_ct(out, suite, ct_len, ct);
             }
         }
         ToHost::BuildLayer { tree_id, tasks } => {
-            put_u32(&mut out, *tree_id);
-            put_u32(&mut out, tasks.len() as u32);
+            put_u32(out, *tree_id);
+            put_u32(out, tasks.len() as u32);
             for t in tasks {
-                put_task(&mut out, t);
+                put_task(out, t);
             }
         }
         ToHost::ApplySplit { tree_id, node, handle, instances } => {
-            put_u32(&mut out, *tree_id);
-            put_u32(&mut out, *node);
-            put_u32(&mut out, *handle);
-            put_u32_list(&mut out, instances);
+            put_u32(out, *tree_id);
+            put_u32(out, *node);
+            put_u32(out, *handle);
+            put_u32_list(out, instances);
         }
         ToHost::SyncAssign { tree_id, node, left_child, right_child, left } => {
-            put_u32(&mut out, *tree_id);
-            put_u32(&mut out, *node);
-            put_u32(&mut out, *left_child);
-            put_u32(&mut out, *right_child);
-            put_u32_list(&mut out, left);
+            put_u32(out, *tree_id);
+            put_u32(out, *node);
+            put_u32(out, *left_child);
+            put_u32(out, *right_child);
+            put_u32_list(out, left);
         }
-        ToHost::FinishTree { tree_id } => put_u32(&mut out, *tree_id),
+        ToHost::FinishTree { tree_id } => put_u32(out, *tree_id),
         ToHost::DumpSplitTable | ToHost::Shutdown | ToHost::KeepAlive => {}
-        ToHost::PredictRoute { session, queries } => {
-            put_u32(&mut out, *session);
-            put_u32(&mut out, queries.len() as u32);
+        ToHost::PredictRoute { session, chunk, queries } => {
+            put_u32(out, *session);
+            put_u32(out, *chunk);
+            put_u32(out, queries.len() as u32);
             for (row, handle) in queries {
-                put_u32(&mut out, *row);
-                put_u32(&mut out, *handle);
+                put_u32(out, *row);
+                put_u32(out, *handle);
             }
         }
         ToHost::SessionHello { session_id, protocol } => {
-            put_u32(&mut out, *session_id);
-            put_u32(&mut out, *protocol);
+            put_u32(out, *session_id);
+            put_u32(out, *protocol);
         }
-        ToHost::SessionClose { session_id } => put_u32(&mut out, *session_id),
+        ToHost::SessionClose { session_id } => put_u32(out, *session_id),
     }
     debug_assert_eq!(out.len() + FRAME_HEADER_LEN, to_host_wire_len(msg, ct_len));
-    out
 }
 
 /// Decode a guest→host frame payload. `Setup` needs no prior state; every
@@ -740,12 +751,15 @@ pub fn decode_to_host(
         7 => ToHost::Shutdown,
         8 => {
             let session = r.u32()?;
+            let chunk = r.u32()?;
+            // zero-row batches are a valid streaming tail, not malformed:
+            // seq_len(0) passes and the loop body never runs
             let n = r.seq_len(8)?;
             let mut queries = Vec::with_capacity(n);
             for _ in 0..n {
                 queries.push((r.u32()?, r.u32()?));
             }
-            ToHost::PredictRoute { session, queries }
+            ToHost::PredictRoute { session, chunk, queries }
         }
         9 => {
             let session_id = r.u32()?;
@@ -771,44 +785,73 @@ pub fn decode_to_host(
 
 /// Serialize a host→guest message into a frame payload (no length prefix).
 pub fn encode_to_guest(suite: &CipherSuite, ct_len: usize, msg: &ToGuest) -> Vec<u8> {
-    let mut out = Vec::with_capacity(to_guest_wire_len(msg, ct_len) - FRAME_HEADER_LEN);
+    let mut out = Vec::new();
+    encode_to_guest_into(suite, ct_len, msg, &mut out);
+    out
+}
+
+/// Serialize a host→guest message into a **reused** buffer (cleared
+/// first) — the allocation-free variant of [`encode_to_guest`] (see
+/// [`encode_to_host_into`]).
+pub fn encode_to_guest_into(
+    suite: &CipherSuite,
+    ct_len: usize,
+    msg: &ToGuest,
+    out: &mut Vec<u8>,
+) {
+    out.clear();
+    out.reserve(to_guest_wire_len(msg, ct_len) - FRAME_HEADER_LEN);
     out.push(msg.kind().index() as u8);
     match msg {
         ToGuest::LayerStats { tree_id, nodes } => {
-            put_u32(&mut out, *tree_id);
-            put_u32(&mut out, nodes.len() as u32);
+            put_u32(out, *tree_id);
+            put_u32(out, nodes.len() as u32);
             for (node, stats) in nodes {
-                put_u32(&mut out, *node);
-                put_node_stats(&mut out, suite, ct_len, stats);
+                put_u32(out, *node);
+                put_node_stats(out, suite, ct_len, stats);
             }
         }
         ToGuest::LeftInstances { tree_id, node, left } => {
-            put_u32(&mut out, *tree_id);
-            put_u32(&mut out, *node);
-            put_u32_list(&mut out, left);
+            put_u32(out, *tree_id);
+            put_u32(out, *node);
+            put_u32_list(out, left);
         }
         ToGuest::SplitTable { entries } => {
-            put_u32(&mut out, entries.len() as u32);
+            put_u32(out, entries.len() as u32);
             for (handle, bin, threshold) in entries {
-                put_u32(&mut out, *handle);
+                put_u32(out, *handle);
                 out.push(*bin);
-                put_f64(&mut out, *threshold);
+                put_f64(out, *threshold);
             }
         }
         ToGuest::Ack => {}
-        ToGuest::RouteAnswers { session, n, bits } => {
+        ToGuest::RouteAnswers { session, chunk, n, bits } => {
             assert_eq!(bits.len(), (*n as usize).div_ceil(8), "answer bitmap sized to n");
-            put_u32(&mut out, *session);
-            put_u32(&mut out, *n);
+            put_u32(out, *session);
+            put_u32(out, *chunk);
+            put_u32(out, *n);
             out.extend_from_slice(bits);
         }
-        ToGuest::SessionAccept { session_id, max_inflight } => {
-            put_u32(&mut out, *session_id);
-            put_u32(&mut out, *max_inflight);
+        ToGuest::SessionAccept { session_id, max_inflight, delta_window } => {
+            put_u32(out, *session_id);
+            put_u32(out, *max_inflight);
+            put_u32(out, *delta_window);
+        }
+        ToGuest::RouteAnswersDelta { session, chunk, n, n_known, bits } => {
+            assert!(n_known <= n, "delta cannot know more answers than queries");
+            assert_eq!(
+                bits.len(),
+                ((*n - *n_known) as usize).div_ceil(8),
+                "fresh bitmap sized to n − n_known"
+            );
+            put_u32(out, *session);
+            put_u32(out, *chunk);
+            put_u32(out, *n);
+            put_u32(out, *n_known);
+            out.extend_from_slice(bits);
         }
     }
     debug_assert_eq!(out.len() + FRAME_HEADER_LEN, to_guest_wire_len(msg, ct_len));
-    out
 }
 
 /// Decode a host→guest frame payload with the guest's cipher suite.
@@ -850,14 +893,41 @@ pub fn decode_to_guest(
         3 => ToGuest::Ack,
         4 => {
             let session = r.u32()?;
+            let chunk = r.u32()?;
+            // n = 0 (an answered zero-row batch) is valid: the bitmap is
+            // simply empty, and finish() still rejects trailing bytes
             let n = r.u32()?;
             let n_bytes = (n as usize).div_ceil(8);
             if n_bytes > r.remaining() {
                 return Err(WireError::Malformed("answer bitmap exceeds frame"));
             }
-            ToGuest::RouteAnswers { session, n, bits: r.take(n_bytes)?.to_vec() }
+            ToGuest::RouteAnswers { session, chunk, n, bits: r.take(n_bytes)?.to_vec() }
         }
-        5 => ToGuest::SessionAccept { session_id: r.u32()?, max_inflight: r.u32()? },
+        5 => ToGuest::SessionAccept {
+            session_id: r.u32()?,
+            max_inflight: r.u32()?,
+            delta_window: r.u32()?,
+        },
+        6 => {
+            let session = r.u32()?;
+            let chunk = r.u32()?;
+            let n = r.u32()?;
+            let n_known = r.u32()?;
+            if n_known > n {
+                return Err(WireError::Malformed("delta elides more answers than queries"));
+            }
+            let n_bytes = ((n - n_known) as usize).div_ceil(8);
+            if n_bytes > r.remaining() {
+                return Err(WireError::Malformed("fresh bitmap exceeds frame"));
+            }
+            ToGuest::RouteAnswersDelta {
+                session,
+                chunk,
+                n,
+                n_known,
+                bits: r.take(n_bytes)?.to_vec(),
+            }
+        }
         t => return Err(WireError::BadTag { what: "to-guest message", tag: t }),
     };
     r.finish()?;
@@ -896,7 +966,7 @@ pub fn to_host_wire_len(msg: &ToHost, ct_len: usize) -> usize {
             ToHost::SyncAssign { left, .. } => 16 + 4 + left.len() * 4,
             ToHost::FinishTree { .. } => 4,
             ToHost::DumpSplitTable | ToHost::Shutdown | ToHost::KeepAlive => 0,
-            ToHost::PredictRoute { queries, .. } => 4 + 4 + queries.len() * 8,
+            ToHost::PredictRoute { queries, .. } => 4 + 4 + 4 + queries.len() * 8,
             ToHost::SessionHello { .. } => 8,
             ToHost::SessionClose { .. } => 4,
         }
@@ -917,8 +987,11 @@ pub fn to_guest_wire_len(msg: &ToGuest, ct_len: usize) -> usize {
             ToGuest::LeftInstances { left, .. } => 8 + 4 + left.len() * 4,
             ToGuest::SplitTable { entries } => 4 + entries.len() * 13,
             ToGuest::Ack => 0,
-            ToGuest::RouteAnswers { n, .. } => 4 + 4 + (*n as usize).div_ceil(8),
-            ToGuest::SessionAccept { .. } => 8,
+            ToGuest::RouteAnswers { n, .. } => 4 + 4 + 4 + (*n as usize).div_ceil(8),
+            ToGuest::SessionAccept { .. } => 12,
+            ToGuest::RouteAnswersDelta { n, n_known, .. } => {
+                16 + ((*n - *n_known) as usize).div_ceil(8)
+            }
         }
 }
 
@@ -952,16 +1025,28 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
 /// The body is read incrementally (1 MiB steps), so a garbage length
 /// field cannot drive a giant up-front allocation.
 pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, WireError> {
+    let mut buf = Vec::new();
+    Ok(if read_frame_into(r, &mut buf)? { Some(buf) } else { None })
+}
+
+/// Read one frame into a **reused** buffer (cleared first); `Ok(false)`
+/// on clean end-of-stream at a frame boundary, `Ok(true)` with the
+/// payload in `buf` otherwise. The allocation-free sibling of
+/// [`read_frame`]: a per-connection scratch buffer amortizes the payload
+/// allocation across every frame of the connection. The body is read
+/// incrementally (1 MiB steps), so a garbage length field cannot drive a
+/// giant up-front allocation.
+pub fn read_frame_into(r: &mut impl Read, buf: &mut Vec<u8>) -> Result<bool, WireError> {
+    buf.clear();
     let mut hdr = [0u8; FRAME_HEADER_LEN];
     if !read_exact_or(r, &mut hdr)? {
-        return Ok(None);
+        return Ok(false);
     }
     let len = u64::from_le_bytes(hdr);
     if len > MAX_FRAME_LEN {
         return Err(WireError::FrameTooLarge(len));
     }
     let len = len as usize;
-    let mut buf = Vec::with_capacity(len.min(1 << 20));
     let mut filled = 0;
     while filled < len {
         let step = (len - filled).min(1 << 20);
@@ -971,7 +1056,7 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, WireError> {
         }
         filled += step;
     }
-    Ok(Some(buf))
+    Ok(true)
 }
 
 #[cfg(test)]
@@ -1080,28 +1165,112 @@ mod tests {
     fn predict_messages_roundtrip_and_match_wire_len() {
         let suite = CipherSuite::new_plain(128);
         let ct_len = suite.ct_byte_len();
-        let q = ToHost::PredictRoute { session: 7, queries: vec![(0, 5), (17, 2), (9, 9)] };
+        let q = ToHost::PredictRoute {
+            session: 7,
+            chunk: 11,
+            queries: vec![(0, 5), (17, 2), (9, 9)],
+        };
         let payload = encode_to_host(&suite, ct_len, &q);
         assert_eq!(payload.len() + FRAME_HEADER_LEN, to_host_wire_len(&q, ct_len));
         // PredictRoute carries no ciphertexts, so it decodes without Setup
         let back = decode_to_host(None, &payload).unwrap();
-        let ToHost::PredictRoute { session, queries } = back else { panic!("wrong kind") };
-        assert_eq!(session, 7);
+        let ToHost::PredictRoute { session, chunk, queries } = back else {
+            panic!("wrong kind")
+        };
+        assert_eq!((session, chunk), (7, 11));
         assert_eq!(queries, vec![(0, 5), (17, 2), (9, 9)]);
 
         for n in [0u32, 1, 7, 8, 9, 64] {
             let bits = vec![0xA5u8; (n as usize).div_ceil(8)];
-            let a = ToGuest::RouteAnswers { session: 3, n, bits: bits.clone() };
+            let a = ToGuest::RouteAnswers { session: 3, chunk: 2, n, bits: bits.clone() };
             let payload = encode_to_guest(&suite, ct_len, &a);
             assert_eq!(payload.len() + FRAME_HEADER_LEN, to_guest_wire_len(&a, ct_len));
             let back = decode_to_guest(&suite, ct_len, &payload).unwrap();
-            assert_eq!(back, ToGuest::RouteAnswers { session: 3, n, bits });
+            assert_eq!(back, ToGuest::RouteAnswers { session: 3, chunk: 2, n, bits });
         }
         // truncated bitmap rejected, not panicked
-        let a = ToGuest::RouteAnswers { session: 3, n: 64, bits: vec![0u8; 8] };
+        let a = ToGuest::RouteAnswers { session: 3, chunk: 0, n: 64, bits: vec![0u8; 8] };
         let mut payload = encode_to_guest(&suite, ct_len, &a);
         payload.truncate(payload.len() - 3);
         assert!(decode_to_guest(&suite, ct_len, &payload).is_err());
+    }
+
+    #[test]
+    fn zero_row_predict_frames_are_valid_not_malformed() {
+        // a streaming chunk tail may legitimately carry zero queries for
+        // one host — the empty batch must round-trip, not be conflated
+        // with a malformed frame
+        let suite = CipherSuite::new_plain(128);
+        let ct_len = suite.ct_byte_len();
+        let q = ToHost::PredictRoute { session: 9, chunk: 3, queries: Vec::new() };
+        let payload = encode_to_host(&suite, ct_len, &q);
+        assert_eq!(payload.len() + FRAME_HEADER_LEN, to_host_wire_len(&q, ct_len));
+        let ToHost::PredictRoute { session, chunk, queries } =
+            decode_to_host(None, &payload).unwrap()
+        else {
+            panic!("wrong kind")
+        };
+        assert_eq!((session, chunk), (9, 3));
+        assert!(queries.is_empty());
+        // …but an empty batch with trailing garbage is still rejected
+        let mut long = payload.clone();
+        long.push(0);
+        assert!(matches!(decode_to_host(None, &long), Err(WireError::Malformed(_))));
+
+        let a = ToGuest::RouteAnswers { session: 9, chunk: 3, n: 0, bits: Vec::new() };
+        let payload = encode_to_guest(&suite, ct_len, &a);
+        assert_eq!(payload.len() + FRAME_HEADER_LEN, to_guest_wire_len(&a, ct_len));
+        assert_eq!(decode_to_guest(&suite, ct_len, &payload).unwrap(), a);
+    }
+
+    #[test]
+    fn route_answers_delta_roundtrips_and_validates() {
+        let suite = CipherSuite::new_plain(128);
+        let ct_len = suite.ct_byte_len();
+        for (n, n_known) in [(0u32, 0u32), (8, 8), (11, 3), (9, 0), (64, 63)] {
+            let bits = vec![0x5Au8; ((n - n_known) as usize).div_ceil(8)];
+            let d = ToGuest::RouteAnswersDelta {
+                session: 4,
+                chunk: 7,
+                n,
+                n_known,
+                bits: bits.clone(),
+            };
+            let payload = encode_to_guest(&suite, ct_len, &d);
+            assert_eq!(payload.len() + FRAME_HEADER_LEN, to_guest_wire_len(&d, ct_len));
+            let back = decode_to_guest(&suite, ct_len, &payload).unwrap();
+            assert_eq!(
+                back,
+                ToGuest::RouteAnswersDelta { session: 4, chunk: 7, n, n_known, bits }
+            );
+        }
+        // n_known > n is a contract violation, rejected at decode
+        let mut evil = vec![6u8];
+        evil.extend_from_slice(&1u32.to_le_bytes()); // session
+        evil.extend_from_slice(&0u32.to_le_bytes()); // chunk
+        evil.extend_from_slice(&2u32.to_le_bytes()); // n
+        evil.extend_from_slice(&3u32.to_le_bytes()); // n_known > n
+        assert!(matches!(
+            decode_to_guest(&suite, ct_len, &evil),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn frame_reuse_buffer_roundtrip() {
+        let mut wire: Vec<u8> = Vec::new();
+        write_frame(&mut wire, b"first").unwrap();
+        write_frame(&mut wire, b"second, longer payload").unwrap();
+        write_frame(&mut wire, b"").unwrap();
+        let mut cur = std::io::Cursor::new(wire);
+        let mut buf = Vec::new();
+        assert!(read_frame_into(&mut cur, &mut buf).unwrap());
+        assert_eq!(buf, b"first");
+        assert!(read_frame_into(&mut cur, &mut buf).unwrap());
+        assert_eq!(buf, b"second, longer payload");
+        assert!(read_frame_into(&mut cur, &mut buf).unwrap());
+        assert_eq!(buf, b"");
+        assert!(!read_frame_into(&mut cur, &mut buf).unwrap(), "clean EOF");
     }
 
     #[test]

@@ -158,7 +158,7 @@ impl<T: HostTransport> HostParty<T> {
                 ToHost::DumpSplitTable => {
                     self.link.send(ToGuest::SplitTable { entries: self.split_table.clone() });
                 }
-                ToHost::PredictRoute { session, queries } => {
+                ToHost::PredictRoute { session, chunk, queries } => {
                     // in-session inference against the just-trained split
                     // table: binned routing `bin ≤ b` is exactly the raw
                     // rule `x ≤ threshold` the exported model applies
@@ -175,14 +175,20 @@ impl<T: HostTransport> HostParty<T> {
                             bits[i / 8] |= 1 << (i % 8);
                         }
                     }
-                    self.link.send(ToGuest::RouteAnswers { session, n: n as u32, bits });
+                    self.link.send(ToGuest::RouteAnswers { session, chunk, n: n as u32, bits });
                 }
                 // serving-session control frames are not part of the
                 // training protocol; a training host acknowledges probes
                 // and ignores stray session bookkeeping rather than
-                // aborting a run over them
+                // aborting a run over them (delta_window 0: a training
+                // host keeps no per-session basis, so every answer
+                // travels in full)
                 ToHost::SessionHello { session_id, .. } => {
-                    self.link.send(ToGuest::SessionAccept { session_id, max_inflight: 1 });
+                    self.link.send(ToGuest::SessionAccept {
+                        session_id,
+                        max_inflight: 1,
+                        delta_window: 0,
+                    });
                 }
                 ToHost::SessionClose { .. } => {}
                 ToHost::KeepAlive => self.link.send(ToGuest::Ack),

@@ -16,7 +16,13 @@ use std::sync::Arc;
 /// frame changes incompatibly (query encoding, answer packing, session
 /// semantics). The wire codec rejects hellos for any other version —
 /// a serving host must never half-understand a session.
-pub const SERVE_PROTOCOL_VERSION: u32 = 1;
+///
+/// v2: chunked pipelined streaming — `PredictRoute`/`RouteAnswers`
+/// carry a chunk id so several batches may be in flight per session,
+/// and handshaked sessions may receive [`ToGuest::RouteAnswersDelta`]
+/// answers (cache-aware wire suppression) when the host's
+/// [`ToGuest::SessionAccept`] announced a nonzero `delta_window`.
+pub const SERVE_PROTOCOL_VERSION: u32 = 2;
 
 /// Session id reserved for the legacy *sessionless* inference flow
 /// (a bare `PredictRoute` without a preceding handshake). Real sessions
@@ -147,10 +153,13 @@ pub enum ToGuestKind {
     RouteAnswers = 4,
     /// Acceptance of a [`ToHostKind::SessionHello`] handshake.
     SessionAccept = 5,
+    /// Delta-suppressed answers: only the bits for queries the host has
+    /// *not* already answered this session.
+    RouteAnswersDelta = 6,
 }
 
 /// Number of host→guest message kinds.
-pub const TO_GUEST_KINDS: usize = 6;
+pub const TO_GUEST_KINDS: usize = 7;
 
 impl ToGuestKind {
     /// Every host→guest kind, in tag order.
@@ -161,6 +170,7 @@ impl ToGuestKind {
         ToGuestKind::Ack,
         ToGuestKind::RouteAnswers,
         ToGuestKind::SessionAccept,
+        ToGuestKind::RouteAnswersDelta,
     ];
 
     /// Wire tag byte / per-kind counter index.
@@ -177,6 +187,7 @@ impl ToGuestKind {
             ToGuestKind::Ack => "Ack",
             ToGuestKind::RouteAnswers => "RouteAnswers",
             ToGuestKind::SessionAccept => "SessionAccept",
+            ToGuestKind::RouteAnswersDelta => "RouteAnswersDelta",
         }
     }
 }
@@ -230,7 +241,13 @@ pub enum ToHost {
         /// The serving session this batch belongs to
         /// ([`SESSIONLESS_ID`] for the legacy single-shot flow).
         session: u32,
-        /// `(record id, split handle)` per query, in query order.
+        /// Caller-chosen chunk id, echoed on the answer so a pipelined
+        /// guest with several chunks in flight can rejoin answers to
+        /// walks. Single-batch flows send 0; hosts only echo it.
+        chunk: u32,
+        /// `(record id, split handle)` per query, in query order. An
+        /// empty list is a valid (if pointless) batch — a streaming tail
+        /// may legitimately have nothing to ask one host.
         queries: Vec<(u32, u32)>,
     },
     /// Open a long-lived serving session: the guest announces a nonzero
@@ -308,6 +325,8 @@ pub enum ToGuest {
         /// The serving session the answered batch belongs to (echoes the
         /// query's session id; [`SESSIONLESS_ID`] for legacy flows).
         session: u32,
+        /// Echo of the answered batch's chunk id (pipelined rejoin).
+        chunk: u32,
         /// Number of valid answer bits (equals the query count).
         n: u32,
         /// `⌈n/8⌉` bytes of LSB-first routing bits.
@@ -321,7 +340,42 @@ pub enum ToGuest {
         /// How many unanswered `PredictRoute` batches the session may
         /// have in flight before the host stops reading its frames —
         /// the bound of the host's per-session queue (backpressure).
+        /// Compliant pipelined guests clamp their chunk window to it.
         max_inflight: u32,
+        /// Capacity (entries) of the per-session delta basis this host
+        /// maintains for cache-aware wire suppression, 0 = suppression
+        /// off. Nonzero means the session may answer `PredictRoute`
+        /// batches with [`ToGuest::RouteAnswersDelta`] frames; the guest
+        /// must mirror the basis (same capacity, same freeze-on-full
+        /// insertion rule) to resolve elided answers.
+        delta_window: u32,
+    },
+    /// Cache-aware wire suppression: answers for a `PredictRoute` batch
+    /// in which every `(record, handle)` key the host has **already
+    /// answered earlier in this session** is elided — "unchanged since
+    /// your last ask". Routing is a pure function of the immutable model
+    /// share and feature slice, so a repeated key's answer is necessarily
+    /// the bit the guest already holds in its memo/basis; only the
+    /// *fresh* queries' bits travel. Both sides maintain the same
+    /// bounded "seen" set (the *delta basis*, capacity announced as
+    /// `delta_window` in [`ToGuest::SessionAccept`], frozen when full),
+    /// updated in frame order, so the guest can reconstruct the full
+    /// answer bitmap bit-identically without an explicit membership map
+    /// on the wire.
+    RouteAnswersDelta {
+        /// The serving session the answered batch belongs to.
+        session: u32,
+        /// Echo of the answered batch's chunk id.
+        chunk: u32,
+        /// Total query count of the answered batch.
+        n: u32,
+        /// How many of the `n` queries were elided (already answered
+        /// this session). Always ≥ 1 — an all-fresh batch is answered
+        /// with a plain [`ToGuest::RouteAnswers`] instead.
+        n_known: u32,
+        /// `⌈(n − n_known)/8⌉` bytes of LSB-first routing bits for the
+        /// fresh queries, in query order.
+        bits: Vec<u8>,
     },
 }
 
@@ -335,6 +389,7 @@ impl ToGuest {
             ToGuest::Ack => ToGuestKind::Ack,
             ToGuest::RouteAnswers { .. } => ToGuestKind::RouteAnswers,
             ToGuest::SessionAccept { .. } => ToGuestKind::SessionAccept,
+            ToGuest::RouteAnswersDelta { .. } => ToGuestKind::RouteAnswersDelta,
         }
     }
 }

@@ -26,6 +26,23 @@
 //! single-shot [`federated_predict`] is a thin hello-less wrapper over
 //! one sessionless batch.
 //!
+//! Two scoring engines share that session state:
+//!
+//! - [`PredictSession::predict_batch`] — the lockstep single-batch walk
+//!   (send every level's queries, wait, repeat);
+//! - [`PredictSession::predict_stream`] — the **pipelined streaming**
+//!   engine: rows are split into [`PredictOptions::batch_rows`]-sized
+//!   chunks and up to [`PredictOptions::max_inflight`] chunks ride the
+//!   wire concurrently (chunk ids on the session frames rejoin answers
+//!   to walks), overlapping host round-trip latency with guest
+//!   encode/decode work at `O(batch_rows × max_inflight)` guest memory.
+//!
+//! Handshaked sessions additionally run the **delta protocol** (cache-
+//! aware wire suppression): the session mirrors each host's bounded
+//! "already answered" set — the *delta basis* — so hosts elide repeat
+//! answers via `RouteAnswersDelta` frames and the guest reconstructs
+//! them locally, bit-identically (see [`super::serve`]).
+//!
 //! Privacy directions:
 //!
 //! - the **guest** learns one routing bit per consulted host split —
@@ -134,12 +151,29 @@ pub struct PredictOptions {
     /// the decoy stream and strip the padding. Fix it explicitly only
     /// for reproducible tests and benches.
     pub seed: u64,
+    /// Rows per streamed chunk for [`PredictSession::predict_stream`];
+    /// 0 = the single-batch lockstep flow (`predict_batch`). Guest
+    /// working memory is `O(batch_rows × max_inflight)` instead of
+    /// `O(total rows)`.
+    pub batch_rows: usize,
+    /// Chunks kept in flight per host while streaming (≥ 1). Clamped to
+    /// the `max_inflight` each host announces in its `SessionAccept` —
+    /// the serving host's per-session queue bound.
+    pub max_inflight: usize,
+    /// Emit one stderr progress line per finished chunk while streaming.
+    pub progress: bool,
 }
 
 impl Default for PredictOptions {
     fn default() -> Self {
         let mut entropy = crate::util::rng::ChaCha20Rng::from_os_entropy();
-        PredictOptions { dummy_queries: 0, seed: entropy.next_u64() }
+        PredictOptions {
+            dummy_queries: 0,
+            seed: entropy.next_u64(),
+            batch_rows: 0,
+            max_inflight: 4,
+            progress: false,
+        }
     }
 }
 
@@ -148,6 +182,38 @@ struct Cursor {
     tree: u32,
     row: u32,
     node: u32,
+}
+
+/// Per-host serving limits learned from the `SessionAccept` handshake.
+#[derive(Clone, Copy, Debug, Default)]
+struct HostCaps {
+    /// Unanswered chunks the host tolerates per session.
+    max_inflight: u32,
+    /// Delta-basis capacity (0 = wire suppression off for this host).
+    delta_window: u32,
+}
+
+/// What one [`PredictSession::predict_stream`] pass did: pipeline
+/// occupancy and stall accounting for the bench JSONs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamReport {
+    /// Chunks the pass was split into.
+    pub chunks: u64,
+    /// Rows per chunk the pass ran with.
+    pub batch_rows: usize,
+    /// The effective in-flight window: the requested `max_inflight`,
+    /// clamped to every host's announced bound and to the answer-byte
+    /// budget that keeps blocking-socket pipelining deadlock-free.
+    pub window: usize,
+    /// Highest number of chunks simultaneously in flight.
+    pub max_inflight_observed: usize,
+    /// Mean chunks in flight, sampled at every answer-frame wait.
+    pub mean_inflight: f64,
+    /// Wall seconds the guest spent blocked waiting for host answers
+    /// with no runnable chunk — the pipeline's stall time. A full
+    /// window that still stalls means the hosts are the bottleneck;
+    /// zero stalls mean the guest is.
+    pub stall_seconds: f64,
 }
 
 /// A reusable guest-side prediction session over a shared, load-once
@@ -164,9 +230,20 @@ pub struct PredictSession<'a> {
     /// Per-party pool of host handles the model references (decoy pool:
     /// decoys are indistinguishable from real consultations).
     host_handles: Vec<Vec<u32>>,
+    /// Per-host mirror of the serving host's delta "seen" set:
+    /// `(record id, handle) → routing bit` for every key that host has
+    /// answered this session, bounded by the host-announced
+    /// `delta_window` and frozen when full — byte-for-byte the same
+    /// insertion rule the host runs, so elided answers in
+    /// `RouteAnswersDelta` frames resolve locally and bit-identically.
+    basis: Vec<HashMap<(u32, u32), bool>>,
+    /// Limits each host announced in its `SessionAccept` (empty until
+    /// [`PredictSession::open`]; sessionless flows never fill it).
+    host_caps: Vec<HostCaps>,
     rng: Xoshiro256,
     suppressed: u64,
     decoys: u64,
+    delta_elided: u64,
 }
 
 impl<'a> PredictSession<'a> {
@@ -180,6 +257,13 @@ impl<'a> PredictSession<'a> {
     /// [`federated_predict`] runs under.
     pub fn sessionless(model: &'a GuestModel) -> Self {
         Self::build(model, SESSIONLESS_ID, PredictOptions::default())
+    }
+
+    /// A hello-less session with explicit options — the streaming knobs
+    /// work sessionless too (the host still echoes chunk ids); delta
+    /// suppression stays off because no handshake announced a window.
+    pub fn sessionless_with(model: &'a GuestModel, opts: PredictOptions) -> Self {
+        Self::build(model, SESSIONLESS_ID, opts)
     }
 
     fn build(model: &'a GuestModel, session_id: u32, opts: PredictOptions) -> Self {
@@ -205,9 +289,12 @@ impl<'a> PredictSession<'a> {
             opts,
             memo: HashMap::new(),
             host_handles,
+            basis: Vec::new(),
+            host_caps: Vec::new(),
             rng: Xoshiro256::seed_from_u64(opts.seed ^ (session_id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
             suppressed: 0,
             decoys: 0,
+            delta_elided: 0,
         }
     }
 
@@ -227,25 +314,41 @@ impl<'a> PredictSession<'a> {
         self.decoys
     }
 
+    /// Answers the hosts elided from the wire via `RouteAnswersDelta`
+    /// and this session resolved from its mirrored delta basis.
+    pub fn delta_elided_answers(&self) -> u64 {
+        self.delta_elided
+    }
+
     /// Open the session: one `SessionHello` per host, each answered by a
-    /// `SessionAccept` echoing the id. Panics on a rejected handshake —
-    /// the guest cannot proceed against a host that refused it.
-    pub fn open(&self, links: &[Box<dyn GuestTransport>]) {
+    /// `SessionAccept` echoing the id and announcing the host's
+    /// `max_inflight` / `delta_window` limits (recorded for streaming
+    /// and delta decoding). Panics on a rejected handshake — the guest
+    /// cannot proceed against a host that refused it.
+    pub fn open(&mut self, links: &[Box<dyn GuestTransport>]) {
         for link in links {
             link.send(ToHost::SessionHello {
                 session_id: self.session_id,
                 protocol: SERVE_PROTOCOL_VERSION,
             });
         }
+        self.host_caps.clear();
+        // a (re)opened session faces hosts with *fresh* per-session seen
+        // sets — the mirrored bases must restart empty too, or the first
+        // repeat key after a reconnect would desync the delta protocol
+        for basis in &mut self.basis {
+            basis.clear();
+        }
         for (p, link) in links.iter().enumerate() {
             let msg = link.recv();
-            let ToGuest::SessionAccept { session_id, .. } = msg else {
+            let ToGuest::SessionAccept { session_id, max_inflight, delta_window } = msg else {
                 panic!("host {p} rejected the session handshake")
             };
             assert_eq!(
                 session_id, self.session_id,
                 "host {p} accepted a different session id"
             );
+            self.host_caps.push(HostCaps { max_inflight, delta_window });
         }
     }
 
@@ -286,6 +389,7 @@ impl<'a> PredictSession<'a> {
         let n = guest.n;
         let d = guest.d();
         let n_trees = model.trees.len();
+        self.ensure_basis(links.len());
         // every referenced host party must have a connected link;
         // `host_handles` (built once per session) already records the
         // highest referenced party, so this is O(1) per batch
@@ -366,85 +470,22 @@ impl<'a> PredictSession<'a> {
                 if idxs.is_empty() {
                     continue;
                 }
-                let mut queries: Vec<(u32, u32)> = Vec::new();
-                let mut qpos: HashMap<(u32, u32), usize> = HashMap::new();
-                let mut slots: Vec<usize> = Vec::with_capacity(idxs.len());
-                for &idx in &idxs {
-                    let c = &active[idx];
-                    let (tree, _) = &model.trees[c.tree as usize];
-                    let Some(SplitRef::Host { handle, .. }) =
-                        &tree.nodes[c.node as usize].split
-                    else {
-                        unreachable!()
-                    };
-                    let key = (c.row, *handle);
-                    let slot = match qpos.entry(key) {
-                        Entry::Occupied(e) => {
-                            // same (record, handle) pending for several
-                            // trees: ask once, fan the answer out
-                            self.suppressed += 1;
-                            *e.get()
-                        }
-                        Entry::Vacant(v) => {
-                            queries.push(key);
-                            *v.insert(queries.len() - 1)
-                        }
-                    };
-                    slots.push(slot);
-                }
-                if self.opts.dummy_queries > 0 && n > 0 {
-                    let pool = self.host_handles.get(p).filter(|h| !h.is_empty());
-                    if let Some(pool) = pool {
-                        for _ in 0..self.opts.dummy_queries {
-                            let row = self.rng.next_below(n) as u32;
-                            let handle = pool[self.rng.next_below(pool.len())];
-                            queries.push((row, handle));
-                            self.decoys += 1;
-                        }
-                        // decoys must be indistinguishable by *position*
-                        // too — a fixed-size tail would be trivially
-                        // separable — so shuffle the whole batch and
-                        // remap the cursors' answer slots accordingly
-                        let mut order: Vec<usize> = (0..queries.len()).collect();
-                        self.rng.shuffle(&mut order);
-                        let mut new_pos = vec![0usize; queries.len()];
-                        for (np, &op) in order.iter().enumerate() {
-                            new_pos[op] = np;
-                        }
-                        queries = order.iter().map(|&op| queries[op]).collect();
-                        for slot in &mut slots {
-                            *slot = new_pos[*slot];
-                        }
-                    }
-                }
+                let (queries, slots) = self.build_host_queries(p, &idxs, &active, n);
                 links[p].send(ToHost::PredictRoute {
                     session: self.session_id,
+                    chunk: 0,
                     queries: queries.clone(),
                 });
                 rounds.push((p, idxs, queries, slots));
             }
             for (p, idxs, queries, slots) in rounds {
-                let msg = links[p].recv();
-                let ToGuest::RouteAnswers { session, n: n_ans, bits } = msg else {
-                    panic!("expected RouteAnswers from host {p}")
-                };
-                assert_eq!(
-                    session, self.session_id,
-                    "host {p} answered for a different session"
-                );
-                assert_eq!(
-                    n_ans as usize,
-                    queries.len(),
-                    "host {p} answered a different batch size"
-                );
+                let bits = self.recv_answers(p, links[p].as_ref(), 0, &queries);
                 // memoize every answered (record, handle) — decoys too
                 for (q, &(row, handle)) in queries.iter().enumerate() {
-                    let left = bits[q / 8] & (1 << (q % 8)) != 0;
-                    self.memo.insert((p as u8, row, handle), left);
+                    self.memo.insert((p as u8, row, handle), bits[q]);
                 }
                 for (k, &idx) in idxs.iter().enumerate() {
-                    let slot = slots[k];
-                    let left = bits[slot / 8] & (1 << (slot % 8)) != 0;
+                    let left = bits[slots[k]];
                     let c = &mut active[idx];
                     let (tree, _) = &model.trees[c.tree as usize];
                     let node = &tree.nodes[c.node as usize];
@@ -472,6 +513,503 @@ impl<'a> PredictSession<'a> {
         }
         preds
     }
+
+    /// Streamed, **pipelined** federated inference: split `guest`'s rows
+    /// into [`PredictOptions::batch_rows`]-sized chunks and keep up to
+    /// [`PredictOptions::max_inflight`] chunks in flight per host —
+    /// while one chunk awaits its level's `RouteAnswers`, the next
+    /// chunk's `PredictRoute` is already encoded and on the wire, so
+    /// host round-trip latency overlaps with guest encode/decode work
+    /// instead of serializing with it. Answers rejoin their chunks by
+    /// the echoed chunk id. Guest working memory is bounded by the
+    /// chunk window (`O(batch_rows × max_inflight)` walk state plus the
+    /// bounded delta basis), not by the total row count; predictions
+    /// are **bit-identical** to [`PredictSession::predict_batch`] and
+    /// to colocated inference.
+    ///
+    /// Returns the full margin matrix plus the pass's [`StreamReport`].
+    /// For true bounded-memory scoring of unbounded inputs, use
+    /// [`PredictSession::predict_stream_with`] and write each chunk out
+    /// as it lands.
+    pub fn predict_stream(
+        &mut self,
+        guest: &PartySlice,
+        links: &[Box<dyn GuestTransport>],
+    ) -> (Vec<f64>, StreamReport) {
+        let k = self.model.pred_width;
+        let mut preds = vec![0.0f64; guest.n * k];
+        let report = self.predict_stream_with(guest, links, |row0, chunk_preds| {
+            preds[row0 * k..row0 * k + chunk_preds.len()].copy_from_slice(chunk_preds);
+        });
+        (preds, report)
+    }
+
+    /// [`PredictSession::predict_stream`] with a caller-supplied sink:
+    /// `sink(row0, preds)` is called once per finished chunk (in
+    /// completion order, which may differ from row order under
+    /// pipelining) with that chunk's row-major `rows × pred_width`
+    /// margins. The guest never materializes the full prediction
+    /// matrix — this is the bounded-memory path for million-row runs.
+    pub fn predict_stream_with(
+        &mut self,
+        guest: &PartySlice,
+        links: &[Box<dyn GuestTransport>],
+        mut sink: impl FnMut(usize, &[f64]),
+    ) -> StreamReport {
+        let n = guest.n;
+        let n_trees = self.model.trees.len();
+        self.ensure_basis(links.len());
+        assert!(
+            self.host_handles.len() <= links.len(),
+            "model references host parties up to {} but only {} link(s) are connected",
+            self.host_handles.len().saturating_sub(1),
+            links.len()
+        );
+        let chunk_rows = if self.opts.batch_rows == 0 { n.max(1) } else { self.opts.batch_rows };
+        let n_chunks = n.div_ceil(chunk_rows.max(1));
+        // the in-flight window honors every host's announced bound —
+        // that is the serving side's per-session queue backpressure
+        let mut window = self.opts.max_inflight.max(1);
+        for caps in &self.host_caps {
+            window = window.min((caps.max_inflight.max(1)) as usize);
+        }
+        // Deadlock guard: both ends use blocking sockets with no
+        // dedicated reader thread, so while this guest is writing chunk
+        // frames it is NOT draining answers. A host whose pending
+        // answer bytes exceed the kernel's socket buffering blocks in
+        // its write, stops reading, and the guest's own in-progress
+        // request write then blocks too — a permanent mutual hang.
+        // Answers are tiny (1 bit/query + 21 B framing), so keeping the
+        // worst-case *undrained* answer bytes per host — (window − 1)
+        // chunks × one outstanding level each, ≤ batch_rows × n_trees
+        // queries + decoys per level — under a conservative buffer
+        // budget makes the host's answer writes always complete, which
+        // keeps it reading, which keeps the guest's sends completing.
+        const ANSWER_BUDGET_BYTES: usize = 48 << 10; // well under any OS default
+        let per_chunk_answer_bytes =
+            (chunk_rows * n_trees.max(1) + self.opts.dummy_queries).div_ceil(8) + 21;
+        window = window.min(1 + ANSWER_BUDGET_BYTES / per_chunk_answer_bytes).max(1);
+        let mut report = StreamReport {
+            chunks: n_chunks as u64,
+            batch_rows: chunk_rows,
+            window,
+            ..StreamReport::default()
+        };
+        let t0 = std::time::Instant::now();
+        let mut chunks: HashMap<u32, ChunkState> = HashMap::new();
+        let mut ready: std::collections::VecDeque<u32> = std::collections::VecDeque::new();
+        // per-link FIFO of chunk ids with an unanswered PredictRoute:
+        // a host answers its session's frames strictly in arrival
+        // order, so the head of each queue names the next frame
+        let mut outstanding: Vec<std::collections::VecDeque<u32>> =
+            (0..links.len()).map(|_| std::collections::VecDeque::new()).collect();
+        let mut next_row = 0usize;
+        let mut next_id = 1u32;
+        let mut done_chunks = 0u64;
+        let mut inflight_sum = 0u64;
+        let mut inflight_samples = 0u64;
+        loop {
+            // admit chunks until the window is full
+            while chunks.len() < window && next_row < n {
+                let rows = chunk_rows.min(n - next_row);
+                let id = next_id;
+                next_id = next_id.wrapping_add(1);
+                let mut st = ChunkState {
+                    row0: next_row,
+                    rows,
+                    active: Vec::with_capacity(n_trees * rows),
+                    final_node: vec![0; n_trees * rows],
+                    memo: HashMap::new(),
+                    pending: (0..links.len()).map(|_| None).collect(),
+                    awaiting: 0,
+                };
+                for t in 0..n_trees {
+                    for i in 0..rows {
+                        st.active.push(Cursor {
+                            tree: t as u32,
+                            row: (next_row + i) as u32,
+                            node: 0,
+                        });
+                    }
+                }
+                chunks.insert(id, st);
+                ready.push_back(id);
+                next_row += rows;
+                report.max_inflight_observed = report.max_inflight_observed.max(chunks.len());
+            }
+            // run every runnable chunk: local advancement, then either
+            // finalize it or put its next level's queries on the wire
+            if let Some(id) = ready.pop_front() {
+                let mut st = chunks.remove(&id).expect("ready chunk exists");
+                if self.advance_chunk(id, &mut st, guest, links, &mut outstanding) {
+                    let chunk_preds = self.finalize_chunk(&st);
+                    sink(st.row0, &chunk_preds);
+                    done_chunks += 1;
+                    if self.opts.progress {
+                        eprintln!(
+                            "[sbp] chunk {done_chunks}/{n_chunks} done \
+                             (rows {}..{}, {} in flight)",
+                            st.row0,
+                            st.row0 + st.rows,
+                            chunks.len()
+                        );
+                    }
+                } else {
+                    chunks.insert(id, st);
+                }
+                continue; // admit/advance before blocking on answers
+            }
+            if chunks.is_empty() {
+                break; // everything admitted, advanced and finalized
+            }
+            // every in-flight chunk awaits host answers: block on the
+            // oldest unanswered frame. All wall time spent here is
+            // pipeline stall — there was nothing else runnable.
+            let p = outstanding
+                .iter()
+                .position(|q| !q.is_empty())
+                .expect("chunks await answers but no frame is outstanding");
+            let id = *outstanding[p].front().expect("nonempty queue");
+            inflight_sum += chunks.len() as u64;
+            inflight_samples += 1;
+            let wait0 = std::time::Instant::now();
+            let st = chunks.get_mut(&id).expect("outstanding chunk exists");
+            let round = st.pending[p].take().expect("outstanding round exists");
+            let bits = self.recv_answers(p, links[p].as_ref(), id, &round.queries);
+            report.stall_seconds += wait0.elapsed().as_secs_f64();
+            outstanding[p].pop_front();
+            // memoize within the chunk (decoys included) and advance
+            // the cursors that were waiting on this host
+            for (q, &(row, handle)) in round.queries.iter().enumerate() {
+                st.memo.insert((p as u8, row, handle), bits[q]);
+            }
+            for (j, &idx) in round.idxs.iter().enumerate() {
+                let left = bits[round.slots[j]];
+                let c = &mut st.active[idx];
+                let (tree, _) = &self.model.trees[c.tree as usize];
+                let node = &tree.nodes[c.node as usize];
+                c.node = if left { node.left as u32 } else { node.right as u32 };
+            }
+            st.awaiting -= 1;
+            if st.awaiting == 0 {
+                ready.push_back(id);
+            }
+        }
+        report.mean_inflight = if inflight_samples == 0 {
+            0.0
+        } else {
+            inflight_sum as f64 / inflight_samples as f64
+        };
+        if self.opts.progress {
+            eprintln!(
+                "[sbp] streamed {n} row(s) in {n_chunks} chunk(s): \
+                 window {window}, mean in-flight {:.2}, stall {:.3}s of {:.3}s",
+                report.mean_inflight,
+                report.stall_seconds,
+                t0.elapsed().as_secs_f64(),
+            );
+        }
+        report
+    }
+
+    /// Phase A + phase B for one streamed chunk: advance every cursor
+    /// through guest splits and memo/basis-answered host splits; then
+    /// either report the chunk finished (`true`) or send one
+    /// `PredictRoute` per host with the chunk's pending queries and
+    /// record the expectation FIFO entries.
+    fn advance_chunk(
+        &mut self,
+        id: u32,
+        st: &mut ChunkState,
+        guest: &PartySlice,
+        links: &[Box<dyn GuestTransport>],
+        outstanding: &mut [std::collections::VecDeque<u32>],
+    ) -> bool {
+        let model = self.model;
+        let d = guest.d();
+        let mut i = 0;
+        while i < st.active.len() {
+            let c = &mut st.active[i];
+            let (tree, _class) = &model.trees[c.tree as usize];
+            let guest_row = &guest.x[c.row as usize * d..(c.row as usize + 1) * d];
+            let mut finished = false;
+            loop {
+                let node = &tree.nodes[c.node as usize];
+                match &node.split {
+                    None => {
+                        let local = c.row as usize - st.row0;
+                        st.final_node[c.tree as usize * st.rows + local] = c.node;
+                        finished = true;
+                        break;
+                    }
+                    Some(SplitRef::Guest { feature, threshold, .. }) => {
+                        let left = guest_row[*feature as usize] <= *threshold;
+                        c.node = if left { node.left as u32 } else { node.right as u32 };
+                    }
+                    Some(SplitRef::Host { party, handle }) => {
+                        // chunk memo first, then the session's delta
+                        // basis — a decision this session already holds
+                        // never crosses the wire again
+                        let key = (*party, c.row, *handle);
+                        let hit = st.memo.get(&key).copied().or_else(|| {
+                            self.basis
+                                .get(*party as usize)
+                                .and_then(|b| b.get(&(c.row, *handle)).copied())
+                        });
+                        match hit {
+                            Some(left) => {
+                                self.suppressed += 1;
+                                c.node =
+                                    if left { node.left as u32 } else { node.right as u32 };
+                            }
+                            None => break, // needs a host answer
+                        }
+                    }
+                }
+            }
+            if finished {
+                st.active.swap_remove(i); // swapped-in cursor re-processed at i
+            } else {
+                i += 1;
+            }
+        }
+        if st.active.is_empty() {
+            return true;
+        }
+        let mut pending: Vec<Vec<usize>> = vec![Vec::new(); links.len()];
+        for (idx, c) in st.active.iter().enumerate() {
+            let (tree, _) = &model.trees[c.tree as usize];
+            let Some(SplitRef::Host { party, .. }) = &tree.nodes[c.node as usize].split else {
+                unreachable!("phase A leaves cursors at host splits only")
+            };
+            pending[*party as usize].push(idx);
+        }
+        for (p, idxs) in pending.into_iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let (queries, slots) = self.build_host_queries(p, &idxs, &st.active, guest.n);
+            links[p].send(ToHost::PredictRoute {
+                session: self.session_id,
+                chunk: id,
+                queries: queries.clone(),
+            });
+            st.pending[p] = Some(PendingRound { idxs, queries, slots });
+            st.awaiting += 1;
+            outstanding[p].push_back(id);
+        }
+        debug_assert!(st.awaiting > 0, "unfinished chunk sent no queries");
+        false
+    }
+
+    /// Accumulate one finished chunk's leaf weights in tree order —
+    /// exactly [`PredictSession::predict_batch`]'s summation order per
+    /// row, so streamed results are bit-identical.
+    fn finalize_chunk(&self, st: &ChunkState) -> Vec<f64> {
+        let k = self.model.pred_width;
+        let mut preds = vec![0.0f64; st.rows * k];
+        for i in 0..st.rows {
+            for (t, (tree, class)) in self.model.trees.iter().enumerate() {
+                let leaf = &tree.nodes[st.final_node[t * st.rows + i] as usize];
+                if tree.width == 1 {
+                    preds[i * k + *class] += leaf.weight[0];
+                } else {
+                    for (j, &w) in leaf.weight.iter().enumerate() {
+                        preds[i * k + j] += w;
+                    }
+                }
+            }
+        }
+        preds
+    }
+
+    /// One host's query list for a set of pending cursors: within-batch
+    /// duplicates collapsed (each extra ask counted as suppressed),
+    /// decoys appended and the whole batch shuffled so position reveals
+    /// nothing. Returns `(queries, answer slot per cursor)`.
+    fn build_host_queries(
+        &mut self,
+        p: usize,
+        idxs: &[usize],
+        active: &[Cursor],
+        n_rows: usize,
+    ) -> (Vec<(u32, u32)>, Vec<usize>) {
+        let model = self.model;
+        let mut queries: Vec<(u32, u32)> = Vec::new();
+        let mut qpos: HashMap<(u32, u32), usize> = HashMap::new();
+        let mut slots: Vec<usize> = Vec::with_capacity(idxs.len());
+        for &idx in idxs {
+            let c = &active[idx];
+            let (tree, _) = &model.trees[c.tree as usize];
+            let Some(SplitRef::Host { handle, .. }) = &tree.nodes[c.node as usize].split
+            else {
+                unreachable!()
+            };
+            let key = (c.row, *handle);
+            let slot = match qpos.entry(key) {
+                Entry::Occupied(e) => {
+                    // same (record, handle) pending for several trees:
+                    // ask once, fan the answer out
+                    self.suppressed += 1;
+                    *e.get()
+                }
+                Entry::Vacant(v) => {
+                    queries.push(key);
+                    *v.insert(queries.len() - 1)
+                }
+            };
+            slots.push(slot);
+        }
+        if self.opts.dummy_queries > 0 && n_rows > 0 {
+            let pool = self.host_handles.get(p).filter(|h| !h.is_empty());
+            if let Some(pool) = pool {
+                for _ in 0..self.opts.dummy_queries {
+                    let row = self.rng.next_below(n_rows) as u32;
+                    let handle = pool[self.rng.next_below(pool.len())];
+                    queries.push((row, handle));
+                    self.decoys += 1;
+                }
+                // decoys must be indistinguishable by *position* too —
+                // a fixed-size tail would be trivially separable — so
+                // shuffle the whole batch and remap the cursors' answer
+                // slots accordingly
+                let mut order: Vec<usize> = (0..queries.len()).collect();
+                self.rng.shuffle(&mut order);
+                let mut new_pos = vec![0usize; queries.len()];
+                for (np, &op) in order.iter().enumerate() {
+                    new_pos[op] = np;
+                }
+                queries = order.iter().map(|&op| queries[op]).collect();
+                for slot in &mut slots {
+                    *slot = new_pos[*slot];
+                }
+            }
+        }
+        (queries, slots)
+    }
+
+    /// Receive and decode one host's answer frame for `queries` (sent
+    /// as chunk `expect_chunk`). Handles both the plain `RouteAnswers`
+    /// and the delta-suppressed `RouteAnswersDelta` forms, applying the
+    /// mirrored delta-basis update rule in frame order — byte-for-byte
+    /// the rule the host runs — so elided answers resolve locally and
+    /// both ends stay key-for-key in sync.
+    fn recv_answers(
+        &mut self,
+        p: usize,
+        link: &dyn GuestTransport,
+        expect_chunk: u32,
+        queries: &[(u32, u32)],
+    ) -> Vec<bool> {
+        let dw = self.host_caps.get(p).map_or(0, |c| c.delta_window as usize);
+        match link.recv() {
+            ToGuest::RouteAnswers { session, chunk, n, bits } => {
+                assert_eq!(session, self.session_id, "host {p} answered for a different session");
+                assert_eq!(chunk, expect_chunk, "host {p} answered out of frame order");
+                assert_eq!(
+                    n as usize,
+                    queries.len(),
+                    "host {p} answered a different batch size"
+                );
+                let out: Vec<bool> =
+                    (0..queries.len()).map(|q| bits[q / 8] & (1 << (q % 8)) != 0).collect();
+                if dw > 0 {
+                    // a plain frame on a delta session means the host
+                    // found nothing to elide and inserted every fresh
+                    // key — mirror that
+                    let basis = &mut self.basis[p];
+                    for (q, key) in queries.iter().enumerate() {
+                        if !basis.contains_key(key) && basis.len() < dw {
+                            basis.insert(*key, out[q]);
+                        }
+                    }
+                }
+                out
+            }
+            ToGuest::RouteAnswersDelta { session, chunk, n, n_known, bits } => {
+                assert!(
+                    dw > 0,
+                    "host {p} sent a delta answer on a session without delta suppression"
+                );
+                assert_eq!(session, self.session_id, "host {p} answered for a different session");
+                assert_eq!(chunk, expect_chunk, "host {p} answered out of frame order");
+                assert_eq!(
+                    n as usize,
+                    queries.len(),
+                    "host {p} answered a different batch size"
+                );
+                let expected_fresh = (n - n_known) as usize;
+                let mut out = Vec::with_capacity(queries.len());
+                let mut fresh = 0usize;
+                let mut known = 0usize;
+                let basis = &mut self.basis[p];
+                for key in queries {
+                    match basis.get(key).copied() {
+                        Some(b) => {
+                            known += 1;
+                            out.push(b);
+                        }
+                        None => {
+                            assert!(
+                                fresh < expected_fresh,
+                                "host {p} delta basis out of sync (more fresh answers \
+                                 expected than sent)"
+                            );
+                            let b = bits[fresh / 8] & (1 << (fresh % 8)) != 0;
+                            fresh += 1;
+                            if basis.len() < dw {
+                                basis.insert(*key, b);
+                            }
+                            out.push(b);
+                        }
+                    }
+                }
+                assert_eq!(
+                    known as u32, n_known,
+                    "host {p} delta basis out of sync (elision counts differ)"
+                );
+                self.delta_elided += known as u64;
+                out
+            }
+            other => panic!("expected RouteAnswers from host {p}, got {:?}", other.kind()),
+        }
+    }
+
+    /// Size the per-host delta-basis table to the connected link count.
+    fn ensure_basis(&mut self, n_links: usize) {
+        if self.basis.len() < n_links {
+            self.basis.resize_with(n_links, HashMap::new);
+        }
+    }
+}
+
+/// Per-host state of one in-flight `PredictRoute` round of a chunk.
+struct PendingRound {
+    /// Cursor indices (into the chunk's `active`) awaiting this host.
+    idxs: Vec<usize>,
+    /// The queries exactly as sent (decoys included, post-shuffle).
+    queries: Vec<(u32, u32)>,
+    /// Answer slot per cursor in `idxs` (index into `queries`).
+    slots: Vec<usize>,
+}
+
+/// The walk state of one streamed chunk: its row range, live cursors,
+/// settled leaves, chunk-local routing memo, and the per-host rounds
+/// currently on the wire. Dropped whole when the chunk finishes — the
+/// guest's streaming memory is `O(batch_rows × max_inflight)` of these,
+/// never `O(total rows)`.
+struct ChunkState {
+    row0: usize,
+    rows: usize,
+    active: Vec<Cursor>,
+    final_node: Vec<u32>,
+    /// `(party, record, handle) → bit` learned by THIS chunk. Chunks
+    /// partition the row space, so cross-chunk sharing would never hit
+    /// within a pass; repeat passes are covered by the session-level
+    /// delta basis instead.
+    memo: HashMap<(u8, u32, u32), bool>,
+    pending: Vec<Option<PendingRound>>,
+    awaiting: usize,
 }
 
 /// Drive one sessionless batched federated prediction (the legacy
@@ -597,7 +1135,7 @@ mod tests {
             let mut session = PredictSession::new(
                 &guest_m,
                 7,
-                PredictOptions { dummy_queries, seed: 99 },
+                PredictOptions { dummy_queries, seed: 99, ..PredictOptions::default() },
             );
             let preds = session.predict_batch(&guest_slice, &links);
             let decoys = session.decoy_queries();
@@ -612,5 +1150,136 @@ mod tests {
         assert_eq!(d0, 0);
         assert_eq!(d8, 8, "one padded PredictRoute batch in this walk");
         assert!(b8 > b0, "padding must cost wire bytes");
+    }
+
+    #[test]
+    fn streamed_chunks_match_single_batch_bit_identically() {
+        let (guest_m, host_m) = toy_shares();
+        let guest_slice =
+            PartySlice { cols: vec![0], x: vec![0.9, 0.1, 0.1, 0.4, 0.2], n: 5 };
+        let host_slice = PartySlice {
+            cols: vec![1, 2],
+            x: vec![0.0, 0.0, 0.0, -2.0, 0.0, 5.0, 0.0, -1.5, 0.0, 1.0],
+            n: 5,
+        };
+        // oracle: the lockstep single-batch flow
+        let (gl, hl) = link_pair(8);
+        let h = spawn_predict_host(host_m.clone(), host_slice.clone(), hl);
+        let links: Vec<Box<dyn GuestTransport>> = vec![Box::new(gl)];
+        let oracle = federated_predict(&guest_m, &guest_slice, &links);
+        links[0].send(ToHost::Shutdown);
+        h.join().unwrap();
+
+        // chunk sizes: 1 (degenerate), a remainder split, an exact
+        // divisor, and one covering chunk
+        for batch_rows in [1usize, 2, 3, 5] {
+            let (gl, hl) = link_pair(8);
+            let h = spawn_predict_host(host_m.clone(), host_slice.clone(), hl);
+            let links: Vec<Box<dyn GuestTransport>> = vec![Box::new(gl)];
+            let mut session = PredictSession::new(
+                &guest_m,
+                10 + batch_rows as u32,
+                PredictOptions {
+                    batch_rows,
+                    max_inflight: 2,
+                    seed: 5,
+                    ..PredictOptions::default()
+                },
+            );
+            session.open(&links);
+            let (preds, report) = session.predict_stream(&guest_slice, &links);
+            assert_eq!(preds, oracle, "chunk size {batch_rows} must be bit-identical");
+            assert_eq!(report.chunks, 5usize.div_ceil(batch_rows) as u64);
+            assert_eq!(report.batch_rows, batch_rows);
+            session.close(&links);
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn guest_only_stream_needs_no_links() {
+        let mut t = Tree::new(1);
+        t.split_node(0, SplitRef::Guest { feature: 0, bin: 0, threshold: 0.0 });
+        t.nodes[1].weight = vec![-1.0];
+        t.nodes[2].weight = vec![1.0];
+        let m = GuestModel { trees: vec![(t, 0)], n_classes: 2, pred_width: 1 };
+        let slice = PartySlice { cols: vec![0], x: vec![-0.5, 0.5, -0.1], n: 3 };
+        let mut session = PredictSession::new(
+            &m,
+            4,
+            PredictOptions { batch_rows: 2, ..PredictOptions::default() },
+        );
+        let (preds, report) = session.predict_stream(&slice, &[]);
+        assert_eq!(preds, vec![-1.0, 1.0, -1.0]);
+        assert_eq!(report.chunks, 2);
+        assert_eq!(report.stall_seconds, 0.0, "no host, no stalls");
+    }
+
+    #[test]
+    fn stream_repeat_pass_is_wire_free_via_delta_basis() {
+        let (guest_m, host_m) = toy_shares();
+        let guest_slice = PartySlice { cols: vec![0], x: vec![0.1, 0.1, 0.4, 0.2], n: 4 };
+        let host_slice = PartySlice {
+            cols: vec![1, 2],
+            x: vec![0.0, -2.0, 0.0, 5.0, 0.0, -1.5, 0.0, 1.0],
+            n: 4,
+        };
+        let (gl, hl) = link_pair(8);
+        let h = spawn_predict_host(host_m, host_slice, hl);
+        let links: Vec<Box<dyn GuestTransport>> = vec![Box::new(gl)];
+        let mut session = PredictSession::new(
+            &guest_m,
+            77,
+            PredictOptions { batch_rows: 3, max_inflight: 2, ..PredictOptions::default() },
+        );
+        session.open(&links);
+        let (first, _) = session.predict_stream(&guest_slice, &links);
+        let snap1 = links[0].snapshot();
+        // repeat scoring in the same session: every host decision is in
+        // the delta basis the first pass synchronized, so the second
+        // pass crosses the wire not at all — the chunk memos are gone
+        // (bounded memory) but the bounded basis still suppresses
+        let (second, _) = session.predict_stream(&guest_slice, &links);
+        let snap2 = links[0].snapshot();
+        assert_eq!(first, second, "repeat pass must be bit-identical");
+        assert_eq!(snap1, snap2, "repeat pass must be wire-free");
+        assert!(session.suppressed_queries() > 0);
+        session.close(&links);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn batch_after_stream_decodes_delta_answers() {
+        // a streamed pass synchronizes the delta bases; a subsequent
+        // predict_batch in the same session starts with an empty session
+        // memo, so it re-asks every key — the host elides all of them
+        // via RouteAnswersDelta and the guest must reconstruct the bits
+        // from its mirrored basis, bit-identically
+        let (guest_m, host_m) = toy_shares();
+        let guest_slice = PartySlice { cols: vec![0], x: vec![0.1, 0.1, 0.4], n: 3 };
+        let host_slice = PartySlice {
+            cols: vec![1, 2],
+            x: vec![0.0, -2.0, 0.0, 5.0, 0.0, -1.5],
+            n: 3,
+        };
+        let (gl, hl) = link_pair(8);
+        let h = spawn_predict_host(host_m, host_slice, hl);
+        let links: Vec<Box<dyn GuestTransport>> = vec![Box::new(gl)];
+        let mut session = PredictSession::new(
+            &guest_m,
+            91,
+            PredictOptions { batch_rows: 2, ..PredictOptions::default() },
+        );
+        session.open(&links);
+        let (streamed, _) = session.predict_stream(&guest_slice, &links);
+        assert_eq!(session.delta_elided_answers(), 0, "first pass is all fresh");
+        let batched = session.predict_batch(&guest_slice, &links);
+        assert_eq!(batched, streamed, "delta-elided answers must be bit-identical");
+        assert!(
+            session.delta_elided_answers() > 0,
+            "the repeat batch must have received elided answers"
+        );
+        session.close(&links);
+        h.join().unwrap();
     }
 }

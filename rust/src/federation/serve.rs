@@ -35,17 +35,31 @@
 //!
 //! Per-session queues are bounded at three levels: the transport queue
 //! ([`super::transport::link_pair_bounded`] in-process; the OS socket
-//! buffer plus strict request/response framing over TCP), the
-//! `max_inflight` bound a [`ToGuest::SessionAccept`] announces, and the
-//! [`ServeConfig::max_batch_queries`] ceiling on a single
-//! `PredictRoute` batch — a session that exceeds it is closed as a
-//! protocol error instead of growing the server's memory without bound.
+//! buffer plus strict framing over TCP), the `max_inflight` bound a
+//! [`ToGuest::SessionAccept`] announces (the pipelined guest clamps its
+//! chunk window to it), and the [`ServeConfig::max_batch_queries`]
+//! ceiling on a single `PredictRoute` batch — a session that exceeds it
+//! is closed as a protocol error instead of growing the server's memory
+//! without bound.
+//!
+//! ## Cache-aware wire suppression
+//!
+//! On top of the CPU-saving routing cache, handshaked sessions run the
+//! **delta protocol** ([`ToGuest::RouteAnswersDelta`]): the host tracks
+//! which `(record, handle)` keys it already answered this session (a
+//! bounded, freeze-on-full set of [`ServeConfig::delta_window`]
+//! entries) and elides repeat answers from the wire; the guest mirrors
+//! the set ([`super::predict::PredictSession`]'s delta basis) and
+//! reconstructs the full bitmap bit-identically. Unlike the routing
+//! cache — which is wire-invisible — this layer makes repeat traffic
+//! cheaper *on the wire*, per session, with bounded memory at both
+//! ends.
 
 use super::message::{ToGuest, ToHost, SERVE_PROTOCOL_VERSION, SESSIONLESS_ID};
 use super::transport::{HostTransport, NetSnapshot};
 use crate::data::dataset::PartySlice;
 use crate::tree::predict::HostModel;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -260,9 +274,19 @@ pub struct ServeConfig {
     /// Largest `PredictRoute` batch a session may send; bigger batches
     /// are a protocol error and close the session (memory backpressure).
     pub max_batch_queries: usize,
-    /// In-flight batch bound announced in `SessionAccept`. The protocol
-    /// is strictly request/response today, so this is 1.
+    /// In-flight batch bound announced in `SessionAccept`: how many
+    /// unanswered `PredictRoute` chunks a pipelined guest may keep on
+    /// the wire per session. Compliant guests clamp their
+    /// `--max-inflight` window to it; the transport (socket buffer /
+    /// bounded in-memory queue) enforces the rest.
     pub max_inflight: u32,
+    /// Capacity (entries) of the per-session **delta basis** for
+    /// cache-aware wire suppression, 0 = off. Handshaked sessions track
+    /// which `(record, handle)` keys they have already answered and
+    /// elide repeat answers via [`ToGuest::RouteAnswersDelta`]; the set
+    /// freezes when full so both ends stay in lockstep at bounded
+    /// memory. Hello-less legacy sessions never use deltas.
+    pub delta_window: usize,
 }
 
 impl Default for ServeConfig {
@@ -270,7 +294,8 @@ impl Default for ServeConfig {
         ServeConfig {
             cache_capacity: 1 << 16,
             max_batch_queries: 1 << 22,
-            max_inflight: 1,
+            max_inflight: 8,
+            delta_window: 1 << 16,
         }
     }
 }
@@ -287,6 +312,7 @@ pub struct HostServeState {
     stop: AtomicBool,
     sessions_served: AtomicU64,
     queries_answered: AtomicU64,
+    answers_elided: AtomicU64,
 }
 
 impl HostServeState {
@@ -301,6 +327,7 @@ impl HostServeState {
             stop: AtomicBool::new(false),
             sessions_served: AtomicU64::new(0),
             queries_answered: AtomicU64::new(0),
+            answers_elided: AtomicU64::new(0),
         })
     }
 
@@ -314,9 +341,17 @@ impl HostServeState {
         self.sessions_served.load(Ordering::Relaxed)
     }
 
-    /// Routing queries answered so far (all sessions).
+    /// Routing queries answered so far (all sessions; delta-elided
+    /// answers included — every query is answered, some for free).
     pub fn queries_answered(&self) -> u64 {
         self.queries_answered.load(Ordering::Relaxed)
+    }
+
+    /// Answers elided from the wire by delta suppression so far (all
+    /// sessions): repeat `(record, handle)` asks whose bits never left
+    /// the host because the guest's mirrored basis already held them.
+    pub fn answers_elided(&self) -> u64 {
+        self.answers_elided.load(Ordering::Relaxed)
     }
 
     /// Ask the serve loop to stop accepting new sessions.
@@ -338,7 +373,18 @@ impl HostServeState {
     /// uncached paths produce identical bits: routing is a pure function
     /// of the immutable model share and slice.
     fn answer(&self, queries: &[(u32, u32)]) -> Option<Vec<u8>> {
-        let d = self.slice.d();
+        if !self.queries_in_range(queries) {
+            return None;
+        }
+        let bits = self.route_bits(queries);
+        self.queries_answered.fetch_add(queries.len() as u64, Ordering::Relaxed);
+        Some(bits)
+    }
+
+    /// Range-check a batch against this host's rows and split table,
+    /// logging the first violation. Shared by the plain and delta
+    /// answer paths so their contracts cannot drift apart.
+    fn queries_in_range(&self, queries: &[(u32, u32)]) -> bool {
         for &(row, handle) in queries {
             if row as usize >= self.slice.n || handle as usize >= self.model.splits.len() {
                 eprintln!(
@@ -346,9 +392,19 @@ impl HostServeState {
                     self.slice.n,
                     self.model.splits.len()
                 );
-                return None;
+                return false;
             }
         }
+        true
+    }
+
+    /// Compute the bit-packed goes-left answers for an in-range batch,
+    /// through the routing cache when one is configured — the **single**
+    /// implementation behind both [`Self::answer`] and the delta path,
+    /// so cached/uncached and plain/delta serving stay bit-identical by
+    /// construction.
+    fn route_bits(&self, queries: &[(u32, u32)]) -> Vec<u8> {
+        let d = self.slice.d();
         let mut bits = vec![0u8; queries.len().div_ceil(8)];
         if self.cache.capacity() == 0 {
             for (i, &(row, handle)) in queries.iter().enumerate() {
@@ -378,8 +434,48 @@ impl HostServeState {
                 }
             }
         }
+        bits
+    }
+
+    /// [`Self::answer`] with **cache-aware wire suppression**: queries
+    /// whose `(record, handle)` key was already answered earlier in this
+    /// session (tracked in the caller's per-session `seen` set, capacity
+    /// `cap`) are elided — only the fresh queries' bits are packed and
+    /// returned as `(n_known, fresh_bits)`. The membership pass mirrors
+    /// the guest's delta-basis rule exactly (check, then freeze-on-full
+    /// insert, in query order; a within-batch duplicate counts its first
+    /// occurrence fresh and later ones known), so the guest reconstructs
+    /// the full bitmap bit-identically from its mirrored basis. Returns
+    /// `None` on an out-of-range query, like [`Self::answer`].
+    fn answer_delta(
+        &self,
+        queries: &[(u32, u32)],
+        seen: &mut HashSet<(u32, u32)>,
+        cap: usize,
+    ) -> Option<(u32, Vec<u8>)> {
+        if !self.queries_in_range(queries) {
+            return None;
+        }
+        // single membership pass: the insert must happen *during* the
+        // scan (a within-batch duplicate's second occurrence is known
+        // only because its first was just inserted), which is also
+        // exactly the rule the guest's mirrored basis runs
+        let mut fresh: Vec<(u32, u32)> = Vec::with_capacity(queries.len());
+        let mut n_known = 0u32;
+        for &key in queries {
+            if seen.contains(&key) {
+                n_known += 1;
+            } else {
+                if seen.len() < cap {
+                    seen.insert(key);
+                }
+                fresh.push(key);
+            }
+        }
+        let bits = self.route_bits(&fresh);
         self.queries_answered.fetch_add(queries.len() as u64, Ordering::Relaxed);
-        Some(bits)
+        self.answers_elided.fetch_add(n_known as u64, Ordering::Relaxed);
+        Some((n_known, bits))
     }
 }
 
@@ -393,6 +489,10 @@ pub struct SessionOutcome {
     pub queries: u64,
     /// `PredictRoute` batches answered.
     pub batches: u64,
+    /// Answers elided from the wire by delta suppression (repeat
+    /// `(record, handle)` asks resolved from the guest's mirrored
+    /// basis instead of shipping bits).
+    pub answers_elided: u64,
     /// Keep-alive probes answered.
     pub keep_alives: u64,
     /// Ended by `SessionClose`/`Shutdown` (vs transport close or
@@ -432,7 +532,16 @@ pub fn serve_session<T: HostTransport>(state: &HostServeState, link: T) -> Sessi
     let mut queries = 0u64;
     let mut batches = 0u64;
     let mut keep_alives = 0u64;
+    let mut answers_elided = 0u64;
     let mut clean_close = false;
+    // per-session delta basis: (record, handle) keys already answered —
+    // only handshaked sessions use it (hello-less legacy clients cannot
+    // decode RouteAnswersDelta frames). The capacity is clamped to what
+    // the u32 `SessionAccept` announcement can carry: the enforced cap
+    // and the announced cap must be the same number, or the two ends'
+    // freeze-on-full rules diverge and the delta protocol desyncs.
+    let cfg_delta = state.cfg.delta_window.min(u32::MAX as usize);
+    let mut seen: HashSet<(u32, u32)> = HashSet::new();
     while let Some(msg) = link.recv() {
         match msg {
             ToHost::SessionHello { session_id: sid, protocol } => {
@@ -451,9 +560,10 @@ pub fn serve_session<T: HostTransport>(state: &HostServeState, link: T) -> Sessi
                 link.send(ToGuest::SessionAccept {
                     session_id: sid,
                     max_inflight: state.cfg.max_inflight,
+                    delta_window: cfg_delta as u32,
                 });
             }
-            ToHost::PredictRoute { session, queries: q } => {
+            ToHost::PredictRoute { session, chunk, queries: q } => {
                 if session != session_id {
                     eprintln!(
                         "[sbp-serve] PredictRoute for session {session} on session {session_id}, closing"
@@ -468,16 +578,46 @@ pub fn serve_session<T: HostTransport>(state: &HostServeState, link: T) -> Sessi
                     );
                     break;
                 }
-                let Some(bits) = state.answer(&q) else {
-                    eprintln!(
-                        "[sbp-serve] session {session_id} queried records/handles this \
-                         host does not have (misaligned data?), closing"
-                    );
-                    break;
-                };
+                let delta_cap = if hello_seen { cfg_delta } else { 0 };
+                if delta_cap > 0 {
+                    let Some((n_known, bits)) = state.answer_delta(&q, &mut seen, delta_cap)
+                    else {
+                        eprintln!(
+                            "[sbp-serve] session {session_id} queried records/handles this \
+                             host does not have (misaligned data?), closing"
+                        );
+                        break;
+                    };
+                    if n_known == 0 {
+                        // nothing to elide: a plain answer is smaller
+                        link.send(ToGuest::RouteAnswers {
+                            session,
+                            chunk,
+                            n: q.len() as u32,
+                            bits,
+                        });
+                    } else {
+                        answers_elided += n_known as u64;
+                        link.send(ToGuest::RouteAnswersDelta {
+                            session,
+                            chunk,
+                            n: q.len() as u32,
+                            n_known,
+                            bits,
+                        });
+                    }
+                } else {
+                    let Some(bits) = state.answer(&q) else {
+                        eprintln!(
+                            "[sbp-serve] session {session_id} queried records/handles this \
+                             host does not have (misaligned data?), closing"
+                        );
+                        break;
+                    };
+                    link.send(ToGuest::RouteAnswers { session, chunk, n: q.len() as u32, bits });
+                }
                 queries += q.len() as u64;
                 batches += 1;
-                link.send(ToGuest::RouteAnswers { session, n: q.len() as u32, bits });
             }
             ToHost::KeepAlive => {
                 keep_alives += 1;
@@ -520,6 +660,7 @@ pub fn serve_session<T: HostTransport>(state: &HostServeState, link: T) -> Sessi
         queries,
         batches,
         keep_alives,
+        answers_elided,
         clean_close,
         wall_seconds: t0.elapsed().as_secs_f64(),
     };
@@ -747,40 +888,119 @@ mod tests {
         let handle = spawn_serve_session(state.clone(), host);
 
         guest.send(ToHost::SessionHello { session_id: 7, protocol: SERVE_PROTOCOL_VERSION });
-        let ToGuest::SessionAccept { session_id, max_inflight } = guest.recv() else {
+        let ToGuest::SessionAccept { session_id, max_inflight, delta_window } = guest.recv()
+        else {
             panic!("expected SessionAccept")
         };
         assert_eq!(session_id, 7);
-        assert_eq!(max_inflight, 1);
+        assert_eq!(max_inflight, 8);
+        assert_eq!(delta_window, 1 << 16);
 
         guest.send(ToHost::KeepAlive);
         assert!(matches!(guest.recv(), ToGuest::Ack));
 
         // row 1 under handle 0: x[1*2+0] = 2.0 > 1.0 → right;
         // row 1 under handle 1: x[1*2+1] = -2.0 ≤ -1.0 → left
-        guest.send(ToHost::PredictRoute { session: 7, queries: vec![(1, 0), (1, 1)] });
-        let ToGuest::RouteAnswers { session, n, bits } = guest.recv() else {
+        guest.send(ToHost::PredictRoute {
+            session: 7,
+            chunk: 1,
+            queries: vec![(1, 0), (1, 1)],
+        });
+        let ToGuest::RouteAnswers { session, chunk, n, bits } = guest.recv() else {
             panic!("expected RouteAnswers")
         };
-        assert_eq!((session, n), (7, 2));
+        assert_eq!((session, chunk, n), (7, 1, 2));
         assert_eq!(bits, vec![0b10]);
 
-        // repeat: both answers now come from the cache, bit-identically
-        guest.send(ToHost::PredictRoute { session: 7, queries: vec![(1, 0), (1, 1)] });
-        let ToGuest::RouteAnswers { bits: bits2, .. } = guest.recv() else {
-            panic!("expected RouteAnswers")
+        // repeat: both keys are in the session's delta basis now, so the
+        // answers are elided from the wire entirely — the guest's
+        // mirrored basis reconstructs them bit-identically
+        guest.send(ToHost::PredictRoute {
+            session: 7,
+            chunk: 2,
+            queries: vec![(1, 0), (1, 1)],
+        });
+        let ToGuest::RouteAnswersDelta { session, chunk, n, n_known, bits } = guest.recv()
+        else {
+            panic!("expected RouteAnswersDelta for a fully repeated batch")
         };
-        assert_eq!(bits2, vec![0b10]);
+        assert_eq!((session, chunk, n, n_known), (7, 2, 2, 2));
+        assert!(bits.is_empty(), "all answers elided");
         guest.send(ToHost::SessionClose { session_id: 7 });
         let outcome = handle.join().expect("session thread");
         assert!(outcome.clean_close);
         assert_eq!(outcome.queries, 4);
         assert_eq!(outcome.batches, 2);
         assert_eq!(outcome.keep_alives, 1);
+        assert_eq!(outcome.answers_elided, 2);
+        // the elided repeats never touched the cache: 2 misses, 0 hits
+        let cs = state.cache_stats();
+        assert_eq!(cs.hits, 0);
+        assert_eq!(cs.misses, 2);
+        assert_eq!(state.answers_elided(), 2);
+    }
+
+    #[test]
+    fn delta_off_answers_repeats_in_full_through_the_cache() {
+        // delta_window = 0: the pre-suppression behavior — repeats are
+        // re-answered in full, the second batch hitting the shared cache
+        let model = HostModel { party: 0, splits: vec![(0, 0, 1.0), (1, 2, -1.0)] };
+        let slice = PartySlice {
+            cols: vec![0, 1],
+            x: vec![0.5, 0.0, 2.0, -2.0, 0.5, 5.0, 2.0, -1.5],
+            n: 4,
+        };
+        let state = HostServeState::new(
+            model,
+            slice,
+            ServeConfig { cache_capacity: 16, delta_window: 0, ..ServeConfig::default() },
+        );
+        let (guest, host) = link_pair_bounded(8, 1);
+        let handle = spawn_serve_session(state.clone(), host);
+        guest.send(ToHost::SessionHello { session_id: 3, protocol: SERVE_PROTOCOL_VERSION });
+        let ToGuest::SessionAccept { delta_window, .. } = guest.recv() else {
+            panic!("expected SessionAccept")
+        };
+        assert_eq!(delta_window, 0);
+        for chunk in [1u32, 2] {
+            guest.send(ToHost::PredictRoute {
+                session: 3,
+                chunk,
+                queries: vec![(1, 0), (1, 1)],
+            });
+            let ToGuest::RouteAnswers { bits, .. } = guest.recv() else {
+                panic!("expected RouteAnswers (delta off)")
+            };
+            assert_eq!(bits, vec![0b10]);
+        }
+        guest.send(ToHost::SessionClose { session_id: 3 });
+        let outcome = handle.join().expect("session thread");
+        assert_eq!(outcome.answers_elided, 0);
         let cs = state.cache_stats();
         assert_eq!(cs.hits, 2);
         assert_eq!(cs.misses, 2);
-        assert!(cs.hit_rate() > 0.4 && cs.hit_rate() < 0.6);
+    }
+
+    #[test]
+    fn zero_query_batch_is_answered_not_rejected() {
+        let state = toy_state(0);
+        let (guest, host) = link_pair_bounded(8, 1);
+        let handle = spawn_serve_session(state, host);
+        guest.send(ToHost::SessionHello { session_id: 5, protocol: SERVE_PROTOCOL_VERSION });
+        let ToGuest::SessionAccept { .. } = guest.recv() else { panic!("expected accept") };
+        // a streaming tail with nothing to ask this host is still a
+        // well-formed batch and gets a well-formed (empty) answer
+        guest.send(ToHost::PredictRoute { session: 5, chunk: 9, queries: Vec::new() });
+        let ToGuest::RouteAnswers { session, chunk, n, bits } = guest.recv() else {
+            panic!("expected RouteAnswers")
+        };
+        assert_eq!((session, chunk, n), (5, 9, 0));
+        assert!(bits.is_empty());
+        guest.send(ToHost::SessionClose { session_id: 5 });
+        let outcome = handle.join().expect("session thread");
+        assert!(outcome.clean_close);
+        assert_eq!(outcome.batches, 1);
+        assert_eq!(outcome.queries, 0);
     }
 
     #[test]
@@ -790,7 +1010,7 @@ mod tests {
         let handle = spawn_serve_session(state, host);
         guest.send(ToHost::SessionHello { session_id: 9, protocol: SERVE_PROTOCOL_VERSION });
         let ToGuest::SessionAccept { .. } = guest.recv() else { panic!("expected accept") };
-        guest.send(ToHost::PredictRoute { session: 3, queries: vec![(0, 0)] });
+        guest.send(ToHost::PredictRoute { session: 3, chunk: 0, queries: vec![(0, 0)] });
         let outcome = handle.join().expect("session thread");
         assert!(!outcome.clean_close);
         assert_eq!(outcome.batches, 0);
@@ -801,12 +1021,16 @@ mod tests {
         let state = toy_state(0);
         let (guest, host) = link_pair_bounded(8, 1);
         let handle = spawn_serve_session(state, host);
-        guest.send(ToHost::PredictRoute { session: SESSIONLESS_ID, queries: vec![(0, 0)] });
-        let ToGuest::RouteAnswers { session, n, bits } = guest.recv() else {
+        guest.send(ToHost::PredictRoute {
+            session: SESSIONLESS_ID,
+            chunk: 0,
+            queries: vec![(0, 0)],
+        });
+        let ToGuest::RouteAnswers { session, chunk, n, bits } = guest.recv() else {
             panic!("expected RouteAnswers")
         };
         // row 0 under handle 0: x[0] = 0.5 ≤ 1.0 → left
-        assert_eq!((session, n, bits), (SESSIONLESS_ID, 1, vec![1u8]));
+        assert_eq!((session, chunk, n, bits), (SESSIONLESS_ID, 0, 1, vec![1u8]));
         guest.send(ToHost::Shutdown);
         let outcome = handle.join().expect("session thread");
         assert!(outcome.clean_close);

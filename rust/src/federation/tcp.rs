@@ -14,15 +14,24 @@
 //! record the actual framed byte counts, which equal the in-memory
 //! transport's accounting byte-for-byte (`codec::*_wire_len` are exact).
 //!
-//! Concurrency: one socket per guest↔host pair, strictly request/response
-//! per the round-structured protocol, so a `Mutex<TcpStream>` per
-//! direction-agnostic endpoint suffices. The long-lived serving path
-//! multiplexes many *sessions* over one listener — each accepted
-//! connection becomes its own [`TcpHostTransport`] driven by its own
-//! session thread ([`crate::federation::serve::serve_predict_loop`]),
-//! so per-session backpressure is the socket buffer plus the strict
-//! request/response framing, and per-session byte accounting is simply
-//! this endpoint's [`NetCounters`].
+//! Concurrency: one socket per guest↔host pair, driven by one thread
+//! per endpoint, so a `Mutex` over the connection state suffices.
+//! Training is strictly request/response; the pipelined serving path
+//! keeps up to `max_inflight` request frames on the wire per session
+//! (the host still answers them strictly in arrival order). The
+//! long-lived serving path multiplexes many *sessions* over one
+//! listener — each accepted connection becomes its own
+//! [`TcpHostTransport`] driven by its own session thread
+//! ([`crate::federation::serve::serve_predict_loop`]), so per-session
+//! backpressure is the socket buffer plus the announced in-flight
+//! bound, and per-session byte accounting is simply this endpoint's
+//! [`NetCounters`].
+//!
+//! Hot-path allocation: each endpoint owns per-connection read/write
+//! scratch buffers; frames are encoded with
+//! [`codec::encode_to_host_into`]/[`codec::encode_to_guest_into`] and
+//! read with [`codec::read_frame_into`], so steady-state serving does
+//! no per-frame payload allocation.
 
 use super::codec;
 use super::message::{ToGuest, ToHost};
@@ -35,9 +44,28 @@ use crate::util::timer::PhaseTimer;
 use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Mutex};
 
+/// One connection's I/O state: the socket plus the per-connection
+/// scratch buffers the framed hot path reuses — every frame is encoded
+/// into `wbuf` and decoded out of `rbuf` in place, so a serving
+/// connection performs **zero** per-frame payload allocations after its
+/// buffers warm up ([`codec::encode_to_host_into`] /
+/// [`codec::read_frame_into`]).
+struct ConnIo {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+}
+
+impl ConnIo {
+    fn new(stream: TcpStream) -> Self {
+        stream.set_nodelay(true).ok();
+        ConnIo { stream, rbuf: Vec::new(), wbuf: Vec::new() }
+    }
+}
+
 /// Guest-side endpoint of one guest↔host TCP connection.
 pub struct TcpGuestTransport {
-    stream: Mutex<TcpStream>,
+    io: Mutex<ConnIo>,
     suite: CipherSuite,
     ct_len: usize,
     counters: Arc<NetCounters>,
@@ -49,10 +77,9 @@ impl TcpGuestTransport {
     /// it from the `Setup` frame.
     pub fn connect(addr: &str, suite: CipherSuite) -> std::io::Result<Self> {
         let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true).ok();
         let ct_len = suite.ct_byte_len();
         Ok(TcpGuestTransport {
-            stream: Mutex::new(stream),
+            io: Mutex::new(ConnIo::new(stream)),
             suite,
             ct_len,
             counters: Arc::new(NetCounters::default()),
@@ -67,24 +94,24 @@ impl TcpGuestTransport {
 
 impl GuestTransport for TcpGuestTransport {
     fn send(&self, msg: ToHost) {
-        let payload = codec::encode_to_host(&self.suite, self.ct_len, &msg);
+        let mut io = self.io.lock().expect("tcp stream poisoned");
+        let ConnIo { stream, wbuf, .. } = &mut *io;
+        codec::encode_to_host_into(&self.suite, self.ct_len, &msg, wbuf);
         self.counters
-            .record_to_host(msg.kind(), (payload.len() + codec::FRAME_HEADER_LEN) as u64);
-        let mut s = self.stream.lock().expect("tcp stream poisoned");
-        codec::write_frame(&mut *s, &payload).expect("tcp send to host failed");
+            .record_to_host(msg.kind(), (wbuf.len() + codec::FRAME_HEADER_LEN) as u64);
+        codec::write_frame(stream, wbuf).expect("tcp send to host failed");
     }
 
     fn recv(&self) -> ToGuest {
-        let payload = {
-            let mut s = self.stream.lock().expect("tcp stream poisoned");
-            codec::read_frame(&mut *s)
-                .expect("tcp recv from host failed")
-                .expect("host closed the connection mid-protocol")
-        };
-        let msg = codec::decode_to_guest(&self.suite, self.ct_len, &payload)
+        let mut io = self.io.lock().expect("tcp stream poisoned");
+        let ConnIo { stream, rbuf, .. } = &mut *io;
+        if !codec::read_frame_into(stream, rbuf).expect("tcp recv from host failed") {
+            panic!("host closed the connection mid-protocol");
+        }
+        let msg = codec::decode_to_guest(&self.suite, self.ct_len, rbuf)
             .expect("malformed frame from host");
         self.counters
-            .record_to_guest(msg.kind(), (payload.len() + codec::FRAME_HEADER_LEN) as u64);
+            .record_to_guest(msg.kind(), (rbuf.len() + codec::FRAME_HEADER_LEN) as u64);
         msg
     }
 
@@ -97,7 +124,7 @@ impl GuestTransport for TcpGuestTransport {
 /// `Setup` frame arrives; it is captured then and used for every
 /// subsequent ciphertext-bearing frame in both directions.
 pub struct TcpHostTransport {
-    stream: Mutex<TcpStream>,
+    io: Mutex<ConnIo>,
     suite: Mutex<Option<(CipherSuite, usize)>>,
     counters: Arc<NetCounters>,
 }
@@ -105,9 +132,8 @@ pub struct TcpHostTransport {
 impl TcpHostTransport {
     /// Wrap an accepted guest connection.
     pub fn new(stream: TcpStream) -> Self {
-        stream.set_nodelay(true).ok();
         TcpHostTransport {
-            stream: Mutex::new(stream),
+            io: Mutex::new(ConnIo::new(stream)),
             suite: Mutex::new(None),
             counters: Arc::new(NetCounters::default()),
         }
@@ -121,22 +147,18 @@ impl TcpHostTransport {
 
 impl HostTransport for TcpHostTransport {
     fn recv(&self) -> Option<ToHost> {
-        let payload = {
-            let mut s = self.stream.lock().expect("tcp stream poisoned");
-            match codec::read_frame(&mut *s) {
-                Ok(Some(p)) => p,
-                Ok(None) => return None, // guest closed cleanly
-                Err(e) => {
-                    eprintln!("[sbp-host] transport error, closing: {e}");
-                    return None;
-                }
+        let mut io = self.io.lock().expect("tcp stream poisoned");
+        let ConnIo { stream, rbuf, .. } = &mut *io;
+        match codec::read_frame_into(stream, rbuf) {
+            Ok(true) => {}
+            Ok(false) => return None, // guest closed cleanly
+            Err(e) => {
+                eprintln!("[sbp-host] transport error, closing: {e}");
+                return None;
             }
-        };
+        }
         let mut suite = self.suite.lock().expect("suite poisoned");
-        let msg = match codec::decode_to_host(
-            suite.as_ref().map(|(s, l)| (s, *l)),
-            &payload,
-        ) {
+        let msg = match codec::decode_to_host(suite.as_ref().map(|(s, l)| (s, *l)), rbuf) {
             Ok(m) => m,
             Err(e) => {
                 eprintln!("[sbp-host] malformed frame, closing: {e}");
@@ -148,7 +170,7 @@ impl HostTransport for TcpHostTransport {
             *suite = Some((suite_public.clone(), ct_len));
         }
         self.counters
-            .record_to_host(msg.kind(), (payload.len() + codec::FRAME_HEADER_LEN) as u64);
+            .record_to_host(msg.kind(), (rbuf.len() + codec::FRAME_HEADER_LEN) as u64);
         Some(msg)
     }
 
@@ -165,11 +187,12 @@ impl HostTransport for TcpHostTransport {
                 (s, l)
             },
         );
-        let payload = codec::encode_to_guest(&suite, ct_len, &msg);
+        let mut io = self.io.lock().expect("tcp stream poisoned");
+        let ConnIo { stream, wbuf, .. } = &mut *io;
+        codec::encode_to_guest_into(&suite, ct_len, &msg, wbuf);
         self.counters
-            .record_to_guest(msg.kind(), (payload.len() + codec::FRAME_HEADER_LEN) as u64);
-        let mut s = self.stream.lock().expect("tcp stream poisoned");
-        codec::write_frame(&mut *s, &payload).expect("tcp send to guest failed");
+            .record_to_guest(msg.kind(), (wbuf.len() + codec::FRAME_HEADER_LEN) as u64);
+        codec::write_frame(stream, wbuf).expect("tcp send to guest failed");
     }
 }
 

@@ -29,6 +29,11 @@
 //!   terminal 2:  sbp predict --model model/ --connect 127.0.0.1:7979 \
 //!                    --sessions 10 --concurrency 2
 //!
+//! Large-batch streaming in one session (pipelined chunks, guest memory
+//! bounded by the chunk window, not the row count):
+//!   sbp predict --model model/ --connect 127.0.0.1:7979 \
+//!       --batch-rows 8192 --max-inflight 4 --progress
+//!
 //! Scoring arbitrary CSV rows (header-driven feature→column map per party):
 //!   sbp datagen --emit guest --dataset give-credit --scale 0.01 --out guest.csv
 //!   sbp datagen --emit host-0 --dataset give-credit --scale 0.01 --out host0.csv
@@ -120,6 +125,13 @@ fn main() {
                  \x20                        host artifacts from the model dir)\n\
                  \x20 --sessions <n>         serving sessions to run (default 1)\n\
                  \x20 --concurrency <n>      sessions in flight at once (default 1)\n\
+                 \x20 --batch-rows <n>       stream rows in n-row chunks through the\n\
+                 \x20                        pipelined engine (default 0 = one batch)\n\
+                 \x20 --max-inflight <n>     chunks in flight per host while streaming\n\
+                 \x20                        (default 4; clamped to the host's bound)\n\
+                 \x20 --passes <n>           score the batch n times in one session\n\
+                 \x20                        (repeat-scoring; needs --batch-rows)\n\
+                 \x20 --progress             per-chunk progress lines on stderr\n\
                  \x20 --dummy-queries <n>    decoy queries shuffled into each routing batch\n\
                  \x20 --decoy-seed <n>       pin the decoy stream (default: OS entropy)\n\
                  \x20 --shutdown-hosts       ask the serving hosts to exit afterwards\n\
@@ -131,6 +143,10 @@ fn main() {
                  \x20 --max-sessions <n>     sessions to serve before exiting (default 1;\n\
                  \x20                        0 = until `predict --shutdown-hosts` asks)\n\
                  \x20 --cache-capacity <n>   routing-cache entries (default 65536; 0 off)\n\
+                 \x20 --delta-window <n>     per-session delta-basis entries for wire\n\
+                 \x20                        suppression (default 65536; 0 off)\n\
+                 \x20 --max-inflight <n>     unanswered chunks tolerated per session\n\
+                 \x20                        (default 8), announced to clients\n\
                  \x20 --bind <ip> --port <p> listen address (default 127.0.0.1:7979)\n\
                  \n\
                  datagen options:\n\
@@ -436,6 +452,36 @@ fn load_csv_party(
     (slice, labels)
 }
 
+/// Build the serving-session client options from the CLI flags. The
+/// decoy seed defaults to OS entropy (`PredictOptions::default`): the
+/// hosts also hold the artifact's training seed, so any metadata-derived
+/// seed would let them replay the decoy stream and strip the padding;
+/// `--decoy-seed` pins it for reproducible experiments.
+fn predict_opts(
+    args: &Args,
+    dummy_queries: usize,
+    batch_rows: usize,
+    max_inflight: usize,
+) -> sbp::federation::predict::PredictOptions {
+    let mut opts = sbp::federation::predict::PredictOptions {
+        dummy_queries,
+        batch_rows,
+        max_inflight,
+        progress: args.flag("progress"),
+        ..sbp::federation::predict::PredictOptions::default()
+    };
+    if let Some(s) = args.get("decoy-seed") {
+        match s.parse::<u64>() {
+            Ok(v) => opts.seed = v,
+            Err(_) => {
+                eprintln!("--decoy-seed must be an unsigned integer");
+                std::process::exit(2);
+            }
+        }
+    }
+    opts
+}
+
 /// Score with a saved model — colocated when the host artifacts sit
 /// next to the guest one, federated over TCP with `--connect`. Rows come
 /// from the regenerated training preset, or from an arbitrary CSV with
@@ -458,8 +504,15 @@ fn cmd_predict(args: &Args) {
     let n_sessions: usize = args.get_parse("sessions", 1);
     let concurrency: usize = args.get_parse("concurrency", 1);
     let dummy_queries: usize = args.get_parse("dummy-queries", 0);
+    let batch_rows: usize = args.get_parse("batch-rows", 0);
+    let max_inflight: usize = args.get_parse("max-inflight", 4);
+    let passes: usize = args.get_parse("passes", 1);
     if n_sessions == 0 {
         eprintln!("--sessions must be ≥ 1");
+        std::process::exit(2);
+    }
+    if passes > 1 && batch_rows == 0 {
+        eprintln!("--passes needs the streaming engine; pass --batch-rows too");
         std::process::exit(2);
     }
 
@@ -509,28 +562,31 @@ fn cmd_predict(args: &Args) {
             );
             std::process::exit(2);
         }
-        let reports = if n_sessions == 1 && concurrency <= 1 && dummy_queries == 0 {
+        let reports = if passes > 1 {
+            // repeat scoring: one session, `passes` streamed scans of
+            // the same rows — the memo-heavy workload the delta
+            // protocol's wire suppression targets
+            if n_sessions != 1 {
+                eprintln!("--passes runs inside one session; drop --sessions");
+                std::process::exit(2);
+            }
+            let opts = predict_opts(args, dummy_queries, batch_rows, max_inflight);
+            sbp::coordinator::predict_stream_passes_tcp(
+                &guest_art.model,
+                &guest_slice,
+                &addrs,
+                1,
+                opts,
+                passes,
+            )
+            .expect("repeat-scoring session failed")
+        } else if n_sessions == 1 && concurrency <= 1 && dummy_queries == 0 && batch_rows == 0
+        {
             // single-shot legacy flow: no handshake, sessionless frames
             vec![predict_federated_tcp(&guest_art.model, &guest_slice, &addrs)
                 .expect("federated prediction failed")]
         } else {
-            // decoy seed defaults to OS entropy (PredictOptions::default):
-            // the hosts also hold the artifact's training seed, so any
-            // metadata-derived seed would let them replay the decoy
-            // stream. --decoy-seed pins it for reproducible experiments.
-            let mut opts = sbp::federation::predict::PredictOptions {
-                dummy_queries,
-                ..sbp::federation::predict::PredictOptions::default()
-            };
-            if let Some(s) = args.get("decoy-seed") {
-                match s.parse::<u64>() {
-                    Ok(v) => opts.seed = v,
-                    Err(_) => {
-                        eprintln!("--decoy-seed must be an unsigned integer");
-                        std::process::exit(2);
-                    }
-                }
-            }
+            let opts = predict_opts(args, dummy_queries, batch_rows, max_inflight);
             sbp::coordinator::predict_sessions_tcp(
                 &guest_art.model,
                 &guest_slice,
@@ -543,9 +599,17 @@ fn cmd_predict(args: &Args) {
         };
         for r in &reports {
             if reports.len() > 1 || r.session_id != 0 {
+                let pipeline = if r.chunks > 0 {
+                    format!(
+                        " chunks={} mean-inflight={:.2} stall={:.3}s delta-elided={}",
+                        r.chunks, r.mean_inflight, r.stall_seconds, r.delta_elided,
+                    )
+                } else {
+                    String::new()
+                };
                 println!(
                     "session {:>3}: {} rows {:.0} rows/s {:.1} B/row \
-                     suppressed={} decoys={}",
+                     suppressed={} decoys={}{pipeline}",
                     r.session_id,
                     r.n_rows,
                     r.rows_per_sec,
@@ -701,6 +765,8 @@ fn cmd_serve_predict(args: &Args) {
     let port: u16 = args.get_parse("port", 7979);
     let max_sessions: usize = args.get_parse("max-sessions", 1);
     let cache_capacity: usize = args.get_parse("cache-capacity", 1usize << 16);
+    let delta_window: usize = args.get_parse("delta-window", 1usize << 16);
+    let max_inflight: u32 = args.get_parse("max-inflight", 8u32);
 
     if host_id != art.model.party as usize {
         eprintln!(
@@ -754,6 +820,8 @@ fn cmd_serve_predict(args: &Args) {
     );
     let cfg = sbp::federation::serve::ServeConfig {
         cache_capacity,
+        delta_window,
+        max_inflight: max_inflight.max(1),
         ..sbp::federation::serve::ServeConfig::default()
     };
     match sbp::coordinator::serve_predict_tcp(&listener, art.model, slice, cfg, max_sessions) {

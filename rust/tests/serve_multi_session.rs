@@ -169,7 +169,7 @@ fn decoy_padding_changes_bytes_not_predictions() {
             std::slice::from_ref(&addr),
             2,
             1,
-            PredictOptions { dummy_queries, seed: 1234 },
+            PredictOptions { dummy_queries, seed: 1234, ..PredictOptions::default() },
         )
         .expect("sessions");
         server.join().expect("server thread");

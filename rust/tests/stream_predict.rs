@@ -1,0 +1,296 @@
+//! Pipelined streaming inference tests: chunked in-flight scoring must
+//! be bit-identical to the lockstep single-batch path and to the
+//! colocated oracle across chunk sizes (1, a remainder size, an exact
+//! divisor, one covering chunk) and transports; the `max_inflight`
+//! window must bound what the guest puts on the wire (blocking, not
+//! queueing without bound); and repeat scoring in one session must get
+//! cheaper on the wire through the delta-synchronized basis.
+
+use sbp::config::{CipherKind, TrainConfig};
+use sbp::coordinator::{
+    predict_centralized, predict_session_tcp, predict_stream_passes_tcp, serve_predict_tcp,
+    train_federated, ServeReport,
+};
+use sbp::data::dataset::{PartySlice, VerticalSplit};
+use sbp::data::synthetic::SyntheticSpec;
+use sbp::federation::message::ToHost;
+use sbp::federation::predict::{PredictHostParty, PredictOptions, PredictSession};
+use sbp::federation::serve::ServeConfig;
+use sbp::federation::transport::{link_pair_bounded, GuestTransport};
+use sbp::tree::node::{SplitRef, Tree};
+use sbp::tree::predict::{GuestModel, HostModel};
+
+fn fast_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::secureboost_plus();
+    cfg.epochs = 4;
+    cfg.max_depth = 3;
+    cfg.cipher = CipherKind::Plain;
+    cfg.goss = None;
+    cfg.sparse_optimization = false;
+    cfg
+}
+
+fn train(spec: SyntheticSpec, cfg: &TrainConfig) -> (VerticalSplit, GuestModel, Vec<HostModel>) {
+    let vs = spec.generate_vertical(cfg.seed, cfg.n_hosts);
+    let rep = train_federated(&vs, cfg).expect("training run");
+    let (guest_m, host_ms) = rep.model();
+    (vs, guest_m, host_ms)
+}
+
+fn start_server(
+    vs: &VerticalSplit,
+    host_ms: &[HostModel],
+    cfg: ServeConfig,
+    max_sessions: usize,
+) -> (String, std::thread::JoinHandle<ServeReport>) {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    let model = host_ms[0].clone();
+    let slice = vs.hosts[0].clone();
+    let handle = std::thread::spawn(move || {
+        serve_predict_tcp(&listener, model, slice, cfg, max_sessions).expect("serve loop")
+    });
+    (addr, handle)
+}
+
+/// The streamed pipelined path must be bit-identical to lockstep and to
+/// colocated across chunk sizes: 1 (degenerate), 7 (remainder), an
+/// exact divisor of n, and n itself (one covering chunk).
+#[test]
+fn pipelined_matches_lockstep_and_colocated_across_chunk_sizes() {
+    let (vs, guest_m, host_ms) = train(SyntheticSpec::give_credit(0.002), &fast_cfg());
+    let oracle = predict_centralized(&guest_m, &host_ms, &vs);
+    let n = vs.n();
+    // largest proper divisor of n (falls back to n when prime)
+    let divisor = (2..=n / 2).rev().find(|d| n % d == 0).map(|d| n / d).unwrap_or(n);
+    let sizes = [1usize, 7, divisor, n];
+
+    let (addr, server) =
+        start_server(&vs, &host_ms, ServeConfig::default(), sizes.len() + 1);
+    let addrs = [addr];
+
+    // lockstep session first: the chunked sessions must match it exactly
+    let lockstep = predict_session_tcp(
+        &guest_m,
+        &vs.guest,
+        &addrs,
+        99,
+        PredictOptions { seed: 1, ..PredictOptions::default() },
+    )
+    .expect("lockstep session");
+    assert_eq!(lockstep.preds, oracle, "lockstep must match colocated");
+    assert_eq!(lockstep.chunks, 0, "lockstep reports no pipeline");
+
+    for (i, &batch_rows) in sizes.iter().enumerate() {
+        let r = predict_session_tcp(
+            &guest_m,
+            &vs.guest,
+            &addrs,
+            (i + 1) as u32,
+            PredictOptions {
+                batch_rows,
+                max_inflight: 3,
+                seed: 2,
+                ..PredictOptions::default()
+            },
+        )
+        .expect("pipelined session");
+        assert_eq!(
+            r.preds, oracle,
+            "chunk size {batch_rows} must be bit-identical to colocated"
+        );
+        assert_eq!(r.chunks, n.div_ceil(batch_rows) as u64, "chunk count for {batch_rows}");
+        assert_eq!(r.transport, "tcp-pipelined");
+        assert_eq!(r.n_rows, n);
+    }
+    let serve_report = server.join().expect("server thread");
+    assert_eq!(serve_report.n_sessions, sizes.len() + 1);
+}
+
+/// Multi-host pipelining: chunks in flight against two host processes,
+/// answers rejoined per link in FIFO order, still bit-identical.
+#[test]
+fn two_host_pipelined_sessions_match_colocated() {
+    let mut cfg = fast_cfg();
+    cfg.n_hosts = 2;
+    let (vs, guest_m, host_ms) = train(SyntheticSpec::higgs(0.0002), &cfg);
+    assert_eq!(host_ms.len(), 2);
+    let oracle = predict_centralized(&guest_m, &host_ms, &vs);
+
+    let mut addrs = Vec::new();
+    let mut servers = Vec::new();
+    for p in 0..2 {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        addrs.push(listener.local_addr().unwrap().to_string());
+        let model = host_ms[p].clone();
+        let slice = vs.hosts[p].clone();
+        servers.push(std::thread::spawn(move || {
+            serve_predict_tcp(&listener, model, slice, ServeConfig::default(), 1)
+                .expect("serve loop")
+        }));
+    }
+    let r = predict_session_tcp(
+        &guest_m,
+        &vs.guest,
+        &addrs,
+        5,
+        PredictOptions { batch_rows: 37, max_inflight: 4, seed: 3, ..PredictOptions::default() },
+    )
+    .expect("pipelined 2-host session");
+    assert_eq!(r.preds, oracle, "2-host pipelined must match colocated");
+    assert!(r.chunks > 1);
+    for server in servers {
+        server.join().expect("server thread");
+    }
+}
+
+/// The `max_inflight` window must bound what the guest puts on the
+/// wire: with the host gated (accepting frames but not answering), a
+/// streamed pass with window 2 sends exactly 2 chunk frames and then
+/// *blocks* — it does not queue the remaining chunks unboundedly.
+#[test]
+fn max_inflight_window_blocks_instead_of_queueing() {
+    // toy model whose every row consults the host once
+    let mut t = Tree::new(1);
+    t.split_node(0, SplitRef::Host { party: 0, handle: 0 });
+    t.nodes[1].weight = vec![1.0];
+    t.nodes[2].weight = vec![2.0];
+    let guest_m = GuestModel { trees: vec![(t, 0)], n_classes: 2, pred_width: 1 };
+    let host_m = HostModel { party: 0, splits: vec![(0, 0, 0.0)] };
+    let guest_slice = PartySlice { cols: vec![0], x: vec![9.0; 6], n: 6 };
+    let host_slice = PartySlice {
+        cols: vec![1],
+        x: vec![-1.0, 1.0, -2.0, 3.0, 0.5, -0.5],
+        n: 6,
+    };
+    let expected = vec![1.0, 2.0, 1.0, 2.0, 2.0, 1.0];
+
+    let (gl, hl) = link_pair_bounded(8, 4); // roomy queue: blocking must come from the window
+    let counters = hl.counters();
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+    std::thread::scope(|s| {
+        let host = s.spawn(move || {
+            // gated: the host only starts serving once the window bound
+            // has been observed from outside
+            gate_rx.recv().ok();
+            PredictHostParty::new(host_m, host_slice, hl).run()
+        });
+        let gm = &guest_m;
+        let gs = &guest_slice;
+        let guest = s.spawn(move || {
+            let links: Vec<Box<dyn GuestTransport>> = vec![Box::new(gl)];
+            // sessionless: no handshake to wait on, so the guest runs
+            // ahead of the gated host immediately
+            let mut session = PredictSession::sessionless_with(
+                gm,
+                PredictOptions {
+                    batch_rows: 1, // 6 chunks, every one needing a host round
+                    max_inflight: 2,
+                    seed: 4,
+                    ..PredictOptions::default()
+                },
+            );
+            let out = session.predict_stream(gs, &links);
+            links[0].send(ToHost::Shutdown);
+            out
+        });
+        // the guest must send exactly window = 2 chunk frames, then block
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while counters.snapshot().msgs_to_host < 2 {
+            assert!(std::time::Instant::now() < deadline, "guest never sent its window");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        assert_eq!(
+            counters.snapshot().msgs_to_host,
+            2,
+            "guest must block at the in-flight window, not queue all 6 chunks"
+        );
+        gate_tx.send(()).expect("host gate");
+        let (preds, report) = guest.join().expect("guest thread");
+        host.join().expect("host thread");
+        assert_eq!(preds, expected, "gated pipelined run must still be correct");
+        assert_eq!(report.chunks, 6);
+        assert_eq!(report.window, 2);
+        assert_eq!(report.max_inflight_observed, 2, "window fully used, never exceeded");
+        assert!(report.stall_seconds > 0.0, "the gate must register as stall time");
+    });
+}
+
+/// Repeat scoring in one session (the memo-heavy workload): with delta
+/// suppression on, pass 2 is resolved from the synchronized basis and
+/// crosses the wire not at all; with it off, pass 2 pays the full
+/// per-row wire cost again. Both are bit-identical to colocated.
+#[test]
+fn repeat_scoring_bytes_drop_with_delta_suppression() {
+    let (vs, guest_m, host_ms) = train(SyntheticSpec::give_credit(0.002), &fast_cfg());
+    let oracle = predict_centralized(&guest_m, &host_ms, &vs);
+    let opts = PredictOptions {
+        batch_rows: 64,
+        max_inflight: 2,
+        seed: 11,
+        ..PredictOptions::default()
+    };
+
+    let run = |delta_window: usize| {
+        let (addr, server) = start_server(
+            &vs,
+            &host_ms,
+            ServeConfig { delta_window, ..ServeConfig::default() },
+            1,
+        );
+        let reports =
+            predict_stream_passes_tcp(&guest_m, &vs.guest, &[addr], 1, opts, 2)
+                .expect("repeat-scoring session");
+        let serve_report = server.join().expect("server thread");
+        (reports, serve_report)
+    };
+
+    let (with_delta, _) = run(1 << 16);
+    let (without_delta, serve_off) = run(0);
+    assert_eq!(serve_off.answers_elided, 0, "delta off elides nothing");
+
+    for reports in [&with_delta, &without_delta] {
+        assert_eq!(reports.len(), 2);
+        for r in reports.iter() {
+            assert_eq!(r.preds, oracle, "every pass must be bit-identical to colocated");
+        }
+    }
+    let on1 = with_delta[0].comm.total_bytes();
+    let on2 = with_delta[1].comm.total_bytes();
+    let off2 = without_delta[1].comm.total_bytes();
+    assert!(on1 > 0, "pass 1 pays the full wire cost");
+    assert_eq!(
+        on2, 0,
+        "pass 2 must be wire-free: every key is in the delta-synchronized basis"
+    );
+    assert!(
+        off2 > 0,
+        "without the delta basis, pass 2 re-pays the wire cost ({off2} B)"
+    );
+    assert!(with_delta[1].suppressed_queries > 0, "pass 2 resolves from the basis");
+}
+
+/// A streamed chunked session and the single-batch session agree with
+/// in-memory serving too, including suppressed-query bookkeeping.
+#[test]
+fn streamed_session_against_live_server_reports_pipeline_stats() {
+    let (vs, guest_m, host_ms) = train(SyntheticSpec::give_credit(0.002), &fast_cfg());
+    let oracle = predict_centralized(&guest_m, &host_ms, &vs);
+    let (addr, server) = start_server(&vs, &host_ms, ServeConfig::default(), 1);
+    let r = predict_session_tcp(
+        &guest_m,
+        &vs.guest,
+        &[addr],
+        17,
+        PredictOptions { batch_rows: 50, max_inflight: 4, seed: 8, ..PredictOptions::default() },
+    )
+    .expect("streamed session");
+    let serve_report = server.join().expect("server thread");
+    assert_eq!(r.preds, oracle);
+    assert_eq!(r.chunks, vs.n().div_ceil(50) as u64);
+    assert!(r.mean_inflight >= 1.0, "pipeline occupancy is at least one chunk");
+    assert!(r.stall_seconds >= 0.0);
+    assert_eq!(serve_report.n_sessions, 1);
+    assert!(serve_report.queries_answered > 0);
+}

@@ -101,8 +101,10 @@ fn sample_to_host_messages(suite: &CipherSuite, rng: &mut ChaCha20Rng) -> Vec<To
         ToHost::FinishTree { tree_id: 8 },
         ToHost::DumpSplitTable,
         ToHost::Shutdown,
-        ToHost::PredictRoute { session: 0, queries: vec![(0, 1), (5, 2), (9, 0)] },
-        ToHost::PredictRoute { session: 0xDEAD, queries: Vec::new() },
+        ToHost::PredictRoute { session: 0, chunk: 0, queries: vec![(0, 1), (5, 2), (9, 0)] },
+        ToHost::PredictRoute { session: 3, chunk: 42, queries: vec![(1, 1)] },
+        // a zero-row chunk tail is a valid frame, not a malformed one
+        ToHost::PredictRoute { session: 0xDEAD, chunk: 7, queries: Vec::new() },
         ToHost::SessionHello {
             session_id: 1,
             protocol: sbp::federation::message::SERVE_PROTOCOL_VERSION,
@@ -141,10 +143,30 @@ fn sample_to_guest_messages(suite: &CipherSuite, rng: &mut ChaCha20Rng) -> Vec<T
             entries: vec![(0, 7, 1.5), (1, 0, -3.25), (2, 255, f64::MAX)],
         },
         ToGuest::Ack,
-        ToGuest::RouteAnswers { session: 0, n: 11, bits: vec![0b1010_1010, 0b0000_0101] },
-        ToGuest::RouteAnswers { session: 9, n: 0, bits: Vec::new() },
-        ToGuest::SessionAccept { session_id: 1, max_inflight: 1 },
-        ToGuest::SessionAccept { session_id: u32::MAX, max_inflight: 64 },
+        ToGuest::RouteAnswers {
+            session: 0,
+            chunk: 0,
+            n: 11,
+            bits: vec![0b1010_1010, 0b0000_0101],
+        },
+        // zero-row answer (empty chunk tail) round-trips
+        ToGuest::RouteAnswers { session: 9, chunk: 13, n: 0, bits: Vec::new() },
+        ToGuest::SessionAccept { session_id: 1, max_inflight: 1, delta_window: 0 },
+        ToGuest::SessionAccept {
+            session_id: u32::MAX,
+            max_inflight: 64,
+            delta_window: 1 << 16,
+        },
+        // delta answers: partially and fully elided, and the empty batch
+        ToGuest::RouteAnswersDelta {
+            session: 5,
+            chunk: 2,
+            n: 11,
+            n_known: 3,
+            bits: vec![0b0101_0101],
+        },
+        ToGuest::RouteAnswersDelta { session: 5, chunk: 3, n: 9, n_known: 9, bits: Vec::new() },
+        ToGuest::RouteAnswersDelta { session: 5, chunk: 4, n: 0, n_known: 0, bits: Vec::new() },
     ]
 }
 
