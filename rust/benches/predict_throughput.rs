@@ -59,6 +59,7 @@ fn main() {
         guest_features: vs.guest.d(),
         seed: cfg.seed,
         scale,
+        feature_names: Some(vs.guest.cols.iter().map(|c| format!("f{c}")).collect()),
     }
     .save(&dir.join(guest_file_name()))
     .expect("save guest artifact");
@@ -70,6 +71,7 @@ fn main() {
             n_hosts: vs.hosts.len(),
             seed: cfg.seed,
             scale,
+            feature_names: Some(vs.hosts[p].cols.iter().map(|c| format!("f{c}")).collect()),
         }
         .save(&dir.join(host_file_name(p)))
         .expect("save host artifact");
@@ -117,7 +119,9 @@ fn main() {
         seed: 42,
         ..PredictOptions::default()
     };
-    let start_loop = |delta_window: usize, max_sessions: usize| {
+    let start_loop = |delta_window: usize,
+                      basis_evict: sbp::federation::message::BasisEvict,
+                      max_sessions: usize| {
         let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
         let addr = listener.local_addr().unwrap().to_string();
         let model = host_models[0].clone();
@@ -127,7 +131,7 @@ fn main() {
                 &listener,
                 model,
                 slice,
-                ServeConfig { delta_window, ..ServeConfig::default() },
+                ServeConfig { delta_window, basis_evict, ..ServeConfig::default() },
                 max_sessions,
             )
             .expect("serve loop")
@@ -140,7 +144,8 @@ fn main() {
     // of the batch for pass 2 to go fully wire-free, so size the window
     // to the worst case (rows × consulted handles) rather than the
     // 64Ki serving default.
-    let (addr_on, server_on) = start_loop(1 << 20, 2);
+    let (addr_on, server_on) =
+        start_loop(1 << 20, sbp::federation::message::BasisEvict::Lru, 2);
     let addrs_on = [addr_on];
     let pipelined = predict_session_tcp(&guest_art.model, &vs.guest, &addrs_on, 1, stream_opts)
         .expect("pipelined session");
@@ -159,7 +164,8 @@ fn main() {
     );
 
     // delta off: the same 2-pass repeat workload re-pays the wire cost
-    let (addr_off, server_off) = start_loop(0, 1);
+    let (addr_off, server_off) =
+        start_loop(0, sbp::federation::message::BasisEvict::Lru, 1);
     let addrs_off = [addr_off];
     let passes_off =
         predict_stream_passes_tcp(&guest_art.model, &vs.guest, &addrs_off, 1, stream_opts, 2)
@@ -171,6 +177,24 @@ fn main() {
     assert!(
         passes_off[1].comm.total_bytes() > 0,
         "without delta suppression the repeat pass pays wire bytes again"
+    );
+
+    // negotiated freeze (v2-equivalent) parity: with a window that holds
+    // the whole working set, freeze and lru are bit- and byte-identical
+    let (addr_frz, server_frz) =
+        start_loop(1 << 20, sbp::federation::message::BasisEvict::Freeze, 1);
+    let addrs_frz = [addr_frz];
+    let passes_frz =
+        predict_stream_passes_tcp(&guest_art.model, &vs.guest, &addrs_frz, 1, stream_opts, 2)
+            .expect("repeat-scoring session (freeze)");
+    server_frz.join().expect("serve loop thread");
+    for pass in &passes_frz {
+        assert_eq!(pass.preds, cen_preds, "freeze passes must match colocated exactly");
+    }
+    assert_eq!(
+        passes_frz[1].comm.total_bytes(),
+        0,
+        "a window-fitting repeat pass is wire-free under freeze too"
     );
 
     // ---- report --------------------------------------------------------

@@ -16,9 +16,11 @@ mod common;
 use sbp::config::json::Json;
 use sbp::config::{CipherKind, TrainConfig};
 use sbp::coordinator::{
-    predict_centralized, predict_sessions_tcp, serve_predict_tcp, train_federated,
+    predict_centralized, predict_sessions_tcp, predict_stream_passes_tcp, serve_predict_tcp,
+    train_federated,
 };
 use sbp::data::synthetic::SyntheticSpec;
+use sbp::federation::message::BasisEvict;
 use sbp::federation::predict::PredictOptions;
 use sbp::federation::serve::ServeConfig;
 
@@ -115,6 +117,83 @@ fn main() {
     }
     table.print();
 
+    // ---- 2-stage pipelined host under a pipelined (chunked) client:
+    // ring occupancy > 1 means decode genuinely overlapped compute.
+    // Repeat scoring per eviction policy: with a window that holds the
+    // working set the two policies are bit- and byte-identical (the
+    // parity gate); the divergence case (working set > window, recent
+    // tail re-scored) is covered by tests/serve_soak.rs.
+    println!("\n--- pipelined host (serve v3), repeat scoring per eviction policy ---");
+    let mut evict_table = sbp::bench_harness::Table::new(&[
+        "basis", "pass1 B/row", "pass2 B/row", "elided", "ring≤", "rows/sec",
+    ]);
+    let mut evict_points: Vec<Json> = Vec::new();
+    let stream_opts = PredictOptions {
+        batch_rows: (n / 8).max(1),
+        max_inflight: 4,
+        seed: 7,
+        ..PredictOptions::default()
+    };
+    for evict in [BasisEvict::Freeze, BasisEvict::Lru] {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        let addr = listener.local_addr().unwrap().to_string();
+        let model = host_ms[0].clone();
+        let slice = vs.hosts[0].clone();
+        let server = std::thread::spawn(move || {
+            serve_predict_tcp(
+                &listener,
+                model,
+                slice,
+                ServeConfig { basis_evict: evict, delta_window: 1 << 20, ..ServeConfig::default() },
+                1,
+            )
+            .expect("serve loop")
+        });
+        let passes =
+            predict_stream_passes_tcp(&guest_m, &vs.guest, &[addr], 1, stream_opts, 2)
+                .expect("repeat-scoring session");
+        let serve_report = server.join().expect("server thread");
+        for pass in &passes {
+            assert_eq!(
+                pass.preds, oracle,
+                "repeat pass must be bit-identical to colocated under {}",
+                evict.name()
+            );
+        }
+        assert_eq!(
+            passes[1].comm.total_bytes(),
+            0,
+            "a window-fitting repeat pass is wire-free under {}",
+            evict.name()
+        );
+        evict_table.row(&[
+            evict.name().to_string(),
+            format!("{:.1}", passes[0].bytes_per_row),
+            format!("{:.2}", passes[1].bytes_per_row),
+            serve_report.answers_elided.to_string(),
+            serve_report.ring_high_water.to_string(),
+            format!("{:.0}", passes[0].rows_per_sec),
+        ]);
+        evict_points.push(Json::obj(vec![
+            ("basis_evict", Json::Str(evict.name().into())),
+            (
+                "pass1_bytes_per_row",
+                Json::Num((passes[0].bytes_per_row * 10.0).round() / 10.0),
+            ),
+            (
+                "pass2_bytes_per_row",
+                Json::Num((passes[1].bytes_per_row * 100.0).round() / 100.0),
+            ),
+            ("answers_elided", Json::Num(serve_report.answers_elided as f64)),
+            ("ring_high_water", Json::Num(serve_report.ring_high_water as f64)),
+            (
+                "decode_stall_seconds",
+                Json::Num(serve_report.decode_stall_seconds),
+            ),
+        ]));
+    }
+    evict_table.print();
+
     if smoke {
         println!("\n[smoke] multi-session serving parity OK (no JSON written)");
         return;
@@ -128,6 +207,7 @@ fn main() {
         ("sessions", Json::Num(SESSIONS as f64)),
         ("concurrency", Json::Num(CONCURRENCY as f64)),
         ("capacities", Json::Arr(points)),
+        ("pipelined_host", Json::Arr(evict_points)),
         (
             "note",
             Json::Str("regenerate with `cargo bench --bench serve_throughput`".into()),

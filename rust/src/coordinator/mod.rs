@@ -663,6 +663,15 @@ pub struct ServeReport {
     pub answers_elided: u64,
     /// Routing-cache counters (shared across sessions).
     pub cache: crate::federation::serve::CacheStats,
+    /// Delta-basis eviction policy this server offered v3 sessions
+    /// (sessions negotiated down to v2 ran `freeze` regardless).
+    pub basis_evict: crate::federation::message::BasisEvict,
+    /// Highest decode-ring occupancy any session's 2-stage pipeline
+    /// reached (bounded by `ServeConfig::max_inflight`).
+    pub ring_high_water: usize,
+    /// Total seconds decode stages spent blocked on a full ring
+    /// (host-side pipeline backpressure, summed over sessions).
+    pub decode_stall_seconds: f64,
     /// Exact serialized wire traffic across all sessions.
     pub comm: NetSnapshot,
     /// Wall time of the whole serve loop.
@@ -680,17 +689,21 @@ impl ServeReport {
     /// One-line service summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "served {} session(s): {} queries ({} answers delta-elided), \
+            "served {} session(s): {} queries ({} answers delta-elided, basis {}), \
              {:.0} queries/s, {:.1} B/query, \
-             cache {}/{} hit/miss ({:.1}% hit rate)",
+             cache {}/{} hit/miss ({:.1}% hit rate), \
+             pipeline ring ≤{} (decode stalled {:.3}s)",
             self.n_sessions,
             self.queries_answered,
             self.answers_elided,
+            self.basis_evict.name(),
             self.queries_per_sec,
             self.bytes_per_query,
             self.cache.hits,
             self.cache.misses,
             self.cache.hit_rate() * 100.0,
+            self.ring_high_water,
+            self.decode_stall_seconds,
         )
     }
 }
@@ -723,6 +736,9 @@ pub fn serve_predict_tcp(
         queries_answered,
         answers_elided: state.answers_elided(),
         cache: state.cache_stats(),
+        basis_evict: cfg.basis_evict,
+        ring_high_water: state.ring_high_water(),
+        decode_stall_seconds: state.decode_stall_seconds(),
         comm,
         wall_seconds: wall,
         sessions_per_sec: n_sessions as f64 / wall.max(1e-12),

@@ -766,11 +766,15 @@ pub fn decode_to_host(
             let protocol = r.u32()?;
             // a hello must announce a real (nonzero) session and a
             // protocol version this build speaks — anything else is a
-            // malformed handshake the serving host rejects up front
+            // malformed handshake the serving host rejects up front.
+            // v2 hellos are accepted (the session is negotiated down to
+            // v2 semantics); anything else is rejected.
             if session_id == crate::federation::message::SESSIONLESS_ID {
                 return Err(WireError::Malformed("SessionHello with reserved session id 0"));
             }
-            if protocol != crate::federation::message::SERVE_PROTOCOL_VERSION {
+            if protocol != crate::federation::message::SERVE_PROTOCOL_VERSION
+                && protocol != crate::federation::message::SERVE_PROTOCOL_V2
+            {
                 return Err(WireError::Malformed("unsupported serve protocol version"));
             }
             ToHost::SessionHello { session_id, protocol }
@@ -832,10 +836,29 @@ pub fn encode_to_guest_into(
             put_u32(out, *n);
             out.extend_from_slice(bits);
         }
-        ToGuest::SessionAccept { session_id, max_inflight, delta_window } => {
+        ToGuest::SessionAccept {
+            session_id,
+            max_inflight,
+            delta_window,
+            protocol,
+            basis_evict,
+        } => {
             put_u32(out, *session_id);
             put_u32(out, *max_inflight);
             put_u32(out, *delta_window);
+            // v3 extension: appended only when the negotiated protocol
+            // speaks it, so a v2 peer receives exactly the 12-byte
+            // accept its decoder expects (its trailing-bytes check
+            // would reject anything longer)
+            debug_assert!(
+                *protocol == crate::federation::message::SERVE_PROTOCOL_V2
+                    || *protocol == crate::federation::message::SERVE_PROTOCOL_VERSION,
+                "accept must carry a negotiated protocol this build speaks"
+            );
+            if *protocol >= crate::federation::message::SERVE_PROTOCOL_VERSION {
+                put_u32(out, *protocol);
+                out.push(*basis_evict as u8);
+            }
         }
         ToGuest::RouteAnswersDelta { session, chunk, n, n_known, bits } => {
             assert!(n_known <= n, "delta cannot know more answers than queries");
@@ -903,11 +926,40 @@ pub fn decode_to_guest(
             }
             ToGuest::RouteAnswers { session, chunk, n, bits: r.take(n_bytes)?.to_vec() }
         }
-        5 => ToGuest::SessionAccept {
-            session_id: r.u32()?,
-            max_inflight: r.u32()?,
-            delta_window: r.u32()?,
-        },
+        5 => {
+            let session_id = r.u32()?;
+            let max_inflight = r.u32()?;
+            let delta_window = r.u32()?;
+            // a bare 12-byte accept is the v2 form (legacy host, or a
+            // v3 host negotiating a v2 hello down): freeze semantics.
+            // Anything longer must be a well-formed v3 extension.
+            let (protocol, basis_evict) = if r.remaining() == 0 {
+                (
+                    crate::federation::message::SERVE_PROTOCOL_V2,
+                    crate::federation::message::BasisEvict::Freeze,
+                )
+            } else {
+                let protocol = r.u32()?;
+                if protocol != crate::federation::message::SERVE_PROTOCOL_VERSION {
+                    return Err(WireError::Malformed(
+                        "SessionAccept extension with a non-v3 protocol",
+                    ));
+                }
+                let tag = r.u8()?;
+                let Some(evict) = crate::federation::message::BasisEvict::from_tag(tag)
+                else {
+                    return Err(WireError::BadTag { what: "basis evict policy", tag });
+                };
+                (protocol, evict)
+            };
+            ToGuest::SessionAccept {
+                session_id,
+                max_inflight,
+                delta_window,
+                protocol,
+                basis_evict,
+            }
+        }
         6 => {
             let session = r.u32()?;
             let chunk = r.u32()?;
@@ -988,7 +1040,13 @@ pub fn to_guest_wire_len(msg: &ToGuest, ct_len: usize) -> usize {
             ToGuest::SplitTable { entries } => 4 + entries.len() * 13,
             ToGuest::Ack => 0,
             ToGuest::RouteAnswers { n, .. } => 4 + 4 + 4 + (*n as usize).div_ceil(8),
-            ToGuest::SessionAccept { .. } => 12,
+            ToGuest::SessionAccept { protocol, .. } => {
+                if *protocol >= crate::federation::message::SERVE_PROTOCOL_VERSION {
+                    17 // v3 extension: + protocol u32 + basis-evict tag
+                } else {
+                    12
+                }
+            }
             ToGuest::RouteAnswersDelta { n, n_known, .. } => {
                 16 + ((*n - *n_known) as usize).div_ceil(8)
             }

@@ -1,0 +1,304 @@
+//! The **delta basis**: the bounded, protocol-synchronized set of
+//! `(record id, split handle)` keys a serving session has already
+//! answered, used on both ends of the wire for cache-aware suppression
+//! ([`super::message::ToGuest::RouteAnswersDelta`]).
+//!
+//! Host and guest each hold one [`DeltaBasis`] per session/link and
+//! apply **the exact same operation sequence** to it: for every query
+//! key, in frame order (frames in per-link arrival order, keys in query
+//! order within a frame), either [`DeltaBasis::touch`] hits (the key is
+//! *known* — its answer is elided from the wire) or the key is *fresh*
+//! and [`DeltaBasis::insert`]ed. Because recency is defined purely by
+//! that shared key sequence, the two bases stay key-for-key identical
+//! under **any** deterministic eviction policy without a membership map
+//! ever crossing the wire — the invariant the whole delta protocol
+//! rests on.
+//!
+//! Two policies exist ([`BasisEvict`], negotiated in the v3
+//! `SessionAccept`):
+//!
+//! - **freeze** — v2 semantics, bit-for-bit: a full basis admits no new
+//!   keys and never reorders. Trivially synchronized, but suppression
+//!   dies once a session's working set exceeds `delta_window`.
+//! - **lru** — a full basis evicts the key whose last frame-order
+//!   appearance is oldest. Suppression keeps working for oversized
+//!   working sets with recency locality (e.g. re-scoring recent rows).
+//!
+//! One asymmetry is deliberate: the guest's *phase-A* suppression check
+//! (should this query go on the wire at all?) uses the **non-mutating**
+//! [`DeltaBasis::peek`]. The host never observes a suppressed query, so
+//! a recency refresh there would desynchronize the two bases — only
+//! operations driven by frame content may mutate recency.
+
+use super::message::BasisEvict;
+use std::collections::HashMap;
+
+/// Sentinel index for the intrusive recency list.
+const NIL: usize = usize::MAX;
+
+struct BasisNode {
+    key: (u32, u32),
+    bit: bool,
+    prev: usize,
+    next: usize,
+}
+
+/// One end's mirror of a session's bounded "already answered" set — see
+/// the module docs for the synchronization contract. `capacity == 0`
+/// disables the basis entirely (every lookup misses, nothing is
+/// stored). The host side uses it as an ordered membership set (its
+/// stored bits are placeholders — answers are recomputed through the
+/// routing cache); the guest stores the real routing bits so elided
+/// answers resolve locally.
+///
+/// The intrusive-list layout intentionally parallels the serving host's
+/// [`super::serve::RoutingCache`], but the two are kept separate on
+/// purpose: the cache is a thread-shared, always-LRU performance memo
+/// whose evictions are invisible to the protocol, while this structure
+/// is single-owner, policy-negotiated, and its every mutation is a
+/// *wire-visible contract* with the peer's mirror.
+pub struct DeltaBasis {
+    mode: BasisEvict,
+    capacity: usize,
+    map: HashMap<(u32, u32), usize>,
+    nodes: Vec<BasisNode>,
+    head: usize,
+    tail: usize,
+    free: Vec<usize>,
+}
+
+impl DeltaBasis {
+    /// An empty basis of `capacity` entries under `mode`.
+    pub fn new(capacity: usize, mode: BasisEvict) -> DeltaBasis {
+        DeltaBasis {
+            mode,
+            capacity,
+            map: HashMap::new(),
+            nodes: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            free: Vec::new(),
+        }
+    }
+
+    /// An inert basis (capacity 0): what sessionless links carry.
+    pub fn off() -> DeltaBasis {
+        DeltaBasis::new(0, BasisEvict::Freeze)
+    }
+
+    /// Configured capacity (0 = suppression off).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Eviction policy in force.
+    pub fn mode(&self) -> BasisEvict {
+        self.mode
+    }
+
+    /// Keys currently resident.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// No keys resident?
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Forget everything (a (re)opened session starts with fresh bases
+    /// on both ends).
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.nodes.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+    }
+
+    /// **Non-mutating** membership probe: the stored bit if `key` is
+    /// resident. This is the only lookup the guest's phase-A
+    /// suppression may use — the host never sees suppressed queries, so
+    /// refreshing recency here would desynchronize the mirrors.
+    pub fn peek(&self, key: &(u32, u32)) -> Option<bool> {
+        self.map.get(key).map(|&i| self.nodes[i].bit)
+    }
+
+    /// Frame-order lookup: the stored bit if `key` is resident,
+    /// refreshing its recency under [`BasisEvict::Lru`] (a no-op under
+    /// freeze). Both ends call this for every query key their shared
+    /// frame sequence names, so the refreshes happen in lockstep.
+    pub fn touch(&mut self, key: &(u32, u32)) -> Option<bool> {
+        let i = *self.map.get(key)?;
+        if self.mode == BasisEvict::Lru {
+            self.detach(i);
+            self.push_front(i);
+        }
+        Some(self.nodes[i].bit)
+    }
+
+    /// Frame-order insert of a key [`DeltaBasis::touch`] just missed.
+    /// Freeze: admitted only while there is room. Lru: always admitted,
+    /// evicting the least-recently-touched key when full. Returns
+    /// whether the key is resident afterwards.
+    pub fn insert(&mut self, key: (u32, u32), bit: bool) -> bool {
+        if self.capacity == 0 {
+            return false;
+        }
+        debug_assert!(!self.map.contains_key(&key), "insert after a touch miss only");
+        if self.map.len() >= self.capacity {
+            match self.mode {
+                BasisEvict::Freeze => return false,
+                BasisEvict::Lru => {
+                    let victim = self.tail;
+                    self.detach(victim);
+                    let old_key = self.nodes[victim].key;
+                    self.map.remove(&old_key);
+                    self.free.push(victim);
+                }
+            }
+        }
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.nodes[s] = BasisNode { key, bit, prev: NIL, next: NIL };
+                s
+            }
+            None => {
+                self.nodes.push(BasisNode { key, bit, prev: NIL, next: NIL });
+                self.nodes.len() - 1
+            }
+        };
+        self.map.insert(key, slot);
+        self.push_front(slot);
+        true
+    }
+
+    /// The plain-`RouteAnswers` mirror step on a delta session: the
+    /// host's scan found every key fresh and inserted it, so apply the
+    /// identical touch-else-insert sequence with the wire bit.
+    pub fn observe(&mut self, key: (u32, u32), bit: bool) {
+        if self.capacity == 0 {
+            return;
+        }
+        if self.touch(&key).is_none() {
+            self.insert(key, bit);
+        }
+    }
+
+    fn detach(&mut self, i: usize) {
+        let (p, n) = (self.nodes[i].prev, self.nodes[i].next);
+        if p != NIL {
+            self.nodes[p].next = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.nodes[n].prev = p;
+        } else {
+            self.tail = p;
+        }
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.nodes[i].prev = NIL;
+        self.nodes[i].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head].prev = i;
+        } else {
+            self.tail = i;
+        }
+        self.head = i;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn freeze_admits_until_full_then_stops() {
+        let mut b = DeltaBasis::new(2, BasisEvict::Freeze);
+        assert!(b.insert((0, 0), true));
+        assert!(b.insert((1, 0), false));
+        assert!(!b.insert((2, 0), true), "a full frozen basis admits nothing");
+        assert_eq!(b.peek(&(0, 0)), Some(true));
+        assert_eq!(b.peek(&(1, 0)), Some(false));
+        assert_eq!(b.peek(&(2, 0)), None);
+        // touching never reorders a frozen basis: (2,0) still rejected
+        assert_eq!(b.touch(&(1, 0)), Some(false));
+        assert!(!b.insert((2, 0), true));
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn lru_evicts_the_least_recently_touched_key() {
+        let mut b = DeltaBasis::new(2, BasisEvict::Lru);
+        b.insert((0, 0), true);
+        b.insert((1, 0), false);
+        assert_eq!(b.touch(&(0, 0)), Some(true)); // (1,0) is now LRU
+        assert!(b.insert((2, 0), true), "lru always admits");
+        assert_eq!(b.peek(&(1, 0)), None, "the stale key was evicted");
+        assert_eq!(b.peek(&(0, 0)), Some(true));
+        assert_eq!(b.peek(&(2, 0)), Some(true));
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn peek_does_not_refresh_recency() {
+        let mut b = DeltaBasis::new(2, BasisEvict::Lru);
+        b.insert((0, 0), true);
+        b.insert((1, 0), false);
+        // a peek at (0,0) must NOT save it: it is still the LRU victim
+        assert_eq!(b.peek(&(0, 0)), Some(true));
+        b.insert((2, 0), true);
+        assert_eq!(b.peek(&(0, 0)), None, "peek must not have refreshed (0,0)");
+        assert_eq!(b.peek(&(1, 0)), Some(false));
+    }
+
+    #[test]
+    fn mirrored_op_sequences_stay_identical_across_modes() {
+        // the synchronization invariant in miniature: two bases fed the
+        // same touch-else-insert sequence hold the same keys afterwards,
+        // whatever the mode
+        for mode in [BasisEvict::Freeze, BasisEvict::Lru] {
+            let mut a = DeltaBasis::new(3, mode);
+            let mut b = DeltaBasis::new(3, mode);
+            let keys: Vec<(u32, u32)> =
+                vec![(0, 0), (1, 0), (0, 0), (2, 1), (3, 0), (1, 0), (4, 2), (0, 0)];
+            for k in &keys {
+                if a.touch(k).is_none() {
+                    a.insert(*k, true);
+                }
+                if b.touch(k).is_none() {
+                    b.insert(*k, true);
+                }
+            }
+            for k in &keys {
+                assert_eq!(a.peek(k).is_some(), b.peek(k).is_some(), "{mode:?} {k:?}");
+            }
+            assert_eq!(a.len(), b.len());
+        }
+    }
+
+    #[test]
+    fn zero_capacity_basis_is_inert() {
+        let mut b = DeltaBasis::off();
+        assert!(!b.insert((0, 0), true));
+        b.observe((1, 1), false);
+        assert_eq!(b.peek(&(0, 0)), None);
+        assert_eq!(b.touch(&(1, 1)), None);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn clear_resets_for_session_reopen() {
+        let mut b = DeltaBasis::new(2, BasisEvict::Lru);
+        b.insert((0, 0), true);
+        b.insert((1, 0), false);
+        b.clear();
+        assert!(b.is_empty());
+        assert!(b.insert((2, 0), true));
+        assert_eq!(b.peek(&(0, 0)), None);
+        assert_eq!(b.peek(&(2, 0)), Some(true));
+    }
+}

@@ -183,11 +183,17 @@ impl<T: HostTransport> HostParty<T> {
                 // aborting a run over them (delta_window 0: a training
                 // host keeps no per-session basis, so every answer
                 // travels in full)
-                ToHost::SessionHello { session_id, .. } => {
+                ToHost::SessionHello { session_id, protocol } => {
                     self.link.send(ToGuest::SessionAccept {
                         session_id,
                         max_inflight: 1,
                         delta_window: 0,
+                        // negotiate like a serving host would (v2 peers
+                        // get the bare accept); with delta_window 0 the
+                        // eviction policy is moot, so announce freeze
+                        protocol: protocol
+                            .min(crate::federation::message::SERVE_PROTOCOL_VERSION),
+                        basis_evict: crate::federation::message::BasisEvict::Freeze,
                     });
                 }
                 ToHost::SessionClose { .. } => {}

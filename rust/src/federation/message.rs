@@ -14,15 +14,79 @@ use std::sync::Arc;
 /// Version of the *serving* session protocol spoken after a
 /// [`ToHost::SessionHello`]. Bumps whenever the meaning of a serving
 /// frame changes incompatibly (query encoding, answer packing, session
-/// semantics). The wire codec rejects hellos for any other version —
-/// a serving host must never half-understand a session.
+/// semantics). The wire codec accepts hellos for this version and for
+/// [`SERVE_PROTOCOL_V2`] (the host negotiates such sessions *down* to
+/// v2 semantics) and rejects everything else — a serving host must
+/// never half-understand a session.
 ///
 /// v2: chunked pipelined streaming — `PredictRoute`/`RouteAnswers`
 /// carry a chunk id so several batches may be in flight per session,
 /// and handshaked sessions may receive [`ToGuest::RouteAnswersDelta`]
 /// answers (cache-aware wire suppression) when the host's
 /// [`ToGuest::SessionAccept`] announced a nonzero `delta_window`.
-pub const SERVE_PROTOCOL_VERSION: u32 = 2;
+///
+/// v3: negotiated delta-basis eviction — [`ToGuest::SessionAccept`]
+/// additionally announces the negotiated protocol and the
+/// [`BasisEvict`] policy both ends must apply to their mirrored delta
+/// bases (`freeze` reproduces v2 bit-for-bit; `lru` keeps suppression
+/// effective for working sets larger than `delta_window`). A v2 peer
+/// never sees the extension: hellos carrying `protocol = 2` are
+/// answered with the 12-byte v2 accept and served with frozen bases.
+pub const SERVE_PROTOCOL_VERSION: u32 = 3;
+
+/// The previous serve-protocol version, still accepted on the wire:
+/// a [`ToHost::SessionHello`] carrying it is served with v2 semantics
+/// (freeze-on-full delta basis, 12-byte [`ToGuest::SessionAccept`]).
+pub const SERVE_PROTOCOL_V2: u32 = 2;
+
+/// Eviction policy of the per-session **delta basis** (the mirrored
+/// "already answered" set behind [`ToGuest::RouteAnswersDelta`]),
+/// negotiated in the v3 [`ToGuest::SessionAccept`]. Both ends must run
+/// the same policy over the same frame-order key sequence, or their
+/// bases diverge and elided answers become undecodable.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BasisEvict {
+    /// v2 behavior: the basis stops admitting new keys once full. Both
+    /// ends stay in lockstep trivially, but suppression dies for
+    /// sessions whose working set exceeds `delta_window`.
+    #[default]
+    Freeze = 0,
+    /// Deterministic least-recently-used eviction: a full basis evicts
+    /// the key whose last appearance *in per-link frame order* is
+    /// oldest. Recency is defined purely by the key sequence both ends
+    /// already see (queries in frame order), so no membership map ever
+    /// crosses the wire and suppression keeps working for working sets
+    /// larger than `delta_window`.
+    Lru = 1,
+}
+
+impl BasisEvict {
+    /// Wire tag / CLI token mapping.
+    pub fn from_tag(tag: u8) -> Option<BasisEvict> {
+        match tag {
+            0 => Some(BasisEvict::Freeze),
+            1 => Some(BasisEvict::Lru),
+            _ => None,
+        }
+    }
+
+    /// Parse the `--basis-evict` CLI token.
+    pub fn parse(s: &str) -> Option<BasisEvict> {
+        match s {
+            "freeze" => Some(BasisEvict::Freeze),
+            "lru" => Some(BasisEvict::Lru),
+            _ => None,
+        }
+    }
+
+    /// Human-readable policy name (also the CLI token).
+    pub fn name(self) -> &'static str {
+        match self {
+            BasisEvict::Freeze => "freeze",
+            BasisEvict::Lru => "lru",
+        }
+    }
+}
 
 /// Session id reserved for the legacy *sessionless* inference flow
 /// (a bare `PredictRoute` without a preceding handshake). Real sessions
@@ -259,8 +323,9 @@ pub enum ToHost {
         /// Client-chosen nonzero session id, echoed on every frame of
         /// the session so a multiplexing host can attribute traffic.
         session_id: u32,
-        /// Must equal [`SERVE_PROTOCOL_VERSION`]; the codec rejects
-        /// anything else at decode time.
+        /// Must equal [`SERVE_PROTOCOL_VERSION`] or
+        /// [`SERVE_PROTOCOL_V2`] (served with v2 semantics); the codec
+        /// rejects anything else at decode time.
         protocol: u32,
     },
     /// End one serving session cleanly. The server keeps running and
@@ -346,9 +411,20 @@ pub enum ToGuest {
         /// maintains for cache-aware wire suppression, 0 = suppression
         /// off. Nonzero means the session may answer `PredictRoute`
         /// batches with [`ToGuest::RouteAnswersDelta`] frames; the guest
-        /// must mirror the basis (same capacity, same freeze-on-full
-        /// insertion rule) to resolve elided answers.
+        /// must mirror the basis (same capacity, same negotiated
+        /// insertion/eviction rule) to resolve elided answers.
         delta_window: u32,
+        /// The serve-protocol version the session will actually speak:
+        /// the minimum of the hello's version and this build's
+        /// [`SERVE_PROTOCOL_VERSION`]. When it is ≥ 3 the accept frame
+        /// carries the v3 extension (this field plus `basis_evict`) on
+        /// the wire; a v2 accept is the bare 12-byte frame a legacy
+        /// peer expects and decodes as `(2, Freeze)`.
+        protocol: u32,
+        /// The delta-basis eviction policy both ends must run
+        /// ([`BasisEvict::Freeze`] whenever the negotiated protocol is
+        /// v2, so legacy sessions stay bit-for-bit v2).
+        basis_evict: BasisEvict,
     },
     /// Cache-aware wire suppression: answers for a `PredictRoute` batch
     /// in which every `(record, handle)` key the host has **already
@@ -358,10 +434,12 @@ pub enum ToGuest {
     /// the bit the guest already holds in its memo/basis; only the
     /// *fresh* queries' bits travel. Both sides maintain the same
     /// bounded "seen" set (the *delta basis*, capacity announced as
-    /// `delta_window` in [`ToGuest::SessionAccept`], frozen when full),
-    /// updated in frame order, so the guest can reconstruct the full
-    /// answer bitmap bit-identically without an explicit membership map
-    /// on the wire.
+    /// `delta_window` in [`ToGuest::SessionAccept`], full-set behavior
+    /// governed by the negotiated [`BasisEvict`] policy — frozen on v2
+    /// sessions, deterministically LRU-evicted when v3 negotiated
+    /// `lru`), updated in frame order, so the guest can reconstruct the
+    /// full answer bitmap bit-identically without an explicit
+    /// membership map on the wire.
     RouteAnswersDelta {
         /// The serving session the answered batch belongs to.
         session: u32,

@@ -33,6 +33,7 @@
 //! [`message::ToHost::SessionHello`] handshake.
 
 pub mod codec;
+pub mod delta;
 pub mod guest;
 pub mod host;
 pub mod message;

@@ -64,7 +64,10 @@
 //! [`super::transport::NetCounters`] — asserted by
 //! `tests/predict_parity.rs`.
 
-use super::message::{ToGuest, ToHost, SERVE_PROTOCOL_VERSION, SESSIONLESS_ID};
+use super::delta::DeltaBasis;
+use super::message::{
+    BasisEvict, ToGuest, ToHost, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_VERSION, SESSIONLESS_ID,
+};
 use super::serve::{serve_session, HostServeState, ServeConfig, SessionOutcome};
 use super::transport::{GuestTransport, HostTransport};
 use crate::data::dataset::PartySlice;
@@ -85,7 +88,7 @@ pub struct PredictHostParty<T: HostTransport> {
     link: T,
 }
 
-impl<T: HostTransport> PredictHostParty<T> {
+impl<T: HostTransport + Send + Sync + 'static> PredictHostParty<T> {
     /// Build a serving party from a loaded host model share and the
     /// host's feature slice (record id = row index). Caching is off —
     /// single-session servers see no repeat traffic worth memoizing.
@@ -107,7 +110,7 @@ impl<T: HostTransport> PredictHostParty<T> {
 
 /// Spawn an in-process inference host thread over any owned host
 /// transport (the in-memory analogue of [`serve_predict_once`]).
-pub fn spawn_predict_host<T: HostTransport + Send + 'static>(
+pub fn spawn_predict_host<T: HostTransport + Send + Sync + 'static>(
     model: HostModel,
     slice: PartySlice,
     link: T,
@@ -160,6 +163,12 @@ pub struct PredictOptions {
     /// the `max_inflight` each host announces in its `SessionAccept` —
     /// the serving host's per-session queue bound.
     pub max_inflight: usize,
+    /// Serve-protocol version the session's `SessionHello` announces.
+    /// Defaults to [`SERVE_PROTOCOL_VERSION`]; set
+    /// [`SERVE_PROTOCOL_V2`] to speak as a legacy v2 client (the host
+    /// then serves the session with v2 semantics — frozen delta basis,
+    /// 12-byte accept). Anything else is rejected at session build.
+    pub protocol: u32,
     /// Emit one stderr progress line per finished chunk while streaming.
     pub progress: bool,
 }
@@ -172,6 +181,7 @@ impl Default for PredictOptions {
             seed: entropy.next_u64(),
             batch_rows: 0,
             max_inflight: 4,
+            protocol: SERVE_PROTOCOL_VERSION,
             progress: false,
         }
     }
@@ -191,6 +201,9 @@ struct HostCaps {
     max_inflight: u32,
     /// Delta-basis capacity (0 = wire suppression off for this host).
     delta_window: u32,
+    /// Delta-basis eviction policy this host negotiated (always
+    /// [`BasisEvict::Freeze`] when the session speaks v2).
+    basis_evict: BasisEvict,
 }
 
 /// What one [`PredictSession::predict_stream`] pass did: pipeline
@@ -233,10 +246,12 @@ pub struct PredictSession<'a> {
     /// Per-host mirror of the serving host's delta "seen" set:
     /// `(record id, handle) → routing bit` for every key that host has
     /// answered this session, bounded by the host-announced
-    /// `delta_window` and frozen when full — byte-for-byte the same
-    /// insertion rule the host runs, so elided answers in
-    /// `RouteAnswersDelta` frames resolve locally and bit-identically.
-    basis: Vec<HashMap<(u32, u32), bool>>,
+    /// `delta_window` and governed by the negotiated eviction policy
+    /// (frozen on v2 sessions, deterministic frame-order LRU when v3
+    /// negotiated `lru`) — byte-for-byte the same touch/insert rule the
+    /// host runs, so elided answers in `RouteAnswersDelta` frames
+    /// resolve locally and bit-identically.
+    basis: Vec<DeltaBasis>,
     /// Limits each host announced in its `SessionAccept` (empty until
     /// [`PredictSession::open`]; sessionless flows never fill it).
     host_caps: Vec<HostCaps>,
@@ -250,6 +265,11 @@ impl<'a> PredictSession<'a> {
     /// Create a session with a client-chosen nonzero id.
     pub fn new(model: &'a GuestModel, session_id: u32, opts: PredictOptions) -> Self {
         assert_ne!(session_id, SESSIONLESS_ID, "session id 0 is reserved for the legacy flow");
+        assert!(
+            opts.protocol == SERVE_PROTOCOL_VERSION || opts.protocol == SERVE_PROTOCOL_V2,
+            "this build speaks serve protocols {SERVE_PROTOCOL_V2} and {SERVE_PROTOCOL_VERSION}, not {}",
+            opts.protocol
+        );
         Self::build(model, session_id, opts)
     }
 
@@ -320,36 +340,55 @@ impl<'a> PredictSession<'a> {
         self.delta_elided
     }
 
-    /// Open the session: one `SessionHello` per host, each answered by a
+    /// Open the session: one `SessionHello` per host (announcing
+    /// [`PredictOptions::protocol`]), each answered by a
     /// `SessionAccept` echoing the id and announcing the host's
-    /// `max_inflight` / `delta_window` limits (recorded for streaming
-    /// and delta decoding). Panics on a rejected handshake — the guest
-    /// cannot proceed against a host that refused it.
+    /// `max_inflight` / `delta_window` limits plus the negotiated
+    /// protocol and delta-basis eviction policy (recorded for streaming
+    /// and delta decoding; a bare 12-byte accept from a v2 host
+    /// negotiates the session down to frozen-basis v2 semantics).
+    /// Panics on a rejected handshake — the guest cannot proceed
+    /// against a host that refused it.
     pub fn open(&mut self, links: &[Box<dyn GuestTransport>]) {
         for link in links {
             link.send(ToHost::SessionHello {
                 session_id: self.session_id,
-                protocol: SERVE_PROTOCOL_VERSION,
+                protocol: self.opts.protocol,
             });
         }
         self.host_caps.clear();
-        // a (re)opened session faces hosts with *fresh* per-session seen
-        // sets — the mirrored bases must restart empty too, or the first
-        // repeat key after a reconnect would desync the delta protocol
-        for basis in &mut self.basis {
-            basis.clear();
-        }
         for (p, link) in links.iter().enumerate() {
             let msg = link.recv();
-            let ToGuest::SessionAccept { session_id, max_inflight, delta_window } = msg else {
+            let ToGuest::SessionAccept {
+                session_id,
+                max_inflight,
+                delta_window,
+                protocol,
+                basis_evict,
+            } = msg
+            else {
                 panic!("host {p} rejected the session handshake")
             };
             assert_eq!(
                 session_id, self.session_id,
                 "host {p} accepted a different session id"
             );
-            self.host_caps.push(HostCaps { max_inflight, delta_window });
+            assert!(
+                protocol <= self.opts.protocol,
+                "host {p} answered protocol {protocol} to a v{} hello",
+                self.opts.protocol
+            );
+            self.host_caps.push(HostCaps { max_inflight, delta_window, basis_evict });
         }
+        // a (re)opened session faces hosts with *fresh* per-session seen
+        // sets — the mirrored bases must restart empty too (and under
+        // the freshly negotiated policy/capacity), or the first repeat
+        // key after a reconnect would desync the delta protocol
+        self.basis = self
+            .host_caps
+            .iter()
+            .map(|c| DeltaBasis::new(c.delta_window as usize, c.basis_evict))
+            .collect();
     }
 
     /// Probe every host of an idle session (`KeepAlive` → `Ack`).
@@ -749,12 +788,15 @@ impl<'a> PredictSession<'a> {
                     Some(SplitRef::Host { party, handle }) => {
                         // chunk memo first, then the session's delta
                         // basis — a decision this session already holds
-                        // never crosses the wire again
+                        // never crosses the wire again. The basis probe
+                        // must be the NON-MUTATING peek: the host never
+                        // sees suppressed queries, so refreshing LRU
+                        // recency here would desynchronize the mirrors.
                         let key = (*party, c.row, *handle);
                         let hit = st.memo.get(&key).copied().or_else(|| {
                             self.basis
                                 .get(*party as usize)
-                                .and_then(|b| b.get(&(c.row, *handle)).copied())
+                                .and_then(|b| b.peek(&(c.row, *handle)))
                         });
                         match hit {
                             Some(left) => {
@@ -915,13 +957,12 @@ impl<'a> PredictSession<'a> {
                     (0..queries.len()).map(|q| bits[q / 8] & (1 << (q % 8)) != 0).collect();
                 if dw > 0 {
                     // a plain frame on a delta session means the host
-                    // found nothing to elide and inserted every fresh
-                    // key — mirror that
+                    // found every key fresh and inserted it — mirror
+                    // the identical touch-else-insert sequence (under
+                    // LRU that includes the same evictions)
                     let basis = &mut self.basis[p];
                     for (q, key) in queries.iter().enumerate() {
-                        if !basis.contains_key(key) && basis.len() < dw {
-                            basis.insert(*key, out[q]);
-                        }
+                        basis.observe(*key, out[q]);
                     }
                 }
                 out
@@ -944,7 +985,12 @@ impl<'a> PredictSession<'a> {
                 let mut known = 0usize;
                 let basis = &mut self.basis[p];
                 for key in queries {
-                    match basis.get(key).copied() {
+                    // the host's scan ran touch-else-insert over these
+                    // same keys in this same order; running the
+                    // identical sequence here keeps the two bases
+                    // key-for-key (and, under LRU, eviction-for-
+                    // eviction) in sync
+                    match basis.touch(key) {
                         Some(b) => {
                             known += 1;
                             out.push(b);
@@ -957,9 +1003,7 @@ impl<'a> PredictSession<'a> {
                             );
                             let b = bits[fresh / 8] & (1 << (fresh % 8)) != 0;
                             fresh += 1;
-                            if basis.len() < dw {
-                                basis.insert(*key, b);
-                            }
+                            basis.insert(*key, b);
                             out.push(b);
                         }
                     }
@@ -975,10 +1019,12 @@ impl<'a> PredictSession<'a> {
         }
     }
 
-    /// Size the per-host delta-basis table to the connected link count.
+    /// Size the per-host delta-basis table to the connected link count
+    /// (sessionless links get an inert basis — no handshake announced a
+    /// window, so wire suppression stays off).
     fn ensure_basis(&mut self, n_links: usize) {
         if self.basis.len() < n_links {
-            self.basis.resize_with(n_links, HashMap::new);
+            self.basis.resize_with(n_links, DeltaBasis::off);
         }
     }
 }

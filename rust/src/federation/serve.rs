@@ -10,9 +10,14 @@
 //! - [`HostServeState`] — the shared, load-once, immutable model share
 //!   and feature slice plus the [`RoutingCache`] and service counters;
 //!   one instance serves every session of a server's lifetime;
-//! - [`serve_session`] — the per-session state machine
-//!   (`SessionHello → SessionAccept`, `PredictRoute → RouteAnswers`,
-//!   `KeepAlive → Ack`, `SessionClose`), transport-agnostic;
+//! - [`serve_session`] — the per-session engine (`SessionHello →
+//!   SessionAccept`, `PredictRoute → RouteAnswers`, `KeepAlive → Ack`,
+//!   `SessionClose`), transport-agnostic and run as a **2-stage
+//!   pipeline**: a decode thread (Stage A) reads frame `k+1` off the
+//!   transport while the compute stage (Stage B) answers frame `k`,
+//!   joined by a bounded SPSC ring — host CPU overlaps socket I/O the
+//!   same way the pipelined guest overlaps encode with RTT, and
+//!   answers still leave in frame order;
 //! - [`serve_predict_loop`] — the framed-TCP accept loop behind
 //!   `sbp serve-predict`: thread-per-session off accepted connections,
 //!   bounded per-session batches, graceful shutdown.
@@ -47,21 +52,26 @@
 //! On top of the CPU-saving routing cache, handshaked sessions run the
 //! **delta protocol** ([`ToGuest::RouteAnswersDelta`]): the host tracks
 //! which `(record, handle)` keys it already answered this session (a
-//! bounded, freeze-on-full set of [`ServeConfig::delta_window`]
-//! entries) and elides repeat answers from the wire; the guest mirrors
-//! the set ([`super::predict::PredictSession`]'s delta basis) and
-//! reconstructs the full bitmap bit-identically. Unlike the routing
-//! cache — which is wire-invisible — this layer makes repeat traffic
-//! cheaper *on the wire*, per session, with bounded memory at both
-//! ends.
+//! bounded [`super::delta::DeltaBasis`] of
+//! [`ServeConfig::delta_window`] entries, full-set behavior negotiated
+//! as [`ServeConfig::basis_evict`] — v2 peers always freeze,
+//! v3 sessions may run the deterministic frame-order LRU) and elides
+//! repeat answers from the wire; the guest mirrors the set
+//! ([`super::predict::PredictSession`]'s delta basis) and reconstructs
+//! the full bitmap bit-identically. Unlike the routing cache — which is
+//! wire-invisible — this layer makes repeat traffic cheaper *on the
+//! wire*, per session, with bounded memory at both ends.
 
-use super::message::{ToGuest, ToHost, SERVE_PROTOCOL_VERSION, SESSIONLESS_ID};
+use super::delta::DeltaBasis;
+use super::message::{
+    BasisEvict, ToGuest, ToHost, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_VERSION, SESSIONLESS_ID,
+};
 use super::transport::{HostTransport, NetSnapshot};
 use crate::data::dataset::PartySlice;
 use crate::tree::predict::HostModel;
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Sentinel index for the intrusive LRU list.
@@ -283,10 +293,20 @@ pub struct ServeConfig {
     /// Capacity (entries) of the per-session **delta basis** for
     /// cache-aware wire suppression, 0 = off. Handshaked sessions track
     /// which `(record, handle)` keys they have already answered and
-    /// elide repeat answers via [`ToGuest::RouteAnswersDelta`]; the set
-    /// freezes when full so both ends stay in lockstep at bounded
-    /// memory. Hello-less legacy sessions never use deltas.
+    /// elide repeat answers via [`ToGuest::RouteAnswersDelta`]; what a
+    /// *full* basis does is governed by [`ServeConfig::basis_evict`].
+    /// Hello-less legacy sessions never use deltas.
     pub delta_window: usize,
+    /// Eviction policy of a full delta basis, announced to v3 clients
+    /// in the `SessionAccept` handshake and mirrored by them. Sessions
+    /// negotiated down to v2 always run [`BasisEvict::Freeze`],
+    /// whatever this says — a v2 peer has no LRU to mirror.
+    pub basis_evict: BasisEvict,
+    /// **Test/bench knob, not a serving option:** artificial per-batch
+    /// latency injected into the compute stage (Stage B) before it
+    /// answers a `PredictRoute`, to make the decode stage's ring
+    /// backpressure observable. `None` in any real deployment.
+    pub stage_b_delay: Option<std::time::Duration>,
 }
 
 impl Default for ServeConfig {
@@ -296,6 +316,8 @@ impl Default for ServeConfig {
             max_batch_queries: 1 << 22,
             max_inflight: 8,
             delta_window: 1 << 16,
+            basis_evict: BasisEvict::Lru,
+            stage_b_delay: None,
         }
     }
 }
@@ -313,6 +335,8 @@ pub struct HostServeState {
     sessions_served: AtomicU64,
     queries_answered: AtomicU64,
     answers_elided: AtomicU64,
+    ring_high_water: AtomicUsize,
+    decode_stall_nanos: AtomicU64,
 }
 
 impl HostServeState {
@@ -328,6 +352,8 @@ impl HostServeState {
             sessions_served: AtomicU64::new(0),
             queries_answered: AtomicU64::new(0),
             answers_elided: AtomicU64::new(0),
+            ring_high_water: AtomicUsize::new(0),
+            decode_stall_nanos: AtomicU64::new(0),
         })
     }
 
@@ -352,6 +378,19 @@ impl HostServeState {
     /// the host because the guest's mirrored basis already held them.
     pub fn answers_elided(&self) -> u64 {
         self.answers_elided.load(Ordering::Relaxed)
+    }
+
+    /// Highest decode-ring occupancy any session's pipeline reached
+    /// (frames decoded by Stage A but not yet answered by Stage B).
+    pub fn ring_high_water(&self) -> usize {
+        self.ring_high_water.load(Ordering::Relaxed)
+    }
+
+    /// Total seconds decode stages spent blocked on a full ring — the
+    /// serving side's backpressure stall, the dual of the guest's
+    /// `StreamReport::stall_seconds`.
+    pub fn decode_stall_seconds(&self) -> f64 {
+        self.decode_stall_nanos.load(Ordering::Relaxed) as f64 * 1e-9
     }
 
     /// Ask the serve loop to stop accepting new sessions.
@@ -438,37 +477,33 @@ impl HostServeState {
     }
 
     /// [`Self::answer`] with **cache-aware wire suppression**: queries
-    /// whose `(record, handle)` key was already answered earlier in this
-    /// session (tracked in the caller's per-session `seen` set, capacity
-    /// `cap`) are elided — only the fresh queries' bits are packed and
-    /// returned as `(n_known, fresh_bits)`. The membership pass mirrors
-    /// the guest's delta-basis rule exactly (check, then freeze-on-full
-    /// insert, in query order; a within-batch duplicate counts its first
-    /// occurrence fresh and later ones known), so the guest reconstructs
-    /// the full bitmap bit-identically from its mirrored basis. Returns
-    /// `None` on an out-of-range query, like [`Self::answer`].
+    /// whose `(record, handle)` key sits in the session's [`DeltaBasis`]
+    /// are elided — only the fresh queries' bits are packed and
+    /// returned as `(n_known, fresh_bits)`. The membership pass applies
+    /// the exact frame-order rule the guest's mirrored basis runs
+    /// (touch, then insert on a miss, in query order — so a within-batch
+    /// duplicate counts its first occurrence fresh and later ones known,
+    /// and under LRU both ends refresh and evict the same keys at the
+    /// same step), so the guest reconstructs the full bitmap
+    /// bit-identically. The host stores placeholder bits in its basis
+    /// (membership and recency are all it needs — answers are
+    /// recomputed through the routing cache). Returns `None` on an
+    /// out-of-range query, like [`Self::answer`].
     fn answer_delta(
         &self,
         queries: &[(u32, u32)],
-        seen: &mut HashSet<(u32, u32)>,
-        cap: usize,
+        basis: &mut DeltaBasis,
     ) -> Option<(u32, Vec<u8>)> {
         if !self.queries_in_range(queries) {
             return None;
         }
-        // single membership pass: the insert must happen *during* the
-        // scan (a within-batch duplicate's second occurrence is known
-        // only because its first was just inserted), which is also
-        // exactly the rule the guest's mirrored basis runs
         let mut fresh: Vec<(u32, u32)> = Vec::with_capacity(queries.len());
         let mut n_known = 0u32;
         for &key in queries {
-            if seen.contains(&key) {
+            if basis.touch(&key).is_some() {
                 n_known += 1;
             } else {
-                if seen.len() < cap {
-                    seen.insert(key);
-                }
+                basis.insert(key, false);
                 fresh.push(key);
             }
         }
@@ -500,6 +535,26 @@ pub struct SessionOutcome {
     pub clean_close: bool,
     /// Wall time from first frame awaited to session end.
     pub wall_seconds: f64,
+    /// Serve-protocol version the session negotiated (3, or 2 for a
+    /// legacy peer; 0 for a hello-less sessionless connection).
+    pub protocol: u32,
+    /// Delta-basis eviction policy the session ran
+    /// ([`BasisEvict::Freeze`] for v2 and hello-less sessions).
+    pub basis_evict: BasisEvict,
+    /// Highest occupancy the session's decode ring reached: frames
+    /// Stage A had read and decoded that Stage B had not yet consumed.
+    /// Bounded by [`ServeConfig::max_inflight`] — the pipeline's
+    /// per-session memory is O(this) decoded frames.
+    pub ring_high_water: usize,
+    /// Seconds Stage A spent blocked pushing into a full ring — the
+    /// host-side pipeline's backpressure stall: nonzero means decode
+    /// outran compute and was throttled instead of buffering without
+    /// bound.
+    pub decode_stall_seconds: f64,
+    /// Seconds Stage B spent waiting on an empty ring — compute idling
+    /// on socket I/O. A busy pipeline should keep this near the
+    /// session's natural think time between batches.
+    pub compute_idle_seconds: f64,
 }
 
 impl SessionOutcome {
@@ -515,34 +570,119 @@ impl SessionOutcome {
 }
 
 /// Serve one guest session over `link` until it closes: the per-session
-/// state machine of the long-lived inference service. Transport-agnostic
-/// — `sbp serve-predict` runs it over framed TCP, tests run it over
-/// in-memory links.
+/// engine of the long-lived inference service, run as a **2-stage
+/// pipeline**. Transport-agnostic — `sbp serve-predict` runs it over
+/// framed TCP, tests run it over in-memory links.
+///
+/// **Stage A** (a per-session decode thread) reads and decodes frame
+/// `k+1` from the transport while **Stage B** (the calling thread — the
+/// compute stage) runs `route_bits`/cache/delta for frame `k`; the two
+/// are joined by a bounded SPSC ring of [`ServeConfig::max_inflight`]
+/// decoded frames, so per-session memory stays O(`max_inflight`)
+/// batches and the host's CPU overlaps its socket I/O exactly the way
+/// the pipelined guest overlaps encode with RTT. Stage B is the
+/// **only** sender and consumes the ring FIFO, so answers still leave
+/// in frame order — the ordering contract every guest relies on. When
+/// compute falls behind, Stage A blocks on the full ring (counted as
+/// [`SessionOutcome::decode_stall_seconds`]) and stops reading the
+/// transport — the same socket-level backpressure the unpipelined host
+/// applied.
 ///
 /// Protocol: an optional `SessionHello` (answered with `SessionAccept`)
-/// fixes the session id; every subsequent `PredictRoute` must carry that
-/// id. A hello-less session is the legacy single-shot flow and runs
-/// under [`SESSIONLESS_ID`]. Any protocol violation — double hello,
-/// wrong session id, oversized batch, a training-phase message — closes
-/// the session (never the whole server) rather than answering wrong.
-pub fn serve_session<T: HostTransport>(state: &HostServeState, link: T) -> SessionOutcome {
+/// fixes the session id and negotiates the serve-protocol version — a
+/// v3 hello gets the extended accept announcing the [`BasisEvict`]
+/// policy, a v2 hello is negotiated down (12-byte accept, frozen
+/// basis). Every subsequent `PredictRoute` must carry that id. A
+/// hello-less session is the legacy single-shot flow and runs under
+/// [`SESSIONLESS_ID`]. Any protocol violation — double hello, wrong
+/// session id, oversized batch, a training-phase message — closes the
+/// session (never the whole server) rather than answering wrong.
+pub fn serve_session<T: HostTransport + Send + Sync + 'static>(
+    state: &HostServeState,
+    link: T,
+) -> SessionOutcome {
     let t0 = std::time::Instant::now();
+    let link = Arc::new(link);
+    let ring_cap = state.cfg.max_inflight.max(1) as usize;
+    // the SPSC ring joining the stages. The channel holds ring_cap − 1
+    // frames and Stage A holds one more in hand (a rendezvous channel
+    // when ring_cap is 1), so decoded-but-unanswered frames in host
+    // memory never exceed ring_cap = max_inflight. `ring_depth` counts
+    // exactly those frames: incremented by Stage A *before* the send
+    // (so the matching decrement can never land first and underflow),
+    // decremented by Stage B after the recv.
+    let (ring_tx, ring_rx) = std::sync::mpsc::sync_channel::<ToHost>(ring_cap - 1);
+    let ring_depth = Arc::new(AtomicUsize::new(0));
+    let ring_high = Arc::new(AtomicUsize::new(0));
+    let decode_stall_nanos = Arc::new(AtomicU64::new(0));
+
+    // ---- Stage A: the socket/decode thread. Owns the transport's
+    // receive direction; detached because it may sit blocked in a
+    // transport read after Stage B has already ended the session —
+    // Stage B then shuts the receive direction down (TCP), or the
+    // guest's link drop ends it (in-memory), and the thread exits on
+    // its own.
+    {
+        let link = Arc::clone(&link);
+        let depth = Arc::clone(&ring_depth);
+        let high = Arc::clone(&ring_high);
+        let stall = Arc::clone(&decode_stall_nanos);
+        std::thread::Builder::new()
+            .name("sbp-serve-decode".into())
+            .spawn(move || {
+                while let Some(msg) = link.recv() {
+                    // `d` may transiently read ring_cap+1: a blocked
+                    // send completes the moment Stage B pops a frame,
+                    // and B's matching fetch_sub can land after A's
+                    // next fetch_add. In that window the popped frame
+                    // is no longer *awaiting* compute, so the true
+                    // awaiting count is ≤ ring_cap — clamp what the
+                    // high-water records to keep the metric honest.
+                    let d = depth.fetch_add(1, Ordering::SeqCst) + 1;
+                    high.fetch_max(d.min(ring_cap), Ordering::Relaxed);
+                    // a send at full depth blocks until compute drains a
+                    // slot; time that block — it is the pipeline's
+                    // backpressure stall
+                    let wait0 = (d >= ring_cap).then(std::time::Instant::now);
+                    if ring_tx.send(msg).is_err() {
+                        break; // Stage B ended the session
+                    }
+                    if let Some(w) = wait0 {
+                        stall.fetch_add(w.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    }
+                }
+                // dropping ring_tx is Stage B's end-of-stream signal
+            })
+            .expect("spawn serve decode thread");
+    }
+
+    // ---- Stage B: the compute stage — the session state machine.
     let mut session_id = SESSIONLESS_ID;
     let mut hello_seen = false;
+    let mut negotiated = 0u32;
     let mut queries = 0u64;
     let mut batches = 0u64;
     let mut keep_alives = 0u64;
     let mut answers_elided = 0u64;
     let mut clean_close = false;
+    let mut compute_idle = std::time::Duration::ZERO;
     // per-session delta basis: (record, handle) keys already answered —
     // only handshaked sessions use it (hello-less legacy clients cannot
-    // decode RouteAnswersDelta frames). The capacity is clamped to what
-    // the u32 `SessionAccept` announcement can carry: the enforced cap
-    // and the announced cap must be the same number, or the two ends'
-    // freeze-on-full rules diverge and the delta protocol desyncs.
+    // decode RouteAnswersDelta frames), so it starts inert and is built
+    // at the hello under the negotiated eviction policy. The capacity
+    // is clamped to what the u32 `SessionAccept` announcement can
+    // carry: the enforced cap and the announced cap must be the same
+    // number, or the two ends' insertion rules diverge and the delta
+    // protocol desyncs.
     let cfg_delta = state.cfg.delta_window.min(u32::MAX as usize);
-    let mut seen: HashSet<(u32, u32)> = HashSet::new();
-    while let Some(msg) = link.recv() {
+    let mut basis = DeltaBasis::off();
+    loop {
+        let idle0 = std::time::Instant::now();
+        let Ok(msg) = ring_rx.recv() else {
+            break; // transport closed: Stage A dropped its ring end
+        };
+        compute_idle += idle0.elapsed();
+        ring_depth.fetch_sub(1, Ordering::SeqCst);
         match msg {
             ToHost::SessionHello { session_id: sid, protocol } => {
                 if hello_seen {
@@ -551,24 +691,49 @@ pub fn serve_session<T: HostTransport>(state: &HostServeState, link: T) -> Sessi
                 }
                 // the codec already rejects other versions; keep the
                 // check so in-memory links get the same contract
-                if protocol != SERVE_PROTOCOL_VERSION || sid == SESSIONLESS_ID {
+                if (protocol != SERVE_PROTOCOL_VERSION && protocol != SERVE_PROTOCOL_V2)
+                    || sid == SESSIONLESS_ID
+                {
                     eprintln!("[sbp-serve] malformed SessionHello, closing");
                     break;
                 }
                 hello_seen = true;
                 session_id = sid;
+                // negotiate down for legacy peers: a v2 session runs a
+                // frozen basis and receives the bare 12-byte accept
+                // (the codec elides the v3 extension when the
+                // negotiated version says so)
+                negotiated = protocol.min(SERVE_PROTOCOL_VERSION);
+                let evict = if negotiated >= SERVE_PROTOCOL_VERSION {
+                    state.cfg.basis_evict
+                } else {
+                    BasisEvict::Freeze
+                };
+                basis = DeltaBasis::new(cfg_delta, evict);
                 link.send(ToGuest::SessionAccept {
                     session_id: sid,
                     max_inflight: state.cfg.max_inflight,
                     delta_window: cfg_delta as u32,
+                    protocol: negotiated,
+                    basis_evict: evict,
                 });
             }
             ToHost::PredictRoute { session, chunk, queries: q } => {
                 if session != session_id {
-                    eprintln!(
-                        "[sbp-serve] PredictRoute for session {session} on session {session_id}, closing"
-                    );
-                    break;
+                    // a hello-less client may still tag its frames with
+                    // a session id of its choosing (a `PredictSession`
+                    // that never called `open()`): the first batch
+                    // fixes the id for attribution. Handshake-gated
+                    // features (delta suppression, shutdown authority)
+                    // stay off, and mixing ids afterwards still closes.
+                    if !hello_seen && batches == 0 {
+                        session_id = session;
+                    } else {
+                        eprintln!(
+                            "[sbp-serve] PredictRoute for session {session} on session {session_id}, closing"
+                        );
+                        break;
+                    }
                 }
                 if q.len() > state.cfg.max_batch_queries {
                     eprintln!(
@@ -578,10 +743,11 @@ pub fn serve_session<T: HostTransport>(state: &HostServeState, link: T) -> Sessi
                     );
                     break;
                 }
-                let delta_cap = if hello_seen { cfg_delta } else { 0 };
-                if delta_cap > 0 {
-                    let Some((n_known, bits)) = state.answer_delta(&q, &mut seen, delta_cap)
-                    else {
+                if let Some(delay) = state.cfg.stage_b_delay {
+                    std::thread::sleep(delay); // test/bench knob only
+                }
+                if basis.capacity() > 0 {
+                    let Some((n_known, bits)) = state.answer_delta(&q, &mut basis) else {
                         eprintln!(
                             "[sbp-serve] session {session_id} queried records/handles this \
                              host does not have (misaligned data?), closing"
@@ -655,6 +821,10 @@ pub fn serve_session<T: HostTransport>(state: &HostServeState, link: T) -> Sessi
             }
         }
     }
+    // end the receive direction so a Stage-A thread still blocked in a
+    // transport read exits promptly (answers already sent precede the
+    // FIN — write_frame flushes per frame)
+    link.shutdown();
     let outcome = SessionOutcome {
         session_id,
         queries,
@@ -663,7 +833,16 @@ pub fn serve_session<T: HostTransport>(state: &HostServeState, link: T) -> Sessi
         answers_elided,
         clean_close,
         wall_seconds: t0.elapsed().as_secs_f64(),
+        protocol: negotiated,
+        basis_evict: basis.mode(),
+        ring_high_water: ring_high.load(Ordering::Relaxed),
+        decode_stall_seconds: decode_stall_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        compute_idle_seconds: compute_idle.as_secs_f64(),
     };
+    state.ring_high_water.fetch_max(outcome.ring_high_water, Ordering::Relaxed);
+    state
+        .decode_stall_nanos
+        .fetch_add(decode_stall_nanos.load(Ordering::Relaxed), Ordering::Relaxed);
     if !outcome.is_control_only() {
         state.sessions_served.fetch_add(1, Ordering::Relaxed);
     }
@@ -672,7 +851,7 @@ pub fn serve_session<T: HostTransport>(state: &HostServeState, link: T) -> Sessi
 
 /// Spawn an in-process serving session thread over any owned host
 /// transport (the in-memory analogue of one accepted TCP session).
-pub fn spawn_serve_session<T: HostTransport + Send + 'static>(
+pub fn spawn_serve_session<T: HostTransport + Send + Sync + 'static>(
     state: Arc<HostServeState>,
     link: T,
 ) -> std::thread::JoinHandle<SessionOutcome> {
@@ -888,13 +1067,21 @@ mod tests {
         let handle = spawn_serve_session(state.clone(), host);
 
         guest.send(ToHost::SessionHello { session_id: 7, protocol: SERVE_PROTOCOL_VERSION });
-        let ToGuest::SessionAccept { session_id, max_inflight, delta_window } = guest.recv()
+        let ToGuest::SessionAccept {
+            session_id,
+            max_inflight,
+            delta_window,
+            protocol,
+            basis_evict,
+        } = guest.recv()
         else {
             panic!("expected SessionAccept")
         };
         assert_eq!(session_id, 7);
         assert_eq!(max_inflight, 8);
         assert_eq!(delta_window, 1 << 16);
+        assert_eq!(protocol, SERVE_PROTOCOL_VERSION);
+        assert_eq!(basis_evict, BasisEvict::Lru, "v3 default negotiates the LRU basis");
 
         guest.send(ToHost::KeepAlive);
         assert!(matches!(guest.recv(), ToGuest::Ack));
@@ -933,6 +1120,13 @@ mod tests {
         assert_eq!(outcome.batches, 2);
         assert_eq!(outcome.keep_alives, 1);
         assert_eq!(outcome.answers_elided, 2);
+        assert_eq!(outcome.protocol, SERVE_PROTOCOL_VERSION);
+        assert_eq!(outcome.basis_evict, BasisEvict::Lru);
+        assert!(
+            outcome.ring_high_water >= 1 && outcome.ring_high_water <= 8,
+            "decode ring occupancy bounded by max_inflight, got {}",
+            outcome.ring_high_water
+        );
         // the elided repeats never touched the cache: 2 misses, 0 hits
         let cs = state.cache_stats();
         assert_eq!(cs.hits, 0);
@@ -1014,6 +1208,127 @@ mod tests {
         let outcome = handle.join().expect("session thread");
         assert!(!outcome.clean_close);
         assert_eq!(outcome.batches, 0);
+    }
+
+    #[test]
+    fn helloless_tagged_frames_adopt_the_first_session_id() {
+        // a PredictSession that never opened a handshake still tags its
+        // frames; the first batch fixes the id, mixing ids afterwards
+        // closes the session, and handshake-gated features stay off
+        let state = toy_state(0);
+        let (guest, host) = link_pair_bounded(8, 1);
+        let handle = spawn_serve_session(state, host);
+        guest.send(ToHost::PredictRoute { session: 42, chunk: 0, queries: vec![(0, 0)] });
+        let ToGuest::RouteAnswers { session, n, bits, .. } = guest.recv() else {
+            panic!("expected RouteAnswers")
+        };
+        assert_eq!((session, n, bits), (42, 1, vec![1u8]), "adopted id echoed");
+        // same id again: served; a different id: closed
+        guest.send(ToHost::PredictRoute { session: 42, chunk: 1, queries: vec![(0, 1)] });
+        let ToGuest::RouteAnswers { .. } = guest.recv() else { panic!("expected answer") };
+        guest.send(ToHost::PredictRoute { session: 7, chunk: 2, queries: vec![(0, 0)] });
+        let outcome = handle.join().expect("session thread");
+        assert!(!outcome.clean_close, "mixing ids is still a protocol error");
+        assert_eq!(outcome.session_id, 42);
+        assert_eq!(outcome.batches, 2);
+        assert_eq!(outcome.protocol, 0, "no handshake, no negotiated protocol");
+        assert_eq!(outcome.answers_elided, 0, "delta stays off without a handshake");
+    }
+
+    #[test]
+    fn v2_hello_negotiated_down_to_frozen_basis() {
+        let state = toy_state(0);
+        let (guest, host) = link_pair_bounded(8, 1);
+        let handle = spawn_serve_session(state, host);
+        guest.send(ToHost::SessionHello { session_id: 4, protocol: SERVE_PROTOCOL_V2 });
+        let ToGuest::SessionAccept { session_id, protocol, basis_evict, .. } = guest.recv()
+        else {
+            panic!("expected SessionAccept")
+        };
+        assert_eq!(session_id, 4);
+        assert_eq!(protocol, SERVE_PROTOCOL_V2, "host negotiates the session down");
+        assert_eq!(basis_evict, BasisEvict::Freeze, "v2 sessions always freeze");
+        guest.send(ToHost::SessionClose { session_id: 4 });
+        let outcome = handle.join().expect("session thread");
+        assert!(outcome.clean_close);
+        assert_eq!(outcome.protocol, SERVE_PROTOCOL_V2);
+        assert_eq!(outcome.basis_evict, BasisEvict::Freeze);
+    }
+
+    #[test]
+    fn lru_basis_keeps_eliding_past_the_window_where_freeze_stops() {
+        // working set of 3 keys through a 2-entry basis: the frozen
+        // basis never admits the third key, so its repeats are re-sent
+        // forever; the LRU basis rotates and elides the whole repeat
+        // batch. Answer *bits* are identical either way — eviction only
+        // moves answers between the wire and the mirrored basis.
+        let run = |evict: BasisEvict| {
+            let model = HostModel { party: 0, splits: vec![(0, 0, 1.0), (1, 2, -1.0)] };
+            let slice = PartySlice {
+                cols: vec![0, 1],
+                x: vec![0.5, 0.0, 2.0, -2.0, 0.5, 5.0, 2.0, -1.5],
+                n: 4,
+            };
+            let state = HostServeState::new(
+                model,
+                slice,
+                ServeConfig {
+                    cache_capacity: 0,
+                    delta_window: 2,
+                    basis_evict: evict,
+                    ..ServeConfig::default()
+                },
+            );
+            let (guest, host) = link_pair_bounded(8, 1);
+            let handle = spawn_serve_session(state, host);
+            guest.send(ToHost::SessionHello { session_id: 6, protocol: SERVE_PROTOCOL_VERSION });
+            let ToGuest::SessionAccept { basis_evict, .. } = guest.recv() else {
+                panic!("expected accept")
+            };
+            assert_eq!(basis_evict, evict);
+            let mut frames = Vec::new();
+            for (chunk, batch) in
+                [vec![(0, 0), (1, 0)], vec![(2, 0), (0, 0)], vec![(2, 0), (0, 0)]]
+                    .into_iter()
+                    .enumerate()
+            {
+                guest.send(ToHost::PredictRoute {
+                    session: 6,
+                    chunk: chunk as u32,
+                    queries: batch,
+                });
+                frames.push(guest.recv());
+            }
+            guest.send(ToHost::SessionClose { session_id: 6 });
+            let outcome = handle.join().expect("session thread");
+            (frames, outcome)
+        };
+
+        let (lru, lru_outcome) = run(BasisEvict::Lru);
+        // batch 1: both fresh. batch 2: (0,0) was the LRU victim of
+        // (2,0)'s insert, so both re-travel. batch 3: both keys are now
+        // the two resident ones — fully elided.
+        assert!(matches!(&lru[0], ToGuest::RouteAnswers { bits, .. } if bits[..] == [0b01]));
+        assert!(matches!(&lru[1], ToGuest::RouteAnswers { bits, .. } if bits[..] == [0b11]));
+        let ToGuest::RouteAnswersDelta { n, n_known, bits, .. } = &lru[2] else {
+            panic!("lru batch 3 must be fully elided, got {:?}", lru[2].kind())
+        };
+        assert_eq!((*n, *n_known), (2, 2));
+        assert!(bits.is_empty());
+        assert_eq!(lru_outcome.answers_elided, 2);
+
+        let (frz, frz_outcome) = run(BasisEvict::Freeze);
+        // the frozen basis holds {(0,0),(1,0)} forever: (2,0) re-pays
+        // its bit in every batch, (0,0) is elided in batches 2 and 3
+        assert!(matches!(&frz[0], ToGuest::RouteAnswers { bits, .. } if bits[..] == [0b01]));
+        for f in &frz[1..] {
+            let ToGuest::RouteAnswersDelta { n, n_known, bits, .. } = f else {
+                panic!("freeze repeats must be partial deltas, got {:?}", f.kind())
+            };
+            assert_eq!((*n, *n_known), (2, 1));
+            assert_eq!(bits[..], [0b1], "(2,0)'s bit travels again");
+        }
+        assert_eq!(frz_outcome.answers_elided, 2);
     }
 
     #[test]

@@ -14,8 +14,11 @@
 //! record the actual framed byte counts, which equal the in-memory
 //! transport's accounting byte-for-byte (`codec::*_wire_len` are exact).
 //!
-//! Concurrency: one socket per guest↔host pair, driven by one thread
-//! per endpoint, so a `Mutex` over the connection state suffices.
+//! Concurrency: one socket per guest↔host pair. The guest endpoint is
+//! driven by one thread, so a single `Mutex` over its connection state
+//! suffices; the host endpoint serves the 2-stage pipelined session
+//! engine — one thread reading, another writing — so its two
+//! directions live behind separate locks over cloned socket handles.
 //! Training is strictly request/response; the pipelined serving path
 //! keeps up to `max_inflight` request frames on the wire per session
 //! (the host still answers them strictly in arrival order). The
@@ -123,8 +126,20 @@ impl GuestTransport for TcpGuestTransport {
 /// Host-side endpoint. The cipher suite is unknown until the guest's
 /// `Setup` frame arrives; it is captured then and used for every
 /// subsequent ciphertext-bearing frame in both directions.
+///
+/// Unlike the guest endpoint, the two directions live behind **separate
+/// locks** over cloned handles of one socket: the pipelined serving
+/// engine reads frames on its decode thread while the compute thread
+/// writes answers, so a receive blocked waiting for the guest's next
+/// frame must never hold up an outgoing answer (one shared lock here
+/// would wedge a lockstep session outright).
 pub struct TcpHostTransport {
-    io: Mutex<ConnIo>,
+    rd: Mutex<ConnIo>,
+    wr: Mutex<ConnIo>,
+    /// Unlocked handle for [`HostTransport::shutdown`]: aborting a read
+    /// blocked inside the `rd` lock requires a path that does not take
+    /// that lock.
+    ctl: TcpStream,
     suite: Mutex<Option<(CipherSuite, usize)>>,
     counters: Arc<NetCounters>,
 }
@@ -132,8 +147,12 @@ pub struct TcpHostTransport {
 impl TcpHostTransport {
     /// Wrap an accepted guest connection.
     pub fn new(stream: TcpStream) -> Self {
+        let rd = stream.try_clone().expect("clone tcp stream for the read half");
+        let ctl = stream.try_clone().expect("clone tcp stream for shutdown");
         TcpHostTransport {
-            io: Mutex::new(ConnIo::new(stream)),
+            rd: Mutex::new(ConnIo::new(rd)),
+            wr: Mutex::new(ConnIo::new(stream)),
+            ctl,
             suite: Mutex::new(None),
             counters: Arc::new(NetCounters::default()),
         }
@@ -147,7 +166,7 @@ impl TcpHostTransport {
 
 impl HostTransport for TcpHostTransport {
     fn recv(&self) -> Option<ToHost> {
-        let mut io = self.io.lock().expect("tcp stream poisoned");
+        let mut io = self.rd.lock().expect("tcp stream poisoned");
         let ConnIo { stream, rbuf, .. } = &mut *io;
         match codec::read_frame_into(stream, rbuf) {
             Ok(true) => {}
@@ -187,12 +206,19 @@ impl HostTransport for TcpHostTransport {
                 (s, l)
             },
         );
-        let mut io = self.io.lock().expect("tcp stream poisoned");
+        let mut io = self.wr.lock().expect("tcp stream poisoned");
         let ConnIo { stream, wbuf, .. } = &mut *io;
         codec::encode_to_guest_into(&suite, ct_len, &msg, wbuf);
         self.counters
             .record_to_guest(msg.kind(), (wbuf.len() + codec::FRAME_HEADER_LEN) as u64);
         codec::write_frame(stream, wbuf).expect("tcp send to guest failed");
+    }
+
+    fn shutdown(&self) {
+        // flushed answers are already in the kernel buffer and precede
+        // the FIN; this only aborts a decode-stage read still blocked
+        // after the session ended
+        let _ = self.ctl.shutdown(std::net::Shutdown::Both);
     }
 }
 

@@ -26,7 +26,7 @@ use super::message::{
 };
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Guest-side handle to one host party: send [`ToHost`], receive
 /// [`ToGuest`]. Implementations record exact wire sizes in their
@@ -42,11 +42,24 @@ pub trait GuestTransport {
 
 /// Host-side endpoint: receive [`ToHost`] (None on shutdown/close), send
 /// [`ToGuest`].
+///
+/// The pipelined serving engine ([`crate::federation::serve`]) drives
+/// `recv` and `send` from **two different threads** of one session (the
+/// decode stage reads while the compute stage answers), so
+/// implementations must not serialize the two directions behind one
+/// lock — a receive blocked waiting for the guest's next frame must
+/// never stop an answer from going out.
 pub trait HostTransport {
     /// Block for the guest's next message; `None` on shutdown/close.
     fn recv(&self) -> Option<ToHost>;
     /// Send one message to the guest (recording its exact wire size).
     fn send(&self, msg: ToGuest);
+    /// Force the receive direction closed so a reader blocked in
+    /// [`HostTransport::recv`] unblocks promptly (best-effort; the
+    /// in-memory links rely on the guest end dropping instead). The
+    /// serving engine calls this when the compute stage ends a session
+    /// while the decode stage may still be mid-read.
+    fn shutdown(&self) {}
 }
 
 /// Cumulative traffic counters (shared guest-side and host-side), overall
@@ -268,12 +281,15 @@ pub struct GuestLink {
     pub ct_len: usize,
 }
 
-/// In-process host-side endpoint.
+/// In-process host-side endpoint. The channel halves sit behind
+/// mutexes so the link is `Sync` — the pipelined serving engine reads
+/// and writes it from two threads of one session (the locks are
+/// direction-local, so a blocked receive never delays a send).
 pub struct HostLink {
     /// Guest→host channel.
-    pub rx: Receiver<ToHost>,
+    rx: Mutex<Receiver<ToHost>>,
     /// Host→guest channel.
-    pub tx: Sender<ToGuest>,
+    tx: Mutex<Sender<ToGuest>>,
     /// Shared traffic counters (same object on both ends).
     pub counters: Arc<NetCounters>,
     /// Fixed serialized ciphertext width for size accounting.
@@ -287,7 +303,7 @@ pub fn link_pair(ct_len: usize) -> (GuestLink, HostLink) {
     let counters = Arc::new(NetCounters::default());
     (
         GuestLink { tx: g2h_tx, rx: h2g_rx, counters: counters.clone(), ct_len },
-        HostLink { rx: g2h_rx, tx: h2g_tx, counters, ct_len },
+        HostLink { rx: Mutex::new(g2h_rx), tx: Mutex::new(h2g_tx), counters, ct_len },
     )
 }
 
@@ -310,13 +326,13 @@ impl GuestTransport for GuestLink {
 
 impl HostTransport for HostLink {
     fn recv(&self) -> Option<ToHost> {
-        self.rx.recv().ok()
+        self.rx.lock().expect("host link poisoned").recv().ok()
     }
 
     fn send(&self, msg: ToGuest) {
         let size = codec::to_guest_wire_len(&msg, self.ct_len) as u64;
         self.counters.record_to_guest(msg.kind(), size);
-        let _ = self.tx.send(msg);
+        let _ = self.tx.lock().expect("host link poisoned").send(msg);
     }
 }
 
@@ -337,9 +353,11 @@ pub struct BoundedGuestLink {
 /// [`BoundedGuestLink`]). The host→guest direction stays unbounded: the
 /// round-structured protocol never has more than one reply in flight per
 /// outstanding request, so the request bound is the session bound.
+/// Direction-local mutexes make the link `Sync` for the pipelined
+/// serving engine, which reads and writes from two session threads.
 pub struct BoundedHostLink {
-    rx: Receiver<ToHost>,
-    tx: Sender<ToGuest>,
+    rx: Mutex<Receiver<ToHost>>,
+    tx: Mutex<Sender<ToGuest>>,
     counters: Arc<NetCounters>,
     ct_len: usize,
 }
@@ -360,7 +378,7 @@ pub fn link_pair_bounded(ct_len: usize, queue: usize) -> (BoundedGuestLink, Boun
     let counters = Arc::new(NetCounters::default());
     (
         BoundedGuestLink { tx: g2h_tx, rx: h2g_rx, counters: counters.clone(), ct_len },
-        BoundedHostLink { rx: g2h_rx, tx: h2g_tx, counters, ct_len },
+        BoundedHostLink { rx: Mutex::new(g2h_rx), tx: Mutex::new(h2g_tx), counters, ct_len },
     )
 }
 
@@ -383,13 +401,13 @@ impl GuestTransport for BoundedGuestLink {
 
 impl HostTransport for BoundedHostLink {
     fn recv(&self) -> Option<ToHost> {
-        self.rx.recv().ok()
+        self.rx.lock().expect("serving link poisoned").recv().ok()
     }
 
     fn send(&self, msg: ToGuest) {
         let size = codec::to_guest_wire_len(&msg, self.ct_len) as u64;
         self.counters.record_to_guest(msg.kind(), size);
-        let _ = self.tx.send(msg);
+        let _ = self.tx.lock().expect("serving link poisoned").send(msg);
     }
 }
 

@@ -145,8 +145,11 @@ fn main() {
                  \x20 --cache-capacity <n>   routing-cache entries (default 65536; 0 off)\n\
                  \x20 --delta-window <n>     per-session delta-basis entries for wire\n\
                  \x20                        suppression (default 65536; 0 off)\n\
+                 \x20 --basis-evict <m>      full-basis policy announced to v3 clients:\n\
+                 \x20                        lru (default) | freeze (v2 behavior)\n\
                  \x20 --max-inflight <n>     unanswered chunks tolerated per session\n\
-                 \x20                        (default 8), announced to clients\n\
+                 \x20                        (default 8), announced to clients; also the\n\
+                 \x20                        host's decode-ring depth (2-stage pipeline)\n\
                  \x20 --bind <ip> --port <p> listen address (default 127.0.0.1:7979)\n\
                  \n\
                  datagen options:\n\
@@ -362,6 +365,13 @@ fn cmd_save(args: &Args) {
     let report = train_federated(&vs, &cfg).expect("training failed");
     println!("{}", report.summary());
     let (guest_m, host_ms) = report.model();
+    // record each party's canonical column names (`f<global col>`, the
+    // header `sbp datagen --emit` writes) so `--data` scoring can
+    // validate CSV headers against the artifact instead of trusting
+    // column counts
+    let canonical_names = |slice: &sbp::data::dataset::PartySlice| -> Vec<String> {
+        slice.cols.iter().map(|c| format!("f{c}")).collect()
+    };
     let guest_art = GuestArtifact {
         model: guest_m,
         objective: Objective::for_classes(vs.n_classes),
@@ -371,6 +381,7 @@ fn cmd_save(args: &Args) {
         guest_features: vs.guest.d(),
         seed: cfg.seed,
         scale,
+        feature_names: Some(canonical_names(&vs.guest)),
     };
     let gpath = out_dir.join(guest_file_name());
     if let Err(e) = guest_art.save(&gpath) {
@@ -386,6 +397,7 @@ fn cmd_save(args: &Args) {
             n_hosts: vs.hosts.len(),
             seed: cfg.seed,
             scale,
+            feature_names: Some(canonical_names(&vs.hosts[p])),
         };
         let hpath = out_dir.join(host_file_name(p));
         if let Err(e) = art.save(&hpath) {
@@ -421,11 +433,18 @@ fn connect_addrs(connect: &str) -> Vec<String> {
 
 /// Load one party's rows from a `--data` CSV, applying the
 /// header-driven `--features` map (and excluding/extracting `label_col`
-/// when given). Exits with a message on any error.
+/// when given), and validating the selection against the feature names
+/// the artifact records (`recorded`). Precedence: an explicit
+/// `--features` list is used and must equal the recorded names; absent
+/// that, the recorded names themselves select the columns (order-robust
+/// against CSVs with shuffled or extra columns); a legacy count-only
+/// artifact falls back to all columns in file order minus the label.
+/// Exits with a message on any error.
 fn load_csv_party(
     args: &Args,
     data: &str,
     label_col: Option<&str>,
+    recorded: Option<&[String]>,
 ) -> (sbp::data::dataset::PartySlice, Option<Vec<f64>>) {
     let table = match sbp::data::csvio::CsvTable::load(Path::new(data)) {
         Ok(t) => t,
@@ -435,13 +454,39 @@ fn load_csv_party(
         }
     };
     let features = feature_map(args);
-    let slice = match table.party_slice(features.as_deref(), label_col) {
+    let selection: Option<Vec<String>> = match (&features, recorded) {
+        (Some(fs), _) => Some(fs.clone()),
+        (None, Some(names)) => {
+            // selecting by the artifact's own names: surface a missing
+            // column as the schema mismatch it is, not a lookup error
+            if names.iter().any(|n| table.column_index(n).is_none()) {
+                let e = sbp::model::ModelError::Schema {
+                    expected: names.to_vec(),
+                    found: table.headers.clone(),
+                };
+                eprintln!("{data}: {e}");
+                std::process::exit(2);
+            }
+            Some(names.to_vec())
+        }
+        (None, None) => None,
+    };
+    let slice = match table.party_slice(selection.as_deref(), label_col) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{data}: {e}");
             std::process::exit(2);
         }
     };
+    // the columns actually bound to model features must be exactly the
+    // recorded schema, element for element — a permutation would bind
+    // features to the wrong columns and score garbage without an error
+    let selected: Vec<String> =
+        slice.cols.iter().map(|&c| table.headers[c].clone()).collect();
+    if let Err(e) = sbp::model::check_feature_names(recorded, &selected) {
+        eprintln!("{data}: {e}");
+        std::process::exit(2);
+    }
     let labels = label_col.map(|col| match table.column(col) {
         Ok(y) => y,
         Err(e) => {
@@ -518,7 +563,8 @@ fn cmd_predict(args: &Args) {
 
     // ---- rows: arbitrary CSV (--data) or the regenerated preset ------
     let (guest_slice, labels, preset_vs) = if let Some(data) = args.get("data") {
-        let (slice, labels) = load_csv_party(args, data, args.get("label"));
+        let (slice, labels) =
+            load_csv_party(args, data, args.get("label"), guest_art.feature_names.as_deref());
         (slice, labels, None)
     } else {
         // defaults come from the artifact's recorded training
@@ -767,6 +813,11 @@ fn cmd_serve_predict(args: &Args) {
     let cache_capacity: usize = args.get_parse("cache-capacity", 1usize << 16);
     let delta_window: usize = args.get_parse("delta-window", 1usize << 16);
     let max_inflight: u32 = args.get_parse("max-inflight", 8u32);
+    let evict_arg = args.get_or("basis-evict", "lru");
+    let Some(basis_evict) = sbp::federation::message::BasisEvict::parse(&evict_arg) else {
+        eprintln!("--basis-evict takes 'lru' or 'freeze', got '{evict_arg}'");
+        std::process::exit(2);
+    };
 
     if host_id != art.model.party as usize {
         eprintln!(
@@ -777,7 +828,7 @@ fn cmd_serve_predict(args: &Args) {
         std::process::exit(2);
     }
     let slice = if let Some(data) = args.get("data") {
-        load_csv_party(args, data, None).0
+        load_csv_party(args, data, None, art.feature_names.as_deref()).0
     } else {
         // defaults come from the artifact's recorded training parameters
         let name = args.get_or("dataset", art.dataset.as_str());
@@ -822,6 +873,7 @@ fn cmd_serve_predict(args: &Args) {
         cache_capacity,
         delta_window,
         max_inflight: max_inflight.max(1),
+        basis_evict,
         ..sbp::federation::serve::ServeConfig::default()
     };
     match sbp::coordinator::serve_predict_tcp(&listener, art.model, slice, cfg, max_sessions) {
@@ -829,12 +881,15 @@ fn cmd_serve_predict(args: &Args) {
             for s in &report.sessions {
                 eprintln!(
                     "[sbp] session {} from {}: {} queries in {} batches, {} B, \
-                     {}{:.3}s",
+                     v{} basis {}, ring ≤{}, {}{:.3}s",
                     s.outcome.session_id,
                     s.peer,
                     s.outcome.queries,
                     s.outcome.batches,
                     s.comm.total_bytes(),
+                    s.outcome.protocol,
+                    s.outcome.basis_evict.name(),
+                    s.outcome.ring_high_water,
                     if s.outcome.clean_close { "" } else { "unclean close, " },
                     s.outcome.wall_seconds,
                 );

@@ -74,6 +74,15 @@ pub enum ModelError {
         /// Checksum recomputed from the payload (hex).
         found: String,
     },
+    /// The columns a `--data` CSV provides do not match the feature
+    /// names this artifact records — scoring would silently bind model
+    /// features to the wrong columns, so it is refused up front.
+    Schema {
+        /// Feature names the artifact records, in model-feature order.
+        expected: Vec<String>,
+        /// Column names the CSV selection actually provides.
+        found: Vec<String>,
+    },
 }
 
 impl std::fmt::Display for ModelError {
@@ -90,6 +99,14 @@ impl std::fmt::Display for ModelError {
                 f,
                 "model payload checksum mismatch: envelope records {expected}, \
                  payload hashes to {found} — the artifact is corrupted"
+            ),
+            ModelError::Schema { expected, found } => write!(
+                f,
+                "CSV feature columns do not match the artifact: the model was trained \
+                 on features [{}] but the data provides [{}] (fix --features or the \
+                 CSV header)",
+                expected.join(", "),
+                found.join(", ")
             ),
         }
     }
@@ -180,6 +197,12 @@ pub struct GuestArtifact {
     pub seed: u64,
     /// Instance-count scale the preset was generated at.
     pub scale: f64,
+    /// Column names of the guest's features, in model-feature order —
+    /// what `sbp predict --data` validates a CSV header against (and
+    /// selects by, when `--features` is omitted). **Optional**: legacy
+    /// count-only artifacts record `None` and skip the check, so no
+    /// version bump.
+    pub feature_names: Option<Vec<String>>,
 }
 
 /// One host's deployable model share: its private split lookup table
@@ -200,6 +223,10 @@ pub struct HostArtifact {
     pub seed: u64,
     /// Instance-count scale the preset was generated at.
     pub scale: f64,
+    /// Column names of this host's features, in model-feature order —
+    /// what `sbp serve-predict --data` validates a CSV header against.
+    /// **Optional** like the guest's (legacy artifacts: `None`).
+    pub feature_names: Option<Vec<String>>,
 }
 
 /// Seeds are full-range u64; JSON numbers are f64 and would silently
@@ -214,6 +241,51 @@ fn get_seed(p: &Json) -> Result<u64, ModelError> {
         .and_then(Json::as_str)
         .and_then(|s| s.parse::<u64>().ok())
         .ok_or_else(|| ModelError::Format("missing or non-integer seed".into()))
+}
+
+fn feature_names_json(names: &[String]) -> Json {
+    Json::Arr(names.iter().map(|n| Json::Str(n.clone())).collect())
+}
+
+/// Decode the optional `feature_names` payload field: absent on legacy
+/// count-only artifacts (`Ok(None)`), a list of strings otherwise.
+fn get_feature_names(p: &Json) -> Result<Option<Vec<String>>, ModelError> {
+    let Some(v) = p.get("feature_names") else {
+        return Ok(None);
+    };
+    let Json::Arr(items) = v else {
+        return Err(ModelError::Format("feature_names must be an array".into()));
+    };
+    let mut names = Vec::with_capacity(items.len());
+    for item in items {
+        let Some(s) = item.as_str() else {
+            return Err(ModelError::Format("feature_names entries must be strings".into()));
+        };
+        names.push(s.to_string());
+    }
+    Ok(Some(names))
+}
+
+/// Validate a `--data` CSV's selected column names against the feature
+/// names an artifact records: model feature `i` must read the column
+/// named `recorded[i]`, so the two sequences must match element for
+/// element (a permutation would silently bind features to the wrong
+/// columns). Legacy count-only artifacts (`recorded = None`) skip the
+/// check — the width checks elsewhere still apply.
+pub fn check_feature_names(
+    recorded: Option<&[String]>,
+    selected: &[String],
+) -> Result<(), ModelError> {
+    let Some(expected) = recorded else {
+        return Ok(());
+    };
+    if expected != selected {
+        return Err(ModelError::Schema {
+            expected: expected.to_vec(),
+            found: selected.to_vec(),
+        });
+    }
+    Ok(())
 }
 
 /// FNV-1a 64-bit hash — the artifact integrity checksum. Not a
@@ -373,7 +445,7 @@ fn validate_guest_model(
 impl GuestArtifact {
     /// Serialize into the versioned envelope.
     pub fn to_json(&self) -> Json {
-        let payload = Json::obj(vec![
+        let mut fields = vec![
             ("model", self.model.to_json()),
             ("objective", self.objective.to_json()),
             ("dataset", Json::Str(self.dataset.clone())),
@@ -382,7 +454,13 @@ impl GuestArtifact {
             ("guest_features", Json::Num(self.guest_features as f64)),
             ("seed", seed_to_json(self.seed)),
             ("scale", Json::Num(self.scale)),
-        ]);
+        ];
+        // optional field: omitted entirely when unknown, so pre-names
+        // builds produce byte-identical envelopes (no version bump)
+        if let Some(names) = &self.feature_names {
+            fields.push(("feature_names", feature_names_json(names)));
+        }
+        let payload = Json::obj(fields);
         envelope("guest", payload)
     }
 
@@ -420,6 +498,15 @@ impl GuestArtifact {
         if !scale.is_finite() || scale <= 0.0 {
             return Err(ModelError::Format("scale must be finite and positive".into()));
         }
+        let feature_names = get_feature_names(p)?;
+        if let Some(names) = &feature_names {
+            if names.len() != guest_features {
+                return Err(ModelError::Format(format!(
+                    "feature_names lists {} column(s) but guest_features is {guest_features}",
+                    names.len()
+                )));
+            }
+        }
         Ok(GuestArtifact {
             model,
             objective,
@@ -429,6 +516,7 @@ impl GuestArtifact {
             guest_features,
             seed,
             scale,
+            feature_names,
         })
     }
 
@@ -489,14 +577,18 @@ impl GuestArtifact {
 impl HostArtifact {
     /// Serialize into the versioned envelope.
     pub fn to_json(&self) -> Json {
-        let payload = Json::obj(vec![
+        let mut fields = vec![
             ("model", self.model.to_json()),
             ("dataset", Json::Str(self.dataset.clone())),
             ("n_features", Json::Num(self.n_features as f64)),
             ("n_hosts", Json::Num(self.n_hosts as f64)),
             ("seed", seed_to_json(self.seed)),
             ("scale", Json::Num(self.scale)),
-        ]);
+        ];
+        if let Some(names) = &self.feature_names {
+            fields.push(("feature_names", feature_names_json(names)));
+        }
+        let payload = Json::obj(fields);
         envelope("host", payload)
     }
 
@@ -536,7 +628,16 @@ impl HostArtifact {
                 return Err(ModelError::Format(format!("split {i} has NaN threshold")));
             }
         }
-        Ok(HostArtifact { model, dataset, n_features, n_hosts, seed, scale })
+        let feature_names = get_feature_names(p)?;
+        if let Some(names) = &feature_names {
+            if names.len() != n_features {
+                return Err(ModelError::Format(format!(
+                    "feature_names lists {} column(s) but n_features is {n_features}",
+                    names.len()
+                )));
+            }
+        }
+        Ok(HostArtifact { model, dataset, n_features, n_hosts, seed, scale, feature_names })
     }
 
     /// Write the artifact to `path` (pretty-printed JSON).
@@ -584,6 +685,7 @@ mod tests {
             guest_features: 1,
             seed: 42,
             scale: 0.01,
+            feature_names: Some(vec!["f0".into()]),
         }
     }
 
@@ -607,10 +709,41 @@ mod tests {
             n_hosts: 1,
             seed: 42,
             scale: 0.01,
+            feature_names: Some(vec!["f3".into(), "f4".into()]),
         };
         let text = a.to_json().to_string_pretty();
         let back = HostArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, a);
+        // a legacy count-only artifact (no names) round-trips too
+        let legacy = HostArtifact { feature_names: None, ..a };
+        let text = legacy.to_json().to_string_pretty();
+        assert!(!text.contains("feature_names"), "None must omit the field");
+        let back = HostArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, legacy);
+    }
+
+    #[test]
+    fn feature_name_count_must_match_width() {
+        let mut a = toy_guest();
+        a.feature_names = Some(vec!["a".into(), "b".into()]); // guest_features = 1
+        assert!(matches!(GuestArtifact::from_json(&a.to_json()), Err(ModelError::Format(_))));
+    }
+
+    #[test]
+    fn check_feature_names_contract() {
+        let recorded = vec!["age".to_string(), "income".to_string()];
+        assert!(check_feature_names(Some(&recorded), &recorded).is_ok());
+        // legacy artifacts skip the check entirely
+        assert!(check_feature_names(None, &["whatever".to_string()]).is_ok());
+        // a permutation would bind features to the wrong columns
+        let swapped = vec!["income".to_string(), "age".to_string()];
+        match check_feature_names(Some(&recorded), &swapped) {
+            Err(ModelError::Schema { expected, found }) => {
+                assert_eq!(expected, recorded);
+                assert_eq!(found, swapped);
+            }
+            other => panic!("expected schema error, got {other:?}"),
+        }
     }
 
     #[test]
@@ -717,6 +850,7 @@ mod tests {
             n_hosts: 1,
             seed: 42,
             scale: 0.01,
+            feature_names: None,
         };
         let v = a.to_json();
         assert!(matches!(HostArtifact::from_json(&v), Err(ModelError::Format(_))));

@@ -47,6 +47,7 @@ fn roundtrip_case(spec: SyntheticSpec, cfg: &TrainConfig, tag: &str) {
         guest_features: vs.guest.d(),
         seed: cfg.seed,
         scale: 0.002,
+        feature_names: Some(vs.guest.cols.iter().map(|c| format!("f{c}")).collect()),
     };
     art.save(&dir.join(guest_file_name())).expect("save guest");
     for (p, hm) in host_ms.iter().enumerate() {
@@ -57,12 +58,17 @@ fn roundtrip_case(spec: SyntheticSpec, cfg: &TrainConfig, tag: &str) {
             n_hosts: vs.hosts.len(),
             seed: cfg.seed,
             scale: 0.002,
+            feature_names: Some(vs.hosts[p].cols.iter().map(|c| format!("f{c}")).collect()),
         }
         .save(&dir.join(host_file_name(p)))
         .expect("save host");
     }
 
     let guest2 = GuestArtifact::load(&dir.join(guest_file_name())).expect("load guest");
+    assert_eq!(
+        guest2.feature_names, art.feature_names,
+        "{tag}: recorded feature names must round-trip"
+    );
     let host2: Vec<_> = (0..vs.hosts.len())
         .map(|p| HostArtifact::load(&dir.join(host_file_name(p))).expect("load host").model)
         .collect();
@@ -140,6 +146,7 @@ fn saved_guest_artifact(tag: &str) -> (PathBuf, String) {
         guest_features: vs.guest.d(),
         seed: cfg.seed,
         scale: 0.001,
+        feature_names: Some(vs.guest.cols.iter().map(|c| format!("f{c}")).collect()),
     };
     let path = dir.join(guest_file_name());
     art.save(&path).expect("save guest");
@@ -264,5 +271,89 @@ fn checksum_roundtrip_and_corruption() {
     )
     .unwrap();
     assert!(matches!(GuestArtifact::load(&path), Err(ModelError::Checksum { .. })));
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+#[test]
+fn feature_names_schema_check_matches_and_rejects() {
+    use sbp::model::check_feature_names;
+    let (path, _) = saved_guest_artifact("schema");
+    let art = GuestArtifact::load(&path).expect("load");
+    let names = art.feature_names.clone().expect("save records feature names");
+    assert_eq!(names.len(), art.guest_features, "one name per guest feature");
+
+    // the recorded schema validates against itself
+    assert!(check_feature_names(art.feature_names.as_deref(), &names).is_ok());
+
+    // a renamed column is a schema mismatch, reported as such
+    let mut renamed = names.clone();
+    renamed[0] = "not_a_feature".into();
+    match check_feature_names(art.feature_names.as_deref(), &renamed) {
+        Err(ModelError::Schema { expected, found }) => {
+            assert_eq!(expected, names);
+            assert_eq!(found, renamed);
+        }
+        other => panic!("expected schema error, got {other:?}"),
+    }
+
+    // a permutation binds features to the wrong columns — also rejected
+    if names.len() >= 2 {
+        let mut swapped = names.clone();
+        swapped.swap(0, 1);
+        assert!(matches!(
+            check_feature_names(art.feature_names.as_deref(), &swapped),
+            Err(ModelError::Schema { .. })
+        ));
+    }
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+#[test]
+fn legacy_count_only_artifact_still_loads_and_skips_the_check() {
+    // simulate a pre-names artifact: strip feature_names from the
+    // payload (and the checksum, which a pre-names build also computed
+    // over a names-free payload — removing both is exactly what an old
+    // file looks like)
+    let (path, text) = saved_guest_artifact("legacy-names");
+    let v = Json::parse(&text).unwrap();
+    let Json::Obj(mut m) = v else { panic!("envelope is an object") };
+    m.remove("checksum");
+    let Some(Json::Obj(p)) = m.get_mut("payload") else { panic!("payload is an object") };
+    assert!(p.remove("feature_names").is_some(), "save must record names");
+    std::fs::write(&path, Json::Obj(m).to_string_pretty()).unwrap();
+
+    let art = GuestArtifact::load(&path).expect("legacy artifact must load");
+    assert_eq!(art.feature_names, None);
+    // and the schema check is a no-op for it, whatever the CSV brings
+    assert!(sbp::model::check_feature_names(
+        art.feature_names.as_deref(),
+        &["anything".to_string()]
+    )
+    .is_ok());
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+#[test]
+fn feature_name_width_mismatch_rejected_at_load() {
+    // an artifact whose names disagree with its declared width is
+    // corrupt — rewrite the payload (and recompute nothing: the
+    // checksum catches it first; with the checksum stripped, the
+    // structural check catches it)
+    let (path, text) = saved_guest_artifact("names-width");
+    let v = Json::parse(&text).unwrap();
+    let Json::Obj(mut m) = v else { panic!("envelope is an object") };
+    m.remove("checksum");
+    let Some(Json::Obj(p)) = m.get_mut("payload") else { panic!("payload is an object") };
+    p.insert(
+        "feature_names".into(),
+        Json::Arr(vec![Json::Str("only-one".into())]),
+    );
+    std::fs::write(&path, Json::Obj(m).to_string_pretty()).unwrap();
+    match GuestArtifact::load(&path) {
+        Err(ModelError::Format(msg)) => {
+            assert!(msg.contains("feature_names"), "unexpected message: {msg}")
+        }
+        other => panic!("expected format error, got {other:?}"),
+    }
     std::fs::remove_dir_all(path.parent().unwrap()).ok();
 }

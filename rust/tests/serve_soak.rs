@@ -1,0 +1,383 @@
+//! Randomized parity-soak for the serving stack under serve protocol
+//! v3: every iteration draws a random world (rows, model shape, host
+//! count) and a random serving/client configuration (chunk size,
+//! in-flight window, delta window, basis-evict policy, cache capacity,
+//! decoy padding, protocol version, repeat passes), runs it through
+//! real `serve_predict_tcp` hosts over loopback framed TCP, and asserts
+//! the two hard invariants of the whole subsystem:
+//!
+//! 1. **bit-parity** — federated predictions equal the colocated
+//!    centralized oracle exactly, whatever the pipeline/eviction/cache
+//!    configuration (and whatever the negotiated protocol version);
+//! 2. **byte-accounting symmetry** — the guest's wire counters equal
+//!    the sum of the hosts' per-session counters, byte for byte.
+//!
+//! A small fixed-seed instance runs in CI; the full range is behind
+//! `--ignored` (`cargo test --test serve_soak -- --ignored`).
+
+use sbp::coordinator::{
+    predict_centralized, predict_session_tcp, predict_stream_passes_tcp, serve_predict_tcp,
+    ServeReport,
+};
+use sbp::data::dataset::{PartySlice, VerticalSplit};
+use sbp::federation::message::{BasisEvict, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_VERSION};
+use sbp::federation::predict::{PredictOptions, PredictSession};
+use sbp::federation::serve::{spawn_serve_session, HostServeState, ServeConfig};
+use sbp::federation::transport::{link_pair_bounded, GuestTransport, NetSnapshot};
+use sbp::tree::node::{SplitRef, Tree};
+use sbp::tree::predict::{GuestModel, HostModel};
+use sbp::util::rng::Xoshiro256;
+
+/// One randomly drawn serving world: aligned per-party feature slices
+/// plus a hand-built (not trained) model whose every host party is
+/// consulted by every row — a host with no traffic would be a
+/// control-only session and would hang a budgeted serve loop.
+struct World {
+    vs: VerticalSplit,
+    guest_m: GuestModel,
+    host_ms: Vec<HostModel>,
+}
+
+fn uni(rng: &mut Xoshiro256) -> f64 {
+    rng.next_f64() * 2.0 - 1.0
+}
+
+/// Recursively grow a random tree below `node`. `force_host` pins the
+/// root to a split owned by that host party, guaranteeing the party is
+/// consulted by every row of every batch.
+fn grow(
+    t: &mut Tree,
+    node: u32,
+    depth: u8,
+    rng: &mut Xoshiro256,
+    guest_d: usize,
+    host_ms: &[HostModel],
+    force_host: Option<usize>,
+) {
+    let split_here = force_host.is_some() || (depth < 3 && rng.next_below(10) < 7);
+    if !split_here {
+        t.nodes[node as usize].weight = vec![uni(rng) * 2.0];
+        return;
+    }
+    let split = match force_host {
+        Some(p) => SplitRef::Host {
+            party: p as u8,
+            handle: rng.next_below(host_ms[p].splits.len()) as u32,
+        },
+        None => {
+            if rng.next_below(2) == 0 {
+                SplitRef::Guest {
+                    feature: rng.next_below(guest_d) as u32,
+                    bin: 0,
+                    threshold: uni(rng),
+                }
+            } else {
+                let p = rng.next_below(host_ms.len());
+                SplitRef::Host {
+                    party: p as u8,
+                    handle: rng.next_below(host_ms[p].splits.len()) as u32,
+                }
+            }
+        }
+    };
+    let (l, r) = t.split_node(node, split);
+    grow(t, l, depth + 1, rng, guest_d, host_ms, None);
+    grow(t, r, depth + 1, rng, guest_d, host_ms, None);
+}
+
+fn gen_world(rng: &mut Xoshiro256, n_hosts: usize) -> World {
+    let n = 1 + rng.next_below(48);
+    let guest_d = 1 + rng.next_below(3);
+    let host_ds: Vec<usize> = (0..n_hosts).map(|_| 1 + rng.next_below(3)).collect();
+
+    let guest = PartySlice {
+        cols: (0..guest_d).collect(),
+        x: (0..n * guest_d).map(|_| uni(rng)).collect(),
+        n,
+    };
+    let mut col0 = guest_d;
+    let hosts: Vec<PartySlice> = host_ds
+        .iter()
+        .map(|&d| {
+            let s = PartySlice {
+                cols: (col0..col0 + d).collect(),
+                x: (0..n * d).map(|_| uni(rng)).collect(),
+                n,
+            };
+            col0 += d;
+            s
+        })
+        .collect();
+
+    let host_ms: Vec<HostModel> = (0..n_hosts)
+        .map(|p| HostModel {
+            party: p as u8,
+            splits: (0..3 + rng.next_below(6))
+                .map(|_| (rng.next_below(host_ds[p]) as u32, 0u8, uni(rng)))
+                .collect(),
+        })
+        .collect();
+
+    // every host party roots at least one tree, so every session
+    // carries real traffic for every host
+    let n_trees = n_hosts + 1 + rng.next_below(3);
+    let mut trees = Vec::with_capacity(n_trees);
+    for t_idx in 0..n_trees {
+        let mut t = Tree::new(1);
+        let force = (t_idx < n_hosts).then_some(t_idx);
+        grow(&mut t, 0, 0, rng, guest_d, &host_ms, force);
+        trees.push((t, 0usize));
+    }
+    let guest_m = GuestModel { trees, n_classes: 2, pred_width: 1 };
+
+    let vs = VerticalSplit {
+        guest,
+        hosts,
+        y: vec![0.0; n],
+        n_classes: 2,
+        name: "soak".into(),
+    };
+    World { vs, guest_m, host_ms }
+}
+
+/// Start one `serve_predict_tcp` loop per host party, budgeted to one
+/// session each.
+fn start_servers(
+    world: &World,
+    cfg: ServeConfig,
+) -> (Vec<String>, Vec<std::thread::JoinHandle<ServeReport>>) {
+    let mut addrs = Vec::new();
+    let mut servers = Vec::new();
+    for p in 0..world.host_ms.len() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        addrs.push(listener.local_addr().unwrap().to_string());
+        let model = world.host_ms[p].clone();
+        let slice = world.vs.hosts[p].clone();
+        servers.push(std::thread::spawn(move || {
+            serve_predict_tcp(&listener, model, slice, cfg, 1).expect("serve loop")
+        }));
+    }
+    (addrs, servers)
+}
+
+/// One soak iteration: draw a world and a configuration, score it
+/// federated, and check parity + accounting symmetry. The discrete
+/// dimensions (host count, delta on/off, cache on/off, eviction policy,
+/// protocol version, lockstep vs pipelined, repeat passes) cycle with
+/// the iteration index so even the small CI instance covers the whole
+/// matrix; the continuous ones (rows, widths, windows, seeds) come from
+/// the seeded rng.
+fn run_iteration(seed: u64, it: usize) {
+    let mut rng =
+        Xoshiro256::seed_from_u64(seed ^ (it as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let n_hosts = 1 + it % 2;
+    let world = gen_world(&mut rng, n_hosts);
+    let oracle = predict_centralized(&world.guest_m, &world.host_ms, &world.vs);
+
+    let delta_window = if it % 3 == 0 { 0 } else { [4usize, 64, 1 << 12][rng.next_below(3)] };
+    let cache_capacity = if it % 2 == 0 { 0 } else { 1usize << (4 + rng.next_below(8)) };
+    let basis_evict = if it % 4 < 2 { BasisEvict::Lru } else { BasisEvict::Freeze };
+    let protocol = if it % 5 == 4 { SERVE_PROTOCOL_V2 } else { SERVE_PROTOCOL_VERSION };
+    let max_inflight = 1 + rng.next_below(8) as u32;
+    let batch_rows = [0usize, 1, 3, 7, 16][rng.next_below(5)];
+    let dummy_queries = [0usize, 0, 3, 9][rng.next_below(4)];
+    let passes = if batch_rows > 0 && it % 4 == 1 { 2 } else { 1 };
+    let tag = format!(
+        "it {it}: n={} hosts={n_hosts} batch_rows={batch_rows} inflight={max_inflight} \
+         delta={delta_window} cache={cache_capacity} evict={} v{protocol} decoys={dummy_queries} \
+         passes={passes}",
+        world.vs.n(),
+        basis_evict.name()
+    );
+
+    let cfg = ServeConfig {
+        cache_capacity,
+        delta_window,
+        basis_evict,
+        max_inflight,
+        ..ServeConfig::default()
+    };
+    let (addrs, servers) = start_servers(&world, cfg);
+    let opts = PredictOptions {
+        dummy_queries,
+        seed: rng.next_u64(),
+        batch_rows,
+        max_inflight: 1 + rng.next_below(6),
+        protocol,
+        ..PredictOptions::default()
+    };
+
+    let client_comm: Option<NetSnapshot> = if passes == 1 {
+        let r = predict_session_tcp(&world.guest_m, &world.vs.guest, &addrs, 1, opts)
+            .expect("soak session");
+        assert_eq!(r.preds, oracle, "{tag}: federated must equal centralized");
+        Some(r.comm)
+    } else {
+        let reports = predict_stream_passes_tcp(
+            &world.guest_m,
+            &world.vs.guest,
+            &addrs,
+            1,
+            opts,
+            passes,
+        )
+        .expect("soak repeat session");
+        for (i, r) in reports.iter().enumerate() {
+            assert_eq!(r.preds, oracle, "{tag}: pass {i} must equal centralized");
+        }
+        None // per-pass diffs exclude the handshake; symmetry is
+             // checked on the single-report iterations
+    };
+
+    let mut host_comm = NetSnapshot::default();
+    for server in servers {
+        let report = server.join().expect("server thread");
+        assert_eq!(report.n_sessions, 1, "{tag}: exactly one serving session");
+        host_comm = host_comm.add(&report.comm);
+        let outcome = &report.sessions[0].outcome;
+        assert!(outcome.clean_close, "{tag}: session must close cleanly");
+        assert_eq!(outcome.protocol, protocol, "{tag}: negotiated protocol");
+        let expect_evict =
+            if protocol >= SERVE_PROTOCOL_VERSION { basis_evict } else { BasisEvict::Freeze };
+        assert_eq!(outcome.basis_evict, expect_evict, "{tag}: negotiated policy");
+        assert!(
+            outcome.ring_high_water <= max_inflight.max(1) as usize,
+            "{tag}: decode ring exceeded its bound ({} > {max_inflight})",
+            outcome.ring_high_water
+        );
+        if delta_window == 0 {
+            assert_eq!(outcome.answers_elided, 0, "{tag}: delta off elides nothing");
+        }
+    }
+    if let Some(client) = client_comm {
+        assert_eq!(
+            client, host_comm,
+            "{tag}: guest and host byte accounting must be symmetric"
+        );
+    }
+}
+
+/// The fixed-seed CI instance: small, deterministic, covers the whole
+/// discrete matrix (1/2 hosts, delta on/off, cache on/off, lru/freeze,
+/// v2/v3, lockstep/pipelined, single/repeat passes).
+#[test]
+fn soak_fixed_seed() {
+    for it in 0..10 {
+        run_iteration(0x5EC0_0B57, it);
+    }
+}
+
+/// The full soak range — slow; run explicitly with
+/// `cargo test --release --test serve_soak -- --ignored`.
+#[test]
+#[ignore = "full randomized soak; run explicitly"]
+fn soak_full_range() {
+    for seed in [0x5EC0_0B57u64, 0xA11CE, 0xB00B5] {
+        for it in 0..24 {
+            run_iteration(seed, it);
+        }
+    }
+}
+
+/// The acceptance scenario for the negotiated LRU: a session whose
+/// working set (4 keys) exceeds `delta_window` (2), then a repeat ask
+/// of the *recently answered* keys. Under `lru` the repeat is fully
+/// elided (the basis rotated to hold the recent keys); under `freeze`
+/// it re-pays the wire in full (the basis froze on the oldest keys and
+/// never admitted the recent ones). Bits are identical either way.
+///
+/// The scenario is built from whole batches — {0,1}, then {2,3}, then
+/// {2,3} again — so the outcome does not depend on query order *within*
+/// a batch (each batch's keys are uniformly fresh or uniformly known
+/// under either policy).
+#[test]
+fn lru_elides_recent_rescoring_past_the_window_where_freeze_cannot() {
+    // 4 records; the guest's feature decides which rows consult the
+    // host split in a given scoring call
+    let n = 4usize;
+    let mut t = Tree::new(1);
+    let (l, r) = t.split_node(0, SplitRef::Guest { feature: 0, bin: 0, threshold: 0.5 });
+    t.nodes[l as usize].weight = vec![-1.0];
+    t.split_node(r, SplitRef::Host { party: 0, handle: 0 });
+    let r = r as usize;
+    let rl = t.nodes[r].left as usize;
+    let rr = t.nodes[r].right as usize;
+    t.nodes[rl].weight = vec![1.0];
+    t.nodes[rr].weight = vec![2.0];
+    let guest_m = GuestModel { trees: vec![(t, 0)], n_classes: 2, pred_width: 1 };
+    let host_m = HostModel { party: 0, splits: vec![(0, 0, 0.0)] };
+    let host_slice = PartySlice { cols: vec![1], x: vec![-0.5, 0.5, -0.5, 0.5], n };
+    // guest slice where exactly `rows` consult the host (feature 1.0
+    // routes right into the host split; 0.0 exits at the guest leaf)
+    let gx = |rows: [usize; 2]| PartySlice {
+        cols: vec![0],
+        x: (0..n).map(|i| if rows.contains(&i) { 1.0 } else { 0.0 }).collect(),
+        n,
+    };
+    let old_guest = gx([0, 1]);
+    let new_guest = gx([2, 3]);
+    let vs_for = |guest: &PartySlice| VerticalSplit {
+        guest: guest.clone(),
+        hosts: vec![host_slice.clone()],
+        y: vec![0.0; n],
+        n_classes: 2,
+        name: "lru-recency".into(),
+    };
+    let oracle_old = predict_centralized(&guest_m, &[host_m.clone()], &vs_for(&old_guest));
+    let oracle_new = predict_centralized(&guest_m, &[host_m.clone()], &vs_for(&new_guest));
+
+    let run = |evict: BasisEvict| {
+        let state = HostServeState::new(
+            host_m.clone(),
+            host_slice.clone(),
+            ServeConfig {
+                cache_capacity: 0,
+                delta_window: 2, // < the session's 4-key working set
+                basis_evict: evict,
+                ..ServeConfig::default()
+            },
+        );
+        let (gl, hl) = link_pair_bounded(8, 8);
+        let host = spawn_serve_session(state, hl);
+        let links: Vec<Box<dyn GuestTransport>> = vec![Box::new(gl)];
+        let mut session = PredictSession::new(
+            &guest_m,
+            31,
+            PredictOptions { batch_rows: n, seed: 9, ..PredictOptions::default() },
+        );
+        session.open(&links);
+        // streamed passes synchronize the bases without touching the
+        // session memo (chunk memos die with their chunks): first the
+        // old keys {0,1}, then the new keys {2,3} — the lru basis ends
+        // holding {2,3}, the frozen one froze on {0,1}
+        let (p_old, _) = session.predict_stream(&old_guest, &links);
+        let (p_new, _) = session.predict_stream(&new_guest, &links);
+        // the repeat ask of the *recent* keys goes through predict_batch
+        // (empty session memo ⇒ the keys actually travel — unless the
+        // host elides them from its basis)
+        let p_repeat = session.predict_batch(&new_guest, &links);
+        let elided = session.delta_elided_answers();
+        session.close(&links);
+        let outcome = host.join().expect("serve session thread");
+        (p_old, p_new, p_repeat, elided, outcome.answers_elided)
+    };
+
+    let (lo, ln, lr_, l_elided, l_host_elided) = run(BasisEvict::Lru);
+    let (fo, fn_, fr_, f_elided, f_host_elided) = run(BasisEvict::Freeze);
+
+    // parity first: eviction policy may never change bits
+    assert_eq!(lo, oracle_old);
+    assert_eq!(fo, oracle_old);
+    assert_eq!(ln, oracle_new);
+    assert_eq!(fn_, oracle_new);
+    assert_eq!(lr_, oracle_new);
+    assert_eq!(fr_, oracle_new);
+
+    // the distinguishing observable: the LRU basis rotated to hold the
+    // recent keys and elides the whole repeat; the frozen basis froze
+    // on the oldest keys and elides nothing, ever
+    assert_eq!(l_elided, 2, "lru: both recent keys resolved from the mirrored basis");
+    assert_eq!(l_host_elided, 2);
+    assert_eq!(f_elided, 0, "freeze: the recent keys never entered the frozen basis");
+    assert_eq!(f_host_elided, 0);
+}

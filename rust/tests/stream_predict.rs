@@ -15,7 +15,7 @@ use sbp::data::dataset::{PartySlice, VerticalSplit};
 use sbp::data::synthetic::SyntheticSpec;
 use sbp::federation::message::ToHost;
 use sbp::federation::predict::{PredictHostParty, PredictOptions, PredictSession};
-use sbp::federation::serve::ServeConfig;
+use sbp::federation::serve::{spawn_serve_session, HostServeState, ServeConfig};
 use sbp::federation::transport::{link_pair_bounded, GuestTransport};
 use sbp::tree::node::{SplitRef, Tree};
 use sbp::tree::predict::{GuestModel, HostModel};
@@ -215,6 +215,75 @@ fn max_inflight_window_blocks_instead_of_queueing() {
         assert_eq!(report.max_inflight_observed, 2, "window fully used, never exceeded");
         assert!(report.stall_seconds > 0.0, "the gate must register as stall time");
     });
+}
+
+/// Backpressure regression for the host's 2-stage pipeline: a
+/// deliberately slow Stage B (compute) must bound the Stage-A decode
+/// ring at `max_inflight` decoded frames — Stage A then blocks instead
+/// of buffering the guest's whole stream — and the run must still
+/// complete without deadlocking the guest's undrained-answer budget,
+/// bit-identically.
+#[test]
+fn slow_compute_stage_bounds_the_decode_ring_without_deadlock() {
+    // toy model whose every row consults the host once per chunk
+    let mut t = Tree::new(1);
+    t.split_node(0, SplitRef::Host { party: 0, handle: 0 });
+    t.nodes[1].weight = vec![1.0];
+    t.nodes[2].weight = vec![2.0];
+    let guest_m = GuestModel { trees: vec![(t, 0)], n_classes: 2, pred_width: 1 };
+    let host_m = HostModel { party: 0, splits: vec![(0, 0, 0.0)] };
+    let n = 12usize;
+    let host_x: Vec<f64> = (0..n).map(|i| if i % 3 == 0 { -1.0 } else { 1.0 }).collect();
+    let expected: Vec<f64> =
+        (0..n).map(|i| if i % 3 == 0 { 1.0 } else { 2.0 }).collect();
+    let guest_slice = PartySlice { cols: vec![0], x: vec![9.0; n], n };
+    let host_slice = PartySlice { cols: vec![1], x: host_x, n };
+
+    const RING: u32 = 3;
+    let state = HostServeState::new(
+        host_m,
+        host_slice,
+        ServeConfig {
+            cache_capacity: 0,
+            max_inflight: RING, // = the decode ring's depth
+            stage_b_delay: Some(std::time::Duration::from_millis(25)),
+            ..ServeConfig::default()
+        },
+    );
+    // roomy link queue: the binding constraint must be the decode ring,
+    // not the transport
+    let (gl, hl) = link_pair_bounded(8, 64);
+    let host = spawn_serve_session(state, hl);
+    let links: Vec<Box<dyn GuestTransport>> = vec![Box::new(gl)];
+    // sessionless: no handshake clamps the guest window, so the guest
+    // runs ahead of the slow host by more than the ring holds — the
+    // overflow must park in Stage A's blocked send, not in host memory
+    let mut session = PredictSession::sessionless_with(
+        &guest_m,
+        PredictOptions {
+            batch_rows: 1, // 12 chunks, one host round each
+            max_inflight: 8,
+            seed: 21,
+            ..PredictOptions::default()
+        },
+    );
+    let (preds, report) = session.predict_stream(&guest_slice, &links);
+    links[0].send(ToHost::Shutdown);
+    let outcome = host.join().expect("serve session thread");
+
+    assert_eq!(preds, expected, "a throttled pipeline must still answer right");
+    assert_eq!(report.chunks, n as u64);
+    assert_eq!(report.window, 8, "the guest window exceeds the ring on purpose");
+    assert_eq!(
+        outcome.ring_high_water, RING as usize,
+        "the decode ring must fill to exactly its bound and no further"
+    );
+    assert!(
+        outcome.decode_stall_seconds > 0.0,
+        "a slow Stage B must visibly throttle Stage A"
+    );
+    assert!(outcome.clean_close, "the trailing Shutdown ends the session cleanly");
+    assert_eq!(outcome.batches, n as u64);
 }
 
 /// Repeat scoring in one session (the memo-heavy workload): with delta

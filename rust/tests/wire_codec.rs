@@ -113,6 +113,11 @@ fn sample_to_host_messages(suite: &CipherSuite, rng: &mut ChaCha20Rng) -> Vec<To
             session_id: u32::MAX,
             protocol: sbp::federation::message::SERVE_PROTOCOL_VERSION,
         },
+        // a legacy v2 hello is still a valid frame (negotiated down)
+        ToHost::SessionHello {
+            session_id: 77,
+            protocol: sbp::federation::message::SERVE_PROTOCOL_V2,
+        },
         ToHost::SessionClose { session_id: 1 },
         ToHost::KeepAlive,
     ]
@@ -151,11 +156,28 @@ fn sample_to_guest_messages(suite: &CipherSuite, rng: &mut ChaCha20Rng) -> Vec<T
         },
         // zero-row answer (empty chunk tail) round-trips
         ToGuest::RouteAnswers { session: 9, chunk: 13, n: 0, bits: Vec::new() },
-        ToGuest::SessionAccept { session_id: 1, max_inflight: 1, delta_window: 0 },
+        // the bare v2 accept (12 bytes on the wire, decodes as freeze)
+        ToGuest::SessionAccept {
+            session_id: 1,
+            max_inflight: 1,
+            delta_window: 0,
+            protocol: sbp::federation::message::SERVE_PROTOCOL_V2,
+            basis_evict: sbp::federation::message::BasisEvict::Freeze,
+        },
+        // v3 extended accepts: both eviction policies
         ToGuest::SessionAccept {
             session_id: u32::MAX,
             max_inflight: 64,
             delta_window: 1 << 16,
+            protocol: sbp::federation::message::SERVE_PROTOCOL_VERSION,
+            basis_evict: sbp::federation::message::BasisEvict::Lru,
+        },
+        ToGuest::SessionAccept {
+            session_id: 9,
+            max_inflight: 8,
+            delta_window: 512,
+            protocol: sbp::federation::message::SERVE_PROTOCOL_VERSION,
+            basis_evict: sbp::federation::message::BasisEvict::Freeze,
         },
         // delta answers: partially and fully elided, and the empty batch
         ToGuest::RouteAnswersDelta {
@@ -296,8 +318,23 @@ fn truncated_payloads_error_cleanly() {
     for msg in sample_to_guest_messages(&suite, &mut rng) {
         let bytes = encode_to_guest(&suite, ct_len, &msg);
         for cut in 0..bytes.len() {
+            let decoded = decode_to_guest(&suite, ct_len, &bytes[..cut]);
+            // one deliberate exception: a v3 extended SessionAccept cut
+            // back to its first 13 bytes IS the valid v2 accept — the
+            // dual-shape encoding that keeps legacy peers decoding.
+            // Every other prefix must error.
+            if let (ToGuest::SessionAccept { .. }, Ok(ToGuest::SessionAccept { protocol, .. })) =
+                (&msg, &decoded)
+            {
+                assert_eq!(
+                    *protocol,
+                    sbp::federation::message::SERVE_PROTOCOL_V2,
+                    "a truncated accept may only decode as the v2 form"
+                );
+                continue;
+            }
             assert!(
-                decode_to_guest(&suite, ct_len, &bytes[..cut]).is_err(),
+                decoded.is_err(),
                 "prefix of len {cut} decoded for {:?}",
                 msg.kind()
             );
@@ -369,16 +406,22 @@ fn malformed_session_hello_rejected() {
         p.extend_from_slice(&protocol.to_le_bytes());
         p
     };
-    // the valid shape decodes
+    // the valid shapes decode: current and the negotiable legacy v2
     let ok = decode_to_host(None, &hello(7, SERVE_PROTOCOL_VERSION)).expect("valid hello");
     assert!(matches!(ok, ToHost::SessionHello { session_id: 7, .. }));
+    let ok = decode_to_host(None, &hello(8, sbp::federation::message::SERVE_PROTOCOL_V2))
+        .expect("v2 hello still decodes (negotiated down)");
+    assert!(matches!(
+        ok,
+        ToHost::SessionHello { session_id: 8, protocol: sbp::federation::message::SERVE_PROTOCOL_V2 }
+    ));
     // reserved session id 0
     assert!(matches!(
         decode_to_host(None, &hello(0, SERVE_PROTOCOL_VERSION)),
         Err(WireError::Malformed(_))
     ));
     // protocol versions this build does not speak
-    for bad in [0u32, SERVE_PROTOCOL_VERSION + 1, u32::MAX] {
+    for bad in [0u32, 1, SERVE_PROTOCOL_VERSION + 1, u32::MAX] {
         assert!(
             matches!(decode_to_host(None, &hello(5, bad)), Err(WireError::Malformed(_))),
             "protocol {bad} must be rejected"
@@ -430,4 +473,153 @@ fn frame_reader_error_cases() {
     // clean EOF at a frame boundary is not an error
     let mut cur = Cursor::new(Vec::<u8>::new());
     assert!(codec::read_frame(&mut cur).unwrap().is_none());
+}
+
+/// The v3 `SessionAccept` extension: both wire shapes round-trip, a
+/// truncated extension and a bad eviction tag error cleanly, and an
+/// extension claiming a non-v3 protocol is malformed (the bare 12-byte
+/// form IS the v2 encoding — an extended frame saying "v2" is a liar).
+#[test]
+fn session_accept_v3_extension_validates() {
+    use sbp::federation::message::{BasisEvict, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_VERSION};
+    let suite = CipherSuite::new_plain(256);
+    let ct_len = suite.ct_byte_len();
+
+    let accept = |ext: Option<(u32, u8)>| {
+        let mut p = vec![5u8];
+        p.extend_from_slice(&3u32.to_le_bytes()); // session id
+        p.extend_from_slice(&8u32.to_le_bytes()); // max_inflight
+        p.extend_from_slice(&64u32.to_le_bytes()); // delta_window
+        if let Some((proto, tag)) = ext {
+            p.extend_from_slice(&proto.to_le_bytes());
+            p.push(tag);
+        }
+        p
+    };
+
+    // bare 12-byte form → v2 freeze
+    let ToGuest::SessionAccept { protocol, basis_evict, .. } =
+        decode_to_guest(&suite, ct_len, &accept(None)).expect("v2 accept decodes")
+    else {
+        panic!("wrong kind")
+    };
+    assert_eq!(protocol, SERVE_PROTOCOL_V2);
+    assert_eq!(basis_evict, BasisEvict::Freeze);
+
+    // extended form → announced policy
+    for (tag, want) in [(0u8, BasisEvict::Freeze), (1, BasisEvict::Lru)] {
+        let ToGuest::SessionAccept { protocol, basis_evict, .. } =
+            decode_to_guest(&suite, ct_len, &accept(Some((SERVE_PROTOCOL_VERSION, tag))))
+                .expect("v3 accept decodes")
+        else {
+            panic!("wrong kind")
+        };
+        assert_eq!(protocol, SERVE_PROTOCOL_VERSION);
+        assert_eq!(basis_evict, want);
+    }
+
+    // unknown eviction tag
+    assert!(matches!(
+        decode_to_guest(&suite, ct_len, &accept(Some((SERVE_PROTOCOL_VERSION, 2)))),
+        Err(WireError::BadTag { .. })
+    ));
+    // an extension claiming v2 (or garbage) is malformed
+    for proto in [0u32, 1, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_VERSION + 1] {
+        assert!(
+            matches!(
+                decode_to_guest(&suite, ct_len, &accept(Some((proto, 1)))),
+                Err(WireError::Malformed(_))
+            ),
+            "extension protocol {proto} must be rejected"
+        );
+    }
+    // truncating the extension mid-way errors, never panics. (Cutting
+    // it off *entirely* — the 13-byte prefix — is the valid v2 accept
+    // by design, so the error range starts one past it.)
+    let full = accept(Some((SERVE_PROTOCOL_VERSION, 1)));
+    assert!(
+        matches!(
+            decode_to_guest(&suite, ct_len, &full[..13]),
+            Ok(ToGuest::SessionAccept { protocol: SERVE_PROTOCOL_V2, .. })
+        ),
+        "the extension-free prefix is the v2 accept"
+    );
+    for cut in 14..full.len() {
+        assert!(decode_to_guest(&suite, ct_len, &full[..cut]).is_err(), "prefix {cut}");
+    }
+}
+
+/// Decode never panics: replay every sample frame's encoding under
+/// seeded single-byte mutations (every position, a seeded replacement
+/// value) and under systematic truncations. A mutation may decode to a
+/// *different valid message* (flipping a session-id byte is harmless) —
+/// what must never happen is a panic or a runaway allocation; a
+/// truncation must always be a clean `WireError`.
+#[test]
+fn mutated_frames_never_panic() {
+    let suite = CipherSuite::new_plain(256);
+    let ct_len = suite.ct_byte_len();
+    let mut rng = ChaCha20Rng::from_u64(0xB17F11);
+    let setup_state = (suite.public_side(), ct_len);
+    let mut decode_errors = 0u64;
+    let mut total = 0u64;
+
+    for msg in sample_to_host_messages(&suite, &mut rng) {
+        let bytes = encode_to_host(&suite, ct_len, &msg);
+        for pos in 0..bytes.len() {
+            let mut m = bytes.clone();
+            // a seeded, guaranteed-different replacement byte
+            m[pos] ^= (rng.next_u64() as u8) | 1;
+            total += 1;
+            if decode_to_host(Some((&setup_state.0, setup_state.1)), &m).is_err() {
+                decode_errors += 1;
+            }
+        }
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_to_host(Some((&setup_state.0, setup_state.1)), &bytes[..cut]).is_err(),
+                "truncation must error for {:?}",
+                msg.kind()
+            );
+        }
+    }
+    for msg in sample_to_guest_messages(&suite, &mut rng) {
+        let bytes = encode_to_guest(&suite, ct_len, &msg);
+        for pos in 0..bytes.len() {
+            let mut m = bytes.clone();
+            m[pos] ^= (rng.next_u64() as u8) | 1;
+            total += 1;
+            if decode_to_guest(&suite, ct_len, &m).is_err() {
+                decode_errors += 1;
+            }
+        }
+        for cut in 0..bytes.len() {
+            let decoded = decode_to_guest(&suite, ct_len, &bytes[..cut]);
+            // the one legal truncation: a v3 accept's 13-byte prefix is
+            // the valid v2 accept (dual-shape encoding); see
+            // truncated_payloads_error_cleanly
+            if matches!(
+                (&msg, &decoded),
+                (ToGuest::SessionAccept { .. }, Ok(ToGuest::SessionAccept { .. }))
+            ) {
+                continue;
+            }
+            assert!(
+                decoded.is_err(),
+                "truncation must error for {:?}",
+                msg.kind()
+            );
+        }
+    }
+    // sanity: the corpus actually exercised the error paths. Many
+    // mutations land in value bytes (ids, ciphertext residues, seeds)
+    // and legitimately decode to a different valid message; but every
+    // tag byte and length field must reject, so a healthy corpus
+    // produces a solid floor of errors.
+    assert!(total > 1000, "mutation corpus too small ({total})");
+    assert!(
+        decode_errors * 10 > total,
+        "suspiciously few decode errors ({decode_errors}/{total}) — are the \
+         defensive checks still armed?"
+    );
 }
