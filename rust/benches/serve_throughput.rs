@@ -4,10 +4,12 @@
 //! 0 (off) / small / large.
 //!
 //! The full serving stack is exercised, not simulated: one
-//! `serve_predict_tcp` loop per capacity (thread-per-session over
+//! `serve_predict_tcp` loop per capacity (the sharded reactor over
 //! loopback framed TCP), a fresh `SessionHello`-handshaked client
 //! session per pass over the batch, every session asserted bit-identical
-//! to the colocated oracle. Output goes to `BENCH_serve.json` at the
+//! to the colocated oracle. A high-concurrency section holds many
+//! sessions resident at once and compares a few-worker reactor against
+//! a one-shard-per-session layout. Output goes to `BENCH_serve.json` at the
 //! repository root (override with `SBP_BENCH_OUT`); rerun with
 //! `cargo bench --bench serve_throughput`.
 
@@ -194,6 +196,100 @@ fn main() {
     }
     evict_table.print();
 
+    // ---- high concurrency: many sessions resident at once on a few
+    // reactor workers vs a one-shard-per-session layout (the closest
+    // stand-in for the retired thread-per-session architecture). All
+    // sessions open before any predicts, so shard peaks account for
+    // every session; a 256-row sub-batch keeps the section about
+    // concurrency, not row throughput.
+    // 1000 resident sessions need ~2000 fds (both loopback ends live in
+    // this process) — raise `ulimit -n` past 4096 for the full bench;
+    // the smoke gate stays comfortably inside the default soft limit
+    let hc_sessions = if smoke { 64 } else { 1000 };
+    let hc_rows = 256.min(n);
+    let d = vs.guest.d();
+    let hc_guest = sbp::data::dataset::PartySlice {
+        cols: vs.guest.cols.clone(),
+        x: vs.guest.x[..hc_rows * d].to_vec(),
+        n: hc_rows,
+    };
+    let hc_oracle = &oracle[..hc_rows];
+    println!("\n--- high concurrency: {hc_sessions} resident sessions ---");
+    let mut hc_table = sbp::bench_harness::Table::new(&[
+        "layout", "workers", "sessions", "rows/sec", "poll stall s", "shard peak Σ",
+    ]);
+    let mut hc_points: Vec<Json> = Vec::new();
+    for (layout, workers) in [("reactor-8", 8usize), ("worker-per-session", hc_sessions)] {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        let addr = listener.local_addr().unwrap().to_string();
+        let model = host_ms[0].clone();
+        let slice = vs.hosts[0].clone();
+        let server = std::thread::spawn(move || {
+            serve_predict_tcp(
+                &listener,
+                model,
+                slice,
+                ServeConfig { workers, ..ServeConfig::default() },
+                hc_sessions,
+            )
+            .expect("serve loop")
+        });
+
+        let suite = || sbp::crypto::cipher::CipherSuite::new_plain(64);
+        let mut open: Vec<(
+            sbp::federation::predict::PredictSession<'_>,
+            Vec<Box<dyn sbp::federation::transport::GuestTransport>>,
+        )> = Vec::with_capacity(hc_sessions);
+        let t0 = std::time::Instant::now();
+        for s in 0..hc_sessions {
+            let links: Vec<Box<dyn sbp::federation::transport::GuestTransport>> = vec![Box::new(
+                sbp::federation::tcp::TcpGuestTransport::connect(&addr, suite())
+                    .expect("connect"),
+            )];
+            let mut session = sbp::federation::predict::PredictSession::new(
+                &guest_m,
+                (s + 1) as u32,
+                PredictOptions::default(),
+            );
+            session.open(&links);
+            open.push((session, links));
+        }
+        for (session, links) in &mut open {
+            let preds = session.predict_batch(&hc_guest, links);
+            assert_eq!(preds, hc_oracle, "high-concurrency session must match colocated");
+        }
+        for (session, links) in open {
+            session.close(&links);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let serve_report = server.join().expect("server thread");
+        assert_eq!(serve_report.n_sessions, hc_sessions);
+
+        let shard_peak_sum: usize = serve_report.worker_peak_sessions.iter().sum();
+        let hc_rows_per_sec = (hc_sessions * hc_rows) as f64 / wall.max(1e-12);
+        hc_table.row(&[
+            layout.to_string(),
+            serve_report.workers.to_string(),
+            hc_sessions.to_string(),
+            format!("{hc_rows_per_sec:.0}"),
+            format!("{:.3}", serve_report.poll_stall_seconds),
+            shard_peak_sum.to_string(),
+        ]);
+        hc_points.push(Json::obj(vec![
+            ("layout", Json::Str(layout.into())),
+            ("workers", Json::Num(serve_report.workers as f64)),
+            ("sessions", Json::Num(hc_sessions as f64)),
+            ("rows_per_session", Json::Num(hc_rows as f64)),
+            ("rows_per_sec", Json::Num((hc_rows_per_sec * 10.0).round() / 10.0)),
+            (
+                "poll_stall_seconds",
+                Json::Num((serve_report.poll_stall_seconds * 1000.0).round() / 1000.0),
+            ),
+            ("shard_peak_sum", Json::Num(shard_peak_sum as f64)),
+        ]));
+    }
+    hc_table.print();
+
     if smoke {
         println!("\n[smoke] multi-session serving parity OK (no JSON written)");
         return;
@@ -208,6 +304,7 @@ fn main() {
         ("concurrency", Json::Num(CONCURRENCY as f64)),
         ("capacities", Json::Arr(points)),
         ("pipelined_host", Json::Arr(evict_points)),
+        ("high_concurrency", Json::Arr(hc_points)),
         (
             "note",
             Json::Str("regenerate with `cargo bench --bench serve_throughput`".into()),

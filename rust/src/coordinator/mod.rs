@@ -667,11 +667,29 @@ pub struct ServeReport {
     /// (sessions negotiated down to v2 ran `freeze` regardless).
     pub basis_evict: crate::federation::message::BasisEvict,
     /// Highest decode-ring occupancy any session's 2-stage pipeline
-    /// reached (bounded by `ServeConfig::max_inflight`).
+    /// reached (bounded by `ServeConfig::max_inflight`; structurally 0
+    /// under the TCP reactor, which runs no per-session ring).
     pub ring_high_water: usize,
     /// Total seconds decode stages spent blocked on a full ring
     /// (host-side pipeline backpressure, summed over sessions).
     pub decode_stall_seconds: f64,
+    /// Reactor worker threads the serve loop ran
+    /// (`ServeConfig::workers`, resolved: 0 became the CPU count).
+    pub workers: usize,
+    /// Per-worker peak concurrent sessions, indexed by worker — the
+    /// shard-occupancy high-water of each reactor thread; the spread
+    /// shows how evenly least-occupied dispatch balanced the load.
+    pub worker_peak_sessions: Vec<usize>,
+    /// Total seconds reactor workers spent parked with live sessions
+    /// but nothing readable (one sleeping thread per worker, instead
+    /// of one blocked read per session).
+    pub poll_stall_seconds: f64,
+    /// Sessions ended by the dead-peer idle reaper
+    /// (`ServeConfig::session_idle_timeout`).
+    pub sessions_idle_reaped: u64,
+    /// Transient accept errors (fd exhaustion, aborted handshakes)
+    /// survived with backoff instead of winding the service down.
+    pub accept_retries: u64,
     /// Exact serialized wire traffic across all sessions.
     pub comm: NetSnapshot,
     /// Wall time of the whole serve loop.
@@ -692,7 +710,8 @@ impl ServeReport {
             "served {} session(s): {} queries ({} answers delta-elided, basis {}), \
              {:.0} queries/s, {:.1} B/query, \
              cache {}/{} hit/miss ({:.1}% hit rate), \
-             pipeline ring ≤{} (decode stalled {:.3}s)",
+             {} reactor worker(s) (shard peaks Σ{}), \
+             {} idle-reaped, {} accept retry(ies)",
             self.n_sessions,
             self.queries_answered,
             self.answers_elided,
@@ -702,19 +721,24 @@ impl ServeReport {
             self.cache.hits,
             self.cache.misses,
             self.cache.hit_rate() * 100.0,
-            self.ring_high_water,
-            self.decode_stall_seconds,
+            self.workers,
+            self.worker_peak_sessions.iter().sum::<usize>(),
+            self.sessions_idle_reaped,
+            self.accept_retries,
         )
     }
 }
 
 /// Serve one host's model share as a long-lived multi-session inference
-/// service on `listener`: thread-per-session off accepted connections,
-/// shared load-once model and LRU routing cache, until `max_sessions`
-/// serving sessions have **completed** (0 = until
+/// service on `listener`: a sharded event-driven reactor
+/// (`ServeConfig::workers` threads owning non-blocking per-session
+/// state machines — host thread count is workers + 1, independent of
+/// session count), shared load-once model and LRU routing cache, until
+/// `max_sessions` serving sessions have **completed** (0 = until
 /// [`shutdown_predict_hosts`] requests wind-down; stray connections that
-/// do no serving work consume no budget). This is the body of the
-/// looping `sbp serve-predict` subcommand.
+/// do no serving work consume no budget). Sessions whose peer vanishes
+/// without FIN are reaped after `ServeConfig::session_idle_timeout`.
+/// This is the body of the looping `sbp serve-predict` subcommand.
 pub fn serve_predict_tcp(
     listener: &std::net::TcpListener,
     model: HostModel,
@@ -739,6 +763,11 @@ pub fn serve_predict_tcp(
         basis_evict: cfg.basis_evict,
         ring_high_water: state.ring_high_water(),
         decode_stall_seconds: state.decode_stall_seconds(),
+        workers: loop_report.workers,
+        worker_peak_sessions: loop_report.worker_peak_sessions,
+        poll_stall_seconds: state.poll_stall_seconds(),
+        sessions_idle_reaped: state.sessions_idle_reaped(),
+        accept_retries: loop_report.accept_retries,
         comm,
         wall_seconds: wall,
         sessions_per_sec: n_sessions as f64 / wall.max(1e-12),

@@ -19,8 +19,20 @@
 //!   same way the pipelined guest overlaps encode with RTT, and
 //!   answers still leave in frame order;
 //! - [`serve_predict_loop`] — the framed-TCP accept loop behind
-//!   `sbp serve-predict`: thread-per-session off accepted connections,
-//!   bounded per-session batches, graceful shutdown.
+//!   `sbp serve-predict`, run as a **sharded event-driven reactor**:
+//!   [`ServeConfig::workers`] worker threads (default one per CPU) each
+//!   own a shard of the live sessions as non-blocking state machines
+//!   over [`super::tcp::NbConn`] sockets, one decode/encode scratch set
+//!   per worker instead of one thread + ring per session, so ten
+//!   thousand idle sessions cost ten thousand sockets — not twenty
+//!   thousand parked OS threads. Frames are still answered strictly in
+//!   arrival order per session (a session lives on exactly one worker
+//!   and its answers queue FIFO), so serve protocol v3 is byte-identical
+//!   on the wire to the threaded engine. Sessions whose peer vanishes
+//!   without FIN are reaped after [`ServeConfig::session_idle_timeout`]
+//!   ([`SessionOutcome::idle_reaped`]); transient accept errors (fd
+//!   exhaustion, aborted handshakes) are retried with capped backoff
+//!   instead of winding the service down.
 //!
 //! ## Cache placement and correctness
 //!
@@ -62,17 +74,22 @@
 //! wire-invisible — this layer makes repeat traffic cheaper *on the
 //! wire*, per session, with bounded memory at both ends.
 
+use super::codec;
 use super::delta::DeltaBasis;
 use super::message::{
     BasisEvict, ToGuest, ToHost, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_VERSION, SESSIONLESS_ID,
 };
-use super::transport::{HostTransport, NetSnapshot};
+use super::tcp::{NbConn, RecvPoll};
+use super::transport::{HostTransport, NetCounters, NetSnapshot};
+use crate::crypto::cipher::CipherSuite;
 use crate::data::dataset::PartySlice;
 use crate::tree::predict::HostModel;
 use std::collections::HashMap;
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 /// Sentinel index for the intrusive LRU list.
 const NIL: usize = usize::MAX;
@@ -179,15 +196,29 @@ impl RoutingCache {
         self.capacity
     }
 
+    /// Acquire the LRU lock, **recovering from poison**. The cache is
+    /// shared by every session of the host's lifetime, so treating a
+    /// poisoned mutex as fatal would turn one panicking session into a
+    /// panic cascade for every later session. Recovery is sound here
+    /// because every mutation under this lock leaves the structure
+    /// consistent at each step it could unwind from: `lookup` and
+    /// `store` only index slots they just read out of `map` (no slot it
+    /// holds can be out of bounds), `detach`/`push_front` rewrite links
+    /// of already-resident nodes, and the only fallible operations in
+    /// the sequence (`Vec`/`HashMap` growth) abort on allocation
+    /// failure rather than unwinding. A panic can therefore only enter
+    /// *between* complete map/list updates — worst case the interrupted
+    /// session's final store is lost, which is just a future miss.
+    fn lock_inner(&self) -> MutexGuard<'_, LruInner> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
     /// Lock once for a whole batch of lookups/stores — the serving hot
     /// path takes one mutex acquisition per `PredictRoute` batch, not
     /// per query. Caller must ensure `capacity() > 0`.
     pub fn batch(&self) -> CacheBatch<'_> {
         debug_assert!(self.capacity > 0, "batch() on a disabled cache");
-        CacheBatch {
-            cache: self,
-            inner: self.inner.lock().expect("routing cache poisoned"),
-        }
+        CacheBatch { cache: self, inner: self.lock_inner() }
     }
 
     /// Cached routing bit for `key`, refreshing its recency on a hit.
@@ -209,7 +240,7 @@ impl RoutingCache {
 
     /// Current hit/miss/occupancy counters.
     pub fn stats(&self) -> CacheStats {
-        let entries = self.inner.lock().expect("routing cache poisoned").map.len();
+        let entries = self.lock_inner().map.len();
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
@@ -307,6 +338,23 @@ pub struct ServeConfig {
     /// answers a `PredictRoute`, to make the decode stage's ring
     /// backpressure observable. `None` in any real deployment.
     pub stage_b_delay: Option<std::time::Duration>,
+    /// Reactor worker threads the TCP serve loop shards sessions over
+    /// (0 = one per available CPU). Each worker owns its sessions
+    /// exclusively — a session's frames are decoded, answered, and
+    /// flushed by exactly one thread, which is what preserves the
+    /// per-link answer-order contract without any cross-worker
+    /// synchronization. Ignored by the transport-agnostic
+    /// [`serve_session`] engine (in-memory links keep their dedicated
+    /// 2-stage pipeline).
+    pub workers: usize,
+    /// Reap a session that produced no frame at all — no batch, no
+    /// `KeepAlive` — for this long (zero = never). This is the
+    /// dead-peer bound: a guest that vanishes without FIN (crash, NAT
+    /// drop, cable pull) otherwise pins its session slot forever.
+    /// Reaped sessions end unclean with
+    /// [`SessionOutcome::idle_reaped`] set. Guests that idle
+    /// legitimately must keep-alive inside this window.
+    pub session_idle_timeout: std::time::Duration,
 }
 
 impl Default for ServeConfig {
@@ -318,6 +366,8 @@ impl Default for ServeConfig {
             delta_window: 1 << 16,
             basis_evict: BasisEvict::Lru,
             stage_b_delay: None,
+            workers: 0,
+            session_idle_timeout: std::time::Duration::from_secs(60),
         }
     }
 }
@@ -337,6 +387,8 @@ pub struct HostServeState {
     answers_elided: AtomicU64,
     ring_high_water: AtomicUsize,
     decode_stall_nanos: AtomicU64,
+    sessions_idle_reaped: AtomicU64,
+    poll_stall_nanos: AtomicU64,
 }
 
 impl HostServeState {
@@ -354,6 +406,8 @@ impl HostServeState {
             answers_elided: AtomicU64::new(0),
             ring_high_water: AtomicUsize::new(0),
             decode_stall_nanos: AtomicU64::new(0),
+            sessions_idle_reaped: AtomicU64::new(0),
+            poll_stall_nanos: AtomicU64::new(0),
         })
     }
 
@@ -391,6 +445,22 @@ impl HostServeState {
     /// `StreamReport::stall_seconds`.
     pub fn decode_stall_seconds(&self) -> f64 {
         self.decode_stall_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Sessions ended by the dead-peer idle reaper
+    /// ([`ServeConfig::session_idle_timeout`]): no frame and no
+    /// keep-alive inside the window, peer presumed gone.
+    pub fn sessions_idle_reaped(&self) -> u64 {
+        self.sessions_idle_reaped.load(Ordering::Relaxed)
+    }
+
+    /// Total seconds reactor workers spent parked with live sessions
+    /// but nothing readable — the event-driven host's idle-poll dual of
+    /// [`Self::decode_stall_seconds`]. High values are healthy (quiet
+    /// sessions); what they buy is sleeping in one thread per worker
+    /// instead of one blocked read per session.
+    pub fn poll_stall_seconds(&self) -> f64 {
+        self.poll_stall_nanos.load(Ordering::Relaxed) as f64 * 1e-9
     }
 
     /// Ask the serve loop to stop accepting new sessions.
@@ -533,6 +603,12 @@ pub struct SessionOutcome {
     /// Ended by `SessionClose`/`Shutdown` (vs transport close or
     /// protocol error).
     pub clean_close: bool,
+    /// Ended by the dead-peer reaper: the session produced no frame —
+    /// no batch, no `KeepAlive` — for a whole
+    /// [`ServeConfig::session_idle_timeout`] window, so the host
+    /// presumed the peer gone and reclaimed the slot. Always implies
+    /// `!clean_close`.
+    pub idle_reaped: bool,
     /// Wall time from first frame awaited to session end.
     pub wall_seconds: f64,
     /// Serve-protocol version the session negotiated (3, or 2 for a
@@ -569,10 +645,246 @@ impl SessionOutcome {
     }
 }
 
+/// What [`SessionMachine::on_frame`] decided about the session's fate.
+enum Step {
+    /// Keep feeding frames.
+    Continue,
+    /// The session is over; `clean` distinguishes an orderly
+    /// `SessionClose`/`Shutdown` from a protocol error.
+    Close { clean: bool },
+}
+
+/// The per-session serving protocol as **pure plain-data state**: one
+/// decoded [`ToHost`] frame in, zero or one [`ToGuest`] answers out
+/// through the `send` sink, in order. Both session drivers run exactly
+/// this machine — the threaded 2-stage pipeline ([`serve_session`],
+/// one engine per in-memory link) and the sharded TCP reactor
+/// ([`serve_predict_loop`], many machines per worker thread) — so the
+/// wire protocol cannot drift between them: same frames in, same
+/// frames out, same order, byte-identical.
+struct SessionMachine {
+    session_id: u32,
+    hello_seen: bool,
+    negotiated: u32,
+    queries: u64,
+    batches: u64,
+    keep_alives: u64,
+    answers_elided: u64,
+    /// Per-session delta basis: (record, handle) keys already answered —
+    /// only handshaked sessions use it (hello-less legacy clients cannot
+    /// decode RouteAnswersDelta frames), so it starts inert and is built
+    /// at the hello under the negotiated eviction policy.
+    basis: DeltaBasis,
+    /// [`ServeConfig::delta_window`] clamped to what the u32
+    /// `SessionAccept` announcement can carry: the enforced cap and the
+    /// announced cap must be the same number, or the two ends'
+    /// insertion rules diverge and the delta protocol desyncs.
+    cfg_delta: usize,
+}
+
+impl SessionMachine {
+    fn new(state: &HostServeState) -> Self {
+        SessionMachine {
+            session_id: SESSIONLESS_ID,
+            hello_seen: false,
+            negotiated: 0,
+            queries: 0,
+            batches: 0,
+            keep_alives: 0,
+            answers_elided: 0,
+            basis: DeltaBasis::off(),
+            cfg_delta: state.cfg.delta_window.min(u32::MAX as usize),
+        }
+    }
+
+    /// Feed one decoded frame through the protocol. Answers leave
+    /// through `send` before this returns, so a driver that calls
+    /// `on_frame` in frame arrival order gets answer order for free.
+    fn on_frame(
+        &mut self,
+        state: &HostServeState,
+        msg: ToHost,
+        send: &mut dyn FnMut(ToGuest),
+    ) -> Step {
+        match msg {
+            ToHost::SessionHello { session_id: sid, protocol } => {
+                if self.hello_seen {
+                    eprintln!(
+                        "[sbp-serve] duplicate SessionHello in session {}, closing",
+                        self.session_id
+                    );
+                    return Step::Close { clean: false };
+                }
+                // the codec already rejects other versions; keep the
+                // check so in-memory links get the same contract
+                if (protocol != SERVE_PROTOCOL_VERSION && protocol != SERVE_PROTOCOL_V2)
+                    || sid == SESSIONLESS_ID
+                {
+                    eprintln!("[sbp-serve] malformed SessionHello, closing");
+                    return Step::Close { clean: false };
+                }
+                self.hello_seen = true;
+                self.session_id = sid;
+                // negotiate down for legacy peers: a v2 session runs a
+                // frozen basis and receives the bare 12-byte accept
+                // (the codec elides the v3 extension when the
+                // negotiated version says so)
+                self.negotiated = protocol.min(SERVE_PROTOCOL_VERSION);
+                let evict = if self.negotiated >= SERVE_PROTOCOL_VERSION {
+                    state.cfg.basis_evict
+                } else {
+                    BasisEvict::Freeze
+                };
+                self.basis = DeltaBasis::new(self.cfg_delta, evict);
+                send(ToGuest::SessionAccept {
+                    session_id: sid,
+                    max_inflight: state.cfg.max_inflight,
+                    delta_window: self.cfg_delta as u32,
+                    protocol: self.negotiated,
+                    basis_evict: evict,
+                });
+                Step::Continue
+            }
+            ToHost::PredictRoute { session, chunk, queries: q } => {
+                if session != self.session_id {
+                    // a hello-less client may still tag its frames with
+                    // a session id of its choosing (a `PredictSession`
+                    // that never called `open()`): the first batch
+                    // fixes the id for attribution. Handshake-gated
+                    // features (delta suppression, shutdown authority)
+                    // stay off, and mixing ids afterwards still closes.
+                    if !self.hello_seen && self.batches == 0 {
+                        self.session_id = session;
+                    } else {
+                        eprintln!(
+                            "[sbp-serve] PredictRoute for session {session} on session {}, closing",
+                            self.session_id
+                        );
+                        return Step::Close { clean: false };
+                    }
+                }
+                if q.len() > state.cfg.max_batch_queries {
+                    eprintln!(
+                        "[sbp-serve] batch of {} queries exceeds the per-session bound {}, closing",
+                        q.len(),
+                        state.cfg.max_batch_queries
+                    );
+                    return Step::Close { clean: false };
+                }
+                if let Some(delay) = state.cfg.stage_b_delay {
+                    std::thread::sleep(delay); // test/bench knob only
+                }
+                if self.basis.capacity() > 0 {
+                    let Some((n_known, bits)) = state.answer_delta(&q, &mut self.basis) else {
+                        eprintln!(
+                            "[sbp-serve] session {} queried records/handles this \
+                             host does not have (misaligned data?), closing",
+                            self.session_id
+                        );
+                        return Step::Close { clean: false };
+                    };
+                    if n_known == 0 {
+                        // nothing to elide: a plain answer is smaller
+                        send(ToGuest::RouteAnswers { session, chunk, n: q.len() as u32, bits });
+                    } else {
+                        self.answers_elided += n_known as u64;
+                        send(ToGuest::RouteAnswersDelta {
+                            session,
+                            chunk,
+                            n: q.len() as u32,
+                            n_known,
+                            bits,
+                        });
+                    }
+                } else {
+                    let Some(bits) = state.answer(&q) else {
+                        eprintln!(
+                            "[sbp-serve] session {} queried records/handles this \
+                             host does not have (misaligned data?), closing",
+                            self.session_id
+                        );
+                        return Step::Close { clean: false };
+                    };
+                    send(ToGuest::RouteAnswers { session, chunk, n: q.len() as u32, bits });
+                }
+                self.queries += q.len() as u64;
+                self.batches += 1;
+                Step::Continue
+            }
+            ToHost::KeepAlive => {
+                self.keep_alives += 1;
+                send(ToGuest::Ack);
+                Step::Continue
+            }
+            ToHost::SessionClose { session_id: sid } => {
+                if sid == self.session_id {
+                    Step::Close { clean: true }
+                } else {
+                    eprintln!(
+                        "[sbp-serve] SessionClose for {sid} on session {}, closing anyway",
+                        self.session_id
+                    );
+                    Step::Close { clean: false }
+                }
+            }
+            ToHost::Shutdown => {
+                // administrative wind-down is reserved to *handshaked*
+                // sessions (what coordinator::shutdown_predict_hosts
+                // opens): a hello-less legacy client's trailing Shutdown
+                // — including one on a link that happened to carry zero
+                // queries — only ends its own connection, so a plain
+                // `sbp predict` can never kill a multi-session server.
+                if self.hello_seen {
+                    state.request_stop();
+                }
+                Step::Close { clean: true }
+            }
+            other => {
+                eprintln!(
+                    "[sbp-serve] unexpected {:?} message in serving session, closing",
+                    other.kind()
+                );
+                Step::Close { clean: false }
+            }
+        }
+    }
+
+    /// Assemble the session's [`SessionOutcome`]. Pipeline metrics
+    /// (ring occupancy, decode stall, compute idle) belong to the
+    /// *driver*, not the protocol — the threaded engine measures its
+    /// ring, the reactor has none and passes zeros.
+    fn outcome(
+        &self,
+        clean_close: bool,
+        idle_reaped: bool,
+        wall_seconds: f64,
+        ring_high_water: usize,
+        decode_stall_seconds: f64,
+        compute_idle_seconds: f64,
+    ) -> SessionOutcome {
+        SessionOutcome {
+            session_id: self.session_id,
+            queries: self.queries,
+            batches: self.batches,
+            keep_alives: self.keep_alives,
+            answers_elided: self.answers_elided,
+            clean_close,
+            idle_reaped,
+            wall_seconds,
+            protocol: self.negotiated,
+            basis_evict: self.basis.mode(),
+            ring_high_water,
+            decode_stall_seconds,
+            compute_idle_seconds,
+        }
+    }
+}
+
 /// Serve one guest session over `link` until it closes: the per-session
 /// engine of the long-lived inference service, run as a **2-stage
-/// pipeline**. Transport-agnostic — `sbp serve-predict` runs it over
-/// framed TCP, tests run it over in-memory links.
+/// pipeline**. Transport-agnostic — tests and in-memory sessions run it
+/// over channel links; the TCP serve loop instead runs the same
+/// [`SessionMachine`] inside its sharded reactor.
 ///
 /// **Stage A** (a per-session decode thread) reads and decodes frame
 /// `k+1` from the transport while **Stage B** (the calling thread — the
@@ -656,193 +968,65 @@ pub fn serve_session<T: HostTransport + Send + Sync + 'static>(
             .expect("spawn serve decode thread");
     }
 
-    // ---- Stage B: the compute stage — the session state machine.
-    let mut session_id = SESSIONLESS_ID;
-    let mut hello_seen = false;
-    let mut negotiated = 0u32;
-    let mut queries = 0u64;
-    let mut batches = 0u64;
-    let mut keep_alives = 0u64;
-    let mut answers_elided = 0u64;
+    // ---- Stage B: the compute stage — drives the shared protocol
+    // machine over the ring, preserving frame order. The optional idle
+    // deadline rides on `recv_timeout`: a whole window with no decoded
+    // frame at all (the guest sent neither a batch nor a KeepAlive)
+    // means the peer is presumed dead and the session is reaped — the
+    // blocking engine's equivalent of the reactor's per-sweep check.
+    let mut machine = SessionMachine::new(state);
     let mut clean_close = false;
-    let mut compute_idle = std::time::Duration::ZERO;
-    // per-session delta basis: (record, handle) keys already answered —
-    // only handshaked sessions use it (hello-less legacy clients cannot
-    // decode RouteAnswersDelta frames), so it starts inert and is built
-    // at the hello under the negotiated eviction policy. The capacity
-    // is clamped to what the u32 `SessionAccept` announcement can
-    // carry: the enforced cap and the announced cap must be the same
-    // number, or the two ends' insertion rules diverge and the delta
-    // protocol desyncs.
-    let cfg_delta = state.cfg.delta_window.min(u32::MAX as usize);
-    let mut basis = DeltaBasis::off();
+    let mut idle_reaped = false;
+    let mut compute_idle = Duration::ZERO;
+    let idle_timeout = state.cfg.session_idle_timeout;
     loop {
-        let idle0 = std::time::Instant::now();
-        let Ok(msg) = ring_rx.recv() else {
-            break; // transport closed: Stage A dropped its ring end
+        let idle0 = Instant::now();
+        let msg = if idle_timeout.is_zero() {
+            match ring_rx.recv() {
+                Ok(msg) => msg,
+                // transport closed: Stage A dropped its ring end
+                Err(_) => break,
+            }
+        } else {
+            match ring_rx.recv_timeout(idle_timeout) {
+                Ok(msg) => msg,
+                Err(RecvTimeoutError::Timeout) => {
+                    eprintln!(
+                        "[sbp-serve] session {} idle past {:?} with no keep-alive, reaping",
+                        machine.session_id, idle_timeout
+                    );
+                    idle_reaped = true;
+                    break;
+                }
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
         };
         compute_idle += idle0.elapsed();
         ring_depth.fetch_sub(1, Ordering::SeqCst);
-        match msg {
-            ToHost::SessionHello { session_id: sid, protocol } => {
-                if hello_seen {
-                    eprintln!("[sbp-serve] duplicate SessionHello in session {session_id}, closing");
-                    break;
-                }
-                // the codec already rejects other versions; keep the
-                // check so in-memory links get the same contract
-                if (protocol != SERVE_PROTOCOL_VERSION && protocol != SERVE_PROTOCOL_V2)
-                    || sid == SESSIONLESS_ID
-                {
-                    eprintln!("[sbp-serve] malformed SessionHello, closing");
-                    break;
-                }
-                hello_seen = true;
-                session_id = sid;
-                // negotiate down for legacy peers: a v2 session runs a
-                // frozen basis and receives the bare 12-byte accept
-                // (the codec elides the v3 extension when the
-                // negotiated version says so)
-                negotiated = protocol.min(SERVE_PROTOCOL_VERSION);
-                let evict = if negotiated >= SERVE_PROTOCOL_VERSION {
-                    state.cfg.basis_evict
-                } else {
-                    BasisEvict::Freeze
-                };
-                basis = DeltaBasis::new(cfg_delta, evict);
-                link.send(ToGuest::SessionAccept {
-                    session_id: sid,
-                    max_inflight: state.cfg.max_inflight,
-                    delta_window: cfg_delta as u32,
-                    protocol: negotiated,
-                    basis_evict: evict,
-                });
-            }
-            ToHost::PredictRoute { session, chunk, queries: q } => {
-                if session != session_id {
-                    // a hello-less client may still tag its frames with
-                    // a session id of its choosing (a `PredictSession`
-                    // that never called `open()`): the first batch
-                    // fixes the id for attribution. Handshake-gated
-                    // features (delta suppression, shutdown authority)
-                    // stay off, and mixing ids afterwards still closes.
-                    if !hello_seen && batches == 0 {
-                        session_id = session;
-                    } else {
-                        eprintln!(
-                            "[sbp-serve] PredictRoute for session {session} on session {session_id}, closing"
-                        );
-                        break;
-                    }
-                }
-                if q.len() > state.cfg.max_batch_queries {
-                    eprintln!(
-                        "[sbp-serve] batch of {} queries exceeds the per-session bound {}, closing",
-                        q.len(),
-                        state.cfg.max_batch_queries
-                    );
-                    break;
-                }
-                if let Some(delay) = state.cfg.stage_b_delay {
-                    std::thread::sleep(delay); // test/bench knob only
-                }
-                if basis.capacity() > 0 {
-                    let Some((n_known, bits)) = state.answer_delta(&q, &mut basis) else {
-                        eprintln!(
-                            "[sbp-serve] session {session_id} queried records/handles this \
-                             host does not have (misaligned data?), closing"
-                        );
-                        break;
-                    };
-                    if n_known == 0 {
-                        // nothing to elide: a plain answer is smaller
-                        link.send(ToGuest::RouteAnswers {
-                            session,
-                            chunk,
-                            n: q.len() as u32,
-                            bits,
-                        });
-                    } else {
-                        answers_elided += n_known as u64;
-                        link.send(ToGuest::RouteAnswersDelta {
-                            session,
-                            chunk,
-                            n: q.len() as u32,
-                            n_known,
-                            bits,
-                        });
-                    }
-                } else {
-                    let Some(bits) = state.answer(&q) else {
-                        eprintln!(
-                            "[sbp-serve] session {session_id} queried records/handles this \
-                             host does not have (misaligned data?), closing"
-                        );
-                        break;
-                    };
-                    link.send(ToGuest::RouteAnswers { session, chunk, n: q.len() as u32, bits });
-                }
-                queries += q.len() as u64;
-                batches += 1;
-            }
-            ToHost::KeepAlive => {
-                keep_alives += 1;
-                link.send(ToGuest::Ack);
-            }
-            ToHost::SessionClose { session_id: sid } => {
-                if sid == session_id {
-                    clean_close = true;
-                } else {
-                    eprintln!(
-                        "[sbp-serve] SessionClose for {sid} on session {session_id}, closing anyway"
-                    );
-                }
-                break;
-            }
-            ToHost::Shutdown => {
-                // administrative wind-down is reserved to *handshaked*
-                // sessions (what coordinator::shutdown_predict_hosts
-                // opens): a hello-less legacy client's trailing Shutdown
-                // — including one on a link that happened to carry zero
-                // queries — only ends its own connection, so a plain
-                // `sbp predict` can never kill a multi-session server.
-                if hello_seen {
-                    state.request_stop();
-                }
-                clean_close = true;
-                break;
-            }
-            other => {
-                eprintln!(
-                    "[sbp-serve] unexpected {:?} message in serving session, closing",
-                    other.kind()
-                );
-                break;
-            }
+        if let Step::Close { clean } = machine.on_frame(state, msg, &mut |m| link.send(m)) {
+            clean_close = clean;
+            break;
         }
     }
     // end the receive direction so a Stage-A thread still blocked in a
     // transport read exits promptly (answers already sent precede the
     // FIN — write_frame flushes per frame)
     link.shutdown();
-    let outcome = SessionOutcome {
-        session_id,
-        queries,
-        batches,
-        keep_alives,
-        answers_elided,
+    let outcome = machine.outcome(
         clean_close,
-        wall_seconds: t0.elapsed().as_secs_f64(),
-        protocol: negotiated,
-        basis_evict: basis.mode(),
-        ring_high_water: ring_high.load(Ordering::Relaxed),
-        decode_stall_seconds: decode_stall_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
-        compute_idle_seconds: compute_idle.as_secs_f64(),
-    };
+        idle_reaped,
+        t0.elapsed().as_secs_f64(),
+        ring_high.load(Ordering::Relaxed),
+        decode_stall_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        compute_idle.as_secs_f64(),
+    );
     state.ring_high_water.fetch_max(outcome.ring_high_water, Ordering::Relaxed);
     state
         .decode_stall_nanos
         .fetch_add(decode_stall_nanos.load(Ordering::Relaxed), Ordering::Relaxed);
+    if idle_reaped {
+        state.sessions_idle_reaped.fetch_add(1, Ordering::Relaxed);
+    }
     if !outcome.is_control_only() {
         state.sessions_served.fetch_add(1, Ordering::Relaxed);
     }
@@ -892,6 +1076,18 @@ pub struct ServeLoopReport {
     pub comm: NetSnapshot,
     /// Per-session reports dropped after the retention cap was hit.
     pub sessions_dropped: u64,
+    /// Reactor worker threads the loop ran ([`ServeConfig::workers`],
+    /// resolved: 0 became the CPU count).
+    pub workers: usize,
+    /// Per-worker peak concurrent sessions — the shard occupancy
+    /// high-water of each reactor worker, indexed by worker. Their sum
+    /// bounds (and under all-concurrent load equals) the loop's peak
+    /// concurrent sessions; the spread shows how evenly least-occupied
+    /// dispatch balanced the shards.
+    pub worker_peak_sessions: Vec<usize>,
+    /// Transient accept errors (fd exhaustion, aborted handshakes)
+    /// survived with backoff instead of winding the service down.
+    pub accept_retries: u64,
 }
 
 struct LoopAccum {
@@ -900,24 +1096,71 @@ struct LoopAccum {
     dropped: u64,
 }
 
-/// Accept guest connections on `listener` and serve each as its own
-/// session on its own thread until `max_sessions` *serving* sessions
-/// have **completed** (0 = unlimited) or a handshaked session requests
-/// shutdown ([`ToHost::Shutdown`] after a hello →
+/// Where the serve loop's connections come from: a [`TcpListener`] in
+/// production, injectable fakes in tests (e.g. a listener that fails
+/// its first accepts with `EMFILE` to exercise the backoff path).
+pub trait AcceptSource: Sync {
+    /// Accept the next inbound connection (blocking).
+    fn accept(&self) -> std::io::Result<(TcpStream, SocketAddr)>;
+    /// The bound local address (aims the wake-up self-connection).
+    fn local_addr(&self) -> std::io::Result<SocketAddr>;
+}
+
+impl AcceptSource for TcpListener {
+    fn accept(&self) -> std::io::Result<(TcpStream, SocketAddr)> {
+        TcpListener::accept(self)
+    }
+    fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        TcpListener::local_addr(self)
+    }
+}
+
+/// Accept guest connections on `listener` and serve them on a **sharded
+/// reactor** until `max_sessions` *serving* sessions have **completed**
+/// (0 = unlimited) or a handshaked session requests shutdown
+/// ([`ToHost::Shutdown`] after a hello →
 /// [`HostServeState::request_stop`]). Control-only connections (stray
 /// probes, the administrative stop connection) consume no session
 /// budget and produce no report.
 ///
 /// This is the body of the looping `sbp serve-predict` subcommand: one
 /// host process, many concurrent guest sessions, one shared model share
-/// and routing cache. Finished session threads are reaped as the loop
-/// runs and per-session reports are capped
+/// and routing cache. [`ServeConfig::workers`] reactor threads each own
+/// a shard of the live sessions as non-blocking state machines
+/// ([`SessionMachine`] over [`NbConn`]); the accept loop dispatches
+/// each connection to the least-occupied shard. Host thread count is
+/// `workers + 1`, independent of session count — the previous
+/// architecture's two threads *per session* are gone, which is what
+/// lets one process hold thousands of concurrent sessions.
+///
+/// **Ordering guarantee:** a session lives on exactly one worker for
+/// its whole life, and that worker decodes its frames in arrival order
+/// and queues each answer before decoding the next frame, so answers
+/// leave per link in frame order — serve protocol v3 stays
+/// byte-identical on the wire to the threaded [`serve_session`] engine
+/// (asserted end-to-end by `tests/serve_soak.rs`).
+///
+/// Liveness: sessions idle past [`ServeConfig::session_idle_timeout`]
+/// are reaped (dead-peer defense); transient accept errors (`EMFILE`,
+/// `ECONNABORTED`…) are retried with capped backoff instead of
+/// draining the service; a non-transient accept error stops accepting
+/// but still drains resident sessions. Per-session reports are capped
 /// ([`RETAINED_SESSION_REPORTS`]), so an unlimited server's memory is
 /// bounded by its *concurrent* sessions, not its lifetime. Shutdown
 /// requests and budget exhaustion wake the accept loop with a loopback
 /// self-connection, so it reacts promptly even with no client traffic.
 pub fn serve_predict_loop(
     listener: &TcpListener,
+    state: &Arc<HostServeState>,
+    max_sessions: usize,
+) -> std::io::Result<ServeLoopReport> {
+    serve_predict_loop_on(listener, state, max_sessions)
+}
+
+/// [`serve_predict_loop`] over any [`AcceptSource`] — the actual
+/// reactor body, generic so tests can inject erroring listeners.
+pub fn serve_predict_loop_on<A: AcceptSource>(
+    listener: &A,
     state: &Arc<HostServeState>,
     max_sessions: usize,
 ) -> std::io::Result<ServeLoopReport> {
@@ -934,66 +1177,77 @@ pub fn serve_predict_loop(
         }
         ip => ip,
     };
-    let wake = std::net::SocketAddr::new(wake_ip, local.port());
+    let wake = SocketAddr::new(wake_ip, local.port());
+    let workers = if state.cfg.workers > 0 {
+        state.cfg.workers
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
     let accum: Arc<Mutex<LoopAccum>> = Arc::new(Mutex::new(LoopAccum {
         sessions: Vec::new(),
         comm: NetSnapshot::default(),
         dropped: 0,
     }));
-    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
-    let mut next_id = 0usize;
+    // per-shard occupancy, maintained by the dispatcher (+1 on dispatch)
+    // and the workers (−1 on session end) — the dispatch key
+    let occupancy: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..workers).map(|_| AtomicUsize::new(0)).collect());
+    let mut senders = Vec::with_capacity(workers);
+    let mut worker_handles = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let (tx, rx) = std::sync::mpsc::channel::<(TcpStream, SocketAddr)>();
+        senders.push(tx);
+        let st = Arc::clone(state);
+        let occ = Arc::clone(&occupancy);
+        let sink = Arc::clone(&accum);
+        let handle = std::thread::Builder::new()
+            .name(format!("sbp-serve-worker-{w}"))
+            .spawn(move || reactor_worker(st, rx, occ, w, sink, wake, max_sessions))
+            .expect("spawn serve worker thread");
+        worker_handles.push(handle);
+    }
+    let mut accept_retries = 0u64;
+    let mut backoff = Duration::from_millis(1);
     while !state.stop_requested() && !budget_met(state, max_sessions) {
         let (stream, peer) = match listener.accept() {
             Ok(conn) => conn,
+            Err(e) if accept_error_is_transient(&e) => {
+                // one fd spike or aborted handshake must not wind the
+                // whole service down: log, back off (capped), retry —
+                // a reset backoff after any success keeps the common
+                // case latency-free
+                accept_retries += 1;
+                eprintln!("[sbp-serve] transient accept error ({e}), retrying in {backoff:?}");
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_millis(100));
+                continue;
+            }
             Err(e) => {
-                // never abandon in-flight sessions over an accept error
-                // (EMFILE under load, etc.): stop accepting, drain below
+                // never abandon in-flight sessions over an accept error:
+                // stop accepting, drain below
                 eprintln!("[sbp-serve] accept failed, draining sessions: {e}");
                 break;
             }
         };
+        backoff = Duration::from_millis(1);
         if state.stop_requested() || budget_met(state, max_sessions) {
             break; // the wake-up connection (or a late arrival) — drop it
         }
-        // reap finished session threads so a long-lived server's handle
-        // list is bounded by concurrency, not lifetime
-        handles.retain(|h| !h.is_finished());
-        next_id += 1;
-        let st = state.clone();
-        let sink = accum.clone();
-        let handle = std::thread::Builder::new()
-            .name(format!("sbp-serve-session-{next_id}"))
-            .spawn(move || {
-                let transport = super::tcp::TcpHostTransport::new(stream);
-                let counters = transport.counters();
-                let outcome = serve_session(&st, transport);
-                // control-only connections are not serving sessions —
-                // keep them out of the reports and aggregates
-                if !outcome.is_control_only() {
-                    if let Ok(mut acc) = sink.lock() {
-                        let comm = counters.snapshot();
-                        acc.comm = acc.comm.add(&comm);
-                        acc.sessions.push(SessionReport {
-                            outcome,
-                            peer: peer.to_string(),
-                            comm,
-                        });
-                        if acc.sessions.len() > RETAINED_SESSION_REPORTS {
-                            acc.sessions.remove(0);
-                            acc.dropped += 1;
-                        }
-                    }
-                }
-                if st.stop_requested() || budget_met(&st, max_sessions) {
-                    // poke the accept loop awake so it sees the state
-                    let _ = TcpStream::connect(wake);
-                }
-            })
-            .expect("spawn serve session thread");
-        handles.push(handle);
+        // dispatch to the least-occupied shard; occupancy is bumped
+        // here rather than at adoption so a burst of accepts spreads
+        // evenly even before any worker has polled its inbox
+        let w = least_occupied(&occupancy);
+        occupancy[w].fetch_add(1, Ordering::SeqCst);
+        if senders[w].send((stream, peer)).is_err() {
+            occupancy[w].fetch_sub(1, Ordering::SeqCst);
+        }
     }
-    for h in handles {
-        let _ = h.join();
+    // dropping the inbox senders is the workers' drain signal: finish
+    // the sessions already resident, then exit
+    drop(senders);
+    let mut worker_peak_sessions = Vec::with_capacity(workers);
+    for h in worker_handles {
+        worker_peak_sessions.push(h.join().map(|s| s.peak_sessions).unwrap_or(0));
     }
     let accum = Arc::try_unwrap(accum)
         .map(|m| m.into_inner().unwrap_or_else(|e| e.into_inner()))
@@ -1006,7 +1260,374 @@ pub fn serve_predict_loop(
         sessions: accum.sessions,
         comm: accum.comm,
         sessions_dropped: accum.dropped,
+        workers,
+        worker_peak_sessions,
+        accept_retries,
     })
+}
+
+/// The shard index with the fewest live-or-dispatched sessions.
+fn least_occupied(occupancy: &[AtomicUsize]) -> usize {
+    let mut best = 0usize;
+    let mut best_n = usize::MAX;
+    for (i, o) in occupancy.iter().enumerate() {
+        let n = o.load(Ordering::SeqCst);
+        if n < best_n {
+            best = i;
+            best_n = n;
+        }
+    }
+    best
+}
+
+/// Accept errors worth retrying: resource pressure (`EMFILE`/`ENFILE`)
+/// and per-connection failures (the peer aborted its own handshake) —
+/// conditions that clear on their own, unlike a dead listener fd.
+/// Checked by raw errno for the fd-exhaustion pair because std has no
+/// stable `ErrorKind` for them.
+fn accept_error_is_transient(e: &std::io::Error) -> bool {
+    if matches!(e.raw_os_error(), Some(23) | Some(24)) {
+        return true; // ENFILE / EMFILE
+    }
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::ConnectionAborted
+            | std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::Interrupted
+            | std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// What one reactor worker reports when it drains.
+struct WorkerStats {
+    /// Peak concurrent sessions resident on this shard.
+    peak_sessions: usize,
+}
+
+/// One live session on a reactor worker: its non-blocking connection,
+/// the shared protocol machine, and per-session accounting state.
+struct NbSession {
+    conn: NbConn,
+    peer: SocketAddr,
+    machine: SessionMachine,
+    counters: NetCounters,
+    t0: Instant,
+    /// Last time a complete frame arrived (or queued answers flushed) —
+    /// the idle-reap clock.
+    last_activity: Instant,
+    /// `Some(clean)` once the session has ended and only its write
+    /// backlog remains to drain.
+    closing: Option<bool>,
+    idle_reaped: bool,
+}
+
+/// Context one reactor worker shares across every session of its shard:
+/// the wire suite for ct-free serving frames — the same fixed plain
+/// suite [`super::tcp::TcpHostTransport`]'s send path falls back to, so
+/// byte accounting matches the threaded host exactly — and one reusable
+/// encode scratch buffer, the per-worker replacement for the threaded
+/// engine's per-session decode thread + ring.
+struct WorkerCtx {
+    suite: CipherSuite,
+    ct_len: usize,
+    scratch: Vec<u8>,
+}
+
+/// Soft cap on one session's unflushed write backlog: past this the
+/// worker stops *reading* that session's frames until the kernel drains
+/// answers, so a guest that never reads cannot grow host memory —
+/// the reactor's analogue of the blocking engine's socket-level
+/// backpressure.
+const WRITE_SOFT_LIMIT: usize = 1 << 20;
+
+/// How long a worker parks when a full sweep over its shard made no
+/// progress (no frame, no flushed byte, no new connection). Counted in
+/// [`HostServeState::poll_stall_seconds`].
+const POLL_PARK: Duration = Duration::from_micros(200);
+
+/// Consecutive progress-free sweeps before a worker parks: a few hot
+/// spins ride out the sub-microsecond gap between back-to-back frames
+/// of a pipelined guest without paying the park latency.
+const PARK_AFTER_IDLE_SWEEPS: u32 = 16;
+
+/// One reactor worker: owns a shard of sessions, sweeping each
+/// non-blocking connection for readable frames, feeding them through
+/// the shared [`SessionMachine`] in arrival order, and flushing queued
+/// answers — all on this one thread, which is the entire ordering
+/// argument. New connections arrive over `inbox`; the inbox closing is
+/// the drain signal.
+fn reactor_worker(
+    state: Arc<HostServeState>,
+    inbox: Receiver<(TcpStream, SocketAddr)>,
+    occupancy: Arc<Vec<AtomicUsize>>,
+    slot: usize,
+    accum: Arc<Mutex<LoopAccum>>,
+    wake: SocketAddr,
+    max_sessions: usize,
+) -> WorkerStats {
+    let suite = CipherSuite::new_plain(64);
+    let ct_len = suite.ct_byte_len();
+    let mut ctx = WorkerCtx { suite, ct_len, scratch: Vec::new() };
+    let mut sessions: Vec<NbSession> = Vec::new();
+    let mut inbox_open = true;
+    let mut idle_sweeps = 0u32;
+    let mut peak = 0usize;
+    let idle_timeout = state.cfg.session_idle_timeout;
+    loop {
+        // adopt newly dispatched connections without blocking
+        while inbox_open {
+            match inbox.try_recv() {
+                Ok((stream, peer)) => {
+                    if let Some(sess) = adopt_conn(&state, stream, peer) {
+                        sessions.push(sess);
+                    } else {
+                        occupancy[slot].fetch_sub(1, Ordering::SeqCst);
+                    }
+                    idle_sweeps = 0;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => inbox_open = false,
+            }
+        }
+        peak = peak.max(sessions.len());
+        if sessions.is_empty() {
+            if !inbox_open {
+                break; // drained: no sessions, no more connections
+            }
+            // idle shard: block on the inbox instead of spinning (the
+            // timeout keeps the drain signal prompt)
+            match inbox.recv_timeout(Duration::from_millis(20)) {
+                Ok((stream, peer)) => {
+                    if let Some(sess) = adopt_conn(&state, stream, peer) {
+                        sessions.push(sess);
+                    } else {
+                        occupancy[slot].fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => inbox_open = false,
+            }
+            continue;
+        }
+        // sweep every session once; finished ones leave the shard
+        let mut progress = false;
+        let now = Instant::now();
+        let mut i = 0usize;
+        while i < sessions.len() {
+            let finished =
+                sweep_session(&state, &mut sessions[i], &mut ctx, now, idle_timeout, &mut progress);
+            if finished {
+                let sess = sessions.swap_remove(i);
+                finalize_session(&state, sess, &accum, wake, max_sessions);
+                occupancy[slot].fetch_sub(1, Ordering::SeqCst);
+                progress = true;
+            } else {
+                i += 1;
+            }
+        }
+        if progress {
+            idle_sweeps = 0;
+        } else {
+            idle_sweeps += 1;
+            if idle_sweeps >= PARK_AFTER_IDLE_SWEEPS {
+                // nothing readable anywhere on the shard: park briefly.
+                // This is the reactor's poll stall — one sleeping thread
+                // per *worker*, where the old host parked one blocked
+                // read per *session*.
+                std::thread::sleep(POLL_PARK);
+                state
+                    .poll_stall_nanos
+                    .fetch_add(POLL_PARK.as_nanos() as u64, Ordering::Relaxed);
+            }
+        }
+    }
+    WorkerStats { peak_sessions: peak }
+}
+
+/// Wrap an accepted socket as a shard session (non-blocking mode on).
+fn adopt_conn(state: &HostServeState, stream: TcpStream, peer: SocketAddr) -> Option<NbSession> {
+    match NbConn::new(stream) {
+        Ok(conn) => {
+            let now = Instant::now();
+            Some(NbSession {
+                conn,
+                peer,
+                machine: SessionMachine::new(state),
+                counters: NetCounters::default(),
+                t0: now,
+                last_activity: now,
+                closing: None,
+                idle_reaped: false,
+            })
+        }
+        Err(e) => {
+            eprintln!("[sbp-serve] failed to adopt connection from {peer}: {e}");
+            None
+        }
+    }
+}
+
+/// One readiness sweep over one session: flush what the kernel will
+/// take, drain every frame the socket already holds through the
+/// protocol machine (in arrival order, answers queued FIFO), then check
+/// the idle deadline. Returns `true` when the session is over *and* its
+/// final answers have left — the caller then finalizes it.
+fn sweep_session(
+    state: &HostServeState,
+    sess: &mut NbSession,
+    ctx: &mut WorkerCtx,
+    now: Instant,
+    idle_timeout: Duration,
+    progress: &mut bool,
+) -> bool {
+    // 1. drain the write backlog first: answers already computed take
+    //    priority over new work, and a closing session only waits here
+    match sess.conn.flush_pending() {
+        Ok(0) => {}
+        Ok(_) => {
+            sess.last_activity = now;
+            *progress = true;
+        }
+        Err(e) => {
+            eprintln!("[sbp-serve] transport error, closing: {e}");
+            sess.closing = Some(sess.closing.unwrap_or(false));
+            return true;
+        }
+    }
+    if sess.closing.is_some() {
+        // done once the final answers have left — or once a peer that
+        // stopped reading them has been silent a whole idle window
+        // (the write-side dual of the dead-peer reap)
+        return sess.conn.write_idle()
+            || (!idle_timeout.is_zero()
+                && now.duration_since(sess.last_activity) >= idle_timeout);
+    }
+    // 2. read and answer every frame the socket already holds — but
+    //    stop reading while the write backlog is past the soft limit,
+    //    so a guest that never reads its answers is backpressured at
+    //    the socket instead of growing host memory
+    while sess.closing.is_none() && sess.conn.pending_write() < WRITE_SOFT_LIMIT {
+        match sess.conn.poll_frame() {
+            Ok(RecvPoll::Frame) => {
+                *progress = true;
+                sess.last_activity = now;
+                let payload = sess.conn.frame_payload();
+                let wire_len = (payload.len() + codec::FRAME_HEADER_LEN) as u64;
+                // serving frames carry no ciphertexts, so no Setup
+                // state is needed to decode them
+                let msg = match codec::decode_to_host(None, payload) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        eprintln!("[sbp-host] malformed frame, closing: {e}");
+                        sess.closing = Some(false);
+                        break;
+                    }
+                };
+                sess.conn.consume_frame();
+                sess.counters.record_to_host(msg.kind(), wire_len);
+                let NbSession { conn, machine, counters, .. } = sess;
+                let step = machine.on_frame(state, msg, &mut |m: ToGuest| {
+                    codec::encode_to_guest_into(&ctx.suite, ctx.ct_len, &m, &mut ctx.scratch);
+                    counters.record_to_guest(
+                        m.kind(),
+                        (ctx.scratch.len() + codec::FRAME_HEADER_LEN) as u64,
+                    );
+                    conn.queue_frame(&ctx.scratch);
+                });
+                if let Step::Close { clean } = step {
+                    sess.closing = Some(clean);
+                }
+            }
+            Ok(RecvPoll::Pending) => break,
+            Ok(RecvPoll::Closed) => {
+                // FIN without SessionClose: transport close, not clean
+                sess.closing = Some(false);
+            }
+            Err(e) => {
+                eprintln!("[sbp-host] transport error, closing: {e}");
+                sess.closing = Some(false);
+            }
+        }
+    }
+    // 3. push what this sweep produced toward the kernel
+    match sess.conn.flush_pending() {
+        Ok(0) => {}
+        Ok(_) => {
+            sess.last_activity = now;
+            *progress = true;
+        }
+        Err(e) => {
+            eprintln!("[sbp-serve] transport error, closing: {e}");
+            sess.closing = Some(sess.closing.unwrap_or(false));
+            return true;
+        }
+    }
+    if sess.closing.is_some() {
+        // done once the final answers have left — or once a peer that
+        // stopped reading them has been silent a whole idle window
+        // (the write-side dual of the dead-peer reap)
+        return sess.conn.write_idle()
+            || (!idle_timeout.is_zero()
+                && now.duration_since(sess.last_activity) >= idle_timeout);
+    }
+    // 4. dead-peer reaping: a whole idle window with no frame at all —
+    //    no batch, no KeepAlive — means the peer is presumed gone. The
+    //    write drain is skipped deliberately: there is no one reading.
+    if !idle_timeout.is_zero() && now.duration_since(sess.last_activity) >= idle_timeout {
+        eprintln!(
+            "[sbp-serve] session {} idle past {:?} with no keep-alive, reaping",
+            sess.machine.session_id, idle_timeout
+        );
+        sess.idle_reaped = true;
+        sess.closing = Some(false);
+        return true;
+    }
+    false
+}
+
+/// Retire a finished shard session: close the socket, assemble its
+/// outcome, account it, and poke the accept loop if the service should
+/// now wind down.
+fn finalize_session(
+    state: &HostServeState,
+    sess: NbSession,
+    accum: &Arc<Mutex<LoopAccum>>,
+    wake: SocketAddr,
+    max_sessions: usize,
+) {
+    sess.conn.shutdown();
+    // ring/stall metrics are the threaded pipeline's; the reactor has
+    // no per-session ring, so they are structurally zero here
+    let outcome = sess.machine.outcome(
+        sess.closing.unwrap_or(false) && !sess.idle_reaped,
+        sess.idle_reaped,
+        sess.t0.elapsed().as_secs_f64(),
+        0,
+        0.0,
+        0.0,
+    );
+    if sess.idle_reaped {
+        state.sessions_idle_reaped.fetch_add(1, Ordering::Relaxed);
+    }
+    // control-only connections are not serving sessions — keep them
+    // out of the counters, reports, and the session budget
+    if !outcome.is_control_only() {
+        state.sessions_served.fetch_add(1, Ordering::Relaxed);
+        if let Ok(mut acc) = accum.lock() {
+            let comm = sess.counters.snapshot();
+            acc.comm = acc.comm.add(&comm);
+            acc.sessions.push(SessionReport { outcome, peer: sess.peer.to_string(), comm });
+            if acc.sessions.len() > RETAINED_SESSION_REPORTS {
+                acc.sessions.remove(0);
+                acc.dropped += 1;
+            }
+        }
+    }
+    if state.stop_requested() || budget_met(state, max_sessions) {
+        // poke the accept loop awake so it sees the state
+        let _ = TcpStream::connect(wake);
+    }
 }
 
 /// The loop's session budget: `max_sessions` completed serving sessions
@@ -1349,5 +1970,87 @@ mod tests {
         guest.send(ToHost::Shutdown);
         let outcome = handle.join().expect("session thread");
         assert!(outcome.clean_close);
+    }
+
+    #[test]
+    fn poisoned_routing_cache_recovers_for_later_sessions() {
+        let state = toy_state(16);
+        // poison the cache lock the way a real incident would: a session
+        // thread panics while holding it
+        let state2 = state.clone();
+        let prev_hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {})); // keep the expected panic quiet
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let _batch = state2.cache.batch();
+            panic!("session dies holding the cache lock");
+        }));
+        std::panic::set_hook(prev_hook);
+        assert!(state.cache.inner.is_poisoned(), "the lock must actually be poisoned");
+
+        // a later session must keep serving through the same cache
+        // instead of joining a panic cascade
+        let (guest, host) = link_pair_bounded(8, 1);
+        let handle = spawn_serve_session(state.clone(), host);
+        guest.send(ToHost::SessionHello { session_id: 11, protocol: SERVE_PROTOCOL_VERSION });
+        let ToGuest::SessionAccept { .. } = guest.recv() else { panic!("expected accept") };
+        guest.send(ToHost::PredictRoute {
+            session: 11,
+            chunk: 0,
+            queries: vec![(1, 0), (1, 1)],
+        });
+        let ToGuest::RouteAnswers { bits, .. } = guest.recv() else {
+            panic!("expected RouteAnswers through the poisoned cache")
+        };
+        assert_eq!(bits, vec![0b10]);
+        guest.send(ToHost::SessionClose { session_id: 11 });
+        let outcome = handle.join().expect("session thread");
+        assert!(outcome.clean_close);
+        let cs = state.cache_stats();
+        assert_eq!(cs.misses, 2, "stats() recovers the poisoned guard too");
+    }
+
+    #[test]
+    fn threaded_engine_reaps_idle_sessions() {
+        let model = HostModel { party: 0, splits: vec![(0, 0, 1.0), (1, 2, -1.0)] };
+        let slice = PartySlice {
+            cols: vec![0, 1],
+            x: vec![0.5, 0.0, 2.0, -2.0, 0.5, 5.0, 2.0, -1.5],
+            n: 4,
+        };
+        let state = HostServeState::new(
+            model,
+            slice,
+            ServeConfig {
+                cache_capacity: 0,
+                session_idle_timeout: Duration::from_millis(50),
+                ..ServeConfig::default()
+            },
+        );
+        let (guest, host) = link_pair_bounded(8, 1);
+        let handle = spawn_serve_session(state.clone(), host);
+        guest.send(ToHost::SessionHello { session_id: 8, protocol: SERVE_PROTOCOL_VERSION });
+        let ToGuest::SessionAccept { .. } = guest.recv() else { panic!("expected accept") };
+        guest.send(ToHost::PredictRoute { session: 8, chunk: 0, queries: Vec::new() });
+        let ToGuest::RouteAnswers { .. } = guest.recv() else { panic!("expected answer") };
+        // …then silence. The guest holds its link open but never speaks
+        // again — indistinguishable from a crashed peer. The session
+        // must end by reaping, not hang forever.
+        let outcome = handle.join().expect("session thread");
+        assert!(outcome.idle_reaped, "the silent session must be reaped");
+        assert!(!outcome.clean_close);
+        assert_eq!(outcome.batches, 1);
+        assert_eq!(state.sessions_idle_reaped(), 1);
+        assert_eq!(state.sessions_served(), 1, "a reaped session still served its batch");
+        drop(guest);
+    }
+
+    #[test]
+    fn transient_accept_errors_are_classified() {
+        use std::io::{Error, ErrorKind};
+        assert!(accept_error_is_transient(&Error::from_raw_os_error(24)), "EMFILE");
+        assert!(accept_error_is_transient(&Error::from_raw_os_error(23)), "ENFILE");
+        assert!(accept_error_is_transient(&Error::from(ErrorKind::ConnectionAborted)));
+        assert!(!accept_error_is_transient(&Error::from(ErrorKind::PermissionDenied)));
+        assert!(!accept_error_is_transient(&Error::from(ErrorKind::InvalidInput)));
     }
 }

@@ -23,12 +23,13 @@
 //! keeps up to `max_inflight` request frames on the wire per session
 //! (the host still answers them strictly in arrival order). The
 //! long-lived serving path multiplexes many *sessions* over one
-//! listener — each accepted connection becomes its own
-//! [`TcpHostTransport`] driven by its own session thread
-//! ([`crate::federation::serve::serve_predict_loop`]), so per-session
-//! backpressure is the socket buffer plus the announced in-flight
-//! bound, and per-session byte accounting is simply this endpoint's
-//! [`NetCounters`].
+//! listener — each accepted connection becomes a **non-blocking**
+//! [`NbConn`] owned by one reactor worker of
+//! [`crate::federation::serve::serve_predict_loop`], which reads,
+//! answers, and flushes it with explicit would-block results instead
+//! of parked threads; per-session backpressure is the socket buffer
+//! plus the announced in-flight bound, and per-session byte accounting
+//! stays a per-connection [`NetCounters`].
 //!
 //! Hot-path allocation: each endpoint owns per-connection read/write
 //! scratch buffers; frames are encoded with
@@ -44,6 +45,7 @@ use crate::data::binning::BinnedMatrix;
 use crate::data::sparse::SparseBinned;
 use crate::federation::host::HostParty;
 use crate::util::timer::PhaseTimer;
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Mutex};
 
@@ -63,6 +65,181 @@ impl ConnIo {
     fn new(stream: TcpStream) -> Self {
         stream.set_nodelay(true).ok();
         ConnIo { stream, rbuf: Vec::new(), wbuf: Vec::new() }
+    }
+}
+
+/// Result of one [`NbConn::poll_frame`] attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvPoll {
+    /// A complete frame is buffered: read it with
+    /// [`NbConn::frame_payload`], then release it with
+    /// [`NbConn::consume_frame`].
+    Frame,
+    /// No complete frame yet and the socket has nothing more to read
+    /// right now (`EWOULDBLOCK`) — try again on the next sweep.
+    Pending,
+    /// The peer closed the connection cleanly at a frame boundary.
+    Closed,
+}
+
+/// One **non-blocking** framed connection: the readiness-driven
+/// counterpart of the blocking `ConnIo`, built for the serving reactor
+/// ([`crate::federation::serve::serve_predict_loop`]) where one worker
+/// thread multiplexes many sockets and must never park inside a read
+/// or write on any single one of them. Reads accumulate into an
+/// internal buffer until one whole `u64 LE length`-prefixed frame is
+/// resident ([`RecvPoll::Frame`]); writes queue into an internal
+/// buffer and drain as far as the kernel allows
+/// ([`NbConn::flush_pending`]) — both directions report would-block
+/// explicitly instead of blocking. Frame boundaries, length limits,
+/// and error classification mirror [`codec::read_frame_into`] /
+/// [`codec::write_frame`] exactly, so the bytes on the wire are
+/// byte-identical to the blocking transport's.
+pub struct NbConn {
+    stream: TcpStream,
+    /// Read accumulation buffer; the first `rfill` bytes are valid.
+    rbuf: Vec<u8>,
+    rfill: usize,
+    /// Total size (header + payload) of the frame being assembled, set
+    /// once the 8-byte header is in; `None` while still reading it.
+    rneed: Option<usize>,
+    /// Outbound bytes queued for the kernel; the first `wpos` of them
+    /// are already written.
+    wbuf: Vec<u8>,
+    wpos: usize,
+}
+
+impl NbConn {
+    /// Take ownership of an accepted socket, switching it to
+    /// non-blocking mode (plus `TCP_NODELAY`, like the blocking path).
+    pub fn new(stream: TcpStream) -> std::io::Result<Self> {
+        stream.set_nonblocking(true)?;
+        stream.set_nodelay(true).ok();
+        Ok(NbConn { stream, rbuf: Vec::new(), rfill: 0, rneed: None, wbuf: Vec::new(), wpos: 0 })
+    }
+
+    /// Drive the read side as far as the socket allows without
+    /// blocking. Returns [`RecvPoll::Frame`] as soon as one complete
+    /// frame is resident; the frame stays buffered until
+    /// [`Self::consume_frame`], so callers decode it in place. Reads
+    /// never run past the current frame's end, so pipelined back-to-back
+    /// frames are surfaced one at a time, in order.
+    pub fn poll_frame(&mut self) -> Result<RecvPoll, codec::WireError> {
+        loop {
+            let target = self.rneed.unwrap_or(codec::FRAME_HEADER_LEN);
+            if self.rfill >= target {
+                if self.rneed.is_some() {
+                    return Ok(RecvPoll::Frame);
+                }
+                // header complete: learn the frame's total size
+                let hdr: [u8; codec::FRAME_HEADER_LEN] =
+                    self.rbuf[..codec::FRAME_HEADER_LEN].try_into().expect("8-byte header");
+                let len = u64::from_le_bytes(hdr);
+                if len > codec::MAX_FRAME_LEN {
+                    return Err(codec::WireError::FrameTooLarge(len));
+                }
+                self.rneed = Some(codec::FRAME_HEADER_LEN + len as usize);
+                continue;
+            }
+            // grow toward the target in bounded (1 MiB) steps, like
+            // read_frame_into: a garbage length field cannot drive one
+            // giant up-front allocation
+            let step = target.min(self.rfill + (1 << 20));
+            if self.rbuf.len() < step {
+                self.rbuf.resize(step, 0);
+            }
+            match self.stream.read(&mut self.rbuf[self.rfill..step]) {
+                Ok(0) => {
+                    return if self.rfill == 0 && self.rneed.is_none() {
+                        Ok(RecvPoll::Closed)
+                    } else {
+                        Err(codec::WireError::Truncated)
+                    };
+                }
+                Ok(n) => self.rfill += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    return Ok(RecvPoll::Pending);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(codec::WireError::Io(e)),
+            }
+        }
+    }
+
+    /// The completed frame's payload (valid after [`RecvPoll::Frame`]).
+    pub fn frame_payload(&self) -> &[u8] {
+        let total = self.rneed.expect("no completed frame resident");
+        &self.rbuf[codec::FRAME_HEADER_LEN..total]
+    }
+
+    /// Release the current frame so the next [`Self::poll_frame`] can
+    /// assemble its successor.
+    pub fn consume_frame(&mut self) {
+        let total = self.rneed.take().expect("no completed frame resident");
+        // reads are bounded by the frame end, so nothing of the next
+        // frame can be in the buffer — but shift defensively anyway
+        self.rbuf.copy_within(total..self.rfill, 0);
+        self.rfill -= total;
+    }
+
+    /// Queue one frame (length prefix + `payload`) for transmission.
+    /// Bytes sit in the write buffer until [`Self::flush_pending`]
+    /// drains them; the already-flushed prefix is compacted away so a
+    /// long-lived session's buffer is bounded by its unflushed backlog,
+    /// not its history.
+    pub fn queue_frame(&mut self, payload: &[u8]) {
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos >= (1 << 16) {
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+        self.wbuf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        self.wbuf.extend_from_slice(payload);
+    }
+
+    /// Write queued bytes until the kernel would block or all are gone.
+    /// Returns how many bytes the kernel accepted this call.
+    pub fn flush_pending(&mut self) -> std::io::Result<usize> {
+        let mut written = 0usize;
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "socket accepted zero bytes",
+                    ));
+                }
+                Ok(n) => {
+                    self.wpos += n;
+                    written += n;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+        Ok(written)
+    }
+
+    /// Bytes queued but not yet accepted by the kernel.
+    pub fn pending_write(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    /// True when every queued byte has reached the kernel.
+    pub fn write_idle(&self) -> bool {
+        self.wpos == self.wbuf.len()
+    }
+
+    /// Close both directions (best effort — the peer may be gone).
+    pub fn shutdown(&self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
     }
 }
 
@@ -308,5 +485,91 @@ mod tests {
 
         drop(guest); // closes the socket → server recv sees clean EOF
         server.join().unwrap();
+    }
+
+    /// Poll `conn` until it reports something other than `Pending` (the
+    /// loopback delivery of a just-written chunk is asynchronous).
+    fn poll_settled(conn: &mut NbConn) -> Result<RecvPoll, codec::WireError> {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            match conn.poll_frame() {
+                Ok(RecvPoll::Pending) if std::time::Instant::now() < deadline => {
+                    thread::sleep(std::time::Duration::from_millis(1));
+                }
+                other => return other,
+            }
+        }
+    }
+
+    #[test]
+    fn nonblocking_conn_assembles_split_frames_without_blocking() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut conn = NbConn::new(server).unwrap();
+
+        // nothing sent yet: pending, not closed, not an error — and the
+        // poll returned instead of parking the thread
+        assert_eq!(conn.poll_frame().unwrap(), RecvPoll::Pending);
+
+        let payload = b"reactor frame";
+        let mut frame = (payload.len() as u64).to_le_bytes().to_vec();
+        frame.extend_from_slice(payload);
+        // half a header is never a frame, whether or not it has landed
+        client.write_all(&frame[..5]).unwrap();
+        assert_eq!(conn.poll_frame().unwrap(), RecvPoll::Pending);
+        client.write_all(&frame[5..]).unwrap();
+        assert_eq!(poll_settled(&mut conn).unwrap(), RecvPoll::Frame);
+        assert_eq!(conn.frame_payload(), payload);
+        conn.consume_frame();
+
+        // a clean FIN at the frame boundary is a close, not an error
+        drop(client);
+        assert_eq!(poll_settled(&mut conn).unwrap(), RecvPoll::Closed);
+    }
+
+    #[test]
+    fn nonblocking_conn_reports_mid_frame_fin_as_truncated() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut conn = NbConn::new(server).unwrap();
+
+        // a header promising 10 bytes, then only 3, then FIN
+        client.write_all(&10u64.to_le_bytes()).unwrap();
+        client.write_all(b"abc").unwrap();
+        drop(client);
+        let err = poll_settled(&mut conn).expect_err("mid-frame FIN must error");
+        assert!(
+            matches!(err, codec::WireError::Truncated),
+            "expected Truncated, got {err:?}"
+        );
+    }
+
+    #[test]
+    fn nonblocking_conn_queues_and_flushes_writes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut conn = NbConn::new(server).unwrap();
+
+        conn.queue_frame(b"abc");
+        conn.queue_frame(b"defg");
+        assert_eq!(conn.pending_write(), 8 + 3 + 8 + 4);
+        assert!(!conn.write_idle());
+        while !conn.write_idle() {
+            conn.flush_pending().unwrap();
+        }
+        assert_eq!(conn.pending_write(), 0);
+
+        let mut buf = vec![0u8; 8 + 3 + 8 + 4];
+        client.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf[..8], &3u64.to_le_bytes());
+        assert_eq!(&buf[8..11], b"abc");
+        assert_eq!(&buf[11..19], &4u64.to_le_bytes());
+        assert_eq!(&buf[19..], b"defg");
     }
 }

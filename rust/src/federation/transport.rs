@@ -7,7 +7,12 @@
 //! - the in-process [`GuestLink`]/[`HostLink`] pair (mpsc channels; the
 //!   historical default — parties are threads in one process), and
 //! - the framed TCP transport in [`super::tcp`], which serializes every
-//!   message through [`super::codec`] and crosses a real socket.
+//!   message through [`super::codec`] and crosses a real socket. On the
+//!   serving host the blocking [`HostTransport`] wrapper is only used by
+//!   the in-process engine; the TCP reactor in [`super::serve`] drives
+//!   the same codec through the non-blocking [`super::tcp::NbConn`]
+//!   instead, charging identical per-frame byte counts into its own
+//!   [`NetCounters`].
 //!
 //! Both charge the **same** per-message byte counts: the in-memory links
 //! use [`super::codec::to_host_wire_len`]/[`to_guest_wire_len`], which are

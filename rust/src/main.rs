@@ -150,6 +150,11 @@ fn main() {
                  \x20 --max-inflight <n>     unanswered chunks tolerated per session\n\
                  \x20                        (default 8), announced to clients; also the\n\
                  \x20                        host's decode-ring depth (2-stage pipeline)\n\
+                 \x20 --serve-workers <n>    reactor worker threads sharding the live\n\
+                 \x20                        sessions (default 0 = one per CPU)\n\
+                 \x20 --session-idle-timeout <secs>  reap sessions silent for this long\n\
+                 \x20                        — no frame, no keep-alive — as dead peers\n\
+                 \x20                        (default 60; 0 = never)\n\
                  \x20 --bind <ip> --port <p> listen address (default 127.0.0.1:7979)\n\
                  \n\
                  datagen options:\n\
@@ -813,6 +818,8 @@ fn cmd_serve_predict(args: &Args) {
     let cache_capacity: usize = args.get_parse("cache-capacity", 1usize << 16);
     let delta_window: usize = args.get_parse("delta-window", 1usize << 16);
     let max_inflight: u32 = args.get_parse("max-inflight", 8u32);
+    let serve_workers: usize = args.get_parse("serve-workers", 0usize);
+    let idle_secs: u64 = args.get_parse("session-idle-timeout", 60u64);
     let evict_arg = args.get_or("basis-evict", "lru");
     let Some(basis_evict) = sbp::federation::message::BasisEvict::parse(&evict_arg) else {
         eprintln!("--basis-evict takes 'lru' or 'freeze', got '{evict_arg}'");
@@ -874,6 +881,8 @@ fn cmd_serve_predict(args: &Args) {
         delta_window,
         max_inflight: max_inflight.max(1),
         basis_evict,
+        workers: serve_workers,
+        session_idle_timeout: std::time::Duration::from_secs(idle_secs),
         ..sbp::federation::serve::ServeConfig::default()
     };
     match sbp::coordinator::serve_predict_tcp(&listener, art.model, slice, cfg, max_sessions) {
@@ -890,7 +899,13 @@ fn cmd_serve_predict(args: &Args) {
                     s.outcome.protocol,
                     s.outcome.basis_evict.name(),
                     s.outcome.ring_high_water,
-                    if s.outcome.clean_close { "" } else { "unclean close, " },
+                    if s.outcome.idle_reaped {
+                        "idle-reaped, "
+                    } else if s.outcome.clean_close {
+                        ""
+                    } else {
+                        "unclean close, "
+                    },
                     s.outcome.wall_seconds,
                 );
             }

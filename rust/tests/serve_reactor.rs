@@ -1,0 +1,256 @@
+//! Reactor-host regression tests: 256 concurrent sessions on a handful
+//! of worker threads (host thread count bounded by workers + constant,
+//! not by session count), a dead peer reaped by the idle timeout
+//! without disturbing its neighbors, and transient accept errors
+//! (fd exhaustion) survived with backoff instead of draining the
+//! service.
+
+use sbp::config::{CipherKind, TrainConfig};
+use sbp::coordinator::{predict_centralized, predict_sessions_tcp, serve_predict_tcp, ServeReport};
+use sbp::crypto::cipher::CipherSuite;
+use sbp::data::dataset::VerticalSplit;
+use sbp::data::synthetic::SyntheticSpec;
+use sbp::federation::message::{ToGuest, ToHost, SERVE_PROTOCOL_VERSION};
+use sbp::federation::predict::{PredictOptions, PredictSession};
+use sbp::federation::serve::{
+    serve_predict_loop_on, AcceptSource, HostServeState, ServeConfig, ServeLoopReport,
+};
+use sbp::federation::tcp::TcpGuestTransport;
+use sbp::federation::transport::GuestTransport;
+use sbp::tree::predict::{GuestModel, HostModel};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::time::Duration;
+
+type Links = Vec<Box<dyn GuestTransport>>;
+
+fn fast_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::secureboost_plus();
+    cfg.epochs = 4;
+    cfg.max_depth = 3;
+    cfg.cipher = CipherKind::Plain;
+    cfg.goss = None;
+    cfg.sparse_optimization = false;
+    cfg
+}
+
+fn train(spec: SyntheticSpec, cfg: &TrainConfig) -> (VerticalSplit, GuestModel, Vec<HostModel>) {
+    let vs = spec.generate_vertical(cfg.seed, cfg.n_hosts);
+    let rep = sbp::coordinator::train_federated(&vs, cfg).expect("training run");
+    let (guest_m, host_ms) = rep.model();
+    (vs, guest_m, host_ms)
+}
+
+fn start_server(
+    vs: &VerticalSplit,
+    host_ms: &[HostModel],
+    cfg: ServeConfig,
+    max_sessions: usize,
+) -> (String, std::thread::JoinHandle<ServeReport>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    let model = host_ms[0].clone();
+    let slice = vs.hosts[0].clone();
+    let handle = std::thread::spawn(move || {
+        serve_predict_tcp(&listener, model, slice, cfg, max_sessions).expect("serve loop")
+    });
+    (addr, handle)
+}
+
+/// Threads in this process right now (Linux: one entry per task).
+/// Returns 0 where /proc is unavailable, which turns the bounded-thread
+/// assertion into a no-op rather than a false failure.
+fn thread_count() -> usize {
+    std::fs::read_dir("/proc/self/task").map(|d| d.count()).unwrap_or(0)
+}
+
+/// The tentpole regression: 256 sessions live at once on a 4-worker
+/// reactor. The old architecture pinned two OS threads per session
+/// (512+); the reactor must stay at workers + constant while every
+/// session still bit-matches centralized scoring.
+#[test]
+fn reactor_serves_256_concurrent_sessions_with_bounded_threads() {
+    const SESSIONS: usize = 256;
+    const WORKERS: usize = 4;
+    let (vs, guest_m, host_ms) = train(SyntheticSpec::give_credit(0.002), &fast_cfg());
+    let oracle = predict_centralized(&guest_m, &host_ms, &vs);
+
+    let threads_before = thread_count();
+    let (addr, server) = start_server(
+        &vs,
+        &host_ms,
+        ServeConfig { workers: WORKERS, ..ServeConfig::default() },
+        SESSIONS,
+    );
+
+    // open every session before predicting on any, so all 256 are
+    // resident on the host at the same time
+    let mut open: Vec<(PredictSession<'_>, Links)> = Vec::with_capacity(SESSIONS);
+    for s in 0..SESSIONS {
+        let links: Links = vec![Box::new(
+            TcpGuestTransport::connect(&addr, CipherSuite::new_plain(64)).expect("connect"),
+        )];
+        let mut session = PredictSession::new(&guest_m, (s + 1) as u32, PredictOptions::default());
+        session.open(&links);
+        open.push((session, links));
+    }
+
+    // with 256 sessions resident the host must not have grown by
+    // hundreds of threads: workers + accept loop + slack for the test
+    // harness's own concurrency, far under one thread per session
+    let threads_during = thread_count();
+    assert!(
+        threads_during <= threads_before + WORKERS + 16,
+        "host threads must be bounded by workers + constant: \
+         {threads_before} before, {threads_during} with {SESSIONS} live sessions"
+    );
+
+    for (session, links) in &mut open {
+        let preds = session.predict_batch(&vs.guest, links);
+        assert_eq!(preds, oracle, "session {} must bit-match centralized", session.session_id());
+    }
+    for (session, links) in open {
+        session.close(&links);
+    }
+
+    let report = server.join().expect("server thread");
+    assert_eq!(report.n_sessions, SESSIONS);
+    assert_eq!(report.workers, WORKERS);
+    assert_eq!(report.worker_peak_sessions.len(), WORKERS);
+    assert_eq!(
+        report.worker_peak_sessions.iter().sum::<usize>(),
+        SESSIONS,
+        "all sessions were concurrent, so shard peaks must account for every one"
+    );
+    assert_eq!(report.sessions_idle_reaped, 0);
+    for s in &report.sessions {
+        assert!(s.outcome.clean_close, "session {} must close cleanly", s.outcome.session_id);
+        assert!(!s.outcome.idle_reaped);
+    }
+}
+
+/// Dead-peer bugfix: a guest that goes silent without FIN (crash, NAT
+/// drop) is reaped once the idle window passes — freeing its session
+/// slot — while a healthy neighbor on the same reactor is untouched.
+#[test]
+fn dead_peer_is_reaped_without_disturbing_neighbors() {
+    let (vs, guest_m, host_ms) = train(SyntheticSpec::give_credit(0.002), &fast_cfg());
+    let oracle = predict_centralized(&guest_m, &host_ms, &vs);
+    let (addr, server) = start_server(
+        &vs,
+        &host_ms,
+        ServeConfig {
+            workers: 2,
+            session_idle_timeout: Duration::from_millis(300),
+            ..ServeConfig::default()
+        },
+        2,
+    );
+
+    // the hung guest: handshakes, sends one (empty) batch so it counts
+    // as a served session, then never speaks again — and never closes
+    // its socket, which is exactly what a vanished peer looks like
+    let hung = TcpGuestTransport::connect(&addr, CipherSuite::new_plain(64)).expect("connect");
+    hung.send(ToHost::SessionHello { session_id: 99, protocol: SERVE_PROTOCOL_VERSION });
+    assert!(matches!(hung.recv(), ToGuest::SessionAccept { .. }));
+    hung.send(ToHost::PredictRoute { session: 99, chunk: 0, queries: Vec::new() });
+    let _ = hung.recv(); // the empty batch's answer
+
+    // a healthy session on the same host, concurrent with the hung one
+    let healthy = predict_sessions_tcp(
+        &guest_m,
+        &vs.guest,
+        std::slice::from_ref(&addr),
+        1,
+        1,
+        PredictOptions::default(),
+    )
+    .expect("healthy session");
+    assert_eq!(healthy[0].preds, oracle, "the dead peer must not disturb its neighbor");
+
+    // the server's budget is 2 sessions: the healthy close plus the
+    // reap of session 99 — if the reap never fired, this join would
+    // hang on the leaked slot forever
+    let report = server.join().expect("server thread");
+    assert_eq!(report.n_sessions, 2);
+    assert_eq!(report.sessions_idle_reaped, 1);
+    let reaped = report
+        .sessions
+        .iter()
+        .find(|s| s.outcome.session_id == 99)
+        .expect("the hung session must still be reported");
+    assert!(reaped.outcome.idle_reaped, "session 99 must be idle-reaped");
+    assert!(!reaped.outcome.clean_close);
+    assert_eq!(reaped.outcome.batches, 1);
+    let neighbor = report
+        .sessions
+        .iter()
+        .find(|s| s.outcome.session_id != 99)
+        .expect("the healthy session must be reported");
+    assert!(neighbor.outcome.clean_close);
+    assert!(!neighbor.outcome.idle_reaped);
+
+    // only now may the hung socket drop — a FIN earlier would have been
+    // an (unclean) transport close, not an idle reap
+    drop(hung);
+}
+
+/// An accept source whose first accepts fail like a process out of file
+/// descriptors (`EMFILE`), then behaves.
+struct FlakyListener {
+    inner: TcpListener,
+    failures: AtomicU32,
+}
+
+impl AcceptSource for FlakyListener {
+    fn accept(&self) -> std::io::Result<(TcpStream, SocketAddr)> {
+        if self.failures.load(Ordering::SeqCst) > 0 {
+            self.failures.fetch_sub(1, Ordering::SeqCst);
+            return Err(std::io::Error::from_raw_os_error(24)); // EMFILE
+        }
+        self.inner.accept()
+    }
+    fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.inner.local_addr()
+    }
+}
+
+/// Accept-loop bugfix: transient fd exhaustion is retried with backoff,
+/// so the service survives a spike instead of winding down and the
+/// client that arrives afterwards is served normally.
+#[test]
+fn transient_accept_errors_back_off_and_retry() {
+    let (vs, guest_m, host_ms) = train(SyntheticSpec::give_credit(0.002), &fast_cfg());
+    let oracle = predict_centralized(&guest_m, &host_ms, &vs);
+
+    let listener = FlakyListener {
+        inner: TcpListener::bind("127.0.0.1:0").expect("bind loopback"),
+        failures: AtomicU32::new(3),
+    };
+    let addr = listener.local_addr().unwrap().to_string();
+    let state = HostServeState::new(
+        host_ms[0].clone(),
+        vs.hosts[0].clone(),
+        ServeConfig { workers: 1, ..ServeConfig::default() },
+    );
+    let server_state = state.clone();
+    let server = std::thread::spawn(move || -> ServeLoopReport {
+        serve_predict_loop_on(&listener, &server_state, 1).expect("serve loop")
+    });
+
+    let reports = predict_sessions_tcp(
+        &guest_m,
+        &vs.guest,
+        std::slice::from_ref(&addr),
+        1,
+        1,
+        PredictOptions::default(),
+    )
+    .expect("session after the fd spike");
+    assert_eq!(reports[0].preds, oracle);
+
+    let loop_report = server.join().expect("server thread");
+    assert_eq!(loop_report.accept_retries, 3, "every EMFILE must be retried, not fatal");
+    assert_eq!(loop_report.sessions.len(), 1);
+    assert!(loop_report.sessions[0].outcome.clean_close);
+}
