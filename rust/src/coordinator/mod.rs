@@ -287,6 +287,13 @@ pub struct PredictReport {
     /// Guest wall seconds blocked on host answers with nothing else
     /// runnable (pipeline stall time).
     pub stall_seconds: f64,
+    /// Successful serve-protocol-v4 session resumptions this pass
+    /// performed after a connection died mid-stream.
+    pub reconnects: u64,
+    /// Answer frames the hosts replayed verbatim across those
+    /// resumptions (answers generated before the connection died but
+    /// never received the first time).
+    pub chunks_replayed: u64,
 }
 
 impl PredictReport {
@@ -316,6 +323,8 @@ impl PredictReport {
             chunks: 0,
             mean_inflight: 0.0,
             stall_seconds: 0.0,
+            reconnects: 0,
+            chunks_replayed: 0,
         }
     }
 
@@ -341,6 +350,8 @@ impl PredictReport {
         self.chunks = stream.chunks;
         self.mean_inflight = stream.mean_inflight;
         self.stall_seconds = stream.stall_seconds;
+        self.reconnects = stream.reconnects;
+        self.chunks_replayed = stream.chunks_replayed;
         self.delta_elided = delta_elided;
         self
     }
@@ -687,6 +698,16 @@ pub struct ServeReport {
     /// Sessions ended by the dead-peer idle reaper
     /// (`ServeConfig::session_idle_timeout`).
     pub sessions_idle_reaped: u64,
+    /// Successful serve-protocol-v4 session resumptions: a v4 session
+    /// whose connection died was parked, reconnected within
+    /// `ServeConfig::resume_window`, and continued. A resumed session
+    /// still counts **once** in `n_sessions` and appears once in
+    /// `sessions`, however many connections carried it.
+    pub sessions_resumed: u64,
+    /// Parked v4 sessions whose guest never returned within
+    /// `ServeConfig::resume_window` — reaped at window expiry (the
+    /// idle reaper never touches parked sessions).
+    pub sessions_resume_expired: u64,
     /// Transient accept errors (fd exhaustion, aborted handshakes)
     /// survived with backoff instead of winding the service down.
     pub accept_retries: u64,
@@ -711,7 +732,7 @@ impl ServeReport {
              {:.0} queries/s, {:.1} B/query, \
              cache {}/{} hit/miss ({:.1}% hit rate), \
              {} reactor worker(s) (shard peaks Σ{}), \
-             {} idle-reaped, {} accept retry(ies)",
+             {} resumed, {} resume-expired, {} idle-reaped, {} accept retry(ies)",
             self.n_sessions,
             self.queries_answered,
             self.answers_elided,
@@ -723,6 +744,8 @@ impl ServeReport {
             self.cache.hit_rate() * 100.0,
             self.workers,
             self.worker_peak_sessions.iter().sum::<usize>(),
+            self.sessions_resumed,
+            self.sessions_resume_expired,
             self.sessions_idle_reaped,
             self.accept_retries,
         )
@@ -767,6 +790,8 @@ pub fn serve_predict_tcp(
         worker_peak_sessions: loop_report.worker_peak_sessions,
         poll_stall_seconds: state.poll_stall_seconds(),
         sessions_idle_reaped: state.sessions_idle_reaped(),
+        sessions_resumed: state.sessions_resumed(),
+        sessions_resume_expired: state.sessions_resume_expired(),
         accept_retries: loop_report.accept_retries,
         comm,
         wall_seconds: wall,

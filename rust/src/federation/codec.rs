@@ -656,6 +656,10 @@ pub fn encode_to_host_into(suite: &CipherSuite, ct_len: usize, msg: &ToHost, out
             put_u32(out, *protocol);
         }
         ToHost::SessionClose { session_id } => put_u32(out, *session_id),
+        ToHost::SessionResume { session, last_acked_chunk } => {
+            put_u32(out, *session);
+            put_u32(out, *last_acked_chunk);
+        }
     }
     debug_assert_eq!(out.len() + FRAME_HEADER_LEN, to_host_wire_len(msg, ct_len));
 }
@@ -767,12 +771,13 @@ pub fn decode_to_host(
             // a hello must announce a real (nonzero) session and a
             // protocol version this build speaks — anything else is a
             // malformed handshake the serving host rejects up front.
-            // v2 hellos are accepted (the session is negotiated down to
-            // v2 semantics); anything else is rejected.
+            // v3/v2 hellos are accepted (the session is negotiated down
+            // to the older semantics); anything else is rejected.
             if session_id == crate::federation::message::SESSIONLESS_ID {
                 return Err(WireError::Malformed("SessionHello with reserved session id 0"));
             }
             if protocol != crate::federation::message::SERVE_PROTOCOL_VERSION
+                && protocol != crate::federation::message::SERVE_PROTOCOL_V3
                 && protocol != crate::federation::message::SERVE_PROTOCOL_V2
             {
                 return Err(WireError::Malformed("unsupported serve protocol version"));
@@ -781,6 +786,18 @@ pub fn decode_to_host(
         }
         10 => ToHost::SessionClose { session_id: r.u32()? },
         11 => ToHost::KeepAlive,
+        12 => {
+            let session = r.u32()?;
+            let last_acked_chunk = r.u32()?;
+            // only real (handshaked, nonzero-id) sessions can ever be
+            // parked, so a resume naming the reserved id is malformed
+            if session == crate::federation::message::SESSIONLESS_ID {
+                return Err(WireError::Malformed(
+                    "SessionResume with reserved session id 0",
+                ));
+            }
+            ToHost::SessionResume { session, last_acked_chunk }
+        }
         t => return Err(WireError::BadTag { what: "to-host message", tag: t }),
     };
     r.finish()?;
@@ -847,15 +864,16 @@ pub fn encode_to_guest_into(
             put_u32(out, *max_inflight);
             put_u32(out, *delta_window);
             // v3 extension: appended only when the negotiated protocol
-            // speaks it, so a v2 peer receives exactly the 12-byte
-            // accept its decoder expects (its trailing-bytes check
-            // would reject anything longer)
+            // speaks it (v3 or v4), so a v2 peer receives exactly the
+            // 12-byte accept its decoder expects (its trailing-bytes
+            // check would reject anything longer)
             debug_assert!(
                 *protocol == crate::federation::message::SERVE_PROTOCOL_V2
+                    || *protocol == crate::federation::message::SERVE_PROTOCOL_V3
                     || *protocol == crate::federation::message::SERVE_PROTOCOL_VERSION,
                 "accept must carry a negotiated protocol this build speaks"
             );
-            if *protocol >= crate::federation::message::SERVE_PROTOCOL_VERSION {
+            if *protocol >= crate::federation::message::SERVE_PROTOCOL_V3 {
                 put_u32(out, *protocol);
                 out.push(*basis_evict as u8);
             }
@@ -872,6 +890,10 @@ pub fn encode_to_guest_into(
             put_u32(out, *n);
             put_u32(out, *n_known);
             out.extend_from_slice(bits);
+        }
+        ToGuest::ResumeAccept { next_chunk, basis_epoch } => {
+            put_u32(out, *next_chunk);
+            put_u32(out, *basis_epoch);
         }
     }
     debug_assert_eq!(out.len() + FRAME_HEADER_LEN, to_guest_wire_len(msg, ct_len));
@@ -931,8 +953,9 @@ pub fn decode_to_guest(
             let max_inflight = r.u32()?;
             let delta_window = r.u32()?;
             // a bare 12-byte accept is the v2 form (legacy host, or a
-            // v3 host negotiating a v2 hello down): freeze semantics.
-            // Anything longer must be a well-formed v3 extension.
+            // newer host negotiating a v2 hello down): freeze
+            // semantics. Anything longer must be a well-formed v3/v4
+            // extension.
             let (protocol, basis_evict) = if r.remaining() == 0 {
                 (
                     crate::federation::message::SERVE_PROTOCOL_V2,
@@ -940,9 +963,11 @@ pub fn decode_to_guest(
                 )
             } else {
                 let protocol = r.u32()?;
-                if protocol != crate::federation::message::SERVE_PROTOCOL_VERSION {
+                if protocol != crate::federation::message::SERVE_PROTOCOL_V3
+                    && protocol != crate::federation::message::SERVE_PROTOCOL_VERSION
+                {
                     return Err(WireError::Malformed(
-                        "SessionAccept extension with a non-v3 protocol",
+                        "SessionAccept extension with an unknown protocol",
                     ));
                 }
                 let tag = r.u8()?;
@@ -980,6 +1005,7 @@ pub fn decode_to_guest(
                 bits: r.take(n_bytes)?.to_vec(),
             }
         }
+        7 => ToGuest::ResumeAccept { next_chunk: r.u32()?, basis_epoch: r.u32()? },
         t => return Err(WireError::BadTag { what: "to-guest message", tag: t }),
     };
     r.finish()?;
@@ -1021,6 +1047,7 @@ pub fn to_host_wire_len(msg: &ToHost, ct_len: usize) -> usize {
             ToHost::PredictRoute { queries, .. } => 4 + 4 + 4 + queries.len() * 8,
             ToHost::SessionHello { .. } => 8,
             ToHost::SessionClose { .. } => 4,
+            ToHost::SessionResume { .. } => 8,
         }
 }
 
@@ -1041,7 +1068,7 @@ pub fn to_guest_wire_len(msg: &ToGuest, ct_len: usize) -> usize {
             ToGuest::Ack => 0,
             ToGuest::RouteAnswers { n, .. } => 4 + 4 + 4 + (*n as usize).div_ceil(8),
             ToGuest::SessionAccept { protocol, .. } => {
-                if *protocol >= crate::federation::message::SERVE_PROTOCOL_VERSION {
+                if *protocol >= crate::federation::message::SERVE_PROTOCOL_V3 {
                     17 // v3 extension: + protocol u32 + basis-evict tag
                 } else {
                     12
@@ -1050,6 +1077,7 @@ pub fn to_guest_wire_len(msg: &ToGuest, ct_len: usize) -> usize {
             ToGuest::RouteAnswersDelta { n, n_known, .. } => {
                 16 + ((*n - *n_known) as usize).div_ceil(8)
             }
+            ToGuest::ResumeAccept { .. } => 8,
         }
 }
 

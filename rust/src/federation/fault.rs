@@ -1,0 +1,390 @@
+//! Deterministic fault injection for the serving transports.
+//!
+//! Recovery code that is only exercised by real network failures is
+//! recovery code that is never exercised. This module makes failures
+//! *happen on demand*: a seeded [`FaultPlan`] names the exact frame
+//! boundary where a connection dies, how many bytes of the next frame
+//! leak out first (torn write), and how much latency to inject — so
+//! every failure scenario the resumption tests assert
+//! (`tests/serve_fault.rs`) is a replayable seed, never a flaky race.
+//!
+//! Two composable wrappers cover both transport styles:
+//!
+//! - [`FaultyTransport`] wraps the guest's blocking
+//!   [`TcpGuestTransport`] behind the same [`GuestTransport`] trait, so
+//!   the prediction engine cannot tell it is being sabotaged. It counts
+//!   every frame that fully crosses the link (both directions) and,
+//!   when the armed plan's boundary is reached, kills the socket —
+//!   optionally after tearing the next outbound frame — and surfaces
+//!   the injected death through `try_send`/`try_recv` exactly like a
+//!   real one. Kills are **graceful FINs**, not RSTs: everything fully
+//!   written before the kill still reaches the host, which is what
+//!   makes the replay arithmetic of a resumed session deterministic
+//!   (the host answers precisely the requests that were fully sent).
+//! - [`FaultyConn`] is the byte-level feeder for the host's
+//!   non-blocking [`NbConn`](super::tcp::NbConn): it dribbles raw bytes
+//!   at chosen split points and tears/kills frames mid-flight, driving
+//!   the reactor's incremental reassembly through every short-read
+//!   shape the partial-I/O corpus enumerates.
+//!
+//! Per-kill bookkeeping ([`FaultyTransport::kill_log`]) records how
+//! many `PredictRoute` frames had fully crossed versus how many answer
+//! frames had come back at the moment of each kill — the two numbers
+//! whose difference is exactly the count of answer frames a resumed
+//! session must see replayed, letting tests assert
+//! `chunks_replayed` matches the injected plan *exactly*.
+
+use super::message::{ToGuest, ToGuestKind, ToHost, ToHostKind};
+use super::tcp::TcpGuestTransport;
+use super::transport::{GuestTransport, NetSnapshot};
+use crate::util::rng::Xoshiro256;
+use std::collections::VecDeque;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// One injected connection failure, fully determined up front.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    /// The seed this plan was derived from (bookkeeping only — carried
+    /// so a failing test case prints the seed that reproduces it).
+    pub seed: u64,
+    /// Kill the connection at the frame boundary after this many
+    /// frames (both directions combined) have fully crossed the
+    /// wrapper since it was armed: the operation that would carry
+    /// frame `kill_after_frames + 1` dies instead. `0` = never kill.
+    pub kill_after_frames: u64,
+    /// When the kill lands on a *send*, write this many bytes of the
+    /// doomed frame first (a torn write the receiver must discard);
+    /// `0` kills cleanly at the boundary. Ignored for kills landing on
+    /// a receive.
+    pub partial_write_bytes: usize,
+    /// Latency injected immediately before the kill fires.
+    pub delay: Duration,
+}
+
+impl FaultPlan {
+    /// A plan that never fires (pass-through wrapper).
+    pub fn benign() -> FaultPlan {
+        FaultPlan { seed: 0, kill_after_frames: 0, partial_write_bytes: 0, delay: Duration::ZERO }
+    }
+
+    /// Derive a kill plan deterministically from `seed`: the boundary
+    /// lands in `1..=max_frames`, roughly half the kills tear the
+    /// doomed frame (1–63 leaked bytes), and a quarter inject a small
+    /// (≤ 5 ms) delay first. Same seed, same plan — always.
+    pub fn from_seed(seed: u64, max_frames: u64) -> FaultPlan {
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xFA17_FA17_FA17_FA17);
+        let kill_after_frames = 1 + rng.next_u64() % max_frames.max(1);
+        let partial_write_bytes =
+            if rng.next_u64() % 2 == 0 { 1 + (rng.next_u64() % 63) as usize } else { 0 };
+        let delay = if rng.next_u64() % 4 == 0 {
+            Duration::from_millis(1 + rng.next_u64() % 5)
+        } else {
+            Duration::ZERO
+        };
+        FaultPlan { seed, kill_after_frames, partial_write_bytes, delay }
+    }
+}
+
+fn injected(what: &'static str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::ConnectionReset, format!("injected fault: {what}"))
+}
+
+struct FaultState {
+    /// Remaining plans; the front one is armed. After its kill fires the
+    /// wrapper stays dead until [`GuestTransport::reconnect`] pops it
+    /// and arms the next (a connection's plan dies with the connection).
+    plans: VecDeque<FaultPlan>,
+    /// Frames fully crossed since the armed plan was armed.
+    frames_since_arm: u64,
+    /// Frames fully crossed over the wrapper's whole life.
+    frames_total: u64,
+    /// The armed plan has fired and no reconnect has happened yet.
+    dead: bool,
+    /// Cumulative fully-sent `PredictRoute` frames.
+    routes_sent: u64,
+    /// Cumulative fully-received answer frames
+    /// (`RouteAnswers`/`RouteAnswersDelta`).
+    answers_recv: u64,
+    /// `(routes_sent, answers_recv)` at the moment of each kill.
+    kill_log: Vec<(u64, u64)>,
+}
+
+impl FaultState {
+    fn armed_kill(&self) -> Option<FaultPlan> {
+        let plan = self.plans.front()?;
+        (plan.kill_after_frames != 0 && self.frames_since_arm >= plan.kill_after_frames)
+            .then_some(*plan)
+    }
+
+    fn record_kill(&mut self) {
+        self.dead = true;
+        self.kill_log.push((self.routes_sent, self.answers_recv));
+    }
+}
+
+/// Fault-injecting [`GuestTransport`] wrapper over a
+/// [`TcpGuestTransport`] (see the module docs). Traffic counters and
+/// reconnection are the inner transport's — the wrapper only decides
+/// *when* the connection dies.
+pub struct FaultyTransport {
+    inner: TcpGuestTransport,
+    st: Mutex<FaultState>,
+}
+
+impl FaultyTransport {
+    /// Wrap `inner` with a queue of plans: the first is armed now, each
+    /// subsequent one is armed by the reconnect that recovers from its
+    /// predecessor's kill. An empty queue (or [`FaultPlan::benign`]
+    /// entries) makes the wrapper a pure pass-through.
+    pub fn new(inner: TcpGuestTransport, plans: Vec<FaultPlan>) -> FaultyTransport {
+        FaultyTransport {
+            inner,
+            st: Mutex::new(FaultState {
+                plans: plans.into(),
+                frames_since_arm: 0,
+                frames_total: 0,
+                dead: false,
+                routes_sent: 0,
+                answers_recv: 0,
+                kill_log: Vec::new(),
+            }),
+        }
+    }
+
+    /// Kills fired so far.
+    pub fn kills(&self) -> u64 {
+        self.st.lock().expect("fault state poisoned").kill_log.len() as u64
+    }
+
+    /// `(fully_sent_routes, fully_received_answers)` at the moment of
+    /// each kill, in kill order. For each entry the difference is the
+    /// exact number of answer frames the host must replay on resume:
+    /// a graceful kill delivers every fully-sent request, the host
+    /// answers all of them into its replay buffer, and the guest has
+    /// acknowledged precisely `answers_recv`.
+    pub fn kill_log(&self) -> Vec<(u64, u64)> {
+        self.st.lock().expect("fault state poisoned").kill_log.clone()
+    }
+
+    /// Frames fully crossed in both directions over the wrapper's life
+    /// (sizing input for exhaustive frame-boundary sweeps).
+    pub fn frames_total(&self) -> u64 {
+        self.st.lock().expect("fault state poisoned").frames_total
+    }
+}
+
+impl GuestTransport for FaultyTransport {
+    fn send(&self, msg: ToHost) {
+        self.try_send(msg).expect("injected fault on send reached a non-resuming caller");
+    }
+
+    fn recv(&self) -> ToGuest {
+        self.try_recv().expect("injected fault on recv reached a non-resuming caller")
+    }
+
+    fn snapshot(&self) -> NetSnapshot {
+        self.inner.snapshot()
+    }
+
+    fn try_send(&self, msg: ToHost) -> std::io::Result<()> {
+        let kind = msg.kind();
+        let mut st = self.st.lock().expect("fault state poisoned");
+        if st.dead {
+            return Err(injected("connection already killed"));
+        }
+        if let Some(plan) = st.armed_kill() {
+            if !plan.delay.is_zero() {
+                std::thread::sleep(plan.delay);
+            }
+            if plan.partial_write_bytes > 0 {
+                // leak a deterministic prefix of the doomed frame; the
+                // receiver's defensive decode discards the torn frame
+                let _ = self.inner.send_torn(&msg, plan.partial_write_bytes);
+            }
+            self.inner.kill();
+            st.record_kill();
+            return Err(injected("send at planned frame boundary"));
+        }
+        self.inner.try_send(msg)?;
+        st.frames_since_arm += 1;
+        st.frames_total += 1;
+        if kind == ToHostKind::PredictRoute {
+            st.routes_sent += 1;
+        }
+        Ok(())
+    }
+
+    fn try_recv(&self) -> std::io::Result<ToGuest> {
+        {
+            let mut st = self.st.lock().expect("fault state poisoned");
+            if st.dead {
+                return Err(injected("connection already killed"));
+            }
+            if let Some(plan) = st.armed_kill() {
+                if !plan.delay.is_zero() {
+                    std::thread::sleep(plan.delay);
+                }
+                self.inner.kill();
+                st.record_kill();
+                return Err(injected("recv at planned frame boundary"));
+            }
+        }
+        // blocking read outside the lock (nothing else races: one
+        // thread drives a guest link)
+        let msg = self.inner.try_recv()?;
+        let mut st = self.st.lock().expect("fault state poisoned");
+        st.frames_since_arm += 1;
+        st.frames_total += 1;
+        if matches!(msg.kind(), ToGuestKind::RouteAnswers | ToGuestKind::RouteAnswersDelta) {
+            st.answers_recv += 1;
+        }
+        Ok(msg)
+    }
+
+    fn reconnect(&self) -> std::io::Result<()> {
+        self.inner.reconnect()?;
+        let mut st = self.st.lock().expect("fault state poisoned");
+        if st.dead {
+            st.plans.pop_front();
+        }
+        st.dead = false;
+        st.frames_since_arm = 0;
+        Ok(())
+    }
+}
+
+/// Byte-level fault-injecting feeder for a non-blocking receiver: owns
+/// the *sending* end of a socket whose other end is a
+/// [`NbConn`](super::tcp::NbConn) under test, and delivers frames in
+/// deliberately hostile shapes — split at arbitrary byte positions
+/// ([`FaultyConn::dribble`]), torn and FIN'd mid-frame
+/// ([`FaultyConn::feed`] under a killing plan) — so incremental
+/// reassembly is exercised at every boundary the plan names.
+pub struct FaultyConn {
+    stream: TcpStream,
+    plan: FaultPlan,
+    frames_fed: u64,
+    killed: bool,
+}
+
+impl FaultyConn {
+    /// Wrap the feeder end of a socket with a plan.
+    pub fn new(stream: TcpStream, plan: FaultPlan) -> FaultyConn {
+        stream.set_nodelay(true).ok();
+        FaultyConn { stream, plan, frames_fed: 0, killed: false }
+    }
+
+    /// Feed one frame (header built here from `payload`) honoring the
+    /// plan: past the planned boundary the frame is torn at
+    /// `partial_write_bytes` (possibly 0) and the connection FIN'd.
+    /// Returns `Ok(true)` if the frame fully crossed, `Ok(false)` if
+    /// the plan killed the connection instead.
+    pub fn feed(&mut self, payload: &[u8]) -> std::io::Result<bool> {
+        if self.killed {
+            return Ok(false);
+        }
+        let mut frame = (payload.len() as u64).to_le_bytes().to_vec();
+        frame.extend_from_slice(payload);
+        if self.plan.kill_after_frames != 0 && self.frames_fed >= self.plan.kill_after_frames {
+            if !self.plan.delay.is_zero() {
+                std::thread::sleep(self.plan.delay);
+            }
+            let cut = self.plan.partial_write_bytes.min(frame.len());
+            self.stream.write_all(&frame[..cut])?;
+            self.stream.flush()?;
+            self.kill();
+            return Ok(false);
+        }
+        self.stream.write_all(&frame)?;
+        self.stream.flush()?;
+        self.frames_fed += 1;
+        Ok(true)
+    }
+
+    /// Write raw bytes as-is (no framing, no plan): the split-point
+    /// primitive of the partial-I/O corpus — callers deliver a frame
+    /// as `dribble(&frame[..k])` + `dribble(&frame[k..])` for every
+    /// `k`, asserting the receiver reassembles it identically.
+    pub fn dribble(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        self.stream.write_all(bytes)?;
+        self.stream.flush()
+    }
+
+    /// FIN both directions now (graceful: everything already written
+    /// is still delivered).
+    pub fn kill(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+        self.killed = true;
+    }
+
+    /// Frames fully fed so far.
+    pub fn frames_fed(&self) -> u64 {
+        self.frames_fed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_from_equal_seeds_are_identical() {
+        for seed in [0u64, 1, 7, 0xDEAD_BEEF] {
+            let a = FaultPlan::from_seed(seed, 40);
+            let b = FaultPlan::from_seed(seed, 40);
+            assert_eq!(a.kill_after_frames, b.kill_after_frames);
+            assert_eq!(a.partial_write_bytes, b.partial_write_bytes);
+            assert_eq!(a.delay, b.delay);
+            assert!(a.kill_after_frames >= 1 && a.kill_after_frames <= 40);
+        }
+    }
+
+    #[test]
+    fn benign_plan_never_fires() {
+        let p = FaultPlan::benign();
+        assert_eq!(p.kill_after_frames, 0);
+        let st = FaultState {
+            plans: vec![p].into(),
+            frames_since_arm: u64::MAX,
+            frames_total: 0,
+            dead: false,
+            routes_sent: 0,
+            answers_recv: 0,
+            kill_log: Vec::new(),
+        };
+        assert!(st.armed_kill().is_none());
+    }
+
+    #[test]
+    fn faulty_conn_tears_and_fins_at_the_planned_boundary() {
+        use std::io::Read;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let plan = FaultPlan {
+            seed: 0,
+            kill_after_frames: 1,
+            partial_write_bytes: 10,
+            delay: Duration::ZERO,
+        };
+        let mut feeder = FaultyConn::new(client, plan);
+        assert!(feeder.feed(b"whole frame").unwrap());
+        assert!(!feeder.feed(b"doomed frame").unwrap(), "second frame dies");
+        assert!(!feeder.feed(b"never sent").unwrap(), "dead feeders stay dead");
+        assert_eq!(feeder.frames_fed(), 1);
+
+        // receiver sees: frame 1 complete, then exactly 10 bytes of
+        // frame 2, then FIN
+        let mut got = Vec::new();
+        let mut server = server;
+        server.read_to_end(&mut got).unwrap();
+        let want_frame1_len = 8 + b"whole frame".len();
+        assert_eq!(got.len(), want_frame1_len + 10);
+        assert_eq!(&got[..8], &(b"whole frame".len() as u64).to_le_bytes());
+        assert_eq!(&got[8..want_frame1_len], b"whole frame");
+    }
+}

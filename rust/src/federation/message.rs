@@ -15,9 +15,9 @@ use std::sync::Arc;
 /// [`ToHost::SessionHello`]. Bumps whenever the meaning of a serving
 /// frame changes incompatibly (query encoding, answer packing, session
 /// semantics). The wire codec accepts hellos for this version and for
-/// [`SERVE_PROTOCOL_V2`] (the host negotiates such sessions *down* to
-/// v2 semantics) and rejects everything else — a serving host must
-/// never half-understand a session.
+/// [`SERVE_PROTOCOL_V3`]/[`SERVE_PROTOCOL_V2`] (the host negotiates
+/// such sessions *down* to the older semantics) and rejects everything
+/// else — a serving host must never half-understand a session.
 ///
 /// v2: chunked pipelined streaming — `PredictRoute`/`RouteAnswers`
 /// carry a chunk id so several batches may be in flight per session,
@@ -32,10 +32,26 @@ use std::sync::Arc;
 /// effective for working sets larger than `delta_window`). A v2 peer
 /// never sees the extension: hellos carrying `protocol = 2` are
 /// answered with the 12-byte v2 accept and served with frozen bases.
-pub const SERVE_PROTOCOL_VERSION: u32 = 3;
+///
+/// v4: resumable sessions — a v4 session whose connection dies without
+/// a [`ToHost::SessionClose`] is *parked* by the host for a configured
+/// resume window instead of being reaped; the guest re-dials and sends
+/// [`ToHost::SessionResume`] naming the session and how many answer
+/// frames it has received on that link, and the host replays the
+/// verbatim un-acknowledged answer frames after its
+/// [`ToGuest::ResumeAccept`] so the stream continues bit-identically.
+/// v3/v2 hellos are negotiated down exactly as before and never see
+/// the resume pair on the wire.
+pub const SERVE_PROTOCOL_VERSION: u32 = 4;
 
-/// The previous serve-protocol version, still accepted on the wire:
-/// a [`ToHost::SessionHello`] carrying it is served with v2 semantics
+/// The v3 serve protocol, still accepted on the wire: a
+/// [`ToHost::SessionHello`] carrying it is served with v3 semantics
+/// (negotiated basis eviction, 17-byte extended
+/// [`ToGuest::SessionAccept`], no session resumption).
+pub const SERVE_PROTOCOL_V3: u32 = 3;
+
+/// The v2 serve protocol, still accepted on the wire: a
+/// [`ToHost::SessionHello`] carrying it is served with v2 semantics
 /// (freeze-on-full delta basis, 12-byte [`ToGuest::SessionAccept`]).
 pub const SERVE_PROTOCOL_V2: u32 = 2;
 
@@ -155,10 +171,13 @@ pub enum ToHostKind {
     SessionClose = 10,
     /// Liveness probe for an idle serving session.
     KeepAlive = 11,
+    /// Re-attach to a parked v4 serving session after a dropped
+    /// connection.
+    SessionResume = 12,
 }
 
 /// Number of guest→host message kinds.
-pub const TO_HOST_KINDS: usize = 12;
+pub const TO_HOST_KINDS: usize = 13;
 
 impl ToHostKind {
     /// Every guest→host kind, in tag order.
@@ -175,6 +194,7 @@ impl ToHostKind {
         ToHostKind::SessionHello,
         ToHostKind::SessionClose,
         ToHostKind::KeepAlive,
+        ToHostKind::SessionResume,
     ];
 
     /// Wire tag byte / per-kind counter index.
@@ -197,6 +217,7 @@ impl ToHostKind {
             ToHostKind::SessionHello => "SessionHello",
             ToHostKind::SessionClose => "SessionClose",
             ToHostKind::KeepAlive => "KeepAlive",
+            ToHostKind::SessionResume => "SessionResume",
         }
     }
 }
@@ -220,10 +241,12 @@ pub enum ToGuestKind {
     /// Delta-suppressed answers: only the bits for queries the host has
     /// *not* already answered this session.
     RouteAnswersDelta = 6,
+    /// Acceptance of a [`ToHostKind::SessionResume`] re-attach.
+    ResumeAccept = 7,
 }
 
 /// Number of host→guest message kinds.
-pub const TO_GUEST_KINDS: usize = 7;
+pub const TO_GUEST_KINDS: usize = 8;
 
 impl ToGuestKind {
     /// Every host→guest kind, in tag order.
@@ -235,6 +258,7 @@ impl ToGuestKind {
         ToGuestKind::RouteAnswers,
         ToGuestKind::SessionAccept,
         ToGuestKind::RouteAnswersDelta,
+        ToGuestKind::ResumeAccept,
     ];
 
     /// Wire tag byte / per-kind counter index.
@@ -252,6 +276,7 @@ impl ToGuestKind {
             ToGuestKind::RouteAnswers => "RouteAnswers",
             ToGuestKind::SessionAccept => "SessionAccept",
             ToGuestKind::RouteAnswersDelta => "RouteAnswersDelta",
+            ToGuestKind::ResumeAccept => "ResumeAccept",
         }
     }
 }
@@ -323,7 +348,8 @@ pub enum ToHost {
         /// Client-chosen nonzero session id, echoed on every frame of
         /// the session so a multiplexing host can attribute traffic.
         session_id: u32,
-        /// Must equal [`SERVE_PROTOCOL_VERSION`] or
+        /// Must equal [`SERVE_PROTOCOL_VERSION`], [`SERVE_PROTOCOL_V3`]
+        /// (served with v3 semantics: no resumption) or
         /// [`SERVE_PROTOCOL_V2`] (served with v2 semantics); the codec
         /// rejects anything else at decode time.
         protocol: u32,
@@ -340,6 +366,27 @@ pub enum ToHost {
     /// Keep-alive probe: an idle session proves liveness without
     /// shipping queries. Answered with [`ToGuest::Ack`].
     KeepAlive,
+    /// Re-attach to a **parked** v4 serving session: after the guest
+    /// notices a dead connection it re-dials the host and sends this as
+    /// the *first* frame of the fresh connection (instead of a new
+    /// hello). The host either answers [`ToGuest::ResumeAccept`] and
+    /// replays the verbatim answer frames the guest never received, or
+    /// closes the connection (unknown / expired / non-v4 session — the
+    /// guest must treat a close here as unrecoverable for that
+    /// session).
+    SessionResume {
+        /// The parked session being re-attached (must match the id the
+        /// original hello announced; never [`SESSIONLESS_ID`]).
+        session: u32,
+        /// How many **answer frames** ([`ToGuest::RouteAnswers`] /
+        /// [`ToGuest::RouteAnswersDelta`]) the guest has fully received
+        /// on this link so far — the guest's acknowledgement cursor.
+        /// Chunk ids repeat across tree levels (one `PredictRoute` per
+        /// chunk per level), so the cursor counts frames, not chunk
+        /// ids; the host replays every buffered answer frame past this
+        /// count, in original send order.
+        last_acked_chunk: u32,
+    },
 }
 
 impl ToHost {
@@ -358,6 +405,7 @@ impl ToHost {
             ToHost::SessionHello { .. } => ToHostKind::SessionHello,
             ToHost::SessionClose { .. } => ToHostKind::SessionClose,
             ToHost::KeepAlive => ToHostKind::KeepAlive,
+            ToHost::SessionResume { .. } => ToHostKind::SessionResume,
         }
     }
 }
@@ -455,6 +503,34 @@ pub enum ToGuest {
         /// fresh queries, in query order.
         bits: Vec<u8>,
     },
+    /// The host accepted a [`ToHost::SessionResume`]: the parked
+    /// session is live again on this connection, its delta basis, memo
+    /// and counters intact. Immediately after this frame the host
+    /// replays — byte-for-byte — every buffered answer frame the
+    /// guest's acknowledgement cursor says it never received, then
+    /// resumes normal service. Replay is verbatim (not recomputed)
+    /// because both delta-basis mirrors already advanced when the
+    /// answers were first produced; recomputing would misclassify
+    /// previously-fresh keys as known and desynchronize the mirrors.
+    ResumeAccept {
+        /// One past the host's total answer-frame count: the 1-based
+        /// sequence number of the next **fresh** answer the host will
+        /// produce. Everything between the guest's acknowledgement
+        /// cursor and this (`next_chunk − 1 − last_acked_chunk` frames)
+        /// is replayed verbatim right after this frame; requests the
+        /// guest had in flight *beyond* the replayed answers never
+        /// reached the host (lost or torn with the dead connection) and
+        /// must be re-sent, in their original order, to keep the two
+        /// delta-basis mirrors advancing identically.
+        next_chunk: u32,
+        /// The host's cumulative count of keys inserted into the
+        /// session's delta basis *as of the acked cursor* (i.e. before
+        /// any replayed frame's insertions), mod 2³². The guest asserts
+        /// it equals its own mirror's insert count — a cheap integrity
+        /// check that the mirrors are still in lockstep before any
+        /// replayed bits are trusted.
+        basis_epoch: u32,
+    },
 }
 
 impl ToGuest {
@@ -468,6 +544,7 @@ impl ToGuest {
             ToGuest::RouteAnswers { .. } => ToGuestKind::RouteAnswers,
             ToGuest::SessionAccept { .. } => ToGuestKind::SessionAccept,
             ToGuest::RouteAnswersDelta { .. } => ToGuestKind::RouteAnswersDelta,
+            ToGuest::ResumeAccept { .. } => ToGuestKind::ResumeAccept,
         }
     }
 }

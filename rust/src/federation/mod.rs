@@ -34,6 +34,7 @@
 
 pub mod codec;
 pub mod delta;
+pub mod fault;
 pub mod guest;
 pub mod host;
 pub mod message;

@@ -43,6 +43,18 @@
 //! answers via `RouteAnswersDelta` frames and the guest reconstructs
 //! them locally, bit-identically (see [`super::serve`]).
 //!
+//! Sessions that negotiated **serve protocol v4** can additionally
+//! *resume* a stream across a dropped connection: with
+//! [`PredictOptions::reconnect_retries`] set, a transport error in the
+//! streaming engine re-dials the host with capped exponential backoff,
+//! presents `SessionResume(session, last_acked_chunk)`, and — after
+//! the host's `ResumeAccept` is cross-checked against the session's
+//! own answer and basis-insert cursors — re-sends the requests the
+//! host never received while the host replays, verbatim, the answers
+//! the guest never received. The stream continues bit-identically;
+//! [`StreamReport::reconnects`] / [`StreamReport::chunks_replayed`]
+//! account for what the recovery cost.
+//!
 //! Privacy directions:
 //!
 //! - the **guest** learns one routing bit per consulted host split —
@@ -66,7 +78,8 @@
 
 use super::delta::DeltaBasis;
 use super::message::{
-    BasisEvict, ToGuest, ToHost, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_VERSION, SESSIONLESS_ID,
+    BasisEvict, ToGuest, ToHost, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_V3, SERVE_PROTOCOL_VERSION,
+    SESSIONLESS_ID,
 };
 use super::serve::{serve_session, HostServeState, ServeConfig, SessionOutcome};
 use super::transport::{GuestTransport, HostTransport};
@@ -165,10 +178,19 @@ pub struct PredictOptions {
     pub max_inflight: usize,
     /// Serve-protocol version the session's `SessionHello` announces.
     /// Defaults to [`SERVE_PROTOCOL_VERSION`]; set
-    /// [`SERVE_PROTOCOL_V2`] to speak as a legacy v2 client (the host
-    /// then serves the session with v2 semantics — frozen delta basis,
-    /// 12-byte accept). Anything else is rejected at session build.
+    /// [`SERVE_PROTOCOL_V3`] or [`SERVE_PROTOCOL_V2`] to speak as a
+    /// legacy client (the host then serves the session with that
+    /// protocol's semantics — v2 means a frozen delta basis and the
+    /// bare 12-byte accept; v3 adds negotiated eviction but cannot
+    /// resume). Anything else is rejected at session build.
     pub protocol: u32,
+    /// Reconnect attempts per broken link while streaming (capped
+    /// exponential backoff between attempts). 0 disables resumption:
+    /// any transport error panics, the pre-v4 behavior. Nonzero only
+    /// helps on sessions that negotiated serve protocol v4 — a v2/v3
+    /// host cannot park a dead session, so the guest fails loudly
+    /// instead of retrying against a server that already reaped it.
+    pub reconnect_retries: u32,
     /// Emit one stderr progress line per finished chunk while streaming.
     pub progress: bool,
 }
@@ -182,6 +204,7 @@ impl Default for PredictOptions {
             batch_rows: 0,
             max_inflight: 4,
             protocol: SERVE_PROTOCOL_VERSION,
+            reconnect_retries: 0,
             progress: false,
         }
     }
@@ -204,6 +227,9 @@ struct HostCaps {
     /// Delta-basis eviction policy this host negotiated (always
     /// [`BasisEvict::Freeze`] when the session speaks v2).
     basis_evict: BasisEvict,
+    /// Serve-protocol version this host's accept negotiated. Resumption
+    /// ([`PredictOptions::reconnect_retries`]) requires ≥ 4.
+    protocol: u32,
 }
 
 /// What one [`PredictSession::predict_stream`] pass did: pipeline
@@ -227,6 +253,13 @@ pub struct StreamReport {
     /// window that still stalls means the hosts are the bottleneck;
     /// zero stalls mean the guest is.
     pub stall_seconds: f64,
+    /// Successful session resumptions this pass performed (one per
+    /// reconnect handshake that reached `ResumeAccept` and replayed).
+    pub reconnects: u64,
+    /// Answer frames the hosts replayed verbatim across all
+    /// resumptions of this pass — frames that were generated before a
+    /// connection died but never fully received the first time.
+    pub chunks_replayed: u64,
 }
 
 /// A reusable guest-side prediction session over a shared, load-once
@@ -255,6 +288,18 @@ pub struct PredictSession<'a> {
     /// Limits each host announced in its `SessionAccept` (empty until
     /// [`PredictSession::open`]; sessionless flows never fill it).
     host_caps: Vec<HostCaps>,
+    /// Per-host count of answer frames fully received this session —
+    /// the guest's side of the v4 resume cursor. A resuming
+    /// `SessionResume` presents this as `last_acked_chunk`; the host
+    /// replays exactly the answers beyond it.
+    acked: Vec<u64>,
+    /// Per-host mirror of the host's cumulative delta-basis insert
+    /// count (mod 2³² on the wire), advanced from received frame
+    /// fields alone: a plain `RouteAnswers` on a delta session inserts
+    /// all `n` keys, a `RouteAnswersDelta` inserts the `n − n_known`
+    /// fresh ones. `ResumeAccept::basis_epoch` must equal this mirror
+    /// or the two bases have desynchronized.
+    basis_inserts: Vec<u64>,
     rng: Xoshiro256,
     suppressed: u64,
     decoys: u64,
@@ -266,8 +311,10 @@ impl<'a> PredictSession<'a> {
     pub fn new(model: &'a GuestModel, session_id: u32, opts: PredictOptions) -> Self {
         assert_ne!(session_id, SESSIONLESS_ID, "session id 0 is reserved for the legacy flow");
         assert!(
-            opts.protocol == SERVE_PROTOCOL_VERSION || opts.protocol == SERVE_PROTOCOL_V2,
-            "this build speaks serve protocols {SERVE_PROTOCOL_V2} and {SERVE_PROTOCOL_VERSION}, not {}",
+            opts.protocol == SERVE_PROTOCOL_VERSION
+                || opts.protocol == SERVE_PROTOCOL_V3
+                || opts.protocol == SERVE_PROTOCOL_V2,
+            "this build speaks serve protocols {SERVE_PROTOCOL_V2}..{SERVE_PROTOCOL_VERSION}, not {}",
             opts.protocol
         );
         Self::build(model, session_id, opts)
@@ -311,6 +358,8 @@ impl<'a> PredictSession<'a> {
             host_handles,
             basis: Vec::new(),
             host_caps: Vec::new(),
+            acked: Vec::new(),
+            basis_inserts: Vec::new(),
             rng: Xoshiro256::seed_from_u64(opts.seed ^ (session_id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
             suppressed: 0,
             decoys: 0,
@@ -378,7 +427,7 @@ impl<'a> PredictSession<'a> {
                 "host {p} answered protocol {protocol} to a v{} hello",
                 self.opts.protocol
             );
-            self.host_caps.push(HostCaps { max_inflight, delta_window, basis_evict });
+            self.host_caps.push(HostCaps { max_inflight, delta_window, basis_evict, protocol });
         }
         // a (re)opened session faces hosts with *fresh* per-session seen
         // sets — the mirrored bases must restart empty too (and under
@@ -389,6 +438,11 @@ impl<'a> PredictSession<'a> {
             .iter()
             .map(|c| DeltaBasis::new(c.delta_window as usize, c.basis_evict))
             .collect();
+        // fresh host sessions also mean fresh resume cursors: the hosts
+        // count answer frames and basis inserts from zero for this
+        // session, and these mirrors must match frame-for-frame
+        self.acked = vec![0; self.host_caps.len()];
+        self.basis_inserts = vec![0; self.host_caps.len()];
     }
 
     /// Probe every host of an idle session (`KeepAlive` → `Ack`).
@@ -680,7 +734,9 @@ impl<'a> PredictSession<'a> {
             // finalize it or put its next level's queries on the wire
             if let Some(id) = ready.pop_front() {
                 let mut st = chunks.remove(&id).expect("ready chunk exists");
-                if self.advance_chunk(id, &mut st, guest, links, &mut outstanding) {
+                let mut send_failures: Vec<(usize, std::io::Error)> = Vec::new();
+                if self.advance_chunk(id, &mut st, guest, links, &mut outstanding, &mut send_failures)
+                {
                     let chunk_preds = self.finalize_chunk(&st);
                     sink(st.row0, &chunk_preds);
                     done_chunks += 1;
@@ -695,6 +751,13 @@ impl<'a> PredictSession<'a> {
                     }
                 } else {
                     chunks.insert(id, st);
+                }
+                // a link broke mid-send: the failed round was recorded
+                // as outstanding like any other (the host never saw a
+                // complete frame), so the resume handshake re-sends it
+                // together with everything else the kill swallowed
+                for (p, err) in send_failures {
+                    self.resume_link(p, links, &chunks, &outstanding, &mut report, &err);
                 }
                 continue; // admit/advance before blocking on answers
             }
@@ -712,11 +775,24 @@ impl<'a> PredictSession<'a> {
             inflight_sum += chunks.len() as u64;
             inflight_samples += 1;
             let wait0 = std::time::Instant::now();
-            let st = chunks.get_mut(&id).expect("outstanding chunk exists");
-            let round = st.pending[p].take().expect("outstanding round exists");
-            let bits = self.recv_answers(p, links[p].as_ref(), id, &round.queries);
+            // receive BEFORE touching the chunk's pending round: if the
+            // connection is dead, the round must stay in place so the
+            // resume path can re-send it from the retained queries
+            let msg = match links[p].try_recv() {
+                Ok(msg) => msg,
+                Err(err) => {
+                    report.stall_seconds += wait0.elapsed().as_secs_f64();
+                    self.resume_link(p, links, &chunks, &outstanding, &mut report, &err);
+                    // replayed and re-answered frames drain through this
+                    // same loop in the original outstanding order
+                    continue;
+                }
+            };
             report.stall_seconds += wait0.elapsed().as_secs_f64();
             outstanding[p].pop_front();
+            let st = chunks.get_mut(&id).expect("outstanding chunk exists");
+            let round = st.pending[p].take().expect("outstanding round exists");
+            let bits = self.decode_answers(p, msg, id, &round.queries);
             // memoize within the chunk (decoys included) and advance
             // the cursors that were waiting on this host
             for (q, &(row, handle)) in round.queries.iter().enumerate() {
@@ -755,7 +831,10 @@ impl<'a> PredictSession<'a> {
     /// through guest splits and memo/basis-answered host splits; then
     /// either report the chunk finished (`true`) or send one
     /// `PredictRoute` per host with the chunk's pending queries and
-    /// record the expectation FIFO entries.
+    /// record the expectation FIFO entries. A send that hits a dead
+    /// connection is still recorded as outstanding (its round is what
+    /// the resume handshake will re-send) and reported through
+    /// `send_failures` for the caller to recover.
     fn advance_chunk(
         &mut self,
         id: u32,
@@ -763,6 +842,7 @@ impl<'a> PredictSession<'a> {
         guest: &PartySlice,
         links: &[Box<dyn GuestTransport>],
         outstanding: &mut [std::collections::VecDeque<u32>],
+        send_failures: &mut Vec<(usize, std::io::Error)>,
     ) -> bool {
         let model = self.model;
         let d = guest.d();
@@ -831,7 +911,7 @@ impl<'a> PredictSession<'a> {
                 continue;
             }
             let (queries, slots) = self.build_host_queries(p, &idxs, &st.active, guest.n);
-            links[p].send(ToHost::PredictRoute {
+            let sent = links[p].try_send(ToHost::PredictRoute {
                 session: self.session_id,
                 chunk: id,
                 queries: queries.clone(),
@@ -839,9 +919,131 @@ impl<'a> PredictSession<'a> {
             st.pending[p] = Some(PendingRound { idxs, queries, slots });
             st.awaiting += 1;
             outstanding[p].push_back(id);
+            if let Err(err) = sent {
+                send_failures.push((p, err));
+            }
         }
         debug_assert!(st.awaiting > 0, "unfinished chunk sent no queries");
         false
+    }
+
+    /// Recover one broken streaming link through the serve-protocol-v4
+    /// resume handshake: re-dial with capped exponential backoff,
+    /// present `SessionResume(session, last_acked_chunk)`, verify the
+    /// host's `ResumeAccept` against this session's own cursors, and
+    /// re-send every outstanding request the host never received —
+    /// beyond the `next_chunk − 1 − acked` answers the host replays
+    /// verbatim — in the original send order. The replayed and
+    /// re-answered frames then drain through the normal receive loop,
+    /// so the stream continues bit-identically from where it stood.
+    ///
+    /// Panics loudly (the stream is unrecoverable) when resumption is
+    /// disabled, the session negotiated a pre-v4 protocol, or every
+    /// reconnect attempt fails.
+    fn resume_link(
+        &self,
+        p: usize,
+        links: &[Box<dyn GuestTransport>],
+        chunks: &HashMap<u32, ChunkState>,
+        outstanding: &[std::collections::VecDeque<u32>],
+        report: &mut StreamReport,
+        err: &std::io::Error,
+    ) {
+        let retries = self.opts.reconnect_retries;
+        assert!(
+            retries > 0,
+            "host {p} link failed mid-stream: {err} (reconnection disabled; set \
+             PredictOptions::reconnect_retries to resume v{SERVE_PROTOCOL_VERSION} sessions)"
+        );
+        let negotiated = self.host_caps.get(p).map_or(0, |c| c.protocol);
+        assert!(
+            negotiated >= SERVE_PROTOCOL_VERSION && self.session_id != SESSIONLESS_ID,
+            "host {p} link failed mid-stream: {err}; the session negotiated serve \
+             protocol v{negotiated}, which cannot resume \
+             (v{SERVE_PROTOCOL_VERSION} handshake required) — the stream is lost"
+        );
+        let mut attempts_left = retries;
+        'resume: loop {
+            // ---- reconnect + handshake. A refused resume is a plain
+            // close from the host (its reactor may not have swept the
+            // dead connection into the parking lot yet), which surfaces
+            // here as a receive error — back off and try again.
+            let (next_chunk, basis_epoch) = loop {
+                assert!(
+                    attempts_left > 0,
+                    "host {p}: gave up resuming session {} after {retries} reconnect \
+                     attempt(s); original link error: {err}",
+                    self.session_id
+                );
+                let attempt = retries - attempts_left;
+                attempts_left -= 1;
+                if attempt > 0 {
+                    // 10ms, 20ms, 40ms, ... capped at 500ms
+                    let ms = (10u64 << (attempt - 1).min(6)).min(500);
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
+                }
+                if links[p].reconnect().is_err() {
+                    continue;
+                }
+                if links[p]
+                    .try_send(ToHost::SessionResume {
+                        session: self.session_id,
+                        last_acked_chunk: self.acked[p] as u32,
+                    })
+                    .is_err()
+                {
+                    continue;
+                }
+                match links[p].try_recv() {
+                    Ok(ToGuest::ResumeAccept { next_chunk, basis_epoch }) => {
+                        break (next_chunk, basis_epoch)
+                    }
+                    Err(_) => continue,
+                    Ok(other) => {
+                        panic!("host {p} answered SessionResume with {:?}", other.kind())
+                    }
+                }
+            };
+            // ---- verify both ends agree on where the stream stands:
+            // the host's basis-insert epoch at the acked cursor must
+            // equal this session's mirror, and the replay length must
+            // fit what is actually outstanding
+            assert_eq!(
+                basis_epoch, self.basis_inserts[p] as u32,
+                "host {p} resumed session {} at a different delta-basis epoch — \
+                 the mirrored bases have desynchronized",
+                self.session_id
+            );
+            let acked = self.acked[p];
+            let next = next_chunk as u64;
+            assert!(
+                next >= acked + 1 && next - 1 - acked <= outstanding[p].len() as u64,
+                "host {p} resumed with next_chunk {next_chunk} against {acked} acked \
+                 answer frame(s) and {} outstanding request(s)",
+                outstanding[p].len()
+            );
+            let replay = next - 1 - acked;
+            // ---- re-send what the host never received: every
+            // outstanding round beyond the replayed answers, in the
+            // original send order. The host answers strictly in arrival
+            // order, so replays followed by fresh answers drain the
+            // outstanding FIFO exactly as the lost originals would have.
+            for &chunk in outstanding[p].iter().skip(replay as usize) {
+                let st = chunks.get(&chunk).expect("outstanding chunk exists");
+                let round = st.pending[p].as_ref().expect("outstanding round retained");
+                let resent = links[p].try_send(ToHost::PredictRoute {
+                    session: self.session_id,
+                    chunk,
+                    queries: round.queries.clone(),
+                });
+                if resent.is_err() {
+                    continue 'resume; // this connection died too
+                }
+            }
+            report.reconnects += 1;
+            report.chunks_replayed += replay;
+            return;
+        }
     }
 
     /// Accumulate one finished chunk's leaf weights in tree order —
@@ -943,8 +1145,27 @@ impl<'a> PredictSession<'a> {
         expect_chunk: u32,
         queries: &[(u32, u32)],
     ) -> Vec<bool> {
+        let msg = link.recv();
+        self.decode_answers(p, msg, expect_chunk, queries)
+    }
+
+    /// Decode one already-received answer frame — the transport-free
+    /// half of [`PredictSession::recv_answers`], shared with the
+    /// streaming engine's fallible receive path. Besides the delta
+    /// mirroring, this advances the session's v4 resume cursors: one
+    /// acked answer frame, plus however many basis inserts the frame
+    /// implies (`n` for a plain frame on a delta session, `n − n_known`
+    /// for a delta frame) — the same arithmetic the host runs, so a
+    /// `ResumeAccept` can cross-check both ends.
+    fn decode_answers(
+        &mut self,
+        p: usize,
+        msg: ToGuest,
+        expect_chunk: u32,
+        queries: &[(u32, u32)],
+    ) -> Vec<bool> {
         let dw = self.host_caps.get(p).map_or(0, |c| c.delta_window as usize);
-        match link.recv() {
+        match msg {
             ToGuest::RouteAnswers { session, chunk, n, bits } => {
                 assert_eq!(session, self.session_id, "host {p} answered for a different session");
                 assert_eq!(chunk, expect_chunk, "host {p} answered out of frame order");
@@ -955,11 +1176,13 @@ impl<'a> PredictSession<'a> {
                 );
                 let out: Vec<bool> =
                     (0..queries.len()).map(|q| bits[q / 8] & (1 << (q % 8)) != 0).collect();
+                self.acked[p] += 1;
                 if dw > 0 {
                     // a plain frame on a delta session means the host
                     // found every key fresh and inserted it — mirror
                     // the identical touch-else-insert sequence (under
                     // LRU that includes the same evictions)
+                    self.basis_inserts[p] += n as u64;
                     let basis = &mut self.basis[p];
                     for (q, key) in queries.iter().enumerate() {
                         basis.observe(*key, out[q]);
@@ -980,6 +1203,8 @@ impl<'a> PredictSession<'a> {
                     "host {p} answered a different batch size"
                 );
                 let expected_fresh = (n - n_known) as usize;
+                self.acked[p] += 1;
+                self.basis_inserts[p] += (n - n_known) as u64;
                 let mut out = Vec::with_capacity(queries.len());
                 let mut fresh = 0usize;
                 let mut known = 0usize;
@@ -1021,10 +1246,15 @@ impl<'a> PredictSession<'a> {
 
     /// Size the per-host delta-basis table to the connected link count
     /// (sessionless links get an inert basis — no handshake announced a
-    /// window, so wire suppression stays off).
+    /// window, so wire suppression stays off), along with the v4 resume
+    /// cursor mirrors (inert for sessionless links too).
     fn ensure_basis(&mut self, n_links: usize) {
         if self.basis.len() < n_links {
             self.basis.resize_with(n_links, DeltaBasis::off);
+        }
+        if self.acked.len() < n_links {
+            self.acked.resize(n_links, 0);
+            self.basis_inserts.resize(n_links, 0);
         }
     }
 }

@@ -73,11 +73,40 @@
 //! the full bitmap bit-identically. Unlike the routing cache — which is
 //! wire-invisible — this layer makes repeat traffic cheaper *on the
 //! wire*, per session, with bounded memory at both ends.
+//!
+//! ## Session resumption (serve protocol v4)
+//!
+//! A v4 session whose transport dies *uncleanly* (FIN or error without
+//! a `SessionClose`) is not reported dead on the spot: the reactor
+//! **parks** its entire state — protocol machine, delta basis, traffic
+//! counters, and a bounded buffer of the encoded answer frames the
+//! guest has not yet acknowledged — keyed by session id, for up to
+//! [`ServeConfig::resume_window`]. A reconnecting guest presents
+//! [`ToHost::SessionResume`] with its acknowledgement cursor; the host
+//! answers [`ToGuest::ResumeAccept`] and **replays the buffered answer
+//! frames byte-for-byte**. Replaying verbatim (instead of recomputing)
+//! is what keeps the two mirrored delta bases in lockstep: the basis
+//! advanced when those answers were first *computed*, so recomputing
+//! them against the already-advanced basis would elide keys the guest
+//! never saw. Host state only ever advances on *complete* decoded
+//! frames — a frame torn by the failure is discarded by the framing
+//! layer, never half-applied — so the parked machine is always at a
+//! frame boundary and the resumed stream is bit-identical to an
+//! uninterrupted one (asserted exhaustively by `tests/serve_fault.rs`).
+//! A parked session still counts **once** against `--max-sessions` and
+//! appears **once** in the final report, whether it resumes, expires
+//! ([`HostServeState::sessions_resume_expired`]), or is still parked at
+//! loop drain; the dead-peer idle reaper never touches parked sessions
+//! — their only clock is the resume window. Resumption is a
+//! reactor-only feature: the threaded [`serve_session`] engine and
+//! in-memory links close on `SessionResume` (their transports cannot
+//! drop frames mid-stream, so there is nothing to resume).
 
 use super::codec;
 use super::delta::DeltaBasis;
 use super::message::{
-    BasisEvict, ToGuest, ToHost, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_VERSION, SESSIONLESS_ID,
+    BasisEvict, ToGuest, ToGuestKind, ToHost, ToHostKind, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_V3,
+    SERVE_PROTOCOL_VERSION, SESSIONLESS_ID,
 };
 use super::tcp::{NbConn, RecvPoll};
 use super::transport::{HostTransport, NetCounters, NetSnapshot};
@@ -353,8 +382,18 @@ pub struct ServeConfig {
     /// drop, cable pull) otherwise pins its session slot forever.
     /// Reaped sessions end unclean with
     /// [`SessionOutcome::idle_reaped`] set. Guests that idle
-    /// legitimately must keep-alive inside this window.
+    /// legitimately must keep-alive inside this window. Parked
+    /// (disconnected v4) sessions are *not* subject to this clock —
+    /// theirs is [`ServeConfig::resume_window`].
     pub session_idle_timeout: std::time::Duration,
+    /// How long the reactor keeps the state of an uncleanly
+    /// disconnected v4 session parked and resumable
+    /// ([`ToHost::SessionResume`]) before giving the session up and
+    /// reporting it. Zero (the default) disables resumption entirely:
+    /// disconnects are final, exactly the pre-v4 behavior. Only the
+    /// sharded TCP reactor honors this; the threaded [`serve_session`]
+    /// engine never parks.
+    pub resume_window: std::time::Duration,
 }
 
 impl Default for ServeConfig {
@@ -368,8 +407,52 @@ impl Default for ServeConfig {
             stage_b_delay: None,
             workers: 0,
             session_idle_timeout: std::time::Duration::from_secs(60),
+            resume_window: std::time::Duration::ZERO,
         }
     }
+}
+
+/// The frozen state of an uncleanly disconnected v4 session awaiting a
+/// [`ToHost::SessionResume`]: everything a reconnecting guest needs the
+/// host to still remember, parked for at most
+/// [`ServeConfig::resume_window`].
+struct ParkedSession {
+    machine: SessionMachine,
+    /// The session's cumulative traffic counters — they move with the
+    /// session across connections, so a resumed session's report spans
+    /// its whole life.
+    counters: NetCounters,
+    answers_sent: u64,
+    basis_inserts: u64,
+    replay: std::collections::VecDeque<ReplayEntry>,
+    resumes: u32,
+    /// Session start (first connection) — resumed wall time is
+    /// cumulative.
+    t0: Instant,
+    /// When the session was parked; the resume-window clock.
+    parked_at: Instant,
+    peer: SocketAddr,
+}
+
+/// One buffered host→guest answer frame, retained until the guest
+/// acknowledges it (which only ever happens via a resume handshake) or
+/// the bounded buffer rolls it out.
+struct ReplayEntry {
+    kind: ToGuestKind,
+    /// The session's cumulative basis-insert count *before* this
+    /// frame's batch mutated the basis — the epoch a guest resuming
+    /// with this frame as its first replay must be at.
+    epoch_before: u64,
+    /// The encoded frame payload, byte-for-byte as first sent.
+    bytes: Vec<u8>,
+}
+
+/// Answer frames retained per v4 session for replay. The guest never
+/// keeps more than `max_inflight` requests unanswered per link, so its
+/// un-received answer backlog is bounded by the same number; the slack
+/// covers nonconforming clients without letting them grow host memory.
+fn replay_retain_cap(cfg: &ServeConfig) -> usize {
+    cfg.max_inflight.max(1) as usize * 4 + 64
 }
 
 /// The shared, immutable state of a serving host process: one loaded
@@ -389,6 +472,12 @@ pub struct HostServeState {
     decode_stall_nanos: AtomicU64,
     sessions_idle_reaped: AtomicU64,
     poll_stall_nanos: AtomicU64,
+    sessions_resumed: AtomicU64,
+    sessions_resume_expired: AtomicU64,
+    /// Disconnected v4 sessions awaiting a resume, keyed by session id.
+    /// Global (not per shard): the reconnecting guest may be dispatched
+    /// to any worker.
+    parked: Mutex<HashMap<u32, ParkedSession>>,
 }
 
 impl HostServeState {
@@ -408,6 +497,9 @@ impl HostServeState {
             decode_stall_nanos: AtomicU64::new(0),
             sessions_idle_reaped: AtomicU64::new(0),
             poll_stall_nanos: AtomicU64::new(0),
+            sessions_resumed: AtomicU64::new(0),
+            sessions_resume_expired: AtomicU64::new(0),
+            parked: Mutex::new(HashMap::new()),
         })
     }
 
@@ -461,6 +553,34 @@ impl HostServeState {
     /// instead of one blocked read per session.
     pub fn poll_stall_seconds(&self) -> f64 {
         self.poll_stall_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Sessions that reconnected and resumed after an unclean
+    /// disconnect (successful [`ToHost::SessionResume`] handshakes; a
+    /// session surviving several disconnects counts once per resume).
+    pub fn sessions_resumed(&self) -> u64 {
+        self.sessions_resumed.load(Ordering::Relaxed)
+    }
+
+    /// Parked sessions given up on: no resume arrived inside
+    /// [`ServeConfig::resume_window`] (or the loop drained first), so
+    /// the session was finally reported. Disjoint from
+    /// [`Self::sessions_idle_reaped`] — parking and idle reaping are
+    /// different clocks on different states.
+    pub fn sessions_resume_expired(&self) -> u64 {
+        self.sessions_resume_expired.load(Ordering::Relaxed)
+    }
+
+    /// Sessions currently parked awaiting a resume.
+    pub fn sessions_parked(&self) -> usize {
+        self.parked_lock().len()
+    }
+
+    /// The parked-session map, recovering from poison like the routing
+    /// cache (same argument: entries are inserted and removed whole, a
+    /// panic cannot leave a half-written entry behind).
+    fn parked_lock(&self) -> MutexGuard<'_, HashMap<u32, ParkedSession>> {
+        self.parked.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
     }
 
     /// Ask the serve loop to stop accepting new sessions.
@@ -611,7 +731,7 @@ pub struct SessionOutcome {
     pub idle_reaped: bool,
     /// Wall time from first frame awaited to session end.
     pub wall_seconds: f64,
-    /// Serve-protocol version the session negotiated (3, or 2 for a
+    /// Serve-protocol version the session negotiated (4; 3 or 2 for a
     /// legacy peer; 0 for a hello-less sessionless connection).
     pub protocol: u32,
     /// Delta-basis eviction policy the session ran
@@ -717,7 +837,9 @@ impl SessionMachine {
                 }
                 // the codec already rejects other versions; keep the
                 // check so in-memory links get the same contract
-                if (protocol != SERVE_PROTOCOL_VERSION && protocol != SERVE_PROTOCOL_V2)
+                if (protocol != SERVE_PROTOCOL_VERSION
+                    && protocol != SERVE_PROTOCOL_V3
+                    && protocol != SERVE_PROTOCOL_V2)
                     || sid == SESSIONLESS_ID
                 {
                     eprintln!("[sbp-serve] malformed SessionHello, closing");
@@ -728,9 +850,10 @@ impl SessionMachine {
                 // negotiate down for legacy peers: a v2 session runs a
                 // frozen basis and receives the bare 12-byte accept
                 // (the codec elides the v3 extension when the
-                // negotiated version says so)
+                // negotiated version says so); v3 keeps the full delta
+                // machinery and only lacks resumption
                 self.negotiated = protocol.min(SERVE_PROTOCOL_VERSION);
-                let evict = if self.negotiated >= SERVE_PROTOCOL_VERSION {
+                let evict = if self.negotiated >= SERVE_PROTOCOL_V3 {
                     state.cfg.basis_evict
                 } else {
                     BasisEvict::Freeze
@@ -1249,6 +1372,19 @@ pub fn serve_predict_loop_on<A: AcceptSource>(
     for h in worker_handles {
         worker_peak_sessions.push(h.join().map(|s| s.peak_sessions).unwrap_or(0));
     }
+    // sessions still parked when the loop drains can never resume —
+    // report each exactly once, like any other session
+    let leftover: Vec<ParkedSession> = {
+        let mut map = state.parked_lock();
+        map.drain().map(|(_, p)| p).collect()
+    };
+    for p in leftover {
+        eprintln!(
+            "[sbp-serve] session {} still parked at loop drain, giving it up",
+            p.machine.session_id
+        );
+        expire_parked(state, p, &accum, wake, max_sessions);
+    }
     let accum = Arc::try_unwrap(accum)
         .map(|m| m.into_inner().unwrap_or_else(|e| e.into_inner()))
         .unwrap_or_else(|_| LoopAccum {
@@ -1320,6 +1456,23 @@ struct NbSession {
     /// backlog remains to drain.
     closing: Option<bool>,
     idle_reaped: bool,
+    /// The close was transport-level (FIN, reset, torn frame) rather
+    /// than a protocol decision — the only kind of death a session may
+    /// be parked over: a protocol violation is final.
+    parkable: bool,
+    /// Answer frames (`RouteAnswers`/`RouteAnswersDelta`) sent on this
+    /// session so far — the host side of the resume cursor.
+    answers_sent: u64,
+    /// Keys inserted into the session's delta basis so far (mirrored
+    /// exactly by the guest) — the desync cross-check
+    /// [`ToGuest::ResumeAccept`] carries as `basis_epoch`.
+    basis_inserts: u64,
+    /// Un-acknowledged answer frames, verbatim, for replay on resume
+    /// (bounded by [`replay_retain_cap`]; empty unless the session is
+    /// v4 and [`ServeConfig::resume_window`] is on).
+    replay: std::collections::VecDeque<ReplayEntry>,
+    /// Times this session has resumed across connections.
+    resumes: u32,
 }
 
 /// Context one reactor worker shares across every session of its shard:
@@ -1390,6 +1543,11 @@ fn reactor_worker(
                 Err(TryRecvError::Disconnected) => inbox_open = false,
             }
         }
+        // parked sessions age on their own clock (the resume window),
+        // swept opportunistically by whichever worker gets here first —
+        // before the empty-shard branch, so a fully idle service still
+        // expires its parked sessions
+        sweep_parked(&state, &accum, wake, max_sessions);
         peak = peak.max(sessions.len());
         if sessions.is_empty() {
             if !inbox_open {
@@ -1459,6 +1617,11 @@ fn adopt_conn(state: &HostServeState, stream: TcpStream, peer: SocketAddr) -> Op
                 last_activity: now,
                 closing: None,
                 idle_reaped: false,
+                parkable: false,
+                answers_sent: 0,
+                basis_inserts: 0,
+                replay: std::collections::VecDeque::new(),
+                resumes: 0,
             })
         }
         Err(e) => {
@@ -1491,6 +1654,7 @@ fn sweep_session(
         }
         Err(e) => {
             eprintln!("[sbp-serve] transport error, closing: {e}");
+            sess.parkable = true;
             sess.closing = Some(sess.closing.unwrap_or(false));
             return true;
         }
@@ -1525,8 +1689,34 @@ fn sweep_session(
                     }
                 };
                 sess.conn.consume_frame();
+                if let ToHost::SessionResume { session, last_acked_chunk } = msg {
+                    // handled by the reactor, not the protocol machine:
+                    // resuming swaps a parked machine into this slot
+                    if !resume_session(state, sess, ctx, session, last_acked_chunk, wire_len) {
+                        // nothing (valid) to resume — close; the guest
+                        // backs off and retries until the dying
+                        // connection has actually been parked
+                        sess.closing = Some(false);
+                    }
+                    continue;
+                }
                 sess.counters.record_to_host(msg.kind(), wire_len);
-                let NbSession { conn, machine, counters, .. } = sess;
+                // replay buffering is v4-only and costs nothing when
+                // resumption is off or the peer cannot resume
+                let buffer_replay = !state.cfg.resume_window.is_zero()
+                    && sess.machine.hello_seen
+                    && sess.machine.negotiated >= SERVE_PROTOCOL_VERSION;
+                let basis_on = sess.machine.basis.capacity() > 0;
+                let replay_cap = replay_retain_cap(&state.cfg);
+                let NbSession {
+                    conn,
+                    machine,
+                    counters,
+                    answers_sent,
+                    basis_inserts,
+                    replay,
+                    ..
+                } = sess;
                 let step = machine.on_frame(state, msg, &mut |m: ToGuest| {
                     codec::encode_to_guest_into(&ctx.suite, ctx.ct_len, &m, &mut ctx.scratch);
                     counters.record_to_guest(
@@ -1534,6 +1724,33 @@ fn sweep_session(
                         (ctx.scratch.len() + codec::FRAME_HEADER_LEN) as u64,
                     );
                     conn.queue_frame(&ctx.scratch);
+                    // track the resume cursor and the basis epoch from
+                    // the emitted frames themselves — the exact
+                    // arithmetic the guest's mirror runs, so the two
+                    // cross-check on resume
+                    let (is_answer, inserted) = match &m {
+                        ToGuest::RouteAnswers { n, .. } => {
+                            (true, if basis_on { *n as u64 } else { 0 })
+                        }
+                        ToGuest::RouteAnswersDelta { n, n_known, .. } => {
+                            (true, (*n - *n_known) as u64)
+                        }
+                        _ => (false, 0),
+                    };
+                    if is_answer {
+                        *answers_sent += 1;
+                        if buffer_replay {
+                            replay.push_back(ReplayEntry {
+                                kind: m.kind(),
+                                epoch_before: *basis_inserts,
+                                bytes: ctx.scratch.clone(),
+                            });
+                            while replay.len() > replay_cap {
+                                replay.pop_front();
+                            }
+                        }
+                        *basis_inserts += inserted;
+                    }
                 });
                 if let Step::Close { clean } = step {
                     sess.closing = Some(clean);
@@ -1542,10 +1759,12 @@ fn sweep_session(
             Ok(RecvPoll::Pending) => break,
             Ok(RecvPoll::Closed) => {
                 // FIN without SessionClose: transport close, not clean
+                sess.parkable = true;
                 sess.closing = Some(false);
             }
             Err(e) => {
                 eprintln!("[sbp-host] transport error, closing: {e}");
+                sess.parkable = true;
                 sess.closing = Some(false);
             }
         }
@@ -1559,6 +1778,7 @@ fn sweep_session(
         }
         Err(e) => {
             eprintln!("[sbp-serve] transport error, closing: {e}");
+            sess.parkable = true;
             sess.closing = Some(sess.closing.unwrap_or(false));
             return true;
         }
@@ -1586,9 +1806,219 @@ fn sweep_session(
     false
 }
 
+/// Swap a parked session's state into the connection that presented a
+/// valid [`ToHost::SessionResume`], emit the [`ToGuest::ResumeAccept`]
+/// handshake, and queue the un-acknowledged answer frames verbatim.
+/// Returns `false` (and leaves any parked state untouched, for the
+/// expiry sweep to report) when there is nothing valid to resume — a
+/// fresh close is the defined answer and the guest's retry loop covers
+/// the park race.
+fn resume_session(
+    state: &HostServeState,
+    sess: &mut NbSession,
+    ctx: &mut WorkerCtx,
+    session: u32,
+    last_acked_chunk: u32,
+    wire_len: u64,
+) -> bool {
+    // only the very first frame of a fresh connection may resume
+    if sess.machine.hello_seen
+        || sess.machine.batches > 0
+        || sess.machine.keep_alives > 0
+        || sess.resumes > 0
+    {
+        eprintln!(
+            "[sbp-serve] SessionResume mid-session on session {}, closing",
+            sess.machine.session_id
+        );
+        return false;
+    }
+    let window = state.cfg.resume_window;
+    if window.is_zero() {
+        eprintln!("[sbp-serve] SessionResume for {session} but resumption is disabled, closing");
+        return false;
+    }
+    let parked = {
+        let mut map = state.parked_lock();
+        let Some(p) = map.get(&session) else {
+            eprintln!("[sbp-serve] SessionResume for unknown/unparked session {session}, closing");
+            return false;
+        };
+        if p.parked_at.elapsed() > window {
+            // expired but not yet swept: the sweep owns reporting it
+            eprintln!("[sbp-serve] SessionResume for expired session {session}, closing");
+            return false;
+        }
+        let acked = last_acked_chunk as u64;
+        if acked > p.answers_sent || p.answers_sent - acked > p.replay.len() as u64 {
+            eprintln!(
+                "[sbp-serve] SessionResume for {session} acks {acked} of {} answers with {} \
+                 retained, cannot replay — closing",
+                p.answers_sent,
+                p.replay.len()
+            );
+            return false;
+        }
+        map.remove(&session).expect("parked entry vanished under the lock")
+    };
+    sess.machine = parked.machine;
+    sess.counters = parked.counters;
+    sess.answers_sent = parked.answers_sent;
+    sess.basis_inserts = parked.basis_inserts;
+    sess.replay = parked.replay;
+    sess.resumes = parked.resumes + 1;
+    sess.t0 = parked.t0;
+    sess.counters.record_to_host(ToHostKind::SessionResume, wire_len);
+    // drop what the guest confirmed; everything left replays, in order
+    while sess.replay.len() as u64 > sess.answers_sent - last_acked_chunk as u64 {
+        sess.replay.pop_front();
+    }
+    let basis_epoch = match sess.replay.front() {
+        Some(first) => first.epoch_before as u32,
+        None => sess.basis_inserts as u32,
+    };
+    let accept = ToGuest::ResumeAccept {
+        next_chunk: (sess.answers_sent + 1) as u32,
+        basis_epoch,
+    };
+    codec::encode_to_guest_into(&ctx.suite, ctx.ct_len, &accept, &mut ctx.scratch);
+    sess.counters
+        .record_to_guest(accept.kind(), (ctx.scratch.len() + codec::FRAME_HEADER_LEN) as u64);
+    sess.conn.queue_frame(&ctx.scratch);
+    for entry in &sess.replay {
+        sess.counters
+            .record_to_guest(entry.kind, (entry.bytes.len() + codec::FRAME_HEADER_LEN) as u64);
+        sess.conn.queue_frame(&entry.bytes);
+    }
+    state.sessions_resumed.fetch_add(1, Ordering::Relaxed);
+    eprintln!(
+        "[sbp-serve] session {session} resumed from {} (replaying {} answer frames)",
+        sess.peer,
+        sess.replay.len()
+    );
+    true
+}
+
+/// Park an uncleanly dead v4 session instead of reporting it, when
+/// eligible; returns the session back when it is not (the caller then
+/// finalizes normally). A second unclean death under the same id
+/// replaces the unreachable older parked state, which is reported on
+/// the spot — once, like every session.
+fn try_park(
+    state: &HostServeState,
+    sess: NbSession,
+    accum: &Arc<Mutex<LoopAccum>>,
+    wake: SocketAddr,
+    max_sessions: usize,
+) -> Option<NbSession> {
+    let eligible = !state.cfg.resume_window.is_zero()
+        && sess.parkable
+        && !sess.idle_reaped
+        && sess.closing == Some(false)
+        && sess.machine.hello_seen
+        && sess.machine.negotiated >= SERVE_PROTOCOL_VERSION
+        && !state.stop_requested();
+    if !eligible {
+        return Some(sess);
+    }
+    let sid = sess.machine.session_id;
+    sess.conn.shutdown();
+    eprintln!("[sbp-serve] session {sid} disconnected uncleanly, parking for resume");
+    let parked = ParkedSession {
+        machine: sess.machine,
+        counters: sess.counters,
+        answers_sent: sess.answers_sent,
+        basis_inserts: sess.basis_inserts,
+        replay: sess.replay,
+        resumes: sess.resumes,
+        t0: sess.t0,
+        parked_at: Instant::now(),
+        peer: sess.peer,
+    };
+    let displaced = state.parked_lock().insert(sid, parked);
+    if let Some(old) = displaced {
+        eprintln!("[sbp-serve] session {sid} parked again before resuming, reporting the old state");
+        expire_parked(state, old, accum, wake, max_sessions);
+    }
+    None
+}
+
+/// Report a parked session that will never resume (window expired, loop
+/// drained, or displaced by a newer park under the same id). This is
+/// the session's **only** report — parking deferred it, nothing else
+/// emitted one.
+fn expire_parked(
+    state: &HostServeState,
+    parked: ParkedSession,
+    accum: &Arc<Mutex<LoopAccum>>,
+    wake: SocketAddr,
+    max_sessions: usize,
+) {
+    state.sessions_resume_expired.fetch_add(1, Ordering::Relaxed);
+    let outcome =
+        parked.machine.outcome(false, false, parked.t0.elapsed().as_secs_f64(), 0, 0.0, 0.0);
+    if !outcome.is_control_only() {
+        state.sessions_served.fetch_add(1, Ordering::Relaxed);
+        if let Ok(mut acc) = accum.lock() {
+            let comm = parked.counters.snapshot();
+            acc.comm = acc.comm.add(&comm);
+            acc.sessions.push(SessionReport { outcome, peer: parked.peer.to_string(), comm });
+            if acc.sessions.len() > RETAINED_SESSION_REPORTS {
+                acc.sessions.remove(0);
+                acc.dropped += 1;
+            }
+        }
+    }
+    if state.stop_requested() || budget_met(state, max_sessions) {
+        let _ = TcpStream::connect(wake);
+    }
+}
+
+/// Give up on parked sessions whose resume window has run out. Any
+/// worker may run this; `try_lock` keeps it off the hot path's critical
+/// section — a missed sweep is just retried next loop.
+fn sweep_parked(
+    state: &HostServeState,
+    accum: &Arc<Mutex<LoopAccum>>,
+    wake: SocketAddr,
+    max_sessions: usize,
+) {
+    let window = state.cfg.resume_window;
+    if window.is_zero() {
+        return;
+    }
+    let expired: Vec<ParkedSession> = {
+        let mut map = match state.parked.try_lock() {
+            Ok(map) => map,
+            // recover a poisoned map like parked_lock(); a contended
+            // one is simply some other worker already sweeping
+            Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(std::sync::TryLockError::WouldBlock) => return,
+        };
+        if map.is_empty() {
+            return;
+        }
+        let dead: Vec<u32> = map
+            .iter()
+            .filter(|(_, p)| p.parked_at.elapsed() > window)
+            .map(|(id, _)| *id)
+            .collect();
+        dead.into_iter().filter_map(|id| map.remove(&id)).collect()
+    };
+    for p in expired {
+        eprintln!(
+            "[sbp-serve] parked session {} saw no resume inside {:?}, giving it up",
+            p.machine.session_id, window
+        );
+        expire_parked(state, p, accum, wake, max_sessions);
+    }
+}
+
 /// Retire a finished shard session: close the socket, assemble its
 /// outcome, account it, and poke the accept loop if the service should
-/// now wind down.
+/// now wind down. Uncleanly dead v4 sessions detour through the parked
+/// store first — for them this call is deferred to their final close,
+/// resume-window expiry, or loop drain, whichever ends the session.
 fn finalize_session(
     state: &HostServeState,
     sess: NbSession,
@@ -1596,6 +2026,9 @@ fn finalize_session(
     wake: SocketAddr,
     max_sessions: usize,
 ) {
+    let Some(sess) = try_park(state, sess, accum, wake, max_sessions) else {
+        return;
+    };
     sess.conn.shutdown();
     // ring/stall metrics are the threaded pipeline's; the reactor has
     // no per-session ring, so they are structurally zero here
@@ -2052,5 +2485,258 @@ mod tests {
         assert!(accept_error_is_transient(&Error::from(ErrorKind::ConnectionAborted)));
         assert!(!accept_error_is_transient(&Error::from(ErrorKind::PermissionDenied)));
         assert!(!accept_error_is_transient(&Error::from(ErrorKind::InvalidInput)));
+    }
+
+    #[test]
+    fn v3_hello_keeps_the_negotiated_lru_basis() {
+        // the protocol bump to v4 must not demote v3 peers to Freeze:
+        // the evict gate is "v3 or newer", not "current version"
+        let state = toy_state(0);
+        let (guest, host) = link_pair_bounded(8, 1);
+        let handle = spawn_serve_session(state, host);
+        guest.send(ToHost::SessionHello { session_id: 12, protocol: SERVE_PROTOCOL_V3 });
+        let ToGuest::SessionAccept { protocol, basis_evict, .. } = guest.recv() else {
+            panic!("expected SessionAccept")
+        };
+        assert_eq!(protocol, SERVE_PROTOCOL_V3, "negotiated down to the peer's version");
+        assert_eq!(basis_evict, BasisEvict::Lru, "v3 still runs the configured LRU");
+        guest.send(ToHost::SessionClose { session_id: 12 });
+        let outcome = handle.join().expect("session thread");
+        assert_eq!(outcome.protocol, SERVE_PROTOCOL_V3);
+        assert_eq!(outcome.basis_evict, BasisEvict::Lru);
+    }
+
+    // ---- reactor resumption tests: a real listener, real sockets, and
+    // a guest transport whose connection is killed mid-stream
+
+    use crate::crypto::cipher::CipherSuite as Suite;
+    use crate::federation::tcp::TcpGuestTransport;
+    use crate::federation::transport::GuestTransport;
+
+    fn spawn_reactor(
+        cfg: ServeConfig,
+        max_sessions: usize,
+    ) -> (String, Arc<HostServeState>, std::thread::JoinHandle<ServeLoopReport>) {
+        let model = HostModel { party: 0, splits: vec![(0, 0, 1.0), (1, 2, -1.0)] };
+        let slice = PartySlice {
+            cols: vec![0, 1],
+            x: vec![0.5, 0.0, 2.0, -2.0, 0.5, 5.0, 2.0, -1.5],
+            n: 4,
+        };
+        let state = HostServeState::new(model, slice, cfg);
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind test listener");
+        let addr = format!("127.0.0.1:{}", listener.local_addr().unwrap().port());
+        let st = Arc::clone(&state);
+        let handle = std::thread::Builder::new()
+            .name("sbp-test-reactor".into())
+            .spawn(move || serve_predict_loop(&listener, &st, max_sessions).expect("serve loop"))
+            .expect("spawn test reactor");
+        (addr, state, handle)
+    }
+
+    fn stop_reactor(
+        state: &Arc<HostServeState>,
+        addr: &str,
+        handle: std::thread::JoinHandle<ServeLoopReport>,
+    ) -> ServeLoopReport {
+        state.request_stop();
+        let _ = TcpStream::connect(addr);
+        handle.join().expect("reactor thread")
+    }
+
+    fn wait_until(what: &str, pred: impl Fn() -> bool) {
+        for _ in 0..600 {
+            if pred() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        panic!("timed out waiting for {what}");
+    }
+
+    /// Reconnect and run the resume handshake, riding out the park race
+    /// (a resume that lands before the dying connection was swept is
+    /// answered by a close; retry).
+    fn resume_handshake(t: &TcpGuestTransport, session: u32, last_acked: u32) -> (u32, u32) {
+        for _ in 0..200 {
+            if t.reconnect().is_err() {
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+            if t
+                .try_send(ToHost::SessionResume { session, last_acked_chunk: last_acked })
+                .is_err()
+            {
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+            match t.try_recv() {
+                Ok(ToGuest::ResumeAccept { next_chunk, basis_epoch }) => {
+                    return (next_chunk, basis_epoch)
+                }
+                Ok(other) => panic!("expected ResumeAccept, got {:?}", other.kind()),
+                Err(_) => std::thread::sleep(Duration::from_millis(5)),
+            }
+        }
+        panic!("session {session} never resumed");
+    }
+
+    #[test]
+    fn resume_replays_unacked_answers_and_keeps_the_basis() {
+        let (addr, state, handle) = spawn_reactor(
+            ServeConfig {
+                cache_capacity: 0,
+                workers: 2,
+                resume_window: Duration::from_secs(5),
+                ..ServeConfig::default()
+            },
+            0,
+        );
+        let t = TcpGuestTransport::connect(&addr, Suite::new_plain(64)).expect("connect");
+        t.send(ToHost::SessionHello { session_id: 21, protocol: SERVE_PROTOCOL_VERSION });
+        let ToGuest::SessionAccept { protocol, .. } = t.recv() else { panic!("expected accept") };
+        assert_eq!(protocol, SERVE_PROTOCOL_VERSION);
+        t.send(ToHost::PredictRoute { session: 21, chunk: 1, queries: vec![(1, 0), (1, 1)] });
+        let ToGuest::RouteAnswers { bits, .. } = t.recv() else { panic!("expected answer 1") };
+        assert_eq!(bits, vec![0b10]);
+        // second request: the answer is computed and buffered, but this
+        // guest dies before reading it
+        t.send(ToHost::PredictRoute { session: 21, chunk: 2, queries: vec![(2, 0), (0, 0)] });
+        t.kill();
+
+        let (next_chunk, basis_epoch) = resume_handshake(&t, 21, 1);
+        assert_eq!(next_chunk, 3, "host had sent 2 answer frames; the next fresh one is #3");
+        assert_eq!(basis_epoch, 2, "two keys inserted by the acked frame");
+        // the un-acked answer replays byte-identically: both chunk-2
+        // keys were fresh, so it was a plain RouteAnswers
+        let ToGuest::RouteAnswers { session, chunk, n, bits } = t.recv() else {
+            panic!("expected the replayed answer")
+        };
+        assert_eq!((session, chunk, n), (21, 2, 2));
+        assert_eq!(bits, vec![0b11]);
+        // basis continuity: a key answered before the disconnect is
+        // still known — the parked basis moved with the session
+        t.send(ToHost::PredictRoute { session: 21, chunk: 3, queries: vec![(1, 0)] });
+        let ToGuest::RouteAnswersDelta { n, n_known, bits, .. } = t.recv() else {
+            panic!("expected a fully elided delta after resume")
+        };
+        assert_eq!((n, n_known), (1, 1));
+        assert!(bits.is_empty());
+        t.send(ToHost::SessionClose { session_id: 21 });
+
+        wait_until("the session to finish", || state.sessions_served() == 1);
+        let report = stop_reactor(&state, &addr, handle);
+        assert_eq!(state.sessions_resumed(), 1);
+        assert_eq!(state.sessions_resume_expired(), 0);
+        assert_eq!(state.sessions_idle_reaped(), 0, "no phantom idle reap");
+        assert_eq!(state.sessions_served(), 1, "a resumed session counts once");
+        assert_eq!(report.sessions.len(), 1, "…and is reported once");
+        let s = &report.sessions[0];
+        assert!(s.outcome.clean_close);
+        assert_eq!(s.outcome.batches, 3);
+        assert_eq!(s.outcome.queries, 5);
+    }
+
+    #[test]
+    fn parked_session_expires_by_resume_window_while_neighbors_serve_on() {
+        // ordering 1: resume window << idle timeout — expiry must come
+        // from the window, the idle reaper must never touch the parked
+        // session, and a live neighbor session must not be disturbed
+        let (addr, state, handle) = spawn_reactor(
+            ServeConfig {
+                cache_capacity: 0,
+                workers: 2,
+                resume_window: Duration::from_millis(50),
+                session_idle_timeout: Duration::from_secs(10),
+                ..ServeConfig::default()
+            },
+            0,
+        );
+        let neighbor = TcpGuestTransport::connect(&addr, Suite::new_plain(64)).expect("connect");
+        neighbor.send(ToHost::SessionHello { session_id: 33, protocol: SERVE_PROTOCOL_VERSION });
+        let ToGuest::SessionAccept { .. } = neighbor.recv() else { panic!("expected accept") };
+
+        let t = TcpGuestTransport::connect(&addr, Suite::new_plain(64)).expect("connect");
+        t.send(ToHost::SessionHello { session_id: 31, protocol: SERVE_PROTOCOL_VERSION });
+        let ToGuest::SessionAccept { .. } = t.recv() else { panic!("expected accept") };
+        t.send(ToHost::PredictRoute { session: 31, chunk: 1, queries: vec![(0, 0)] });
+        let ToGuest::RouteAnswers { .. } = t.recv() else { panic!("expected answer") };
+        t.kill();
+
+        wait_until("the parked session to expire", || state.sessions_resume_expired() == 1);
+        assert_eq!(state.sessions_idle_reaped(), 0, "expiry is the window's, not the reaper's");
+        assert_eq!(state.sessions_parked(), 0);
+        // a resume after expiry finds nothing and is refused cleanly
+        let _ = t.reconnect();
+        let _ = t.try_send(ToHost::SessionResume { session: 31, last_acked_chunk: 1 });
+        assert!(t.try_recv().is_err(), "expired session must not resume");
+        // the neighbor kept its session through all of it
+        neighbor.send(ToHost::PredictRoute { session: 33, chunk: 1, queries: vec![(1, 1)] });
+        let ToGuest::RouteAnswers { bits, .. } = neighbor.recv() else {
+            panic!("neighbor session must still serve")
+        };
+        assert_eq!(bits, vec![0b1]);
+        neighbor.send(ToHost::SessionClose { session_id: 33 });
+        wait_until("both sessions to be reported", || state.sessions_served() == 2);
+        let report = stop_reactor(&state, &addr, handle);
+        assert_eq!(report.sessions.len(), 2, "expired + neighbor, each reported once");
+
+        // ordering 2: idle timeout << resume window — the parked
+        // session must survive many idle windows untouched
+        let (addr, state, handle) = spawn_reactor(
+            ServeConfig {
+                cache_capacity: 0,
+                workers: 2,
+                resume_window: Duration::from_secs(10),
+                session_idle_timeout: Duration::from_millis(50),
+                ..ServeConfig::default()
+            },
+            0,
+        );
+        let t = TcpGuestTransport::connect(&addr, Suite::new_plain(64)).expect("connect");
+        t.send(ToHost::SessionHello { session_id: 32, protocol: SERVE_PROTOCOL_VERSION });
+        let ToGuest::SessionAccept { .. } = t.recv() else { panic!("expected accept") };
+        t.send(ToHost::PredictRoute { session: 32, chunk: 1, queries: vec![(0, 0)] });
+        let ToGuest::RouteAnswers { .. } = t.recv() else { panic!("expected answer") };
+        t.kill();
+        wait_until("the session to park", || state.sessions_parked() == 1);
+        std::thread::sleep(Duration::from_millis(300)); // six idle windows
+        assert_eq!(state.sessions_parked(), 1, "parked state outlives the idle timeout");
+        assert_eq!(state.sessions_idle_reaped(), 0);
+        assert_eq!(state.sessions_resume_expired(), 0);
+        let report = stop_reactor(&state, &addr, handle);
+        // drained at loop end: reported exactly once, as expired
+        assert_eq!(state.sessions_resume_expired(), 1);
+        assert_eq!(state.sessions_served(), 1);
+        assert_eq!(report.sessions.len(), 1);
+    }
+
+    #[test]
+    fn failed_resume_attempts_are_control_only_and_the_server_stays_healthy() {
+        let (addr, state, handle) = spawn_reactor(
+            ServeConfig {
+                cache_capacity: 0,
+                workers: 2,
+                resume_window: Duration::from_secs(5),
+                ..ServeConfig::default()
+            },
+            0,
+        );
+        // resume for a session that was never parked: refused by close
+        let t = TcpGuestTransport::connect(&addr, Suite::new_plain(64)).expect("connect");
+        assert!(t.try_send(ToHost::SessionResume { session: 999, last_acked_chunk: 0 }).is_ok());
+        assert!(t.try_recv().is_err(), "unknown session must not resume");
+        // the server is unharmed: a normal session still serves
+        let t2 = TcpGuestTransport::connect(&addr, Suite::new_plain(64)).expect("connect");
+        t2.send(ToHost::SessionHello { session_id: 41, protocol: SERVE_PROTOCOL_VERSION });
+        let ToGuest::SessionAccept { .. } = t2.recv() else { panic!("expected accept") };
+        t2.send(ToHost::PredictRoute { session: 41, chunk: 1, queries: vec![(0, 0)] });
+        let ToGuest::RouteAnswers { .. } = t2.recv() else { panic!("expected answer") };
+        t2.send(ToHost::SessionClose { session_id: 41 });
+        wait_until("the real session to finish", || state.sessions_served() == 1);
+        let report = stop_reactor(&state, &addr, handle);
+        assert_eq!(state.sessions_resumed(), 0);
+        assert_eq!(state.sessions_served(), 1, "the failed attempt is control-only");
+        assert_eq!(report.sessions.len(), 1);
     }
 }

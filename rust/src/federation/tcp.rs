@@ -244,8 +244,17 @@ impl NbConn {
 }
 
 /// Guest-side endpoint of one guest↔host TCP connection.
+///
+/// Supports **re-dialing**: [`GuestTransport::reconnect`] replaces the
+/// socket while keeping the traffic counters, so a v4 serving session
+/// resumed after a dropped connection keeps one cumulative accounting
+/// stream. The fallible [`GuestTransport::try_send`] /
+/// [`GuestTransport::try_recv`] surface connection death as errors for
+/// the resumption path; the infallible `send`/`recv` keep their
+/// historical panic behavior for protocol drivers that cannot recover.
 pub struct TcpGuestTransport {
     io: Mutex<ConnIo>,
+    addr: String,
     suite: CipherSuite,
     ct_len: usize,
     counters: Arc<NetCounters>,
@@ -260,6 +269,7 @@ impl TcpGuestTransport {
         let ct_len = suite.ct_byte_len();
         Ok(TcpGuestTransport {
             io: Mutex::new(ConnIo::new(stream)),
+            addr: addr.to_string(),
             suite,
             ct_len,
             counters: Arc::new(NetCounters::default()),
@@ -270,33 +280,96 @@ impl TcpGuestTransport {
     pub fn counters(&self) -> Arc<NetCounters> {
         self.counters.clone()
     }
+
+    /// Abort the connection (FIN in both directions, queued bytes still
+    /// delivered). Fault-injection support
+    /// ([`crate::federation::fault`]): a graceful shutdown — not an
+    /// RST — so everything fully written before the kill still reaches
+    /// the host, which keeps injected-kill outcomes deterministic.
+    pub fn kill(&self) {
+        let io = self.io.lock().expect("tcp stream poisoned");
+        let _ = io.stream.shutdown(std::net::Shutdown::Both);
+    }
+
+    /// Fault-injection support: encode `msg`'s frame but write only its
+    /// first `n_bytes` bytes — a deterministic **torn write**. The torn
+    /// frame is not recorded in the counters: the host's defensive
+    /// decode discards an incomplete frame, so neither side counts it
+    /// and the message never takes protocol effect. Callers follow up
+    /// with [`Self::kill`] so the host sees the FIN.
+    pub fn send_torn(&self, msg: &ToHost, n_bytes: usize) -> std::io::Result<()> {
+        let mut io = self.io.lock().expect("tcp stream poisoned");
+        let ConnIo { stream, wbuf, .. } = &mut *io;
+        codec::encode_to_host_into(&self.suite, self.ct_len, msg, wbuf);
+        let mut frame = (wbuf.len() as u64).to_le_bytes().to_vec();
+        frame.extend_from_slice(wbuf);
+        let cut = n_bytes.min(frame.len());
+        stream.write_all(&frame[..cut])?;
+        stream.flush()
+    }
 }
 
 impl GuestTransport for TcpGuestTransport {
     fn send(&self, msg: ToHost) {
-        let mut io = self.io.lock().expect("tcp stream poisoned");
-        let ConnIo { stream, wbuf, .. } = &mut *io;
-        codec::encode_to_host_into(&self.suite, self.ct_len, &msg, wbuf);
-        self.counters
-            .record_to_host(msg.kind(), (wbuf.len() + codec::FRAME_HEADER_LEN) as u64);
-        codec::write_frame(stream, wbuf).expect("tcp send to host failed");
+        self.try_send(msg).expect("tcp send to host failed");
     }
 
     fn recv(&self) -> ToGuest {
+        self.try_recv().expect("tcp recv from host failed")
+    }
+
+    fn snapshot(&self) -> NetSnapshot {
+        self.counters.snapshot()
+    }
+
+    fn try_send(&self, msg: ToHost) -> std::io::Result<()> {
+        let mut io = self.io.lock().expect("tcp stream poisoned");
+        let ConnIo { stream, wbuf, .. } = &mut *io;
+        codec::encode_to_host_into(&self.suite, self.ct_len, &msg, wbuf);
+        codec::write_frame(stream, wbuf)?;
+        // recorded only after the kernel accepted the whole frame — a
+        // failed send never took protocol effect and is not counted
+        self.counters
+            .record_to_host(msg.kind(), (wbuf.len() + codec::FRAME_HEADER_LEN) as u64);
+        Ok(())
+    }
+
+    fn try_recv(&self) -> std::io::Result<ToGuest> {
         let mut io = self.io.lock().expect("tcp stream poisoned");
         let ConnIo { stream, rbuf, .. } = &mut *io;
-        if !codec::read_frame_into(stream, rbuf).expect("tcp recv from host failed") {
-            panic!("host closed the connection mid-protocol");
+        match codec::read_frame_into(stream, rbuf) {
+            Ok(true) => {}
+            // connection-level failures are recoverable (the resumption
+            // path re-dials); a *malformed* frame from the host is a
+            // protocol bug and still panics
+            Ok(false) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "host closed the connection mid-protocol",
+                ));
+            }
+            Err(codec::WireError::Truncated) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection died mid-frame",
+                ));
+            }
+            Err(codec::WireError::Io(e)) => return Err(e),
+            Err(e) => panic!("malformed frame from host: {e}"),
         }
         let msg = codec::decode_to_guest(&self.suite, self.ct_len, rbuf)
             .expect("malformed frame from host");
         self.counters
             .record_to_guest(msg.kind(), (rbuf.len() + codec::FRAME_HEADER_LEN) as u64);
-        msg
+        Ok(msg)
     }
 
-    fn snapshot(&self) -> NetSnapshot {
-        self.counters.snapshot()
+    fn reconnect(&self) -> std::io::Result<()> {
+        let stream = TcpStream::connect(&self.addr)?;
+        let mut io = self.io.lock().expect("tcp stream poisoned");
+        let _ = io.stream.shutdown(std::net::Shutdown::Both);
+        *io = ConnIo::new(stream);
+        Ok(())
     }
 }
 

@@ -43,6 +43,32 @@ pub trait GuestTransport {
     fn recv(&self) -> ToGuest;
     /// Traffic seen by this link so far.
     fn snapshot(&self) -> NetSnapshot;
+
+    /// Fallible [`GuestTransport::send`]: surfaces connection death as
+    /// an error instead of panicking, so a resumption-capable caller
+    /// (the v4 reconnect path in [`crate::federation::predict`]) can
+    /// react. In-memory links never fail and use the default.
+    fn try_send(&self, msg: ToHost) -> std::io::Result<()> {
+        self.send(msg);
+        Ok(())
+    }
+
+    /// Fallible *blocking* [`GuestTransport::recv`] (not a poll):
+    /// surfaces connection death as an error instead of panicking.
+    fn try_recv(&self) -> std::io::Result<ToGuest> {
+        Ok(self.recv())
+    }
+
+    /// Tear down and re-dial the underlying byte stream, keeping this
+    /// link's traffic counters (a resumed session's accounting stays
+    /// cumulative across connections). Transports without a dialable
+    /// address (in-memory links) return `Unsupported`.
+    fn reconnect(&self) -> std::io::Result<()> {
+        Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "this transport cannot reconnect",
+        ))
+    }
 }
 
 /// Host-side endpoint: receive [`ToHost`] (None on shutdown/close), send

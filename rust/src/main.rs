@@ -131,6 +131,10 @@ fn main() {
                  \x20                        (default 4; clamped to the host's bound)\n\
                  \x20 --passes <n>           score the batch n times in one session\n\
                  \x20                        (repeat-scoring; needs --batch-rows)\n\
+                 \x20 --reconnect-retries <n> re-dial a dead connection up to n times\n\
+                 \x20                        while streaming and resume the session\n\
+                 \x20                        (serve protocol v4; needs the host's\n\
+                 \x20                        --resume-window; default 0 = fail fast)\n\
                  \x20 --progress             per-chunk progress lines on stderr\n\
                  \x20 --dummy-queries <n>    decoy queries shuffled into each routing batch\n\
                  \x20 --decoy-seed <n>       pin the decoy stream (default: OS entropy)\n\
@@ -155,6 +159,9 @@ fn main() {
                  \x20 --session-idle-timeout <secs>  reap sessions silent for this long\n\
                  \x20                        — no frame, no keep-alive — as dead peers\n\
                  \x20                        (default 60; 0 = never)\n\
+                 \x20 --resume-window <secs> park a v4 session whose connection died\n\
+                 \x20                        and let the guest reconnect and resume it\n\
+                 \x20                        within this window (default 0 = off)\n\
                  \x20 --bind <ip> --port <p> listen address (default 127.0.0.1:7979)\n\
                  \n\
                  datagen options:\n\
@@ -517,6 +524,7 @@ fn predict_opts(
         dummy_queries,
         batch_rows,
         max_inflight,
+        reconnect_retries: args.get_parse("reconnect-retries", 0u32),
         progress: args.flag("progress"),
         ..sbp::federation::predict::PredictOptions::default()
     };
@@ -651,8 +659,16 @@ fn cmd_predict(args: &Args) {
         for r in &reports {
             if reports.len() > 1 || r.session_id != 0 {
                 let pipeline = if r.chunks > 0 {
+                    let resumed = if r.reconnects > 0 {
+                        format!(
+                            " reconnects={} chunks-replayed={}",
+                            r.reconnects, r.chunks_replayed
+                        )
+                    } else {
+                        String::new()
+                    };
                     format!(
-                        " chunks={} mean-inflight={:.2} stall={:.3}s delta-elided={}",
+                        " chunks={} mean-inflight={:.2} stall={:.3}s delta-elided={}{resumed}",
                         r.chunks, r.mean_inflight, r.stall_seconds, r.delta_elided,
                     )
                 } else {
@@ -820,6 +836,7 @@ fn cmd_serve_predict(args: &Args) {
     let max_inflight: u32 = args.get_parse("max-inflight", 8u32);
     let serve_workers: usize = args.get_parse("serve-workers", 0usize);
     let idle_secs: u64 = args.get_parse("session-idle-timeout", 60u64);
+    let resume_secs: u64 = args.get_parse("resume-window", 0u64);
     let evict_arg = args.get_or("basis-evict", "lru");
     let Some(basis_evict) = sbp::federation::message::BasisEvict::parse(&evict_arg) else {
         eprintln!("--basis-evict takes 'lru' or 'freeze', got '{evict_arg}'");
@@ -883,6 +900,7 @@ fn cmd_serve_predict(args: &Args) {
         basis_evict,
         workers: serve_workers,
         session_idle_timeout: std::time::Duration::from_secs(idle_secs),
+        resume_window: std::time::Duration::from_secs(resume_secs),
         ..sbp::federation::serve::ServeConfig::default()
     };
     match sbp::coordinator::serve_predict_tcp(&listener, art.model, slice, cfg, max_sessions) {

@@ -1,0 +1,143 @@
+//! Shared fixtures for the serving integration suites
+//! (`tests/serve_soak.rs`, `tests/serve_fault.rs`): randomized serving
+//! worlds and loopback `serve_predict_tcp` bring-up.
+#![allow(dead_code)] // each test binary uses its own subset
+
+use sbp::coordinator::{serve_predict_tcp, ServeReport};
+use sbp::data::dataset::{PartySlice, VerticalSplit};
+use sbp::federation::serve::ServeConfig;
+use sbp::tree::node::{SplitRef, Tree};
+use sbp::tree::predict::{GuestModel, HostModel};
+use sbp::util::rng::Xoshiro256;
+
+/// One randomly drawn serving world: aligned per-party feature slices
+/// plus a hand-built (not trained) model whose every host party is
+/// consulted by every row — a host with no traffic would be a
+/// control-only session and would hang a budgeted serve loop.
+pub struct World {
+    pub vs: VerticalSplit,
+    pub guest_m: GuestModel,
+    pub host_ms: Vec<HostModel>,
+}
+
+fn uni(rng: &mut Xoshiro256) -> f64 {
+    rng.next_f64() * 2.0 - 1.0
+}
+
+/// Recursively grow a random tree below `node`. `force_host` pins the
+/// root to a split owned by that host party, guaranteeing the party is
+/// consulted by every row of every batch.
+fn grow(
+    t: &mut Tree,
+    node: u32,
+    depth: u8,
+    rng: &mut Xoshiro256,
+    guest_d: usize,
+    host_ms: &[HostModel],
+    force_host: Option<usize>,
+) {
+    let split_here = force_host.is_some() || (depth < 3 && rng.next_below(10) < 7);
+    if !split_here {
+        t.nodes[node as usize].weight = vec![uni(rng) * 2.0];
+        return;
+    }
+    let split = match force_host {
+        Some(p) => SplitRef::Host {
+            party: p as u8,
+            handle: rng.next_below(host_ms[p].splits.len()) as u32,
+        },
+        None => {
+            if rng.next_below(2) == 0 {
+                SplitRef::Guest {
+                    feature: rng.next_below(guest_d) as u32,
+                    bin: 0,
+                    threshold: uni(rng),
+                }
+            } else {
+                let p = rng.next_below(host_ms.len());
+                SplitRef::Host {
+                    party: p as u8,
+                    handle: rng.next_below(host_ms[p].splits.len()) as u32,
+                }
+            }
+        }
+    };
+    let (l, r) = t.split_node(node, split);
+    grow(t, l, depth + 1, rng, guest_d, host_ms, None);
+    grow(t, r, depth + 1, rng, guest_d, host_ms, None);
+}
+
+pub fn gen_world(rng: &mut Xoshiro256, n_hosts: usize) -> World {
+    let n = 1 + rng.next_below(48);
+    let guest_d = 1 + rng.next_below(3);
+    let host_ds: Vec<usize> = (0..n_hosts).map(|_| 1 + rng.next_below(3)).collect();
+
+    let guest = PartySlice {
+        cols: (0..guest_d).collect(),
+        x: (0..n * guest_d).map(|_| uni(rng)).collect(),
+        n,
+    };
+    let mut col0 = guest_d;
+    let hosts: Vec<PartySlice> = host_ds
+        .iter()
+        .map(|&d| {
+            let s = PartySlice {
+                cols: (col0..col0 + d).collect(),
+                x: (0..n * d).map(|_| uni(rng)).collect(),
+                n,
+            };
+            col0 += d;
+            s
+        })
+        .collect();
+
+    let host_ms: Vec<HostModel> = (0..n_hosts)
+        .map(|p| HostModel {
+            party: p as u8,
+            splits: (0..3 + rng.next_below(6))
+                .map(|_| (rng.next_below(host_ds[p]) as u32, 0u8, uni(rng)))
+                .collect(),
+        })
+        .collect();
+
+    // every host party roots at least one tree, so every session
+    // carries real traffic for every host
+    let n_trees = n_hosts + 1 + rng.next_below(3);
+    let mut trees = Vec::with_capacity(n_trees);
+    for t_idx in 0..n_trees {
+        let mut t = Tree::new(1);
+        let force = (t_idx < n_hosts).then_some(t_idx);
+        grow(&mut t, 0, 0, rng, guest_d, &host_ms, force);
+        trees.push((t, 0usize));
+    }
+    let guest_m = GuestModel { trees, n_classes: 2, pred_width: 1 };
+
+    let vs = VerticalSplit {
+        guest,
+        hosts,
+        y: vec![0.0; n],
+        n_classes: 2,
+        name: "soak".into(),
+    };
+    World { vs, guest_m, host_ms }
+}
+
+/// Start one `serve_predict_tcp` loop per host party, budgeted to one
+/// session each.
+pub fn start_servers(
+    world: &World,
+    cfg: ServeConfig,
+) -> (Vec<String>, Vec<std::thread::JoinHandle<ServeReport>>) {
+    let mut addrs = Vec::new();
+    let mut servers = Vec::new();
+    for p in 0..world.host_ms.len() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        addrs.push(listener.local_addr().unwrap().to_string());
+        let model = world.host_ms[p].clone();
+        let slice = world.vs.hosts[p].clone();
+        servers.push(std::thread::spawn(move || {
+            serve_predict_tcp(&listener, model, slice, cfg, 1).expect("serve loop")
+        }));
+    }
+    (addrs, servers)
+}

@@ -1,0 +1,565 @@
+//! Seeded fault-injection soak for serve-protocol-v4 session
+//! resumption: every scenario kills a live serving connection at a
+//! *planned* frame boundary ([`FaultPlan`]) and asserts the resumed
+//! stream is **bit-identical** to the centralized oracle, with
+//! `StreamReport::reconnects` / `StreamReport::chunks_replayed` matching
+//! the injected plan *exactly* — the replay count owed after a kill is
+//! arithmetic, not luck: a graceful FIN delivers every fully-sent
+//! request, the host answers all of them, and the guest acknowledged
+//! precisely the answers it received, so
+//! `chunks_replayed = routes_fully_sent − answers_received` at the kill.
+//!
+//! Coverage:
+//!
+//! - an **exhaustive frame-boundary kill sweep** of a 3-chunk stream —
+//!   every interior boundary (route sends and answer receives alike,
+//!   half of them with torn-write prefixes) dies once;
+//! - a **seeded randomized matrix** (kill point × chunk size × in-flight
+//!   window × delta window × eviction policy × protocol v2/v3/v4 ×
+//!   1–2 hosts): v4 peers resume bit-identically, v2/v3 peers fail
+//!   loudly and cleanly while the host stays healthy; the fixed-seed
+//!   slice runs in CI, the full range behind `--ignored`
+//!   (`cargo test --release --test serve_fault -- --ignored`);
+//! - a **partial-I/O corpus** for the reactor's non-blocking
+//!   [`NbConn`]: every sample frame split at every byte position
+//!   reassembles identically, every torn-write prefix + FIN errors
+//!   cleanly, and queued writes flush byte-identically.
+
+mod common;
+
+use common::{gen_world, start_servers, World};
+use sbp::coordinator::predict_centralized;
+use sbp::crypto::cipher::CipherSuite;
+use sbp::federation::codec::{encode_to_guest, encode_to_host, WireError};
+use sbp::federation::fault::{FaultPlan, FaultyConn, FaultyTransport};
+use sbp::federation::message::{
+    BasisEvict, ToGuest, ToHost, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_V3, SERVE_PROTOCOL_VERSION,
+};
+use sbp::federation::predict::{PredictOptions, PredictSession, StreamReport};
+use sbp::federation::serve::ServeConfig;
+use sbp::federation::tcp::{NbConn, RecvPoll, TcpGuestTransport};
+use sbp::federation::transport::{GuestTransport, NetSnapshot};
+use sbp::util::rng::Xoshiro256;
+use std::io::Read;
+use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Shared handle over a [`FaultyTransport`]: the session engine drives
+/// it as a boxed [`GuestTransport`] while the test keeps the same
+/// wrapper for post-run kill-log assertions.
+struct SharedFault(Arc<FaultyTransport>);
+
+impl GuestTransport for SharedFault {
+    fn send(&self, msg: ToHost) {
+        self.0.send(msg)
+    }
+    fn recv(&self) -> ToGuest {
+        self.0.recv()
+    }
+    fn snapshot(&self) -> NetSnapshot {
+        self.0.snapshot()
+    }
+    fn try_send(&self, msg: ToHost) -> std::io::Result<()> {
+        self.0.try_send(msg)
+    }
+    fn try_recv(&self) -> std::io::Result<ToGuest> {
+        self.0.try_recv()
+    }
+    fn reconnect(&self) -> std::io::Result<()> {
+        self.0.reconnect()
+    }
+}
+
+/// Everything one faulted client run produces.
+struct FaultRun {
+    preds: Vec<f64>,
+    stream: StreamReport,
+    /// Summed guest-side wire accounting across all links.
+    comm: NetSnapshot,
+    /// Per-link frames fully crossed when the stream finished (before
+    /// `SessionClose`) — the sizing input for frame-boundary sweeps.
+    frames_at_stream_end: Vec<u64>,
+    /// The fault wrappers, in link order, for kill-log assertions.
+    faults: Vec<Arc<FaultyTransport>>,
+}
+
+/// One streamed serving session over fault-wrapped TCP links:
+/// `plans[p]` arms host `p`'s wrapper (empty = pass-through).
+fn run_client(
+    world: &World,
+    addrs: &[String],
+    opts: PredictOptions,
+    plans: Vec<Vec<FaultPlan>>,
+) -> FaultRun {
+    let suite = CipherSuite::new_plain(64); // inference frames carry no ciphertexts
+    let mut faults = Vec::with_capacity(addrs.len());
+    let mut links: Vec<Box<dyn GuestTransport>> = Vec::with_capacity(addrs.len());
+    for (addr, plan) in addrs.iter().zip(plans) {
+        let inner =
+            TcpGuestTransport::connect(addr, suite.clone()).expect("connect to serving host");
+        let fault = Arc::new(FaultyTransport::new(inner, plan));
+        faults.push(fault.clone());
+        links.push(Box::new(SharedFault(fault)));
+    }
+    let mut session = PredictSession::new(&world.guest_m, 41, opts);
+    session.open(&links);
+    let (preds, stream) = session.predict_stream(&world.vs.guest, &links);
+    let frames_at_stream_end = faults.iter().map(|f| f.frames_total()).collect();
+    session.close(&links);
+    let comm = links
+        .iter()
+        .map(|l| l.snapshot())
+        .fold(NetSnapshot::default(), |acc, s| acc.add(&s));
+    FaultRun { preds, stream, comm, frames_at_stream_end, faults }
+}
+
+/// The acceptance sweep: a fixed 3-chunk stream, one run per interior
+/// frame boundary — the op carrying frame `k + 1` dies (odd boundaries
+/// also leak a torn prefix of the doomed frame first). Whatever the
+/// boundary — any route send, any answer receive, pipelined or not —
+/// the resumed stream must equal the centralized oracle bit for bit,
+/// reconnect exactly once, and replay exactly the answers that were in
+/// flight at the kill.
+#[test]
+fn every_stream_frame_boundary_kill_resumes_bit_identically() {
+    let mut rng = Xoshiro256::seed_from_u64(0x3C41_FB0B);
+    let world = loop {
+        let w = gen_world(&mut rng, 1);
+        // any n ≥ 5 yields exactly 3 chunks under batch_rows = ⌈n/3⌉
+        if w.vs.n() >= 5 {
+            break w;
+        }
+    };
+    let n = world.vs.n();
+    let oracle = predict_centralized(&world.guest_m, &world.host_ms, &world.vs);
+    let cfg = ServeConfig {
+        delta_window: 64,
+        basis_evict: BasisEvict::Lru,
+        max_inflight: 2,
+        resume_window: Duration::from_secs(30),
+        ..ServeConfig::default()
+    };
+    let opts = PredictOptions {
+        batch_rows: (n + 2) / 3,
+        max_inflight: 2,
+        seed: 0xFA117,
+        protocol: SERVE_PROTOCOL_VERSION,
+        reconnect_retries: 5,
+        ..PredictOptions::default()
+    };
+
+    // the no-fault counting run sizes the sweep and pins the baseline
+    // invariants: parity, zero reconnects, symmetric byte accounting
+    let (addrs, servers) = start_servers(&world, cfg);
+    let base = run_client(&world, &addrs, opts, vec![Vec::new()]);
+    assert_eq!(base.preds, oracle, "no-fault run must equal centralized");
+    assert_eq!(base.stream.reconnects, 0);
+    assert_eq!(base.stream.chunks_replayed, 0);
+    let mut host_comm = NetSnapshot::default();
+    for server in servers {
+        let report = server.join().expect("server thread");
+        assert_eq!(report.n_sessions, 1);
+        host_comm = host_comm.add(&report.comm);
+    }
+    assert_eq!(base.comm, host_comm, "no-fault byte accounting must stay two-sided equal");
+    let frames = base.frames_at_stream_end[0];
+    assert_eq!(
+        frames, 8,
+        "a 3-chunk stream is 8 frames: hello, accept, 3 routes, 3 answers"
+    );
+
+    // frames 1..=2 are the handshake; boundaries 2..frames put the kill
+    // on every route send and every answer receive of all three chunks
+    for k in 2..frames {
+        let plan = FaultPlan {
+            seed: k,
+            kill_after_frames: k,
+            partial_write_bytes: if k % 2 == 1 { 1 + (k as usize % 13) } else { 0 },
+            delay: Duration::ZERO,
+        };
+        let (addrs, servers) = start_servers(&world, cfg);
+        let run = run_client(&world, &addrs, opts, vec![vec![plan]]);
+        assert_eq!(
+            run.preds, oracle,
+            "kill at frame boundary {k}: the resumed stream must be bit-identical"
+        );
+        assert_eq!(run.faults[0].kills(), 1, "boundary {k}: the planned kill fired");
+        let (routes, answers) = run.faults[0].kill_log()[0];
+        assert_eq!(run.stream.reconnects, 1, "boundary {k}: exactly one reconnect");
+        assert_eq!(
+            run.stream.chunks_replayed,
+            routes - answers,
+            "boundary {k}: replay count must equal the answers in flight at the kill \
+             ({routes} routes fully sent, {answers} answers received)"
+        );
+        for server in servers {
+            let report = server.join().expect("server thread");
+            assert_eq!(
+                report.n_sessions, 1,
+                "boundary {k}: a disconnect-and-resume session counts once"
+            );
+            assert_eq!(report.sessions_resumed, 1, "boundary {k}");
+            assert_eq!(report.sessions_resume_expired, 0, "boundary {k}");
+            assert_eq!(
+                report.sessions_idle_reaped, 0,
+                "boundary {k}: no phantom idle-reap for a parked-then-resumed session"
+            );
+            assert!(
+                report.sessions[0].outcome.clean_close,
+                "boundary {k}: the resumed session still ends in a clean SessionClose"
+            );
+        }
+    }
+}
+
+/// One randomized fault iteration: draw a world and a configuration,
+/// prove the no-fault invariants, then re-run the identical schedule
+/// with one seeded kill per link. v4 sessions must resume
+/// bit-identically with exact counters; v2/v3 sessions must fail loudly
+/// (naming the missing resumption capability) while the host finishes
+/// its budget cleanly.
+fn run_fault_iteration(seed: u64, it: usize) {
+    let mut rng =
+        Xoshiro256::seed_from_u64(seed ^ (it as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let protocol = match it % 5 {
+        3 => SERVE_PROTOCOL_V3,
+        4 => SERVE_PROTOCOL_V2,
+        _ => SERVE_PROTOCOL_VERSION,
+    };
+    let resumable = protocol == SERVE_PROTOCOL_VERSION;
+    // legacy-death iterations use one host: the guest panics mid-stream
+    // and only a host whose session already did work can finish its
+    // one-session budget
+    let n_hosts = if resumable { 1 + it % 2 } else { 1 };
+    let world = gen_world(&mut rng, n_hosts);
+    let n = world.vs.n();
+    let oracle = predict_centralized(&world.guest_m, &world.host_ms, &world.vs);
+
+    let delta_window = if it % 3 == 0 { 0 } else { [4usize, 64, 1 << 12][rng.next_below(3)] };
+    let basis_evict = if it % 4 < 2 { BasisEvict::Lru } else { BasisEvict::Freeze };
+    let batch_rows = 1 + rng.next_below(n.min(7));
+    let max_inflight = 1 + rng.next_below(4) as u32;
+    let dummy_queries = [0usize, 0, 3][rng.next_below(3)];
+    let tag = format!(
+        "it {it} seed {seed:#x}: n={n} hosts={n_hosts} batch_rows={batch_rows} \
+         inflight={max_inflight} delta={delta_window} evict={} v{protocol} \
+         decoys={dummy_queries}",
+        basis_evict.name()
+    );
+
+    let cfg = ServeConfig {
+        delta_window,
+        basis_evict,
+        max_inflight,
+        resume_window: Duration::from_secs(30),
+        ..ServeConfig::default()
+    };
+    let opts = PredictOptions {
+        batch_rows,
+        max_inflight: 1 + rng.next_below(4),
+        dummy_queries,
+        seed: rng.next_u64(),
+        protocol,
+        reconnect_retries: 6,
+        ..PredictOptions::default()
+    };
+
+    // ---- phase 1: the no-fault run. Parity, zero reconnects, and the
+    // two-sided byte-accounting equality the wrapper must not disturb;
+    // its per-link frame counts size phase 2's kill boundaries.
+    let (addrs, servers) = start_servers(&world, cfg);
+    let base = run_client(&world, &addrs, opts, vec![Vec::new(); n_hosts]);
+    assert_eq!(base.preds, oracle, "{tag}: no-fault parity");
+    assert_eq!(base.stream.reconnects, 0, "{tag}");
+    assert_eq!(base.stream.chunks_replayed, 0, "{tag}");
+    let mut host_comm = NetSnapshot::default();
+    for server in servers {
+        let report = server.join().expect("server thread");
+        assert_eq!(report.n_sessions, 1, "{tag}: one serving session");
+        host_comm = host_comm.add(&report.comm);
+    }
+    assert_eq!(base.comm, host_comm, "{tag}: no-fault byte accounting symmetric");
+    let frames = base.frames_at_stream_end.clone();
+
+    // ---- phase 2: the same schedule with one seeded kill per link.
+    // The faulted run's frame sequence is prefix-identical to phase 1's
+    // (same seeds, deterministic engine), so a boundary below the
+    // stream's frame count is guaranteed to land inside the stream.
+    if resumable {
+        let (addrs, servers) = start_servers(&world, cfg);
+        let plans: Vec<Vec<FaultPlan>> = (0..n_hosts)
+            .map(|p| {
+                let mut plan = FaultPlan::from_seed(rng.next_u64(), frames[p] - 1);
+                plan.kill_after_frames = plan.kill_after_frames.clamp(2, frames[p] - 1);
+                vec![plan]
+            })
+            .collect();
+        let run = run_client(&world, &addrs, opts, plans);
+        assert_eq!(run.preds, oracle, "{tag}: resumed run must equal centralized");
+        let mut kills = 0u64;
+        let mut expected_replay = 0u64;
+        for fault in &run.faults {
+            kills += fault.kills();
+            for (routes, answers) in fault.kill_log() {
+                expected_replay += routes - answers;
+            }
+        }
+        assert_eq!(kills, n_hosts as u64, "{tag}: every planned kill fired");
+        assert_eq!(run.stream.reconnects, kills, "{tag}: one reconnect per kill");
+        assert_eq!(run.stream.chunks_replayed, expected_replay, "{tag}: exact replay count");
+        for (p, server) in servers.into_iter().enumerate() {
+            let report = server.join().expect("server thread");
+            assert_eq!(
+                report.n_sessions, 1,
+                "{tag}: host {p}: a disconnect-and-resume session counts once"
+            );
+            assert_eq!(report.sessions_resumed, 1, "{tag}: host {p}");
+            assert_eq!(report.sessions_resume_expired, 0, "{tag}: host {p}");
+            assert_eq!(report.sessions_idle_reaped, 0, "{tag}: host {p}");
+            assert!(
+                report.sessions[0].outcome.clean_close,
+                "{tag}: host {p}: resumed session still closes cleanly"
+            );
+        }
+    } else {
+        let (addrs, servers) = start_servers(&world, cfg);
+        // ≥ 3 full frames (hello, accept, first route) before the kill:
+        // the host must have answered at least one batch so its
+        // one-session budget completes after the peer dies
+        let mut plan = FaultPlan::from_seed(rng.next_u64(), frames[0] - 1);
+        plan.kill_after_frames = plan.kill_after_frames.clamp(3, frames[0] - 1);
+        let world_ref = &world;
+        let addrs_ref = &addrs;
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            run_client(world_ref, addrs_ref, opts, vec![vec![plan]])
+        }));
+        let payload = result.err().unwrap_or_else(|| {
+            panic!("{tag}: a v{protocol} peer must fail loudly when its connection dies")
+        });
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&'static str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(
+            msg.contains("cannot resume"),
+            "{tag}: the failure must name the missing resumption capability, got: {msg}"
+        );
+        for server in servers {
+            let report = server.join().expect("server survives a dying legacy peer");
+            assert_eq!(report.n_sessions, 1, "{tag}: the dead session completed the budget");
+            assert_eq!(report.sessions_resumed, 0, "{tag}: nothing resumed");
+            assert!(
+                !report.sessions[0].outcome.clean_close,
+                "{tag}: a legacy peer's death is not a clean close"
+            );
+        }
+    }
+}
+
+/// The fixed-seed CI slice: deterministic, covers the discrete matrix
+/// (1/2 hosts, delta on/off, lru/freeze, v2/v3/v4, kill point per
+/// seeded plan).
+#[test]
+fn fault_matrix_fixed_seed() {
+    for it in 0..10 {
+        run_fault_iteration(0xFA_017_5EED, it);
+    }
+}
+
+/// The full fault-soak range — slow; run explicitly with
+/// `cargo test --release --test serve_fault -- --ignored`.
+#[test]
+#[ignore = "full randomized fault soak; run explicitly"]
+fn fault_matrix_full_range() {
+    for seed in [0xFA_017_5EEDu64, 0xBAD_F00D, 0xD15_C0] {
+        for it in 0..24 {
+            run_fault_iteration(seed, it);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Partial-I/O corpus for the reactor's non-blocking connection
+// ---------------------------------------------------------------------
+
+/// Encoded payloads of the serving-path frames (mirroring the
+/// `tests/wire_codec.rs` sample corpus, minus ciphertext-bearing
+/// training frames — the reactor serves inference only).
+fn sample_payloads() -> Vec<Vec<u8>> {
+    let suite = CipherSuite::new_plain(64);
+    let ct_len = suite.ct_byte_len();
+    let to_host: Vec<ToHost> = vec![
+        ToHost::SessionHello { session_id: 1, protocol: SERVE_PROTOCOL_VERSION },
+        ToHost::SessionHello { session_id: 77, protocol: SERVE_PROTOCOL_V2 },
+        ToHost::SessionResume { session: 7, last_acked_chunk: 3 },
+        ToHost::PredictRoute { session: 1, chunk: 0, queries: vec![(0, 1), (5, 2), (9, 0)] },
+        ToHost::PredictRoute { session: 1, chunk: 7, queries: Vec::new() },
+        ToHost::SessionClose { session_id: 1 },
+        ToHost::KeepAlive,
+    ];
+    let to_guest: Vec<ToGuest> = vec![
+        ToGuest::SessionAccept {
+            session_id: 1,
+            max_inflight: 8,
+            delta_window: 64,
+            protocol: SERVE_PROTOCOL_VERSION,
+            basis_evict: BasisEvict::Lru,
+        },
+        ToGuest::ResumeAccept { next_chunk: 4, basis_epoch: 9 },
+        ToGuest::RouteAnswers { session: 1, chunk: 0, n: 11, bits: vec![0b1010_1010, 0b101] },
+        ToGuest::RouteAnswersDelta { session: 1, chunk: 2, n: 11, n_known: 3, bits: vec![0b0101_0101] },
+        ToGuest::Ack,
+    ];
+    let mut payloads: Vec<Vec<u8>> =
+        to_host.iter().map(|m| encode_to_host(&suite, ct_len, m)).collect();
+    payloads.extend(to_guest.iter().map(|m| encode_to_guest(&suite, ct_len, m)));
+    payloads
+}
+
+/// Poll `conn` until it reports something other than `Pending`
+/// (loopback delivery of just-written bytes is asynchronous).
+fn poll_settled(conn: &mut NbConn) -> Result<RecvPoll, WireError> {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match conn.poll_frame() {
+            Ok(RecvPoll::Pending) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            other => return other,
+        }
+    }
+}
+
+/// Short-read corpus: every sample frame, delivered split at every byte
+/// position, must reassemble into exactly the original payload — one
+/// frame, no residue, no error — however the kernel slices the reads.
+#[test]
+fn nbconn_reassembles_every_split_point_of_every_sample_frame() {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap();
+    let client = TcpStream::connect(addr).expect("connect");
+    let (server, _) = listener.accept().expect("accept");
+    let mut feeder = FaultyConn::new(client, FaultPlan::benign());
+    let mut conn = NbConn::new(server).expect("nonblocking conn");
+
+    for payload in sample_payloads() {
+        let mut frame = (payload.len() as u64).to_le_bytes().to_vec();
+        frame.extend_from_slice(&payload);
+        for cut in 0..=frame.len() {
+            feeder.dribble(&frame[..cut]).expect("dribble prefix");
+            feeder.dribble(&frame[cut..]).expect("dribble remainder");
+            match poll_settled(&mut conn).expect("split delivery must never corrupt a frame") {
+                RecvPoll::Frame => {}
+                other => panic!("split at {cut}: expected a frame, got {other:?}"),
+            }
+            assert_eq!(conn.frame_payload(), &payload[..], "split at {cut}");
+            conn.consume_frame();
+            assert_eq!(
+                conn.poll_frame().expect("empty wire"),
+                RecvPoll::Pending,
+                "split at {cut} left residue behind"
+            );
+        }
+    }
+}
+
+/// Torn-write corpus: a complete frame, then every possible torn prefix
+/// of a second frame followed by a FIN. The receiver must surface the
+/// whole first frame, then classify the tail exactly: empty prefix →
+/// clean close; mid-frame prefix → `Truncated`; full frame → frame,
+/// then clean close. Never a panic, never a phantom frame.
+#[test]
+fn nbconn_rejects_every_torn_write_prefix_cleanly() {
+    for payload in sample_payloads() {
+        let frame_len = 8 + payload.len();
+        for cut in 0..=frame_len {
+            let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+            let addr = listener.local_addr().unwrap();
+            let client = TcpStream::connect(addr).expect("connect");
+            let (server, _) = listener.accept().expect("accept");
+            // frame 1 crosses whole; frame 2 is torn at `cut` and FIN'd
+            let plan = FaultPlan {
+                seed: cut as u64,
+                kill_after_frames: 1,
+                partial_write_bytes: cut,
+                delay: Duration::ZERO,
+            };
+            let mut feeder = FaultyConn::new(client, plan);
+            assert!(feeder.feed(&payload).expect("first frame crosses"));
+            assert!(!feeder.feed(&payload).expect("second frame dies"), "cut {cut}");
+
+            let mut conn = NbConn::new(server).expect("nonblocking conn");
+            match poll_settled(&mut conn).expect("first frame assembles") {
+                RecvPoll::Frame => {}
+                other => panic!("cut {cut}: expected the whole first frame, got {other:?}"),
+            }
+            assert_eq!(conn.frame_payload(), &payload[..], "cut {cut}");
+            conn.consume_frame();
+
+            let tail = poll_settled(&mut conn);
+            if cut == 0 {
+                assert!(
+                    matches!(tail, Ok(RecvPoll::Closed)),
+                    "cut 0 is a FIN at the boundary — a clean close, got {tail:?}"
+                );
+            } else if cut < frame_len {
+                assert!(
+                    matches!(tail, Err(WireError::Truncated)),
+                    "cut {cut}: a torn frame + FIN must report truncation, got {tail:?}"
+                );
+            } else {
+                match tail.expect("whole second frame crossed before the FIN") {
+                    RecvPoll::Frame => {}
+                    other => panic!("cut {cut}: expected the second frame, got {other:?}"),
+                }
+                assert_eq!(conn.frame_payload(), &payload[..], "cut {cut}");
+                conn.consume_frame();
+                let end = poll_settled(&mut conn);
+                assert!(
+                    matches!(end, Ok(RecvPoll::Closed)),
+                    "cut {cut}: after both frames the FIN is a clean close, got {end:?}"
+                );
+            }
+        }
+    }
+}
+
+/// Write-side corpus: every sample frame queued through the reactor's
+/// write path drains byte-identically to the blocking framing —
+/// header + payload, in order, nothing duplicated by the partial-flush
+/// compaction.
+#[test]
+fn nbconn_flushes_queued_sample_frames_byte_identically() {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap();
+    let client = TcpStream::connect(addr).expect("connect");
+    let (server, _) = listener.accept().expect("accept");
+    let mut conn = NbConn::new(server).expect("nonblocking conn");
+
+    let payloads = sample_payloads();
+    let mut want = Vec::new();
+    // interleave queueing and flushing so the wpos-compaction path runs
+    for payload in &payloads {
+        conn.queue_frame(payload);
+        want.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        want.extend_from_slice(payload);
+        let _ = conn.flush_pending().expect("flush");
+    }
+    let reader = std::thread::spawn(move || {
+        let mut got = Vec::new();
+        let mut client = client;
+        client.read_to_end(&mut got).expect("read to FIN");
+        got
+    });
+    while !conn.write_idle() {
+        if conn.flush_pending().expect("flush") == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    conn.shutdown();
+    let got = reader.join().expect("reader thread");
+    assert_eq!(got, want, "queued frames must drain byte-identically");
+}

@@ -1,5 +1,5 @@
-//! Randomized parity-soak for the serving stack under serve protocol
-//! v3: every iteration draws a random world (rows, model shape, host
+//! Randomized parity-soak for the serving stack under serve protocols
+//! v2–v4: every iteration draws a random world (rows, model shape, host
 //! count) and a random serving/client configuration (chunk size,
 //! in-flight window, delta window, basis-evict policy, cache capacity,
 //! decoy padding, protocol version, repeat passes), runs it through
@@ -15,150 +15,21 @@
 //! A small fixed-seed instance runs in CI; the full range is behind
 //! `--ignored` (`cargo test --test serve_soak -- --ignored`).
 
-use sbp::coordinator::{
-    predict_centralized, predict_session_tcp, predict_stream_passes_tcp, serve_predict_tcp,
-    ServeReport,
-};
+mod common;
+
+use common::{gen_world, start_servers};
+use sbp::coordinator::{predict_centralized, predict_session_tcp, predict_stream_passes_tcp};
 use sbp::data::dataset::{PartySlice, VerticalSplit};
-use sbp::federation::message::{BasisEvict, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_VERSION};
+use sbp::federation::message::{
+    BasisEvict, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_V3, SERVE_PROTOCOL_VERSION,
+};
 use sbp::federation::predict::{PredictOptions, PredictSession};
 use sbp::federation::serve::{spawn_serve_session, HostServeState, ServeConfig};
 use sbp::federation::transport::{link_pair_bounded, GuestTransport, NetSnapshot};
-use sbp::tree::node::{SplitRef, Tree};
+use sbp::tree::node::SplitRef;
+use sbp::tree::node::Tree;
 use sbp::tree::predict::{GuestModel, HostModel};
 use sbp::util::rng::Xoshiro256;
-
-/// One randomly drawn serving world: aligned per-party feature slices
-/// plus a hand-built (not trained) model whose every host party is
-/// consulted by every row — a host with no traffic would be a
-/// control-only session and would hang a budgeted serve loop.
-struct World {
-    vs: VerticalSplit,
-    guest_m: GuestModel,
-    host_ms: Vec<HostModel>,
-}
-
-fn uni(rng: &mut Xoshiro256) -> f64 {
-    rng.next_f64() * 2.0 - 1.0
-}
-
-/// Recursively grow a random tree below `node`. `force_host` pins the
-/// root to a split owned by that host party, guaranteeing the party is
-/// consulted by every row of every batch.
-fn grow(
-    t: &mut Tree,
-    node: u32,
-    depth: u8,
-    rng: &mut Xoshiro256,
-    guest_d: usize,
-    host_ms: &[HostModel],
-    force_host: Option<usize>,
-) {
-    let split_here = force_host.is_some() || (depth < 3 && rng.next_below(10) < 7);
-    if !split_here {
-        t.nodes[node as usize].weight = vec![uni(rng) * 2.0];
-        return;
-    }
-    let split = match force_host {
-        Some(p) => SplitRef::Host {
-            party: p as u8,
-            handle: rng.next_below(host_ms[p].splits.len()) as u32,
-        },
-        None => {
-            if rng.next_below(2) == 0 {
-                SplitRef::Guest {
-                    feature: rng.next_below(guest_d) as u32,
-                    bin: 0,
-                    threshold: uni(rng),
-                }
-            } else {
-                let p = rng.next_below(host_ms.len());
-                SplitRef::Host {
-                    party: p as u8,
-                    handle: rng.next_below(host_ms[p].splits.len()) as u32,
-                }
-            }
-        }
-    };
-    let (l, r) = t.split_node(node, split);
-    grow(t, l, depth + 1, rng, guest_d, host_ms, None);
-    grow(t, r, depth + 1, rng, guest_d, host_ms, None);
-}
-
-fn gen_world(rng: &mut Xoshiro256, n_hosts: usize) -> World {
-    let n = 1 + rng.next_below(48);
-    let guest_d = 1 + rng.next_below(3);
-    let host_ds: Vec<usize> = (0..n_hosts).map(|_| 1 + rng.next_below(3)).collect();
-
-    let guest = PartySlice {
-        cols: (0..guest_d).collect(),
-        x: (0..n * guest_d).map(|_| uni(rng)).collect(),
-        n,
-    };
-    let mut col0 = guest_d;
-    let hosts: Vec<PartySlice> = host_ds
-        .iter()
-        .map(|&d| {
-            let s = PartySlice {
-                cols: (col0..col0 + d).collect(),
-                x: (0..n * d).map(|_| uni(rng)).collect(),
-                n,
-            };
-            col0 += d;
-            s
-        })
-        .collect();
-
-    let host_ms: Vec<HostModel> = (0..n_hosts)
-        .map(|p| HostModel {
-            party: p as u8,
-            splits: (0..3 + rng.next_below(6))
-                .map(|_| (rng.next_below(host_ds[p]) as u32, 0u8, uni(rng)))
-                .collect(),
-        })
-        .collect();
-
-    // every host party roots at least one tree, so every session
-    // carries real traffic for every host
-    let n_trees = n_hosts + 1 + rng.next_below(3);
-    let mut trees = Vec::with_capacity(n_trees);
-    for t_idx in 0..n_trees {
-        let mut t = Tree::new(1);
-        let force = (t_idx < n_hosts).then_some(t_idx);
-        grow(&mut t, 0, 0, rng, guest_d, &host_ms, force);
-        trees.push((t, 0usize));
-    }
-    let guest_m = GuestModel { trees, n_classes: 2, pred_width: 1 };
-
-    let vs = VerticalSplit {
-        guest,
-        hosts,
-        y: vec![0.0; n],
-        n_classes: 2,
-        name: "soak".into(),
-    };
-    World { vs, guest_m, host_ms }
-}
-
-/// Start one `serve_predict_tcp` loop per host party, budgeted to one
-/// session each.
-fn start_servers(
-    world: &World,
-    cfg: ServeConfig,
-) -> (Vec<String>, Vec<std::thread::JoinHandle<ServeReport>>) {
-    let mut addrs = Vec::new();
-    let mut servers = Vec::new();
-    for p in 0..world.host_ms.len() {
-        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
-        addrs.push(listener.local_addr().unwrap().to_string());
-        let model = world.host_ms[p].clone();
-        let slice = world.vs.hosts[p].clone();
-        servers.push(std::thread::spawn(move || {
-            serve_predict_tcp(&listener, model, slice, cfg, 1).expect("serve loop")
-        }));
-    }
-    (addrs, servers)
-}
 
 /// One soak iteration: draw a world and a configuration, score it
 /// federated, and check parity + accounting symmetry. The discrete
@@ -177,7 +48,11 @@ fn run_iteration(seed: u64, it: usize) {
     let delta_window = if it % 3 == 0 { 0 } else { [4usize, 64, 1 << 12][rng.next_below(3)] };
     let cache_capacity = if it % 2 == 0 { 0 } else { 1usize << (4 + rng.next_below(8)) };
     let basis_evict = if it % 4 < 2 { BasisEvict::Lru } else { BasisEvict::Freeze };
-    let protocol = if it % 5 == 4 { SERVE_PROTOCOL_V2 } else { SERVE_PROTOCOL_VERSION };
+    let protocol = match it % 5 {
+        4 => SERVE_PROTOCOL_V2,
+        3 => SERVE_PROTOCOL_V3,
+        _ => SERVE_PROTOCOL_VERSION,
+    };
     let max_inflight = 1 + rng.next_below(8) as u32;
     let batch_rows = [0usize, 1, 3, 7, 16][rng.next_below(5)];
     let dummy_queries = [0usize, 0, 3, 9][rng.next_below(4)];
@@ -238,7 +113,7 @@ fn run_iteration(seed: u64, it: usize) {
         assert!(outcome.clean_close, "{tag}: session must close cleanly");
         assert_eq!(outcome.protocol, protocol, "{tag}: negotiated protocol");
         let expect_evict =
-            if protocol >= SERVE_PROTOCOL_VERSION { basis_evict } else { BasisEvict::Freeze };
+            if protocol >= SERVE_PROTOCOL_V3 { basis_evict } else { BasisEvict::Freeze };
         assert_eq!(outcome.basis_evict, expect_evict, "{tag}: negotiated policy");
         assert!(
             outcome.ring_high_water <= max_inflight.max(1) as usize,
@@ -259,7 +134,7 @@ fn run_iteration(seed: u64, it: usize) {
 
 /// The fixed-seed CI instance: small, deterministic, covers the whole
 /// discrete matrix (1/2 hosts, delta on/off, cache on/off, lru/freeze,
-/// v2/v3, lockstep/pipelined, single/repeat passes).
+/// v2/v3/v4, lockstep/pipelined, single/repeat passes).
 #[test]
 fn soak_fixed_seed() {
     for it in 0..10 {

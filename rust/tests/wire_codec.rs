@@ -118,8 +118,17 @@ fn sample_to_host_messages(suite: &CipherSuite, rng: &mut ChaCha20Rng) -> Vec<To
             session_id: 77,
             protocol: sbp::federation::message::SERVE_PROTOCOL_V2,
         },
+        // ... as is a v3 hello (negotiated down from v4)
+        ToHost::SessionHello {
+            session_id: 78,
+            protocol: sbp::federation::message::SERVE_PROTOCOL_V3,
+        },
         ToHost::SessionClose { session_id: 1 },
         ToHost::KeepAlive,
+        // v4 resume handshake: a fresh stream (nothing acked yet) and a
+        // deep-in-stream cursor
+        ToHost::SessionResume { session: 7, last_acked_chunk: 0 },
+        ToHost::SessionResume { session: u32::MAX, last_acked_chunk: u32::MAX },
     ]
 }
 
@@ -179,6 +188,18 @@ fn sample_to_guest_messages(suite: &CipherSuite, rng: &mut ChaCha20Rng) -> Vec<T
             protocol: sbp::federation::message::SERVE_PROTOCOL_VERSION,
             basis_evict: sbp::federation::message::BasisEvict::Freeze,
         },
+        // a v3-negotiated accept keeps the extended 17-byte shape
+        ToGuest::SessionAccept {
+            session_id: 10,
+            max_inflight: 4,
+            delta_window: 256,
+            protocol: sbp::federation::message::SERVE_PROTOCOL_V3,
+            basis_evict: sbp::federation::message::BasisEvict::Lru,
+        },
+        // v4 resume grant: stream start and a deep cursor with a wrapped
+        // basis epoch
+        ToGuest::ResumeAccept { next_chunk: 1, basis_epoch: 0 },
+        ToGuest::ResumeAccept { next_chunk: u32::MAX, basis_epoch: u32::MAX },
         // delta answers: partially and fully elided, and the empty batch
         ToGuest::RouteAnswersDelta {
             session: 5,
@@ -415,6 +436,12 @@ fn malformed_session_hello_rejected() {
         ok,
         ToHost::SessionHello { session_id: 8, protocol: sbp::federation::message::SERVE_PROTOCOL_V2 }
     ));
+    let ok = decode_to_host(None, &hello(9, sbp::federation::message::SERVE_PROTOCOL_V3))
+        .expect("v3 hello still decodes (negotiated down)");
+    assert!(matches!(
+        ok,
+        ToHost::SessionHello { session_id: 9, protocol: sbp::federation::message::SERVE_PROTOCOL_V3 }
+    ));
     // reserved session id 0
     assert!(matches!(
         decode_to_host(None, &hello(0, SERVE_PROTOCOL_VERSION)),
@@ -437,6 +464,50 @@ fn malformed_session_hello_rejected() {
         assert!(decode_to_host(None, &full[..cut]).is_err(), "prefix {cut} accepted");
     }
     // trailing garbage after a complete hello
+    let mut long = full.clone();
+    long.push(0);
+    assert!(matches!(decode_to_host(None, &long), Err(WireError::Malformed(_))));
+}
+
+/// A malformed `SessionResume` — reserved session id 0, a truncated
+/// cursor, or trailing bytes — must be rejected by the codec: a host
+/// that grants a resume it cannot attribute would replay another
+/// session's answers.
+#[test]
+fn malformed_session_resume_rejected() {
+    let suite = CipherSuite::new_plain(256);
+    let ct_len = suite.ct_byte_len();
+
+    // hand-build resume payloads: tag 12, session, last_acked_chunk
+    let resume = |session: u32, last_acked: u32| {
+        let mut p = vec![12u8];
+        p.extend_from_slice(&session.to_le_bytes());
+        p.extend_from_slice(&last_acked.to_le_bytes());
+        p
+    };
+    // the valid shape decodes, including a zero cursor (nothing acked yet)
+    let ok = decode_to_host(None, &resume(7, 0)).expect("valid resume");
+    assert!(matches!(ok, ToHost::SessionResume { session: 7, last_acked_chunk: 0 }));
+    let ok = decode_to_host(None, &resume(u32::MAX, 41)).expect("valid resume");
+    assert!(matches!(
+        ok,
+        ToHost::SessionResume { session: u32::MAX, last_acked_chunk: 41 }
+    ));
+    // reserved session id 0: the sessionless id has no parked state to find
+    assert!(matches!(
+        decode_to_host(None, &resume(0, 3)),
+        Err(WireError::Malformed(_))
+    ));
+    // truncated resume frames
+    let full = encode_to_host(
+        &suite,
+        ct_len,
+        &ToHost::SessionResume { session: 3, last_acked_chunk: 9 },
+    );
+    for cut in 0..full.len() {
+        assert!(decode_to_host(None, &full[..cut]).is_err(), "prefix {cut} accepted");
+    }
+    // trailing garbage after a complete resume
     let mut long = full.clone();
     long.push(0);
     assert!(matches!(decode_to_host(None, &long), Err(WireError::Malformed(_))));
@@ -506,16 +577,18 @@ fn session_accept_v3_extension_validates() {
     assert_eq!(protocol, SERVE_PROTOCOL_V2);
     assert_eq!(basis_evict, BasisEvict::Freeze);
 
-    // extended form → announced policy
-    for (tag, want) in [(0u8, BasisEvict::Freeze), (1, BasisEvict::Lru)] {
-        let ToGuest::SessionAccept { protocol, basis_evict, .. } =
-            decode_to_guest(&suite, ct_len, &accept(Some((SERVE_PROTOCOL_VERSION, tag))))
-                .expect("v3 accept decodes")
-        else {
-            panic!("wrong kind")
-        };
-        assert_eq!(protocol, SERVE_PROTOCOL_VERSION);
-        assert_eq!(basis_evict, want);
+    // extended form → announced policy, for both protocols that carry it
+    for proto in [SERVE_PROTOCOL_VERSION, sbp::federation::message::SERVE_PROTOCOL_V3] {
+        for (tag, want) in [(0u8, BasisEvict::Freeze), (1, BasisEvict::Lru)] {
+            let ToGuest::SessionAccept { protocol, basis_evict, .. } =
+                decode_to_guest(&suite, ct_len, &accept(Some((proto, tag))))
+                    .expect("extended accept decodes")
+            else {
+                panic!("wrong kind")
+            };
+            assert_eq!(protocol, proto);
+            assert_eq!(basis_evict, want);
+        }
     }
 
     // unknown eviction tag
