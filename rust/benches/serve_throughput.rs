@@ -290,6 +290,184 @@ fn main() {
     }
     hc_table.print();
 
+    // ---- Stage C hot session: one streaming session whose every
+    // routed batch past the shard threshold fans its walk out across
+    // the compute pool — rows/sec should scale with pool width until
+    // the wire dominates. `inline` pins compute to the sweep thread
+    // (compute_shard_min = usize::MAX), the baseline the pool is
+    // measured against; parity to the colocated oracle gates every leg
+    // (including under --smoke).
+    println!("\n--- hot session: 1 session × {n} rows × compute pool width ---");
+    let mut cp_table = sbp::bench_harness::Table::new(&[
+        "compute", "rows/sec", "shard jobs", "shards/batch", "queue stall s",
+    ]);
+    let mut cp_points: Vec<Json> = Vec::new();
+    let hot_opts = PredictOptions {
+        batch_rows: (n / 4).max(64),
+        max_inflight: 4,
+        seed: 11,
+        ..PredictOptions::default()
+    };
+    for workers in [0usize, 1, 4, 8] {
+        let cp_cfg = if workers == 0 {
+            ServeConfig { compute_shard_min: usize::MAX, ..ServeConfig::default() }
+        } else {
+            ServeConfig {
+                compute_workers: workers,
+                compute_shard_min: 64,
+                ..ServeConfig::default()
+            }
+        };
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        let addr = listener.local_addr().unwrap().to_string();
+        let model = host_ms[0].clone();
+        let slice = vs.hosts[0].clone();
+        let server = std::thread::spawn(move || {
+            serve_predict_tcp(&listener, model, slice, cp_cfg, 1).expect("serve loop")
+        });
+        let t0 = std::time::Instant::now();
+        let reports = predict_sessions_tcp(
+            &guest_m,
+            &vs.guest,
+            std::slice::from_ref(&addr),
+            1,
+            1,
+            hot_opts,
+        )
+        .expect("hot session");
+        let wall = t0.elapsed().as_secs_f64();
+        let serve_report = server.join().expect("server thread");
+        assert_eq!(
+            reports[0].preds, oracle,
+            "hot session must be bit-identical to colocated (pool width {workers})"
+        );
+        if workers == 0 {
+            assert_eq!(serve_report.compute_jobs, 0, "inline leg must not fan out");
+        } else {
+            assert!(serve_report.compute_jobs > 0, "pooled leg must fan out");
+        }
+        let rows_per_sec = n as f64 / wall.max(1e-12);
+        cp_table.row(&[
+            if workers == 0 { "inline".into() } else { format!("{workers} worker(s)") },
+            format!("{rows_per_sec:.0}"),
+            serve_report.compute_jobs.to_string(),
+            format!("{:.1}", serve_report.shards_per_batch),
+            format!("{:.3}", serve_report.compute_queue_stall_seconds),
+        ]);
+        cp_points.push(Json::obj(vec![
+            ("compute_workers", Json::Num(workers as f64)),
+            ("rows_per_sec", Json::Num((rows_per_sec * 10.0).round() / 10.0)),
+            ("compute_jobs", Json::Num(serve_report.compute_jobs as f64)),
+            (
+                "shards_per_batch",
+                Json::Num((serve_report.shards_per_batch * 10.0).round() / 10.0),
+            ),
+            (
+                "compute_queue_stall_seconds",
+                Json::Num((serve_report.compute_queue_stall_seconds * 1000.0).round() / 1000.0),
+            ),
+        ]));
+    }
+    cp_table.print();
+
+    // ---- mixed load: one hot streaming session sharing a 2-worker
+    // reactor with 32 small sessions. Stage C's job here is isolation:
+    // sweep threads dispatch the hot session's walks to the pool and go
+    // straight back to polling sockets, so a small session co-sharded
+    // with the hot one must not stall behind its batches. The tripwire
+    // is deliberately generous (CI boxes vary wildly); the indicative
+    // latency lands in BENCH_serve.json.
+    let ml_small = 32usize;
+    let ml_rows = 128.min(n);
+    let ml_guest = sbp::data::dataset::PartySlice {
+        cols: vs.guest.cols.clone(),
+        x: vs.guest.x[..ml_rows * d].to_vec(),
+        n: ml_rows,
+    };
+    let ml_oracle = &oracle[..ml_rows];
+    println!("\n--- mixed load: 1 hot + {ml_small} small sessions on 2 reactor workers ---");
+    let ml_cfg = ServeConfig {
+        workers: 2,
+        compute_workers: 4,
+        compute_shard_min: 64,
+        ..ServeConfig::default()
+    };
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    let model = host_ms[0].clone();
+    let slice = vs.hosts[0].clone();
+    let server = std::thread::spawn(move || {
+        serve_predict_tcp(&listener, model, slice, ml_cfg, ml_small + 1).expect("serve loop")
+    });
+    let mut small_max = 0f64;
+    let mut hot_rows_per_sec = 0f64;
+    std::thread::scope(|scope| {
+        let hot = scope.spawn(|| {
+            let t0 = std::time::Instant::now();
+            let r = predict_sessions_tcp(
+                &guest_m,
+                &vs.guest,
+                std::slice::from_ref(&addr),
+                1,
+                1,
+                PredictOptions { seed: 13, ..hot_opts },
+            )
+            .expect("hot session under mixed load");
+            (t0.elapsed().as_secs_f64(), r)
+        });
+        let suite = || sbp::crypto::cipher::CipherSuite::new_plain(64);
+        for s in 0..ml_small {
+            let t0 = std::time::Instant::now();
+            let links: Vec<Box<dyn sbp::federation::transport::GuestTransport>> = vec![Box::new(
+                sbp::federation::tcp::TcpGuestTransport::connect(&addr, suite())
+                    .expect("connect small session"),
+            )];
+            let mut session = sbp::federation::predict::PredictSession::new(
+                &guest_m,
+                (1000 + s) as u32,
+                PredictOptions::default(),
+            );
+            session.open(&links);
+            let preds = session.predict_batch(&ml_guest, &links);
+            session.close(&links);
+            assert_eq!(preds, ml_oracle, "small session must match colocated under mixed load");
+            small_max = small_max.max(t0.elapsed().as_secs_f64());
+        }
+        let (hot_wall, hot_reports) = hot.join().expect("hot session thread");
+        hot_rows_per_sec = n as f64 / hot_wall.max(1e-12);
+        assert_eq!(
+            hot_reports[0].preds, oracle,
+            "hot session must match colocated under mixed load"
+        );
+    });
+    let ml_report = server.join().expect("server thread");
+    assert_eq!(ml_report.n_sessions, ml_small + 1);
+    assert!(
+        small_max < 10.0,
+        "a small session stalled {small_max:.1}s behind the hot one"
+    );
+    println!(
+        "hot {hot_rows_per_sec:.0} rows/sec; small sessions max {:.1} ms; \
+         {} pool job(s), {:.3}s queued",
+        small_max * 1000.0,
+        ml_report.compute_jobs,
+        ml_report.compute_queue_stall_seconds,
+    );
+    let ml_point = Json::obj(vec![
+        ("small_sessions", Json::Num(ml_small as f64)),
+        ("rows_per_small_session", Json::Num(ml_rows as f64)),
+        ("hot_rows_per_sec", Json::Num((hot_rows_per_sec * 10.0).round() / 10.0)),
+        (
+            "small_session_max_ms",
+            Json::Num((small_max * 10000.0).round() / 10.0),
+        ),
+        ("compute_jobs", Json::Num(ml_report.compute_jobs as f64)),
+        (
+            "compute_queue_stall_seconds",
+            Json::Num((ml_report.compute_queue_stall_seconds * 1000.0).round() / 1000.0),
+        ),
+    ]);
+
     if smoke {
         println!("\n[smoke] multi-session serving parity OK (no JSON written)");
         return;
@@ -305,9 +483,16 @@ fn main() {
         ("capacities", Json::Arr(points)),
         ("pipelined_host", Json::Arr(evict_points)),
         ("high_concurrency", Json::Arr(hc_points)),
+        ("compute_pool", Json::Arr(cp_points)),
+        ("mixed_load", Json::Arr(vec![ml_point])),
         (
             "note",
-            Json::Str("regenerate with `cargo bench --bench serve_throughput`".into()),
+            Json::Str(
+                "sharded reactor host (workers + 1 threads) with Stage C compute pool \
+                 (--compute-workers) sharding big-batch walks on 8-query boundaries; \
+                 regenerate with `cargo bench --bench serve_throughput`"
+                    .into(),
+            ),
         ),
     ]);
     let out = std::env::var("SBP_BENCH_OUT").unwrap_or_else(|_| "../BENCH_serve.json".into());

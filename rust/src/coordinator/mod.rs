@@ -695,6 +695,20 @@ pub struct ServeReport {
     /// but nothing readable (one sleeping thread per worker, instead
     /// of one blocked read per session).
     pub poll_stall_seconds: f64,
+    /// Stage C compute-pool workers running at loop end (0 = the pool
+    /// was never built: every batch stayed below
+    /// `ServeConfig::compute_shard_min`, so compute ran inline).
+    pub compute_workers: usize,
+    /// Stage C shard jobs dispatched across all sessions (a batch that
+    /// ran inline dispatched none).
+    pub compute_jobs: u64,
+    /// Cumulative seconds shard jobs sat queued before a pool worker
+    /// picked them up — the signal that `--compute-workers` is too low
+    /// for the offered load.
+    pub compute_queue_stall_seconds: f64,
+    /// Mean shard jobs per *sharded* batch across all sessions (0.0
+    /// when nothing fanned out) — how wide the average big batch split.
+    pub shards_per_batch: f64,
     /// Sessions ended by the dead-peer idle reaper
     /// (`ServeConfig::session_idle_timeout`).
     pub sessions_idle_reaped: u64,
@@ -732,6 +746,8 @@ impl ServeReport {
              {:.0} queries/s, {:.1} B/query, \
              cache {}/{} hit/miss ({:.1}% hit rate), \
              {} reactor worker(s) (shard peaks Σ{}), \
+             compute pool {} worker(s) / {} shard job(s) \
+             ({:.1} shards/batch, {:.2}s queued), \
              {} resumed, {} resume-expired, {} idle-reaped, {} accept retry(ies)",
             self.n_sessions,
             self.queries_answered,
@@ -744,6 +760,10 @@ impl ServeReport {
             self.cache.hit_rate() * 100.0,
             self.workers,
             self.worker_peak_sessions.iter().sum::<usize>(),
+            self.compute_workers,
+            self.compute_jobs,
+            self.shards_per_batch,
+            self.compute_queue_stall_seconds,
             self.sessions_resumed,
             self.sessions_resume_expired,
             self.sessions_idle_reaped,
@@ -789,6 +809,17 @@ pub fn serve_predict_tcp(
         workers: loop_report.workers,
         worker_peak_sessions: loop_report.worker_peak_sessions,
         poll_stall_seconds: state.poll_stall_seconds(),
+        compute_workers: state.compute_workers_running(),
+        compute_jobs: state.compute_jobs(),
+        compute_queue_stall_seconds: state.compute_queue_stall_seconds(),
+        shards_per_batch: {
+            let sharded = state.compute_sharded_batches();
+            if sharded == 0 {
+                0.0
+            } else {
+                state.compute_jobs() as f64 / sharded as f64
+            }
+        },
         sessions_idle_reaped: state.sessions_idle_reaped(),
         sessions_resumed: state.sessions_resumed(),
         sessions_resume_expired: state.sessions_resume_expired(),

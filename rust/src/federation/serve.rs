@@ -101,6 +101,25 @@
 //! reactor-only feature: the threaded [`serve_session`] engine and
 //! in-memory links close on `SessionResume` (their transports cannot
 //! drop frames mid-stream, so there is nothing to resume).
+//!
+//! ## Stage C: the shared compute pool
+//!
+//! Both engines route big-batch compute through one shared **compute
+//! worker pool** ([`ComputePool`], [`ServeConfig::compute_workers`],
+//! built lazily on first use): a batch of at least
+//! [`ServeConfig::compute_shard_min`] walked queries is split into
+//! shards cut at multiples of **8 queries**, so every shard owns a
+//! whole number of bytes of the packed answer bitmap and the per-shard
+//! results concatenate byte-exactly — sharded and inline compute are
+//! bit-identical at any worker count (deterministic recombination).
+//! Only the *pure* walk fans out; everything frame-order-sensitive —
+//! the delta-basis membership pass, cache lookup/store, answer emission
+//! — stays serial per session. The threaded engine blocks its Stage B
+//! on the sharded walk ([`HostServeState::route_bits`]); the reactor
+//! instead dispatches fire-and-forget shard jobs and keeps polling
+//! sockets, re-sequencing completed answers per session FIFO through a
+//! pending queue before flush, so one hot session saturates the pool
+//! without freezing the other sessions on its worker's shard.
 
 use super::codec;
 use super::delta::DeltaBasis;
@@ -113,11 +132,12 @@ use super::transport::{HostTransport, NetCounters, NetSnapshot};
 use crate::crypto::cipher::CipherSuite;
 use crate::data::dataset::PartySlice;
 use crate::tree::predict::HostModel;
-use std::collections::HashMap;
+use crate::util::pool::{num_threads, ComputePool};
+use std::collections::{HashMap, VecDeque};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Sentinel index for the intrusive LRU list.
@@ -287,6 +307,15 @@ pub struct CacheBatch<'a> {
 }
 
 impl CacheBatch<'_> {
+    /// Count a hit that was resolved *outside* the LRU map — the
+    /// lookup pass of [`HostServeState::route_plan`] resolves a
+    /// within-batch repeat of a not-yet-stored miss locally (the
+    /// inline path would have hit the just-stored entry), so the
+    /// hit/miss totals stay identical to single-pass serving.
+    fn count_hit(&self) {
+        self.cache.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Cached routing bit for `key`, refreshing its recency on a hit.
     pub fn lookup(&mut self, key: (u32, u32)) -> Option<bool> {
         match self.inner.map.get(&key).copied() {
@@ -394,6 +423,29 @@ pub struct ServeConfig {
     /// sharded TCP reactor honors this; the threaded [`serve_session`]
     /// engine never parks.
     pub resume_window: std::time::Duration,
+    /// Worker threads of the shared **Stage C compute pool** (0 = one
+    /// per available CPU). The pool is built lazily on the first batch
+    /// big enough to shard ([`ServeConfig::compute_shard_min`]), so
+    /// hosts that only ever see small batches never spawn it. Both
+    /// engines use the same pool: the threaded [`serve_session`]
+    /// engine's Stage B blocks on a scoped fan-out, the reactor's sweep
+    /// threads enqueue detached shard jobs and keep polling sockets.
+    pub compute_workers: usize,
+    /// Smallest *walked* batch (queries after delta elision and cache
+    /// hits) that fans out across the compute pool; anything smaller is
+    /// computed inline on the calling thread, because a sub-threshold
+    /// batch finishes faster than its dispatch costs. Shards are cut on
+    /// 8-query boundaries so the bit-packed sub-results concatenate
+    /// byte-exactly — sharded and inline compute are **bit-identical**
+    /// at every worker count. Set to `usize::MAX` to force everything
+    /// inline (the benchmark baseline).
+    pub compute_shard_min: usize,
+    /// **Test/bench knob, not a serving option:** artificial latency
+    /// injected into each pure routing walk ([`HostServeState`]'s
+    /// `walk_packed`), *outside every lock* — used to prove that two
+    /// sessions sharing the routing cache overlap their walks instead
+    /// of serializing on the cache lock. `None` in any real deployment.
+    pub walk_delay: Option<std::time::Duration>,
 }
 
 impl Default for ServeConfig {
@@ -408,6 +460,9 @@ impl Default for ServeConfig {
             workers: 0,
             session_idle_timeout: std::time::Duration::from_secs(60),
             resume_window: std::time::Duration::ZERO,
+            compute_workers: 0,
+            compute_shard_min: 1 << 12,
+            walk_delay: None,
         }
     }
 }
@@ -478,6 +533,14 @@ pub struct HostServeState {
     /// Global (not per shard): the reconnecting guest may be dispatched
     /// to any worker.
     parked: Mutex<HashMap<u32, ParkedSession>>,
+    /// The shared Stage C compute pool, built lazily on the first batch
+    /// that crosses [`ServeConfig::compute_shard_min`] — a host that
+    /// only sees small batches never pays the threads.
+    pool: OnceLock<ComputePool>,
+    /// Shard jobs dispatched to the compute pool (all sessions).
+    compute_jobs: AtomicU64,
+    /// Batches whose walk fanned out across the pool (vs inline).
+    compute_sharded_batches: AtomicU64,
 }
 
 impl HostServeState {
@@ -500,6 +563,9 @@ impl HostServeState {
             sessions_resumed: AtomicU64::new(0),
             sessions_resume_expired: AtomicU64::new(0),
             parked: Mutex::new(HashMap::new()),
+            pool: OnceLock::new(),
+            compute_jobs: AtomicU64::new(0),
+            compute_sharded_batches: AtomicU64::new(0),
         })
     }
 
@@ -576,6 +642,56 @@ impl HostServeState {
         self.parked_lock().len()
     }
 
+    /// Shard jobs dispatched to the Stage C compute pool so far.
+    pub fn compute_jobs(&self) -> u64 {
+        self.compute_jobs.load(Ordering::Relaxed)
+    }
+
+    /// Batches whose walk fanned out across the pool (vs inline).
+    pub fn compute_sharded_batches(&self) -> u64 {
+        self.compute_sharded_batches.load(Ordering::Relaxed)
+    }
+
+    /// Worker threads the Stage C pool is actually running — 0 until
+    /// the first shardable batch builds it.
+    pub fn compute_workers_running(&self) -> usize {
+        self.pool.get().map(|p| p.workers()).unwrap_or(0)
+    }
+
+    /// Cumulative seconds shard jobs sat queued before a pool worker
+    /// picked them up — the signal that `--compute-workers` is too low
+    /// (or the pool is oversubscribed by too many hot sessions).
+    pub fn compute_queue_stall_seconds(&self) -> f64 {
+        self.pool.get().map(|p| p.queue_stall_seconds()).unwrap_or(0.0)
+    }
+
+    /// The Stage C pool, built on first use.
+    fn pool(&self) -> &ComputePool {
+        self.pool.get_or_init(|| ComputePool::new(self.cfg.compute_workers))
+    }
+
+    /// Shard geometry for a walk of `n` queries: `Some((shard_len,
+    /// n_shards))` when the batch is big enough to fan out
+    /// ([`ServeConfig::compute_shard_min`]), `None` when it stays
+    /// inline. `shard_len` is always a multiple of 8, so every shard
+    /// starts on a byte boundary of the packed answer bitmap and the
+    /// per-shard outputs concatenate byte-exactly — which is the entire
+    /// deterministic-recombination argument: the recombined bitmap is
+    /// *structurally* identical to the single-threaded packing,
+    /// whatever the worker count.
+    fn shard_geometry(&self, n: usize) -> Option<(usize, usize)> {
+        if n == 0 || n < self.cfg.compute_shard_min {
+            return None;
+        }
+        let workers = if self.cfg.compute_workers > 0 {
+            self.cfg.compute_workers
+        } else {
+            num_threads()
+        };
+        let shard_len = n.div_ceil(workers.max(1)).div_ceil(8).max(1) * 8;
+        Some((shard_len, n.div_ceil(shard_len)))
+    }
+
     /// The parked-session map, recovering from poison like the routing
     /// cache (same argument: entries are inserted and removed whole, a
     /// panic cannot leave a half-written entry behind).
@@ -593,115 +709,203 @@ impl HostServeState {
         self.stop.load(Ordering::SeqCst)
     }
 
-    /// Answer one query batch through the cache, returning the bit-packed
-    /// answers — or `None` if any query is out of range (unknown record
-    /// or handle), which is a contract violation the session must be
-    /// closed over: silently answering "right" for rows this host does
-    /// not have (e.g. misaligned `--data` CSVs across parties) would
-    /// produce wrong predictions with no error anywhere. Cached and
-    /// uncached paths produce identical bits: routing is a pure function
-    /// of the immutable model share and slice.
-    fn answer(&self, queries: &[(u32, u32)]) -> Option<Vec<u8>> {
-        if !self.queries_in_range(queries) {
-            return None;
-        }
-        let bits = self.route_bits(queries);
-        self.queries_answered.fetch_add(queries.len() as u64, Ordering::Relaxed);
-        Some(bits)
-    }
-
     /// Range-check a batch against this host's rows and split table,
-    /// logging the first violation. Shared by the plain and delta
-    /// answer paths so their contracts cannot drift apart.
+    /// logging a violation. Shared by the plain and delta answer paths
+    /// so their contracts cannot drift apart. Batches past the shard
+    /// threshold fan the scan out across the Stage C pool — the check
+    /// is a pure predicate over immutable state, so it parallelizes
+    /// like the walk does (any shard's verdict composes by AND).
     fn queries_in_range(&self, queries: &[(u32, u32)]) -> bool {
-        for &(row, handle) in queries {
-            if row as usize >= self.slice.n || handle as usize >= self.model.splits.len() {
+        let out_of_range = |&(row, handle): &(u32, u32)| {
+            let bad = row as usize >= self.slice.n || handle as usize >= self.model.splits.len();
+            if bad {
                 eprintln!(
                     "[sbp-serve] query out of range (row {row} of {}, handle {handle} of {})",
                     self.slice.n,
                     self.model.splits.len()
                 );
-                return false;
+            }
+            bad
+        };
+        if let Some((shard_len, n_shards)) = self.shard_geometry(queries.len()) {
+            if n_shards > 1 {
+                let ok = AtomicBool::new(true);
+                self.pool().run_chunks(n_shards, |s| {
+                    if !ok.load(Ordering::Relaxed) {
+                        return; // some shard already found a violation
+                    }
+                    let a = s * shard_len;
+                    let b = (a + shard_len).min(queries.len());
+                    if queries[a..b].iter().any(out_of_range) {
+                        ok.store(false, Ordering::Relaxed);
+                    }
+                });
+                return ok.load(Ordering::Relaxed);
             }
         }
-        true
+        !queries.iter().any(out_of_range)
     }
 
-    /// Compute the bit-packed goes-left answers for an in-range batch,
-    /// through the routing cache when one is configured — the **single**
-    /// implementation behind both [`Self::answer`] and the delta path,
-    /// so cached/uncached and plain/delta serving stay bit-identical by
-    /// construction.
-    fn route_bits(&self, queries: &[(u32, u32)]) -> Vec<u8> {
+    /// The pure routing walk: bit-pack goes-left answers for `keys`
+    /// against the immutable model share and feature slice. No locks,
+    /// no shared mutable state — this is the function Stage C fans out.
+    fn walk_packed(&self, keys: &[(u32, u32)]) -> Vec<u8> {
+        if let Some(delay) = self.cfg.walk_delay {
+            std::thread::sleep(delay); // test/bench knob only
+        }
         let d = self.slice.d();
-        let mut bits = vec![0u8; queries.len().div_ceil(8)];
-        if self.cache.capacity() == 0 {
-            for (i, &(row, handle)) in queries.iter().enumerate() {
-                let row = row as usize;
-                if self.model.goes_left(handle, &self.slice.x[row * d..(row + 1) * d]) {
-                    bits[i / 8] |= 1 << (i % 8);
-                }
-            }
-        } else {
-            // one lock acquisition per batch: concurrent sessions
-            // contend once per round trip, not once per query
-            let mut cache = self.cache.batch();
-            for (i, &(row, handle)) in queries.iter().enumerate() {
-                let left = match cache.lookup((row, handle)) {
-                    Some(bit) => bit,
-                    None => {
-                        let r = row as usize;
-                        let bit = self
-                            .model
-                            .goes_left(handle, &self.slice.x[r * d..(r + 1) * d]);
-                        cache.store((row, handle), bit);
-                        bit
-                    }
-                };
-                if left {
-                    bits[i / 8] |= 1 << (i % 8);
-                }
+        let mut bits = vec![0u8; keys.len().div_ceil(8)];
+        for (i, &(row, handle)) in keys.iter().enumerate() {
+            let r = row as usize;
+            if self.model.goes_left(handle, &self.slice.x[r * d..(r + 1) * d]) {
+                bits[i / 8] |= 1 << (i % 8);
             }
         }
         bits
     }
 
-    /// [`Self::answer`] with **cache-aware wire suppression**: queries
-    /// whose `(record, handle)` key sits in the session's [`DeltaBasis`]
-    /// are elided — only the fresh queries' bits are packed and
-    /// returned as `(n_known, fresh_bits)`. The membership pass applies
-    /// the exact frame-order rule the guest's mirrored basis runs
-    /// (touch, then insert on a miss, in query order — so a within-batch
-    /// duplicate counts its first occurrence fresh and later ones known,
-    /// and under LRU both ends refresh and evict the same keys at the
-    /// same step), so the guest reconstructs the full bitmap
-    /// bit-identically. The host stores placeholder bits in its basis
-    /// (membership and recency are all it needs — answers are
-    /// recomputed through the routing cache). Returns `None` on an
-    /// out-of-range query, like [`Self::answer`].
-    fn answer_delta(
-        &self,
-        queries: &[(u32, u32)],
-        basis: &mut DeltaBasis,
-    ) -> Option<(u32, Vec<u8>)> {
-        if !self.queries_in_range(queries) {
-            return None;
+    /// The cache **lookup pass** of a batch: resolve what the routing
+    /// cache already knows under one short lock, and return the keys
+    /// that still need walking. The lock is released before any walking
+    /// happens — concurrent sessions contend for the microseconds of
+    /// map probes, never for each other's compute (the old single-pass
+    /// `route_bits` held the lock across the whole walk, serializing
+    /// every co-resident session behind the hottest one).
+    ///
+    /// Returns the plan (hit bits pre-filled, scatter positions for the
+    /// missing ones) and the walk list. With the cache disabled the
+    /// plan is an identity: the walk list is the batch itself and the
+    /// walked bytes are the answer.
+    fn route_plan(&self, fresh: Vec<(u32, u32)>) -> (RoutePlan, Vec<(u32, u32)>) {
+        if self.cache.capacity() == 0 {
+            let plan =
+                RoutePlan { bits: Vec::new(), miss_pos: Vec::new(), dup_pos: Vec::new(), cached: false };
+            return (plan, fresh);
         }
-        let mut fresh: Vec<(u32, u32)> = Vec::with_capacity(queries.len());
-        let mut n_known = 0u32;
-        for &key in queries {
-            if basis.touch(&key).is_some() {
-                n_known += 1;
-            } else {
-                basis.insert(key, false);
-                fresh.push(key);
+        let n = fresh.len();
+        let mut bits = vec![0u8; n.div_ceil(8)];
+        let mut walk: Vec<(u32, u32)> = Vec::new();
+        let mut miss_pos: Vec<u32> = Vec::new();
+        let mut dup_pos: Vec<(u32, u32)> = Vec::new();
+        // within-batch repeats of a miss (only possible with the delta
+        // basis off — the basis dedups batches before they get here)
+        let mut pending: HashMap<(u32, u32), u32> = HashMap::new();
+        {
+            let mut cache = self.cache.batch();
+            for (i, &key) in fresh.iter().enumerate() {
+                if let Some(&j) = pending.get(&key) {
+                    // the inline path would hit the just-stored entry
+                    cache.count_hit();
+                    dup_pos.push((i as u32, j));
+                } else {
+                    match cache.lookup(key) {
+                        Some(bit) => {
+                            if bit {
+                                bits[i / 8] |= 1 << (i % 8);
+                            }
+                        }
+                        None => {
+                            pending.insert(key, walk.len() as u32);
+                            miss_pos.push(i as u32);
+                            walk.push(key);
+                        }
+                    }
+                }
+            }
+        } // cache lock released here, before any walk
+        (RoutePlan { bits, miss_pos, dup_pos, cached: true }, walk)
+    }
+
+    /// The cache **store pass** + recombination: remember the walked
+    /// bits under a second short lock and scatter them into the
+    /// pre-filled hit bitmap. `keys`/`walked` are the walk list the
+    /// plan returned and its packed walk output (shard-concatenated or
+    /// inline — byte-identical either way).
+    fn finish_route(&self, plan: RoutePlan, keys: &[(u32, u32)], walked: Vec<u8>) -> Vec<u8> {
+        if !plan.cached {
+            return walked; // identity plan: the walk was the batch
+        }
+        let RoutePlan { mut bits, miss_pos, dup_pos, .. } = plan;
+        if !keys.is_empty() {
+            let mut cache = self.cache.batch();
+            for (j, &key) in keys.iter().enumerate() {
+                cache.store(key, walked[j / 8] & (1 << (j % 8)) != 0);
             }
         }
-        let bits = self.route_bits(&fresh);
-        self.queries_answered.fetch_add(queries.len() as u64, Ordering::Relaxed);
-        self.answers_elided.fetch_add(n_known as u64, Ordering::Relaxed);
-        Some((n_known, bits))
+        for (j, &pos) in miss_pos.iter().enumerate() {
+            if walked[j / 8] & (1 << (j % 8)) != 0 {
+                bits[pos as usize / 8] |= 1 << (pos as usize % 8);
+            }
+        }
+        for &(pos, j) in &dup_pos {
+            if walked[j as usize / 8] & (1 << (j as usize % 8)) != 0 {
+                bits[pos as usize / 8] |= 1 << (pos as usize % 8);
+            }
+        }
+        bits
     }
+
+    /// Walk `keys`, sharded across the Stage C pool when the batch is
+    /// big enough ([`Self::shard_geometry`]), inline otherwise. Blocks
+    /// until the walk is done — the synchronous compute path used by
+    /// the threaded engine's Stage B and by reactor batches below the
+    /// shard threshold. Returns the packed bits and the number of shard
+    /// jobs dispatched (0 = inline).
+    fn walk_sharded(&self, keys: &[(u32, u32)]) -> (Vec<u8>, u64) {
+        let Some((shard_len, n_shards)) = self.shard_geometry(keys.len()) else {
+            return (self.walk_packed(keys), 0);
+        };
+        self.compute_jobs.fetch_add(n_shards as u64, Ordering::Relaxed);
+        self.compute_sharded_batches.fetch_add(1, Ordering::Relaxed);
+        let slots: Vec<OnceLock<Vec<u8>>> = (0..n_shards).map(|_| OnceLock::new()).collect();
+        self.pool().run_chunks(n_shards, |s| {
+            let a = s * shard_len;
+            let b = (a + shard_len).min(keys.len());
+            let _ = slots[s].set(self.walk_packed(&keys[a..b]));
+        });
+        // every shard starts at a multiple of 8 queries, so each
+        // sub-bitmap is a whole number of bytes of the global packing:
+        // concatenation *is* recombination, bit-identical to inline
+        let mut walked = Vec::with_capacity(keys.len().div_ceil(8));
+        for slot in &slots {
+            // an empty slot means the walk panicked on a pool worker —
+            // impossible for an in-range batch (the walk is total);
+            // failing loudly here beats answering wrong
+            walked.extend_from_slice(slot.get().expect("compute shard panicked"));
+        }
+        (walked, n_shards as u64)
+    }
+
+    /// Compute the bit-packed goes-left answers for an in-range batch,
+    /// through the routing cache when one is configured — the
+    /// **single** synchronous implementation behind both the plain and
+    /// delta answer paths, so cached/uncached, plain/delta, and
+    /// inline/sharded serving all stay bit-identical by construction.
+    /// Returns the bits and the number of Stage C shard jobs used.
+    fn route_bits(&self, fresh: Vec<(u32, u32)>) -> (Vec<u8>, u64) {
+        let (plan, keys) = self.route_plan(fresh);
+        let (walked, jobs) = self.walk_sharded(&keys);
+        (self.finish_route(plan, &keys, walked), jobs)
+    }
+}
+
+/// The serial residue of a batch's cache lookup pass: hit bits already
+/// filled in, and where to scatter the walked miss bits. Built and
+/// consumed under two *separate* short cache locks
+/// ([`HostServeState::route_plan`] / [`HostServeState::finish_route`])
+/// so the lock is never held across the (possibly parallel) walk.
+struct RoutePlan {
+    /// The batch's packed answer bitmap with every cache hit pre-filled
+    /// (empty for the cache-off identity plan).
+    bits: Vec<u8>,
+    /// `miss_pos[j]` = batch position of walk key `j`.
+    miss_pos: Vec<u32>,
+    /// `(batch position, walk index)` of within-batch repeats of a
+    /// missed key — resolved from the first occurrence's walked bit.
+    dup_pos: Vec<(u32, u32)>,
+    /// False = cache disabled: the walk list was the whole batch and
+    /// the walked bytes are the finished answer.
+    cached: bool,
 }
 
 /// What one serving session did, reported when it ends.
@@ -751,6 +955,12 @@ pub struct SessionOutcome {
     /// on socket I/O. A busy pipeline should keep this near the
     /// session's natural think time between batches.
     pub compute_idle_seconds: f64,
+    /// Stage C shard jobs this session's batches dispatched to the
+    /// compute pool (0 = every walk stayed inline).
+    pub compute_jobs: u64,
+    /// Mean shard jobs per *sharded* batch — how widely this session's
+    /// big batches actually fanned out (0.0 when none sharded).
+    pub shards_per_batch: f64,
 }
 
 impl SessionOutcome {
@@ -800,6 +1010,29 @@ struct SessionMachine {
     /// announced cap must be the same number, or the two ends'
     /// insertion rules diverge and the delta protocol desyncs.
     cfg_delta: usize,
+    /// Stage C shard jobs this session's batches dispatched.
+    compute_jobs: u64,
+    /// Batches of this session whose walk fanned out (vs inline).
+    compute_sharded_batches: u64,
+}
+
+/// The output of [`SessionMachine::route_serial`]: a `PredictRoute`
+/// reduced to its pure walk. Everything whose order the protocol fixes
+/// per session — id checks, the batch bound, the range check, and the
+/// delta-basis membership pass (whose touch/insert order the guest
+/// mirrors frame by frame) — has already run; what remains is a walk of
+/// `fresh` that any thread may execute, and an answer frame
+/// ([`SessionMachine::route_answer`]) whose emission order the driver
+/// must preserve.
+struct RouteWalk {
+    session: u32,
+    chunk: u32,
+    /// Total queries in the frame (fresh + elided).
+    n: u32,
+    /// Queries elided by the delta basis (0 ⇒ plain `RouteAnswers`).
+    n_known: u32,
+    /// The queries that actually need walking, in frame order.
+    fresh: Vec<(u32, u32)>,
 }
 
 impl SessionMachine {
@@ -814,6 +1047,104 @@ impl SessionMachine {
             answers_elided: 0,
             basis: DeltaBasis::off(),
             cfg_delta: state.cfg.delta_window.min(u32::MAX as usize),
+            compute_jobs: 0,
+            compute_sharded_batches: 0,
+        }
+    }
+
+    /// The serial, frame-order-sensitive half of a `PredictRoute`:
+    /// session-id adoption/validation, the batch-size bound, the range
+    /// check, and the delta-basis membership pass — everything that
+    /// must run on the session's driving thread in frame order for the
+    /// guest's mirrored basis to stay in lockstep. Counts the batch
+    /// (session + service counters) and returns the pure walk that
+    /// remains; `Err` means a protocol violation the session closes
+    /// over.
+    fn route_serial(
+        &mut self,
+        state: &HostServeState,
+        session: u32,
+        chunk: u32,
+        q: Vec<(u32, u32)>,
+    ) -> Result<RouteWalk, ()> {
+        if session != self.session_id {
+            // a hello-less client may still tag its frames with a
+            // session id of its choosing (a `PredictSession` that never
+            // called `open()`): the first batch fixes the id for
+            // attribution. Handshake-gated features (delta suppression,
+            // shutdown authority) stay off, and mixing ids afterwards
+            // still closes.
+            if !self.hello_seen && self.batches == 0 {
+                self.session_id = session;
+            } else {
+                eprintln!(
+                    "[sbp-serve] PredictRoute for session {session} on session {}, closing",
+                    self.session_id
+                );
+                return Err(());
+            }
+        }
+        if q.len() > state.cfg.max_batch_queries {
+            eprintln!(
+                "[sbp-serve] batch of {} queries exceeds the per-session bound {}, closing",
+                q.len(),
+                state.cfg.max_batch_queries
+            );
+            return Err(());
+        }
+        if let Some(delay) = state.cfg.stage_b_delay {
+            std::thread::sleep(delay); // test/bench knob only
+        }
+        // the range check comes before the basis pass: a rejected batch
+        // must not have advanced the mirrored basis
+        if !state.queries_in_range(&q) {
+            eprintln!(
+                "[sbp-serve] session {} queried records/handles this \
+                 host does not have (misaligned data?), closing",
+                self.session_id
+            );
+            return Err(());
+        }
+        let n = q.len() as u32;
+        let (n_known, fresh) = if self.basis.capacity() > 0 {
+            // the membership pass applies the exact frame-order rule
+            // the guest's mirrored basis runs (touch, then insert on a
+            // miss, in query order — so a within-batch duplicate counts
+            // its first occurrence fresh and later ones known, and
+            // under LRU both ends refresh and evict the same keys at
+            // the same step). The host stores placeholder bits
+            // (membership and recency are all it needs — answers are
+            // recomputed through the routing cache).
+            let mut fresh: Vec<(u32, u32)> = Vec::with_capacity(q.len());
+            let mut n_known = 0u32;
+            for &key in &q {
+                if self.basis.touch(&key).is_some() {
+                    n_known += 1;
+                } else {
+                    self.basis.insert(key, false);
+                    fresh.push(key);
+                }
+            }
+            (n_known, fresh)
+        } else {
+            (0, q)
+        };
+        state.queries_answered.fetch_add(n as u64, Ordering::Relaxed);
+        state.answers_elided.fetch_add(n_known as u64, Ordering::Relaxed);
+        self.queries += n as u64;
+        self.batches += 1;
+        self.answers_elided += n_known as u64;
+        Ok(RouteWalk { session, chunk, n, n_known, fresh })
+    }
+
+    /// The answer frame for a routed batch: elided queries make it a
+    /// `RouteAnswersDelta`; with nothing to elide a plain `RouteAnswers`
+    /// is smaller. One rule for both drivers, so the wire cannot drift.
+    fn route_answer(session: u32, chunk: u32, n: u32, n_known: u32, bits: Vec<u8>) -> ToGuest {
+        if n_known == 0 {
+            ToGuest::RouteAnswers { session, chunk, n, bits }
+        } else {
+            ToGuest::RouteAnswersDelta { session, chunk, n, n_known, bits }
         }
     }
 
@@ -869,69 +1200,22 @@ impl SessionMachine {
                 Step::Continue
             }
             ToHost::PredictRoute { session, chunk, queries: q } => {
-                if session != self.session_id {
-                    // a hello-less client may still tag its frames with
-                    // a session id of its choosing (a `PredictSession`
-                    // that never called `open()`): the first batch
-                    // fixes the id for attribution. Handshake-gated
-                    // features (delta suppression, shutdown authority)
-                    // stay off, and mixing ids afterwards still closes.
-                    if !self.hello_seen && self.batches == 0 {
-                        self.session_id = session;
-                    } else {
-                        eprintln!(
-                            "[sbp-serve] PredictRoute for session {session} on session {}, closing",
-                            self.session_id
-                        );
-                        return Step::Close { clean: false };
-                    }
-                }
-                if q.len() > state.cfg.max_batch_queries {
-                    eprintln!(
-                        "[sbp-serve] batch of {} queries exceeds the per-session bound {}, closing",
-                        q.len(),
-                        state.cfg.max_batch_queries
-                    );
+                // serial half (id/bounds/range checks + basis pass),
+                // then the walk — synchronously here: the threaded
+                // engine's Stage B blocks on the (possibly pool-
+                // sharded) walk while its Stage A keeps decoding. The
+                // reactor intercepts PredictRoute before on_frame and
+                // dispatches the walk asynchronously instead.
+                let Ok(walk) = self.route_serial(state, session, chunk, q) else {
                     return Step::Close { clean: false };
+                };
+                let RouteWalk { session, chunk, n, n_known, fresh } = walk;
+                let (bits, shard_jobs) = state.route_bits(fresh);
+                if shard_jobs > 0 {
+                    self.compute_jobs += shard_jobs;
+                    self.compute_sharded_batches += 1;
                 }
-                if let Some(delay) = state.cfg.stage_b_delay {
-                    std::thread::sleep(delay); // test/bench knob only
-                }
-                if self.basis.capacity() > 0 {
-                    let Some((n_known, bits)) = state.answer_delta(&q, &mut self.basis) else {
-                        eprintln!(
-                            "[sbp-serve] session {} queried records/handles this \
-                             host does not have (misaligned data?), closing",
-                            self.session_id
-                        );
-                        return Step::Close { clean: false };
-                    };
-                    if n_known == 0 {
-                        // nothing to elide: a plain answer is smaller
-                        send(ToGuest::RouteAnswers { session, chunk, n: q.len() as u32, bits });
-                    } else {
-                        self.answers_elided += n_known as u64;
-                        send(ToGuest::RouteAnswersDelta {
-                            session,
-                            chunk,
-                            n: q.len() as u32,
-                            n_known,
-                            bits,
-                        });
-                    }
-                } else {
-                    let Some(bits) = state.answer(&q) else {
-                        eprintln!(
-                            "[sbp-serve] session {} queried records/handles this \
-                             host does not have (misaligned data?), closing",
-                            self.session_id
-                        );
-                        return Step::Close { clean: false };
-                    };
-                    send(ToGuest::RouteAnswers { session, chunk, n: q.len() as u32, bits });
-                }
-                self.queries += q.len() as u64;
-                self.batches += 1;
+                send(Self::route_answer(session, chunk, n, n_known, bits));
                 Step::Continue
             }
             ToHost::KeepAlive => {
@@ -999,6 +1283,12 @@ impl SessionMachine {
             ring_high_water,
             decode_stall_seconds,
             compute_idle_seconds,
+            compute_jobs: self.compute_jobs,
+            shards_per_batch: if self.compute_sharded_batches == 0 {
+                0.0
+            } else {
+                self.compute_jobs as f64 / self.compute_sharded_batches as f64
+            },
         }
     }
 }
@@ -1473,6 +1763,46 @@ struct NbSession {
     replay: std::collections::VecDeque<ReplayEntry>,
     /// Times this session has resumed across connections.
     resumes: u32,
+    /// Answers not yet emitted, in frame order — the Stage C
+    /// re-sequencing queue. Every answer (computed inline or fanned
+    /// out) passes through here, so a batch whose walk is still on the
+    /// pool holds back every answer behind it: emission order equals
+    /// frame order *by construction*, whatever finishes first. The
+    /// sweep drains the front as entries complete; encoding, byte
+    /// accounting, and replay bookkeeping all happen at emission time,
+    /// exactly as the inline path did.
+    pending: VecDeque<PendingAnswer>,
+}
+
+/// One entry of a session's answer re-sequencing queue.
+enum PendingAnswer {
+    /// Ready to emit (inline answers, accepts, acks).
+    Ready(ToGuest),
+    /// A batch whose walk is out on the compute pool.
+    Compute(PendingCompute),
+}
+
+/// An in-flight Stage C batch: the frame header, the serial residue of
+/// its cache lookup pass, and the shard slots its pool jobs fill in.
+struct PendingCompute {
+    session: u32,
+    chunk: u32,
+    n: u32,
+    n_known: u32,
+    plan: RoutePlan,
+    /// The walk list (shared with the shard jobs; the store pass needs
+    /// the keys again at emission time).
+    keys: Arc<Vec<(u32, u32)>>,
+    shards: Arc<ShardResults>,
+}
+
+/// Shared result slots of one sharded walk. Jobs fill their slot and
+/// count down `remaining`; the sweep thread polls `remaining` and
+/// concatenates the slots — 8-query-aligned shards make that
+/// concatenation byte-exact — once it reaches zero.
+struct ShardResults {
+    slots: Vec<OnceLock<Vec<u8>>>,
+    remaining: AtomicUsize,
 }
 
 /// Context one reactor worker shares across every session of its shard:
@@ -1622,6 +1952,7 @@ fn adopt_conn(state: &HostServeState, stream: TcpStream, peer: SocketAddr) -> Op
                 basis_inserts: 0,
                 replay: std::collections::VecDeque::new(),
                 resumes: 0,
+                pending: VecDeque::new(),
             })
         }
         Err(e) => {
@@ -1631,19 +1962,30 @@ fn adopt_conn(state: &HostServeState, stream: TcpStream, peer: SocketAddr) -> Op
     }
 }
 
-/// One readiness sweep over one session: flush what the kernel will
-/// take, drain every frame the socket already holds through the
-/// protocol machine (in arrival order, answers queued FIFO), then check
-/// the idle deadline. Returns `true` when the session is over *and* its
-/// final answers have left — the caller then finalizes it.
+/// One readiness sweep over one session: emit answers whose Stage C
+/// walks have completed, flush what the kernel will take, drain every
+/// frame the socket already holds through the protocol machine (in
+/// arrival order, answers re-sequenced FIFO through the pending queue),
+/// then check the idle deadline. Returns `true` when the session is
+/// over *and* its final answers have left — the caller then finalizes
+/// it. A session never finishes (and so never parks) while an answer is
+/// still pending: the resume cursor and replay buffer only see emitted
+/// frames, so every completion path below waits for the drain.
 fn sweep_session(
-    state: &HostServeState,
+    state: &Arc<HostServeState>,
     sess: &mut NbSession,
     ctx: &mut WorkerCtx,
     now: Instant,
     idle_timeout: Duration,
     progress: &mut bool,
 ) -> bool {
+    // 0. emit answers whose pool shards landed since the last sweep —
+    //    front-of-queue order, so a still-running walk holds back
+    //    everything behind it
+    if drain_pending(state, sess, ctx) {
+        sess.last_activity = now;
+        *progress = true;
+    }
     // 1. drain the write backlog first: answers already computed take
     //    priority over new work, and a closing session only waits here
     match sess.conn.flush_pending() {
@@ -1656,22 +1998,34 @@ fn sweep_session(
             eprintln!("[sbp-serve] transport error, closing: {e}");
             sess.parkable = true;
             sess.closing = Some(sess.closing.unwrap_or(false));
-            return true;
+            // a dead transport still waits for in-flight walks: their
+            // answers are queued (unsendably) so the replay buffer and
+            // resume cursor stay exact for a later resume
+            return sess.pending.is_empty();
         }
     }
     if sess.closing.is_some() {
         // done once the final answers have left — or once a peer that
         // stopped reading them has been silent a whole idle window
         // (the write-side dual of the dead-peer reap)
-        return sess.conn.write_idle()
-            || (!idle_timeout.is_zero()
-                && now.duration_since(sess.last_activity) >= idle_timeout);
+        return sess.pending.is_empty()
+            && (sess.conn.write_idle()
+                || (!idle_timeout.is_zero()
+                    && now.duration_since(sess.last_activity) >= idle_timeout));
     }
     // 2. read and answer every frame the socket already holds — but
     //    stop reading while the write backlog is past the soft limit,
     //    so a guest that never reads its answers is backpressured at
-    //    the socket instead of growing host memory
-    while sess.closing.is_none() && sess.conn.pending_write() < WRITE_SOFT_LIMIT {
+    //    the socket instead of growing host memory. The pending-answer
+    //    cap is the Stage C analogue: a guest pipelining batches faster
+    //    than the pool walks them is backpressured the same way instead
+    //    of growing the dispatch queue (an honest guest never hits it —
+    //    it keeps at most `max_inflight` batches unanswered).
+    let pending_cap = state.cfg.max_inflight.max(1) as usize * 2 + 4;
+    while sess.closing.is_none()
+        && sess.conn.pending_write() < WRITE_SOFT_LIMIT
+        && sess.pending.len() < pending_cap
+    {
         match sess.conn.poll_frame() {
             Ok(RecvPoll::Frame) => {
                 *progress = true;
@@ -1701,59 +2055,35 @@ fn sweep_session(
                     continue;
                 }
                 sess.counters.record_to_host(msg.kind(), wire_len);
-                // replay buffering is v4-only and costs nothing when
-                // resumption is off or the peer cannot resume
-                let buffer_replay = !state.cfg.resume_window.is_zero()
-                    && sess.machine.hello_seen
-                    && sess.machine.negotiated >= SERVE_PROTOCOL_VERSION;
-                let basis_on = sess.machine.basis.capacity() > 0;
-                let replay_cap = replay_retain_cap(&state.cfg);
-                let NbSession {
-                    conn,
-                    machine,
-                    counters,
-                    answers_sent,
-                    basis_inserts,
-                    replay,
-                    ..
-                } = sess;
-                let step = machine.on_frame(state, msg, &mut |m: ToGuest| {
-                    codec::encode_to_guest_into(&ctx.suite, ctx.ct_len, &m, &mut ctx.scratch);
-                    counters.record_to_guest(
-                        m.kind(),
-                        (ctx.scratch.len() + codec::FRAME_HEADER_LEN) as u64,
-                    );
-                    conn.queue_frame(&ctx.scratch);
-                    // track the resume cursor and the basis epoch from
-                    // the emitted frames themselves — the exact
-                    // arithmetic the guest's mirror runs, so the two
-                    // cross-check on resume
-                    let (is_answer, inserted) = match &m {
-                        ToGuest::RouteAnswers { n, .. } => {
-                            (true, if basis_on { *n as u64 } else { 0 })
+                match msg {
+                    ToHost::PredictRoute { session, chunk, queries } => {
+                        // intercepted before the protocol machine: the
+                        // serial half runs here in frame order, the
+                        // pure walk goes to the Stage C pool (or inline
+                        // below the shard threshold) — either way the
+                        // answer joins the pending queue, never
+                        // skipping ahead
+                        match sess.machine.route_serial(state, session, chunk, queries) {
+                            Ok(walk) => dispatch_route(state, sess, walk),
+                            Err(()) => sess.closing = Some(false),
                         }
-                        ToGuest::RouteAnswersDelta { n, n_known, .. } => {
-                            (true, (*n - *n_known) as u64)
-                        }
-                        _ => (false, 0),
-                    };
-                    if is_answer {
-                        *answers_sent += 1;
-                        if buffer_replay {
-                            replay.push_back(ReplayEntry {
-                                kind: m.kind(),
-                                epoch_before: *basis_inserts,
-                                bytes: ctx.scratch.clone(),
-                            });
-                            while replay.len() > replay_cap {
-                                replay.pop_front();
-                            }
-                        }
-                        *basis_inserts += inserted;
                     }
-                });
-                if let Step::Close { clean } = step {
-                    sess.closing = Some(clean);
+                    other => {
+                        let NbSession { machine, pending, .. } = sess;
+                        let step = machine.on_frame(state, other, &mut |m: ToGuest| {
+                            pending.push_back(PendingAnswer::Ready(m));
+                        });
+                        if let Step::Close { clean } = step {
+                            sess.closing = Some(clean);
+                        }
+                    }
+                }
+                // emit whatever became ready before reading the next
+                // frame — the common (inline) case leaves this sweep
+                // with the same frame-in/answer-out cadence as before
+                if drain_pending(state, sess, ctx) {
+                    sess.last_activity = now;
+                    *progress = true;
                 }
             }
             Ok(RecvPoll::Pending) => break,
@@ -1780,21 +2110,27 @@ fn sweep_session(
             eprintln!("[sbp-serve] transport error, closing: {e}");
             sess.parkable = true;
             sess.closing = Some(sess.closing.unwrap_or(false));
-            return true;
+            return sess.pending.is_empty();
         }
     }
     if sess.closing.is_some() {
         // done once the final answers have left — or once a peer that
         // stopped reading them has been silent a whole idle window
         // (the write-side dual of the dead-peer reap)
-        return sess.conn.write_idle()
-            || (!idle_timeout.is_zero()
-                && now.duration_since(sess.last_activity) >= idle_timeout);
+        return sess.pending.is_empty()
+            && (sess.conn.write_idle()
+                || (!idle_timeout.is_zero()
+                    && now.duration_since(sess.last_activity) >= idle_timeout));
     }
     // 4. dead-peer reaping: a whole idle window with no frame at all —
     //    no batch, no KeepAlive — means the peer is presumed gone. The
     //    write drain is skipped deliberately: there is no one reading.
-    if !idle_timeout.is_zero() && now.duration_since(sess.last_activity) >= idle_timeout {
+    //    (With an answer still pending the session is not idle — it
+    //    owes the peer a frame — so reaping waits for the drain.)
+    if sess.pending.is_empty()
+        && !idle_timeout.is_zero()
+        && now.duration_since(sess.last_activity) >= idle_timeout
+    {
         eprintln!(
             "[sbp-serve] session {} idle past {:?} with no keep-alive, reaping",
             sess.machine.session_id, idle_timeout
@@ -1804,6 +2140,180 @@ fn sweep_session(
         return true;
     }
     false
+}
+
+/// Resolve one batch's walk for a reactor session: the cache lookup
+/// pass runs serially here (two sessions contend for microseconds of
+/// map probes, never compute — see [`HostServeState::route_plan`]),
+/// then the pure walk either runs inline — batches below
+/// `compute_shard_min` must not pay dispatch latency — or fans out to
+/// the Stage C pool as fire-and-forget shard jobs while this sweep
+/// thread goes straight back to polling sockets. Either way the answer
+/// joins the session's pending queue, which is what preserves frame
+/// order: a fanned-out batch parks a [`PendingAnswer::Compute`] at its
+/// queue position and nothing behind it emits first.
+fn dispatch_route(state: &Arc<HostServeState>, sess: &mut NbSession, walk: RouteWalk) {
+    let RouteWalk { session, chunk, n, n_known, fresh } = walk;
+    let (plan, keys) = state.route_plan(fresh);
+    match state.shard_geometry(keys.len()) {
+        Some((shard_len, n_shards)) => {
+            // even n_shards == 1 goes to the pool here: the point is to
+            // get the walk off the sweep thread, so one hot session
+            // cannot freeze its shard's neighbors
+            state.compute_jobs.fetch_add(n_shards as u64, Ordering::Relaxed);
+            state.compute_sharded_batches.fetch_add(1, Ordering::Relaxed);
+            sess.machine.compute_jobs += n_shards as u64;
+            sess.machine.compute_sharded_batches += 1;
+            let keys = Arc::new(keys);
+            let shards = Arc::new(ShardResults {
+                slots: (0..n_shards).map(|_| OnceLock::new()).collect(),
+                remaining: AtomicUsize::new(n_shards),
+            });
+            for s in 0..n_shards {
+                let st = Arc::clone(state);
+                let keys = Arc::clone(&keys);
+                let res = Arc::clone(&shards);
+                state.pool().submit(move || {
+                    let a = s * shard_len;
+                    let b = (a + shard_len).min(keys.len());
+                    // a panicking walk must still count its shard down
+                    // or the sweep would wait forever; the empty slot
+                    // is the poison marker the drain detects
+                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        st.walk_packed(&keys[a..b])
+                    }));
+                    if let Ok(bytes) = out {
+                        let _ = res.slots[s].set(bytes);
+                    }
+                    res.remaining.fetch_sub(1, Ordering::Release);
+                });
+            }
+            sess.pending.push_back(PendingAnswer::Compute(PendingCompute {
+                session,
+                chunk,
+                n,
+                n_known,
+                plan,
+                keys,
+                shards,
+            }));
+        }
+        None => {
+            let walked = state.walk_packed(&keys);
+            let bits = state.finish_route(plan, &keys, walked);
+            sess.pending.push_back(PendingAnswer::Ready(SessionMachine::route_answer(
+                session, chunk, n, n_known, bits,
+            )));
+        }
+    }
+}
+
+/// Emit everything at the front of the session's pending queue that is
+/// ready — `Ready` frames immediately, `Compute` entries once their
+/// last shard has landed. Stops at the first still-running walk: that
+/// is the re-sequencing, nothing behind it can leave early, so per-link
+/// answer order equals frame order no matter which shards finish first.
+/// Returns whether anything was emitted.
+fn drain_pending(state: &Arc<HostServeState>, sess: &mut NbSession, ctx: &mut WorkerCtx) -> bool {
+    let mut emitted = false;
+    loop {
+        match sess.pending.front() {
+            None => break,
+            Some(PendingAnswer::Ready(_)) => {
+                let Some(PendingAnswer::Ready(m)) = sess.pending.pop_front() else {
+                    unreachable!("front was Ready")
+                };
+                emit_to_guest(state, sess, ctx, m);
+                emitted = true;
+            }
+            Some(PendingAnswer::Compute(pc)) => {
+                if pc.shards.remaining.load(Ordering::Acquire) != 0 {
+                    break; // walk still out on the pool
+                }
+                let Some(PendingAnswer::Compute(pc)) = sess.pending.pop_front() else {
+                    unreachable!("front was Compute")
+                };
+                // every shard starts at a multiple of 8 queries, so
+                // each sub-bitmap is a whole number of bytes of the
+                // global packing: concatenation *is* recombination
+                let mut walked = Vec::with_capacity(pc.keys.len().div_ceil(8));
+                let mut poisoned = false;
+                for slot in &pc.shards.slots {
+                    match slot.get() {
+                        Some(bytes) => walked.extend_from_slice(bytes),
+                        None => {
+                            poisoned = true;
+                            break;
+                        }
+                    }
+                }
+                if poisoned {
+                    // a shard job panicked — impossible for an in-range
+                    // batch (the walk is total), but if it happens the
+                    // batch cannot be answered and the session cannot
+                    // park (its resume cursor would desync): report it
+                    // dead on the spot
+                    eprintln!(
+                        "[sbp-serve] compute shard panicked on session {}, closing",
+                        sess.machine.session_id
+                    );
+                    sess.pending.clear();
+                    sess.parkable = false;
+                    sess.closing = Some(false);
+                    return emitted;
+                }
+                let bits = state.finish_route(pc.plan, &pc.keys, walked);
+                let m = SessionMachine::route_answer(pc.session, pc.chunk, pc.n, pc.n_known, bits);
+                emit_to_guest(state, sess, ctx, m);
+                emitted = true;
+            }
+        }
+    }
+    emitted
+}
+
+/// Encode one frame onto the session's connection with the byte
+/// accounting and resume bookkeeping the read loop used to do inline.
+/// Emission time is when a frame becomes real — the resume cursor, the
+/// basis epoch, and the replay buffer all advance here, in emission
+/// order, so a batch that took the Stage C detour is indistinguishable
+/// from an inline one by the time it reaches the wire (or the replay
+/// buffer of a session parked before the wire took it).
+fn emit_to_guest(state: &HostServeState, sess: &mut NbSession, ctx: &mut WorkerCtx, m: ToGuest) {
+    codec::encode_to_guest_into(&ctx.suite, ctx.ct_len, &m, &mut ctx.scratch);
+    sess.counters
+        .record_to_guest(m.kind(), (ctx.scratch.len() + codec::FRAME_HEADER_LEN) as u64);
+    sess.conn.queue_frame(&ctx.scratch);
+    // replay buffering is v4-only and costs nothing when resumption is
+    // off or the peer cannot resume; hello state is stable by the time
+    // any answer emits, so evaluating it here matches the inline path
+    let buffer_replay = !state.cfg.resume_window.is_zero()
+        && sess.machine.hello_seen
+        && sess.machine.negotiated >= SERVE_PROTOCOL_VERSION;
+    let basis_on = sess.machine.basis.capacity() > 0;
+    // track the resume cursor and the basis epoch from the emitted
+    // frames themselves — the exact arithmetic the guest's mirror runs,
+    // so the two cross-check on resume
+    let (is_answer, inserted) = match &m {
+        ToGuest::RouteAnswers { n, .. } => (true, if basis_on { *n as u64 } else { 0 }),
+        ToGuest::RouteAnswersDelta { n, n_known, .. } => (true, (*n - *n_known) as u64),
+        _ => (false, 0),
+    };
+    if is_answer {
+        sess.answers_sent += 1;
+        if buffer_replay {
+            sess.replay.push_back(ReplayEntry {
+                kind: m.kind(),
+                epoch_before: sess.basis_inserts,
+                bytes: ctx.scratch.clone(),
+            });
+            let replay_cap = replay_retain_cap(&state.cfg);
+            while sess.replay.len() > replay_cap {
+                sess.replay.pop_front();
+            }
+        }
+        sess.basis_inserts += inserted;
+    }
 }
 
 /// Swap a parked session's state into the connection that presented a

@@ -156,6 +156,12 @@ fn main() {
                  \x20                        host's decode-ring depth (2-stage pipeline)\n\
                  \x20 --serve-workers <n>    reactor worker threads sharding the live\n\
                  \x20                        sessions (default 0 = one per CPU)\n\
+                 \x20 --compute-workers <n>  Stage C compute pool threads sharding one\n\
+                 \x20                        batch's routing walk across cores\n\
+                 \x20                        (default 0 = one per CPU)\n\
+                 \x20 --compute-shard-min <n> smallest walked batch that fans out to\n\
+                 \x20                        the pool; smaller batches compute inline\n\
+                 \x20                        (default 4096)\n\
                  \x20 --session-idle-timeout <secs>  reap sessions silent for this long\n\
                  \x20                        — no frame, no keep-alive — as dead peers\n\
                  \x20                        (default 60; 0 = never)\n\
@@ -835,6 +841,9 @@ fn cmd_serve_predict(args: &Args) {
     let delta_window: usize = args.get_parse("delta-window", 1usize << 16);
     let max_inflight: u32 = args.get_parse("max-inflight", 8u32);
     let serve_workers: usize = args.get_parse("serve-workers", 0usize);
+    let compute_workers: usize = args.get_parse("compute-workers", 0usize);
+    let compute_shard_min: usize =
+        args.get_parse("compute-shard-min", sbp::federation::serve::ServeConfig::default().compute_shard_min);
     let idle_secs: u64 = args.get_parse("session-idle-timeout", 60u64);
     let resume_secs: u64 = args.get_parse("resume-window", 0u64);
     let evict_arg = args.get_or("basis-evict", "lru");
@@ -899,6 +908,8 @@ fn cmd_serve_predict(args: &Args) {
         max_inflight: max_inflight.max(1),
         basis_evict,
         workers: serve_workers,
+        compute_workers,
+        compute_shard_min,
         session_idle_timeout: std::time::Duration::from_secs(idle_secs),
         resume_window: std::time::Duration::from_secs(resume_secs),
         ..sbp::federation::serve::ServeConfig::default()
@@ -908,7 +919,7 @@ fn cmd_serve_predict(args: &Args) {
             for s in &report.sessions {
                 eprintln!(
                     "[sbp] session {} from {}: {} queries in {} batches, {} B, \
-                     v{} basis {}, ring ≤{}, {}{:.3}s",
+                     v{} basis {}, ring ≤{}, {}{}{:.3}s",
                     s.outcome.session_id,
                     s.peer,
                     s.outcome.queries,
@@ -917,6 +928,14 @@ fn cmd_serve_predict(args: &Args) {
                     s.outcome.protocol,
                     s.outcome.basis_evict.name(),
                     s.outcome.ring_high_water,
+                    if s.outcome.compute_jobs > 0 {
+                        format!(
+                            "{} pool job(s) ({:.1}/batch), ",
+                            s.outcome.compute_jobs, s.outcome.shards_per_batch
+                        )
+                    } else {
+                        String::new()
+                    },
                     if s.outcome.idle_reaped {
                         "idle-reaped, "
                     } else if s.outcome.clean_close {

@@ -6,8 +6,10 @@
 //! which matches the memory-streaming access patterns of those loops better
 //! than fine-grained stealing would.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 /// Number of worker threads used by [`parallel_for`] / [`parallel_map`].
 ///
@@ -113,6 +115,170 @@ where
     out
 }
 
+/// A persistent job-queue worker pool — the serving host's **Stage C**.
+///
+/// Unlike the scoped helpers above (which spawn threads per call and are
+/// fine for long batch loops), `ComputePool` keeps `workers` named threads
+/// alive for the lifetime of the pool so the serving hot path can dispatch
+/// sub-millisecond shard jobs without paying thread spawn latency. Two
+/// entry points:
+///
+/// - [`ComputePool::submit`] — fire-and-forget `'static` jobs, used by the
+///   reactor to fan a batch's shards out and keep polling sockets;
+/// - [`ComputePool::run_chunks`] — a scoped, blocking fan-out over
+///   `0..jobs` that may borrow from the caller's stack (the caller waits
+///   on a latch until every job finished, which is what makes the borrow
+///   sound), used by the synchronous per-session engine.
+///
+/// The queue is a plain mpsc channel behind a mutex on the receiving side
+/// (MPMC by sharing the receiver); dropping the pool drops the sender,
+/// drains the queue, and lets every worker exit. Jobs that panic are
+/// caught so a poisoned walk can neither kill a worker nor hang a
+/// `run_chunks` caller (its latch still counts down via a drop guard).
+pub struct ComputePool {
+    tx: Option<Sender<Job>>,
+    stats: Arc<PoolStats>,
+    workers: usize,
+}
+
+struct Job {
+    enqueued: Instant,
+    run: Box<dyn FnOnce() + Send + 'static>,
+}
+
+#[derive(Default)]
+struct PoolStats {
+    jobs: AtomicU64,
+    queue_stall_nanos: AtomicU64,
+}
+
+impl ComputePool {
+    /// Spin up a pool with `workers` threads (`0` = one per available CPU,
+    /// honoring the `SBP_THREADS` override like the scoped helpers).
+    pub fn new(workers: usize) -> Self {
+        let workers = if workers == 0 { num_threads() } else { workers };
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stats = Arc::new(PoolStats::default());
+        for w in 0..workers {
+            let rx = Arc::clone(&rx);
+            let stats = Arc::clone(&stats);
+            std::thread::Builder::new()
+                .name(format!("sbp-compute-{w}"))
+                .spawn(move || loop {
+                    // hold the receiver lock only for the dequeue, never
+                    // across a job
+                    let job = match rx.lock() {
+                        Ok(rx) => rx.recv(),
+                        Err(_) => break, // a sibling panicked mid-dequeue
+                    };
+                    let Ok(job) = job else { break }; // pool dropped
+                    stats
+                        .queue_stall_nanos
+                        .fetch_add(job.enqueued.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job.run));
+                })
+                .expect("spawn compute worker");
+        }
+        ComputePool { tx: Some(tx), stats, workers }
+    }
+
+    /// Worker count this pool resolved to.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Total jobs dispatched since the pool was built.
+    pub fn jobs(&self) -> u64 {
+        self.stats.jobs.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative time jobs sat in the queue before a worker picked them
+    /// up — the backpressure signal for sizing `--compute-workers`.
+    pub fn queue_stall_seconds(&self) -> f64 {
+        self.stats.queue_stall_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Enqueue a `'static` job; returns immediately. Used by the reactor
+    /// sweep threads, which must never block on compute.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.stats.jobs.fetch_add(1, Ordering::Relaxed);
+        let job = Job { enqueued: Instant::now(), run: Box::new(f) };
+        // send only fails if every worker exited, which only happens on
+        // drop; a job lost at teardown is by construction unobserved
+        let _ = self.tx.as_ref().expect("pool sender live").send(job);
+    }
+
+    /// Run `f(0) .. f(jobs-1)` on the pool and block until all complete.
+    ///
+    /// `f` may borrow from the caller's stack: the blocking latch wait
+    /// below is what guarantees every job (and thus every use of the
+    /// borrow) finishes before this frame returns, so the lifetime
+    /// erasure is sound — the same contract `std::thread::scope` gives,
+    /// without respawning threads per call.
+    pub fn run_chunks<F>(&self, jobs: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if jobs == 0 {
+            return;
+        }
+        let latch = Arc::new(Latch::new(jobs));
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: see doc comment — the latch wait keeps `f` (and anything
+        // it borrows) alive past the last job's completion.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f_ref) };
+        for i in 0..jobs {
+            let latch = Arc::clone(&latch);
+            self.submit(move || {
+                // count down even if f panics, or the caller hangs forever
+                let _arrive = ArriveGuard(&latch);
+                f_static(i);
+            });
+        }
+        latch.wait();
+    }
+}
+
+impl Drop for ComputePool {
+    fn drop(&mut self) {
+        // dropping the sender lets workers drain the queue and exit;
+        // detached threads need no join to unblock teardown
+        self.tx.take();
+    }
+}
+
+struct Latch {
+    remaining: Mutex<usize>,
+    all_done: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch { remaining: Mutex::new(n), all_done: Condvar::new() }
+    }
+    fn arrive(&self) {
+        let mut left = self.remaining.lock().unwrap_or_else(|e| e.into_inner());
+        *left -= 1;
+        if *left == 0 {
+            self.all_done.notify_all();
+        }
+    }
+    fn wait(&self) {
+        let mut left = self.remaining.lock().unwrap_or_else(|e| e.into_inner());
+        while *left > 0 {
+            left = self.all_done.wait(left).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+struct ArriveGuard<'a>(&'a Latch);
+impl Drop for ArriveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.arrive();
+    }
+}
+
 struct SendPtr<T>(*mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
@@ -161,5 +327,59 @@ mod tests {
         parallel_for_chunks(0, |_, _| panic!("must not run"));
         let v = parallel_map(1, |i| i + 1);
         assert_eq!(v, vec![1]);
+    }
+
+    #[test]
+    fn compute_pool_run_chunks_covers_all_jobs_once() {
+        let pool = ComputePool::new(4);
+        let hits: Vec<AtomicU64> = (0..333).map(|_| AtomicU64::new(0)).collect();
+        pool.run_chunks(333, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert_eq!(pool.jobs(), 333);
+        assert_eq!(pool.workers(), 4);
+    }
+
+    #[test]
+    fn compute_pool_run_chunks_borrows_caller_stack() {
+        let pool = ComputePool::new(2);
+        let data: Vec<u64> = (0..100).collect();
+        let sum = AtomicU64::new(0);
+        pool.run_chunks(100, |i| {
+            sum.fetch_add(data[i], Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (0..100).sum::<u64>());
+    }
+
+    #[test]
+    fn compute_pool_submit_runs_detached_jobs() {
+        let pool = ComputePool::new(2);
+        let latch = Arc::new(Latch::new(8));
+        let count = Arc::new(AtomicU64::new(0));
+        for _ in 0..8 {
+            let latch = Arc::clone(&latch);
+            let count = Arc::clone(&count);
+            pool.submit(move || {
+                let _arrive = ArriveGuard(&latch);
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        latch.wait();
+        assert_eq!(count.load(Ordering::Relaxed), 8);
+        assert!(pool.queue_stall_seconds() >= 0.0);
+    }
+
+    #[test]
+    fn compute_pool_survives_a_panicking_job() {
+        let pool = ComputePool::new(1);
+        // single worker: if the panic killed it, the next run_chunks
+        // would hang forever instead of completing
+        pool.run_chunks(1, |_| panic!("job panics"));
+        let ran = AtomicU64::new(0);
+        pool.run_chunks(3, |_| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 3);
     }
 }

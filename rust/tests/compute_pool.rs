@@ -1,0 +1,235 @@
+//! Stage C compute-pool tests: sharded `route_bits` must be
+//! **bit-identical** to inline compute for adversarial batch sizes
+//! (shard-boundary ±1, odd tails, single queries), for cache on/off ×
+//! delta on/off × 1 vs N pool workers; the reactor must re-sequence
+//! asynchronously computed answers back into frame order; and the
+//! two-pass cache lock must never serialize concurrent sessions behind
+//! each other's walks (the contention regression the lock split fixes).
+
+use sbp::coordinator::{predict_centralized, predict_session_tcp, serve_predict_tcp};
+use sbp::data::dataset::{PartySlice, VerticalSplit};
+use sbp::federation::predict::{PredictOptions, PredictSession};
+use sbp::federation::serve::{spawn_serve_session, HostServeState, ServeConfig};
+use sbp::federation::transport::{link_pair_bounded, GuestTransport};
+use sbp::tree::node::{SplitRef, Tree};
+use sbp::tree::predict::{GuestModel, HostModel};
+use sbp::util::rng::Xoshiro256;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn uni(rng: &mut Xoshiro256) -> f64 {
+    rng.next_f64() * 2.0 - 1.0
+}
+
+/// A deterministic one-host serving world with **exactly** `n` rows —
+/// the batch sizes under test are exact, not drawn. Every row consults
+/// the host (host splits at both tree roots), so a single-chunk pass
+/// walks a batch of exactly `n` fresh queries per routing level.
+fn world(n: usize, seed: u64) -> (VerticalSplit, GuestModel, HostModel) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let guest = PartySlice { cols: vec![0], x: (0..n).map(|_| uni(&mut rng)).collect(), n };
+    let host_slice =
+        PartySlice { cols: vec![1, 2], x: (0..2 * n).map(|_| uni(&mut rng)).collect(), n };
+    let host_m = HostModel {
+        party: 0,
+        splits: (0..5).map(|_| (rng.next_below(2) as u32, 0u8, uni(&mut rng))).collect(),
+    };
+    // tree 0: host root, one host and one guest split below it
+    let mut t0 = Tree::new(1);
+    let (l, r) = t0.split_node(0, SplitRef::Host { party: 0, handle: 0 });
+    let (ll, lr) = t0.split_node(l, SplitRef::Host { party: 0, handle: 1 });
+    let (rl, rr) = t0.split_node(r, SplitRef::Guest { feature: 0, bin: 0, threshold: 0.0 });
+    for (node, w) in [(ll, -1.5), (lr, -0.5), (rl, 0.5), (rr, 1.5)] {
+        t0.nodes[node as usize].weight = vec![w];
+    }
+    // tree 1: a second host root so repeat passes mix known/fresh keys
+    let mut t1 = Tree::new(1);
+    let (l1, r1) = t1.split_node(0, SplitRef::Host { party: 0, handle: 2 });
+    t1.nodes[l1 as usize].weight = vec![-0.25];
+    t1.nodes[r1 as usize].weight = vec![0.75];
+    let guest_m =
+        GuestModel { trees: vec![(t0, 0), (t1, 0)], n_classes: 2, pred_width: 1 };
+    let vs = VerticalSplit {
+        guest,
+        hosts: vec![host_slice],
+        y: vec![0.0; n],
+        n_classes: 2,
+        name: "compute-pool".into(),
+    };
+    (vs, guest_m, host_m)
+}
+
+/// Two streamed passes of the whole world through one in-memory serving
+/// session under `cfg`; returns (pass-1 preds, pass-2 preds, host shard
+/// jobs). Pass 1 walks every query fresh; pass 2 re-walks through
+/// whatever the cache/delta config remembers — including the empty- and
+/// partial-walk-list edges of the recombination.
+fn run_session(
+    vs: &VerticalSplit,
+    guest_m: &GuestModel,
+    host_m: &HostModel,
+    cfg: ServeConfig,
+) -> (Vec<f64>, Vec<f64>, u64) {
+    let state = HostServeState::new(host_m.clone(), vs.hosts[0].clone(), cfg);
+    let (gl, hl) = link_pair_bounded(8, 8);
+    let host = spawn_serve_session(state, hl);
+    let links: Vec<Box<dyn GuestTransport>> = vec![Box::new(gl)];
+    let mut session = PredictSession::new(
+        guest_m,
+        77,
+        PredictOptions { batch_rows: vs.n(), seed: 5, ..PredictOptions::default() },
+    );
+    session.open(&links);
+    let (p1, _) = session.predict_stream(&vs.guest, &links);
+    let (p2, _) = session.predict_stream(&vs.guest, &links);
+    session.close(&links);
+    let outcome = host.join().expect("serve session thread");
+    assert!(outcome.clean_close);
+    (p1, p2, outcome.compute_jobs)
+}
+
+/// The recombination property: for batch sizes straddling every shard
+/// boundary (±1 around multiples of 8, odd tails, single queries, and
+/// sizes past several whole shards), sharded compute under 1 and 4 pool
+/// workers is bit-identical to inline compute — across cache on/off ×
+/// delta on/off. The size-0 walk list arises on pass 2 when cache+delta
+/// remember everything; `shard_geometry` keeps it (and every batch
+/// below `compute_shard_min`) inline by construction.
+#[test]
+fn sharded_route_bits_is_bit_identical_to_inline_for_adversarial_sizes() {
+    const SIZES: &[usize] = &[1, 7, 8, 9, 15, 16, 17, 63, 64, 65, 263, 264, 265, 1024, 1037];
+    for &n in SIZES {
+        let (vs, guest_m, host_m) = world(n, 0xC0FFEE ^ n as u64);
+        let oracle = predict_centralized(&guest_m, &[host_m.clone()], &vs);
+        for (cache_capacity, delta_window) in
+            [(0usize, 0usize), (1 << 12, 0), (0, 1 << 12), (1 << 12, 1 << 12)]
+        {
+            let tag = format!("n={n} cache={cache_capacity} delta={delta_window}");
+            let base = ServeConfig {
+                cache_capacity,
+                delta_window,
+                compute_shard_min: usize::MAX, // inline baseline
+                ..ServeConfig::default()
+            };
+            let (i1, i2, inline_jobs) = run_session(&vs, &guest_m, &host_m, base);
+            assert_eq!(i1, oracle, "{tag}: inline pass 1");
+            assert_eq!(i2, oracle, "{tag}: inline pass 2");
+            assert_eq!(inline_jobs, 0, "{tag}: inline must dispatch no shard jobs");
+            for workers in [1usize, 4] {
+                let sharded = ServeConfig {
+                    compute_shard_min: 1, // every walked batch fans out
+                    compute_workers: workers,
+                    ..base
+                };
+                let (s1, s2, jobs) = run_session(&vs, &guest_m, &host_m, sharded);
+                assert_eq!(s1, i1, "{tag} w={workers}: sharded pass 1 must equal inline");
+                assert_eq!(s2, i2, "{tag} w={workers}: sharded pass 2 must equal inline");
+                assert!(jobs > 0, "{tag} w={workers}: pass 1 walks fresh queries sharded");
+            }
+        }
+    }
+}
+
+/// The reactor's async Stage C: a pipelined TCP session whose every
+/// batch fans out to the pool (with an injected walk delay, so several
+/// batches are genuinely in flight on the pool at once) must still
+/// deliver answers in frame order — the guest's strict chunk sequencing
+/// fails loudly otherwise — and bit-identical to the centralized
+/// oracle.
+#[test]
+fn reactor_resequences_pooled_answers_into_frame_order() {
+    let (vs, guest_m, host_m) = world(200, 0xAB5ED);
+    let oracle = predict_centralized(&guest_m, &[host_m.clone()], &vs);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = ServeConfig {
+        cache_capacity: 1 << 12,
+        compute_workers: 2,
+        compute_shard_min: 1,
+        walk_delay: Some(Duration::from_millis(2)),
+        ..ServeConfig::default()
+    };
+    let model = host_m.clone();
+    let slice = vs.hosts[0].clone();
+    let server = std::thread::spawn(move || {
+        serve_predict_tcp(&listener, model, slice, cfg, 1).expect("serve loop")
+    });
+    let r = predict_session_tcp(
+        &guest_m,
+        &vs.guest,
+        std::slice::from_ref(&addr),
+        1,
+        PredictOptions { batch_rows: 8, max_inflight: 8, ..PredictOptions::default() },
+    )
+    .expect("pipelined session");
+    let report = server.join().expect("server thread");
+    assert_eq!(r.preds, oracle, "pooled reactor serving must equal centralized");
+    assert_eq!(report.compute_workers, 2, "the pool was built with the requested width");
+    assert!(report.compute_jobs > 0, "batches must have fanned out");
+    assert!(report.shards_per_batch >= 1.0);
+    assert!(report.sessions[0].outcome.clean_close);
+}
+
+/// The cache-lock contention regression (independent of the pool): two
+/// sessions sharing one routing cache, each with a 250 ms walk, must
+/// overlap their walks — the lookup/store lock split means sessions
+/// contend for microseconds of map probes, never for each other's
+/// compute. The old single-pass `route_bits` held the batch guard
+/// across the walk and would serialize this to ≥ 500 ms.
+#[test]
+fn concurrent_sessions_do_not_serialize_behind_the_cache_lock() {
+    // depth-1 model: exactly one routing level, so each session's pass
+    // is exactly one PredictRoute frame = one (delayed) walk
+    let n = 32usize;
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let guest = PartySlice { cols: vec![0], x: vec![1.0; n], n };
+    let host_slice = PartySlice { cols: vec![1], x: (0..n).map(|_| uni(&mut rng)).collect(), n };
+    let host_m = HostModel { party: 0, splits: vec![(0, 0, 0.0)] };
+    let mut t = Tree::new(1);
+    let (l, r) = t.split_node(0, SplitRef::Host { party: 0, handle: 0 });
+    t.nodes[l as usize].weight = vec![-1.0];
+    t.nodes[r as usize].weight = vec![1.0];
+    let guest_m = GuestModel { trees: vec![(t, 0)], n_classes: 2, pred_width: 1 };
+
+    let state = HostServeState::new(
+        host_m,
+        host_slice,
+        ServeConfig {
+            cache_capacity: 1 << 12,
+            compute_shard_min: usize::MAX, // inline: this is a lock test, not a pool test
+            walk_delay: Some(Duration::from_millis(250)),
+            ..ServeConfig::default()
+        },
+    );
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for sid in [101u32, 102] {
+            let state = Arc::clone(&state);
+            let guest_m = &guest_m;
+            let guest = &guest;
+            s.spawn(move || {
+                let (gl, hl) = link_pair_bounded(8, 8);
+                let host = spawn_serve_session(state, hl);
+                let links: Vec<Box<dyn GuestTransport>> = vec![Box::new(gl)];
+                let mut session = PredictSession::new(
+                    guest_m,
+                    sid,
+                    PredictOptions { batch_rows: n, seed: 3, ..PredictOptions::default() },
+                );
+                session.open(&links);
+                session.predict_batch(guest, &links);
+                session.close(&links);
+                let outcome = host.join().expect("serve session thread");
+                assert!(outcome.clean_close);
+            });
+        }
+    });
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_millis(450),
+        "two 250 ms walks serialized behind the cache lock: {elapsed:?}"
+    );
+    // the split pass still accounts every query exactly once
+    let cs = state.cache_stats();
+    assert_eq!(cs.hits + cs.misses, state.queries_answered());
+}

@@ -57,10 +57,18 @@ fn run_iteration(seed: u64, it: usize) {
     let batch_rows = [0usize, 1, 3, 7, 16][rng.next_below(5)];
     let dummy_queries = [0usize, 0, 3, 9][rng.next_below(4)];
     let passes = if batch_rows > 0 && it % 4 == 1 { 2 } else { 1 };
+    // Stage C dimensions: pool width cycles 0 (auto) / 1 / 4, and the
+    // shard threshold alternates between "everything fans out" and the
+    // default (these worlds are small, so the default keeps compute
+    // inline) — sharded and inline serving must be indistinguishable to
+    // every assertion below (bit-parity, byte symmetry, frame order)
+    let compute_workers = [0usize, 1, 4][it % 3];
+    let compute_shard_min =
+        if it % 2 == 0 { 1 } else { ServeConfig::default().compute_shard_min };
     let tag = format!(
         "it {it}: n={} hosts={n_hosts} batch_rows={batch_rows} inflight={max_inflight} \
          delta={delta_window} cache={cache_capacity} evict={} v{protocol} decoys={dummy_queries} \
-         passes={passes}",
+         passes={passes} cw={compute_workers} csm={compute_shard_min}",
         world.vs.n(),
         basis_evict.name()
     );
@@ -70,6 +78,8 @@ fn run_iteration(seed: u64, it: usize) {
         delta_window,
         basis_evict,
         max_inflight,
+        compute_workers,
+        compute_shard_min,
         ..ServeConfig::default()
     };
     let (addrs, servers) = start_servers(&world, cfg);
