@@ -9,7 +9,10 @@
 //! session per pass over the batch, every session asserted bit-identical
 //! to the colocated oracle. A high-concurrency section holds many
 //! sessions resident at once and compares a few-worker reactor against
-//! a one-shard-per-session layout. Output goes to `BENCH_serve.json` at the
+//! a one-shard-per-session layout; an overload section offers 1×/2×/4×
+//! the v5 admission limit in concurrent sessions and compares goodput,
+//! shed rate, and p99 session latency with and without the admission
+//! controller. Output goes to `BENCH_serve.json` at the
 //! repository root (override with `SBP_BENCH_OUT`); rerun with
 //! `cargo bench --bench serve_throughput`.
 
@@ -22,6 +25,7 @@ use sbp::coordinator::{
     train_federated,
 };
 use sbp::data::synthetic::SyntheticSpec;
+use sbp::federation::limit::AdmissionConfig;
 use sbp::federation::message::BasisEvict;
 use sbp::federation::predict::PredictOptions;
 use sbp::federation::serve::ServeConfig;
@@ -468,6 +472,107 @@ fn main() {
         ),
     ]);
 
+    // ---- overload: the v5 admission controller (limit 2, queue 2)
+    // against no admission at 1×/2×/4× offered load. Goodput counts
+    // completed sessions only (every leg is parity-gated, so all
+    // sessions complete — overloaded guests via Busy-retry), shed rate
+    // is sheds over offered hellos, p99 is per-session wall latency.
+    // The 1× gate below asserts admission costs (about) nothing when
+    // the host is not overloaded; the tripwire is deliberately
+    // generous (CI boxes vary wildly), the indicative numbers land in
+    // BENCH_serve.json.
+    let ov_limit = 2usize;
+    let ov_sessions = if smoke { 8 } else { 24 };
+    println!(
+        "\n--- overload: admission (limit {ov_limit}, queue {ov_limit}) vs none, \
+         {ov_sessions} sessions ---"
+    );
+    let mut ov_table = sbp::bench_harness::Table::new(&[
+        "load", "admission", "goodput rows/s", "shed rate", "queued", "p99 sess ms",
+    ]);
+    let mut ov_points: Vec<Json> = Vec::new();
+    let mut goodput_1x = [0f64; 2]; // [admission off, admission on]
+    for mult in [1usize, 2, 4] {
+        for admission_on in [false, true] {
+            let admission = if admission_on {
+                AdmissionConfig { limit: ov_limit, queue: ov_limit, ..AdmissionConfig::default() }
+            } else {
+                AdmissionConfig::default() // limit 0 = off
+            };
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+            let addr = listener.local_addr().unwrap().to_string();
+            let model = host_ms[0].clone();
+            let slice = vs.hosts[0].clone();
+            let server = std::thread::spawn(move || {
+                serve_predict_tcp(
+                    &listener,
+                    model,
+                    slice,
+                    ServeConfig { workers: 2, admission, ..ServeConfig::default() },
+                    ov_sessions,
+                )
+                .expect("serve loop")
+            });
+            let t0 = std::time::Instant::now();
+            let reports = predict_sessions_tcp(
+                &guest_m,
+                &vs.guest,
+                std::slice::from_ref(&addr),
+                ov_sessions,
+                ov_limit * mult, // offered concurrency: 1×/2×/4× the limit
+                PredictOptions { seed: 17, admission_retries: 200, ..PredictOptions::default() },
+            )
+            .expect("overloaded sessions");
+            let wall = t0.elapsed().as_secs_f64();
+            let serve_report = server.join().expect("server thread");
+            for r in &reports {
+                assert_eq!(
+                    r.preds, oracle,
+                    "session {} must be bit-identical to colocated (load {mult}×, admission {})",
+                    r.session_id, admission_on
+                );
+            }
+            let goodput = (ov_sessions * n) as f64 / wall.max(1e-12);
+            let offered = ov_sessions as u64 + serve_report.sessions_shed;
+            let shed_rate = serve_report.sessions_shed as f64 / offered as f64;
+            let mut lat: Vec<f64> = reports.iter().map(|r| r.wall_seconds).collect();
+            lat.sort_by(|a, b| a.total_cmp(b));
+            let p99 = lat[((lat.len() as f64 * 0.99).ceil() as usize).max(1) - 1];
+            if mult == 1 {
+                goodput_1x[admission_on as usize] = goodput;
+            }
+            ov_table.row(&[
+                format!("{mult}×"),
+                if admission_on { "on".into() } else { "off".to_string() },
+                format!("{goodput:.0}"),
+                format!("{:.1}%", shed_rate * 100.0),
+                serve_report.sessions_queued.to_string(),
+                format!("{:.1}", p99 * 1000.0),
+            ]);
+            ov_points.push(Json::obj(vec![
+                ("offered_load", Json::Num(mult as f64)),
+                ("admission", Json::Str(if admission_on { "on" } else { "off" }.into())),
+                ("admission_limit", Json::Num(if admission_on { ov_limit as f64 } else { 0.0 })),
+                ("goodput_rows_per_sec", Json::Num((goodput * 10.0).round() / 10.0)),
+                ("sessions_shed", Json::Num(serve_report.sessions_shed as f64)),
+                ("sessions_queued", Json::Num(serve_report.sessions_queued as f64)),
+                ("shed_rate", Json::Num((shed_rate * 1000.0).round() / 1000.0)),
+                ("p99_session_ms", Json::Num((p99 * 10_000.0).round() / 10.0)),
+                (
+                    "queue_wait_seconds",
+                    Json::Num((serve_report.admission_queue_wait_seconds * 1000.0).round() / 1000.0),
+                ),
+            ]));
+        }
+    }
+    ov_table.print();
+    assert!(
+        goodput_1x[1] >= goodput_1x[0] * 0.5,
+        "admission at 1× load must not cost throughput: {:.0} rows/s with vs {:.0} without",
+        goodput_1x[1],
+        goodput_1x[0]
+    );
+
     if smoke {
         println!("\n[smoke] multi-session serving parity OK (no JSON written)");
         return;
@@ -485,6 +590,7 @@ fn main() {
         ("high_concurrency", Json::Arr(hc_points)),
         ("compute_pool", Json::Arr(cp_points)),
         ("mixed_load", Json::Arr(vec![ml_point])),
+        ("admission", Json::Arr(ov_points)),
         (
             "note",
             Json::Str(

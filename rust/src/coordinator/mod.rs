@@ -640,16 +640,39 @@ pub fn predict_sessions_tcp(
 pub fn shutdown_predict_hosts(addrs: &[String]) -> Result<()> {
     let suite = CipherSuite::new_plain(64);
     for addr in addrs {
-        let t = TcpGuestTransport::connect(addr, suite.clone())
-            .map_err(|e| anyhow!("connecting to predict host at {addr}: {e}"))?;
-        t.send(ToHost::SessionHello {
-            session_id: u32::MAX, // conventional control-session id
-            protocol: crate::federation::message::SERVE_PROTOCOL_VERSION,
-        });
-        let ToGuest::SessionAccept { .. } = t.recv() else {
-            return Err(anyhow!("predict host at {addr} rejected the control session"));
-        };
-        t.send(ToHost::Shutdown);
+        // a host past its admission limit answers the control hello
+        // with Busy like any other hello — retry a few times (the whole
+        // point of this call is that the host IS busy), then give up
+        let mut attempts = 0u32;
+        loop {
+            let t = TcpGuestTransport::connect(addr, suite.clone())
+                .map_err(|e| anyhow!("connecting to predict host at {addr}: {e}"))?;
+            t.send(ToHost::SessionHello {
+                session_id: u32::MAX, // conventional control-session id
+                protocol: crate::federation::message::SERVE_PROTOCOL_VERSION,
+            });
+            match t.recv() {
+                ToGuest::SessionAccept { .. } => {
+                    t.send(ToHost::Shutdown);
+                    break;
+                }
+                ToGuest::Busy { retry_after_ms, .. } => {
+                    attempts += 1;
+                    if attempts > 16 {
+                        return Err(anyhow!(
+                            "predict host at {addr} still busy after {attempts} control-session \
+                             attempts"
+                        ));
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(
+                        (retry_after_ms as u64).max(10),
+                    ));
+                }
+                _ => {
+                    return Err(anyhow!("predict host at {addr} rejected the control session"));
+                }
+            }
+        }
     }
     Ok(())
 }
@@ -725,6 +748,19 @@ pub struct ServeReport {
     /// Transient accept errors (fd exhaustion, aborted handshakes)
     /// survived with backoff instead of winding the service down.
     pub accept_retries: u64,
+    /// Hellos the v5 admission controller refused with `ToGuest::Busy`
+    /// (immediate sheds + queue-deadline expiries). Shed hellos consume
+    /// **no** session budget and appear in no per-session report. Zero
+    /// when admission is off (`--admission-limit 0`).
+    pub sessions_shed: u64,
+    /// Hellos that waited in the bounded admission queue before
+    /// resolving (to an admit or an expiry).
+    pub sessions_queued: u64,
+    /// Total seconds hellos spent in the admission queue.
+    pub admission_queue_wait_seconds: f64,
+    /// AIMD retunes that changed the advertised `max_inflight` window
+    /// (congestion halves it, healthy intervals grow it back).
+    pub window_retunes: u64,
     /// Exact serialized wire traffic across all sessions.
     pub comm: NetSnapshot,
     /// Wall time of the whole serve loop.
@@ -748,7 +784,8 @@ impl ServeReport {
              {} reactor worker(s) (shard peaks Σ{}), \
              compute pool {} worker(s) / {} shard job(s) \
              ({:.1} shards/batch, {:.2}s queued), \
-             {} resumed, {} resume-expired, {} idle-reaped, {} accept retry(ies)",
+             {} resumed, {} resume-expired, {} idle-reaped, {} accept retry(ies), \
+             admission {} shed / {} queued ({:.2}s queue wait, {} window retune(s))",
             self.n_sessions,
             self.queries_answered,
             self.answers_elided,
@@ -768,6 +805,10 @@ impl ServeReport {
             self.sessions_resume_expired,
             self.sessions_idle_reaped,
             self.accept_retries,
+            self.sessions_shed,
+            self.sessions_queued,
+            self.admission_queue_wait_seconds,
+            self.window_retunes,
         )
     }
 }
@@ -824,6 +865,10 @@ pub fn serve_predict_tcp(
         sessions_resumed: state.sessions_resumed(),
         sessions_resume_expired: state.sessions_resume_expired(),
         accept_retries: loop_report.accept_retries,
+        sessions_shed: loop_report.sessions_shed,
+        sessions_queued: loop_report.sessions_queued,
+        admission_queue_wait_seconds: loop_report.admission_queue_wait_seconds,
+        window_retunes: loop_report.window_retunes,
         comm,
         wall_seconds: wall,
         sessions_per_sec: n_sessions as f64 / wall.max(1e-12),

@@ -777,6 +777,7 @@ pub fn decode_to_host(
                 return Err(WireError::Malformed("SessionHello with reserved session id 0"));
             }
             if protocol != crate::federation::message::SERVE_PROTOCOL_VERSION
+                && protocol != crate::federation::message::SERVE_PROTOCOL_V4
                 && protocol != crate::federation::message::SERVE_PROTOCOL_V3
                 && protocol != crate::federation::message::SERVE_PROTOCOL_V2
             {
@@ -864,12 +865,13 @@ pub fn encode_to_guest_into(
             put_u32(out, *max_inflight);
             put_u32(out, *delta_window);
             // v3 extension: appended only when the negotiated protocol
-            // speaks it (v3 or v4), so a v2 peer receives exactly the
-            // 12-byte accept its decoder expects (its trailing-bytes
-            // check would reject anything longer)
+            // speaks it (v3 or newer), so a v2 peer receives exactly
+            // the 12-byte accept its decoder expects (its
+            // trailing-bytes check would reject anything longer)
             debug_assert!(
                 *protocol == crate::federation::message::SERVE_PROTOCOL_V2
                     || *protocol == crate::federation::message::SERVE_PROTOCOL_V3
+                    || *protocol == crate::federation::message::SERVE_PROTOCOL_V4
                     || *protocol == crate::federation::message::SERVE_PROTOCOL_VERSION,
                 "accept must carry a negotiated protocol this build speaks"
             );
@@ -894,6 +896,10 @@ pub fn encode_to_guest_into(
         ToGuest::ResumeAccept { next_chunk, basis_epoch } => {
             put_u32(out, *next_chunk);
             put_u32(out, *basis_epoch);
+        }
+        ToGuest::Busy { retry_after_ms, reason } => {
+            put_u32(out, *retry_after_ms);
+            out.push(*reason as u8);
         }
     }
     debug_assert_eq!(out.len() + FRAME_HEADER_LEN, to_guest_wire_len(msg, ct_len));
@@ -954,8 +960,8 @@ pub fn decode_to_guest(
             let delta_window = r.u32()?;
             // a bare 12-byte accept is the v2 form (legacy host, or a
             // newer host negotiating a v2 hello down): freeze
-            // semantics. Anything longer must be a well-formed v3/v4
-            // extension.
+            // semantics. Anything longer must be a well-formed
+            // v3-or-newer extension.
             let (protocol, basis_evict) = if r.remaining() == 0 {
                 (
                     crate::federation::message::SERVE_PROTOCOL_V2,
@@ -964,6 +970,7 @@ pub fn decode_to_guest(
             } else {
                 let protocol = r.u32()?;
                 if protocol != crate::federation::message::SERVE_PROTOCOL_V3
+                    && protocol != crate::federation::message::SERVE_PROTOCOL_V4
                     && protocol != crate::federation::message::SERVE_PROTOCOL_VERSION
                 {
                     return Err(WireError::Malformed(
@@ -1006,6 +1013,14 @@ pub fn decode_to_guest(
             }
         }
         7 => ToGuest::ResumeAccept { next_chunk: r.u32()?, basis_epoch: r.u32()? },
+        8 => {
+            let retry_after_ms = r.u32()?;
+            let tag = r.u8()?;
+            let Some(reason) = crate::federation::message::BusyReason::from_tag(tag) else {
+                return Err(WireError::BadTag { what: "busy reason", tag });
+            };
+            ToGuest::Busy { retry_after_ms, reason }
+        }
         t => return Err(WireError::BadTag { what: "to-guest message", tag: t }),
     };
     r.finish()?;
@@ -1078,6 +1093,7 @@ pub fn to_guest_wire_len(msg: &ToGuest, ct_len: usize) -> usize {
                 16 + ((*n - *n_known) as usize).div_ceil(8)
             }
             ToGuest::ResumeAccept { .. } => 8,
+            ToGuest::Busy { .. } => 5, // retry_after_ms u32 + reason tag
         }
 }
 

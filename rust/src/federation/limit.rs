@@ -1,0 +1,670 @@
+//! Host-level **admission control**: a deterministic AIMD concurrency
+//! limiter that decides, per [`ToHost::SessionHello`], whether to admit
+//! the session now, park the hello in a bounded FIFO queue with a
+//! deadline, or shed it with a [`ToGuest::Busy`] frame the guest
+//! retries against — plus the **self-tuning pipeline window**: the
+//! `max_inflight` a [`ToGuest::SessionAccept`] announces is no longer
+//! the static config knob but a live value the limiter shrinks under
+//! observed congestion and grows back when the host is healthy.
+//!
+//! [`ToHost::SessionHello`]: super::message::ToHost::SessionHello
+//! [`ToGuest::Busy`]: super::message::ToGuest::Busy
+//! [`ToGuest::SessionAccept`]: super::message::ToGuest::SessionAccept
+//!
+//! ## Signals
+//!
+//! The limiter consumes only signals the serving engines already
+//! measure, fed as *cumulative* totals in a [`LoadSample`] and diffed
+//! internally per retune interval:
+//!
+//! - `decode_stall_seconds` — threaded-engine Stage A blocked on a full
+//!   ring: compute is behind socket I/O (**congestion**);
+//! - `compute_queue_stall_seconds` — Stage C shard jobs sitting queued
+//!   before a pool worker picks them up (**congestion**);
+//! - per-batch **service latency** (`service_seconds / batches`) —
+//!   compared against the best latency the host has ever sustained;
+//!   inflation past [`LATENCY_TOLERANCE`]× means queueing somewhere the
+//!   stall counters cannot see (**congestion**);
+//! - `poll_stall_seconds` — reactor workers parked with nothing
+//!   readable. This one is **idleness**, not congestion: a mostly
+//!   parked host is safely below its knee, so the limiter uses it to
+//!   grow the window back *faster* after an overload has passed.
+//!
+//! ## The AIMD retune rule
+//!
+//! Once per [`AdmissionConfig::retune_interval`]:
+//!
+//! - **congested** (stall fraction over [`STALL_TOLERANCE`], or mean
+//!   batch latency over [`LATENCY_TOLERANCE`]× the best observed):
+//!   multiplicative decrease — the concurrency limit is scaled by
+//!   [`MD_FACTOR`] and the advertised window is halved (floors: 1);
+//! - otherwise: additive increase — limit `+1` session, window `+1`
+//!   batch (`+2` when the idle fraction shows the host mostly parked),
+//!   capped at the configured ceiling.
+//!
+//! ## Determinism
+//!
+//! Every decision is a pure function of the call sequence and the
+//! injected [`Clock`] — the controller never reads wall time, never
+//! randomizes, and owns no threads. Replaying the same sequence of
+//! `try_admit`/`poll_ticket`/`release`/`retune` calls against a
+//! [`ManualClock`] reproduces every admit/queue/shed verdict and every
+//! retuned window bit-for-bit, which is what makes the admission tests
+//! assertable down to exact counter values. (Jitter belongs to the
+//! *guest's* retry schedule, where it breaks re-dial lockstep — never
+//! to the host's decisions.)
+
+use super::message::BusyReason;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Stall fraction of a retune interval (decode + compute-queue stalls)
+/// past which the interval counts as congested.
+pub const STALL_TOLERANCE: f64 = 0.05;
+
+/// Mean per-batch service latency past this multiple of the best
+/// sustained latency counts as congested (queueing the stall counters
+/// cannot see).
+pub const LATENCY_TOLERANCE: f64 = 2.0;
+
+/// Multiplicative-decrease factor applied to the concurrency limit on a
+/// congested interval.
+pub const MD_FACTOR: f64 = 0.7;
+
+/// Per-retune decay of the best-latency baseline (so a permanently
+/// slower workload — bigger batches, colder cache — re-anchors instead
+/// of reading as congestion forever).
+const BASELINE_DECAY: f64 = 1.02;
+
+/// Idle fraction (reactor poll stall / interval) past which additive
+/// increase takes the bigger step: the host is mostly parked, so the
+/// window can recover quickly after an overload has passed.
+const IDLE_FAST_RECOVERY: f64 = 0.25;
+
+/// Tunables of the admission controller. Embedded in
+/// `ServeConfig::admission`; `limit == 0` disables admission entirely —
+/// every hello is admitted with the static window, no counters move,
+/// and serving behaves exactly as it did before protocol v5.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Concurrent admitted sessions the host accepts before queueing or
+    /// shedding (the AIMD *ceiling*; the live limit retunes between 1
+    /// and this). 0 = admission control off.
+    pub limit: usize,
+    /// Capacity of the bounded FIFO hello queue (0 = no queue: a hello
+    /// past the limit is shed immediately).
+    pub queue: usize,
+    /// How long a queued hello may wait for a slot before it is shed
+    /// with [`BusyReason::QueueExpired`].
+    pub queue_deadline: Duration,
+    /// Base retry advice carried in [`super::message::ToGuest::Busy`]
+    /// (`retry_after_ms`); the guest treats it as a floor and adds its
+    /// own seeded jitter.
+    pub retry_after: Duration,
+    /// Minimum spacing between AIMD retunes; calls inside the interval
+    /// are no-ops, so engines may call [`AdmissionController::retune`]
+    /// opportunistically from any loop.
+    pub retune_interval: Duration,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            limit: 0,
+            queue: 0,
+            queue_deadline: Duration::from_secs(2),
+            retry_after: Duration::from_millis(50),
+            retune_interval: Duration::from_millis(250),
+        }
+    }
+}
+
+/// The limiter's clock: monotonic time since an arbitrary epoch.
+/// Injected so every limiter decision is a replayable function of the
+/// call sequence — production uses [`RealClock`], tests drive a
+/// [`ManualClock`] by hand.
+pub trait Clock: Send + Sync {
+    /// Monotonic now.
+    fn now(&self) -> Duration;
+}
+
+/// Wall-clock [`Clock`] for production: elapsed time since the
+/// controller was built.
+pub struct RealClock(Instant);
+
+impl Default for RealClock {
+    fn default() -> Self {
+        RealClock(Instant::now())
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> Duration {
+        self.0.elapsed()
+    }
+}
+
+/// Hand-cranked [`Clock`] for deterministic tests.
+#[derive(Default)]
+pub struct ManualClock(Mutex<Duration>);
+
+impl ManualClock {
+    /// Advance the clock by `d`.
+    pub fn advance(&self, d: Duration) {
+        let mut t = self.0.lock().unwrap_or_else(|p| p.into_inner());
+        *t += d;
+    }
+}
+
+impl Clock for ManualClock {
+    fn now(&self) -> Duration {
+        *self.0.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// Cumulative host load signals, as the serving engines measure them.
+/// The controller diffs consecutive samples internally, so callers just
+/// snapshot their running totals.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadSample {
+    /// Reactor workers parked with nothing readable (idleness).
+    pub poll_stall_seconds: f64,
+    /// Threaded-engine decode stages blocked on a full ring.
+    pub decode_stall_seconds: f64,
+    /// Stage C shard jobs queued before a pool worker picked them up.
+    pub compute_queue_stall_seconds: f64,
+    /// `PredictRoute` batches answered.
+    pub batches: u64,
+    /// Total service time of those batches (decode-to-emit).
+    pub service_seconds: f64,
+}
+
+/// The controller's verdict on one arriving hello.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Admit now; announce `window` as the session's `max_inflight`.
+    Admit {
+        /// The retuned pipeline window to advertise.
+        window: u32,
+    },
+    /// Park the hello in the FIFO queue; poll the ticket until it
+    /// admits or expires.
+    Queued {
+        /// Handle for [`AdmissionController::poll_ticket`] /
+        /// [`AdmissionController::cancel_ticket`].
+        ticket: u64,
+    },
+    /// Shed: answer [`super::message::ToGuest::Busy`] (v5 peers) or
+    /// close (older peers).
+    Busy {
+        /// Retry advice for the `Busy` frame.
+        retry_after_ms: u32,
+        /// Why the hello was refused.
+        reason: BusyReason,
+    },
+}
+
+/// One poll of a queued hello's ticket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TicketPoll {
+    /// Still queued; poll again.
+    Pending,
+    /// A slot freed and this ticket is at the front: admitted.
+    Admit {
+        /// The retuned pipeline window to advertise.
+        window: u32,
+    },
+    /// The queue deadline ran out: shed with
+    /// [`BusyReason::QueueExpired`].
+    Expired {
+        /// Retry advice for the `Busy` frame.
+        retry_after_ms: u32,
+    },
+}
+
+/// Point-in-time admission counters, in the style of
+/// [`super::serve::CacheStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AdmissionStats {
+    /// Hellos refused with `Busy` (immediate sheds + queue expiries).
+    pub sessions_shed: u64,
+    /// Hellos that entered the admission queue (whether they later
+    /// admitted or expired).
+    pub sessions_queued: u64,
+    /// Total seconds hellos spent in the admission queue (admitted and
+    /// expired alike).
+    pub queue_wait_seconds: f64,
+    /// Retunes that *changed* the advertised window.
+    pub window_retunes: u64,
+    /// Sessions currently admitted (in flight).
+    pub in_flight: usize,
+    /// The current advertised `max_inflight` window.
+    pub window: u32,
+    /// The current live concurrency limit (≤ the configured ceiling).
+    pub limit: usize,
+}
+
+struct Inner {
+    /// Sessions currently admitted.
+    in_flight: usize,
+    /// Live AIMD concurrency limit, in `[1, cfg.limit]`. Kept as f64 so
+    /// multiplicative decrease accumulates below the integer floor
+    /// function (`limit()` truncates).
+    limit: f64,
+    /// Advertised pipeline window, in `[1, base_window]`.
+    window: u32,
+    /// Queued hellos: (ticket, enqueued-at), FIFO.
+    queue: VecDeque<(u64, Duration)>,
+    next_ticket: u64,
+    last_retune: Duration,
+    last_sample: LoadSample,
+    /// Best sustained mean batch latency (0 = none observed yet).
+    best_latency: f64,
+    shed: u64,
+    queued: u64,
+    queue_wait: Duration,
+    window_retunes: u64,
+}
+
+/// The host's admission controller. One per serving process, shared by
+/// both engines; all state behind one mutex (admission runs once per
+/// *session*, not per frame — never on the hot path).
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    /// Ceiling of the advertised window (the static `max_inflight`).
+    base_window: u32,
+    clock: Box<dyn Clock>,
+    inner: Mutex<Inner>,
+}
+
+impl AdmissionController {
+    /// Build a controller advertising at most `base_window` as
+    /// `max_inflight`, on the real clock.
+    pub fn new(cfg: AdmissionConfig, base_window: u32) -> Self {
+        Self::with_clock(cfg, base_window, Box::new(RealClock::default()))
+    }
+
+    /// Build on an injected clock (deterministic tests).
+    pub fn with_clock(cfg: AdmissionConfig, base_window: u32, clock: Box<dyn Clock>) -> Self {
+        let base_window = base_window.max(1);
+        AdmissionController {
+            cfg,
+            base_window,
+            clock,
+            inner: Mutex::new(Inner {
+                in_flight: 0,
+                limit: cfg.limit.max(1) as f64,
+                window: base_window,
+                queue: VecDeque::new(),
+                next_ticket: 1,
+                last_retune: Duration::ZERO,
+                last_sample: LoadSample::default(),
+                best_latency: 0.0,
+                shed: 0,
+                queued: 0,
+                queue_wait: Duration::ZERO,
+                window_retunes: 0,
+            }),
+        }
+    }
+
+    /// Is admission control on at all? Off (`limit == 0`) means every
+    /// hello admits with the static window and nothing is counted —
+    /// byte-for-byte the pre-v5 behavior.
+    pub fn enabled(&self) -> bool {
+        self.cfg.limit > 0
+    }
+
+    /// Recover the state lock from poison like the routing cache does —
+    /// one panicking session must not take admission down with it (the
+    /// counters it guards are monotone and updated whole).
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn retry_advice(&self, inner: &Inner) -> u32 {
+        // deterministic advice that grows with queue depth, so the
+        // retry horizon stretches as the backlog does
+        let base = self.cfg.retry_after.as_millis() as u64;
+        let scale = 1 + inner.queue.len() as u64 / self.cfg.queue.max(1) as u64;
+        (base * scale).min(u32::MAX as u64) as u32
+    }
+
+    /// Decide one arriving hello: admit, queue, or shed.
+    pub fn try_admit(&self) -> Admission {
+        if !self.enabled() {
+            return Admission::Admit { window: self.base_window };
+        }
+        let mut inner = self.lock();
+        // admitted sessions may exceed floor(limit) transiently after a
+        // multiplicative decrease (and resumes force-admit past it);
+        // new hellos simply wait for the drain
+        if inner.in_flight < inner.limit as usize && inner.queue.is_empty() {
+            inner.in_flight += 1;
+            return Admission::Admit { window: inner.window };
+        }
+        if inner.queue.len() < self.cfg.queue {
+            let ticket = inner.next_ticket;
+            inner.next_ticket += 1;
+            let now = self.clock.now();
+            inner.queue.push_back((ticket, now));
+            inner.queued += 1;
+            return Admission::Queued { ticket };
+        }
+        inner.shed += 1;
+        Admission::Busy {
+            retry_after_ms: self.retry_advice(&inner),
+            reason: BusyReason::Shed,
+        }
+    }
+
+    /// Shed a hello because the host is winding down (stop requested):
+    /// counted like any other shed, reason [`BusyReason::Draining`].
+    pub fn shed_draining(&self) -> Admission {
+        let mut inner = self.lock();
+        inner.shed += 1;
+        Admission::Busy {
+            retry_after_ms: self.retry_advice(&inner),
+            reason: BusyReason::Draining,
+        }
+    }
+
+    /// Poll a queued hello's ticket. Only the ticket's owner calls this
+    /// (and stops at the first non-`Pending` verdict).
+    pub fn poll_ticket(&self, ticket: u64) -> TicketPoll {
+        let mut inner = self.lock();
+        let now = self.clock.now();
+        let Some(pos) = inner.queue.iter().position(|&(t, _)| t == ticket) else {
+            // unreachable for a well-behaved owner; defined anyway so a
+            // driver bug degrades to one shed session, not a panic
+            return TicketPoll::Expired { retry_after_ms: self.retry_advice(&inner) };
+        };
+        let waited = now.saturating_sub(inner.queue[pos].1);
+        if waited > self.cfg.queue_deadline {
+            inner.queue.remove(pos);
+            inner.queue_wait += waited;
+            inner.shed += 1;
+            return TicketPoll::Expired { retry_after_ms: self.retry_advice(&inner) };
+        }
+        if pos == 0 && inner.in_flight < inner.limit as usize {
+            inner.queue.pop_front();
+            inner.queue_wait += waited;
+            inner.in_flight += 1;
+            return TicketPoll::Admit { window: inner.window };
+        }
+        TicketPoll::Pending
+    }
+
+    /// Abandon a queued hello whose connection died before resolving.
+    pub fn cancel_ticket(&self, ticket: u64) {
+        let mut inner = self.lock();
+        if let Some(pos) = inner.queue.iter().position(|&(t, _)| t == ticket) {
+            inner.queue.remove(pos);
+        }
+    }
+
+    /// An admitted session ended (or parked): its slot frees.
+    pub fn release(&self) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.lock();
+        inner.in_flight = inner.in_flight.saturating_sub(1);
+    }
+
+    /// Re-admit a resuming parked session **unconditionally**: a valid
+    /// resume inside the window is never shed (the session already paid
+    /// admission at its hello), even if that transiently overshoots the
+    /// live limit — new hellos queue behind the overshoot instead.
+    pub fn force_admit(&self) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.lock();
+        inner.in_flight += 1;
+    }
+
+    /// The window a `SessionAccept` should advertise right now.
+    pub fn window(&self) -> u32 {
+        if !self.enabled() {
+            return self.base_window;
+        }
+        self.lock().window
+    }
+
+    /// One AIMD retune pass over a fresh cumulative [`LoadSample`].
+    /// Rate-limited internally to [`AdmissionConfig::retune_interval`];
+    /// cheap no-op inside the interval, so engines call it from any
+    /// convenient loop.
+    pub fn retune(&self, sample: LoadSample) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.lock();
+        let now = self.clock.now();
+        let dt = now.saturating_sub(inner.last_retune);
+        if dt < self.cfg.retune_interval {
+            return;
+        }
+        let prev = inner.last_sample;
+        inner.last_retune = now;
+        inner.last_sample = sample;
+        let dt = dt.as_secs_f64();
+        let pressure = (sample.decode_stall_seconds - prev.decode_stall_seconds)
+            + (sample.compute_queue_stall_seconds - prev.compute_queue_stall_seconds);
+        let idle = sample.poll_stall_seconds - prev.poll_stall_seconds;
+        let d_batches = sample.batches.saturating_sub(prev.batches);
+        let d_service = sample.service_seconds - prev.service_seconds;
+        let mean_latency = if d_batches > 0 { d_service / d_batches as f64 } else { 0.0 };
+        if mean_latency > 0.0 {
+            inner.best_latency = if inner.best_latency == 0.0 {
+                mean_latency
+            } else {
+                // slow upward decay keeps the baseline honest when the
+                // workload itself gets permanently slower
+                (inner.best_latency * BASELINE_DECAY).min(mean_latency.max(inner.best_latency))
+            };
+            if mean_latency < inner.best_latency {
+                inner.best_latency = mean_latency;
+            }
+        }
+        let congested = pressure / dt > STALL_TOLERANCE
+            || (inner.best_latency > 0.0
+                && mean_latency > LATENCY_TOLERANCE * inner.best_latency);
+        let old_window = inner.window;
+        if congested {
+            inner.limit = (inner.limit * MD_FACTOR).max(1.0);
+            inner.window = (inner.window / 2).max(1);
+        } else {
+            inner.limit = (inner.limit + 1.0).min(self.cfg.limit as f64);
+            // a mostly parked reactor is far below the knee: recover
+            // the window at double speed
+            let step = if idle / dt > IDLE_FAST_RECOVERY { 2 } else { 1 };
+            inner.window = (inner.window + step).min(self.base_window);
+        }
+        if inner.window != old_window {
+            inner.window_retunes += 1;
+        }
+    }
+
+    /// Current counters, for `ServeReport`.
+    pub fn stats(&self) -> AdmissionStats {
+        let inner = self.lock();
+        AdmissionStats {
+            sessions_shed: inner.shed,
+            sessions_queued: inner.queued,
+            queue_wait_seconds: inner.queue_wait.as_secs_f64(),
+            window_retunes: inner.window_retunes,
+            in_flight: inner.in_flight,
+            window: inner.window,
+            limit: (inner.limit as usize).min(self.cfg.limit),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    struct SharedClock(Arc<ManualClock>);
+    impl Clock for SharedClock {
+        fn now(&self) -> Duration {
+            self.0.now()
+        }
+    }
+
+    fn controller(cfg: AdmissionConfig, window: u32) -> (AdmissionController, Arc<ManualClock>) {
+        let clock = Arc::new(ManualClock::default());
+        let c =
+            AdmissionController::with_clock(cfg, window, Box::new(SharedClock(Arc::clone(&clock))));
+        (c, clock)
+    }
+
+    #[test]
+    fn disabled_controller_admits_everything_with_the_static_window() {
+        let (c, _) = controller(AdmissionConfig::default(), 8);
+        assert!(!c.enabled());
+        for _ in 0..1000 {
+            assert_eq!(c.try_admit(), Admission::Admit { window: 8 });
+        }
+        let s = c.stats();
+        assert_eq!((s.sessions_shed, s.sessions_queued), (0, 0));
+    }
+
+    #[test]
+    fn admit_queue_shed_in_that_order() {
+        let cfg = AdmissionConfig { limit: 2, queue: 1, ..AdmissionConfig::default() };
+        let (c, _) = controller(cfg, 8);
+        assert_eq!(c.try_admit(), Admission::Admit { window: 8 });
+        assert_eq!(c.try_admit(), Admission::Admit { window: 8 });
+        let Admission::Queued { ticket } = c.try_admit() else { panic!("third hello queues") };
+        let Admission::Busy { reason, .. } = c.try_admit() else { panic!("fourth hello sheds") };
+        assert_eq!(reason, BusyReason::Shed);
+        // queue is FIFO ahead of fresh slots: a released slot goes to
+        // the ticket, not to a newcomer
+        c.release();
+        assert!(matches!(c.try_admit(), Admission::Queued { .. }), "queue precedes fresh admits");
+        assert_eq!(c.poll_ticket(ticket), TicketPoll::Admit { window: 8 });
+        let s = c.stats();
+        assert_eq!(s.sessions_shed, 1);
+        assert_eq!(s.sessions_queued, 2);
+        assert_eq!(s.in_flight, 3);
+    }
+
+    #[test]
+    fn queued_ticket_expires_by_deadline_and_counts_as_shed() {
+        let cfg = AdmissionConfig {
+            limit: 1,
+            queue: 4,
+            queue_deadline: Duration::from_millis(100),
+            ..AdmissionConfig::default()
+        };
+        let (c, clock) = controller(cfg, 8);
+        assert!(matches!(c.try_admit(), Admission::Admit { .. }));
+        let Admission::Queued { ticket } = c.try_admit() else { panic!("expected queue") };
+        assert_eq!(c.poll_ticket(ticket), TicketPoll::Pending);
+        clock.advance(Duration::from_millis(99));
+        assert_eq!(c.poll_ticket(ticket), TicketPoll::Pending, "inside the deadline");
+        clock.advance(Duration::from_millis(2));
+        assert!(matches!(c.poll_ticket(ticket), TicketPoll::Expired { .. }));
+        let s = c.stats();
+        assert_eq!(s.sessions_shed, 1);
+        assert_eq!(s.sessions_queued, 1);
+        assert!(s.queue_wait_seconds > 0.1 && s.queue_wait_seconds < 0.2);
+        // the expired ticket left the queue: a freed slot admits fresh
+        c.release();
+        assert!(matches!(c.try_admit(), Admission::Admit { .. }));
+    }
+
+    #[test]
+    fn aimd_decreases_under_stall_pressure_and_recovers_additively() {
+        let cfg = AdmissionConfig {
+            limit: 16,
+            queue: 0,
+            retune_interval: Duration::from_millis(100),
+            ..AdmissionConfig::default()
+        };
+        let (c, clock) = controller(cfg, 8);
+        // congested interval: 50% of the time stalled on decode
+        clock.advance(Duration::from_millis(150));
+        c.retune(LoadSample { decode_stall_seconds: 0.075, ..LoadSample::default() });
+        let s = c.stats();
+        assert_eq!(s.window, 4, "congestion halves the advertised window");
+        assert_eq!(s.limit, 11, "16 × 0.7 truncates to 11");
+        assert_eq!(s.window_retunes, 1);
+        // second congested interval, cumulative sample keeps growing
+        clock.advance(Duration::from_millis(150));
+        c.retune(LoadSample { decode_stall_seconds: 0.15, ..LoadSample::default() });
+        assert_eq!(c.stats().window, 2);
+        // healthy idle intervals recover the window at double speed
+        for i in 1..=3u32 {
+            clock.advance(Duration::from_millis(150));
+            c.retune(LoadSample {
+                decode_stall_seconds: 0.15,
+                poll_stall_seconds: 0.14 * i as f64,
+                ..LoadSample::default()
+            });
+        }
+        assert_eq!(c.stats().window, 8, "2 → 4 → 6 → 8, capped at the base window");
+        // determinism: replaying the identical sequence gives the
+        // identical trajectory
+        let (c2, clock2) = controller(cfg, 8);
+        clock2.advance(Duration::from_millis(150));
+        c2.retune(LoadSample { decode_stall_seconds: 0.075, ..LoadSample::default() });
+        clock2.advance(Duration::from_millis(150));
+        c2.retune(LoadSample { decode_stall_seconds: 0.15, ..LoadSample::default() });
+        for i in 1..=3u32 {
+            clock2.advance(Duration::from_millis(150));
+            c2.retune(LoadSample {
+                decode_stall_seconds: 0.15,
+                poll_stall_seconds: 0.14 * i as f64,
+                ..LoadSample::default()
+            });
+        }
+        assert_eq!(c.stats(), c2.stats(), "identical call sequence, identical state");
+    }
+
+    #[test]
+    fn latency_inflation_alone_triggers_decrease() {
+        let cfg = AdmissionConfig {
+            limit: 8,
+            queue: 0,
+            retune_interval: Duration::from_millis(100),
+            ..AdmissionConfig::default()
+        };
+        let (c, clock) = controller(cfg, 8);
+        // healthy interval establishes the baseline: 1ms per batch
+        clock.advance(Duration::from_millis(150));
+        c.retune(LoadSample { batches: 100, service_seconds: 0.1, ..LoadSample::default() });
+        assert_eq!(c.stats().window, 8, "healthy interval cannot shrink the window");
+        // same stall counters, but batches now take 5ms: congestion the
+        // stall clocks cannot see
+        clock.advance(Duration::from_millis(150));
+        c.retune(LoadSample { batches: 200, service_seconds: 0.6, ..LoadSample::default() });
+        assert_eq!(c.stats().window, 4, "latency inflation halves the window");
+    }
+
+    #[test]
+    fn retune_is_rate_limited_and_resumes_force_past_the_limit() {
+        let cfg = AdmissionConfig {
+            limit: 1,
+            queue: 0,
+            retune_interval: Duration::from_millis(100),
+            ..AdmissionConfig::default()
+        };
+        let (c, clock) = controller(cfg, 4);
+        // two calls inside one interval: the second is a no-op
+        clock.advance(Duration::from_millis(150));
+        c.retune(LoadSample { decode_stall_seconds: 0.1, ..LoadSample::default() });
+        let w = c.stats().window;
+        c.retune(LoadSample { decode_stall_seconds: 10.0, ..LoadSample::default() });
+        assert_eq!(c.stats().window, w, "second retune inside the interval is a no-op");
+        // a resume is never refused, even past the limit
+        assert!(matches!(c.try_admit(), Admission::Admit { .. }));
+        c.force_admit();
+        assert_eq!(c.stats().in_flight, 2, "resume overshoots the limit by force");
+        assert!(matches!(c.try_admit(), Admission::Busy { .. }), "fresh hellos shed meanwhile");
+    }
+}

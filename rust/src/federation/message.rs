@@ -42,7 +42,22 @@ use std::sync::Arc;
 /// [`ToGuest::ResumeAccept`] so the stream continues bit-identically.
 /// v3/v2 hellos are negotiated down exactly as before and never see
 /// the resume pair on the wire.
-pub const SERVE_PROTOCOL_VERSION: u32 = 4;
+///
+/// v5: admission control — a host past its concurrency limit may answer
+/// a [`ToHost::SessionHello`] with [`ToGuest::Busy`] (load shed: "come
+/// back in `retry_after_ms`") instead of accepting or silently closing,
+/// and the [`ToGuest::SessionAccept`] `max_inflight` it eventually
+/// sends is a *live* value retuned by the host's AIMD limiter, not the
+/// static configuration knob. v4-and-older peers never see a `Busy`
+/// frame — a shed pre-v5 hello is answered by a close, exactly the
+/// failure those peers already handle.
+pub const SERVE_PROTOCOL_VERSION: u32 = 5;
+
+/// The v4 serve protocol, still accepted on the wire: a
+/// [`ToHost::SessionHello`] carrying it is served with v4 semantics
+/// (resumable sessions, no admission `Busy` frames — a shed v4 hello is
+/// closed, which its reconnect machinery already rides out).
+pub const SERVE_PROTOCOL_V4: u32 = 4;
 
 /// The v3 serve protocol, still accepted on the wire: a
 /// [`ToHost::SessionHello`] carrying it is served with v3 semantics
@@ -74,6 +89,44 @@ pub enum BasisEvict {
     /// crosses the wire and suppression keeps working for working sets
     /// larger than `delta_window`.
     Lru = 1,
+}
+
+/// Why a [`ToGuest::Busy`] frame was sent instead of a
+/// [`ToGuest::SessionAccept`]/[`ToGuest::ResumeAccept`]. The
+/// discriminant is the wire tag byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum BusyReason {
+    /// The host is past its admission limit and its admission queue is
+    /// full (or disabled): the hello was shed outright.
+    Shed = 0,
+    /// The hello was queued behind the admission limit but no slot
+    /// freed before the queue deadline ran out.
+    QueueExpired = 1,
+    /// The host is winding down (stop requested or session budget met)
+    /// and is not admitting new sessions.
+    Draining = 2,
+}
+
+impl BusyReason {
+    /// Wire tag mapping.
+    pub fn from_tag(tag: u8) -> Option<BusyReason> {
+        match tag {
+            0 => Some(BusyReason::Shed),
+            1 => Some(BusyReason::QueueExpired),
+            2 => Some(BusyReason::Draining),
+            _ => None,
+        }
+    }
+
+    /// Human-readable reason for logs and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            BusyReason::Shed => "shed",
+            BusyReason::QueueExpired => "queue-expired",
+            BusyReason::Draining => "draining",
+        }
+    }
 }
 
 impl BasisEvict {
@@ -243,10 +296,14 @@ pub enum ToGuestKind {
     RouteAnswersDelta = 6,
     /// Acceptance of a [`ToHostKind::SessionResume`] re-attach.
     ResumeAccept = 7,
+    /// Load shed: the host refused a [`ToHostKind::SessionHello`] /
+    /// [`ToHostKind::SessionResume`] because it is past its admission
+    /// limit; retry after the advertised delay (v5+).
+    Busy = 8,
 }
 
 /// Number of host→guest message kinds.
-pub const TO_GUEST_KINDS: usize = 8;
+pub const TO_GUEST_KINDS: usize = 9;
 
 impl ToGuestKind {
     /// Every host→guest kind, in tag order.
@@ -259,6 +316,7 @@ impl ToGuestKind {
         ToGuestKind::SessionAccept,
         ToGuestKind::RouteAnswersDelta,
         ToGuestKind::ResumeAccept,
+        ToGuestKind::Busy,
     ];
 
     /// Wire tag byte / per-kind counter index.
@@ -277,6 +335,7 @@ impl ToGuestKind {
             ToGuestKind::SessionAccept => "SessionAccept",
             ToGuestKind::RouteAnswersDelta => "RouteAnswersDelta",
             ToGuestKind::ResumeAccept => "ResumeAccept",
+            ToGuestKind::Busy => "Busy",
         }
     }
 }
@@ -348,10 +407,11 @@ pub enum ToHost {
         /// Client-chosen nonzero session id, echoed on every frame of
         /// the session so a multiplexing host can attribute traffic.
         session_id: u32,
-        /// Must equal [`SERVE_PROTOCOL_VERSION`], [`SERVE_PROTOCOL_V3`]
-        /// (served with v3 semantics: no resumption) or
-        /// [`SERVE_PROTOCOL_V2`] (served with v2 semantics); the codec
-        /// rejects anything else at decode time.
+        /// Must equal [`SERVE_PROTOCOL_VERSION`], [`SERVE_PROTOCOL_V4`]
+        /// (served with v4 semantics: resumption but no admission
+        /// `Busy` frames), [`SERVE_PROTOCOL_V3`] (no resumption) or
+        /// [`SERVE_PROTOCOL_V2`] (v2 semantics); the codec rejects
+        /// anything else at decode time.
         protocol: u32,
     },
     /// End one serving session cleanly. The server keeps running and
@@ -531,6 +591,24 @@ pub enum ToGuest {
         /// replayed bits are trusted.
         basis_epoch: u32,
     },
+    /// Load shed (v5+): the host is past its admission limit and will
+    /// not open (or resume) this session right now. Sent *instead of*
+    /// [`ToGuest::SessionAccept`]/[`ToGuest::ResumeAccept`]; the
+    /// connection is closed right after it. The session was never
+    /// opened — nothing was consumed from the host's session budget and
+    /// no state was created — so the guest retries the identical hello
+    /// after backing off, with jitter, for at most its configured
+    /// retry budget. Only v5 hellos ever see this frame: a shed
+    /// pre-v5 hello is answered by a plain close.
+    Busy {
+        /// Host's advice on how long to back off before re-dialing, in
+        /// milliseconds. A retrying guest treats it as a *floor* and
+        /// adds seeded jitter so a shed cohort does not re-dial in
+        /// lockstep.
+        retry_after_ms: u32,
+        /// Why the hello was refused (shed / queue-expired / draining).
+        reason: BusyReason,
+    },
 }
 
 impl ToGuest {
@@ -545,6 +623,7 @@ impl ToGuest {
             ToGuest::SessionAccept { .. } => ToGuestKind::SessionAccept,
             ToGuest::RouteAnswersDelta { .. } => ToGuestKind::RouteAnswersDelta,
             ToGuest::ResumeAccept { .. } => ToGuestKind::ResumeAccept,
+            ToGuest::Busy { .. } => ToGuestKind::Busy,
         }
     }
 }

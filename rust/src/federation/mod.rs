@@ -30,13 +30,19 @@
 //! host-side multi-session serving engine ([`serve`], with the shared
 //! LRU routing cache): one long-lived host process multiplexes many
 //! concurrent guest sessions opened by a
-//! [`message::ToHost::SessionHello`] handshake.
+//! [`message::ToHost::SessionHello`] handshake. Under overload the host
+//! does not degrade every session at once: a deterministic AIMD
+//! admission controller ([`limit`], serve protocol v5) decides per
+//! hello whether to admit, queue, or shed with a retryable
+//! [`message::ToGuest::Busy`] frame, and self-tunes the pipeline window
+//! each [`message::ToGuest::SessionAccept`] advertises.
 
 pub mod codec;
 pub mod delta;
 pub mod fault;
 pub mod guest;
 pub mod host;
+pub mod limit;
 pub mod message;
 pub mod predict;
 pub mod serve;

@@ -55,6 +55,17 @@
 //! [`StreamReport::reconnects`] / [`StreamReport::chunks_replayed`]
 //! account for what the recovery cost.
 //!
+//! Against a **v5** host running admission control, a `SessionHello`
+//! may be answered by `ToGuest::Busy {retry_after_ms, reason}` instead
+//! of an accept: the host is past its concurrency limit and shed the
+//! hello rather than degrade every admitted session. The guest then
+//! backs off — the host's `retry_after_ms` as the floor, capped
+//! exponential growth, **seeded jitter** so a fleet of guests does not
+//! re-dial in lockstep — re-dials, and presents the identical hello
+//! again, up to [`PredictOptions::admission_retries`] times before
+//! failing loudly. The same jittered schedule paces the v4 reconnect
+//! path above (one backoff helper serves both).
+//!
 //! Privacy directions:
 //!
 //! - the **guest** learns one routing bit per consulted host split —
@@ -78,8 +89,8 @@
 
 use super::delta::DeltaBasis;
 use super::message::{
-    BasisEvict, ToGuest, ToHost, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_V3, SERVE_PROTOCOL_VERSION,
-    SESSIONLESS_ID,
+    BasisEvict, ToGuest, ToHost, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_V3, SERVE_PROTOCOL_V4,
+    SERVE_PROTOCOL_VERSION, SESSIONLESS_ID,
 };
 use super::serve::{serve_session, HostServeState, ServeConfig, SessionOutcome};
 use super::transport::{GuestTransport, HostTransport};
@@ -191,6 +202,12 @@ pub struct PredictOptions {
     /// host cannot park a dead session, so the guest fails loudly
     /// instead of retrying against a server that already reaped it.
     pub reconnect_retries: u32,
+    /// Hello retries against a v5 host that answers
+    /// [`ToGuest::Busy`] (admission shed): the guest sleeps the host's
+    /// `retry_after_ms` floor plus jittered exponential backoff,
+    /// re-dials, and presents the identical hello again, this many
+    /// times, then fails loudly. 0 makes the first `Busy` fatal.
+    pub admission_retries: u32,
     /// Emit one stderr progress line per finished chunk while streaming.
     pub progress: bool,
 }
@@ -205,9 +222,25 @@ impl Default for PredictOptions {
             max_inflight: 4,
             protocol: SERVE_PROTOCOL_VERSION,
             reconnect_retries: 0,
+            admission_retries: 8,
             progress: false,
         }
     }
+}
+
+/// One sleep of the guest's retry schedule, shared by the v4 reconnect
+/// path and the v5 `Busy` retry path: a capped exponential spine (10ms,
+/// 20ms, 40ms … 500ms by `attempt`, never below `floor_ms` — the host's
+/// `retry_after_ms` advice rides in here) with **seeded jitter** drawn
+/// uniformly from the sleep's upper half. Deterministic per RNG seed —
+/// tests replay the exact schedule — while a fleet of guests seeded
+/// differently spreads out instead of re-dialing a restarted or
+/// overloaded host in lockstep (the thundering herd the old fixed
+/// `10ms << n` sleep caused).
+fn backoff_with_jitter(rng: &mut Xoshiro256, attempt: u32, floor_ms: u64) -> std::time::Duration {
+    let base = (10u64 << attempt.min(6)).min(500).max(floor_ms.max(2));
+    let half = base / 2;
+    std::time::Duration::from_millis(half + 1 + rng.next_below(half.max(1) as usize) as u64)
 }
 
 /// One in-flight (tree, sample) walk.
@@ -312,6 +345,7 @@ impl<'a> PredictSession<'a> {
         assert_ne!(session_id, SESSIONLESS_ID, "session id 0 is reserved for the legacy flow");
         assert!(
             opts.protocol == SERVE_PROTOCOL_VERSION
+                || opts.protocol == SERVE_PROTOCOL_V4
                 || opts.protocol == SERVE_PROTOCOL_V3
                 || opts.protocol == SERVE_PROTOCOL_V2,
             "this build speaks serve protocols {SERVE_PROTOCOL_V2}..{SERVE_PROTOCOL_VERSION}, not {}",
@@ -397,7 +431,13 @@ impl<'a> PredictSession<'a> {
     /// and delta decoding; a bare 12-byte accept from a v2 host
     /// negotiates the session down to frozen-basis v2 semantics).
     /// Panics on a rejected handshake — the guest cannot proceed
-    /// against a host that refused it.
+    /// against a host that refused it. A v5 host past its admission
+    /// limit answers [`ToGuest::Busy`] instead: that is not a
+    /// rejection but a *retry instruction* — the guest backs off
+    /// (jittered, floored at the host's `retry_after_ms`), re-dials,
+    /// and presents the identical hello again, up to
+    /// [`PredictOptions::admission_retries`] times before giving up
+    /// loudly.
     pub fn open(&mut self, links: &[Box<dyn GuestTransport>]) {
         for link in links {
             link.send(ToHost::SessionHello {
@@ -407,27 +447,8 @@ impl<'a> PredictSession<'a> {
         }
         self.host_caps.clear();
         for (p, link) in links.iter().enumerate() {
-            let msg = link.recv();
-            let ToGuest::SessionAccept {
-                session_id,
-                max_inflight,
-                delta_window,
-                protocol,
-                basis_evict,
-            } = msg
-            else {
-                panic!("host {p} rejected the session handshake")
-            };
-            assert_eq!(
-                session_id, self.session_id,
-                "host {p} accepted a different session id"
-            );
-            assert!(
-                protocol <= self.opts.protocol,
-                "host {p} answered protocol {protocol} to a v{} hello",
-                self.opts.protocol
-            );
-            self.host_caps.push(HostCaps { max_inflight, delta_window, basis_evict, protocol });
+            let caps = self.open_link(p, link.as_ref());
+            self.host_caps.push(caps);
         }
         // a (re)opened session faces hosts with *fresh* per-session seen
         // sets — the mirrored bases must restart empty too (and under
@@ -443,6 +464,113 @@ impl<'a> PredictSession<'a> {
         // session, and these mirrors must match frame-for-frame
         self.acked = vec![0; self.host_caps.len()];
         self.basis_inserts = vec![0; self.host_caps.len()];
+    }
+
+    /// Complete one host's handshake: wait for the accept, and ride out
+    /// `Busy` sheds with the jittered retry loop. A re-dial that fails,
+    /// or a connection a shedding host already closed, consumes an
+    /// attempt like a `Busy` does — the host may be mid-overload either
+    /// way.
+    fn open_link(&self, p: usize, link: &dyn GuestTransport) -> HostCaps {
+        let retries = self.opts.admission_retries;
+        // deterministic per (seed, session, host): replayable in tests,
+        // de-correlated across a fleet of guests sharing a wall clock
+        let mut rng = Xoshiro256::seed_from_u64(
+            self.opts.seed
+                ^ (self.session_id as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ ((p as u64 + 1) << 48)
+                ^ 0xB055_5EED,
+        );
+        let mut attempt = 0u32;
+        let mut floor_ms = 0u64;
+        loop {
+            let msg = if attempt == 0 {
+                // first answer on the original connection: a queued
+                // hello just blocks here until the host's deferred
+                // accept (or its Busy) arrives
+                match link.try_recv() {
+                    Ok(m) => m,
+                    Err(e) => {
+                        assert!(
+                            retries > 0,
+                            "host {p} closed the connection during the session handshake: {e} \
+                             (admission retries disabled)"
+                        );
+                        attempt += 1;
+                        continue;
+                    }
+                }
+            } else {
+                assert!(
+                    attempt <= retries,
+                    "host {p} still busy after {retries} admission retr(y/ies) on session {} \
+                     — giving up",
+                    self.session_id
+                );
+                std::thread::sleep(backoff_with_jitter(&mut rng, attempt - 1, floor_ms));
+                // a shedding host closed the connection after its Busy:
+                // dial a fresh one and present the identical hello
+                if link.reconnect().is_err() {
+                    attempt += 1;
+                    continue;
+                }
+                if link
+                    .try_send(ToHost::SessionHello {
+                        session_id: self.session_id,
+                        protocol: self.opts.protocol,
+                    })
+                    .is_err()
+                {
+                    attempt += 1;
+                    continue;
+                }
+                match link.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => {
+                        attempt += 1;
+                        continue;
+                    }
+                }
+            };
+            match msg {
+                ToGuest::SessionAccept {
+                    session_id,
+                    max_inflight,
+                    delta_window,
+                    protocol,
+                    basis_evict,
+                } => {
+                    assert_eq!(
+                        session_id, self.session_id,
+                        "host {p} accepted a different session id"
+                    );
+                    assert!(
+                        protocol <= self.opts.protocol,
+                        "host {p} answered protocol {protocol} to a v{} hello",
+                        self.opts.protocol
+                    );
+                    return HostCaps { max_inflight, delta_window, basis_evict, protocol };
+                }
+                ToGuest::Busy { retry_after_ms, reason } => {
+                    assert!(
+                        retries > 0,
+                        "host {p} is busy ({}) and admission retries are disabled",
+                        reason.name()
+                    );
+                    eprintln!(
+                        "[sbp-predict] host {p} busy ({}), retry {attempt}/{retries} in \
+                         ≥{retry_after_ms}ms",
+                        reason.name()
+                    );
+                    floor_ms = retry_after_ms as u64;
+                    attempt += 1;
+                }
+                other => panic!(
+                    "host {p} rejected the session handshake (answered {:?})",
+                    other.kind()
+                ),
+            }
+        }
     }
 
     /// Probe every host of an idle session (`KeepAlive` → `Ack`).
@@ -957,10 +1085,19 @@ impl<'a> PredictSession<'a> {
         );
         let negotiated = self.host_caps.get(p).map_or(0, |c| c.protocol);
         assert!(
-            negotiated >= SERVE_PROTOCOL_VERSION && self.session_id != SESSIONLESS_ID,
+            negotiated >= SERVE_PROTOCOL_V4 && self.session_id != SESSIONLESS_ID,
             "host {p} link failed mid-stream: {err}; the session negotiated serve \
              protocol v{negotiated}, which cannot resume \
-             (v{SERVE_PROTOCOL_VERSION} handshake required) — the stream is lost"
+             (v{SERVE_PROTOCOL_V4} handshake required) — the stream is lost"
+        );
+        // deterministic per (seed, session, host), distinct from the
+        // open_link stream: resuming guests fan out over the restarted
+        // host instead of arriving in lockstep
+        let mut backoff_rng = Xoshiro256::seed_from_u64(
+            self.opts.seed
+                ^ (self.session_id as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ ((p as u64 + 1) << 48)
+                ^ 0x4E5C_0994,
         );
         let mut attempts_left = retries;
         'resume: loop {
@@ -978,9 +1115,9 @@ impl<'a> PredictSession<'a> {
                 let attempt = retries - attempts_left;
                 attempts_left -= 1;
                 if attempt > 0 {
-                    // 10ms, 20ms, 40ms, ... capped at 500ms
-                    let ms = (10u64 << (attempt - 1).min(6)).min(500);
-                    std::thread::sleep(std::time::Duration::from_millis(ms));
+                    // 10ms, 20ms, 40ms, … capped at 500ms — jittered,
+                    // so a fleet of resuming guests spreads out
+                    std::thread::sleep(backoff_with_jitter(&mut backoff_rng, attempt - 1, 0));
                 }
                 if links[p].reconnect().is_err() {
                     continue;

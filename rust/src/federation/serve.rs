@@ -123,9 +123,10 @@
 
 use super::codec;
 use super::delta::DeltaBasis;
+use super::limit::{Admission, AdmissionConfig, AdmissionController, LoadSample, TicketPoll};
 use super::message::{
-    BasisEvict, ToGuest, ToGuestKind, ToHost, ToHostKind, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_V3,
-    SERVE_PROTOCOL_VERSION, SESSIONLESS_ID,
+    BasisEvict, BusyReason, ToGuest, ToGuestKind, ToHost, ToHostKind, SERVE_PROTOCOL_V2,
+    SERVE_PROTOCOL_V3, SERVE_PROTOCOL_V4, SERVE_PROTOCOL_VERSION, SESSIONLESS_ID,
 };
 use super::tcp::{NbConn, RecvPoll};
 use super::transport::{HostTransport, NetCounters, NetSnapshot};
@@ -446,6 +447,14 @@ pub struct ServeConfig {
     /// sessions sharing the routing cache overlap their walks instead
     /// of serializing on the cache lock. `None` in any real deployment.
     pub walk_delay: Option<std::time::Duration>,
+    /// Admission control (serve protocol v5): the AIMD concurrency
+    /// limiter that decides per hello whether to admit, queue, or shed
+    /// with a retryable [`ToGuest::Busy`], and retunes the
+    /// `max_inflight` window each [`ToGuest::SessionAccept`] advertises
+    /// (never above [`ServeConfig::max_inflight`]). The default
+    /// (`limit == 0`) turns admission off entirely — every hello admits
+    /// with the static window, exactly the pre-v5 behavior.
+    pub admission: AdmissionConfig,
 }
 
 impl Default for ServeConfig {
@@ -463,6 +472,7 @@ impl Default for ServeConfig {
             compute_workers: 0,
             compute_shard_min: 1 << 12,
             walk_delay: None,
+            admission: AdmissionConfig::default(),
         }
     }
 }
@@ -541,6 +551,15 @@ pub struct HostServeState {
     compute_jobs: AtomicU64,
     /// Batches whose walk fanned out across the pool (vs inline).
     compute_sharded_batches: AtomicU64,
+    /// The v5 admission controller: per-hello admit / queue / shed and
+    /// the self-tuning `max_inflight` window. Disabled (pass-through)
+    /// unless [`AdmissionConfig::limit`] is set.
+    admission: AdmissionController,
+    /// `PredictRoute` batches answered, for the limiter's mean service
+    /// latency (with [`Self::service_nanos`]).
+    service_batches: AtomicU64,
+    /// Total decode-to-emit service time of those batches.
+    service_nanos: AtomicU64,
 }
 
 impl HostServeState {
@@ -566,6 +585,9 @@ impl HostServeState {
             pool: OnceLock::new(),
             compute_jobs: AtomicU64::new(0),
             compute_sharded_batches: AtomicU64::new(0),
+            admission: AdmissionController::new(cfg.admission, cfg.max_inflight),
+            service_batches: AtomicU64::new(0),
+            service_nanos: AtomicU64::new(0),
         })
     }
 
@@ -663,6 +685,36 @@ impl HostServeState {
     /// (or the pool is oversubscribed by too many hot sessions).
     pub fn compute_queue_stall_seconds(&self) -> f64 {
         self.pool.get().map(|p| p.queue_stall_seconds()).unwrap_or(0.0)
+    }
+
+    /// The admission controller's counters (all zero when admission is
+    /// off): sheds, queued hellos, queue wait, window retunes, and the
+    /// current advertised window.
+    pub fn admission_stats(&self) -> super::limit::AdmissionStats {
+        self.admission.stats()
+    }
+
+    /// Record one answered batch's decode-to-emit service time — the
+    /// limiter's latency-inflation signal.
+    fn note_service(&self, elapsed: Duration) {
+        self.service_batches.fetch_add(1, Ordering::Relaxed);
+        self.service_nanos.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Feed the limiter one cumulative load sample and let it retune
+    /// (internally rate-limited, so both engines call this from their
+    /// loops at whatever cadence is convenient).
+    fn admission_retune(&self) {
+        if !self.admission.enabled() {
+            return;
+        }
+        self.admission.retune(LoadSample {
+            poll_stall_seconds: self.poll_stall_seconds(),
+            decode_stall_seconds: self.decode_stall_seconds(),
+            compute_queue_stall_seconds: self.compute_queue_stall_seconds(),
+            batches: self.service_batches.load(Ordering::Relaxed),
+            service_seconds: self.service_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        });
     }
 
     /// The Stage C pool, built on first use.
@@ -1014,6 +1066,22 @@ struct SessionMachine {
     compute_jobs: u64,
     /// Batches of this session whose walk fanned out (vs inline).
     compute_sharded_batches: u64,
+    /// This session holds an admission slot (released exactly once, at
+    /// session end or park; a resume re-acquires by force).
+    admitted: bool,
+    /// A hello parked in the admission queue, awaiting a slot: the
+    /// handshake is deferred, the driver polls
+    /// [`SessionMachine::poll_admission`] until the ticket resolves.
+    pending_hello: Option<PendingHello>,
+}
+
+/// The deferred half of a queued `SessionHello` (see
+/// [`SessionMachine::poll_admission`]).
+#[derive(Clone, Copy)]
+struct PendingHello {
+    sid: u32,
+    protocol: u32,
+    ticket: u64,
 }
 
 /// The output of [`SessionMachine::route_serial`]: a `PredictRoute`
@@ -1049,6 +1117,8 @@ impl SessionMachine {
             cfg_delta: state.cfg.delta_window.min(u32::MAX as usize),
             compute_jobs: 0,
             compute_sharded_batches: 0,
+            admitted: false,
+            pending_hello: None,
         }
     }
 
@@ -1067,6 +1137,15 @@ impl SessionMachine {
         chunk: u32,
         q: Vec<(u32, u32)>,
     ) -> Result<RouteWalk, ()> {
+        if self.pending_hello.is_some() {
+            // the reactor intercepts PredictRoute before on_frame, so
+            // its queued-hello guard is repeated here: nothing may
+            // arrive until the deferred accept has left
+            eprintln!(
+                "[sbp-serve] PredictRoute while the SessionHello is queued for admission, closing"
+            );
+            return Err(());
+        }
         if session != self.session_id {
             // a hello-less client may still tag its frames with a
             // session id of its choosing (a `PredictSession` that never
@@ -1157,6 +1236,17 @@ impl SessionMachine {
         msg: ToHost,
         send: &mut dyn FnMut(ToGuest),
     ) -> Step {
+        if self.pending_hello.is_some() {
+            // the hello is still queued for admission: the guest must
+            // not send anything until it sees the accept, so any frame
+            // here is a protocol violation
+            eprintln!(
+                "[sbp-serve] {:?} frame while the SessionHello is queued for admission, closing",
+                msg.kind()
+            );
+            self.abandon_admission(state);
+            return Step::Close { clean: false };
+        }
         match msg {
             ToHost::SessionHello { session_id: sid, protocol } => {
                 if self.hello_seen {
@@ -1169,6 +1259,7 @@ impl SessionMachine {
                 // the codec already rejects other versions; keep the
                 // check so in-memory links get the same contract
                 if (protocol != SERVE_PROTOCOL_VERSION
+                    && protocol != SERVE_PROTOCOL_V4
                     && protocol != SERVE_PROTOCOL_V3
                     && protocol != SERVE_PROTOCOL_V2)
                     || sid == SESSIONLESS_ID
@@ -1176,28 +1267,35 @@ impl SessionMachine {
                     eprintln!("[sbp-serve] malformed SessionHello, closing");
                     return Step::Close { clean: false };
                 }
-                self.hello_seen = true;
-                self.session_id = sid;
-                // negotiate down for legacy peers: a v2 session runs a
-                // frozen basis and receives the bare 12-byte accept
-                // (the codec elides the v3 extension when the
-                // negotiated version says so); v3 keeps the full delta
-                // machinery and only lacks resumption
-                self.negotiated = protocol.min(SERVE_PROTOCOL_VERSION);
-                let evict = if self.negotiated >= SERVE_PROTOCOL_V3 {
-                    state.cfg.basis_evict
+                // admission (v5): past the concurrency limit the host
+                // queues or sheds instead of degrading every admitted
+                // session at once
+                let verdict = if state.admission.enabled() && state.stop_requested() {
+                    state.admission.shed_draining()
                 } else {
-                    BasisEvict::Freeze
+                    state.admission.try_admit()
                 };
-                self.basis = DeltaBasis::new(self.cfg_delta, evict);
-                send(ToGuest::SessionAccept {
-                    session_id: sid,
-                    max_inflight: state.cfg.max_inflight,
-                    delta_window: self.cfg_delta as u32,
-                    protocol: self.negotiated,
-                    basis_evict: evict,
-                });
-                Step::Continue
+                match verdict {
+                    Admission::Admit { window } => {
+                        self.complete_hello(state, sid, protocol, window, send);
+                        Step::Continue
+                    }
+                    Admission::Queued { ticket } => {
+                        // no reply yet: the accept (or a Busy) leaves
+                        // when the ticket resolves via poll_admission
+                        self.pending_hello = Some(PendingHello { sid, protocol, ticket });
+                        Step::Continue
+                    }
+                    Admission::Busy { retry_after_ms, reason } => {
+                        // only a v5 guest can decode a Busy frame; a
+                        // shed pre-v5 hello is answered by the close
+                        // alone (its existing failure path)
+                        if protocol >= SERVE_PROTOCOL_VERSION {
+                            send(ToGuest::Busy { retry_after_ms, reason });
+                        }
+                        Step::Close { clean: true }
+                    }
+                }
             }
             ToHost::PredictRoute { session, chunk, queries: q } => {
                 // serial half (id/bounds/range checks + basis pass),
@@ -1206,6 +1304,7 @@ impl SessionMachine {
                 // sharded) walk while its Stage A keeps decoding. The
                 // reactor intercepts PredictRoute before on_frame and
                 // dispatches the walk asynchronously instead.
+                let t0 = Instant::now();
                 let Ok(walk) = self.route_serial(state, session, chunk, q) else {
                     return Step::Close { clean: false };
                 };
@@ -1216,6 +1315,7 @@ impl SessionMachine {
                     self.compute_sharded_batches += 1;
                 }
                 send(Self::route_answer(session, chunk, n, n_known, bits));
+                state.note_service(t0.elapsed());
                 Step::Continue
             }
             ToHost::KeepAlive => {
@@ -1254,6 +1354,96 @@ impl SessionMachine {
                 Step::Close { clean: false }
             }
         }
+    }
+
+    /// Finish an admitted handshake: adopt the id, negotiate the
+    /// version down for legacy peers, build the delta basis, and send
+    /// the accept announcing `window` — the admission controller's
+    /// current (possibly retuned-down) pipeline window, not the static
+    /// config knob.
+    fn complete_hello(
+        &mut self,
+        state: &HostServeState,
+        sid: u32,
+        protocol: u32,
+        window: u32,
+        send: &mut dyn FnMut(ToGuest),
+    ) {
+        self.admitted = true;
+        self.hello_seen = true;
+        self.session_id = sid;
+        // negotiate down for legacy peers: a v2 session runs a
+        // frozen basis and receives the bare 12-byte accept
+        // (the codec elides the v3 extension when the
+        // negotiated version says so); v3 keeps the full delta
+        // machinery and only lacks resumption, v4 only lacks Busy
+        self.negotiated = protocol.min(SERVE_PROTOCOL_VERSION);
+        let evict = if self.negotiated >= SERVE_PROTOCOL_V3 {
+            state.cfg.basis_evict
+        } else {
+            BasisEvict::Freeze
+        };
+        self.basis = DeltaBasis::new(self.cfg_delta, evict);
+        send(ToGuest::SessionAccept {
+            session_id: sid,
+            max_inflight: window,
+            delta_window: self.cfg_delta as u32,
+            protocol: self.negotiated,
+            basis_evict: evict,
+        });
+    }
+
+    /// Is this session's hello still parked in the admission queue?
+    /// While it is, the driver polls [`Self::poll_admission`] instead
+    /// of letting the idle clock run against a guest that is only
+    /// waiting on *us*.
+    fn pending_hello_active(&self) -> bool {
+        self.pending_hello.is_some()
+    }
+
+    /// Poll a queued hello's admission ticket: on a freed slot the
+    /// deferred accept finally leaves, on deadline expiry the session
+    /// is shed exactly as an immediate shed would have been.
+    fn poll_admission(&mut self, state: &HostServeState, send: &mut dyn FnMut(ToGuest)) -> Step {
+        let Some(ph) = self.pending_hello else {
+            return Step::Continue;
+        };
+        match state.admission.poll_ticket(ph.ticket) {
+            TicketPoll::Pending => Step::Continue,
+            TicketPoll::Admit { window } => {
+                self.pending_hello = None;
+                self.complete_hello(state, ph.sid, ph.protocol, window, send);
+                Step::Continue
+            }
+            TicketPoll::Expired { retry_after_ms } => {
+                self.pending_hello = None;
+                if ph.protocol >= SERVE_PROTOCOL_VERSION {
+                    send(ToGuest::Busy { retry_after_ms, reason: BusyReason::QueueExpired });
+                }
+                Step::Close { clean: true }
+            }
+        }
+    }
+
+    /// Give back this session's admission slot (no-op unless held).
+    /// Called at session end *and* at park — a parked session consumes
+    /// no serving capacity, so its slot frees for new hellos during the
+    /// outage; a resume re-acquires by force.
+    fn admission_release(&mut self, state: &HostServeState) {
+        if self.admitted {
+            self.admitted = false;
+            state.admission.release();
+        }
+    }
+
+    /// Session is over: release the slot if admitted, cancel the queue
+    /// ticket if the hello never resolved (connection died while
+    /// queued).
+    fn abandon_admission(&mut self, state: &HostServeState) {
+        if let Some(ph) = self.pending_hello.take() {
+            state.admission.cancel_ticket(ph.ticket);
+        }
+        self.admission_release(state);
     }
 
     /// Assemble the session's [`SessionOutcome`]. Pipeline metrics
@@ -1393,6 +1583,36 @@ pub fn serve_session<T: HostTransport + Send + Sync + 'static>(
     let mut compute_idle = Duration::ZERO;
     let idle_timeout = state.cfg.session_idle_timeout;
     loop {
+        state.admission_retune();
+        if machine.pending_hello_active() {
+            // the hello is parked in the admission queue: poll the
+            // ticket at queue granularity instead of blocking a whole
+            // idle window — the guest is waiting on *us*, so the
+            // dead-peer clock does not run (the queue deadline bounds
+            // this state instead)
+            if let Step::Close { clean } = machine.poll_admission(state, &mut |m| link.send(m)) {
+                clean_close = clean;
+                break;
+            }
+            if machine.pending_hello_active() {
+                match ring_rx.recv_timeout(ADMISSION_POLL_TICK) {
+                    Ok(_) => {
+                        // any frame before the queued hello resolves is
+                        // a protocol violation — on_frame's guard would
+                        // say the same; close without feeding it
+                        eprintln!(
+                            "[sbp-serve] frame while the SessionHello is queued for \
+                             admission, closing"
+                        );
+                        ring_depth.fetch_sub(1, Ordering::SeqCst);
+                        break;
+                    }
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            continue;
+        }
         let idle0 = Instant::now();
         let msg = if idle_timeout.is_zero() {
             match ring_rx.recv() {
@@ -1421,6 +1641,9 @@ pub fn serve_session<T: HostTransport + Send + Sync + 'static>(
             break;
         }
     }
+    // the slot frees (or the ticket cancels) exactly once, however the
+    // session ended
+    machine.abandon_admission(state);
     // end the receive direction so a Stage-A thread still blocked in a
     // transport read exits promptly (answers already sent precede the
     // FIN — write_frame flushes per frame)
@@ -1501,6 +1724,17 @@ pub struct ServeLoopReport {
     /// Transient accept errors (fd exhaustion, aborted handshakes)
     /// survived with backoff instead of winding the service down.
     pub accept_retries: u64,
+    /// Hellos refused with [`ToGuest::Busy`] by the v5 admission
+    /// controller (immediate sheds + queue expiries). Zero when
+    /// admission is off.
+    pub sessions_shed: u64,
+    /// Hellos that waited in the admission queue before resolving.
+    pub sessions_queued: u64,
+    /// Total seconds hellos spent in the admission queue.
+    pub admission_queue_wait_seconds: f64,
+    /// Admission retunes that changed the advertised `max_inflight`
+    /// window.
+    pub window_retunes: u64,
 }
 
 struct LoopAccum {
@@ -1682,6 +1916,7 @@ pub fn serve_predict_loop_on<A: AcceptSource>(
             comm: NetSnapshot::default(),
             dropped: 0,
         });
+    let adm = state.admission_stats();
     Ok(ServeLoopReport {
         sessions: accum.sessions,
         comm: accum.comm,
@@ -1689,6 +1924,10 @@ pub fn serve_predict_loop_on<A: AcceptSource>(
         workers,
         worker_peak_sessions,
         accept_retries,
+        sessions_shed: adm.sessions_shed,
+        sessions_queued: adm.sessions_queued,
+        admission_queue_wait_seconds: adm.queue_wait_seconds,
+        window_retunes: adm.window_retunes,
     })
 }
 
@@ -1794,6 +2033,9 @@ struct PendingCompute {
     /// the keys again at emission time).
     keys: Arc<Vec<(u32, u32)>>,
     shards: Arc<ShardResults>,
+    /// When the batch's frame entered the serial pass — emission closes
+    /// the admission limiter's service-latency clock.
+    started: Instant,
 }
 
 /// Shared result slots of one sharded walk. Jobs fill their slot and
@@ -1828,6 +2070,12 @@ const WRITE_SOFT_LIMIT: usize = 1 << 20;
 /// progress (no frame, no flushed byte, no new connection). Counted in
 /// [`HostServeState::poll_stall_seconds`].
 const POLL_PARK: Duration = Duration::from_micros(200);
+
+/// How often a session whose hello is parked in the admission queue
+/// polls its ticket (both engines): coarse enough to cost nothing,
+/// fine enough that a freed slot admits promptly against the queue
+/// deadline.
+const ADMISSION_POLL_TICK: Duration = Duration::from_millis(1);
 
 /// Consecutive progress-free sweeps before a worker parks: a few hot
 /// spins ride out the sub-microsecond gap between back-to-back frames
@@ -1878,6 +2126,9 @@ fn reactor_worker(
         // before the empty-shard branch, so a fully idle service still
         // expires its parked sessions
         sweep_parked(&state, &accum, wake, max_sessions);
+        // opportunistic AIMD retune (internally rate-limited): any
+        // worker's sweep cadence is more than fine-grained enough
+        state.admission_retune();
         peak = peak.max(sessions.len());
         if sessions.is_empty() {
             if !inbox_open {
@@ -1979,7 +2230,19 @@ fn sweep_session(
     idle_timeout: Duration,
     progress: &mut bool,
 ) -> bool {
-    // 0. emit answers whose pool shards landed since the last sweep —
+    // 0. a hello parked in the admission queue resolves here: each
+    //    sweep polls the ticket, and the deferred accept (or the Busy
+    //    shed) joins the pending queue like any other answer
+    if sess.machine.pending_hello_active() {
+        let NbSession { machine, pending, .. } = sess;
+        let step = machine.poll_admission(state, &mut |m: ToGuest| {
+            pending.push_back(PendingAnswer::Ready(m));
+        });
+        if let Step::Close { clean } = step {
+            sess.closing = Some(clean);
+        }
+    }
+    // 0b. emit answers whose pool shards landed since the last sweep —
     //    front-of-queue order, so a still-running walk holds back
     //    everything behind it
     if drain_pending(state, sess, ctx) {
@@ -2063,8 +2326,9 @@ fn sweep_session(
                         // below the shard threshold) — either way the
                         // answer joins the pending queue, never
                         // skipping ahead
+                        let t0 = Instant::now();
                         match sess.machine.route_serial(state, session, chunk, queries) {
-                            Ok(walk) => dispatch_route(state, sess, walk),
+                            Ok(walk) => dispatch_route(state, sess, walk, t0),
                             Err(()) => sess.closing = Some(false),
                         }
                     }
@@ -2126,8 +2390,11 @@ fn sweep_session(
     //    no batch, no KeepAlive — means the peer is presumed gone. The
     //    write drain is skipped deliberately: there is no one reading.
     //    (With an answer still pending the session is not idle — it
-    //    owes the peer a frame — so reaping waits for the drain.)
+    //    owes the peer a frame — so reaping waits for the drain. A
+    //    hello queued for admission is likewise not idle: the guest is
+    //    waiting on *us*, bounded by the queue deadline instead.)
     if sess.pending.is_empty()
+        && !sess.machine.pending_hello_active()
         && !idle_timeout.is_zero()
         && now.duration_since(sess.last_activity) >= idle_timeout
     {
@@ -2152,7 +2419,12 @@ fn sweep_session(
 /// joins the session's pending queue, which is what preserves frame
 /// order: a fanned-out batch parks a [`PendingAnswer::Compute`] at its
 /// queue position and nothing behind it emits first.
-fn dispatch_route(state: &Arc<HostServeState>, sess: &mut NbSession, walk: RouteWalk) {
+fn dispatch_route(
+    state: &Arc<HostServeState>,
+    sess: &mut NbSession,
+    walk: RouteWalk,
+    started: Instant,
+) {
     let RouteWalk { session, chunk, n, n_known, fresh } = walk;
     let (plan, keys) = state.route_plan(fresh);
     match state.shard_geometry(keys.len()) {
@@ -2196,6 +2468,7 @@ fn dispatch_route(state: &Arc<HostServeState>, sess: &mut NbSession, walk: Route
                 plan,
                 keys,
                 shards,
+                started,
             }));
         }
         None => {
@@ -2204,6 +2477,7 @@ fn dispatch_route(state: &Arc<HostServeState>, sess: &mut NbSession, walk: Route
             sess.pending.push_back(PendingAnswer::Ready(SessionMachine::route_answer(
                 session, chunk, n, n_known, bits,
             )));
+            state.note_service(started.elapsed());
         }
     }
 }
@@ -2265,6 +2539,7 @@ fn drain_pending(state: &Arc<HostServeState>, sess: &mut NbSession, ctx: &mut Wo
                 let bits = state.finish_route(pc.plan, &pc.keys, walked);
                 let m = SessionMachine::route_answer(pc.session, pc.chunk, pc.n, pc.n_known, bits);
                 emit_to_guest(state, sess, ctx, m);
+                state.note_service(pc.started.elapsed());
                 emitted = true;
             }
         }
@@ -2289,7 +2564,7 @@ fn emit_to_guest(state: &HostServeState, sess: &mut NbSession, ctx: &mut WorkerC
     // any answer emits, so evaluating it here matches the inline path
     let buffer_replay = !state.cfg.resume_window.is_zero()
         && sess.machine.hello_seen
-        && sess.machine.negotiated >= SERVE_PROTOCOL_VERSION;
+        && sess.machine.negotiated >= SERVE_PROTOCOL_V4;
     let basis_on = sess.machine.basis.capacity() > 0;
     // track the resume cursor and the basis epoch from the emitted
     // frames themselves — the exact arithmetic the guest's mirror runs,
@@ -2331,8 +2606,10 @@ fn resume_session(
     last_acked_chunk: u32,
     wire_len: u64,
 ) -> bool {
-    // only the very first frame of a fresh connection may resume
+    // only the very first frame of a fresh connection may resume (a
+    // hello still queued for admission counts as mid-session too)
     if sess.machine.hello_seen
+        || sess.machine.pending_hello_active()
         || sess.machine.batches > 0
         || sess.machine.keep_alives > 0
         || sess.resumes > 0
@@ -2378,6 +2655,13 @@ fn resume_session(
     sess.replay = parked.replay;
     sess.resumes = parked.resumes + 1;
     sess.t0 = parked.t0;
+    // a valid resume inside the window is **never shed**: the session
+    // already paid admission at its hello (its slot was released at
+    // park), so it re-acquires by force even past the live limit
+    if state.admission.enabled() {
+        state.admission.force_admit();
+        sess.machine.admitted = true;
+    }
     sess.counters.record_to_host(ToHostKind::SessionResume, wire_len);
     // drop what the guest confirmed; everything left replays, in order
     while sess.replay.len() as u64 > sess.answers_sent - last_acked_chunk as u64 {
@@ -2416,7 +2700,7 @@ fn resume_session(
 /// the spot — once, like every session.
 fn try_park(
     state: &HostServeState,
-    sess: NbSession,
+    mut sess: NbSession,
     accum: &Arc<Mutex<LoopAccum>>,
     wake: SocketAddr,
     max_sessions: usize,
@@ -2426,13 +2710,16 @@ fn try_park(
         && !sess.idle_reaped
         && sess.closing == Some(false)
         && sess.machine.hello_seen
-        && sess.machine.negotiated >= SERVE_PROTOCOL_VERSION
+        && sess.machine.negotiated >= SERVE_PROTOCOL_V4
         && !state.stop_requested();
     if !eligible {
         return Some(sess);
     }
     let sid = sess.machine.session_id;
     sess.conn.shutdown();
+    // a parked session consumes no serving capacity: its admission slot
+    // frees for the outage and a resume re-acquires by force
+    sess.machine.admission_release(state);
     eprintln!("[sbp-serve] session {sid} disconnected uncleanly, parking for resume");
     let parked = ParkedSession {
         machine: sess.machine,
@@ -2536,9 +2823,12 @@ fn finalize_session(
     wake: SocketAddr,
     max_sessions: usize,
 ) {
-    let Some(sess) = try_park(state, sess, accum, wake, max_sessions) else {
+    let Some(mut sess) = try_park(state, sess, accum, wake, max_sessions) else {
         return;
     };
+    // the slot frees (or a still-queued ticket cancels) exactly once,
+    // however the session ended
+    sess.machine.abandon_admission(state);
     sess.conn.shutdown();
     // ring/stall metrics are the threaded pipeline's; the reactor has
     // no per-session ring, so they are structurally zero here

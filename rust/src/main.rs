@@ -135,6 +135,10 @@ fn main() {
                  \x20                        while streaming and resume the session\n\
                  \x20                        (serve protocol v4; needs the host's\n\
                  \x20                        --resume-window; default 0 = fail fast)\n\
+                 \x20 --admission-retries <n> retry a Busy (load-shed) handshake up to\n\
+                 \x20                        n times with jittered backoff (serve\n\
+                 \x20                        protocol v5; default 8; 0 = fail on the\n\
+                 \x20                        first Busy)\n\
                  \x20 --progress             per-chunk progress lines on stderr\n\
                  \x20 --dummy-queries <n>    decoy queries shuffled into each routing batch\n\
                  \x20 --decoy-seed <n>       pin the decoy stream (default: OS entropy)\n\
@@ -168,6 +172,12 @@ fn main() {
                  \x20 --resume-window <secs> park a v4 session whose connection died\n\
                  \x20                        and let the guest reconnect and resume it\n\
                  \x20                        within this window (default 0 = off)\n\
+                 \x20 --admission-limit <n>  admit at most n concurrent sessions; the\n\
+                 \x20                        AIMD controller tunes the live limit and\n\
+                 \x20                        the advertised pipeline window under it\n\
+                 \x20                        (serve protocol v5; default 0 = off)\n\
+                 \x20 --admission-queue <n>  park up to n over-limit hellos in a FIFO\n\
+                 \x20                        before shedding with Busy (default 0)\n\
                  \x20 --bind <ip> --port <p> listen address (default 127.0.0.1:7979)\n\
                  \n\
                  datagen options:\n\
@@ -531,6 +541,7 @@ fn predict_opts(
         batch_rows,
         max_inflight,
         reconnect_retries: args.get_parse("reconnect-retries", 0u32),
+        admission_retries: args.get_parse("admission-retries", 8u32),
         progress: args.flag("progress"),
         ..sbp::federation::predict::PredictOptions::default()
     };
@@ -846,6 +857,8 @@ fn cmd_serve_predict(args: &Args) {
         args.get_parse("compute-shard-min", sbp::federation::serve::ServeConfig::default().compute_shard_min);
     let idle_secs: u64 = args.get_parse("session-idle-timeout", 60u64);
     let resume_secs: u64 = args.get_parse("resume-window", 0u64);
+    let admission_limit: usize = args.get_parse("admission-limit", 0usize);
+    let admission_queue: usize = args.get_parse("admission-queue", 0usize);
     let evict_arg = args.get_or("basis-evict", "lru");
     let Some(basis_evict) = sbp::federation::message::BasisEvict::parse(&evict_arg) else {
         eprintln!("--basis-evict takes 'lru' or 'freeze', got '{evict_arg}'");
@@ -912,6 +925,11 @@ fn cmd_serve_predict(args: &Args) {
         compute_shard_min,
         session_idle_timeout: std::time::Duration::from_secs(idle_secs),
         resume_window: std::time::Duration::from_secs(resume_secs),
+        admission: sbp::federation::limit::AdmissionConfig {
+            limit: admission_limit,
+            queue: admission_queue,
+            ..sbp::federation::limit::AdmissionConfig::default()
+        },
         ..sbp::federation::serve::ServeConfig::default()
     };
     match sbp::coordinator::serve_predict_tcp(&listener, art.model, slice, cfg, max_sessions) {

@@ -1,0 +1,426 @@
+//! Admission-control tests (serve protocol v5): a saturated host
+//! admits, queues, and sheds hellos deterministically — shed guests get
+//! a retryable `Busy` frame and complete bit-identically to centralized
+//! scoring once they re-dial; shed hellos never burn the
+//! `--max-sessions` budget; parked v4 sessions are never shed inside
+//! the resume window; and the shed/queued counters reconcile exactly
+//! with the offered load.
+
+mod common;
+
+use common::{gen_world, World};
+use sbp::coordinator::predict_centralized;
+use sbp::crypto::cipher::CipherSuite;
+use sbp::federation::limit::AdmissionConfig;
+use sbp::federation::message::{
+    BusyReason, ToGuest, ToHost, SERVE_PROTOCOL_V4, SERVE_PROTOCOL_VERSION,
+};
+use sbp::federation::predict::PredictOptions;
+use sbp::federation::serve::{
+    serve_predict_loop_on, spawn_serve_session, HostServeState, ServeConfig, ServeLoopReport,
+};
+use sbp::federation::tcp::TcpGuestTransport;
+use sbp::federation::transport::{link_pair_bounded, GuestTransport};
+use sbp::tree::predict::HostModel;
+use sbp::util::rng::Xoshiro256;
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Poll `cond` (1 ms granularity) until it holds or 10 s pass.
+fn wait_until(what: &str, cond: impl Fn() -> bool) {
+    for _ in 0..10_000 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+/// A one-split toy host for the in-memory machine-level tests: split 0
+/// is `feature 0 > 0.0`, and the single row's value 1.0 routes right.
+fn toy_state(admission: AdmissionConfig) -> Arc<HostServeState> {
+    let model = HostModel { party: 0, splits: vec![(0, 0, 0.0)] };
+    let slice = sbp::data::dataset::PartySlice { cols: vec![0], x: vec![1.0], n: 1 };
+    HostServeState::new(
+        model,
+        slice,
+        ServeConfig { cache_capacity: 0, admission, ..ServeConfig::default() },
+    )
+}
+
+/// One admitted slot, one queue seat, three concurrent hellos: the
+/// first admits, the second queues (and admits the moment the first
+/// closes), the third sheds with scaled retry advice — and the counters
+/// reconcile exactly: 3 hellos offered = 2 served + 1 shed.
+#[test]
+fn hellos_admit_queue_and_shed_in_order_and_reconcile_exactly() {
+    let state = toy_state(AdmissionConfig {
+        limit: 1,
+        queue: 1,
+        queue_deadline: Duration::from_secs(30),
+        ..AdmissionConfig::default()
+    });
+
+    let (ga, ha) = link_pair_bounded(8, 8);
+    let sess_a = spawn_serve_session(state.clone(), ha);
+    ga.send(ToHost::SessionHello { session_id: 1, protocol: SERVE_PROTOCOL_VERSION });
+    let ToGuest::SessionAccept { session_id: 1, max_inflight, .. } = ga.recv() else {
+        panic!("first hello must be admitted")
+    };
+    assert!(
+        max_inflight >= 1 && max_inflight <= ServeConfig::default().max_inflight,
+        "the advertised window stays in [1, base] (got {max_inflight})"
+    );
+
+    // second hello: the slot is held, the queue seat is free — queued,
+    // no answer yet
+    let (gb, hb) = link_pair_bounded(8, 8);
+    let sess_b = spawn_serve_session(state.clone(), hb);
+    gb.send(ToHost::SessionHello { session_id: 2, protocol: SERVE_PROTOCOL_VERSION });
+    wait_until("the second hello to queue", || state.admission_stats().sessions_queued == 1);
+
+    // third hello: slot held, queue full — shed immediately, with the
+    // retry advice scaled by the backlog (base 50 ms × (1 + 1/1))
+    let (gc, hc) = link_pair_bounded(8, 8);
+    let sess_c = spawn_serve_session(state.clone(), hc);
+    gc.send(ToHost::SessionHello { session_id: 3, protocol: SERVE_PROTOCOL_VERSION });
+    let ToGuest::Busy { retry_after_ms, reason } = gc.recv() else {
+        panic!("third hello must be shed")
+    };
+    assert_eq!(reason, BusyReason::Shed);
+    assert_eq!(retry_after_ms, 100, "retry advice scales with queue depth");
+    let shed = sess_c.join().expect("shed session thread");
+    assert!(shed.clean_close, "a shed is an orderly refusal, not a protocol violation");
+    assert!(shed.is_control_only(), "a shed hello served nothing");
+
+    // the first session does real work and closes: its slot frees and
+    // the queued hello's deferred accept finally leaves
+    ga.send(ToHost::PredictRoute { session: 1, chunk: 1, queries: vec![(0, 0)] });
+    let ToGuest::RouteAnswers { n: 1, .. } = ga.recv() else { panic!("expected answer") };
+    ga.send(ToHost::SessionClose { session_id: 1 });
+    assert!(sess_a.join().expect("session thread").clean_close);
+
+    let ToGuest::SessionAccept { session_id: 2, .. } = gb.recv() else {
+        panic!("the queued hello must admit once the slot frees")
+    };
+    gb.send(ToHost::PredictRoute { session: 2, chunk: 1, queries: vec![(0, 0)] });
+    let ToGuest::RouteAnswers { n: 1, .. } = gb.recv() else { panic!("expected answer") };
+    gb.send(ToHost::SessionClose { session_id: 2 });
+    assert!(sess_b.join().expect("session thread").clean_close);
+
+    // exact reconciliation: offered = served + shed, nothing in flight
+    let adm = state.admission_stats();
+    assert_eq!(adm.sessions_shed, 1);
+    assert_eq!(adm.sessions_queued, 1);
+    assert!(adm.queue_wait_seconds > 0.0, "the queued hello waited a measurable time");
+    assert_eq!(adm.in_flight, 0, "every admitted slot was released");
+    assert_eq!(state.sessions_served(), 2, "3 hellos offered = 2 served + 1 shed");
+}
+
+/// A hello that outwaits the queue deadline is shed with
+/// `QueueExpired` — counted like any other shed, its wait recorded.
+#[test]
+fn queued_hellos_expire_to_a_retryable_busy() {
+    let state = toy_state(AdmissionConfig {
+        limit: 1,
+        queue: 1,
+        queue_deadline: Duration::from_millis(50),
+        ..AdmissionConfig::default()
+    });
+
+    let (ga, ha) = link_pair_bounded(8, 8);
+    let sess_a = spawn_serve_session(state.clone(), ha);
+    ga.send(ToHost::SessionHello { session_id: 1, protocol: SERVE_PROTOCOL_VERSION });
+    let ToGuest::SessionAccept { .. } = ga.recv() else { panic!("expected accept") };
+
+    // the queued hello: the slot never frees, so the deadline fires
+    let (gb, hb) = link_pair_bounded(8, 8);
+    let sess_b = spawn_serve_session(state.clone(), hb);
+    gb.send(ToHost::SessionHello { session_id: 2, protocol: SERVE_PROTOCOL_VERSION });
+    let ToGuest::Busy { retry_after_ms, reason } = gb.recv() else {
+        panic!("the expired hello must be shed")
+    };
+    assert_eq!(reason, BusyReason::QueueExpired);
+    assert_eq!(retry_after_ms, 50, "advice resets once the queue drained");
+    let expired = sess_b.join().expect("expired session thread");
+    assert!(expired.clean_close);
+    assert!(expired.is_control_only());
+
+    let adm = state.admission_stats();
+    assert_eq!(adm.sessions_shed, 1, "an expiry is a shed");
+    assert_eq!(adm.sessions_queued, 1, "…that first queued");
+    assert!(adm.queue_wait_seconds >= 0.05, "the full deadline was waited out");
+
+    ga.send(ToHost::PredictRoute { session: 1, chunk: 1, queries: vec![(0, 0)] });
+    let ToGuest::RouteAnswers { .. } = ga.recv() else { panic!("expected answer") };
+    ga.send(ToHost::SessionClose { session_id: 1 });
+    assert!(sess_a.join().expect("session thread").clean_close);
+    assert_eq!(state.sessions_served(), 1);
+}
+
+/// A raw v5 hello against a TCP reactor host; returns the transport
+/// once admitted.
+fn raw_hello(addr: &str, session_id: u32) -> TcpGuestTransport {
+    let t = TcpGuestTransport::connect(addr, CipherSuite::new_plain(64)).expect("connect");
+    t.send(ToHost::SessionHello { session_id, protocol: SERVE_PROTOCOL_VERSION });
+    match t.recv() {
+        ToGuest::SessionAccept { .. } => t,
+        other => panic!("squatter hello rejected: {:?}", other.kind()),
+    }
+}
+
+/// Bring up a reactor host with its state handle exposed, so tests can
+/// watch the admission counters live.
+fn start_reactor(
+    world: &World,
+    cfg: ServeConfig,
+    max_sessions: usize,
+) -> (String, Arc<HostServeState>, std::thread::JoinHandle<ServeLoopReport>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    let state = HostServeState::new(world.host_ms[0].clone(), world.vs.hosts[0].clone(), cfg);
+    let loop_state = state.clone();
+    let handle = std::thread::spawn(move || {
+        serve_predict_loop_on(&listener, &loop_state, max_sessions).expect("serve loop")
+    });
+    (addr, state, handle)
+}
+
+/// Satellite regression: shed hellos must not consume the lifetime
+/// `--max-sessions` budget. A budget-1 host sheds three hellos while a
+/// squatter holds the only slot, then still serves the one real
+/// session in full.
+#[test]
+fn shed_hellos_do_not_consume_the_session_budget() {
+    let mut rng = Xoshiro256::seed_from_u64(0xAD317);
+    let world = gen_world(&mut rng, 1);
+    let oracle = predict_centralized(&world.guest_m, &world.host_ms, &world.vs);
+    let (addr, state, server) = start_reactor(
+        &world,
+        ServeConfig {
+            workers: 2,
+            admission: AdmissionConfig { limit: 1, queue: 0, ..AdmissionConfig::default() },
+            ..ServeConfig::default()
+        },
+        1, // the budget under test
+    );
+
+    let squatter = raw_hello(&addr, 9001);
+    for i in 0..3u32 {
+        let t = TcpGuestTransport::connect(&addr, CipherSuite::new_plain(64)).expect("connect");
+        t.send(ToHost::SessionHello { session_id: 7000 + i, protocol: SERVE_PROTOCOL_VERSION });
+        let ToGuest::Busy { retry_after_ms, reason } = t.recv() else {
+            panic!("hello {i} must be shed while the squatter holds the slot")
+        };
+        assert_eq!(reason, BusyReason::Shed);
+        assert_eq!(retry_after_ms, 50, "no backlog (queue off): base retry advice");
+    }
+    // release the slot and wait for the host to process it, so the real
+    // guest's first hello admits (keeping the shed count exact)
+    squatter.send(ToHost::SessionClose { session_id: 9001 });
+    wait_until("the squatter's slot to free", || state.admission_stats().in_flight == 0);
+
+    let reports = sbp::coordinator::predict_sessions_tcp(
+        &world.guest_m,
+        &world.vs.guest,
+        std::slice::from_ref(&addr),
+        1,
+        1,
+        PredictOptions { seed: 7, ..PredictOptions::default() },
+    )
+    .expect("the real session");
+    assert_eq!(reports[0].preds, oracle);
+
+    // budget 1 met by the one *served* session — had any of the three
+    // sheds (or the control-only squatter) burned it, the real session
+    // would have been refused or the loop would have exited early
+    let report = server.join().expect("server thread");
+    assert_eq!(state.sessions_served(), 1);
+    assert_eq!(report.sessions.len(), 1, "only the served session is reported");
+    assert_eq!(report.sessions_shed, 3, "exactly the three probes");
+    assert_eq!(report.sessions_queued, 0);
+}
+
+/// The tentpole overload soak: 4× the admission limit in concurrent
+/// guests against one reactor host whose two slots are held by
+/// squatters, so every first hello queues or sheds. Every guest must
+/// complete bit-identically to centralized via Busy-retry, and the
+/// counters must reconcile with the offered load.
+fn overload_round(seed: u64, limit: usize, queue: usize, guests: usize) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let world = gen_world(&mut rng, 1);
+    let oracle = predict_centralized(&world.guest_m, &world.host_ms, &world.vs);
+    let (addr, state, server) = start_reactor(
+        &world,
+        ServeConfig {
+            workers: 2,
+            admission: AdmissionConfig { limit, queue, ..AdmissionConfig::default() },
+            ..ServeConfig::default()
+        },
+        guests,
+    );
+
+    // squatters saturate every admitted slot before the load arrives
+    let squatters: Vec<TcpGuestTransport> =
+        (0..limit).map(|i| raw_hello(&addr, 9000 + i as u32)).collect();
+
+    // the releaser: once the offered load has demonstrably overflowed
+    // (≥ guests − queue − limit hellos shed), free the slots so the
+    // retrying guests can drain through
+    let min_shed = (guests.saturating_sub(queue + limit)).max(1) as u64;
+    let releaser_state = state.clone();
+    let releaser = std::thread::spawn(move || {
+        wait_until("the overload to shed", || {
+            releaser_state.admission_stats().sessions_shed >= min_shed
+        });
+        for (i, s) in squatters.iter().enumerate() {
+            s.send(ToHost::SessionClose { session_id: 9000 + i as u32 });
+        }
+        drop(squatters);
+        min_shed
+    });
+
+    let reports = sbp::coordinator::predict_sessions_tcp(
+        &world.guest_m,
+        &world.vs.guest,
+        std::slice::from_ref(&addr),
+        guests,
+        guests, // all concurrent: the full 4× burst hits at once
+        PredictOptions { seed, admission_retries: 200, ..PredictOptions::default() },
+    )
+    .expect("every overloaded guest must complete via Busy-retry");
+    let min_shed = releaser.join().expect("releaser thread");
+    let report = server.join().expect("server thread");
+
+    assert_eq!(reports.len(), guests);
+    for r in &reports {
+        assert_eq!(
+            r.preds, oracle,
+            "session {} must be bit-identical to centralized despite the shed/retry path",
+            r.session_id
+        );
+    }
+    // reconciliation: every guest (and no squatter) was served exactly
+    // once — offered hellos = served + queued-then-admitted + shed,
+    // with nothing left in flight or in the queue
+    assert_eq!(state.sessions_served(), guests as u64);
+    assert_eq!(report.sessions.len(), guests, "control-only squatters are not reported");
+    for s in &report.sessions {
+        assert!(s.outcome.clean_close, "session {} unclean", s.outcome.session_id);
+    }
+    assert!(
+        report.sessions_shed >= min_shed,
+        "the 4× burst must shed at least {min_shed} hellos (got {})",
+        report.sessions_shed
+    );
+    if queue > 0 {
+        assert!(
+            report.sessions_queued >= queue as u64,
+            "the burst must fill the {queue}-seat queue (got {})",
+            report.sessions_queued
+        );
+        assert!(report.admission_queue_wait_seconds > 0.0);
+    }
+    let adm = state.admission_stats();
+    assert_eq!(adm.in_flight, 0, "every slot released at loop end");
+    assert_eq!(adm.sessions_shed, report.sessions_shed, "loop report mirrors the controller");
+}
+
+/// The fixed-seed CI instance: 8 guests against 2 slots + 2 queue
+/// seats.
+#[test]
+fn overload_4x_all_guests_complete_bit_identically() {
+    overload_round(0x0AD_1047, 2, 2, 8);
+}
+
+/// The full overload range — slow; run explicitly with
+/// `cargo test --release --test serve_admission -- --ignored`.
+#[test]
+#[ignore = "full overload soak; run explicitly"]
+fn overload_soak_full_range() {
+    for seed in [0x0AD_1047u64, 0xA11CE, 0xB00B5] {
+        for &(limit, queue) in &[(1usize, 0usize), (1, 1), (2, 2), (4, 2)] {
+            overload_round(seed, limit, queue, 4 * limit);
+        }
+    }
+}
+
+/// A parked v4 session is never shed inside the resume window: its
+/// resume force-admits even when a later v5 session saturated the
+/// controller — the session already paid admission at its hello.
+#[test]
+fn parked_v4_sessions_are_never_shed_within_the_resume_window() {
+    let mut rng = Xoshiro256::seed_from_u64(0xAD317_44);
+    let world = gen_world(&mut rng, 1);
+    let (addr, state, server) = start_reactor(
+        &world,
+        ServeConfig {
+            workers: 2,
+            resume_window: Duration::from_secs(30),
+            admission: AdmissionConfig { limit: 1, queue: 0, ..AdmissionConfig::default() },
+            ..ServeConfig::default()
+        },
+        1,
+    );
+
+    // the v4 session does real work, then its connection dies
+    let t = TcpGuestTransport::connect(&addr, CipherSuite::new_plain(64)).expect("connect");
+    t.send(ToHost::SessionHello { session_id: 77, protocol: SERVE_PROTOCOL_V4 });
+    let ToGuest::SessionAccept { protocol, .. } = t.recv() else { panic!("expected accept") };
+    assert_eq!(protocol, SERVE_PROTOCOL_V4);
+    t.send(ToHost::PredictRoute { session: 77, chunk: 1, queries: vec![(0, 0)] });
+    let ToGuest::RouteAnswers { chunk: 1, .. } = t.recv() else { panic!("expected answer") };
+    t.reconnect().expect("re-dial"); // kills the old connection mid-session
+    wait_until("the dead session to park", || state.sessions_parked() == 1);
+
+    // a parked session consumes no slot: a v5 squatter takes the only
+    // one, and a probe confirms the controller is saturated again
+    let squatter = raw_hello(&addr, 9001);
+    let probe = TcpGuestTransport::connect(&addr, CipherSuite::new_plain(64)).expect("connect");
+    probe.send(ToHost::SessionHello { session_id: 7001, protocol: SERVE_PROTOCOL_VERSION });
+    let ToGuest::Busy { reason: BusyReason::Shed, .. } = probe.recv() else {
+        panic!("the probe must be shed: the squatter holds the only slot")
+    };
+
+    // the resume must not be shed: retry the handshake until the fresh
+    // connection lands on the parked state, panicking on any Busy
+    let (next_chunk, _epoch) = 'resume: {
+        for _ in 0..200 {
+            if t.try_send(ToHost::SessionResume { session: 77, last_acked_chunk: 1 }).is_err() {
+                let _ = t.reconnect();
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+            match t.try_recv() {
+                Ok(ToGuest::ResumeAccept { next_chunk, basis_epoch }) => {
+                    break 'resume (next_chunk, basis_epoch)
+                }
+                Ok(other) => panic!(
+                    "a valid resume inside the window must never be refused (got {:?})",
+                    other.kind()
+                ),
+                Err(_) => {
+                    let _ = t.reconnect();
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        }
+        panic!("session 77 never resumed");
+    };
+    assert_eq!(next_chunk, 2, "the stream picks up exactly where it left off");
+
+    t.send(ToHost::PredictRoute { session: 77, chunk: 2, queries: vec![(0, 0)] });
+    let ToGuest::RouteAnswers { chunk: 2, .. } = t.recv() else { panic!("expected answer") };
+    squatter.send(ToHost::SessionClose { session_id: 9001 });
+    t.send(ToHost::SessionClose { session_id: 77 });
+
+    let report = server.join().expect("server thread");
+    assert_eq!(state.sessions_resumed(), 1);
+    assert_eq!(state.sessions_served(), 1, "the resumed session counts once");
+    assert_eq!(report.sessions.len(), 1);
+    assert_eq!(report.sessions[0].outcome.batches, 2, "both chunks, across the outage");
+    assert!(report.sessions[0].outcome.clean_close);
+    assert!(report.sessions_shed >= 1, "the probe was shed");
+}

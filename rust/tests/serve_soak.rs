@@ -21,7 +21,7 @@ use common::{gen_world, start_servers};
 use sbp::coordinator::{predict_centralized, predict_session_tcp, predict_stream_passes_tcp};
 use sbp::data::dataset::{PartySlice, VerticalSplit};
 use sbp::federation::message::{
-    BasisEvict, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_V3, SERVE_PROTOCOL_VERSION,
+    BasisEvict, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_V3, SERVE_PROTOCOL_V4, SERVE_PROTOCOL_VERSION,
 };
 use sbp::federation::predict::{PredictOptions, PredictSession};
 use sbp::federation::serve::{spawn_serve_session, HostServeState, ServeConfig};
@@ -51,6 +51,7 @@ fn run_iteration(seed: u64, it: usize) {
     let protocol = match it % 5 {
         4 => SERVE_PROTOCOL_V2,
         3 => SERVE_PROTOCOL_V3,
+        2 => SERVE_PROTOCOL_V4,
         _ => SERVE_PROTOCOL_VERSION,
     };
     let max_inflight = 1 + rng.next_below(8) as u32;

@@ -12,7 +12,7 @@ use sbp::federation::codec::{
     self, decode_to_guest, decode_to_host, encode_to_guest, encode_to_host, StatCodec,
     WireError, FRAME_HEADER_LEN,
 };
-use sbp::federation::message::{HistTask, NodeStats, ToGuest, ToHost};
+use sbp::federation::message::{BusyReason, HistTask, NodeStats, ToGuest, ToHost};
 use sbp::util::rng::ChaCha20Rng;
 use std::sync::Arc;
 
@@ -200,6 +200,10 @@ fn sample_to_guest_messages(suite: &CipherSuite, rng: &mut ChaCha20Rng) -> Vec<T
         // basis epoch
         ToGuest::ResumeAccept { next_chunk: 1, basis_epoch: 0 },
         ToGuest::ResumeAccept { next_chunk: u32::MAX, basis_epoch: u32::MAX },
+        // v5 admission answers: every shed reason, extreme retry advice
+        ToGuest::Busy { retry_after_ms: 50, reason: BusyReason::Shed },
+        ToGuest::Busy { retry_after_ms: 0, reason: BusyReason::QueueExpired },
+        ToGuest::Busy { retry_after_ms: u32::MAX, reason: BusyReason::Draining },
         // delta answers: partially and fully elided, and the empty batch
         ToGuest::RouteAnswersDelta {
             session: 5,
@@ -442,6 +446,12 @@ fn malformed_session_hello_rejected() {
         ok,
         ToHost::SessionHello { session_id: 9, protocol: sbp::federation::message::SERVE_PROTOCOL_V3 }
     ));
+    let ok = decode_to_host(None, &hello(10, sbp::federation::message::SERVE_PROTOCOL_V4))
+        .expect("v4 hello still decodes (negotiated down)");
+    assert!(matches!(
+        ok,
+        ToHost::SessionHello { session_id: 10, protocol: sbp::federation::message::SERVE_PROTOCOL_V4 }
+    ));
     // reserved session id 0
     assert!(matches!(
         decode_to_host(None, &hello(0, SERVE_PROTOCOL_VERSION)),
@@ -511,6 +521,54 @@ fn malformed_session_resume_rejected() {
     let mut long = full.clone();
     long.push(0);
     assert!(matches!(decode_to_host(None, &long), Err(WireError::Malformed(_))));
+}
+
+/// A malformed v5 `Busy` frame — an unknown shed-reason tag, a truncated
+/// retry hint, or trailing bytes — must be rejected: a guest that acted
+/// on a mis-framed Busy could spin on garbage retry advice or misreport
+/// why it was shed.
+#[test]
+fn malformed_busy_rejected() {
+    let suite = CipherSuite::new_plain(256);
+    let ct_len = suite.ct_byte_len();
+
+    // hand-build busy payloads: tag 8, retry_after_ms (u32 LE), reason tag
+    let busy = |retry_after_ms: u32, reason: u8| {
+        let mut p = vec![8u8];
+        p.extend_from_slice(&retry_after_ms.to_le_bytes());
+        p.push(reason);
+        p
+    };
+    // every defined reason decodes
+    for (tag, reason) in
+        [(0u8, BusyReason::Shed), (1, BusyReason::QueueExpired), (2, BusyReason::Draining)]
+    {
+        let got = decode_to_guest(&suite, ct_len, &busy(75, tag)).expect("valid busy");
+        assert_eq!(got, ToGuest::Busy { retry_after_ms: 75, reason });
+    }
+    // reason tags this build does not define
+    for bad in [3u8, 7, 255] {
+        assert!(
+            matches!(
+                decode_to_guest(&suite, ct_len, &busy(75, bad)),
+                Err(WireError::BadTag { tag, .. }) if tag == bad
+            ),
+            "busy reason {bad} must be rejected"
+        );
+    }
+    // truncated busy frames
+    let full = encode_to_guest(
+        &suite,
+        ct_len,
+        &ToGuest::Busy { retry_after_ms: 50, reason: BusyReason::Shed },
+    );
+    for cut in 0..full.len() {
+        assert!(decode_to_guest(&suite, ct_len, &full[..cut]).is_err(), "prefix {cut} accepted");
+    }
+    // trailing garbage after a complete busy
+    let mut long = full.clone();
+    long.push(0);
+    assert!(matches!(decode_to_guest(&suite, ct_len, &long), Err(WireError::Malformed(_))));
 }
 
 /// Trailing bytes after a complete message are a framing error.
