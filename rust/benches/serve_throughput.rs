@@ -24,6 +24,7 @@ use sbp::coordinator::{
     predict_centralized, predict_sessions_tcp, predict_stream_passes_tcp, serve_predict_tcp,
     train_federated,
 };
+use sbp::crypto::secure::SecureMode;
 use sbp::data::synthetic::SyntheticSpec;
 use sbp::federation::limit::AdmissionConfig;
 use sbp::federation::message::BasisEvict;
@@ -199,6 +200,76 @@ fn main() {
         ]));
     }
     evict_table.print();
+
+    // ---- secure channel (serve v6): the same streaming session in
+    // plaintext vs per-frame ChaCha20-Poly1305 — the AEAD tax on a
+    // wire-bound workload. Reported bytes/row stays plaintext-level by
+    // design, so the B/row column must be identical across the two
+    // legs; only rows/sec may move. Parity to the colocated oracle
+    // gates both legs (including under --smoke).
+    println!("\n--- secure channel: plaintext vs per-frame AEAD ---");
+    let mut sec_table =
+        sbp::bench_harness::Table::new(&["channel", "rows/sec", "B/row", "sealed"]);
+    let mut sec_points: Vec<Json> = Vec::new();
+    let mut sec_bytes_per_row = [0f64; 2];
+    for (i, secure) in [SecureMode::Off, SecureMode::Require].into_iter().enumerate() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        let addr = listener.local_addr().unwrap().to_string();
+        let model = host_ms[0].clone();
+        let slice = vs.hosts[0].clone();
+        let server = std::thread::spawn(move || {
+            serve_predict_tcp(
+                &listener,
+                model,
+                slice,
+                ServeConfig { secure, ..ServeConfig::default() },
+                1,
+            )
+            .expect("serve loop")
+        });
+        let t0 = std::time::Instant::now();
+        let reports = predict_sessions_tcp(
+            &guest_m,
+            &vs.guest,
+            std::slice::from_ref(&addr),
+            1,
+            1,
+            PredictOptions { secure, ..stream_opts },
+        )
+        .expect("secure-channel session");
+        let wall = t0.elapsed().as_secs_f64();
+        let serve_report = server.join().expect("server thread");
+        assert_eq!(
+            reports[0].preds, oracle,
+            "secure={secure:?}: serving must be bit-identical to colocated"
+        );
+        let sealed = secure != SecureMode::Off;
+        let rows_per_sec = n as f64 / wall.max(1e-12);
+        sec_bytes_per_row[i] = reports[0].bytes_per_row;
+        sec_table.row(&[
+            if sealed { "aead".into() } else { "plain".to_string() },
+            format!("{rows_per_sec:.0}"),
+            format!("{:.1}", reports[0].bytes_per_row),
+            sealed.to_string(),
+        ]);
+        sec_points.push(Json::obj(vec![
+            ("secure", Json::Str(if sealed { "require" } else { "off" }.into())),
+            ("rows_per_sec", Json::Num((rows_per_sec * 10.0).round() / 10.0)),
+            (
+                "bytes_per_row",
+                Json::Num((reports[0].bytes_per_row * 10.0).round() / 10.0),
+            ),
+        ]));
+    }
+    sec_table.print();
+    // the handshake differs by the two 32-byte public keys; the steady
+    // state is byte-identical at the accounting (plaintext) level
+    assert!(
+        (sec_bytes_per_row[0] - sec_bytes_per_row[1]).abs() * n as f64 <= 64.0 + 1e-9,
+        "plaintext-level accounting must not see the AEAD: {:.2} vs {:.2} B/row",
+        sec_bytes_per_row[0],
+        sec_bytes_per_row[1]
+    );
 
     // ---- high concurrency: many sessions resident at once on a few
     // reactor workers vs a one-shard-per-session layout (the closest
@@ -587,6 +658,7 @@ fn main() {
         ("concurrency", Json::Num(CONCURRENCY as f64)),
         ("capacities", Json::Arr(points)),
         ("pipelined_host", Json::Arr(evict_points)),
+        ("secure_channel", Json::Arr(sec_points)),
         ("high_concurrency", Json::Arr(hc_points)),
         ("compute_pool", Json::Arr(cp_points)),
         ("mixed_load", Json::Arr(vec![ml_point])),

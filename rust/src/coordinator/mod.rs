@@ -638,37 +638,111 @@ pub fn predict_sessions_tcp(
 /// sessions drain; the serve loops stop accepting
 /// ([`crate::federation::serve::serve_predict_loop`]).
 pub fn shutdown_predict_hosts(addrs: &[String]) -> Result<()> {
+    shutdown_predict_hosts_with(addrs, 16)
+}
+
+/// [`shutdown_predict_hosts`] with the Busy-retry cap surfaced: how
+/// many control-hello attempts to spend per host before reporting it
+/// unreachable. Retries ride the same seeded jittered schedule as the
+/// guest's admission path ([`crate::federation::predict`]'s
+/// `backoff_with_jitter`), so the host's `retry_after_ms` advice is a
+/// hard floor here too — the old bare `sleep(max(advice, 10ms))`
+/// hammered a draining host in lockstep with every other retrier.
+///
+/// The control hello is keyed (v6) first so a `--secure require` host
+/// accepts it; a host that closes the keyed hello (pre-v6 build, or
+/// `--secure off`) gets a plaintext retry.
+pub fn shutdown_predict_hosts_with(addrs: &[String], max_attempts: u32) -> Result<()> {
+    use crate::crypto::secure::{derive_session_keys, keypair, shared_secret};
+    use crate::federation::message::SERVE_PROTOCOL_VERSION;
+    use crate::federation::predict::backoff_with_jitter;
+    use crate::util::rng::Xoshiro256;
     let suite = CipherSuite::new_plain(64);
     for addr in addrs {
         // a host past its admission limit answers the control hello
         // with Busy like any other hello — retry a few times (the whole
-        // point of this call is that the host IS busy), then give up
+        // point of this call is that the host IS busy), then give up.
+        // Jitter seeded per address: deterministic for tests, spread
+        // out across a fleet of hosts being wound down at once.
+        let mut rng = Xoshiro256::seed_from_u64(
+            addr.bytes().fold(0x5D0_D0FFu64, |h, b| h.wrapping_mul(0x100000001B3) ^ b as u64),
+        );
         let mut attempts = 0u32;
+        let mut keyed = true;
         loop {
             let t = TcpGuestTransport::connect(addr, suite.clone())
                 .map_err(|e| anyhow!("connecting to predict host at {addr}: {e}"))?;
-            t.send(ToHost::SessionHello {
-                session_id: u32::MAX, // conventional control-session id
-                protocol: crate::federation::message::SERVE_PROTOCOL_VERSION,
-            });
-            match t.recv() {
-                ToGuest::SessionAccept { .. } => {
+            let secret = if keyed {
+                let mut entropy = ChaCha20Rng::from_os_entropy();
+                let (sk, pk) = keypair(&mut entropy);
+                t.send(ToHost::SessionHelloSecure {
+                    session_id: u32::MAX, // conventional control-session id
+                    protocol: SERVE_PROTOCOL_VERSION,
+                    pubkey: pk,
+                });
+                Some(sk)
+            } else {
+                t.send(ToHost::SessionHello {
+                    session_id: u32::MAX,
+                    protocol: SERVE_PROTOCOL_VERSION,
+                });
+                None
+            };
+            match t.try_recv() {
+                Ok(ToGuest::SessionAccept { .. }) => {
+                    if keyed {
+                        // a v6 host answers a keyed hello keyed or
+                        // closes — a plaintext accept is a downgrade
+                        return Err(anyhow!(
+                            "predict host at {addr} answered a plaintext accept to a keyed \
+                             control hello"
+                        ));
+                    }
                     t.send(ToHost::Shutdown);
                     break;
                 }
-                ToGuest::Busy { retry_after_ms, .. } => {
+                Ok(ToGuest::SessionAcceptSecure { pubkey, .. }) => {
+                    let sk = secret.ok_or_else(|| {
+                        anyhow!("predict host at {addr} answered keyed to a plaintext hello")
+                    })?;
+                    let shared = shared_secret(&sk, &pubkey).ok_or_else(|| {
+                        anyhow!("predict host at {addr} presented a degenerate public key")
+                    })?;
+                    let keys = derive_session_keys(&shared);
+                    t.set_secure(keys.guest_to_host, keys.host_to_guest);
+                    t.send(ToHost::Shutdown);
+                    break;
+                }
+                Ok(ToGuest::Busy { retry_after_ms, .. }) => {
                     attempts += 1;
-                    if attempts > 16 {
+                    if attempts > max_attempts {
                         return Err(anyhow!(
                             "predict host at {addr} still busy after {attempts} control-session \
                              attempts"
                         ));
                     }
-                    std::thread::sleep(std::time::Duration::from_millis(
-                        (retry_after_ms as u64).max(10),
+                    std::thread::sleep(backoff_with_jitter(
+                        &mut rng,
+                        attempts - 1,
+                        retry_after_ms as u64,
                     ));
                 }
-                _ => {
+                Err(e) if keyed => {
+                    // the host closed the keyed hello: an older build,
+                    // or one serving --secure off — fall back to
+                    // plaintext (not counted as a Busy attempt)
+                    eprintln!(
+                        "[sbp-coordinator] predict host at {addr} closed the keyed control \
+                         hello ({e}); retrying in plaintext"
+                    );
+                    keyed = false;
+                }
+                Err(e) => {
+                    return Err(anyhow!(
+                        "predict host at {addr} closed the control session: {e}"
+                    ));
+                }
+                Ok(_) => {
                     return Err(anyhow!("predict host at {addr} rejected the control session"));
                 }
             }

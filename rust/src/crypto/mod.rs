@@ -10,6 +10,8 @@
 //! - [`encoding`] — fixed-point encoding of gradients/hessians (paper eq. 11).
 //! - [`packing`] — GH packing (Alg. 3) and multi-class packing (Alg. 7–8).
 //! - [`compress`] — cipher compressing of split statistics (Alg. 4/6).
+//! - [`secure`] — serve-protocol v6 session channel: X25519 handshake,
+//!   ChaCha20-Poly1305 per-frame AEAD, per-session handle rotation.
 
 pub mod bigint;
 pub mod cipher;
@@ -20,3 +22,4 @@ pub mod mont;
 pub mod packing;
 pub mod paillier;
 pub mod prime;
+pub mod secure;

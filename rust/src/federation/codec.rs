@@ -660,6 +660,16 @@ pub fn encode_to_host_into(suite: &CipherSuite, ct_len: usize, msg: &ToHost, out
             put_u32(out, *session);
             put_u32(out, *last_acked_chunk);
         }
+        ToHost::SessionHelloSecure { session_id, protocol, pubkey } => {
+            put_u32(out, *session_id);
+            put_u32(out, *protocol);
+            out.extend_from_slice(pubkey);
+        }
+        ToHost::SessionResumeSecure { session, last_acked_chunk, pubkey } => {
+            put_u32(out, *session);
+            put_u32(out, *last_acked_chunk);
+            out.extend_from_slice(pubkey);
+        }
     }
     debug_assert_eq!(out.len() + FRAME_HEADER_LEN, to_host_wire_len(msg, ct_len));
 }
@@ -777,6 +787,7 @@ pub fn decode_to_host(
                 return Err(WireError::Malformed("SessionHello with reserved session id 0"));
             }
             if protocol != crate::federation::message::SERVE_PROTOCOL_VERSION
+                && protocol != crate::federation::message::SERVE_PROTOCOL_V5
                 && protocol != crate::federation::message::SERVE_PROTOCOL_V4
                 && protocol != crate::federation::message::SERVE_PROTOCOL_V3
                 && protocol != crate::federation::message::SERVE_PROTOCOL_V2
@@ -798,6 +809,37 @@ pub fn decode_to_host(
                 ));
             }
             ToHost::SessionResume { session, last_acked_chunk }
+        }
+        13 => {
+            let session_id = r.u32()?;
+            let protocol = r.u32()?;
+            if session_id == crate::federation::message::SESSIONLESS_ID {
+                return Err(WireError::Malformed(
+                    "SessionHelloSecure with reserved session id 0",
+                ));
+            }
+            // only v6-capable peers send a keyed hello: a pre-v6 version
+            // in a secure hello is a contract violation, not a
+            // negotiate-down case (the peer could not speak the sealed
+            // framing the accept would switch on)
+            if protocol != crate::federation::message::SERVE_PROTOCOL_VERSION {
+                return Err(WireError::Malformed(
+                    "SessionHelloSecure with a pre-v6 protocol version",
+                ));
+            }
+            let pubkey: [u8; 32] = r.take(32)?.try_into().unwrap();
+            ToHost::SessionHelloSecure { session_id, protocol, pubkey }
+        }
+        14 => {
+            let session = r.u32()?;
+            let last_acked_chunk = r.u32()?;
+            if session == crate::federation::message::SESSIONLESS_ID {
+                return Err(WireError::Malformed(
+                    "SessionResumeSecure with reserved session id 0",
+                ));
+            }
+            let pubkey: [u8; 32] = r.take(32)?.try_into().unwrap();
+            ToHost::SessionResumeSecure { session, last_acked_chunk, pubkey }
         }
         t => return Err(WireError::BadTag { what: "to-host message", tag: t }),
     };
@@ -872,6 +914,7 @@ pub fn encode_to_guest_into(
                 *protocol == crate::federation::message::SERVE_PROTOCOL_V2
                     || *protocol == crate::federation::message::SERVE_PROTOCOL_V3
                     || *protocol == crate::federation::message::SERVE_PROTOCOL_V4
+                    || *protocol == crate::federation::message::SERVE_PROTOCOL_V5
                     || *protocol == crate::federation::message::SERVE_PROTOCOL_VERSION,
                 "accept must carry a negotiated protocol this build speaks"
             );
@@ -900,6 +943,30 @@ pub fn encode_to_guest_into(
         ToGuest::Busy { retry_after_ms, reason } => {
             put_u32(out, *retry_after_ms);
             out.push(*reason as u8);
+        }
+        ToGuest::SessionAcceptSecure {
+            session_id,
+            max_inflight,
+            delta_window,
+            protocol,
+            basis_evict,
+            pubkey,
+        } => {
+            debug_assert!(
+                *protocol >= crate::federation::message::SERVE_PROTOCOL_VERSION,
+                "a secure accept always negotiates v6 or newer"
+            );
+            put_u32(out, *session_id);
+            put_u32(out, *max_inflight);
+            put_u32(out, *delta_window);
+            put_u32(out, *protocol);
+            out.push(*basis_evict as u8);
+            out.extend_from_slice(pubkey);
+        }
+        ToGuest::ResumeAcceptSecure { next_chunk, basis_epoch, pubkey } => {
+            put_u32(out, *next_chunk);
+            put_u32(out, *basis_epoch);
+            out.extend_from_slice(pubkey);
         }
     }
     debug_assert_eq!(out.len() + FRAME_HEADER_LEN, to_guest_wire_len(msg, ct_len));
@@ -971,6 +1038,7 @@ pub fn decode_to_guest(
                 let protocol = r.u32()?;
                 if protocol != crate::federation::message::SERVE_PROTOCOL_V3
                     && protocol != crate::federation::message::SERVE_PROTOCOL_V4
+                    && protocol != crate::federation::message::SERVE_PROTOCOL_V5
                     && protocol != crate::federation::message::SERVE_PROTOCOL_VERSION
                 {
                     return Err(WireError::Malformed(
@@ -1021,6 +1089,40 @@ pub fn decode_to_guest(
             };
             ToGuest::Busy { retry_after_ms, reason }
         }
+        9 => {
+            let session_id = r.u32()?;
+            let max_inflight = r.u32()?;
+            let delta_window = r.u32()?;
+            let protocol = r.u32()?;
+            // a secure accept is v6-or-newer by definition: the frame
+            // exists to switch on sealed framing, which older protocols
+            // cannot speak
+            if protocol != crate::federation::message::SERVE_PROTOCOL_VERSION {
+                return Err(WireError::Malformed(
+                    "SessionAcceptSecure with a pre-v6 protocol version",
+                ));
+            }
+            let tag = r.u8()?;
+            let Some(basis_evict) = crate::federation::message::BasisEvict::from_tag(tag)
+            else {
+                return Err(WireError::BadTag { what: "basis evict policy", tag });
+            };
+            let pubkey: [u8; 32] = r.take(32)?.try_into().unwrap();
+            ToGuest::SessionAcceptSecure {
+                session_id,
+                max_inflight,
+                delta_window,
+                protocol,
+                basis_evict,
+                pubkey,
+            }
+        }
+        10 => {
+            let next_chunk = r.u32()?;
+            let basis_epoch = r.u32()?;
+            let pubkey: [u8; 32] = r.take(32)?.try_into().unwrap();
+            ToGuest::ResumeAcceptSecure { next_chunk, basis_epoch, pubkey }
+        }
         t => return Err(WireError::BadTag { what: "to-guest message", tag: t }),
     };
     r.finish()?;
@@ -1063,6 +1165,8 @@ pub fn to_host_wire_len(msg: &ToHost, ct_len: usize) -> usize {
             ToHost::SessionHello { .. } => 8,
             ToHost::SessionClose { .. } => 4,
             ToHost::SessionResume { .. } => 8,
+            ToHost::SessionHelloSecure { .. } => 40, // hello + X25519 pubkey
+            ToHost::SessionResumeSecure { .. } => 40, // resume + X25519 pubkey
         }
 }
 
@@ -1094,6 +1198,8 @@ pub fn to_guest_wire_len(msg: &ToGuest, ct_len: usize) -> usize {
             }
             ToGuest::ResumeAccept { .. } => 8,
             ToGuest::Busy { .. } => 5, // retry_after_ms u32 + reason tag
+            ToGuest::SessionAcceptSecure { .. } => 49, // v3-ext accept + pubkey
+            ToGuest::ResumeAcceptSecure { .. } => 40,  // resume-accept + pubkey
         }
 }
 

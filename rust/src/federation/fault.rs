@@ -254,6 +254,12 @@ impl GuestTransport for FaultyTransport {
         st.frames_since_arm = 0;
         Ok(())
     }
+
+    fn set_secure(&self, enc_key: [u8; 32], dec_key: [u8; 32]) {
+        // pure delegation: fault plans count frames and pick kill
+        // boundaries the same way whether or not the channel is sealed
+        self.inner.set_secure(enc_key, dec_key);
+    }
 }
 
 /// Byte-level fault-injecting feeder for a non-blocking receiver: owns

@@ -396,6 +396,35 @@ impl AdmissionController {
         TicketPoll::Pending
     }
 
+    /// How long `ticket`'s owner may sleep before its next
+    /// [`Self::poll_ticket`] without sleeping through a verdict: the
+    /// earlier of the ticket's queue-deadline expiry and the next AIMD
+    /// retune boundary (retunes grow the limit, which is what admits a
+    /// queued hello on a quiet host), floored at 1 ms. Replaces the
+    /// fixed 1 ms spin the threaded engine ran — a queued hello now
+    /// wakes a handful of times across the whole deadline instead of a
+    /// thousand times a second — while poll order stays deterministic:
+    /// the queue is FIFO inside the controller, so *when* owners poll
+    /// cannot reorder who admits first.
+    pub fn poll_wait_hint(&self, ticket: u64) -> Duration {
+        let floor = Duration::from_millis(1);
+        if !self.enabled() {
+            return floor;
+        }
+        let inner = self.lock();
+        let now = self.clock.now();
+        let deadline_left = inner
+            .queue
+            .iter()
+            .find(|&&(t, _)| t == ticket)
+            .map(|&(_, enqueued)| (enqueued + self.cfg.queue_deadline).saturating_sub(now))
+            // unknown ticket: the next poll resolves it as Expired —
+            // don't sleep on it
+            .unwrap_or(Duration::ZERO);
+        let retune_left = (inner.last_retune + self.cfg.retune_interval).saturating_sub(now);
+        deadline_left.min(retune_left).max(floor)
+    }
+
     /// Abandon a queued hello whose connection died before resolving.
     pub fn cancel_ticket(&self, ticket: u64) {
         let mut inner = self.lock();
@@ -644,6 +673,35 @@ mod tests {
         clock.advance(Duration::from_millis(150));
         c.retune(LoadSample { batches: 200, service_seconds: 0.6, ..LoadSample::default() });
         assert_eq!(c.stats().window, 4, "latency inflation halves the window");
+    }
+
+    #[test]
+    fn poll_wait_hint_sleeps_to_the_nearer_of_deadline_and_retune() {
+        let cfg = AdmissionConfig {
+            limit: 1,
+            queue: 2,
+            queue_deadline: Duration::from_millis(400),
+            retune_interval: Duration::from_millis(250),
+            ..AdmissionConfig::default()
+        };
+        let (c, clock) = controller(cfg, 8);
+        assert!(matches!(c.try_admit(), Admission::Admit { .. }));
+        let Admission::Queued { ticket } = c.try_admit() else { panic!("expected queue") };
+        // fresh ticket at t=0: the first retune boundary (250 ms) is
+        // nearer than the queue deadline (400 ms)
+        assert_eq!(c.poll_wait_hint(ticket), Duration::from_millis(250));
+        // t=300, a retune just ran: the next boundary is t=550, but the
+        // queue deadline at t=400 is nearer now
+        clock.advance(Duration::from_millis(300));
+        c.retune(LoadSample::default());
+        assert_eq!(c.poll_wait_hint(ticket), Duration::from_millis(100));
+        // past the deadline the hint floors at 1 ms — the very next
+        // poll resolves the ticket as expired, no sleep lost
+        clock.advance(Duration::from_millis(150));
+        assert_eq!(c.poll_wait_hint(ticket), Duration::from_millis(1));
+        assert!(matches!(c.poll_ticket(ticket), TicketPoll::Expired { .. }));
+        // a resolved (unknown) ticket never sleeps its caller either
+        assert_eq!(c.poll_wait_hint(ticket), Duration::from_millis(1));
     }
 
     #[test]

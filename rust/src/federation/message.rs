@@ -51,7 +51,30 @@ use std::sync::Arc;
 /// static configuration knob. v4-and-older peers never see a `Busy`
 /// frame — a shed pre-v5 hello is answered by a close, exactly the
 /// failure those peers already handle.
-pub const SERVE_PROTOCOL_VERSION: u32 = 5;
+///
+/// v6: secure sessions — a guest may open with
+/// [`ToHost::SessionHelloSecure`] (a v5 hello plus an ephemeral X25519
+/// public key); the host answers [`ToGuest::SessionAcceptSecure`]
+/// carrying its own public key, both ends derive per-direction
+/// ChaCha20-Poly1305 keys and a handle-rotation seed
+/// ([`crate::crypto::secure`]), and **every frame after the accept, in
+/// both directions, is sealed** with per-direction nonce counters.
+/// Resumes use [`ToHost::SessionResumeSecure`]/
+/// [`ToGuest::ResumeAcceptSecure`], deriving *fresh* AEAD keys for the
+/// new connection (replayed answer frames are re-sealed under fresh
+/// nonces — ciphertext is never cached) while the session's original
+/// handle rotor persists. The handshake frames themselves and the
+/// pre-handshake control plane ([`ToGuest::Busy`], silent closes) stay
+/// plaintext — keys do not exist yet. Plain v5-and-older hellos are
+/// served exactly as before, so pre-v6 peers negotiate down
+/// byte-compatibly.
+pub const SERVE_PROTOCOL_VERSION: u32 = 6;
+
+/// The v5 serve protocol, still accepted on the wire: a
+/// [`ToHost::SessionHello`] carrying it is served with v5 semantics
+/// (admission `Busy` frames, live `max_inflight`, no encryption — only
+/// v6 peers send or expect the secure handshake frames).
+pub const SERVE_PROTOCOL_V5: u32 = 5;
 
 /// The v4 serve protocol, still accepted on the wire: a
 /// [`ToHost::SessionHello`] carrying it is served with v4 semantics
@@ -227,10 +250,16 @@ pub enum ToHostKind {
     /// Re-attach to a parked v4 serving session after a dropped
     /// connection.
     SessionResume = 12,
+    /// Open a v6 serving session with an encrypted channel (hello plus
+    /// the guest's ephemeral X25519 public key).
+    SessionHelloSecure = 13,
+    /// Re-attach to a parked secure session, rekeying the channel for
+    /// the new connection.
+    SessionResumeSecure = 14,
 }
 
 /// Number of guest→host message kinds.
-pub const TO_HOST_KINDS: usize = 13;
+pub const TO_HOST_KINDS: usize = 15;
 
 impl ToHostKind {
     /// Every guest→host kind, in tag order.
@@ -248,6 +277,8 @@ impl ToHostKind {
         ToHostKind::SessionClose,
         ToHostKind::KeepAlive,
         ToHostKind::SessionResume,
+        ToHostKind::SessionHelloSecure,
+        ToHostKind::SessionResumeSecure,
     ];
 
     /// Wire tag byte / per-kind counter index.
@@ -271,6 +302,8 @@ impl ToHostKind {
             ToHostKind::SessionClose => "SessionClose",
             ToHostKind::KeepAlive => "KeepAlive",
             ToHostKind::SessionResume => "SessionResume",
+            ToHostKind::SessionHelloSecure => "SessionHelloSecure",
+            ToHostKind::SessionResumeSecure => "SessionResumeSecure",
         }
     }
 }
@@ -300,10 +333,16 @@ pub enum ToGuestKind {
     /// [`ToHostKind::SessionResume`] because it is past its admission
     /// limit; retry after the advertised delay (v5+).
     Busy = 8,
+    /// Acceptance of a [`ToHostKind::SessionHelloSecure`] handshake
+    /// (carries the host's ephemeral X25519 public key).
+    SessionAcceptSecure = 9,
+    /// Acceptance of a [`ToHostKind::SessionResumeSecure`] re-attach
+    /// (rekeys the channel for the new connection).
+    ResumeAcceptSecure = 10,
 }
 
 /// Number of host→guest message kinds.
-pub const TO_GUEST_KINDS: usize = 9;
+pub const TO_GUEST_KINDS: usize = 11;
 
 impl ToGuestKind {
     /// Every host→guest kind, in tag order.
@@ -317,6 +356,8 @@ impl ToGuestKind {
         ToGuestKind::RouteAnswersDelta,
         ToGuestKind::ResumeAccept,
         ToGuestKind::Busy,
+        ToGuestKind::SessionAcceptSecure,
+        ToGuestKind::ResumeAcceptSecure,
     ];
 
     /// Wire tag byte / per-kind counter index.
@@ -336,6 +377,8 @@ impl ToGuestKind {
             ToGuestKind::RouteAnswersDelta => "RouteAnswersDelta",
             ToGuestKind::ResumeAccept => "ResumeAccept",
             ToGuestKind::Busy => "Busy",
+            ToGuestKind::SessionAcceptSecure => "SessionAcceptSecure",
+            ToGuestKind::ResumeAcceptSecure => "ResumeAcceptSecure",
         }
     }
 }
@@ -447,6 +490,44 @@ pub enum ToHost {
         /// count, in original send order.
         last_acked_chunk: u32,
     },
+    /// Open a v6 serving session with an **encrypted channel**: exactly
+    /// a [`ToHost::SessionHello`] plus the guest's ephemeral X25519
+    /// public key. The host answers
+    /// [`ToGuest::SessionAcceptSecure`] (still plaintext — it carries
+    /// the host's public key), after which every frame of the session,
+    /// in both directions, is sealed with ChaCha20-Poly1305 under
+    /// handshake-derived per-direction keys. Only carried by `protocol
+    /// ≥ 6` hellos; the codec rejects a keyed hello claiming an older
+    /// version (those peers cannot speak the sealed framing).
+    SessionHelloSecure {
+        /// Client-chosen nonzero session id (as in the plain hello).
+        session_id: u32,
+        /// Serve-protocol version; must be ≥ 6 — only v6-capable peers
+        /// send a keyed hello (the negotiated version is still
+        /// `min(hello, host)`).
+        protocol: u32,
+        /// The guest's ephemeral X25519 public key for this connection.
+        pubkey: [u8; 32],
+    },
+    /// Re-attach to a parked **secure** session: a
+    /// [`ToHost::SessionResume`] plus a *fresh* ephemeral public key.
+    /// Sent plaintext as the first frame of the new connection (the old
+    /// connection's keys died with it); the host's
+    /// [`ToGuest::ResumeAcceptSecure`] completes a rekey, and the
+    /// replayed answer frames are re-sealed under the new keys with
+    /// fresh nonces — ciphertext never outlives its connection. The
+    /// session's handle rotor (established by the original hello's
+    /// handshake) is retained. A secure session can only be resumed
+    /// securely and vice versa; the host closes on a mismatch.
+    SessionResumeSecure {
+        /// The parked session being re-attached.
+        session: u32,
+        /// The guest's answer-frame acknowledgement cursor (same
+        /// semantics as the plain [`ToHost::SessionResume`] cursor).
+        last_acked_chunk: u32,
+        /// The guest's fresh ephemeral X25519 public key.
+        pubkey: [u8; 32],
+    },
 }
 
 impl ToHost {
@@ -466,6 +547,8 @@ impl ToHost {
             ToHost::SessionClose { .. } => ToHostKind::SessionClose,
             ToHost::KeepAlive => ToHostKind::KeepAlive,
             ToHost::SessionResume { .. } => ToHostKind::SessionResume,
+            ToHost::SessionHelloSecure { .. } => ToHostKind::SessionHelloSecure,
+            ToHost::SessionResumeSecure { .. } => ToHostKind::SessionResumeSecure,
         }
     }
 }
@@ -609,6 +692,42 @@ pub enum ToGuest {
         /// Why the hello was refused (shed / queue-expired / draining).
         reason: BusyReason,
     },
+    /// The host accepted a [`ToHost::SessionHelloSecure`]: a
+    /// [`ToGuest::SessionAccept`] plus the host's ephemeral X25519
+    /// public key. This frame itself travels plaintext (it completes
+    /// the key agreement); **every frame after it**, in both
+    /// directions, is sealed. The negotiated `protocol` is always ≥ 6
+    /// here — a host that would negotiate lower answers a keyed hello
+    /// with a close (and a v6 host serving a *plain* hello answers with
+    /// the plain accept, so older peers never see this frame).
+    SessionAcceptSecure {
+        /// Echo of the hello's session id.
+        session_id: u32,
+        /// Live in-flight window (see [`ToGuest::SessionAccept`]).
+        max_inflight: u32,
+        /// Delta-basis capacity (see [`ToGuest::SessionAccept`]).
+        delta_window: u32,
+        /// The serve-protocol version the session will speak (≥ 6).
+        protocol: u32,
+        /// The negotiated delta-basis eviction policy.
+        basis_evict: BasisEvict,
+        /// The host's ephemeral X25519 public key for this connection.
+        pubkey: [u8; 32],
+    },
+    /// The host accepted a [`ToHost::SessionResumeSecure`]: a
+    /// [`ToGuest::ResumeAccept`] plus the host's fresh ephemeral public
+    /// key. Travels plaintext (it completes the rekey); the replayed
+    /// answer frames that follow are already sealed under the *new*
+    /// connection's keys — the host retains plaintext answers, never
+    /// ciphertext, so replay gets fresh nonces by construction.
+    ResumeAcceptSecure {
+        /// Replay cursor (see [`ToGuest::ResumeAccept`]).
+        next_chunk: u32,
+        /// Delta-basis lockstep check (see [`ToGuest::ResumeAccept`]).
+        basis_epoch: u32,
+        /// The host's fresh ephemeral X25519 public key.
+        pubkey: [u8; 32],
+    },
 }
 
 impl ToGuest {
@@ -624,6 +743,8 @@ impl ToGuest {
             ToGuest::RouteAnswersDelta { .. } => ToGuestKind::RouteAnswersDelta,
             ToGuest::ResumeAccept { .. } => ToGuestKind::ResumeAccept,
             ToGuest::Busy { .. } => ToGuestKind::Busy,
+            ToGuest::SessionAcceptSecure { .. } => ToGuestKind::SessionAcceptSecure,
+            ToGuest::ResumeAcceptSecure { .. } => ToGuestKind::ResumeAcceptSecure,
         }
     }
 }

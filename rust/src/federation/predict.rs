@@ -90,14 +90,17 @@
 use super::delta::DeltaBasis;
 use super::message::{
     BasisEvict, ToGuest, ToHost, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_V3, SERVE_PROTOCOL_V4,
-    SERVE_PROTOCOL_VERSION, SESSIONLESS_ID,
+    SERVE_PROTOCOL_V5, SERVE_PROTOCOL_VERSION, SESSIONLESS_ID,
 };
 use super::serve::{serve_session, HostServeState, ServeConfig, SessionOutcome};
 use super::transport::{GuestTransport, HostTransport};
+use crate::crypto::secure::{
+    derive_session_keys, keypair, shared_secret, HandleRotor, SecureMode, PUBKEY_LEN,
+};
 use crate::data::dataset::PartySlice;
 use crate::tree::node::SplitRef;
 use crate::tree::predict::{GuestModel, HostModel};
-use crate::util::rng::Xoshiro256;
+use crate::util::rng::{ChaCha20Rng, Xoshiro256};
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 
@@ -210,6 +213,15 @@ pub struct PredictOptions {
     pub admission_retries: u32,
     /// Emit one stderr progress line per finished chunk while streaming.
     pub progress: bool,
+    /// Encrypted-channel policy for the v6 handshake. `Prefer` (the
+    /// default) opens with a keyed `SessionHelloSecure` and falls back
+    /// to a plaintext hello when the host closes it (a pre-v6 host, or
+    /// one running `--secure off`); `Require` never falls back and
+    /// fails loudly instead; `Off` always speaks plaintext. Only
+    /// meaningful when `protocol` is [`SERVE_PROTOCOL_VERSION`] — a
+    /// legacy-protocol hello is always plaintext, so `Require` combined
+    /// with a legacy `protocol` is rejected at session build.
+    pub secure: SecureMode,
 }
 
 impl Default for PredictOptions {
@@ -224,23 +236,33 @@ impl Default for PredictOptions {
             reconnect_retries: 0,
             admission_retries: 8,
             progress: false,
+            secure: SecureMode::default(),
         }
     }
 }
 
 /// One sleep of the guest's retry schedule, shared by the v4 reconnect
-/// path and the v5 `Busy` retry path: a capped exponential spine (10ms,
-/// 20ms, 40ms … 500ms by `attempt`, never below `floor_ms` — the host's
-/// `retry_after_ms` advice rides in here) with **seeded jitter** drawn
-/// uniformly from the sleep's upper half. Deterministic per RNG seed —
-/// tests replay the exact schedule — while a fleet of guests seeded
-/// differently spreads out instead of re-dialing a restarted or
-/// overloaded host in lockstep (the thundering herd the old fixed
-/// `10ms << n` sleep caused).
-fn backoff_with_jitter(rng: &mut Xoshiro256, attempt: u32, floor_ms: u64) -> std::time::Duration {
-    let base = (10u64 << attempt.min(6)).min(500).max(floor_ms.max(2));
-    let half = base / 2;
-    std::time::Duration::from_millis(half + 1 + rng.next_below(half.max(1) as usize) as u64)
+/// path, the v5 `Busy` retry path, and the coordinator's shutdown
+/// drain. The host's `retry_after_ms` advice (`floor_ms`) is a hard
+/// **floor**: the sleep is drawn uniformly from `(floor, floor +
+/// spine]`, where the spine is the capped exponential 10ms, 20ms,
+/// 40ms … 500ms by `attempt`. Strictly above the floor always — a host
+/// that says "come back in 200ms" never sees the guest at 101ms — and
+/// the cap bounds only the jitter, so advice above 500ms keeps its full
+/// weight. Seeded jitter: deterministic per RNG seed (tests replay the
+/// exact schedule) while a fleet of guests seeded differently spreads
+/// out instead of re-dialing a restarted or overloaded host in
+/// lockstep. (An earlier version derived the sleep from half of
+/// `max(spine, floor)`, which both undercut the advertised floor by up
+/// to 2× and flattened the exponential growth whenever the advice
+/// exceeded the 500ms cap.)
+pub(crate) fn backoff_with_jitter(
+    rng: &mut Xoshiro256,
+    attempt: u32,
+    floor_ms: u64,
+) -> std::time::Duration {
+    let spine = (10u64 << attempt.min(6)).min(500).max(2);
+    std::time::Duration::from_millis(floor_ms + 1 + rng.next_below(spine as usize) as u64)
 }
 
 /// One in-flight (tree, sample) walk.
@@ -333,6 +355,15 @@ pub struct PredictSession<'a> {
     /// fresh ones. `ResumeAccept::basis_epoch` must equal this mirror
     /// or the two bases have desynchronized.
     basis_inserts: Vec<u64>,
+    /// Per-host handle rotor of a keyed (v6 encrypted) session, `None`
+    /// on plaintext links. All guest-side state — memo, basis mirror,
+    /// pending rounds — keys on **true** handle ids; the rotor touches
+    /// only the outgoing `PredictRoute` wire copy (and the host
+    /// un-rotates before its range check). A session property derived
+    /// from the first handshake: resume re-keys the AEAD channel but
+    /// keeps the rotor, so replayed answers still describe the same
+    /// permuted id space.
+    rotors: Vec<Option<HandleRotor>>,
     rng: Xoshiro256,
     suppressed: u64,
     decoys: u64,
@@ -345,10 +376,16 @@ impl<'a> PredictSession<'a> {
         assert_ne!(session_id, SESSIONLESS_ID, "session id 0 is reserved for the legacy flow");
         assert!(
             opts.protocol == SERVE_PROTOCOL_VERSION
+                || opts.protocol == SERVE_PROTOCOL_V5
                 || opts.protocol == SERVE_PROTOCOL_V4
                 || opts.protocol == SERVE_PROTOCOL_V3
                 || opts.protocol == SERVE_PROTOCOL_V2,
             "this build speaks serve protocols {SERVE_PROTOCOL_V2}..{SERVE_PROTOCOL_VERSION}, not {}",
+            opts.protocol
+        );
+        assert!(
+            opts.secure != SecureMode::Require || opts.protocol == SERVE_PROTOCOL_VERSION,
+            "--secure require needs a v{SERVE_PROTOCOL_VERSION} hello; a v{} hello is always plaintext",
             opts.protocol
         );
         Self::build(model, session_id, opts)
@@ -394,6 +431,7 @@ impl<'a> PredictSession<'a> {
             host_caps: Vec::new(),
             acked: Vec::new(),
             basis_inserts: Vec::new(),
+            rotors: Vec::new(),
             rng: Xoshiro256::seed_from_u64(opts.seed ^ (session_id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
             suppressed: 0,
             decoys: 0,
@@ -439,16 +477,35 @@ impl<'a> PredictSession<'a> {
     /// [`PredictOptions::admission_retries`] times before giving up
     /// loudly.
     pub fn open(&mut self, links: &[Box<dyn GuestTransport>]) {
+        // hellos to every host first (the accepts pipeline), each keyed
+        // with its own ephemeral X25519 secret when the session wants
+        // the encrypted channel
+        let mut secrets: Vec<Option<[u8; 32]>> = Vec::with_capacity(links.len());
         for link in links {
-            link.send(ToHost::SessionHello {
-                session_id: self.session_id,
-                protocol: self.opts.protocol,
-            });
+            match self.hello_keypair() {
+                Some((sk, pk)) => {
+                    link.send(ToHost::SessionHelloSecure {
+                        session_id: self.session_id,
+                        protocol: self.opts.protocol,
+                        pubkey: pk,
+                    });
+                    secrets.push(Some(sk));
+                }
+                None => {
+                    link.send(ToHost::SessionHello {
+                        session_id: self.session_id,
+                        protocol: self.opts.protocol,
+                    });
+                    secrets.push(None);
+                }
+            }
         }
         self.host_caps.clear();
+        self.rotors.clear();
         for (p, link) in links.iter().enumerate() {
-            let caps = self.open_link(p, link.as_ref());
+            let (caps, rotor) = self.open_link(p, link.as_ref(), secrets[p]);
             self.host_caps.push(caps);
+            self.rotors.push(rotor);
         }
         // a (re)opened session faces hosts with *fresh* per-session seen
         // sets — the mirrored bases must restart empty too (and under
@@ -466,12 +523,37 @@ impl<'a> PredictSession<'a> {
         self.basis_inserts = vec![0; self.host_caps.len()];
     }
 
+    /// A fresh ephemeral X25519 keypair for a keyed hello, or `None`
+    /// when this session opens in plaintext (secure off, or a legacy
+    /// protocol whose hello cannot carry a key).
+    fn hello_keypair(&self) -> Option<([u8; 32], [u8; PUBKEY_LEN])> {
+        if self.opts.secure == SecureMode::Off || self.opts.protocol != SERVE_PROTOCOL_VERSION {
+            return None;
+        }
+        let mut entropy = ChaCha20Rng::from_os_entropy();
+        Some(keypair(&mut entropy))
+    }
+
     /// Complete one host's handshake: wait for the accept, and ride out
     /// `Busy` sheds with the jittered retry loop. A re-dial that fails,
     /// or a connection a shedding host already closed, consumes an
     /// attempt like a `Busy` does — the host may be mid-overload either
-    /// way.
-    fn open_link(&self, p: usize, link: &dyn GuestTransport) -> HostCaps {
+    /// way. `secret` is the ephemeral X25519 secret whose public half
+    /// the already-sent hello carried (`None` for a plaintext hello);
+    /// every keyed re-dial draws a **fresh** keypair. Under
+    /// [`SecureMode::Prefer`], a host that closes the keyed hello
+    /// (pre-v6, or serving `--secure off`) downgrades the remaining
+    /// attempts to plaintext; under [`SecureMode::Require`] the guest
+    /// never downgrades and fails loudly instead. Returns the announced
+    /// caps plus the handle rotor of a keyed channel.
+    fn open_link(
+        &self,
+        p: usize,
+        link: &dyn GuestTransport,
+        secret: Option<[u8; 32]>,
+    ) -> (HostCaps, Option<HandleRotor>) {
+        let mut secret = secret;
+        let mut keyed = secret.is_some();
         let retries = self.opts.admission_retries;
         // deterministic per (seed, session, host): replayable in tests,
         // de-correlated across a fleet of guests sharing a wall clock
@@ -496,6 +578,14 @@ impl<'a> PredictSession<'a> {
                             "host {p} closed the connection during the session handshake: {e} \
                              (admission retries disabled)"
                         );
+                        if keyed && self.opts.secure == SecureMode::Prefer {
+                            eprintln!(
+                                "[sbp-predict] host {p} closed the keyed hello ({e}); \
+                                 falling back to a plaintext hello"
+                            );
+                            keyed = false;
+                            secret = None;
+                        }
                         attempt += 1;
                         continue;
                     }
@@ -509,24 +599,43 @@ impl<'a> PredictSession<'a> {
                 );
                 std::thread::sleep(backoff_with_jitter(&mut rng, attempt - 1, floor_ms));
                 // a shedding host closed the connection after its Busy:
-                // dial a fresh one and present the identical hello
+                // dial a fresh one and present the hello again (keyed
+                // hellos with a fresh ephemeral keypair — the previous
+                // secret died with the previous connection)
                 if link.reconnect().is_err() {
                     attempt += 1;
                     continue;
                 }
-                if link
-                    .try_send(ToHost::SessionHello {
+                let hello = if keyed {
+                    let mut entropy = ChaCha20Rng::from_os_entropy();
+                    let (sk, pk) = keypair(&mut entropy);
+                    secret = Some(sk);
+                    ToHost::SessionHelloSecure {
                         session_id: self.session_id,
                         protocol: self.opts.protocol,
-                    })
-                    .is_err()
-                {
+                        pubkey: pk,
+                    }
+                } else {
+                    ToHost::SessionHello {
+                        session_id: self.session_id,
+                        protocol: self.opts.protocol,
+                    }
+                };
+                if link.try_send(hello).is_err() {
                     attempt += 1;
                     continue;
                 }
                 match link.try_recv() {
                     Ok(m) => m,
-                    Err(_) => {
+                    Err(e) => {
+                        if keyed && self.opts.secure == SecureMode::Prefer {
+                            eprintln!(
+                                "[sbp-predict] host {p} closed the keyed hello ({e}); \
+                                 falling back to a plaintext hello"
+                            );
+                            keyed = false;
+                            secret = None;
+                        }
                         attempt += 1;
                         continue;
                     }
@@ -549,7 +658,48 @@ impl<'a> PredictSession<'a> {
                         "host {p} answered protocol {protocol} to a v{} hello",
                         self.opts.protocol
                     );
-                    return HostCaps { max_inflight, delta_window, basis_evict, protocol };
+                    // a plaintext accept to a *keyed* hello would be an
+                    // in-band downgrade the host protocol never
+                    // performs (a v6 host answers keyed or closes) —
+                    // treat it as an attack, not a negotiation
+                    assert!(
+                        !keyed,
+                        "host {p} answered a plaintext accept to a keyed hello — refusing the \
+                         downgrade"
+                    );
+                    return (HostCaps { max_inflight, delta_window, basis_evict, protocol }, None);
+                }
+                ToGuest::SessionAcceptSecure {
+                    session_id,
+                    max_inflight,
+                    delta_window,
+                    protocol,
+                    basis_evict,
+                    pubkey,
+                } => {
+                    assert_eq!(
+                        session_id, self.session_id,
+                        "host {p} accepted a different session id"
+                    );
+                    assert_eq!(
+                        protocol, SERVE_PROTOCOL_VERSION,
+                        "host {p} answered a keyed accept with protocol {protocol}"
+                    );
+                    let sk = secret.unwrap_or_else(|| {
+                        panic!("host {p} answered a keyed accept to a plaintext hello")
+                    });
+                    let Some(shared) = shared_secret(&sk, &pubkey) else {
+                        panic!("host {p} presented a degenerate public key in its accept");
+                    };
+                    let keys = derive_session_keys(&shared);
+                    // guest encrypts with the guest→host key, decrypts
+                    // with host→guest; from here every frame both ways
+                    // rides the AEAD channel
+                    link.set_secure(keys.guest_to_host, keys.host_to_guest);
+                    return (
+                        HostCaps { max_inflight, delta_window, basis_evict, protocol },
+                        Some(HandleRotor::new(keys.rotor_seed)),
+                    );
                 }
                 ToGuest::Busy { retry_after_ms, reason } => {
                     assert!(
@@ -695,7 +845,7 @@ impl<'a> PredictSession<'a> {
                 links[p].send(ToHost::PredictRoute {
                     session: self.session_id,
                     chunk: 0,
-                    queries: queries.clone(),
+                    queries: self.wire_queries(p, &queries),
                 });
                 rounds.push((p, idxs, queries, slots));
             }
@@ -1042,8 +1192,10 @@ impl<'a> PredictSession<'a> {
             let sent = links[p].try_send(ToHost::PredictRoute {
                 session: self.session_id,
                 chunk: id,
-                queries: queries.clone(),
+                queries: self.wire_queries(p, &queries),
             });
+            // the round stores TRUE handles (memo and answer decoding
+            // key on them); only the wire copy above was rotated
             st.pending[p] = Some(PendingRound { idxs, queries, slots });
             st.awaiting += 1;
             outstanding[p].push_back(id);
@@ -1122,6 +1274,48 @@ impl<'a> PredictSession<'a> {
                 if links[p].reconnect().is_err() {
                     continue;
                 }
+                // a keyed session resumes keyed: fresh ephemeral
+                // keypair (the old AEAD keys died with the old
+                // connection), but the handle rotor is a session
+                // property and stays — replayed answers describe the
+                // same permuted id space
+                if self.rotors.get(p).is_some_and(|r| r.is_some()) {
+                    let mut entropy = ChaCha20Rng::from_os_entropy();
+                    let (sk, pk) = keypair(&mut entropy);
+                    if links[p]
+                        .try_send(ToHost::SessionResumeSecure {
+                            session: self.session_id,
+                            last_acked_chunk: self.acked[p] as u32,
+                            pubkey: pk,
+                        })
+                        .is_err()
+                    {
+                        continue;
+                    }
+                    match links[p].try_recv() {
+                        Ok(ToGuest::ResumeAcceptSecure { next_chunk, basis_epoch, pubkey }) => {
+                            let Some(shared) = shared_secret(&sk, &pubkey) else {
+                                panic!(
+                                    "host {p} presented a degenerate public key in its resume \
+                                     accept"
+                                );
+                            };
+                            let keys = derive_session_keys(&shared);
+                            // fresh AEAD keys for the new connection;
+                            // the derived rotor seed is deliberately
+                            // ignored — the session rotor survives
+                            links[p].set_secure(keys.guest_to_host, keys.host_to_guest);
+                            break (next_chunk, basis_epoch);
+                        }
+                        Err(_) => continue,
+                        Ok(other) => {
+                            panic!(
+                                "host {p} answered SessionResumeSecure with {:?}",
+                                other.kind()
+                            )
+                        }
+                    }
+                }
                 if links[p]
                     .try_send(ToHost::SessionResume {
                         session: self.session_id,
@@ -1171,7 +1365,7 @@ impl<'a> PredictSession<'a> {
                 let resent = links[p].try_send(ToHost::PredictRoute {
                     session: self.session_id,
                     chunk,
-                    queries: round.queries.clone(),
+                    queries: self.wire_queries(p, &round.queries),
                 });
                 if resent.is_err() {
                     continue 'resume; // this connection died too
@@ -1267,6 +1461,20 @@ impl<'a> PredictSession<'a> {
             }
         }
         (queries, slots)
+    }
+
+    /// The wire form of one host's query list: handle ids passed
+    /// through the session rotor when host `p` negotiated the keyed v6
+    /// channel, the list verbatim otherwise. Every guest-side structure
+    /// keys on true handles — rotation exists only between here and the
+    /// host's `unrotate` pass, so the ids that transit (even under the
+    /// AEAD layer, e.g. in logs either side keeps) never equal the
+    /// model's stable split handles.
+    fn wire_queries(&self, p: usize, queries: &[(u32, u32)]) -> Vec<(u32, u32)> {
+        match self.rotors.get(p).and_then(|r| r.as_ref()) {
+            Some(rotor) => queries.iter().map(|&(row, h)| (row, rotor.rotate(h))).collect(),
+            None => queries.to_vec(),
+        }
     }
 
     /// Receive and decode one host's answer frame for `queries` (sent
@@ -1392,6 +1600,10 @@ impl<'a> PredictSession<'a> {
         if self.acked.len() < n_links {
             self.acked.resize(n_links, 0);
             self.basis_inserts.resize(n_links, 0);
+        }
+        if self.rotors.len() < n_links {
+            // sessionless links never ran a keyed handshake: no rotor
+            self.rotors.resize_with(n_links, || None);
         }
     }
 }
@@ -1695,4 +1907,78 @@ mod tests {
         session.close(&links);
         h.join().unwrap();
     }
+
+    #[test]
+    fn backoff_never_sleeps_below_the_advertised_floor() {
+        use std::time::Duration;
+        // retry_after_ms advice below, at, and above the 500ms jitter
+        // cap: the sleep must stay strictly above the floor in every
+        // case, and the cap must bound only the jitter — a 2000ms
+        // floor still yields a >2000ms sleep (the old derivation slept
+        // in (base/2, base], undercutting the advice by up to 2×)
+        for &floor in &[0u64, 30, 200, 500, 2_000] {
+            let mut rng = Xoshiro256::seed_from_u64(0xBAC0_0FF);
+            for attempt in 0..10u32 {
+                let spine = (10u64 << attempt.min(6)).min(500).max(2);
+                let d = backoff_with_jitter(&mut rng, attempt, floor);
+                assert!(
+                    d > Duration::from_millis(floor),
+                    "attempt {attempt}, floor {floor}: slept {d:?}, at or below the floor"
+                );
+                assert!(
+                    d <= Duration::from_millis(floor + spine),
+                    "attempt {attempt}, floor {floor}: slept {d:?}, beyond floor + spine"
+                );
+            }
+        }
+        // pinned seed ⇒ exact replayable schedule (what lets the soak
+        // tests reason about retry timing deterministically)
+        let schedule = |seed: u64| -> Vec<u128> {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            (0..8u32).map(|a| backoff_with_jitter(&mut rng, a, 700).as_millis()).collect()
+        };
+        assert_eq!(schedule(7), schedule(7), "same seed must replay the same schedule");
+        assert_ne!(schedule(7), schedule(8), "different seeds must jitter apart");
+        assert!(schedule(7).iter().all(|&ms| ms > 700 && ms <= 1200));
+    }
+
+    #[test]
+    fn keyed_session_matches_plaintext_bit_identically() {
+        // the full keyed v6 handshake over in-memory links: X25519 +
+        // KDF run for real and the handle rotor permutes every wire
+        // query (the AEAD layer is a no-op on in-memory transports —
+        // byte privacy there is trivial). Predictions, suppression,
+        // and message counts must equal the plaintext session's.
+        let (guest_m, host_m) = toy_shares();
+        let guest_slice = PartySlice { cols: vec![0], x: vec![0.9, 0.1, 0.1, 0.4], n: 4 };
+        let host_slice = PartySlice {
+            cols: vec![1, 2],
+            x: vec![0.0, 0.0, 0.0, -2.0, 0.0, 5.0, 0.0, -1.5],
+            n: 4,
+        };
+        let run = |secure: SecureMode| {
+            let (gl, hl) = link_pair(8);
+            let h = spawn_predict_host(host_m.clone(), host_slice.clone(), hl);
+            let links: Vec<Box<dyn GuestTransport>> = vec![Box::new(gl)];
+            let mut session = PredictSession::new(
+                &guest_m,
+                33,
+                PredictOptions { batch_rows: 2, seed: 11, secure, ..PredictOptions::default() },
+            );
+            session.open(&links);
+            let keyed = session.rotors.iter().filter(|r| r.is_some()).count();
+            let (preds, _) = session.predict_stream(&guest_slice, &links);
+            let msgs = links[0].snapshot().msgs_to_host;
+            session.close(&links);
+            h.join().unwrap();
+            (preds, msgs, keyed)
+        };
+        let (plain, plain_msgs, plain_keyed) = run(SecureMode::Off);
+        let (keyed, keyed_msgs, keyed_keyed) = run(SecureMode::Require);
+        assert_eq!(plain_keyed, 0, "secure off must not negotiate a rotor");
+        assert_eq!(keyed_keyed, 1, "secure require must negotiate the keyed channel");
+        assert_eq!(plain, keyed, "keyed serving must be bit-identical to plaintext");
+        assert_eq!(plain_msgs, keyed_msgs, "the keyed channel adds no extra frames");
+    }
+
 }

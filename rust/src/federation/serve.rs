@@ -126,14 +126,19 @@ use super::delta::DeltaBasis;
 use super::limit::{Admission, AdmissionConfig, AdmissionController, LoadSample, TicketPoll};
 use super::message::{
     BasisEvict, BusyReason, ToGuest, ToGuestKind, ToHost, ToHostKind, SERVE_PROTOCOL_V2,
-    SERVE_PROTOCOL_V3, SERVE_PROTOCOL_V4, SERVE_PROTOCOL_VERSION, SESSIONLESS_ID,
+    SERVE_PROTOCOL_V3, SERVE_PROTOCOL_V4, SERVE_PROTOCOL_V5, SERVE_PROTOCOL_VERSION,
+    SESSIONLESS_ID,
 };
 use super::tcp::{NbConn, RecvPoll};
 use super::transport::{HostTransport, NetCounters, NetSnapshot};
 use crate::crypto::cipher::CipherSuite;
+use crate::crypto::secure::{
+    derive_session_keys, keypair, shared_secret, HandleRotor, SecureMode, SessionKeys, PUBKEY_LEN,
+};
 use crate::data::dataset::PartySlice;
 use crate::tree::predict::HostModel;
 use crate::util::pool::{num_threads, ComputePool};
+use crate::util::rng::ChaCha20Rng;
 use std::collections::{HashMap, VecDeque};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -455,6 +460,17 @@ pub struct ServeConfig {
     /// (`limit == 0`) turns admission off entirely — every hello admits
     /// with the static window, exactly the pre-v5 behavior.
     pub admission: AdmissionConfig,
+    /// Encrypted-session policy (serve protocol v6, the `--secure`
+    /// flag): [`SecureMode::Prefer`] (default) answers keyed hellos
+    /// with a keyed accept and serves the session over per-frame
+    /// ChaCha20-Poly1305 while still serving plaintext v5-and-older
+    /// peers; [`SecureMode::Require`] closes any plaintext hello;
+    /// [`SecureMode::Off`] closes keyed hellos (forcing v6-capable
+    /// guests to fall back or leave, useful for wire-level debugging).
+    /// Pre-handshake control frames — `Busy` above all — are plaintext
+    /// in every mode: they exist precisely for peers that have no
+    /// session keys yet.
+    pub secure: SecureMode,
 }
 
 impl Default for ServeConfig {
@@ -473,6 +489,7 @@ impl Default for ServeConfig {
             compute_shard_min: 1 << 12,
             walk_delay: None,
             admission: AdmissionConfig::default(),
+            secure: SecureMode::default(),
         }
     }
 }
@@ -990,6 +1007,10 @@ pub struct SessionOutcome {
     /// Serve-protocol version the session negotiated (4; 3 or 2 for a
     /// legacy peer; 0 for a hello-less sessionless connection).
     pub protocol: u32,
+    /// The session ran the v6 encrypted channel: a keyed handshake
+    /// completed, every post-accept frame was sealed, and handle ids
+    /// were rotated on the wire.
+    pub secure: bool,
     /// Delta-basis eviction policy the session ran
     /// ([`BasisEvict::Freeze`] for v2 and hello-less sessions).
     pub basis_evict: BasisEvict,
@@ -1073,6 +1094,20 @@ struct SessionMachine {
     /// handshake is deferred, the driver polls
     /// [`SessionMachine::poll_admission`] until the ticket resolves.
     pending_hello: Option<PendingHello>,
+    /// Handle rotation for a keyed (protocol v6) session: every inbound
+    /// `PredictRoute` carries rotated host-handle ids the machine maps
+    /// back before the range check and the basis pass. `Some` exactly
+    /// when the session completed a keyed handshake; resumes keep the
+    /// rotor (rotation is a *session* property — the guest memoized
+    /// routes under it — while AEAD keys are per connection).
+    rotor: Option<HandleRotor>,
+    /// A keyed handshake that completed on the last fed frame, staged
+    /// for the driver: the accept to emit plus the derived AEAD keys.
+    /// Deferred because only the driver can order the arming — the
+    /// receive direction must seal *before* the accept leaves (the
+    /// guest encrypts from the moment it sees the accept) and the send
+    /// direction only *after* (the accept itself is plaintext).
+    handshake: Option<(ToGuest, SessionKeys)>,
 }
 
 /// The deferred half of a queued `SessionHello` (see
@@ -1082,6 +1117,9 @@ struct PendingHello {
     sid: u32,
     protocol: u32,
     ticket: u64,
+    /// The guest's ephemeral X25519 public key when the queued hello
+    /// was a [`ToHost::SessionHelloSecure`]; `None` for a plain hello.
+    pubkey: Option<[u8; PUBKEY_LEN]>,
 }
 
 /// The output of [`SessionMachine::route_serial`]: a `PredictRoute`
@@ -1119,6 +1157,8 @@ impl SessionMachine {
             compute_sharded_batches: 0,
             admitted: false,
             pending_hello: None,
+            rotor: None,
+            handshake: None,
         }
     }
 
@@ -1135,7 +1175,7 @@ impl SessionMachine {
         state: &HostServeState,
         session: u32,
         chunk: u32,
-        q: Vec<(u32, u32)>,
+        mut q: Vec<(u32, u32)>,
     ) -> Result<RouteWalk, ()> {
         if self.pending_hello.is_some() {
             // the reactor intercepts PredictRoute before on_frame, so
@@ -1173,6 +1213,16 @@ impl SessionMachine {
         }
         if let Some(delay) = state.cfg.stage_b_delay {
             std::thread::sleep(delay); // test/bench knob only
+        }
+        // a keyed session's queries carry rotated handle ids on the
+        // wire; the true ids come back here, before the range check and
+        // the basis pass (both ends key their mirrored bases on true
+        // ids — the guest memoizes and mirrors unrotated, and only its
+        // outgoing frames pass through the rotor)
+        if let Some(rotor) = &self.rotor {
+            for key in q.iter_mut() {
+                key.1 = rotor.unrotate(key.1);
+            }
         }
         // the range check comes before the basis pass: a rejected batch
         // must not have advanced the mirrored basis
@@ -1257,14 +1307,25 @@ impl SessionMachine {
                     return Step::Close { clean: false };
                 }
                 // the codec already rejects other versions; keep the
-                // check so in-memory links get the same contract
+                // check so in-memory links get the same contract. A v6
+                // peer may still open a *plain* hello (--secure off):
+                // same protocol, unsealed channel.
                 if (protocol != SERVE_PROTOCOL_VERSION
+                    && protocol != SERVE_PROTOCOL_V5
                     && protocol != SERVE_PROTOCOL_V4
                     && protocol != SERVE_PROTOCOL_V3
                     && protocol != SERVE_PROTOCOL_V2)
                     || sid == SESSIONLESS_ID
                 {
                     eprintln!("[sbp-serve] malformed SessionHello, closing");
+                    return Step::Close { clean: false };
+                }
+                // policy gate before admission, so a refused plaintext
+                // hello never burns a slot or a queue position
+                if state.cfg.secure == SecureMode::Require {
+                    eprintln!(
+                        "[sbp-serve] plaintext SessionHello under --secure require, closing"
+                    );
                     return Step::Close { clean: false };
                 }
                 // admission (v5): past the concurrency limit the host
@@ -1283,16 +1344,70 @@ impl SessionMachine {
                     Admission::Queued { ticket } => {
                         // no reply yet: the accept (or a Busy) leaves
                         // when the ticket resolves via poll_admission
-                        self.pending_hello = Some(PendingHello { sid, protocol, ticket });
+                        self.pending_hello =
+                            Some(PendingHello { sid, protocol, ticket, pubkey: None });
                         Step::Continue
                     }
                     Admission::Busy { retry_after_ms, reason } => {
-                        // only a v5 guest can decode a Busy frame; a
-                        // shed pre-v5 hello is answered by the close
-                        // alone (its existing failure path)
-                        if protocol >= SERVE_PROTOCOL_VERSION {
+                        // only a v5-or-newer guest can decode a Busy
+                        // frame; a shed pre-v5 hello is answered by the
+                        // close alone (its existing failure path)
+                        if protocol >= SERVE_PROTOCOL_V5 {
                             send(ToGuest::Busy { retry_after_ms, reason });
                         }
+                        Step::Close { clean: true }
+                    }
+                }
+            }
+            ToHost::SessionHelloSecure { session_id: sid, protocol, pubkey } => {
+                // the keyed hello must be the session's very first
+                // meaningful frame — stricter than the plain arm, which
+                // tolerates a legacy client's late hello. The reactor's
+                // deferred accept relies on this: an empty pending
+                // queue lets the accept emit directly, with the AEAD
+                // arming ordered around it.
+                if self.hello_seen || self.batches > 0 || self.keep_alives > 0 {
+                    eprintln!(
+                        "[sbp-serve] late or duplicate SessionHelloSecure in session {}, closing",
+                        self.session_id
+                    );
+                    return Step::Close { clean: false };
+                }
+                if state.cfg.secure == SecureMode::Off {
+                    eprintln!("[sbp-serve] keyed SessionHello under --secure off, closing");
+                    return Step::Close { clean: false };
+                }
+                // the codec already pins protocol == 6 and sid != 0;
+                // repeated so in-memory links get the same contract
+                if protocol != SERVE_PROTOCOL_VERSION || sid == SESSIONLESS_ID {
+                    eprintln!("[sbp-serve] malformed SessionHelloSecure, closing");
+                    return Step::Close { clean: false };
+                }
+                let verdict = if state.admission.enabled() && state.stop_requested() {
+                    state.admission.shed_draining()
+                } else {
+                    state.admission.try_admit()
+                };
+                match verdict {
+                    Admission::Admit { window } => {
+                        if self
+                            .complete_hello_secure(state, sid, protocol, window, &pubkey)
+                            .is_err()
+                        {
+                            return Step::Close { clean: false };
+                        }
+                        Step::Continue
+                    }
+                    Admission::Queued { ticket } => {
+                        self.pending_hello =
+                            Some(PendingHello { sid, protocol, ticket, pubkey: Some(pubkey) });
+                        Step::Continue
+                    }
+                    Admission::Busy { retry_after_ms, reason } => {
+                        // a keyed hello is v6, so the guest decodes the
+                        // Busy frame — which stays plaintext, like the
+                        // whole pre-handshake control plane
+                        send(ToGuest::Busy { retry_after_ms, reason });
                         Step::Close { clean: true }
                     }
                 }
@@ -1393,6 +1508,66 @@ impl SessionMachine {
         });
     }
 
+    /// Finish an admitted **keyed** handshake (protocol v6): generate
+    /// an ephemeral X25519 keypair, derive the per-direction AEAD keys
+    /// and the handle rotor from the shared secret, and *stage* the
+    /// [`ToGuest::SessionAcceptSecure`] for the driver instead of
+    /// sending it — only the driver can order the transport arming
+    /// around the accept (receive direction sealed before it leaves,
+    /// send direction after; the accept itself is plaintext). `Err`
+    /// means the client's public key produced the all-zero shared
+    /// secret (a small-order point an active adversary could use to
+    /// force a known key): the session closes rather than run on it.
+    fn complete_hello_secure(
+        &mut self,
+        state: &HostServeState,
+        sid: u32,
+        protocol: u32,
+        window: u32,
+        guest_pk: &[u8; PUBKEY_LEN],
+    ) -> Result<(), ()> {
+        let mut rng = ChaCha20Rng::from_os_entropy();
+        let (sk, host_pk) = keypair(&mut rng);
+        let Some(shared) = shared_secret(&sk, guest_pk) else {
+            eprintln!("[sbp-serve] degenerate client public key in keyed hello, closing");
+            return Err(());
+        };
+        let keys = derive_session_keys(&shared);
+        self.admitted = true;
+        self.hello_seen = true;
+        self.session_id = sid;
+        // a keyed hello is v6 by construction — nothing to negotiate
+        // down, the full delta machinery is on
+        self.negotiated = protocol.min(SERVE_PROTOCOL_VERSION);
+        let evict = state.cfg.basis_evict;
+        self.basis = DeltaBasis::new(self.cfg_delta, evict);
+        // the rotor survives resumption (the guest's memoized routes
+        // rotate under it for the whole session); only the AEAD keys
+        // are per connection — a resume re-keys, the rotor stays
+        if self.rotor.is_none() {
+            self.rotor = Some(HandleRotor::new(keys.rotor_seed));
+        }
+        self.handshake = Some((
+            ToGuest::SessionAcceptSecure {
+                session_id: sid,
+                max_inflight: window,
+                delta_window: self.cfg_delta as u32,
+                protocol: self.negotiated,
+                basis_evict: evict,
+                pubkey: host_pk,
+            },
+            keys,
+        ));
+        Ok(())
+    }
+
+    /// Take the keyed handshake staged by the last fed frame, if one
+    /// completed: the driver must arm its receive direction, emit the
+    /// accept (plaintext), then arm its send direction — in that order.
+    fn take_handshake(&mut self) -> Option<(ToGuest, SessionKeys)> {
+        self.handshake.take()
+    }
+
     /// Is this session's hello still parked in the admission queue?
     /// While it is, the driver polls [`Self::poll_admission`] instead
     /// of letting the idle clock run against a guest that is only
@@ -1412,12 +1587,25 @@ impl SessionMachine {
             TicketPoll::Pending => Step::Continue,
             TicketPoll::Admit { window } => {
                 self.pending_hello = None;
-                self.complete_hello(state, ph.sid, ph.protocol, window, send);
+                match ph.pubkey {
+                    Some(pk) => {
+                        // a queued keyed hello resolves like an
+                        // immediate admit: the accept is staged and the
+                        // driver arms around it
+                        if self
+                            .complete_hello_secure(state, ph.sid, ph.protocol, window, &pk)
+                            .is_err()
+                        {
+                            return Step::Close { clean: false };
+                        }
+                    }
+                    None => self.complete_hello(state, ph.sid, ph.protocol, window, send),
+                }
                 Step::Continue
             }
             TicketPoll::Expired { retry_after_ms } => {
                 self.pending_hello = None;
-                if ph.protocol >= SERVE_PROTOCOL_VERSION {
+                if ph.protocol >= SERVE_PROTOCOL_V5 {
                     send(ToGuest::Busy { retry_after_ms, reason: BusyReason::QueueExpired });
                 }
                 Step::Close { clean: true }
@@ -1469,6 +1657,7 @@ impl SessionMachine {
             idle_reaped,
             wall_seconds,
             protocol: self.negotiated,
+            secure: self.rotor.is_some(),
             basis_evict: self.basis.mode(),
             ring_high_water,
             decode_stall_seconds,
@@ -1590,12 +1779,31 @@ pub fn serve_session<T: HostTransport + Send + Sync + 'static>(
             // idle window — the guest is waiting on *us*, so the
             // dead-peer clock does not run (the queue deadline bounds
             // this state instead)
-            if let Step::Close { clean } = machine.poll_admission(state, &mut |m| link.send(m)) {
+            let step = machine.poll_admission(state, &mut |m| link.send(m));
+            if let Some((accept, keys)) = machine.take_handshake() {
+                // a queued keyed hello just admitted: arm the receive
+                // direction before the accept leaves (the guest seals
+                // from the accept on), send the plaintext accept, then
+                // arm the send direction
+                link.set_secure_rx(keys.guest_to_host);
+                link.send(accept);
+                link.set_secure_tx(keys.host_to_guest);
+            }
+            if let Step::Close { clean } = step {
                 clean_close = clean;
                 break;
             }
             if machine.pending_hello_active() {
-                match ring_rx.recv_timeout(ADMISSION_POLL_TICK) {
+                // sleep only as long as the verdict can possibly take:
+                // the earlier of the ticket's queue deadline and the
+                // next AIMD retune boundary, instead of a fixed 1 ms
+                // spin that woke a queued hello a thousand times a
+                // second on an otherwise quiet host
+                let tick = machine
+                    .pending_hello
+                    .map(|ph| state.admission.poll_wait_hint(ph.ticket))
+                    .unwrap_or(ADMISSION_POLL_TICK);
+                match ring_rx.recv_timeout(tick) {
                     Ok(_) => {
                         // any frame before the queued hello resolves is
                         // a protocol violation — on_frame's guard would
@@ -1636,7 +1844,19 @@ pub fn serve_session<T: HostTransport + Send + Sync + 'static>(
         };
         compute_idle += idle0.elapsed();
         ring_depth.fetch_sub(1, Ordering::SeqCst);
-        if let Step::Close { clean } = machine.on_frame(state, msg, &mut |m| link.send(m)) {
+        let step = machine.on_frame(state, msg, &mut |m| link.send(m));
+        if let Some((accept, keys)) = machine.take_handshake() {
+            // keyed handshake completed on this frame: rx seals before
+            // the accept leaves, tx after — the accept itself (like
+            // every pre-handshake frame) is plaintext. Arming rx here
+            // is race-free even against Stage A mid-read: the guest
+            // only seals after it has *received* the accept, which
+            // cannot leave before the rx direction is armed.
+            link.set_secure_rx(keys.guest_to_host);
+            link.send(accept);
+            link.set_secure_tx(keys.host_to_guest);
+        }
+        if let Step::Close { clean } = step {
             clean_close = clean;
             break;
         }
@@ -2071,10 +2291,12 @@ const WRITE_SOFT_LIMIT: usize = 1 << 20;
 /// [`HostServeState::poll_stall_seconds`].
 const POLL_PARK: Duration = Duration::from_micros(200);
 
-/// How often a session whose hello is parked in the admission queue
-/// polls its ticket (both engines): coarse enough to cost nothing,
-/// fine enough that a freed slot admits promptly against the queue
-/// deadline.
+/// Fallback poll cadence for a hello parked in the admission queue.
+/// The threaded engine normally sleeps the controller's
+/// [`AdmissionController::poll_wait_hint`] — until the earlier of the
+/// ticket's queue deadline and the next AIMD retune boundary — and only
+/// falls back to this fixed tick if the ticket vanished underneath it;
+/// the reactor polls at sweep cadence and needs neither.
 const ADMISSION_POLL_TICK: Duration = Duration::from_millis(1);
 
 /// Consecutive progress-free sweeps before a worker parks: a few hot
@@ -2238,6 +2460,16 @@ fn sweep_session(
         let step = machine.poll_admission(state, &mut |m: ToGuest| {
             pending.push_back(PendingAnswer::Ready(m));
         });
+        if let Some((accept, keys)) = sess.machine.take_handshake() {
+            // a queued keyed hello just admitted. The hello was the
+            // session's first meaningful frame, so nothing can be
+            // pending ahead of the accept: it emits directly, with rx
+            // armed before it leaves and tx after (the accept itself
+            // is plaintext)
+            sess.conn.arm_secure_rx(keys.guest_to_host);
+            emit_to_guest(state, sess, ctx, accept);
+            sess.conn.arm_secure_tx(keys.host_to_guest);
+        }
         if let Step::Close { clean } = step {
             sess.closing = Some(clean);
         }
@@ -2306,10 +2538,20 @@ fn sweep_session(
                     }
                 };
                 sess.conn.consume_frame();
-                if let ToHost::SessionResume { session, last_acked_chunk } = msg {
+                let resume = match &msg {
+                    ToHost::SessionResume { session, last_acked_chunk } => {
+                        Some((*session, *last_acked_chunk, None))
+                    }
+                    ToHost::SessionResumeSecure { session, last_acked_chunk, pubkey } => {
+                        Some((*session, *last_acked_chunk, Some(*pubkey)))
+                    }
+                    _ => None,
+                };
+                if let Some((session, last_acked_chunk, guest_pk)) = resume {
                     // handled by the reactor, not the protocol machine:
                     // resuming swaps a parked machine into this slot
-                    if !resume_session(state, sess, ctx, session, last_acked_chunk, wire_len) {
+                    if !resume_session(state, sess, ctx, session, last_acked_chunk, guest_pk, wire_len)
+                    {
                         // nothing (valid) to resume — close; the guest
                         // backs off and retries until the dying
                         // connection has actually been parked
@@ -2337,6 +2579,16 @@ fn sweep_session(
                         let step = machine.on_frame(state, other, &mut |m: ToGuest| {
                             pending.push_back(PendingAnswer::Ready(m));
                         });
+                        if let Some((accept, keys)) = sess.machine.take_handshake() {
+                            // keyed handshake completed on this frame:
+                            // the machine rejects a late keyed hello,
+                            // so the pending queue is empty and the
+                            // accept emits directly — rx armed before
+                            // it leaves, tx after (accept plaintext)
+                            sess.conn.arm_secure_rx(keys.guest_to_host);
+                            emit_to_guest(state, sess, ctx, accept);
+                            sess.conn.arm_secure_tx(keys.host_to_guest);
+                        }
                         if let Step::Close { clean } = step {
                             sess.closing = Some(clean);
                         }
@@ -2592,20 +2844,44 @@ fn emit_to_guest(state: &HostServeState, sess: &mut NbSession, ctx: &mut WorkerC
 }
 
 /// Swap a parked session's state into the connection that presented a
-/// valid [`ToHost::SessionResume`], emit the [`ToGuest::ResumeAccept`]
-/// handshake, and queue the un-acknowledged answer frames verbatim.
-/// Returns `false` (and leaves any parked state untouched, for the
-/// expiry sweep to report) when there is nothing valid to resume — a
-/// fresh close is the defined answer and the guest's retry loop covers
-/// the park race.
+/// valid [`ToHost::SessionResume`] (or, for a keyed session, a
+/// [`ToHost::SessionResumeSecure`] carrying a fresh guest public key),
+/// emit the resume-accept handshake, and queue the un-acknowledged
+/// answer frames. A keyed resume derives **fresh** AEAD keys for the
+/// new connection — retained answers were stored as plaintext, so the
+/// replay re-seals them with fresh nonces at queue time and never
+/// re-uses a nonce from the dead connection — while the session's
+/// handle rotor carries over unchanged (the guest's memoized routes
+/// rotate under it). Returns `false` (and leaves any parked state
+/// untouched, for the expiry sweep to report) when there is nothing
+/// valid to resume — a fresh close is the defined answer and the
+/// guest's retry loop covers the park race.
 fn resume_session(
     state: &HostServeState,
     sess: &mut NbSession,
     ctx: &mut WorkerCtx,
     session: u32,
     last_acked_chunk: u32,
+    guest_pk: Option<[u8; PUBKEY_LEN]>,
     wire_len: u64,
 ) -> bool {
+    // the DH runs before any parked state moves: a degenerate client
+    // public key must leave the parked session intact for a correct
+    // retry to claim
+    let fresh_keys = match guest_pk {
+        None => None,
+        Some(gpk) => {
+            let mut rng = ChaCha20Rng::from_os_entropy();
+            let (sk, host_pk) = keypair(&mut rng);
+            let Some(shared) = shared_secret(&sk, &gpk) else {
+                eprintln!(
+                    "[sbp-serve] degenerate client public key in SessionResumeSecure, closing"
+                );
+                return false;
+            };
+            Some((host_pk, derive_session_keys(&shared)))
+        }
+    };
     // only the very first frame of a fresh connection may resume (a
     // hello still queued for admission counts as mid-session too)
     if sess.machine.hello_seen
@@ -2631,6 +2907,18 @@ fn resume_session(
             eprintln!("[sbp-serve] SessionResume for unknown/unparked session {session}, closing");
             return false;
         };
+        // a session resumes with the channel kind it handshook: a
+        // plaintext resume of a keyed session would leak what the
+        // session encrypted, a keyed resume of a plaintext session has
+        // no rotor for its routes — both close, parked state untouched
+        if p.machine.rotor.is_some() != fresh_keys.is_some() {
+            eprintln!(
+                "[sbp-serve] resume channel kind mismatch for session {session} \
+                 (keyed session: {}), closing",
+                p.machine.rotor.is_some()
+            );
+            return false;
+        }
         if p.parked_at.elapsed() > window {
             // expired but not yet swept: the sweep owns reporting it
             eprintln!("[sbp-serve] SessionResume for expired session {session}, closing");
@@ -2662,7 +2950,14 @@ fn resume_session(
         state.admission.force_admit();
         sess.machine.admitted = true;
     }
-    sess.counters.record_to_host(ToHostKind::SessionResume, wire_len);
+    sess.counters.record_to_host(
+        if fresh_keys.is_some() {
+            ToHostKind::SessionResumeSecure
+        } else {
+            ToHostKind::SessionResume
+        },
+        wire_len,
+    );
     // drop what the guest confirmed; everything left replays, in order
     while sess.replay.len() as u64 > sess.answers_sent - last_acked_chunk as u64 {
         sess.replay.pop_front();
@@ -2671,14 +2966,25 @@ fn resume_session(
         Some(first) => first.epoch_before as u32,
         None => sess.basis_inserts as u32,
     };
-    let accept = ToGuest::ResumeAccept {
-        next_chunk: (sess.answers_sent + 1) as u32,
-        basis_epoch,
+    let next_chunk = (sess.answers_sent + 1) as u32;
+    let accept = match &fresh_keys {
+        None => ToGuest::ResumeAccept { next_chunk, basis_epoch },
+        Some((host_pk, _)) => {
+            ToGuest::ResumeAcceptSecure { next_chunk, basis_epoch, pubkey: *host_pk }
+        }
     };
     codec::encode_to_guest_into(&ctx.suite, ctx.ct_len, &accept, &mut ctx.scratch);
     sess.counters
         .record_to_guest(accept.kind(), (ctx.scratch.len() + codec::FRAME_HEADER_LEN) as u64);
+    // the resume accept is the connection's last plaintext frame: it is
+    // queued before the send direction arms, then both directions seal
+    // — so every replayed answer below re-enters queue_frame as
+    // plaintext and is re-sealed under the *new* keys with fresh nonces
     sess.conn.queue_frame(&ctx.scratch);
+    if let Some((_, keys)) = fresh_keys {
+        sess.conn.arm_secure_rx(keys.guest_to_host);
+        sess.conn.arm_secure_tx(keys.host_to_guest);
+    }
     for entry in &sess.replay {
         sess.counters
             .record_to_guest(entry.kind, (entry.bytes.len() + codec::FRAME_HEADER_LEN) as u64);

@@ -41,6 +41,7 @@ use super::codec;
 use super::message::{ToGuest, ToHost};
 use super::transport::{GuestTransport, HostTransport, NetCounters, NetSnapshot};
 use crate::crypto::cipher::CipherSuite;
+use crate::crypto::secure::FrameCipher;
 use crate::data::binning::BinnedMatrix;
 use crate::data::sparse::SparseBinned;
 use crate::federation::host::HostParty;
@@ -107,6 +108,15 @@ pub struct NbConn {
     /// are already written.
     wbuf: Vec<u8>,
     wpos: usize,
+    /// v6 session channel, armed per direction once the handshake keys
+    /// are derived ([`Self::arm_secure_rx`]/[`Self::arm_secure_tx`]).
+    /// `rplain` marks the resident frame as already opened: header +
+    /// plaintext length, set once per frame so repeated polls never
+    /// double-decrypt. `wseal` is the reused seal scratch.
+    dec: Option<FrameCipher>,
+    enc: Option<FrameCipher>,
+    rplain: Option<usize>,
+    wseal: Vec<u8>,
 }
 
 impl NbConn {
@@ -115,7 +125,41 @@ impl NbConn {
     pub fn new(stream: TcpStream) -> std::io::Result<Self> {
         stream.set_nonblocking(true)?;
         stream.set_nodelay(true).ok();
-        Ok(NbConn { stream, rbuf: Vec::new(), rfill: 0, rneed: None, wbuf: Vec::new(), wpos: 0 })
+        Ok(NbConn {
+            stream,
+            rbuf: Vec::new(),
+            rfill: 0,
+            rneed: None,
+            wbuf: Vec::new(),
+            wpos: 0,
+            dec: None,
+            enc: None,
+            rplain: None,
+            wseal: Vec::new(),
+        })
+    }
+
+    /// Arm v6 AEAD on the read direction: every frame *completed* after
+    /// this call is opened with `key` before being surfaced. Safe to
+    /// call while the (plaintext) handshake frame is still resident —
+    /// decryption happens once per frame at completion, and reads never
+    /// run past the current frame's end, so no sealed byte of the next
+    /// frame can have been pre-buffered.
+    pub fn arm_secure_rx(&mut self, key: [u8; 32]) {
+        self.dec = Some(FrameCipher::new(key));
+    }
+
+    /// Arm v6 AEAD on the write direction: every frame *queued* after
+    /// this call is sealed with `key`. Called only after the plaintext
+    /// accept has been queued, so the accept itself stays in the clear.
+    pub fn arm_secure_tx(&mut self, key: [u8; 32]) {
+        self.enc = Some(FrameCipher::new(key));
+    }
+
+    /// Whether the read direction is armed (used by the reactor to
+    /// refuse a second keyed hello on an already-secure link).
+    pub fn secure_rx(&self) -> bool {
+        self.dec.is_some()
     }
 
     /// Drive the read side as far as the socket allows without
@@ -129,6 +173,9 @@ impl NbConn {
             let target = self.rneed.unwrap_or(codec::FRAME_HEADER_LEN);
             if self.rfill >= target {
                 if self.rneed.is_some() {
+                    if self.dec.is_some() && self.rplain.is_none() {
+                        self.open_resident(target)?;
+                    }
                     return Ok(RecvPoll::Frame);
                 }
                 // header complete: learn the frame's total size
@@ -166,16 +213,33 @@ impl NbConn {
         }
     }
 
-    /// The completed frame's payload (valid after [`RecvPoll::Frame`]).
+    /// Open the resident sealed frame in place: verify the tag, then
+    /// decrypt the ciphertext prefix and remember the plaintext bound.
+    /// A bad tag (tampering, truncation, or a plaintext frame from a
+    /// peer that skipped the handshake) is a [`codec::WireError`] — the
+    /// reactor closes the connection loudly, exactly like any other
+    /// malformed frame, and never answers it.
+    fn open_resident(&mut self, total: usize) -> Result<(), codec::WireError> {
+        let dec = self.dec.as_mut().expect("decrypt direction armed");
+        let plain = dec
+            .open_in_place(&mut self.rbuf[codec::FRAME_HEADER_LEN..total])
+            .map_err(|()| codec::WireError::Malformed("AEAD tag verification failed"))?;
+        self.rplain = Some(codec::FRAME_HEADER_LEN + plain);
+        Ok(())
+    }
+
+    /// The completed frame's payload (valid after [`RecvPoll::Frame`]);
+    /// the decrypted plaintext when the read direction is armed.
     pub fn frame_payload(&self) -> &[u8] {
         let total = self.rneed.expect("no completed frame resident");
-        &self.rbuf[codec::FRAME_HEADER_LEN..total]
+        &self.rbuf[codec::FRAME_HEADER_LEN..self.rplain.unwrap_or(total)]
     }
 
     /// Release the current frame so the next [`Self::poll_frame`] can
     /// assemble its successor.
     pub fn consume_frame(&mut self) {
         let total = self.rneed.take().expect("no completed frame resident");
+        self.rplain = None;
         // reads are bounded by the frame end, so nothing of the next
         // frame can be in the buffer — but shift defensively anyway
         self.rbuf.copy_within(total..self.rfill, 0);
@@ -195,8 +259,17 @@ impl NbConn {
             self.wbuf.drain(..self.wpos);
             self.wpos = 0;
         }
-        self.wbuf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-        self.wbuf.extend_from_slice(payload);
+        if let Some(enc) = &mut self.enc {
+            // replayed v4 answers re-enter here as plaintext, so every
+            // (re)transmission is sealed under a fresh nonce — the host
+            // never caches or re-sends ciphertext
+            enc.seal_into(payload, &mut self.wseal);
+            self.wbuf.extend_from_slice(&(self.wseal.len() as u64).to_le_bytes());
+            self.wbuf.extend_from_slice(&self.wseal);
+        } else {
+            self.wbuf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            self.wbuf.extend_from_slice(payload);
+        }
     }
 
     /// Write queued bytes until the kernel would block or all are gone.
@@ -257,7 +330,24 @@ pub struct TcpGuestTransport {
     addr: String,
     suite: CipherSuite,
     ct_len: usize,
+    /// v6 session channel (both directions plus the seal scratch),
+    /// armed by [`GuestTransport::set_secure`] once the handshake keys
+    /// are derived and cleared by [`GuestTransport::reconnect`] — a
+    /// re-dialed connection always re-handshakes with fresh keys, so a
+    /// nonce counter burned on a dead socket is never reused. Locked
+    /// strictly after `io` (the only nesting order used).
+    secure: Mutex<Option<GuestSecure>>,
     counters: Arc<NetCounters>,
+}
+
+/// The guest endpoint's armed v6 channel state.
+struct GuestSecure {
+    /// Seals guest→host frames.
+    enc: FrameCipher,
+    /// Opens host→guest frames.
+    dec: FrameCipher,
+    /// Reused seal output buffer (keeps secure sends allocation-free).
+    scratch: Vec<u8>,
 }
 
 impl TcpGuestTransport {
@@ -272,6 +362,7 @@ impl TcpGuestTransport {
             addr: addr.to_string(),
             suite,
             ct_len,
+            secure: Mutex::new(None),
             counters: Arc::new(NetCounters::default()),
         })
     }
@@ -301,8 +392,18 @@ impl TcpGuestTransport {
         let mut io = self.io.lock().expect("tcp stream poisoned");
         let ConnIo { stream, wbuf, .. } = &mut *io;
         codec::encode_to_host_into(&self.suite, self.ct_len, msg, wbuf);
-        let mut frame = (wbuf.len() as u64).to_le_bytes().to_vec();
-        frame.extend_from_slice(wbuf);
+        // seal first when the channel is armed: the torn bytes on the
+        // wire must be a prefix of what a whole send would have written
+        let mut sec = self.secure.lock().expect("secure channel poisoned");
+        let body: &[u8] = match sec.as_mut() {
+            Some(GuestSecure { enc, scratch, .. }) => {
+                enc.seal_into(wbuf, scratch);
+                scratch
+            }
+            None => wbuf,
+        };
+        let mut frame = (body.len() as u64).to_le_bytes().to_vec();
+        frame.extend_from_slice(body);
         let cut = n_bytes.min(frame.len());
         stream.write_all(&frame[..cut])?;
         stream.flush()
@@ -326,9 +427,19 @@ impl GuestTransport for TcpGuestTransport {
         let mut io = self.io.lock().expect("tcp stream poisoned");
         let ConnIo { stream, wbuf, .. } = &mut *io;
         codec::encode_to_host_into(&self.suite, self.ct_len, &msg, wbuf);
-        codec::write_frame(stream, wbuf)?;
+        let mut sec = self.secure.lock().expect("secure channel poisoned");
+        match sec.as_mut() {
+            Some(GuestSecure { enc, scratch, .. }) => {
+                enc.seal_into(wbuf, scratch);
+                codec::write_frame(stream, scratch)?;
+            }
+            None => codec::write_frame(stream, wbuf)?,
+        }
+        drop(sec);
         // recorded only after the kernel accepted the whole frame — a
-        // failed send never took protocol effect and is not counted
+        // failed send never took protocol effect and is not counted.
+        // Byte accounting stays at the plaintext frame size so secure
+        // and plain runs snapshot identically.
         self.counters
             .record_to_host(msg.kind(), (wbuf.len() + codec::FRAME_HEADER_LEN) as u64);
         Ok(())
@@ -357,6 +468,18 @@ impl GuestTransport for TcpGuestTransport {
             Err(codec::WireError::Io(e)) => return Err(e),
             Err(e) => panic!("malformed frame from host: {e}"),
         }
+        let mut sec = self.secure.lock().expect("secure channel poisoned");
+        if let Some(GuestSecure { dec, .. }) = sec.as_mut() {
+            // the guest drives the protocol: a frame the session keys
+            // cannot authenticate means the host is broken or the
+            // channel is under attack, and like any other malformed
+            // host frame there is no way to make progress
+            let plain = dec
+                .open_in_place(rbuf)
+                .unwrap_or_else(|()| panic!("malformed frame from host: bad AEAD tag"));
+            rbuf.truncate(plain);
+        }
+        drop(sec);
         let msg = codec::decode_to_guest(&self.suite, self.ct_len, rbuf)
             .expect("malformed frame from host");
         self.counters
@@ -369,7 +492,18 @@ impl GuestTransport for TcpGuestTransport {
         let mut io = self.io.lock().expect("tcp stream poisoned");
         let _ = io.stream.shutdown(std::net::Shutdown::Both);
         *io = ConnIo::new(stream);
+        // keys die with the connection: the resume handshake on the new
+        // socket derives a fresh pair before re-arming
+        *self.secure.lock().expect("secure channel poisoned") = None;
         Ok(())
+    }
+
+    fn set_secure(&self, enc_key: [u8; 32], dec_key: [u8; 32]) {
+        *self.secure.lock().expect("secure channel poisoned") = Some(GuestSecure {
+            enc: FrameCipher::new(enc_key),
+            dec: FrameCipher::new(dec_key),
+            scratch: Vec::new(),
+        });
     }
 }
 
@@ -391,6 +525,13 @@ pub struct TcpHostTransport {
     /// that lock.
     ctl: TcpStream,
     suite: Mutex<Option<(CipherSuite, usize)>>,
+    /// v6 AEAD, split per direction like the I/O locks themselves so
+    /// the decode thread opening a request never contends with the
+    /// compute thread sealing an answer. Nesting order is always
+    /// `rd → sec_rx` and `wr → sec_tx` — the two chains never touch,
+    /// so no deadlock is possible.
+    sec_rx: Mutex<Option<FrameCipher>>,
+    sec_tx: Mutex<Option<FrameCipher>>,
     counters: Arc<NetCounters>,
 }
 
@@ -404,6 +545,8 @@ impl TcpHostTransport {
             wr: Mutex::new(ConnIo::new(stream)),
             ctl,
             suite: Mutex::new(None),
+            sec_rx: Mutex::new(None),
+            sec_tx: Mutex::new(None),
             counters: Arc::new(NetCounters::default()),
         }
     }
@@ -424,6 +567,17 @@ impl HostTransport for TcpHostTransport {
             Err(e) => {
                 eprintln!("[sbp-host] transport error, closing: {e}");
                 return None;
+            }
+        }
+        if let Some(dec) = self.sec_rx.lock().expect("secure rx poisoned").as_mut() {
+            // a frame the session keys cannot authenticate ends the
+            // session loudly and is never decoded, let alone answered
+            match dec.open_in_place(rbuf) {
+                Ok(plain) => rbuf.truncate(plain),
+                Err(()) => {
+                    eprintln!("[sbp-host] AEAD tag verification failed, closing");
+                    return None;
+                }
             }
         }
         let mut suite = self.suite.lock().expect("suite poisoned");
@@ -457,11 +611,18 @@ impl HostTransport for TcpHostTransport {
             },
         );
         let mut io = self.wr.lock().expect("tcp stream poisoned");
-        let ConnIo { stream, wbuf, .. } = &mut *io;
+        let ConnIo { stream, rbuf, wbuf } = &mut *io;
         codec::encode_to_guest_into(&suite, ct_len, &msg, wbuf);
         self.counters
             .record_to_guest(msg.kind(), (wbuf.len() + codec::FRAME_HEADER_LEN) as u64);
-        codec::write_frame(stream, wbuf).expect("tcp send to guest failed");
+        if let Some(enc) = self.sec_tx.lock().expect("secure tx poisoned").as_mut() {
+            // the write half's read scratch is otherwise idle — reuse
+            // it as the seal buffer, keeping secure sends allocation-free
+            enc.seal_into(wbuf, rbuf);
+            codec::write_frame(stream, rbuf).expect("tcp send to guest failed");
+        } else {
+            codec::write_frame(stream, wbuf).expect("tcp send to guest failed");
+        }
     }
 
     fn shutdown(&self) {
@@ -469,6 +630,14 @@ impl HostTransport for TcpHostTransport {
         // the FIN; this only aborts a decode-stage read still blocked
         // after the session ended
         let _ = self.ctl.shutdown(std::net::Shutdown::Both);
+    }
+
+    fn set_secure_rx(&self, key: [u8; 32]) {
+        *self.sec_rx.lock().expect("secure rx poisoned") = Some(FrameCipher::new(key));
+    }
+
+    fn set_secure_tx(&self, key: [u8; 32]) {
+        *self.sec_tx.lock().expect("secure tx poisoned") = Some(FrameCipher::new(key));
     }
 }
 
@@ -619,6 +788,159 @@ mod tests {
             matches!(err, codec::WireError::Truncated),
             "expected Truncated, got {err:?}"
         );
+    }
+
+    #[test]
+    fn secure_channel_crosses_blocking_transports_with_plaintext_accounting() {
+        use crate::federation::message::SERVE_PROTOCOL_VERSION;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let k_gh = [0x11u8; 32];
+        let k_hg = [0x22u8; 32];
+
+        let server = thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let host = TcpHostTransport::new(stream);
+            let msg = host.recv().expect("hello frame");
+            assert!(matches!(msg, ToHost::SessionHello { session_id: 9, .. }));
+            // rx armed before the (plaintext) answer goes out, tx after:
+            // the guest's first sealed frame may already be in flight
+            // the moment it sees our plaintext accept
+            host.set_secure_rx(k_gh);
+            host.send(ToGuest::Ack);
+            host.set_secure_tx(k_hg);
+            let msg = host.recv().expect("sealed route frame");
+            let ToHost::PredictRoute { session, chunk, queries } = msg else {
+                panic!("expected PredictRoute")
+            };
+            assert_eq!((session, chunk), (9, 1));
+            assert_eq!(queries, vec![(0, 5), (1, 7)]);
+            host.send(ToGuest::RouteAnswers { session: 9, chunk: 1, n: 2, bits: vec![0b10] });
+            let msg = host.recv().expect("second sealed frame");
+            assert!(matches!(msg, ToHost::KeepAlive), "nonce counters stay in step");
+            host.send(ToGuest::Ack);
+            assert!(host.recv().is_none(), "guest closes");
+        });
+
+        let suite = CipherSuite::new_plain(64);
+        let ct_len = suite.ct_byte_len();
+        let guest = TcpGuestTransport::connect(&addr.to_string(), suite).unwrap();
+        let hello = ToHost::SessionHello { session_id: 9, protocol: SERVE_PROTOCOL_VERSION };
+        let mut want_to_host = codec::to_host_wire_len(&hello, ct_len) as u64;
+        guest.send(hello);
+        assert!(matches!(guest.recv(), ToGuest::Ack));
+        guest.set_secure(k_gh, k_hg);
+        let route = ToHost::PredictRoute { session: 9, chunk: 1, queries: vec![(0, 5), (1, 7)] };
+        want_to_host += codec::to_host_wire_len(&route, ct_len) as u64;
+        guest.send(route);
+        let ToGuest::RouteAnswers { n, bits, .. } = guest.recv() else {
+            panic!("expected RouteAnswers")
+        };
+        assert_eq!((n, bits), (2, vec![0b10]));
+        want_to_host += codec::to_host_wire_len(&ToHost::KeepAlive, ct_len) as u64;
+        guest.send(ToHost::KeepAlive);
+        assert!(matches!(guest.recv(), ToGuest::Ack));
+
+        // both ends account the plaintext frame size: sealed frames add
+        // 16 tag bytes on the wire, but snapshots must stay identical
+        // across secure modes and transports
+        let snap = guest.snapshot();
+        assert_eq!(snap.bytes_to_host, want_to_host);
+        drop(guest);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn host_transport_closes_on_tampered_ciphertext() {
+        use crate::crypto::secure::FrameCipher;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        let host = TcpHostTransport::new(stream);
+        host.set_secure_rx([7u8; 32]);
+
+        let mut enc = FrameCipher::new([7u8; 32]);
+        let mut sealed = Vec::new();
+        enc.seal_into(b"not a real frame, tag is what matters", &mut sealed);
+        sealed[3] ^= 0x01; // one flipped ciphertext bit
+        client.write_all(&(sealed.len() as u64).to_le_bytes()).unwrap();
+        client.write_all(&sealed).unwrap();
+        client.flush().unwrap();
+        // loud close, no panic, no answer
+        assert!(host.recv().is_none());
+    }
+
+    #[test]
+    fn nonblocking_conn_opens_sealed_frames_and_rejects_tampering() {
+        use crate::crypto::secure::FrameCipher;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut conn = NbConn::new(server).unwrap();
+        conn.arm_secure_rx([9u8; 32]);
+        assert!(conn.secure_rx());
+
+        let mut enc = FrameCipher::new([9u8; 32]);
+        let mut sealed = Vec::new();
+        enc.seal_into(b"sealed reactor frame", &mut sealed);
+        let mut frame = (sealed.len() as u64).to_le_bytes().to_vec();
+        frame.extend_from_slice(&sealed);
+        // dribble it so decryption happens exactly once, at completion
+        client.write_all(&frame[..11]).unwrap();
+        assert_eq!(conn.poll_frame().unwrap(), RecvPoll::Pending);
+        client.write_all(&frame[11..]).unwrap();
+        assert_eq!(poll_settled(&mut conn).unwrap(), RecvPoll::Frame);
+        // a second poll on the resident frame must not double-decrypt
+        assert_eq!(conn.poll_frame().unwrap(), RecvPoll::Frame);
+        assert_eq!(conn.frame_payload(), b"sealed reactor frame");
+        conn.consume_frame();
+
+        // tampered follow-up: tag verification fails loudly
+        let mut sealed = Vec::new();
+        enc.seal_into(b"tampered in flight", &mut sealed);
+        let mid = sealed.len() / 2;
+        sealed[mid] ^= 0x80;
+        client.write_all(&(sealed.len() as u64).to_le_bytes()).unwrap();
+        client.write_all(&sealed).unwrap();
+        client.flush().unwrap();
+        let err = poll_settled(&mut conn).expect_err("bad tag must error");
+        assert!(
+            matches!(err, codec::WireError::Malformed("AEAD tag verification failed")),
+            "expected AEAD failure, got {err:?}"
+        );
+    }
+
+    #[test]
+    fn nonblocking_conn_seals_queued_frames_with_fresh_nonces() {
+        use crate::crypto::secure::FrameCipher;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut conn = NbConn::new(server).unwrap();
+        conn.arm_secure_tx([3u8; 32]);
+
+        // the same payload queued twice — a v4 replay re-sends retained
+        // plaintext — must seal to different bytes (fresh nonce each)
+        conn.queue_frame(b"replayed answer");
+        conn.queue_frame(b"replayed answer");
+        while !conn.write_idle() {
+            conn.flush_pending().unwrap();
+        }
+        let body_len = b"replayed answer".len() + crate::crypto::secure::TAG_LEN;
+        let mut buf = vec![0u8; 2 * (8 + body_len)];
+        client.read_exact(&mut buf).unwrap();
+        let (f1, f2) = buf.split_at(8 + body_len);
+        assert_eq!(&f1[..8], &(body_len as u64).to_le_bytes());
+        assert_ne!(f1[8..], f2[8..], "identical plaintext, distinct ciphertext");
+        let mut dec = FrameCipher::new([3u8; 32]);
+        for frame in [f1, f2] {
+            let mut body = frame[8..].to_vec();
+            let n = dec.open_in_place(&mut body).expect("honest sealed frame");
+            assert_eq!(&body[..n], b"replayed answer");
+        }
     }
 
     #[test]

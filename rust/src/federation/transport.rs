@@ -69,6 +69,16 @@ pub trait GuestTransport {
             "this transport cannot reconnect",
         ))
     }
+
+    /// Arm the serve-protocol v6 session channel: every frame sent
+    /// after this call is sealed with `enc_key`, every frame received
+    /// is opened with `dec_key` (ChaCha20-Poly1305, per-direction nonce
+    /// counters — see [`crate::crypto::secure`]). In-memory links carry
+    /// structured messages, not bytes, so their channel is trivially
+    /// private already and the default is a no-op; byte accounting
+    /// everywhere stays at the **plaintext** frame size, which keeps
+    /// [`NetSnapshot`] parity across transports and secure modes.
+    fn set_secure(&self, _enc_key: [u8; 32], _dec_key: [u8; 32]) {}
 }
 
 /// Host-side endpoint: receive [`ToHost`] (None on shutdown/close), send
@@ -91,6 +101,18 @@ pub trait HostTransport {
     /// serving engine calls this when the compute stage ends a session
     /// while the decode stage may still be mid-read.
     fn shutdown(&self) {}
+
+    /// Arm v6 AEAD on the receive direction only: frames read after
+    /// this call are opened with `key`. Armed *before* the accept is
+    /// emitted so the guest's first sealed frame — possibly already in
+    /// flight — decrypts; split from the send side because the accept
+    /// itself must leave in plaintext. No-op for in-memory links.
+    fn set_secure_rx(&self, _key: [u8; 32]) {}
+
+    /// Arm v6 AEAD on the send direction: frames sent after this call
+    /// are sealed with `key`. Armed *after* the plaintext accept (and
+    /// any `Busy`) has been emitted. No-op for in-memory links.
+    fn set_secure_tx(&self, _key: [u8; 32]) {}
 }
 
 /// Cumulative traffic counters (shared guest-side and host-side), overall

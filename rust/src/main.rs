@@ -142,6 +142,9 @@ fn main() {
                  \x20 --progress             per-chunk progress lines on stderr\n\
                  \x20 --dummy-queries <n>    decoy queries shuffled into each routing batch\n\
                  \x20 --decoy-seed <n>       pin the decoy stream (default: OS entropy)\n\
+                 \x20 --secure <m>           encrypted channel (serve protocol v6):\n\
+                 \x20                        prefer (default; plaintext to older hosts) |\n\
+                 \x20                        require (fail instead of falling back) | off\n\
                  \x20 --shutdown-hosts       ask the serving hosts to exit afterwards\n\
                  \n\
                  serve-predict options:\n\
@@ -178,6 +181,9 @@ fn main() {
                  \x20                        (serve protocol v5; default 0 = off)\n\
                  \x20 --admission-queue <n>  park up to n over-limit hellos in a FIFO\n\
                  \x20                        before shedding with Busy (default 0)\n\
+                 \x20 --secure <m>           encrypted sessions (serve protocol v6):\n\
+                 \x20                        prefer (default; plaintext for older guests) |\n\
+                 \x20                        require (close plaintext hellos) | off\n\
                  \x20 --bind <ip> --port <p> listen address (default 127.0.0.1:7979)\n\
                  \n\
                  datagen options:\n\
@@ -543,6 +549,7 @@ fn predict_opts(
         reconnect_retries: args.get_parse("reconnect-retries", 0u32),
         admission_retries: args.get_parse("admission-retries", 8u32),
         progress: args.flag("progress"),
+        secure: parse_secure_mode(args),
         ..sbp::federation::predict::PredictOptions::default()
     };
     if let Some(s) = args.get("decoy-seed") {
@@ -555,6 +562,22 @@ fn predict_opts(
         }
     }
     opts
+}
+
+/// `--secure off|prefer|require` → the v6 encrypted-channel policy
+/// (default `prefer`: encrypt with v6 peers, plaintext with older ones).
+fn parse_secure_mode(args: &Args) -> sbp::crypto::secure::SecureMode {
+    use sbp::crypto::secure::SecureMode;
+    match args.get("secure") {
+        None => SecureMode::default(),
+        Some("off") => SecureMode::Off,
+        Some("prefer") => SecureMode::Prefer,
+        Some("require") => SecureMode::Require,
+        Some(other) => {
+            eprintln!("--secure must be off|prefer|require, not {other:?}");
+            std::process::exit(2);
+        }
+    }
 }
 
 /// Score with a saved model — colocated when the host artifacts sit
@@ -930,6 +953,7 @@ fn cmd_serve_predict(args: &Args) {
             queue: admission_queue,
             ..sbp::federation::limit::AdmissionConfig::default()
         },
+        secure: parse_secure_mode(args),
         ..sbp::federation::serve::ServeConfig::default()
     };
     match sbp::coordinator::serve_predict_tcp(&listener, art.model, slice, cfg, max_sessions) {
@@ -937,13 +961,14 @@ fn cmd_serve_predict(args: &Args) {
             for s in &report.sessions {
                 eprintln!(
                     "[sbp] session {} from {}: {} queries in {} batches, {} B, \
-                     v{} basis {}, ring ≤{}, {}{}{:.3}s",
+                     v{}{} basis {}, ring ≤{}, {}{}{:.3}s",
                     s.outcome.session_id,
                     s.peer,
                     s.outcome.queries,
                     s.outcome.batches,
                     s.comm.total_bytes(),
                     s.outcome.protocol,
+                    if s.outcome.secure { "+aead" } else { "" },
                     s.outcome.basis_evict.name(),
                     s.outcome.ring_high_water,
                     if s.outcome.compute_jobs > 0 {

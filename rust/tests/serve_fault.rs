@@ -13,10 +13,12 @@
 //!
 //! - an **exhaustive frame-boundary kill sweep** of a 3-chunk stream —
 //!   every interior boundary (route sends and answer receives alike,
-//!   half of them with torn-write prefixes) dies once;
+//!   half of them with torn-write prefixes) dies once; the whole sweep
+//!   runs in plaintext and again under the v6 encrypted channel;
 //! - a **seeded randomized matrix** (kill point × chunk size × in-flight
-//!   window × delta window × eviction policy × protocol v2/v3/v4 ×
-//!   1–2 hosts): v4 peers resume bit-identically, v2/v3 peers fail
+//!   window × delta window × eviction policy × protocol version ×
+//!   secure on/off × 1–2 hosts): current-protocol peers resume
+//!   bit-identically (re-keying keyed channels), v2/v3 peers fail
 //!   loudly and cleanly while the host stays healthy; the fixed-seed
 //!   slice runs in CI, the full range behind `--ignored`
 //!   (`cargo test --release --test serve_fault -- --ignored`);
@@ -30,6 +32,7 @@ mod common;
 use common::{gen_world, start_servers, World};
 use sbp::coordinator::predict_centralized;
 use sbp::crypto::cipher::CipherSuite;
+use sbp::crypto::secure::SecureMode;
 use sbp::federation::codec::{encode_to_guest, encode_to_host, WireError};
 use sbp::federation::fault::{FaultPlan, FaultyConn, FaultyTransport};
 use sbp::federation::message::{
@@ -69,6 +72,11 @@ impl GuestTransport for SharedFault {
     }
     fn reconnect(&self) -> std::io::Result<()> {
         self.0.reconnect()
+    }
+    fn set_secure(&self, enc_key: [u8; 32], dec_key: [u8; 32]) {
+        // must delegate (the trait default is a no-op): a keyed session
+        // arms AEAD on the *real* TCP link underneath the fault wrapper
+        self.0.set_secure(enc_key, dec_key);
     }
 }
 
@@ -122,6 +130,13 @@ fn run_client(
 /// the resumed stream must equal the centralized oracle bit for bit,
 /// reconnect exactly once, and replay exactly the answers that were in
 /// flight at the kill.
+///
+/// The whole sweep runs twice: once in plaintext and once with the v6
+/// encrypted channel (`--secure require`). AEAD changes nothing the
+/// sweep can observe — same frame count (sealing happens inside the
+/// frame), same replay arithmetic (replayed answers are re-encrypted
+/// with fresh nonces, not re-sent ciphertext), same plaintext-level
+/// byte accounting — except `outcome.secure`.
 #[test]
 fn every_stream_frame_boundary_kill_resumes_bit_identically() {
     let mut rng = Xoshiro256::seed_from_u64(0x3C41_FB0B);
@@ -134,82 +149,97 @@ fn every_stream_frame_boundary_kill_resumes_bit_identically() {
     };
     let n = world.vs.n();
     let oracle = predict_centralized(&world.guest_m, &world.host_ms, &world.vs);
-    let cfg = ServeConfig {
-        delta_window: 64,
-        basis_evict: BasisEvict::Lru,
-        max_inflight: 2,
-        resume_window: Duration::from_secs(30),
-        ..ServeConfig::default()
-    };
-    let opts = PredictOptions {
-        batch_rows: (n + 2) / 3,
-        max_inflight: 2,
-        seed: 0xFA117,
-        protocol: SERVE_PROTOCOL_VERSION,
-        reconnect_retries: 5,
-        ..PredictOptions::default()
-    };
 
-    // the no-fault counting run sizes the sweep and pins the baseline
-    // invariants: parity, zero reconnects, symmetric byte accounting
-    let (addrs, servers) = start_servers(&world, cfg);
-    let base = run_client(&world, &addrs, opts, vec![Vec::new()]);
-    assert_eq!(base.preds, oracle, "no-fault run must equal centralized");
-    assert_eq!(base.stream.reconnects, 0);
-    assert_eq!(base.stream.chunks_replayed, 0);
-    let mut host_comm = NetSnapshot::default();
-    for server in servers {
-        let report = server.join().expect("server thread");
-        assert_eq!(report.n_sessions, 1);
-        host_comm = host_comm.add(&report.comm);
-    }
-    assert_eq!(base.comm, host_comm, "no-fault byte accounting must stay two-sided equal");
-    let frames = base.frames_at_stream_end[0];
-    assert_eq!(
-        frames, 8,
-        "a 3-chunk stream is 8 frames: hello, accept, 3 routes, 3 answers"
-    );
-
-    // frames 1..=2 are the handshake; boundaries 2..frames put the kill
-    // on every route send and every answer receive of all three chunks
-    for k in 2..frames {
-        let plan = FaultPlan {
-            seed: k,
-            kill_after_frames: k,
-            partial_write_bytes: if k % 2 == 1 { 1 + (k as usize % 13) } else { 0 },
-            delay: Duration::ZERO,
+    for secure in [SecureMode::Off, SecureMode::Require] {
+        let cfg = ServeConfig {
+            delta_window: 64,
+            basis_evict: BasisEvict::Lru,
+            max_inflight: 2,
+            resume_window: Duration::from_secs(30),
+            secure,
+            ..ServeConfig::default()
         };
+        let opts = PredictOptions {
+            batch_rows: (n + 2) / 3,
+            max_inflight: 2,
+            seed: 0xFA117,
+            protocol: SERVE_PROTOCOL_VERSION,
+            reconnect_retries: 5,
+            secure,
+            ..PredictOptions::default()
+        };
+        let sealed = secure != SecureMode::Off;
+
+        // the no-fault counting run sizes the sweep and pins the baseline
+        // invariants: parity, zero reconnects, symmetric byte accounting
         let (addrs, servers) = start_servers(&world, cfg);
-        let run = run_client(&world, &addrs, opts, vec![vec![plan]]);
-        assert_eq!(
-            run.preds, oracle,
-            "kill at frame boundary {k}: the resumed stream must be bit-identical"
-        );
-        assert_eq!(run.faults[0].kills(), 1, "boundary {k}: the planned kill fired");
-        let (routes, answers) = run.faults[0].kill_log()[0];
-        assert_eq!(run.stream.reconnects, 1, "boundary {k}: exactly one reconnect");
-        assert_eq!(
-            run.stream.chunks_replayed,
-            routes - answers,
-            "boundary {k}: replay count must equal the answers in flight at the kill \
-             ({routes} routes fully sent, {answers} answers received)"
-        );
+        let base = run_client(&world, &addrs, opts, vec![Vec::new()]);
+        assert_eq!(base.preds, oracle, "no-fault run must equal centralized");
+        assert_eq!(base.stream.reconnects, 0);
+        assert_eq!(base.stream.chunks_replayed, 0);
+        let mut host_comm = NetSnapshot::default();
         for server in servers {
             let report = server.join().expect("server thread");
+            assert_eq!(report.n_sessions, 1);
+            assert_eq!(report.sessions[0].outcome.secure, sealed, "secure={secure:?}");
+            host_comm = host_comm.add(&report.comm);
+        }
+        assert_eq!(base.comm, host_comm, "no-fault byte accounting must stay two-sided equal");
+        let frames = base.frames_at_stream_end[0];
+        assert_eq!(
+            frames, 8,
+            "a 3-chunk stream is 8 frames — hello, accept, 3 routes, 3 answers — \
+             keyed or not (AEAD seals inside the frame, it adds none)"
+        );
+
+        // frames 1..=2 are the handshake; boundaries 2..frames put the kill
+        // on every route send and every answer receive of all three chunks
+        for k in 2..frames {
+            let plan = FaultPlan {
+                seed: k,
+                kill_after_frames: k,
+                partial_write_bytes: if k % 2 == 1 { 1 + (k as usize % 13) } else { 0 },
+                delay: Duration::ZERO,
+            };
+            let (addrs, servers) = start_servers(&world, cfg);
+            let run = run_client(&world, &addrs, opts, vec![vec![plan]]);
             assert_eq!(
-                report.n_sessions, 1,
-                "boundary {k}: a disconnect-and-resume session counts once"
+                run.preds, oracle,
+                "kill at frame boundary {k} (secure={secure:?}): \
+                 the resumed stream must be bit-identical"
             );
-            assert_eq!(report.sessions_resumed, 1, "boundary {k}");
-            assert_eq!(report.sessions_resume_expired, 0, "boundary {k}");
+            assert_eq!(run.faults[0].kills(), 1, "boundary {k}: the planned kill fired");
+            let (routes, answers) = run.faults[0].kill_log()[0];
+            assert_eq!(run.stream.reconnects, 1, "boundary {k}: exactly one reconnect");
             assert_eq!(
-                report.sessions_idle_reaped, 0,
-                "boundary {k}: no phantom idle-reap for a parked-then-resumed session"
+                run.stream.chunks_replayed,
+                routes - answers,
+                "boundary {k} (secure={secure:?}): replay count must equal the answers \
+                 in flight at the kill ({routes} routes fully sent, {answers} answers \
+                 received)"
             );
-            assert!(
-                report.sessions[0].outcome.clean_close,
-                "boundary {k}: the resumed session still ends in a clean SessionClose"
-            );
+            for server in servers {
+                let report = server.join().expect("server thread");
+                assert_eq!(
+                    report.n_sessions, 1,
+                    "boundary {k}: a disconnect-and-resume session counts once"
+                );
+                assert_eq!(report.sessions_resumed, 1, "boundary {k}");
+                assert_eq!(report.sessions_resume_expired, 0, "boundary {k}");
+                assert_eq!(
+                    report.sessions_idle_reaped, 0,
+                    "boundary {k}: no phantom idle-reap for a parked-then-resumed session"
+                );
+                assert!(
+                    report.sessions[0].outcome.clean_close,
+                    "boundary {k}: the resumed session still ends in a clean SessionClose"
+                );
+                assert_eq!(
+                    report.sessions[0].outcome.secure, sealed,
+                    "boundary {k}: a keyed session re-keys on resume, it never drops \
+                     to plaintext (and a plain one never gains a key)"
+                );
+            }
         }
     }
 }
@@ -242,10 +272,21 @@ fn run_fault_iteration(seed: u64, it: usize) {
     let batch_rows = 1 + rng.next_below(n.min(7));
     let max_inflight = 1 + rng.next_below(4) as u32;
     let dummy_queries = [0usize, 0, 3][rng.next_below(3)];
+    // the v6 secure axis: current-protocol iterations alternate
+    // plaintext with `require` (the kill/resume machinery must re-key
+    // transparently); legacy-protocol iterations alternate plaintext
+    // with `prefer`, which a legacy hello silently resolves to
+    // plaintext (`require` + legacy is rejected at session build)
+    let secure = match (resumable, it % 2) {
+        (_, 0) => SecureMode::Off,
+        (true, _) => SecureMode::Require,
+        (false, _) => SecureMode::Prefer,
+    };
+    let sealed = resumable && secure != SecureMode::Off;
     let tag = format!(
         "it {it} seed {seed:#x}: n={n} hosts={n_hosts} batch_rows={batch_rows} \
          inflight={max_inflight} delta={delta_window} evict={} v{protocol} \
-         decoys={dummy_queries}",
+         decoys={dummy_queries} secure={secure:?}",
         basis_evict.name()
     );
 
@@ -254,6 +295,7 @@ fn run_fault_iteration(seed: u64, it: usize) {
         basis_evict,
         max_inflight,
         resume_window: Duration::from_secs(30),
+        secure,
         ..ServeConfig::default()
     };
     let opts = PredictOptions {
@@ -263,6 +305,7 @@ fn run_fault_iteration(seed: u64, it: usize) {
         seed: rng.next_u64(),
         protocol,
         reconnect_retries: 6,
+        secure,
         ..PredictOptions::default()
     };
 
@@ -278,6 +321,7 @@ fn run_fault_iteration(seed: u64, it: usize) {
     for server in servers {
         let report = server.join().expect("server thread");
         assert_eq!(report.n_sessions, 1, "{tag}: one serving session");
+        assert_eq!(report.sessions[0].outcome.secure, sealed, "{tag}: secure negotiation");
         host_comm = host_comm.add(&report.comm);
     }
     assert_eq!(base.comm, host_comm, "{tag}: no-fault byte accounting symmetric");
@@ -321,6 +365,10 @@ fn run_fault_iteration(seed: u64, it: usize) {
             assert!(
                 report.sessions[0].outcome.clean_close,
                 "{tag}: host {p}: resumed session still closes cleanly"
+            );
+            assert_eq!(
+                report.sessions[0].outcome.secure, sealed,
+                "{tag}: host {p}: the channel keeps its secure mode across resume"
             );
         }
     } else {

@@ -1,0 +1,391 @@
+//! End-to-end suite for serve protocol v6 secure sessions: the
+//! `--secure off|prefer|require` policy matrix on both ends over real
+//! loopback TCP, negotiate-down against legacy-protocol clients, and
+//! raw-socket adversarial cases (tampered ciphertext, truncated tag)
+//! against a live serving host.
+//!
+//! The invariants:
+//!
+//! - **AEAD is invisible above the transport**: a keyed session's
+//!   predictions are bit-identical to the plaintext session and to the
+//!   centralized oracle, and the two-sided byte accounting (kept at
+//!   the *plaintext* frame size by design) stays symmetric;
+//! - **policy is enforced on both ends**: a `require` host closes
+//!   plaintext hellos, an `off` host closes keyed ones; a `prefer`
+//!   client falls back to plaintext when its keyed hello dies, a
+//!   `require` client fails loudly instead — and a refused hello never
+//!   consumes the host's session budget;
+//! - **the host fails closed under attack**: a frame its session keys
+//!   cannot authenticate — bit-flipped ciphertext, a tag-less stub —
+//!   ends the connection without an answer and without a panic, and
+//!   the host keeps serving honest peers afterwards.
+
+mod common;
+
+use common::{gen_world, start_servers};
+use sbp::coordinator::{predict_centralized, predict_session_tcp};
+use sbp::crypto::cipher::CipherSuite;
+use sbp::crypto::secure::{
+    derive_session_keys, keypair, FrameCipher, HandleRotor, SecureMode,
+};
+use sbp::federation::codec::{decode_to_guest, encode_to_host};
+use sbp::federation::message::{
+    ToGuest, ToHost, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_V3, SERVE_PROTOCOL_V4, SERVE_PROTOCOL_V5,
+    SERVE_PROTOCOL_VERSION,
+};
+use sbp::federation::predict::PredictOptions;
+use sbp::federation::serve::ServeConfig;
+use sbp::federation::transport::NetSnapshot;
+use sbp::util::rng::{ChaCha20Rng, Xoshiro256};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+// ---------------------------------------------------------------- frames
+
+/// Length-prefixed frame write (the codec's `u64` LE header).
+fn write_frame(stream: &mut TcpStream, payload: &[u8]) {
+    stream.write_all(&(payload.len() as u64).to_le_bytes()).expect("frame header");
+    stream.write_all(payload).expect("frame payload");
+    stream.flush().expect("flush");
+}
+
+/// Length-prefixed frame read; `None` on a clean FIN at a boundary.
+fn read_frame(stream: &mut TcpStream) -> Option<Vec<u8>> {
+    let mut header = [0u8; 8];
+    let mut got = 0;
+    while got < header.len() {
+        match stream.read(&mut header[got..]).expect("frame header read") {
+            0 if got == 0 => return None,
+            0 => panic!("FIN inside a frame header"),
+            n => got += n,
+        }
+    }
+    let len = u64::from_le_bytes(header) as usize;
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload).expect("frame payload read");
+    Some(payload)
+}
+
+/// The next read must be a FIN — the host closed without answering.
+fn assert_closed_without_answer(stream: &mut TcpStream, what: &str) {
+    let mut buf = [0u8; 1];
+    assert_eq!(
+        stream.read(&mut buf).expect("read at close"),
+        0,
+        "{what}: the host must close without sending anything"
+    );
+}
+
+/// Manual keyed handshake on a raw socket: send `SessionHelloSecure`,
+/// read the plaintext `SessionAcceptSecure`, derive the session keys.
+/// Returns the two directional ciphers and the handle rotor.
+fn raw_keyed_handshake(
+    stream: &mut TcpStream,
+    suite: &CipherSuite,
+    ct_len: usize,
+    sid: u32,
+    rng_seed: [u8; 32],
+) -> (FrameCipher, FrameCipher, HandleRotor) {
+    let mut entropy = ChaCha20Rng::from_seed(rng_seed);
+    let (sk, pk) = keypair(&mut entropy);
+    let hello = encode_to_host(
+        suite,
+        ct_len,
+        &ToHost::SessionHelloSecure {
+            session_id: sid,
+            protocol: SERVE_PROTOCOL_VERSION,
+            pubkey: pk,
+        },
+    );
+    write_frame(stream, &hello);
+    let accept = read_frame(stream).expect("the keyed accept arrives in plaintext");
+    let msg = decode_to_guest(suite, ct_len, &accept).expect("accept decodes");
+    let host_pk = match msg {
+        ToGuest::SessionAcceptSecure { session_id, protocol, pubkey, .. } => {
+            assert_eq!(session_id, sid);
+            assert_eq!(protocol, SERVE_PROTOCOL_VERSION);
+            pubkey
+        }
+        other => panic!("expected SessionAcceptSecure, got {other:?}"),
+    };
+    let shared =
+        sbp::crypto::secure::shared_secret(&sk, &host_pk).expect("host key is not degenerate");
+    let keys = derive_session_keys(&shared);
+    (
+        FrameCipher::new(keys.guest_to_host),
+        FrameCipher::new(keys.host_to_guest),
+        HandleRotor::new(keys.rotor_seed),
+    )
+}
+
+// ------------------------------------------------------- policy matrix
+
+/// Every secure mode serves bit-identically to the centralized oracle,
+/// with symmetric plaintext-level byte accounting, and the host reports
+/// the negotiated channel state exactly.
+#[test]
+fn keyed_serving_is_bit_identical_to_plaintext_and_centralized() {
+    let mut rng = Xoshiro256::seed_from_u64(0x5EC0_6AEA);
+    let world = gen_world(&mut rng, 2);
+    let oracle = predict_centralized(&world.guest_m, &world.host_ms, &world.vs);
+
+    for secure in [SecureMode::Off, SecureMode::Prefer, SecureMode::Require] {
+        let cfg = ServeConfig { secure, ..ServeConfig::default() };
+        let (addrs, servers) = start_servers(&world, cfg);
+        let opts = PredictOptions {
+            batch_rows: 4,
+            max_inflight: 2,
+            seed: 0x5EC0_0001,
+            protocol: SERVE_PROTOCOL_VERSION,
+            secure,
+            ..PredictOptions::default()
+        };
+        let report = predict_session_tcp(&world.guest_m, &world.vs.guest, &addrs, 51, opts)
+            .expect("keyed serving session");
+        assert_eq!(
+            report.preds, oracle,
+            "secure={secure:?}: serving must equal centralized bit for bit"
+        );
+        let mut host_comm = NetSnapshot::default();
+        for server in servers {
+            let sr = server.join().expect("server thread");
+            assert_eq!(sr.n_sessions, 1, "secure={secure:?}");
+            let outcome = &sr.sessions[0].outcome;
+            assert!(outcome.clean_close, "secure={secure:?}");
+            assert_eq!(
+                outcome.secure,
+                secure != SecureMode::Off,
+                "secure={secure:?}: the host must report the channel it negotiated"
+            );
+            host_comm = host_comm.add(&sr.comm);
+        }
+        assert_eq!(
+            report.comm, host_comm,
+            "secure={secure:?}: byte accounting stays plaintext-level symmetric under AEAD"
+        );
+    }
+}
+
+/// A legacy-protocol hello is always plaintext; a `prefer` host accepts
+/// it byte-compatibly and a `prefer` client never even generates a key
+/// for it.
+#[test]
+fn legacy_protocols_negotiate_down_to_plaintext_under_prefer() {
+    let mut rng = Xoshiro256::seed_from_u64(0x5EC0_D0E6);
+    let world = gen_world(&mut rng, 1);
+    let oracle = predict_centralized(&world.guest_m, &world.host_ms, &world.vs);
+
+    for protocol in [SERVE_PROTOCOL_V2, SERVE_PROTOCOL_V3, SERVE_PROTOCOL_V4, SERVE_PROTOCOL_V5] {
+        let cfg = ServeConfig { secure: SecureMode::Prefer, ..ServeConfig::default() };
+        let (addrs, servers) = start_servers(&world, cfg);
+        let opts = PredictOptions {
+            batch_rows: 3,
+            seed: 0x5EC0_0002,
+            protocol,
+            secure: SecureMode::Prefer,
+            ..PredictOptions::default()
+        };
+        let report = predict_session_tcp(&world.guest_m, &world.vs.guest, &addrs, 52, opts)
+            .expect("legacy session against a prefer host");
+        assert_eq!(report.preds, oracle, "v{protocol}: parity");
+        for server in servers {
+            let sr = server.join().expect("server thread");
+            assert_eq!(sr.n_sessions, 1, "v{protocol}");
+            let outcome = &sr.sessions[0].outcome;
+            assert!(outcome.clean_close, "v{protocol}");
+            assert_eq!(outcome.protocol, protocol, "v{protocol}: negotiated down");
+            assert!(!outcome.secure, "v{protocol}: a legacy hello is always plaintext");
+        }
+    }
+}
+
+/// A `require` host closes plaintext hellos without burning its session
+/// budget, and keeps serving compliant keyed clients afterwards; the
+/// refused client fails loudly.
+#[test]
+fn require_host_refuses_plaintext_clients_and_stays_healthy() {
+    let mut rng = Xoshiro256::seed_from_u64(0x5EC0_4E07);
+    let world = gen_world(&mut rng, 1);
+    let oracle = predict_centralized(&world.guest_m, &world.host_ms, &world.vs);
+    let cfg = ServeConfig { secure: SecureMode::Require, ..ServeConfig::default() };
+    let (addrs, servers) = start_servers(&world, cfg);
+
+    let plain = PredictOptions {
+        batch_rows: 3,
+        seed: 0x5EC0_0003,
+        protocol: SERVE_PROTOCOL_VERSION,
+        secure: SecureMode::Off,
+        admission_retries: 1, // fail fast; each retry only meets another close
+        ..PredictOptions::default()
+    };
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        predict_session_tcp(&world.guest_m, &world.vs.guest, &addrs, 53, plain)
+    }))
+    .expect_err("a plaintext client must fail loudly against a require host");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&'static str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("giving up"), "the failure names the exhausted retries, got: {msg}");
+
+    // the host is still healthy: a keyed client completes the budget
+    let keyed = PredictOptions {
+        batch_rows: 3,
+        seed: 0x5EC0_0004,
+        protocol: SERVE_PROTOCOL_VERSION,
+        secure: SecureMode::Require,
+        ..PredictOptions::default()
+    };
+    let report = predict_session_tcp(&world.guest_m, &world.vs.guest, &addrs, 54, keyed)
+        .expect("keyed client after the refused plaintext one");
+    assert_eq!(report.preds, oracle);
+    for server in servers {
+        let sr = server.join().expect("server thread");
+        assert_eq!(
+            sr.n_sessions, 1,
+            "refused plaintext hellos must not count against the session budget"
+        );
+        assert!(sr.sessions[0].outcome.secure);
+        assert!(sr.sessions[0].outcome.clean_close);
+    }
+}
+
+/// An `off` host closes keyed hellos: a `prefer` client falls back to a
+/// plaintext hello and serves; a `require` client refuses to downgrade
+/// and fails loudly.
+#[test]
+fn off_host_closes_keyed_hellos_prefer_falls_back_require_refuses() {
+    let mut rng = Xoshiro256::seed_from_u64(0x5EC0_0FF0);
+    let world = gen_world(&mut rng, 1);
+    let oracle = predict_centralized(&world.guest_m, &world.host_ms, &world.vs);
+    let cfg = ServeConfig { secure: SecureMode::Off, ..ServeConfig::default() };
+    let (addrs, servers) = start_servers(&world, cfg);
+
+    let require = PredictOptions {
+        batch_rows: 3,
+        seed: 0x5EC0_0005,
+        protocol: SERVE_PROTOCOL_VERSION,
+        secure: SecureMode::Require,
+        admission_retries: 1,
+        ..PredictOptions::default()
+    };
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        predict_session_tcp(&world.guest_m, &world.vs.guest, &addrs, 55, require)
+    }))
+    .expect_err("a require client must never downgrade to plaintext");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&'static str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("giving up"), "got: {msg}");
+
+    let prefer = PredictOptions {
+        batch_rows: 3,
+        seed: 0x5EC0_0006,
+        protocol: SERVE_PROTOCOL_VERSION,
+        secure: SecureMode::Prefer,
+        ..PredictOptions::default()
+    };
+    let report = predict_session_tcp(&world.guest_m, &world.vs.guest, &addrs, 56, prefer)
+        .expect("prefer client falls back to plaintext against an off host");
+    assert_eq!(report.preds, oracle);
+    for server in servers {
+        let sr = server.join().expect("server thread");
+        assert_eq!(sr.n_sessions, 1);
+        assert!(!sr.sessions[0].outcome.secure, "the fallback session is plaintext");
+        assert!(sr.sessions[0].outcome.clean_close);
+    }
+}
+
+// ----------------------------------------------------- adversarial wire
+
+/// Raw-socket attack corpus against a live `require` host: a sealed
+/// frame too short to carry its tag, then — on a fresh session that
+/// already served one honest sealed batch — a bit-flipped ciphertext.
+/// Both must end the connection without an answer and without a panic;
+/// the honest part of the second session is still reported.
+#[test]
+fn tampered_ciphertext_and_truncated_tag_close_without_answers() {
+    let mut rng = Xoshiro256::seed_from_u64(0x5EC0_BADC);
+    let world = gen_world(&mut rng, 1);
+    let suite = CipherSuite::new_plain(64);
+    let ct_len = suite.ct_byte_len();
+    let cfg = ServeConfig {
+        secure: SecureMode::Require,
+        delta_window: 0,                  // plain RouteAnswers, no delta frames
+        resume_window: Duration::ZERO,    // a hostile close ends the session, no parking
+        ..ServeConfig::default()
+    };
+    let (addrs, servers) = start_servers(&world, cfg);
+
+    // --- truncated tag: the first sealed frame is 8 bytes, shorter
+    // than the 16-byte Poly1305 tag. Handshake-only, so this
+    // connection is control-only and must not consume the budget.
+    {
+        let mut stream = TcpStream::connect(&addrs[0]).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let _ = raw_keyed_handshake(&mut stream, &suite, ct_len, 77, [1u8; 32]);
+        write_frame(&mut stream, &[0u8; 8]);
+        assert_closed_without_answer(&mut stream, "truncated tag");
+    }
+
+    // --- tampered ciphertext, after one honest sealed round trip
+    {
+        let mut stream = TcpStream::connect(&addrs[0]).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let (mut enc, mut dec, rotor) =
+            raw_keyed_handshake(&mut stream, &suite, ct_len, 78, [2u8; 32]);
+
+        // honest sealed batch: one query for host handle 0, rotated
+        // exactly as a real v6 guest would send it
+        let route = encode_to_host(
+            &suite,
+            ct_len,
+            &ToHost::PredictRoute { session: 78, chunk: 0, queries: vec![(0, rotor.rotate(0))] },
+        );
+        let mut sealed = Vec::new();
+        enc.seal_into(&route, &mut sealed);
+        write_frame(&mut stream, &sealed);
+        let mut answer = read_frame(&mut stream).expect("the honest batch is answered");
+        let n = dec.open_in_place(&mut answer).expect("the answer authenticates");
+        match decode_to_guest(&suite, ct_len, &answer[..n]).expect("answer decodes") {
+            ToGuest::RouteAnswers { session, chunk, n, .. } => {
+                assert_eq!(session, 78);
+                assert_eq!(chunk, 0);
+                assert_eq!(n, 1);
+            }
+            other => panic!("expected RouteAnswers, got {other:?}"),
+        }
+
+        // now flip one ciphertext bit of an otherwise-valid frame
+        let route2 = encode_to_host(
+            &suite,
+            ct_len,
+            &ToHost::PredictRoute { session: 78, chunk: 1, queries: vec![(0, rotor.rotate(1))] },
+        );
+        enc.seal_into(&route2, &mut sealed);
+        sealed[sealed.len() / 2] ^= 0x40;
+        write_frame(&mut stream, &sealed);
+        assert_closed_without_answer(&mut stream, "tampered ciphertext");
+    }
+
+    for server in servers {
+        let sr = server.join().expect("the host survives both attacks without panicking");
+        assert_eq!(
+            sr.n_sessions, 1,
+            "only the session that served an honest batch is reported \
+             (the tag-less stub was handshake-only, hence control-only)"
+        );
+        let outcome = &sr.sessions[0].outcome;
+        assert!(outcome.secure, "the reported session ran keyed");
+        assert!(
+            !outcome.clean_close,
+            "a tampered frame is never a clean close — the host drops the peer"
+        );
+        assert_eq!(outcome.batches, 1, "exactly the honest batch was served");
+    }
+}

@@ -1,8 +1,9 @@
-//! Randomized parity-soak for the serving stack under serve protocols
-//! v2–v4: every iteration draws a random world (rows, model shape, host
-//! count) and a random serving/client configuration (chunk size,
-//! in-flight window, delta window, basis-evict policy, cache capacity,
-//! decoy padding, protocol version, repeat passes), runs it through
+//! Randomized parity-soak for the serving stack under every serve
+//! protocol from v2 to the current version: each iteration draws a
+//! random world (rows, model shape, host count) and a random
+//! serving/client configuration (chunk size, in-flight window, delta
+//! window, basis-evict policy, cache capacity, decoy padding, protocol
+//! version, secure-channel mode, repeat passes), runs it through
 //! real `serve_predict_tcp` hosts over loopback framed TCP, and asserts
 //! the two hard invariants of the whole subsystem:
 //!
@@ -19,6 +20,7 @@ mod common;
 
 use common::{gen_world, start_servers};
 use sbp::coordinator::{predict_centralized, predict_session_tcp, predict_stream_passes_tcp};
+use sbp::crypto::secure::SecureMode;
 use sbp::data::dataset::{PartySlice, VerticalSplit};
 use sbp::federation::message::{
     BasisEvict, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_V3, SERVE_PROTOCOL_V4, SERVE_PROTOCOL_VERSION,
@@ -66,10 +68,21 @@ fn run_iteration(seed: u64, it: usize) {
     let compute_workers = [0usize, 1, 4][it % 3];
     let compute_shard_min =
         if it % 2 == 0 { 1 } else { ServeConfig::default().compute_shard_min };
+    // the v6 encrypted-channel axis: off / prefer / require cycle with
+    // the iteration index. `require` only pairs with a current-protocol
+    // hello (a legacy hello is always plaintext); legacy-protocol
+    // iterations under `prefer` double as negotiate-down coverage —
+    // AEAD-on serving must be indistinguishable from AEAD-off to every
+    // assertion below (bit-parity, byte symmetry, negotiated protocol)
+    let secure = match it % 3 {
+        0 => SecureMode::Off,
+        _ if protocol == SERVE_PROTOCOL_VERSION && it % 3 == 2 => SecureMode::Require,
+        _ => SecureMode::Prefer,
+    };
     let tag = format!(
         "it {it}: n={} hosts={n_hosts} batch_rows={batch_rows} inflight={max_inflight} \
          delta={delta_window} cache={cache_capacity} evict={} v{protocol} decoys={dummy_queries} \
-         passes={passes} cw={compute_workers} csm={compute_shard_min}",
+         passes={passes} cw={compute_workers} csm={compute_shard_min} secure={secure:?}",
         world.vs.n(),
         basis_evict.name()
     );
@@ -81,6 +94,7 @@ fn run_iteration(seed: u64, it: usize) {
         max_inflight,
         compute_workers,
         compute_shard_min,
+        secure,
         ..ServeConfig::default()
     };
     let (addrs, servers) = start_servers(&world, cfg);
@@ -90,6 +104,7 @@ fn run_iteration(seed: u64, it: usize) {
         batch_rows,
         max_inflight: 1 + rng.next_below(6),
         protocol,
+        secure,
         ..PredictOptions::default()
     };
 
@@ -123,6 +138,13 @@ fn run_iteration(seed: u64, it: usize) {
         let outcome = &report.sessions[0].outcome;
         assert!(outcome.clean_close, "{tag}: session must close cleanly");
         assert_eq!(outcome.protocol, protocol, "{tag}: negotiated protocol");
+        // AEAD engages exactly when the client asked for it AND spoke the
+        // current protocol; a legacy hello always lands in plaintext
+        assert_eq!(
+            outcome.secure,
+            secure != SecureMode::Off && protocol == SERVE_PROTOCOL_VERSION,
+            "{tag}: secure-channel negotiation outcome"
+        );
         let expect_evict =
             if protocol >= SERVE_PROTOCOL_V3 { basis_evict } else { BasisEvict::Freeze };
         assert_eq!(outcome.basis_evict, expect_evict, "{tag}: negotiated policy");

@@ -129,6 +129,25 @@ fn sample_to_host_messages(suite: &CipherSuite, rng: &mut ChaCha20Rng) -> Vec<To
         // deep-in-stream cursor
         ToHost::SessionResume { session: 7, last_acked_chunk: 0 },
         ToHost::SessionResume { session: u32::MAX, last_acked_chunk: u32::MAX },
+        // v6 keyed handshakes: hello and resume carrying an X25519
+        // public key (the codec passes any 32 bytes — degenerate keys
+        // are the DH layer's problem, so the all-zero edge round-trips)
+        ToHost::SessionHelloSecure {
+            session_id: 6,
+            protocol: sbp::federation::message::SERVE_PROTOCOL_VERSION,
+            pubkey: [0x42; 32],
+        },
+        ToHost::SessionHelloSecure {
+            session_id: u32::MAX,
+            protocol: sbp::federation::message::SERVE_PROTOCOL_VERSION,
+            pubkey: [0; 32],
+        },
+        ToHost::SessionResumeSecure { session: 7, last_acked_chunk: 0, pubkey: [1; 32] },
+        ToHost::SessionResumeSecure {
+            session: u32::MAX,
+            last_acked_chunk: u32::MAX,
+            pubkey: [0xFF; 32],
+        },
     ]
 }
 
@@ -214,6 +233,30 @@ fn sample_to_guest_messages(suite: &CipherSuite, rng: &mut ChaCha20Rng) -> Vec<T
         },
         ToGuest::RouteAnswersDelta { session: 5, chunk: 3, n: 9, n_known: 9, bits: Vec::new() },
         ToGuest::RouteAnswersDelta { session: 5, chunk: 4, n: 0, n_known: 0, bits: Vec::new() },
+        // v6 keyed accepts: the host's half of the handshake, both
+        // eviction policies, extreme field values
+        ToGuest::SessionAcceptSecure {
+            session_id: 11,
+            max_inflight: 8,
+            delta_window: 512,
+            protocol: sbp::federation::message::SERVE_PROTOCOL_VERSION,
+            basis_evict: sbp::federation::message::BasisEvict::Lru,
+            pubkey: [0x7A; 32],
+        },
+        ToGuest::SessionAcceptSecure {
+            session_id: u32::MAX,
+            max_inflight: 1,
+            delta_window: 0,
+            protocol: sbp::federation::message::SERVE_PROTOCOL_VERSION,
+            basis_evict: sbp::federation::message::BasisEvict::Freeze,
+            pubkey: [0; 32],
+        },
+        ToGuest::ResumeAcceptSecure { next_chunk: 1, basis_epoch: 0, pubkey: [3; 32] },
+        ToGuest::ResumeAcceptSecure {
+            next_chunk: u32::MAX,
+            basis_epoch: u32::MAX,
+            pubkey: [0xFF; 32],
+        },
     ]
 }
 
@@ -567,6 +610,127 @@ fn malformed_busy_rejected() {
     }
     // trailing garbage after a complete busy
     let mut long = full.clone();
+    long.push(0);
+    assert!(matches!(decode_to_guest(&suite, ct_len, &long), Err(WireError::Malformed(_))));
+}
+
+/// Malformed v6 keyed-handshake frames — a secure hello or resume with
+/// the reserved session id 0, a keyed hello claiming a pre-v6 protocol
+/// (a peer that could not speak the sealed framing the accept would
+/// switch on), a keyed accept claiming a pre-v6 protocol, a truncated
+/// public key, or trailing bytes — must be rejected by the codec with
+/// an error, never accepted or panicked.
+#[test]
+fn malformed_secure_handshake_rejected() {
+    use sbp::federation::message::{SERVE_PROTOCOL_V2, SERVE_PROTOCOL_V5, SERVE_PROTOCOL_VERSION};
+    let suite = CipherSuite::new_plain(256);
+    let ct_len = suite.ct_byte_len();
+
+    // hand-build keyed hellos: tag 13, session id, protocol, 32B key
+    let hello = |session_id: u32, protocol: u32| {
+        let mut p = vec![13u8];
+        p.extend_from_slice(&session_id.to_le_bytes());
+        p.extend_from_slice(&protocol.to_le_bytes());
+        p.extend_from_slice(&[0x5Au8; 32]);
+        p
+    };
+    let ok = decode_to_host(None, &hello(7, SERVE_PROTOCOL_VERSION)).expect("valid keyed hello");
+    assert!(matches!(ok, ToHost::SessionHelloSecure { session_id: 7, .. }));
+    // reserved session id 0
+    assert!(matches!(
+        decode_to_host(None, &hello(0, SERVE_PROTOCOL_VERSION)),
+        Err(WireError::Malformed(_))
+    ));
+    // a keyed hello never negotiates down: pre-v6 versions are
+    // malformed, not legacy (unlike the plaintext hello's v2..v5)
+    for bad in [0u32, 1, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_V5, SERVE_PROTOCOL_VERSION + 1] {
+        assert!(
+            matches!(decode_to_host(None, &hello(5, bad)), Err(WireError::Malformed(_))),
+            "keyed hello protocol {bad} must be rejected"
+        );
+    }
+    // truncated key material and trailing garbage
+    let full = hello(3, SERVE_PROTOCOL_VERSION);
+    for cut in 0..full.len() {
+        assert!(decode_to_host(None, &full[..cut]).is_err(), "hello prefix {cut} accepted");
+    }
+    let mut long = full.clone();
+    long.push(0);
+    assert!(matches!(decode_to_host(None, &long), Err(WireError::Malformed(_))));
+
+    // keyed resume: tag 14, session, cursor, 32B key
+    let resume = |session: u32| {
+        let mut p = vec![14u8];
+        p.extend_from_slice(&session.to_le_bytes());
+        p.extend_from_slice(&9u32.to_le_bytes());
+        p.extend_from_slice(&[0x5Au8; 32]);
+        p
+    };
+    let ok = decode_to_host(None, &resume(7)).expect("valid keyed resume");
+    assert!(matches!(ok, ToHost::SessionResumeSecure { session: 7, last_acked_chunk: 9, .. }));
+    assert!(matches!(decode_to_host(None, &resume(0)), Err(WireError::Malformed(_))));
+    let full = resume(3);
+    for cut in 0..full.len() {
+        assert!(decode_to_host(None, &full[..cut]).is_err(), "resume prefix {cut} accepted");
+    }
+
+    // keyed accept: tag 9, session, window, delta, protocol, evict, key
+    let accept = |protocol: u32, evict: u8| {
+        let mut p = vec![9u8];
+        p.extend_from_slice(&3u32.to_le_bytes());
+        p.extend_from_slice(&8u32.to_le_bytes());
+        p.extend_from_slice(&64u32.to_le_bytes());
+        p.extend_from_slice(&protocol.to_le_bytes());
+        p.push(evict);
+        p.extend_from_slice(&[0x5Au8; 32]);
+        p
+    };
+    let ok = decode_to_guest(&suite, ct_len, &accept(SERVE_PROTOCOL_VERSION, 1))
+        .expect("valid keyed accept");
+    assert!(matches!(ok, ToGuest::SessionAcceptSecure { session_id: 3, .. }));
+    // a keyed accept claiming a pre-v6 protocol is a liar
+    for bad in [0u32, SERVE_PROTOCOL_V2, SERVE_PROTOCOL_V5, SERVE_PROTOCOL_VERSION + 1] {
+        assert!(
+            matches!(
+                decode_to_guest(&suite, ct_len, &accept(bad, 1)),
+                Err(WireError::Malformed(_))
+            ),
+            "keyed accept protocol {bad} must be rejected"
+        );
+    }
+    // unknown eviction tag
+    assert!(matches!(
+        decode_to_guest(&suite, ct_len, &accept(SERVE_PROTOCOL_VERSION, 2)),
+        Err(WireError::BadTag { .. })
+    ));
+    // truncations: unlike the dual-shape plaintext accept, every strict
+    // prefix of a keyed accept is an error — there is no 13-byte legacy
+    // form hiding inside it
+    let full = accept(SERVE_PROTOCOL_VERSION, 0);
+    for cut in 0..full.len() {
+        assert!(
+            decode_to_guest(&suite, ct_len, &full[..cut]).is_err(),
+            "keyed accept prefix {cut} accepted"
+        );
+    }
+
+    // keyed resume grant: tag 10, next_chunk, basis_epoch, key
+    let grant = {
+        let mut p = vec![10u8];
+        p.extend_from_slice(&5u32.to_le_bytes());
+        p.extend_from_slice(&2u32.to_le_bytes());
+        p.extend_from_slice(&[0x5Au8; 32]);
+        p
+    };
+    let ok = decode_to_guest(&suite, ct_len, &grant).expect("valid keyed grant");
+    assert!(matches!(ok, ToGuest::ResumeAcceptSecure { next_chunk: 5, basis_epoch: 2, .. }));
+    for cut in 0..grant.len() {
+        assert!(
+            decode_to_guest(&suite, ct_len, &grant[..cut]).is_err(),
+            "keyed grant prefix {cut} accepted"
+        );
+    }
+    let mut long = grant.clone();
     long.push(0);
     assert!(matches!(decode_to_guest(&suite, ct_len, &long), Err(WireError::Malformed(_))));
 }
